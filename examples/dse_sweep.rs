@@ -1,0 +1,81 @@
+//! Design-space exploration: sweep all 18 Table 2 configurations over the
+//! full benchmark suite and report the best configuration per metric — the
+//! paper's §5.3 headline analysis ("16c16f1p best performance, 16c16f0p
+//! most energy-efficient, 8c4f1p most area-efficient").
+//!
+//! ```sh
+//! cargo run --release --example dse_sweep
+//! ```
+
+use transpfp::coordinator::sweep_all;
+use transpfp::kernels::Variant;
+
+fn main() {
+    eprintln!("running 18 configs × 8 benchmarks × 2 variants …");
+    let t0 = std::time::Instant::now();
+    let ms = sweep_all();
+    let dt = t0.elapsed();
+    let total_cycles: u64 = ms.iter().map(|m| m.cycles).sum();
+    eprintln!(
+        "{} runs, {:.1} M simulated cycles in {:.2}s ({:.1} Mcycles/s)\n",
+        ms.len(),
+        total_cycles as f64 / 1e6,
+        dt.as_secs_f64(),
+        total_cycles as f64 / 1e6 / dt.as_secs_f64()
+    );
+
+    assert!(ms.iter().all(|m| m.verified), "all runs must verify numerically");
+
+    // Best config per metric, averaged over the suite (vector variant, like
+    // the paper's peak numbers; scalar shown for reference).
+    for variant in [Variant::Scalar, Variant::VEC] {
+        println!("=== {} variants ===", variant.label());
+        let mut per_cfg: std::collections::BTreeMap<String, (f64, f64, f64, u32)> =
+            Default::default();
+        for m in ms.iter().filter(|m| m.variant.label() == variant.label()) {
+            let e = per_cfg.entry(m.cfg.mnemonic()).or_insert((0.0, 0.0, 0.0, 0));
+            e.0 += m.metrics.perf_gflops;
+            e.1 += m.metrics.energy_eff;
+            e.2 += m.metrics.area_eff;
+            e.3 += 1;
+        }
+        let best = |idx: usize| -> (String, f64) {
+            per_cfg
+                .iter()
+                .map(|(k, v)| {
+                    let avg = [v.0, v.1, v.2][idx] / v.3 as f64;
+                    (k.clone(), avg)
+                })
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+        };
+        let (bp, vp) = best(0);
+        let (be, ve) = best(1);
+        let (ba, va) = best(2);
+        println!("  best performance      : {bp}  ({vp:.2} Gflop/s avg)");
+        println!("  best energy efficiency: {be}  ({ve:.0} Gflop/s/W avg)");
+        println!("  best area efficiency  : {ba}  ({va:.2} Gflop/s/mm² avg)");
+        // Peak numbers across individual benchmarks (the abstract's figures).
+        let peak_perf = ms
+            .iter()
+            .filter(|m| m.variant.label() == variant.label())
+            .max_by(|a, b| a.metrics.perf_gflops.partial_cmp(&b.metrics.perf_gflops).unwrap())
+            .unwrap();
+        let peak_eff = ms
+            .iter()
+            .filter(|m| m.variant.label() == variant.label())
+            .max_by(|a, b| a.metrics.energy_eff.partial_cmp(&b.metrics.energy_eff).unwrap())
+            .unwrap();
+        println!(
+            "  peak perf {:.2} Gflop/s ({} on {});  peak eff {:.0} Gflop/s/W ({} on {})\n",
+            peak_perf.metrics.perf_gflops,
+            peak_perf.bench.name(),
+            peak_perf.cfg.mnemonic(),
+            peak_eff.metrics.energy_eff,
+            peak_eff.bench.name(),
+            peak_eff.cfg.mnemonic()
+        );
+    }
+    println!("paper: best perf 16c16f1p (5.92 Gflop/s, FIR vector); best energy");
+    println!("       16c16f0p (167 Gflop/s/W); best area 8c4f1p (3.5 Gflop/s/mm²)");
+}

@@ -1,0 +1,98 @@
+"""AOT compiler: lower every L2 golden + the e2e model to HLO **text**.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and gen_hlo.py).
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+S = jax.ShapeDtypeStruct
+
+# Default workload sizes — must match rust/src/kernels/mod.rs::Benchmark::build.
+MATMUL_N = 32
+FIR_N, FIR_TAPS = 512, 32
+CONV_W, CONV_H = 32, 32
+DWT_N = 512
+FFT_N = 256
+IIR_N = 512
+KM_N, KM_D, KM_K = 256, 16, 4
+SVM_NSV, SVM_D = 64, 32
+
+F32 = jnp.float32
+
+#: (artifact name, function, example arg shapes). Parameter order matches
+#: the benchmark's staged non-scratch buffers (rust/src/runtime/mod.rs).
+EXPORTS = [
+    ("matmul_f32", model.matmul_f32, [S((MATMUL_N, MATMUL_N), F32)] * 2),
+    ("matmul_f16", model.matmul_f16, [S((MATMUL_N, MATMUL_N), F32)] * 2),
+    ("matmul_bf16", model.matmul_bf16, [S((MATMUL_N, MATMUL_N), F32)] * 2),
+    ("fir_f32", model.fir_f32, [S((FIR_N + FIR_TAPS,), F32), S((FIR_TAPS,), F32)]),
+    ("fir_f16", model.fir_f16, [S((FIR_N + FIR_TAPS,), F32), S((FIR_TAPS,), F32)]),
+    ("conv_f32", model.conv_f32, [S((CONV_H, CONV_W), F32), S((3, 3), F32)]),
+    ("dwt_f32", model.dwt_f32, [S((DWT_N,), F32)]),
+    ("fft_f32", model.fft_f32, [S((2 * FFT_N,), F32)]),
+    ("iir_f32", model.iir_f32, [S((IIR_N,), F32)]),
+    ("kmeans_f32", model.kmeans_f32, [S((KM_N, KM_D), F32), S((KM_K, KM_D), F32)]),
+    (
+        "svm_f32",
+        model.svm_f32,
+        [S((SVM_NSV, SVM_D), F32), S((SVM_NSV,), F32), S((SVM_D,), F32), S((1,), F32)],
+    ),
+    ("exg_mlp", model.exg_mlp, [S((16, 64), F32), S((64, 64), F32), S((64, 16), F32)]),
+]
+
+
+def to_hlo_text(fn, args) -> str:
+    """jit → lower → StableHLO → XlaComputation → HLO text."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default elides big constant tensors as
+    # "{...}", which the rust-side HLO text parser would misparse — the
+    # bit-reversal gather table of fft_f32 is exactly such a constant.
+    return comp.as_hlo_text(True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="export a single artifact by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for name, fn, shapes in EXPORTS:
+        if args.only and name != args.only:
+            continue
+        text = to_hlo_text(fn, shapes)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shape_str = ";".join(
+            "x".join(str(d) for d in s.shape) if s.shape else "scalar" for s in shapes
+        )
+        manifest.append(f"{name} {shape_str}")
+        print(f"  {name}: {len(text)} chars → {path}")
+    with open(os.path.join(args.out_dir, "MANIFEST"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

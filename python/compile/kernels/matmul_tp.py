@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: transprecision tiled matmul (16-bit operands, f32 acc).
+
+This is the TPU re-expression of the paper's packed-SIMD insight
+(DESIGN.md §Hardware-Adaptation): the cluster packs two 16-bit lanes into a
+32-bit datapath and accumulates through the expanding dot product
+(`vfdotpex.s.h`); on the MXU the same idea is 16-bit input tiles staged
+through VMEM, multiplied on the systolic array, and accumulated in binary32
+(`preferred_element_type=float32`). The cast-and-pack instructions map to
+the convert ops at tile boundaries.
+
+The kernel MUST be lowered with ``interpret=True``: real TPU lowering emits
+a Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+
+VMEM budget (documented for the DESIGN.md §Perf estimate): with the default
+``block = (64, 64, 64)`` the working set per grid step is
+64·64·2 B (A tile) + 64·64·2 B (B tile) + 64·64·4 B (f32 acc) ≈ 32 KiB —
+far inside the ~16 MiB VMEM of a TPU core, leaving room for double
+buffering; the MXU sees 64×64 bf16 tiles, its native shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile sizes (rows, cols, depth).
+BLOCK_M = 64
+BLOCK_N = 64
+BLOCK_K = 64
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step: acc += x_tile @ y_tile, flushed at k end."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # 16-bit operand tiles, binary32 accumulation — the MXU contract and the
+    # exact analogue of the cluster's expanding dot product.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "block"))
+def matmul_tp(x: jax.Array, y: jax.Array, *, dtype=jnp.float16, block=None):
+    """Transprecision matmul: quantize f32 inputs to ``dtype`` (float16 or
+    bfloat16), multiply in tiles with f32 accumulation, return f32.
+
+    Shapes must be multiples of the block sizes (the near-sensor models in
+    `model.py` pad accordingly).
+    """
+    bm, bn, bk = block or (BLOCK_M, BLOCK_N, BLOCK_K)
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, "inner dimensions must agree"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k})x({k2},{n}) must tile by {(bm, bn, bk)}"
+    )
+    xq = x.astype(dtype)
+    yq = y.astype(dtype)
+    n_k = k // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,  # CPU-PJRT executable; TPU would emit Mosaic.
+    )(xq, yq)
+    return out

@@ -1,0 +1,24 @@
+"""Pure-jnp correctness oracle for the L1 Pallas kernel.
+
+The oracle expresses exactly the transprecision contract the kernel must
+honour: quantize the binary32 operands to the 16-bit format, multiply with
+binary32 accumulation, return binary32. pytest compares `matmul_tp` against
+this under a hypothesis sweep of shapes, dtypes and value ranges.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_tp_ref(x: jax.Array, y: jax.Array, *, dtype=jnp.float16) -> jax.Array:
+    """Reference: quantize → dot (f32 accumulate) → f32."""
+    xq = x.astype(dtype)
+    yq = y.astype(dtype)
+    return jnp.dot(xq, yq, preferred_element_type=jnp.float32)
+
+
+def quantize_roundtrip(x: jax.Array, dtype) -> jax.Array:
+    """The value lattice the 16-bit format imposes (f32 → 16-bit → f32)."""
+    return x.astype(dtype).astype(jnp.float32)

@@ -1,0 +1,176 @@
+"""L2 JAX golden models — build-time only, never on the request path.
+
+One dtype-parametric golden per benchmark of Table 3, plus a small
+end-to-end near-sensor classifier that calls the L1 Pallas kernel
+(`kernels.matmul_tp`) so the kernel lowers into the exported HLO.
+
+Contract with the Rust runtime (`rust/src/runtime/`): every exported
+function takes binary32 arrays (16-bit quantization happens *inside* the
+graph, on the same RNE lattice as the simulator's `transfp`), returns a
+tuple of binary32 arrays, and its parameter order matches the order of the
+benchmark's staged, non-scratch TCDM buffers (see `aot.py::EXPORTS`).
+
+Constant tables (DWT filter bank, IIR biquad) are bit-identical to the Rust
+kernels' constants (`rust/src/kernels/{dwt,iir}.rs`).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul_tp import matmul_tp
+
+# --------------------------------------------------------------- constants
+
+# db2 filter bank — must match rust/src/kernels/dwt.rs::filters().
+DWT_H = np.array([0.4829629, 0.8365163, 0.22414387, -0.12940952], np.float32)
+DWT_G = np.array([DWT_H[3], -DWT_H[2], DWT_H[1], -DWT_H[0]], np.float32)
+DWT_TAPS = 4
+
+# Biquad — must match rust/src/kernels/iir.rs::{B, A}.
+IIR_B = np.array([0.2929, 0.5858, 0.2929], np.float32)
+IIR_A = np.array([1.0, -0.34], np.float32)
+
+
+# --------------------------------------------------------------- goldens
+
+def matmul_f32(a, b):
+    """C = A·B in binary32."""
+    return (jnp.dot(a, b),)
+
+
+def matmul_f16(a, b):
+    """Transprecision matmul through the Pallas kernel (float16 operands,
+    f32 accumulation), result quantized to float16 like the cluster's
+    cast-and-pack output, returned widened to f32."""
+    c = matmul_tp(a, b, dtype=jnp.float16, block=(16, 16, 16))
+    return (c.astype(jnp.float16).astype(jnp.float32),)
+
+
+def matmul_bf16(a, b):
+    """Same with bfloat16 operands."""
+    c = matmul_tp(a, b, dtype=jnp.bfloat16, block=(16, 16, 16))
+    return (c.astype(jnp.bfloat16).astype(jnp.float32),)
+
+
+def fir_f32(x, h):
+    """y[i] = Σ_t h[t]·x[i+t] over the valid range (n = len(x) − len(h))."""
+    n = x.shape[0] - h.shape[0]
+    return (jnp.correlate(x, h, mode="valid")[:n],)
+
+
+def fir_f16(x, h):
+    """float16 operands, f32 accumulation, f16-quantized output."""
+    n = x.shape[0] - h.shape[0]
+    xq = x.astype(jnp.float16).astype(jnp.float32)
+    hq = h.astype(jnp.float16).astype(jnp.float32)
+    y = jnp.correlate(xq, hq, mode="valid")[:n]
+    return (y.astype(jnp.float16).astype(jnp.float32),)
+
+
+def conv_f32(img, k):
+    """Valid 3×3 2D correlation (XLA convolution does not flip the kernel),
+    flattened row-major like the simulator's output buffer."""
+    h, w = img.shape
+    out = jax.lax.conv(
+        img[None, None, :, :], k[None, None, :, :], (1, 1), "VALID"
+    )[0, 0]
+    return (out.reshape(-1),)
+
+
+def dwt_f32(x):
+    """Multi-level db2 analysis with zero-extended edges; output layout
+    [approx_L | detail_L | … | detail_1] (see rust/src/kernels/dwt.rs)."""
+    levels = 3
+    h = jnp.asarray(DWT_H)
+    g = jnp.asarray(DWT_G)
+    cur = x
+    details = []
+    for _ in range(levels):
+        padded = jnp.pad(cur, (0, DWT_TAPS - 1))
+        lo = jnp.correlate(padded, h, mode="valid")[::2]
+        hi = jnp.correlate(padded, g, mode="valid")[::2]
+        details.append(hi)
+        cur = lo
+    # [a_L, d_L, d_{L-1}, ..., d_1]
+    return (jnp.concatenate([cur] + details[::-1]),)
+
+
+def _bitrev_perm(n: int) -> np.ndarray:
+    bits = n.bit_length() - 1
+    perm = np.zeros(n, np.int32)
+    for i in range(n):
+        r = 0
+        for b in range(bits):
+            r |= ((i >> b) & 1) << (bits - 1 - b)
+        perm[i] = r
+    return perm
+
+
+def fft_f32(x):
+    """Radix-2 DIF FFT golden: interleaved (re, im) input of 2n values,
+    output in the simulator's bit-reversed storage order."""
+    n = x.shape[0] // 2
+    z = x[0::2] + 1j * x[1::2]
+    f = jnp.fft.fft(z)
+    y = f[jnp.asarray(_bitrev_perm(n))]
+    out = jnp.stack([jnp.real(y), jnp.imag(y)], axis=1).reshape(-1)
+    return (out.astype(jnp.float32),)
+
+
+def iir_f32(x):
+    """Biquad: parallel feed-forward + scanned feedback recursion."""
+    b0, b1, b2 = [jnp.float32(v) for v in IIR_B]
+    a1, a2 = [jnp.float32(v) for v in IIR_A]
+    xm1 = jnp.pad(x, (1, 0))[:-1]
+    xm2 = jnp.pad(x, (2, 0))[:-2]
+    w = b0 * x + b1 * xm1 + b2 * xm2
+
+    def step(carry, wi):
+        y1, y2 = carry
+        y = wi + a1 * y1 + a2 * y2
+        return (y, y1), y
+
+    _, y = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)), w)
+    return (y,)
+
+
+def kmeans_f32(pts, cent):
+    """One Lloyd step: assign to the nearest centroid (squared distance,
+    first-wins ties like the kernel's strict `<` argmin), then update; empty
+    clusters keep their old centroid. Returns the k×d centroids flattened."""
+    d2 = jnp.sum((pts[:, None, :] - cent[None, :, :]) ** 2, axis=-1)
+    assign = jnp.argmin(d2, axis=1)
+    k = cent.shape[0]
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+    counts = onehot.sum(axis=0)
+    sums = onehot.T @ pts
+    newc = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], cent)
+    return (newc.reshape(-1),)
+
+
+def svm_f32(sv, alpha, x, bias):
+    """Linear SVM decision: [score, class]."""
+    dots = sv @ x
+    score = alpha @ dots + bias[0]
+    cls = jnp.where(score >= 0.0, 1.0, -1.0)
+    return (jnp.stack([score, cls]),)
+
+
+# ---------------------------------------------------- end-to-end model
+
+def exg_mlp(windows, w1, w2):
+    """The near-sensor e2e model: a batch of 16 ExG feature windows (each 64
+    DWT features) classified by a 2-layer MLP whose matmuls run on the
+    transprecision Pallas kernel — 16-bit operands, f32 accumulation, the
+    exact compute contract of the cluster's vector datapath.
+
+    windows: [16, 64] f32; w1: [64, 64]; w2: [64, 16] → logits [16, 16].
+    """
+    h = matmul_tp(windows, w1, dtype=jnp.bfloat16, block=(16, 16, 16))
+    h = jax.nn.relu(h)
+    logits = matmul_tp(h, w2, dtype=jnp.bfloat16, block=(16, 16, 16))
+    return (logits,)

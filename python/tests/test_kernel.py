@@ -1,0 +1,81 @@
+"""L1 Pallas kernel vs the pure-jnp oracle — the CORE build-time
+correctness signal. Hypothesis sweeps tile-aligned shapes, dtypes and value
+ranges; exact agreement is required (same quantize → f32-accumulate
+contract on CPU interpret mode)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul_tp import matmul_tp
+from compile.kernels.ref import matmul_tp_ref, quantize_roundtrip
+
+jax.config.update("jax_platforms", "cpu")
+
+BLOCK = (16, 16, 16)
+
+
+def _rand(shape, lo, hi, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(lo, hi, size=shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float16, jnp.bfloat16])
+@pytest.mark.parametrize("mnk", [(16, 16, 16), (32, 16, 48), (64, 64, 64)])
+def test_matmul_tp_matches_ref(dtype, mnk):
+    m, n, k = mnk
+    x = _rand((m, k), -2.0, 2.0, seed=m + n)
+    y = _rand((k, n), -2.0, 2.0, seed=k)
+    out = matmul_tp(jnp.asarray(x), jnp.asarray(y), dtype=dtype, block=BLOCK)
+    ref = matmul_tp_ref(jnp.asarray(x), jnp.asarray(y), dtype=dtype)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mi=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    ki=st.integers(1, 4),
+    scale=st.sampled_from([0.1, 1.0, 8.0]),
+    dt=st.sampled_from(["f16", "bf16"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_tp_hypothesis(mi, ni, ki, scale, dt, seed):
+    dtype = jnp.float16 if dt == "f16" else jnp.bfloat16
+    m, n, k = 16 * mi, 16 * ni, 16 * ki
+    x = _rand((m, k), -scale, scale, seed)
+    y = _rand((k, n), -scale, scale, seed ^ 0xABCD)
+    out = matmul_tp(jnp.asarray(x), jnp.asarray(y), dtype=dtype, block=BLOCK)
+    ref = matmul_tp_ref(jnp.asarray(x), jnp.asarray(y), dtype=dtype)
+    # Tile-split accumulation reorders the f32 sums; bound the error by the
+    # classic |Σ| ≤ k·scale² growth of partial-sum rounding.
+    atol = 1e-5 + k * scale * scale * 2e-6
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=atol)
+
+
+def test_quantization_is_rne():
+    # The f32→f16 lattice must match IEEE RNE — same constants as the Rust
+    # transfp tests (spec.rs).
+    vals = np.array([0.1, 65504.0, 65520.0, 6.103515625e-05], np.float32)
+    q = np.asarray(quantize_roundtrip(jnp.asarray(vals), jnp.float16))
+    assert q[0] == np.float32(np.float16(0.1))
+    assert q[1] == 65504.0
+    assert np.isinf(q[2])  # rounds to inf
+    assert q[3] == 6.103515625e-05
+
+
+def test_accumulation_is_f32_not_f16():
+    # 2048 ones: an f16 accumulator saturates at 2048 (ulp=2), f32 doesn't.
+    k = 2048
+    x = jnp.ones((16, k), jnp.float32)
+    y = jnp.ones((k, 16), jnp.float32)
+    out = matmul_tp(x, y, dtype=jnp.float16, block=(16, 16, 16))
+    assert float(out[0, 0]) == float(k), "accumulation must be binary32"
+
+
+def test_shape_validation():
+    with pytest.raises(AssertionError):
+        matmul_tp(jnp.ones((10, 16)), jnp.ones((16, 16)), block=BLOCK)

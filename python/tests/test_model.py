@@ -1,0 +1,122 @@
+"""L2 golden-model sanity: shapes, reference numerics vs plain numpy, and
+the structural properties the Rust simulator relies on (layouts, constant
+tables, bit-reversed FFT order)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def rnd(shape, seed, lo=-1.0, hi=1.0):
+    return np.random.default_rng(seed).uniform(lo, hi, shape).astype(np.float32)
+
+
+def test_matmul_f32_is_plain_dot():
+    a, b = rnd((8, 8), 1), rnd((8, 8), 2)
+    (c,) = model.matmul_f32(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(c), a @ b, rtol=1e-5, atol=1e-6)
+
+
+def test_matmul_f16_quantizes_both_sides():
+    a, b = rnd((16, 16), 3), rnd((16, 16), 4)
+    (c,) = model.matmul_f16(jnp.asarray(a), jnp.asarray(b))
+    ref = (a.astype(np.float16).astype(np.float32) @ b.astype(np.float16).astype(np.float32))
+    ref = ref.astype(np.float16).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(c), ref, rtol=2e-3, atol=1e-3)
+
+
+def test_fir_matches_numpy_correlate():
+    x, h = rnd((64 + 16,), 5), rnd((16,), 6)
+    (y,) = model.fir_f32(jnp.asarray(x), jnp.asarray(h))
+    ref = np.correlate(x, h, mode="valid")[:64]
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-5, atol=1e-6)
+
+
+def test_conv_is_correlation_not_convolution():
+    img = rnd((8, 8), 7)
+    k = np.zeros((3, 3), np.float32)
+    k[0, 1] = 1.0  # picks img[oy+0, ox+1] — flipped if XLA convolved.
+    (out,) = model.conv_f32(jnp.asarray(img), jnp.asarray(k))
+    np.testing.assert_allclose(np.asarray(out).reshape(6, 6), img[0:6, 1:7], rtol=1e-6)
+
+
+def test_dwt_layout_and_energy():
+    x = rnd((64,), 8)
+    (out,) = model.dwt_f32(jnp.asarray(x))
+    assert out.shape == (64,)
+    # Orthonormal db2 with zero-extension: energy preserved up to the edge
+    # loss of the truncated support (always ≤ input energy).
+    e_in, e_out = float(np.sum(x**2)), float(jnp.sum(out**2))
+    assert e_out <= e_in + 1e-4
+    assert e_out > 0.85 * e_in
+
+
+def test_fft_bitrev_order():
+    n = 16
+    t = np.arange(n)
+    re = np.cos(2 * np.pi * 3 * t / n).astype(np.float32)
+    x = np.zeros(2 * n, np.float32)
+    x[0::2] = re
+    (out,) = model.fft_f32(jnp.asarray(x))
+    y = np.asarray(out).reshape(n, 2)
+    mags = np.hypot(y[:, 0], y[:, 1])
+    # Bin 3 (and its mirror 13) carry the energy; bin 3 in bit-reversed
+    # order (4 bits) sits at index reverse(0011) = 1100 = 12.
+    assert mags[12] > 7.0, mags
+    assert mags[0] < 1e-3
+
+
+def test_iir_matches_scipy_style_recursion():
+    x = rnd((32,), 9)
+    (y,) = model.iir_f32(jnp.asarray(x))
+    b, a = model.IIR_B, model.IIR_A
+    ref = np.zeros(32, np.float32)
+    y1 = y2 = 0.0
+    for i in range(32):
+        w = b[0] * x[i] + b[1] * (x[i - 1] if i >= 1 else 0) + b[2] * (x[i - 2] if i >= 2 else 0)
+        v = w + a[0] * y1 + a[1] * y2
+        ref[i] = v
+        y2, y1 = y1, v
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-4, atol=1e-5)
+
+
+def test_kmeans_update_with_empty_cluster():
+    pts = np.array([[0.0, 0.0], [0.1, 0.0], [5.0, 5.0]], np.float32)
+    cent = np.array([[0.0, 0.0], [5.0, 5.0], [100.0, 100.0]], np.float32)
+    (newc,) = model.kmeans_f32(jnp.asarray(pts), jnp.asarray(cent))
+    newc = np.asarray(newc).reshape(3, 2)
+    np.testing.assert_allclose(newc[0], [0.05, 0.0], atol=1e-6)
+    np.testing.assert_allclose(newc[1], [5.0, 5.0], atol=1e-6)
+    np.testing.assert_allclose(newc[2], [100.0, 100.0], atol=1e-6)  # empty: kept
+
+
+def test_svm_sign():
+    sv = rnd((8, 4), 10)
+    alpha = rnd((8,), 11)
+    x = rnd((4,), 12)
+    (out,) = model.svm_f32(*map(jnp.asarray, (sv, alpha, x, np.zeros(1, np.float32))))
+    score = float(alpha @ (sv @ x))
+    assert abs(float(out[0]) - score) < 1e-4
+    assert float(out[1]) == (1.0 if score >= 0 else -1.0)
+
+
+def test_exg_mlp_shapes_and_range():
+    w = rnd((16, 64), 13)
+    w1 = rnd((64, 64), 14, -0.2, 0.2)
+    w2 = rnd((64, 16), 15, -0.2, 0.2)
+    (logits,) = model.exg_mlp(*map(jnp.asarray, (w, w1, w2)))
+    assert logits.shape == (16, 16)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_constants_match_rust():
+    # Guards against drift between model.py and rust/src/kernels/*.rs.
+    np.testing.assert_allclose(model.DWT_H, [0.4829629, 0.8365163, 0.22414387, -0.12940952])
+    np.testing.assert_allclose(model.IIR_B, [0.2929, 0.5858, 0.2929])
+    np.testing.assert_allclose(model.IIR_A, [1.0, -0.34])

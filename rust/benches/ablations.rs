@@ -1,0 +1,105 @@
+//! `cargo bench --bench ablations` — design-choice ablations called out in
+//! DESIGN.md:
+//!
+//! 1. **Interleaved vs blocked FPU mapping** (§3.2): the paper claims the
+//!    interleaved allocation avoids contention "when the number of workers
+//!    in parallel sections is smaller than the number of cores" with ≤1%
+//!    overhead vs a full crossbar. We compare both mappings at full and
+//!    half occupancy.
+//! 2. **Shared-I$ cold misses**: cost of the cold-fill model vs a perfect
+//!    cache (bounds the I$ contribution to the Table 4/5 numbers).
+//! 3. **float16 vs bfloat16 vectors** (§5.2): "no significant difference in
+//!    execution time" — verified cycle-exactly.
+//! 4. **DIV-SQRT sharing**: KMEANS (the fdiv-using benchmark) with the
+//!    cluster-shared iterative unit — contention visibility.
+
+use transpfp::cluster::Cluster;
+use transpfp::config::ClusterConfig;
+use transpfp::kernels::{Benchmark, Variant};
+use transpfp::transfp::FpMode;
+
+fn main() {
+    // --- 1. FPU mapping, full vs half occupancy.
+    println!("=== ablation 1: interleaved vs blocked FPU mapping (8c4f1p, MATMUL scalar) ===");
+    for workers in [8usize, 4] {
+        let mut row = format!("  {workers} workers:");
+        for (label, cfg) in [
+            ("interleaved", ClusterConfig::new(8, 4, 1)),
+            ("blocked", ClusterConfig::new(8, 4, 1).with_blocked_fpu_map()),
+        ] {
+            let w = Benchmark::Matmul.build(Variant::Scalar, &cfg);
+            let (stats, out) = w.run_on(&cfg, workers);
+            w.verify(&out).unwrap();
+            let cont: u64 = stats.per_core.iter().map(|c| c.fpu_cont).sum();
+            row.push_str(&format!(
+                "  {label}: {} cycles ({} fpu-contention)",
+                stats.total_cycles, cont
+            ));
+        }
+        println!("{row}");
+    }
+    println!("  (interleaving must win at half occupancy — §3.2)\n");
+
+    // --- 2. I$ cold misses.
+    println!("=== ablation 2: shared-I$ cold-fill vs perfect cache (16c8f1p) ===");
+    for b in [Benchmark::Fir, Benchmark::Fft] {
+        let cfg = ClusterConfig::new(16, 8, 1);
+        let w = b.build(Variant::Scalar, &cfg);
+        let real = {
+            let mut cl = Cluster::new(cfg, w.program.clone());
+            w.stage_into(&mut cl.mem);
+            cl.run().total_cycles
+        };
+        let perfect = {
+            let mut cl = Cluster::new(cfg, w.program.clone());
+            cl.perfect_icache = true;
+            w.stage_into(&mut cl.mem);
+            cl.run().total_cycles
+        };
+        println!(
+            "  {:8} cold-fill {} vs perfect {} (+{:.2}%)",
+            b.name(),
+            real,
+            perfect,
+            (real as f64 / perfect as f64 - 1.0) * 100.0
+        );
+    }
+    println!();
+
+    // --- 3. float16 vs bfloat16.
+    println!("=== ablation 3: float16 vs bfloat16 vector cycle counts (8c8f1p) ===");
+    let cfg = ClusterConfig::new(8, 8, 1);
+    for b in Benchmark::all() {
+        let f16 = b.build(Variant::Vector(FpMode::VecF16), &cfg);
+        let bf16 = b.build(Variant::Vector(FpMode::VecBf16), &cfg);
+        let (s16, o16) = f16.run(&cfg);
+        let (sbf, obf) = bf16.run(&cfg);
+        f16.verify(&o16).unwrap();
+        bf16.verify(&obf).unwrap();
+        let delta = (s16.total_cycles as f64 / sbf.total_cycles as f64 - 1.0) * 100.0;
+        println!(
+            "  {:8} f16 {:>7}  bf16 {:>7}  Δ {:+.2}% {}",
+            b.name(),
+            s16.total_cycles,
+            sbf.total_cycles,
+            delta,
+            if delta.abs() < 1.0 { "≈ (paper: single value for both)" } else { "" }
+        );
+    }
+    println!();
+
+    // --- 4. DIV-SQRT contention visibility.
+    println!("=== ablation 4: shared DIV-SQRT contention (KMEANS scalar) ===");
+    for cores in [8usize, 16] {
+        let cfg = ClusterConfig::new(cores, cores, 1);
+        let w = Benchmark::Kmeans.build(Variant::Scalar, &cfg);
+        let mut cl = Cluster::new(cfg, w.program.clone());
+        w.stage_into(&mut cl.mem);
+        let stats = cl.run();
+        let cont: u64 = stats.per_core.iter().map(|c| c.divsqrt_cont).sum();
+        println!(
+            "  {cores} cores: {} fdiv ops through one shared unit, {} contention cycles",
+            cl.fpus.divsqrt_ops, cont
+        );
+    }
+}

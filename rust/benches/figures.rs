@@ -1,0 +1,32 @@
+//! `cargo bench --bench figures` — regenerates Figs 3–8 of the paper:
+//! frequency spreads, area, power, parallel/vector speed-ups, sharing-factor
+//! and pipelining trends.
+
+use std::time::Instant;
+
+fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let r = f();
+    eprintln!("[bench] {name}: {:.2}s", t0.elapsed().as_secs_f64());
+    r
+}
+
+fn main() {
+    println!("================ Fig 3 — fmax min/median/max across FPU counts ================");
+    println!("{}", timed("fig3", transpfp::coordinator::fig3).render());
+
+    println!("================ Fig 4 — total area per configuration ================");
+    println!("{}", timed("fig4", transpfp::coordinator::fig4).render());
+
+    println!("================ Fig 5 — power @100 MHz per configuration (f32 MATMUL) ================");
+    println!("{}", timed("fig5", transpfp::coordinator::fig5).render());
+
+    println!("================ Fig 6 — parallel + vectorization speed-ups (16-core) ================");
+    println!("{}", timed("fig6", transpfp::coordinator::fig6).render());
+
+    println!("================ Fig 7 — normalized metrics vs sharing factor (1 stage) ================");
+    println!("{}", timed("fig7", transpfp::coordinator::fig7).render());
+
+    println!("================ Fig 8 — normalized metrics vs pipeline stages (1/1) ================");
+    println!("{}", timed("fig8", transpfp::coordinator::fig8).render());
+}

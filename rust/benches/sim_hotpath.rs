@@ -1,0 +1,45 @@
+//! `cargo bench --bench sim_hotpath` — L3 hot-path throughput: simulated
+//! core-cycles per wall-clock second for each benchmark kernel. This is the
+//! §Perf gate of EXPERIMENTS.md: the full DSE (18×8×2) must complete in
+//! seconds, which requires ≥20 M simulated core-cycles/s.
+
+use std::time::Instant;
+
+use transpfp::config::ClusterConfig;
+use transpfp::kernels::{Benchmark, Variant};
+
+fn main() {
+    let cfg = ClusterConfig::new(16, 8, 1);
+    let mut grand_cycles = 0u64;
+    let t_all = Instant::now();
+    println!("simulator hot-path throughput on {} ({} cores):", cfg, cfg.cores);
+    for b in Benchmark::all() {
+        for v in [Variant::Scalar, Variant::VEC] {
+            let w = b.build(v, &cfg);
+            // Warm-up + 3 measured repetitions.
+            let _ = w.run(&cfg);
+            let reps = 3;
+            let t0 = Instant::now();
+            let mut cycles = 0u64;
+            for _ in 0..reps {
+                let (stats, _) = w.run(&cfg);
+                cycles += stats.total_cycles * cfg.cores as u64;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            grand_cycles += cycles;
+            println!(
+                "  {:8} {:7}  {:>8.1} M core-cycles/s  ({} cycles/run)",
+                b.name(),
+                v.label(),
+                cycles as f64 / dt / 1e6,
+                cycles / reps / cfg.cores as u64
+            );
+        }
+    }
+    let dt = t_all.elapsed().as_secs_f64();
+    println!(
+        "aggregate: {:.1} M simulated core-cycles/s over {:.2}s",
+        grand_cycles as f64 / dt / 1e6,
+        dt
+    );
+}

@@ -1,0 +1,31 @@
+//! `cargo bench --bench tables` — regenerates Tables 3–6 of the paper
+//! (the full benchmark sweep on the cycle-accurate simulator) and times
+//! each. This is the paper-reproduction bench: the printed tables are the
+//! artifact; the timings gate the simulator's end-to-end throughput.
+
+use std::time::Instant;
+
+fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let r = f();
+    eprintln!("[bench] {name}: {:.2}s", t0.elapsed().as_secs_f64());
+    r
+}
+
+fn main() {
+    println!("================ Table 3 — FP/memory intensity (measured vs paper) ================");
+    let t = timed("table3", transpfp::coordinator::table3);
+    println!("{}", t.render());
+
+    println!("================ Table 4 — 8-core configurations ================");
+    let t = timed("table4", || transpfp::coordinator::table45(8));
+    println!("{}", t.render());
+
+    println!("================ Table 5 — 16-core configurations ================");
+    let t = timed("table5", || transpfp::coordinator::table45(16));
+    println!("{}", t.render());
+
+    println!("================ Table 6 — state-of-the-art comparison ================");
+    let t = timed("table6", transpfp::coordinator::table6);
+    println!("{}", t.render());
+}

@@ -1,0 +1,44 @@
+//! `cargo bench --bench transfp_micro` — L1-substrate micro-benchmarks:
+//! throughput of the bit-accurate softfloat ops the simulator's FP path is
+//! built on. These ops dominate the simulator's per-cycle cost for
+//! FP-intensive kernels, so regressions here show up directly in
+//! `sim_hotpath`.
+
+use std::time::Instant;
+
+use transpfp::transfp::{scalar, simd, spec::F16, FpSpec};
+
+fn bench(name: &str, iters: u64, f: impl Fn(u64) -> u32) {
+    // Warm-up.
+    let mut acc = 0u32;
+    for i in 0..1000 {
+        acc = acc.wrapping_add(f(i));
+    }
+    let t0 = Instant::now();
+    for i in 0..iters {
+        acc = acc.wrapping_add(f(i));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("  {name:24} {:>8.1} M ops/s   (sink {acc:08x})", iters as f64 / dt / 1e6);
+}
+
+fn main() {
+    const N: u64 = 2_000_000;
+    let spec: &FpSpec = &F16;
+    println!("transfp softfloat micro-benchmarks ({N} iterations):");
+
+    bench("f32 fma (native)", N, |i| {
+        scalar::fma32((i as u32) | 0x3f80_0000, 0x3f00_0000, 0x3e80_0000)
+    });
+    bench("f16 add", N, |i| scalar::add16(spec, (i as u16) & 0x7bff, 0x3c00) as u32);
+    bench("f16 fma", N, |i| {
+        scalar::fma16(spec, (i as u16) & 0x7bff, 0x3800, 0x3c00) as u32
+    });
+    bench("f16→f64 decode", N, |i| spec.to_f64((i as u16) & 0x7bff) as u32);
+    bench("f64→f16 encode", N, |i| spec.from_f64(i as f64 * 0.001) as u32);
+    bench("vec2 f16 vmac", N, |i| simd::vmac(spec, i as u32, 0x3c00_3c00, 0x0000_3c00));
+    bench("vec2 f16 dotp widen", N, |i| simd::vdotp_widen(spec, i as u32, 0x3c00_3c00, 0));
+    bench("cast-and-pack", N, |i| {
+        transpfp::transfp::cast::cpka(spec, (i as u32) | 0x3f80_0000, 0x3f00_0000)
+    });
+}

@@ -1,0 +1,400 @@
+//! Per-core state and functional execution for the RI5CY-like core model.
+//!
+//! Timing (stalls, arbitration, pipelining) lives in the cluster's issue
+//! loop ([`super::Cluster`]); this module owns the architectural state —
+//! registers, PC, hardware-loop stack, scoreboard — and the *functional*
+//! semantics of each instruction, built on [`crate::transfp`].
+
+use super::counters::CoreCounters;
+use super::mem::Memory;
+use crate::isa::insn::{AluOp, BrCond, FpOp, Insn, Operand};
+use crate::transfp::{cast, scalar, simd, FpMode};
+
+/// What produced the pending value of a register (stall attribution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Producer {
+    #[default]
+    None,
+    /// FPU datapath (latency stall → `fpu_stall`).
+    Fpu,
+    /// Load unit (load-use stall → `load_stall`).
+    Load,
+    /// Shared DIV-SQRT block (→ `fpu_stall`).
+    DivSqrt,
+}
+
+/// Execution state of a core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreState {
+    Running,
+    /// Asleep at an event-unit barrier since the carried cycle.
+    Sleeping { since: u64 },
+    Done,
+}
+
+/// One RI5CY-like core.
+#[derive(Debug, Clone)]
+pub struct Core {
+    /// Core index within the cluster.
+    pub id: usize,
+    /// Register file (x0 hardwired to zero).
+    pub regs: [u32; 32],
+    /// Program counter (instruction index).
+    pub pc: u32,
+    /// Earliest cycle at which the core may issue again.
+    pub next_issue: u64,
+    /// Per-register earliest consume cycle (scoreboard).
+    pub reg_ready: [u64; 32],
+    /// Producer of each register's pending value.
+    pub reg_producer: [Producer; 32],
+    /// Hardware-loop stack: (start, end, remaining iterations).
+    pub hwloops: Vec<(u32, u32, u32)>,
+    /// Cycle of the most recent FP issue (write-back port model).
+    pub last_fp_issue: u64,
+    /// WB-conflict skid counter: the FPU's result register absorbs two of
+    /// every three int-after-FP write-back collisions (§5.3.3 shows only a
+    /// ~10% cycle penalty at 2 stages, not one stall per collision).
+    pub wb_skid: u8,
+    /// Execution state.
+    pub state: CoreState,
+    /// Performance counters.
+    pub counters: CoreCounters,
+}
+
+impl Core {
+    /// Fresh core `id` of `ncores`, with the HAL convention registers set
+    /// (core id / ncores — §4's parallel runtime).
+    pub fn new(id: usize, ncores: usize) -> Self {
+        let mut regs = [0u32; 32];
+        regs[crate::isa::regs::CORE_ID as usize] = id as u32;
+        regs[crate::isa::regs::NCORES as usize] = ncores as u32;
+        Core {
+            id,
+            regs,
+            pc: 0,
+            next_issue: 0,
+            reg_ready: [0; 32],
+            reg_producer: [Producer::None; 32],
+            hwloops: Vec::with_capacity(2),
+            // Sentinel that can never equal `t - 1` (t=0 wraps to u64::MAX).
+            last_fp_issue: u64::MAX - 1,
+            wb_skid: 0,
+            state: CoreState::Running,
+            counters: CoreCounters::default(),
+        }
+    }
+
+    /// Read a register (x0 reads as zero).
+    #[inline]
+    pub fn reg(&self, r: u8) -> u32 {
+        if r == 0 {
+            0
+        } else {
+            self.regs[r as usize]
+        }
+    }
+
+    /// Write a register (writes to x0 are dropped) and clear its scoreboard
+    /// entry unless the caller re-arms it.
+    #[inline]
+    pub fn set_reg(&mut self, r: u8, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    /// Latest ready-cycle over the registers an instruction reads, together
+    /// with the producer responsible (for stall attribution).
+    pub fn operands_ready(&self, insn: &Insn) -> (u64, Producer) {
+        let mut worst = 0u64;
+        let mut who = Producer::None;
+        let check = |r: u8, worst: &mut u64, who: &mut Producer| {
+            let t = self.reg_ready[r as usize];
+            if t > *worst {
+                *worst = t;
+                *who = self.reg_producer[r as usize];
+            }
+        };
+        match insn {
+            Insn::Alu { rs1, rhs, .. } => {
+                check(*rs1, &mut worst, &mut who);
+                if let Operand::Reg(r) = rhs {
+                    check(*r, &mut worst, &mut who);
+                }
+            }
+            Insn::Li { .. } => {}
+            Insn::Load { base, .. } => check(*base, &mut worst, &mut who),
+            Insn::Store { rs, base, .. } => {
+                check(*rs, &mut worst, &mut who);
+                check(*base, &mut worst, &mut who);
+            }
+            Insn::Branch { rs1, rs2, .. } => {
+                check(*rs1, &mut worst, &mut who);
+                check(*rs2, &mut worst, &mut who);
+            }
+            Insn::Jump { .. } | Insn::Barrier | Insn::End => {}
+            Insn::HwLoop { count, .. } => check(*count, &mut worst, &mut who),
+            Insn::Fp { op, rd, rs1, rs2, .. } => {
+                check(*rs1, &mut worst, &mut who);
+                // Shuffle carries an immediate in the rs2 slot.
+                if !matches!(op, FpOp::Shuffle | FpOp::Sqrt | FpOp::Neg | FpOp::AbsF
+                    | FpOp::FromInt | FpOp::ToInt | FpOp::CvtDown | FpOp::CvtUp)
+                {
+                    check(*rs2, &mut worst, &mut who);
+                }
+                if op.reads_rd() {
+                    check(*rd, &mut worst, &mut who);
+                }
+            }
+        }
+        (worst, who)
+    }
+
+    /// Execute an integer ALU op functionally.
+    pub fn exec_alu(&mut self, op: AluOp, rd: u8, rs1: u8, rhs: Operand) {
+        let a = self.reg(rs1) as i32;
+        let b = match rhs {
+            Operand::Reg(r) => self.reg(r) as i32,
+            Operand::Imm(i) => i,
+        };
+        let v = match op {
+            AluOp::Add => a.wrapping_add(b),
+            AluOp::Sub => a.wrapping_sub(b),
+            AluOp::Sll => ((a as u32) << (b & 31)) as i32,
+            AluOp::Srl => ((a as u32) >> (b & 31)) as i32,
+            AluOp::Sra => a >> (b & 31),
+            AluOp::And => a & b,
+            AluOp::Or => a | b,
+            AluOp::Xor => a ^ b,
+            AluOp::Slt => (a < b) as i32,
+            AluOp::Sltu => ((a as u32) < (b as u32)) as i32,
+            AluOp::Mul => a.wrapping_mul(b),
+            AluOp::Div => {
+                if b == 0 {
+                    -1
+                } else {
+                    a.wrapping_div(b)
+                }
+            }
+            AluOp::Rem => {
+                if b == 0 {
+                    a
+                } else {
+                    a.wrapping_rem(b)
+                }
+            }
+            AluOp::Min => a.min(b),
+            AluOp::Max => a.max(b),
+            AluOp::Abs => a.wrapping_abs(),
+            AluOp::Mac => (self.reg(rd) as i32).wrapping_add(a.wrapping_mul(b)),
+        };
+        self.set_reg(rd, v as u32);
+    }
+
+    /// Evaluate a branch condition.
+    pub fn branch_taken(&self, cond: BrCond, rs1: u8, rs2: u8) -> bool {
+        let (a, b) = (self.reg(rs1), self.reg(rs2));
+        match cond {
+            BrCond::Eq => a == b,
+            BrCond::Ne => a != b,
+            BrCond::Lt => (a as i32) < (b as i32),
+            BrCond::Ge => (a as i32) >= (b as i32),
+            BrCond::Ltu => a < b,
+            BrCond::Geu => a >= b,
+        }
+    }
+
+    /// Execute a floating-point op functionally (numerics only — timing is
+    /// the cluster's job). Returns the flop count contributed.
+    pub fn exec_fp(&mut self, op: FpOp, mode: FpMode, rd: u8, rs1: u8, rs2: u8) -> u64 {
+        use FpMode::*;
+        let a = self.reg(rs1);
+        let b = self.reg(rs2);
+        let d = self.reg(rd);
+        let v = match (op, mode) {
+            // --- binary32 scalar
+            (FpOp::Add, F32) => scalar::add32(a, b),
+            (FpOp::Sub, F32) => scalar::sub32(a, b),
+            (FpOp::Mul, F32) => scalar::mul32(a, b),
+            (FpOp::Mac, F32) => scalar::fma32(a, b, d),
+            (FpOp::Min, F32) => scalar::min32(a, b),
+            (FpOp::Max, F32) => scalar::max32(a, b),
+            (FpOp::Cmp(p), F32) => scalar::cmp32(a, b, p),
+            (FpOp::Div, F32) => scalar::div32(a, b),
+            (FpOp::Sqrt, F32) => scalar::sqrt32(a),
+            (FpOp::Neg, F32) => a ^ 0x8000_0000,
+            (FpOp::AbsF, F32) => a & 0x7FFF_FFFF,
+            (FpOp::FromInt, F32) => cast::i32_to_f32(a),
+            (FpOp::ToInt, F32) => cast::f32_to_i32(a),
+            // --- 16-bit scalar (lane 0 of the register)
+            (FpOp::Add, F16 | Bf16) => {
+                scalar::add16(mode.spec().unwrap(), a as u16, b as u16) as u32
+            }
+            (FpOp::Sub, F16 | Bf16) => {
+                scalar::sub16(mode.spec().unwrap(), a as u16, b as u16) as u32
+            }
+            (FpOp::Mul, F16 | Bf16) => {
+                scalar::mul16(mode.spec().unwrap(), a as u16, b as u16) as u32
+            }
+            (FpOp::Mac, F16 | Bf16) => {
+                scalar::fma16(mode.spec().unwrap(), a as u16, b as u16, d as u16) as u32
+            }
+            (FpOp::MacWiden, F16 | Bf16 | VecF16 | VecBf16) => {
+                scalar::fma_widen(mode.spec().unwrap(), a as u16, b as u16, d)
+            }
+            (FpOp::Min, F16 | Bf16) => {
+                scalar::min16(mode.spec().unwrap(), a as u16, b as u16) as u32
+            }
+            (FpOp::Max, F16 | Bf16) => {
+                scalar::max16(mode.spec().unwrap(), a as u16, b as u16) as u32
+            }
+            (FpOp::Cmp(p), F16 | Bf16) => scalar::cmp16(mode.spec().unwrap(), a as u16, b as u16, p),
+            (FpOp::Div, F16 | Bf16) => {
+                scalar::div16(mode.spec().unwrap(), a as u16, b as u16) as u32
+            }
+            (FpOp::Sqrt, F16 | Bf16) => scalar::sqrt16(mode.spec().unwrap(), a as u16) as u32,
+            (FpOp::Neg, F16 | Bf16) => (a as u16 ^ 0x8000) as u32,
+            (FpOp::AbsF, F16 | Bf16) => (a as u16 & 0x7FFF) as u32,
+            (FpOp::FromInt, F16 | Bf16) => cast::i32_to_16(mode.spec().unwrap(), a) as u32,
+            (FpOp::ToInt, F16 | Bf16) => cast::f16_to_i32(mode.spec().unwrap(), a as u16),
+            (FpOp::CvtDown, F16 | Bf16 | VecF16 | VecBf16) => {
+                cast::f32_to_16(mode.spec().unwrap(), a) as u32
+            }
+            (FpOp::CvtUp, F16 | Bf16 | VecF16 | VecBf16) => {
+                cast::f16_to_32(mode.spec().unwrap(), a as u16)
+            }
+            // --- packed-SIMD 2×16
+            (FpOp::Add, VecF16 | VecBf16) => simd::vadd(mode.spec().unwrap(), a, b),
+            (FpOp::Sub, VecF16 | VecBf16) => simd::vsub(mode.spec().unwrap(), a, b),
+            (FpOp::Mul, VecF16 | VecBf16) => simd::vmul(mode.spec().unwrap(), a, b),
+            (FpOp::Mac, VecF16 | VecBf16) => simd::vmac(mode.spec().unwrap(), a, b, d),
+            (FpOp::DotpWiden, VecF16 | VecBf16) => simd::vdotp_widen(mode.spec().unwrap(), a, b, d),
+            (FpOp::Min, VecF16 | VecBf16) => simd::vmin(mode.spec().unwrap(), a, b),
+            (FpOp::Max, VecF16 | VecBf16) => simd::vmax(mode.spec().unwrap(), a, b),
+            (FpOp::Cmp(p), VecF16 | VecBf16) => simd::vcmp(mode.spec().unwrap(), a, b, p),
+            (FpOp::Neg, VecF16 | VecBf16) => a ^ 0x8000_8000,
+            (FpOp::AbsF, VecF16 | VecBf16) => a & 0x7FFF_7FFF,
+            (FpOp::Cpka, VecF16 | VecBf16) => cast::cpka(mode.spec().unwrap(), a, b),
+            (FpOp::Shuffle, _) => simd::vshuffle(a, rs2 as u32),
+            (FpOp::PackLo, _) => simd::vpack_lo(a, b),
+            (FpOp::PackHi, _) => simd::vpack_hi(a, b),
+            (op, mode) => panic!("unsupported FP op/mode combination {op:?}/{mode:?}"),
+        };
+        self.set_reg(rd, v);
+        let flops = op.flops_per_lane()
+            * if matches!(op, FpOp::DotpWiden) {
+                1 // flops_per_lane already reports the full 4
+            } else {
+                mode.lanes() as u64
+            };
+        flops
+    }
+
+    /// Functional memory address of a load/store (before post-increment),
+    /// plus application of the post-increment to the base register.
+    pub fn mem_addr_and_postinc(&mut self, base: u8, offset: i32, post_inc: i32) -> u32 {
+        let addr = (self.reg(base) as i64 + offset as i64) as u32;
+        if post_inc != 0 {
+            let nb = (self.reg(base) as i64 + post_inc as i64) as u32;
+            self.set_reg(base, nb);
+        }
+        addr
+    }
+
+    /// Execute a load functionally.
+    pub fn exec_load(&mut self, mem: &Memory, rd: u8, addr: u32, size: crate::isa::MemSize) {
+        let v = mem.load(addr, size);
+        self.set_reg(rd, v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfp::spec::F16;
+
+    #[test]
+    fn x0_is_hardwired() {
+        let mut c = Core::new(0, 8);
+        c.set_reg(0, 1234);
+        assert_eq!(c.reg(0), 0);
+    }
+
+    #[test]
+    fn hal_registers_initialized() {
+        let c = Core::new(3, 16);
+        assert_eq!(c.reg(crate::isa::regs::CORE_ID), 3);
+        assert_eq!(c.reg(crate::isa::regs::NCORES), 16);
+    }
+
+    #[test]
+    fn alu_semantics() {
+        let mut c = Core::new(0, 1);
+        c.set_reg(1, (-7i32) as u32);
+        c.set_reg(2, 3);
+        c.exec_alu(AluOp::Div, 3, 1, Operand::Reg(2));
+        assert_eq!(c.reg(3) as i32, -2);
+        c.exec_alu(AluOp::Rem, 4, 1, Operand::Reg(2));
+        assert_eq!(c.reg(4) as i32, -1);
+        c.exec_alu(AluOp::Div, 5, 1, Operand::Imm(0));
+        assert_eq!(c.reg(5) as i32, -1); // div-by-zero per RISC-V
+        c.set_reg(6, 5);
+        c.exec_alu(AluOp::Mac, 6, 1, Operand::Reg(2)); // 5 + (-7*3)
+        assert_eq!(c.reg(6) as i32, -16);
+        c.exec_alu(AluOp::Abs, 7, 1, Operand::Imm(0));
+        assert_eq!(c.reg(7), 7);
+    }
+
+    #[test]
+    fn fp_exec_and_flops() {
+        let mut c = Core::new(0, 1);
+        c.set_reg(1, 2.0f32.to_bits());
+        c.set_reg(2, 3.0f32.to_bits());
+        c.set_reg(3, 10.0f32.to_bits());
+        let fl = c.exec_fp(FpOp::Mac, FpMode::F32, 3, 1, 2);
+        assert_eq!(f32::from_bits(c.reg(3)), 16.0);
+        assert_eq!(fl, 2);
+
+        // SIMD mac: 2 lanes × 2 flops.
+        let v1 = simd::pack2(F16.from_f64(1.0), F16.from_f64(2.0));
+        let v2 = simd::pack2(F16.from_f64(3.0), F16.from_f64(4.0));
+        c.set_reg(4, v1);
+        c.set_reg(5, v2);
+        c.set_reg(6, 0);
+        let fl = c.exec_fp(FpOp::Mac, FpMode::VecF16, 6, 4, 5);
+        assert_eq!(fl, 4);
+        let (lo, hi) = simd::unpack2(c.reg(6));
+        assert_eq!(F16.to_f64(lo), 3.0);
+        assert_eq!(F16.to_f64(hi), 8.0);
+
+        // Dot product: 4 flops, f32 accumulator.
+        c.set_reg(7, 0);
+        let fl = c.exec_fp(FpOp::DotpWiden, FpMode::VecF16, 7, 4, 5);
+        assert_eq!(fl, 4);
+        assert_eq!(f32::from_bits(c.reg(7)), 11.0);
+    }
+
+    #[test]
+    fn branches() {
+        let mut c = Core::new(0, 1);
+        c.set_reg(1, 5);
+        c.set_reg(2, 5);
+        assert!(c.branch_taken(BrCond::Eq, 1, 2));
+        assert!(!c.branch_taken(BrCond::Ne, 1, 2));
+        c.set_reg(3, (-1i32) as u32);
+        assert!(c.branch_taken(BrCond::Lt, 3, 1)); // signed
+        assert!(!c.branch_taken(BrCond::Ltu, 3, 1)); // unsigned: 0xFFFF… > 5
+    }
+
+    #[test]
+    fn post_increment_addressing() {
+        let mut c = Core::new(0, 1);
+        c.set_reg(5, 0x1000_0000);
+        let addr = c.mem_addr_and_postinc(5, 0, 4);
+        assert_eq!(addr, 0x1000_0000);
+        assert_eq!(c.reg(5), 0x1000_0004);
+        let addr = c.mem_addr_and_postinc(5, 8, -4);
+        assert_eq!(addr, 0x1000_000C);
+        assert_eq!(c.reg(5), 0x1000_0000);
+    }
+}

@@ -1,0 +1,165 @@
+//! Per-core performance counters, mirroring the non-intrusive counters of
+//! the paper's FPGA emulator (§5.1): "total, active, L2/TCDM memory stalls,
+//! TCDM contention, FPU stall, FPU contention, FPU write-back stall,
+//! instruction cache miss".
+
+/// Counters recorded by one core during a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CoreCounters {
+    /// Wall-clock cycles from reset to this core's `End`.
+    pub cycles: u64,
+    /// Cycles in which the core issued (or was executing a multi-cycle
+    /// integer op) — the "active" state of §5.1.
+    pub active: u64,
+    /// Retired instructions.
+    pub instrs: u64,
+    /// Retired integer/control instructions.
+    pub int_instrs: u64,
+    /// Retired FP instructions (FPU + DIV-SQRT + moves/casts).
+    pub fp_instrs: u64,
+    /// Of which packed-SIMD (both 16-bit lanes active).
+    pub fp_vec_instrs: u64,
+    /// Retired loads/stores.
+    pub mem_instrs: u64,
+    /// Floating-point operations performed (FMA = 2, SIMD ×lanes).
+    pub flops: u64,
+    /// Stall cycles waiting on a TCDM bank lost to another core.
+    pub tcdm_cont: u64,
+    /// Stall cycles on L2 accesses (latency) and DMA waits.
+    pub l2_stall: u64,
+    /// Stall cycles waiting for an FP result (FPU latency / load-use on FP).
+    pub fpu_stall: u64,
+    /// Stall cycles losing FPU-port arbitration to another core.
+    pub fpu_cont: u64,
+    /// Stall cycles waiting for the shared DIV-SQRT block.
+    pub divsqrt_cont: u64,
+    /// Write-back port conflicts between a delayed FPU result and an
+    /// integer/LSU write (§5.3.3).
+    pub wb_stall: u64,
+    /// Load-use interlock stalls on integer loads.
+    pub load_stall: u64,
+    /// Instruction-cache miss stall cycles.
+    pub icache_stall: u64,
+    /// Cycles asleep at an event-unit barrier (clock-gated; §5.3 notes these
+    /// cycles are cheap thanks to the power-saving policies).
+    pub barrier_idle: u64,
+    /// Taken-branch penalty cycles.
+    pub branch_stall: u64,
+}
+
+impl CoreCounters {
+    /// Sum of all categorized non-active cycles (diagnostic).
+    pub fn stalls(&self) -> u64 {
+        self.tcdm_cont
+            + self.l2_stall
+            + self.fpu_stall
+            + self.fpu_cont
+            + self.divsqrt_cont
+            + self.wb_stall
+            + self.load_stall
+            + self.icache_stall
+            + self.barrier_idle
+            + self.branch_stall
+    }
+
+    /// FP intensity: FP instructions / total instructions (Table 3).
+    pub fn fp_intensity(&self) -> f64 {
+        if self.instrs == 0 {
+            0.0
+        } else {
+            self.fp_instrs as f64 / self.instrs as f64
+        }
+    }
+
+    /// Memory intensity: loads+stores / total instructions (Table 3).
+    pub fn mem_intensity(&self) -> f64 {
+        if self.instrs == 0 {
+            0.0
+        } else {
+            self.mem_instrs as f64 / self.instrs as f64
+        }
+    }
+
+    /// Accumulate another core's counters (for cluster aggregates).
+    pub fn merge(&mut self, o: &CoreCounters) {
+        self.cycles = self.cycles.max(o.cycles);
+        self.active += o.active;
+        self.instrs += o.instrs;
+        self.int_instrs += o.int_instrs;
+        self.fp_instrs += o.fp_instrs;
+        self.fp_vec_instrs += o.fp_vec_instrs;
+        self.mem_instrs += o.mem_instrs;
+        self.flops += o.flops;
+        self.tcdm_cont += o.tcdm_cont;
+        self.l2_stall += o.l2_stall;
+        self.fpu_stall += o.fpu_stall;
+        self.fpu_cont += o.fpu_cont;
+        self.divsqrt_cont += o.divsqrt_cont;
+        self.wb_stall += o.wb_stall;
+        self.load_stall += o.load_stall;
+        self.icache_stall += o.icache_stall;
+        self.barrier_idle += o.barrier_idle;
+        self.branch_stall += o.branch_stall;
+    }
+}
+
+/// Whole-cluster result of a run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Per-core counters.
+    pub per_core: Vec<CoreCounters>,
+    /// Total cycles until the last core finished.
+    pub total_cycles: u64,
+}
+
+impl RunStats {
+    /// Aggregate counters over all cores.
+    pub fn aggregate(&self) -> CoreCounters {
+        let mut agg = CoreCounters::default();
+        for c in &self.per_core {
+            agg.merge(c);
+        }
+        agg.cycles = self.total_cycles;
+        agg
+    }
+
+    /// Total flops across the cluster.
+    pub fn flops(&self) -> u64 {
+        self.per_core.iter().map(|c| c.flops).sum()
+    }
+
+    /// Flops per cycle — the frequency-independent performance figure the
+    /// analytic models scale by fmax.
+    pub fn flops_per_cycle(&self) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            self.flops() as f64 / self.total_cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intensities() {
+        let c = CoreCounters { instrs: 100, fp_instrs: 28, mem_instrs: 58, ..Default::default() };
+        assert!((c.fp_intensity() - 0.28).abs() < 1e-12);
+        assert!((c.mem_intensity() - 0.58).abs() < 1e-12);
+        assert_eq!(CoreCounters::default().fp_intensity(), 0.0);
+    }
+
+    #[test]
+    fn merge_and_aggregate() {
+        let a = CoreCounters { cycles: 100, flops: 10, instrs: 50, ..Default::default() };
+        let b = CoreCounters { cycles: 120, flops: 14, instrs: 60, ..Default::default() };
+        let stats = RunStats { per_core: vec![a, b], total_cycles: 120 };
+        let agg = stats.aggregate();
+        assert_eq!(agg.cycles, 120);
+        assert_eq!(agg.flops, 24);
+        assert_eq!(agg.instrs, 110);
+        assert!((stats.flops_per_cycle() - 0.2).abs() < 1e-12);
+    }
+}

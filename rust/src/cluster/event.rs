@@ -1,0 +1,84 @@
+//! Event unit (§3.1): low-overhead barrier synchronization with sleep.
+//!
+//! A core reaching a barrier sends its arrival to the event unit and goes to
+//! sleep (clock-gated — these cycles are cheap in the power model, the
+//! mechanism behind the paper's "energy efficiency is not affected by the
+//! effectiveness of parallelization"). When the last core arrives, all
+//! sleepers are woken after a fixed 2-cycle wake-up.
+
+/// Wake-up latency after the last arrival.
+pub const WAKEUP_LATENCY: u64 = 2;
+
+/// Barrier state for one cluster.
+#[derive(Debug, Clone)]
+pub struct EventUnit {
+    ncores: usize,
+    arrived: Vec<bool>,
+    count: usize,
+    /// Monotonically increasing barrier generation (for debugging/tests).
+    pub generation: u64,
+}
+
+impl EventUnit {
+    /// Event unit for `ncores` cores.
+    pub fn new(ncores: usize) -> Self {
+        EventUnit { ncores, arrived: vec![false; ncores], count: 0, generation: 0 }
+    }
+
+    /// Core `id` arrives at the barrier at `cycle`. Returns `Some(wake_cycle)`
+    /// if this arrival completes the barrier (all cores then resume at
+    /// `wake_cycle`), `None` if the core must sleep.
+    pub fn arrive(&mut self, id: usize, cycle: u64) -> Option<u64> {
+        assert!(!self.arrived[id], "core {id} double-arrived at barrier");
+        self.arrived[id] = true;
+        self.count += 1;
+        if self.count == self.ncores {
+            self.arrived.iter_mut().for_each(|a| *a = false);
+            self.count = 0;
+            self.generation += 1;
+            Some(cycle + WAKEUP_LATENCY)
+        } else {
+            None
+        }
+    }
+
+    /// Number of cores currently waiting.
+    pub fn waiting(&self) -> usize {
+        self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_completes_on_last_arrival() {
+        let mut eu = EventUnit::new(4);
+        assert_eq!(eu.arrive(0, 10), None);
+        assert_eq!(eu.arrive(2, 12), None);
+        assert_eq!(eu.arrive(3, 15), None);
+        assert_eq!(eu.waiting(), 3);
+        assert_eq!(eu.arrive(1, 20), Some(22));
+        assert_eq!(eu.waiting(), 0);
+        assert_eq!(eu.generation, 1);
+    }
+
+    #[test]
+    fn barrier_reusable() {
+        let mut eu = EventUnit::new(2);
+        assert_eq!(eu.arrive(0, 1), None);
+        assert_eq!(eu.arrive(1, 5), Some(7));
+        assert_eq!(eu.arrive(1, 9), None);
+        assert_eq!(eu.arrive(0, 11), Some(13));
+        assert_eq!(eu.generation, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "double-arrived")]
+    fn double_arrival_is_a_bug() {
+        let mut eu = EventUnit::new(2);
+        eu.arrive(0, 1);
+        eu.arrive(0, 2);
+    }
+}

@@ -1,0 +1,115 @@
+//! FPU subsystem: shared FPnew instances behind the partial interconnect
+//! (§3.2) and the separately-shared iterative DIV-SQRT block.
+//!
+//! Each FPU instance accepts at most one operation per cycle (it is either
+//! fully pipelined, or — with 0 stages — occupied for the single cycle of
+//! the operation). Cores are statically mapped to instances with interleaved
+//! allocation ([`crate::config::ClusterConfig::fpu_of_core`]); simultaneous
+//! requests from cores sharing an instance are arbitrated fairly (the issue
+//! loop rotates priority), the losers stalling with `fpu_cont`.
+//!
+//! The DIV-SQRT block is a single cluster-shared unit, iterative and *not*
+//! pipelined: it is busy for the full latency of the running operation —
+//! 11 / 7 / 6 cycles for float / float16 / bfloat16 (§3.2).
+
+use crate::transfp::FpMode;
+
+/// Shared FPU port state for one cluster.
+#[derive(Debug, Clone)]
+pub struct FpuSubsystem {
+    /// Per-FPU: cycle of the last accepted op (one issue per cycle).
+    port_busy_at: Vec<u64>,
+    /// Cycle until which the DIV-SQRT block is busy (exclusive).
+    divsqrt_busy_until: u64,
+    /// Accepted operations per FPU (for utilization / power).
+    pub ops_accepted: Vec<u64>,
+    /// DIV-SQRT operations issued.
+    pub divsqrt_ops: u64,
+}
+
+impl FpuSubsystem {
+    /// Subsystem with `nfpus` instances.
+    pub fn new(nfpus: usize) -> Self {
+        FpuSubsystem {
+            port_busy_at: vec![u64::MAX; nfpus],
+            divsqrt_busy_until: 0,
+            ops_accepted: vec![0; nfpus],
+            divsqrt_ops: 0,
+        }
+    }
+
+    /// Try to issue a (non-divsqrt) op on FPU `fpu` at `cycle`.
+    /// True = accepted; false = port already granted this cycle (contention).
+    pub fn try_issue(&mut self, fpu: usize, cycle: u64) -> bool {
+        if self.port_busy_at[fpu] == cycle {
+            false
+        } else {
+            self.port_busy_at[fpu] = cycle;
+            self.ops_accepted[fpu] += 1;
+            true
+        }
+    }
+
+    /// DIV-SQRT latency for a format (§3.2).
+    pub fn divsqrt_latency(mode: FpMode) -> u64 {
+        match mode {
+            FpMode::F32 => 11,
+            FpMode::F16 | FpMode::VecF16 => 7,
+            FpMode::Bf16 | FpMode::VecBf16 => 6,
+        }
+    }
+
+    /// Try to start a divide/sqrt at `cycle`. Returns `Ok(done_cycle)` when
+    /// the unit is free (result available at `done_cycle`), or
+    /// `Err(free_cycle)` when busy (caller retries then, counting
+    /// `divsqrt_cont`).
+    pub fn try_divsqrt(&mut self, mode: FpMode, cycle: u64) -> Result<u64, u64> {
+        if cycle < self.divsqrt_busy_until {
+            Err(self.divsqrt_busy_until)
+        } else {
+            let done = cycle + Self::divsqrt_latency(mode);
+            self.divsqrt_busy_until = done;
+            self.divsqrt_ops += 1;
+            Ok(done)
+        }
+    }
+
+    /// Mean ops per FPU (utilization input for the power model).
+    pub fn total_ops(&self) -> u64 {
+        self.ops_accepted.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_issue_per_cycle_per_fpu() {
+        let mut f = FpuSubsystem::new(2);
+        assert!(f.try_issue(0, 5));
+        assert!(!f.try_issue(0, 5)); // contention
+        assert!(f.try_issue(1, 5)); // other instance free
+        assert!(f.try_issue(0, 6)); // next cycle ok (pipelined)
+        assert_eq!(f.total_ops(), 3);
+    }
+
+    #[test]
+    fn divsqrt_latencies_match_paper() {
+        assert_eq!(FpuSubsystem::divsqrt_latency(FpMode::F32), 11);
+        assert_eq!(FpuSubsystem::divsqrt_latency(FpMode::F16), 7);
+        assert_eq!(FpuSubsystem::divsqrt_latency(FpMode::Bf16), 6);
+    }
+
+    #[test]
+    fn divsqrt_not_pipelined() {
+        let mut f = FpuSubsystem::new(1);
+        let done = f.try_divsqrt(FpMode::F32, 10).unwrap();
+        assert_eq!(done, 21);
+        // Busy until 21: a second request at 15 must wait.
+        assert_eq!(f.try_divsqrt(FpMode::F16, 15), Err(21));
+        // At 21 the unit is free again.
+        assert_eq!(f.try_divsqrt(FpMode::F16, 21), Ok(28));
+        assert_eq!(f.divsqrt_ops, 2);
+    }
+}

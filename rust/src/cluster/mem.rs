@@ -1,0 +1,295 @@
+//! Cluster memory subsystem: the multi-banked TCDM behind the single-cycle
+//! word-interleaved logarithmic interconnect (§3.1), and the 15-cycle L2
+//! scratchpad at the SoC level.
+//!
+//! Timing: each TCDM bank accepts one request per cycle. Simultaneous
+//! requests to the same bank are arbitrated round-robin (rotating priority in
+//! the cluster's issue loop); losers stall one cycle and retry — exactly the
+//! "TCDM contention" counter of §5.1.
+
+use super::super::config::ClusterConfig;
+use crate::isa::MemSize;
+
+/// Base address of the TCDM scratchpad (PULP cluster address map).
+pub const TCDM_BASE: u32 = 0x1000_0000;
+/// Base address of the SoC L2 memory.
+pub const L2_BASE: u32 = 0x1C00_0000;
+
+/// Which memory region an address falls into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    Tcdm,
+    L2,
+}
+
+/// Byte-addressable memory with word-interleaved banking (TCDM) plus the L2.
+#[derive(Debug, Clone)]
+pub struct Memory {
+    tcdm: Vec<u32>,
+    /// L2 storage, grown lazily: zero-filling the full 512 kB per run cost
+    /// ~15% of short simulations (EXPERIMENTS.md §Perf).
+    l2: Vec<u32>,
+    l2_capacity: usize,
+    nbanks: usize,
+    /// Per-bank: cycle index of the last granted access (one grant/cycle).
+    bank_busy_at: Vec<u64>,
+}
+
+impl Memory {
+    /// Allocate the memories for `cfg`.
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        Memory {
+            tcdm: vec![0; cfg.tcdm_bytes() / 4],
+            l2: Vec::new(),
+            l2_capacity: cfg.l2_bytes() / 4,
+            nbanks: cfg.tcdm_banks(),
+            bank_busy_at: vec![u64::MAX; cfg.tcdm_banks()],
+        }
+    }
+
+    /// Which region (and word index) an address maps to. Panics on
+    /// out-of-range addresses — kernels own their layout.
+    pub fn region_of(&self, addr: u32) -> Region {
+        if addr >= L2_BASE {
+            Region::L2
+        } else {
+            debug_assert!(addr >= TCDM_BASE, "address {addr:#x} below TCDM");
+            Region::Tcdm
+        }
+    }
+
+    /// TCDM bank of an address (word-interleaved).
+    pub fn bank_of(&self, addr: u32) -> usize {
+        (((addr - TCDM_BASE) / 4) as usize) % self.nbanks
+    }
+
+    /// Try to claim `bank` for `cycle`; true = granted. The issue loop's
+    /// rotating core priority provides the round-robin fairness.
+    pub fn claim_bank(&mut self, bank: usize, cycle: u64) -> bool {
+        if self.bank_busy_at[bank] == cycle {
+            false
+        } else {
+            self.bank_busy_at[bank] = cycle;
+            true
+        }
+    }
+
+    fn slot(&mut self, addr: u32) -> &mut u32 {
+        match self.region_of(addr) {
+            Region::Tcdm => {
+                let idx = ((addr - TCDM_BASE) / 4) as usize;
+                &mut self.tcdm[idx]
+            }
+            Region::L2 => {
+                let idx = ((addr - L2_BASE) / 4) as usize;
+                assert!(idx < self.l2_capacity, "L2 overflow at {addr:#x}");
+                if idx >= self.l2.len() {
+                    self.l2.resize(idx + 1, 0);
+                }
+                &mut self.l2[idx]
+            }
+        }
+    }
+
+    fn word(&self, addr: u32) -> u32 {
+        match self.region_of(addr) {
+            Region::Tcdm => self.tcdm[((addr - TCDM_BASE) / 4) as usize],
+            Region::L2 => {
+                let idx = ((addr - L2_BASE) / 4) as usize;
+                assert!(idx < self.l2_capacity, "L2 overflow at {addr:#x}");
+                self.l2.get(idx).copied().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Functional load.
+    pub fn load(&self, addr: u32, size: MemSize) -> u32 {
+        let w = self.word(addr & !3);
+        match size {
+            MemSize::Word => {
+                debug_assert!(addr % 4 == 0, "unaligned word load at {addr:#x}");
+                w
+            }
+            MemSize::Half | MemSize::HalfU => {
+                debug_assert!(addr % 2 == 0, "unaligned half load at {addr:#x}");
+                let sh = (addr & 2) * 8;
+                let h = (w >> sh) as u16;
+                if matches!(size, MemSize::Half) {
+                    h as i16 as i32 as u32
+                } else {
+                    h as u32
+                }
+            }
+            MemSize::Byte | MemSize::ByteU => {
+                let sh = (addr & 3) * 8;
+                let b = (w >> sh) as u8;
+                if matches!(size, MemSize::Byte) {
+                    b as i8 as i32 as u32
+                } else {
+                    b as u32
+                }
+            }
+        }
+    }
+
+    /// Functional store.
+    pub fn store(&mut self, addr: u32, size: MemSize, value: u32) {
+        let slot = self.slot(addr & !3);
+        match size {
+            MemSize::Word => {
+                debug_assert!(addr % 4 == 0, "unaligned word store at {addr:#x}");
+                *slot = value;
+            }
+            MemSize::Half | MemSize::HalfU => {
+                debug_assert!(addr % 2 == 0, "unaligned half store at {addr:#x}");
+                let sh = (addr & 2) * 8;
+                *slot = (*slot & !(0xFFFFu32 << sh)) | ((value & 0xFFFF) << sh);
+            }
+            MemSize::Byte | MemSize::ByteU => {
+                let sh = (addr & 3) * 8;
+                *slot = (*slot & !(0xFFu32 << sh)) | ((value & 0xFF) << sh);
+            }
+        }
+    }
+
+    /// Bulk write of f32 values starting at `addr` (harness data staging).
+    pub fn write_f32_slice(&mut self, addr: u32, data: &[f32]) {
+        for (i, v) in data.iter().enumerate() {
+            self.store(addr + 4 * i as u32, MemSize::Word, v.to_bits());
+        }
+    }
+
+    /// Bulk read of f32 values.
+    pub fn read_f32_slice(&self, addr: u32, len: usize) -> Vec<f32> {
+        (0..len).map(|i| f32::from_bits(self.load(addr + 4 * i as u32, MemSize::Word))).collect()
+    }
+
+    /// Bulk write of raw 16-bit lanes (packed vectors).
+    pub fn write_u16_slice(&mut self, addr: u32, data: &[u16]) {
+        for (i, v) in data.iter().enumerate() {
+            self.store(addr + 2 * i as u32, MemSize::HalfU, *v as u32);
+        }
+    }
+
+    /// Bulk read of raw 16-bit lanes.
+    pub fn read_u16_slice(&self, addr: u32, len: usize) -> Vec<u16> {
+        (0..len).map(|i| self.load(addr + 2 * i as u32, MemSize::HalfU) as u16).collect()
+    }
+
+    /// Bulk write of raw words.
+    pub fn write_u32_slice(&mut self, addr: u32, data: &[u32]) {
+        for (i, v) in data.iter().enumerate() {
+            self.store(addr + 4 * i as u32, MemSize::Word, *v);
+        }
+    }
+
+    /// TCDM capacity in bytes.
+    pub fn tcdm_bytes(&self) -> usize {
+        self.tcdm.len() * 4
+    }
+}
+
+/// Cluster DMA engine (§3.1): moves blocks between L2 and TCDM at one word
+/// per cycle after a fixed setup latency, without occupying the cores. Used
+/// by the examples to stage input windows like a real near-sensor pipeline.
+#[derive(Debug, Clone, Default)]
+pub struct Dma {
+    /// Cycle at which the running transfer (if any) completes.
+    pub busy_until: u64,
+    /// Total words moved (for power accounting).
+    pub words_moved: u64,
+}
+
+impl Dma {
+    /// Program a transfer of `words` 32-bit words from `src` to `dst`
+    /// starting not before `now`; returns the completion cycle.
+    /// Functionally copies immediately (the simulator is in-order; kernels
+    /// must wait on the returned cycle before touching the data, which the
+    /// harness enforces by starting cores after DMA completion).
+    pub fn transfer(
+        &mut self,
+        mem: &mut Memory,
+        now: u64,
+        src: u32,
+        dst: u32,
+        words: u32,
+    ) -> u64 {
+        const SETUP: u64 = 10; // command + L2 latency
+        for i in 0..words {
+            let v = mem.load(src + 4 * i, MemSize::Word);
+            mem.store(dst + 4 * i, MemSize::Word, v);
+        }
+        self.words_moved += words as u64;
+        let start = self.busy_until.max(now);
+        self.busy_until = start + SETUP + words as u64;
+        self.busy_until
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem8() -> Memory {
+        Memory::new(&ClusterConfig::new(8, 4, 1))
+    }
+
+    #[test]
+    fn banking_is_word_interleaved() {
+        let m = mem8();
+        assert_eq!(m.bank_of(TCDM_BASE), 0);
+        assert_eq!(m.bank_of(TCDM_BASE + 4), 1);
+        assert_eq!(m.bank_of(TCDM_BASE + 4 * 16), 0); // 16 banks for 8 cores
+        assert_eq!(m.region_of(TCDM_BASE + 100), Region::Tcdm);
+        assert_eq!(m.region_of(L2_BASE + 8), Region::L2);
+    }
+
+    #[test]
+    fn bank_claims_conflict_within_cycle() {
+        let mut m = mem8();
+        assert!(m.claim_bank(3, 10));
+        assert!(!m.claim_bank(3, 10)); // same cycle: contention
+        assert!(m.claim_bank(3, 11)); // next cycle ok
+        assert!(m.claim_bank(4, 10)); // other bank unaffected
+    }
+
+    #[test]
+    fn sub_word_accesses() {
+        let mut m = mem8();
+        let a = TCDM_BASE + 64;
+        m.store(a, MemSize::Word, 0xDEADBEEF);
+        assert_eq!(m.load(a, MemSize::Word), 0xDEADBEEF);
+        assert_eq!(m.load(a, MemSize::HalfU), 0xBEEF);
+        assert_eq!(m.load(a + 2, MemSize::HalfU), 0xDEAD);
+        assert_eq!(m.load(a, MemSize::Half), 0xFFFFBEEF); // sign-extended
+        assert_eq!(m.load(a + 3, MemSize::ByteU), 0xDE);
+        m.store(a + 2, MemSize::HalfU, 0x1234);
+        assert_eq!(m.load(a, MemSize::Word), 0x1234BEEF);
+        m.store(a + 1, MemSize::ByteU, 0x77);
+        assert_eq!(m.load(a, MemSize::Word), 0x123477EF);
+    }
+
+    #[test]
+    fn slices_roundtrip() {
+        let mut m = mem8();
+        let a = TCDM_BASE + 1024;
+        m.write_f32_slice(a, &[1.0, -2.5, 3.25]);
+        assert_eq!(m.read_f32_slice(a, 3), vec![1.0, -2.5, 3.25]);
+        m.write_u16_slice(a, &[0x3C00, 0xC000]);
+        assert_eq!(m.read_u16_slice(a, 2), vec![0x3C00, 0xC000]);
+    }
+
+    #[test]
+    fn dma_copies_and_accounts_time() {
+        let mut m = mem8();
+        let mut dma = Dma::default();
+        m.write_f32_slice(L2_BASE, &[5.0, 6.0, 7.0, 8.0]);
+        let done = dma.transfer(&mut m, 100, L2_BASE, TCDM_BASE, 4);
+        assert_eq!(done, 100 + 10 + 4);
+        assert_eq!(m.read_f32_slice(TCDM_BASE, 4), vec![5.0, 6.0, 7.0, 8.0]);
+        // Back-to-back transfers queue.
+        let done2 = dma.transfer(&mut m, 100, L2_BASE, TCDM_BASE + 16, 2);
+        assert_eq!(done2, done + 10 + 2);
+        assert_eq!(dma.words_moved, 6);
+    }
+}

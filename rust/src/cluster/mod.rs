@@ -1,0 +1,738 @@
+//! Cycle-accurate cluster simulator (§3.1–§3.2).
+//!
+//! The [`Cluster`] owns the cores, the banked TCDM, the shared FPU
+//! subsystem, the DIV-SQRT block, the shared I$ model and the event unit,
+//! and advances them under a single global clock. Arbitration fairness
+//! (round-robin of the FPU interconnect and TCDM logarithmic interconnect)
+//! is modelled by rotating the core issue order every cycle.
+//!
+//! Timing model summary (per instruction class):
+//!
+//! | class | issue→reuse | result→consumer |
+//! |---|---|---|
+//! | int ALU / Li | 1 cycle | next cycle (full forwarding) |
+//! | int div/rem | 35 cycles (iterative, core blocks) | at completion |
+//! | load (TCDM) | 1 cycle + bank contention retries | +2 (1 load-use bubble) |
+//! | load/store (L2) | 15 cycles (core blocks on the demux) | at completion |
+//! | taken branch | 3 cycles (2 flush bubbles) | — |
+//! | hw-loop back-edge | 0 overhead | — |
+//! | FP (FPU) | 1 cycle + port contention retries | +1+`pipe` cycles |
+//! | FP div/sqrt | 1 cycle + unit-busy wait | 11/7/6 cycles (f32/f16/bf16) |
+//! | barrier | sleeps until all arrive, +2 wake | — |
+//!
+//! With `pipe == 2` an FP result's delayed write-back conflicts with the
+//! register-file write of an int/LSU instruction issued in the immediately
+//! following slot (§5.3.3) — modelled as a 1-cycle `wb_stall`.
+
+pub mod core;
+pub mod counters;
+pub mod event;
+pub mod fpu;
+pub mod icache;
+pub mod mem;
+
+use crate::config::ClusterConfig;
+use crate::isa::insn::Insn;
+use crate::isa::Program;
+
+use self::core::{Core, CoreState, Producer};
+use self::counters::{CoreCounters, RunStats};
+use self::event::EventUnit;
+use self::fpu::FpuSubsystem;
+use self::icache::ICache;
+use self::mem::{Memory, Region};
+
+/// Latency of the iterative integer divider (RI5CY serial divider).
+const INT_DIV_LATENCY: u64 = 35;
+/// Taken-branch penalty (total cycles occupied by the branch).
+const TAKEN_BRANCH_CYCLES: u64 = 3;
+
+/// The simulated cluster.
+pub struct Cluster {
+    /// Configuration under simulation.
+    pub cfg: ClusterConfig,
+    /// Cores.
+    pub cores: Vec<Core>,
+    /// TCDM + L2.
+    pub mem: Memory,
+    /// Shared FPUs + DIV-SQRT.
+    pub fpus: FpuSubsystem,
+    /// Shared instruction cache.
+    pub icache: ICache,
+    /// Event unit (barriers).
+    pub event: EventUnit,
+    /// The SPMD program all cores run.
+    program: Program,
+    /// Current cycle.
+    pub now: u64,
+    /// Hard cycle limit (deadlock guard).
+    pub max_cycles: u64,
+    /// Disable I$ cold-miss modelling (always-hit). Used by micro-timing
+    /// tests that reason about exact cycle counts.
+    pub perfect_icache: bool,
+    /// Issue tracing enabled (TRANSPFP_TRACE env var, cached at build time —
+    /// checking the environment per issued instruction costs ~30% of the
+    /// whole simulator; see EXPERIMENTS.md §Perf).
+    trace: bool,
+}
+
+impl Cluster {
+    /// Build a cluster running `program` on every core.
+    pub fn new(cfg: ClusterConfig, program: Program) -> Self {
+        let cores = (0..cfg.cores).map(|i| Core::new(i, cfg.cores)).collect();
+        Cluster {
+            cores,
+            mem: Memory::new(&cfg),
+            fpus: FpuSubsystem::new(cfg.fpus),
+            icache: ICache::new(program.len()),
+            event: EventUnit::new(cfg.cores),
+            program,
+            now: 0,
+            max_cycles: 2_000_000_000,
+            perfect_icache: false,
+            trace: std::env::var_os("TRANSPFP_TRACE").is_some(),
+            cfg,
+        }
+    }
+
+    /// Restrict execution to the first `n` cores; the rest terminate
+    /// immediately (used by the Fig 6 speed-up sweeps, which run 1..=N
+    /// workers on an N-core cluster). The event unit is resized so barriers
+    /// wait only for active workers — the paper's kernels take the worker
+    /// count as a parameter (§5.2).
+    pub fn limit_active_cores(&mut self, n: usize) {
+        assert!(n >= 1 && n <= self.cfg.cores);
+        for c in self.cores.iter_mut().skip(n) {
+            c.state = CoreState::Done;
+        }
+        self.event = EventUnit::new(n);
+        // The HAL reports the worker count, not the physical core count.
+        for c in self.cores.iter_mut().take(n) {
+            c.set_reg(crate::isa::regs::NCORES, n as u32);
+        }
+    }
+
+    /// Run to completion; returns per-core counters.
+    pub fn run(&mut self) -> RunStats {
+        while self.now < self.max_cycles {
+            if self.step() {
+                break;
+            }
+        }
+        assert!(self.now < self.max_cycles, "simulation exceeded max_cycles (deadlock?)");
+        let per_core: Vec<CoreCounters> = self.cores.iter().map(|c| c.counters).collect();
+        let total_cycles = per_core.iter().map(|c| c.cycles).max().unwrap_or(0);
+        RunStats { per_core, total_cycles }
+    }
+
+    /// Advance one cycle. Returns true when every core is done.
+    fn step(&mut self) -> bool {
+        let n = self.cores.len();
+        let rot = (self.now as usize) % n;
+        let mut all_done = true;
+        let mut min_next = u64::MAX;
+        for k in 0..n {
+            // Branch instead of modulo: the `%` showed up in the profile.
+            let ci = if rot + k >= n { rot + k - n } else { rot + k };
+            match self.cores[ci].state {
+                CoreState::Done => continue,
+                CoreState::Sleeping { .. } => {
+                    all_done = false;
+                    continue; // woken by the barrier completion
+                }
+                CoreState::Running => {
+                    all_done = false;
+                    if self.cores[ci].next_issue > self.now {
+                        min_next = min_next.min(self.cores[ci].next_issue);
+                        continue;
+                    }
+                    self.issue(ci);
+                    min_next = min_next.min(self.cores[ci].next_issue);
+                }
+            }
+        }
+        if all_done {
+            return true;
+        }
+        // Fast-forward across cycles where no core can issue (barrier sleeps
+        // resolve inside issue(); DIV-SQRT / L2 waits are bulk-attributed).
+        self.now = if min_next == u64::MAX { self.now + 1 } else { min_next.max(self.now + 1) };
+        false
+    }
+
+    /// Attempt to issue the next instruction of core `ci` at `self.now`.
+    fn issue(&mut self, ci: usize) {
+        let t = self.now;
+        let insn = self.program.insns[self.cores[ci].pc as usize];
+        if self.trace {
+            eprintln!("t={t} core={ci} pc={} {:?}", self.cores[ci].pc, insn);
+        }
+
+        // 1. Instruction fetch through the shared I$.
+        let fetched =
+            if self.perfect_icache { t } else { self.icache.fetch(self.cores[ci].pc, t) };
+        if fetched > t {
+            let c = &mut self.cores[ci];
+            c.counters.icache_stall += fetched - t;
+            c.next_issue = fetched;
+            return;
+        }
+
+        // 2. Operand scoreboard.
+        let (ready, who) = self.cores[ci].operands_ready(&insn);
+        if ready > t {
+            let c = &mut self.cores[ci];
+            let wait = ready - t;
+            match who {
+                Producer::Fpu | Producer::DivSqrt => c.counters.fpu_stall += wait,
+                Producer::Load => c.counters.load_stall += wait,
+                Producer::None => {}
+            }
+            c.next_issue = ready;
+            return;
+        }
+
+        // 3. Write-back port conflict (§5.3.3): only with 2 pipeline stages,
+        // when an int/LSU write follows an FP op back-to-back. The FPU's
+        // result skid register absorbs two of every three collisions, so one
+        // in three costs a stall (matching the ~10% penalty of Fig 8).
+        if self.cfg.pipe >= 2
+            && !insn.is_fp()
+            && writes_reg(&insn)
+            && self.cores[ci].last_fp_issue == t.wrapping_sub(1)
+        {
+            let c = &mut self.cores[ci];
+            c.wb_skid += 1;
+            if c.wb_skid >= 3 {
+                c.wb_skid = 0;
+                c.counters.wb_stall += 1;
+                c.next_issue = t + 1;
+                return;
+            }
+        }
+
+        // 4. Class-specific structural hazards + execution.
+        match insn {
+            Insn::Alu { op, rd, rs1, rhs } => {
+                let c = &mut self.cores[ci];
+                c.exec_alu(op, rd, rs1, rhs);
+                let lat = if matches!(op, crate::isa::AluOp::Div | crate::isa::AluOp::Rem) {
+                    INT_DIV_LATENCY
+                } else {
+                    1
+                };
+                c.counters.active += lat;
+                c.counters.instrs += 1;
+                c.counters.int_instrs += 1;
+                c.next_issue = t + lat;
+                c.advance_pc();
+            }
+            Insn::Li { rd, imm } => {
+                let c = &mut self.cores[ci];
+                c.set_reg(rd, imm);
+                c.counters.active += 1;
+                c.counters.instrs += 1;
+                c.counters.int_instrs += 1;
+                c.next_issue = t + 1;
+                c.advance_pc();
+            }
+            Insn::Load { rd, base, offset, post_inc, size } => {
+                let addr =
+                    (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
+                match self.mem.region_of(addr) {
+                    Region::Tcdm => {
+                        let bank = self.mem.bank_of(addr);
+                        if !self.mem.claim_bank(bank, t) {
+                            let c = &mut self.cores[ci];
+                            c.counters.tcdm_cont += 1;
+                            c.next_issue = t + 1;
+                            return;
+                        }
+                        let c = &mut self.cores[ci];
+                        let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                        c.exec_load(&self.mem, rd, addr, size);
+                        c.reg_ready[rd as usize] = t + 2; // 1 load-use bubble
+                        c.reg_producer[rd as usize] = Producer::Load;
+                        c.counters.active += 1;
+                        c.counters.instrs += 1;
+                        c.counters.mem_instrs += 1;
+                        c.next_issue = t + 1;
+                        c.advance_pc();
+                    }
+                    Region::L2 => {
+                        let lat = self.cfg.l2_latency();
+                        let c = &mut self.cores[ci];
+                        let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                        c.exec_load(&self.mem, rd, addr, size);
+                        c.counters.active += 1;
+                        c.counters.l2_stall += lat - 1;
+                        c.counters.instrs += 1;
+                        c.counters.mem_instrs += 1;
+                        c.next_issue = t + lat; // core blocks on the demux
+                        c.advance_pc();
+                    }
+                }
+            }
+            Insn::Store { rs, base, offset, post_inc, size } => {
+                let addr =
+                    (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
+                match self.mem.region_of(addr) {
+                    Region::Tcdm => {
+                        let bank = self.mem.bank_of(addr);
+                        if !self.mem.claim_bank(bank, t) {
+                            let c = &mut self.cores[ci];
+                            c.counters.tcdm_cont += 1;
+                            c.next_issue = t + 1;
+                            return;
+                        }
+                        let c = &mut self.cores[ci];
+                        let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                        let v = c.reg(rs);
+                        self.mem.store(addr, size, v);
+                        c.counters.active += 1;
+                        c.counters.instrs += 1;
+                        c.counters.mem_instrs += 1;
+                        c.next_issue = t + 1;
+                        c.advance_pc();
+                    }
+                    Region::L2 => {
+                        let lat = self.cfg.l2_latency();
+                        let c = &mut self.cores[ci];
+                        let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                        let v = c.reg(rs);
+                        self.mem.store(addr, size, v);
+                        c.counters.active += 1;
+                        c.counters.l2_stall += lat - 1;
+                        c.counters.instrs += 1;
+                        c.counters.mem_instrs += 1;
+                        c.next_issue = t + lat;
+                        c.advance_pc();
+                    }
+                }
+            }
+            Insn::Branch { cond, rs1, rs2, target } => {
+                let c = &mut self.cores[ci];
+                let taken = c.branch_taken(cond, rs1, rs2);
+                c.counters.active += 1;
+                c.counters.instrs += 1;
+                c.counters.int_instrs += 1;
+                if taken {
+                    c.pc = target;
+                    c.counters.branch_stall += TAKEN_BRANCH_CYCLES - 1;
+                    c.next_issue = t + TAKEN_BRANCH_CYCLES;
+                } else {
+                    c.next_issue = t + 1;
+                    c.advance_pc();
+                }
+            }
+            Insn::Jump { target } => {
+                let c = &mut self.cores[ci];
+                c.counters.active += 1;
+                c.counters.instrs += 1;
+                c.counters.int_instrs += 1;
+                c.pc = target;
+                c.counters.branch_stall += TAKEN_BRANCH_CYCLES - 1;
+                c.next_issue = t + TAKEN_BRANCH_CYCLES;
+            }
+            Insn::HwLoop { count, start, end } => {
+                let c = &mut self.cores[ci];
+                let n = c.reg(count);
+                c.counters.active += 1;
+                c.counters.instrs += 1;
+                c.counters.int_instrs += 1;
+                c.next_issue = t + 1;
+                if n == 0 {
+                    c.pc = end;
+                } else {
+                    c.hwloops.push((start, end, n));
+                    c.pc = start;
+                }
+            }
+            Insn::Fp { op, mode, rd, rs1, rs2 } => {
+                if op.is_alu_class() {
+                    // Integer-SIMD lane permutation: plain 1-cycle ALU op.
+                    let c = &mut self.cores[ci];
+                    c.exec_fp(op, mode, rd, rs1, rs2);
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.int_instrs += 1;
+                    c.next_issue = t + 1;
+                    c.advance_pc();
+                } else if op.is_divsqrt() {
+                    match self.fpus.try_divsqrt(mode, t) {
+                        Err(free) => {
+                            let c = &mut self.cores[ci];
+                            c.counters.divsqrt_cont += free - t;
+                            c.next_issue = free;
+                        }
+                        Ok(done) => {
+                            let c = &mut self.cores[ci];
+                            let flops = c.exec_fp(op, mode, rd, rs1, rs2);
+                            c.reg_ready[rd as usize] = done;
+                            c.reg_producer[rd as usize] = Producer::DivSqrt;
+                            c.counters.active += 1;
+                            c.counters.instrs += 1;
+                            c.counters.fp_instrs += 1;
+                            c.counters.flops += flops;
+                            c.next_issue = t + 1;
+                            c.advance_pc();
+                        }
+                    }
+                } else {
+                    let fpu = self.cfg.fpu_of_core(ci);
+                    if !self.fpus.try_issue(fpu, t) {
+                        let c = &mut self.cores[ci];
+                        c.counters.fpu_cont += 1;
+                        c.next_issue = t + 1;
+                        return;
+                    }
+                    let pipe = self.cfg.pipe as u64;
+                    let c = &mut self.cores[ci];
+                    let flops = c.exec_fp(op, mode, rd, rs1, rs2);
+                    c.reg_ready[rd as usize] = t + 1 + pipe;
+                    c.reg_producer[rd as usize] = Producer::Fpu;
+                    c.last_fp_issue = t;
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.fp_instrs += 1;
+                    if mode.is_vector() {
+                        c.counters.fp_vec_instrs += 1;
+                    }
+                    c.counters.flops += flops;
+                    c.next_issue = t + 1;
+                    c.advance_pc();
+                }
+            }
+            Insn::Barrier => {
+                // Count the barrier instruction itself.
+                {
+                    let c = &mut self.cores[ci];
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.int_instrs += 1;
+                    c.advance_pc();
+                }
+                match self.event.arrive(ci, t) {
+                    Some(wake) => {
+                        // Wake everyone (including self).
+                        for c in self.cores.iter_mut() {
+                            match c.state {
+                                CoreState::Sleeping { since } => {
+                                    c.counters.barrier_idle += wake - since;
+                                    c.state = CoreState::Running;
+                                    c.next_issue = wake;
+                                }
+                                CoreState::Running if c.id == ci => {
+                                    c.counters.barrier_idle += wake - (t + 1);
+                                    c.next_issue = wake;
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
+                    None => {
+                        let c = &mut self.cores[ci];
+                        c.state = CoreState::Sleeping { since: t + 1 };
+                        c.next_issue = u64::MAX; // woken explicitly
+                    }
+                }
+            }
+            Insn::End => {
+                let c = &mut self.cores[ci];
+                c.counters.active += 1;
+                c.counters.instrs += 1;
+                c.counters.cycles = t;
+                c.state = CoreState::Done;
+            }
+        }
+    }
+}
+
+impl Core {
+    /// Advance past the current instruction, honouring hardware loops.
+    fn advance_pc(&mut self) {
+        let mut next = self.pc + 1;
+        while let Some((start, end, remaining)) = self.hwloops.last_mut() {
+            if next == *end {
+                if *remaining > 1 {
+                    *remaining -= 1;
+                    next = *start;
+                    break;
+                } else {
+                    self.hwloops.pop();
+                    // fall through: check enclosing loop against `next`
+                }
+            } else {
+                break;
+            }
+        }
+        self.pc = next;
+    }
+}
+
+/// Does the instruction write an integer/FP destination register?
+fn writes_reg(i: &Insn) -> bool {
+    match i {
+        Insn::Alu { .. } | Insn::Li { .. } | Insn::Load { .. } => true,
+        // Post-increment stores update the base register.
+        Insn::Store { post_inc, .. } => *post_inc != 0,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{regs, ProgramBuilder};
+    use crate::transfp::FpMode;
+
+    fn cfg(c: usize, f: usize, p: u32) -> ClusterConfig {
+        ClusterConfig::new(c, f, p)
+    }
+
+    /// A one-core program that stores 1+2 to TCDM.
+    #[test]
+    fn minimal_program_runs() {
+        let mut b = ProgramBuilder::new("min");
+        b.li(1, 1).li(2, 2).add(3, 1, 2);
+        b.li(4, mem::TCDM_BASE).sw(3, 4, 0).end();
+        let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
+        let stats = cl.run();
+        assert_eq!(cl.mem.load(mem::TCDM_BASE, crate::isa::MemSize::Word), 3);
+        // All 8 cores ran the same SPMD program; the stores collide benignly.
+        assert_eq!(stats.per_core.len(), 8);
+        assert!(stats.total_cycles > 0);
+    }
+
+    /// Hardware loops execute the body exactly `count` times, zero overhead.
+    #[test]
+    fn hwloop_iterations_and_zero_overhead() {
+        let mut b = ProgramBuilder::new("hwl");
+        b.li(1, 10); // count
+        b.li(2, 0); // acc
+        b.hwloop(1);
+        b.addi(2, 2, 1);
+        b.hwloop_end();
+        b.li(5, mem::TCDM_BASE).sw(2, 5, 0).end();
+        let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
+        cl.limit_active_cores(1);
+        let stats = cl.run();
+        assert_eq!(cl.mem.load(mem::TCDM_BASE, crate::isa::MemSize::Word), 10);
+        // Body = 10 instructions total for the loop, no branch penalties.
+        let c = &stats.per_core[0];
+        assert_eq!(c.branch_stall, 0);
+        assert_eq!(c.instrs, 3 + 10 + 3);
+    }
+
+    /// Nested hardware loops.
+    #[test]
+    fn nested_hwloops() {
+        let mut b = ProgramBuilder::new("hwl2");
+        b.li(1, 3).li(2, 4).li(3, 0);
+        b.hwloop(1);
+        b.hwloop(2);
+        b.addi(3, 3, 1);
+        b.hwloop_end();
+        b.hwloop_end();
+        b.li(5, mem::TCDM_BASE).sw(3, 5, 0).end();
+        let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
+        cl.limit_active_cores(1);
+        cl.run();
+        assert_eq!(cl.mem.load(mem::TCDM_BASE, crate::isa::MemSize::Word), 12);
+    }
+
+    /// FP latency: dependent back-to-back FMAs stall `pipe` cycles each.
+    #[test]
+    fn fp_dependency_stalls_scale_with_pipe() {
+        let run = |pipe: u32| -> u64 {
+            let mut b = ProgramBuilder::new("dep");
+            b.li(1, 1065353216); // 1.0f32
+            b.li(2, 1065353216);
+            b.li(3, 0);
+            for _ in 0..32 {
+                b.fmac(FpMode::F32, 3, 1, 2); // each depends on previous (rd acc)
+            }
+            b.end();
+            let mut cl = Cluster::new(cfg(8, 8, pipe), b.build());
+            cl.perfect_icache = true;
+            cl.limit_active_cores(1);
+            let stats = cl.run();
+            stats.per_core[0].fpu_stall
+        };
+        assert_eq!(run(0), 0);
+        assert_eq!(run(1), 32 - 1); // first has no predecessor in flight
+        assert_eq!(run(2), 2 * 31);
+    }
+
+    /// FPU sharing: two cores on one FPU contend; private FPUs don't.
+    #[test]
+    fn fpu_contention_depends_on_sharing() {
+        let prog = || {
+            let mut b = ProgramBuilder::new("cont");
+            b.li(1, 1065353216);
+            b.li(2, 1065353216);
+            // Independent FP ops (different destinations) — saturate the port.
+            for i in 0..16 {
+                b.fadd(FpMode::F32, 20 + (i % 8) as u8, 1, 2);
+            }
+            b.end();
+            b.build()
+        };
+        let mut shared = Cluster::new(cfg(8, 2, 1), prog());
+        let s = shared.run();
+        let cont: u64 = s.per_core.iter().map(|c| c.fpu_cont).sum();
+        assert!(cont > 0, "4 cores per FPU must contend");
+
+        let mut private = Cluster::new(cfg(8, 8, 1), prog());
+        let p = private.run();
+        let cont_p: u64 = p.per_core.iter().map(|c| c.fpu_cont).sum();
+        assert_eq!(cont_p, 0, "private FPUs never contend");
+        assert!(s.total_cycles > p.total_cycles);
+    }
+
+    /// Barrier synchronizes cores with different amounts of work.
+    #[test]
+    fn barrier_waits_for_slowest() {
+        let mut b = ProgramBuilder::new("bar");
+        // Core 0 does extra work before the barrier.
+        b.bne(regs::CORE_ID, regs::ZERO, "sync");
+        b.li(1, 200);
+        b.hwloop(1);
+        b.addi(2, 2, 1);
+        b.hwloop_end();
+        b.label("sync");
+        b.barrier();
+        b.end();
+        let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
+        let stats = cl.run();
+        // Everyone finishes at roughly the same cycle, after core 0's work.
+        let idle: u64 = stats.per_core.iter().map(|c| c.barrier_idle).sum();
+        assert!(idle > 7 * 150, "waiters must have slept: {idle}");
+        let spread = stats.per_core.iter().map(|c| c.cycles).max().unwrap()
+            - stats.per_core.iter().map(|c| c.cycles).min().unwrap();
+        assert!(spread <= 16, "cores should finish together, spread={spread}");
+    }
+
+    /// TCDM bank conflicts: all cores hammering one bank contend; separate
+    /// banks don't.
+    #[test]
+    fn tcdm_bank_conflicts() {
+        let same_bank = {
+            let mut b = ProgramBuilder::new("same");
+            b.li(1, mem::TCDM_BASE);
+            b.li(3, 64);
+            b.hwloop(3);
+            b.lw(2, 1, 0); // every core, same address → same bank
+            b.hwloop_end();
+            b.end();
+            let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
+            let s = cl.run();
+            s.per_core.iter().map(|c| c.tcdm_cont).sum::<u64>()
+        };
+        let spread_banks = {
+            let mut b = ProgramBuilder::new("spread");
+            b.li(1, mem::TCDM_BASE);
+            b.slli(4, regs::CORE_ID, 2);
+            b.add(1, 1, 4); // each core its own word → its own bank
+            b.li(3, 64);
+            b.hwloop(3);
+            b.lw(2, 1, 0);
+            b.hwloop_end();
+            b.end();
+            let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
+            let s = cl.run();
+            s.per_core.iter().map(|c| c.tcdm_cont).sum::<u64>()
+        };
+        assert!(same_bank > 100, "same-bank access must contend: {same_bank}");
+        assert_eq!(spread_banks, 0, "interleaved accesses must not contend");
+    }
+
+    /// DIV-SQRT is shared and non-pipelined: divide-heavy code serializes.
+    #[test]
+    fn divsqrt_serializes_across_cores() {
+        let mut b = ProgramBuilder::new("div");
+        b.li(1, 1077936128); // 3.0f32
+        b.li(2, 1073741824); // 2.0f32
+        b.fdiv(FpMode::F32, 3, 1, 2);
+        b.fadd(FpMode::F32, 4, 3, 3); // depends on the divide
+        b.end();
+        let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
+        let stats = cl.run();
+        let cont: u64 = stats.per_core.iter().map(|c| c.divsqrt_cont).sum();
+        assert!(cont > 0, "8 cores sharing one DIV-SQRT must queue");
+        assert_eq!(f32::from_bits(cl.cores[0].reg(4)), 3.0);
+    }
+
+    /// WB-port conflict exists only with 2 pipeline stages.
+    #[test]
+    fn wb_conflict_only_with_two_stages() {
+        let prog = || {
+            let mut b = ProgramBuilder::new("wb");
+            b.li(1, 1065353216);
+            b.li(2, 1065353216);
+            b.li(5, mem::TCDM_BASE);
+            for _ in 0..16 {
+                b.fadd(FpMode::F32, 3, 1, 2);
+                b.addi(6, 6, 1); // int op right after FP → WB clash at 2p
+            }
+            b.end();
+            b.build()
+        };
+        for pipe in [0u32, 1] {
+            let mut cl = Cluster::new(cfg(8, 8, pipe), prog());
+            cl.perfect_icache = true;
+            cl.limit_active_cores(1);
+            let s = cl.run();
+            assert_eq!(s.per_core[0].wb_stall, 0, "pipe={pipe}");
+        }
+        let mut cl = Cluster::new(cfg(8, 8, 2), prog());
+        cl.perfect_icache = true;
+        cl.limit_active_cores(1);
+        let s = cl.run();
+        // 16 collision events; the skid register absorbs 2 of 3 → 5 stalls.
+        assert_eq!(s.per_core[0].wb_stall, 5);
+    }
+
+    /// Branch penalties: taken costs 2 extra cycles, not-taken none.
+    #[test]
+    fn branch_penalties() {
+        let mut b = ProgramBuilder::new("br");
+        b.li(1, 8);
+        b.label("loop");
+        b.addi(1, 1, -1);
+        b.bne(1, 0, "loop"); // taken 7×, not-taken 1×
+        b.end();
+        let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
+        cl.limit_active_cores(1);
+        let s = cl.run();
+        assert_eq!(s.per_core[0].branch_stall, 7 * 2);
+    }
+
+    /// L2 accesses block the core for the 15-cycle latency.
+    #[test]
+    fn l2_latency_blocks() {
+        let mut b = ProgramBuilder::new("l2");
+        b.li(1, mem::L2_BASE);
+        b.lw(2, 1, 0);
+        b.lw(3, 1, 4);
+        b.end();
+        let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
+        cl.limit_active_cores(1);
+        let s = cl.run();
+        assert_eq!(s.per_core[0].l2_stall, 2 * 14);
+        assert!(s.total_cycles >= 30);
+    }
+
+    /// Fig 6 support: limiting active cores terminates the others.
+    #[test]
+    fn limit_active_cores_works() {
+        let mut b = ProgramBuilder::new("lim");
+        b.barrier(); // only the active cores participate
+        b.end();
+        let mut cl = Cluster::new(cfg(16, 16, 0), b.build());
+        cl.limit_active_cores(4);
+        let s = cl.run();
+        assert!(s.total_cycles < 50, "4-way barrier must not deadlock");
+        assert_eq!(cl.cores[0].reg(regs::NCORES), 4);
+    }
+}

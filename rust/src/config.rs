@@ -1,0 +1,215 @@
+//! Cluster configuration — the design space of Table 2.
+//!
+//! A configuration is (number of cores, number of FPU instances, FPU
+//! pipeline stages), written `<c>c<f>f<p>p` (e.g. `8c4f1p`). The 18
+//! configurations of Table 2 are the cross product {8,16} × sharing factor
+//! {1/4, 1/2, 1/1} × pipeline {0,1,2}.
+
+use std::fmt;
+
+/// Supply-voltage corner (§3.3): near-threshold 0.65 V or super-threshold
+/// 0.8 V. Performance/area efficiency are reported at ST, energy efficiency
+/// at NT, matching Tables 4/5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Corner {
+    /// 0.65 V near-threshold.
+    Nt,
+    /// 0.8 V super-threshold.
+    St,
+}
+
+impl Corner {
+    /// Supply voltage in volts.
+    pub fn vdd(&self) -> f64 {
+        match self {
+            Corner::Nt => 0.65,
+            Corner::St => 0.80,
+        }
+    }
+}
+
+impl fmt::Display for Corner {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Corner::Nt => write!(f, "NT(0.65V)"),
+            Corner::St => write!(f, "ST(0.8V)"),
+        }
+    }
+}
+
+/// One point of the Table 2 design space, plus the fixed memory parameters
+/// of §3.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ClusterConfig {
+    /// Number of RI5CY cores (8 or 16).
+    pub cores: usize,
+    /// Number of shared FPU instances (cores/4, cores/2 or cores).
+    pub fpus: usize,
+    /// FPU pipeline stages (0, 1 or 2).
+    pub pipe: u32,
+    /// Ablation knob: use a *blocked* core→FPU mapping (core c → FPU
+    /// c / sharing) instead of the paper's interleaved allocation (§3.2).
+    /// Always `false` in the Table 2 design space.
+    pub blocked_fpu_map: bool,
+}
+
+impl ClusterConfig {
+    /// Construct and validate (interleaved FPU mapping, as in the paper).
+    pub fn new(cores: usize, fpus: usize, pipe: u32) -> Self {
+        let c = ClusterConfig { cores, fpus, pipe, blocked_fpu_map: false };
+        c.validate();
+        c
+    }
+
+    /// Ablation variant with the blocked (non-interleaved) FPU mapping.
+    pub fn with_blocked_fpu_map(mut self) -> Self {
+        self.blocked_fpu_map = true;
+        self
+    }
+
+    fn validate(&self) {
+        assert!(self.cores > 0 && self.cores <= 64, "cores out of range");
+        assert!(self.fpus > 0 && self.fpus <= self.cores, "fpus out of range");
+        assert!(self.cores % self.fpus == 0, "cores must be a multiple of fpus");
+        assert!(self.pipe <= 2, "pipeline stages 0..=2");
+    }
+
+    /// The 18 configurations of Table 2, in table order.
+    pub fn design_space() -> Vec<ClusterConfig> {
+        let mut v = Vec::new();
+        for &cores in &[8usize, 16] {
+            for sharing_div in [4usize, 2, 1] {
+                for pipe in 0..=2u32 {
+                    v.push(ClusterConfig::new(cores, cores / sharing_div, pipe));
+                }
+            }
+        }
+        v
+    }
+
+    /// Sharing factor denominator: 1/N cores per FPU (4, 2 or 1).
+    pub fn sharing_div(&self) -> usize {
+        self.cores / self.fpus
+    }
+
+    /// TCDM size in bytes: 64 kB for 8-core, 128 kB for 16-core (§3.1).
+    pub fn tcdm_bytes(&self) -> usize {
+        if self.cores <= 8 {
+            64 * 1024
+        } else {
+            128 * 1024
+        }
+    }
+
+    /// Number of TCDM banks (banking factor 2, the PULP cluster default).
+    pub fn tcdm_banks(&self) -> usize {
+        self.cores * 2
+    }
+
+    /// L2 size in bytes (512 kB, §3.1).
+    pub fn l2_bytes(&self) -> usize {
+        512 * 1024
+    }
+
+    /// L2 access latency in cycles (§3.1: "15-cycle latency multi-banked
+    /// scratchpad").
+    pub fn l2_latency(&self) -> u64 {
+        15
+    }
+
+    /// Static core→FPU mapping. Interleaved allocation (§3.2, Fig 2): core
+    /// `c` uses FPU `c mod fpus`, so neighbouring cores hit different units
+    /// when parallel sections use fewer workers than cores. The blocked
+    /// ablation maps `c / sharing` instead (neighbours share).
+    pub fn fpu_of_core(&self, core: usize) -> usize {
+        if self.blocked_fpu_map {
+            core / self.sharing_div()
+        } else {
+            core % self.fpus
+        }
+    }
+
+    /// Mnemonic per Table 2, e.g. `16c8f1p`.
+    pub fn mnemonic(&self) -> String {
+        format!("{}c{}f{}p", self.cores, self.fpus, self.pipe)
+    }
+
+    /// Parse a Table 2 mnemonic.
+    pub fn parse(s: &str) -> Option<ClusterConfig> {
+        let s = s.trim();
+        let c_pos = s.find('c')?;
+        let f_pos = s.find('f')?;
+        let p_pos = s.find('p')?;
+        if !(c_pos < f_pos && f_pos < p_pos) {
+            return None;
+        }
+        let cores: usize = s[..c_pos].parse().ok()?;
+        let fpus: usize = s[c_pos + 1..f_pos].parse().ok()?;
+        let pipe: u32 = s[f_pos + 1..p_pos].parse().ok()?;
+        if cores == 0 || fpus == 0 || fpus > cores || cores % fpus != 0 || pipe > 2 {
+            return None;
+        }
+        Some(ClusterConfig { cores, fpus, pipe, blocked_fpu_map: false })
+    }
+}
+
+impl fmt::Display for ClusterConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.mnemonic())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn design_space_matches_table2() {
+        let ds = ClusterConfig::design_space();
+        assert_eq!(ds.len(), 18);
+        let mnems: Vec<String> = ds.iter().map(|c| c.mnemonic()).collect();
+        // Table 2 rows, in order.
+        let expect = [
+            "8c2f0p", "8c2f1p", "8c2f2p", "8c4f0p", "8c4f1p", "8c4f2p", "8c8f0p", "8c8f1p",
+            "8c8f2p", "16c4f0p", "16c4f1p", "16c4f2p", "16c8f0p", "16c8f1p", "16c8f2p",
+            "16c16f0p", "16c16f1p", "16c16f2p",
+        ];
+        assert_eq!(mnems, expect);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for cfg in ClusterConfig::design_space() {
+            assert_eq!(ClusterConfig::parse(&cfg.mnemonic()), Some(cfg));
+        }
+        assert_eq!(ClusterConfig::parse("bogus"), None);
+        assert_eq!(ClusterConfig::parse("8c16f0p"), None); // fpus > cores
+        assert_eq!(ClusterConfig::parse("8c3f0p"), None); // not a divisor
+    }
+
+    #[test]
+    fn interleaved_mapping() {
+        // Fig 2: 8 cores, 4 FPUs → FPU i serves cores i and i+4.
+        let cfg = ClusterConfig::new(8, 4, 1);
+        assert_eq!(cfg.fpu_of_core(0), 0);
+        assert_eq!(cfg.fpu_of_core(4), 0);
+        assert_eq!(cfg.fpu_of_core(1), 1);
+        assert_eq!(cfg.fpu_of_core(5), 1);
+        assert_eq!(cfg.fpu_of_core(7), 3);
+        assert_eq!(cfg.sharing_div(), 2);
+    }
+
+    #[test]
+    fn memory_parameters() {
+        assert_eq!(ClusterConfig::new(8, 8, 0).tcdm_bytes(), 64 * 1024);
+        assert_eq!(ClusterConfig::new(16, 4, 2).tcdm_bytes(), 128 * 1024);
+        assert_eq!(ClusterConfig::new(16, 16, 1).tcdm_banks(), 32);
+        assert_eq!(ClusterConfig::new(8, 2, 0).l2_latency(), 15);
+    }
+
+    #[test]
+    fn corners() {
+        assert_eq!(Corner::Nt.vdd(), 0.65);
+        assert_eq!(Corner::St.vdd(), 0.80);
+    }
+}

@@ -1,0 +1,91 @@
+//! Design-space-exploration coordinator: runs (configuration × benchmark ×
+//! variant) sweeps on the cycle-accurate simulator, converts counters into
+//! the paper's metrics, and produces every table and figure of §5/§6.
+
+pub mod sweep;
+pub mod tables;
+
+pub use sweep::{run_one, sweep_all, Measurement};
+pub use tables::{fig3, fig4, fig5, fig6, fig7, fig8, table3, table45, table6};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::kernels::{Benchmark, Variant};
+
+    /// The headline calibration anchor: FIR vector on 16c16f0p must land in
+    /// the neighbourhood of the paper's 167 Gflop/s/W peak, and FIR scalar
+    /// near 99 Gflop/s/W (Tables 4/5 peaks; abstract quotes 162/97 for the
+    /// 8-core cluster).
+    #[test]
+    fn energy_anchor() {
+        let cfg = ClusterConfig::new(16, 16, 0);
+        let mv = run_one(&cfg, Benchmark::Fir, Variant::VEC);
+        assert!(
+            mv.metrics.energy_eff > 120.0 && mv.metrics.energy_eff < 215.0,
+            "FIR vector 16c16f0p = {} Gflop/s/W (paper: 167)",
+            mv.metrics.energy_eff
+        );
+        let ms = run_one(&cfg, Benchmark::Fir, Variant::Scalar);
+        assert!(
+            ms.metrics.energy_eff > 70.0 && ms.metrics.energy_eff < 130.0,
+            "FIR scalar 16c16f0p = {} Gflop/s/W (paper: 99)",
+            ms.metrics.energy_eff
+        );
+    }
+
+    /// Performance anchor: FIR vector on 16c16f1p ≈ 5.92 Gflop/s.
+    #[test]
+    fn performance_anchor() {
+        let cfg = ClusterConfig::new(16, 16, 1);
+        let m = run_one(&cfg, Benchmark::Fir, Variant::VEC);
+        assert!(
+            m.metrics.perf_gflops > 4.2 && m.metrics.perf_gflops < 7.6,
+            "FIR vector 16c16f1p = {} Gflop/s (paper: 5.92)",
+            m.metrics.perf_gflops
+        );
+    }
+
+    /// Table 3 check across the whole suite: measured FP/memory intensities
+    /// within ±0.12 / ±0.15 of the paper's values.
+    #[test]
+    fn intensities_match_table3() {
+        let cfg = ClusterConfig::new(8, 8, 1);
+        for b in Benchmark::all() {
+            for v in [Variant::Scalar, Variant::VEC] {
+                let m = run_one(&cfg, b, v);
+                let (fp_ref, mem_ref) = b.table3_intensity(v);
+                assert!(
+                    (m.fp_intensity - fp_ref).abs() < 0.13,
+                    "{} {}: fp {} vs paper {}",
+                    b.name(),
+                    v.label(),
+                    m.fp_intensity,
+                    fp_ref
+                );
+                assert!(
+                    (m.mem_intensity - mem_ref).abs() < 0.25,
+                    "{} {}: mem {} vs paper {}",
+                    b.name(),
+                    v.label(),
+                    m.mem_intensity,
+                    mem_ref
+                );
+            }
+        }
+    }
+
+    /// Every benchmark × variant verifies numerically on corner configs.
+    #[test]
+    fn all_measurements_verified() {
+        for cfg in [ClusterConfig::new(8, 2, 0), ClusterConfig::new(16, 16, 2)] {
+            for b in Benchmark::all() {
+                for v in [Variant::Scalar, Variant::VEC] {
+                    let m = run_one(&cfg, b, v);
+                    assert!(m.verified, "{} {} on {}", b.name(), v.label(), cfg);
+                }
+            }
+        }
+    }
+}

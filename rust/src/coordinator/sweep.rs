@@ -1,0 +1,105 @@
+//! Sweep engine: one measurement per (config, benchmark, variant), with a
+//! scoped-thread parallel driver for the full 18×8×2 design space.
+
+use std::sync::Mutex;
+
+use crate::cluster::counters::CoreCounters;
+use crate::config::ClusterConfig;
+use crate::kernels::{Benchmark, Variant};
+use crate::model::{self, Metrics};
+
+/// One point of the evaluation space.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Configuration under test.
+    pub cfg: ClusterConfig,
+    /// Benchmark and variant.
+    pub bench: Benchmark,
+    pub variant: Variant,
+    /// Paper metrics (Gflop/s @ST, Gflop/s/W @NT, Gflop/s/mm²).
+    pub metrics: Metrics,
+    /// Total cycles of the run.
+    pub cycles: u64,
+    /// Aggregated counters.
+    pub agg: CoreCounters,
+    /// FP / memory intensity (Table 3).
+    pub fp_intensity: f64,
+    pub mem_intensity: f64,
+    /// Numeric verification against the host golden passed.
+    pub verified: bool,
+}
+
+/// Run one benchmark variant on one configuration.
+pub fn run_one(cfg: &ClusterConfig, bench: Benchmark, variant: Variant) -> Measurement {
+    let w = bench.build(variant, cfg);
+    let (stats, out) = w.run(cfg);
+    let verified = w.verify(&out).is_ok();
+    let agg = stats.aggregate();
+    Measurement {
+        cfg: *cfg,
+        bench,
+        variant,
+        metrics: model::metrics(cfg, &stats),
+        cycles: stats.total_cycles,
+        fp_intensity: agg.fp_intensity(),
+        mem_intensity: agg.mem_intensity(),
+        agg,
+        verified,
+    }
+}
+
+/// Run the full design space (18 configs × 8 benchmarks × 2 variants),
+/// parallelized over std scoped threads. Results are in deterministic
+/// (config, bench, variant) order.
+pub fn sweep_all() -> Vec<Measurement> {
+    sweep(&ClusterConfig::design_space(), &Benchmark::all(), &[Variant::Scalar, Variant::VEC])
+}
+
+/// Run an arbitrary slice of the space.
+pub fn sweep(
+    configs: &[ClusterConfig],
+    benches: &[Benchmark],
+    variants: &[Variant],
+) -> Vec<Measurement> {
+    let mut jobs = Vec::new();
+    for cfg in configs {
+        for b in benches {
+            for v in variants {
+                jobs.push((*cfg, *b, *v));
+            }
+        }
+    }
+    let results = Mutex::new(vec![None; jobs.len()]);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (cfg, b, v) = jobs[i];
+                let m = run_one(&cfg, b, v);
+                results.lock().unwrap()[i] = Some(m);
+            });
+        }
+    });
+    results.into_inner().unwrap().into_iter().map(|m| m.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_slice_is_ordered_and_verified() {
+        let configs = [ClusterConfig::new(8, 4, 1)];
+        let ms = sweep(&configs, &[Benchmark::Matmul, Benchmark::Fir], &[Variant::Scalar]);
+        assert_eq!(ms.len(), 2);
+        assert_eq!(ms[0].bench, Benchmark::Matmul);
+        assert_eq!(ms[1].bench, Benchmark::Fir);
+        assert!(ms.iter().all(|m| m.verified));
+        assert!(ms.iter().all(|m| m.metrics.perf_gflops > 0.0));
+    }
+}

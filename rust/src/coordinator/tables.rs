@@ -1,0 +1,390 @@
+//! Emitters for every table and figure in the paper's evaluation (§5–§6).
+//! Each function runs the necessary slice of the design space on the
+//! simulator and renders a text table (plus CSV via [`crate::report`]).
+
+use super::sweep::{run_one, sweep, Measurement};
+use crate::cluster::counters::RunStats;
+use crate::config::{ClusterConfig, Corner};
+use crate::kernels::{Benchmark, Variant};
+use crate::model;
+use crate::report::{argmax, fmt_cell, minmax_normalize, Table};
+
+/// Configurations with `cores` cores, in Table 2 order.
+fn configs_for(cores: usize) -> Vec<ClusterConfig> {
+    ClusterConfig::design_space().into_iter().filter(|c| c.cores == cores).collect()
+}
+
+/// Table 3: FP / memory intensity per benchmark and variant — measured on
+/// the 8c8f1p configuration, side by side with the paper's values.
+pub fn table3() -> Table {
+    let cfg = ClusterConfig::new(8, 8, 1);
+    let mut t = Table::new(vec![
+        "Apps",
+        "FP I. scal (paper)",
+        "M. I. scal (paper)",
+        "FP I. vec (paper)",
+        "M. I. vec (paper)",
+    ]);
+    for b in Benchmark::all() {
+        let ms = run_one(&cfg, b, Variant::Scalar);
+        let mv = run_one(&cfg, b, Variant::VEC);
+        let (fs, mems) = b.table3_intensity(Variant::Scalar);
+        let (fv, memv) = b.table3_intensity(Variant::VEC);
+        t.row(vec![
+            b.name().to_string(),
+            format!("{:.2} ({fs:.2})", ms.fp_intensity),
+            format!("{:.2} ({mems:.2})", ms.mem_intensity),
+            format!("{:.2} ({fv:.2})", mv.fp_intensity),
+            format!("{:.2} ({memv:.2})", mv.mem_intensity),
+        ]);
+    }
+    t
+}
+
+/// Tables 4 / 5: performance, energy efficiency and area efficiency for
+/// every benchmark on the 8-core (`cores = 8`) or 16-core (`cores = 16`)
+/// configurations, scalar and vector variants, with the per-row best
+/// configuration boxed and the normalized-average (NAVG) footer.
+pub fn table45(cores: usize) -> Table {
+    let configs = configs_for(cores);
+    let measurements = sweep(&configs, &Benchmark::all(), &[Variant::Scalar, Variant::VEC]);
+    let find = |b: Benchmark, v: Variant, cfg: &ClusterConfig| -> &Measurement {
+        measurements
+            .iter()
+            .find(|m| m.bench == b && m.variant.label() == v.label() && m.cfg == *cfg)
+            .expect("measurement present")
+    };
+
+    let mut headers = vec!["bench".to_string(), "metric".to_string()];
+    for v in ["S", "V"] {
+        for c in &configs {
+            headers.push(format!("{v}:{}", c.mnemonic()));
+        }
+    }
+    let mut t = Table::new(headers);
+
+    // Collect per-metric column values for the NAVG footer: column order is
+    // scalar configs then vector configs.
+    let col_count = 2 * configs.len();
+    let mut avg_perf = vec![0.0f64; col_count];
+    let mut avg_eeff = vec![0.0f64; col_count];
+    let mut avg_aeff = vec![0.0f64; col_count];
+
+    for b in Benchmark::all() {
+        let mut perf = Vec::with_capacity(col_count);
+        let mut eeff = Vec::with_capacity(col_count);
+        let mut aeff = Vec::with_capacity(col_count);
+        for v in [Variant::Scalar, Variant::VEC] {
+            for c in &configs {
+                let m = find(b, v, c);
+                perf.push(m.metrics.perf_gflops);
+                eeff.push(m.metrics.energy_eff);
+                aeff.push(m.metrics.area_eff);
+            }
+        }
+        for (i, p) in perf.iter().enumerate() {
+            avg_perf[i] += p / 8.0;
+        }
+        for (i, e) in eeff.iter().enumerate() {
+            avg_eeff[i] += e / 8.0;
+        }
+        for (i, a) in aeff.iter().enumerate() {
+            avg_aeff[i] += a / 8.0;
+        }
+        for (label, vals) in [("PERF", &perf), ("E.EFF", &eeff), ("A.EFF", &aeff)] {
+            let best = argmax(vals);
+            let mut row = vec![b.name().to_string(), label.to_string()];
+            for (i, v) in vals.iter().enumerate() {
+                row.push(fmt_cell(*v, i == best));
+            }
+            t.row(row);
+        }
+    }
+    // NAVG footer (min-max normalized averages, like the tables' last rows).
+    for (label, vals) in
+        [("NAVG PERF", &avg_perf), ("NAVG E.EFF", &avg_eeff), ("NAVG A.EFF", &avg_aeff)]
+    {
+        let norm = minmax_normalize(vals);
+        let best = argmax(&norm);
+        let mut row = vec!["AVG".to_string(), label.to_string()];
+        for (i, v) in norm.iter().enumerate() {
+            row.push(if i == best { format!("[{v:.2}]") } else { format!("{v:.2}") });
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig 3: min / median / max fmax over the FPU counts, per core count ×
+/// pipeline × corner.
+pub fn fig3() -> Table {
+    let mut t = Table::new(vec!["corner", "cores", "pipe", "fmax min (MHz)", "median", "max"]);
+    for corner in [Corner::Nt, Corner::St] {
+        for cores in [8usize, 16] {
+            for pipe in 0..=2u32 {
+                let (lo, med, hi) = model::fig3_spread(cores, pipe, corner);
+                t.row(vec![
+                    corner.to_string(),
+                    cores.to_string(),
+                    format!("{pipe}p"),
+                    format!("{lo:.0}"),
+                    format!("{med:.0}"),
+                    format!("{hi:.0}"),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Fig 4: total area per configuration.
+pub fn fig4() -> Table {
+    let mut t = Table::new(vec!["config", "area (mm^2)"]);
+    for cfg in ClusterConfig::design_space() {
+        t.row(vec![cfg.mnemonic(), format!("{:.3}", model::area_mm2(&cfg))]);
+    }
+    t
+}
+
+/// Fig 5: total power at 100 MHz per configuration, running the f32 MATMUL
+/// (the paper's power-analysis workload), at both corners.
+pub fn fig5() -> Table {
+    let mut t = Table::new(vec!["config", "P @100MHz NT (mW)", "P @100MHz ST (mW)"]);
+    for cfg in ClusterConfig::design_space() {
+        let w = Benchmark::Matmul.build(Variant::Scalar, &cfg);
+        let (stats, _) = w.run(&cfg);
+        let act = model::Activity::from_stats(&stats);
+        let nt = model::power_mw(&cfg, Corner::Nt, &act, 100.0);
+        let st = model::power_mw(&cfg, Corner::St, &act, 100.0);
+        t.row(vec![cfg.mnemonic(), format!("{nt:.2}"), format!("{st:.2}")]);
+    }
+    t
+}
+
+/// Fig 6: parallel + vectorization speed-ups on the 16-core architectures:
+/// min / avg / max over the nine 16-core configurations, for 1/2/4/8/16
+/// active cores, scalar and vector. Baseline: 1 core, scalar, same config.
+pub fn fig6() -> Table {
+    let mut t = Table::new(vec!["bench", "workers", "variant", "min", "avg", "max"]);
+    let configs = configs_for(16);
+    for b in Benchmark::all() {
+        // Baseline cycles per config.
+        let base: Vec<f64> = configs
+            .iter()
+            .map(|c| {
+                let w = b.build(Variant::Scalar, c);
+                let (s, _) = w.run_on(c, 1);
+                s.total_cycles as f64
+            })
+            .collect();
+        for workers in [1usize, 2, 4, 8, 16] {
+            for v in [Variant::Scalar, Variant::VEC] {
+                let mut speedups = Vec::new();
+                for (ci, c) in configs.iter().enumerate() {
+                    let w = b.build(v, c);
+                    let (s, _) = w.run_on(c, workers);
+                    speedups.push(base[ci] / s.total_cycles as f64);
+                }
+                let lo = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = speedups.iter().cloned().fold(0.0f64, f64::max);
+                let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+                t.row(vec![
+                    b.name().to_string(),
+                    format!("{workers}CL"),
+                    v.label().to_string(),
+                    format!("{lo:.2}"),
+                    format!("{avg:.2}"),
+                    format!("{hi:.2}"),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Fig 7: normalized average performance / energy efficiency / area
+/// efficiency versus the FPU sharing factor (pipeline fixed at 1).
+pub fn fig7() -> Table {
+    let mut t = Table::new(vec!["cores", "sharing", "PERF (norm)", "E.EFF (norm)", "A.EFF (norm)"]);
+    for cores in [8usize, 16] {
+        let configs: Vec<ClusterConfig> =
+            [4usize, 2, 1].iter().map(|d| ClusterConfig::new(cores, cores / d, 1)).collect();
+        let (p, e, a) = averaged_metrics(&configs);
+        let (pn, en, an) = (minmax_normalize(&p), minmax_normalize(&e), minmax_normalize(&a));
+        for (i, d) in [4, 2, 1].iter().enumerate() {
+            t.row(vec![
+                cores.to_string(),
+                format!("1/{d}"),
+                format!("{:.2}", pn[i]),
+                format!("{:.2}", en[i]),
+                format!("{:.2}", an[i]),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 8: normalized averages versus the pipeline depth (1/1 sharing fixed).
+pub fn fig8() -> Table {
+    let mut t = Table::new(vec!["cores", "pipe", "PERF (norm)", "E.EFF (norm)", "A.EFF (norm)"]);
+    for cores in [8usize, 16] {
+        let configs: Vec<ClusterConfig> =
+            (0..=2u32).map(|p| ClusterConfig::new(cores, cores, p)).collect();
+        let (p, e, a) = averaged_metrics(&configs);
+        let (pn, en, an) = (minmax_normalize(&p), minmax_normalize(&e), minmax_normalize(&a));
+        for (i, pipe) in (0..=2u32).enumerate() {
+            t.row(vec![
+                cores.to_string(),
+                format!("{pipe}PS"),
+                format!("{:.2}", pn[i]),
+                format!("{:.2}", en[i]),
+                format!("{:.2}", an[i]),
+            ]);
+        }
+    }
+    t
+}
+
+/// Average the three metrics over all benchmarks × variants per config.
+fn averaged_metrics(configs: &[ClusterConfig]) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let ms = sweep(configs, &Benchmark::all(), &[Variant::Scalar, Variant::VEC]);
+    let mut perf = vec![0.0; configs.len()];
+    let mut eeff = vec![0.0; configs.len()];
+    let mut aeff = vec![0.0; configs.len()];
+    let per_cfg = (ms.len() / configs.len()) as f64;
+    for m in &ms {
+        let i = configs.iter().position(|c| *c == m.cfg).unwrap();
+        perf[i] += m.metrics.perf_gflops / per_cfg;
+        eeff[i] += m.metrics.energy_eff / per_cfg;
+        aeff[i] += m.metrics.area_eff / per_cfg;
+    }
+    (perf, eeff, aeff)
+}
+
+/// Table 6: the SoA comparison. Competitor rows are the paper's quoted
+/// literature values; the three "This work" rows are **measured here** on
+/// the f32 MATMUL (the paper's methodology) and printed next to the values
+/// the paper reports for itself.
+pub fn table6() -> Table {
+    let mut t = Table::new(vec![
+        "platform",
+        "domain",
+        "tech",
+        "V",
+        "freq (GHz)",
+        "area (mm^2)",
+        "perf (Gflop/s)",
+        "en.eff (Gflop/s/W)",
+        "area eff (Gflop/s/mm^2)",
+    ]);
+    for r in crate::report::soa::competitors() {
+        t.row(vec![
+            r.name.to_string(),
+            r.domain.to_string(),
+            r.technology.to_string(),
+            r.voltage.to_string(),
+            format!("{:.2}", r.freq_ghz),
+            r.area_mm2.map(|a| format!("{a:.2}")).unwrap_or_else(|| "-".into()),
+            format!("{:.2}", r.perf_gflops),
+            format!("{:.2}", r.energy_eff),
+            r.area_eff.map(|a| format!("{a:.2}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    for ps in crate::report::soa::paper_self_rows() {
+        let cfg = ClusterConfig::parse(ps.mnemonic).unwrap();
+        let m = run_one(&cfg, Benchmark::Matmul, Variant::Scalar);
+        t.row(vec![
+            format!("This work {} ({}) [measured]", ps.mnemonic, ps.role),
+            "Embedded".to_string(),
+            "GF 22FDX (modelled)".to_string(),
+            if ps.mnemonic.contains("0p") { "0.65" } else { "0.80" }.to_string(),
+            format!("{:.2}", model::fmax_mhz(&cfg, Corner::St) / 1000.0),
+            format!("{:.2}", model::area_mm2(&cfg)),
+            format!("{:.2}", m.metrics.perf_gflops),
+            format!("{:.2}", m.metrics.energy_eff),
+            format!("{:.2}", m.metrics.area_eff),
+        ]);
+        t.row(vec![
+            format!("This work {} ({}) [paper]", ps.mnemonic, ps.role),
+            "Embedded".to_string(),
+            "GF 22FDX".to_string(),
+            "-".to_string(),
+            format!("{:.2}", ps.freq_ghz),
+            format!("{:.2}", ps.area_mm2),
+            format!("{:.2}", ps.perf_gflops),
+            format!("{:.2}", ps.energy_eff),
+            format!("{:.2}", ps.area_eff),
+        ]);
+    }
+    t
+}
+
+/// Helper for the validate path and examples: run a workload and return the
+/// stats (re-exported for binaries).
+pub fn run_stats(cfg: &ClusterConfig, b: Benchmark, v: Variant) -> RunStats {
+    let w = b.build(v, cfg);
+    let (stats, out) = w.run(cfg);
+    w.verify(&out).expect("workload verification");
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_table_has_12_rows() {
+        let t = fig3();
+        assert_eq!(t.render().lines().count(), 2 + 12);
+    }
+
+    #[test]
+    fn fig4_covers_design_space() {
+        let t = fig4();
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 1 + 18);
+        assert!(csv.contains("16c16f1p"));
+    }
+
+    #[test]
+    fn fig7_sharing_trends() {
+        // §5.3.2: performance grows with the sharing factor (1/4 → 1/1).
+        let t = fig7();
+        let csv = t.to_csv();
+        let rows: Vec<Vec<f64>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| {
+                l.split(',').skip(2).map(|x| x.parse::<f64>().unwrap()).collect::<Vec<f64>>()
+            })
+            .collect();
+        // 8-core rows 0..3 in order 1/4, 1/2, 1/1: perf normalized 0..1.
+        assert!(rows[0][0] < rows[2][0], "perf must grow with sharing factor");
+        // Energy efficiency also grows with sharing (§5.3.2).
+        assert!(rows[0][1] <= rows[2][1] + 0.05);
+    }
+
+    #[test]
+    fn fig8_pipeline_trends() {
+        // §5.3.3: 1 stage is the performance sweet spot; energy efficiency
+        // strictly decreases with pipeline depth.
+        let t = fig8();
+        let csv = t.to_csv();
+        let rows: Vec<Vec<f64>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| {
+                l.split(',').skip(2).map(|x| x.parse::<f64>().unwrap()).collect::<Vec<f64>>()
+            })
+            .collect();
+        for cores_block in [0usize, 3] {
+            let (p0, p1, p2) =
+                (rows[cores_block][0], rows[cores_block + 1][0], rows[cores_block + 2][0]);
+            assert!(p1 > p0, "1p must beat 0p on performance");
+            assert!(p1 >= p2, "2p must not beat 1p on performance");
+            let (e0, e1, e2) =
+                (rows[cores_block][1], rows[cores_block + 1][1], rows[cores_block + 2][1]);
+            assert!(e0 > e1 && e1 >= e2, "energy efficiency decreases with stages");
+        }
+    }
+}

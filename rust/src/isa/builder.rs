@@ -1,0 +1,459 @@
+//! Program builder — the "assembler" the benchmark kernels are written
+//! against. Provides labels with backpatching, hardware-loop scoping, and
+//! mnemonic-style helpers so kernels read like the Xpulp assembly the
+//! paper's toolchain emits.
+
+use std::collections::HashMap;
+
+use super::insn::{AluOp, BrCond, FpOp, Insn, MemSize, Operand, Reg};
+use crate::transfp::{CmpPred, FpMode};
+
+/// Convention registers (mirrors the HAL of §4: core id / ncores live in
+/// known registers after startup).
+pub mod regs {
+    use super::Reg;
+    /// Hardwired zero.
+    pub const ZERO: Reg = 0;
+    /// Core id, written by the simulator at reset.
+    pub const CORE_ID: Reg = 10;
+    /// Number of cores in the cluster, written at reset.
+    pub const NCORES: Reg = 11;
+    /// First caller-scratch register conventionally used by kernels.
+    pub const T0: Reg = 12;
+}
+
+/// A finished SPMD program: every core executes the same instruction stream.
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Resolved instruction stream.
+    pub insns: Vec<Insn>,
+    /// Human-readable name (benchmark + variant).
+    pub name: String,
+}
+
+impl Program {
+    /// Static instruction count.
+    pub fn len(&self) -> usize {
+        self.insns.len()
+    }
+
+    /// True if the program has no instructions.
+    pub fn is_empty(&self) -> bool {
+        self.insns.is_empty()
+    }
+}
+
+/// Label-resolving program builder.
+pub struct ProgramBuilder {
+    insns: Vec<Insn>,
+    labels: HashMap<String, u32>,
+    /// (instruction index, label) pairs to backpatch.
+    fixups: Vec<(usize, String)>,
+    /// Open hardware loops: (index of HwLoop insn, body start).
+    hwloop_stack: Vec<usize>,
+    name: String,
+}
+
+impl ProgramBuilder {
+    /// Start a new program.
+    pub fn new(name: impl Into<String>) -> Self {
+        ProgramBuilder {
+            insns: Vec::new(),
+            labels: HashMap::new(),
+            fixups: Vec::new(),
+            hwloop_stack: Vec::new(),
+            name: name.into(),
+        }
+    }
+
+    /// Next instruction index.
+    pub fn here(&self) -> u32 {
+        self.insns.len() as u32
+    }
+
+    /// Define `label` at the current position.
+    pub fn label(&mut self, label: &str) -> &mut Self {
+        let prev = self.labels.insert(label.to_string(), self.here());
+        assert!(prev.is_none(), "duplicate label {label}");
+        self
+    }
+
+    fn push(&mut self, i: Insn) -> &mut Self {
+        self.insns.push(i);
+        self
+    }
+
+    // ---------------------------------------------------------- integer
+
+    /// `li rd, imm`
+    pub fn li(&mut self, rd: Reg, imm: u32) -> &mut Self {
+        self.push(Insn::Li { rd, imm })
+    }
+
+    /// `add rd, rs1, rs2`
+    pub fn add(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Add, rd, rs1, rhs: Operand::Reg(rs2) })
+    }
+
+    /// `addi rd, rs1, imm`
+    pub fn addi(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Add, rd, rs1, rhs: Operand::Imm(imm) })
+    }
+
+    /// `sub rd, rs1, rs2`
+    pub fn sub(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Sub, rd, rs1, rhs: Operand::Reg(rs2) })
+    }
+
+    /// `mul rd, rs1, rs2` (single-cycle on RI5CY)
+    pub fn mul(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Mul, rd, rs1, rhs: Operand::Reg(rs2) })
+    }
+
+    /// `muli rd, rs1, imm` (strength-reduced by the compiler; modelled 1 cycle)
+    pub fn muli(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Mul, rd, rs1, rhs: Operand::Imm(imm) })
+    }
+
+    /// `div rd, rs1, rs2` — iterative integer divide.
+    pub fn divi(&mut self, rd: Reg, rs1: Reg, rhs: Operand) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Div, rd, rs1, rhs })
+    }
+
+    /// `rem rd, rs1, rs2`
+    pub fn rem(&mut self, rd: Reg, rs1: Reg, rhs: Operand) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Rem, rd, rs1, rhs })
+    }
+
+    /// `slli rd, rs1, imm`
+    pub fn slli(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Sll, rd, rs1, rhs: Operand::Imm(imm) })
+    }
+
+    /// `srli rd, rs1, imm`
+    pub fn srli(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Srl, rd, rs1, rhs: Operand::Imm(imm) })
+    }
+
+    /// `andi rd, rs1, imm`
+    pub fn andi(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::And, rd, rs1, rhs: Operand::Imm(imm) })
+    }
+
+    /// `xor rd, rs1, rs2`
+    pub fn xor(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Xor, rd, rs1, rhs: Operand::Reg(rs2) })
+    }
+
+    /// `or rd, rs1, rs2`
+    pub fn or(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Or, rd, rs1, rhs: Operand::Reg(rs2) })
+    }
+
+    /// `mv rd, rs` (addi rd, rs, 0)
+    pub fn mv(&mut self, rd: Reg, rs: Reg) -> &mut Self {
+        self.addi(rd, rs, 0)
+    }
+
+    /// Xpulp `p.min rd, rs1, rs2`
+    pub fn imin(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Min, rd, rs1, rhs: Operand::Reg(rs2) })
+    }
+
+    /// Xpulp `p.max rd, rs1, rs2`
+    pub fn imax(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Max, rd, rs1, rhs: Operand::Reg(rs2) })
+    }
+
+    /// `slt rd, rs1, rs2`
+    pub fn slt(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Insn::Alu { op: AluOp::Slt, rd, rs1, rhs: Operand::Reg(rs2) })
+    }
+
+    // ---------------------------------------------------------- memory
+
+    /// `lw rd, offset(base)`
+    pub fn lw(&mut self, rd: Reg, base: Reg, offset: i32) -> &mut Self {
+        self.push(Insn::Load { rd, base, offset, post_inc: 0, size: MemSize::Word })
+    }
+
+    /// Xpulp post-increment load word: `p.lw rd, inc(base!)`
+    pub fn lw_pi(&mut self, rd: Reg, base: Reg, inc: i32) -> &mut Self {
+        self.push(Insn::Load { rd, base, offset: 0, post_inc: inc, size: MemSize::Word })
+    }
+
+    /// `lh rd, offset(base)` (sign-extending halfword load)
+    pub fn lh(&mut self, rd: Reg, base: Reg, offset: i32) -> &mut Self {
+        self.push(Insn::Load { rd, base, offset, post_inc: 0, size: MemSize::Half })
+    }
+
+    /// `sw rs, offset(base)`
+    pub fn sw(&mut self, rs: Reg, base: Reg, offset: i32) -> &mut Self {
+        self.push(Insn::Store { rs, base, offset, post_inc: 0, size: MemSize::Word })
+    }
+
+    /// Xpulp post-increment store word.
+    pub fn sw_pi(&mut self, rs: Reg, base: Reg, inc: i32) -> &mut Self {
+        self.push(Insn::Store { rs, base, offset: 0, post_inc: inc, size: MemSize::Word })
+    }
+
+    /// `sh rs, offset(base)`
+    pub fn sh(&mut self, rs: Reg, base: Reg, offset: i32) -> &mut Self {
+        self.push(Insn::Store { rs, base, offset, post_inc: 0, size: MemSize::Half })
+    }
+
+    // ---------------------------------------------------------- control
+
+    /// Conditional branch to `label`.
+    pub fn br(&mut self, cond: BrCond, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.fixups.push((self.insns.len(), label.to_string()));
+        self.push(Insn::Branch { cond, rs1, rs2, target: u32::MAX })
+    }
+
+    /// `bne rs1, rs2, label`
+    pub fn bne(&mut self, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.br(BrCond::Ne, rs1, rs2, label)
+    }
+
+    /// `beq rs1, rs2, label`
+    pub fn beq(&mut self, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.br(BrCond::Eq, rs1, rs2, label)
+    }
+
+    /// `blt rs1, rs2, label`
+    pub fn blt(&mut self, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.br(BrCond::Lt, rs1, rs2, label)
+    }
+
+    /// `bge rs1, rs2, label`
+    pub fn bge(&mut self, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.br(BrCond::Ge, rs1, rs2, label)
+    }
+
+    /// Unconditional jump to `label`.
+    pub fn j(&mut self, label: &str) -> &mut Self {
+        self.fixups.push((self.insns.len(), label.to_string()));
+        self.push(Insn::Jump { target: u32::MAX })
+    }
+
+    /// Open a zero-overhead hardware loop executing its body `count`
+    /// (register) times. Must be closed with [`Self::hwloop_end`]. Nesting
+    /// depth ≤2 like RI5CY.
+    pub fn hwloop(&mut self, count: Reg) -> &mut Self {
+        assert!(self.hwloop_stack.len() < 2, "RI5CY supports 2 nested hw loops");
+        self.hwloop_stack.push(self.insns.len());
+        self.push(Insn::HwLoop { count, start: 0, end: 0 })
+    }
+
+    /// Close the innermost hardware loop.
+    pub fn hwloop_end(&mut self) -> &mut Self {
+        let idx = self.hwloop_stack.pop().expect("hwloop_end without hwloop");
+        let start = idx as u32 + 1;
+        let end = self.here();
+        assert!(end > start, "empty hardware loop body");
+        if let Insn::HwLoop { start: s, end: e, .. } = &mut self.insns[idx] {
+            *s = start;
+            *e = end;
+        }
+        self
+    }
+
+    /// Event-unit synchronization barrier.
+    pub fn barrier(&mut self) -> &mut Self {
+        self.push(Insn::Barrier)
+    }
+
+    /// Terminate the core.
+    pub fn end(&mut self) -> &mut Self {
+        self.push(Insn::End)
+    }
+
+    // ---------------------------------------------------------- FP
+
+    /// Generic FP op.
+    pub fn fp(&mut self, op: FpOp, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Insn::Fp { op, mode, rd, rs1, rs2 })
+    }
+
+    /// `fadd` / `vfadd` in `mode`.
+    pub fn fadd(&mut self, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::Add, mode, rd, rs1, rs2)
+    }
+
+    /// `fsub` / `vfsub`.
+    pub fn fsub(&mut self, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::Sub, mode, rd, rs1, rs2)
+    }
+
+    /// `fmul` / `vfmul`.
+    pub fn fmul(&mut self, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::Mul, mode, rd, rs1, rs2)
+    }
+
+    /// `fmac rd, rs1, rs2` — `rd += rs1*rs2` (scalar or per-lane).
+    pub fn fmac(&mut self, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::Mac, mode, rd, rs1, rs2)
+    }
+
+    /// Widening 16→32 FMA (`fmac.s.h` style).
+    pub fn fmac_widen(&mut self, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::MacWiden, mode, rd, rs1, rs2)
+    }
+
+    /// Expanding SIMD dot product (`vfdotpex.s.X`).
+    pub fn fdotp(&mut self, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::DotpWiden, mode, rd, rs1, rs2)
+    }
+
+    /// `fdiv` — shared DIV-SQRT block.
+    pub fn fdiv(&mut self, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::Div, mode, rd, rs1, rs2)
+    }
+
+    /// `fsqrt`.
+    pub fn fsqrt(&mut self, mode: FpMode, rd: Reg, rs1: Reg) -> &mut Self {
+        self.fp(FpOp::Sqrt, mode, rd, rs1, 0)
+    }
+
+    /// `fmin`.
+    pub fn fmin(&mut self, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::Min, mode, rd, rs1, rs2)
+    }
+
+    /// `fmax`.
+    pub fn fmax(&mut self, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::Max, mode, rd, rs1, rs2)
+    }
+
+    /// FP compare writing 0/1 (scalar) or masks (vector).
+    pub fn fcmp(&mut self, mode: FpMode, pred: CmpPred, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::Cmp(pred), mode, rd, rs1, rs2)
+    }
+
+    /// `fneg rd, rs`.
+    pub fn fneg(&mut self, mode: FpMode, rd: Reg, rs1: Reg) -> &mut Self {
+        self.fp(FpOp::Neg, mode, rd, rs1, 0)
+    }
+
+    /// `fabs rd, rs`.
+    pub fn fabs(&mut self, mode: FpMode, rd: Reg, rs1: Reg) -> &mut Self {
+        self.fp(FpOp::AbsF, mode, rd, rs1, 0)
+    }
+
+    /// `fcvt.X.w rd, rs` — int to float.
+    pub fn fcvt_from_int(&mut self, mode: FpMode, rd: Reg, rs1: Reg) -> &mut Self {
+        self.fp(FpOp::FromInt, mode, rd, rs1, 0)
+    }
+
+    /// `fcvt.w.X rd, rs` — float to int (RTZ).
+    pub fn fcvt_to_int(&mut self, mode: FpMode, rd: Reg, rs1: Reg) -> &mut Self {
+        self.fp(FpOp::ToInt, mode, rd, rs1, 0)
+    }
+
+    /// `fcvt.h.s`-style narrow (mode names the 16-bit target).
+    pub fn fcvt_down(&mut self, mode: FpMode, rd: Reg, rs1: Reg) -> &mut Self {
+        self.fp(FpOp::CvtDown, mode, rd, rs1, 0)
+    }
+
+    /// `fcvt.s.h`-style widen (mode names the 16-bit source).
+    pub fn fcvt_up(&mut self, mode: FpMode, rd: Reg, rs1: Reg) -> &mut Self {
+        self.fp(FpOp::CvtUp, mode, rd, rs1, 0)
+    }
+
+    /// Cast-and-pack two f32 scalars into a 2×16 vector (`vfcpka.X.s`).
+    pub fn cpka(&mut self, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::Cpka, mode, rd, rs1, rs2)
+    }
+
+    /// SIMD shuffle with immediate selector in `rs2` slot.
+    pub fn vshuffle(&mut self, rd: Reg, rs1: Reg, sel: u8) -> &mut Self {
+        self.fp(FpOp::Shuffle, FpMode::VecF16, rd, rs1, sel)
+    }
+
+    /// Pack low lanes of two vectors.
+    pub fn vpack_lo(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::PackLo, FpMode::VecF16, rd, rs1, rs2)
+    }
+
+    /// Pack high lanes of two vectors.
+    pub fn vpack_hi(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.fp(FpOp::PackHi, FpMode::VecF16, rd, rs1, rs2)
+    }
+
+    // ---------------------------------------------------------- finish
+
+    /// Resolve labels and produce the program.
+    pub fn build(mut self) -> Program {
+        assert!(self.hwloop_stack.is_empty(), "unclosed hardware loop");
+        for (idx, label) in std::mem::take(&mut self.fixups) {
+            let target = *self
+                .labels
+                .get(&label)
+                .unwrap_or_else(|| panic!("undefined label {label}"));
+            match &mut self.insns[idx] {
+                Insn::Branch { target: t, .. } | Insn::Jump { target: t } => *t = target,
+                other => panic!("fixup on non-branch {other:?}"),
+            }
+        }
+        // Safety net: every program must end.
+        if !matches!(self.insns.last(), Some(Insn::End)) {
+            self.insns.push(Insn::End);
+        }
+        Program { insns: self.insns, name: self.name }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_resolve() {
+        let mut b = ProgramBuilder::new("t");
+        b.li(1, 4);
+        b.label("loop");
+        b.addi(1, 1, -1);
+        b.bne(1, 0, "loop");
+        b.end();
+        let p = b.build();
+        match p.insns[2] {
+            Insn::Branch { target, .. } => assert_eq!(target, 1),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn hwloop_backpatches_bounds() {
+        let mut b = ProgramBuilder::new("t");
+        b.li(1, 8);
+        b.hwloop(1);
+        b.addi(2, 2, 1);
+        b.addi(3, 3, 2);
+        b.hwloop_end();
+        b.end();
+        let p = b.build();
+        match p.insns[1] {
+            Insn::HwLoop { start, end, .. } => {
+                assert_eq!(start, 2);
+                assert_eq!(end, 4);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "undefined label")]
+    fn undefined_label_panics() {
+        let mut b = ProgramBuilder::new("t");
+        b.j("nowhere");
+        b.build();
+    }
+
+    #[test]
+    fn end_appended_if_missing() {
+        let mut b = ProgramBuilder::new("t");
+        b.li(1, 1);
+        let p = b.build();
+        assert!(matches!(p.insns.last(), Some(Insn::End)));
+    }
+}

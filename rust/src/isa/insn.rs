@@ -1,0 +1,222 @@
+//! Instruction definitions for the simulated cores.
+//!
+//! The instruction set models what the paper's extended GCC toolchain emits
+//! for RI5CY + Xpulp + smallFloat: RV32IM base ops, post-increment
+//! loads/stores, hardware loops, and the FPnew scalar / packed-SIMD /
+//! cast-and-pack FP operations (§3.2, §4). Instructions are structured enum
+//! values, not encoded words — the simulator is cycle-accurate at the
+//! microarchitectural level, not bit-accurate at the encoding level.
+
+use crate::transfp::{CmpPred, FpMode};
+
+/// Architectural register id (x0..x31; x0 is hardwired zero).
+pub type Reg = u8;
+
+/// Second ALU operand: register or immediate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    Reg(Reg),
+    Imm(i32),
+}
+
+/// Integer ALU operations (single cycle on RI5CY, except Div/Rem).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Srl,
+    Sra,
+    And,
+    Or,
+    Xor,
+    Slt,
+    Sltu,
+    /// 32×32→32 multiply (single cycle on RI5CY).
+    Mul,
+    /// Signed divide (multi-cycle iterative).
+    Div,
+    /// Signed remainder (multi-cycle iterative).
+    Rem,
+    /// Xpulp `p.min` / `p.max` (signed).
+    Min,
+    Max,
+    /// Xpulp `p.abs`.
+    Abs,
+    /// Xpulp `p.mac`: rd += rs1 * rs2 (single cycle).
+    Mac,
+}
+
+/// Memory access width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemSize {
+    Word,
+    Half,
+    HalfU,
+    Byte,
+    ByteU,
+}
+
+/// Branch conditions (RV32I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BrCond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Ltu,
+    Geu,
+}
+
+/// Floating-point operations executed on the (possibly shared) FPU, the
+/// DIV-SQRT block, or — for moves/casts — the FPU's non-computational path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FpOp {
+    /// `fadd` / `vfadd`.
+    Add,
+    /// `fsub` / `vfsub`.
+    Sub,
+    /// `fmul` / `vfmul`.
+    Mul,
+    /// Fused multiply-accumulate, destination is the accumulator:
+    /// `rd = rs1 * rs2 + rd` (`fmadd` / `vfmac`). 2 flops/lane.
+    Mac,
+    /// Widening multi-format FMA: 16-bit `rs1 × rs2` + f32 `rd` → f32 `rd`
+    /// (`fmac.s.h`). Mode gives the source format. 2 flops.
+    MacWiden,
+    /// Expanding SIMD dot product `rd += rs1·rs2` with f32 accumulator
+    /// (`vfdotpex.s.{h,ah}`). 4 flops.
+    DotpWiden,
+    Min,
+    Max,
+    /// Comparison writing 0/1 (scalar) or lane masks (vector).
+    Cmp(CmpPred),
+    /// `fdiv` — executed on the shared iterative DIV-SQRT block.
+    Div,
+    /// `fsqrt` (rs2 ignored) — shared DIV-SQRT block.
+    Sqrt,
+    /// Sign injection: negate (`fsgnjn rd, rs1, rs1`).
+    Neg,
+    /// Sign injection: absolute value.
+    AbsF,
+    /// int → fp (`fcvt.X.w`).
+    FromInt,
+    /// fp → int, RTZ (`fcvt.w.X`).
+    ToInt,
+    /// f32 → 16-bit scalar (mode selects format) — `fcvt.h.s`.
+    CvtDown,
+    /// 16-bit scalar → f32 — `fcvt.s.h`.
+    CvtUp,
+    /// Cast-and-pack: two f32 sources → both lanes (`vfcpka.X.s`).
+    Cpka,
+    /// SIMD shuffle; `rs2` is an immediate-selected lane permutation 0..=3.
+    Shuffle,
+    /// Pack lane0 of rs1 and lane0 of rs2.
+    PackLo,
+    /// Pack lane1 of rs1 and lane1 of rs2.
+    PackHi,
+}
+
+impl FpOp {
+    /// Flops contributed per lane executed (FMA-class ops count 2).
+    pub fn flops_per_lane(&self) -> u64 {
+        match self {
+            FpOp::Add | FpOp::Sub | FpOp::Mul | FpOp::Min | FpOp::Max => 1,
+            FpOp::Mac | FpOp::MacWiden => 2,
+            // DotpWiden does 2 mults + 2 adds across its lanes; counted once
+            // at the instruction level (lanes() reports 1 for the accumulator
+            // view), so report 4 here.
+            FpOp::DotpWiden => 4,
+            FpOp::Div | FpOp::Sqrt => 1,
+            // Comparisons, moves, casts and packs are not counted as flops —
+            // matching how Gflop/s is accounted in the paper's benchmarks.
+            _ => 0,
+        }
+    }
+
+    /// True if the op runs on the shared iterative DIV-SQRT block instead of
+    /// the FPU datapath.
+    pub fn is_divsqrt(&self) -> bool {
+        matches!(self, FpOp::Div | FpOp::Sqrt)
+    }
+
+    /// True for lane permutations executed by the core's integer-SIMD ALU
+    /// (Xpulp `pv.shuffle` / `pv.pack*`), which never touch the FPU — they
+    /// count as integer instructions in the Table 3 intensities.
+    pub fn is_alu_class(&self) -> bool {
+        matches!(self, FpOp::Shuffle | FpOp::PackLo | FpOp::PackHi)
+    }
+
+    /// True if this op reads `rd` as an accumulator input.
+    pub fn reads_rd(&self) -> bool {
+        matches!(self, FpOp::Mac | FpOp::MacWiden | FpOp::DotpWiden)
+    }
+}
+
+/// One instruction. `Label`s have been resolved to absolute instruction
+/// indices by the [`super::builder::ProgramBuilder`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Insn {
+    /// Integer ALU op `rd = rs1 <op> rhs`.
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rhs: Operand },
+    /// Load immediate (`lui+addi` pair collapsed; 1 cycle).
+    Li { rd: Reg, imm: u32 },
+    /// Load `rd = mem[rs1 + offset]`; `post_inc != 0` adds Xpulp
+    /// post-increment addressing: `rs1 += post_inc` after the access.
+    Load { rd: Reg, base: Reg, offset: i32, post_inc: i32, size: MemSize },
+    /// Store `mem[rs1 + offset] = rs2`, with optional post-increment.
+    Store { rs: Reg, base: Reg, offset: i32, post_inc: i32, size: MemSize },
+    /// Conditional branch to absolute instruction index `target`.
+    Branch { cond: BrCond, rs1: Reg, rs2: Reg, target: u32 },
+    /// Unconditional jump.
+    Jump { target: u32 },
+    /// Xpulp hardware loop: execute the body `[start, end)` `count`(register)
+    /// times with zero-overhead back-edges (`lp.setup`).
+    HwLoop { count: Reg, start: u32, end: u32 },
+    /// Floating-point operation. `rs3` is only used by ops reading rd
+    /// implicitly via `reads_rd` (kept for clarity in traces).
+    Fp { op: FpOp, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg },
+    /// Event-unit barrier: sleep until all cores arrive (§3.1 Event Unit).
+    Barrier,
+    /// Terminate this core's execution.
+    End,
+}
+
+impl Insn {
+    /// True if the instruction is a load or store (memory intensity).
+    pub fn is_mem(&self) -> bool {
+        matches!(self, Insn::Load { .. } | Insn::Store { .. })
+    }
+
+    /// True if the instruction occupies the FPU or DIV-SQRT (FP intensity).
+    pub fn is_fp(&self) -> bool {
+        matches!(self, Insn::Fp { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_accounting() {
+        assert_eq!(FpOp::Add.flops_per_lane(), 1);
+        assert_eq!(FpOp::Mac.flops_per_lane(), 2);
+        assert_eq!(FpOp::DotpWiden.flops_per_lane(), 4);
+        assert_eq!(FpOp::Cpka.flops_per_lane(), 0);
+        assert_eq!(FpOp::Cmp(CmpPred::Lt).flops_per_lane(), 0);
+    }
+
+    #[test]
+    fn classification() {
+        assert!(FpOp::Div.is_divsqrt());
+        assert!(FpOp::Sqrt.is_divsqrt());
+        assert!(!FpOp::Mac.is_divsqrt());
+        assert!(FpOp::Mac.reads_rd());
+        assert!(!FpOp::Add.reads_rd());
+        let ld = Insn::Load { rd: 1, base: 2, offset: 0, post_inc: 4, size: MemSize::Word };
+        assert!(ld.is_mem() && !ld.is_fp());
+        let fp = Insn::Fp { op: FpOp::Add, mode: FpMode::F32, rd: 1, rs1: 2, rs2: 3 };
+        assert!(fp.is_fp() && !fp.is_mem());
+    }
+}

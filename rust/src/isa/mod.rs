@@ -1,0 +1,11 @@
+//! Instruction set + program builder for the simulated RI5CY-like cores.
+//!
+//! See [`insn`] for the instruction definitions (RV32IM + Xpulp post-
+//! increment / hardware loops + FPnew smallFloat scalar/SIMD ops) and
+//! [`builder`] for the assembler-style DSL the benchmark kernels use.
+
+pub mod builder;
+pub mod insn;
+
+pub use builder::{regs, Program, ProgramBuilder};
+pub use insn::{AluOp, BrCond, FpOp, Insn, MemSize, Operand, Reg};

@@ -1,0 +1,265 @@
+//! CONV — 2D 3×3 convolution over a W×H image, "the most computing-
+//! intensive kernel in CNN workloads" (§5.2). Output rows are partitioned
+//! statically across cores.
+//!
+//! * **Scalar**: per output pixel, a 3-row loop of `p.lw pixel + p.lw coef +
+//!   fmac` triples (coefficients re-streamed from TCDM — the Table 3
+//!   0.33 / 0.67 mix).
+//! * **Vector**: the low-memory-intensity variant of Table 3 (0.28 / 0.29):
+//!   the six packed coefficient words are *register-resident* (loaded once
+//!   per core), each image row contributes two aligned pair loads, and the
+//!   misaligned pairs are built with `pv.shuffle`/`pv.pack`; expanding dot
+//!   products accumulate two neighbouring outputs in binary32.
+
+use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use crate::config::ClusterConfig;
+use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::testutil::Rng;
+use crate::transfp::{cast, scalar, simd, FpMode, FpSpec};
+
+/// Lane-0 widening FMA mirror (`fmac.s.h`): acc32 += a.lane0 · b.lane0.
+fn scalar_fma_widen(spec: &FpSpec, a: u32, b: u32, acc: u32) -> u32 {
+    scalar::fma_widen(spec, a as u16, b as u16, acc)
+}
+
+/// Build the CONV workload: 3×3 kernel over a `w`×`h` image (valid region).
+pub fn build(variant: Variant, cfg: &ClusterConfig, w: usize, h: usize) -> Workload {
+    assert!(w % 2 == 0 && w >= 8 && h >= 4);
+    match variant {
+        Variant::Scalar => build_scalar(cfg, w, h),
+        Variant::Vector(_) => build_vector(variant, cfg, w, h),
+    }
+}
+
+fn gen_inputs(w: usize, h: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(0x434F_4E56); // "CONV"
+    let img = rng.f32_vec(w * h, -1.0, 1.0);
+    // Sharpen-like 3×3 kernel.
+    let k = vec![0.0625f32, 0.125, 0.0625, 0.125, 0.25, 0.125, 0.0625, 0.125, 0.0625];
+    (img, k)
+}
+
+fn build_scalar(cfg: &ClusterConfig, w: usize, h: usize) -> Workload {
+    let (ow, oh) = (w - 2, h - 2);
+    let mut al = Alloc::new(cfg);
+    let img_base = al.f32s(w * h);
+    let k_base = al.f32s(9);
+    let out_base = al.f32s(ow * oh);
+    let (img, k) = gen_inputs(w, h);
+
+    // Host mirror: rows outer, cols inner, f32 FMA in (r, c) order.
+    let mut expected = vec![0.0f64; ow * oh];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc = 0.0f32;
+            for r in 0..3 {
+                for c in 0..3 {
+                    acc = k[r * 3 + c].mul_add(img[(oy + r) * w + ox + c], acc);
+                }
+            }
+            expected[oy * ow + ox] = acc as f64;
+        }
+    }
+
+    let mut p = ProgramBuilder::new("conv-scalar");
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    p.li(24, oh as u32); // output rows
+    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+    p.mul(13, id, 12);
+    p.add(14, 13, 12).imin(14, 14, 24);
+    p.li(15, img_base).li(16, k_base).li(17, out_base);
+    p.li(30, w as u32).li(31, ow as u32);
+    p.bge(13, 14, "done");
+    p.label("row");
+    {
+        // out_ptr = out + 4*ow*oy ; in row base = img + 4*w*oy
+        p.mul(25, 13, 31).slli(25, 25, 2).add(23, 25, 17);
+        p.mul(25, 13, 30).slli(25, 25, 2).add(22, 25, 15);
+        p.mv(20, 22); // walking pixel ptr (top-left of the window)
+        p.li(18, 0); // ox
+        p.label("col");
+        {
+            // 3×3 fully unrolled with static offsets (the natural compiler
+            // lowering for a constant-size window) — pure lw/lw/fmac mix.
+            p.li(28, 0); // acc
+            for r in 0..3i32 {
+                for c in 0..3i32 {
+                    p.lw(26, 20, (r * w as i32 + c) * 4);
+                    p.lw(27, 16, (r * 3 + c) * 4);
+                    p.fmac(FpMode::F32, 28, 27, 26);
+                }
+            }
+            p.addi(20, 20, 4); // slide the window
+            p.sw_pi(28, 23, 4);
+            p.addi(18, 18, 1);
+            p.blt(18, 31, "col");
+        }
+        p.addi(13, 13, 1);
+        p.blt(13, 14, "row");
+    }
+    p.label("done");
+    p.barrier();
+    p.end();
+
+    Workload {
+        name: "CONV-scalar".into(),
+        program: p.build(),
+        stage: vec![(img_base, Staged::F32(img)), (k_base, Staged::F32(k))],
+        out_addr: out_base,
+        out_len: ow * oh,
+        out_fmt: OutFmt::F32,
+        expected,
+        rtol: 0.0,
+        atol: 1e-12,
+    }
+}
+
+fn build_vector(variant: Variant, cfg: &ClusterConfig, w: usize, h: usize) -> Workload {
+    let spec = spec_of(variant);
+    let mode = variant.mode();
+    let (ow, oh) = (w - 2, h - 2);
+    let ow_pairs = ow / 2;
+    let mut al = Alloc::new(cfg);
+    let img_base = al.halves(w * h);
+    let k_base = al.halves(12); // 3 rows × 2 packed words (c0c1, c2·pad)
+    let out_base = al.halves(ow_pairs * 2 * oh);
+    let (img, k) = gen_inputs(w, h);
+    let imq = quantize16(spec, &img);
+    // Pack coefficients row-wise: (k0,k1), (k2,0) per row.
+    let mut kp = Vec::new();
+    for r in 0..3 {
+        kp.extend([k[r * 3], k[r * 3 + 1], k[r * 3 + 2], 0.0]);
+    }
+    let kq = quantize16(spec, &kp);
+
+    // Host mirror. Per output pair (ox even): for each window row:
+    //   w0 = (p0,p1), w1 = (p2,p3) aligned pair loads;
+    //   acc0 += k01·w0 + k2x·(p2,·) ; acc1 += k01·(p1,p2) + k2x·(p3,·).
+    let imw = pack_words(&imq);
+    let kw = pack_words(&kq);
+    let row_w = w / 2;
+    let mut expected = vec![0.0f64; ow_pairs * 2 * oh];
+    for oy in 0..oh {
+        for op in 0..ow_pairs {
+            let mut acc0 = 0u32;
+            let mut acc1 = 0u32;
+            for r in 0..3 {
+                let base = (oy + r) * row_w + op;
+                let w0 = imw[base];
+                let w1 = imw[base + 1];
+                let k01 = kw[r * 2];
+                let k2x = kw[r * 2 + 1];
+                let mid = simd::vpack_lo(simd::vshuffle(w0, 0b11), w1); // (p1,p2)
+                let hi3 = simd::vshuffle(w1, 0b01); // (p3,·)
+                acc0 = simd::vdotp_widen(spec, k01, w0, acc0);
+                // Third column element: widening multi-format FMA on lane 0
+                // (c2·p2) — not a dot product with a wasted zero lane.
+                acc0 = scalar_fma_widen(spec, k2x, w1, acc0);
+                acc1 = simd::vdotp_widen(spec, k01, mid, acc1);
+                acc1 = scalar_fma_widen(spec, k2x, hi3, acc1);
+            }
+            let cpk = cast::cpka(spec, acc0, acc1);
+            let (lo, hi) = simd::unpack2(cpk);
+            expected[oy * ow_pairs * 2 + 2 * op] = spec.to_f64(lo);
+            expected[oy * ow_pairs * 2 + 2 * op + 1] = spec.to_f64(hi);
+        }
+    }
+
+    let mut p = ProgramBuilder::new("conv-vector");
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    p.li(24, oh as u32);
+    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+    p.mul(13, id, 12);
+    p.add(14, 13, 12).imin(14, 14, 24);
+    p.li(15, img_base).li(17, out_base);
+    p.li(30, row_w as u32).li(31, ow_pairs as u32);
+    // Register-resident packed coefficients: r1..r6 (loaded once — this is
+    // what pushes the memory intensity down to Table 3's 0.29).
+    p.li(25, k_base);
+    for i in 0..6u8 {
+        p.lw_pi(1 + i, 25, 4);
+    }
+    p.bge(13, 14, "done");
+    p.label("row");
+    {
+        p.mul(25, 13, 31).slli(25, 25, 2).add(23, 25, 17); // out row ptr (1 word per output pair)
+        p.mul(25, 13, 30).slli(25, 25, 2).add(22, 25, 15); // img row base
+        p.li(18, 0); // output pair index
+        p.label("col");
+        {
+            p.slli(20, 18, 2).add(20, 20, 22); // window ptr
+            p.li(27, 0); // acc0
+            p.li(28, 0); // acc1
+            let row_bytes = (row_w * 4) as i32;
+            for r in 0..3u8 {
+                let k01 = 1 + 2 * r; // coef regs r1..r6
+                let k2x = 2 + 2 * r;
+                p.lw(26, 20, 0); // w0
+                p.lw(29, 20, 4); // w1
+                if r < 2 {
+                    p.addi(20, 20, row_bytes); // next window row
+                }
+                p.vshuffle(7, 26, 0b11);
+                p.vpack_lo(7, 7, 29); // mid = (p1,p2)
+                p.vshuffle(8, 29, 0b01); // (p3,·)
+                p.fdotp(mode, 27, k01, 26);
+                p.fmac_widen(mode, 27, k2x, 29); // c2·p2 (lane 0, f32 acc)
+                p.fdotp(mode, 28, k01, 7);
+                p.fmac_widen(mode, 28, k2x, 8); // c2·p3
+            }
+            p.cpka(mode, 9, 27, 28);
+            p.sw_pi(9, 23, 4);
+            p.addi(18, 18, 1);
+            p.blt(18, 31, "col");
+        }
+        p.addi(13, 13, 1);
+        p.blt(13, 14, "row");
+    }
+    p.label("done");
+    p.barrier();
+    p.end();
+
+    Workload {
+        name: format!("CONV-vector-{}", if spec.exp_bits == 5 { "f16" } else { "bf16" }),
+        program: p.build(),
+        stage: vec![(img_base, Staged::U16(imq)), (k_base, Staged::U16(kq))],
+        out_addr: out_base,
+        out_len: ow_pairs * 2 * oh,
+        out_fmt: OutFmt::Pack16(spec),
+        expected,
+        rtol: 1e-9,
+        atol: 1e-12,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_exact() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let w = build(Variant::Scalar, &cfg, 16, 8);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn vector_exact() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let w = build(Variant::VEC, &cfg, 16, 8);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn vector_low_memory_intensity() {
+        // Table 3: CONV vector has a distinctly low memory intensity (0.29)
+        // thanks to register-resident coefficients.
+        let cfg = ClusterConfig::new(8, 8, 1);
+        let w = build(Variant::VEC, &cfg, 32, 32);
+        let (stats, _) = w.run(&cfg);
+        let mem = stats.aggregate().mem_intensity();
+        assert!(mem < 0.40, "vector CONV mem intensity = {mem}");
+    }
+}

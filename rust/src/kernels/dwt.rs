@@ -1,0 +1,357 @@
+//! DWT — multi-level discrete wavelet transform with a 4-tap (db2) filter
+//! bank: each level halves the signal through a low-pass/high-pass pair
+//! (feature extraction, §5.2).
+//!
+//! Parallelization follows the paper: data parallelism *within* each level,
+//! an event-unit **barrier between levels** (the sequential-stage structure
+//! that caps DWT's parallel speed-up around 8, §5.3.1).
+//!
+//! * **Scalar**: per output, the four taps share each sample load between
+//!   the LP and HP accumulators (`lw x + lw h + lw g + fmac + fmac`).
+//! * **Vector**: the (lo, hi) pair *is* the packed vector: each sample is
+//!   duplicated into both lanes with `pv.pack` and multiply-accumulated
+//!   against the packed (h[k], g[k]) coefficient table with `vfmac` — both
+//!   filter outputs per instruction.
+//!
+//! Output layout: `[approx_L | detail_L | detail_{L-1} | … | detail_1]`.
+
+use super::{quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use crate::config::ClusterConfig;
+use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::testutil::Rng;
+use crate::transfp::{simd, FpMode, FpSpec};
+
+const TAPS: usize = 4;
+
+/// db2 filter bank (orthonormal pair), low-pass h and high-pass g.
+fn filters() -> ([f32; 4], [f32; 4]) {
+    let h = [0.482_962_9f32, 0.836_516_3, 0.224_143_87, -0.129_409_52];
+    let g = [h[3], -h[2], h[1], -h[0]];
+    (h, g)
+}
+
+/// Build the DWT workload: `n`-sample signal, `levels` decomposition levels.
+pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize, levels: usize) -> Workload {
+    assert!(n % (1 << levels) == 0 && levels >= 1);
+    match variant {
+        Variant::Scalar => build_scalar(cfg, n, levels),
+        Variant::Vector(_) => build_vector(variant, cfg, n, levels),
+    }
+}
+
+fn gen_signal(n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(0x4457_5400); // "DWT"
+    (0..n)
+        .map(|i| {
+            let t = i as f32 / 64.0;
+            (6.283 * t).sin() * 0.5 + rng.f32_in(-0.2, 0.2)
+        })
+        .collect()
+}
+
+/// Result layout offsets: (detail offset per level, final approx length).
+/// Level l (1-based) produces n/2^l detail coefficients at offset n/2^l.
+pub fn detail_offsets(n: usize, levels: usize) -> (Vec<usize>, usize) {
+    let offs = (1..=levels).map(|l| n >> l).collect();
+    (offs, n >> levels)
+}
+
+fn build_scalar(cfg: &ClusterConfig, n: usize, levels: usize) -> Workload {
+    let mut al = Alloc::new(cfg);
+    // Ping-pong work buffers (padded by TAPS for the zero-extended edge),
+    // plus the result buffer.
+    let w0_base = al.f32s(n + TAPS);
+    let w1_base = al.f32s(n + TAPS);
+    let r_base = al.f32s(n);
+    let x = gen_signal(n);
+    let (h, g) = filters();
+
+    // Host mirror (f32 FMA, tap order, zero-extended edges).
+    let mut expected = vec![0.0f64; n];
+    {
+        let mut cur: Vec<f32> = x.clone();
+        for l in 1..=levels {
+            let half = cur.len() / 2;
+            let get = |i: usize| if i < cur.len() { cur[i] } else { 0.0 };
+            let mut approx = vec![0.0f32; half];
+            for i in 0..half {
+                let (mut lo, mut hi) = (0.0f32, 0.0f32);
+                for k in 0..TAPS {
+                    let xv = get(2 * i + k);
+                    lo = h[k].mul_add(xv, lo);
+                    hi = g[k].mul_add(xv, hi);
+                }
+                approx[i] = lo;
+                expected[(n >> l) + i] = hi as f64;
+            }
+            cur = approx;
+        }
+        for (i, a) in cur.iter().enumerate() {
+            expected[i] = *a as f64;
+        }
+    }
+
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let mut p = ProgramBuilder::new("dwt-scalar");
+    p.li(15, w0_base).li(16, w1_base).li(17, r_base);
+    p.li(4, h_base_addr(w0_base, n)); // h table (appended after buffers; see staging)
+    p.li(9, h_base_addr(w0_base, n) + (TAPS as u32) * 4); // g table
+    p.li(24, (n / 2) as u32); // outputs at current level
+    for l in 1..=levels {
+        // Split this level's outputs across cores.
+        p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+        p.mul(13, id, 12);
+        p.add(14, 13, 12).imin(14, 14, 24);
+        let lvl = format!("lvl{l}_");
+        p.bge(13, 14, &format!("{lvl}skip"));
+        // Walking pointers: x (2 samples per output), approx out, detail out.
+        p.slli(20, 13, 3).add(20, 20, 15); // x_ptr = in + 8·start
+        p.slli(25, 13, 2);
+        p.add(29, 25, 16); // approx ptr = out + 4·start
+        p.add(23, 25, 17).addi(23, 23, ((n >> l) * 4) as i32); // detail ptr
+        p.label(&format!("{lvl}out"));
+        {
+            // Taps fully unrolled with static offsets (the compiler's
+            // obvious lowering for a fixed 4-tap filter).
+            p.li(27, 0); // lo acc
+            p.li(28, 0); // hi acc
+            for k in 0..TAPS as i32 {
+                p.lw(26, 20, 4 * k);
+                p.lw(5, 4, 4 * k);
+                p.lw(6, 9, 4 * k);
+                p.fmac(FpMode::F32, 27, 5, 26);
+                p.fmac(FpMode::F32, 28, 6, 26);
+            }
+            p.addi(20, 20, 8);
+            p.sw_pi(27, 29, 4);
+            p.sw_pi(28, 23, 4);
+            p.addi(13, 13, 1);
+            p.blt(13, 14, &format!("{lvl}out"));
+        }
+        p.label(&format!("{lvl}skip"));
+        // Core 0 zero-pads the TAPS samples after this level's approx so the
+        // next level sees a zero-extended edge (the ping-pong buffer holds
+        // stale data there otherwise).
+        p.bne(id, regs::ZERO, &format!("{lvl}nopad"));
+        let half = n >> l;
+        for k in 0..TAPS {
+            p.sw(regs::ZERO, 16, (4 * (half + k)) as i32);
+        }
+        p.label(&format!("{lvl}nopad"));
+        p.barrier(); // level boundary
+        // Swap buffers, halve the level size.
+        p.mv(25, 15).mv(15, 16).mv(16, 25);
+        p.srli(24, 24, 1);
+    }
+    // Copy the final approximation into r[0 .. n>>levels] (parallel).
+    let alen = (n >> levels) as u32;
+    p.li(24, alen);
+    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+    p.mul(13, id, 12);
+    p.add(14, 13, 12).imin(14, 14, 24);
+    p.bge(13, 14, "cp_skip");
+    p.label("cp");
+    p.slli(25, 13, 2);
+    p.add(20, 25, 15);
+    p.lw(26, 20, 0);
+    p.add(21, 25, 17);
+    p.sw(26, 21, 0);
+    p.addi(13, 13, 1);
+    p.blt(13, 14, "cp");
+    p.label("cp_skip");
+    p.barrier();
+    p.end();
+
+    // Stage: signal into w0 (padded with zeros), filters after the buffers.
+    let mut stage_sig = x.clone();
+    stage_sig.extend(vec![0.0f32; TAPS]);
+    let mut coefs = h.to_vec();
+    coefs.extend(g);
+    Workload {
+        name: "DWT-scalar".into(),
+        program: p.build(),
+        stage: vec![
+            (w0_base, Staged::F32(stage_sig)),
+            (w1_base, Staged::F32(vec![0.0; n + TAPS])),
+            (h_base_addr(w0_base, n), Staged::F32(coefs)),
+        ],
+        out_addr: r_base,
+        out_len: n,
+        out_fmt: OutFmt::F32,
+        expected,
+        rtol: 0.0,
+        atol: 1e-12,
+    }
+}
+
+/// The filter tables live after the three n-sized buffers.
+fn h_base_addr(w0_base: u32, n: usize) -> u32 {
+    w0_base + ((n + TAPS) * 2 * 4 + n * 4) as u32
+}
+
+fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize, levels: usize) -> Workload {
+    let spec: &'static FpSpec = spec_of(variant);
+    let mode = variant.mode();
+    let mut al = Alloc::new(cfg);
+    let w0_base = al.halves(n + TAPS);
+    let w1_base = al.halves(n + TAPS);
+    let r_base = al.halves(n);
+    let hg_base = al.halves(2 * TAPS);
+    let x = gen_signal(n);
+    let (h, g) = filters();
+    let xq = {
+        let mut q = quantize16(spec, &x);
+        q.extend(vec![0u16; TAPS]);
+        q
+    };
+    // Packed (h[k], g[k]) table.
+    let hgq: Vec<u16> = (0..TAPS)
+        .flat_map(|k| {
+            [spec.from_f64(h[k] as f64), spec.from_f64(g[k] as f64)]
+        })
+        .collect();
+
+    // Host mirror: vfmac on (lo,hi) accumulator pairs, 16-bit arithmetic.
+    let mut expected = vec![0.0f64; n];
+    {
+        let mut cur: Vec<u16> = xq[..n].to_vec();
+        for l in 1..=levels {
+            let half = cur.len() / 2;
+            let get = |i: usize| if i < cur.len() { cur[i] } else { 0 };
+            let mut approx = vec![0u16; half];
+            for i in 0..half {
+                let mut acc = 0u32; // packed (lo, hi)
+                for k in 0..TAPS {
+                    let xd = simd::pack2(get(2 * i + k), get(2 * i + k));
+                    let hg = simd::pack2(hgq[2 * k], hgq[2 * k + 1]);
+                    acc = simd::vmac(spec, xd, hg, acc);
+                }
+                let (lo, hi) = simd::unpack2(acc);
+                approx[i] = lo;
+                expected[(n >> l) + i] = spec.to_f64(hi);
+            }
+            cur = approx;
+        }
+        for (i, a) in cur.iter().enumerate() {
+            expected[i] = spec.to_f64(*a);
+        }
+    }
+
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let mut p = ProgramBuilder::new("dwt-vector");
+    p.li(15, w0_base).li(16, w1_base).li(17, r_base);
+    p.li(24, (n / 2) as u32);
+    for l in 1..=levels {
+        p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+        p.mul(13, id, 12);
+        p.add(14, 13, 12).imin(14, 14, 24);
+        let lvl = format!("lvl{l}_");
+        p.bge(13, 14, &format!("{lvl}skip"));
+        p.li(21, hg_base);
+        p.slli(20, 13, 2).add(20, 20, 15); // sample ptr (2 lanes per output)
+        p.slli(25, 13, 1);
+        p.add(29, 25, 16); // approx lane ptr
+        p.add(23, 25, 17).addi(23, 23, ((n >> l) * 2) as i32); // detail ptr
+        p.label(&format!("{lvl}out"));
+        {
+            p.li(27, 0); // (lo,hi) accumulator pair
+            // Unrolled taps: lh sample, pv.pack duplicate, vfmac against the
+            // packed (h[k], g[k]) table — both filters per instruction.
+            for k in 0..TAPS as i32 {
+                p.lh(26, 20, 2 * k);
+                p.vpack_lo(26, 26, 26);
+                p.lw(5, 21, 4 * k);
+                p.fmac(mode, 27, 26, 5);
+            }
+            p.addi(20, 20, 4);
+            // Store lo lane → approx, hi lane → detail.
+            p.sh(27, 29, 0);
+            p.addi(29, 29, 2);
+            p.vshuffle(27, 27, 0b01); // hi → low lane
+            p.sh(27, 23, 0);
+            p.addi(23, 23, 2);
+            p.addi(13, 13, 1);
+            p.blt(13, 14, &format!("{lvl}out"));
+        }
+        p.label(&format!("{lvl}skip"));
+        // Zero-pad the edge for the next level (see the scalar variant).
+        p.bne(id, regs::ZERO, &format!("{lvl}nopad"));
+        let half = n >> l;
+        for k in 0..TAPS {
+            p.sh(regs::ZERO, 16, (2 * (half + k)) as i32);
+        }
+        p.label(&format!("{lvl}nopad"));
+        p.barrier();
+        p.mv(25, 15).mv(15, 16).mv(16, 25);
+        p.srli(24, 24, 1);
+    }
+    // Copy final approx lanes into r[0..].
+    let alen = (n >> levels) as u32;
+    p.li(24, alen);
+    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+    p.mul(13, id, 12);
+    p.add(14, 13, 12).imin(14, 14, 24);
+    p.bge(13, 14, "cp_skip");
+    p.label("cp");
+    p.slli(25, 13, 1);
+    p.add(20, 25, 15);
+    p.lh(26, 20, 0);
+    p.add(21, 25, 17);
+    p.sh(26, 21, 0);
+    p.addi(13, 13, 1);
+    p.blt(13, 14, "cp");
+    p.label("cp_skip");
+    p.barrier();
+    p.end();
+
+    Workload {
+        name: format!("DWT-vector-{}", if spec.exp_bits == 5 { "f16" } else { "bf16" }),
+        program: p.build(),
+        stage: vec![
+            (w0_base, Staged::U16(xq)),
+            (w1_base, Staged::U16(vec![0; n + TAPS])),
+            (hg_base, Staged::U16(hgq)),
+        ],
+        out_addr: r_base,
+        out_len: n,
+        out_fmt: OutFmt::Pack16(spec),
+        expected,
+        rtol: 1e-9,
+        atol: 1e-12,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_exact_multicore() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let w = build(Variant::Scalar, &cfg, 64, 3);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+        let (_, o1) = w.run_on(&cfg, 1);
+        w.verify(&o1).unwrap();
+    }
+
+    #[test]
+    fn vector_exact() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let w = build(Variant::VEC, &cfg, 64, 3);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn barriers_limit_parallel_speedup() {
+        // §5.3.1: DWT saturates well below ideal because of per-level
+        // barriers and halving work.
+        let cfg = ClusterConfig::new(16, 16, 1);
+        let w = build(Variant::Scalar, &cfg, 512, 3);
+        let (s1, _) = w.run_on(&cfg, 1);
+        let (s16, _) = w.run_on(&cfg, 16);
+        let speedup = s1.total_cycles as f64 / s16.total_cycles as f64;
+        assert!(speedup > 4.0 && speedup < 13.0, "DWT speedup = {speedup}");
+    }
+}

@@ -1,0 +1,351 @@
+//! FFT — decimation-in-frequency radix-2 FFT over N complex points (§5.2).
+//!
+//! Stage-level parallelism: the butterflies of each stage are split across
+//! cores with an event-unit barrier between stages. The output is left in
+//! the natural DIF (bit-reversed) order, as is customary for convolution /
+//! spectral-energy pipelines that never materialize the reordered spectrum.
+//!
+//! * **Scalar**: interleaved (re, im) pairs; the butterfly is
+//!   `u' = u + v`, `v' = (u − v)·W` with the 7-op complex multiply the
+//!   paper quotes for the scalar variant.
+//! * **Vector**: one complex value *is* one packed (re, im) register; add /
+//!   subtract map 1:1 onto `vfadd`/`vfsub`, and the complex multiply is the
+//!   10-op shuffle + `vfmul`/`vfadd`/`vfsub` sequence of §5.3.1 — which is
+//!   exactly why the paper caps FFT's vectorization gain at ~1.43×.
+
+use super::{quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use crate::config::ClusterConfig;
+use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::testutil::Rng;
+use crate::transfp::{simd, FpMode, FpSpec};
+
+/// Build the FFT workload over `n` complex points (power of two).
+pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
+    assert!(n.is_power_of_two() && n >= 8);
+    match variant {
+        Variant::Scalar => build_scalar(cfg, n),
+        Variant::Vector(_) => build_vector(variant, cfg, n),
+    }
+}
+
+fn gen_signal(n: usize) -> Vec<f32> {
+    // Interleaved (re, im): a two-tone signal with noise, scaled to keep
+    // f16 magnitudes comfortable across all log2(n) growth stages.
+    let mut rng = Rng::new(0x4646_5400); // "FFT"
+    let mut v = Vec::with_capacity(2 * n);
+    for i in 0..n {
+        let t = i as f32;
+        let re = 0.25 * (6.283 * 8.0 * t / n as f32).sin()
+            + 0.125 * (6.283 * 21.0 * t / n as f32).cos()
+            + rng.f32_in(-0.05, 0.05);
+        v.push(re);
+        v.push(0.0);
+    }
+    v
+}
+
+/// Twiddle table W_n^k = exp(-2πik/n), k < n/2, interleaved (re, im), f32.
+fn twiddles(n: usize) -> Vec<f32> {
+    (0..n / 2)
+        .flat_map(|k| {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            [ang.cos() as f32, ang.sin() as f32]
+        })
+        .collect()
+}
+
+fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
+    let mut al = Alloc::new(cfg);
+    let x_base = al.f32s(2 * n);
+    let w_base = al.f32s(n);
+    let x = gen_signal(n);
+    let tw = twiddles(n);
+
+    // Host mirror: DIF in the same op order (f32; fmul/fsub/fmac pattern).
+    let expected = {
+        let mut d: Vec<f32> = x.clone();
+        let stages = n.trailing_zeros() as usize;
+        for s in 0..stages {
+            let half = n >> (s + 1);
+            let groups = 1 << s;
+            for grp in 0..groups {
+                let base = grp * (n >> s);
+                for j in 0..half {
+                    let (iu, iv) = (base + j, base + j + half);
+                    let (ur, ui) = (d[2 * iu], d[2 * iu + 1]);
+                    let (vr, vi) = (d[2 * iv], d[2 * iv + 1]);
+                    let (wr, wi) = (tw[2 * (j * groups)], tw[2 * (j * groups) + 1]);
+                    let (tr, ti) = (ur - vr, ui - vi);
+                    d[2 * iu] = ur + vr;
+                    d[2 * iu + 1] = ui + vi;
+                    // 5-op complex multiply (fmul, fmul, fsub, fmul, fmac).
+                    let m1 = ti * wi;
+                    let re = tr * wr - m1;
+                    let m2 = tr * wi;
+                    let im = ti.mul_add(wr, m2);
+                    d[2 * iv] = re;
+                    d[2 * iv + 1] = im;
+                }
+            }
+        }
+        d.iter().map(|&v| v as f64).collect::<Vec<f64>>()
+    };
+
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let mut p = ProgramBuilder::new("fft-scalar");
+    p.li(15, x_base).li(16, w_base);
+    let stages = n.trailing_zeros() as usize;
+    for s in 0..stages {
+        let half = (n >> (s + 1)) as u32; // butterflies per group
+        let groups = 1u32 << s;
+        let total = half * groups; // total butterflies this stage = n/2
+        let _ = total;
+        // Each core takes a slice of the flat butterfly index b ∈ [0, n/2):
+        // grp = b / half, j = b % half (divisions strength-reduced to shifts
+        // since half is a power of two).
+        let half_shift = half.trailing_zeros();
+        p.li(24, (n / 2) as u32);
+        p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+        p.mul(13, id, 12);
+        p.add(14, 13, 12).imin(14, 14, 24);
+        let lbl = format!("s{s}_");
+        p.bge(13, 14, &format!("{lbl}skip"));
+        p.label(&format!("{lbl}bf"));
+        {
+            // j = b & (half-1); grp = b >> half_shift
+            p.andi(18, 13, (half - 1) as i32);
+            p.srli(20, 13, half_shift as i32);
+            // iu = grp*(n>>s) + j ; iv = iu + half
+            p.slli(20, 20, (n >> s).trailing_zeros() as i32);
+            p.add(20, 20, 18);
+            // u_ptr = x + 8*iu ; v_ptr = u_ptr + 8*half
+            p.slli(20, 20, 3).add(20, 20, 15);
+            p.addi(21, 20, (8 * half) as i32);
+            // w_ptr = w + 8*(j*groups)
+            p.slli(22, 18, (3 + s) as i32).add(22, 22, 16);
+            // Loads.
+            p.lw(5, 20, 0); // ur
+            p.lw(6, 20, 4); // ui
+            p.lw(7, 21, 0); // vr
+            p.lw(8, 21, 4); // vi
+            p.lw(26, 22, 0); // wr
+            p.lw(27, 22, 4); // wi
+            // u' = u + v (2 ops); t = u − v (2 ops).
+            p.fadd(FpMode::F32, 28, 5, 7);
+            p.fadd(FpMode::F32, 29, 6, 8);
+            p.fsub(FpMode::F32, 5, 5, 7);
+            p.fsub(FpMode::F32, 6, 6, 8);
+            p.sw(28, 20, 0);
+            p.sw(29, 20, 4);
+            // v' = t·W — the 5-op complex multiply (7 cycles with deps).
+            p.fmul(FpMode::F32, 30, 6, 27); // m1 = ti*wi
+            p.fmul(FpMode::F32, 31, 5, 26); // tr*wr
+            p.fsub(FpMode::F32, 31, 31, 30); // re
+            p.fmul(FpMode::F32, 30, 5, 27); // m2 = tr*wi
+            p.fmac(FpMode::F32, 30, 6, 26); // im = ti*wr + m2
+            p.sw(31, 21, 0);
+            p.sw(30, 21, 4);
+            p.addi(13, 13, 1);
+            p.blt(13, 14, &format!("{lbl}bf"));
+        }
+        p.label(&format!("{lbl}skip"));
+        p.barrier();
+    }
+    p.end();
+
+    Workload {
+        name: "FFT-scalar".into(),
+        program: p.build(),
+        stage: vec![(x_base, Staged::F32(x)), (w_base, Staged::F32(tw))],
+        out_addr: x_base,
+        out_len: 2 * n,
+        out_fmt: OutFmt::F32,
+        expected,
+        rtol: 0.0,
+        atol: 1e-12,
+    }
+}
+
+fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
+    let spec: &'static FpSpec = spec_of(variant);
+    let mode = variant.mode();
+    let mut al = Alloc::new(cfg);
+    let x_base = al.halves(2 * n); // one word per complex point
+    let w_base = al.halves(n);
+    let x = gen_signal(n);
+    let tw = twiddles(n);
+    let xq = quantize16(spec, &x);
+    let twq = quantize16(spec, &tw);
+
+    // Host mirror: packed complex butterflies (vadd/vsub/vmul + shuffles).
+    let expected = {
+        let mut d: Vec<u32> =
+            xq.chunks(2).map(|c| simd::pack2(c[0], c[1])).collect();
+        let w: Vec<u32> = twq.chunks(2).map(|c| simd::pack2(c[0], c[1])).collect();
+        let stages = n.trailing_zeros() as usize;
+        for s in 0..stages {
+            let half = n >> (s + 1);
+            let groups = 1 << s;
+            for grp in 0..groups {
+                let base = grp * (n >> s);
+                for j in 0..half {
+                    let (iu, iv) = (base + j, base + j + half);
+                    let (u, v) = (d[iu], d[iv]);
+                    let wv = w[j * groups];
+                    d[iu] = simd::vadd(spec, u, v);
+                    let t = simd::vsub(spec, u, v);
+                    d[iv] = cplx_mul_packed(spec, t, wv);
+                }
+            }
+        }
+        d.iter()
+            .flat_map(|&wv| {
+                let (re, im) = simd::unpack2(wv);
+                [spec.to_f64(re), spec.to_f64(im)]
+            })
+            .collect::<Vec<f64>>()
+    };
+
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let mut p = ProgramBuilder::new("fft-vector");
+    p.li(15, x_base).li(16, w_base);
+    let stages = n.trailing_zeros() as usize;
+    for s in 0..stages {
+        let half = (n >> (s + 1)) as u32;
+        let half_shift = half.trailing_zeros();
+        p.li(24, (n / 2) as u32);
+        p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+        p.mul(13, id, 12);
+        p.add(14, 13, 12).imin(14, 14, 24);
+        let lbl = format!("s{s}_");
+        p.bge(13, 14, &format!("{lbl}skip"));
+        p.label(&format!("{lbl}bf"));
+        {
+            p.andi(18, 13, (half - 1) as i32);
+            p.srli(20, 13, half_shift as i32);
+            p.slli(20, 20, (n >> s).trailing_zeros() as i32);
+            p.add(20, 20, 18);
+            p.slli(20, 20, 2).add(20, 20, 15); // u_ptr (4 bytes per complex)
+            p.addi(21, 20, (4 * half) as i32); // v_ptr
+            p.slli(22, 18, (2 + s) as i32).add(22, 22, 16); // w_ptr
+            p.lw(5, 20, 0); // u
+            p.lw(6, 21, 0); // v
+            p.lw(7, 22, 0); // W
+            p.fadd(mode, 8, 5, 6); // u' both lanes
+            p.fsub(mode, 9, 5, 6); // t
+            p.sw(8, 20, 0);
+            // Complex multiply t·W — the 10-op §5.3.1 sequence.
+            p.vshuffle(26, 7, 0b01); // (wi, wr)
+            p.fmul(mode, 27, 9, 7); // (tr·wr, ti·wi)
+            p.fmul(mode, 28, 9, 26); // (tr·wi, ti·wr)
+            p.vshuffle(29, 27, 0b01);
+            p.fsub(mode, 27, 27, 29); // lane0 = re
+            p.vshuffle(29, 28, 0b01);
+            p.fadd(mode, 28, 28, 29); // lane0 = im
+            p.vpack_lo(27, 27, 28); // (re, im)
+            p.sw(27, 21, 0);
+            p.addi(13, 13, 1);
+            p.blt(13, 14, &format!("{lbl}bf"));
+        }
+        p.label(&format!("{lbl}skip"));
+        p.barrier();
+    }
+    p.end();
+
+    Workload {
+        name: format!("FFT-vector-{}", if spec.exp_bits == 5 { "f16" } else { "bf16" }),
+        program: p.build(),
+        stage: vec![(x_base, Staged::U16(xq)), (w_base, Staged::U16(twq))],
+        out_addr: x_base,
+        out_len: 2 * n,
+        out_fmt: OutFmt::Pack16(spec),
+        expected,
+        rtol: 1e-9,
+        atol: 1e-12,
+    }
+}
+
+/// Packed complex multiply with the same rounding steps as the kernel.
+fn cplx_mul_packed(spec: &FpSpec, t: u32, w: u32) -> u32 {
+    let wsw = simd::vshuffle(w, 0b01);
+    let m1 = simd::vmul(spec, t, w); // (tr·wr, ti·wi)
+    let m2 = simd::vmul(spec, t, wsw); // (tr·wi, ti·wr)
+    let re = simd::vsub(spec, m1, simd::vshuffle(m1, 0b01));
+    let im = simd::vadd(spec, m2, simd::vshuffle(m2, 0b01));
+    simd::vpack_lo(re, im)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference DFT for sanity (O(n²), f64).
+    fn dft(x: &[f32]) -> Vec<(f64, f64)> {
+        let n = x.len() / 2;
+        (0..n)
+            .map(|k| {
+                let mut re = 0.0f64;
+                let mut im = 0.0f64;
+                for t in 0..n {
+                    let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                    let (xr, xi) = (x[2 * t] as f64, x[2 * t + 1] as f64);
+                    re += xr * ang.cos() - xi * ang.sin();
+                    im += xr * ang.sin() + xi * ang.cos();
+                }
+                (re, im)
+            })
+            .collect()
+    }
+
+    fn bitrev(i: usize, bits: usize) -> usize {
+        let mut r = 0;
+        for b in 0..bits {
+            r |= ((i >> b) & 1) << (bits - 1 - b);
+        }
+        r
+    }
+
+    #[test]
+    fn scalar_exact_and_matches_dft() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let n = 32;
+        let w = build(Variant::Scalar, &cfg, n);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+        // Cross-check the mirror itself against an O(n²) DFT, undoing the
+        // bit-reversed order.
+        let x = gen_signal(n);
+        let spectrum = dft(&x);
+        let bits = n.trailing_zeros() as usize;
+        for k in 0..n {
+            let (er, ei) = spectrum[k];
+            let pos = bitrev(k, bits);
+            assert!(
+                (out[2 * pos] - er).abs() < 2e-3 && (out[2 * pos + 1] - ei).abs() < 2e-3,
+                "bin {k}: ({}, {}) vs ({er}, {ei})",
+                out[2 * pos],
+                out[2 * pos + 1]
+            );
+        }
+    }
+
+    #[test]
+    fn vector_exact_mirror() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let w = build(Variant::VEC, &cfg, 32);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn vector_gain_is_modest() {
+        // §5.3.1: the 10-cycle packed complex multiply caps the gain ≈1.43.
+        let cfg = ClusterConfig::new(8, 8, 1);
+        let ws = build(Variant::Scalar, &cfg, 128);
+        let wv = build(Variant::VEC, &cfg, 128);
+        let (ss, _) = ws.run(&cfg);
+        let (sv, _) = wv.run(&cfg);
+        let gain = ss.total_cycles as f64 / sv.total_cycles as f64;
+        assert!(gain > 1.05 && gain < 1.6, "FFT vector gain = {gain}");
+    }
+}

@@ -1,0 +1,217 @@
+//! FIR — finite impulse response filter, T taps over an N-sample window
+//! (data acquisition front-end, §5.2). Outputs are partitioned statically
+//! across cores (outer-loop data parallelism).
+//!
+//! * **Scalar**: inner tap loop of `p.lw ×2 + fmac` in a hardware loop —
+//!   Table 3's 0.32 / 0.65 intensity mix.
+//! * **Vector**: the paper's "advanced manual vectorization" (§5.3.1):
+//!   two adjacent outputs share each tap-pair load; the odd-aligned sample
+//!   pair is assembled with `pv.shuffle`/`pv.pack` from two aligned loads;
+//!   two expanding dot products accumulate in binary32; `vfcpka` packs the
+//!   result pair.
+
+use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use crate::config::ClusterConfig;
+use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::testutil::Rng;
+use crate::transfp::{cast, simd, FpMode};
+
+/// Build the FIR workload: `n` outputs of a `taps`-tap filter.
+pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize, taps: usize) -> Workload {
+    assert!(n % 2 == 0 && taps % 2 == 0);
+    match variant {
+        Variant::Scalar => build_scalar(cfg, n, taps),
+        Variant::Vector(_) => build_vector(variant, cfg, n, taps),
+    }
+}
+
+fn gen_inputs(n: usize, taps: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(0x4649_5200); // "FIR"
+    let x = rng.f32_vec(n + taps, -1.0, 1.0);
+    // Plausible band-pass-ish taps, bounded.
+    let h: Vec<f32> = (0..taps)
+        .map(|t| {
+            let w = (t as f32 + 0.5) / taps as f32;
+            (6.283 * 3.0 * w).sin() / (taps as f32 * w + 1.0)
+        })
+        .collect();
+    (x, h)
+}
+
+fn build_scalar(cfg: &ClusterConfig, n: usize, taps: usize) -> Workload {
+    let mut al = Alloc::new(cfg);
+    let x_base = al.f32s(n + taps);
+    let h_base = al.f32s(taps);
+    let y_base = al.f32s(n);
+    let (x, h) = gen_inputs(n, taps);
+
+    // Host mirror: same tap order, f32 FMA.
+    let expected: Vec<f64> = (0..n)
+        .map(|i| {
+            let mut acc = 0.0f32;
+            for t in 0..taps {
+                acc = h[t].mul_add(x[i + t], acc);
+            }
+            acc as f64
+        })
+        .collect();
+
+    let mut p = ProgramBuilder::new("fir-scalar");
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    p.li(24, n as u32);
+    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+    p.mul(13, id, 12); // start
+    p.add(14, 13, 12).imin(14, 14, 24); // end
+    p.li(15, x_base).li(16, h_base).li(17, y_base);
+    // y_ptr = y + 4*start; x walks from x + 4*start
+    p.slli(25, 13, 2).add(17, 17, 25);
+    p.bge(13, 14, "done");
+    p.label("out");
+    {
+        p.slli(20, 13, 2).add(20, 20, 15); // x_ptr = x + 4i
+        p.mv(21, 16); // h_ptr
+        p.li(28, 0); // acc
+        p.li(19, taps as u32);
+        p.hwloop(19);
+        p.lw_pi(26, 20, 4);
+        p.lw_pi(27, 21, 4);
+        p.fmac(FpMode::F32, 28, 27, 26);
+        p.hwloop_end();
+        p.sw_pi(28, 17, 4);
+        p.addi(13, 13, 1);
+        p.blt(13, 14, "out");
+    }
+    p.label("done");
+    p.barrier();
+    p.end();
+
+    Workload {
+        name: "FIR-scalar".into(),
+        program: p.build(),
+        stage: vec![(x_base, Staged::F32(x)), (h_base, Staged::F32(h))],
+        out_addr: y_base,
+        out_len: n,
+        out_fmt: OutFmt::F32,
+        expected,
+        rtol: 0.0,
+        atol: 1e-12,
+    }
+}
+
+fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize, taps: usize) -> Workload {
+    let spec = spec_of(variant);
+    let mode = variant.mode();
+    let mut al = Alloc::new(cfg);
+    let x_base = al.halves(n + taps + 2);
+    let h_base = al.halves(taps);
+    let y_base = al.halves(n);
+    let (x, h) = gen_inputs(n, taps);
+    let mut xq = quantize16(spec, &x);
+    xq.extend([0u16; 2]); // guard pair for the trailing misaligned load
+    let hq = quantize16(spec, &h);
+
+    // Host mirror: per output pair, tap pairs, two expanding dot products
+    // (even alignment direct, odd alignment via pack(w0.hi, w1.lo)).
+    let xw = pack_words(&xq);
+    let hw = pack_words(&hq);
+    let mut expected = vec![0.0f64; n];
+    for ip in 0..n / 2 {
+        let mut acc0 = 0u32;
+        let mut acc1 = 0u32;
+        for tp in 0..taps / 2 {
+            let hpair = hw[tp];
+            let w0 = xw[ip + tp];
+            let w1 = xw[ip + tp + 1];
+            let odd = simd::vpack_lo(simd::vshuffle(w0, 0b11), w1); // (w0.hi, w1.lo)
+            acc0 = simd::vdotp_widen(spec, hpair, w0, acc0);
+            acc1 = simd::vdotp_widen(spec, hpair, odd, acc1);
+        }
+        let cpk = cast::cpka(spec, acc0, acc1);
+        let (lo, hi) = simd::unpack2(cpk);
+        expected[2 * ip] = spec.to_f64(lo);
+        expected[2 * ip + 1] = spec.to_f64(hi);
+    }
+
+    let mut p = ProgramBuilder::new("fir-vector");
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let npairs = (n / 2) as u32;
+    p.li(24, npairs);
+    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+    p.mul(13, id, 12);
+    p.add(14, 13, 12).imin(14, 14, 24);
+    p.li(15, x_base).li(16, h_base).li(17, y_base);
+    p.slli(25, 13, 2).add(17, 17, 25); // y_ptr (one word per pair)
+    p.bge(13, 14, "done");
+    p.label("out");
+    {
+        p.slli(20, 13, 2).add(20, 20, 15); // x_ptr = x + 4·ip
+        p.mv(21, 16); // h_ptr
+        p.li(27, 0); // acc0
+        p.li(28, 0); // acc1
+        p.li(19, (taps / 2) as u32);
+        p.hwloop(19);
+        p.lw_pi(5, 21, 4); // h pair
+        p.lw_pi(6, 20, 4); // w0 (aligned)
+        p.lw(7, 20, 0); // w1 (next pair, re-read next iteration)
+        p.vshuffle(8, 6, 0b11); // (w0.hi, w0.hi)
+        p.vpack_lo(8, 8, 7); // odd pair (w0.hi, w1.lo)
+        p.fdotp(mode, 27, 5, 6);
+        p.fdotp(mode, 28, 5, 8);
+        p.hwloop_end();
+        p.cpka(mode, 9, 27, 28);
+        p.sw_pi(9, 17, 4);
+        p.addi(13, 13, 1);
+        p.blt(13, 14, "out");
+    }
+    p.label("done");
+    p.barrier();
+    p.end();
+
+    Workload {
+        name: format!("FIR-vector-{}", if spec.exp_bits == 5 { "f16" } else { "bf16" }),
+        program: p.build(),
+        stage: vec![(x_base, Staged::U16(xq)), (h_base, Staged::U16(hq))],
+        out_addr: y_base,
+        out_len: n,
+        out_fmt: OutFmt::Pack16(spec),
+        expected,
+        rtol: 1e-9,
+        atol: 1e-12,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_exact() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let w = build(Variant::Scalar, &cfg, 64, 16);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+        let (_, out1) = w.run_on(&cfg, 1);
+        w.verify(&out1).unwrap();
+    }
+
+    #[test]
+    fn vector_exact_both_formats() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        for v in [Variant::VEC, Variant::Vector(FpMode::VecBf16)] {
+            let w = build(v, &cfg, 64, 16);
+            let (_, out) = w.run(&cfg);
+            w.verify(&out).unwrap();
+        }
+    }
+
+    #[test]
+    fn vector_faster_than_scalar() {
+        let cfg = ClusterConfig::new(16, 16, 1);
+        let ws = build(Variant::Scalar, &cfg, 256, 32);
+        let wv = build(Variant::VEC, &cfg, 256, 32);
+        let (ss, _) = ws.run(&cfg);
+        let (sv, _) = wv.run(&cfg);
+        let speedup = ss.total_cycles as f64 / sv.total_cycles as f64;
+        assert!(speedup > 1.3 && speedup < 2.2, "FIR vector speedup = {speedup}");
+    }
+}

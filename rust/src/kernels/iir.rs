@@ -1,0 +1,375 @@
+//! IIR — order-2 (biquad) infinite impulse response filter over an
+//! N-sample stream (§5.2). The recursion `y[n] = w[n] + a1·y[n-1] +
+//! a2·y[n-2]` is the parallelism-limiting data dependency the paper
+//! discusses.
+//!
+//! * **Scalar**: two phases separated by a barrier — the feed-forward part
+//!   `w[n] = b0·x[n] + b1·x[n-1] + b2·x[n-2]` is data-parallel; the
+//!   feedback recursion runs *sequentially on core 0* (the "regions with
+//!   sequential execution" of §5.2 that cap IIR's speed-up).
+//! * **Vector**: the block formulation of recursive filters ([45]):
+//!   y-pairs are produced two at a time from the transformed coefficients
+//!
+//!   ```text
+//!   (y[n], y[n+1]) = M·(y[n-2], y[n-1]) + (w'[n], w'[n+1])
+//!   ```
+//!
+//!   where `M` and the modified feed-forward taps are computed offline (the
+//!   "algebraic transformations applied off-line" of §5.2). The recursion
+//!   over pairs is still sequential — the vector IIR's parallel section is
+//!   only its feed-forward phase, reproducing the paper's observation that
+//!   IIR is the worst-scaling benchmark.
+
+use super::{quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use crate::config::ClusterConfig;
+use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::testutil::Rng;
+use crate::transfp::{simd, FpMode, FpSpec};
+
+/// Biquad coefficients (stable low-pass; poles at 0.5 ± 0.3i).
+const B: [f32; 3] = [0.2929, 0.5858, 0.2929];
+const A: [f32; 2] = [1.0, -0.34]; // y += a1·y[n-1] + a2·y[n-2]
+
+/// Build the IIR workload over `n` samples.
+pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
+    assert!(n % 2 == 0);
+    match variant {
+        Variant::Scalar => build_scalar(cfg, n),
+        Variant::Vector(_) => build_vector(variant, cfg, n),
+    }
+}
+
+fn gen_signal(n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(0x4949_5200); // "IIR"
+    (0..n)
+        .map(|i| {
+            let t = i as f32 / 32.0;
+            0.5 * (6.283 * t).sin() + rng.f32_in(-0.25, 0.25)
+        })
+        .collect()
+}
+
+fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
+    let mut al = Alloc::new(cfg);
+    let x_base = al.f32s(n + 2); // two leading zeros (x[-1], x[-2])
+    let w_base = al.f32s(n + 2); // two leading zeros (y[-1], y[-2] workspace)
+    let y_base = al.f32s(n + 2);
+    let c_base = al.f32s(5); // b0 b1 b2 a1 a2
+    let x = gen_signal(n);
+
+    // Host mirror.
+    let mut expected = vec![0.0f64; n];
+    {
+        let xg = |i: i64| if i < 0 { 0.0f32 } else { x[i as usize] };
+        let mut w = vec![0.0f32; n];
+        for i in 0..n {
+            let mut acc = B[0] * xg(i as i64);
+            acc = B[1].mul_add(xg(i as i64 - 1), acc);
+            acc = B[2].mul_add(xg(i as i64 - 2), acc);
+            w[i] = acc;
+        }
+        let mut y1 = 0.0f32;
+        let mut y2 = 0.0f32;
+        for i in 0..n {
+            let mut acc = w[i];
+            acc = A[0].mul_add(y1, acc);
+            acc = A[1].mul_add(y2, acc);
+            expected[i] = acc as f64;
+            y2 = y1;
+            y1 = acc;
+        }
+    }
+
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let mut p = ProgramBuilder::new("iir-scalar");
+    p.li(15, x_base + 8).li(16, w_base + 8).li(17, y_base + 8);
+    p.li(4, c_base);
+    // Phase 1: parallel feed-forward.
+    p.li(24, n as u32);
+    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+    p.mul(13, id, 12);
+    p.add(14, 13, 12).imin(14, 14, 24);
+    p.lw(5, 4, 0); // b0
+    p.lw(6, 4, 4); // b1
+    p.lw(7, 4, 8); // b2
+    p.bge(13, 14, "ff_skip");
+    p.label("ff");
+    {
+        p.slli(20, 13, 2).add(20, 20, 15); // &x[i]
+        p.lw(26, 20, 0);
+        p.lw(27, 20, -4);
+        p.lw(29, 20, -8);
+        p.fmul(FpMode::F32, 28, 5, 26);
+        p.fmac(FpMode::F32, 28, 6, 27);
+        p.fmac(FpMode::F32, 28, 7, 29);
+        p.slli(21, 13, 2).add(21, 21, 16);
+        p.sw(28, 21, 0);
+        p.addi(13, 13, 1);
+        p.blt(13, 14, "ff");
+    }
+    p.label("ff_skip");
+    p.barrier();
+    // Phase 2: sequential feedback on core 0 (the scaling bottleneck).
+    p.bne(id, regs::ZERO, "fb_skip");
+    p.lw(5, 4, 12); // a1
+    p.lw(6, 4, 16); // a2
+    p.li(26, 0); // y1
+    p.li(27, 0); // y2
+    p.mv(20, 16); // w ptr
+    p.mv(21, 17); // y ptr
+    p.li(19, n as u32);
+    p.hwloop(19);
+    p.lw_pi(28, 20, 4); // acc = w[i]
+    p.fmac(FpMode::F32, 28, 5, 26); // += a1·y1
+    p.fmac(FpMode::F32, 28, 6, 27); // += a2·y2
+    p.mv(27, 26); // y2 = y1
+    p.mv(26, 28); // y1 = acc
+    p.sw_pi(28, 21, 4);
+    p.hwloop_end();
+    p.label("fb_skip");
+    p.barrier();
+    p.end();
+
+    let mut xs = vec![0.0f32; 2];
+    xs.extend(x);
+    Workload {
+        name: "IIR-scalar".into(),
+        program: p.build(),
+        stage: vec![
+            (x_base, Staged::F32(xs)),
+            (c_base, Staged::F32(vec![B[0], B[1], B[2], A[0], A[1]])),
+        ],
+        out_addr: y_base + 8,
+        out_len: n,
+        out_fmt: OutFmt::F32,
+        expected,
+        rtol: 0.0,
+        atol: 1e-12,
+    }
+}
+
+/// Offline block transformation ([45]): express (y[2k], y[2k+1]) from
+/// (y[2k-2], y[2k-1]) and the feed-forward pair.
+///
+/// With a1,a2 the feedback taps:
+///   y[2k]   = w[2k]               + a1·y[2k-1] + a2·y[2k-2]
+///   y[2k+1] = w[2k+1] + a1·y[2k]  + a2·y[2k-1]
+///           = w[2k+1] + a1·w[2k] + (a1²+a2)·y[2k-1] + a1·a2·y[2k-2]
+/// so the 2×2 recursion matrix over (y_prev2, y_prev1) is
+///   M = [ a2      a1     ]
+///       [ a1·a2   a1²+a2 ]
+/// and the block feed-forward is (w[2k], w[2k+1] + a1·w[2k]).
+fn block_matrix() -> [f32; 4] {
+    let (a1, a2) = (A[0], A[1]);
+    [a2, a1, a1 * a2, a1 * a1 + a2]
+}
+
+fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
+    let spec: &'static FpSpec = spec_of(variant);
+    let mode = variant.mode();
+    let mut al = Alloc::new(cfg);
+    let x_base = al.halves(n + 4);
+    let w_base = al.halves(n + 4); // modified feed-forward pairs
+    let y_base = al.halves(n + 4);
+    let c_base = al.halves(16); // packed coefficient constants
+    let x = gen_signal(n);
+    let xq = {
+        let mut q = vec![0u16; 2];
+        q.extend(quantize16(spec, &x));
+        q.extend([0u16; 2]);
+        q
+    };
+    let m = block_matrix();
+
+    // Packed constants:
+    //   word 0: (b0, b0)  word 1: (b1, b1)  word 2: (b2, b2)
+    //   word 3: (a1, 0) — for w'[2k+1] = w[2k+1] + a1·w[2k]
+    //   word 4: (m00, m10) column 0 of M
+    //   word 5: (m01, m11) column 1 of M
+    let packed_consts: Vec<u16> = {
+        let q = |v: f32| spec.from_f64(v as f64);
+        vec![
+            q(B[0]), q(B[0]),
+            q(B[1]), q(B[1]),
+            q(B[2]), q(B[2]),
+            q(A[0]), q(0.0),
+            q(m[0]), q(m[2]),
+            q(m[1]), q(m[3]),
+        ]
+    };
+
+    // Host mirror (exact packed-op order).
+    let mut expected = vec![0.0f64; n];
+    {
+        let xw: Vec<u32> = xq.chunks(2).map(|c| simd::pack2(c[0], c[1])).collect();
+        let cw: Vec<u32> =
+            packed_consts.chunks(2).map(|c| simd::pack2(c[0], c[1])).collect();
+        // Phase 1: w pairs. Pair k covers samples (2k, 2k+1); xw[k+1] is the
+        // aligned pair (x[2k], x[2k+1]) given the 2-lane zero prefix.
+        let mut w = vec![0u32; n / 2];
+        for k in 0..n / 2 {
+            let cur = xw[k + 1];
+            let prev = xw[k];
+            // shifted-by-1 pair (x[2k-1], x[2k]).
+            let sh1 = simd::vpack_lo(simd::vshuffle(prev, 0b11), cur);
+            let mut acc = simd::vmul(spec, cw[0], cur);
+            acc = simd::vmac(spec, cw[1], sh1, acc);
+            acc = simd::vmac(spec, cw[2], prev, acc);
+            w[k] = acc;
+        }
+        // Phase 2 (sequential): w' then the block recursion.
+        let mut ys = 0u32; // (y_prev2, y_prev1)
+        for k in 0..n / 2 {
+            // w' = w + a1x·(w.lo dup in hi position): (w0, w1 + a1·w0)
+            let wlo = simd::vshuffle(w[k], 0b00); // (w0, w0)
+            let a1x = simd::vshuffle(cw[3], 0b01); // (0, a1)
+            let wp = simd::vmac(spec, a1x, wlo, w[k]);
+            // y_pair = M·ys + wp  (columns: m·ys.lo + m·ys.hi)
+            let ylo = simd::vshuffle(ys, 0b00);
+            let yhi = simd::vshuffle(ys, 0b11);
+            let mut acc = simd::vmac(spec, cw[4], ylo, wp);
+            acc = simd::vmac(spec, cw[5], yhi, acc);
+            let (l0, l1) = simd::unpack2(acc);
+            expected[2 * k] = spec.to_f64(l0);
+            expected[2 * k + 1] = spec.to_f64(l1);
+            ys = acc;
+        }
+    }
+
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let mut p = ProgramBuilder::new("iir-vector");
+    p.li(15, x_base).li(16, w_base).li(17, y_base);
+    p.li(4, c_base);
+    // Load the six packed constants into r1..r3, r5..r7.
+    p.lw(1, 4, 0); // b0b0
+    p.lw(2, 4, 4); // b1b1
+    p.lw(3, 4, 8); // b2b2
+    p.lw(5, 4, 12); // (a1, 0)
+    p.lw(6, 4, 16); // M col 0
+    p.lw(7, 4, 20); // M col 1
+    // Phase 1: parallel feed-forward over pairs.
+    p.li(24, (n / 2) as u32);
+    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+    p.mul(13, id, 12);
+    p.add(14, 13, 12).imin(14, 14, 24);
+    p.bge(13, 14, "ff_skip");
+    p.label("ff");
+    {
+        p.slli(20, 13, 2).add(20, 20, 15); // &xw[k] (prev pair)
+        p.lw(26, 20, 4); // cur = (x[2k], x[2k+1])
+        p.lw(27, 20, 0); // prev
+        p.vshuffle(8, 27, 0b11);
+        p.vpack_lo(8, 8, 26); // sh1 = (x[2k-1], x[2k])
+        p.fmul(mode, 28, 1, 26);
+        p.fmac(mode, 28, 2, 8);
+        p.fmac(mode, 28, 3, 27);
+        p.slli(21, 13, 2).add(21, 21, 16);
+        p.sw(28, 21, 0);
+        p.addi(13, 13, 1);
+        p.blt(13, 14, "ff");
+    }
+    p.label("ff_skip");
+    p.barrier();
+    // Phase 2: sequential block recursion on core 0.
+    p.bne(id, regs::ZERO, "fb_skip");
+    p.vshuffle(5, 5, 0b01); // a1x = (0, a1)
+    p.li(26, 0); // ys = (y_prev2, y_prev1) = 0
+    p.mv(20, 16); // w ptr
+    p.mv(21, 17); // y ptr
+    p.li(19, (n / 2) as u32);
+    p.hwloop(19);
+    p.lw_pi(27, 20, 4); // w pair
+    p.vshuffle(28, 27, 0b00); // (w0, w0)
+    p.fmac(mode, 27, 5, 28); // w' = w + (0,a1)·(w0,w0)
+    p.vshuffle(28, 26, 0b00); // ylo dup
+    p.vshuffle(29, 26, 0b11); // yhi dup
+    p.fmac(mode, 27, 6, 28); // += M·col0
+    p.fmac(mode, 27, 7, 29); // += M·col1
+    p.mv(26, 27); // ys = y pair
+    p.sw_pi(27, 21, 4);
+    p.hwloop_end();
+    p.label("fb_skip");
+    p.barrier();
+    p.end();
+
+    Workload {
+        name: format!("IIR-vector-{}", if spec.exp_bits == 5 { "f16" } else { "bf16" }),
+        program: p.build(),
+        stage: vec![(x_base, Staged::U16(xq)), (c_base, Staged::U16(packed_consts))],
+        out_addr: y_base,
+        out_len: n,
+        out_fmt: OutFmt::Pack16(spec),
+        expected,
+        rtol: 1e-9,
+        atol: 1e-12,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_exact() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let w = build(Variant::Scalar, &cfg, 64);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn vector_exact_mirror() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let w = build(Variant::VEC, &cfg, 64);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn block_form_matches_direct_recursion() {
+        // The offline transformation must be algebraically equivalent
+        // (checked in f64 to isolate the algebra from rounding).
+        let n = 32;
+        let w: Vec<f64> = (0..n).map(|i| ((i * 37 % 11) as f64 - 5.0) / 7.0).collect();
+        let (a1, a2) = (A[0] as f64, A[1] as f64);
+        // Direct.
+        let mut direct = vec![0.0f64; n];
+        let (mut y1, mut y2) = (0.0, 0.0);
+        for i in 0..n {
+            let y = w[i] + a1 * y1 + a2 * y2;
+            direct[i] = y;
+            y2 = y1;
+            y1 = y;
+        }
+        // Block (matrix in f64 — this test checks the algebra, not the f32
+        // rounding of the stored coefficients).
+        let m = [a2, a1, a1 * a2, a1 * a1 + a2];
+        let _ = block_matrix();
+        let mut blocked = vec![0.0f64; n];
+        let (mut p2, mut p1) = (0.0, 0.0);
+        for k in 0..n / 2 {
+            let w0 = w[2 * k];
+            let w1 = w[2 * k + 1] + a1 * w0;
+            let y0 = w0 + m[0] * p2 + m[1] * p1;
+            let y1v = w1 + m[2] * p2 + m[3] * p1;
+            blocked[2 * k] = y0;
+            blocked[2 * k + 1] = y1v;
+            p2 = y0;
+            p1 = y1v;
+        }
+        for i in 0..n {
+            assert!((direct[i] - blocked[i]).abs() < 1e-9, "i={i}");
+        }
+    }
+
+    #[test]
+    fn sequential_region_limits_speedup() {
+        // §5.3.1: IIR's parallel speed-up is modest.
+        let cfg = ClusterConfig::new(16, 16, 1);
+        let w = build(Variant::Scalar, &cfg, 512);
+        let (s1, _) = w.run_on(&cfg, 1);
+        let (s16, _) = w.run_on(&cfg, 16);
+        let speedup = s1.total_cycles as f64 / s16.total_cycles as f64;
+        assert!(speedup > 1.2 && speedup < 8.0, "IIR speedup = {speedup}");
+    }
+}

@@ -1,0 +1,490 @@
+//! KMEANS — one Lloyd iteration (assignment + centroid update) over N
+//! D-dimensional points with K centroids; the unsupervised classifier of
+//! the paper's ExG domain (§5.2).
+//!
+//! The assignment phase is data-parallel over points with the centroid loop
+//! fully unrolled (K accumulators, each point dimension loaded once — the
+//! high FP / low memory intensity of Table 3: 0.55 / 0.36). The update
+//! phase is parallel over centroids, separated by barriers, and finishes
+//! with an `fdiv` per dimension on the shared DIV-SQRT block.
+//!
+//! * **Scalar**: `fsub` + `fmac` per (dim × centroid) in binary32.
+//! * **Vector**: dimensions packed 2×16: `vfsub` + expanding `vfdotpex`
+//!   per (dim-pair × centroid) with binary32 distance accumulators.
+
+use super::{quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use crate::config::ClusterConfig;
+use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::testutil::Rng;
+use crate::transfp::{scalar as sfp, simd, CmpPred, FpMode, FpSpec};
+
+/// Build the KMEANS workload: `n` points, `d` dims, `k` centroids.
+/// The result buffer holds the K×D updated centroids.
+pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize, d: usize, k: usize) -> Workload {
+    assert!(k == 4, "the kernel unrolls exactly 4 centroids (K=4)");
+    assert!(d % 2 == 0);
+    match variant {
+        Variant::Scalar => build_scalar(cfg, n, d, k),
+        Variant::Vector(_) => build_vector(variant, cfg, n, d, k),
+    }
+}
+
+fn gen_inputs(n: usize, d: usize, k: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(0x4B4D_4541); // "KMEA"
+    // Clustered points around k seeds.
+    let seeds: Vec<Vec<f32>> = (0..k).map(|_| rng.f32_vec(d, -2.0, 2.0)).collect();
+    let mut pts = Vec::with_capacity(n * d);
+    for i in 0..n {
+        let s = &seeds[i % k];
+        for j in 0..d {
+            pts.push(s[j] + rng.f32_in(-0.5, 0.5));
+        }
+    }
+    // Initial centroids: first k points, perturbed.
+    let mut cent = Vec::with_capacity(k * d);
+    for c in 0..k {
+        for j in 0..d {
+            cent.push(pts[c * d + j] + rng.f32_in(-0.1, 0.1));
+        }
+    }
+    (pts, cent)
+}
+
+/// Host mirror of the scalar assignment: squared distances via f32 FMA in
+/// dimension order, centroids unrolled; strict `<` argmin (first wins ties).
+fn assign_scalar(pts: &[f32], cent: &[f32], n: usize, d: usize, k: usize) -> Vec<usize> {
+    (0..n)
+        .map(|i| {
+            let mut best = 0usize;
+            let mut bestv = f32::INFINITY;
+            for c in 0..k {
+                let mut acc = 0.0f32;
+                for j in 0..d {
+                    let diff = pts[i * d + j] - cent[c * d + j];
+                    acc = diff.mul_add(diff, acc);
+                }
+                if acc < bestv {
+                    bestv = acc;
+                    best = c;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Centroid update mirror: per-centroid sums in point order, f32 adds, then
+/// one f32 divide per dimension (empty clusters keep the old centroid).
+fn update_centroids(
+    pts: &[f32],
+    cent: &[f32],
+    assign: &[usize],
+    n: usize,
+    d: usize,
+    k: usize,
+) -> Vec<f64> {
+    let mut out = vec![0.0f64; k * d];
+    for c in 0..k {
+        let mut count = 0u32;
+        let mut sums = vec![0.0f32; d];
+        for i in 0..n {
+            if assign[i] == c {
+                count += 1;
+                for j in 0..d {
+                    sums[j] += pts[i * d + j];
+                }
+            }
+        }
+        for j in 0..d {
+            out[c * d + j] = if count == 0 {
+                cent[c * d + j] as f64
+            } else {
+                (sums[j] / count as f32) as f64
+            };
+        }
+    }
+    out
+}
+
+fn build_scalar(cfg: &ClusterConfig, n: usize, d: usize, k: usize) -> Workload {
+    let mut al = Alloc::new(cfg);
+    let pts_base = al.f32s(n * d);
+    let cent_base = al.f32s(k * d);
+    let assign_base = al.words(n);
+    let newc_base = al.f32s(k * d);
+    let (pts, cent) = gen_inputs(n, d, k);
+    let assign = assign_scalar(&pts, &cent, n, d, k);
+    let expected = update_centroids(&pts, &cent, &assign, n, d, k);
+
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let mut p = ProgramBuilder::new("kmeans-scalar");
+    p.li(15, pts_base).li(16, cent_base).li(17, assign_base);
+    // ---- Phase 1: assignment, parallel over points.
+    p.li(24, n as u32);
+    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+    p.mul(13, id, 12);
+    p.add(14, 13, 12).imin(14, 14, 24);
+    p.li(30, (d * 4) as u32); // row bytes
+    p.bge(13, 14, "as_skip");
+    p.label("as");
+    {
+        p.mul(20, 13, 30).add(20, 20, 15); // point ptr
+        p.mv(21, 16); // centroid ptr (walks all K rows)
+        p.li(5, 0).li(6, 0).li(7, 0).li(8, 0); // 4 distance accs (f32 0.0)
+        p.li(19, d as u32);
+        p.hwloop(19);
+        p.lw_pi(26, 20, 4); // x[j] — loaded once for all 4 centroids
+        p.lw(27, 21, 0);
+        p.fsub(FpMode::F32, 27, 26, 27);
+        p.fmac(FpMode::F32, 5, 27, 27);
+        p.lw(27, 21, (d * 4) as i32);
+        p.fsub(FpMode::F32, 27, 26, 27);
+        p.fmac(FpMode::F32, 6, 27, 27);
+        p.lw(27, 21, (2 * d * 4) as i32);
+        p.fsub(FpMode::F32, 27, 26, 27);
+        p.fmac(FpMode::F32, 7, 27, 27);
+        p.lw(27, 21, (3 * d * 4) as i32);
+        p.fsub(FpMode::F32, 27, 26, 27);
+        p.fmac(FpMode::F32, 8, 27, 27);
+        p.addi(21, 21, 4);
+        p.hwloop_end();
+        // Argmin over r5..r8 (strict less-than, first wins).
+        p.li(28, 0); // best index
+        p.mv(29, 5); // best value
+        for (c, acc) in [(1u32, 6u8), (2, 7), (3, 8)] {
+            p.fcmp(FpMode::F32, CmpPred::Lt, 26, acc, 29);
+            p.beq(26, regs::ZERO, &format!("ge{c}"));
+            p.li(28, c);
+            p.mv(29, acc);
+            p.label(&format!("ge{c}"));
+        }
+        p.slli(26, 13, 2).add(26, 26, 17);
+        p.sw(28, 26, 0);
+        p.addi(13, 13, 1);
+        p.blt(13, 14, "as");
+    }
+    p.label("as_skip");
+    p.barrier();
+    // ---- Phase 2: update, centroid c handled by core (c mod workers).
+    p.li(24, k as u32);
+    p.li(13, 0);
+    p.label("upd_c");
+    {
+        // Does this core own centroid r13?
+        p.rem(25, 13, Operand::Reg(nc));
+        p.bne(25, id, "upd_next");
+        // Accumulate sums for centroid r13 in a TCDM scratch row (reuse the
+        // output row): zero it first.
+        p.mul(22, 13, 30);
+        p.li(26, newc_base);
+        p.add(22, 22, 26); // out row
+        p.li(19, d as u32);
+        p.mv(20, 22);
+        p.hwloop(19);
+        p.sw_pi(regs::ZERO, 20, 4);
+        p.hwloop_end();
+        p.li(27, 0); // count
+        p.li(18, 0); // i
+        p.li(31, n as u32);
+        p.label("upd_pt");
+        {
+            p.slli(26, 18, 2).add(26, 26, 17);
+            p.lw(26, 26, 0); // assign[i]
+            p.bne(26, 13, "upd_ptnext");
+            p.addi(27, 27, 1);
+            p.mul(20, 18, 30).add(20, 20, 15); // point row
+            p.mv(21, 22); // sums row
+            p.li(19, d as u32);
+            p.hwloop(19);
+            p.lw_pi(26, 20, 4);
+            p.lw(29, 21, 0);
+            p.fadd(FpMode::F32, 29, 29, 26);
+            p.sw_pi(29, 21, 4);
+            p.hwloop_end();
+            p.label("upd_ptnext");
+            p.addi(18, 18, 1);
+            p.blt(18, 31, "upd_pt");
+        }
+        // Divide by count (or copy the old centroid when empty).
+        p.beq(27, regs::ZERO, "upd_empty");
+        p.fcvt_from_int(FpMode::F32, 27, 27);
+        p.mv(21, 22);
+        p.li(19, d as u32);
+        p.hwloop(19);
+        p.lw(29, 21, 0);
+        p.fdiv(FpMode::F32, 29, 29, 27); // shared DIV-SQRT block
+        p.sw_pi(29, 21, 4);
+        p.hwloop_end();
+        p.j("upd_next");
+        p.label("upd_empty");
+        p.mul(20, 13, 30).add(20, 20, 16);
+        p.mv(21, 22);
+        p.li(19, d as u32);
+        p.hwloop(19);
+        p.lw_pi(29, 20, 4);
+        p.sw_pi(29, 21, 4);
+        p.hwloop_end();
+        p.label("upd_next");
+        p.addi(13, 13, 1);
+        p.blt(13, 24, "upd_c");
+    }
+    p.barrier();
+    p.end();
+
+    Workload {
+        name: "KMEANS-scalar".into(),
+        program: p.build(),
+        stage: vec![(pts_base, Staged::F32(pts)), (cent_base, Staged::F32(cent))],
+        out_addr: newc_base,
+        out_len: k * d,
+        out_fmt: OutFmt::F32,
+        expected,
+        rtol: 0.0,
+        atol: 1e-12,
+    }
+}
+
+fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize, d: usize, k: usize) -> Workload {
+    let spec: &'static FpSpec = spec_of(variant);
+    let mode = variant.mode();
+    let mut al = Alloc::new(cfg);
+    let pts_base = al.halves(n * d);
+    let cent_base = al.halves(k * d);
+    let assign_base = al.words(n);
+    let newc_base = al.halves(k * d);
+    let (pts, cent) = gen_inputs(n, d, k);
+    let ptsq = quantize16(spec, &pts);
+    let centq = quantize16(spec, &cent);
+
+    // Mirror of the packed assignment: vfsub + vfdotpex per dim pair.
+    let ptsw = super::pack_words(&ptsq);
+    let centw = super::pack_words(&centq);
+    let dw = d / 2;
+    let assign: Vec<usize> = (0..n)
+        .map(|i| {
+            let mut best = 0usize;
+            let mut bestv = f32::INFINITY;
+            for c in 0..k {
+                let mut acc = 0u32;
+                for jp in 0..dw {
+                    let diff =
+                        simd::vsub(spec, ptsw[i * dw + jp], centw[c * dw + jp]);
+                    acc = simd::vdotp_widen(spec, diff, diff, acc);
+                }
+                let v = f32::from_bits(acc);
+                if v < bestv {
+                    bestv = v;
+                    best = c;
+                }
+            }
+            best
+        })
+        .collect();
+    // Update mirror: packed vadd sums, scalar-f32 divide per lane after
+    // widening, result re-quantized.
+    let expected: Vec<f64> = {
+        let mut out = vec![0.0f64; k * d];
+        for c in 0..k {
+            let mut count = 0u32;
+            let mut sums = vec![0u32; dw]; // packed 16-bit pairs
+            for i in 0..n {
+                if assign[i] == c {
+                    count += 1;
+                    for jp in 0..dw {
+                        sums[jp] = simd::vadd(spec, sums[jp], ptsw[i * dw + jp]);
+                    }
+                }
+            }
+            for jp in 0..dw {
+                let (lo, hi) = simd::unpack2(sums[jp]);
+                for (lane, bits) in [(0usize, lo), (1, hi)] {
+                    let j = 2 * jp + lane;
+                    out[c * d + j] = if count == 0 {
+                        spec.to_f64(centq[c * d + j])
+                    } else {
+                        // fdiv in the 16-bit format (DIV-SQRT block).
+                        let cnt16 = spec.from_f64(count as f64);
+                        spec.to_f64(sfp::div16(spec, bits, cnt16))
+                    };
+                }
+            }
+        }
+        out
+    };
+
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let mut p = ProgramBuilder::new("kmeans-vector");
+    p.li(15, pts_base).li(16, cent_base).li(17, assign_base);
+    p.li(24, n as u32);
+    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
+    p.mul(13, id, 12);
+    p.add(14, 13, 12).imin(14, 14, 24);
+    p.li(30, (dw * 4) as u32); // packed row bytes
+    p.bge(13, 14, "as_skip");
+    p.label("as");
+    {
+        p.mul(20, 13, 30).add(20, 20, 15);
+        p.mv(21, 16);
+        p.li(5, 0).li(6, 0).li(7, 0).li(8, 0); // f32 distance accs
+        p.li(19, dw as u32);
+        p.hwloop(19);
+        p.lw_pi(26, 20, 4); // point dim pair
+        p.lw(27, 21, 0);
+        p.fsub(mode, 27, 26, 27);
+        p.fdotp(mode, 5, 27, 27);
+        p.lw(27, 21, (dw * 4) as i32);
+        p.fsub(mode, 27, 26, 27);
+        p.fdotp(mode, 6, 27, 27);
+        p.lw(27, 21, (2 * dw * 4) as i32);
+        p.fsub(mode, 27, 26, 27);
+        p.fdotp(mode, 7, 27, 27);
+        p.lw(27, 21, (3 * dw * 4) as i32);
+        p.fsub(mode, 27, 26, 27);
+        p.fdotp(mode, 8, 27, 27);
+        p.addi(21, 21, 4);
+        p.hwloop_end();
+        p.li(28, 0);
+        p.mv(29, 5);
+        for (c, acc) in [(1u32, 6u8), (2, 7), (3, 8)] {
+            p.fcmp(FpMode::F32, CmpPred::Lt, 26, acc, 29);
+            p.beq(26, regs::ZERO, &format!("ge{c}"));
+            p.li(28, c);
+            p.mv(29, acc);
+            p.label(&format!("ge{c}"));
+        }
+        p.slli(26, 13, 2).add(26, 26, 17);
+        p.sw(28, 26, 0);
+        p.addi(13, 13, 1);
+        p.blt(13, 14, "as");
+    }
+    p.label("as_skip");
+    p.barrier();
+    // Update phase: centroid per core, packed sums, 16-bit divides.
+    p.li(24, k as u32);
+    p.li(13, 0);
+    p.label("upd_c");
+    {
+        p.rem(25, 13, Operand::Reg(nc));
+        p.bne(25, id, "upd_next");
+        p.mul(22, 13, 30);
+        p.li(26, newc_base);
+        p.add(22, 22, 26);
+        p.li(19, dw as u32);
+        p.mv(20, 22);
+        p.hwloop(19);
+        p.sw_pi(regs::ZERO, 20, 4);
+        p.hwloop_end();
+        p.li(27, 0);
+        p.li(18, 0);
+        p.li(31, n as u32);
+        p.label("upd_pt");
+        {
+            p.slli(26, 18, 2).add(26, 26, 17);
+            p.lw(26, 26, 0);
+            p.bne(26, 13, "upd_ptnext");
+            p.addi(27, 27, 1);
+            p.mul(20, 18, 30).add(20, 20, 15);
+            p.mv(21, 22);
+            p.li(19, dw as u32);
+            p.hwloop(19);
+            p.lw_pi(26, 20, 4);
+            p.lw(29, 21, 0);
+            p.fadd(mode, 29, 29, 26);
+            p.sw_pi(29, 21, 4);
+            p.hwloop_end();
+            p.label("upd_ptnext");
+            p.addi(18, 18, 1);
+            p.blt(18, 31, "upd_pt");
+        }
+        p.beq(27, regs::ZERO, "upd_empty");
+        // count as a 16-bit scalar for the lane-wise divide.
+        p.fcvt_from_int(
+            if spec.exp_bits == 5 { FpMode::F16 } else { FpMode::Bf16 },
+            27,
+            27,
+        );
+        p.mv(21, 22);
+        p.li(19, d as u32); // per-lane halfword divides
+        p.hwloop(19);
+        p.lh(29, 21, 0);
+        p.fdiv(
+            if spec.exp_bits == 5 { FpMode::F16 } else { FpMode::Bf16 },
+            29,
+            29,
+            27,
+        );
+        p.sh(29, 21, 0);
+        p.addi(21, 21, 2);
+        p.hwloop_end();
+        p.j("upd_next");
+        p.label("upd_empty");
+        p.mul(20, 13, 30).add(20, 20, 16);
+        p.mv(21, 22);
+        p.li(19, dw as u32);
+        p.hwloop(19);
+        p.lw_pi(29, 20, 4);
+        p.sw_pi(29, 21, 4);
+        p.hwloop_end();
+        p.label("upd_next");
+        p.addi(13, 13, 1);
+        p.blt(13, 24, "upd_c");
+    }
+    p.barrier();
+    p.end();
+
+    Workload {
+        name: format!("KMEANS-vector-{}", if spec.exp_bits == 5 { "f16" } else { "bf16" }),
+        program: p.build(),
+        stage: vec![(pts_base, Staged::U16(ptsq)), (cent_base, Staged::U16(centq))],
+        out_addr: newc_base,
+        out_len: k * d,
+        out_fmt: OutFmt::Pack16(spec),
+        expected,
+        rtol: 1e-9,
+        atol: 1e-12,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_exact() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let w = build(Variant::Scalar, &cfg, 64, 8, 4);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+        let (_, o1) = w.run_on(&cfg, 1);
+        w.verify(&o1).unwrap();
+    }
+
+    #[test]
+    fn vector_exact() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let w = build(Variant::VEC, &cfg, 64, 8, 4);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn assignment_separates_clusters() {
+        // The synthetic data is built from 4 seeds; the assignment must
+        // recover a non-trivial partition (all 4 clusters populated).
+        let (pts, cent) = gen_inputs(128, 8, 4);
+        let assign = assign_scalar(&pts, &cent, 128, 8, 4);
+        for c in 0..4 {
+            assert!(assign.iter().filter(|&&a| a == c).count() > 8, "cluster {c} starved");
+        }
+    }
+
+    #[test]
+    fn uses_shared_divsqrt() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let w = build(Variant::Scalar, &cfg, 64, 8, 4);
+        let mut cl = crate::cluster::Cluster::new(cfg, w.program.clone());
+        w.stage_into(&mut cl.mem);
+        cl.run();
+        assert!(cl.fpus.divsqrt_ops >= 32, "centroid update must use fdiv");
+    }
+}

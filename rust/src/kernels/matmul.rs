@@ -1,0 +1,300 @@
+//! MATMUL — dense n×n single-precision / packed-16 matrix multiply (BLAS-3),
+//! one of the two "basic linear algebra subprograms commonly used in DSP"
+//! (§5.2). Rows are partitioned statically across cores (outer-loop data
+//! parallelism).
+//!
+//! * **Scalar**: classic i/j/k with a hardware inner loop of
+//!   `p.lw (post-inc) ×2 + fmac` — the FP/mem intensity of Table 3 row
+//!   MATMUL emerges from exactly this mix.
+//! * **Vector**: the paper's strategy (§5.3.1): both operands vectorized
+//!   (B pre-transposed at staging time, k-dimension packed 2×16), the inner
+//!   loop unrolled over two output columns sharing one A-pair load, the
+//!   expanding dot-product intrinsic (`vfdotpex.s.h`) accumulating in
+//!   binary32, and **cast-and-pack** (`vfcpka`) assembling the packed
+//!   16-bit result pair.
+
+use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use crate::config::ClusterConfig;
+use crate::isa::{regs, ProgramBuilder};
+use crate::testutil::Rng;
+use crate::transfp::{scalar, simd};
+
+/// Build the MATMUL workload: C = A·B with n×n operands.
+pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
+    assert!(n.is_power_of_two(), "bank-stagger masks require power-of-two n");
+    match variant {
+        Variant::Scalar => build_scalar(cfg, n),
+        Variant::Vector(_) => build_vector(variant, cfg, n),
+    }
+}
+
+fn gen_inputs(n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(0x4D41_544D); // "MATM"
+    let a = rng.f32_vec(n * n, -1.0, 1.0);
+    let b = rng.f32_vec(n * n, -1.0, 1.0);
+    (a, b)
+}
+
+fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
+    let mut al = Alloc::new(cfg);
+    let a_base = al.f32s(n * n);
+    let b_base = al.f32s(n * n);
+    let c_base = al.f32s(n * n);
+
+    let (a, b) = gen_inputs(n);
+
+    // Host mirror: identical op order (k ascending, f32 FMA) → exact match.
+    let mut expected = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for k in 0..n {
+                acc = a[i * n + k].mul_add(b[k * n + j], acc);
+            }
+            expected[i * n + j] = acc as f64;
+        }
+    }
+
+    let mut p = ProgramBuilder::new("matmul-scalar");
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    // r24 = n; r12 = chunk = ceil(n / ncores); r13 = row; r14 = row_end
+    p.li(24, n as u32);
+    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, crate::isa::Operand::Reg(nc));
+    p.mul(13, id, 12);
+    p.add(14, 13, 12).imin(14, 14, 24);
+    p.li(15, a_base).li(16, b_base).li(17, c_base);
+    p.bge(13, 14, "done");
+    p.label("row");
+    {
+        // r25 = 4*n*i; r23 = C row base; r22 = A row base.
+        p.mul(25, 13, 24).slli(25, 25, 2);
+        p.add(23, 25, 17); // c_row
+        p.add(22, 25, 15); // a_row
+        // Stagger the column start per core (j0 = 2·core_id mod n) so that
+        // concurrent B-column walks hit different TCDM banks — B's stride is
+        // n words, which aliases to a single bank for power-of-two n.
+        p.slli(9, regs::CORE_ID, 1);
+        p.andi(9, 9, (n - 1) as i32); // j0
+        p.li(18, 0); // column count
+        p.label("col");
+        {
+            p.mv(20, 22); // a_ptr
+            p.slli(21, 9, 2).add(21, 21, 16); // b_ptr = B + 4·j
+            p.li(28, 0); // acc = 0.0f32
+            p.li(19, n as u32);
+            p.hwloop(19);
+            p.lw_pi(26, 20, 4);
+            p.lw_pi(27, 21, (4 * n) as i32);
+            p.fmac(crate::transfp::FpMode::F32, 28, 26, 27);
+            p.hwloop_end();
+            p.slli(25, 9, 2).add(25, 25, 23);
+            p.sw(28, 25, 0); // C[i][j]
+            // j = (j + 1) mod n
+            p.addi(9, 9, 1);
+            p.andi(9, 9, (n - 1) as i32);
+            p.addi(18, 18, 1);
+            p.blt(18, 24, "col");
+        }
+        p.addi(13, 13, 1);
+        p.blt(13, 14, "row");
+    }
+    p.label("done");
+    p.barrier();
+    p.end();
+
+    Workload {
+        name: "MATMUL-scalar".into(),
+        program: p.build(),
+        stage: vec![(a_base, Staged::F32(a)), (b_base, Staged::F32(b))],
+        out_addr: c_base,
+        out_len: n * n,
+        out_fmt: OutFmt::F32,
+        expected,
+        rtol: 0.0,
+        atol: 1e-12,
+    }
+}
+
+fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
+    let spec = spec_of(variant);
+    let mode = variant.mode();
+    let mut al = Alloc::new(cfg);
+    let halfwords = n * n;
+    let a_base = al.halves(halfwords); // A row-major, k packed
+    let b_base = al.halves(halfwords); // B row-major, j packed (natural layout)
+    let c_base = al.halves(halfwords); // C row-major, j packed
+
+    let (a, b) = gen_inputs(n);
+    let aq = quantize16(spec, &a);
+    let bq = quantize16(spec, &b);
+
+    // Host mirror with identical semantics: for each 2×2 (k,j) tile, load
+    // B rows k and k+1 packed along j, transpose with pv.pack lo/hi, and
+    // feed two expanding dot products with a shared A pair — exactly the
+    // §5.3.1 recipe ("unrolling the two inner loops, adding shuffle
+    // operations to compute the transpose, and using a dot-product
+    // intrinsic").
+    let aw = pack_words(&aq);
+    let bw = pack_words(&bq);
+    let row_w = n / 2;
+    let mut expected = vec![0.0f64; n * n];
+    for i in 0..n {
+        for jp in 0..n / 2 {
+            let mut acc0 = 0u32;
+            let mut acc1 = 0u32;
+            for kk in 0..n / 2 {
+                let apair = aw[i * row_w + kk];
+                let w0 = bw[(2 * kk) * row_w + jp];
+                let w1 = bw[(2 * kk + 1) * row_w + jp];
+                let col0 = simd::vpack_lo(w0, w1);
+                let col1 = simd::vpack_hi(w0, w1);
+                acc0 = simd::vdotp_widen(spec, apair, col0, acc0);
+                acc1 = simd::vdotp_widen(spec, apair, col1, acc1);
+            }
+            let c = crate::transfp::cast::cpka(spec, acc0, acc1);
+            let (lo, hi) = simd::unpack2(c);
+            expected[i * n + 2 * jp] = spec.to_f64(lo);
+            expected[i * n + 2 * jp + 1] = spec.to_f64(hi);
+        }
+    }
+
+    let mut p = ProgramBuilder::new("matmul-vector");
+    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    p.li(24, n as u32);
+    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, crate::isa::Operand::Reg(nc));
+    p.mul(13, id, 12);
+    p.add(14, 13, 12).imin(14, 14, 24);
+    p.li(15, a_base).li(16, b_base).li(17, c_base);
+    p.li(30, row_w as u32); // words per packed row
+    p.slli(31, 30, 3); // 2 packed rows in bytes (row_w*4*2)
+    p.bge(13, 14, "done");
+    p.label("row");
+    {
+        // r22 = A row base; r23 = C row base (both i*row_w words)
+        p.mul(25, 13, 30).slli(25, 25, 2);
+        p.add(22, 25, 15);
+        p.add(23, 25, 17);
+        // Staggered column-pair start (see the scalar variant): B's packed
+        // row stride aliases banks for power-of-two n.
+        p.andi(4, regs::CORE_ID, (row_w - 1) as i32); // jp0
+        p.li(18, 0); // column-pair count
+        p.label("col");
+        {
+            p.mv(20, 22); // a_ptr
+            p.slli(21, 4, 2).add(21, 21, 16); // b_ptr0 = B + 4*jp (row 0)
+            p.slli(29, 30, 2).add(29, 29, 21); // b_ptr1 = b_ptr0 + one row
+            p.li(27, 0); // acc0 (f32)
+            p.li(28, 0); // acc1 (f32)
+            p.li(19, (n / 2) as u32);
+            p.hwloop(19);
+            p.lw_pi(26, 20, 4); // A[i][k..k+1]
+            {
+                let two_rows = (row_w * 8) as i32;
+                p.lw_pi(5, 21, two_rows); // B[k][j..j+1]
+                p.lw_pi(6, 29, two_rows); // B[k+1][j..j+1]
+            }
+            p.vpack_lo(7, 5, 6); // (B[k][j],   B[k+1][j])   — pv.pack
+            p.vpack_hi(8, 5, 6); // (B[k][j+1], B[k+1][j+1])
+            p.fdotp(mode, 27, 26, 7);
+            p.fdotp(mode, 28, 26, 8);
+            p.hwloop_end();
+            // Cast-and-pack the two f32 accumulators into one 2×16 word.
+            p.cpka(mode, 9, 27, 28);
+            p.slli(25, 4, 2).add(25, 25, 23);
+            p.sw(9, 25, 0);
+            // jp = (jp + 1) mod row_w
+            p.addi(4, 4, 1);
+            p.andi(4, 4, (row_w - 1) as i32);
+            p.addi(18, 18, 1);
+            p.blt(18, 30, "col");
+        }
+        p.addi(13, 13, 1);
+        p.blt(13, 14, "row");
+    }
+    p.label("done");
+    p.barrier();
+    p.end();
+
+    Workload {
+        name: format!("MATMUL-vector-{}", if spec.exp_bits == 5 { "f16" } else { "bf16" }),
+        program: p.build(),
+        stage: vec![(a_base, Staged::U16(aq)), (b_base, Staged::U16(bq))],
+        out_addr: c_base,
+        out_len: n * n,
+        out_fmt: OutFmt::Pack16(spec),
+        expected,
+        rtol: 1e-9,
+        atol: 1e-12,
+    }
+}
+
+// Mirror that the scalar path truly is plain f32 (used by docs/tests).
+#[allow(dead_code)]
+fn host_fma_chain(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).fold(0.0f32, |acc, (x, y)| scalar_fma(acc, *x, *y))
+}
+
+#[inline]
+fn scalar_fma(acc: f32, x: f32, y: f32) -> f32 {
+    f32::from_bits(scalar::fma32(x.to_bits(), y.to_bits(), acc.to_bits()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfp::FpMode;
+
+    #[test]
+    fn scalar_exact_on_one_and_eight_cores() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let w = build(Variant::Scalar, &cfg, 16);
+        let (_, out1) = w.run_on(&cfg, 1);
+        w.verify(&out1).unwrap();
+        let (_, out8) = w.run(&cfg);
+        w.verify(&out8).unwrap();
+    }
+
+    #[test]
+    fn vector_f16_exact_mirror() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let w = build(Variant::VEC, &cfg, 16);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn vector_bf16_exact_mirror() {
+        let cfg = ClusterConfig::new(8, 8, 1);
+        let w = build(Variant::Vector(FpMode::VecBf16), &cfg, 16);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn intensities_near_table3() {
+        let cfg = ClusterConfig::new(8, 8, 1);
+        for (variant, (fp_ref, mem_ref)) in [
+            (Variant::Scalar, (0.28, 0.58)),
+            (Variant::VEC, (0.27, 0.41)),
+        ] {
+            let w = build(variant, &cfg, 32);
+            let (stats, _) = w.run(&cfg);
+            let agg = stats.aggregate();
+            let fp = agg.fp_intensity();
+            let mem = agg.mem_intensity();
+            assert!((fp - fp_ref).abs() < 0.10, "{}: fp={fp} vs {fp_ref}", w.name);
+            assert!((mem - mem_ref).abs() < 0.15, "{}: mem={mem} vs {mem_ref}", w.name);
+        }
+    }
+
+    #[test]
+    fn vector_speedup_over_scalar() {
+        let cfg = ClusterConfig::new(8, 8, 1);
+        let ws = build(Variant::Scalar, &cfg, 32);
+        let wv = build(Variant::VEC, &cfg, 32);
+        let (ss, _) = ws.run(&cfg);
+        let (sv, _) = wv.run(&cfg);
+        let speedup = ss.total_cycles as f64 / sv.total_cycles as f64;
+        assert!(speedup > 1.3 && speedup < 2.3, "vectorization speedup = {speedup}");
+    }
+}

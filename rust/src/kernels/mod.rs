@@ -1,0 +1,353 @@
+//! The eight near-sensor benchmarks of Table 3 — CONV, DWT, FFT, FIR, IIR,
+//! KMEANS, MATMUL, SVM — each in a scalar-`float` and a packed-SIMD
+//! 2×16-bit vector variant, written in the Xpulp-style ISA DSL with the
+//! paper's parallelization strategy (§5.2):
+//!
+//! * data parallelism on the outer loops for CONV / FIR / MATMUL;
+//! * stage-level parallelism with barriers for DWT / FFT / KMEANS / SVM;
+//! * block-formulation recursion ([45]) for the vector IIR.
+//!
+//! Each builder returns a [`Workload`]: the SPMD program, the data to stage
+//! into TCDM, and a host-computed golden output (from the *staged*, i.e.
+//! already-quantized, inputs) with a variant-appropriate tolerance.
+
+pub mod conv;
+pub mod dwt;
+pub mod fft;
+pub mod fir;
+pub mod iir;
+pub mod kmeans;
+pub mod matmul;
+pub mod svm;
+
+use crate::cluster::counters::RunStats;
+use crate::cluster::mem::{Memory, TCDM_BASE};
+use crate::cluster::Cluster;
+use crate::config::ClusterConfig;
+use crate::isa::Program;
+use crate::transfp::{simd, FpMode, FpSpec, BF16, F16};
+
+/// Benchmark variant: scalar binary32 or packed-SIMD 2×16.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// `float` scalars.
+    Scalar,
+    /// 2×16-bit vectors in the given mode (`VecF16` or `VecBf16`). The paper
+    /// reports a single number for both 16-bit formats (§5.2) — we support
+    /// both and default to `VecF16`.
+    Vector(FpMode),
+}
+
+impl Variant {
+    /// Canonical vector variant used in the tables.
+    pub const VEC: Variant = Variant::Vector(FpMode::VecF16);
+
+    /// Short label (`scalar` / `vector`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variant::Scalar => "scalar",
+            Variant::Vector(_) => "vector",
+        }
+    }
+
+    /// The 16-bit spec for vector variants.
+    pub fn spec(&self) -> Option<&'static FpSpec> {
+        match self {
+            Variant::Scalar => None,
+            Variant::Vector(m) => m.spec(),
+        }
+    }
+
+    /// The SIMD mode (F32 for scalar).
+    pub fn mode(&self) -> FpMode {
+        match self {
+            Variant::Scalar => FpMode::F32,
+            Variant::Vector(m) => *m,
+        }
+    }
+}
+
+/// Data staged into memory before a run.
+#[derive(Debug, Clone)]
+pub enum Staged {
+    F32(Vec<f32>),
+    U16(Vec<u16>),
+    U32(Vec<u32>),
+}
+
+/// Output format of a workload's result buffer.
+#[derive(Debug, Clone, Copy)]
+pub enum OutFmt {
+    /// binary32 words.
+    F32,
+    /// Packed 16-bit lanes in `spec`.
+    Pack16(&'static FpSpec),
+}
+
+/// A runnable benchmark instance.
+pub struct Workload {
+    /// `<benchmark>-<variant>`.
+    pub name: String,
+    /// SPMD program.
+    pub program: Program,
+    /// (address, data) pairs written to TCDM before the run.
+    pub stage: Vec<(u32, Staged)>,
+    /// Result buffer address.
+    pub out_addr: u32,
+    /// Result length in elements.
+    pub out_len: usize,
+    /// Result element format.
+    pub out_fmt: OutFmt,
+    /// Golden output (computed on the host from the staged inputs).
+    pub expected: Vec<f64>,
+    /// Relative tolerance for verification.
+    pub rtol: f64,
+    /// Absolute tolerance floor.
+    pub atol: f64,
+}
+
+impl Workload {
+    /// Write the staged inputs into `mem`.
+    pub fn stage_into(&self, mem: &mut Memory) {
+        for (addr, data) in &self.stage {
+            match data {
+                Staged::F32(v) => mem.write_f32_slice(*addr, v),
+                Staged::U16(v) => mem.write_u16_slice(*addr, v),
+                Staged::U32(v) => mem.write_u32_slice(*addr, v),
+            }
+        }
+    }
+
+    /// Read the result buffer as f64 values.
+    pub fn read_output(&self, mem: &Memory) -> Vec<f64> {
+        match self.out_fmt {
+            OutFmt::F32 => {
+                mem.read_f32_slice(self.out_addr, self.out_len).iter().map(|&x| x as f64).collect()
+            }
+            OutFmt::Pack16(spec) => mem
+                .read_u16_slice(self.out_addr, self.out_len)
+                .iter()
+                .map(|&b| spec.to_f64(b))
+                .collect(),
+        }
+    }
+
+    /// Run on `cfg` with all cores; returns (stats, outputs).
+    pub fn run(&self, cfg: &ClusterConfig) -> (RunStats, Vec<f64>) {
+        self.run_on(cfg, cfg.cores)
+    }
+
+    /// Run with only the first `workers` cores active (Fig 6 sweeps).
+    pub fn run_on(&self, cfg: &ClusterConfig, workers: usize) -> (RunStats, Vec<f64>) {
+        let mut cl = Cluster::new(*cfg, self.program.clone());
+        cl.limit_active_cores(workers);
+        self.stage_into(&mut cl.mem);
+        let stats = cl.run();
+        let out = self.read_output(&cl.mem);
+        (stats, out)
+    }
+
+    /// Verify `outputs` against the golden values.
+    pub fn verify(&self, outputs: &[f64]) -> Result<(), String> {
+        if outputs.len() != self.expected.len() {
+            return Err(format!(
+                "{}: output length {} != expected {}",
+                self.name,
+                outputs.len(),
+                self.expected.len()
+            ));
+        }
+        for (i, (o, e)) in outputs.iter().zip(&self.expected).enumerate() {
+            let tol = self.atol + self.rtol * e.abs();
+            if (o - e).abs() > tol {
+                return Err(format!(
+                    "{}: mismatch at {i}: got {o}, expected {e} (|diff|={}, tol={tol})",
+                    self.name,
+                    (o - e).abs()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Bump allocator over the TCDM for kernel buffer layout.
+pub struct Alloc {
+    next: u32,
+    limit: u32,
+}
+
+impl Alloc {
+    /// Allocator over the TCDM of `cfg`.
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        Alloc { next: TCDM_BASE, limit: TCDM_BASE + cfg.tcdm_bytes() as u32 }
+    }
+
+    /// Allocate `words` 32-bit words; returns the base address.
+    pub fn words(&mut self, words: usize) -> u32 {
+        let addr = self.next;
+        self.next += (words * 4) as u32;
+        assert!(self.next <= self.limit, "TCDM overflow: kernel working set too large");
+        addr
+    }
+
+    /// Allocate room for `n` f32 elements.
+    pub fn f32s(&mut self, n: usize) -> u32 {
+        self.words(n)
+    }
+
+    /// Allocate room for `n` 16-bit lanes (packed two per word, rounded up).
+    pub fn halves(&mut self, n: usize) -> u32 {
+        self.words(n.div_ceil(2))
+    }
+}
+
+/// Quantize f32 samples to 16-bit lanes of `spec`.
+pub fn quantize16(spec: &FpSpec, data: &[f32]) -> Vec<u16> {
+    data.iter().map(|&x| spec.from_f64(x as f64)).collect()
+}
+
+/// Dequantized view (the values the vector kernels actually compute on).
+pub fn dequant(spec: &FpSpec, q: &[u16]) -> Vec<f64> {
+    q.iter().map(|&b| spec.to_f64(b)).collect()
+}
+
+/// Pack 16-bit lanes into words (lane 2i → low half of word i).
+pub fn pack_words(q: &[u16]) -> Vec<u32> {
+    q.chunks(2).map(|c| simd::pack2(c[0], *c.get(1).unwrap_or(&0))).collect()
+}
+
+/// The benchmark suite of Table 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    Conv,
+    Dwt,
+    Fft,
+    Fir,
+    Iir,
+    Kmeans,
+    Matmul,
+    Svm,
+}
+
+impl Benchmark {
+    /// All benchmarks, in Table 3 order.
+    pub fn all() -> [Benchmark; 8] {
+        use Benchmark::*;
+        [Conv, Dwt, Fft, Fir, Iir, Kmeans, Matmul, Svm]
+    }
+
+    /// Upper-case name as used in the tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Benchmark::Conv => "CONV",
+            Benchmark::Dwt => "DWT",
+            Benchmark::Fft => "FFT",
+            Benchmark::Fir => "FIR",
+            Benchmark::Iir => "IIR",
+            Benchmark::Kmeans => "KMEANS",
+            Benchmark::Matmul => "MATMUL",
+            Benchmark::Svm => "SVM",
+        }
+    }
+
+    /// Parse a table name.
+    pub fn parse(s: &str) -> Option<Benchmark> {
+        Benchmark::all().into_iter().find(|b| b.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Build the default-size workload for `variant` on a cluster config.
+    /// Sizes are chosen from the paper's near-sensor domains (§5.2) and fit
+    /// the 64 kB TCDM of the 8-core cluster.
+    pub fn build(&self, variant: Variant, cfg: &ClusterConfig) -> Workload {
+        match self {
+            Benchmark::Conv => conv::build(variant, cfg, 32, 32),
+            Benchmark::Dwt => dwt::build(variant, cfg, 512, 3),
+            Benchmark::Fft => fft::build(variant, cfg, 256),
+            Benchmark::Fir => fir::build(variant, cfg, 512, 32),
+            Benchmark::Iir => iir::build(variant, cfg, 512),
+            Benchmark::Kmeans => kmeans::build(variant, cfg, 256, 16, 4),
+            Benchmark::Matmul => matmul::build(variant, cfg, 32),
+            Benchmark::Svm => svm::build(variant, cfg, 64, 32),
+        }
+    }
+
+    /// Paper Table 3 FP / memory intensity, for validation.
+    pub fn table3_intensity(&self, variant: Variant) -> (f64, f64) {
+        let scalar = matches!(variant, Variant::Scalar);
+        match (self, scalar) {
+            (Benchmark::Conv, true) => (0.33, 0.67),
+            (Benchmark::Conv, false) => (0.28, 0.29),
+            (Benchmark::Dwt, true) => (0.29, 0.59),
+            (Benchmark::Dwt, false) => (0.21, 0.57),
+            (Benchmark::Fft, true) => (0.32, 0.52),
+            (Benchmark::Fft, false) => (0.26, 0.38),
+            (Benchmark::Fir, true) => (0.32, 0.65),
+            (Benchmark::Fir, false) => (0.32, 0.48),
+            (Benchmark::Iir, true) => (0.19, 0.55),
+            (Benchmark::Iir, false) => (0.17, 0.33),
+            (Benchmark::Kmeans, true) => (0.55, 0.36),
+            (Benchmark::Kmeans, false) => (0.44, 0.30),
+            (Benchmark::Matmul, true) => (0.28, 0.58),
+            (Benchmark::Matmul, false) => (0.27, 0.41),
+            (Benchmark::Svm, true) => (0.27, 0.53),
+            (Benchmark::Svm, false) => (0.21, 0.52),
+        }
+    }
+}
+
+/// 16-bit spec for a variant, defaulting to binary16.
+pub fn spec_of(variant: Variant) -> &'static FpSpec {
+    variant.spec().unwrap_or(&F16)
+}
+
+/// Both 16-bit formats (the tables report one number for both).
+pub fn both_specs() -> [&'static FpSpec; 2] {
+    [&F16, &BF16]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn benchmark_names_roundtrip() {
+        for b in Benchmark::all() {
+            assert_eq!(Benchmark::parse(b.name()), Some(b));
+        }
+        assert_eq!(Benchmark::parse("nope"), None);
+    }
+
+    #[test]
+    fn alloc_bumps_and_checks() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let mut a = Alloc::new(&cfg);
+        let p1 = a.f32s(16);
+        let p2 = a.halves(7); // 4 words
+        let p3 = a.words(1);
+        assert_eq!(p1, TCDM_BASE);
+        assert_eq!(p2, TCDM_BASE + 64);
+        assert_eq!(p3, TCDM_BASE + 64 + 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "TCDM overflow")]
+    fn alloc_overflow_panics() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let mut a = Alloc::new(&cfg);
+        a.words(64 * 1024); // 256 kB > 64 kB
+    }
+
+    #[test]
+    fn quantize_pack_roundtrip() {
+        let data = [1.0f32, -2.5, 0.1, 3.75, 9.0];
+        let q = quantize16(&F16, &data);
+        assert_eq!(q.len(), 5);
+        let w = pack_words(&q);
+        assert_eq!(w.len(), 3);
+        let d = dequant(&F16, &q);
+        assert_eq!(d[0], 1.0);
+        assert_eq!(d[1], -2.5);
+        assert!((d[2] - 0.1).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,33 @@
+//! # transpfp — a transprecision floating-point cluster, reproduced in software
+//!
+//! Reproduction of *"A Transprecision Floating-Point Cluster for Efficient
+//! Near-Sensor Data Analytics"* (TPDS 2021). The crate contains:
+//!
+//! * [`transfp`] — bit-accurate softfloat for the FPnew formats (binary32,
+//!   binary16, bfloat16; scalar + packed-SIMD + widening FMA + casts);
+//! * [`isa`] — the RI5CY/Xpulp-like instruction set and assembler DSL the
+//!   benchmark kernels are written in;
+//! * [`cluster`] — the cycle-accurate cluster simulator (cores, shared FPUs,
+//!   DIV-SQRT, banked TCDM, I$, event unit, DMA);
+//! * [`config`] — the Table 2 design space;
+//! * [`model`] — calibrated frequency / power / area models (Figs 3–5);
+//! * [`kernels`] — the 8 near-sensor benchmarks × {scalar, vector};
+//! * [`coordinator`] — the design-space-exploration engine producing the
+//!   paper's tables and figures;
+//! * [`runtime`] — PJRT loading of the AOT-compiled JAX/Pallas goldens
+//!   (`artifacts/*.hlo.txt`) for numeric validation;
+//! * [`report`] — table/CSV emitters and the Table 6 SoA data.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod isa;
+pub mod kernels;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod testutil;
+pub mod transfp;

@@ -1,0 +1,172 @@
+//! `transpfp` — CLI launcher for the transprecision-cluster reproduction.
+//!
+//! Subcommands regenerate every table/figure of the paper, run individual
+//! benchmarks, and validate the simulator's numerics against the
+//! AOT-compiled JAX/Pallas goldens (`artifacts/*.hlo.txt`).
+
+use std::process::ExitCode;
+
+use transpfp::config::{ClusterConfig, Corner};
+use transpfp::coordinator::{self, run_one};
+use transpfp::kernels::{Benchmark, Variant};
+use transpfp::model;
+use transpfp::transfp::FpMode;
+
+const USAGE: &str = "\
+transpfp — transprecision FP cluster reproduction (TPDS 2021)
+
+USAGE: transpfp <command> [args]
+
+COMMANDS:
+  configs                 list the Table 2 design space
+  run <cfg> <bench> <scalar|vector|bf16>
+                          run one benchmark (e.g. `run 8c4f1p MATMUL vector`)
+  table3                  FP/memory intensities (measured vs paper)
+  table4                  8-core benchmark tables (perf / e-eff / a-eff)
+  table5                  16-core benchmark tables
+  table6                  state-of-the-art comparison (measured + paper)
+  fig3                    fmax spread per pipeline/corner
+  fig4                    area per configuration
+  fig5                    power @100 MHz per configuration
+  fig6                    parallel + vectorization speed-ups (16-core)
+  fig7                    metrics vs FPU sharing factor
+  fig8                    metrics vs pipeline stages
+  validate [dir]          check simulator numerics vs XLA goldens (artifacts/)
+  sweep                   run the full 18x8x2 design space, CSV to stdout
+
+Add `--csv` to any table command for CSV output.";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let csv = args.iter().any(|a| a == "--csv");
+    let args: Vec<&str> = args.iter().map(|s| s.as_str()).filter(|a| *a != "--csv").collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+
+    let emit = |t: transpfp::report::Table| {
+        if csv {
+            print!("{}", t.to_csv());
+        } else {
+            print!("{}", t.render());
+        }
+    };
+
+    match *cmd {
+        "configs" => {
+            println!(
+                "Table 2 design space ({} configurations):",
+                ClusterConfig::design_space().len()
+            );
+            for cfg in ClusterConfig::design_space() {
+                println!(
+                    "  {:9}  fmax {}MHz(ST) {}MHz(NT)  area {:.2} mm2",
+                    cfg.mnemonic(),
+                    model::fmax_mhz(&cfg, Corner::St).round(),
+                    model::fmax_mhz(&cfg, Corner::Nt).round(),
+                    model::area_mm2(&cfg)
+                );
+            }
+        }
+        "run" => {
+            if args.len() < 4 {
+                eprintln!("usage: transpfp run <cfg> <bench> <scalar|vector|bf16>");
+                return ExitCode::FAILURE;
+            }
+            let Some(cfg) = ClusterConfig::parse(args[1]) else {
+                eprintln!("bad config mnemonic {}", args[1]);
+                return ExitCode::FAILURE;
+            };
+            let Some(bench) = Benchmark::parse(args[2]) else {
+                eprintln!("unknown benchmark {}", args[2]);
+                return ExitCode::FAILURE;
+            };
+            let variant = match args[3] {
+                "scalar" => Variant::Scalar,
+                "vector" | "f16" => Variant::VEC,
+                "bf16" => Variant::Vector(FpMode::VecBf16),
+                other => {
+                    eprintln!("unknown variant {other}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let m = run_one(&cfg, bench, variant);
+            println!("{} {} on {}:", bench.name(), variant.label(), cfg.mnemonic());
+            println!("  cycles            {}", m.cycles);
+            println!("  flops/cycle       {:.3}", m.metrics.flops_per_cycle);
+            println!(
+                "  perf              {:.2} Gflop/s @ {} MHz (ST)",
+                m.metrics.perf_gflops,
+                model::fmax_mhz(&cfg, Corner::St).round()
+            );
+            println!("  energy efficiency {:.1} Gflop/s/W (NT)", m.metrics.energy_eff);
+            println!("  area efficiency   {:.2} Gflop/s/mm2", m.metrics.area_eff);
+            println!(
+                "  FP intensity      {:.2}   memory intensity {:.2}",
+                m.fp_intensity, m.mem_intensity
+            );
+            println!("  verified          {}", m.verified);
+            println!(
+                "  counters          active={} fpu_cont={} fpu_stall={} tcdm_cont={} wb={} icache={} barrier={}",
+                m.agg.active,
+                m.agg.fpu_cont,
+                m.agg.fpu_stall,
+                m.agg.tcdm_cont,
+                m.agg.wb_stall,
+                m.agg.icache_stall,
+                m.agg.barrier_idle
+            );
+            if !m.verified {
+                return ExitCode::FAILURE;
+            }
+        }
+        "table3" => emit(coordinator::table3()),
+        "table4" => emit(coordinator::table45(8)),
+        "table5" => emit(coordinator::table45(16)),
+        "table6" => emit(coordinator::table6()),
+        "fig3" => emit(coordinator::fig3()),
+        "fig4" => emit(coordinator::fig4()),
+        "fig5" => emit(coordinator::fig5()),
+        "fig6" => emit(coordinator::fig6()),
+        "fig7" => emit(coordinator::fig7()),
+        "fig8" => emit(coordinator::fig8()),
+        "sweep" => {
+            let ms = coordinator::sweep_all();
+            println!("config,bench,variant,cycles,flops_per_cycle,perf_gflops,energy_eff,area_eff,fp_intensity,mem_intensity,verified");
+            for m in ms {
+                println!(
+                    "{},{},{},{},{:.4},{:.4},{:.2},{:.3},{:.3},{:.3},{}",
+                    m.cfg.mnemonic(),
+                    m.bench.name(),
+                    m.variant.label(),
+                    m.cycles,
+                    m.metrics.flops_per_cycle,
+                    m.metrics.perf_gflops,
+                    m.metrics.energy_eff,
+                    m.metrics.area_eff,
+                    m.fp_intensity,
+                    m.mem_intensity,
+                    m.verified
+                );
+            }
+        }
+        "validate" => {
+            let dir = args.get(1).copied().unwrap_or("artifacts");
+            match transpfp::runtime::validate_all(dir) {
+                Ok(report) => {
+                    print!("{report}");
+                }
+                Err(e) => {
+                    eprintln!("validation failed: {e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown command {other}\n\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}

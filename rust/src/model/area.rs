@@ -1,0 +1,101 @@
+//! Area model (Fig 4, §3.3), GF 22FDX.
+//!
+//! Component model calibrated to the three Table 6 area anchors:
+//! 16c16f1p = **2.10 mm²**, 16c16f0p = **1.80 mm²**, 8c4f1p = **0.97 mm²**,
+//! and to the §3.3 narrative: area grows linearly with the FPU count, each
+//! pipeline stage adds register area per FPU, and the cluster total grows
+//! *less than linearly* with cores because DMA / event unit / shared I$
+//! banks are not duplicated.
+
+use crate::config::ClusterConfig;
+
+/// RI5CY core + private interconnect ports, mm².
+const A_CORE: f64 = 0.040;
+/// FPnew instance with 0 pipeline stages, mm².
+const A_FPU0: f64 = 0.025;
+/// Register area per added FPU pipeline stage, mm² (from the 16-FPU anchor
+/// pair: (2.10 − 1.80)/16).
+const A_FPU_STAGE: f64 = 0.01875;
+/// TCDM SRAM area per kB, mm² (≈3.1 mm²/MB for the wide-voltage macros).
+const A_TCDM_PER_KB: f64 = 0.40 / 128.0;
+/// Shared blocks (I$ banks, DMA, event unit, log interconnect): affine in
+/// the core count — the sub-linear term of §3.3.
+const A_SHARED_BASE: f64 = 0.190;
+const A_SHARED_PER_CORE: f64 = 0.0106;
+/// FPU-sharing interconnect, per FPU port.
+const A_FPU_ITC_PER_FPU: f64 = 0.001;
+/// Shared DIV-SQRT block.
+const A_DIVSQRT: f64 = 0.008;
+
+/// Total cluster area in mm².
+pub fn area_mm2(cfg: &ClusterConfig) -> f64 {
+    let cores = cfg.cores as f64;
+    let fpus = cfg.fpus as f64;
+    let tcdm_kb = cfg.tcdm_bytes() as f64 / 1024.0;
+    let fpu = A_FPU0 + A_FPU_STAGE * cfg.pipe as f64;
+    // Private FPUs (1/1) need no sharing interconnect (§3.2).
+    let itc = if cfg.fpus < cfg.cores { A_FPU_ITC_PER_FPU * fpus } else { 0.0 };
+    A_CORE * cores
+        + fpu * fpus
+        + A_TCDM_PER_KB * tcdm_kb
+        + A_SHARED_BASE
+        + A_SHARED_PER_CORE * cores
+        + itc
+        + A_DIVSQRT
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol_pct: f64) -> bool {
+        (a - b).abs() / b * 100.0 <= tol_pct
+    }
+
+    /// Table 6 anchors within 3%.
+    #[test]
+    fn table6_anchors() {
+        let a = area_mm2(&ClusterConfig::new(16, 16, 1));
+        assert!(close(a, 2.10, 3.0), "16c16f1p = {a}");
+        let a = area_mm2(&ClusterConfig::new(16, 16, 0));
+        assert!(close(a, 1.80, 3.0), "16c16f0p = {a}");
+        let a = area_mm2(&ClusterConfig::new(8, 4, 1));
+        assert!(close(a, 0.97, 3.0), "8c4f1p = {a}");
+    }
+
+    /// §3.3: area grows linearly in the FPU count (fixed cores/pipe).
+    #[test]
+    fn linear_in_fpus() {
+        let a2 = area_mm2(&ClusterConfig::new(8, 2, 1));
+        let a4 = area_mm2(&ClusterConfig::new(8, 4, 1));
+        let a8 = area_mm2(&ClusterConfig::new(8, 8, 1));
+        let d1 = a4 - a2;
+        let d2 = a8 - a4;
+        assert!(d1 > 0.0 && d2 > 0.0);
+        // Slope doubles with the FPU increment (2→4 vs 4→8), modulo the
+        // interconnect disappearing at 1/1.
+        assert!(close(d2 / d1, 2.0, 15.0), "d1={d1} d2={d2}");
+    }
+
+    /// §3.3: pipeline stages add area monotonically.
+    #[test]
+    fn pipeline_adds_area() {
+        for cores in [8usize, 16] {
+            for fpus in [cores / 4, cores / 2, cores] {
+                let a0 = area_mm2(&ClusterConfig::new(cores, fpus, 0));
+                let a1 = area_mm2(&ClusterConfig::new(cores, fpus, 1));
+                let a2 = area_mm2(&ClusterConfig::new(cores, fpus, 2));
+                assert!(a0 < a1 && a1 < a2);
+            }
+        }
+    }
+
+    /// §3.3: 8→16 cores less than doubles the area (shared blocks).
+    #[test]
+    fn sublinear_in_cores() {
+        let a8 = area_mm2(&ClusterConfig::new(8, 8, 1));
+        let a16 = area_mm2(&ClusterConfig::new(16, 16, 1));
+        assert!(a16 < 2.0 * a8, "a8={a8} a16={a16}");
+        assert!(a16 > 1.5 * a8, "16c still has 2× cores/FPUs/TCDM");
+    }
+}

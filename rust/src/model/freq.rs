@@ -1,0 +1,169 @@
+//! Maximum-frequency model (Fig 3, §3.3).
+//!
+//! Synthesis/P&R is not available in this environment, so fmax is an
+//! analytic model over the *structural critical paths the paper describes*,
+//! calibrated to every number the paper states:
+//!
+//! * Table 6 anchors (worst-case corners): 16c16f1p @0.8 V = **0.37 GHz**,
+//!   16c16f0p @0.65 V = **0.30 GHz**, 8c4f1p @0.8 V = **0.43 GHz**.
+//! * §3.3 narrative: with 0 pipeline stages the ID/EX→FPU→EX/WB path
+//!   dominates; adding one stage gains ~50% at NT but is capped at ST by the
+//!   structural TCDM-SRAM→log-interconnect→core path; a second stage gains
+//!   only slightly and at NT runs into I$-control paths; 16-core clusters
+//!   are slower than 8-core ones (longer interconnect); the FPU sharing
+//!   interconnect's frequency impact is "negligible" (small per-sharing
+//!   period adder).
+//!
+//! The model returns the minimum over the candidate paths, each expressed as
+//! a period in ns.
+
+use crate::config::{ClusterConfig, Corner};
+
+/// Critical-path periods in ns for a configuration/corner.
+#[derive(Debug, Clone, Copy)]
+pub struct Paths {
+    /// ID/EX → (sharing interconnect) → FPU → EX/WB, shortened by pipelining.
+    pub fpu: f64,
+    /// TCDM SRAM → logarithmic interconnect → core (structural; ST-binding).
+    pub tcdm: f64,
+    /// Interconnect control → shared I$ (NT-binding at 2 stages).
+    pub icache: f64,
+}
+
+/// Compute the candidate critical paths.
+pub fn paths(cfg: &ClusterConfig, corner: Corner) -> Paths {
+    // FPU datapath period by pipeline stages, per corner.
+    let fpu_base = match (corner, cfg.pipe) {
+        // NT: 0p → 1p is "almost 50%" (3.33 → 2.32 ns).
+        (Corner::Nt, 0) => 3.333,
+        (Corner::Nt, 1) => 2.320,
+        (Corner::Nt, 2) => 2.260,
+        // ST: proportionally faster cells.
+        (Corner::St, 0) => 2.899,
+        (Corner::St, 1) => 2.100,
+        (Corner::St, 2) => 2.050,
+        _ => unreachable!("pipe validated ≤ 2"),
+    };
+    // Sharing interconnect adds a negligible mux/tree delay that grows with
+    // the sharing factor (log2 of cores-per-FPU); zero for private FPUs.
+    let sharing_levels = (cfg.sharing_div() as f64).log2();
+    let fpu = fpu_base * (1.0 + 0.006 * sharing_levels);
+
+    // TCDM path: wide-voltage-range SRAMs are comparatively slow at ST
+    // (§3.3), and the log interconnect deepens with the core count.
+    let tcdm = match (corner, cfg.cores <= 8) {
+        (Corner::St, true) => 2.326,  // ⇒ 430 MHz cap for the 8-core ST cluster
+        (Corner::St, false) => 2.703, // ⇒ 370 MHz cap for the 16-core ST cluster
+        // Wide-voltage-range SRAMs barely slow down at NT (§3.3): the TCDM
+        // path is nearly flat across corners.
+        (Corner::Nt, true) => 2.300,
+        (Corner::Nt, false) => 2.700,
+    };
+
+    // I$ control path — the structurally binding path at NT once the FPU is
+    // pipelined (§3.3 mentions it for the 2-stage NT configurations).
+    let icache = match (corner, cfg.cores <= 8) {
+        (Corner::Nt, true) => 2.340,
+        (Corner::Nt, false) => 2.720,
+        (Corner::St, true) => 2.000,
+        (Corner::St, false) => 2.100,
+    };
+
+    Paths { fpu, tcdm, icache }
+}
+
+/// Maximum operating frequency in MHz (worst-case signoff corner, like the
+/// paper's implementation flow).
+pub fn fmax_mhz(cfg: &ClusterConfig, corner: Corner) -> f64 {
+    let p = paths(cfg, corner);
+    let period = p.fpu.max(p.tcdm).max(p.icache);
+    1000.0 / period
+}
+
+/// Fig 3 helper: (min, median, max) fmax across the FPU counts available for
+/// a given core count / pipeline / corner.
+pub fn fig3_spread(cores: usize, pipe: u32, corner: Corner) -> (f64, f64, f64) {
+    let mut f: Vec<f64> = [4usize, 2, 1]
+        .iter()
+        .map(|div| fmax_mhz(&ClusterConfig::new(cores, cores / div, pipe), corner))
+        .collect();
+    f.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (f[0], f[1], f[2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol_pct: f64) -> bool {
+        (a - b).abs() / b * 100.0 <= tol_pct
+    }
+
+    /// The three Table 6 frequency anchors hold within 2%.
+    #[test]
+    fn table6_anchors() {
+        let f = fmax_mhz(&ClusterConfig::new(16, 16, 1), Corner::St);
+        assert!(close(f, 370.0, 2.0), "16c16f1p ST = {f}");
+        let f = fmax_mhz(&ClusterConfig::new(16, 16, 0), Corner::Nt);
+        assert!(close(f, 300.0, 2.0), "16c16f0p NT = {f}");
+        let f = fmax_mhz(&ClusterConfig::new(8, 4, 1), Corner::St);
+        assert!(close(f, 430.0, 2.0), "8c4f1p ST = {f}");
+    }
+
+    /// §3.3: NT gains ~50% from 0p→1p; ST gains much less (TCDM-capped).
+    #[test]
+    fn pipelining_gains_match_narrative() {
+        let nt0 = fmax_mhz(&ClusterConfig::new(8, 8, 0), Corner::Nt);
+        let nt1 = fmax_mhz(&ClusterConfig::new(8, 8, 1), Corner::Nt);
+        let gain_nt = nt1 / nt0;
+        assert!(gain_nt > 1.40 && gain_nt < 1.55, "NT 0p→1p gain = {gain_nt}");
+
+        let st0 = fmax_mhz(&ClusterConfig::new(8, 8, 0), Corner::St);
+        let st1 = fmax_mhz(&ClusterConfig::new(8, 8, 1), Corner::St);
+        let gain_st = st1 / st0;
+        assert!(gain_st < gain_nt, "ST gain must be structurally capped");
+        assert!(gain_st > 1.0 && gain_st < 1.3, "ST 0p→1p gain = {gain_st}");
+    }
+
+    /// §3.3: the second stage adds only slightly, never hurts fmax.
+    #[test]
+    fn second_stage_slight_increase() {
+        for corner in [Corner::Nt, Corner::St] {
+            for cores in [8usize, 16] {
+                let f1 = fmax_mhz(&ClusterConfig::new(cores, cores, 1), corner);
+                let f2 = fmax_mhz(&ClusterConfig::new(cores, cores, 2), corner);
+                assert!(f2 >= f1, "{cores}c {corner}: f2={f2} < f1={f1}");
+                assert!(f2 / f1 < 1.10, "2p gain should be slight: {}", f2 / f1);
+            }
+        }
+    }
+
+    /// §3.3: 16-core clusters run slower than 8-core ones.
+    #[test]
+    fn sixteen_cores_slower() {
+        for corner in [Corner::Nt, Corner::St] {
+            for pipe in 0..=2 {
+                let f8 = fmax_mhz(&ClusterConfig::new(8, 8, pipe), corner);
+                let f16 = fmax_mhz(&ClusterConfig::new(16, 16, pipe), corner);
+                assert!(f16 <= f8, "pipe={pipe} {corner}: 16c must not be faster");
+            }
+        }
+    }
+
+    /// §3.2/§3.3: sharing-interconnect impact on fmax is negligible (<2%).
+    #[test]
+    fn sharing_impact_negligible() {
+        for pipe in 0..=2 {
+            let (lo, _, hi) = fig3_spread(8, pipe, Corner::St);
+            assert!((hi - lo) / hi < 0.02, "pipe={pipe}: spread {lo}..{hi}");
+        }
+    }
+
+    /// NT is always slower than ST for the same configuration.
+    #[test]
+    fn nt_slower_than_st() {
+        for cfg in ClusterConfig::design_space() {
+            assert!(fmax_mhz(&cfg, Corner::Nt) <= fmax_mhz(&cfg, Corner::St) + 1e-9, "{cfg}");
+        }
+    }
+}

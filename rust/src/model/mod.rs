@@ -1,0 +1,67 @@
+//! Analytic frequency / power / area models (Figs 3–5), calibrated to every
+//! anchor the paper publishes (Table 6 triples, §3.3 narrative, Tables 4/5
+//! efficiency peaks). The simulator produces cycles and activity; these
+//! models convert them into Gflop/s, Gflop/s/W and Gflop/s/mm².
+
+pub mod area;
+pub mod freq;
+pub mod power;
+
+pub use area::area_mm2;
+pub use freq::{fig3_spread, fmax_mhz};
+pub use power::{energy_per_cycle_pj, gflops_per_watt, power_mw, Activity};
+
+use crate::cluster::counters::RunStats;
+use crate::config::{ClusterConfig, Corner};
+
+/// The three paper metrics for one (config, benchmark) measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Metrics {
+    /// Gflop/s at the ST fmax (Tables 4/5 compute performance at 0.8 V).
+    pub perf_gflops: f64,
+    /// Gflop/s/W at NT (Tables 4/5 compute energy efficiency at 0.65 V).
+    pub energy_eff: f64,
+    /// Gflop/s/mm² at ST.
+    pub area_eff: f64,
+    /// Raw flops/cycle (frequency-independent).
+    pub flops_per_cycle: f64,
+}
+
+/// Convert a run into the paper's three metrics.
+pub fn metrics(cfg: &ClusterConfig, stats: &RunStats) -> Metrics {
+    let fpc = stats.flops_per_cycle();
+    let act = Activity::from_stats(stats);
+    let f_st = fmax_mhz(cfg, Corner::St);
+    let perf = fpc * f_st * 1e6 / 1e9;
+    let eff = gflops_per_watt(cfg, Corner::Nt, &act, fpc);
+    let aeff = perf / area_mm2(cfg);
+    Metrics { perf_gflops: perf, energy_eff: eff, area_eff: aeff, flops_per_cycle: fpc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::counters::CoreCounters;
+
+    #[test]
+    fn metrics_pipeline() {
+        let cfg = ClusterConfig::new(16, 16, 1);
+        let c = CoreCounters {
+            cycles: 1000,
+            active: 900,
+            instrs: 900,
+            fp_instrs: 300,
+            fp_vec_instrs: 300,
+            flops: 1200,
+            mem_instrs: 300,
+            ..Default::default()
+        };
+        let stats = RunStats { per_core: vec![c; 16], total_cycles: 1000 };
+        let m = metrics(&cfg, &stats);
+        // 19.2 flops/cycle at 370 MHz ≈ 7.1 Gflop/s.
+        assert!((m.flops_per_cycle - 19.2).abs() < 1e-9);
+        assert!(m.perf_gflops > 6.5 && m.perf_gflops < 7.6, "{}", m.perf_gflops);
+        assert!(m.energy_eff > 50.0 && m.energy_eff < 400.0, "{}", m.energy_eff);
+        assert!((m.area_eff - m.perf_gflops / area_mm2(&cfg)).abs() < 1e-9);
+    }
+}

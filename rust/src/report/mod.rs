@@ -1,0 +1,154 @@
+//! Report formatting: plain-text/markdown table builder, CSV writer, and
+//! the Table 6 state-of-the-art comparison data.
+
+pub mod soa;
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned text table with an optional "highlight" marker
+/// (used to box the best configuration per row, like the paper's tables).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Table { headers: headers.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match the header count).
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut width = vec![0usize; ncols];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "| {:<w$} ", c, w = width[i]);
+            }
+            out.push_str("|\n");
+        };
+        fmt_row(&self.headers, &width, &mut out);
+        for (i, w) in width.iter().enumerate() {
+            let _ = write!(out, "|{:-<w$}", "", w = w + 2);
+            if i == ncols - 1 {
+                out.push_str("|\n");
+            }
+        }
+        for r in &self.rows {
+            fmt_row(r, &width, &mut out);
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(esc).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a value with the paper's 2-significant-style precision and mark
+/// the best column with a `[x]` box.
+pub fn fmt_cell(v: f64, best: bool) -> String {
+    let s = if v >= 100.0 {
+        format!("{v:.0}")
+    } else if v >= 10.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.2}")
+    };
+    if best {
+        format!("[{s}]")
+    } else {
+        s
+    }
+}
+
+/// Min-max normalize a slice into [0, 1] (constant slices map to 0).
+pub fn minmax_normalize(vals: &[f64]) -> Vec<f64> {
+    let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if (hi - lo).abs() < 1e-30 {
+        return vec![0.0; vals.len()];
+    }
+    vals.iter().map(|v| (v - lo) / (hi - lo)).collect()
+}
+
+/// Index of the maximum value.
+pub fn argmax(vals: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, v) in vals.iter().enumerate() {
+        if *v > vals[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["name", "v"]);
+        t.row(vec!["a", "1.0"]);
+        t.row(vec!["long-name", "2"]);
+        let r = t.render();
+        assert!(r.contains("| long-name | 2   |"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["x,y", "q\"z"]);
+        let c = t.to_csv();
+        assert!(c.contains("\"x,y\",\"q\"\"z\""));
+    }
+
+    #[test]
+    fn normalize_and_argmax() {
+        let n = minmax_normalize(&[2.0, 4.0, 3.0]);
+        assert_eq!(n, vec![0.0, 1.0, 0.5]);
+        assert_eq!(argmax(&[1.0, 5.0, 2.0]), 1);
+        assert_eq!(minmax_normalize(&[3.3, 3.3]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn cell_formatting() {
+        assert_eq!(fmt_cell(167.3, false), "167");
+        assert_eq!(fmt_cell(16.73, false), "16.7");
+        assert_eq!(fmt_cell(1.673, true), "[1.67]");
+    }
+}

@@ -1,0 +1,198 @@
+//! Table 6 — comparison with state-of-the-art architectures. The competitor
+//! rows are literature values quoted directly from the paper; the
+//! "This work" columns are **measured** on our reproduction (single-precision
+//! MATMUL, like the paper's methodology).
+
+/// One platform row of Table 6.
+#[derive(Debug, Clone)]
+pub struct SoaRow {
+    pub name: &'static str,
+    pub domain: &'static str,
+    pub technology: &'static str,
+    pub voltage: &'static str,
+    pub freq_ghz: f64,
+    pub area_mm2: Option<f64>,
+    pub perf_gflops: f64,
+    pub energy_eff: f64,
+    pub area_eff: Option<f64>,
+    pub fp_formats: &'static str,
+    pub exec_model: &'static str,
+}
+
+/// The competitor platforms (values transcribed from Table 6).
+pub fn competitors() -> Vec<SoaRow> {
+    vec![
+        SoaRow {
+            name: "Ara [27]",
+            domain: "High-perf.",
+            technology: "GF 22FDX",
+            voltage: "0.80",
+            freq_ghz: 1.04,
+            area_mm2: Some(2.14),
+            perf_gflops: 64.80,
+            energy_eff: 81.60,
+            area_eff: Some(30.34),
+            fp_formats: "float/float16/bfloat16/minifloat",
+            exec_model: "SIMD vector unit (accelerator)",
+        },
+        SoaRow {
+            name: "Hwacha [28]",
+            domain: "High-perf.",
+            technology: "45nm SOI",
+            voltage: "0.80",
+            freq_ghz: 0.55,
+            area_mm2: Some(3.00),
+            perf_gflops: 3.44,
+            energy_eff: 25.00,
+            area_eff: Some(1.14),
+            fp_formats: "double/float",
+            exec_model: "SIMT vector-thread unit (accelerator)",
+        },
+        SoaRow {
+            name: "Snitch [42]",
+            domain: "High-perf.",
+            technology: "GF 22FDX",
+            voltage: "0.80",
+            freq_ghz: 1.06,
+            area_mm2: Some(0.89),
+            perf_gflops: 14.38,
+            energy_eff: 103.84,
+            area_eff: Some(25.83),
+            fp_formats: "double/float",
+            exec_model: "Loop-buffer tensor streaming (accelerator)",
+        },
+        SoaRow {
+            name: "Ariane [41]",
+            domain: "High-perf.",
+            technology: "GF 22FDX",
+            voltage: "0.80",
+            freq_ghz: 0.92,
+            area_mm2: Some(0.39),
+            perf_gflops: 2.04,
+            energy_eff: 33.02,
+            area_eff: Some(5.23),
+            fp_formats: "float/float16/bfloat16/minifloat",
+            exec_model: "SIMD processor",
+        },
+        SoaRow {
+            name: "NTX [41]",
+            domain: "High-perf.",
+            technology: "GF 22FDX",
+            voltage: "0.80",
+            freq_ghz: 1.55,
+            area_mm2: Some(0.56),
+            perf_gflops: 18.27,
+            energy_eff: 110.05,
+            area_eff: Some(32.63),
+            fp_formats: "float (wide accum.)",
+            exec_model: "Loop-buffer tensor streaming (accelerator)",
+        },
+        SoaRow {
+            name: "Xavier",
+            domain: "Embedded",
+            technology: "TSMC 12FFN",
+            voltage: "0.75",
+            freq_ghz: 1.38,
+            area_mm2: Some(11.03),
+            perf_gflops: 153.00,
+            energy_eff: 52.39,
+            area_eff: Some(13.84),
+            fp_formats: "float/float16",
+            exec_model: "SIMT vector-thread unit (accelerator)",
+        },
+        SoaRow {
+            name: "STM32H7",
+            domain: "Embedded",
+            technology: "40nm CMOS",
+            voltage: "1.80",
+            freq_ghz: 0.48,
+            area_mm2: None,
+            perf_gflops: 0.07,
+            energy_eff: 0.44,
+            area_eff: None,
+            fp_formats: "float",
+            exec_model: "Processor",
+        },
+        SoaRow {
+            name: "Mr.Wolf [2]",
+            domain: "Embedded",
+            technology: "40nm CMOS",
+            voltage: "1.10",
+            freq_ghz: 0.45,
+            area_mm2: Some(10.00),
+            perf_gflops: 1.00,
+            energy_eff: 4.50,
+            area_eff: Some(1.70),
+            fp_formats: "float",
+            exec_model: "Multi-core processor",
+        },
+    ]
+}
+
+/// The paper's reported values for its own three configurations, for
+/// side-by-side comparison with our measured reproduction.
+pub struct PaperSelf {
+    pub mnemonic: &'static str,
+    pub role: &'static str,
+    pub freq_ghz: f64,
+    pub area_mm2: f64,
+    pub perf_gflops: f64,
+    pub energy_eff: f64,
+    pub area_eff: f64,
+}
+
+/// Table 6 "This work" columns as printed in the paper.
+pub fn paper_self_rows() -> [PaperSelf; 3] {
+    [
+        PaperSelf {
+            mnemonic: "16c16f1p",
+            role: "best perf.",
+            freq_ghz: 0.37,
+            area_mm2: 2.10,
+            perf_gflops: 2.86,
+            energy_eff: 26.0,
+            area_eff: 1.50,
+        },
+        PaperSelf {
+            mnemonic: "16c16f0p",
+            role: "best en. eff.",
+            freq_ghz: 0.30,
+            area_mm2: 1.80,
+            perf_gflops: 2.30,
+            energy_eff: 81.0,
+            area_eff: 0.60,
+        },
+        PaperSelf {
+            mnemonic: "8c4f1p",
+            role: "best area eff.",
+            freq_ghz: 0.43,
+            area_mm2: 0.97,
+            perf_gflops: 1.74,
+            energy_eff: 23.4,
+            area_eff: 1.78,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn competitor_data_is_complete() {
+        let c = competitors();
+        assert_eq!(c.len(), 8);
+        assert!(c.iter().all(|r| r.perf_gflops > 0.0 && r.energy_eff > 0.0));
+        // Paper ordering: high-perf first, embedded after.
+        assert_eq!(c[0].name, "Ara [27]");
+        assert_eq!(c[7].name, "Mr.Wolf [2]");
+    }
+
+    #[test]
+    fn self_rows_match_paper_anchors() {
+        let s = paper_self_rows();
+        assert_eq!(s[0].freq_ghz, 0.37);
+        assert_eq!(s[1].energy_eff, 81.0);
+        assert_eq!(s[2].area_mm2, 0.97);
+    }
+}

@@ -1,0 +1,282 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas goldens
+//! (`artifacts/*.hlo.txt`) and execute them on the XLA CPU client from the
+//! Rust hot path — Python is never involved at run time.
+//!
+//! The interchange format is HLO **text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md). Every golden takes binary32 inputs in the
+//! order of the benchmark's staged non-scratch buffers and returns a
+//! 1-tuple of binary32 arrays.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ClusterConfig;
+use crate::kernels::{Benchmark, Staged, Variant, Workload};
+use crate::transfp::{FpMode, FpSpec};
+
+/// A compiled golden executable on the PJRT CPU client.
+pub struct Golden {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (diagnostics).
+    pub name: String,
+}
+
+impl Golden {
+    /// Load and compile `<dir>/<name>.hlo.txt`.
+    pub fn load(dir: &str, name: &str) -> Result<Golden> {
+        let path = Path::new(dir).join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact {} missing — run `make artifacts`", path.display());
+        }
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(wrap)
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(wrap)?;
+        Ok(Golden { client, exe, name: name.to_string() })
+    }
+
+    /// Execute with f32 inputs (`(data, dims)` pairs); returns the flattened
+    /// f32 outputs of the 1-tuple result.
+    pub fn run_f32(&self, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
+        let _ = &self.client;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data).reshape(dims).map_err(wrap)?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let tuple = result.to_tuple().map_err(wrap)?;
+        tuple.into_iter().map(|l| l.to_vec::<f32>().map_err(wrap)).collect()
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// One validation case: artifact name ↔ (benchmark, variant) + tolerances.
+pub struct Case {
+    artifact: &'static str,
+    bench: Benchmark,
+    variant: Variant,
+    rtol: f64,
+    atol: f64,
+}
+
+/// The validation matrix: every benchmark in binary32, MATMUL and FIR
+/// additionally in both 16-bit formats.
+fn cases() -> Vec<Case> {
+    use Benchmark::*;
+    let f32c = |artifact, bench| Case { artifact, bench, variant: Variant::Scalar, rtol: 2e-4, atol: 1e-5 };
+    vec![
+        f32c("matmul_f32", Matmul),
+        f32c("fir_f32", Fir),
+        f32c("conv_f32", Conv),
+        f32c("dwt_f32", Dwt),
+        Case { artifact: "fft_f32", bench: Fft, variant: Variant::Scalar, rtol: 2e-3, atol: 2e-4 },
+        f32c("iir_f32", Iir),
+        f32c("kmeans_f32", Kmeans),
+        f32c("svm_f32", Svm),
+        Case { artifact: "matmul_f16", bench: Matmul, variant: Variant::VEC, rtol: 6e-3, atol: 2e-2 },
+        Case {
+            artifact: "matmul_bf16",
+            bench: Matmul,
+            variant: Variant::Vector(FpMode::VecBf16),
+            rtol: 4e-2,
+            atol: 8e-2,
+        },
+        Case { artifact: "fir_f16", bench: Fir, variant: Variant::VEC, rtol: 6e-3, atol: 6e-3 },
+    ]
+}
+
+/// Reconstruct the golden's f32 parameters from a workload's staged buffers
+/// (dequantizing 16-bit lanes — the graph re-quantizes on the same RNE
+/// lattice, so values round-trip exactly).
+fn params_from_stage(w: &Workload, bench: Benchmark, variant: Variant) -> Vec<(Vec<f32>, Vec<i64>)> {
+    let spec: &FpSpec = crate::kernels::spec_of(variant);
+    let as_f32 = |s: &Staged| -> Vec<f32> {
+        match s {
+            Staged::F32(v) => v.clone(),
+            Staged::U16(q) => q.iter().map(|&b| spec.to_f64(b) as f32).collect(),
+            Staged::U32(_) => panic!("raw u32 staging has no golden parameter"),
+        }
+    };
+    let st = &w.stage;
+    match bench {
+        Benchmark::Matmul => {
+            let n = (as_f32(&st[0].1).len() as f64).sqrt() as i64;
+            vec![
+                (as_f32(&st[0].1), vec![n, n]),
+                (as_f32(&st[1].1), vec![n, n]),
+            ]
+        }
+        Benchmark::Fir => {
+            let h = as_f32(&st[1].1);
+            let mut x = as_f32(&st[0].1);
+            // The vector staging appends a guard pair — the golden's x has
+            // exactly n + taps samples.
+            x.truncate(w.out_len + h.len());
+            let (xl, hl) = (x.len() as i64, h.len() as i64);
+            vec![(x, vec![xl]), (h, vec![hl])]
+        }
+        Benchmark::Conv => {
+            let img = as_f32(&st[0].1);
+            let k = as_f32(&st[1].1);
+            let w_img = 32i64; // default workload size
+            let h_img = img.len() as i64 / w_img;
+            vec![(img, vec![h_img, w_img]), (k[..9].to_vec(), vec![3, 3])]
+        }
+        Benchmark::Dwt => {
+            let mut x = as_f32(&st[0].1);
+            x.truncate(w.out_len); // drop the zero pad
+            let n = x.len() as i64;
+            vec![(x, vec![n])]
+        }
+        Benchmark::Fft => {
+            let x = as_f32(&st[0].1);
+            let n = x.len() as i64;
+            vec![(x, vec![n])]
+        }
+        Benchmark::Iir => {
+            let x = as_f32(&st[0].1);
+            let x = x[2..].to_vec(); // drop the two leading zeros
+            let n = x.len() as i64;
+            vec![(x, vec![n])]
+        }
+        Benchmark::Kmeans => {
+            let pts = as_f32(&st[0].1);
+            let cent = as_f32(&st[1].1);
+            let k = 4i64;
+            let d = cent.len() as i64 / k;
+            let n = pts.len() as i64 / d;
+            vec![(pts, vec![n, d]), (cent, vec![k, d])]
+        }
+        Benchmark::Svm => {
+            let sv = as_f32(&st[0].1);
+            let alpha = as_f32(&st[1].1);
+            let x = as_f32(&st[2].1);
+            let bias = as_f32(&st[4].1);
+            let nsv = alpha.len() as i64;
+            let d = x.len() as i64;
+            vec![(sv, vec![nsv, d]), (alpha, vec![nsv]), (x, vec![d]), (bias, vec![1])]
+        }
+    }
+}
+
+/// Validate one case: run the simulator workload and the XLA golden on the
+/// same inputs and compare outputs. Returns (max abs diff, elements).
+pub fn validate_case(dir: &str, case: &Case) -> Result<(f64, usize)> {
+    let cfg = ClusterConfig::new(8, 8, 0);
+    let w = case.bench.build(case.variant, &cfg);
+    let (_, sim_out) = w.run(&cfg);
+    w.verify(&sim_out).map_err(|e| anyhow!("simulator self-check: {e}"))?;
+
+    let golden = Golden::load(dir, case.artifact)?;
+    let params = params_from_stage(&w, case.bench, case.variant);
+    let out = golden.run_f32(&params)?;
+    let xla_out = &out[0];
+
+    if xla_out.len() != sim_out.len() {
+        bail!(
+            "{}: XLA output length {} != simulator {}",
+            case.artifact,
+            xla_out.len(),
+            sim_out.len()
+        );
+    }
+    let mut max_diff = 0.0f64;
+    for (i, (x, s)) in xla_out.iter().zip(&sim_out).enumerate() {
+        let diff = (*x as f64 - s).abs();
+        let tol = case.atol + case.rtol * s.abs();
+        if diff > tol {
+            bail!(
+                "{}: mismatch at {i}: xla={x} sim={s} (|diff|={diff:.3e} > tol={tol:.3e})",
+                case.artifact
+            );
+        }
+        max_diff = max_diff.max(diff);
+    }
+    Ok((max_diff, sim_out.len()))
+}
+
+/// Run the full validation matrix; returns a human-readable report.
+pub fn validate_all(dir: &str) -> Result<String> {
+    if !Path::new(dir).join("MANIFEST").exists() {
+        bail!("no artifacts in `{dir}` — run `make artifacts` first");
+    }
+    let mut report = String::new();
+    report.push_str("simulator vs XLA golden validation\n");
+    let mut failures = 0;
+    for case in cases() {
+        match validate_case(dir, &case) {
+            Ok((max_diff, n)) => {
+                report.push_str(&format!(
+                    "  {:12} {:7} {:6} elems  max|diff| {:.3e}  OK\n",
+                    case.artifact,
+                    case.variant.label(),
+                    n,
+                    max_diff
+                ));
+            }
+            Err(e) => {
+                failures += 1;
+                report.push_str(&format!("  {:12} FAILED: {e}\n", case.artifact));
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} validation case(s) failed:\n{report}");
+    }
+    report.push_str("all cases passed\n");
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Path::new("artifacts/MANIFEST").exists()
+    }
+
+    /// Full matrix — requires `make artifacts` to have run (skips otherwise,
+    /// like the FPGA bitstream prerequisite in the paper's flow).
+    #[test]
+    fn validate_against_xla_goldens() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+            return;
+        }
+        let report = validate_all("artifacts").expect("validation");
+        assert!(report.contains("all cases passed"), "{report}");
+    }
+
+    /// The exg_mlp e2e artifact loads and produces finite logits.
+    #[test]
+    fn exg_mlp_runs() {
+        if !have_artifacts() {
+            return;
+        }
+        let g = Golden::load("artifacts", "exg_mlp").unwrap();
+        let windows = vec![0.1f32; 16 * 64];
+        let w1: Vec<f32> = (0..64 * 64).map(|i| ((i % 13) as f32 - 6.0) / 40.0).collect();
+        let w2: Vec<f32> = (0..64 * 16).map(|i| ((i % 7) as f32 - 3.0) / 40.0).collect();
+        let out = g
+            .run_f32(&[
+                (windows, vec![16, 64]),
+                (w1, vec![64, 64]),
+                (w2, vec![64, 16]),
+            ])
+            .unwrap();
+        assert_eq!(out[0].len(), 16 * 16);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,152 @@
+//! Minimal in-repo property-testing + PRNG utilities.
+//!
+//! The build environment is fully offline (no `proptest`/`rand`), so tests
+//! and workload generators use this deterministic xorshift-based kit. The
+//! property harness runs a closure over N pseudo-random cases and reports
+//! the failing seed for reproduction.
+
+/// Deterministic xorshift64* PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    /// Seeded generator (seed 0 is remapped to a fixed odd constant).
+    pub fn new(seed: u64) -> Self {
+        Rng(if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed })
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Next u32.
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.unit() * (hi - lo)
+    }
+
+    /// Uniform f32 in `[lo, hi)` — the workload generators' staple.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.range(lo as f64, hi as f64) as f32
+    }
+
+    /// A vector of uniform f32 samples.
+    pub fn f32_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Standard-normal-ish sample (sum of 4 uniforms, CLT approximation) —
+    /// good enough for synthetic sensor noise.
+    pub fn gauss(&mut self) -> f64 {
+        (0..4).map(|_| self.unit()).sum::<f64>() * (3.0f64).sqrt() - 2.0 * (3.0f64).sqrt() / 2.0
+    }
+}
+
+/// Run `body` over `cases` seeded pseudo-random cases; panics with the
+/// failing seed on the first failure.
+pub fn check_cases(cases: u64, mut body: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close (absolute + relative bound).
+pub fn assert_allclose(actual: &[f32], expect: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(actual.len(), expect.len(), "length mismatch");
+    for (i, (a, e)) in actual.iter().zip(expect).enumerate() {
+        let tol = atol + rtol * e.abs();
+        assert!(
+            (a - e).abs() <= tol || (a.is_nan() && e.is_nan()),
+            "mismatch at {i}: actual={a}, expect={e}, |diff|={} > tol={tol}",
+            (a - e).abs()
+        );
+    }
+}
+
+/// Max ulp distance between two same-format 16-bit values (diagnostics for
+/// the transprecision comparisons).
+pub fn ulp_dist_16(a: u16, b: u16) -> u32 {
+    // Map sign-magnitude to a monotone integer line.
+    let key = |x: u16| -> i32 {
+        if x & 0x8000 != 0 {
+            -((x & 0x7FFF) as i32)
+        } else {
+            (x & 0x7FFF) as i32
+        }
+    };
+    (key(a) - key(b)).unsigned_abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_ranges() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.range(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&v));
+            let u = r.below(17);
+            assert!(u < 17);
+        }
+    }
+
+    #[test]
+    fn check_cases_runs_all() {
+        let mut n = 0;
+        check_cases(25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn allclose_accepts_and_rejects() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 1e-6);
+        let r = std::panic::catch_unwind(|| {
+            assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6);
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn ulp_distance() {
+        assert_eq!(ulp_dist_16(0x3C00, 0x3C01), 1);
+        assert_eq!(ulp_dist_16(0x0000, 0x8000), 0); // ±0 are adjacent keys (both 0)
+        assert_eq!(ulp_dist_16(0x3C00, 0x3C00), 0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Format conversions: scalar casts, int↔fp, and the paper's
+//! **cast-and-pack** instructions (`vfcpka.{h,ah}.s` &c.) that convert two
+//! binary32 scalars and deposit them into adjacent lanes of a packed vector
+//! in one instruction — removing the "convert scalars and assemble vectors"
+//! bottleneck discussed in §4 of the paper.
+
+use super::simd::{pack2, unpack2};
+use super::spec::FpSpec;
+
+/// binary32 → 16-bit format, round to nearest even.
+#[inline]
+pub fn f32_to_16(spec: &FpSpec, a: u32) -> u16 {
+    spec.from_f64(f32::from_bits(a) as f64)
+}
+
+/// 16-bit format → binary32 (exact).
+#[inline]
+pub fn f16_to_32(spec: &FpSpec, a: u16) -> u32 {
+    (spec.to_f64(a) as f32).to_bits()
+}
+
+/// 16-bit → 16-bit cross-format conversion (e.g. float16 → bfloat16).
+#[inline]
+pub fn f16_to_16(from: &FpSpec, to: &FpSpec, a: u16) -> u16 {
+    to.from_f64(from.to_f64(a))
+}
+
+/// Signed i32 → binary32 (RNE — `fcvt.s.w`).
+#[inline]
+pub fn i32_to_f32(a: u32) -> u32 {
+    (a as i32 as f32).to_bits()
+}
+
+/// binary32 → signed i32, round toward zero (`fcvt.w.s` RTZ), saturating per
+/// RISC-V semantics; NaN → i32::MAX.
+#[inline]
+pub fn f32_to_i32(a: u32) -> u32 {
+    let x = f32::from_bits(a);
+    if x.is_nan() {
+        return i32::MAX as u32;
+    }
+    let t = x.trunc();
+    if t >= i32::MAX as f32 {
+        i32::MAX as u32
+    } else if t <= i32::MIN as f32 {
+        i32::MIN as u32
+    } else {
+        (t as i32) as u32
+    }
+}
+
+/// Signed i32 → 16-bit format.
+#[inline]
+pub fn i32_to_16(spec: &FpSpec, a: u32) -> u16 {
+    spec.from_f64(a as i32 as f64)
+}
+
+/// 16-bit format → signed i32 (RTZ, saturating).
+#[inline]
+pub fn f16_to_i32(spec: &FpSpec, a: u16) -> u32 {
+    if spec.is_nan(a) {
+        return i32::MAX as u32;
+    }
+    let t = spec.to_f64(a).trunc();
+    if t >= i32::MAX as f64 {
+        i32::MAX as u32
+    } else if t <= i32::MIN as f64 {
+        i32::MIN as u32
+    } else {
+        (t as i32) as u32
+    }
+}
+
+/// Cast-and-pack **low**: convert f32 scalars `a`, `b` and write them to
+/// lanes 0 and 1 of the result (`vfcpka.X.s rd, ra, rb`).
+#[inline]
+pub fn cpka(spec: &FpSpec, a: u32, b: u32) -> u32 {
+    pack2(f32_to_16(spec, a), f32_to_16(spec, b))
+}
+
+/// Cast-and-pack keeping the destination's other half — used when assembling
+/// vectors incrementally: writes lane0 only.
+#[inline]
+pub fn cpk_lane0(spec: &FpSpec, dest: u32, a: u32) -> u32 {
+    let (_, hi) = unpack2(dest);
+    pack2(f32_to_16(spec, a), hi)
+}
+
+/// Writes lane1 only.
+#[inline]
+pub fn cpk_lane1(spec: &FpSpec, dest: u32, a: u32) -> u32 {
+    let (lo, _) = unpack2(dest);
+    pack2(lo, f32_to_16(spec, a))
+}
+
+/// Unpack-and-cast both lanes to two f32 values (lane0, lane1) — the inverse
+/// direction, used when a vector result feeds scalar high-precision code.
+#[inline]
+pub fn vunpack_f32(spec: &FpSpec, v: u32) -> (u32, u32) {
+    let (lo, hi) = unpack2(v);
+    (f16_to_32(spec, lo), f16_to_32(spec, hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfp::spec::{BF16, F16};
+
+    #[test]
+    fn f32_roundtrips_through_16() {
+        // Values exactly representable in f16 survive the round trip.
+        for v in [0.0f32, 1.0, -2.5, 0.125, 65504.0] {
+            let h = f32_to_16(&F16, v.to_bits());
+            assert_eq!(f32::from_bits(f16_to_32(&F16, h)), v);
+        }
+        // bf16 keeps range, loses mantissa.
+        let h = f32_to_16(&BF16, 3.0e38f32.to_bits());
+        assert!((f32::from_bits(f16_to_32(&BF16, h)) - 3.0e38).abs() < 3.0e36);
+    }
+
+    #[test]
+    fn cross_format() {
+        let h = F16.from_f64(0.1);
+        let b = f16_to_16(&F16, &BF16, h);
+        // f16(0.1) = 0.0999755859375 = 1.59960937·2⁻⁴; bf16 mantissa steps of
+        // 1/128 put the neighbours at 0.099609375 / 0.10009765625, and
+        // 76.75/128 rounds up → 0.10009765625.
+        assert_eq!(BF16.to_f64(b), 0.10009765625);
+    }
+
+    #[test]
+    fn int_conversions() {
+        assert_eq!(f32::from_bits(i32_to_f32(-7i32 as u32)), -7.0);
+        assert_eq!(f32_to_i32((-3.75f32).to_bits()) as i32, -3);
+        assert_eq!(f32_to_i32(f32::NAN.to_bits()) as i32, i32::MAX);
+        assert_eq!(f32_to_i32(1e20f32.to_bits()) as i32, i32::MAX);
+        assert_eq!(F16.to_f64(i32_to_16(&F16, 100u32)), 100.0);
+        assert_eq!(f16_to_i32(&F16, F16.from_f64(-2.9)) as i32, -2);
+    }
+
+    #[test]
+    fn cast_and_pack() {
+        let v = cpka(&F16, 1.5f32.to_bits(), (-2.0f32).to_bits());
+        let (lo, hi) = vunpack_f32(&F16, v);
+        assert_eq!(f32::from_bits(lo), 1.5);
+        assert_eq!(f32::from_bits(hi), -2.0);
+
+        let mut d = 0u32;
+        d = cpk_lane0(&F16, d, 3.0f32.to_bits());
+        d = cpk_lane1(&F16, d, 4.0f32.to_bits());
+        assert_eq!(v_lanes(&F16, d), (3.0, 4.0));
+    }
+
+    fn v_lanes(spec: &FpSpec, v: u32) -> (f64, f64) {
+        let (lo, hi) = crate::transfp::simd::unpack2(v);
+        (spec.to_f64(lo), spec.to_f64(hi))
+    }
+}

@@ -1,0 +1,69 @@
+//! Bit-accurate transprecision floating-point substrate.
+//!
+//! This module reimplements, in software, the numerics of the FPnew
+//! transprecision FPU integrated in the paper's cluster (§3.2): IEEE
+//! binary32 scalars, IEEE binary16 (`float16`) and bfloat16 scalars, 2×16
+//! packed-SIMD vectors on the 32-bit datapath, widening multi-format FMA,
+//! cast-and-pack, and the iterative DIV-SQRT block's operations.
+//!
+//! Everything operates on raw bit patterns (`u32` registers, 16-bit lanes as
+//! `u16`), because the simulated register file is format-oblivious exactly
+//! like the hardware one.
+
+pub mod cast;
+pub mod scalar;
+pub mod simd;
+pub mod spec;
+
+pub use scalar::CmpPred;
+pub use spec::{FpSpec, BF16, F16};
+
+/// Which FP format a (micro-)instruction operates in. `VecF16`/`VecBf16`
+/// are the packed-SIMD 2×16 modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FpMode {
+    F32,
+    F16,
+    Bf16,
+    VecF16,
+    VecBf16,
+}
+
+impl FpMode {
+    /// The 16-bit lane spec, if this mode has one.
+    pub fn spec(&self) -> Option<&'static FpSpec> {
+        match self {
+            FpMode::F32 => None,
+            FpMode::F16 | FpMode::VecF16 => Some(&F16),
+            FpMode::Bf16 | FpMode::VecBf16 => Some(&BF16),
+        }
+    }
+
+    /// Number of lanes (1 scalar, 2 packed).
+    pub fn lanes(&self) -> u32 {
+        match self {
+            FpMode::VecF16 | FpMode::VecBf16 => 2,
+            _ => 1,
+        }
+    }
+
+    /// True for the packed-SIMD modes.
+    pub fn is_vector(&self) -> bool {
+        self.lanes() == 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_properties() {
+        assert_eq!(FpMode::F32.lanes(), 1);
+        assert_eq!(FpMode::VecF16.lanes(), 2);
+        assert!(FpMode::VecBf16.is_vector());
+        assert!(FpMode::F32.spec().is_none());
+        assert_eq!(FpMode::VecBf16.spec().unwrap().exp_bits, 8);
+        assert_eq!(FpMode::F16.spec().unwrap().man_bits, 10);
+    }
+}

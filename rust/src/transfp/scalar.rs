@@ -1,0 +1,284 @@
+//! Scalar transprecision arithmetic on raw bit patterns.
+//!
+//! 16-bit ops widen exactly to binary64, compute (FMA fused via
+//! `f64::mul_add`), and round once via [`FpSpec::from_f64`]. binary32 ops use
+//! native `f32` arithmetic (`f32::mul_add` for FMA) — IEEE correct on every
+//! platform Rust targets.
+
+use super::spec::FpSpec;
+
+// ---------------------------------------------------------------- binary32
+
+/// f32 bit-pattern add.
+#[inline]
+pub fn add32(a: u32, b: u32) -> u32 {
+    (f32::from_bits(a) + f32::from_bits(b)).to_bits()
+}
+
+/// f32 bit-pattern subtract.
+#[inline]
+pub fn sub32(a: u32, b: u32) -> u32 {
+    (f32::from_bits(a) - f32::from_bits(b)).to_bits()
+}
+
+/// f32 bit-pattern multiply.
+#[inline]
+pub fn mul32(a: u32, b: u32) -> u32 {
+    (f32::from_bits(a) * f32::from_bits(b)).to_bits()
+}
+
+/// f32 fused multiply-add: `a*b + c` with a single rounding.
+#[inline]
+pub fn fma32(a: u32, b: u32, c: u32) -> u32 {
+    f32::from_bits(a)
+        .mul_add(f32::from_bits(b), f32::from_bits(c))
+        .to_bits()
+}
+
+/// f32 divide.
+#[inline]
+pub fn div32(a: u32, b: u32) -> u32 {
+    (f32::from_bits(a) / f32::from_bits(b)).to_bits()
+}
+
+/// f32 square root.
+#[inline]
+pub fn sqrt32(a: u32) -> u32 {
+    f32::from_bits(a).sqrt().to_bits()
+}
+
+/// IEEE minimumNumber (NaN loses against a number), as FPnew implements FMIN.
+#[inline]
+pub fn min32(a: u32, b: u32) -> u32 {
+    let (x, y) = (f32::from_bits(a), f32::from_bits(b));
+    if x.is_nan() {
+        b
+    } else if y.is_nan() {
+        a
+    } else if x < y || (x == y && x.is_sign_negative()) {
+        a
+    } else {
+        b
+    }
+}
+
+/// IEEE maximumNumber.
+#[inline]
+pub fn max32(a: u32, b: u32) -> u32 {
+    let (x, y) = (f32::from_bits(a), f32::from_bits(b));
+    if x.is_nan() {
+        b
+    } else if y.is_nan() {
+        a
+    } else if x > y || (x == y && x.is_sign_positive()) {
+        a
+    } else {
+        b
+    }
+}
+
+/// Comparison predicates used by the ISA's `feq/flt/fle` (return 0/1).
+#[inline]
+pub fn cmp32(a: u32, b: u32, pred: CmpPred) -> u32 {
+    let (x, y) = (f32::from_bits(a), f32::from_bits(b));
+    let r = match pred {
+        CmpPred::Eq => x == y,
+        CmpPred::Lt => x < y,
+        CmpPred::Le => x <= y,
+    };
+    r as u32
+}
+
+/// Floating-point comparison predicate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpPred {
+    Eq,
+    Lt,
+    Le,
+}
+
+// ---------------------------------------------------------------- 16-bit
+
+/// 16-bit add in format `spec`.
+#[inline]
+pub fn add16(spec: &FpSpec, a: u16, b: u16) -> u16 {
+    spec.from_f64(spec.to_f64(a) + spec.to_f64(b))
+}
+
+/// 16-bit subtract.
+#[inline]
+pub fn sub16(spec: &FpSpec, a: u16, b: u16) -> u16 {
+    spec.from_f64(spec.to_f64(a) - spec.to_f64(b))
+}
+
+/// 16-bit multiply. The binary64 product of two ≤11-bit significands is
+/// exact, so the single `from_f64` rounding is the correctly rounded result.
+#[inline]
+pub fn mul16(spec: &FpSpec, a: u16, b: u16) -> u16 {
+    spec.from_f64(spec.to_f64(a) * spec.to_f64(b))
+}
+
+/// 16-bit fused multiply-add `a*b + c`.
+#[inline]
+pub fn fma16(spec: &FpSpec, a: u16, b: u16, c: u16) -> u16 {
+    spec.from_f64(spec.to_f64(a).mul_add(spec.to_f64(b), spec.to_f64(c)))
+}
+
+/// 16-bit divide (iterative DIV-SQRT block in hardware; numerics here).
+#[inline]
+pub fn div16(spec: &FpSpec, a: u16, b: u16) -> u16 {
+    spec.from_f64(spec.to_f64(a) / spec.to_f64(b))
+}
+
+/// 16-bit square root.
+#[inline]
+pub fn sqrt16(spec: &FpSpec, a: u16) -> u16 {
+    spec.from_f64(spec.to_f64(a).sqrt())
+}
+
+/// 16-bit minimumNumber.
+#[inline]
+pub fn min16(spec: &FpSpec, a: u16, b: u16) -> u16 {
+    if spec.is_nan(a) {
+        return b;
+    }
+    if spec.is_nan(b) {
+        return a;
+    }
+    let (x, y) = (spec.to_f64(a), spec.to_f64(b));
+    if x < y || (x == y && (a >> 15) == 1) {
+        a
+    } else {
+        b
+    }
+}
+
+/// 16-bit maximumNumber.
+#[inline]
+pub fn max16(spec: &FpSpec, a: u16, b: u16) -> u16 {
+    if spec.is_nan(a) {
+        return b;
+    }
+    if spec.is_nan(b) {
+        return a;
+    }
+    let (x, y) = (spec.to_f64(a), spec.to_f64(b));
+    if x > y || (x == y && (a >> 15) == 0) {
+        a
+    } else {
+        b
+    }
+}
+
+/// 16-bit comparison (quiet; NaN compares false).
+#[inline]
+pub fn cmp16(spec: &FpSpec, a: u16, b: u16, pred: CmpPred) -> u32 {
+    if spec.is_nan(a) || spec.is_nan(b) {
+        return 0;
+    }
+    let (x, y) = (spec.to_f64(a), spec.to_f64(b));
+    let r = match pred {
+        CmpPred::Eq => x == y,
+        CmpPred::Lt => x < y,
+        CmpPred::Le => x <= y,
+    };
+    r as u32
+}
+
+/// Multi-format FMA: 16-bit `a`, `b` in `spec`, 32-bit accumulator `c`,
+/// 32-bit result — FPnew's widening FMA (e.g. `fmac.s.h`), the key op for
+/// "accumulate in higher precision" near-sensor patterns.
+#[inline]
+pub fn fma_widen(spec: &FpSpec, a: u16, b: u16, c: u32) -> u32 {
+    let p = spec.to_f64(a).mul_add(spec.to_f64(b), f32::from_bits(c) as f64);
+    // Single rounding f64→f32: the product is exact in f64 and the add can
+    // carry at most 1 ulp of f64 error far below f32 precision.
+    (p as f32).to_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfp::spec::{BF16, F16};
+
+    #[test]
+    fn f32_ops_are_native() {
+        assert_eq!(f32::from_bits(add32(1.5f32.to_bits(), 2.25f32.to_bits())), 3.75);
+        assert_eq!(
+            f32::from_bits(fma32(3.0f32.to_bits(), 4.0f32.to_bits(), 0.5f32.to_bits())),
+            12.5
+        );
+        assert_eq!(f32::from_bits(sqrt32(9.0f32.to_bits())), 3.0);
+        assert_eq!(cmp32(1.0f32.to_bits(), 2.0f32.to_bits(), CmpPred::Lt), 1);
+    }
+
+    #[test]
+    fn f16_basic_arith() {
+        let one = F16.from_f64(1.0);
+        let tenth = F16.from_f64(0.1);
+        // 0.1f16 = 0.0999755859375; +1 rounds to 1.099609375 = 0x3C66
+        assert_eq!(add16(&F16, one, tenth), 0x3C66);
+        assert_eq!(mul16(&F16, F16.from_f64(3.0), F16.from_f64(4.0)), F16.from_f64(12.0));
+        // Saturating behaviour: overflow → inf
+        let big = F16.from_f64(60000.0);
+        assert!(F16.is_inf(add16(&F16, big, big)));
+    }
+
+    #[test]
+    fn f16_fma_single_rounding() {
+        // Triple (found by exhaustive search, cross-checked with numpy) where
+        // the fused result differs from mul-then-add by 1 ulp:
+        // a=1.095703125, b=-1.841796875, c=-3.671875.
+        let (a, b, c) = (15458u16, 48990u16, 50008u16);
+        let fused = fma16(&F16, a, b, c);
+        assert_eq!(fused, 50609, "fused must keep the low product bits");
+        let lossy = add16(&F16, mul16(&F16, a, b), c);
+        assert_eq!(lossy, 50608);
+        assert_ne!(fused, lossy);
+        // And the fused result matches the exact f64 computation rounded once.
+        let exact = F16.to_f64(a).mul_add(F16.to_f64(b), F16.to_f64(c));
+        assert_eq!(fused, F16.from_f64(exact));
+    }
+
+    #[test]
+    fn bf16_arith() {
+        let x = BF16.from_f64(1.5);
+        let y = BF16.from_f64(2.5);
+        assert_eq!(BF16.to_f64(mul16(&BF16, x, y)), 3.75);
+        // bf16 keeps f32 range: 1e38 * 2 overflows to inf
+        let big = BF16.from_f64(2.0e38);
+        assert!(BF16.is_inf(add16(&BF16, big, big)));
+    }
+
+    #[test]
+    fn widening_fma() {
+        // f16 x f16 + f32 -> f32 keeps precision a pure-f16 FMA would lose.
+        let a = F16.from_f64(0.1);
+        let b = F16.from_f64(0.1);
+        let acc = 100.0f32.to_bits();
+        let r = f32::from_bits(fma_widen(&F16, a, b, acc));
+        let expect = (F16.to_f64(a) * F16.to_f64(b) + 100.0) as f32;
+        assert_eq!(r, expect);
+    }
+
+    #[test]
+    fn min_max_nan_handling() {
+        let nan = F16.qnan();
+        let one = F16.from_f64(1.0);
+        assert_eq!(min16(&F16, nan, one), one);
+        assert_eq!(max16(&F16, one, nan), one);
+        assert_eq!(cmp16(&F16, nan, one, CmpPred::Le), 0);
+        // signed zero ordering
+        let pz = F16.from_f64(0.0);
+        let nz = F16.from_f64(-0.0);
+        assert_eq!(min16(&F16, pz, nz), nz);
+        assert_eq!(max16(&F16, pz, nz), pz);
+    }
+
+    #[test]
+    fn div_sqrt_numerics() {
+        assert_eq!(F16.to_f64(div16(&F16, F16.from_f64(1.0), F16.from_f64(3.0))), F16.to_f64(F16.from_f64(1.0 / 3.0)));
+        assert_eq!(F16.to_f64(sqrt16(&F16, F16.from_f64(2.0))), F16.to_f64(F16.from_f64(2f64.sqrt())));
+        assert!(F16.is_nan(sqrt16(&F16, F16.from_f64(-1.0))));
+    }
+}

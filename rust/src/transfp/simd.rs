@@ -1,0 +1,193 @@
+//! Packed-SIMD 2×16-bit vector operations on the 32-bit datapath.
+//!
+//! A `u32` register holds two 16-bit lanes: lane 0 in bits [15:0], lane 1 in
+//! bits [31:16] — the layout of the Xpulp `vfALU.h` / `vfALU.ah` (bfloat16)
+//! instruction families. Each lane rounds independently, exactly like two
+//! FPnew slices operating in parallel.
+
+use super::scalar;
+use super::spec::FpSpec;
+
+/// Split a packed register into (lane0, lane1).
+#[inline]
+pub fn unpack2(v: u32) -> (u16, u16) {
+    (v as u16, (v >> 16) as u16)
+}
+
+/// Assemble (lane0, lane1) into a packed register.
+#[inline]
+pub fn pack2(lo: u16, hi: u16) -> u32 {
+    (lo as u32) | ((hi as u32) << 16)
+}
+
+/// Lane-wise binary op helper.
+#[inline]
+fn map2(a: u32, b: u32, f: impl Fn(u16, u16) -> u16) -> u32 {
+    let (a0, a1) = unpack2(a);
+    let (b0, b1) = unpack2(b);
+    pack2(f(a0, b0), f(a1, b1))
+}
+
+/// `vfadd.{h,ah}` — lane-wise add.
+#[inline]
+pub fn vadd(spec: &FpSpec, a: u32, b: u32) -> u32 {
+    map2(a, b, |x, y| scalar::add16(spec, x, y))
+}
+
+/// `vfsub.{h,ah}` — lane-wise subtract.
+#[inline]
+pub fn vsub(spec: &FpSpec, a: u32, b: u32) -> u32 {
+    map2(a, b, |x, y| scalar::sub16(spec, x, y))
+}
+
+/// `vfmul.{h,ah}` — lane-wise multiply.
+#[inline]
+pub fn vmul(spec: &FpSpec, a: u32, b: u32) -> u32 {
+    map2(a, b, |x, y| scalar::mul16(spec, x, y))
+}
+
+/// `vfmac.{h,ah}` — lane-wise FMA with the destination as accumulator:
+/// `d[i] = a[i]*b[i] + d[i]` (4 flops per instruction).
+#[inline]
+pub fn vmac(spec: &FpSpec, a: u32, b: u32, d: u32) -> u32 {
+    let (a0, a1) = unpack2(a);
+    let (b0, b1) = unpack2(b);
+    let (d0, d1) = unpack2(d);
+    pack2(scalar::fma16(spec, a0, b0, d0), scalar::fma16(spec, a1, b1, d1))
+}
+
+/// `vfmin.{h,ah}` — lane-wise minimumNumber.
+#[inline]
+pub fn vmin(spec: &FpSpec, a: u32, b: u32) -> u32 {
+    map2(a, b, |x, y| scalar::min16(spec, x, y))
+}
+
+/// `vfmax.{h,ah}` — lane-wise maximumNumber.
+#[inline]
+pub fn vmax(spec: &FpSpec, a: u32, b: u32) -> u32 {
+    map2(a, b, |x, y| scalar::max16(spec, x, y))
+}
+
+/// `vfdotpex.s.{h,ah}` — expanding dot product: `acc32 + a0*b0 + a1*b1`
+/// with binary32 result. Products are exact in the wide datapath; the sum is
+/// rounded once to binary32 (FPnew ExSdotp behaviour). This is the
+/// "dot-product intrinsic accumulating two products" the paper's MATMUL and
+/// FIR vector variants rely on (4 flops per instruction).
+#[inline]
+pub fn vdotp_widen(spec: &FpSpec, a: u32, b: u32, acc: u32) -> u32 {
+    let (a0, a1) = unpack2(a);
+    let (b0, b1) = unpack2(b);
+    let p0 = spec.to_f64(a0) * spec.to_f64(b0); // exact
+    let p1 = spec.to_f64(a1) * spec.to_f64(b1); // exact
+    let s = f32::from_bits(acc) as f64 + p0 + p1;
+    (s as f32).to_bits()
+}
+
+/// `vfeq/vflt/vfle.{h,ah}` — lane-wise compare, all-ones mask per true lane.
+#[inline]
+pub fn vcmp(spec: &FpSpec, a: u32, b: u32, pred: scalar::CmpPred) -> u32 {
+    map2(a, b, |x, y| {
+        if scalar::cmp16(spec, x, y, pred) == 1 {
+            0xFFFF
+        } else {
+            0
+        }
+    })
+}
+
+/// `pv.shuffle`-style lane permute: selector 0..=3 encodes (hi_src, lo_src)
+/// with bit1 choosing the half for lane1 and bit0 for lane0.
+#[inline]
+pub fn vshuffle(a: u32, sel: u32) -> u32 {
+    let (a0, a1) = unpack2(a);
+    let lo = if sel & 1 == 0 { a0 } else { a1 };
+    let hi = if sel & 2 == 0 { a0 } else { a1 };
+    pack2(lo, hi)
+}
+
+/// `pv.pack.lo/hi` two-register pack: takes lane0 of `a` and lane0 of `b`.
+#[inline]
+pub fn vpack_lo(a: u32, b: u32) -> u32 {
+    pack2(unpack2(a).0, unpack2(b).0)
+}
+
+/// Takes lane1 of `a` and lane1 of `b`.
+#[inline]
+pub fn vpack_hi(a: u32, b: u32) -> u32 {
+    pack2(unpack2(a).1, unpack2(b).1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfp::scalar::CmpPred;
+    use crate::transfp::spec::{BF16, F16};
+
+    fn pk(spec: &FpSpec, lo: f64, hi: f64) -> u32 {
+        pack2(spec.from_f64(lo), spec.from_f64(hi))
+    }
+
+    fn unpk(spec: &FpSpec, v: u32) -> (f64, f64) {
+        let (lo, hi) = unpack2(v);
+        (spec.to_f64(lo), spec.to_f64(hi))
+    }
+
+    #[test]
+    fn lane_independence() {
+        let a = pk(&F16, 1.0, 1000.0);
+        let b = pk(&F16, 2.0, -1000.0);
+        assert_eq!(unpk(&F16, vadd(&F16, a, b)), (3.0, 0.0));
+        // Lane 1 overflows f16 (−10⁶ < −65504) → −inf; lane 0 unaffected.
+        let (lo, hi) = unpk(&F16, vmul(&F16, a, b));
+        assert_eq!(lo, 2.0);
+        assert!(hi.is_infinite() && hi < 0.0);
+    }
+
+    #[test]
+    fn vmac_accumulates_per_lane() {
+        let a = pk(&F16, 2.0, 3.0);
+        let b = pk(&F16, 4.0, 5.0);
+        let d = pk(&F16, 1.0, -1.0);
+        assert_eq!(unpk(&F16, vmac(&F16, a, b, d)), (9.0, 14.0));
+    }
+
+    #[test]
+    fn dotp_widening_precision() {
+        // Sum that overflows f16 but not f32: the expanding dot product keeps it.
+        let a = pk(&F16, 256.0, 256.0);
+        let b = pk(&F16, 256.0, 256.0);
+        let r = f32::from_bits(vdotp_widen(&F16, a, b, 0));
+        assert_eq!(r, 131072.0); // 2*256^2 > f16 max (65504)
+        // and a pure-f16 vmac would saturate:
+        let m = vmac(&F16, a, b, pk(&F16, 256.0 * 256.0, 0.0));
+        assert!(F16.is_inf(unpack2(m).0));
+    }
+
+    #[test]
+    fn bf16_lanes() {
+        let a = pk(&BF16, 1.5, 2.0e38);
+        let b = pk(&BF16, 2.0, 2.0e38);
+        let (lo, hi) = unpk(&BF16, vadd(&BF16, a, b));
+        assert_eq!(lo, 3.5);
+        assert!(hi.is_infinite());
+    }
+
+    #[test]
+    fn shuffle_and_pack() {
+        let a = pack2(0x1111, 0x2222);
+        let b = pack2(0x3333, 0x4444);
+        assert_eq!(vshuffle(a, 0b01), pack2(0x2222, 0x1111));
+        assert_eq!(vshuffle(a, 0b11), pack2(0x2222, 0x2222));
+        assert_eq!(vpack_lo(a, b), pack2(0x1111, 0x3333));
+        assert_eq!(vpack_hi(a, b), pack2(0x2222, 0x4444));
+    }
+
+    #[test]
+    fn vcmp_masks() {
+        let a = pk(&F16, 1.0, 5.0);
+        let b = pk(&F16, 2.0, 4.0);
+        assert_eq!(vcmp(&F16, a, b, CmpPred::Lt), 0x0000FFFF);
+        assert_eq!(vcmp(&F16, a, b, CmpPred::Le), 0x0000FFFF);
+        assert_eq!(vcmp(&F16, a, a, CmpPred::Eq), 0xFFFFFFFF);
+    }
+}

@@ -1,0 +1,300 @@
+//! Format specifications for the transprecision FP formats supported by the
+//! cluster's FPnew-style datapath: IEEE binary32 (`float`), IEEE binary16
+//! (`float16`) and bfloat16.
+//!
+//! 16-bit values are carried as raw `u16` bit patterns. All arithmetic is
+//! performed by widening exactly to `f64` (both 16-bit formats embed exactly
+//! in binary64), computing, and rounding back with a *single* round-to-
+//! nearest-even step implemented over the raw bits (`from_f64`). This mirrors
+//! the FPnew datapath, which computes on an internal wide significand and
+//! rounds once at the output.
+
+/// A (sign, exponent, mantissa) floating-point format with ≤16 bits total.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FpSpec {
+    /// Number of exponent bits.
+    pub exp_bits: u32,
+    /// Number of explicit mantissa (fraction) bits.
+    pub man_bits: u32,
+}
+
+/// IEEE 754 binary16: 1 + 5 + 10.
+pub const F16: FpSpec = FpSpec { exp_bits: 5, man_bits: 10 };
+/// bfloat16: 1 + 8 + 7 (same dynamic range as binary32).
+pub const BF16: FpSpec = FpSpec { exp_bits: 8, man_bits: 7 };
+
+impl FpSpec {
+    /// Exponent bias.
+    #[inline]
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Maximum biased exponent value (all-ones = inf/NaN).
+    #[inline]
+    pub const fn exp_max(&self) -> u32 {
+        (1 << self.exp_bits) - 1
+    }
+
+    /// Total storage bits (always ≤ 16 here).
+    #[inline]
+    pub const fn total_bits(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    /// The canonical quiet NaN bit pattern (sign=0, exp all ones, MSB of mantissa set).
+    #[inline]
+    pub const fn qnan(&self) -> u16 {
+        ((self.exp_max() as u16) << self.man_bits) | (1 << (self.man_bits - 1))
+    }
+
+    /// Positive infinity bit pattern.
+    #[inline]
+    pub const fn inf(&self, negative: bool) -> u16 {
+        let mag = (self.exp_max() as u16) << self.man_bits;
+        if negative {
+            mag | (1 << (self.total_bits() - 1))
+        } else {
+            mag
+        }
+    }
+
+    /// Largest finite magnitude bit pattern (positive).
+    #[inline]
+    pub const fn max_finite(&self) -> u16 {
+        (((self.exp_max() - 1) as u16) << self.man_bits) | ((1 << self.man_bits) - 1)
+    }
+
+    /// Split a bit pattern into (sign, biased exponent, mantissa).
+    #[inline]
+    pub fn unpack(&self, bits: u16) -> (bool, u32, u32) {
+        let sign = (bits >> (self.total_bits() - 1)) & 1 == 1;
+        let exp = ((bits >> self.man_bits) as u32) & self.exp_max();
+        let man = (bits as u32) & ((1 << self.man_bits) - 1);
+        (sign, exp, man)
+    }
+
+    /// Assemble a bit pattern from (sign, biased exponent, mantissa).
+    #[inline]
+    pub fn pack(&self, sign: bool, exp: u32, man: u32) -> u16 {
+        debug_assert!(exp <= self.exp_max());
+        debug_assert!(man < (1 << self.man_bits));
+        ((sign as u16) << (self.total_bits() - 1)) | ((exp as u16) << self.man_bits) | man as u16
+    }
+
+    /// True if `bits` encodes a NaN.
+    #[inline]
+    pub fn is_nan(&self, bits: u16) -> bool {
+        let (_, e, m) = self.unpack(bits);
+        e == self.exp_max() && m != 0
+    }
+
+    /// True if `bits` encodes ±inf.
+    #[inline]
+    pub fn is_inf(&self, bits: u16) -> bool {
+        let (_, e, m) = self.unpack(bits);
+        e == self.exp_max() && m == 0
+    }
+
+    /// Exact widening conversion to binary64. Every finite value of both
+    /// 16-bit formats is exactly representable in binary64.
+    pub fn to_f64(&self, bits: u16) -> f64 {
+        let (sign, exp, man) = self.unpack(bits);
+        let s = if sign { -1.0 } else { 1.0 };
+        if exp == self.exp_max() {
+            return if man != 0 {
+                f64::NAN
+            } else {
+                s * f64::INFINITY
+            };
+        }
+        let v = if exp == 0 {
+            // Subnormal: man * 2^(1 - bias - man_bits)
+            man as f64 * (2.0f64).powi(1 - self.bias() - self.man_bits as i32)
+        } else {
+            (1.0 + man as f64 / (1u64 << self.man_bits) as f64)
+                * (2.0f64).powi(exp as i32 - self.bias())
+        };
+        s * v
+    }
+
+    /// Correctly rounded (round-to-nearest-even) narrowing conversion from
+    /// binary64. Handles overflow→inf, subnormals, and signed zeros per
+    /// IEEE 754. This is the *single* rounding step of every arithmetic op.
+    pub fn from_f64(&self, x: f64) -> u16 {
+        if x.is_nan() {
+            return self.qnan();
+        }
+        let xb = x.to_bits();
+        let sign = (xb >> 63) & 1 == 1;
+        if x.is_infinite() {
+            return self.inf(sign);
+        }
+        let abs = x.abs();
+        if abs == 0.0 {
+            return self.pack(sign, 0, 0);
+        }
+        // binary64 fields of |x|
+        let ab = abs.to_bits();
+        let e64 = ((ab >> 52) & 0x7ff) as i64;
+        let m64 = ab & ((1u64 << 52) - 1);
+        // Unbiased exponent and 53-bit significand; f64 subnormals are far
+        // below the smallest 16-bit subnormal (2^-1022 vs ≥2^-133) → round to 0.
+        if e64 == 0 {
+            return self.pack(sign, 0, 0);
+        }
+        let exp = e64 - 1023; // value = 1.m64 * 2^exp
+        let sig = (1u64 << 52) | m64; // 53 significant bits
+
+        let bias = self.bias() as i64;
+        let emin = 1 - bias; // smallest normal exponent (unbiased)
+        // Number of fraction bits to drop from the 52-bit fraction.
+        let mut drop = 52 - self.man_bits as i64;
+        let mut biased = exp + bias; // tentative biased exponent
+        if biased <= 0 {
+            // Subnormal (or underflow) in the target format: shift further.
+            drop += 1 - biased; // extra shift to align to emin
+            biased = 0;
+            let _ = emin;
+        }
+        if drop >= 63 {
+            // Way below subnormal range: magnitude < 2^-62 * ulp → rounds to 0
+            // (drop=63 means even the round bit is below everything).
+            return self.pack(sign, 0, 0);
+        }
+        let kept = sig >> drop;
+        let round_bit = (sig >> (drop - 1)) & 1;
+        let sticky = sig & ((1u64 << (drop - 1)) - 1) != 0;
+        let mut out = kept;
+        if round_bit == 1 && (sticky || (kept & 1) == 1) {
+            out += 1; // round to nearest, ties to even
+        }
+        // `out` holds mantissa with (possibly) the implicit bit at position
+        // man_bits (for normals) — handle carries and reassemble.
+        let man_mask = (1u64 << self.man_bits) - 1;
+        let (final_exp, final_man) = if biased == 0 {
+            // Subnormal path: implicit bit absent. A carry into bit man_bits
+            // promotes to the smallest normal (exp=1), encoded naturally.
+            if out > man_mask {
+                (1u32, (out - (man_mask + 1)) as u32)
+            } else {
+                (0u32, out as u32)
+            }
+        } else {
+            // Normal path: implicit bit present at position man_bits.
+            let mut e = biased as u32;
+            let mut m = out;
+            if m >= (1u64 << (self.man_bits + 1)) {
+                // Carry out of the significand: exponent += 1.
+                m >>= 1;
+                e += 1;
+            }
+            (e, (m & man_mask) as u32)
+        };
+        if final_exp >= self.exp_max() {
+            return self.inf(sign); // overflow
+        }
+        self.pack(sign, final_exp, final_man)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_known_values() {
+        // Constants cross-checked against numpy.float16.
+        assert_eq!(F16.from_f64(1.0), 0x3C00);
+        assert_eq!(F16.from_f64(-2.0), 0xC000);
+        assert_eq!(F16.from_f64(0.1), 0x2E66);
+        assert_eq!(F16.from_f64(65504.0), 0x7BFF); // max finite
+        assert_eq!(F16.from_f64(65520.0), 0x7C00); // rounds to inf
+        assert_eq!(F16.from_f64(65519.9), 0x7BFF); // just below tie
+        assert_eq!(F16.from_f64(5.960464477539063e-08), 0x0001); // min subnormal
+        assert_eq!(F16.from_f64(2.980232238769531e-08), 0x0000); // tie → even (0)
+        assert_eq!(F16.from_f64(2.98023223876953125e-08 * 1.0000001), 0x0001);
+        assert_eq!(F16.from_f64(6.103515625e-05), 0x0400); // min normal
+        assert_eq!(F16.from_f64(f64::INFINITY), 0x7C00);
+        assert_eq!(F16.from_f64(-f64::INFINITY), 0xFC00);
+        assert!(F16.is_nan(F16.from_f64(f64::NAN)));
+        assert_eq!(F16.from_f64(-0.0).to_owned(), 0x8000);
+    }
+
+    #[test]
+    fn bf16_known_values() {
+        // bf16 is the top half of f32; cross-checked with ml_dtypes.bfloat16.
+        assert_eq!(BF16.from_f64(1.0), 0x3F80);
+        assert_eq!(BF16.from_f64(3.140625), 0x4049);
+        assert_eq!(BF16.from_f64(0.1), 0x3DCD);
+        assert_eq!(BF16.from_f64(3.3895313892515355e38), 0x7F7F); // max finite
+        assert_eq!(BF16.from_f64(3.5e38), 0x7F80); // inf
+        assert_eq!(BF16.from_f64(f64::NEG_INFINITY), 0xFF80);
+    }
+
+    #[test]
+    fn roundtrip_all_finite_f16() {
+        for bits in 0u16..=0xFFFF {
+            if F16.is_nan(bits) {
+                continue;
+            }
+            let x = F16.to_f64(bits);
+            assert_eq!(F16.from_f64(x), bits, "roundtrip failed for {bits:#06x} = {x}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_finite_bf16() {
+        for bits in 0u16..=0xFFFF {
+            if BF16.is_nan(bits) {
+                continue;
+            }
+            let x = BF16.to_f64(bits);
+            assert_eq!(BF16.from_f64(x), bits, "roundtrip failed for {bits:#06x} = {x}");
+        }
+    }
+
+    #[test]
+    fn bf16_matches_f32_truncation_semantics() {
+        // For every bf16 value, to_f64 must equal the f32 with the same top bits.
+        for bits in 0u16..=0xFFFF {
+            if BF16.is_nan(bits) {
+                continue;
+            }
+            let via_f32 = f32::from_bits((bits as u32) << 16) as f64;
+            let ours = BF16.to_f64(bits);
+            if via_f32.is_infinite() {
+                assert!(ours.is_infinite() && ours.signum() == via_f32.signum());
+            } else {
+                assert_eq!(ours, via_f32, "bits={bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_rounding_f16() {
+        // from_f64 must be monotone non-decreasing over positive reals.
+        let mut prev = 0u16;
+        let mut x = 1e-9f64;
+        while x < 1e5 {
+            let b = F16.from_f64(x);
+            if !F16.is_nan(b) && !F16.is_inf(b) {
+                assert!(b >= prev, "non-monotone at {x}");
+                prev = b;
+            }
+            x *= 1.001;
+        }
+    }
+
+    #[test]
+    fn spec_constants() {
+        assert_eq!(F16.bias(), 15);
+        assert_eq!(BF16.bias(), 127);
+        assert_eq!(F16.qnan(), 0x7E00);
+        assert_eq!(BF16.qnan(), 0x7FC0);
+        assert_eq!(F16.max_finite(), 0x7BFF);
+        assert_eq!(BF16.max_finite(), 0x7F7F);
+        assert_eq!(F16.total_bits(), 16);
+        assert_eq!(BF16.total_bits(), 16);
+    }
+}

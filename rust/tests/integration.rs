@@ -1,0 +1,245 @@
+//! Integration + property tests over the public API: cross-module
+//! invariants the unit tests can't see (simulator determinism, config
+//! independence of numerics, metric consistency, arbitration fairness).
+
+use transpfp::cluster::Cluster;
+use transpfp::config::{ClusterConfig, Corner};
+use transpfp::coordinator::run_one;
+use transpfp::isa::{regs, ProgramBuilder};
+use transpfp::kernels::{Benchmark, Variant};
+use transpfp::model;
+use transpfp::testutil::{check_cases, Rng};
+use transpfp::transfp::FpMode;
+
+/// Simulation is deterministic: identical runs produce identical counters.
+#[test]
+fn determinism() {
+    let cfg = ClusterConfig::new(8, 4, 1);
+    let w = Benchmark::Fft.build(Variant::VEC, &cfg);
+    let (s1, o1) = w.run(&cfg);
+    let (s2, o2) = w.run(&cfg);
+    assert_eq!(o1, o2);
+    assert_eq!(s1.total_cycles, s2.total_cycles);
+    for (a, b) in s1.per_core.iter().zip(&s2.per_core) {
+        assert_eq!(a, b);
+    }
+}
+
+/// Numeric results are identical across ALL cluster configurations — timing
+/// parameters (sharing, pipelining) must never change values.
+#[test]
+fn numerics_independent_of_configuration() {
+    for b in [Benchmark::Matmul, Benchmark::Dwt, Benchmark::Kmeans] {
+        for v in [Variant::Scalar, Variant::VEC] {
+            let reference: Option<Vec<f64>> = None;
+            let mut reference = reference;
+            for cfg in ClusterConfig::design_space() {
+                let w = b.build(v, &cfg);
+                let (_, out) = w.run(&cfg);
+                w.verify(&out).unwrap();
+                match &reference {
+                    None => reference = Some(out),
+                    Some(r) => assert_eq!(r, &out, "{b:?} {v:?} differs on {cfg}"),
+                }
+            }
+        }
+    }
+}
+
+/// More FPUs can never make a workload slower (same cores/pipe).
+#[test]
+fn monotone_in_fpu_count() {
+    for b in [Benchmark::Matmul, Benchmark::Fir] {
+        for pipe in 0..=2 {
+            let mut last = u64::MAX;
+            for fpus in [2usize, 4, 8] {
+                let cfg = ClusterConfig::new(8, fpus, pipe);
+                let w = b.build(Variant::Scalar, &cfg);
+                let (s, _) = w.run(&cfg);
+                assert!(
+                    s.total_cycles <= last.saturating_add(last / 50),
+                    "{b:?} pipe={pipe}: {fpus} FPUs slower ({} vs {last})",
+                    s.total_cycles
+                );
+                last = s.total_cycles;
+            }
+        }
+    }
+}
+
+/// More workers can never increase total cycles (parallel scaling sanity).
+#[test]
+fn monotone_in_workers() {
+    let cfg = ClusterConfig::new(16, 16, 1);
+    for b in [Benchmark::Conv, Benchmark::Fft] {
+        let w = b.build(Variant::Scalar, &cfg);
+        let mut last = u64::MAX;
+        for workers in [1usize, 2, 4, 8, 16] {
+            let (s, out) = w.run_on(&cfg, workers);
+            w.verify(&out).unwrap_or_else(|e| panic!("{workers} workers: {e}"));
+            assert!(
+                s.total_cycles <= last,
+                "{b:?}: {workers} workers slower ({} vs {last})",
+                s.total_cycles
+            );
+            last = s.total_cycles;
+        }
+    }
+}
+
+/// Property: random SPMD integer programs terminate identically on every
+/// configuration (the timing model never alters architectural state).
+#[test]
+fn property_random_programs_config_invariant() {
+    check_cases(20, |rng: &mut Rng| {
+        let prog = random_int_program(rng);
+        let mut reference: Option<Vec<u32>> = None;
+        for cfg in [
+            ClusterConfig::new(8, 2, 0),
+            ClusterConfig::new(8, 8, 2),
+            ClusterConfig::new(16, 4, 1),
+        ] {
+            let mut cl = Cluster::new(cfg, prog.clone());
+            let stats = cl.run();
+            assert!(stats.total_cycles > 0);
+            let out: Vec<u32> = (0..8)
+                .map(|i| {
+                    cl.mem.load(
+                        transpfp::cluster::mem::TCDM_BASE + 4 * i,
+                        transpfp::isa::MemSize::Word,
+                    )
+                })
+                .collect();
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => assert_eq!(r, &out),
+            }
+        }
+    });
+}
+
+/// Generate a small random (but always-terminating) SPMD program: each core
+/// computes a pseudo-random function of its id and stores to its own slot.
+fn random_int_program(rng: &mut Rng) -> transpfp::isa::Program {
+    let mut b = ProgramBuilder::new("random");
+    let iters = 4 + rng.below(12) as u32;
+    b.li(1, iters);
+    b.li(2, rng.next_u32() & 0xFFFF);
+    b.li(3, 0);
+    b.hwloop(1);
+    match rng.below(4) {
+        0 => {
+            b.add(3, 3, 2);
+            b.xor(2, 2, 3);
+        }
+        1 => {
+            b.mul(3, 3, 2);
+            b.addi(3, 3, rng.below(100) as i32);
+        }
+        2 => {
+            b.imax(3, 3, 2);
+            b.srli(2, 2, 1);
+        }
+        _ => {
+            b.sub(3, 2, 3);
+            b.slli(2, 2, 1);
+        }
+    }
+    b.hwloop_end();
+    // Mix in FP to exercise arbitration.
+    b.fcvt_from_int(FpMode::F32, 4, 3);
+    b.fmul(FpMode::F32, 4, 4, 4);
+    b.fcvt_to_int(FpMode::F32, 5, 4);
+    // Store result to the core's slot (cores 8+ reuse slots benignly —
+    // identical programs on identical ids produce identical values).
+    b.andi(6, regs::CORE_ID, 7);
+    b.slli(6, 6, 2);
+    b.li(7, transpfp::cluster::mem::TCDM_BASE);
+    b.add(7, 7, 6);
+    b.sw(5, 7, 0);
+    b.barrier();
+    b.end();
+    b.build()
+}
+
+/// Metric consistency: area efficiency == perf / area for every measurement.
+#[test]
+fn metric_identities() {
+    for cfg in [ClusterConfig::new(8, 2, 2), ClusterConfig::new(16, 16, 0)] {
+        let m = run_one(&cfg, Benchmark::Svm, Variant::VEC);
+        let area = model::area_mm2(&cfg);
+        assert!((m.metrics.area_eff - m.metrics.perf_gflops / area).abs() < 1e-9);
+        let f = model::fmax_mhz(&cfg, Corner::St);
+        assert!(
+            (m.metrics.perf_gflops - m.metrics.flops_per_cycle * f * 1e-3).abs() < 1e-9,
+            "perf must equal flops/cycle × fmax"
+        );
+    }
+}
+
+/// Failure injection: a program that deadlocks (barrier never completed
+/// because one core exits early) must hit the cycle guard, not hang.
+#[test]
+fn deadlock_guard_fires() {
+    let mut b = ProgramBuilder::new("deadlock");
+    // Core 0 exits; everyone else waits forever at the barrier.
+    b.beq(regs::CORE_ID, regs::ZERO, "out");
+    b.barrier();
+    b.label("out");
+    b.end();
+    let mut cl = Cluster::new(ClusterConfig::new(8, 8, 0), b.build());
+    cl.max_cycles = 10_000;
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| cl.run()));
+    assert!(r.is_err(), "deadlock must be detected by the cycle guard");
+}
+
+/// The full paper pipeline smoke test: one measurement per benchmark on the
+/// three headline configurations, everything verified.
+#[test]
+fn headline_configs_full_suite() {
+    for mnemonic in ["16c16f1p", "16c16f0p", "8c4f1p"] {
+        let cfg = ClusterConfig::parse(mnemonic).unwrap();
+        for b in Benchmark::all() {
+            for v in [Variant::Scalar, Variant::VEC] {
+                let m = run_one(&cfg, b, v);
+                assert!(m.verified, "{mnemonic} {b:?} {v:?}");
+                assert!(m.metrics.perf_gflops > 0.05);
+                assert!(m.metrics.energy_eff > 5.0);
+            }
+        }
+    }
+}
+
+/// §3.2: interleaved FPU allocation avoids contention when parallel
+/// sections use fewer workers than cores; the blocked mapping doesn't.
+#[test]
+fn interleaved_mapping_beats_blocked_at_half_occupancy() {
+    let interleaved = ClusterConfig::new(8, 4, 1);
+    let blocked = ClusterConfig::new(8, 4, 1).with_blocked_fpu_map();
+    let w = Benchmark::Matmul.build(Variant::Scalar, &interleaved);
+    let (si, _) = w.run_on(&interleaved, 4);
+    let (sb, _) = w.run_on(&blocked, 4);
+    let cont = |s: &transpfp::cluster::counters::RunStats| -> u64 {
+        s.per_core.iter().map(|c| c.fpu_cont).sum()
+    };
+    assert_eq!(cont(&si), 0, "interleaved: 4 workers → 4 distinct FPUs");
+    assert!(cont(&sb) > 0, "blocked: neighbours share units");
+    assert!(si.total_cycles <= sb.total_cycles);
+}
+
+/// §5.2: float16 and bfloat16 vectors have identical timing (the tables
+/// report a single value for both) — and both verify numerically.
+#[test]
+fn f16_and_bf16_timing_equivalent() {
+    let cfg = ClusterConfig::new(8, 8, 1);
+    for b in [Benchmark::Fir, Benchmark::Matmul, Benchmark::Fft] {
+        let wf = b.build(Variant::Vector(FpMode::VecF16), &cfg);
+        let wb = b.build(Variant::Vector(FpMode::VecBf16), &cfg);
+        let (sf, of) = wf.run(&cfg);
+        let (sb, ob) = wb.run(&cfg);
+        wf.verify(&of).unwrap();
+        wb.verify(&ob).unwrap();
+        let ratio = sf.total_cycles as f64 / sb.total_cycles as f64;
+        assert!((ratio - 1.0).abs() < 0.01, "{b:?}: {ratio}");
+    }
+}
