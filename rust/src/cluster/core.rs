@@ -7,7 +7,7 @@
 
 use super::counters::CoreCounters;
 use super::mem::Memory;
-use crate::isa::insn::{AluOp, BrCond, FpOp, Insn, Operand};
+use crate::isa::insn::{AluOp, BrCond, FpOp, Insn, Operand, Reg};
 use crate::transfp::{cast, scalar, simd, FpMode};
 
 /// What produced the pending value of a register (stall attribution).
@@ -103,51 +103,65 @@ impl Core {
         }
     }
 
+    /// Reset the core to its post-reset architectural state (HAL registers
+    /// re-seeded), keeping allocations. Used by [`super::Cluster::reset`].
+    pub fn reset(&mut self, ncores: usize) {
+        self.regs = [0; 32];
+        self.regs[crate::isa::regs::CORE_ID as usize] = self.id as u32;
+        self.regs[crate::isa::regs::NCORES as usize] = ncores as u32;
+        self.pc = 0;
+        self.next_issue = 0;
+        self.reg_ready = [0; 32];
+        self.reg_producer = [Producer::None; 32];
+        self.hwloops.clear();
+        self.last_fp_issue = u64::MAX - 1;
+        self.wb_skid = 0;
+        self.state = CoreState::Running;
+        self.counters = CoreCounters::default();
+    }
+
     /// Latest ready-cycle over the registers an instruction reads, together
-    /// with the producer responsible (for stall attribution).
+    /// with the producer responsible (for stall attribution). The read set
+    /// comes from [`Insn::read_regs`] — the same source the predecode pass
+    /// resolves once per program.
     pub fn operands_ready(&self, insn: &Insn) -> (u64, Producer) {
+        let (regs, n) = insn.read_regs();
+        self.scoreboard_ready(&regs[..n as usize])
+    }
+
+    /// Scoreboard check over a resolved read set (predecoded path).
+    #[inline]
+    pub fn scoreboard_ready(&self, reads: &[Reg]) -> (u64, Producer) {
         let mut worst = 0u64;
         let mut who = Producer::None;
-        let check = |r: u8, worst: &mut u64, who: &mut Producer| {
+        for &r in reads {
             let t = self.reg_ready[r as usize];
-            if t > *worst {
-                *worst = t;
-                *who = self.reg_producer[r as usize];
-            }
-        };
-        match insn {
-            Insn::Alu { rs1, rhs, .. } => {
-                check(*rs1, &mut worst, &mut who);
-                if let Operand::Reg(r) = rhs {
-                    check(*r, &mut worst, &mut who);
-                }
-            }
-            Insn::Li { .. } => {}
-            Insn::Load { base, .. } => check(*base, &mut worst, &mut who),
-            Insn::Store { rs, base, .. } => {
-                check(*rs, &mut worst, &mut who);
-                check(*base, &mut worst, &mut who);
-            }
-            Insn::Branch { rs1, rs2, .. } => {
-                check(*rs1, &mut worst, &mut who);
-                check(*rs2, &mut worst, &mut who);
-            }
-            Insn::Jump { .. } | Insn::Barrier | Insn::End => {}
-            Insn::HwLoop { count, .. } => check(*count, &mut worst, &mut who),
-            Insn::Fp { op, rd, rs1, rs2, .. } => {
-                check(*rs1, &mut worst, &mut who);
-                // Shuffle carries an immediate in the rs2 slot.
-                if !matches!(op, FpOp::Shuffle | FpOp::Sqrt | FpOp::Neg | FpOp::AbsF
-                    | FpOp::FromInt | FpOp::ToInt | FpOp::CvtDown | FpOp::CvtUp)
-                {
-                    check(*rs2, &mut worst, &mut who);
-                }
-                if op.reads_rd() {
-                    check(*rd, &mut worst, &mut who);
-                }
+            if t > worst {
+                worst = t;
+                who = self.reg_producer[r as usize];
             }
         }
         (worst, who)
+    }
+
+    /// Advance past the current instruction, honouring hardware loops.
+    pub(crate) fn advance_pc(&mut self) {
+        let mut next = self.pc + 1;
+        while let Some((start, end, remaining)) = self.hwloops.last_mut() {
+            if next == *end {
+                if *remaining > 1 {
+                    *remaining -= 1;
+                    next = *start;
+                    break;
+                } else {
+                    self.hwloops.pop();
+                    // fall through: check enclosing loop against `next`
+                }
+            } else {
+                break;
+            }
+        }
+        self.pc = next;
     }
 
     /// Execute an integer ALU op functionally.

@@ -1,0 +1,491 @@
+//! Event-driven issue engine: the production hot path.
+//!
+//! Replaces the reference engine's O(cores) per-cycle scan with
+//!
+//! 1. a **min-heap scheduler** keyed on each core's `next_issue`, so only
+//!    cores that can actually issue at the current event time are touched
+//!    (same-cycle peers are replayed in the rotated priority order that
+//!    models the round-robin arbitration fairness);
+//! 2. **batched straight-line execution** of predecoded instructions
+//!    ([`crate::isa::decoded`]): once a core holds the issue slot, it keeps
+//!    executing *local* instructions — ops that touch no order-sensitive
+//!    shared resource (int ALU/Li, branches, hw-loop setup, lane permutes,
+//!    `End`) — ahead of the global clock, absorbing scoreboard and I$
+//!    bookkeeping into the run instead of paying a scheduler round trip per
+//!    instruction. The batch stops at every contention point: TCDM bank
+//!    claims, FPU port arbitration on *shared* FPUs, the DIV-SQRT block,
+//!    barriers, and non-resident I$ lines. Those execute only at the global
+//!    event time, in rotation order — keeping arbitration bit-exact.
+//!
+//! Two run-time refinements widen the local set soundly:
+//! * **private FPUs** (`fpus == cores`): FPU-port claims cannot contend
+//!   across cores, so FP datapath ops batch too;
+//! * **solo mode** (exactly one runnable core at `run` start): nothing can
+//!   contend at all, so memory, DIV-SQRT and barriers also batch — a whole
+//!   single-worker run executes as one straight-line sweep.
+//!
+//! Cycle-exactness against the reference engine is enforced by the
+//! differential tests (`tests/differential.rs` and the micro programs in
+//! `super::tests`); the invariants the equivalence rests on are written up
+//! in EXPERIMENTS.md §Perf.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::isa::decoded::{flag, DecodedInsn, OpClass};
+use crate::isa::insn::Insn;
+
+use super::core::{Core, CoreState, Producer};
+use super::counters::RunStats;
+use super::mem::Region;
+use super::{Cluster, TAKEN_BRANCH_CYCLES};
+
+/// Advance past an executed instruction: the predecoded `LOOP_END_NEXT`
+/// flag proves whether the hw-loop stack can possibly act, so the common
+/// case is a plain increment.
+#[inline(always)]
+fn advance(c: &mut Core, d: &DecodedInsn) {
+    if d.flags & flag::LOOP_END_NEXT != 0 {
+        c.advance_pc();
+    } else {
+        c.pc += 1;
+    }
+}
+
+impl Cluster {
+    /// Run to completion on the event-driven engine.
+    pub fn run_event(&mut self) -> RunStats {
+        let n = self.cores.len();
+        let runnable =
+            self.cores.iter().filter(|c| !matches!(c.state, CoreState::Done)).count();
+        let solo = runnable == 1;
+        let fp_private = self.cfg.fpus == self.cfg.cores;
+
+        // One live heap entry per running core, keyed (next_issue, id).
+        let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::with_capacity(n + 1);
+        for c in &self.cores {
+            if matches!(c.state, CoreState::Running) {
+                heap.push(Reverse((c.next_issue, c.id as u32)));
+            }
+        }
+        let mut ready: Vec<u32> = Vec::with_capacity(n);
+        let mut woken: Vec<usize> = Vec::with_capacity(n);
+
+        while let Some(&Reverse((now, _))) = heap.peek() {
+            assert!(now < self.max_cycles, "simulation exceeded max_cycles (deadlock?)");
+            // Collect every core issuing at this event time.
+            ready.clear();
+            while let Some(&Reverse((t, ci))) = heap.peek() {
+                if t != now {
+                    break;
+                }
+                heap.pop();
+                let c = &self.cores[ci as usize];
+                if matches!(c.state, CoreState::Running) && c.next_issue == now {
+                    ready.push(ci);
+                }
+            }
+            if ready.is_empty() {
+                continue;
+            }
+            self.now = now;
+            if ready.len() > 1 {
+                // Rotated priority order — the arbitration fairness model.
+                let rot = (now as usize) % n;
+                ready.sort_unstable_by_key(|&ci| {
+                    let k = ci as usize;
+                    if k >= rot {
+                        k - rot
+                    } else {
+                        k + n - rot
+                    }
+                });
+            }
+            for idx in 0..ready.len() {
+                let ci = ready[idx] as usize;
+                if !matches!(self.cores[ci].state, CoreState::Running)
+                    || self.cores[ci].next_issue != now
+                {
+                    continue;
+                }
+                self.issue_batch(ci, solo, fp_private, &mut woken);
+                let c = &self.cores[ci];
+                if matches!(c.state, CoreState::Running) && c.next_issue != u64::MAX {
+                    heap.push(Reverse((c.next_issue, ci as u32)));
+                }
+                for w in woken.drain(..) {
+                    heap.push(Reverse((self.cores[w].next_issue, w as u32)));
+                }
+            }
+        }
+        let asleep = self
+            .cores
+            .iter()
+            .filter(|c| matches!(c.state, CoreState::Sleeping { .. }))
+            .count();
+        assert!(
+            asleep == 0,
+            "simulation deadlocked: {asleep} core(s) asleep at a barrier that can never complete"
+        );
+        self.collect_stats()
+    }
+
+    /// Issue for core `ci` starting at `self.now`, batching as far down the
+    /// straight-line run as locality allows. `woken` receives the ids of
+    /// cores released by a completed barrier (to be rescheduled by the
+    /// caller).
+    fn issue_batch(&mut self, ci: usize, solo: bool, fp_private: bool, woken: &mut Vec<usize>) {
+        let now = self.now;
+        let max_cycles = self.max_cycles;
+        let perfect_icache = self.perfect_icache;
+        let trace = self.trace_enabled();
+        let pipe2 = self.cfg.pipe >= 2;
+        let pipe = self.cfg.pipe as u64;
+        let l2_lat = self.cfg.l2_latency();
+        let fpu_idx = self.cfg.fpu_of_core(ci);
+        // Batch cursor: the core's private clock, ≥ the global clock.
+        let mut t = now;
+        loop {
+            assert!(t < max_cycles, "simulation exceeded max_cycles (deadlock?)");
+            let pc = self.cores[ci].pc as usize;
+            let d = self.decoded.insns[pc];
+            let local = d.flags & flag::LOCAL != 0
+                || solo
+                || (fp_private && matches!(d.class, OpClass::Fp));
+            if !local && t > now {
+                // Contention point reached mid-batch: surrender the slot and
+                // re-arbitrate at the proper global cycle (traced on the
+                // re-issue, so traces stay one line per attempt).
+                self.cores[ci].next_issue = t;
+                return;
+            }
+            if trace {
+                eprintln!("t={t} core={ci} pc={pc} {:?}", d.insn);
+            }
+
+            // --- 1. Instruction fetch through the shared I$. Resident lines
+            // are hits at any cursor; fills only ever start at the global
+            // cycle (or any cycle in solo mode), where intra-cycle order
+            // cannot matter.
+            if !perfect_icache {
+                let line_ready = self.icache.peek(pc as u32);
+                if line_ready > t {
+                    if t == now || solo {
+                        let fetched = self.icache.fetch(pc as u32, t);
+                        let c = &mut self.cores[ci];
+                        c.counters.icache_stall += fetched - t;
+                        if local {
+                            t = fetched;
+                            continue; // same pc: guaranteed hit at `fetched`
+                        }
+                        c.next_issue = fetched;
+                    } else {
+                        self.cores[ci].next_issue = t;
+                    }
+                    return;
+                }
+            }
+
+            // --- 2. Operand scoreboard.
+            let (opr_ready, who) =
+                self.cores[ci].scoreboard_ready(&d.reads[..d.nreads as usize]);
+            if opr_ready > t {
+                let c = &mut self.cores[ci];
+                let wait = opr_ready - t;
+                match who {
+                    Producer::Fpu | Producer::DivSqrt => c.counters.fpu_stall += wait,
+                    Producer::Load => c.counters.load_stall += wait,
+                    Producer::None => {}
+                }
+                if local {
+                    t = opr_ready; // the re-attempt folds into the batch
+                } else {
+                    c.next_issue = opr_ready;
+                    return;
+                }
+            }
+
+            // --- 3. Write-back port conflict (§5.3.3). Absorbing the stall
+            // is exact: the reference re-attempt at t+1 cannot re-trigger
+            // (the core issued no FP op at t).
+            if pipe2
+                && d.flags & flag::FP == 0
+                && d.flags & flag::WRITES_REG != 0
+                && self.cores[ci].last_fp_issue == t.wrapping_sub(1)
+            {
+                let c = &mut self.cores[ci];
+                c.wb_skid += 1;
+                if c.wb_skid >= 3 {
+                    c.wb_skid = 0;
+                    c.counters.wb_stall += 1;
+                    t += 1;
+                    if !local {
+                        c.next_issue = t;
+                        return;
+                    }
+                }
+            }
+
+            // --- 4. Class dispatch at cursor `t`.
+            match d.class {
+                OpClass::Alu => {
+                    let Insn::Alu { op, rd, rs1, rhs } = d.insn else { unreachable!() };
+                    let c = &mut self.cores[ci];
+                    c.exec_alu(op, rd, rs1, rhs);
+                    c.counters.active += d.latency;
+                    c.counters.instrs += 1;
+                    c.counters.int_instrs += 1;
+                    t += d.latency;
+                    advance(c, &d);
+                }
+                OpClass::Li => {
+                    let Insn::Li { rd, imm } = d.insn else { unreachable!() };
+                    let c = &mut self.cores[ci];
+                    c.set_reg(rd, imm);
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.int_instrs += 1;
+                    t += 1;
+                    advance(c, &d);
+                }
+                OpClass::FpAlu => {
+                    let Insn::Fp { op, mode, rd, rs1, rs2 } = d.insn else { unreachable!() };
+                    let c = &mut self.cores[ci];
+                    c.exec_fp(op, mode, rd, rs1, rs2);
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.int_instrs += 1;
+                    t += 1;
+                    advance(c, &d);
+                }
+                OpClass::Branch => {
+                    let Insn::Branch { cond, rs1, rs2, target } = d.insn else {
+                        unreachable!()
+                    };
+                    let c = &mut self.cores[ci];
+                    let taken = c.branch_taken(cond, rs1, rs2);
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.int_instrs += 1;
+                    if taken {
+                        c.pc = target;
+                        c.counters.branch_stall += TAKEN_BRANCH_CYCLES - 1;
+                        t += TAKEN_BRANCH_CYCLES;
+                    } else {
+                        t += 1;
+                        advance(c, &d);
+                    }
+                }
+                OpClass::Jump => {
+                    let Insn::Jump { target } = d.insn else { unreachable!() };
+                    let c = &mut self.cores[ci];
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.int_instrs += 1;
+                    c.pc = target;
+                    c.counters.branch_stall += TAKEN_BRANCH_CYCLES - 1;
+                    t += TAKEN_BRANCH_CYCLES;
+                }
+                OpClass::HwLoop => {
+                    let Insn::HwLoop { count, start, end } = d.insn else { unreachable!() };
+                    let c = &mut self.cores[ci];
+                    let iters = c.reg(count);
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.int_instrs += 1;
+                    t += 1;
+                    if iters == 0 {
+                        c.pc = end;
+                    } else {
+                        c.hwloops.push((start, end, iters));
+                        c.pc = start;
+                    }
+                }
+                OpClass::End => {
+                    let c = &mut self.cores[ci];
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.cycles = t;
+                    c.state = CoreState::Done;
+                    return;
+                }
+                OpClass::Load => {
+                    let Insn::Load { rd, base, offset, post_inc, size } = d.insn else {
+                        unreachable!()
+                    };
+                    let addr = (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
+                    match self.mem.region_of(addr) {
+                        Region::Tcdm => {
+                            let bank = self.mem.bank_of(addr);
+                            if !self.mem.claim_bank(bank, t) {
+                                let c = &mut self.cores[ci];
+                                c.counters.tcdm_cont += 1;
+                                c.next_issue = t + 1;
+                                return;
+                            }
+                            let c = &mut self.cores[ci];
+                            let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                            c.exec_load(&self.mem, rd, addr, size);
+                            c.reg_ready[rd as usize] = t + 2; // 1 load-use bubble
+                            c.reg_producer[rd as usize] = Producer::Load;
+                            c.counters.active += 1;
+                            c.counters.instrs += 1;
+                            c.counters.mem_instrs += 1;
+                            t += 1;
+                            advance(c, &d);
+                        }
+                        Region::L2 => {
+                            let c = &mut self.cores[ci];
+                            let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                            c.exec_load(&self.mem, rd, addr, size);
+                            c.counters.active += 1;
+                            c.counters.l2_stall += l2_lat - 1;
+                            c.counters.instrs += 1;
+                            c.counters.mem_instrs += 1;
+                            t += l2_lat; // core blocks on the demux
+                            advance(c, &d);
+                        }
+                    }
+                }
+                OpClass::Store => {
+                    let Insn::Store { rs, base, offset, post_inc, size } = d.insn else {
+                        unreachable!()
+                    };
+                    let addr = (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
+                    match self.mem.region_of(addr) {
+                        Region::Tcdm => {
+                            let bank = self.mem.bank_of(addr);
+                            if !self.mem.claim_bank(bank, t) {
+                                let c = &mut self.cores[ci];
+                                c.counters.tcdm_cont += 1;
+                                c.next_issue = t + 1;
+                                return;
+                            }
+                            let c = &mut self.cores[ci];
+                            let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                            let v = c.reg(rs);
+                            self.mem.store(addr, size, v);
+                            let c = &mut self.cores[ci];
+                            c.counters.active += 1;
+                            c.counters.instrs += 1;
+                            c.counters.mem_instrs += 1;
+                            t += 1;
+                            advance(c, &d);
+                        }
+                        Region::L2 => {
+                            let c = &mut self.cores[ci];
+                            let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                            let v = c.reg(rs);
+                            self.mem.store(addr, size, v);
+                            let c = &mut self.cores[ci];
+                            c.counters.active += 1;
+                            c.counters.l2_stall += l2_lat - 1;
+                            c.counters.instrs += 1;
+                            c.counters.mem_instrs += 1;
+                            t += l2_lat;
+                            advance(c, &d);
+                        }
+                    }
+                }
+                OpClass::Fp => {
+                    let Insn::Fp { op, mode, rd, rs1, rs2 } = d.insn else { unreachable!() };
+                    if !self.fpus.try_issue(fpu_idx, t) {
+                        if t > now {
+                            // Defensive: a batched (private-FPU) claim can
+                            // never lose; re-arbitrate via the scheduler.
+                            self.cores[ci].next_issue = t;
+                            return;
+                        }
+                        let c = &mut self.cores[ci];
+                        c.counters.fpu_cont += 1;
+                        c.next_issue = t + 1;
+                        return;
+                    }
+                    let c = &mut self.cores[ci];
+                    let flops = c.exec_fp(op, mode, rd, rs1, rs2);
+                    c.reg_ready[rd as usize] = t + 1 + pipe;
+                    c.reg_producer[rd as usize] = Producer::Fpu;
+                    c.last_fp_issue = t;
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.fp_instrs += 1;
+                    if d.flags & flag::VEC != 0 {
+                        c.counters.fp_vec_instrs += 1;
+                    }
+                    c.counters.flops += flops;
+                    t += 1;
+                    advance(c, &d);
+                }
+                OpClass::FpDivSqrt => {
+                    let Insn::Fp { op, mode, rd, rs1, rs2 } = d.insn else { unreachable!() };
+                    match self.fpus.try_divsqrt(mode, t) {
+                        Err(free) => {
+                            let c = &mut self.cores[ci];
+                            c.counters.divsqrt_cont += free - t;
+                            if solo {
+                                t = free; // only contender: retry in-batch
+                                continue;
+                            }
+                            c.next_issue = free;
+                            return;
+                        }
+                        Ok(done) => {
+                            let c = &mut self.cores[ci];
+                            let flops = c.exec_fp(op, mode, rd, rs1, rs2);
+                            c.reg_ready[rd as usize] = done;
+                            c.reg_producer[rd as usize] = Producer::DivSqrt;
+                            c.counters.active += 1;
+                            c.counters.instrs += 1;
+                            c.counters.fp_instrs += 1;
+                            c.counters.flops += flops;
+                            t += 1;
+                            advance(c, &d);
+                        }
+                    }
+                }
+                OpClass::Barrier => {
+                    // Count the barrier instruction itself.
+                    {
+                        let c = &mut self.cores[ci];
+                        c.counters.active += 1;
+                        c.counters.instrs += 1;
+                        c.counters.int_instrs += 1;
+                        advance(c, &d);
+                    }
+                    match self.event.arrive(ci, t) {
+                        Some(wake) => {
+                            // Wake everyone (including self).
+                            for c in self.cores.iter_mut() {
+                                match c.state {
+                                    CoreState::Sleeping { since } => {
+                                        c.counters.barrier_idle += wake - since;
+                                        c.state = CoreState::Running;
+                                        c.next_issue = wake;
+                                        woken.push(c.id);
+                                    }
+                                    CoreState::Running if c.id == ci => {
+                                        c.counters.barrier_idle += wake - (t + 1);
+                                        c.next_issue = wake;
+                                    }
+                                    _ => {}
+                                }
+                            }
+                            if solo {
+                                t = wake; // nobody to re-arbitrate against
+                                continue;
+                            }
+                            return;
+                        }
+                        None => {
+                            let c = &mut self.cores[ci];
+                            c.state = CoreState::Sleeping { since: t + 1 };
+                            c.next_issue = u64::MAX; // woken explicitly
+                            return;
+                        }
+                    }
+                }
+            }
+            // Local instruction executed — continue the straight-line batch.
+        }
+    }
+}

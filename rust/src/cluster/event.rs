@@ -25,6 +25,16 @@ impl EventUnit {
         EventUnit { ncores, arrived: vec![false; ncores], count: 0, generation: 0 }
     }
 
+    /// Reset to an empty barrier over `ncores` cores, keeping the
+    /// allocation where possible.
+    pub fn reset(&mut self, ncores: usize) {
+        self.ncores = ncores;
+        self.arrived.clear();
+        self.arrived.resize(ncores, false);
+        self.count = 0;
+        self.generation = 0;
+    }
+
     /// Core `id` arrives at the barrier at `cycle`. Returns `Some(wake_cycle)`
     /// if this arrival completes the barrier (all cores then resume at
     /// `wake_cycle`), `None` if the core must sleep.

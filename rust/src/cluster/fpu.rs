@@ -38,6 +38,14 @@ impl FpuSubsystem {
         }
     }
 
+    /// Reset to power-on state, keeping allocations.
+    pub fn reset(&mut self) {
+        self.port_busy_at.fill(u64::MAX);
+        self.divsqrt_busy_until = 0;
+        self.ops_accepted.fill(0);
+        self.divsqrt_ops = 0;
+    }
+
     /// Try to issue a (non-divsqrt) op on FPU `fpu` at `cycle`.
     /// True = accepted; false = port already granted this cycle (contention).
     pub fn try_issue(&mut self, fpu: usize, cycle: u64) -> bool {

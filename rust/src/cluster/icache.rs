@@ -32,6 +32,21 @@ impl ICache {
         }
     }
 
+    /// Reset tags and counters, keeping the allocation.
+    pub fn reset(&mut self) {
+        self.line_ready.fill(u64::MAX);
+        self.fills = 0;
+    }
+
+    /// Cycle at which the line holding `pc` becomes (or became) available;
+    /// `u64::MAX` if it was never requested. Pure lookup — the batched
+    /// issue engine uses it to decide whether a fetch can be a guaranteed
+    /// hit without mutating fill state.
+    #[inline]
+    pub fn peek(&self, pc: u32) -> u64 {
+        self.line_ready[pc as usize / INSNS_PER_LINE]
+    }
+
     /// A core fetches instruction index `pc` at `cycle`. Returns the cycle
     /// at which the fetch completes (== `cycle` on a hit).
     pub fn fetch(&mut self, pc: u32, cycle: u64) -> u64 {
@@ -75,5 +90,18 @@ mod tests {
         // A second core hits the in-flight fill and waits for the same cycle.
         assert_eq!(ic.fetch(9, 52), done);
         assert_eq!(ic.fills, 1);
+    }
+
+    #[test]
+    fn peek_never_mutates() {
+        let mut ic = ICache::new(16);
+        assert_eq!(ic.peek(0), u64::MAX);
+        assert_eq!(ic.fills, 0);
+        let done = ic.fetch(0, 10);
+        assert_eq!(ic.peek(3), done); // same line
+        assert_eq!(ic.peek(4), u64::MAX); // next line untouched
+        ic.reset();
+        assert_eq!(ic.peek(0), u64::MAX);
+        assert_eq!(ic.fills, 0);
     }
 }

@@ -47,6 +47,15 @@ impl Memory {
         }
     }
 
+    /// Reset contents to zero, keeping the TCDM allocation and dropping the
+    /// lazily-grown L2 back to empty (its backing capacity is retained by
+    /// `Vec::clear`, so a reset-and-rerun does not reallocate).
+    pub fn reset(&mut self) {
+        self.tcdm.fill(0);
+        self.l2.clear();
+        self.bank_busy_at.fill(u64::MAX);
+    }
+
     /// Which region (and word index) an address maps to. Panics on
     /// out-of-range addresses — kernels own their layout.
     pub fn region_of(&self, addr: u32) -> Region {
@@ -152,8 +161,64 @@ impl Memory {
         }
     }
 
+    /// Mutable word-aligned span of `words` words fully inside one region;
+    /// `None` sends the caller down the per-word masking path. L2 spans are
+    /// grown (zero-filled) to cover the range, exactly like per-word writes
+    /// would.
+    fn words_mut(&mut self, addr: u32, words: usize) -> Option<&mut [u32]> {
+        if addr % 4 != 0 || words == 0 {
+            return None;
+        }
+        match self.region_of(addr) {
+            Region::Tcdm => {
+                let idx = ((addr - TCDM_BASE) / 4) as usize;
+                self.tcdm.get_mut(idx..idx + words)
+            }
+            Region::L2 => {
+                let idx = ((addr - L2_BASE) / 4) as usize;
+                if idx + words > self.l2_capacity {
+                    return None; // per-word path raises the overflow panic
+                }
+                if idx + words > self.l2.len() {
+                    self.l2.resize(idx + words, 0);
+                }
+                Some(&mut self.l2[idx..idx + words])
+            }
+        }
+    }
+
+    /// Shared word-aligned span, if the whole range is backed (an L2 range
+    /// beyond the lazily-grown backing reads as zeros via the per-word
+    /// path).
+    fn words_ref(&self, addr: u32, words: usize) -> Option<&[u32]> {
+        if addr % 4 != 0 || words == 0 {
+            return None;
+        }
+        match self.region_of(addr) {
+            Region::Tcdm => {
+                let idx = ((addr - TCDM_BASE) / 4) as usize;
+                self.tcdm.get(idx..idx + words)
+            }
+            Region::L2 => {
+                let idx = ((addr - L2_BASE) / 4) as usize;
+                if idx + words > self.l2_capacity {
+                    return None;
+                }
+                self.l2.get(idx..idx + words)
+            }
+        }
+    }
+
     /// Bulk write of f32 values starting at `addr` (harness data staging).
+    /// Word-aligned single-region spans take a direct copy; anything else
+    /// falls back to per-word stores.
     pub fn write_f32_slice(&mut self, addr: u32, data: &[f32]) {
+        if let Some(dst) = self.words_mut(addr, data.len()) {
+            for (d, v) in dst.iter_mut().zip(data) {
+                *d = v.to_bits();
+            }
+            return;
+        }
         for (i, v) in data.iter().enumerate() {
             self.store(addr + 4 * i as u32, MemSize::Word, v.to_bits());
         }
@@ -161,11 +226,29 @@ impl Memory {
 
     /// Bulk read of f32 values.
     pub fn read_f32_slice(&self, addr: u32, len: usize) -> Vec<f32> {
+        if let Some(src) = self.words_ref(addr, len) {
+            return src.iter().map(|&w| f32::from_bits(w)).collect();
+        }
         (0..len).map(|i| f32::from_bits(self.load(addr + 4 * i as u32, MemSize::Word))).collect()
     }
 
-    /// Bulk write of raw 16-bit lanes (packed vectors).
+    /// Bulk write of raw 16-bit lanes (packed vectors). Word-aligned runs
+    /// are packed two lanes per word and copied; a trailing odd lane (or an
+    /// unaligned base) uses the masking path.
     pub fn write_u16_slice(&mut self, addr: u32, data: &[u16]) {
+        if addr % 4 == 0 {
+            let pairs = data.len() / 2;
+            if let Some(dst) = self.words_mut(addr, pairs) {
+                for (d, p) in dst.iter_mut().zip(data.chunks_exact(2)) {
+                    *d = p[0] as u32 | ((p[1] as u32) << 16);
+                }
+                if data.len() % 2 == 1 {
+                    let i = data.len() - 1;
+                    self.store(addr + 2 * i as u32, MemSize::HalfU, data[i] as u32);
+                }
+                return;
+            }
+        }
         for (i, v) in data.iter().enumerate() {
             self.store(addr + 2 * i as u32, MemSize::HalfU, *v as u32);
         }
@@ -173,11 +256,28 @@ impl Memory {
 
     /// Bulk read of raw 16-bit lanes.
     pub fn read_u16_slice(&self, addr: u32, len: usize) -> Vec<u16> {
+        if addr % 4 == 0 {
+            if let Some(src) = self.words_ref(addr, len / 2) {
+                let mut out = Vec::with_capacity(len);
+                for &w in src {
+                    out.push(w as u16);
+                    out.push((w >> 16) as u16);
+                }
+                if len % 2 == 1 {
+                    out.push(self.load(addr + 2 * (len - 1) as u32, MemSize::HalfU) as u16);
+                }
+                return out;
+            }
+        }
         (0..len).map(|i| self.load(addr + 2 * i as u32, MemSize::HalfU) as u16).collect()
     }
 
     /// Bulk write of raw words.
     pub fn write_u32_slice(&mut self, addr: u32, data: &[u32]) {
+        if let Some(dst) = self.words_mut(addr, data.len()) {
+            dst.copy_from_slice(data);
+            return;
+        }
         for (i, v) in data.iter().enumerate() {
             self.store(addr + 4 * i as u32, MemSize::Word, *v);
         }
@@ -186,6 +286,80 @@ impl Memory {
     /// TCDM capacity in bytes.
     pub fn tcdm_bytes(&self) -> usize {
         self.tcdm.len() * 4
+    }
+
+    /// `memcpy`-style block move of `words` words from `src` to `dst`, used
+    /// by the DMA engine. Returns `false` (no copy performed) when either
+    /// range is unaligned, out of range, or the ranges are same-region and
+    /// overlapping — callers then take the sequential per-word path.
+    pub(crate) fn copy_words(&mut self, src: u32, dst: u32, words: usize) -> bool {
+        if words == 0 {
+            return true;
+        }
+        if src % 4 != 0 || dst % 4 != 0 {
+            return false;
+        }
+        let (sr, dr) = (self.region_of(src), self.region_of(dst));
+        if sr == dr {
+            let overlap = src < dst + 4 * words as u32 && dst < src + 4 * words as u32;
+            if overlap {
+                return false;
+            }
+        }
+        // Reads of unallocated L2 words return zero: grow the source range
+        // first so a plain slice copy sees the same values.
+        if sr == Region::L2 {
+            let idx = ((src - L2_BASE) / 4) as usize;
+            if idx + words > self.l2_capacity {
+                return false;
+            }
+            if idx + words > self.l2.len() {
+                self.l2.resize(idx + words, 0);
+            }
+        }
+        match (sr, dr) {
+            (Region::L2, Region::Tcdm) => {
+                let si = ((src - L2_BASE) / 4) as usize;
+                let di = ((dst - TCDM_BASE) / 4) as usize;
+                if di + words > self.tcdm.len() {
+                    return false;
+                }
+                let (tcdm, l2) = (&mut self.tcdm, &self.l2);
+                tcdm[di..di + words].copy_from_slice(&l2[si..si + words]);
+            }
+            (Region::Tcdm, Region::L2) => {
+                let si = ((src - TCDM_BASE) / 4) as usize;
+                let di = ((dst - L2_BASE) / 4) as usize;
+                if si + words > self.tcdm.len() || di + words > self.l2_capacity {
+                    return false;
+                }
+                if di + words > self.l2.len() {
+                    self.l2.resize(di + words, 0);
+                }
+                let (l2, tcdm) = (&mut self.l2, &self.tcdm);
+                l2[di..di + words].copy_from_slice(&tcdm[si..si + words]);
+            }
+            (Region::Tcdm, Region::Tcdm) => {
+                let si = ((src - TCDM_BASE) / 4) as usize;
+                let di = ((dst - TCDM_BASE) / 4) as usize;
+                if si + words > self.tcdm.len() || di + words > self.tcdm.len() {
+                    return false;
+                }
+                self.tcdm.copy_within(si..si + words, di);
+            }
+            (Region::L2, Region::L2) => {
+                let si = ((src - L2_BASE) / 4) as usize;
+                let di = ((dst - L2_BASE) / 4) as usize;
+                if di + words > self.l2_capacity {
+                    return false;
+                }
+                if di + words > self.l2.len() {
+                    self.l2.resize(di + words, 0);
+                }
+                self.l2.copy_within(si..si + words, di);
+            }
+        }
+        true
     }
 }
 
@@ -215,9 +389,13 @@ impl Dma {
         words: u32,
     ) -> u64 {
         const SETUP: u64 = 10; // command + L2 latency
-        for i in 0..words {
-            let v = mem.load(src + 4 * i, MemSize::Word);
-            mem.store(dst + 4 * i, MemSize::Word, v);
+        if !mem.copy_words(src, dst, words as usize) {
+            // Unaligned / overlapping / partially-backed ranges: the
+            // word-at-a-time path preserves the exact sequential semantics.
+            for i in 0..words {
+                let v = mem.load(src + 4 * i, MemSize::Word);
+                mem.store(dst + 4 * i, MemSize::Word, v);
+            }
         }
         self.words_moved += words as u64;
         let start = self.busy_until.max(now);
@@ -277,6 +455,50 @@ mod tests {
         assert_eq!(m.read_f32_slice(a, 3), vec![1.0, -2.5, 3.25]);
         m.write_u16_slice(a, &[0x3C00, 0xC000]);
         assert_eq!(m.read_u16_slice(a, 2), vec![0x3C00, 0xC000]);
+    }
+
+    #[test]
+    fn bulk_paths_match_per_word_semantics() {
+        let mut m = mem8();
+        // Odd-length u16 slice exercises the word fast path + masked tail.
+        let a = TCDM_BASE + 512;
+        m.write_u16_slice(a, &[1, 2, 3, 4, 5]);
+        assert_eq!(m.read_u16_slice(a, 5), vec![1, 2, 3, 4, 5]);
+        // Unaligned base falls back to the masking path.
+        m.write_u16_slice(a + 2, &[7, 8, 9]);
+        assert_eq!(m.read_u16_slice(a + 2, 3), vec![7, 8, 9]);
+        assert_eq!(m.read_u16_slice(a, 1), vec![1]); // neighbour untouched
+        // L2 bulk write grows the lazy backing; reads past it return zeros.
+        m.write_u32_slice(L2_BASE + 64, &[10, 11, 12]);
+        assert_eq!(m.load(L2_BASE + 64, MemSize::Word), 10);
+        assert_eq!(m.read_f32_slice(L2_BASE + 4096, 2), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn reset_zeroes_and_keeps_capacity() {
+        let mut m = mem8();
+        m.write_u32_slice(TCDM_BASE, &[1, 2, 3]);
+        m.write_u32_slice(L2_BASE, &[4, 5]);
+        assert!(m.claim_bank(0, 7));
+        m.reset();
+        assert_eq!(m.read_u16_slice(TCDM_BASE, 2), vec![0, 0]);
+        assert_eq!(m.load(L2_BASE, MemSize::Word), 0);
+        assert!(m.claim_bank(0, 7), "bank grants cleared by reset");
+        assert_eq!(m.tcdm_bytes(), 64 * 1024);
+    }
+
+    #[test]
+    fn dma_overlapping_ranges_match_sequential_copy() {
+        // Overlapping same-region copy must behave like the per-word loop.
+        let mut m = mem8();
+        let a = TCDM_BASE + 256;
+        m.write_u32_slice(a, &[1, 2, 3, 4]);
+        let mut dma = Dma::default();
+        dma.transfer(&mut m, 0, a, a + 4, 4); // dst overlaps src
+        // Sequential per-word semantics smear the first element forward.
+        let got: Vec<u32> =
+            (0..5).map(|i| m.load(a + 4 * i, MemSize::Word)).collect();
+        assert_eq!(got, vec![1, 1, 1, 1, 1]);
     }
 
     #[test]

@@ -6,6 +6,16 @@
 //! (round-robin of the FPU interconnect and TCDM logarithmic interconnect)
 //! is modelled by rotating the core issue order every cycle.
 //!
+//! Two issue engines execute the same timing model:
+//!
+//! * [`Engine::Event`] (default, [`engine`]) — the production hot path: an
+//!   event-driven scheduler keyed on each core's `next_issue` plus batched
+//!   straight-line execution of predecoded instructions between contention
+//!   points. Cycle-for-cycle identical to the reference engine (enforced by
+//!   the differential tests in `tests/differential.rs`).
+//! * [`Engine::Reference`] ([`reference`]) — the original per-cycle
+//!   rotate-and-scan loop, kept as the executable specification.
+//!
 //! Timing model summary (per instruction class):
 //!
 //! | class | issue→reuse | result→consumer |
@@ -26,26 +36,34 @@
 
 pub mod core;
 pub mod counters;
+pub mod engine;
 pub mod event;
 pub mod fpu;
 pub mod icache;
 pub mod mem;
+pub mod reference;
 
 use crate::config::ClusterConfig;
-use crate::isa::insn::Insn;
+use crate::isa::decoded::DecodedProgram;
 use crate::isa::Program;
 
-use self::core::{Core, CoreState, Producer};
+pub(crate) use crate::isa::decoded::{INT_DIV_LATENCY, TAKEN_BRANCH_CYCLES};
+
+use self::core::{Core, CoreState};
 use self::counters::{CoreCounters, RunStats};
 use self::event::EventUnit;
 use self::fpu::FpuSubsystem;
 use self::icache::ICache;
-use self::mem::{Memory, Region};
+use self::mem::Memory;
 
-/// Latency of the iterative integer divider (RI5CY serial divider).
-const INT_DIV_LATENCY: u64 = 35;
-/// Taken-branch penalty (total cycles occupied by the branch).
-const TAKEN_BRANCH_CYCLES: u64 = 3;
+/// Which issue engine executes a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Event-driven scheduler with batched straight-line runs (default).
+    Event,
+    /// Per-cycle rotate-and-scan loop (the executable specification).
+    Reference,
+}
 
 /// The simulated cluster.
 pub struct Cluster {
@@ -63,6 +81,9 @@ pub struct Cluster {
     pub event: EventUnit,
     /// The SPMD program all cores run.
     program: Program,
+    /// Predecoded form of `program` (resolved read sets, static classes,
+    /// latencies, hw-loop metadata) — the event engine's working set.
+    decoded: DecodedProgram,
     /// Current cycle.
     pub now: u64,
     /// Hard cycle limit (deadlock guard).
@@ -80,6 +101,7 @@ impl Cluster {
     /// Build a cluster running `program` on every core.
     pub fn new(cfg: ClusterConfig, program: Program) -> Self {
         let cores = (0..cfg.cores).map(|i| Core::new(i, cfg.cores)).collect();
+        let decoded = DecodedProgram::decode(&program);
         Cluster {
             cores,
             mem: Memory::new(&cfg),
@@ -87,12 +109,32 @@ impl Cluster {
             icache: ICache::new(program.len()),
             event: EventUnit::new(cfg.cores),
             program,
+            decoded,
             now: 0,
             max_cycles: 2_000_000_000,
             perfect_icache: false,
             trace: std::env::var_os("TRANSPFP_TRACE").is_some(),
             cfg,
         }
+    }
+
+    /// Reset every subsystem to its power-on state, **reusing all
+    /// allocations** (TCDM array, L2 backing, I$ tags, decoded program).
+    /// Sweeps and benches call this between repetitions instead of
+    /// rebuilding `Memory`/cores per run; a reset cluster is
+    /// indistinguishable from a freshly built one (asserted by the
+    /// differential tests). Re-activates all cores — re-apply
+    /// [`Self::limit_active_cores`] afterwards if needed.
+    pub fn reset(&mut self) {
+        let n = self.cfg.cores;
+        for c in self.cores.iter_mut() {
+            c.reset(n);
+        }
+        self.mem.reset();
+        self.fpus.reset();
+        self.icache.reset();
+        self.event.reset(n);
+        self.now = 0;
     }
 
     /// Restrict execution to the first `n` cores; the rest terminate
@@ -105,378 +147,47 @@ impl Cluster {
         for c in self.cores.iter_mut().skip(n) {
             c.state = CoreState::Done;
         }
-        self.event = EventUnit::new(n);
+        self.event.reset(n);
         // The HAL reports the worker count, not the physical core count.
         for c in self.cores.iter_mut().take(n) {
             c.set_reg(crate::isa::regs::NCORES, n as u32);
         }
     }
 
-    /// Run to completion; returns per-core counters.
+    /// Run to completion on the default (event-driven) engine; returns
+    /// per-core counters.
     pub fn run(&mut self) -> RunStats {
-        while self.now < self.max_cycles {
-            if self.step() {
-                break;
-            }
+        self.run_with(Engine::Event)
+    }
+
+    /// Run to completion on the selected engine.
+    pub fn run_with(&mut self, engine: Engine) -> RunStats {
+        match engine {
+            Engine::Event => self.run_event(),
+            Engine::Reference => self.run_reference(),
         }
-        assert!(self.now < self.max_cycles, "simulation exceeded max_cycles (deadlock?)");
+    }
+
+    /// Gather the per-core counters into a [`RunStats`].
+    pub(crate) fn collect_stats(&self) -> RunStats {
         let per_core: Vec<CoreCounters> = self.cores.iter().map(|c| c.counters).collect();
         let total_cycles = per_core.iter().map(|c| c.cycles).max().unwrap_or(0);
         RunStats { per_core, total_cycles }
     }
 
-    /// Advance one cycle. Returns true when every core is done.
-    fn step(&mut self) -> bool {
-        let n = self.cores.len();
-        let rot = (self.now as usize) % n;
-        let mut all_done = true;
-        let mut min_next = u64::MAX;
-        for k in 0..n {
-            // Branch instead of modulo: the `%` showed up in the profile.
-            let ci = if rot + k >= n { rot + k - n } else { rot + k };
-            match self.cores[ci].state {
-                CoreState::Done => continue,
-                CoreState::Sleeping { .. } => {
-                    all_done = false;
-                    continue; // woken by the barrier completion
-                }
-                CoreState::Running => {
-                    all_done = false;
-                    if self.cores[ci].next_issue > self.now {
-                        min_next = min_next.min(self.cores[ci].next_issue);
-                        continue;
-                    }
-                    self.issue(ci);
-                    min_next = min_next.min(self.cores[ci].next_issue);
-                }
-            }
-        }
-        if all_done {
-            return true;
-        }
-        // Fast-forward across cycles where no core can issue (barrier sleeps
-        // resolve inside issue(); DIV-SQRT / L2 waits are bulk-attributed).
-        self.now = if min_next == u64::MAX { self.now + 1 } else { min_next.max(self.now + 1) };
-        false
+    /// The predecoded program (read-only view).
+    pub fn decoded(&self) -> &DecodedProgram {
+        &self.decoded
     }
 
-    /// Attempt to issue the next instruction of core `ci` at `self.now`.
-    fn issue(&mut self, ci: usize) {
-        let t = self.now;
-        let insn = self.program.insns[self.cores[ci].pc as usize];
-        if self.trace {
-            eprintln!("t={t} core={ci} pc={} {:?}", self.cores[ci].pc, insn);
-        }
-
-        // 1. Instruction fetch through the shared I$.
-        let fetched =
-            if self.perfect_icache { t } else { self.icache.fetch(self.cores[ci].pc, t) };
-        if fetched > t {
-            let c = &mut self.cores[ci];
-            c.counters.icache_stall += fetched - t;
-            c.next_issue = fetched;
-            return;
-        }
-
-        // 2. Operand scoreboard.
-        let (ready, who) = self.cores[ci].operands_ready(&insn);
-        if ready > t {
-            let c = &mut self.cores[ci];
-            let wait = ready - t;
-            match who {
-                Producer::Fpu | Producer::DivSqrt => c.counters.fpu_stall += wait,
-                Producer::Load => c.counters.load_stall += wait,
-                Producer::None => {}
-            }
-            c.next_issue = ready;
-            return;
-        }
-
-        // 3. Write-back port conflict (§5.3.3): only with 2 pipeline stages,
-        // when an int/LSU write follows an FP op back-to-back. The FPU's
-        // result skid register absorbs two of every three collisions, so one
-        // in three costs a stall (matching the ~10% penalty of Fig 8).
-        if self.cfg.pipe >= 2
-            && !insn.is_fp()
-            && writes_reg(&insn)
-            && self.cores[ci].last_fp_issue == t.wrapping_sub(1)
-        {
-            let c = &mut self.cores[ci];
-            c.wb_skid += 1;
-            if c.wb_skid >= 3 {
-                c.wb_skid = 0;
-                c.counters.wb_stall += 1;
-                c.next_issue = t + 1;
-                return;
-            }
-        }
-
-        // 4. Class-specific structural hazards + execution.
-        match insn {
-            Insn::Alu { op, rd, rs1, rhs } => {
-                let c = &mut self.cores[ci];
-                c.exec_alu(op, rd, rs1, rhs);
-                let lat = if matches!(op, crate::isa::AluOp::Div | crate::isa::AluOp::Rem) {
-                    INT_DIV_LATENCY
-                } else {
-                    1
-                };
-                c.counters.active += lat;
-                c.counters.instrs += 1;
-                c.counters.int_instrs += 1;
-                c.next_issue = t + lat;
-                c.advance_pc();
-            }
-            Insn::Li { rd, imm } => {
-                let c = &mut self.cores[ci];
-                c.set_reg(rd, imm);
-                c.counters.active += 1;
-                c.counters.instrs += 1;
-                c.counters.int_instrs += 1;
-                c.next_issue = t + 1;
-                c.advance_pc();
-            }
-            Insn::Load { rd, base, offset, post_inc, size } => {
-                let addr =
-                    (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
-                match self.mem.region_of(addr) {
-                    Region::Tcdm => {
-                        let bank = self.mem.bank_of(addr);
-                        if !self.mem.claim_bank(bank, t) {
-                            let c = &mut self.cores[ci];
-                            c.counters.tcdm_cont += 1;
-                            c.next_issue = t + 1;
-                            return;
-                        }
-                        let c = &mut self.cores[ci];
-                        let addr = c.mem_addr_and_postinc(base, offset, post_inc);
-                        c.exec_load(&self.mem, rd, addr, size);
-                        c.reg_ready[rd as usize] = t + 2; // 1 load-use bubble
-                        c.reg_producer[rd as usize] = Producer::Load;
-                        c.counters.active += 1;
-                        c.counters.instrs += 1;
-                        c.counters.mem_instrs += 1;
-                        c.next_issue = t + 1;
-                        c.advance_pc();
-                    }
-                    Region::L2 => {
-                        let lat = self.cfg.l2_latency();
-                        let c = &mut self.cores[ci];
-                        let addr = c.mem_addr_and_postinc(base, offset, post_inc);
-                        c.exec_load(&self.mem, rd, addr, size);
-                        c.counters.active += 1;
-                        c.counters.l2_stall += lat - 1;
-                        c.counters.instrs += 1;
-                        c.counters.mem_instrs += 1;
-                        c.next_issue = t + lat; // core blocks on the demux
-                        c.advance_pc();
-                    }
-                }
-            }
-            Insn::Store { rs, base, offset, post_inc, size } => {
-                let addr =
-                    (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
-                match self.mem.region_of(addr) {
-                    Region::Tcdm => {
-                        let bank = self.mem.bank_of(addr);
-                        if !self.mem.claim_bank(bank, t) {
-                            let c = &mut self.cores[ci];
-                            c.counters.tcdm_cont += 1;
-                            c.next_issue = t + 1;
-                            return;
-                        }
-                        let c = &mut self.cores[ci];
-                        let addr = c.mem_addr_and_postinc(base, offset, post_inc);
-                        let v = c.reg(rs);
-                        self.mem.store(addr, size, v);
-                        c.counters.active += 1;
-                        c.counters.instrs += 1;
-                        c.counters.mem_instrs += 1;
-                        c.next_issue = t + 1;
-                        c.advance_pc();
-                    }
-                    Region::L2 => {
-                        let lat = self.cfg.l2_latency();
-                        let c = &mut self.cores[ci];
-                        let addr = c.mem_addr_and_postinc(base, offset, post_inc);
-                        let v = c.reg(rs);
-                        self.mem.store(addr, size, v);
-                        c.counters.active += 1;
-                        c.counters.l2_stall += lat - 1;
-                        c.counters.instrs += 1;
-                        c.counters.mem_instrs += 1;
-                        c.next_issue = t + lat;
-                        c.advance_pc();
-                    }
-                }
-            }
-            Insn::Branch { cond, rs1, rs2, target } => {
-                let c = &mut self.cores[ci];
-                let taken = c.branch_taken(cond, rs1, rs2);
-                c.counters.active += 1;
-                c.counters.instrs += 1;
-                c.counters.int_instrs += 1;
-                if taken {
-                    c.pc = target;
-                    c.counters.branch_stall += TAKEN_BRANCH_CYCLES - 1;
-                    c.next_issue = t + TAKEN_BRANCH_CYCLES;
-                } else {
-                    c.next_issue = t + 1;
-                    c.advance_pc();
-                }
-            }
-            Insn::Jump { target } => {
-                let c = &mut self.cores[ci];
-                c.counters.active += 1;
-                c.counters.instrs += 1;
-                c.counters.int_instrs += 1;
-                c.pc = target;
-                c.counters.branch_stall += TAKEN_BRANCH_CYCLES - 1;
-                c.next_issue = t + TAKEN_BRANCH_CYCLES;
-            }
-            Insn::HwLoop { count, start, end } => {
-                let c = &mut self.cores[ci];
-                let n = c.reg(count);
-                c.counters.active += 1;
-                c.counters.instrs += 1;
-                c.counters.int_instrs += 1;
-                c.next_issue = t + 1;
-                if n == 0 {
-                    c.pc = end;
-                } else {
-                    c.hwloops.push((start, end, n));
-                    c.pc = start;
-                }
-            }
-            Insn::Fp { op, mode, rd, rs1, rs2 } => {
-                if op.is_alu_class() {
-                    // Integer-SIMD lane permutation: plain 1-cycle ALU op.
-                    let c = &mut self.cores[ci];
-                    c.exec_fp(op, mode, rd, rs1, rs2);
-                    c.counters.active += 1;
-                    c.counters.instrs += 1;
-                    c.counters.int_instrs += 1;
-                    c.next_issue = t + 1;
-                    c.advance_pc();
-                } else if op.is_divsqrt() {
-                    match self.fpus.try_divsqrt(mode, t) {
-                        Err(free) => {
-                            let c = &mut self.cores[ci];
-                            c.counters.divsqrt_cont += free - t;
-                            c.next_issue = free;
-                        }
-                        Ok(done) => {
-                            let c = &mut self.cores[ci];
-                            let flops = c.exec_fp(op, mode, rd, rs1, rs2);
-                            c.reg_ready[rd as usize] = done;
-                            c.reg_producer[rd as usize] = Producer::DivSqrt;
-                            c.counters.active += 1;
-                            c.counters.instrs += 1;
-                            c.counters.fp_instrs += 1;
-                            c.counters.flops += flops;
-                            c.next_issue = t + 1;
-                            c.advance_pc();
-                        }
-                    }
-                } else {
-                    let fpu = self.cfg.fpu_of_core(ci);
-                    if !self.fpus.try_issue(fpu, t) {
-                        let c = &mut self.cores[ci];
-                        c.counters.fpu_cont += 1;
-                        c.next_issue = t + 1;
-                        return;
-                    }
-                    let pipe = self.cfg.pipe as u64;
-                    let c = &mut self.cores[ci];
-                    let flops = c.exec_fp(op, mode, rd, rs1, rs2);
-                    c.reg_ready[rd as usize] = t + 1 + pipe;
-                    c.reg_producer[rd as usize] = Producer::Fpu;
-                    c.last_fp_issue = t;
-                    c.counters.active += 1;
-                    c.counters.instrs += 1;
-                    c.counters.fp_instrs += 1;
-                    if mode.is_vector() {
-                        c.counters.fp_vec_instrs += 1;
-                    }
-                    c.counters.flops += flops;
-                    c.next_issue = t + 1;
-                    c.advance_pc();
-                }
-            }
-            Insn::Barrier => {
-                // Count the barrier instruction itself.
-                {
-                    let c = &mut self.cores[ci];
-                    c.counters.active += 1;
-                    c.counters.instrs += 1;
-                    c.counters.int_instrs += 1;
-                    c.advance_pc();
-                }
-                match self.event.arrive(ci, t) {
-                    Some(wake) => {
-                        // Wake everyone (including self).
-                        for c in self.cores.iter_mut() {
-                            match c.state {
-                                CoreState::Sleeping { since } => {
-                                    c.counters.barrier_idle += wake - since;
-                                    c.state = CoreState::Running;
-                                    c.next_issue = wake;
-                                }
-                                CoreState::Running if c.id == ci => {
-                                    c.counters.barrier_idle += wake - (t + 1);
-                                    c.next_issue = wake;
-                                }
-                                _ => {}
-                            }
-                        }
-                    }
-                    None => {
-                        let c = &mut self.cores[ci];
-                        c.state = CoreState::Sleeping { since: t + 1 };
-                        c.next_issue = u64::MAX; // woken explicitly
-                    }
-                }
-            }
-            Insn::End => {
-                let c = &mut self.cores[ci];
-                c.counters.active += 1;
-                c.counters.instrs += 1;
-                c.counters.cycles = t;
-                c.state = CoreState::Done;
-            }
-        }
+    /// The program this cluster was built for (read-only view).
+    pub fn program(&self) -> &Program {
+        &self.program
     }
-}
 
-impl Core {
-    /// Advance past the current instruction, honouring hardware loops.
-    fn advance_pc(&mut self) {
-        let mut next = self.pc + 1;
-        while let Some((start, end, remaining)) = self.hwloops.last_mut() {
-            if next == *end {
-                if *remaining > 1 {
-                    *remaining -= 1;
-                    next = *start;
-                    break;
-                } else {
-                    self.hwloops.pop();
-                    // fall through: check enclosing loop against `next`
-                }
-            } else {
-                break;
-            }
-        }
-        self.pc = next;
-    }
-}
-
-/// Does the instruction write an integer/FP destination register?
-fn writes_reg(i: &Insn) -> bool {
-    match i {
-        Insn::Alu { .. } | Insn::Li { .. } | Insn::Load { .. } => true,
-        // Post-increment stores update the base register.
-        Insn::Store { post_inc, .. } => *post_inc != 0,
-        _ => false,
+    /// Shared accessors for the engines.
+    pub(crate) fn trace_enabled(&self) -> bool {
+        self.trace
     }
 }
 
@@ -488,6 +199,24 @@ mod tests {
 
     fn cfg(c: usize, f: usize, p: u32) -> ClusterConfig {
         ClusterConfig::new(c, f, p)
+    }
+
+    /// Run the same program on both engines and assert cycle-identical
+    /// stats; returns the event-engine stats.
+    fn run_both(cfg: ClusterConfig, prog: crate::isa::Program, workers: Option<usize>) -> RunStats {
+        let mut a = Cluster::new(cfg, prog.clone());
+        let mut b = Cluster::new(cfg, prog);
+        if let Some(w) = workers {
+            a.limit_active_cores(w);
+            b.limit_active_cores(w);
+        }
+        let sa = a.run_with(Engine::Event);
+        let sb = b.run_with(Engine::Reference);
+        assert_eq!(sa.total_cycles, sb.total_cycles, "engines disagree on total cycles");
+        for (i, (x, y)) in sa.per_core.iter().zip(&sb.per_core).enumerate() {
+            assert_eq!(x, y, "engines disagree on core {i}");
+        }
+        sa
     }
 
     /// A one-core program that stores 1+2 to TCDM.
@@ -734,5 +463,95 @@ mod tests {
         let s = cl.run();
         assert!(s.total_cycles < 50, "4-way barrier must not deadlock");
         assert_eq!(cl.cores[0].reg(regs::NCORES), 4);
+    }
+
+    /// The two engines produce cycle-identical stats on hand-built micro
+    /// programs that exercise every hazard path: hw loops, branches, WB
+    /// conflicts, TCDM contention, FPU contention, DIV-SQRT queueing,
+    /// barriers with skewed arrival, and L2 blocking.
+    #[test]
+    fn engines_cycle_identical_on_micro_programs() {
+        let mixed = || {
+            let mut b = ProgramBuilder::new("mixed");
+            b.li(1, 1065353216).li(2, 1073741824);
+            b.li(5, mem::TCDM_BASE);
+            b.slli(6, regs::CORE_ID, 2).add(5, 5, 6);
+            b.li(7, 24);
+            b.hwloop(7);
+            b.fmac(FpMode::F32, 3, 1, 2);
+            b.sw(3, 5, 0);
+            b.lw(4, 5, 0);
+            b.addi(6, 6, 1);
+            b.hwloop_end();
+            b.fdiv(FpMode::F32, 8, 2, 1);
+            b.barrier();
+            b.bne(regs::CORE_ID, regs::ZERO, "skip");
+            b.li(9, mem::L2_BASE);
+            b.lw(9, 9, 0);
+            b.label("skip");
+            b.barrier();
+            b.end();
+            b.build()
+        };
+        for c in [cfg(8, 2, 0), cfg(8, 4, 1), cfg(8, 8, 2), cfg(16, 8, 1)] {
+            run_both(c, mixed(), None);
+        }
+        // Single-worker (solo fast path) and partial occupancy.
+        for workers in [1usize, 3] {
+            run_both(cfg(8, 4, 2), mixed(), Some(workers));
+        }
+    }
+
+    /// reset() returns the cluster to a state indistinguishable from a
+    /// freshly constructed one.
+    #[test]
+    fn reset_reproduces_fresh_run() {
+        let prog = || {
+            let mut b = ProgramBuilder::new("rst");
+            b.li(1, 1065353216).li(2, 1073741824);
+            b.li(5, mem::TCDM_BASE);
+            b.li(7, 16);
+            b.hwloop(7);
+            b.fadd(FpMode::F32, 3, 1, 2);
+            b.sw_pi(3, 5, 4);
+            b.hwloop_end();
+            b.barrier();
+            b.end();
+            b.build()
+        };
+        let c = cfg(8, 4, 1);
+        let mut fresh = Cluster::new(c, prog());
+        let s1 = fresh.run();
+
+        let mut reused = Cluster::new(c, prog());
+        let _ = reused.run();
+        reused.reset();
+        let s2 = reused.run();
+
+        assert_eq!(s1.total_cycles, s2.total_cycles);
+        for (a, b) in s1.per_core.iter().zip(&s2.per_core) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(
+            fresh.mem.load(mem::TCDM_BASE, crate::isa::MemSize::Word),
+            reused.mem.load(mem::TCDM_BASE, crate::isa::MemSize::Word)
+        );
+    }
+
+    /// reset() also restores the active-core limit to "all".
+    #[test]
+    fn reset_after_limit_active_cores() {
+        let mut b = ProgramBuilder::new("lim-rst");
+        b.barrier();
+        b.end();
+        let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
+        cl.limit_active_cores(2);
+        cl.run();
+        cl.reset();
+        // All 8 cores participate again; the 8-way barrier must complete.
+        let s = cl.run();
+        assert!(s.total_cycles < 50);
+        assert_eq!(cl.cores[0].reg(regs::NCORES), 8);
+        assert_eq!(s.per_core.iter().filter(|c| c.instrs > 0).count(), 8);
     }
 }

@@ -1,0 +1,354 @@
+//! Reference issue engine: the original per-cycle rotate-and-scan loop.
+//!
+//! This is the executable specification of the timing model. Every cycle it
+//! walks all cores in rotated priority order (the round-robin fairness of
+//! the FPU interconnect and TCDM logarithmic interconnect), attempts to
+//! issue on each runnable core, and fast-forwards the clock to the next
+//! `next_issue`. The event-driven engine ([`super::engine`]) must produce
+//! bit-identical `RunStats` — enforced by `tests/differential.rs` across
+//! kernels, variants, configurations and random programs.
+//!
+//! Keep this loop boring and obviously correct; optimizations belong in the
+//! event engine.
+
+use crate::isa::insn::Insn;
+
+use super::core::{CoreState, Producer};
+use super::counters::RunStats;
+use super::mem::Region;
+use super::{Cluster, INT_DIV_LATENCY, TAKEN_BRANCH_CYCLES};
+
+impl Cluster {
+    /// Run to completion on the per-cycle reference loop.
+    pub fn run_reference(&mut self) -> RunStats {
+        while self.now < self.max_cycles {
+            if self.step() {
+                break;
+            }
+        }
+        assert!(self.now < self.max_cycles, "simulation exceeded max_cycles (deadlock?)");
+        self.collect_stats()
+    }
+
+    /// Advance one cycle. Returns true when every core is done.
+    fn step(&mut self) -> bool {
+        let n = self.cores.len();
+        let rot = (self.now as usize) % n;
+        let mut all_done = true;
+        let mut min_next = u64::MAX;
+        for k in 0..n {
+            // Branch instead of modulo: the `%` showed up in the profile.
+            let ci = if rot + k >= n { rot + k - n } else { rot + k };
+            match self.cores[ci].state {
+                CoreState::Done => continue,
+                CoreState::Sleeping { .. } => {
+                    all_done = false;
+                    continue; // woken by the barrier completion
+                }
+                CoreState::Running => {
+                    all_done = false;
+                    if self.cores[ci].next_issue > self.now {
+                        min_next = min_next.min(self.cores[ci].next_issue);
+                        continue;
+                    }
+                    self.issue(ci);
+                    min_next = min_next.min(self.cores[ci].next_issue);
+                }
+            }
+        }
+        if all_done {
+            return true;
+        }
+        // Fast-forward across cycles where no core can issue (barrier sleeps
+        // resolve inside issue(); DIV-SQRT / L2 waits are bulk-attributed).
+        self.now = if min_next == u64::MAX { self.now + 1 } else { min_next.max(self.now + 1) };
+        false
+    }
+
+    /// Attempt to issue the next instruction of core `ci` at `self.now`.
+    fn issue(&mut self, ci: usize) {
+        let t = self.now;
+        let insn = self.program.insns[self.cores[ci].pc as usize];
+        if self.trace_enabled() {
+            eprintln!("t={t} core={ci} pc={} {:?}", self.cores[ci].pc, insn);
+        }
+
+        // 1. Instruction fetch through the shared I$.
+        let fetched =
+            if self.perfect_icache { t } else { self.icache.fetch(self.cores[ci].pc, t) };
+        if fetched > t {
+            let c = &mut self.cores[ci];
+            c.counters.icache_stall += fetched - t;
+            c.next_issue = fetched;
+            return;
+        }
+
+        // 2. Operand scoreboard.
+        let (ready, who) = self.cores[ci].operands_ready(&insn);
+        if ready > t {
+            let c = &mut self.cores[ci];
+            let wait = ready - t;
+            match who {
+                Producer::Fpu | Producer::DivSqrt => c.counters.fpu_stall += wait,
+                Producer::Load => c.counters.load_stall += wait,
+                Producer::None => {}
+            }
+            c.next_issue = ready;
+            return;
+        }
+
+        // 3. Write-back port conflict (§5.3.3): only with 2 pipeline stages,
+        // when an int/LSU write follows an FP op back-to-back. The FPU's
+        // result skid register absorbs two of every three collisions, so one
+        // in three costs a stall (matching the ~10% penalty of Fig 8).
+        if self.cfg.pipe >= 2
+            && !insn.is_fp()
+            && insn.writes_int_reg()
+            && self.cores[ci].last_fp_issue == t.wrapping_sub(1)
+        {
+            let c = &mut self.cores[ci];
+            c.wb_skid += 1;
+            if c.wb_skid >= 3 {
+                c.wb_skid = 0;
+                c.counters.wb_stall += 1;
+                c.next_issue = t + 1;
+                return;
+            }
+        }
+
+        // 4. Class-specific structural hazards + execution.
+        match insn {
+            Insn::Alu { op, rd, rs1, rhs } => {
+                let c = &mut self.cores[ci];
+                c.exec_alu(op, rd, rs1, rhs);
+                let lat = if matches!(op, crate::isa::AluOp::Div | crate::isa::AluOp::Rem) {
+                    INT_DIV_LATENCY
+                } else {
+                    1
+                };
+                c.counters.active += lat;
+                c.counters.instrs += 1;
+                c.counters.int_instrs += 1;
+                c.next_issue = t + lat;
+                c.advance_pc();
+            }
+            Insn::Li { rd, imm } => {
+                let c = &mut self.cores[ci];
+                c.set_reg(rd, imm);
+                c.counters.active += 1;
+                c.counters.instrs += 1;
+                c.counters.int_instrs += 1;
+                c.next_issue = t + 1;
+                c.advance_pc();
+            }
+            Insn::Load { rd, base, offset, post_inc, size } => {
+                let addr =
+                    (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
+                match self.mem.region_of(addr) {
+                    Region::Tcdm => {
+                        let bank = self.mem.bank_of(addr);
+                        if !self.mem.claim_bank(bank, t) {
+                            let c = &mut self.cores[ci];
+                            c.counters.tcdm_cont += 1;
+                            c.next_issue = t + 1;
+                            return;
+                        }
+                        let c = &mut self.cores[ci];
+                        let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                        c.exec_load(&self.mem, rd, addr, size);
+                        c.reg_ready[rd as usize] = t + 2; // 1 load-use bubble
+                        c.reg_producer[rd as usize] = Producer::Load;
+                        c.counters.active += 1;
+                        c.counters.instrs += 1;
+                        c.counters.mem_instrs += 1;
+                        c.next_issue = t + 1;
+                        c.advance_pc();
+                    }
+                    Region::L2 => {
+                        let lat = self.cfg.l2_latency();
+                        let c = &mut self.cores[ci];
+                        let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                        c.exec_load(&self.mem, rd, addr, size);
+                        c.counters.active += 1;
+                        c.counters.l2_stall += lat - 1;
+                        c.counters.instrs += 1;
+                        c.counters.mem_instrs += 1;
+                        c.next_issue = t + lat; // core blocks on the demux
+                        c.advance_pc();
+                    }
+                }
+            }
+            Insn::Store { rs, base, offset, post_inc, size } => {
+                let addr =
+                    (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
+                match self.mem.region_of(addr) {
+                    Region::Tcdm => {
+                        let bank = self.mem.bank_of(addr);
+                        if !self.mem.claim_bank(bank, t) {
+                            let c = &mut self.cores[ci];
+                            c.counters.tcdm_cont += 1;
+                            c.next_issue = t + 1;
+                            return;
+                        }
+                        let c = &mut self.cores[ci];
+                        let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                        let v = c.reg(rs);
+                        self.mem.store(addr, size, v);
+                        c.counters.active += 1;
+                        c.counters.instrs += 1;
+                        c.counters.mem_instrs += 1;
+                        c.next_issue = t + 1;
+                        c.advance_pc();
+                    }
+                    Region::L2 => {
+                        let lat = self.cfg.l2_latency();
+                        let c = &mut self.cores[ci];
+                        let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                        let v = c.reg(rs);
+                        self.mem.store(addr, size, v);
+                        c.counters.active += 1;
+                        c.counters.l2_stall += lat - 1;
+                        c.counters.instrs += 1;
+                        c.counters.mem_instrs += 1;
+                        c.next_issue = t + lat;
+                        c.advance_pc();
+                    }
+                }
+            }
+            Insn::Branch { cond, rs1, rs2, target } => {
+                let c = &mut self.cores[ci];
+                let taken = c.branch_taken(cond, rs1, rs2);
+                c.counters.active += 1;
+                c.counters.instrs += 1;
+                c.counters.int_instrs += 1;
+                if taken {
+                    c.pc = target;
+                    c.counters.branch_stall += TAKEN_BRANCH_CYCLES - 1;
+                    c.next_issue = t + TAKEN_BRANCH_CYCLES;
+                } else {
+                    c.next_issue = t + 1;
+                    c.advance_pc();
+                }
+            }
+            Insn::Jump { target } => {
+                let c = &mut self.cores[ci];
+                c.counters.active += 1;
+                c.counters.instrs += 1;
+                c.counters.int_instrs += 1;
+                c.pc = target;
+                c.counters.branch_stall += TAKEN_BRANCH_CYCLES - 1;
+                c.next_issue = t + TAKEN_BRANCH_CYCLES;
+            }
+            Insn::HwLoop { count, start, end } => {
+                let c = &mut self.cores[ci];
+                let n = c.reg(count);
+                c.counters.active += 1;
+                c.counters.instrs += 1;
+                c.counters.int_instrs += 1;
+                c.next_issue = t + 1;
+                if n == 0 {
+                    c.pc = end;
+                } else {
+                    c.hwloops.push((start, end, n));
+                    c.pc = start;
+                }
+            }
+            Insn::Fp { op, mode, rd, rs1, rs2 } => {
+                if op.is_alu_class() {
+                    // Integer-SIMD lane permutation: plain 1-cycle ALU op.
+                    let c = &mut self.cores[ci];
+                    c.exec_fp(op, mode, rd, rs1, rs2);
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.int_instrs += 1;
+                    c.next_issue = t + 1;
+                    c.advance_pc();
+                } else if op.is_divsqrt() {
+                    match self.fpus.try_divsqrt(mode, t) {
+                        Err(free) => {
+                            let c = &mut self.cores[ci];
+                            c.counters.divsqrt_cont += free - t;
+                            c.next_issue = free;
+                        }
+                        Ok(done) => {
+                            let c = &mut self.cores[ci];
+                            let flops = c.exec_fp(op, mode, rd, rs1, rs2);
+                            c.reg_ready[rd as usize] = done;
+                            c.reg_producer[rd as usize] = Producer::DivSqrt;
+                            c.counters.active += 1;
+                            c.counters.instrs += 1;
+                            c.counters.fp_instrs += 1;
+                            c.counters.flops += flops;
+                            c.next_issue = t + 1;
+                            c.advance_pc();
+                        }
+                    }
+                } else {
+                    let fpu = self.cfg.fpu_of_core(ci);
+                    if !self.fpus.try_issue(fpu, t) {
+                        let c = &mut self.cores[ci];
+                        c.counters.fpu_cont += 1;
+                        c.next_issue = t + 1;
+                        return;
+                    }
+                    let pipe = self.cfg.pipe as u64;
+                    let c = &mut self.cores[ci];
+                    let flops = c.exec_fp(op, mode, rd, rs1, rs2);
+                    c.reg_ready[rd as usize] = t + 1 + pipe;
+                    c.reg_producer[rd as usize] = Producer::Fpu;
+                    c.last_fp_issue = t;
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.fp_instrs += 1;
+                    if mode.is_vector() {
+                        c.counters.fp_vec_instrs += 1;
+                    }
+                    c.counters.flops += flops;
+                    c.next_issue = t + 1;
+                    c.advance_pc();
+                }
+            }
+            Insn::Barrier => {
+                // Count the barrier instruction itself.
+                {
+                    let c = &mut self.cores[ci];
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.int_instrs += 1;
+                    c.advance_pc();
+                }
+                match self.event.arrive(ci, t) {
+                    Some(wake) => {
+                        // Wake everyone (including self).
+                        for c in self.cores.iter_mut() {
+                            match c.state {
+                                CoreState::Sleeping { since } => {
+                                    c.counters.barrier_idle += wake - since;
+                                    c.state = CoreState::Running;
+                                    c.next_issue = wake;
+                                }
+                                CoreState::Running if c.id == ci => {
+                                    c.counters.barrier_idle += wake - (t + 1);
+                                    c.next_issue = wake;
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
+                    None => {
+                        let c = &mut self.cores[ci];
+                        c.state = CoreState::Sleeping { since: t + 1 };
+                        c.next_issue = u64::MAX; // woken explicitly
+                    }
+                }
+            }
+            Insn::End => {
+                let c = &mut self.cores[ci];
+                c.counters.active += 1;
+                c.counters.instrs += 1;
+                c.counters.cycles = t;
+                c.state = CoreState::Done;
+            }
+        }
+    }
+}

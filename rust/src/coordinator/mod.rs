@@ -5,7 +5,7 @@
 pub mod sweep;
 pub mod tables;
 
-pub use sweep::{run_one, sweep_all, Measurement};
+pub use sweep::{run_one, sweep, sweep_all, Measurement};
 pub use tables::{fig3, fig4, fig5, fig6, fig7, fig8, table3, table45, table6};
 
 #[cfg(test)]

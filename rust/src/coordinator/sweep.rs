@@ -1,7 +1,11 @@
 //! Sweep engine: one measurement per (config, benchmark, variant), with a
 //! scoped-thread parallel driver for the full 18×8×2 design space.
-
-use std::sync::Mutex;
+//!
+//! Result collection is lock-free: workers pull job indices from an atomic
+//! counter (dynamic load balancing) and buffer `(slot, Measurement)` pairs
+//! locally; the coordinator writes each pair into its pre-sized slot after
+//! joining, so no worker ever contends on a lock and the output order is
+//! deterministically `(config, bench, variant)` regardless of scheduling.
 
 use crate::cluster::counters::CoreCounters;
 use crate::config::ClusterConfig;
@@ -69,23 +73,34 @@ pub fn sweep(
             }
         }
     }
-    let results = Mutex::new(vec![None; jobs.len()]);
     let next = std::sync::atomic::AtomicUsize::new(0);
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16);
+    let mut results: Vec<Option<Measurement>> = Vec::new();
+    results.resize_with(jobs.len(), || None);
     std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= jobs.len() {
-                    break;
-                }
-                let (cfg, b, v) = jobs[i];
-                let m = run_one(&cfg, b, v);
-                results.lock().unwrap()[i] = Some(m);
-            });
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local: Vec<(usize, Measurement)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        let (cfg, b, v) = jobs[i];
+                        local.push((i, run_one(&cfg, b, v)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, m) in h.join().expect("sweep worker panicked") {
+                results[i] = Some(m);
+            }
         }
     });
-    results.into_inner().unwrap().into_iter().map(|m| m.unwrap()).collect()
+    results.into_iter().map(|m| m.expect("sweep slot unfilled")).collect()
 }
 
 #[cfg(test)]

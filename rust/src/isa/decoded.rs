@@ -1,0 +1,276 @@
+//! Predecoded programs for the simulator hot path.
+//!
+//! [`DecodedProgram::decode`] lowers a [`Program`] into a dense array of
+//! [`DecodedInsn`]s: the scoreboard read set, the static issue class, the
+//! write-back / FP / locality flags and the fixed issue latency are all
+//! resolved once per program instead of being re-derived from the `Insn`
+//! enum on every issue (the per-issue pattern matching and predicate calls
+//! were the single largest line item in the simulator profile — see
+//! EXPERIMENTS.md §Perf).
+//!
+//! The decode is pure metadata: the architectural payload stays in the
+//! embedded [`Insn`], so the functional semantics have exactly one
+//! implementation shared by both issue engines.
+
+use super::builder::Program;
+use super::insn::{AluOp, Insn, Reg};
+
+/// Latency of the iterative integer divider (RI5CY serial divider).
+pub const INT_DIV_LATENCY: u64 = 35;
+/// Taken-branch penalty (total cycles occupied by the branch).
+pub const TAKEN_BRANCH_CYCLES: u64 = 3;
+
+/// Static issue class: which structural-hazard path an instruction takes.
+/// Collapses the chain of `matches!` predicates the issue loop used to
+/// evaluate per instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// 1-cycle (or iterative-divide) integer ALU op.
+    Alu,
+    /// Load immediate.
+    Li,
+    /// Memory load (region resolved at run time).
+    Load,
+    /// Memory store.
+    Store,
+    /// Conditional branch.
+    Branch,
+    /// Unconditional jump.
+    Jump,
+    /// Hardware-loop setup.
+    HwLoop,
+    /// Integer-SIMD lane permutation (`pv.shuffle`/`pv.pack*`): executes on
+    /// the core ALU, never touches the FPU.
+    FpAlu,
+    /// FP divide/sqrt on the shared iterative DIV-SQRT block.
+    FpDivSqrt,
+    /// FP op on the (possibly shared) FPU datapath.
+    Fp,
+    /// Event-unit barrier.
+    Barrier,
+    /// Core termination.
+    End,
+}
+
+/// Static property flags of a decoded instruction.
+pub mod flag {
+    /// Touches no cross-core shared resource whose arbitration is order-
+    /// sensitive: the event engine may execute it ahead of the global clock
+    /// inside a batched straight-line run. (The shared I$ is handled
+    /// separately — fills are order-insensitive within a cycle and batches
+    /// stop at non-resident lines.)
+    pub const LOCAL: u8 = 1 << 0;
+    /// Writes an integer/FP destination register (write-back port model).
+    pub const WRITES_REG: u8 = 1 << 1;
+    /// Is an `Insn::Fp` (exempt from the §5.3.3 write-back conflict check).
+    pub const FP: u8 = 1 << 2;
+    /// Packed-SIMD FP op (counts toward `fp_vec_instrs`).
+    pub const VEC: u8 = 1 << 3;
+    /// `pc + 1` is the end of some hardware loop in the program: the
+    /// sequential-advance path must consult the hw-loop stack. When clear,
+    /// `pc += 1` is always correct and the stack walk is skipped.
+    pub const LOOP_END_NEXT: u8 = 1 << 4;
+}
+
+/// One predecoded instruction. ~40 bytes, laid out for the issue loop:
+/// everything the hazard checks need is in the header fields; the
+/// architectural payload is the embedded [`Insn`].
+#[derive(Debug, Clone, Copy)]
+pub struct DecodedInsn {
+    /// Dispatch class.
+    pub class: OpClass,
+    /// Scoreboard read set (resolved operand slots), in check order.
+    pub reads: [Reg; 3],
+    /// Number of valid entries in `reads`.
+    pub nreads: u8,
+    /// Static property flags (`flag::*`).
+    pub flags: u8,
+    /// Issue→reuse latency for the fixed-latency classes (`Alu`, `Li`,
+    /// `FpAlu`): 1, or [`INT_DIV_LATENCY`] for the iterative divider.
+    pub latency: u64,
+    /// The architectural instruction (functional payload).
+    pub insn: Insn,
+}
+
+impl DecodedInsn {
+    /// Test a `flag::*` bit.
+    #[inline(always)]
+    pub fn has(&self, f: u8) -> bool {
+        self.flags & f != 0
+    }
+}
+
+/// A predecoded program: dense, index-addressed by the same pc as the
+/// source [`Program`].
+#[derive(Debug, Clone)]
+pub struct DecodedProgram {
+    /// Decoded instruction stream (same indices as `Program::insns`).
+    pub insns: Vec<DecodedInsn>,
+}
+
+impl DecodedProgram {
+    /// Lower `program` into its predecoded form.
+    pub fn decode(program: &Program) -> DecodedProgram {
+        // Collect every hardware-loop end boundary so sequential advances
+        // can skip the stack walk everywhere else.
+        let mut loop_ends: Vec<u32> = program
+            .insns
+            .iter()
+            .filter_map(|i| match i {
+                Insn::HwLoop { end, .. } => Some(*end),
+                _ => None,
+            })
+            .collect();
+        loop_ends.sort_unstable();
+        loop_ends.dedup();
+
+        let insns = program
+            .insns
+            .iter()
+            .enumerate()
+            .map(|(idx, insn)| {
+                let (reads, nreads) = insn.read_regs();
+                let (class, latency, local) = classify(insn);
+                let mut flags = 0u8;
+                if local {
+                    flags |= flag::LOCAL;
+                }
+                if insn.writes_int_reg() {
+                    flags |= flag::WRITES_REG;
+                }
+                if insn.is_fp() {
+                    flags |= flag::FP;
+                }
+                if let Insn::Fp { mode, .. } = insn {
+                    if matches!(class, OpClass::Fp) && mode.is_vector() {
+                        flags |= flag::VEC;
+                    }
+                }
+                if loop_ends.binary_search(&(idx as u32 + 1)).is_ok() {
+                    flags |= flag::LOOP_END_NEXT;
+                }
+                DecodedInsn { class, reads, nreads, flags, latency, insn: *insn }
+            })
+            .collect();
+        DecodedProgram { insns }
+    }
+
+    /// Static instruction count.
+    pub fn len(&self) -> usize {
+        self.insns.len()
+    }
+
+    /// True if the program has no instructions.
+    pub fn is_empty(&self) -> bool {
+        self.insns.is_empty()
+    }
+}
+
+/// Class, fixed latency, and locality of an instruction.
+fn classify(insn: &Insn) -> (OpClass, u64, bool) {
+    match insn {
+        Insn::Alu { op, .. } => {
+            let lat = if matches!(op, AluOp::Div | AluOp::Rem) { INT_DIV_LATENCY } else { 1 };
+            (OpClass::Alu, lat, true)
+        }
+        Insn::Li { .. } => (OpClass::Li, 1, true),
+        Insn::Load { .. } => (OpClass::Load, 1, false),
+        Insn::Store { .. } => (OpClass::Store, 1, false),
+        Insn::Branch { .. } => (OpClass::Branch, 1, true),
+        Insn::Jump { .. } => (OpClass::Jump, TAKEN_BRANCH_CYCLES, true),
+        Insn::HwLoop { .. } => (OpClass::HwLoop, 1, true),
+        Insn::Fp { op, .. } => {
+            if op.is_alu_class() {
+                (OpClass::FpAlu, 1, true)
+            } else if op.is_divsqrt() {
+                (OpClass::FpDivSqrt, 1, false)
+            } else {
+                (OpClass::Fp, 1, false)
+            }
+        }
+        Insn::Barrier => (OpClass::Barrier, 1, false),
+        Insn::End => (OpClass::End, 1, true),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::ProgramBuilder;
+    use crate::transfp::FpMode;
+
+    #[test]
+    fn classes_and_latencies() {
+        let mut b = ProgramBuilder::new("cls");
+        b.li(1, 7); // 0: Li
+        b.addi(2, 1, 1); // 1: Alu lat 1
+        b.divi(3, 2, crate::isa::Operand::Reg(1)); // 2: Alu lat 35
+        b.lw(4, 1, 0); // 3: Load
+        b.fmac(FpMode::F32, 5, 4, 4); // 4: Fp
+        b.fdiv(FpMode::F32, 6, 5, 5); // 5: FpDivSqrt
+        b.vshuffle(7, 6, 0); // 6: FpAlu
+        b.barrier(); // 7: Barrier
+        b.end(); // 8: End
+        let d = DecodedProgram::decode(&b.build());
+        let cls: Vec<OpClass> = d.insns.iter().map(|i| i.class).collect();
+        assert_eq!(
+            cls,
+            [
+                OpClass::Li,
+                OpClass::Alu,
+                OpClass::Alu,
+                OpClass::Load,
+                OpClass::Fp,
+                OpClass::FpDivSqrt,
+                OpClass::FpAlu,
+                OpClass::Barrier,
+                OpClass::End
+            ]
+        );
+        assert_eq!(d.insns[1].latency, 1);
+        assert_eq!(d.insns[2].latency, INT_DIV_LATENCY);
+        // Locality: int/permute ops batch; memory, FPU, barrier do not.
+        assert!(d.insns[1].has(flag::LOCAL));
+        assert!(d.insns[6].has(flag::LOCAL));
+        assert!(!d.insns[3].has(flag::LOCAL));
+        assert!(!d.insns[4].has(flag::LOCAL));
+        assert!(!d.insns[7].has(flag::LOCAL));
+        // FP flag exempts all Insn::Fp from the WB-conflict check.
+        assert!(d.insns[4].has(flag::FP) && d.insns[5].has(flag::FP) && d.insns[6].has(flag::FP));
+        assert!(!d.insns[3].has(flag::FP));
+        // Read sets match the scoreboard's (FMA reads rs1, rs2, then rd).
+        assert_eq!(&d.insns[4].reads[..d.insns[4].nreads as usize], &[4, 4, 5]);
+    }
+
+    #[test]
+    fn loop_end_flags_mark_back_edges_only() {
+        let mut b = ProgramBuilder::new("loops");
+        b.li(1, 3); // 0
+        b.hwloop(1); // 1 (body 2..4, end = 4)
+        b.addi(2, 2, 1); // 2
+        b.addi(3, 3, 1); // 3  ← pc+1 == 4 == loop end
+        b.hwloop_end();
+        b.li(4, 9); // 4
+        b.end(); // 5
+        let d = DecodedProgram::decode(&b.build());
+        assert!(d.insns[3].has(flag::LOOP_END_NEXT));
+        for i in [0usize, 1, 2, 4] {
+            assert!(!d.insns[i].has(flag::LOOP_END_NEXT), "insn {i}");
+        }
+        assert_eq!(d.len(), 6);
+        assert!(!d.is_empty());
+    }
+
+    #[test]
+    fn vec_flag_only_on_datapath_ops() {
+        let mut b = ProgramBuilder::new("vec");
+        b.fadd(FpMode::VecF16, 1, 2, 3); // datapath, vector
+        b.fadd(FpMode::F32, 4, 5, 6); // datapath, scalar
+        b.vshuffle(7, 1, 0); // permute (VecF16 mode but ALU class)
+        b.end();
+        let d = DecodedProgram::decode(&b.build());
+        assert!(d.insns[0].has(flag::VEC));
+        assert!(!d.insns[1].has(flag::VEC));
+        assert!(!d.insns[2].has(flag::VEC));
+    }
+}

@@ -192,6 +192,72 @@ impl Insn {
     pub fn is_fp(&self) -> bool {
         matches!(self, Insn::Fp { .. })
     }
+
+    /// The register read set consulted by the issue scoreboard, in check
+    /// order (the order determines stall attribution on ties). This is the
+    /// single source of truth shared by the reference engine's
+    /// `operands_ready` and the predecode pass.
+    pub fn read_regs(&self) -> ([Reg; 3], u8) {
+        let mut regs = [0u8; 3];
+        let mut n = 0u8;
+        let mut push = |r: Reg| {
+            regs[n as usize] = r;
+            n += 1;
+        };
+        match self {
+            Insn::Alu { rs1, rhs, .. } => {
+                push(*rs1);
+                if let Operand::Reg(r) = rhs {
+                    push(*r);
+                }
+            }
+            Insn::Li { .. } => {}
+            Insn::Load { base, .. } => push(*base),
+            Insn::Store { rs, base, .. } => {
+                push(*rs);
+                push(*base);
+            }
+            Insn::Branch { rs1, rs2, .. } => {
+                push(*rs1);
+                push(*rs2);
+            }
+            Insn::Jump { .. } | Insn::Barrier | Insn::End => {}
+            Insn::HwLoop { count, .. } => push(*count),
+            Insn::Fp { op, rd, rs1, rs2, .. } => {
+                push(*rs1);
+                // Shuffle carries an immediate in the rs2 slot; unary ops
+                // and casts ignore it.
+                if !matches!(
+                    op,
+                    FpOp::Shuffle
+                        | FpOp::Sqrt
+                        | FpOp::Neg
+                        | FpOp::AbsF
+                        | FpOp::FromInt
+                        | FpOp::ToInt
+                        | FpOp::CvtDown
+                        | FpOp::CvtUp
+                ) {
+                    push(*rs2);
+                }
+                if op.reads_rd() {
+                    push(*rd);
+                }
+            }
+        }
+        (regs, n)
+    }
+
+    /// Does the instruction write an integer/FP destination register?
+    /// (Write-back port model of §5.3.3; post-increment stores update the
+    /// base register.)
+    pub fn writes_int_reg(&self) -> bool {
+        match self {
+            Insn::Alu { .. } | Insn::Li { .. } | Insn::Load { .. } => true,
+            Insn::Store { post_inc, .. } => *post_inc != 0,
+            _ => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -218,5 +284,30 @@ mod tests {
         assert!(ld.is_mem() && !ld.is_fp());
         let fp = Insn::Fp { op: FpOp::Add, mode: FpMode::F32, rd: 1, rs1: 2, rs2: 3 };
         assert!(fp.is_fp() && !fp.is_mem());
+    }
+
+    #[test]
+    fn read_sets_and_write_flags() {
+        let (r, n) = Insn::Alu { op: AluOp::Add, rd: 1, rs1: 2, rhs: Operand::Reg(3) }.read_regs();
+        assert_eq!((&r[..n as usize], n), (&[2u8, 3][..], 2));
+        let (r, n) = Insn::Alu { op: AluOp::Add, rd: 1, rs1: 2, rhs: Operand::Imm(7) }.read_regs();
+        assert_eq!((&r[..n as usize], n), (&[2u8][..], 1));
+        let (r, n) = Insn::Store { rs: 4, base: 5, offset: 0, post_inc: 4, size: MemSize::Word }
+            .read_regs();
+        assert_eq!(&r[..n as usize], &[4u8, 5]);
+        // FMA reads rd as the accumulator; shuffle's rs2 is an immediate.
+        let (r, n) =
+            Insn::Fp { op: FpOp::Mac, mode: FpMode::F32, rd: 6, rs1: 7, rs2: 8 }.read_regs();
+        assert_eq!(&r[..n as usize], &[7u8, 8, 6]);
+        let (r, n) =
+            Insn::Fp { op: FpOp::Shuffle, mode: FpMode::VecF16, rd: 6, rs1: 7, rs2: 3 }.read_regs();
+        assert_eq!(&r[..n as usize], &[7u8]);
+
+        assert!(Insn::Li { rd: 1, imm: 0 }.writes_int_reg());
+        assert!(!Insn::Store { rs: 1, base: 2, offset: 0, post_inc: 0, size: MemSize::Word }
+            .writes_int_reg());
+        assert!(Insn::Store { rs: 1, base: 2, offset: 0, post_inc: 4, size: MemSize::Word }
+            .writes_int_reg());
+        assert!(!Insn::Barrier.writes_int_reg());
     }
 }

@@ -5,7 +5,9 @@
 //! [`builder`] for the assembler-style DSL the benchmark kernels use.
 
 pub mod builder;
+pub mod decoded;
 pub mod insn;
 
 pub use builder::{regs, Program, ProgramBuilder};
+pub use decoded::{DecodedInsn, DecodedProgram, OpClass};
 pub use insn::{AluOp, BrCond, FpOp, Insn, MemSize, Operand, Reg};

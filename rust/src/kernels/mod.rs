@@ -22,7 +22,7 @@ pub mod svm;
 
 use crate::cluster::counters::RunStats;
 use crate::cluster::mem::{Memory, TCDM_BASE};
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, Engine};
 use crate::config::ClusterConfig;
 use crate::isa::Program;
 use crate::transfp::{simd, FpMode, FpSpec, BF16, F16};
@@ -139,10 +139,50 @@ impl Workload {
 
     /// Run with only the first `workers` cores active (Fig 6 sweeps).
     pub fn run_on(&self, cfg: &ClusterConfig, workers: usize) -> (RunStats, Vec<f64>) {
+        self.run_with(cfg, workers, Engine::Event)
+    }
+
+    /// Run on the selected issue engine (the differential harness compares
+    /// [`Engine::Event`] against [`Engine::Reference`] cycle-for-cycle).
+    pub fn run_with(
+        &self,
+        cfg: &ClusterConfig,
+        workers: usize,
+        engine: Engine,
+    ) -> (RunStats, Vec<f64>) {
         let mut cl = Cluster::new(*cfg, self.program.clone());
+        self.run_in_with(&mut cl, workers, engine)
+    }
+
+    /// Run inside an existing cluster built from this workload's program,
+    /// resetting it first — sweeps and benches reuse the cluster's
+    /// allocations (TCDM, I$, decoded program) across repetitions instead
+    /// of rebuilding `Memory`/cores per run.
+    pub fn run_in(&self, cl: &mut Cluster, workers: usize) -> (RunStats, Vec<f64>) {
+        self.run_in_with(cl, workers, Engine::Event)
+    }
+
+    /// [`Self::run_in`] with an explicit engine.
+    pub fn run_in_with(
+        &self,
+        cl: &mut Cluster,
+        workers: usize,
+        engine: Engine,
+    ) -> (RunStats, Vec<f64>) {
+        assert_eq!(
+            (cl.program().name.as_str(), cl.program().len()),
+            (self.program.name.as_str(), self.program.len()),
+            "run_in: cluster was built for a different program than this workload"
+        );
+        debug_assert_eq!(
+            cl.program().insns,
+            self.program.insns,
+            "run_in: cluster program diverges from this workload's program"
+        );
+        cl.reset();
         cl.limit_active_cores(workers);
         self.stage_into(&mut cl.mem);
-        let stats = cl.run();
+        let stats = cl.run_with(engine);
         let out = self.read_output(&cl.mem);
         (stats, out)
     }

@@ -1,81 +1,100 @@
-//! PJRT runtime: load the AOT-compiled JAX/Pallas goldens
-//! (`artifacts/*.hlo.txt`) and execute them on the XLA CPU client from the
-//! Rust hot path — Python is never involved at run time.
+//! Golden-validation runtime: the case matrix and parameter plumbing for
+//! checking the simulator's numerics against the AOT-compiled JAX/Pallas
+//! goldens (`artifacts/*.hlo.txt`, see `python/compile/aot.py`).
 //!
-//! The interchange format is HLO **text** (see `python/compile/aot.py` and
-//! /opt/xla-example/README.md). Every golden takes binary32 inputs in the
-//! order of the benchmark's staged non-scratch buffers and returns a
-//! 1-tuple of binary32 arrays.
+//! The build environment is fully offline, so the PJRT/XLA execution
+//! backend is **stubbed**: [`Golden::load`] and [`Golden::run_f32`] return
+//! an error explaining that no backend is vendored (gate: the `xla` cargo
+//! feature, declared but intentionally unbacked). Everything that does not
+//! need XLA — the validation case matrix, tolerance bookkeeping, and the
+//! reconstruction of golden input parameters from a workload's staged
+//! buffers — is real code with tests, so a future vendored backend only has
+//! to supply the two `Golden` methods.
 
+use std::fmt;
 use std::path::Path;
-
-use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ClusterConfig;
 use crate::kernels::{Benchmark, Staged, Variant, Workload};
 use crate::transfp::{FpMode, FpSpec};
 
-/// A compiled golden executable on the PJRT CPU client.
+/// Runtime error: a plain message (the offline build carries no error-
+/// handling dependencies).
+#[derive(Debug)]
+pub struct RtError(String);
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+/// Local result alias.
+pub type Result<T> = std::result::Result<T, RtError>;
+
+fn err(msg: impl Into<String>) -> RtError {
+    RtError(msg.into())
+}
+
+/// A golden executable handle. In the offline build this is a name/path
+/// record: loading checks the artifact exists, and execution reports the
+/// missing backend; with a vendored XLA it would own the PJRT client +
+/// executable.
 pub struct Golden {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
     /// Artifact name (diagnostics).
     pub name: String,
+    /// Artifact path on disk.
+    pub path: std::path::PathBuf,
 }
 
 impl Golden {
-    /// Load and compile `<dir>/<name>.hlo.txt`.
+    /// Load `<dir>/<name>.hlo.txt`. Fails if the artifact is missing.
     pub fn load(dir: &str, name: &str) -> Result<Golden> {
         let path = Path::new(dir).join(format!("{name}.hlo.txt"));
         if !path.exists() {
-            bail!("artifact {} missing — run `make artifacts`", path.display());
+            return Err(err(format!(
+                "artifact {} missing — run `make artifacts`",
+                path.display()
+            )));
         }
-        let client = xla::PjRtClient::cpu().map_err(wrap)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(wrap)
-        .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).map_err(wrap)?;
-        Ok(Golden { client, exe, name: name.to_string() })
+        Ok(Golden { name: name.to_string(), path })
     }
 
     /// Execute with f32 inputs (`(data, dims)` pairs); returns the flattened
-    /// f32 outputs of the 1-tuple result.
-    pub fn run_f32(&self, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
-        let _ = &self.client;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let lit = xla::Literal::vec1(data).reshape(dims).map_err(wrap)?;
-            literals.push(lit);
-        }
-        let result = self.exe.execute::<xla::Literal>(&literals).map_err(wrap)?[0][0]
-            .to_literal_sync()
-            .map_err(wrap)?;
-        let tuple = result.to_tuple().map_err(wrap)?;
-        tuple.into_iter().map(|l| l.to_vec::<f32>().map_err(wrap)).collect()
+    /// f32 outputs of the 1-tuple result. Offline stub: always errors — the
+    /// `xla` cargo feature is declared but unbacked, so numeric verification
+    /// uses the host-mirror goldens in kernels/ instead.
+    pub fn run_f32(&self, _inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
+        Err(err(format!(
+            "{} ({}): no PJRT/XLA backend in the offline build",
+            self.name,
+            self.path.display()
+        )))
     }
-}
-
-fn wrap(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
 }
 
 /// One validation case: artifact name ↔ (benchmark, variant) + tolerances.
 pub struct Case {
-    artifact: &'static str,
-    bench: Benchmark,
-    variant: Variant,
-    rtol: f64,
-    atol: f64,
+    pub artifact: &'static str,
+    pub bench: Benchmark,
+    pub variant: Variant,
+    pub rtol: f64,
+    pub atol: f64,
 }
 
 /// The validation matrix: every benchmark in binary32, MATMUL and FIR
 /// additionally in both 16-bit formats.
-fn cases() -> Vec<Case> {
+pub fn cases() -> Vec<Case> {
     use Benchmark::*;
-    let f32c = |artifact, bench| Case { artifact, bench, variant: Variant::Scalar, rtol: 2e-4, atol: 1e-5 };
+    let f32c = |artifact, bench| Case {
+        artifact,
+        bench,
+        variant: Variant::Scalar,
+        rtol: 2e-4,
+        atol: 1e-5,
+    };
     vec![
         f32c("matmul_f32", Matmul),
         f32c("fir_f32", Fir),
@@ -100,7 +119,11 @@ fn cases() -> Vec<Case> {
 /// Reconstruct the golden's f32 parameters from a workload's staged buffers
 /// (dequantizing 16-bit lanes — the graph re-quantizes on the same RNE
 /// lattice, so values round-trip exactly).
-fn params_from_stage(w: &Workload, bench: Benchmark, variant: Variant) -> Vec<(Vec<f32>, Vec<i64>)> {
+pub fn params_from_stage(
+    w: &Workload,
+    bench: Benchmark,
+    variant: Variant,
+) -> Vec<(Vec<f32>, Vec<i64>)> {
     let spec: &FpSpec = crate::kernels::spec_of(variant);
     let as_f32 = |s: &Staged| -> Vec<f32> {
         match s {
@@ -113,10 +136,7 @@ fn params_from_stage(w: &Workload, bench: Benchmark, variant: Variant) -> Vec<(V
     match bench {
         Benchmark::Matmul => {
             let n = (as_f32(&st[0].1).len() as f64).sqrt() as i64;
-            vec![
-                (as_f32(&st[0].1), vec![n, n]),
-                (as_f32(&st[1].1), vec![n, n]),
-            ]
+            vec![(as_f32(&st[0].1), vec![n, n]), (as_f32(&st[1].1), vec![n, n])]
         }
         Benchmark::Fir => {
             let h = as_f32(&st[1].1);
@@ -177,7 +197,8 @@ pub fn validate_case(dir: &str, case: &Case) -> Result<(f64, usize)> {
     let cfg = ClusterConfig::new(8, 8, 0);
     let w = case.bench.build(case.variant, &cfg);
     let (_, sim_out) = w.run(&cfg);
-    w.verify(&sim_out).map_err(|e| anyhow!("simulator self-check: {e}"))?;
+    w.verify(&sim_out)
+        .map_err(|e| err(format!("simulator self-check: {e}")))?;
 
     let golden = Golden::load(dir, case.artifact)?;
     let params = params_from_stage(&w, case.bench, case.variant);
@@ -185,22 +206,22 @@ pub fn validate_case(dir: &str, case: &Case) -> Result<(f64, usize)> {
     let xla_out = &out[0];
 
     if xla_out.len() != sim_out.len() {
-        bail!(
+        return Err(err(format!(
             "{}: XLA output length {} != simulator {}",
             case.artifact,
             xla_out.len(),
             sim_out.len()
-        );
+        )));
     }
     let mut max_diff = 0.0f64;
     for (i, (x, s)) in xla_out.iter().zip(&sim_out).enumerate() {
         let diff = (*x as f64 - s).abs();
         let tol = case.atol + case.rtol * s.abs();
         if diff > tol {
-            bail!(
+            return Err(err(format!(
                 "{}: mismatch at {i}: xla={x} sim={s} (|diff|={diff:.3e} > tol={tol:.3e})",
                 case.artifact
-            );
+            )));
         }
         max_diff = max_diff.max(diff);
     }
@@ -210,7 +231,7 @@ pub fn validate_case(dir: &str, case: &Case) -> Result<(f64, usize)> {
 /// Run the full validation matrix; returns a human-readable report.
 pub fn validate_all(dir: &str) -> Result<String> {
     if !Path::new(dir).join("MANIFEST").exists() {
-        bail!("no artifacts in `{dir}` — run `make artifacts` first");
+        return Err(err(format!("no artifacts in `{dir}` — run `make artifacts` first")));
     }
     let mut report = String::new();
     report.push_str("simulator vs XLA golden validation\n");
@@ -233,7 +254,7 @@ pub fn validate_all(dir: &str) -> Result<String> {
         }
     }
     if failures > 0 {
-        bail!("{failures} validation case(s) failed:\n{report}");
+        return Err(err(format!("{failures} validation case(s) failed:\n{report}")));
     }
     report.push_str("all cases passed\n");
     Ok(report)
@@ -243,40 +264,53 @@ pub fn validate_all(dir: &str) -> Result<String> {
 mod tests {
     use super::*;
 
-    fn have_artifacts() -> bool {
-        Path::new("artifacts/MANIFEST").exists()
+    /// The case matrix covers all eight benchmarks in f32, plus the 16-bit
+    /// extras, with vector tolerances looser than scalar ones.
+    #[test]
+    fn case_matrix_covers_suite() {
+        let cs = cases();
+        for b in Benchmark::all() {
+            assert!(
+                cs.iter().any(|c| c.bench == b && c.variant == Variant::Scalar),
+                "{b:?} missing a scalar case"
+            );
+        }
+        assert!(cs.iter().any(|c| c.artifact == "matmul_bf16"));
+        for c in &cs {
+            if matches!(c.variant, Variant::Vector(_)) {
+                assert!(c.rtol >= 2e-4, "{}: vector rtol too tight", c.artifact);
+            }
+        }
     }
 
-    /// Full matrix — requires `make artifacts` to have run (skips otherwise,
-    /// like the FPGA bitstream prerequisite in the paper's flow).
+    /// Parameter reconstruction produces shape-consistent inputs for every
+    /// case (element counts match the declared dims).
     #[test]
-    fn validate_against_xla_goldens() {
-        if !have_artifacts() {
-            eprintln!("skipping: no artifacts/ (run `make artifacts`)");
-            return;
+    fn params_match_declared_dims() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        for case in cases() {
+            let w = case.bench.build(case.variant, &cfg);
+            let params = params_from_stage(&w, case.bench, case.variant);
+            assert!(!params.is_empty(), "{}", case.artifact);
+            for (data, dims) in &params {
+                let n: i64 = dims.iter().product();
+                assert_eq!(data.len() as i64, n, "{}: shape mismatch", case.artifact);
+            }
         }
-        let report = validate_all("artifacts").expect("validation");
-        assert!(report.contains("all cases passed"), "{report}");
     }
 
-    /// The exg_mlp e2e artifact loads and produces finite logits.
+    /// The offline stub reports missing artifacts before reporting the
+    /// missing backend.
     #[test]
-    fn exg_mlp_runs() {
-        if !have_artifacts() {
-            return;
-        }
-        let g = Golden::load("artifacts", "exg_mlp").unwrap();
-        let windows = vec![0.1f32; 16 * 64];
-        let w1: Vec<f32> = (0..64 * 64).map(|i| ((i % 13) as f32 - 6.0) / 40.0).collect();
-        let w2: Vec<f32> = (0..64 * 16).map(|i| ((i % 7) as f32 - 3.0) / 40.0).collect();
-        let out = g
-            .run_f32(&[
-                (windows, vec![16, 64]),
-                (w1, vec![64, 64]),
-                (w2, vec![64, 16]),
-            ])
-            .unwrap();
-        assert_eq!(out[0].len(), 16 * 16);
-        assert!(out[0].iter().all(|v| v.is_finite()));
+    fn golden_load_reports_missing_artifact() {
+        let e = Golden::load("definitely-missing-dir", "matmul_f32").unwrap_err();
+        assert!(e.to_string().contains("missing"), "{e}");
+    }
+
+    /// validate_all without an artifact directory errors out cleanly.
+    #[test]
+    fn validate_all_requires_manifest() {
+        let e = validate_all("definitely-missing-dir").unwrap_err();
+        assert!(e.to_string().contains("no artifacts"), "{e}");
     }
 }

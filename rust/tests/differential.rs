@@ -1,0 +1,211 @@
+//! Differential harness: the event-driven issue engine must be
+//! cycle-for-cycle identical to the per-cycle reference engine — same
+//! outputs, same total cycles, same per-core counter values — across the
+//! benchmark suite, both variants, a sample of the Table 2 design space,
+//! partial-occupancy runs (including the solo fast path), and randomly
+//! generated mixed programs. Plus the determinism guarantees the sweep
+//! coordinator relies on.
+
+use transpfp::cluster::counters::RunStats;
+use transpfp::cluster::{Cluster, Engine};
+use transpfp::config::ClusterConfig;
+use transpfp::coordinator::sweep;
+use transpfp::isa::{regs, Program, ProgramBuilder};
+use transpfp::kernels::{Benchmark, Variant};
+use transpfp::testutil::{check_cases, Rng};
+use transpfp::transfp::FpMode;
+
+fn assert_identical(fast: &RunStats, reference: &RunStats, ctx: &str) {
+    assert_eq!(
+        fast.total_cycles, reference.total_cycles,
+        "{ctx}: engines disagree on total cycles"
+    );
+    assert_eq!(fast.per_core.len(), reference.per_core.len(), "{ctx}: core count");
+    for (i, (f, r)) in fast.per_core.iter().zip(&reference.per_core).enumerate() {
+        assert_eq!(f, r, "{ctx}: engines disagree on core {i} counters");
+    }
+}
+
+/// The sampled configurations: corners of the design space (max sharing /
+/// private FPUs, 0/1/2 pipeline stages, 8 and 16 cores).
+fn sampled_configs() -> [ClusterConfig; 5] {
+    [
+        ClusterConfig::new(8, 2, 0),
+        ClusterConfig::new(8, 4, 1),
+        ClusterConfig::new(8, 8, 2),
+        ClusterConfig::new(16, 8, 1),
+        ClusterConfig::new(16, 16, 0),
+    ]
+}
+
+/// All 8 kernels × both variants × the config sample: cycle-exact.
+#[test]
+fn kernels_cycle_identical_across_engines() {
+    for cfg in sampled_configs() {
+        for b in Benchmark::all() {
+            for v in [Variant::Scalar, Variant::VEC] {
+                let w = b.build(v, &cfg);
+                let (sf, of) = w.run_with(&cfg, cfg.cores, Engine::Event);
+                let (sr, or) = w.run_with(&cfg, cfg.cores, Engine::Reference);
+                let ctx = format!("{} {} on {cfg}", b.name(), v.label());
+                assert_eq!(of, or, "{ctx}: outputs differ");
+                assert_identical(&sf, &sr, &ctx);
+                w.verify(&of).unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            }
+        }
+    }
+}
+
+/// Partial occupancy, including the single-worker solo fast path where the
+/// event engine batches memory, DIV-SQRT and barriers too.
+#[test]
+fn partial_occupancy_cycle_identical() {
+    let cfg = ClusterConfig::new(16, 8, 1);
+    for b in [Benchmark::Fir, Benchmark::Matmul, Benchmark::Kmeans, Benchmark::Fft] {
+        for workers in [1usize, 3, 7, 16] {
+            let w = b.build(Variant::Scalar, &cfg);
+            let (sf, of) = w.run_with(&cfg, workers, Engine::Event);
+            let (sr, or) = w.run_with(&cfg, workers, Engine::Reference);
+            let ctx = format!("{} with {workers} workers", b.name());
+            assert_eq!(of, or, "{ctx}: outputs differ");
+            assert_identical(&sf, &sr, &ctx);
+        }
+    }
+}
+
+/// Generate a random SPMD program mixing every hazard class: hw loops,
+/// branches, TCDM loads/stores (shared and per-core addresses), FP datapath
+/// ops, divides, L2 traffic and barriers. Always terminates.
+fn random_mixed_program(rng: &mut Rng) -> Program {
+    let mut b = ProgramBuilder::new("random-mixed");
+    let iters = 3 + rng.below(10) as u32;
+    b.li(1, iters);
+    b.li(2, (rng.next_u32() & 0xFFFF) | 1);
+    b.li(3, 0);
+    b.li(20, 1065353216); // 1.0f32
+    b.li(21, 1073741824); // 2.0f32
+    // Per-core and shared TCDM pointers.
+    b.li(15, transpfp::cluster::mem::TCDM_BASE);
+    b.slli(16, regs::CORE_ID, 2);
+    b.add(16, 15, 16);
+    b.hwloop(1);
+    match rng.below(6) {
+        0 => {
+            b.add(3, 3, 2);
+            b.xor(2, 2, 3);
+        }
+        1 => {
+            b.fmac(FpMode::F32, 22, 20, 21);
+            b.addi(3, 3, 1);
+        }
+        2 => {
+            b.lw(4, 15, 0); // shared word: bank contention
+            b.add(3, 3, 4);
+        }
+        3 => {
+            b.sw(3, 16, 0); // private word
+            b.lw(4, 16, 0);
+        }
+        4 => {
+            b.fadd(FpMode::VecF16, 23, 20, 21);
+            b.vshuffle(24, 23, 0b01);
+        }
+        _ => {
+            b.mul(3, 3, 2);
+            b.srli(2, 2, 1);
+        }
+    }
+    b.hwloop_end();
+    if rng.below(2) == 0 {
+        b.barrier();
+    }
+    if rng.below(3) == 0 {
+        b.fdiv(FpMode::F32, 25, 21, 20);
+    }
+    if rng.below(4) == 0 {
+        b.li(17, transpfp::cluster::mem::L2_BASE);
+        b.lw(18, 17, 0);
+        b.add(3, 3, 18);
+    }
+    // Divergent control flow: odd cores skip some extra work.
+    b.andi(5, regs::CORE_ID, 1);
+    b.bne(5, regs::ZERO, "odd");
+    b.li(6, 5 + rng.below(20) as u32);
+    b.hwloop(6);
+    b.addi(3, 3, 3);
+    b.hwloop_end();
+    b.label("odd");
+    b.sw(3, 16, 0);
+    b.barrier();
+    b.end();
+    b.build()
+}
+
+/// Random mixed programs are cycle-identical on both engines across
+/// configurations with different sharing/pipeline parameters.
+#[test]
+fn random_programs_cycle_identical() {
+    let configs = [
+        ClusterConfig::new(8, 2, 1),
+        ClusterConfig::new(8, 8, 0),
+        ClusterConfig::new(16, 4, 2),
+    ];
+    check_cases(15, |rng: &mut Rng| {
+        let prog = random_mixed_program(rng);
+        for &cfg in &configs {
+            let mut fast = Cluster::new(cfg, prog.clone());
+            let mut reference = Cluster::new(cfg, prog.clone());
+            let sf = fast.run_with(Engine::Event);
+            let sr = reference.run_with(Engine::Reference);
+            assert_identical(&sf, &sr, &format!("random program on {cfg}"));
+            // Architectural state must agree too.
+            for (cf, cr) in fast.cores.iter().zip(&reference.cores) {
+                assert_eq!(cf.regs, cr.regs, "core {} registers", cf.id);
+            }
+        }
+    });
+}
+
+/// Two identical sweeps produce identical `Measurement` orderings and
+/// cycle counts — the lock-free collection is deterministic.
+#[test]
+fn sweep_is_deterministic() {
+    let configs = [ClusterConfig::new(8, 4, 1), ClusterConfig::new(16, 16, 2)];
+    let benches = [Benchmark::Fir, Benchmark::Matmul, Benchmark::Svm];
+    let variants = [Variant::Scalar, Variant::VEC];
+    let key = |ms: &[transpfp::coordinator::Measurement]| -> Vec<(String, String, String, u64)> {
+        ms.iter()
+            .map(|m| {
+                (m.cfg.mnemonic(), m.bench.name().to_string(), m.variant.label().to_string(), m.cycles)
+            })
+            .collect()
+    };
+    let a = sweep(&configs, &benches, &variants);
+    let b = sweep(&configs, &benches, &variants);
+    assert_eq!(a.len(), configs.len() * benches.len() * variants.len());
+    assert_eq!(key(&a), key(&b), "sweep results must be deterministic");
+    // Slot order is (config, bench, variant) regardless of worker timing.
+    assert_eq!(a[0].bench, Benchmark::Fir);
+    assert_eq!(a[1].variant.label(), "vector");
+    assert_eq!(a[a.len() - 1].cfg.mnemonic(), "16c16f2p");
+}
+
+/// Cluster reuse via reset() is indistinguishable from fresh construction,
+/// for both engines.
+#[test]
+fn reset_reuse_matches_fresh_runs() {
+    let cfg = ClusterConfig::new(8, 4, 1);
+    for b in [Benchmark::Fir, Benchmark::Dwt] {
+        let w = b.build(Variant::VEC, &cfg);
+        let (fresh_stats, fresh_out) = w.run(&cfg);
+        let mut cl = Cluster::new(cfg, w.program.clone());
+        for rep in 0..3 {
+            let (stats, out) = w.run_in(&mut cl, cfg.cores);
+            assert_eq!(out, fresh_out, "{} rep {rep}: outputs drifted", b.name());
+            assert_identical(&stats, &fresh_stats, &format!("{} rep {rep}", b.name()));
+        }
+        // Engine choice is also stable under reuse.
+        let (ref_stats, _) = w.run_in_with(&mut cl, cfg.cores, Engine::Reference);
+        assert_identical(&fresh_stats, &ref_stats, &format!("{} reused reference", b.name()));
+    }
+}
