@@ -1,28 +1,51 @@
-//! Design-space exploration: sweep all 18 Table 2 configurations over the
-//! full benchmark suite and report the best configuration per metric — the
-//! paper's §5.3 headline analysis ("16c16f1p best performance, 16c16f0p
-//! most energy-efficient, 8c4f1p most area-efficient").
+//! Design-space exploration: resolve all 18 Table 2 configurations over the
+//! full benchmark suite through the memoizing query engine, report the best
+//! configuration per metric — the paper's §5.3 headline analysis
+//! ("16c16f1p best performance, 16c16f0p most energy-efficient, 8c4f1p most
+//! area-efficient") — and extract the Pareto frontier over
+//! (Gflop/s, Gflop/s/W, Gflop/s/mm²).
 //!
 //! ```sh
 //! cargo run --release --example dse_sweep
 //! ```
 
-use transpfp::coordinator::sweep_all;
-use transpfp::kernels::Variant;
+use transpfp::config::ClusterConfig;
+use transpfp::coordinator::{pareto_table_from, points, QueryEngine};
+use transpfp::kernels::{Benchmark, Variant};
 
 fn main() {
-    eprintln!("running 18 configs × 8 benchmarks × 2 variants …");
+    let engine = QueryEngine::new();
+    let pts = points(
+        &ClusterConfig::design_space(),
+        &Benchmark::all(),
+        &[Variant::Scalar, Variant::VEC],
+    );
+    eprintln!("resolving {} design-space points (cold cache) …", pts.len());
     let t0 = std::time::Instant::now();
-    let ms = sweep_all();
+    let ms = engine.query(&pts);
     let dt = t0.elapsed();
     let total_cycles: u64 = ms.iter().map(|m| m.cycles).sum();
+    let cold = engine.stats();
     eprintln!(
-        "{} runs, {:.1} M simulated cycles in {:.2}s ({:.1} Mcycles/s)\n",
+        "{} runs, {:.1} M simulated cycles in {:.2}s ({:.1} Mcycles/s); cache: {} misses",
         ms.len(),
         total_cycles as f64 / 1e6,
         dt.as_secs_f64(),
-        total_cycles as f64 / 1e6 / dt.as_secs_f64()
+        total_cycles as f64 / 1e6 / dt.as_secs_f64(),
+        cold.misses,
     );
+
+    // Same batch again: the planner resolves everything from the cache.
+    let t1 = std::time::Instant::now();
+    let warm_ms = engine.query(&pts);
+    let warm = engine.stats();
+    eprintln!(
+        "warm re-query: {} points in {:.4}s, {} new simulator runs\n",
+        warm_ms.len(),
+        t1.elapsed().as_secs_f64(),
+        warm.misses - cold.misses,
+    );
+    assert_eq!(warm.misses, cold.misses, "warm re-query must not simulate");
 
     assert!(ms.iter().all(|m| m.verified), "all runs must verify numerically");
 
@@ -76,6 +99,10 @@ fn main() {
             peak_eff.cfg.mnemonic()
         );
     }
+
+    println!("=== Pareto frontier (perf, e.eff, a.eff — all maximized) ===");
+    print!("{}", pareto_table_from(&ms).render());
+    println!();
     println!("paper: best perf 16c16f1p (5.92 Gflop/s, FIR vector); best energy");
     println!("       16c16f0p (167 Gflop/s/W); best area 8c4f1p (3.5 Gflop/s/mm²)");
 }

@@ -1,0 +1,76 @@
+//! `cargo bench --bench query_cache` — gates the measurement cache.
+//!
+//! Regenerates Table 4 twice on a private query engine: the cold pass
+//! simulates all 144 points (9 eight-core configs × 8 benchmarks × 2
+//! variants); the warm pass must resolve entirely from the cache. Gates
+//! (process exits non-zero on violation):
+//!
+//! * the warm pass issues **zero** simulator runs (cache-stats assertion);
+//! * warm resolves ≥ 10× faster than cold;
+//! * the warm table is byte-identical to the cold one.
+//!
+//! The `cache-*` lines below are grepped into the CI step summary.
+
+use std::process::ExitCode;
+use std::time::Instant;
+
+use transpfp::coordinator::{table45_with, QueryEngine};
+
+const TABLE4_POINTS: u64 = 144;
+const MIN_SPEEDUP: f64 = 10.0;
+
+fn main() -> ExitCode {
+    let engine = QueryEngine::new();
+
+    let t0 = Instant::now();
+    let cold = table45_with(&engine, 8);
+    let cold_s = t0.elapsed().as_secs_f64();
+    let after_cold = engine.stats();
+
+    let t1 = Instant::now();
+    let warm = table45_with(&engine, 8);
+    let warm_s = t1.elapsed().as_secs_f64();
+    let after_warm = engine.stats();
+
+    let warm_misses = after_warm.misses - after_cold.misses;
+    let warm_hits = after_warm.hits - after_cold.hits;
+    let speedup = cold_s / warm_s.max(1e-9);
+
+    println!("cache-cold-seconds: {cold_s:.3}");
+    println!("cache-warm-seconds: {warm_s:.6}");
+    println!("cache-speedup: {speedup:.0}x");
+    println!("cache-cold-misses: {}", after_cold.misses);
+    println!("cache-warm-hits: {warm_hits}");
+    println!("cache-warm-misses: {warm_misses}");
+    println!("cache-entries: {}", after_warm.entries);
+
+    let mut ok = true;
+    if after_cold.misses != TABLE4_POINTS || after_cold.hits != 0 {
+        eprintln!(
+            "FAIL: cold table4 should miss exactly {TABLE4_POINTS} unique points, saw {} misses / {} hits",
+            after_cold.misses, after_cold.hits
+        );
+        ok = false;
+    }
+    if warm_misses != 0 {
+        eprintln!("FAIL: warm-cache table4 issued {warm_misses} simulator runs (must be 0)");
+        ok = false;
+    }
+    if warm_hits != TABLE4_POINTS {
+        eprintln!("FAIL: warm table4 expected {TABLE4_POINTS} cache hits, saw {warm_hits}");
+        ok = false;
+    }
+    if warm.to_csv() != cold.to_csv() {
+        eprintln!("FAIL: warm table diverges from cold table");
+        ok = false;
+    }
+    if speedup < MIN_SPEEDUP {
+        eprintln!("FAIL: warm-vs-cold speedup {speedup:.1}x below the {MIN_SPEEDUP}x gate");
+        ok = false;
+    }
+    if !ok {
+        return ExitCode::FAILURE;
+    }
+    println!("query_cache: OK (zero warm misses, {speedup:.0}x >= {MIN_SPEEDUP}x)");
+    ExitCode::SUCCESS
+}

@@ -1,0 +1,578 @@
+//! Content-addressed measurement cache.
+//!
+//! Every `table*`/`fig*` command, the CLI sweep, and the `query`/`pareto`
+//! subcommands project the same 18×8×2 design space; before this cache each
+//! of them re-simulated its slice from scratch. A [`Measurement`] is fully
+//! determined by the program it runs, the cluster configuration, and the
+//! timing-engine semantics, so results are addressed by a [`CacheKey`]
+//! fingerprinting exactly those inputs:
+//!
+//! * the 64-bit content hash of the **workload**: the predecoded
+//!   instruction stream ([`DecodedProgram::fingerprint`]) folded with the
+//!   staged input data, the output window, the host goldens and the
+//!   tolerances ([`workload_fingerprint`]) — editing a kernel's code *or*
+//!   its input generation invalidates precisely its own entries;
+//! * the [`ClusterConfig`] (including the blocked-FPU-map ablation knob)
+//!   plus the benchmark / variant identity;
+//! * [`ENGINE_VERSION`], a manually-bumped constant capturing the timing
+//!   model itself — the cache invalidation rule for simulator changes the
+//!   program hash cannot see (see EXPERIMENTS.md §Cache).
+//!
+//! The key deliberately does *not* include the issue engine
+//! ([`crate::cluster::Engine`]): the differential harness keeps the event
+//! and reference engines cycle-identical, so their measurements are
+//! interchangeable (asserted by `engine_parity_justifies_shared_key` below).
+//!
+//! The in-memory map serves one process; [`MeasurementCache::save_csv`] /
+//! [`MeasurementCache::load_csv`] persist it under `artifacts/cache/` so
+//! repeated CLI invocations skip simulation entirely. Floats are stored as
+//! IEEE-754 bit patterns, making a cache round-trip bit-exact — a warm
+//! `pareto` report is byte-identical to a cold one.
+
+use std::collections::HashMap;
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::sweep::Measurement;
+use crate::cluster::counters::CoreCounters;
+use crate::config::ClusterConfig;
+use crate::isa::DecodedProgram;
+use crate::kernels::{Benchmark, OutFmt, Staged, Variant, Workload};
+use crate::model::Metrics;
+use crate::transfp::FpMode;
+
+/// Version of the timing model baked into every cache key. Bump this
+/// whenever a simulator change can alter cycles or counters (issue rules,
+/// latencies, arbitration, the analytic models' inputs): persisted entries
+/// from older engines then miss and are re-simulated, never served stale.
+pub const ENGINE_VERSION: u32 = 1;
+
+/// File name of the persisted cache inside the cache directory.
+pub const CACHE_FILE: &str = "measurements.csv";
+
+/// First line of a persisted cache file; anything else is ignored on load
+/// (treated as a cold start and rewritten on save).
+const MAGIC: &str = "transpfp-cache-v1";
+
+/// Content address of one measurement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// [`workload_fingerprint`] of the workload (program + staged data +
+    /// goldens + tolerances).
+    pub workload: u64,
+    /// Configuration under test.
+    pub cfg: ClusterConfig,
+    /// Benchmark and variant identity.
+    pub bench: Benchmark,
+    pub variant: Variant,
+    /// [`ENGINE_VERSION`] at key-construction time.
+    pub engine_version: u32,
+}
+
+impl CacheKey {
+    /// Key for running `w` (built by `bench`/`variant`) on `cfg` under the
+    /// current engine version.
+    pub fn new(cfg: &ClusterConfig, bench: Benchmark, variant: Variant, w: &Workload) -> Self {
+        Self::with_fingerprint(cfg, bench, variant, workload_fingerprint(w))
+    }
+
+    /// Key from an already-computed workload fingerprint (the query
+    /// planner memoizes fingerprints per point within a process).
+    pub fn with_fingerprint(
+        cfg: &ClusterConfig,
+        bench: Benchmark,
+        variant: Variant,
+        workload: u64,
+    ) -> Self {
+        CacheKey { workload, cfg: *cfg, bench, variant, engine_version: ENGINE_VERSION }
+    }
+}
+
+/// FNV-1a byte fold used to extend the program fingerprint.
+fn fnv_fold(mut h: u64, bytes: impl IntoIterator<Item = u8>) -> u64 {
+    for b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// 64-bit content hash of a full workload. Cycle counts depend on control
+/// flow, and some kernels branch on FP-compare results of staged data
+/// (e.g. the KMEANS assignment step), while `verified` depends on the
+/// goldens and tolerances — so the address must cover the **data**, not
+/// just the instruction stream: the predecoded-program fingerprint is
+/// folded with the staged input bytes, the output window, the expected
+/// outputs and the tolerances. Editing a kernel's input generation without
+/// touching its code still invalidates its entries.
+pub fn workload_fingerprint(w: &Workload) -> u64 {
+    let mut h = DecodedProgram::decode(&w.program).fingerprint();
+    for (addr, data) in &w.stage {
+        h = fnv_fold(h, addr.to_le_bytes());
+        match data {
+            Staged::F32(v) => {
+                h = fnv_fold(h, [1u8]);
+                for x in v {
+                    h = fnv_fold(h, x.to_bits().to_le_bytes());
+                }
+            }
+            Staged::U16(v) => {
+                h = fnv_fold(h, [2u8]);
+                for x in v {
+                    h = fnv_fold(h, x.to_le_bytes());
+                }
+            }
+            Staged::U32(v) => {
+                h = fnv_fold(h, [3u8]);
+                for x in v {
+                    h = fnv_fold(h, x.to_le_bytes());
+                }
+            }
+        }
+    }
+    h = fnv_fold(h, w.out_addr.to_le_bytes());
+    h = fnv_fold(h, (w.out_len as u64).to_le_bytes());
+    // The 16-bit spec inside `Pack16` is already pinned by the variant in
+    // the key; a tag suffices here.
+    let fmt_tag = match w.out_fmt {
+        OutFmt::F32 => 1u8,
+        OutFmt::Pack16(_) => 2,
+    };
+    h = fnv_fold(h, [fmt_tag]);
+    for e in &w.expected {
+        h = fnv_fold(h, e.to_bits().to_le_bytes());
+    }
+    h = fnv_fold(h, w.rtol.to_bits().to_le_bytes());
+    fnv_fold(h, w.atol.to_bits().to_le_bytes())
+}
+
+/// Lookup statistics of a [`MeasurementCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from the map.
+    pub hits: u64,
+    /// Lookups that required simulation.
+    pub misses: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+}
+
+/// Thread-safe content-addressed store of [`Measurement`]s.
+#[derive(Default)]
+pub struct MeasurementCache {
+    map: Mutex<HashMap<CacheKey, Measurement>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl MeasurementCache {
+    /// Empty in-memory cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look `key` up, counting the access as a hit or miss.
+    pub fn lookup(&self, key: &CacheKey) -> Option<Measurement> {
+        let found = self.map.lock().unwrap().get(key).cloned();
+        let ctr = if found.is_some() { &self.hits } else { &self.misses };
+        ctr.fetch_add(1, Ordering::Relaxed);
+        found
+    }
+
+    /// Insert (or overwrite) the measurement for `key`.
+    pub fn insert(&self, key: CacheKey, m: Measurement) {
+        self.map.lock().unwrap().insert(key, m);
+    }
+
+    /// Number of resident entries.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// True if no entries are resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current hit/miss/entry counts.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+
+    /// Merge entries persisted at `path` into the map; returns how many were
+    /// accepted. Rows from a different [`ENGINE_VERSION`] and rows that fail
+    /// to parse are skipped — a stale or corrupt cache degrades to a cold
+    /// start, it never fails a command or serves wrong data.
+    pub fn load_csv(&self, path: &Path) -> io::Result<usize> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        if lines.next() != Some(MAGIC) {
+            return Ok(0);
+        }
+        let mut accepted = 0usize;
+        let mut map = self.map.lock().unwrap();
+        for line in lines {
+            if let Some((key, m)) = decode_row(line) {
+                if key.engine_version == ENGINE_VERSION {
+                    map.insert(key, m);
+                    accepted += 1;
+                }
+            }
+        }
+        Ok(accepted)
+    }
+
+    /// Write every resident entry to `path` (creating parent directories),
+    /// in a deterministic row order; returns the entry count.
+    pub fn save_csv(&self, path: &Path) -> io::Result<usize> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let map = self.map.lock().unwrap();
+        let mut rows: Vec<String> = map.iter().map(|(k, m)| encode_row(k, m)).collect();
+        rows.sort_unstable();
+        let mut out = String::with_capacity(rows.len() * 192 + MAGIC.len() + 1);
+        out.push_str(MAGIC);
+        out.push('\n');
+        for r in &rows {
+            out.push_str(r);
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        Ok(map.len())
+    }
+}
+
+/// Mnemonic plus a `+b` suffix for the blocked-FPU-map ablation (the
+/// mnemonic alone does not encode that knob).
+fn encode_cfg(cfg: &ClusterConfig) -> String {
+    if cfg.blocked_fpu_map {
+        format!("{}+b", cfg.mnemonic())
+    } else {
+        cfg.mnemonic()
+    }
+}
+
+fn decode_cfg(s: &str) -> Option<ClusterConfig> {
+    match s.strip_suffix("+b") {
+        Some(base) => ClusterConfig::parse(base).map(|c| c.with_blocked_fpu_map()),
+        None => ClusterConfig::parse(s),
+    }
+}
+
+fn encode_variant(v: Variant) -> &'static str {
+    match v {
+        Variant::Scalar => "scalar",
+        Variant::Vector(FpMode::VecF16) => "vecf16",
+        Variant::Vector(FpMode::VecBf16) => "vecbf16",
+        // Degenerate vector modes no kernel builds; named for totality.
+        Variant::Vector(FpMode::F32) => "vec.f32",
+        Variant::Vector(FpMode::F16) => "vec.f16",
+        Variant::Vector(FpMode::Bf16) => "vec.bf16",
+    }
+}
+
+fn decode_variant(s: &str) -> Option<Variant> {
+    match s {
+        "scalar" => Some(Variant::Scalar),
+        "vecf16" => Some(Variant::Vector(FpMode::VecF16)),
+        "vecbf16" => Some(Variant::Vector(FpMode::VecBf16)),
+        "vec.f32" => Some(Variant::Vector(FpMode::F32)),
+        "vec.f16" => Some(Variant::Vector(FpMode::F16)),
+        "vec.bf16" => Some(Variant::Vector(FpMode::Bf16)),
+        _ => None,
+    }
+}
+
+/// Counter fields in row order (kept in `CoreCounters` declaration order).
+fn counters_to_fields(c: &CoreCounters) -> [u64; 18] {
+    [
+        c.cycles,
+        c.active,
+        c.instrs,
+        c.int_instrs,
+        c.fp_instrs,
+        c.fp_vec_instrs,
+        c.mem_instrs,
+        c.flops,
+        c.tcdm_cont,
+        c.l2_stall,
+        c.fpu_stall,
+        c.fpu_cont,
+        c.divsqrt_cont,
+        c.wb_stall,
+        c.load_stall,
+        c.icache_stall,
+        c.barrier_idle,
+        c.branch_stall,
+    ]
+}
+
+fn counters_from_fields(f: &[u64; 18]) -> CoreCounters {
+    CoreCounters {
+        cycles: f[0],
+        active: f[1],
+        instrs: f[2],
+        int_instrs: f[3],
+        fp_instrs: f[4],
+        fp_vec_instrs: f[5],
+        mem_instrs: f[6],
+        flops: f[7],
+        tcdm_cont: f[8],
+        l2_stall: f[9],
+        fpu_stall: f[10],
+        fpu_cont: f[11],
+        divsqrt_cont: f[12],
+        wb_stall: f[13],
+        load_stall: f[14],
+        icache_stall: f[15],
+        barrier_idle: f[16],
+        branch_stall: f[17],
+    }
+}
+
+/// One `key → measurement` entry as a CSV row. Floats are serialized as
+/// IEEE-754 bit patterns (hex) so a load reproduces them bit-exactly.
+fn encode_row(key: &CacheKey, m: &Measurement) -> String {
+    let mut row = format!(
+        "{:016x},{},{},{},{},{},{},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x}",
+        key.workload,
+        key.engine_version,
+        encode_cfg(&key.cfg),
+        key.bench.name(),
+        encode_variant(key.variant),
+        m.verified,
+        m.cycles,
+        m.metrics.perf_gflops.to_bits(),
+        m.metrics.energy_eff.to_bits(),
+        m.metrics.area_eff.to_bits(),
+        m.metrics.flops_per_cycle.to_bits(),
+        m.fp_intensity.to_bits(),
+        m.mem_intensity.to_bits(),
+    );
+    for f in counters_to_fields(&m.agg) {
+        row.push(',');
+        row.push_str(&f.to_string());
+    }
+    row
+}
+
+/// Inverse of [`encode_row`]; `None` on any malformed field.
+fn decode_row(line: &str) -> Option<(CacheKey, Measurement)> {
+    let fields: Vec<&str> = line.split(',').collect();
+    if fields.len() != 13 + 18 {
+        return None;
+    }
+    let u64hex = |s: &str| u64::from_str_radix(s, 16).ok();
+    let f64bits = |s: &str| u64hex(s).map(f64::from_bits);
+    let key = CacheKey {
+        workload: u64hex(fields[0])?,
+        engine_version: fields[1].parse().ok()?,
+        cfg: decode_cfg(fields[2])?,
+        bench: Benchmark::parse(fields[3])?,
+        variant: decode_variant(fields[4])?,
+    };
+    let verified = match fields[5] {
+        "true" => true,
+        "false" => false,
+        _ => return None,
+    };
+    let cycles: u64 = fields[6].parse().ok()?;
+    let metrics = Metrics {
+        perf_gflops: f64bits(fields[7])?,
+        energy_eff: f64bits(fields[8])?,
+        area_eff: f64bits(fields[9])?,
+        flops_per_cycle: f64bits(fields[10])?,
+    };
+    let fp_intensity = f64bits(fields[11])?;
+    let mem_intensity = f64bits(fields[12])?;
+    let mut counters = [0u64; 18];
+    for (slot, s) in counters.iter_mut().zip(&fields[13..]) {
+        *slot = s.parse().ok()?;
+    }
+    let m = Measurement {
+        cfg: key.cfg,
+        bench: key.bench,
+        variant: key.variant,
+        metrics,
+        cycles,
+        agg: counters_from_fields(&counters),
+        fp_intensity,
+        mem_intensity,
+        verified,
+    };
+    Some((key, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, Engine};
+    use crate::coordinator::sweep::run_one;
+
+    fn sample_measurement(cfg: &ClusterConfig) -> Measurement {
+        Measurement {
+            cfg: *cfg,
+            bench: Benchmark::Fir,
+            variant: Variant::VEC,
+            metrics: Metrics {
+                perf_gflops: 5.92,
+                energy_eff: 167.0,
+                area_eff: 3.5,
+                flops_per_cycle: 16.0,
+            },
+            cycles: 12345,
+            agg: CoreCounters { cycles: 12345, instrs: 999, flops: 4096, ..Default::default() },
+            fp_intensity: 0.32,
+            mem_intensity: 0.48,
+            verified: true,
+        }
+    }
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("transpfp-{}-{}", name, std::process::id()))
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses() {
+        let cache = MeasurementCache::new();
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let w = Benchmark::Fir.build(Variant::VEC, &cfg);
+        let key = CacheKey::new(&cfg, Benchmark::Fir, Variant::VEC, &w);
+        assert!(cache.lookup(&key).is_none());
+        cache.insert(key, sample_measurement(&cfg));
+        let hit = cache.lookup(&key).expect("inserted entry");
+        assert_eq!(hit.cycles, 12345);
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+        assert!(!cache.is_empty());
+    }
+
+    /// The key is stable across workload rebuilds and `Cluster::reset()`:
+    /// the fingerprint addresses workload *content*, not run state.
+    #[test]
+    fn key_stable_across_rebuild_and_reset() {
+        let cfg = ClusterConfig::new(8, 2, 0);
+        let w1 = Benchmark::Matmul.build(Variant::Scalar, &cfg);
+        let w2 = Benchmark::Matmul.build(Variant::Scalar, &cfg);
+        let k1 = CacheKey::new(&cfg, Benchmark::Matmul, Variant::Scalar, &w1);
+        let k2 = CacheKey::new(&cfg, Benchmark::Matmul, Variant::Scalar, &w2);
+        assert_eq!(k1, k2, "deterministic builders must fingerprint equal");
+
+        let mut cl = Cluster::new(cfg, w1.program.clone());
+        let before = cl.decoded().fingerprint();
+        let _ = w1.run_in(&mut cl, cfg.cores);
+        cl.reset();
+        assert_eq!(cl.decoded().fingerprint(), before, "reset must not disturb the program");
+        assert_eq!(workload_fingerprint(&w1), k1.workload, "fingerprint is pure");
+
+        // Different variant (different program + data) → different address.
+        let wv = Benchmark::Matmul.build(Variant::VEC, &cfg);
+        let kv = CacheKey::new(&cfg, Benchmark::Matmul, Variant::VEC, &wv);
+        assert_ne!(kv, k1);
+        assert_ne!(kv.workload, k1.workload);
+    }
+
+    /// Data-only edits move the address: the same instruction stream over
+    /// different staged inputs or goldens must not share a cache entry.
+    #[test]
+    fn staged_data_is_part_of_the_key() {
+        let cfg = ClusterConfig::new(8, 2, 0);
+        let base = Benchmark::Matmul.build(Variant::Scalar, &cfg);
+        let h0 = workload_fingerprint(&base);
+
+        let mut data_edit = Benchmark::Matmul.build(Variant::Scalar, &cfg);
+        if let Some((_, Staged::F32(v))) = data_edit.stage.first_mut() {
+            v[0] += 1.0;
+        } else {
+            panic!("expected f32 staging for scalar MATMUL");
+        }
+        assert_ne!(workload_fingerprint(&data_edit), h0, "staged inputs must be hashed");
+
+        let mut golden_edit = Benchmark::Matmul.build(Variant::Scalar, &cfg);
+        golden_edit.expected[0] += 1.0;
+        assert_ne!(workload_fingerprint(&golden_edit), h0, "goldens must be hashed");
+
+        let mut tol_edit = Benchmark::Matmul.build(Variant::Scalar, &cfg);
+        tol_edit.rtol *= 2.0;
+        assert_ne!(workload_fingerprint(&tol_edit), h0, "tolerances must be hashed");
+    }
+
+    /// The key omits the issue engine because both engines are
+    /// cycle-identical; this is the local witness of the differential
+    /// harness's guarantee the shared address relies on.
+    #[test]
+    fn engine_parity_justifies_shared_key() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let w = Benchmark::Matmul.build(Variant::Scalar, &cfg);
+        let (se, oe) = w.run_with(&cfg, cfg.cores, Engine::Event);
+        let (sr, or) = w.run_with(&cfg, cfg.cores, Engine::Reference);
+        assert_eq!(se.total_cycles, sr.total_cycles);
+        assert_eq!(oe, or);
+        assert_eq!(se.per_core, sr.per_core);
+    }
+
+    #[test]
+    fn csv_roundtrip_is_bit_exact() {
+        let cache = MeasurementCache::new();
+        let cfg = ClusterConfig::new(8, 8, 1);
+        let m = run_one(&cfg, Benchmark::Iir, Variant::Scalar);
+        let w = Benchmark::Iir.build(Variant::Scalar, &cfg);
+        let key = CacheKey::new(&cfg, Benchmark::Iir, Variant::Scalar, &w);
+        cache.insert(key, m.clone());
+        // Plus an ablation config, to exercise the `+b` suffix.
+        let bcfg = ClusterConfig::new(8, 4, 1).with_blocked_fpu_map();
+        let bkey = CacheKey { cfg: bcfg, ..key };
+        cache.insert(bkey, sample_measurement(&bcfg));
+
+        let path = tmp_path("cache-roundtrip.csv");
+        assert_eq!(cache.save_csv(&path).unwrap(), 2);
+        let loaded = MeasurementCache::new();
+        assert_eq!(loaded.load_csv(&path).unwrap(), 2);
+        std::fs::remove_file(&path).ok();
+
+        let got = loaded.lookup(&key).expect("persisted entry");
+        assert_eq!(got.cycles, m.cycles);
+        assert_eq!(got.verified, m.verified);
+        assert_eq!(got.metrics.perf_gflops.to_bits(), m.metrics.perf_gflops.to_bits());
+        assert_eq!(got.metrics.energy_eff.to_bits(), m.metrics.energy_eff.to_bits());
+        assert_eq!(got.fp_intensity.to_bits(), m.fp_intensity.to_bits());
+        assert_eq!(got.agg, m.agg);
+        let gb = loaded.lookup(&bkey).expect("blocked-map entry");
+        assert!(gb.cfg.blocked_fpu_map);
+    }
+
+    #[test]
+    fn stale_engine_versions_and_garbage_are_skipped() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let stale_key = CacheKey {
+            workload: 0xdead_beef,
+            cfg,
+            bench: Benchmark::Fir,
+            variant: Variant::Scalar,
+            engine_version: ENGINE_VERSION + 1,
+        };
+        let path = tmp_path("cache-stale.csv");
+        let body = format!(
+            "{}\n{}\nnot,a,valid,row\n",
+            "transpfp-cache-v1",
+            encode_row(&stale_key, &sample_measurement(&cfg))
+        );
+        std::fs::write(&path, body).unwrap();
+        let cache = MeasurementCache::new();
+        assert_eq!(cache.load_csv(&path).unwrap(), 0, "stale + garbage rows must be dropped");
+        std::fs::remove_file(&path).ok();
+
+        // A file with an unknown magic line is ignored wholesale.
+        let path2 = tmp_path("cache-badmagic.csv");
+        std::fs::write(&path2, "transpfp-cache-v999\nwhatever\n").unwrap();
+        assert_eq!(cache.load_csv(&path2).unwrap(), 0);
+        std::fs::remove_file(&path2).ok();
+        assert!(cache.is_empty());
+    }
+}

@@ -1,12 +1,28 @@
 //! Design-space-exploration coordinator: runs (configuration × benchmark ×
 //! variant) sweeps on the cycle-accurate simulator, converts counters into
 //! the paper's metrics, and produces every table and figure of §5/§6.
+//!
+//! Since PR 2 the coordinator is a memoizing **query engine**: measurements
+//! are content-addressed in a [`MeasurementCache`] (keyed by program
+//! fingerprint × config × variant × engine version), batches of points are
+//! deduplicated and partitioned by a [`QueryEngine`] so only cache misses
+//! reach the parallel sweep workers, and the [`pareto`] module extracts the
+//! design space's Pareto frontier over the three paper metrics.
 
+pub mod cache;
+pub mod pareto;
+pub mod query;
 pub mod sweep;
 pub mod tables;
 
-pub use sweep::{run_one, sweep, sweep_all, Measurement};
-pub use tables::{fig3, fig4, fig5, fig6, fig7, fig8, table3, table45, table6};
+pub use cache::{workload_fingerprint, CacheKey, CacheStats, MeasurementCache, ENGINE_VERSION};
+pub use pareto::{pareto_front, pareto_table, pareto_table_from, pareto_table_with};
+pub use query::{points, QueryEngine, QueryPlan, QueryPoint};
+pub use sweep::{run_one, run_parallel, run_workload, sweep, sweep_all, Measurement};
+pub use tables::{
+    fig3, fig4, fig5, fig6, fig7, fig7_with, fig8, fig8_with, measurements_table, table3,
+    table3_with, table45, table45_with, table6, table6_with,
+};
 
 #[cfg(test)]
 mod tests {

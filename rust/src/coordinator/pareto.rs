@@ -1,0 +1,184 @@
+//! Pareto-front extraction over the paper's three efficiency metrics.
+//!
+//! Tables 4/5 box the best configuration per row and per metric; the
+//! frontier view asks the sharper question the Dustin-style comparisons
+//! need: which (config, benchmark, variant) points are not dominated on
+//! **all** of (Gflop/s, Gflop/s/W, Gflop/s/mm²) simultaneously. All three
+//! metrics are maximized. Extraction is a pure function of the measurement
+//! set and the report order is fully specified, so — with the simulator
+//! deterministic and measurements cache-stable bit-for-bit — `transpfp
+//! pareto` output is identical across runs, warm or cold.
+
+use super::query::{points, QueryEngine};
+use super::sweep::Measurement;
+use crate::config::ClusterConfig;
+use crate::kernels::{Benchmark, Variant};
+use crate::report::Table;
+
+/// The maximized objective triple of a measurement:
+/// (perf Gflop/s @ST, energy eff Gflop/s/W @NT, area eff Gflop/s/mm² @ST).
+pub fn objectives(m: &Measurement) -> [f64; 3] {
+    [m.metrics.perf_gflops, m.metrics.energy_eff, m.metrics.area_eff]
+}
+
+/// True if `a` Pareto-dominates `b`: at least as good on every objective
+/// and strictly better on at least one. Ties on every objective (duplicate
+/// points) dominate in neither direction.
+pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x >= y) && a.iter().zip(b).any(|(x, y)| x > y)
+}
+
+/// Indices of the non-dominated points of `pts`, in input order. Exact
+/// duplicates are all retained (each is non-dominated); a single point is
+/// its own frontier.
+pub fn pareto_front_indices(pts: &[[f64; 3]]) -> Vec<usize> {
+    (0..pts.len())
+        .filter(|&i| !pts.iter().enumerate().any(|(j, q)| j != i && dominates(q, &pts[i])))
+        .collect()
+}
+
+/// The non-dominated measurements of `ms`, sorted for reporting: best
+/// performance first, exact ties broken by (config, bench, variant) so the
+/// order is total and reproducible.
+pub fn pareto_front(ms: &[Measurement]) -> Vec<Measurement> {
+    let pts: Vec<[f64; 3]> = ms.iter().map(objectives).collect();
+    let mut front: Vec<Measurement> =
+        pareto_front_indices(&pts).into_iter().map(|i| ms[i].clone()).collect();
+    front.sort_by(|a, b| {
+        b.metrics
+            .perf_gflops
+            .partial_cmp(&a.metrics.perf_gflops)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.cfg.mnemonic().cmp(&b.cfg.mnemonic()))
+            .then_with(|| a.bench.name().cmp(b.bench.name()))
+            .then_with(|| a.variant.label().cmp(b.variant.label()))
+    });
+    front
+}
+
+/// Render the frontier of `ms` as a report table.
+pub fn pareto_table_from(ms: &[Measurement]) -> Table {
+    let mut t = Table::new(vec![
+        "config",
+        "bench",
+        "variant",
+        "perf (Gflop/s)",
+        "e.eff (Gflop/s/W)",
+        "a.eff (Gflop/s/mm^2)",
+        "cycles",
+    ]);
+    for m in pareto_front(ms) {
+        t.row(vec![
+            m.cfg.mnemonic(),
+            m.bench.name().to_string(),
+            m.variant.label().to_string(),
+            format!("{:.3}", m.metrics.perf_gflops),
+            format!("{:.3}", m.metrics.energy_eff),
+            format!("{:.3}", m.metrics.area_eff),
+            m.cycles.to_string(),
+        ]);
+    }
+    t
+}
+
+/// `transpfp pareto`: the frontier of the full 18×8×2 design space,
+/// resolved through `engine`'s measurement cache.
+pub fn pareto_table_with(engine: &QueryEngine) -> Table {
+    let pts = points(
+        &ClusterConfig::design_space(),
+        &Benchmark::all(),
+        &[Variant::Scalar, Variant::VEC],
+    );
+    pareto_table_from(&engine.query(&pts))
+}
+
+/// [`pareto_table_with`] on the process-wide engine.
+pub fn pareto_table() -> Table {
+    pareto_table_with(QueryEngine::global())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::counters::CoreCounters;
+    use crate::model::Metrics;
+
+    /// Synthetic measurement with the given objective triple.
+    fn mk(perf: f64, eeff: f64, aeff: f64) -> Measurement {
+        Measurement {
+            cfg: ClusterConfig::new(8, 4, 1),
+            bench: Benchmark::Fir,
+            variant: Variant::Scalar,
+            metrics: Metrics {
+                perf_gflops: perf,
+                energy_eff: eeff,
+                area_eff: aeff,
+                flops_per_cycle: 1.0,
+            },
+            cycles: 100,
+            agg: CoreCounters::default(),
+            fp_intensity: 0.3,
+            mem_intensity: 0.5,
+            verified: true,
+        }
+    }
+
+    #[test]
+    fn dominance_rules() {
+        assert!(dominates(&[2.0, 2.0, 2.0], &[1.0, 1.0, 1.0]));
+        // Weakly better everywhere + strictly on one axis dominates.
+        assert!(dominates(&[1.0, 1.0, 2.0], &[1.0, 1.0, 1.0]));
+        // Equal triples dominate in neither direction.
+        assert!(!dominates(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]));
+        // Trade-offs dominate in neither direction.
+        assert!(!dominates(&[2.0, 0.5, 1.0], &[1.0, 1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0, 1.0], &[2.0, 0.5, 1.0]));
+    }
+
+    #[test]
+    fn interior_points_are_dropped() {
+        let pts = [[3.0, 1.0, 1.0], [1.0, 3.0, 1.0], [2.0, 2.0, 0.5], [1.0, 1.0, 0.5]];
+        // The last point is dominated by every other; the rest trade off.
+        assert_eq!(pareto_front_indices(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn single_point_space_is_its_own_frontier() {
+        assert_eq!(pareto_front_indices(&[[1.0, 2.0, 3.0]]), vec![0]);
+        assert!(pareto_front_indices(&[]).is_empty());
+        let front = pareto_front(&[mk(1.0, 2.0, 3.0)]);
+        assert_eq!(front.len(), 1);
+    }
+
+    #[test]
+    fn duplicate_points_are_all_retained() {
+        let pts = [[2.0, 2.0, 2.0], [2.0, 2.0, 2.0], [1.0, 1.0, 1.0]];
+        assert_eq!(pareto_front_indices(&pts), vec![0, 1]);
+        let front = pareto_front(&[mk(2.0, 2.0, 2.0), mk(2.0, 2.0, 2.0), mk(1.0, 1.0, 1.0)]);
+        assert_eq!(front.len(), 2);
+    }
+
+    #[test]
+    fn ties_on_one_metric_keep_both_tradeoffs() {
+        // Same perf, opposite trade on the other two axes: both survive.
+        let pts = [[5.0, 3.0, 1.0], [5.0, 1.0, 3.0]];
+        assert_eq!(pareto_front_indices(&pts), vec![0, 1]);
+        // Same perf and energy, one strictly better on area: dominated.
+        let pts = [[5.0, 3.0, 1.0], [5.0, 3.0, 2.0]];
+        assert_eq!(pareto_front_indices(&pts), vec![1]);
+    }
+
+    #[test]
+    fn report_is_deterministic_and_sorted() {
+        let ms = [mk(1.0, 9.0, 1.0), mk(3.0, 1.0, 1.0), mk(2.0, 2.0, 2.0), mk(0.5, 0.5, 0.5)];
+        let a = pareto_table_from(&ms);
+        let b = pareto_table_from(&ms);
+        assert_eq!(a.to_csv(), b.to_csv());
+        let csv = a.to_csv();
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert_eq!(rows.len(), 3, "dominated point must be absent");
+        // Sorted by descending performance.
+        assert!(rows[0].contains("3.000"));
+        assert!(rows[1].contains("2.000"));
+    }
+}

@@ -9,7 +9,7 @@
 
 use crate::cluster::counters::CoreCounters;
 use crate::config::ClusterConfig;
-use crate::kernels::{Benchmark, Variant};
+use crate::kernels::{Benchmark, Variant, Workload};
 use crate::model::{self, Metrics};
 
 /// One point of the evaluation space.
@@ -36,6 +36,18 @@ pub struct Measurement {
 /// Run one benchmark variant on one configuration.
 pub fn run_one(cfg: &ClusterConfig, bench: Benchmark, variant: Variant) -> Measurement {
     let w = bench.build(variant, cfg);
+    run_workload(cfg, bench, variant, &w)
+}
+
+/// [`run_one`] on a workload the caller already built — the query planner
+/// constructs workloads up front (it needs the program for the cache
+/// fingerprint) and hands only the cache misses here.
+pub fn run_workload(
+    cfg: &ClusterConfig,
+    bench: Benchmark,
+    variant: Variant,
+    w: &Workload,
+) -> Measurement {
     let (stats, out) = w.run(cfg);
     let verified = w.verify(&out).is_ok();
     let agg = stats.aggregate();
@@ -59,7 +71,11 @@ pub fn sweep_all() -> Vec<Measurement> {
     sweep(&ClusterConfig::design_space(), &Benchmark::all(), &[Variant::Scalar, Variant::VEC])
 }
 
-/// Run an arbitrary slice of the space.
+/// Run an arbitrary slice of the space. This is the *raw* (uncached)
+/// driver — the differential and determinism harnesses rely on every call
+/// actually simulating. Cached resolution lives in
+/// [`crate::coordinator::query::QueryEngine`], which drives its misses
+/// through the same [`run_parallel`] worker pool.
 pub fn sweep(
     configs: &[ClusterConfig],
     benches: &[Benchmark],
@@ -73,34 +89,52 @@ pub fn sweep(
             }
         }
     }
+    run_parallel(&jobs, |&(cfg, b, v)| run_one(&cfg, b, v))
+}
+
+/// Lock-free parallel job driver shared by the raw sweep and the query
+/// planner (both its planning pass and its miss execution). Workers pull
+/// job indices from an atomic counter (dynamic load balancing) and buffer
+/// `(slot, result)` pairs locally; the coordinator writes each pair into
+/// its pre-sized slot after joining, so results are in `jobs` order
+/// regardless of scheduling.
+pub fn run_parallel<J, R, F>(jobs: &[J], run: F) -> Vec<R>
+where
+    J: Sync,
+    R: Send,
+    F: Fn(&J) -> R + Sync,
+{
     let next = std::sync::atomic::AtomicUsize::new(0);
-    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16);
-    let mut results: Vec<Option<Measurement>> = Vec::new();
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+        .min(jobs.len().max(1));
+    let mut results: Vec<Option<R>> = Vec::new();
     results.resize_with(jobs.len(), || None);
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(|| {
-                    let mut local: Vec<(usize, Measurement)> = Vec::new();
+                    let mut local: Vec<(usize, R)> = Vec::new();
                     loop {
                         let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         if i >= jobs.len() {
                             break;
                         }
-                        let (cfg, b, v) = jobs[i];
-                        local.push((i, run_one(&cfg, b, v)));
+                        local.push((i, run(&jobs[i])));
                     }
                     local
                 })
             })
             .collect();
         for h in handles {
-            for (i, m) in h.join().expect("sweep worker panicked") {
-                results[i] = Some(m);
+            for (i, r) in h.join().expect("sweep worker panicked") {
+                results[i] = Some(r);
             }
         }
     });
-    results.into_iter().map(|m| m.expect("sweep slot unfilled")).collect()
+    results.into_iter().map(|r| r.expect("sweep slot unfilled")).collect()
 }
 
 #[cfg(test)]

@@ -1,8 +1,19 @@
 //! Emitters for every table and figure in the paper's evaluation (§5–§6).
-//! Each function runs the necessary slice of the design space on the
-//! simulator and renders a text table (plus CSV via [`crate::report`]).
+//! Each function resolves the necessary slice of the design space and
+//! renders a text table (plus CSV via [`crate::report`]).
+//!
+//! Every emitter that consumes full-occupancy [`Measurement`]s goes through
+//! the [`QueryEngine`] planner, so a warm cache regenerates the paper's
+//! tables without issuing a single simulator run. The zero-argument public
+//! forms use the process-wide engine; the `_with` forms take an explicit
+//! engine (benches and tests use private ones so hit/miss assertions are
+//! not shared state). Fig 5 (power activity at 100 MHz) and Fig 6
+//! (partial-occupancy speed-ups) need raw `RunStats` under non-default
+//! worker counts — dimensions a [`Measurement`] does not carry — and stay
+//! on the direct simulation path.
 
-use super::sweep::{run_one, sweep, Measurement};
+use super::query::{points, QueryEngine};
+use super::sweep::Measurement;
 use crate::cluster::counters::RunStats;
 use crate::config::{ClusterConfig, Corner};
 use crate::kernels::{Benchmark, Variant};
@@ -17,7 +28,14 @@ fn configs_for(cores: usize) -> Vec<ClusterConfig> {
 /// Table 3: FP / memory intensity per benchmark and variant — measured on
 /// the 8c8f1p configuration, side by side with the paper's values.
 pub fn table3() -> Table {
+    table3_with(QueryEngine::global())
+}
+
+/// [`table3`] through an explicit query engine.
+pub fn table3_with(engine: &QueryEngine) -> Table {
     let cfg = ClusterConfig::new(8, 8, 1);
+    let measurements =
+        engine.query(&points(&[cfg], &Benchmark::all(), &[Variant::Scalar, Variant::VEC]));
     let mut t = Table::new(vec![
         "Apps",
         "FP I. scal (paper)",
@@ -25,9 +43,8 @@ pub fn table3() -> Table {
         "FP I. vec (paper)",
         "M. I. vec (paper)",
     ]);
-    for b in Benchmark::all() {
-        let ms = run_one(&cfg, b, Variant::Scalar);
-        let mv = run_one(&cfg, b, Variant::VEC);
+    for (b, pair) in Benchmark::all().iter().zip(measurements.chunks_exact(2)) {
+        let (ms, mv) = (&pair[0], &pair[1]);
         let (fs, mems) = b.table3_intensity(Variant::Scalar);
         let (fv, memv) = b.table3_intensity(Variant::VEC);
         t.row(vec![
@@ -46,8 +63,14 @@ pub fn table3() -> Table {
 /// configurations, scalar and vector variants, with the per-row best
 /// configuration boxed and the normalized-average (NAVG) footer.
 pub fn table45(cores: usize) -> Table {
+    table45_with(QueryEngine::global(), cores)
+}
+
+/// [`table45`] through an explicit query engine.
+pub fn table45_with(engine: &QueryEngine, cores: usize) -> Table {
     let configs = configs_for(cores);
-    let measurements = sweep(&configs, &Benchmark::all(), &[Variant::Scalar, Variant::VEC]);
+    let measurements =
+        engine.query(&points(&configs, &Benchmark::all(), &[Variant::Scalar, Variant::VEC]));
     let find = |b: Benchmark, v: Variant, cfg: &ClusterConfig| -> &Measurement {
         measurements
             .iter()
@@ -205,11 +228,16 @@ pub fn fig6() -> Table {
 /// Fig 7: normalized average performance / energy efficiency / area
 /// efficiency versus the FPU sharing factor (pipeline fixed at 1).
 pub fn fig7() -> Table {
+    fig7_with(QueryEngine::global())
+}
+
+/// [`fig7`] through an explicit query engine.
+pub fn fig7_with(engine: &QueryEngine) -> Table {
     let mut t = Table::new(vec!["cores", "sharing", "PERF (norm)", "E.EFF (norm)", "A.EFF (norm)"]);
     for cores in [8usize, 16] {
         let configs: Vec<ClusterConfig> =
             [4usize, 2, 1].iter().map(|d| ClusterConfig::new(cores, cores / d, 1)).collect();
-        let (p, e, a) = averaged_metrics(&configs);
+        let (p, e, a) = averaged_metrics(engine, &configs);
         let (pn, en, an) = (minmax_normalize(&p), minmax_normalize(&e), minmax_normalize(&a));
         for (i, d) in [4, 2, 1].iter().enumerate() {
             t.row(vec![
@@ -226,11 +254,16 @@ pub fn fig7() -> Table {
 
 /// Fig 8: normalized averages versus the pipeline depth (1/1 sharing fixed).
 pub fn fig8() -> Table {
+    fig8_with(QueryEngine::global())
+}
+
+/// [`fig8`] through an explicit query engine.
+pub fn fig8_with(engine: &QueryEngine) -> Table {
     let mut t = Table::new(vec!["cores", "pipe", "PERF (norm)", "E.EFF (norm)", "A.EFF (norm)"]);
     for cores in [8usize, 16] {
         let configs: Vec<ClusterConfig> =
             (0..=2u32).map(|p| ClusterConfig::new(cores, cores, p)).collect();
-        let (p, e, a) = averaged_metrics(&configs);
+        let (p, e, a) = averaged_metrics(engine, &configs);
         let (pn, en, an) = (minmax_normalize(&p), minmax_normalize(&e), minmax_normalize(&a));
         for (i, pipe) in (0..=2u32).enumerate() {
             t.row(vec![
@@ -246,8 +279,11 @@ pub fn fig8() -> Table {
 }
 
 /// Average the three metrics over all benchmarks × variants per config.
-fn averaged_metrics(configs: &[ClusterConfig]) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
-    let ms = sweep(configs, &Benchmark::all(), &[Variant::Scalar, Variant::VEC]);
+fn averaged_metrics(
+    engine: &QueryEngine,
+    configs: &[ClusterConfig],
+) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let ms = engine.query(&points(configs, &Benchmark::all(), &[Variant::Scalar, Variant::VEC]));
     let mut perf = vec![0.0; configs.len()];
     let mut eeff = vec![0.0; configs.len()];
     let mut aeff = vec![0.0; configs.len()];
@@ -266,6 +302,11 @@ fn averaged_metrics(configs: &[ClusterConfig]) -> (Vec<f64>, Vec<f64>, Vec<f64>)
 /// the f32 MATMUL (the paper's methodology) and printed next to the values
 /// the paper reports for itself.
 pub fn table6() -> Table {
+    table6_with(QueryEngine::global())
+}
+
+/// [`table6`] through an explicit query engine.
+pub fn table6_with(engine: &QueryEngine) -> Table {
     let mut t = Table::new(vec![
         "platform",
         "domain",
@@ -292,7 +333,7 @@ pub fn table6() -> Table {
     }
     for ps in crate::report::soa::paper_self_rows() {
         let cfg = ClusterConfig::parse(ps.mnemonic).unwrap();
-        let m = run_one(&cfg, Benchmark::Matmul, Variant::Scalar);
+        let m = engine.one(&cfg, Benchmark::Matmul, Variant::Scalar);
         t.row(vec![
             format!("This work {} ({}) [measured]", ps.mnemonic, ps.role),
             "Embedded".to_string(),
@@ -314,6 +355,40 @@ pub fn table6() -> Table {
             format!("{:.2}", ps.perf_gflops),
             format!("{:.2}", ps.energy_eff),
             format!("{:.2}", ps.area_eff),
+        ]);
+    }
+    t
+}
+
+/// Measurement rows in the `sweep --csv` column layout — the shared output
+/// format of the `sweep` and `query` subcommands and the CI artifacts.
+pub fn measurements_table(ms: &[Measurement]) -> Table {
+    let mut t = Table::new(vec![
+        "config",
+        "bench",
+        "variant",
+        "cycles",
+        "flops_per_cycle",
+        "perf_gflops",
+        "energy_eff",
+        "area_eff",
+        "fp_intensity",
+        "mem_intensity",
+        "verified",
+    ]);
+    for m in ms {
+        t.row(vec![
+            m.cfg.mnemonic(),
+            m.bench.name().to_string(),
+            m.variant.label().to_string(),
+            m.cycles.to_string(),
+            format!("{:.4}", m.metrics.flops_per_cycle),
+            format!("{:.4}", m.metrics.perf_gflops),
+            format!("{:.2}", m.metrics.energy_eff),
+            format!("{:.3}", m.metrics.area_eff),
+            format!("{:.3}", m.fp_intensity),
+            format!("{:.3}", m.mem_intensity),
+            m.verified.to_string(),
         ]);
     }
     t

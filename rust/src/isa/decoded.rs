@@ -164,6 +164,47 @@ impl DecodedProgram {
     pub fn is_empty(&self) -> bool {
         self.insns.is_empty()
     }
+
+    /// Stable 64-bit content fingerprint of the predecoded instruction
+    /// stream (FNV-1a over the decode metadata *and* the architectural
+    /// payload of every instruction). Two programs fingerprint equal iff
+    /// their instruction streams are identical; the measurement cache
+    /// ([`crate::coordinator::cache`]) folds this with the staged data and
+    /// goldens to content-address results, so editing a kernel invalidates
+    /// exactly its own entries. The hash is independent of allocation
+    /// addresses and run state — decoding the same [`Program`] twice,
+    /// before or after `Cluster::reset()`, always reproduces it.
+    pub fn fingerprint(&self) -> u64 {
+        use std::fmt::Write as _;
+        let mut h = Fnv1a::new();
+        for d in &self.insns {
+            // `Insn`'s Debug form is a total, purely structural rendering
+            // (registers, immediates, targets — no floats, no addresses);
+            // class/flags/latency pin down the decode semantics on top.
+            let _ = write!(h, "{:?}/{}/{}/{:?};", d.class, d.flags, d.latency, d.insn);
+        }
+        h.0
+    }
+}
+
+/// 64-bit FNV-1a accumulator used for the program fingerprint. Implements
+/// `fmt::Write` so instruction renderings stream into the hash without
+/// intermediate allocation.
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl std::fmt::Write for Fnv1a {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        for b in s.bytes() {
+            self.0 = (self.0 ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        Ok(())
+    }
 }
 
 /// Class, fixed latency, and locality of an instruction.
@@ -259,6 +300,29 @@ mod tests {
         }
         assert_eq!(d.len(), 6);
         assert!(!d.is_empty());
+    }
+
+    #[test]
+    fn fingerprint_is_content_addressed() {
+        let build = |imm: u32| {
+            let mut b = ProgramBuilder::new("fp");
+            b.li(1, imm);
+            b.addi(2, 1, 3);
+            b.fmac(FpMode::F32, 5, 4, 4);
+            b.end();
+            b.build()
+        };
+        let p = build(7);
+        let a = DecodedProgram::decode(&p).fingerprint();
+        // Decoding the same program again reproduces the fingerprint.
+        assert_eq!(a, DecodedProgram::decode(&p).fingerprint());
+        // An identically-built program fingerprints equal.
+        assert_eq!(a, DecodedProgram::decode(&build(7)).fingerprint());
+        // A one-immediate change is a different program.
+        assert_ne!(a, DecodedProgram::decode(&build(8)).fingerprint());
+        // The empty stream hashes to the FNV-1a offset basis.
+        let empty = DecodedProgram { insns: Vec::new() };
+        assert_eq!(empty.fingerprint(), 0xcbf2_9ce4_8422_2325);
     }
 
     #[test]

@@ -1,26 +1,36 @@
 //! `transpfp` — CLI launcher for the transprecision-cluster reproduction.
 //!
 //! Subcommands regenerate every table/figure of the paper, run individual
-//! benchmarks, and validate the simulator's numerics against the
-//! AOT-compiled JAX/Pallas goldens (`artifacts/*.hlo.txt`).
+//! benchmarks, resolve arbitrary design-space queries, and validate the
+//! simulator's numerics against the AOT-compiled JAX/Pallas goldens
+//! (`artifacts/*.hlo.txt`). Every command that consumes full-occupancy
+//! measurements goes through the memoizing query engine: results persist
+//! under `artifacts/cache/` (override with `TRANSPFP_CACHE_DIR`, disable
+//! with `--no-cache`), so repeated invocations skip simulation entirely.
 
 use std::process::ExitCode;
 
 use transpfp::config::{ClusterConfig, Corner};
-use transpfp::coordinator::{self, run_one};
+use transpfp::coordinator::{self, QueryEngine};
 use transpfp::kernels::{Benchmark, Variant};
 use transpfp::model;
+use transpfp::report;
 use transpfp::transfp::FpMode;
 
 const USAGE: &str = "\
 transpfp — transprecision FP cluster reproduction (TPDS 2021)
 
-USAGE: transpfp <command> [args]
+USAGE: transpfp <command> [args] [flags]
 
 COMMANDS:
   configs                 list the Table 2 design space
   run <cfg> <bench> <scalar|vector|bf16>
                           run one benchmark (e.g. `run 8c4f1p MATMUL vector`)
+  query <cfg|all> <bench|all> <scalar|vector|bf16|all>
+                          resolve a batch of design-space points through the
+                          measurement cache (plan stats on stderr)
+  pareto                  Pareto frontier of the full design space over
+                          (Gflop/s, Gflop/s/W, Gflop/s/mm^2)
   table3                  FP/memory intensities (measured vs paper)
   table4                  8-core benchmark tables (perf / e-eff / a-eff)
   table5                  16-core benchmark tables
@@ -34,16 +44,76 @@ COMMANDS:
   validate [dir]          check simulator numerics vs XLA goldens (artifacts/)
   sweep                   run the full 18x8x2 design space, CSV to stdout
 
-Add `--csv` to any table command for CSV output.";
+FLAGS:
+  --csv                   CSV output for table/fig/pareto/query commands
+  --no-cache              don't load or persist the measurement cache
+
+Measurements are memoized under artifacts/cache/measurements.csv, keyed by
+(program fingerprint, config, variant, engine version); see EXPERIMENTS.md
+§Cache for the invalidation rule. TRANSPFP_CACHE_DIR overrides the
+directory.";
+
+/// Parsed command line: recognized flags plus positional arguments.
+/// Unknown flags are an error — a typo like `--cvs` must fail loudly, not
+/// be silently treated as a positional (or worse, filtered away).
+struct Cli {
+    csv: bool,
+    no_cache: bool,
+    args: Vec<String>,
+}
+
+fn parse_cli<I: IntoIterator<Item = String>>(raw: I) -> Result<Cli, String> {
+    let mut cli = Cli { csv: false, no_cache: false, args: Vec::new() };
+    for a in raw {
+        match a.as_str() {
+            "--csv" => cli.csv = true,
+            "--no-cache" => cli.no_cache = true,
+            s if s.starts_with('-') => {
+                return Err(format!("unknown flag `{s}` (known flags: --csv, --no-cache)"));
+            }
+            _ => cli.args.push(a),
+        }
+    }
+    Ok(cli)
+}
+
+/// Variant names accepted by `run` and `query`.
+fn parse_variant(s: &str) -> Option<Variant> {
+    match s {
+        "scalar" => Some(Variant::Scalar),
+        "vector" | "f16" => Some(Variant::VEC),
+        "bf16" => Some(Variant::Vector(FpMode::VecBf16)),
+        _ => None,
+    }
+}
 
 fn main() -> ExitCode {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let csv = args.iter().any(|a| a == "--csv");
-    let args: Vec<&str> = args.iter().map(|s| s.as_str()).filter(|a| *a != "--csv").collect();
+    let cli = match parse_cli(std::env::args().skip(1)) {
+        Ok(cli) => cli,
+        Err(e) => {
+            eprintln!("{e}\n\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if !cli.no_cache {
+        coordinator::query::load_global_cache();
+    }
+    let code = dispatch(&cli);
+    if !cli.no_cache && QueryEngine::global().stats().misses > 0 {
+        if let Err(e) = coordinator::query::save_global_cache() {
+            eprintln!("warning: could not persist measurement cache: {e}");
+        }
+    }
+    code
+}
+
+fn dispatch(cli: &Cli) -> ExitCode {
+    let args: Vec<&str> = cli.args.iter().map(|s| s.as_str()).collect();
     let Some(cmd) = args.first() else {
         eprintln!("{USAGE}");
         return ExitCode::FAILURE;
     };
+    let csv = cli.csv;
 
     let emit = |t: transpfp::report::Table| {
         if csv {
@@ -82,16 +152,11 @@ fn main() -> ExitCode {
                 eprintln!("unknown benchmark {}", args[2]);
                 return ExitCode::FAILURE;
             };
-            let variant = match args[3] {
-                "scalar" => Variant::Scalar,
-                "vector" | "f16" => Variant::VEC,
-                "bf16" => Variant::Vector(FpMode::VecBf16),
-                other => {
-                    eprintln!("unknown variant {other}");
-                    return ExitCode::FAILURE;
-                }
+            let Some(variant) = parse_variant(args[3]) else {
+                eprintln!("unknown variant {}", args[3]);
+                return ExitCode::FAILURE;
             };
-            let m = run_one(&cfg, bench, variant);
+            let m = QueryEngine::global().one(&cfg, bench, variant);
             println!("{} {} on {}:", bench.name(), variant.label(), cfg.mnemonic());
             println!("  cycles            {}", m.cycles);
             println!("  flops/cycle       {:.3}", m.metrics.flops_per_cycle);
@@ -121,6 +186,60 @@ fn main() -> ExitCode {
                 return ExitCode::FAILURE;
             }
         }
+        "query" => {
+            if args.len() < 4 {
+                eprintln!("usage: transpfp query <cfg|all> <bench|all> <scalar|vector|bf16|all>");
+                return ExitCode::FAILURE;
+            }
+            let configs: Vec<ClusterConfig> = if args[1] == "all" {
+                ClusterConfig::design_space()
+            } else {
+                match ClusterConfig::parse(args[1]) {
+                    Some(cfg) => vec![cfg],
+                    None => {
+                        eprintln!("bad config mnemonic {}", args[1]);
+                        return ExitCode::FAILURE;
+                    }
+                }
+            };
+            let benches: Vec<Benchmark> = if args[2] == "all" {
+                Benchmark::all().to_vec()
+            } else {
+                match Benchmark::parse(args[2]) {
+                    Some(b) => vec![b],
+                    None => {
+                        eprintln!("unknown benchmark {}", args[2]);
+                        return ExitCode::FAILURE;
+                    }
+                }
+            };
+            let variants: Vec<Variant> = if args[3] == "all" {
+                vec![Variant::Scalar, Variant::VEC]
+            } else {
+                match parse_variant(args[3]) {
+                    Some(v) => vec![v],
+                    None => {
+                        eprintln!("unknown variant {}", args[3]);
+                        return ExitCode::FAILURE;
+                    }
+                }
+            };
+            let pts = coordinator::points(&configs, &benches, &variants);
+            let engine = QueryEngine::global();
+            let plan = engine.plan(&pts);
+            let plan_summary = [
+                ("points", plan.len().to_string()),
+                ("unique", plan.unique_len().to_string()),
+                ("cache hits", plan.hit_count().to_string()),
+                ("cache misses", plan.miss_count().to_string()),
+            ];
+            let ms = engine.execute(plan);
+            emit(coordinator::measurements_table(&ms));
+            let mut summary = plan_summary.to_vec();
+            summary.push(("entries", engine.stats().entries.to_string()));
+            eprint!("{}", report::kv_table("query plan", &summary).render());
+        }
+        "pareto" => emit(coordinator::pareto_table()),
         "table3" => emit(coordinator::table3()),
         "table4" => emit(coordinator::table45(8)),
         "table5" => emit(coordinator::table45(16)),
@@ -132,24 +251,13 @@ fn main() -> ExitCode {
         "fig7" => emit(coordinator::fig7()),
         "fig8" => emit(coordinator::fig8()),
         "sweep" => {
-            let ms = coordinator::sweep_all();
-            println!("config,bench,variant,cycles,flops_per_cycle,perf_gflops,energy_eff,area_eff,fp_intensity,mem_intensity,verified");
-            for m in ms {
-                println!(
-                    "{},{},{},{},{:.4},{:.4},{:.2},{:.3},{:.3},{:.3},{}",
-                    m.cfg.mnemonic(),
-                    m.bench.name(),
-                    m.variant.label(),
-                    m.cycles,
-                    m.metrics.flops_per_cycle,
-                    m.metrics.perf_gflops,
-                    m.metrics.energy_eff,
-                    m.metrics.area_eff,
-                    m.fp_intensity,
-                    m.mem_intensity,
-                    m.verified
-                );
-            }
+            let pts = coordinator::points(
+                &ClusterConfig::design_space(),
+                &Benchmark::all(),
+                &[Variant::Scalar, Variant::VEC],
+            );
+            let ms = QueryEngine::global().query(&pts);
+            print!("{}", coordinator::measurements_table(&ms).to_csv());
         }
         "validate" => {
             let dir = args.get(1).copied().unwrap_or("artifacts");
@@ -169,4 +277,43 @@ fn main() -> ExitCode {
         }
     }
     ExitCode::SUCCESS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli(args: &[&str]) -> Result<Cli, String> {
+        parse_cli(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn known_flags_are_extracted_in_any_position() {
+        let c = cli(&["table4", "--csv"]).unwrap();
+        assert!(c.csv && !c.no_cache);
+        assert_eq!(c.args, vec!["table4"]);
+
+        let c = cli(&["--no-cache", "query", "all", "FIR", "--csv", "scalar"]).unwrap();
+        assert!(c.csv && c.no_cache);
+        assert_eq!(c.args, vec!["query", "all", "FIR", "scalar"]);
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_not_filtered() {
+        for bad in ["--cvs", "--cache", "-x", "--", "--csv=always"] {
+            let err = cli(&["table4", bad]).unwrap_err();
+            assert!(err.contains(bad), "error must name the offending flag: {err}");
+        }
+        // Positionals are never mistaken for flags.
+        assert!(cli(&["run", "8c4f1p", "MATMUL", "vector"]).is_ok());
+    }
+
+    #[test]
+    fn variant_names() {
+        assert_eq!(parse_variant("scalar"), Some(Variant::Scalar));
+        assert_eq!(parse_variant("vector"), Some(Variant::VEC));
+        assert_eq!(parse_variant("f16"), Some(Variant::VEC));
+        assert_eq!(parse_variant("bf16"), Some(Variant::Vector(FpMode::VecBf16)));
+        assert_eq!(parse_variant("f64"), None);
+    }
 }

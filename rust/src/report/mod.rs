@@ -77,6 +77,16 @@ impl Table {
     }
 }
 
+/// Two-column key → value table, used for cache statistics and query-plan
+/// summaries (`transpfp query` prints one to stderr next to the results).
+pub fn kv_table(title: &str, pairs: &[(&str, String)]) -> Table {
+    let mut t = Table::new(vec![title, "value"]);
+    for (k, v) in pairs {
+        t.row(vec![(*k).to_string(), v.clone()]);
+    }
+    t
+}
+
 /// Format a value with the paper's 2-significant-style precision and mark
 /// the best column with a `[x]` box.
 pub fn fmt_cell(v: f64, best: bool) -> String {
@@ -143,6 +153,13 @@ mod tests {
         assert_eq!(n, vec![0.0, 1.0, 0.5]);
         assert_eq!(argmax(&[1.0, 5.0, 2.0]), 1);
         assert_eq!(minmax_normalize(&[3.3, 3.3]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn kv_table_shape() {
+        let t = kv_table("cache", &[("hits", "3".to_string()), ("misses", "1".to_string())]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "cache,value\nhits,3\nmisses,1\n");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use transpfp::cluster::Cluster;
 use transpfp::config::{ClusterConfig, Corner};
-use transpfp::coordinator::run_one;
+use transpfp::coordinator::{pareto_table_from, points, run_one, table45_with, QueryEngine};
 use transpfp::isa::{regs, ProgramBuilder};
 use transpfp::kernels::{Benchmark, Variant};
 use transpfp::model;
@@ -242,4 +242,41 @@ fn f16_and_bf16_timing_equivalent() {
         let ratio = sf.total_cycles as f64 / sb.total_cycles as f64;
         assert!((ratio - 1.0).abs() < 0.01, "{b:?}: {ratio}");
     }
+}
+
+/// Acceptance gate of the memoizing query engine: regenerating Table 4 on a
+/// warm cache issues **zero** simulator runs and reproduces the cold table
+/// byte-for-byte.
+#[test]
+fn warm_cache_table4_issues_zero_simulator_runs() {
+    let engine = QueryEngine::new();
+    let cold = table45_with(&engine, 8);
+    let after_cold = engine.stats();
+    // 9 eight-core configs × 8 benchmarks × 2 variants, all cold.
+    assert_eq!(after_cold.misses, 144);
+    assert_eq!(after_cold.hits, 0);
+    assert_eq!(after_cold.entries, 144);
+
+    let warm = table45_with(&engine, 8);
+    let after_warm = engine.stats();
+    assert_eq!(after_warm.misses, after_cold.misses, "warm table4 must not simulate");
+    assert_eq!(after_warm.hits, 144);
+    assert_eq!(cold.to_csv(), warm.to_csv(), "warm table must be byte-identical");
+}
+
+/// The Pareto report is deterministic: rebuilt from the same measurements,
+/// and re-resolved through the cache, it renders identically.
+#[test]
+fn pareto_report_is_deterministic() {
+    let engine = QueryEngine::new();
+    let cfgs = [ClusterConfig::new(8, 4, 1), ClusterConfig::new(8, 8, 0)];
+    let pts = points(&cfgs, &[Benchmark::Fir, Benchmark::Matmul], &[Variant::Scalar, Variant::VEC]);
+    let ms = engine.query(&pts);
+    let first = pareto_table_from(&ms).to_csv();
+    assert_eq!(first, pareto_table_from(&ms).to_csv());
+    // Warm re-query: measurements come back bit-identical from the cache,
+    // so the report does too.
+    let warm = engine.query(&pts);
+    assert_eq!(first, pareto_table_from(&warm).to_csv());
+    assert!(first.lines().count() > 1, "frontier is non-empty");
 }
