@@ -1,0 +1,104 @@
+//! `cargo bench --bench tuner` — gates the accuracy-aware autotuner's
+//! cache behaviour (mirrors `query_cache.rs`).
+//!
+//! Tunes all 8 benchmarks on 8c8f1p twice on a private query engine: the
+//! cold pass simulates the full 5-rung ladder (40 points); the warm pass
+//! must resolve entirely from the measurement cache. Gates (process exits
+//! non-zero on violation):
+//!
+//! * the warm tune issues **zero** simulator runs;
+//! * the warm tune resolves ≥ 10× faster than cold;
+//! * warm selections are identical to cold (same rung, bit-equal error);
+//! * with the default 1e-2 budget, at least half of the benchmarks select
+//!   a sub-binary32 variant and every selection is within budget.
+//!
+//! The `tune-*` lines below are grepped into the CI step summary.
+
+use std::process::ExitCode;
+use std::time::Instant;
+
+use transpfp::config::ClusterConfig;
+use transpfp::coordinator::QueryEngine;
+use transpfp::tuner::{tune_with, DEFAULT_BUDGET, LADDER};
+
+const LADDER_POINTS: u64 = 8 * LADDER.len() as u64;
+const MIN_SPEEDUP: f64 = 10.0;
+
+fn main() -> ExitCode {
+    let engine = QueryEngine::new();
+    let cfg = ClusterConfig::new(8, 8, 1);
+
+    let t0 = Instant::now();
+    let cold = tune_with(&engine, &cfg, DEFAULT_BUDGET);
+    let cold_s = t0.elapsed().as_secs_f64();
+    let after_cold = engine.stats();
+
+    let t1 = Instant::now();
+    let warm = tune_with(&engine, &cfg, DEFAULT_BUDGET);
+    let warm_s = t1.elapsed().as_secs_f64();
+    let after_warm = engine.stats();
+
+    let warm_misses = after_warm.misses - after_cold.misses;
+    let warm_hits = after_warm.hits - after_cold.hits;
+    let speedup = cold_s / warm_s.max(1e-9);
+
+    println!("tune-cold-seconds: {cold_s:.3}");
+    println!("tune-warm-seconds: {warm_s:.6}");
+    println!("tune-speedup: {speedup:.0}x");
+    println!("tune-cold-misses: {}", after_cold.misses);
+    println!("tune-warm-misses: {warm_misses}");
+    println!("tune-sub-f32-selections: {}/{}", cold.sub_f32_count(), cold.choices.len());
+    for c in &cold.choices {
+        println!(
+            "tune-choice: {} -> {} (rel_err {:.3e}, eeff x{:.2})",
+            c.bench.name(),
+            c.chosen.variant.label(),
+            c.chosen.err.rel,
+            c.eeff_gain()
+        );
+    }
+
+    let mut ok = true;
+    if after_cold.misses != LADDER_POINTS || after_cold.hits != 0 {
+        eprintln!(
+            "FAIL: cold tune should miss exactly {LADDER_POINTS} points, saw {} misses / {} hits",
+            after_cold.misses, after_cold.hits
+        );
+        ok = false;
+    }
+    if warm_misses != 0 {
+        eprintln!("FAIL: warm-cache tune issued {warm_misses} simulator runs (must be 0)");
+        ok = false;
+    }
+    if warm_hits != LADDER_POINTS {
+        eprintln!("FAIL: warm tune expected {LADDER_POINTS} cache hits, saw {warm_hits}");
+        ok = false;
+    }
+    if speedup < MIN_SPEEDUP {
+        eprintln!("FAIL: warm-vs-cold speedup {speedup:.1}x below the {MIN_SPEEDUP}x gate");
+        ok = false;
+    }
+    for (a, b) in cold.choices.iter().zip(&warm.choices) {
+        if a.rung != b.rung || a.chosen.err.rel.to_bits() != b.chosen.err.rel.to_bits() {
+            eprintln!("FAIL: warm selection for {} diverged from cold", a.bench.name());
+            ok = false;
+        }
+    }
+    if cold.sub_f32_count() * 2 < cold.choices.len() {
+        eprintln!(
+            "FAIL: budget {DEFAULT_BUDGET:e} selected sub-F32 for only {}/{} benchmarks",
+            cold.sub_f32_count(),
+            cold.choices.len()
+        );
+        ok = false;
+    }
+    if !cold.all_within_budget() {
+        eprintln!("FAIL: a selection's measured error exceeds the budget");
+        ok = false;
+    }
+    if !ok {
+        return ExitCode::FAILURE;
+    }
+    println!("tuner: OK (zero warm misses, {speedup:.0}x >= {MIN_SPEEDUP}x)");
+    ExitCode::SUCCESS
+}

@@ -42,12 +42,19 @@ use crate::isa::DecodedProgram;
 use crate::kernels::{Benchmark, OutFmt, Staged, Variant, Workload};
 use crate::model::Metrics;
 use crate::transfp::FpMode;
+use crate::tuner::accuracy::ErrorStats;
 
-/// Version of the timing model baked into every cache key. Bump this
-/// whenever a simulator change can alter cycles or counters (issue rules,
-/// latencies, arbitration, the analytic models' inputs): persisted entries
-/// from older engines then miss and are re-simulated, never served stale.
-pub const ENGINE_VERSION: u32 = 1;
+/// Version of the timing model **and measurement schema** baked into every
+/// cache key. Bump this whenever a simulator change can alter cycles or
+/// counters (issue rules, latencies, arbitration, the analytic models'
+/// inputs) *or* the `Measurement` row gains fields: persisted entries from
+/// older engines then miss and are re-simulated, never served stale.
+///
+/// v2: rows carry the accuracy triple (max-abs, RMS, relative L2 error
+/// against the f64 reference). v1 rows — which predate the accuracy
+/// metrics — are rejected on load by both the version check and the row
+/// width, degrading to a cold start (see EXPERIMENTS.md §Tuner).
+pub const ENGINE_VERSION: u32 = 2;
 
 /// File name of the persisted cache inside the cache directory.
 pub const CACHE_FILE: &str = "measurements.csv";
@@ -142,6 +149,11 @@ pub fn workload_fingerprint(w: &Workload) -> u64 {
     h = fnv_fold(h, [fmt_tag]);
     for e in &w.expected {
         h = fnv_fold(h, e.to_bits().to_le_bytes());
+    }
+    // The f64 reference determines the cached accuracy metrics, so a
+    // reference-only edit must move the address too.
+    for r in &w.reference {
+        h = fnv_fold(h, r.to_bits().to_le_bytes());
     }
     h = fnv_fold(h, w.rtol.to_bits().to_le_bytes());
     fnv_fold(h, w.atol.to_bits().to_le_bytes())
@@ -268,9 +280,12 @@ fn decode_cfg(s: &str) -> Option<ClusterConfig> {
 fn encode_variant(v: Variant) -> &'static str {
     match v {
         Variant::Scalar => "scalar",
+        Variant::Scalar16(FpMode::F16) => "scalarf16",
+        Variant::Scalar16(FpMode::Bf16) => "scalarbf16",
         Variant::Vector(FpMode::VecF16) => "vecf16",
         Variant::Vector(FpMode::VecBf16) => "vecbf16",
-        // Degenerate vector modes no kernel builds; named for totality.
+        // Degenerate modes no kernel builds; named for totality.
+        Variant::Scalar16(_) => "s16.invalid",
         Variant::Vector(FpMode::F32) => "vec.f32",
         Variant::Vector(FpMode::F16) => "vec.f16",
         Variant::Vector(FpMode::Bf16) => "vec.bf16",
@@ -280,6 +295,8 @@ fn encode_variant(v: Variant) -> &'static str {
 fn decode_variant(s: &str) -> Option<Variant> {
     match s {
         "scalar" => Some(Variant::Scalar),
+        "scalarf16" => Some(Variant::Scalar16(FpMode::F16)),
+        "scalarbf16" => Some(Variant::Scalar16(FpMode::Bf16)),
         "vecf16" => Some(Variant::Vector(FpMode::VecF16)),
         "vecbf16" => Some(Variant::Vector(FpMode::VecBf16)),
         "vec.f32" => Some(Variant::Vector(FpMode::F32)),
@@ -338,9 +355,14 @@ fn counters_from_fields(f: &[u64; 18]) -> CoreCounters {
 
 /// One `key → measurement` entry as a CSV row. Floats are serialized as
 /// IEEE-754 bit patterns (hex) so a load reproduces them bit-exactly.
+///
+/// Schema (v2): 13 key/metric fields, the 3-field accuracy triple
+/// (max-abs, RMS, relative L2), then the 18 aggregated counters. v1 rows
+/// lacked the accuracy triple (31 fields total) and are rejected by
+/// [`decode_row`]'s width check on top of the engine-version check.
 fn encode_row(key: &CacheKey, m: &Measurement) -> String {
     let mut row = format!(
-        "{:016x},{},{},{},{},{},{},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x}",
+        "{:016x},{},{},{},{},{},{},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x}",
         key.workload,
         key.engine_version,
         encode_cfg(&key.cfg),
@@ -354,6 +376,9 @@ fn encode_row(key: &CacheKey, m: &Measurement) -> String {
         m.metrics.flops_per_cycle.to_bits(),
         m.fp_intensity.to_bits(),
         m.mem_intensity.to_bits(),
+        m.err.max_abs.to_bits(),
+        m.err.rms.to_bits(),
+        m.err.rel.to_bits(),
     );
     for f in counters_to_fields(&m.agg) {
         row.push(',');
@@ -362,10 +387,11 @@ fn encode_row(key: &CacheKey, m: &Measurement) -> String {
     row
 }
 
-/// Inverse of [`encode_row`]; `None` on any malformed field.
+/// Inverse of [`encode_row`]; `None` on any malformed field or a row of
+/// the wrong width (e.g. a pre-accuracy v1 row).
 fn decode_row(line: &str) -> Option<(CacheKey, Measurement)> {
     let fields: Vec<&str> = line.split(',').collect();
-    if fields.len() != 13 + 18 {
+    if fields.len() != 16 + 18 {
         return None;
     }
     let u64hex = |s: &str| u64::from_str_radix(s, 16).ok();
@@ -391,8 +417,13 @@ fn decode_row(line: &str) -> Option<(CacheKey, Measurement)> {
     };
     let fp_intensity = f64bits(fields[11])?;
     let mem_intensity = f64bits(fields[12])?;
+    let err = ErrorStats {
+        max_abs: f64bits(fields[13])?,
+        rms: f64bits(fields[14])?,
+        rel: f64bits(fields[15])?,
+    };
     let mut counters = [0u64; 18];
-    for (slot, s) in counters.iter_mut().zip(&fields[13..]) {
+    for (slot, s) in counters.iter_mut().zip(&fields[16..]) {
         *slot = s.parse().ok()?;
     }
     let m = Measurement {
@@ -405,6 +436,7 @@ fn decode_row(line: &str) -> Option<(CacheKey, Measurement)> {
         fp_intensity,
         mem_intensity,
         verified,
+        err,
     };
     Some((key, m))
 }
@@ -431,6 +463,7 @@ mod tests {
             fp_intensity: 0.32,
             mem_intensity: 0.48,
             verified: true,
+            err: ErrorStats { max_abs: 1.5e-3, rms: 4.0e-4, rel: 2.0e-4 },
         }
     }
 
@@ -542,9 +575,85 @@ mod tests {
         assert_eq!(got.metrics.perf_gflops.to_bits(), m.metrics.perf_gflops.to_bits());
         assert_eq!(got.metrics.energy_eff.to_bits(), m.metrics.energy_eff.to_bits());
         assert_eq!(got.fp_intensity.to_bits(), m.fp_intensity.to_bits());
+        assert_eq!(got.err.max_abs.to_bits(), m.err.max_abs.to_bits());
+        assert_eq!(got.err.rms.to_bits(), m.err.rms.to_bits());
+        assert_eq!(got.err.rel.to_bits(), m.err.rel.to_bits());
         assert_eq!(got.agg, m.agg);
         let gb = loaded.lookup(&bkey).expect("blocked-map entry");
         assert!(gb.cfg.blocked_fpu_map);
+    }
+
+    /// Regression fixture for the schema migration: a literal cache file as
+    /// PR 2 (ENGINE_VERSION 1, 31-field rows without the accuracy triple)
+    /// wrote it. Under the widened v2 schema such rows must be skipped —
+    /// doubly rejected by row width and engine version — so the load
+    /// degrades to a cold start instead of erroring or serving
+    /// accuracy-less measurements.
+    #[test]
+    fn pr2_era_rows_degrade_to_cold_start() {
+        // 13 key/metric fields + 18 counters, engine_version=1, exactly the
+        // v1 layout (hex f64 bit patterns for the six float fields).
+        let v1_row = format!(
+            "00000000deadbeef,1,8c4f1p,FIR,scalar,true,12345,\
+             {:016x},{:016x},{:016x},{:016x},{:016x},{:016x},\
+             12345,12000,999,500,300,40,200,4096,1,2,3,4,5,6,7,8,9,10",
+            5.92f64.to_bits(),
+            167.0f64.to_bits(),
+            3.5f64.to_bits(),
+            16.0f64.to_bits(),
+            0.32f64.to_bits(),
+            0.48f64.to_bits(),
+        );
+        // Sanity: the fixture really is a 31-field row with a parseable key
+        // prefix — i.e. it *would* have decoded under the v1 schema.
+        assert_eq!(v1_row.split(',').count(), 31);
+        assert!(decode_cfg("8c4f1p").is_some());
+        assert!(decode_variant("scalar").is_some());
+
+        let path = tmp_path("cache-pr2-era.csv");
+        std::fs::write(&path, format!("transpfp-cache-v1\n{v1_row}\n")).unwrap();
+        let cache = MeasurementCache::new();
+        assert_eq!(cache.load_csv(&path).unwrap(), 0, "v1 rows must be dropped, not served");
+        assert!(cache.is_empty());
+        std::fs::remove_file(&path).ok();
+
+        // And even a v2-width row stamped with the old engine version is
+        // rejected by the version check alone.
+        let stale = CacheKey {
+            workload: 0x1234,
+            cfg: ClusterConfig::new(8, 4, 1),
+            bench: Benchmark::Fir,
+            variant: Variant::Scalar,
+            engine_version: 1,
+        };
+        let path2 = tmp_path("cache-v1-version.csv");
+        let row = encode_row(&stale, &sample_measurement(&stale.cfg));
+        std::fs::write(&path2, format!("transpfp-cache-v1\n{row}\n")).unwrap();
+        assert_eq!(cache.load_csv(&path2).unwrap(), 0);
+        std::fs::remove_file(&path2).ok();
+    }
+
+    /// Scalar-16 variants have their own cache addresses and row encodings
+    /// — they must never collide with `scalar` or the vector formats.
+    #[test]
+    fn scalar16_variants_are_distinct_cache_citizens() {
+        let cfg = ClusterConfig::new(8, 2, 0);
+        let keys: Vec<CacheKey> = Variant::all()
+            .into_iter()
+            .map(|v| {
+                let w = Benchmark::Fir.build(v, &cfg);
+                CacheKey::new(&cfg, Benchmark::Fir, v, &w)
+            })
+            .collect();
+        for (i, a) in keys.iter().enumerate() {
+            for b in &keys[i + 1..] {
+                assert_ne!(a, b);
+                assert_ne!(a.workload, b.workload, "workload fingerprints must differ");
+            }
+        }
+        for v in Variant::all() {
+            assert_eq!(decode_variant(encode_variant(v)), Some(v), "{v:?} must round-trip");
+        }
     }
 
     #[test]

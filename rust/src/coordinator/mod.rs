@@ -16,7 +16,10 @@ pub mod sweep;
 pub mod tables;
 
 pub use cache::{workload_fingerprint, CacheKey, CacheStats, MeasurementCache, ENGINE_VERSION};
-pub use pareto::{pareto_front, pareto_table, pareto_table_from, pareto_table_with};
+pub use pareto::{
+    accuracy_pareto_front, accuracy_pareto_table, accuracy_pareto_table_from,
+    accuracy_pareto_table_with, pareto_front, pareto_table, pareto_table_from, pareto_table_with,
+};
 pub use query::{points, QueryEngine, QueryPlan, QueryPoint};
 pub use sweep::{run_one, run_parallel, run_workload, sweep, sweep_all, Measurement};
 pub use tables::{

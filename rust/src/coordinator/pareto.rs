@@ -1,4 +1,5 @@
-//! Pareto-front extraction over the paper's three efficiency metrics.
+//! Pareto-front extraction over the paper's three efficiency metrics, plus
+//! the accuracy-extended frontier the autotuner surfaces.
 //!
 //! Tables 4/5 box the best configuration per row and per metric; the
 //! frontier view asks the sharper question the Dustin-style comparisons
@@ -8,12 +9,19 @@
 //! set and the report order is fully specified, so — with the simulator
 //! deterministic and measurements cache-stable bit-for-bit — `transpfp
 //! pareto` output is identical across runs, warm or cold.
+//!
+//! The **accuracy-extended** frontier (`transpfp pareto --acc`) swaps area
+//! efficiency for numerical error and spans the full five-rung precision
+//! ladder: a point survives if no other point is at least as good on
+//! (error↓, Gflop/s↑, Gflop/s/W↑) and strictly better on one — the
+//! error/efficiency trade-off curve of the transprecision claim (§2).
 
 use super::query::{points, QueryEngine};
 use super::sweep::Measurement;
 use crate::config::ClusterConfig;
 use crate::kernels::{Benchmark, Variant};
 use crate::report::Table;
+use crate::tuner::ladder::LADDER;
 
 /// The maximized objective triple of a measurement:
 /// (perf Gflop/s @ST, energy eff Gflop/s/W @NT, area eff Gflop/s/mm² @ST).
@@ -97,6 +105,84 @@ pub fn pareto_table() -> Table {
     pareto_table_with(QueryEngine::global())
 }
 
+// ------------------------------------------- accuracy-extended frontier
+
+/// The accuracy-extended objective triple, all maximized: (−relative L2
+/// error, perf Gflop/s @ST, energy eff Gflop/s/W @NT). Negating the error
+/// lets the standard max-dominance test drive "lower error is better".
+pub fn acc_objectives(m: &Measurement) -> [f64; 3] {
+    [-m.err.rel, m.metrics.perf_gflops, m.metrics.energy_eff]
+}
+
+/// Non-dominated measurements over (error↓, perf↑, e.eff↑), sorted for
+/// reporting: lowest error first, ties by descending performance, then by
+/// (config, bench, variant) so the order is total and reproducible.
+///
+/// Unverified measurements are excluded up front — a run that diverged
+/// from its bit-exact host mirror is known-untrustworthy, so its error
+/// figure must neither appear on nor dominate the frontier (the same
+/// admissibility rule the tuner applies).
+pub fn accuracy_pareto_front(ms: &[Measurement]) -> Vec<Measurement> {
+    let ms: Vec<&Measurement> = ms.iter().filter(|m| m.verified).collect();
+    let pts: Vec<[f64; 3]> = ms.iter().map(|m| acc_objectives(m)).collect();
+    let mut front: Vec<Measurement> =
+        pareto_front_indices(&pts).into_iter().map(|i| ms[i].clone()).collect();
+    front.sort_by(|a, b| {
+        a.err
+            .rel
+            .partial_cmp(&b.err.rel)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| {
+                b.metrics
+                    .perf_gflops
+                    .partial_cmp(&a.metrics.perf_gflops)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .then_with(|| a.cfg.mnemonic().cmp(&b.cfg.mnemonic()))
+            .then_with(|| a.bench.name().cmp(b.bench.name()))
+            .then_with(|| a.variant.label().cmp(b.variant.label()))
+    });
+    front
+}
+
+/// Render the accuracy-extended frontier of `ms` as a report table.
+pub fn accuracy_pareto_table_from(ms: &[Measurement]) -> Table {
+    let mut t = Table::new(vec![
+        "config",
+        "bench",
+        "variant",
+        "rel_err",
+        "perf (Gflop/s)",
+        "e.eff (Gflop/s/W)",
+        "cycles",
+    ]);
+    for m in accuracy_pareto_front(ms) {
+        t.row(vec![
+            m.cfg.mnemonic(),
+            m.bench.name().to_string(),
+            m.variant.label().to_string(),
+            format!("{:.3e}", m.err.rel),
+            format!("{:.3}", m.metrics.perf_gflops),
+            format!("{:.3}", m.metrics.energy_eff),
+            m.cycles.to_string(),
+        ]);
+    }
+    t
+}
+
+/// `transpfp pareto --acc`: the accuracy-extended frontier of the full
+/// design space crossed with the five-rung precision ladder, resolved
+/// through `engine`'s measurement cache.
+pub fn accuracy_pareto_table_with(engine: &QueryEngine) -> Table {
+    let pts = points(&ClusterConfig::design_space(), &Benchmark::all(), &LADDER);
+    accuracy_pareto_table_from(&engine.query(&pts))
+}
+
+/// [`accuracy_pareto_table_with`] on the process-wide engine.
+pub fn accuracy_pareto_table() -> Table {
+    accuracy_pareto_table_with(QueryEngine::global())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,6 +191,11 @@ mod tests {
 
     /// Synthetic measurement with the given objective triple.
     fn mk(perf: f64, eeff: f64, aeff: f64) -> Measurement {
+        mk_err(perf, eeff, aeff, 0.0)
+    }
+
+    /// [`mk`] with an explicit relative error (accuracy-frontier tests).
+    fn mk_err(perf: f64, eeff: f64, aeff: f64, rel: f64) -> Measurement {
         Measurement {
             cfg: ClusterConfig::new(8, 4, 1),
             bench: Benchmark::Fir,
@@ -120,6 +211,7 @@ mod tests {
             fp_intensity: 0.3,
             mem_intensity: 0.5,
             verified: true,
+            err: crate::tuner::accuracy::ErrorStats { max_abs: rel, rms: rel, rel },
         }
     }
 
@@ -166,6 +258,37 @@ mod tests {
         // Same perf and energy, one strictly better on area: dominated.
         let pts = [[5.0, 3.0, 1.0], [5.0, 3.0, 2.0]];
         assert_eq!(pareto_front_indices(&pts), vec![1]);
+    }
+
+    #[test]
+    fn accuracy_frontier_trades_error_for_efficiency() {
+        // (rel_err, perf, eeff): the exact-but-slow point, the cheap-but-
+        // noisy point, and a mid trade-off all survive; a point that is
+        // both noisier and slower than another is dropped.
+        let ms = [
+            mk_err(1.0, 50.0, 1.0, 1e-7),  // precise baseline
+            mk_err(2.0, 80.0, 1.0, 1e-3),  // mid rung
+            mk_err(3.0, 120.0, 1.0, 5e-3), // cheap rung
+            mk_err(1.5, 60.0, 1.0, 2e-2),  // dominated: worse error, slower than the cheap rung
+        ];
+        let front = accuracy_pareto_front(&ms);
+        assert_eq!(front.len(), 3);
+        // Sorted by ascending error.
+        assert!(front.windows(2).all(|w| w[0].err.rel <= w[1].err.rel));
+        assert!(front.iter().all(|m| m.err.rel < 2e-2));
+        // Rendered table is deterministic.
+        let a = accuracy_pareto_table_from(&ms).to_csv();
+        assert_eq!(a, accuracy_pareto_table_from(&ms).to_csv());
+        assert!(a.starts_with("config,bench,variant,rel_err,"));
+        // An unverified point can neither join nor dominate the frontier,
+        // no matter how good its figures claim to be.
+        let mut broken = mk_err(100.0, 999.0, 1.0, 0.0);
+        broken.verified = false;
+        let mut with_broken = ms.to_vec();
+        with_broken.push(broken);
+        let front2 = accuracy_pareto_front(&with_broken);
+        assert_eq!(front2.len(), 3, "unverified point must be excluded");
+        assert!(front2.iter().all(|m| m.verified));
     }
 
     #[test]

@@ -302,6 +302,7 @@ mod tests {
             assert_eq!(a.cycles, b.cycles);
             assert_eq!(a.metrics.perf_gflops.to_bits(), b.metrics.perf_gflops.to_bits());
             assert_eq!(a.metrics.energy_eff.to_bits(), b.metrics.energy_eff.to_bits());
+            assert_eq!(a.err.rel.to_bits(), b.err.rel.to_bits());
             assert_eq!(a.agg, b.agg);
         }
     }

@@ -11,6 +11,7 @@ use crate::cluster::counters::CoreCounters;
 use crate::config::ClusterConfig;
 use crate::kernels::{Benchmark, Variant, Workload};
 use crate::model::{self, Metrics};
+use crate::tuner::accuracy::{error_stats, ErrorStats};
 
 /// One point of the evaluation space.
 #[derive(Debug, Clone)]
@@ -31,6 +32,9 @@ pub struct Measurement {
     pub mem_intensity: f64,
     /// Numeric verification against the host golden passed.
     pub verified: bool,
+    /// Quantitative error against the workload's binary64 reference — the
+    /// signal the tuner and the accuracy-extended Pareto frontier consume.
+    pub err: ErrorStats,
 }
 
 /// Run one benchmark variant on one configuration.
@@ -50,6 +54,7 @@ pub fn run_workload(
 ) -> Measurement {
     let (stats, out) = w.run(cfg);
     let verified = w.verify(&out).is_ok();
+    let err = error_stats(&out, &w.reference);
     let agg = stats.aggregate();
     Measurement {
         cfg: *cfg,
@@ -61,6 +66,7 @@ pub fn run_workload(
         mem_intensity: agg.mem_intensity(),
         agg,
         verified,
+        err,
     }
 }
 
@@ -150,5 +156,7 @@ mod tests {
         assert_eq!(ms[1].bench, Benchmark::Fir);
         assert!(ms.iter().all(|m| m.verified));
         assert!(ms.iter().all(|m| m.metrics.perf_gflops > 0.0));
+        // binary32 runs sit within f32 rounding noise of the f64 reference.
+        assert!(ms.iter().all(|m| m.err.rel.is_finite() && m.err.rel < 1e-4), "f32 error too big");
     }
 }

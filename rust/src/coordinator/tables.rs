@@ -375,6 +375,7 @@ pub fn measurements_table(ms: &[Measurement]) -> Table {
         "fp_intensity",
         "mem_intensity",
         "verified",
+        "rel_err",
     ]);
     for m in ms {
         t.row(vec![
@@ -389,6 +390,7 @@ pub fn measurements_table(ms: &[Measurement]) -> Table {
             format!("{:.3}", m.fp_intensity),
             format!("{:.3}", m.mem_intensity),
             m.verified.to_string(),
+            format!("{:.3e}", m.err.rel),
         ]);
     }
     t

@@ -187,6 +187,17 @@ impl ProgramBuilder {
         self.push(Insn::Load { rd, base, offset, post_inc: 0, size: MemSize::Half })
     }
 
+    /// `lhu rd, offset(base)` (zero-extending halfword load — the natural
+    /// load for 16-bit FP bit patterns, which live in lane 0).
+    pub fn lhu(&mut self, rd: Reg, base: Reg, offset: i32) -> &mut Self {
+        self.push(Insn::Load { rd, base, offset, post_inc: 0, size: MemSize::HalfU })
+    }
+
+    /// Xpulp post-increment zero-extending halfword load: `p.lhu rd, inc(base!)`
+    pub fn lhu_pi(&mut self, rd: Reg, base: Reg, inc: i32) -> &mut Self {
+        self.push(Insn::Load { rd, base, offset: 0, post_inc: inc, size: MemSize::HalfU })
+    }
+
     /// `sw rs, offset(base)`
     pub fn sw(&mut self, rs: Reg, base: Reg, offset: i32) -> &mut Self {
         self.push(Insn::Store { rs, base, offset, post_inc: 0, size: MemSize::Word })
@@ -200,6 +211,11 @@ impl ProgramBuilder {
     /// `sh rs, offset(base)`
     pub fn sh(&mut self, rs: Reg, base: Reg, offset: i32) -> &mut Self {
         self.push(Insn::Store { rs, base, offset, post_inc: 0, size: MemSize::Half })
+    }
+
+    /// Xpulp post-increment halfword store.
+    pub fn sh_pi(&mut self, rs: Reg, base: Reg, inc: i32) -> &mut Self {
+        self.push(Insn::Store { rs, base, offset: 0, post_inc: inc, size: MemSize::Half })
     }
 
     // ---------------------------------------------------------- control

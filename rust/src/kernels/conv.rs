@@ -11,11 +11,11 @@
 //!   misaligned pairs are built with `pv.shuffle`/`pv.pack`; expanding dot
 //!   products accumulate two neighbouring outputs in binary32.
 
-use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
 use crate::isa::{regs, Operand, ProgramBuilder};
 use crate::testutil::Rng;
-use crate::transfp::{cast, scalar, simd, FpMode, FpSpec};
+use crate::transfp::{cast, scalar, simd, FpSpec};
 
 /// Lane-0 widening FMA mirror (`fmac.s.h`): acc32 += a.lane0 · b.lane0.
 fn scalar_fma_widen(spec: &FpSpec, a: u32, b: u32, acc: u32) -> u32 {
@@ -25,10 +25,31 @@ fn scalar_fma_widen(spec: &FpSpec, a: u32, b: u32, acc: u32) -> u32 {
 /// Build the CONV workload: 3×3 kernel over a `w`×`h` image (valid region).
 pub fn build(variant: Variant, cfg: &ClusterConfig, w: usize, h: usize) -> Workload {
     assert!(w % 2 == 0 && w >= 8 && h >= 4);
-    match variant {
-        Variant::Scalar => build_scalar(cfg, w, h),
+    let mut wl = match variant {
+        Variant::Scalar | Variant::Scalar16(_) => build_scalar(SElem::of(variant), cfg, w, h),
         Variant::Vector(_) => build_vector(variant, cfg, w, h),
+    };
+    wl.reference = reference(w, h);
+    wl
+}
+
+/// Binary64 ground truth from the un-quantized f32 inputs.
+fn reference(w: usize, h: usize) -> Vec<f64> {
+    let (ow, oh) = (w - 2, h - 2);
+    let (img, k) = gen_inputs(w, h);
+    let mut out = vec![0.0f64; ow * oh];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc = 0.0f64;
+            for r in 0..3 {
+                for c in 0..3 {
+                    acc += k[r * 3 + c] as f64 * img[(oy + r) * w + ox + c] as f64;
+                }
+            }
+            out[oy * ow + ox] = acc;
+        }
     }
+    out
 }
 
 fn gen_inputs(w: usize, h: usize) -> (Vec<f32>, Vec<f32>) {
@@ -39,29 +60,32 @@ fn gen_inputs(w: usize, h: usize) -> (Vec<f32>, Vec<f32>) {
     (img, k)
 }
 
-fn build_scalar(cfg: &ClusterConfig, w: usize, h: usize) -> Workload {
+fn build_scalar(elem: SElem, cfg: &ClusterConfig, w: usize, h: usize) -> Workload {
     let (ow, oh) = (w - 2, h - 2);
     let mut al = Alloc::new(cfg);
-    let img_base = al.f32s(w * h);
-    let k_base = al.f32s(9);
-    let out_base = al.f32s(ow * oh);
+    let img_base = elem.alloc(&mut al, w * h);
+    let k_base = elem.alloc(&mut al, 9);
+    let out_base = elem.alloc(&mut al, ow * oh);
     let (img, k) = gen_inputs(w, h);
 
-    // Host mirror: rows outer, cols inner, f32 FMA in (r, c) order.
+    // Host mirror: rows outer, cols inner, element-format FMA in (r, c)
+    // order on register cells.
+    let imq = elem.quantize(&img);
+    let kq = elem.quantize(&k);
     let mut expected = vec![0.0f64; ow * oh];
     for oy in 0..oh {
         for ox in 0..ow {
-            let mut acc = 0.0f32;
+            let mut acc = 0u32;
             for r in 0..3 {
                 for c in 0..3 {
-                    acc = k[r * 3 + c].mul_add(img[(oy + r) * w + ox + c], acc);
+                    acc = elem.fma(kq[r * 3 + c], imq[(oy + r) * w + ox + c], acc);
                 }
             }
-            expected[oy * ow + ox] = acc as f64;
+            expected[oy * ow + ox] = elem.to_f64(acc);
         }
     }
 
-    let mut p = ProgramBuilder::new("conv-scalar");
+    let mut p = ProgramBuilder::new(format!("conv-{}", elem.suffix()));
     let (id, nc) = (regs::CORE_ID, regs::NCORES);
     p.li(24, oh as u32); // output rows
     p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
@@ -72,25 +96,25 @@ fn build_scalar(cfg: &ClusterConfig, w: usize, h: usize) -> Workload {
     p.bge(13, 14, "done");
     p.label("row");
     {
-        // out_ptr = out + 4*ow*oy ; in row base = img + 4*w*oy
-        p.mul(25, 13, 31).slli(25, 25, 2).add(23, 25, 17);
-        p.mul(25, 13, 30).slli(25, 25, 2).add(22, 25, 15);
+        // out_ptr = out + size*ow*oy ; in row base = img + size*w*oy
+        p.mul(25, 13, 31).slli(25, 25, elem.shift()).add(23, 25, 17);
+        p.mul(25, 13, 30).slli(25, 25, elem.shift()).add(22, 25, 15);
         p.mv(20, 22); // walking pixel ptr (top-left of the window)
         p.li(18, 0); // ox
         p.label("col");
         {
             // 3×3 fully unrolled with static offsets (the natural compiler
-            // lowering for a constant-size window) — pure lw/lw/fmac mix.
+            // lowering for a constant-size window) — pure load/load/fmac mix.
             p.li(28, 0); // acc
             for r in 0..3i32 {
                 for c in 0..3i32 {
-                    p.lw(26, 20, (r * w as i32 + c) * 4);
-                    p.lw(27, 16, (r * 3 + c) * 4);
-                    p.fmac(FpMode::F32, 28, 27, 26);
+                    elem.load(&mut p, 26, 20, r * w as i32 + c);
+                    elem.load(&mut p, 27, 16, r * 3 + c);
+                    p.fmac(elem.mode, 28, 27, 26);
                 }
             }
-            p.addi(20, 20, 4); // slide the window
-            p.sw_pi(28, 23, 4);
+            p.addi(20, 20, elem.size()); // slide the window
+            elem.store_pi(&mut p, 28, 23, 1);
             p.addi(18, 18, 1);
             p.blt(18, 31, "col");
         }
@@ -102,15 +126,16 @@ fn build_scalar(cfg: &ClusterConfig, w: usize, h: usize) -> Workload {
     p.end();
 
     Workload {
-        name: "CONV-scalar".into(),
+        name: format!("CONV-{}", elem.suffix()),
         program: p.build(),
-        stage: vec![(img_base, Staged::F32(img)), (k_base, Staged::F32(k))],
+        stage: vec![(img_base, elem.stage(&img)), (k_base, elem.stage(&k))],
         out_addr: out_base,
         out_len: ow * oh,
-        out_fmt: OutFmt::F32,
+        out_fmt: elem.out_fmt(),
         expected,
         rtol: 0.0,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -229,6 +254,7 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, w: usize, h: usize) -> Wo
         expected,
         rtol: 1e-9,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -242,6 +268,16 @@ mod tests {
         let w = build(Variant::Scalar, &cfg, 16, 8);
         let (_, out) = w.run(&cfg);
         w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn scalar16_exact_both_formats() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
+            let w = build(v, &cfg, 16, 8);
+            let (_, out) = w.run(&cfg);
+            w.verify(&out).unwrap();
+        }
     }
 
     #[test]

@@ -15,11 +15,11 @@
 //!
 //! Output layout: `[approx_L | detail_L | detail_{L-1} | … | detail_1]`.
 
-use super::{quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use super::{quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
 use crate::isa::{regs, Operand, ProgramBuilder};
 use crate::testutil::Rng;
-use crate::transfp::{simd, FpMode, FpSpec};
+use crate::transfp::{simd, FpSpec};
 
 const TAPS: usize = 4;
 
@@ -33,10 +33,40 @@ fn filters() -> ([f32; 4], [f32; 4]) {
 /// Build the DWT workload: `n`-sample signal, `levels` decomposition levels.
 pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize, levels: usize) -> Workload {
     assert!(n % (1 << levels) == 0 && levels >= 1);
-    match variant {
-        Variant::Scalar => build_scalar(cfg, n, levels),
+    let mut w = match variant {
+        Variant::Scalar | Variant::Scalar16(_) => {
+            build_scalar(SElem::of(variant), cfg, n, levels)
+        }
         Variant::Vector(_) => build_vector(variant, cfg, n, levels),
+    };
+    w.reference = reference(n, levels);
+    w
+}
+
+/// Binary64 ground truth (zero-extended edges, same output layout).
+fn reference(n: usize, levels: usize) -> Vec<f64> {
+    let x = gen_signal(n);
+    let (h, g) = filters();
+    let mut out = vec![0.0f64; n];
+    let mut cur: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    for l in 1..=levels {
+        let half = cur.len() / 2;
+        let get = |i: usize| if i < cur.len() { cur[i] } else { 0.0 };
+        let mut approx = vec![0.0f64; half];
+        for i in 0..half {
+            let (mut lo, mut hi) = (0.0f64, 0.0f64);
+            for k in 0..TAPS {
+                let xv = get(2 * i + k);
+                lo += h[k] as f64 * xv;
+                hi += g[k] as f64 * xv;
+            }
+            approx[i] = lo;
+            out[(n >> l) + i] = hi;
+        }
+        cur = approx;
     }
+    out[..cur.len()].copy_from_slice(&cur);
+    out
 }
 
 fn gen_signal(n: usize) -> Vec<f32> {
@@ -56,46 +86,50 @@ pub fn detail_offsets(n: usize, levels: usize) -> (Vec<usize>, usize) {
     (offs, n >> levels)
 }
 
-fn build_scalar(cfg: &ClusterConfig, n: usize, levels: usize) -> Workload {
+fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize, levels: usize) -> Workload {
     let mut al = Alloc::new(cfg);
     // Ping-pong work buffers (padded by TAPS for the zero-extended edge),
-    // plus the result buffer.
-    let w0_base = al.f32s(n + TAPS);
-    let w1_base = al.f32s(n + TAPS);
-    let r_base = al.f32s(n);
+    // the result buffer, then the h/g filter tables.
+    let w0_base = elem.alloc(&mut al, n + TAPS);
+    let w1_base = elem.alloc(&mut al, n + TAPS);
+    let r_base = elem.alloc(&mut al, n);
+    let hg_base = elem.alloc(&mut al, 2 * TAPS);
     let x = gen_signal(n);
     let (h, g) = filters();
 
-    // Host mirror (f32 FMA, tap order, zero-extended edges).
+    // Host mirror (element-format FMA on register cells, tap order,
+    // zero-extended edges).
+    let hq = elem.quantize(&h);
+    let gq = elem.quantize(&g);
     let mut expected = vec![0.0f64; n];
     {
-        let mut cur: Vec<f32> = x.clone();
+        let mut cur: Vec<u32> = elem.quantize(&x);
         for l in 1..=levels {
             let half = cur.len() / 2;
-            let get = |i: usize| if i < cur.len() { cur[i] } else { 0.0 };
-            let mut approx = vec![0.0f32; half];
+            let get = |i: usize| if i < cur.len() { cur[i] } else { 0 };
+            let mut approx = vec![0u32; half];
             for i in 0..half {
-                let (mut lo, mut hi) = (0.0f32, 0.0f32);
+                let (mut lo, mut hi) = (0u32, 0u32);
                 for k in 0..TAPS {
                     let xv = get(2 * i + k);
-                    lo = h[k].mul_add(xv, lo);
-                    hi = g[k].mul_add(xv, hi);
+                    lo = elem.fma(hq[k], xv, lo);
+                    hi = elem.fma(gq[k], xv, hi);
                 }
                 approx[i] = lo;
-                expected[(n >> l) + i] = hi as f64;
+                expected[(n >> l) + i] = elem.to_f64(hi);
             }
             cur = approx;
         }
         for (i, a) in cur.iter().enumerate() {
-            expected[i] = *a as f64;
+            expected[i] = elem.to_f64(*a);
         }
     }
 
     let (id, nc) = (regs::CORE_ID, regs::NCORES);
-    let mut p = ProgramBuilder::new("dwt-scalar");
+    let mut p = ProgramBuilder::new(format!("dwt-{}", elem.suffix()));
     p.li(15, w0_base).li(16, w1_base).li(17, r_base);
-    p.li(4, h_base_addr(w0_base, n)); // h table (appended after buffers; see staging)
-    p.li(9, h_base_addr(w0_base, n) + (TAPS as u32) * 4); // g table
+    p.li(4, hg_base); // h table
+    p.li(9, hg_base + (TAPS as i32 * elem.size()) as u32); // g table
     p.li(24, (n / 2) as u32); // outputs at current level
     for l in 1..=levels {
         // Split this level's outputs across cores.
@@ -105,10 +139,10 @@ fn build_scalar(cfg: &ClusterConfig, n: usize, levels: usize) -> Workload {
         let lvl = format!("lvl{l}_");
         p.bge(13, 14, &format!("{lvl}skip"));
         // Walking pointers: x (2 samples per output), approx out, detail out.
-        p.slli(20, 13, 3).add(20, 20, 15); // x_ptr = in + 8·start
-        p.slli(25, 13, 2);
-        p.add(29, 25, 16); // approx ptr = out + 4·start
-        p.add(23, 25, 17).addi(23, 23, ((n >> l) * 4) as i32); // detail ptr
+        p.slli(20, 13, elem.shift() + 1).add(20, 20, 15); // x_ptr = in + 2·size·start
+        p.slli(25, 13, elem.shift());
+        p.add(29, 25, 16); // approx ptr = out + size·start
+        p.add(23, 25, 17).addi(23, 23, (n >> l) as i32 * elem.size()); // detail ptr
         p.label(&format!("{lvl}out"));
         {
             // Taps fully unrolled with static offsets (the compiler's
@@ -116,15 +150,15 @@ fn build_scalar(cfg: &ClusterConfig, n: usize, levels: usize) -> Workload {
             p.li(27, 0); // lo acc
             p.li(28, 0); // hi acc
             for k in 0..TAPS as i32 {
-                p.lw(26, 20, 4 * k);
-                p.lw(5, 4, 4 * k);
-                p.lw(6, 9, 4 * k);
-                p.fmac(FpMode::F32, 27, 5, 26);
-                p.fmac(FpMode::F32, 28, 6, 26);
+                elem.load(&mut p, 26, 20, k);
+                elem.load(&mut p, 5, 4, k);
+                elem.load(&mut p, 6, 9, k);
+                p.fmac(elem.mode, 27, 5, 26);
+                p.fmac(elem.mode, 28, 6, 26);
             }
-            p.addi(20, 20, 8);
-            p.sw_pi(27, 29, 4);
-            p.sw_pi(28, 23, 4);
+            p.addi(20, 20, 2 * elem.size());
+            elem.store_pi(&mut p, 27, 29, 1);
+            elem.store_pi(&mut p, 28, 23, 1);
             p.addi(13, 13, 1);
             p.blt(13, 14, &format!("{lvl}out"));
         }
@@ -135,7 +169,7 @@ fn build_scalar(cfg: &ClusterConfig, n: usize, levels: usize) -> Workload {
         p.bne(id, regs::ZERO, &format!("{lvl}nopad"));
         let half = n >> l;
         for k in 0..TAPS {
-            p.sw(regs::ZERO, 16, (4 * (half + k)) as i32);
+            elem.store(&mut p, regs::ZERO, 16, (half + k) as i32);
         }
         p.label(&format!("{lvl}nopad"));
         p.barrier(); // level boundary
@@ -151,11 +185,11 @@ fn build_scalar(cfg: &ClusterConfig, n: usize, levels: usize) -> Workload {
     p.add(14, 13, 12).imin(14, 14, 24);
     p.bge(13, 14, "cp_skip");
     p.label("cp");
-    p.slli(25, 13, 2);
+    p.slli(25, 13, elem.shift());
     p.add(20, 25, 15);
-    p.lw(26, 20, 0);
+    elem.load(&mut p, 26, 20, 0);
     p.add(21, 25, 17);
-    p.sw(26, 21, 0);
+    elem.store(&mut p, 26, 21, 0);
     p.addi(13, 13, 1);
     p.blt(13, 14, "cp");
     p.label("cp_skip");
@@ -168,25 +202,21 @@ fn build_scalar(cfg: &ClusterConfig, n: usize, levels: usize) -> Workload {
     let mut coefs = h.to_vec();
     coefs.extend(g);
     Workload {
-        name: "DWT-scalar".into(),
+        name: format!("DWT-{}", elem.suffix()),
         program: p.build(),
         stage: vec![
-            (w0_base, Staged::F32(stage_sig)),
-            (w1_base, Staged::F32(vec![0.0; n + TAPS])),
-            (h_base_addr(w0_base, n), Staged::F32(coefs)),
+            (w0_base, elem.stage(&stage_sig)),
+            (w1_base, elem.stage_zeros(n + TAPS)),
+            (hg_base, elem.stage(&coefs)),
         ],
         out_addr: r_base,
         out_len: n,
-        out_fmt: OutFmt::F32,
+        out_fmt: elem.out_fmt(),
         expected,
         rtol: 0.0,
         atol: 1e-12,
+        reference: Vec::new(),
     }
-}
-
-/// The filter tables live after the three n-sized buffers.
-fn h_base_addr(w0_base: u32, n: usize) -> u32 {
-    w0_base + ((n + TAPS) * 2 * 4 + n * 4) as u32
 }
 
 fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize, levels: usize) -> Workload {
@@ -318,6 +348,7 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize, levels: usize) 
         expected,
         rtol: 1e-9,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -341,6 +372,18 @@ mod tests {
         let w = build(Variant::VEC, &cfg, 64, 3);
         let (_, out) = w.run(&cfg);
         w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn scalar16_exact_both_formats() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
+            let w = build(v, &cfg, 64, 3);
+            let (_, out) = w.run(&cfg);
+            w.verify(&out).unwrap();
+            let (_, o1) = w.run_on(&cfg, 1);
+            w.verify(&o1).unwrap();
+        }
     }
 
     #[test]

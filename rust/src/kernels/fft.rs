@@ -13,19 +13,51 @@
 //!   10-op shuffle + `vfmul`/`vfadd`/`vfsub` sequence of §5.3.1 — which is
 //!   exactly why the paper caps FFT's vectorization gain at ~1.43×.
 
-use super::{quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use super::{quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
 use crate::isa::{regs, Operand, ProgramBuilder};
 use crate::testutil::Rng;
-use crate::transfp::{simd, FpMode, FpSpec};
+use crate::transfp::{simd, FpSpec};
 
 /// Build the FFT workload over `n` complex points (power of two).
 pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
     assert!(n.is_power_of_two() && n >= 8);
-    match variant {
-        Variant::Scalar => build_scalar(cfg, n),
+    let mut w = match variant {
+        Variant::Scalar | Variant::Scalar16(_) => build_scalar(SElem::of(variant), cfg, n),
         Variant::Vector(_) => build_vector(variant, cfg, n),
+    };
+    w.reference = reference(n);
+    w
+}
+
+/// Binary64 ground truth: the same DIF butterfly network computed in f64
+/// with exact twiddles (output left in bit-reversed order, like the
+/// kernel).
+fn reference(n: usize) -> Vec<f64> {
+    let x = gen_signal(n);
+    let mut d: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let stages = n.trailing_zeros() as usize;
+    for s in 0..stages {
+        let half = n >> (s + 1);
+        let groups = 1 << s;
+        for grp in 0..groups {
+            let base = grp * (n >> s);
+            for j in 0..half {
+                let (iu, iv) = (base + j, base + j + half);
+                let (ur, ui) = (d[2 * iu], d[2 * iu + 1]);
+                let (vr, vi) = (d[2 * iv], d[2 * iv + 1]);
+                let ang =
+                    -2.0 * std::f64::consts::PI * (j * groups) as f64 / n as f64;
+                let (wr, wi) = (ang.cos(), ang.sin());
+                let (tr, ti) = (ur - vr, ui - vi);
+                d[2 * iu] = ur + vr;
+                d[2 * iu + 1] = ui + vi;
+                d[2 * iv] = tr * wr - ti * wi;
+                d[2 * iv + 1] = ti * wr + tr * wi;
+            }
+        }
     }
+    d
 }
 
 fn gen_signal(n: usize) -> Vec<f32> {
@@ -54,16 +86,18 @@ fn twiddles(n: usize) -> Vec<f32> {
         .collect()
 }
 
-fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
+fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize) -> Workload {
     let mut al = Alloc::new(cfg);
-    let x_base = al.f32s(2 * n);
-    let w_base = al.f32s(n);
+    let x_base = elem.alloc(&mut al, 2 * n);
+    let w_base = elem.alloc(&mut al, n);
     let x = gen_signal(n);
     let tw = twiddles(n);
 
-    // Host mirror: DIF in the same op order (f32; fmul/fsub/fmac pattern).
+    // Host mirror: DIF in the same op order (element-format fmul/fsub/fmac
+    // on register cells).
     let expected = {
-        let mut d: Vec<f32> = x.clone();
+        let mut d: Vec<u32> = elem.quantize(&x);
+        let twq = elem.quantize(&tw);
         let stages = n.trailing_zeros() as usize;
         for s in 0..stages {
             let half = n >> (s + 1);
@@ -74,32 +108,31 @@ fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
                     let (iu, iv) = (base + j, base + j + half);
                     let (ur, ui) = (d[2 * iu], d[2 * iu + 1]);
                     let (vr, vi) = (d[2 * iv], d[2 * iv + 1]);
-                    let (wr, wi) = (tw[2 * (j * groups)], tw[2 * (j * groups) + 1]);
-                    let (tr, ti) = (ur - vr, ui - vi);
-                    d[2 * iu] = ur + vr;
-                    d[2 * iu + 1] = ui + vi;
+                    let (wr, wi) = (twq[2 * (j * groups)], twq[2 * (j * groups) + 1]);
+                    let (tr, ti) = (elem.sub(ur, vr), elem.sub(ui, vi));
+                    d[2 * iu] = elem.add(ur, vr);
+                    d[2 * iu + 1] = elem.add(ui, vi);
                     // 5-op complex multiply (fmul, fmul, fsub, fmul, fmac).
-                    let m1 = ti * wi;
-                    let re = tr * wr - m1;
-                    let m2 = tr * wi;
-                    let im = ti.mul_add(wr, m2);
+                    let m1 = elem.mul(ti, wi);
+                    let re = elem.sub(elem.mul(tr, wr), m1);
+                    let m2 = elem.mul(tr, wi);
+                    let im = elem.fma(ti, wr, m2);
                     d[2 * iv] = re;
                     d[2 * iv + 1] = im;
                 }
             }
         }
-        d.iter().map(|&v| v as f64).collect::<Vec<f64>>()
+        d.iter().map(|&v| elem.to_f64(v)).collect::<Vec<f64>>()
     };
 
+    // log2 bytes per complex point (two elements).
+    let cshift = elem.shift() + 1;
     let (id, nc) = (regs::CORE_ID, regs::NCORES);
-    let mut p = ProgramBuilder::new("fft-scalar");
+    let mut p = ProgramBuilder::new(format!("fft-{}", elem.suffix()));
     p.li(15, x_base).li(16, w_base);
     let stages = n.trailing_zeros() as usize;
     for s in 0..stages {
         let half = (n >> (s + 1)) as u32; // butterflies per group
-        let groups = 1u32 << s;
-        let total = half * groups; // total butterflies this stage = n/2
-        let _ = total;
         // Each core takes a slice of the flat butterfly index b ∈ [0, n/2):
         // grp = b / half, j = b % half (divisions strength-reduced to shifts
         // since half is a power of two).
@@ -118,33 +151,33 @@ fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
             // iu = grp*(n>>s) + j ; iv = iu + half
             p.slli(20, 20, (n >> s).trailing_zeros() as i32);
             p.add(20, 20, 18);
-            // u_ptr = x + 8*iu ; v_ptr = u_ptr + 8*half
-            p.slli(20, 20, 3).add(20, 20, 15);
-            p.addi(21, 20, (8 * half) as i32);
-            // w_ptr = w + 8*(j*groups)
-            p.slli(22, 18, (3 + s) as i32).add(22, 22, 16);
+            // u_ptr = x + csize*iu ; v_ptr = u_ptr + csize*half
+            p.slli(20, 20, cshift).add(20, 20, 15);
+            p.addi(21, 20, 2 * elem.size() * half as i32);
+            // w_ptr = w + csize*(j*groups)
+            p.slli(22, 18, cshift + s as i32).add(22, 22, 16);
             // Loads.
-            p.lw(5, 20, 0); // ur
-            p.lw(6, 20, 4); // ui
-            p.lw(7, 21, 0); // vr
-            p.lw(8, 21, 4); // vi
-            p.lw(26, 22, 0); // wr
-            p.lw(27, 22, 4); // wi
+            elem.load(&mut p, 5, 20, 0); // ur
+            elem.load(&mut p, 6, 20, 1); // ui
+            elem.load(&mut p, 7, 21, 0); // vr
+            elem.load(&mut p, 8, 21, 1); // vi
+            elem.load(&mut p, 26, 22, 0); // wr
+            elem.load(&mut p, 27, 22, 1); // wi
             // u' = u + v (2 ops); t = u − v (2 ops).
-            p.fadd(FpMode::F32, 28, 5, 7);
-            p.fadd(FpMode::F32, 29, 6, 8);
-            p.fsub(FpMode::F32, 5, 5, 7);
-            p.fsub(FpMode::F32, 6, 6, 8);
-            p.sw(28, 20, 0);
-            p.sw(29, 20, 4);
+            p.fadd(elem.mode, 28, 5, 7);
+            p.fadd(elem.mode, 29, 6, 8);
+            p.fsub(elem.mode, 5, 5, 7);
+            p.fsub(elem.mode, 6, 6, 8);
+            elem.store(&mut p, 28, 20, 0);
+            elem.store(&mut p, 29, 20, 1);
             // v' = t·W — the 5-op complex multiply (7 cycles with deps).
-            p.fmul(FpMode::F32, 30, 6, 27); // m1 = ti*wi
-            p.fmul(FpMode::F32, 31, 5, 26); // tr*wr
-            p.fsub(FpMode::F32, 31, 31, 30); // re
-            p.fmul(FpMode::F32, 30, 5, 27); // m2 = tr*wi
-            p.fmac(FpMode::F32, 30, 6, 26); // im = ti*wr + m2
-            p.sw(31, 21, 0);
-            p.sw(30, 21, 4);
+            p.fmul(elem.mode, 30, 6, 27); // m1 = ti*wi
+            p.fmul(elem.mode, 31, 5, 26); // tr*wr
+            p.fsub(elem.mode, 31, 31, 30); // re
+            p.fmul(elem.mode, 30, 5, 27); // m2 = tr*wi
+            p.fmac(elem.mode, 30, 6, 26); // im = ti*wr + m2
+            elem.store(&mut p, 31, 21, 0);
+            elem.store(&mut p, 30, 21, 1);
             p.addi(13, 13, 1);
             p.blt(13, 14, &format!("{lbl}bf"));
         }
@@ -154,15 +187,16 @@ fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
     p.end();
 
     Workload {
-        name: "FFT-scalar".into(),
+        name: format!("FFT-{}", elem.suffix()),
         program: p.build(),
-        stage: vec![(x_base, Staged::F32(x)), (w_base, Staged::F32(tw))],
+        stage: vec![(x_base, elem.stage(&x)), (w_base, elem.stage(&tw))],
         out_addr: x_base,
         out_len: 2 * n,
-        out_fmt: OutFmt::F32,
+        out_fmt: elem.out_fmt(),
         expected,
         rtol: 0.0,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -262,6 +296,7 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
         expected,
         rtol: 1e-9,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -335,6 +370,34 @@ mod tests {
         let w = build(Variant::VEC, &cfg, 32);
         let (_, out) = w.run(&cfg);
         w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn scalar16_exact_both_formats() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
+            let w = build(v, &cfg, 32);
+            let (_, out) = w.run(&cfg);
+            w.verify(&out).unwrap();
+        }
+    }
+
+    #[test]
+    fn reference_is_bitrev_spectrum() {
+        // The f64 reference must agree with the O(n²) DFT after undoing
+        // the bit-reversed order — tighter than the f32 mirror check.
+        let n = 32;
+        let r = reference(n);
+        let spectrum = dft(&gen_signal(n));
+        let bits = n.trailing_zeros() as usize;
+        for k in 0..n {
+            let (er, ei) = spectrum[k];
+            let pos = bitrev(k, bits);
+            assert!(
+                (r[2 * pos] - er).abs() < 1e-9 && (r[2 * pos + 1] - ei).abs() < 1e-9,
+                "bin {k}"
+            );
+        }
     }
 
     #[test]

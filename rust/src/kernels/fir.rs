@@ -10,19 +10,30 @@
 //!   two expanding dot products accumulate in binary32; `vfcpka` packs the
 //!   result pair.
 
-use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
 use crate::isa::{regs, Operand, ProgramBuilder};
 use crate::testutil::Rng;
-use crate::transfp::{cast, simd, FpMode};
+use crate::transfp::{cast, simd};
 
 /// Build the FIR workload: `n` outputs of a `taps`-tap filter.
 pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize, taps: usize) -> Workload {
     assert!(n % 2 == 0 && taps % 2 == 0);
-    match variant {
-        Variant::Scalar => build_scalar(cfg, n, taps),
+    let mut w = match variant {
+        Variant::Scalar | Variant::Scalar16(_) => build_scalar(SElem::of(variant), cfg, n, taps),
         Variant::Vector(_) => build_vector(variant, cfg, n, taps),
-    }
+    };
+    w.reference = reference(n, taps);
+    w
+}
+
+/// Binary64 ground truth from the un-quantized f32 inputs (accuracy
+/// baseline shared by every precision rung).
+fn reference(n: usize, taps: usize) -> Vec<f64> {
+    let (x, h) = gen_inputs(n, taps);
+    (0..n)
+        .map(|i| (0..taps).map(|t| h[t] as f64 * x[i + t] as f64).sum())
+        .collect()
 }
 
 fn gen_inputs(n: usize, taps: usize) -> (Vec<f32>, Vec<f32>) {
@@ -38,46 +49,49 @@ fn gen_inputs(n: usize, taps: usize) -> (Vec<f32>, Vec<f32>) {
     (x, h)
 }
 
-fn build_scalar(cfg: &ClusterConfig, n: usize, taps: usize) -> Workload {
+fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize, taps: usize) -> Workload {
     let mut al = Alloc::new(cfg);
-    let x_base = al.f32s(n + taps);
-    let h_base = al.f32s(taps);
-    let y_base = al.f32s(n);
+    let x_base = elem.alloc(&mut al, n + taps);
+    let h_base = elem.alloc(&mut al, taps);
+    let y_base = elem.alloc(&mut al, n);
     let (x, h) = gen_inputs(n, taps);
 
-    // Host mirror: same tap order, f32 FMA.
+    // Host mirror: same tap order, element-format FMA on register cells
+    // (bit-identical to the datapath on every rung of the ladder).
+    let xs = elem.quantize(&x);
+    let hs = elem.quantize(&h);
     let expected: Vec<f64> = (0..n)
         .map(|i| {
-            let mut acc = 0.0f32;
+            let mut acc = 0u32;
             for t in 0..taps {
-                acc = h[t].mul_add(x[i + t], acc);
+                acc = elem.fma(hs[t], xs[i + t], acc);
             }
-            acc as f64
+            elem.to_f64(acc)
         })
         .collect();
 
-    let mut p = ProgramBuilder::new("fir-scalar");
+    let mut p = ProgramBuilder::new(format!("fir-{}", elem.suffix()));
     let (id, nc) = (regs::CORE_ID, regs::NCORES);
     p.li(24, n as u32);
     p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
     p.mul(13, id, 12); // start
     p.add(14, 13, 12).imin(14, 14, 24); // end
     p.li(15, x_base).li(16, h_base).li(17, y_base);
-    // y_ptr = y + 4*start; x walks from x + 4*start
-    p.slli(25, 13, 2).add(17, 17, 25);
+    // y_ptr = y + size*start; x walks from x + size*start
+    p.slli(25, 13, elem.shift()).add(17, 17, 25);
     p.bge(13, 14, "done");
     p.label("out");
     {
-        p.slli(20, 13, 2).add(20, 20, 15); // x_ptr = x + 4i
+        p.slli(20, 13, elem.shift()).add(20, 20, 15); // x_ptr = x + size·i
         p.mv(21, 16); // h_ptr
         p.li(28, 0); // acc
         p.li(19, taps as u32);
         p.hwloop(19);
-        p.lw_pi(26, 20, 4);
-        p.lw_pi(27, 21, 4);
-        p.fmac(FpMode::F32, 28, 27, 26);
+        elem.load_pi(&mut p, 26, 20, 1);
+        elem.load_pi(&mut p, 27, 21, 1);
+        p.fmac(elem.mode, 28, 27, 26);
         p.hwloop_end();
-        p.sw_pi(28, 17, 4);
+        elem.store_pi(&mut p, 28, 17, 1);
         p.addi(13, 13, 1);
         p.blt(13, 14, "out");
     }
@@ -86,15 +100,16 @@ fn build_scalar(cfg: &ClusterConfig, n: usize, taps: usize) -> Workload {
     p.end();
 
     Workload {
-        name: "FIR-scalar".into(),
+        name: format!("FIR-{}", elem.suffix()),
         program: p.build(),
-        stage: vec![(x_base, Staged::F32(x)), (h_base, Staged::F32(h))],
+        stage: vec![(x_base, elem.stage(&x)), (h_base, elem.stage(&h))],
         out_addr: y_base,
         out_len: n,
-        out_fmt: OutFmt::F32,
+        out_fmt: elem.out_fmt(),
         expected,
         rtol: 0.0,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -177,12 +192,14 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize, taps: usize) ->
         expected,
         rtol: 1e-9,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::transfp::FpMode;
 
     #[test]
     fn scalar_exact() {
@@ -201,6 +218,35 @@ mod tests {
             let w = build(v, &cfg, 64, 16);
             let (_, out) = w.run(&cfg);
             w.verify(&out).unwrap();
+        }
+    }
+
+    #[test]
+    fn scalar16_exact_both_formats() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
+            let w = build(v, &cfg, 64, 16);
+            let (_, out) = w.run(&cfg);
+            w.verify(&out).unwrap();
+            let (_, o1) = w.run_on(&cfg, 1);
+            w.verify(&o1).unwrap();
+        }
+    }
+
+    #[test]
+    fn reference_tracks_all_rungs() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let r = build(Variant::Scalar, &cfg, 64, 16).reference.clone();
+        assert_eq!(r.len(), 64);
+        for v in [Variant::Scalar, Variant::SCALAR_F16, Variant::VEC] {
+            let w = build(v, &cfg, 64, 16);
+            assert_eq!(w.reference, r, "{}: reference must be variant-independent", w.name);
+            // Every rung's own mirror stays close to the f64 ground truth
+            // (16-bit rungs within their quantization noise).
+            let tol = if v == Variant::Scalar { 1e-5 } else { 0.05 };
+            for (e, g) in w.expected.iter().zip(&w.reference) {
+                assert!((e - g).abs() <= tol * g.abs().max(1.0), "{}: {e} vs {g}", w.name);
+            }
         }
     }
 

@@ -20,11 +20,11 @@
 //!   only its feed-forward phase, reproducing the paper's observation that
 //!   IIR is the worst-scaling benchmark.
 
-use super::{quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use super::{quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
 use crate::isa::{regs, Operand, ProgramBuilder};
 use crate::testutil::Rng;
-use crate::transfp::{simd, FpMode, FpSpec};
+use crate::transfp::{simd, FpSpec};
 
 /// Biquad coefficients (stable low-pass; poles at 0.5 ± 0.3i).
 const B: [f32; 3] = [0.2929, 0.5858, 0.2929];
@@ -33,10 +33,30 @@ const A: [f32; 2] = [1.0, -0.34]; // y += a1·y[n-1] + a2·y[n-2]
 /// Build the IIR workload over `n` samples.
 pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
     assert!(n % 2 == 0);
-    match variant {
-        Variant::Scalar => build_scalar(cfg, n),
+    let mut w = match variant {
+        Variant::Scalar | Variant::Scalar16(_) => build_scalar(SElem::of(variant), cfg, n),
         Variant::Vector(_) => build_vector(variant, cfg, n),
+    };
+    w.reference = reference(n);
+    w
+}
+
+/// Binary64 ground truth: the direct biquad recursion.
+fn reference(n: usize) -> Vec<f64> {
+    let x = gen_signal(n);
+    let xg = |i: i64| if i < 0 { 0.0f64 } else { x[i as usize] as f64 };
+    let (b0, b1, b2) = (B[0] as f64, B[1] as f64, B[2] as f64);
+    let (a1, a2) = (A[0] as f64, A[1] as f64);
+    let mut out = vec![0.0f64; n];
+    let (mut y1, mut y2) = (0.0f64, 0.0f64);
+    for i in 0..n {
+        let w = b0 * xg(i as i64) + b1 * xg(i as i64 - 1) + b2 * xg(i as i64 - 2);
+        let y = w + a1 * y1 + a2 * y2;
+        out[i] = y;
+        y2 = y1;
+        y1 = y;
     }
+    out
 }
 
 fn gen_signal(n: usize) -> Vec<f32> {
@@ -49,61 +69,65 @@ fn gen_signal(n: usize) -> Vec<f32> {
         .collect()
 }
 
-fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
+fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize) -> Workload {
     let mut al = Alloc::new(cfg);
-    let x_base = al.f32s(n + 2); // two leading zeros (x[-1], x[-2])
-    let w_base = al.f32s(n + 2); // two leading zeros (y[-1], y[-2] workspace)
-    let y_base = al.f32s(n + 2);
-    let c_base = al.f32s(5); // b0 b1 b2 a1 a2
+    let x_base = elem.alloc(&mut al, n + 2); // two leading zeros (x[-1], x[-2])
+    let w_base = elem.alloc(&mut al, n + 2); // two leading zeros (y[-1], y[-2] workspace)
+    let y_base = elem.alloc(&mut al, n + 2);
+    let c_base = elem.alloc(&mut al, 5); // b0 b1 b2 a1 a2
     let x = gen_signal(n);
 
-    // Host mirror.
+    // Host mirror on register cells (element-format mul/FMA, same order).
     let mut expected = vec![0.0f64; n];
     {
-        let xg = |i: i64| if i < 0 { 0.0f32 } else { x[i as usize] };
-        let mut w = vec![0.0f32; n];
+        let xq = elem.quantize(&x);
+        let bq = elem.quantize(&B);
+        let aq = elem.quantize(&A);
+        let xg = |i: i64| if i < 0 { 0u32 } else { xq[i as usize] };
+        let mut w = vec![0u32; n];
         for i in 0..n {
-            let mut acc = B[0] * xg(i as i64);
-            acc = B[1].mul_add(xg(i as i64 - 1), acc);
-            acc = B[2].mul_add(xg(i as i64 - 2), acc);
+            let mut acc = elem.mul(bq[0], xg(i as i64));
+            acc = elem.fma(bq[1], xg(i as i64 - 1), acc);
+            acc = elem.fma(bq[2], xg(i as i64 - 2), acc);
             w[i] = acc;
         }
-        let mut y1 = 0.0f32;
-        let mut y2 = 0.0f32;
+        let mut y1 = 0u32;
+        let mut y2 = 0u32;
         for i in 0..n {
             let mut acc = w[i];
-            acc = A[0].mul_add(y1, acc);
-            acc = A[1].mul_add(y2, acc);
-            expected[i] = acc as f64;
+            acc = elem.fma(aq[0], y1, acc);
+            acc = elem.fma(aq[1], y2, acc);
+            expected[i] = elem.to_f64(acc);
             y2 = y1;
             y1 = acc;
         }
     }
 
+    let two = (2 * elem.size()) as u32; // byte offset of the first sample
     let (id, nc) = (regs::CORE_ID, regs::NCORES);
-    let mut p = ProgramBuilder::new("iir-scalar");
-    p.li(15, x_base + 8).li(16, w_base + 8).li(17, y_base + 8);
+    let mut p = ProgramBuilder::new(format!("iir-{}", elem.suffix()));
+    p.li(15, x_base + two).li(16, w_base + two).li(17, y_base + two);
     p.li(4, c_base);
     // Phase 1: parallel feed-forward.
     p.li(24, n as u32);
     p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
     p.mul(13, id, 12);
     p.add(14, 13, 12).imin(14, 14, 24);
-    p.lw(5, 4, 0); // b0
-    p.lw(6, 4, 4); // b1
-    p.lw(7, 4, 8); // b2
+    elem.load(&mut p, 5, 4, 0); // b0
+    elem.load(&mut p, 6, 4, 1); // b1
+    elem.load(&mut p, 7, 4, 2); // b2
     p.bge(13, 14, "ff_skip");
     p.label("ff");
     {
-        p.slli(20, 13, 2).add(20, 20, 15); // &x[i]
-        p.lw(26, 20, 0);
-        p.lw(27, 20, -4);
-        p.lw(29, 20, -8);
-        p.fmul(FpMode::F32, 28, 5, 26);
-        p.fmac(FpMode::F32, 28, 6, 27);
-        p.fmac(FpMode::F32, 28, 7, 29);
-        p.slli(21, 13, 2).add(21, 21, 16);
-        p.sw(28, 21, 0);
+        p.slli(20, 13, elem.shift()).add(20, 20, 15); // &x[i]
+        elem.load(&mut p, 26, 20, 0);
+        elem.load(&mut p, 27, 20, -1);
+        elem.load(&mut p, 29, 20, -2);
+        p.fmul(elem.mode, 28, 5, 26);
+        p.fmac(elem.mode, 28, 6, 27);
+        p.fmac(elem.mode, 28, 7, 29);
+        p.slli(21, 13, elem.shift()).add(21, 21, 16);
+        elem.store(&mut p, 28, 21, 0);
         p.addi(13, 13, 1);
         p.blt(13, 14, "ff");
     }
@@ -111,20 +135,20 @@ fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
     p.barrier();
     // Phase 2: sequential feedback on core 0 (the scaling bottleneck).
     p.bne(id, regs::ZERO, "fb_skip");
-    p.lw(5, 4, 12); // a1
-    p.lw(6, 4, 16); // a2
+    elem.load(&mut p, 5, 4, 3); // a1
+    elem.load(&mut p, 6, 4, 4); // a2
     p.li(26, 0); // y1
     p.li(27, 0); // y2
     p.mv(20, 16); // w ptr
     p.mv(21, 17); // y ptr
     p.li(19, n as u32);
     p.hwloop(19);
-    p.lw_pi(28, 20, 4); // acc = w[i]
-    p.fmac(FpMode::F32, 28, 5, 26); // += a1·y1
-    p.fmac(FpMode::F32, 28, 6, 27); // += a2·y2
+    elem.load_pi(&mut p, 28, 20, 1); // acc = w[i]
+    p.fmac(elem.mode, 28, 5, 26); // += a1·y1
+    p.fmac(elem.mode, 28, 6, 27); // += a2·y2
     p.mv(27, 26); // y2 = y1
     p.mv(26, 28); // y1 = acc
-    p.sw_pi(28, 21, 4);
+    elem.store_pi(&mut p, 28, 21, 1);
     p.hwloop_end();
     p.label("fb_skip");
     p.barrier();
@@ -133,18 +157,19 @@ fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
     let mut xs = vec![0.0f32; 2];
     xs.extend(x);
     Workload {
-        name: "IIR-scalar".into(),
+        name: format!("IIR-{}", elem.suffix()),
         program: p.build(),
         stage: vec![
-            (x_base, Staged::F32(xs)),
-            (c_base, Staged::F32(vec![B[0], B[1], B[2], A[0], A[1]])),
+            (x_base, elem.stage(&xs)),
+            (c_base, elem.stage(&[B[0], B[1], B[2], A[0], A[1]])),
         ],
-        out_addr: y_base + 8,
+        out_addr: y_base + two,
         out_len: n,
-        out_fmt: OutFmt::F32,
+        out_fmt: elem.out_fmt(),
         expected,
         rtol: 0.0,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -302,6 +327,7 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
         expected,
         rtol: 1e-9,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -323,6 +349,16 @@ mod tests {
         let w = build(Variant::VEC, &cfg, 64);
         let (_, out) = w.run(&cfg);
         w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn scalar16_exact_both_formats() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
+            let w = build(v, &cfg, 64);
+            let (_, out) = w.run(&cfg);
+            w.verify(&out).unwrap();
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! * **Vector**: dimensions packed 2×16: `vfsub` + expanding `vfdotpex`
 //!   per (dim-pair × centroid) with binary32 distance accumulators.
 
-use super::{quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use super::{quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
 use crate::isa::{regs, Operand, ProgramBuilder};
 use crate::testutil::Rng;
@@ -23,10 +23,49 @@ use crate::transfp::{scalar as sfp, simd, CmpPred, FpMode, FpSpec};
 pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize, d: usize, k: usize) -> Workload {
     assert!(k == 4, "the kernel unrolls exactly 4 centroids (K=4)");
     assert!(d % 2 == 0);
-    match variant {
-        Variant::Scalar => build_scalar(cfg, n, d, k),
+    let mut w = match variant {
+        Variant::Scalar | Variant::Scalar16(_) => build_scalar(SElem::of(variant), cfg, n, d, k),
         Variant::Vector(_) => build_vector(variant, cfg, n, d, k),
+    };
+    w.reference = reference(n, d, k);
+    w
+}
+
+/// Binary64 ground truth: one Lloyd iteration entirely in f64 (strict `<`
+/// argmin, mean update, empty clusters keep the old centroid).
+fn reference(n: usize, d: usize, k: usize) -> Vec<f64> {
+    let (pts, cent) = gen_inputs(n, d, k);
+    let p = |i: usize, j: usize| pts[i * d + j] as f64;
+    let assign: Vec<usize> = (0..n)
+        .map(|i| {
+            let mut best = 0usize;
+            let mut bestv = f64::INFINITY;
+            for c in 0..k {
+                let mut acc = 0.0f64;
+                for j in 0..d {
+                    let diff = p(i, j) - cent[c * d + j] as f64;
+                    acc += diff * diff;
+                }
+                if acc < bestv {
+                    bestv = acc;
+                    best = c;
+                }
+            }
+            best
+        })
+        .collect();
+    let mut out = vec![0.0f64; k * d];
+    for c in 0..k {
+        let members: Vec<usize> = (0..n).filter(|&i| assign[i] == c).collect();
+        for j in 0..d {
+            out[c * d + j] = if members.is_empty() {
+                cent[c * d + j] as f64
+            } else {
+                members.iter().map(|&i| p(i, j)).sum::<f64>() / members.len() as f64
+            };
+        }
     }
+    out
 }
 
 fn gen_inputs(n: usize, d: usize, k: usize) -> (Vec<f32>, Vec<f32>) {
@@ -50,20 +89,21 @@ fn gen_inputs(n: usize, d: usize, k: usize) -> (Vec<f32>, Vec<f32>) {
     (pts, cent)
 }
 
-/// Host mirror of the scalar assignment: squared distances via f32 FMA in
-/// dimension order, centroids unrolled; strict `<` argmin (first wins ties).
-fn assign_scalar(pts: &[f32], cent: &[f32], n: usize, d: usize, k: usize) -> Vec<usize> {
+/// Host mirror of the scalar assignment on register cells: squared
+/// distances via element-format FMA in dimension order, centroids
+/// unrolled; strict `<` argmin (first wins ties, quiet compares).
+fn assign_scalar(elem: SElem, pts: &[u32], cent: &[u32], n: usize, d: usize, k: usize) -> Vec<usize> {
     (0..n)
         .map(|i| {
             let mut best = 0usize;
-            let mut bestv = f32::INFINITY;
+            let mut bestv = elem.q(f32::INFINITY);
             for c in 0..k {
-                let mut acc = 0.0f32;
+                let mut acc = 0u32;
                 for j in 0..d {
-                    let diff = pts[i * d + j] - cent[c * d + j];
-                    acc = diff.mul_add(diff, acc);
+                    let diff = elem.sub(pts[i * d + j], cent[c * d + j]);
+                    acc = elem.fma(diff, diff, acc);
                 }
-                if acc < bestv {
+                if elem.lt(acc, bestv) {
                     bestv = acc;
                     best = c;
                 }
@@ -73,11 +113,13 @@ fn assign_scalar(pts: &[f32], cent: &[f32], n: usize, d: usize, k: usize) -> Vec
         .collect()
 }
 
-/// Centroid update mirror: per-centroid sums in point order, f32 adds, then
-/// one f32 divide per dimension (empty clusters keep the old centroid).
+/// Centroid update mirror: per-centroid sums in point order, element-format
+/// adds, then one divide per dimension (empty clusters keep the old
+/// centroid).
 fn update_centroids(
-    pts: &[f32],
-    cent: &[f32],
+    elem: SElem,
+    pts: &[u32],
+    cent: &[u32],
     assign: &[usize],
     n: usize,
     d: usize,
@@ -85,74 +127,76 @@ fn update_centroids(
 ) -> Vec<f64> {
     let mut out = vec![0.0f64; k * d];
     for c in 0..k {
-        let mut count = 0u32;
-        let mut sums = vec![0.0f32; d];
+        let mut count = 0i32;
+        let mut sums = vec![0u32; d];
         for i in 0..n {
             if assign[i] == c {
                 count += 1;
                 for j in 0..d {
-                    sums[j] += pts[i * d + j];
+                    sums[j] = elem.add(sums[j], pts[i * d + j]);
                 }
             }
         }
         for j in 0..d {
             out[c * d + j] = if count == 0 {
-                cent[c * d + j] as f64
+                elem.to_f64(cent[c * d + j])
             } else {
-                (sums[j] / count as f32) as f64
+                elem.to_f64(elem.div(sums[j], elem.from_int(count)))
             };
         }
     }
     out
 }
 
-fn build_scalar(cfg: &ClusterConfig, n: usize, d: usize, k: usize) -> Workload {
+fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize, d: usize, k: usize) -> Workload {
     let mut al = Alloc::new(cfg);
-    let pts_base = al.f32s(n * d);
-    let cent_base = al.f32s(k * d);
+    let pts_base = elem.alloc(&mut al, n * d);
+    let cent_base = elem.alloc(&mut al, k * d);
     let assign_base = al.words(n);
-    let newc_base = al.f32s(k * d);
+    let newc_base = elem.alloc(&mut al, k * d);
     let (pts, cent) = gen_inputs(n, d, k);
-    let assign = assign_scalar(&pts, &cent, n, d, k);
-    let expected = update_centroids(&pts, &cent, &assign, n, d, k);
+    let ptsq = elem.quantize(&pts);
+    let centq = elem.quantize(&cent);
+    let assign = assign_scalar(elem, &ptsq, &centq, n, d, k);
+    let expected = update_centroids(elem, &ptsq, &centq, &assign, n, d, k);
 
     let (id, nc) = (regs::CORE_ID, regs::NCORES);
-    let mut p = ProgramBuilder::new("kmeans-scalar");
+    let mut p = ProgramBuilder::new(format!("kmeans-{}", elem.suffix()));
     p.li(15, pts_base).li(16, cent_base).li(17, assign_base);
     // ---- Phase 1: assignment, parallel over points.
     p.li(24, n as u32);
     p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
     p.mul(13, id, 12);
     p.add(14, 13, 12).imin(14, 14, 24);
-    p.li(30, (d * 4) as u32); // row bytes
+    p.li(30, (d * elem.size() as usize) as u32); // row bytes
     p.bge(13, 14, "as_skip");
     p.label("as");
     {
         p.mul(20, 13, 30).add(20, 20, 15); // point ptr
         p.mv(21, 16); // centroid ptr (walks all K rows)
-        p.li(5, 0).li(6, 0).li(7, 0).li(8, 0); // 4 distance accs (f32 0.0)
+        p.li(5, 0).li(6, 0).li(7, 0).li(8, 0); // 4 distance accs (0.0)
         p.li(19, d as u32);
         p.hwloop(19);
-        p.lw_pi(26, 20, 4); // x[j] — loaded once for all 4 centroids
-        p.lw(27, 21, 0);
-        p.fsub(FpMode::F32, 27, 26, 27);
-        p.fmac(FpMode::F32, 5, 27, 27);
-        p.lw(27, 21, (d * 4) as i32);
-        p.fsub(FpMode::F32, 27, 26, 27);
-        p.fmac(FpMode::F32, 6, 27, 27);
-        p.lw(27, 21, (2 * d * 4) as i32);
-        p.fsub(FpMode::F32, 27, 26, 27);
-        p.fmac(FpMode::F32, 7, 27, 27);
-        p.lw(27, 21, (3 * d * 4) as i32);
-        p.fsub(FpMode::F32, 27, 26, 27);
-        p.fmac(FpMode::F32, 8, 27, 27);
-        p.addi(21, 21, 4);
+        elem.load_pi(&mut p, 26, 20, 1); // x[j] — loaded once for all 4 centroids
+        elem.load(&mut p, 27, 21, 0);
+        p.fsub(elem.mode, 27, 26, 27);
+        p.fmac(elem.mode, 5, 27, 27);
+        elem.load(&mut p, 27, 21, d as i32);
+        p.fsub(elem.mode, 27, 26, 27);
+        p.fmac(elem.mode, 6, 27, 27);
+        elem.load(&mut p, 27, 21, (2 * d) as i32);
+        p.fsub(elem.mode, 27, 26, 27);
+        p.fmac(elem.mode, 7, 27, 27);
+        elem.load(&mut p, 27, 21, (3 * d) as i32);
+        p.fsub(elem.mode, 27, 26, 27);
+        p.fmac(elem.mode, 8, 27, 27);
+        p.addi(21, 21, elem.size());
         p.hwloop_end();
         // Argmin over r5..r8 (strict less-than, first wins).
         p.li(28, 0); // best index
         p.mv(29, 5); // best value
         for (c, acc) in [(1u32, 6u8), (2, 7), (3, 8)] {
-            p.fcmp(FpMode::F32, CmpPred::Lt, 26, acc, 29);
+            p.fcmp(elem.mode, CmpPred::Lt, 26, acc, 29);
             p.beq(26, regs::ZERO, &format!("ge{c}"));
             p.li(28, c);
             p.mv(29, acc);
@@ -181,7 +225,7 @@ fn build_scalar(cfg: &ClusterConfig, n: usize, d: usize, k: usize) -> Workload {
         p.li(19, d as u32);
         p.mv(20, 22);
         p.hwloop(19);
-        p.sw_pi(regs::ZERO, 20, 4);
+        elem.store_pi(&mut p, regs::ZERO, 20, 1);
         p.hwloop_end();
         p.li(27, 0); // count
         p.li(18, 0); // i
@@ -196,10 +240,10 @@ fn build_scalar(cfg: &ClusterConfig, n: usize, d: usize, k: usize) -> Workload {
             p.mv(21, 22); // sums row
             p.li(19, d as u32);
             p.hwloop(19);
-            p.lw_pi(26, 20, 4);
-            p.lw(29, 21, 0);
-            p.fadd(FpMode::F32, 29, 29, 26);
-            p.sw_pi(29, 21, 4);
+            elem.load_pi(&mut p, 26, 20, 1);
+            elem.load(&mut p, 29, 21, 0);
+            p.fadd(elem.mode, 29, 29, 26);
+            elem.store_pi(&mut p, 29, 21, 1);
             p.hwloop_end();
             p.label("upd_ptnext");
             p.addi(18, 18, 1);
@@ -207,13 +251,13 @@ fn build_scalar(cfg: &ClusterConfig, n: usize, d: usize, k: usize) -> Workload {
         }
         // Divide by count (or copy the old centroid when empty).
         p.beq(27, regs::ZERO, "upd_empty");
-        p.fcvt_from_int(FpMode::F32, 27, 27);
+        p.fcvt_from_int(elem.mode, 27, 27);
         p.mv(21, 22);
         p.li(19, d as u32);
         p.hwloop(19);
-        p.lw(29, 21, 0);
-        p.fdiv(FpMode::F32, 29, 29, 27); // shared DIV-SQRT block
-        p.sw_pi(29, 21, 4);
+        elem.load(&mut p, 29, 21, 0);
+        p.fdiv(elem.mode, 29, 29, 27); // shared DIV-SQRT block
+        elem.store_pi(&mut p, 29, 21, 1);
         p.hwloop_end();
         p.j("upd_next");
         p.label("upd_empty");
@@ -221,8 +265,8 @@ fn build_scalar(cfg: &ClusterConfig, n: usize, d: usize, k: usize) -> Workload {
         p.mv(21, 22);
         p.li(19, d as u32);
         p.hwloop(19);
-        p.lw_pi(29, 20, 4);
-        p.sw_pi(29, 21, 4);
+        elem.load_pi(&mut p, 29, 20, 1);
+        elem.store_pi(&mut p, 29, 21, 1);
         p.hwloop_end();
         p.label("upd_next");
         p.addi(13, 13, 1);
@@ -232,15 +276,16 @@ fn build_scalar(cfg: &ClusterConfig, n: usize, d: usize, k: usize) -> Workload {
     p.end();
 
     Workload {
-        name: "KMEANS-scalar".into(),
+        name: format!("KMEANS-{}", elem.suffix()),
         program: p.build(),
-        stage: vec![(pts_base, Staged::F32(pts)), (cent_base, Staged::F32(cent))],
+        stage: vec![(pts_base, elem.stage(&pts)), (cent_base, elem.stage(&cent))],
         out_addr: newc_base,
         out_len: k * d,
-        out_fmt: OutFmt::F32,
+        out_fmt: elem.out_fmt(),
         expected,
         rtol: 0.0,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -442,6 +487,7 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize, d: usize, k: us
         expected,
         rtol: 1e-9,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -468,11 +514,22 @@ mod tests {
     }
 
     #[test]
+    fn scalar16_exact_both_formats() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
+            let w = build(v, &cfg, 64, 8, 4);
+            let (_, out) = w.run(&cfg);
+            w.verify(&out).unwrap();
+        }
+    }
+
+    #[test]
     fn assignment_separates_clusters() {
         // The synthetic data is built from 4 seeds; the assignment must
         // recover a non-trivial partition (all 4 clusters populated).
+        let elem = SElem::of(Variant::Scalar);
         let (pts, cent) = gen_inputs(128, 8, 4);
-        let assign = assign_scalar(&pts, &cent, 128, 8, 4);
+        let assign = assign_scalar(elem, &elem.quantize(&pts), &elem.quantize(&cent), 128, 8, 4);
         for c in 0..4 {
             assert!(assign.iter().filter(|&&a| a == c).count() > 8, "cluster {c} starved");
         }

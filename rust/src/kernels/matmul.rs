@@ -13,7 +13,7 @@
 //!   binary32, and **cast-and-pack** (`vfcpka`) assembling the packed
 //!   16-bit result pair.
 
-use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
 use crate::isa::{regs, ProgramBuilder};
 use crate::testutil::Rng;
@@ -22,10 +22,28 @@ use crate::transfp::{scalar, simd};
 /// Build the MATMUL workload: C = A·B with n×n operands.
 pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
     assert!(n.is_power_of_two(), "bank-stagger masks require power-of-two n");
-    match variant {
-        Variant::Scalar => build_scalar(cfg, n),
+    let mut w = match variant {
+        Variant::Scalar | Variant::Scalar16(_) => build_scalar(SElem::of(variant), cfg, n),
         Variant::Vector(_) => build_vector(variant, cfg, n),
+    };
+    w.reference = reference(n);
+    w
+}
+
+/// Binary64 ground truth C = A·B from the un-quantized f32 inputs.
+fn reference(n: usize) -> Vec<f64> {
+    let (a, b) = gen_inputs(n);
+    let mut out = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for k in 0..n {
+                acc += a[i * n + k] as f64 * b[k * n + j] as f64;
+            }
+            out[i * n + j] = acc;
+        }
     }
+    out
 }
 
 fn gen_inputs(n: usize) -> (Vec<f32>, Vec<f32>) {
@@ -35,27 +53,30 @@ fn gen_inputs(n: usize) -> (Vec<f32>, Vec<f32>) {
     (a, b)
 }
 
-fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
+fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize) -> Workload {
     let mut al = Alloc::new(cfg);
-    let a_base = al.f32s(n * n);
-    let b_base = al.f32s(n * n);
-    let c_base = al.f32s(n * n);
+    let a_base = elem.alloc(&mut al, n * n);
+    let b_base = elem.alloc(&mut al, n * n);
+    let c_base = elem.alloc(&mut al, n * n);
 
     let (a, b) = gen_inputs(n);
 
-    // Host mirror: identical op order (k ascending, f32 FMA) → exact match.
+    // Host mirror: identical op order (k ascending, element-format FMA on
+    // register cells) → exact match on every rung.
+    let aq = elem.quantize(&a);
+    let bq = elem.quantize(&b);
     let mut expected = vec![0.0f64; n * n];
     for i in 0..n {
         for j in 0..n {
-            let mut acc = 0.0f32;
+            let mut acc = 0u32;
             for k in 0..n {
-                acc = a[i * n + k].mul_add(b[k * n + j], acc);
+                acc = elem.fma(aq[i * n + k], bq[k * n + j], acc);
             }
-            expected[i * n + j] = acc as f64;
+            expected[i * n + j] = elem.to_f64(acc);
         }
     }
 
-    let mut p = ProgramBuilder::new("matmul-scalar");
+    let mut p = ProgramBuilder::new(format!("matmul-{}", elem.suffix()));
     let (id, nc) = (regs::CORE_ID, regs::NCORES);
     // r24 = n; r12 = chunk = ceil(n / ncores); r13 = row; r14 = row_end
     p.li(24, n as u32);
@@ -66,29 +87,29 @@ fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
     p.bge(13, 14, "done");
     p.label("row");
     {
-        // r25 = 4*n*i; r23 = C row base; r22 = A row base.
-        p.mul(25, 13, 24).slli(25, 25, 2);
+        // r25 = size*n*i; r23 = C row base; r22 = A row base.
+        p.mul(25, 13, 24).slli(25, 25, elem.shift());
         p.add(23, 25, 17); // c_row
         p.add(22, 25, 15); // a_row
         // Stagger the column start per core (j0 = 2·core_id mod n) so that
         // concurrent B-column walks hit different TCDM banks — B's stride is
-        // n words, which aliases to a single bank for power-of-two n.
+        // n elements, which aliases to a single bank for power-of-two n.
         p.slli(9, regs::CORE_ID, 1);
         p.andi(9, 9, (n - 1) as i32); // j0
         p.li(18, 0); // column count
         p.label("col");
         {
             p.mv(20, 22); // a_ptr
-            p.slli(21, 9, 2).add(21, 21, 16); // b_ptr = B + 4·j
-            p.li(28, 0); // acc = 0.0f32
+            p.slli(21, 9, elem.shift()).add(21, 21, 16); // b_ptr = B + size·j
+            p.li(28, 0); // acc = 0.0
             p.li(19, n as u32);
             p.hwloop(19);
-            p.lw_pi(26, 20, 4);
-            p.lw_pi(27, 21, (4 * n) as i32);
-            p.fmac(crate::transfp::FpMode::F32, 28, 26, 27);
+            elem.load_pi(&mut p, 26, 20, 1);
+            elem.load_pi(&mut p, 27, 21, n as i32);
+            p.fmac(elem.mode, 28, 26, 27);
             p.hwloop_end();
-            p.slli(25, 9, 2).add(25, 25, 23);
-            p.sw(28, 25, 0); // C[i][j]
+            p.slli(25, 9, elem.shift()).add(25, 25, 23);
+            elem.store(&mut p, 28, 25, 0); // C[i][j]
             // j = (j + 1) mod n
             p.addi(9, 9, 1);
             p.andi(9, 9, (n - 1) as i32);
@@ -103,15 +124,16 @@ fn build_scalar(cfg: &ClusterConfig, n: usize) -> Workload {
     p.end();
 
     Workload {
-        name: "MATMUL-scalar".into(),
+        name: format!("MATMUL-{}", elem.suffix()),
         program: p.build(),
-        stage: vec![(a_base, Staged::F32(a)), (b_base, Staged::F32(b))],
+        stage: vec![(a_base, elem.stage(&a)), (b_base, elem.stage(&b))],
         out_addr: c_base,
         out_len: n * n,
-        out_fmt: OutFmt::F32,
+        out_fmt: elem.out_fmt(),
         expected,
         rtol: 0.0,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -225,6 +247,7 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
         expected,
         rtol: 1e-9,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -268,6 +291,18 @@ mod tests {
         let w = build(Variant::Vector(FpMode::VecBf16), &cfg, 16);
         let (_, out) = w.run(&cfg);
         w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn scalar16_exact_both_formats() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
+            let w = build(v, &cfg, 16);
+            let (_, out) = w.run(&cfg);
+            w.verify(&out).unwrap();
+            let (_, o1) = w.run_on(&cfg, 1);
+            w.verify(&o1).unwrap();
+        }
     }
 
     #[test]

@@ -24,14 +24,20 @@ use crate::cluster::counters::RunStats;
 use crate::cluster::mem::{Memory, TCDM_BASE};
 use crate::cluster::{Cluster, Engine};
 use crate::config::ClusterConfig;
-use crate::isa::Program;
-use crate::transfp::{simd, FpMode, FpSpec, BF16, F16};
+use crate::isa::{Program, ProgramBuilder, Reg};
+use crate::transfp::{cast, scalar, simd, CmpPred, FpMode, FpSpec, BF16, F16};
 
-/// Benchmark variant: scalar binary32 or packed-SIMD 2×16.
+/// Benchmark variant: one rung of the per-kernel precision ladder —
+/// binary32 scalar, 16-bit scalar (`F16`/`Bf16`), or packed-SIMD 2×16.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Variant {
     /// `float` scalars.
     Scalar,
+    /// 16-bit *scalar* rungs (`FpMode::F16` or `FpMode::Bf16`): the same
+    /// program structure as `Scalar`, but with halfword memory traffic and
+    /// the FPnew 16-bit scalar datapath — the intermediate step of the
+    /// transprecision ladder between binary32 and packed-SIMD.
+    Scalar16(FpMode),
     /// 2×16-bit vectors in the given mode (`VecF16` or `VecBf16`). The paper
     /// reports a single number for both 16-bit formats (§5.2) — we support
     /// both and default to `VecF16`.
@@ -41,29 +47,66 @@ pub enum Variant {
 impl Variant {
     /// Canonical vector variant used in the tables.
     pub const VEC: Variant = Variant::Vector(FpMode::VecF16);
+    /// binary16 scalar rung.
+    pub const SCALAR_F16: Variant = Variant::Scalar16(FpMode::F16);
+    /// bfloat16 scalar rung.
+    pub const SCALAR_BF16: Variant = Variant::Scalar16(FpMode::Bf16);
 
-    /// Short label (`scalar` / `vector`).
+    /// Every buildable variant, in precision-ladder order (full binary32
+    /// first, then scalar-16, then packed-16 — see `tuner::ladder`).
+    pub fn all() -> [Variant; 5] {
+        [
+            Variant::Scalar,
+            Variant::SCALAR_F16,
+            Variant::SCALAR_BF16,
+            Variant::Vector(FpMode::VecF16),
+            Variant::Vector(FpMode::VecBf16),
+        ]
+    }
+
+    /// Distinct, stable per-variant label used in CSV rows, reports and
+    /// cache rows. Every buildable variant maps to a unique string (locked
+    /// by the `labels_are_distinct_and_stable` test) so scalar-16 rungs
+    /// never alias `scalar`, and the two vector formats never alias each
+    /// other.
     pub fn label(&self) -> &'static str {
         match self {
             Variant::Scalar => "scalar",
-            Variant::Vector(_) => "vector",
+            Variant::Scalar16(FpMode::F16) => "scalar-f16",
+            Variant::Scalar16(FpMode::Bf16) => "scalar-bf16",
+            // Degenerate modes no kernel builds; named for totality.
+            Variant::Scalar16(_) => "scalar-16-invalid",
+            Variant::Vector(FpMode::VecF16) => "vector-f16",
+            Variant::Vector(FpMode::VecBf16) => "vector-bf16",
+            Variant::Vector(_) => "vector-invalid",
         }
     }
 
-    /// The 16-bit spec for vector variants.
+    /// Parse a [`Variant::label`] back (buildable variants only).
+    pub fn parse_label(s: &str) -> Option<Variant> {
+        Variant::all().into_iter().find(|v| v.label() == s)
+    }
+
+    /// The 16-bit spec for 16-bit variants (scalar or vector).
     pub fn spec(&self) -> Option<&'static FpSpec> {
         match self {
             Variant::Scalar => None,
-            Variant::Vector(m) => m.spec(),
+            Variant::Scalar16(m) | Variant::Vector(m) => m.spec(),
         }
     }
 
-    /// The SIMD mode (F32 for scalar).
+    /// The FP mode (F32 for the binary32 scalar).
     pub fn mode(&self) -> FpMode {
         match self {
             Variant::Scalar => FpMode::F32,
-            Variant::Vector(m) => *m,
+            Variant::Scalar16(m) | Variant::Vector(m) => *m,
         }
+    }
+
+    /// True for the rungs below full binary32 (anything the tuner may
+    /// descend to).
+    pub fn is_sub_f32(&self) -> bool {
+        !matches!(self, Variant::Scalar)
     }
 }
 
@@ -104,6 +147,12 @@ pub struct Workload {
     pub rtol: f64,
     /// Absolute tolerance floor.
     pub atol: f64,
+    /// Ground-truth output computed on the host in **binary64** from the
+    /// original (un-quantized) f32 inputs — identical for every variant of
+    /// a benchmark. This is the accuracy baseline the tuner measures each
+    /// precision rung against (`tuner::accuracy`), as opposed to
+    /// `expected`, which mirrors the variant's own arithmetic bit-exactly.
+    pub reference: Vec<f64>,
 }
 
 impl Workload {
@@ -242,6 +291,228 @@ impl Alloc {
     }
 }
 
+/// Scalar element descriptor shared by the parametric scalar kernel
+/// builders — the `F32 → scalar-16` rungs of the precision ladder. The
+/// binary32 instantiation uses word memory accesses and the native-f32
+/// datapath; the scalar-16 instantiations use halfword accesses (values in
+/// lane 0 of the 32-bit register, like the hardware) and the 16-bit scalar
+/// ops of [`crate::transfp::scalar`]. Host-mirror arithmetic runs on raw
+/// `u32` register cells, so the F32 instantiation reproduces the
+/// pre-ladder f32 mirrors bit-for-bit.
+#[derive(Debug, Clone, Copy)]
+pub struct SElem {
+    /// FP mode of every arithmetic instruction the builder emits
+    /// (`F32`, `F16` or `Bf16`).
+    pub mode: FpMode,
+}
+
+impl SElem {
+    /// Descriptor for a scalar variant (panics on vector variants).
+    pub fn of(variant: Variant) -> SElem {
+        match variant {
+            Variant::Scalar => SElem { mode: FpMode::F32 },
+            Variant::Scalar16(m) => {
+                assert!(
+                    matches!(m, FpMode::F16 | FpMode::Bf16),
+                    "Scalar16 requires a 16-bit scalar mode, got {m:?}"
+                );
+                SElem { mode: m }
+            }
+            Variant::Vector(_) => panic!("SElem describes scalar variants only"),
+        }
+    }
+
+    /// The 16-bit spec (None for binary32).
+    pub fn spec(&self) -> Option<&'static FpSpec> {
+        self.mode.spec()
+    }
+
+    /// Element size in bytes (4 or 2).
+    pub fn size(&self) -> i32 {
+        match self.spec() {
+            None => 4,
+            Some(_) => 2,
+        }
+    }
+
+    /// log2 of the element size — the shift for element-index → byte-offset
+    /// address arithmetic.
+    pub fn shift(&self) -> i32 {
+        match self.spec() {
+            None => 2,
+            Some(_) => 1,
+        }
+    }
+
+    /// Allocate room for `n` elements in the TCDM.
+    pub fn alloc(&self, al: &mut Alloc, n: usize) -> u32 {
+        match self.spec() {
+            None => al.f32s(n),
+            Some(_) => al.halves(n),
+        }
+    }
+
+    /// Variant label suffix used in workload names (`scalar`,
+    /// `scalar-f16`, `scalar-bf16`).
+    pub fn suffix(&self) -> &'static str {
+        match self.mode {
+            FpMode::F32 => "scalar",
+            FpMode::F16 => "scalar-f16",
+            FpMode::Bf16 => "scalar-bf16",
+            _ => unreachable!("SElem holds scalar modes only"),
+        }
+    }
+
+    /// Output buffer format.
+    pub fn out_fmt(&self) -> OutFmt {
+        match self.spec() {
+            None => OutFmt::F32,
+            Some(s) => OutFmt::Pack16(s),
+        }
+    }
+
+    /// Stage host f32 data in this element format.
+    pub fn stage(&self, data: &[f32]) -> Staged {
+        match self.spec() {
+            None => Staged::F32(data.to_vec()),
+            Some(s) => Staged::U16(quantize16(s, data)),
+        }
+    }
+
+    /// `n` zero elements (0.0 is the all-zero pattern in every format).
+    pub fn stage_zeros(&self, n: usize) -> Staged {
+        match self.spec() {
+            None => Staged::F32(vec![0.0; n]),
+            Some(_) => Staged::U16(vec![0; n]),
+        }
+    }
+
+    // ------------------------------------------------ program emission
+
+    /// Element load at an element-indexed offset. 16-bit loads
+    /// zero-extend (`lhu`): the scalar-16 ops read lane 0 only.
+    pub fn load(&self, p: &mut ProgramBuilder, rd: Reg, base: Reg, elem_off: i32) {
+        match self.spec() {
+            None => p.lw(rd, base, elem_off * 4),
+            Some(_) => p.lhu(rd, base, elem_off * 2),
+        };
+    }
+
+    /// Post-increment element load advancing by `elems` elements.
+    pub fn load_pi(&self, p: &mut ProgramBuilder, rd: Reg, base: Reg, elems: i32) {
+        match self.spec() {
+            None => p.lw_pi(rd, base, elems * 4),
+            Some(_) => p.lhu_pi(rd, base, elems * 2),
+        };
+    }
+
+    /// Element store at an element-indexed offset.
+    pub fn store(&self, p: &mut ProgramBuilder, rs: Reg, base: Reg, elem_off: i32) {
+        match self.spec() {
+            None => p.sw(rs, base, elem_off * 4),
+            Some(_) => p.sh(rs, base, elem_off * 2),
+        };
+    }
+
+    /// Post-increment element store advancing by `elems` elements.
+    pub fn store_pi(&self, p: &mut ProgramBuilder, rs: Reg, base: Reg, elems: i32) {
+        match self.spec() {
+            None => p.sw_pi(rs, base, elems * 4),
+            Some(_) => p.sh_pi(rs, base, elems * 2),
+        };
+    }
+
+    // ---------------------- host-mirror arithmetic on u32 register cells
+
+    /// Quantize one f32 value into a register cell.
+    pub fn q(&self, x: f32) -> u32 {
+        match self.spec() {
+            None => x.to_bits(),
+            Some(s) => s.from_f64(x as f64) as u32,
+        }
+    }
+
+    /// Quantize a host f32 slice into register cells.
+    pub fn quantize(&self, xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|&x| self.q(x)).collect()
+    }
+
+    /// Widen a register cell to f64 (exact in every format).
+    pub fn to_f64(&self, cell: u32) -> f64 {
+        match self.spec() {
+            None => f32::from_bits(cell) as f64,
+            Some(s) => s.to_f64(cell as u16),
+        }
+    }
+
+    /// `a + b` with the datapath's rounding.
+    pub fn add(&self, a: u32, b: u32) -> u32 {
+        match self.spec() {
+            None => scalar::add32(a, b),
+            Some(s) => scalar::add16(s, a as u16, b as u16) as u32,
+        }
+    }
+
+    /// `a - b`.
+    pub fn sub(&self, a: u32, b: u32) -> u32 {
+        match self.spec() {
+            None => scalar::sub32(a, b),
+            Some(s) => scalar::sub16(s, a as u16, b as u16) as u32,
+        }
+    }
+
+    /// `a * b`.
+    pub fn mul(&self, a: u32, b: u32) -> u32 {
+        match self.spec() {
+            None => scalar::mul32(a, b),
+            Some(s) => scalar::mul16(s, a as u16, b as u16) as u32,
+        }
+    }
+
+    /// Fused `a*b + acc` (single rounding), mirroring `fmac`.
+    pub fn fma(&self, a: u32, b: u32, acc: u32) -> u32 {
+        match self.spec() {
+            None => scalar::fma32(a, b, acc),
+            Some(s) => scalar::fma16(s, a as u16, b as u16, acc as u16) as u32,
+        }
+    }
+
+    /// `a / b` (DIV-SQRT block numerics).
+    pub fn div(&self, a: u32, b: u32) -> u32 {
+        match self.spec() {
+            None => scalar::div32(a, b),
+            Some(s) => scalar::div16(s, a as u16, b as u16) as u32,
+        }
+    }
+
+    /// `fcvt` from a signed integer.
+    pub fn from_int(&self, i: i32) -> u32 {
+        match self.spec() {
+            None => cast::i32_to_f32(i as u32),
+            Some(s) => cast::i32_to_16(s, i as u32) as u32,
+        }
+    }
+
+    /// Strict `a < b` with the datapath's quiet-compare semantics
+    /// (NaN compares false).
+    pub fn lt(&self, a: u32, b: u32) -> bool {
+        let r = match self.spec() {
+            None => scalar::cmp32(a, b, CmpPred::Lt),
+            Some(s) => scalar::cmp16(s, a as u16, b as u16, CmpPred::Lt),
+        };
+        r == 1
+    }
+
+    /// `a <= b` (quiet; NaN compares false).
+    pub fn le(&self, a: u32, b: u32) -> bool {
+        let r = match self.spec() {
+            None => scalar::cmp32(a, b, CmpPred::Le),
+            Some(s) => scalar::cmp16(s, a as u16, b as u16, CmpPred::Le),
+        };
+        r == 1
+    }
+}
+
 /// Quantize f32 samples to 16-bit lanes of `spec`.
 pub fn quantize16(spec: &FpSpec, data: &[f32]) -> Vec<u16> {
     data.iter().map(|&x| spec.from_f64(x as f64)).collect()
@@ -312,9 +583,11 @@ impl Benchmark {
         }
     }
 
-    /// Paper Table 3 FP / memory intensity, for validation.
+    /// Paper Table 3 FP / memory intensity, for validation. The scalar-16
+    /// rungs share the scalar instruction mix (same program structure, only
+    /// the access width and FP format change).
     pub fn table3_intensity(&self, variant: Variant) -> (f64, f64) {
-        let scalar = matches!(variant, Variant::Scalar);
+        let scalar = matches!(variant, Variant::Scalar | Variant::Scalar16(_));
         match (self, scalar) {
             (Benchmark::Conv, true) => (0.33, 0.67),
             (Benchmark::Conv, false) => (0.28, 0.29),
@@ -376,6 +649,58 @@ mod tests {
         let cfg = ClusterConfig::new(8, 8, 0);
         let mut a = Alloc::new(&cfg);
         a.words(64 * 1024); // 256 kB > 64 kB
+    }
+
+    /// Satellite gate: every buildable variant has a unique, *stable* label
+    /// — CSV rows, cache rows and report tie-breaks all key on it, so
+    /// scalar-16 rungs must never alias `scalar`, and the two vector
+    /// formats must never alias each other.
+    #[test]
+    fn labels_are_distinct_and_stable() {
+        let labels: Vec<&str> = Variant::all().iter().map(|v| v.label()).collect();
+        assert_eq!(
+            labels,
+            vec!["scalar", "scalar-f16", "scalar-bf16", "vector-f16", "vector-bf16"],
+            "variant labels are a stable external contract"
+        );
+        for (i, a) in labels.iter().enumerate() {
+            for b in &labels[i + 1..] {
+                assert_ne!(a, b, "aliased variant labels");
+            }
+        }
+        // Labels round-trip through the parser.
+        for v in Variant::all() {
+            assert_eq!(Variant::parse_label(v.label()), Some(v));
+        }
+        assert_eq!(Variant::parse_label("vector"), None, "legacy coarse label is gone");
+    }
+
+    #[test]
+    fn selem_arithmetic_mirrors_datapath() {
+        // F32 cells are plain f32 bits.
+        let e = SElem::of(Variant::Scalar);
+        assert_eq!(e.size(), 4);
+        assert_eq!(e.shift(), 2);
+        assert_eq!(e.to_f64(e.fma(e.q(2.0), e.q(3.0), e.q(1.0))), 7.0);
+        // 16-bit cells hold the value in the low half.
+        let h = SElem::of(Variant::SCALAR_F16);
+        assert_eq!(h.size(), 2);
+        assert_eq!(h.shift(), 1);
+        assert_eq!(h.q(1.0), 0x3C00);
+        assert_eq!(h.to_f64(h.mul(h.q(3.0), h.q(4.0))), 12.0);
+        assert!(h.lt(h.q(1.0), h.q(2.0)));
+        assert!(!h.lt(h.q(2.0), h.q(1.0)));
+        // from_int matches the cast path.
+        assert_eq!(h.to_f64(h.from_int(100)), 100.0);
+        let b = SElem::of(Variant::SCALAR_BF16);
+        assert_eq!(b.to_f64(b.add(b.q(1.5), b.q(2.5))), 4.0);
+        assert_eq!(b.suffix(), "scalar-bf16");
+    }
+
+    #[test]
+    #[should_panic(expected = "scalar variants only")]
+    fn selem_rejects_vector_variants() {
+        let _ = SElem::of(Variant::VEC);
     }
 
     #[test]

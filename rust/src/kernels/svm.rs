@@ -12,7 +12,7 @@
 //! * **Vector**: dimension pairs with the expanding dot product; the α
 //!   weighting stays in binary32 (multi-format accumulation).
 
-use super::{quantize16, spec_of, Alloc, OutFmt, Staged, Variant, Workload};
+use super::{quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
 use crate::isa::{regs, Operand, ProgramBuilder};
 use crate::testutil::Rng;
@@ -22,10 +22,27 @@ use crate::transfp::{simd, FpMode, FpSpec};
 /// is +1.0/−1.0 from the sign of the score).
 pub fn build(variant: Variant, cfg: &ClusterConfig, nsv: usize, d: usize) -> Workload {
     assert!(d % 2 == 0);
-    match variant {
-        Variant::Scalar => build_scalar(cfg, nsv, d),
+    let mut w = match variant {
+        Variant::Scalar | Variant::Scalar16(_) => build_scalar(SElem::of(variant), cfg, nsv, d),
         Variant::Vector(_) => build_vector(variant, cfg, nsv, d),
+    };
+    w.reference = reference(nsv, d);
+    w
+}
+
+/// Binary64 ground truth `[score, class]` from the un-quantized inputs.
+fn reference(nsv: usize, d: usize) -> Vec<f64> {
+    let (svs, alphas, x, bias) = gen_inputs(nsv, d);
+    let mut score = 0.0f64;
+    for i in 0..nsv {
+        let mut dot = 0.0f64;
+        for j in 0..d {
+            dot += svs[i * d + j] as f64 * x[j] as f64;
+        }
+        score += alphas[i] as f64 * dot;
     }
+    score += bias as f64;
+    vec![score, if score >= 0.0 { 1.0 } else { -1.0 }]
 }
 
 fn gen_inputs(nsv: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, f32) {
@@ -40,32 +57,28 @@ fn gen_inputs(nsv: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, f32) {
 /// Max cores that might run the reduction (partials buffer size).
 const MAX_CORES: usize = 16;
 
-fn build_scalar(cfg: &ClusterConfig, nsv: usize, d: usize) -> Workload {
+fn build_scalar(elem: SElem, cfg: &ClusterConfig, nsv: usize, d: usize) -> Workload {
     let mut al = Alloc::new(cfg);
-    let sv_base = al.f32s(nsv * d);
-    let a_base = al.f32s(nsv);
-    let x_base = al.f32s(d);
-    let part_base = al.f32s(MAX_CORES);
-    let bias_base = al.f32s(1);
-    let out_base = al.f32s(2);
+    let sv_base = elem.alloc(&mut al, nsv * d);
+    let a_base = elem.alloc(&mut al, nsv);
+    let x_base = elem.alloc(&mut al, d);
+    let part_base = elem.alloc(&mut al, MAX_CORES);
+    let bias_base = elem.alloc(&mut al, 1);
+    let out_base = elem.alloc(&mut al, 2);
     let (svs, alphas, x, bias) = gen_inputs(nsv, d);
 
     // Host mirror: per-core partials in chunk order, then core-0 reduction.
-    let expected = {
-        let workers = cfg.cores; // mirrors the all-cores run; per-worker runs
-                                 // recompute via `expected_for_workers`
-        score_mirror(&svs, &alphas, &x, bias, nsv, d, workers)
-    };
+    let expected = score_mirror(elem, &svs, &alphas, &x, bias, nsv, d, cfg.cores);
 
     let (id, nc) = (regs::CORE_ID, regs::NCORES);
-    let mut p = ProgramBuilder::new("svm-scalar");
+    let mut p = ProgramBuilder::new(format!("svm-{}", elem.suffix()));
     p.li(15, sv_base).li(16, a_base).li(17, x_base);
     p.li(24, nsv as u32);
     p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
     p.mul(13, id, 12);
     p.add(14, 13, 12).imin(14, 14, 24);
-    p.li(30, (d * 4) as u32);
-    p.li(28, 0); // local score (f32)
+    p.li(30, (d * elem.size() as usize) as u32);
+    p.li(28, 0); // local score
     p.bge(13, 14, "sv_skip");
     p.label("sv");
     {
@@ -74,21 +87,21 @@ fn build_scalar(cfg: &ClusterConfig, nsv: usize, d: usize) -> Workload {
         p.li(27, 0); // dot acc
         p.li(19, d as u32);
         p.hwloop(19);
-        p.lw_pi(26, 20, 4);
-        p.lw_pi(29, 21, 4);
-        p.fmac(FpMode::F32, 27, 26, 29);
+        elem.load_pi(&mut p, 26, 20, 1);
+        elem.load_pi(&mut p, 29, 21, 1);
+        p.fmac(elem.mode, 27, 26, 29);
         p.hwloop_end();
-        p.slli(26, 13, 2).add(26, 26, 16);
-        p.lw(26, 26, 0); // α_i
-        p.fmac(FpMode::F32, 28, 26, 27); // score += α·dot
+        p.slli(26, 13, elem.shift()).add(26, 26, 16);
+        elem.load(&mut p, 26, 26, 0); // α_i
+        p.fmac(elem.mode, 28, 26, 27); // score += α·dot
         p.addi(13, 13, 1);
         p.blt(13, 14, "sv");
     }
     p.label("sv_skip");
     // Publish the partial score.
     p.li(25, part_base);
-    p.slli(26, id, 2).add(26, 26, 25);
-    p.sw(28, 26, 0);
+    p.slli(26, id, elem.shift()).add(26, 26, 25);
+    elem.store(&mut p, 28, 26, 0);
     p.barrier();
     // Core 0: reduce partials + bias, take the sign.
     p.bne(id, regs::ZERO, "red_skip");
@@ -96,47 +109,51 @@ fn build_scalar(cfg: &ClusterConfig, nsv: usize, d: usize) -> Workload {
     p.li(28, 0);
     p.mv(19, nc);
     p.hwloop(19);
-    p.lw_pi(26, 20, 4);
-    p.fadd(FpMode::F32, 28, 28, 26);
+    elem.load_pi(&mut p, 26, 20, 1);
+    p.fadd(elem.mode, 28, 28, 26);
     p.hwloop_end();
     p.li(26, bias_base);
-    p.lw(26, 26, 0);
-    p.fadd(FpMode::F32, 28, 28, 26);
+    elem.load(&mut p, 26, 26, 0);
+    p.fadd(elem.mode, 28, 28, 26);
     p.li(27, out_base);
-    p.sw(28, 27, 0);
+    elem.store(&mut p, 28, 27, 0);
     // class = score >= 0 ? +1 : −1 (fcmp + select).
     p.li(26, 0);
-    p.fcmp(FpMode::F32, crate::transfp::CmpPred::Le, 29, 26, 28); // 0 <= score
-    p.li(26, 1.0f32.to_bits());
+    p.fcmp(elem.mode, crate::transfp::CmpPred::Le, 29, 26, 28); // 0 <= score
+    p.li(26, elem.q(1.0));
     p.bne(29, regs::ZERO, "pos");
-    p.li(26, (-1.0f32).to_bits());
+    p.li(26, elem.q(-1.0));
     p.label("pos");
-    p.sw(26, 27, 4);
+    elem.store(&mut p, 26, 27, 1);
     p.label("red_skip");
     p.barrier();
     p.end();
 
     Workload {
-        name: "SVM-scalar".into(),
+        name: format!("SVM-{}", elem.suffix()),
         program: p.build(),
         stage: vec![
-            (sv_base, Staged::F32(svs)),
-            (a_base, Staged::F32(alphas)),
-            (x_base, Staged::F32(x)),
-            (part_base, Staged::F32(vec![0.0; MAX_CORES])),
-            (bias_base, Staged::F32(vec![bias])),
+            (sv_base, elem.stage(&svs)),
+            (a_base, elem.stage(&alphas)),
+            (x_base, elem.stage(&x)),
+            (part_base, elem.stage_zeros(MAX_CORES)),
+            (bias_base, elem.stage(&[bias])),
         ],
         out_addr: out_base,
         out_len: 2,
-        out_fmt: OutFmt::F32,
+        out_fmt: elem.out_fmt(),
         expected,
         rtol: 0.0,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
-/// Score mirror for `workers` active cores (chunked like the kernel).
+/// Score mirror for `workers` active cores (chunked like the kernel),
+/// computed on register cells in the element format.
+#[allow(clippy::too_many_arguments)]
 fn score_mirror(
+    elem: SElem,
     svs: &[f32],
     alphas: &[f32],
     x: &[f32],
@@ -145,25 +162,29 @@ fn score_mirror(
     d: usize,
     workers: usize,
 ) -> Vec<f64> {
+    let svq = elem.quantize(svs);
+    let aq = elem.quantize(alphas);
+    let xq = elem.quantize(x);
     let chunk = nsv.div_ceil(workers);
-    let mut partials = vec![0.0f32; workers];
+    let mut partials = vec![0u32; workers];
     for (w, part) in partials.iter_mut().enumerate() {
         let lo = (w * chunk).min(nsv);
         let hi = ((w + 1) * chunk).min(nsv);
         for i in lo..hi {
-            let mut dot = 0.0f32;
+            let mut dot = 0u32;
             for j in 0..d {
-                dot = svs[i * d + j].mul_add(x[j], dot);
+                dot = elem.fma(svq[i * d + j], xq[j], dot);
             }
-            *part = alphas[i].mul_add(dot, *part);
+            *part = elem.fma(aq[i], dot, *part);
         }
     }
-    let mut score = 0.0f32;
+    let mut score = 0u32;
     for pt in &partials {
-        score += pt;
+        score = elem.add(score, *pt);
     }
-    score += bias;
-    vec![score as f64, if score >= 0.0 { 1.0 } else { -1.0 }]
+    score = elem.add(score, elem.q(bias));
+    let class = if elem.le(elem.q(0.0), score) { 1.0 } else { -1.0 };
+    vec![elem.to_f64(score), class]
 }
 
 fn build_vector(variant: Variant, cfg: &ClusterConfig, nsv: usize, d: usize) -> Workload {
@@ -279,6 +300,7 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, nsv: usize, d: usize) -> 
         expected,
         rtol: 0.0,
         atol: 1e-12,
+        reference: Vec::new(),
     }
 }
 
@@ -293,6 +315,17 @@ mod tests {
         let (_, out) = w.run(&cfg);
         w.verify(&out).unwrap();
         assert!(out[1] == 1.0 || out[1] == -1.0);
+    }
+
+    #[test]
+    fn scalar16_exact_both_formats() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
+            let w = build(v, &cfg, 32, 16);
+            let (_, out) = w.run(&cfg);
+            w.verify(&out).unwrap();
+            assert!(out[1] == 1.0 || out[1] == -1.0);
+        }
     }
 
     #[test]

@@ -14,6 +14,8 @@
 //! * [`kernels`] — the 8 near-sensor benchmarks × {scalar, vector};
 //! * [`coordinator`] — the design-space-exploration engine producing the
 //!   paper's tables and figures;
+//! * [`tuner`] — the accuracy-aware transprecision autotuner (per-kernel
+//!   precision ladders, error metrics, `transpfp tune`);
 //! * [`runtime`] — PJRT loading of the AOT-compiled JAX/Pallas goldens
 //!   (`artifacts/*.hlo.txt`) for numeric validation;
 //! * [`report`] — table/CSV emitters and the Table 6 SoA data.
@@ -31,3 +33,4 @@ pub mod report;
 pub mod runtime;
 pub mod testutil;
 pub mod transfp;
+pub mod tuner;

@@ -16,6 +16,7 @@ use transpfp::kernels::{Benchmark, Variant};
 use transpfp::model;
 use transpfp::report;
 use transpfp::transfp::FpMode;
+use transpfp::tuner;
 
 const USAGE: &str = "\
 transpfp — transprecision FP cluster reproduction (TPDS 2021)
@@ -24,13 +25,22 @@ USAGE: transpfp <command> [args] [flags]
 
 COMMANDS:
   configs                 list the Table 2 design space
-  run <cfg> <bench> <scalar|vector|bf16>
-                          run one benchmark (e.g. `run 8c4f1p MATMUL vector`)
-  query <cfg|all> <bench|all> <scalar|vector|bf16|all>
+  run <cfg> <bench> <variant>
+                          run one benchmark (e.g. `run 8c4f1p MATMUL vector`);
+                          variants: scalar, scalar-f16, scalar-bf16,
+                          vector (vector-f16), vector-bf16
+  query <cfg|all> <bench|all> <variant|all>
                           resolve a batch of design-space points through the
-                          measurement cache (plan stats on stderr)
+                          measurement cache (plan stats on stderr); `all`
+                          spans the full 5-rung precision ladder
+  tune [cfg|all]          accuracy-aware precision autotuning: select the
+                          cheapest admissible ladder rung per benchmark
+                          under --budget (relative L2 error vs the f64
+                          reference; default 1e-2); default config 8c8f1p
   pareto                  Pareto frontier of the full design space over
-                          (Gflop/s, Gflop/s/W, Gflop/s/mm^2)
+                          (Gflop/s, Gflop/s/W, Gflop/s/mm^2); with --acc,
+                          the accuracy-extended frontier over
+                          (rel. error, Gflop/s, Gflop/s/W) across the ladder
   table3                  FP/memory intensities (measured vs paper)
   table4                  8-core benchmark tables (perf / e-eff / a-eff)
   table5                  16-core benchmark tables
@@ -45,13 +55,15 @@ COMMANDS:
   sweep                   run the full 18x8x2 design space, CSV to stdout
 
 FLAGS:
-  --csv                   CSV output for table/fig/pareto/query commands
+  --csv                   CSV output for table/fig/pareto/query/tune commands
   --no-cache              don't load or persist the measurement cache
+  --acc                   accuracy-extended frontier (pareto only)
+  --budget <rel-err>      error budget for `tune` (default 1e-2)
 
 Measurements are memoized under artifacts/cache/measurements.csv, keyed by
 (program fingerprint, config, variant, engine version); see EXPERIMENTS.md
-§Cache for the invalidation rule. TRANSPFP_CACHE_DIR overrides the
-directory.";
+§Cache + §Tuner for the invalidation rules. TRANSPFP_CACHE_DIR overrides
+the directory.";
 
 /// Parsed command line: recognized flags plus positional arguments.
 /// Unknown flags are an error — a typo like `--cvs` must fail loudly, not
@@ -59,17 +71,32 @@ directory.";
 struct Cli {
     csv: bool,
     no_cache: bool,
+    acc: bool,
+    budget: Option<f64>,
     args: Vec<String>,
 }
 
 fn parse_cli<I: IntoIterator<Item = String>>(raw: I) -> Result<Cli, String> {
-    let mut cli = Cli { csv: false, no_cache: false, args: Vec::new() };
-    for a in raw {
+    let mut cli = Cli { csv: false, no_cache: false, acc: false, budget: None, args: Vec::new() };
+    let mut it = raw.into_iter();
+    while let Some(a) = it.next() {
         match a.as_str() {
             "--csv" => cli.csv = true,
             "--no-cache" => cli.no_cache = true,
+            "--acc" => cli.acc = true,
+            "--budget" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| "flag `--budget` needs a value (e.g. `--budget 1e-2`)".to_string())?;
+                match v.parse::<f64>() {
+                    Ok(b) if b.is_finite() && b >= 0.0 => cli.budget = Some(b),
+                    _ => return Err(format!("bad `--budget` value `{v}`")),
+                }
+            }
             s if s.starts_with('-') => {
-                return Err(format!("unknown flag `{s}` (known flags: --csv, --no-cache)"));
+                return Err(format!(
+                    "unknown flag `{s}` (known flags: --csv, --no-cache, --acc, --budget <rel-err>)"
+                ));
             }
             _ => cli.args.push(a),
         }
@@ -77,14 +104,17 @@ fn parse_cli<I: IntoIterator<Item = String>>(raw: I) -> Result<Cli, String> {
     Ok(cli)
 }
 
-/// Variant names accepted by `run` and `query`.
+/// Variant names accepted by `run` and `query`: the canonical labels
+/// (single source of truth: [`Variant::parse_label`]) plus historical
+/// short-form aliases.
 fn parse_variant(s: &str) -> Option<Variant> {
-    match s {
-        "scalar" => Some(Variant::Scalar),
+    Variant::parse_label(s).or_else(|| match s {
+        "sf16" => Some(Variant::SCALAR_F16),
+        "sbf16" => Some(Variant::SCALAR_BF16),
         "vector" | "f16" => Some(Variant::VEC),
         "bf16" => Some(Variant::Vector(FpMode::VecBf16)),
         _ => None,
-    }
+    })
 }
 
 fn main() -> ExitCode {
@@ -141,7 +171,10 @@ fn dispatch(cli: &Cli) -> ExitCode {
         }
         "run" => {
             if args.len() < 4 {
-                eprintln!("usage: transpfp run <cfg> <bench> <scalar|vector|bf16>");
+                eprintln!(
+                    "usage: transpfp run <cfg> <bench> \
+                     <scalar|scalar-f16|scalar-bf16|vector|vector-bf16>"
+                );
                 return ExitCode::FAILURE;
             }
             let Some(cfg) = ClusterConfig::parse(args[1]) else {
@@ -188,7 +221,7 @@ fn dispatch(cli: &Cli) -> ExitCode {
         }
         "query" => {
             if args.len() < 4 {
-                eprintln!("usage: transpfp query <cfg|all> <bench|all> <scalar|vector|bf16|all>");
+                eprintln!("usage: transpfp query <cfg|all> <bench|all> <variant|all>");
                 return ExitCode::FAILURE;
             }
             let configs: Vec<ClusterConfig> = if args[1] == "all" {
@@ -214,7 +247,7 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 }
             };
             let variants: Vec<Variant> = if args[3] == "all" {
-                vec![Variant::Scalar, Variant::VEC]
+                tuner::ladder().to_vec()
             } else {
                 match parse_variant(args[3]) {
                     Some(v) => vec![v],
@@ -239,7 +272,48 @@ fn dispatch(cli: &Cli) -> ExitCode {
             summary.push(("entries", engine.stats().entries.to_string()));
             eprint!("{}", report::kv_table("query plan", &summary).render());
         }
-        "pareto" => emit(coordinator::pareto_table()),
+        "pareto" => {
+            if cli.acc {
+                emit(coordinator::accuracy_pareto_table())
+            } else {
+                emit(coordinator::pareto_table())
+            }
+        }
+        "tune" => {
+            let budget = cli.budget.unwrap_or(tuner::DEFAULT_BUDGET);
+            let configs: Vec<ClusterConfig> = match args.get(1) {
+                None => vec![ClusterConfig::new(8, 8, 1)],
+                Some(&"all") => ClusterConfig::design_space(),
+                Some(&m) => match ClusterConfig::parse(m) {
+                    Some(cfg) => vec![cfg],
+                    None => {
+                        eprintln!("bad config mnemonic {m}");
+                        return ExitCode::FAILURE;
+                    }
+                },
+            };
+            let engine = QueryEngine::global();
+            let reports: Vec<tuner::TuneReport> =
+                configs.iter().map(|cfg| tuner::tune_with(engine, cfg, budget)).collect();
+            emit(tuner::tune_table(&reports));
+            for r in &reports {
+                let summary = [
+                    ("config", r.cfg.mnemonic()),
+                    ("budget (rel err)", format!("{budget:e}")),
+                    ("sub-F32 selections", format!("{}/{}", r.sub_f32_count(), r.choices.len())),
+                    (
+                        "within budget",
+                        format!(
+                            "{}/{}",
+                            r.choices.iter().filter(|c| c.within_budget(budget)).count(),
+                            r.choices.len()
+                        ),
+                    ),
+                    ("cache entries", engine.stats().entries.to_string()),
+                ];
+                eprint!("{}", report::kv_table("tune", &summary).render());
+            }
+        }
         "table3" => emit(coordinator::table3()),
         "table4" => emit(coordinator::table45(8)),
         "table5" => emit(coordinator::table45(16)),
@@ -300,20 +374,44 @@ mod tests {
 
     #[test]
     fn unknown_flags_are_rejected_not_filtered() {
-        for bad in ["--cvs", "--cache", "-x", "--", "--csv=always"] {
+        for bad in ["--cvs", "--cache", "-x", "--", "--csv=always", "--budget=1e-2"] {
             let err = cli(&["table4", bad]).unwrap_err();
-            assert!(err.contains(bad), "error must name the offending flag: {err}");
+            assert!(err.contains(bad.split('=').next().unwrap()), "error must name the flag: {err}");
         }
         // Positionals are never mistaken for flags.
         assert!(cli(&["run", "8c4f1p", "MATMUL", "vector"]).is_ok());
     }
 
     #[test]
+    fn budget_flag_takes_a_value() {
+        let c = cli(&["tune", "--budget", "1e-3", "--csv"]).unwrap();
+        assert_eq!(c.budget, Some(1e-3));
+        assert!(c.csv);
+        assert_eq!(c.args, vec!["tune"]);
+
+        assert!(cli(&["tune", "--budget"]).is_err(), "missing value must fail");
+        assert!(cli(&["tune", "--budget", "not-a-number"]).is_err());
+        assert!(cli(&["tune", "--budget", "-1"]).is_err(), "negative budget is invalid");
+        assert!(cli(&["tune", "--budget", "inf"]).is_err(), "non-finite budget is invalid");
+
+        let c = cli(&["pareto", "--acc"]).unwrap();
+        assert!(c.acc && c.budget.is_none());
+    }
+
+    #[test]
     fn variant_names() {
         assert_eq!(parse_variant("scalar"), Some(Variant::Scalar));
+        assert_eq!(parse_variant("scalar-f16"), Some(Variant::SCALAR_F16));
+        assert_eq!(parse_variant("sbf16"), Some(Variant::SCALAR_BF16));
         assert_eq!(parse_variant("vector"), Some(Variant::VEC));
+        assert_eq!(parse_variant("vector-f16"), Some(Variant::VEC));
         assert_eq!(parse_variant("f16"), Some(Variant::VEC));
         assert_eq!(parse_variant("bf16"), Some(Variant::Vector(FpMode::VecBf16)));
+        assert_eq!(parse_variant("vector-bf16"), Some(Variant::Vector(FpMode::VecBf16)));
         assert_eq!(parse_variant("f64"), None);
+        // Every canonical label parses.
+        for v in Variant::all() {
+            assert_eq!(parse_variant(v.label()), Some(v));
+        }
     }
 }

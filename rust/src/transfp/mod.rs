@@ -67,3 +67,96 @@ mod tests {
         assert_eq!(FpMode::F16.spec().unwrap().man_bits, 10);
     }
 }
+
+/// Numeric edge cases the tuner's error metrics depend on: cast
+/// round-trips, NaN/Inf propagation through the widening FMA, and
+/// subnormal behaviour (this datapath does **not** flush subnormals —
+/// FPnew's smallFloat units are IEEE-complete, and the accuracy metrics
+/// assume gradual underflow).
+#[cfg(test)]
+mod edge_tests {
+    use super::cast::{f16_to_32, f32_to_16};
+    use super::scalar::{add16, fma_widen, mul16};
+    use super::{BF16, F16};
+
+    /// Every finite 16-bit value survives the 16 → f32 → 16 round trip in
+    /// both formats (f32 embeds both exactly), and NaN/Inf map to NaN/Inf.
+    #[test]
+    fn cast_roundtrip_all_finite_both_formats() {
+        for spec in [&F16, &BF16] {
+            for bits in 0u16..=0xFFFF {
+                let up = f16_to_32(spec, bits);
+                if spec.is_nan(bits) {
+                    assert!(f32::from_bits(up).is_nan());
+                    assert!(spec.is_nan(f32_to_16(spec, up)));
+                    continue;
+                }
+                if spec.is_inf(bits) {
+                    assert!(f32::from_bits(up).is_infinite());
+                }
+                assert_eq!(
+                    f32_to_16(spec, up),
+                    bits,
+                    "{}-bit exp roundtrip failed for {bits:#06x}",
+                    spec.exp_bits
+                );
+            }
+        }
+    }
+
+    /// Widening FMA (`fmac.s.h`): NaN and Inf inputs propagate per IEEE —
+    /// NaN anywhere → NaN; Inf·finite + finite → Inf; Inf·0 → NaN;
+    /// Inf + (−Inf) → NaN.
+    #[test]
+    fn widening_fma_nan_inf_propagation() {
+        for spec in [&F16, &BF16] {
+            let one = spec.from_f64(1.0);
+            let zero = spec.from_f64(0.0);
+            let inf = spec.inf(false);
+            let ninf = spec.inf(true);
+            let nan = spec.qnan();
+            let acc1 = 1.0f32.to_bits();
+
+            assert!(f32::from_bits(fma_widen(spec, nan, one, acc1)).is_nan());
+            assert!(f32::from_bits(fma_widen(spec, one, nan, acc1)).is_nan());
+            assert!(f32::from_bits(fma_widen(spec, one, one, f32::NAN.to_bits())).is_nan());
+
+            let r = f32::from_bits(fma_widen(spec, inf, one, acc1));
+            assert!(r.is_infinite() && r > 0.0);
+            let r = f32::from_bits(fma_widen(spec, ninf, one, acc1));
+            assert!(r.is_infinite() && r < 0.0);
+            // The two IEEE invalid-operation cases.
+            assert!(f32::from_bits(fma_widen(spec, inf, zero, acc1)).is_nan());
+            assert!(f32::from_bits(fma_widen(spec, inf, one, f32::NEG_INFINITY.to_bits()))
+                .is_nan());
+        }
+    }
+
+    /// Subnormals are kept, not flushed: the smallest subnormal survives
+    /// arithmetic identity ops, halving the smallest normal lands *in* the
+    /// subnormal range, and narrowing casts produce subnormal encodings.
+    #[test]
+    fn subnormals_are_not_flushed() {
+        for spec in [&F16, &BF16] {
+            let min_sub = 1u16; // smallest positive subnormal encoding
+            let one = spec.from_f64(1.0);
+            // x * 1.0 and x + 0.0 keep the subnormal (no flush-to-zero).
+            assert_eq!(mul16(spec, min_sub, one), min_sub);
+            assert_eq!(add16(spec, min_sub, spec.from_f64(0.0)), min_sub);
+            // Halving the smallest normal is subnormal, exact, non-zero.
+            let min_normal = spec.pack(false, 1, 0);
+            let half = spec.from_f64(0.5);
+            let halved = mul16(spec, min_normal, half);
+            let (_, exp, man) = spec.unpack(halved);
+            assert_eq!(exp, 0, "result must be subnormal");
+            assert_ne!(man, 0, "result must not flush to zero");
+            assert_eq!(spec.to_f64(halved), spec.to_f64(min_normal) / 2.0);
+            // Narrowing a subnormal-range f32 value yields the subnormal.
+            let via_cast = f32_to_16(spec, (spec.to_f64(min_sub) as f32).to_bits());
+            assert_eq!(via_cast, min_sub);
+            // And the widening FMA sees the subnormal's exact value.
+            let r = f32::from_bits(fma_widen(spec, min_sub, one, 0.0f32.to_bits()));
+            assert_eq!(r as f64, spec.to_f64(min_sub) as f32 as f64);
+        }
+    }
+}

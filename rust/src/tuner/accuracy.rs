@@ -1,0 +1,115 @@
+//! Quantitative accuracy metrics.
+//!
+//! Every workload carries a binary64 ground-truth output
+//! ([`crate::kernels::Workload::reference`], identical across variants of a
+//! benchmark); this module reduces a run's outputs against it to three
+//! scalar error figures. They replace the old boolean pass/fail tolerance
+//! as the signal the autotuner descends the precision ladder on:
+//!
+//! * **max-abs** — worst-case `|out − ref|` (the near-sensor "is any sample
+//!   broken" view);
+//! * **RMS** — `sqrt(mean((out − ref)²))` (average noise floor added by the
+//!   reduced precision);
+//! * **rel** — relative L2 error `‖out − ref‖₂ / ‖ref‖₂`, the
+//!   scale-free figure `transpfp tune --budget` compares against.
+
+/// Error of one run's outputs against the f64 reference.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ErrorStats {
+    /// Worst-case absolute error.
+    pub max_abs: f64,
+    /// Root-mean-square error.
+    pub rms: f64,
+    /// Relative L2 error `‖out − ref‖₂ / ‖ref‖₂`.
+    pub rel: f64,
+}
+
+impl ErrorStats {
+    /// Sentinel for "no usable comparison" (missing reference, length
+    /// mismatch, or non-finite outputs): infinitely bad, so it can never be
+    /// admitted under any finite budget and never poisons a comparison the
+    /// way NaN would.
+    pub const UNBOUNDED: ErrorStats =
+        ErrorStats { max_abs: f64::INFINITY, rms: f64::INFINITY, rel: f64::INFINITY };
+
+    /// True if the relative error meets `budget` (strictly finite check —
+    /// UNBOUNDED never passes).
+    pub fn within(&self, budget: f64) -> bool {
+        self.rel <= budget
+    }
+}
+
+/// Reduce `outputs` against `reference`. A missing reference, a length
+/// mismatch, or any non-finite deviation yields [`ErrorStats::UNBOUNDED`]
+/// rather than NaN-poisoned numbers.
+pub fn error_stats(outputs: &[f64], reference: &[f64]) -> ErrorStats {
+    if reference.is_empty() || outputs.len() != reference.len() {
+        return ErrorStats::UNBOUNDED;
+    }
+    let mut max_abs = 0.0f64;
+    let mut sq = 0.0f64;
+    let mut ref_sq = 0.0f64;
+    for (o, r) in outputs.iter().zip(reference) {
+        let d = o - r;
+        if !d.is_finite() {
+            return ErrorStats::UNBOUNDED;
+        }
+        max_abs = max_abs.max(d.abs());
+        sq += d * d;
+        ref_sq += r * r;
+    }
+    let rms = (sq / outputs.len() as f64).sqrt();
+    let rel = if ref_sq > 0.0 {
+        (sq / ref_sq).sqrt()
+    } else if sq == 0.0 {
+        0.0
+    } else {
+        f64::INFINITY
+    };
+    ErrorStats { max_abs, rms, rel }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_outputs_have_zero_error() {
+        let r = [1.0, -2.0, 3.0];
+        let e = error_stats(&r, &r);
+        assert_eq!(e, ErrorStats { max_abs: 0.0, rms: 0.0, rel: 0.0 });
+        assert!(e.within(0.0));
+    }
+
+    #[test]
+    fn known_deviation() {
+        // out = ref + [0.3, -0.4, 0]: max 0.4, rms = 0.5/sqrt(3),
+        // rel = 0.5 / ||(3,4,12)|| = 0.5/13.
+        let reference = [3.0, 4.0, 12.0];
+        let out = [3.3, 3.6, 12.0];
+        let e = error_stats(&out, &reference);
+        assert!((e.max_abs - 0.4).abs() < 1e-12);
+        assert!((e.rms - 0.5 / 3.0f64.sqrt()).abs() < 1e-12);
+        assert!((e.rel - 0.5 / 13.0).abs() < 1e-12);
+        assert!(e.within(0.05));
+        assert!(!e.within(0.01));
+    }
+
+    #[test]
+    fn degenerate_inputs_are_unbounded() {
+        assert_eq!(error_stats(&[1.0], &[]), ErrorStats::UNBOUNDED);
+        assert_eq!(error_stats(&[1.0, 2.0], &[1.0]), ErrorStats::UNBOUNDED);
+        assert_eq!(error_stats(&[f64::NAN], &[1.0]), ErrorStats::UNBOUNDED);
+        assert_eq!(error_stats(&[f64::INFINITY], &[1.0]), ErrorStats::UNBOUNDED);
+        assert!(!ErrorStats::UNBOUNDED.within(f64::MAX));
+    }
+
+    #[test]
+    fn zero_reference_norm() {
+        // All-zero reference: exact match → 0, any deviation → unbounded rel.
+        assert_eq!(error_stats(&[0.0, 0.0], &[0.0, 0.0]).rel, 0.0);
+        let e = error_stats(&[1e-3, 0.0], &[0.0, 0.0]);
+        assert_eq!(e.rel, f64::INFINITY);
+        assert!((e.max_abs - 1e-3).abs() < 1e-18);
+    }
+}

@@ -1,0 +1,62 @@
+//! The per-kernel precision ladder.
+//!
+//! Every benchmark can run on five rungs, ordered from the most to the
+//! least precise — which, on this architecture, is also the direction of
+//! increasing performance and energy efficiency (§5.2: "the cheapest FP
+//! format that still meets the accuracy requirement"):
+//!
+//! | rung | variant        | arithmetic            | memory traffic |
+//! |------|----------------|-----------------------|----------------|
+//! | 0    | `scalar`       | binary32 scalar       | words          |
+//! | 1    | `scalar-f16`   | binary16 scalar       | halfwords      |
+//! | 2    | `scalar-bf16`  | bfloat16 scalar       | halfwords      |
+//! | 3    | `vector-f16`   | packed 2×binary16     | halfwords ×2   |
+//! | 4    | `vector-bf16`  | packed 2×bfloat16     | halfwords ×2   |
+//!
+//! Error is *not* monotone along the ladder: the vector rungs accumulate
+//! dot products in binary32 (`vfdotpex`), so `vector-f16` is often more
+//! accurate than `scalar-bf16` while also being faster. That is why the
+//! search pairs a greedy descent with an exhaustive fallback
+//! ([`super::search`]).
+
+use crate::kernels::Variant;
+use crate::transfp::FpMode;
+
+/// The ladder, most precise first.
+pub const LADDER: [Variant; 5] = [
+    Variant::Scalar,
+    Variant::Scalar16(FpMode::F16),
+    Variant::Scalar16(FpMode::Bf16),
+    Variant::Vector(FpMode::VecF16),
+    Variant::Vector(FpMode::VecBf16),
+];
+
+/// The ladder as a slice (convenience for `points()` callers).
+pub fn ladder() -> &'static [Variant] {
+    &LADDER
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_shape() {
+        assert_eq!(LADDER.len(), 5);
+        assert_eq!(LADDER[0], Variant::Scalar);
+        assert!(!LADDER[0].is_sub_f32());
+        for v in &LADDER[1..] {
+            assert!(v.is_sub_f32(), "{v:?} must count as a descent target");
+        }
+        // The ladder is exactly the buildable variant set, in order.
+        assert_eq!(LADDER, Variant::all());
+    }
+
+    #[test]
+    fn ladder_labels_are_unique() {
+        let mut labels: Vec<&str> = ladder().iter().map(|v| v.label()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), LADDER.len());
+    }
+}

@@ -1,0 +1,29 @@
+//! Accuracy-aware transprecision autotuner.
+//!
+//! The paper's core claim is that precision is a *tunable knob*: a
+//! near-sensor workload should run at the cheapest FP format that still
+//! meets its accuracy requirement (§2, §5.2). The rest of the crate can
+//! simulate every format and measure performance/energy/area — this module
+//! closes the loop:
+//!
+//! * [`accuracy`] — quantitative error metrics (max-abs, RMS, relative L2)
+//!   of a run against the per-workload binary64 reference;
+//! * [`ladder`] — the ordered per-kernel precision ladder
+//!   F32 → scalar-16 → vec-16, in both 16-bit formats;
+//! * [`search`] — greedy descent + exhaustive fallback over the ladder,
+//!   resolved through the memoizing [`crate::coordinator::QueryEngine`]
+//!   (warm tuning runs issue zero simulator runs), producing a
+//!   [`search::TuneReport`] with (error, Gflop/s, Gflop/s/W) deltas vs
+//!   binary32.
+//!
+//! The CLI surface is `transpfp tune --budget <rel-err>`; the
+//! accuracy-extended Pareto frontier over (error, perf, energy efficiency)
+//! lives in [`crate::coordinator::pareto`].
+
+pub mod accuracy;
+pub mod ladder;
+pub mod search;
+
+pub use accuracy::{error_stats, ErrorStats};
+pub use ladder::{ladder, LADDER};
+pub use search::{tune, tune_table, tune_with, TuneChoice, TuneReport, DEFAULT_BUDGET};

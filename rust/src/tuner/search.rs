@@ -1,0 +1,318 @@
+//! Precision-ladder search: greedy descent with an exhaustive fallback.
+//!
+//! Given an error budget (relative L2 against the f64 reference), the tuner
+//! resolves every rung of every benchmark's ladder through the memoizing
+//! [`QueryEngine`] — so a warm tune issues **zero** simulator runs
+//! (`benches/tuner.rs` gates this) — and then selects, per benchmark, the
+//! most energy-efficient rung whose measured error meets the budget:
+//!
+//! 1. **Greedy descent** walks the ladder top-down while the next rung
+//!    stays admissible. This alone would under-tune: error is not monotone
+//!    along the ladder (the vector rungs accumulate in binary32, so
+//!    `vector-f16` often beats `scalar-bf16` on accuracy *and* speed).
+//! 2. **Exhaustive fallback** therefore scans every admissible rung and
+//!    picks the best by (energy efficiency, then performance, then ladder
+//!    depth). With five rungs per benchmark the scan is trivially cheap —
+//!    all candidates are already resolved for step 1.
+//!
+//! If no rung meets the budget (including binary32 itself), the choice
+//! falls back to the binary32 baseline and is flagged over-budget in the
+//! report.
+
+use std::cmp::Ordering;
+
+use super::ladder::LADDER;
+use crate::config::ClusterConfig;
+use crate::coordinator::query::points;
+use crate::coordinator::sweep::Measurement;
+use crate::coordinator::QueryEngine;
+use crate::kernels::Benchmark;
+use crate::report::Table;
+
+/// Default relative-error budget of `transpfp tune`.
+pub const DEFAULT_BUDGET: f64 = 1e-2;
+
+/// One benchmark's tuning outcome.
+#[derive(Debug, Clone)]
+pub struct TuneChoice {
+    pub bench: Benchmark,
+    /// The binary32 scalar baseline (rung 0).
+    pub baseline: Measurement,
+    /// The selected rung's measurement.
+    pub chosen: Measurement,
+    /// Index of the selected rung in [`LADDER`] (0 = stayed at binary32).
+    pub rung: usize,
+    /// Where the greedy descent alone stopped (before the fallback scan).
+    pub greedy_rung: usize,
+    /// How many of the five rungs met the budget.
+    pub admissible: usize,
+}
+
+impl TuneChoice {
+    /// True if the selection's measured error meets `budget`.
+    pub fn within_budget(&self, budget: f64) -> bool {
+        self.chosen.err.within(budget)
+    }
+
+    /// Performance of the selection relative to binary32 (×).
+    pub fn speedup(&self) -> f64 {
+        self.chosen.metrics.perf_gflops / self.baseline.metrics.perf_gflops
+    }
+
+    /// Energy efficiency of the selection relative to binary32 (×).
+    pub fn eeff_gain(&self) -> f64 {
+        self.chosen.metrics.energy_eff / self.baseline.metrics.energy_eff
+    }
+}
+
+/// A full `transpfp tune` result: one choice per benchmark.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub cfg: ClusterConfig,
+    pub budget: f64,
+    pub choices: Vec<TuneChoice>,
+}
+
+impl TuneReport {
+    /// Benchmarks for which a sub-binary32 rung was selected.
+    pub fn sub_f32_count(&self) -> usize {
+        self.choices.iter().filter(|c| c.chosen.variant.is_sub_f32()).count()
+    }
+
+    /// True if every selection's measured error meets the budget.
+    pub fn all_within_budget(&self) -> bool {
+        self.choices.iter().all(|c| c.within_budget(self.budget))
+    }
+}
+
+/// Admissibility: numerically verified against the variant's own golden
+/// *and* within the relative-error budget against the f64 reference.
+fn admissible(m: &Measurement, budget: f64) -> bool {
+    m.verified && m.err.within(budget)
+}
+
+/// Selection over one benchmark's resolved rungs (in [`LADDER`] order):
+/// returns (chosen rung, greedy rung, admissible count). Factored out so
+/// the policy is unit-testable on synthetic measurements.
+fn select(rungs: &[Measurement], budget: f64) -> (usize, usize, usize) {
+    // Greedy descent: keep stepping down while the next rung is admissible.
+    let mut greedy = 0usize;
+    while greedy + 1 < rungs.len() && admissible(&rungs[greedy + 1], budget) {
+        greedy += 1;
+    }
+    let count = rungs.iter().filter(|m| admissible(m, budget)).count();
+    // Exhaustive fallback: best admissible rung by (e.eff, perf, depth).
+    let best = rungs
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| admissible(m, budget))
+        .max_by(|(ia, a), (ib, b)| {
+            a.metrics
+                .energy_eff
+                .partial_cmp(&b.metrics.energy_eff)
+                .unwrap_or(Ordering::Equal)
+                .then(
+                    a.metrics
+                        .perf_gflops
+                        .partial_cmp(&b.metrics.perf_gflops)
+                        .unwrap_or(Ordering::Equal),
+                )
+                .then(ia.cmp(ib))
+        });
+    match best {
+        Some((i, _)) => (i, greedy, count),
+        None => (0, greedy, count), // budget unattainable: stay at binary32
+    }
+}
+
+/// Tune every benchmark on `cfg` under `budget`, resolving all candidates
+/// through `engine`'s measurement cache.
+pub fn tune_with(engine: &QueryEngine, cfg: &ClusterConfig, budget: f64) -> TuneReport {
+    let benches = Benchmark::all();
+    let ms = engine.query(&points(&[*cfg], &benches, &LADDER));
+    let choices = benches
+        .iter()
+        .enumerate()
+        .map(|(bi, &bench)| {
+            let rungs = &ms[bi * LADDER.len()..(bi + 1) * LADDER.len()];
+            let (rung, greedy_rung, admissible) = select(rungs, budget);
+            TuneChoice {
+                bench,
+                baseline: rungs[0].clone(),
+                chosen: rungs[rung].clone(),
+                rung,
+                greedy_rung,
+                admissible,
+            }
+        })
+        .collect();
+    TuneReport { cfg: *cfg, budget, choices }
+}
+
+/// [`tune_with`] on the process-wide engine.
+pub fn tune(cfg: &ClusterConfig, budget: f64) -> TuneReport {
+    tune_with(QueryEngine::global(), cfg, budget)
+}
+
+/// Render one or more tune reports as a single table (text or CSV). The
+/// leading `config` column keeps multi-config output (`transpfp tune all
+/// --csv`) one well-formed CSV stream: one header, one row per
+/// (config, benchmark).
+pub fn tune_table(reports: &[TuneReport]) -> Table {
+    let mut t = Table::new(vec![
+        "config",
+        "bench",
+        "chosen",
+        "rel_err",
+        "within_budget",
+        "admissible_rungs",
+        "perf_gflops",
+        "speedup_vs_f32",
+        "energy_eff",
+        "eeff_vs_f32",
+        "cycles",
+    ]);
+    for r in reports {
+        for c in &r.choices {
+            t.row(vec![
+                r.cfg.mnemonic(),
+                c.bench.name().to_string(),
+                c.chosen.variant.label().to_string(),
+                format!("{:.3e}", c.chosen.err.rel),
+                c.within_budget(r.budget).to_string(),
+                c.admissible.to_string(),
+                format!("{:.3}", c.chosen.metrics.perf_gflops),
+                format!("{:.2}", c.speedup()),
+                format!("{:.1}", c.chosen.metrics.energy_eff),
+                format!("{:.2}", c.eeff_gain()),
+                c.chosen.cycles.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::counters::CoreCounters;
+    use crate::kernels::Variant;
+    use crate::model::Metrics;
+    use crate::tuner::accuracy::ErrorStats;
+
+    /// Synthetic rung measurement with the given (rel error, eeff, perf).
+    fn rung(variant: Variant, rel: f64, eeff: f64, perf: f64, verified: bool) -> Measurement {
+        Measurement {
+            cfg: ClusterConfig::new(8, 8, 1),
+            bench: Benchmark::Fir,
+            variant,
+            metrics: Metrics {
+                perf_gflops: perf,
+                energy_eff: eeff,
+                area_eff: 1.0,
+                flops_per_cycle: 1.0,
+            },
+            cycles: 1000,
+            agg: CoreCounters::default(),
+            fp_intensity: 0.3,
+            mem_intensity: 0.5,
+            verified,
+            err: ErrorStats { max_abs: rel, rms: rel, rel },
+        }
+    }
+
+    fn synthetic_ladder(errs: [f64; 5]) -> Vec<Measurement> {
+        // Monotone cost model: deeper rungs are more efficient and faster.
+        LADDER
+            .iter()
+            .zip(errs)
+            .enumerate()
+            .map(|(i, (&v, e))| rung(v, e, 50.0 + 10.0 * i as f64, 1.0 + i as f64, true))
+            .collect()
+    }
+
+    #[test]
+    fn greedy_descends_contiguous_prefix() {
+        // All rungs admissible → greedy reaches the bottom, fallback keeps it.
+        let rungs = synthetic_ladder([1e-7, 1e-3, 2e-3, 5e-4, 3e-3]);
+        let (chosen, greedy, count) = select(&rungs, 1e-2);
+        assert_eq!((chosen, greedy, count), (4, 4, 5));
+    }
+
+    #[test]
+    fn exhaustive_fallback_beats_early_greedy_stop() {
+        // scalar-f16 blows the budget but vector-f16 meets it: greedy stops
+        // at the baseline, the exhaustive scan still finds rung 3.
+        let rungs = synthetic_ladder([1e-7, 5e-2, 6e-2, 1e-3, 4e-2]);
+        let (chosen, greedy, count) = select(&rungs, 1e-2);
+        assert_eq!(greedy, 0, "greedy must stop at the first inadmissible rung");
+        assert_eq!(chosen, 3, "fallback must find the admissible deep rung");
+        assert_eq!(count, 2);
+    }
+
+    #[test]
+    fn unattainable_budget_stays_at_f32() {
+        let rungs = synthetic_ladder([1e-7, 1e-2, 1e-2, 1e-2, 1e-2]);
+        let (chosen, _, count) = select(&rungs, 1e-9);
+        assert_eq!(chosen, 0);
+        assert_eq!(count, 0);
+    }
+
+    #[test]
+    fn unverified_rungs_are_never_selected() {
+        let mut rungs = synthetic_ladder([1e-7, 1e-4, 1e-4, 1e-4, 1e-4]);
+        for r in &mut rungs[1..] {
+            r.verified = false;
+        }
+        let (chosen, greedy, count) = select(&rungs, 1e-2);
+        assert_eq!((chosen, greedy, count), (0, 0, 1));
+    }
+
+    /// Acceptance gate: on the paper's 8-core full-sharing configuration a
+    /// 1e-2 budget must push at least half of the 8 benchmarks below
+    /// binary32, every selection's measured error must meet the budget, and
+    /// a warm re-tune must issue zero simulator runs.
+    #[test]
+    fn tune_descends_and_is_warm_cacheable() {
+        let engine = QueryEngine::new();
+        let cfg = ClusterConfig::new(8, 8, 1);
+        let r = tune_with(&engine, &cfg, DEFAULT_BUDGET);
+        assert_eq!(r.choices.len(), 8);
+        assert!(
+            r.sub_f32_count() >= 4,
+            "budget 1e-2 must select a sub-F32 variant for at least half \
+             of the benchmarks, got {}",
+            r.sub_f32_count()
+        );
+        for c in &r.choices {
+            assert!(c.within_budget(r.budget), "{}: over budget", c.bench.name());
+            assert!(c.chosen.verified);
+            assert!(c.speedup() > 0.0 && c.eeff_gain() > 0.0);
+        }
+        assert!(r.all_within_budget());
+
+        let cold = engine.stats();
+        let warm = tune_with(&engine, &cfg, DEFAULT_BUDGET);
+        let after = engine.stats();
+        assert_eq!(after.misses, cold.misses, "warm tune must not simulate");
+        assert_eq!(warm.sub_f32_count(), r.sub_f32_count());
+        for (a, b) in r.choices.iter().zip(&warm.choices) {
+            assert_eq!(a.rung, b.rung, "{}: warm selection drifted", a.bench.name());
+            assert_eq!(a.chosen.err.rel.to_bits(), b.chosen.err.rel.to_bits());
+        }
+    }
+
+    #[test]
+    fn tune_table_has_one_row_per_config_and_benchmark() {
+        let engine = QueryEngine::new();
+        let cfg = ClusterConfig::new(8, 2, 0);
+        let r = tune_with(&engine, &cfg, DEFAULT_BUDGET);
+        let csv = tune_table(std::slice::from_ref(&r)).to_csv();
+        assert_eq!(csv.lines().count(), 1 + 8);
+        assert!(csv.starts_with("config,bench,chosen,rel_err,"));
+        // Two reports concatenate into one stream with a single header.
+        let two = tune_table(&[r.clone(), r]).to_csv();
+        assert_eq!(two.lines().count(), 1 + 16);
+        assert_eq!(two.lines().filter(|l| l.starts_with("config,")).count(), 1);
+    }
+}

@@ -38,12 +38,13 @@ fn sampled_configs() -> [ClusterConfig; 5] {
     ]
 }
 
-/// All 8 kernels × both variants × the config sample: cycle-exact.
+/// All 8 kernels × scalar / scalar-16 / vector variants × the config
+/// sample: cycle-exact.
 #[test]
 fn kernels_cycle_identical_across_engines() {
     for cfg in sampled_configs() {
         for b in Benchmark::all() {
-            for v in [Variant::Scalar, Variant::VEC] {
+            for v in [Variant::Scalar, Variant::SCALAR_F16, Variant::VEC] {
                 let w = b.build(v, &cfg);
                 let (sf, of) = w.run_with(&cfg, cfg.cores, Engine::Event);
                 let (sr, or) = w.run_with(&cfg, cfg.cores, Engine::Reference);
@@ -186,7 +187,7 @@ fn sweep_is_deterministic() {
     assert_eq!(key(&a), key(&b), "sweep results must be deterministic");
     // Slot order is (config, bench, variant) regardless of worker timing.
     assert_eq!(a[0].bench, Benchmark::Fir);
-    assert_eq!(a[1].variant.label(), "vector");
+    assert_eq!(a[1].variant.label(), "vector-f16");
     assert_eq!(a[a.len() - 1].cfg.mnemonic(), "16c16f2p");
 }
 
