@@ -1,0 +1,82 @@
+//! `cargo bench --bench runtime` — gates the runtime-era figure pipeline.
+//!
+//! Regenerates fig 5 (power @100 MHz, full design space) and fig 6
+//! (parallel + vectorization speed-ups, 16-core configs × 5 occupancies ×
+//! 2 variants) twice on a private query engine: the cold pass simulates
+//! every unique point; the warm pass must resolve entirely from the cache
+//! — occupancy is part of the address since ENGINE_VERSION 3. Gates
+//! (process exits non-zero on violation):
+//!
+//! * the warm pass issues **zero** simulator runs (cache-stats assertion);
+//! * warm resolves ≥ 10× faster than cold;
+//! * the warm tables are byte-identical to the cold ones.
+//!
+//! The `runtime-*` lines below are grepped into the CI step summary.
+
+use std::process::ExitCode;
+use std::time::Instant;
+
+use transpfp::coordinator::{fig5_with, fig6_with, QueryEngine};
+
+/// fig5: 18 configs × MATMUL scalar at full occupancy. fig6: 9 16-core
+/// configs × 8 benches × 5 occupancies × 2 variants. The 9 16-core
+/// full-occupancy MATMUL-scalar points appear in both figures and resolve
+/// from the cache the second time they are planned.
+const UNIQUE_POINTS: u64 = 18 + 9 * 8 * 5 * 2 - 9;
+const MIN_SPEEDUP: f64 = 10.0;
+
+fn main() -> ExitCode {
+    let engine = QueryEngine::new();
+
+    let t0 = Instant::now();
+    let cold5 = fig5_with(&engine);
+    let cold6 = fig6_with(&engine);
+    let cold_s = t0.elapsed().as_secs_f64();
+    let after_cold = engine.stats();
+
+    let t1 = Instant::now();
+    let warm5 = fig5_with(&engine);
+    let warm6 = fig6_with(&engine);
+    let warm_s = t1.elapsed().as_secs_f64();
+    let after_warm = engine.stats();
+
+    let warm_misses = after_warm.misses - after_cold.misses;
+    let speedup = cold_s / warm_s.max(1e-9);
+
+    println!("runtime-cold-seconds: {cold_s:.3}");
+    println!("runtime-warm-seconds: {warm_s:.6}");
+    println!("runtime-speedup: {speedup:.0}x");
+    println!("runtime-cold-misses: {}", after_cold.misses);
+    println!("runtime-warm-misses: {warm_misses}");
+    println!("runtime-entries: {}", after_warm.entries);
+
+    let mut ok = true;
+    if after_cold.misses != UNIQUE_POINTS {
+        eprintln!(
+            "FAIL: cold fig5+fig6 should miss exactly {UNIQUE_POINTS} unique points, saw {}",
+            after_cold.misses
+        );
+        ok = false;
+    }
+    if warm_misses != 0 {
+        eprintln!("FAIL: warm-cache fig5/fig6 issued {warm_misses} simulator runs (must be 0)");
+        ok = false;
+    }
+    if warm5.to_csv() != cold5.to_csv() {
+        eprintln!("FAIL: warm fig5 diverges from cold fig5");
+        ok = false;
+    }
+    if warm6.to_csv() != cold6.to_csv() {
+        eprintln!("FAIL: warm fig6 diverges from cold fig6");
+        ok = false;
+    }
+    if speedup < MIN_SPEEDUP {
+        eprintln!("FAIL: warm-vs-cold speedup {speedup:.1}x below the {MIN_SPEEDUP}x gate");
+        ok = false;
+    }
+    if !ok {
+        return ExitCode::FAILURE;
+    }
+    println!("runtime: OK (zero warm misses, {speedup:.0}x >= {MIN_SPEEDUP}x)");
+    ExitCode::SUCCESS
+}

@@ -37,6 +37,7 @@ use crate::isa::insn::Insn;
 
 use super::core::{Core, CoreState, Producer};
 use super::counters::RunStats;
+use super::event::WAKEUP_LATENCY;
 use super::mem::Region;
 use super::{Cluster, TAKEN_BRANCH_CYCLES};
 
@@ -125,7 +126,8 @@ impl Cluster {
             .count();
         assert!(
             asleep == 0,
-            "simulation deadlocked: {asleep} core(s) asleep at a barrier that can never complete"
+            "simulation deadlocked: {asleep} core(s) asleep at a barrier or event line that can \
+             never complete"
         );
         self.collect_stats()
     }
@@ -315,6 +317,14 @@ impl Cluster {
                     };
                     let addr = (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
                     match self.mem.region_of(addr) {
+                        Region::Dma => {
+                            let addr =
+                                self.cores[ci].mem_addr_and_postinc(base, offset, post_inc);
+                            self.exec_dma_load(ci, addr, rd, t);
+                            let c = &mut self.cores[ci];
+                            t += 1;
+                            advance(c, &d);
+                        }
                         Region::Tcdm => {
                             let bank = self.mem.bank_of(addr);
                             if !self.mem.claim_bank(bank, t) {
@@ -353,6 +363,14 @@ impl Cluster {
                     };
                     let addr = (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
                     match self.mem.region_of(addr) {
+                        Region::Dma => {
+                            let addr =
+                                self.cores[ci].mem_addr_and_postinc(base, offset, post_inc);
+                            self.exec_dma_store(ci, addr, rs, t);
+                            let c = &mut self.cores[ci];
+                            t += 1;
+                            advance(c, &d);
+                        }
                         Region::Tcdm => {
                             let bank = self.mem.bank_of(addr);
                             if !self.mem.claim_bank(bank, t) {
@@ -443,6 +461,69 @@ impl Cluster {
                         }
                     }
                 }
+                OpClass::Amo => {
+                    let Insn::Amo { op, rd, base, offset, rs } = d.insn else { unreachable!() };
+                    let addr = (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
+                    assert!(
+                        matches!(self.mem.region_of(addr), Region::Tcdm),
+                        "atomic outside TCDM at {addr:#x}"
+                    );
+                    let bank = self.mem.bank_of(addr);
+                    if !self.mem.claim_bank(bank, t) {
+                        let c = &mut self.cores[ci];
+                        c.counters.tcdm_cont += 1;
+                        c.next_issue = t + 1;
+                        return;
+                    }
+                    self.exec_amo(ci, op, rd, addr, rs, t);
+                    let c = &mut self.cores[ci];
+                    t += 1;
+                    advance(c, &d);
+                }
+                OpClass::WaitEvent => {
+                    let Insn::WaitEvent { ev } = d.insn else { unreachable!() };
+                    {
+                        let c = &mut self.cores[ci];
+                        c.counters.active += 1;
+                        c.counters.instrs += 1;
+                        c.counters.int_instrs += 1;
+                        advance(c, &d);
+                    }
+                    if self.event.wait_event(ci, ev) {
+                        t += 1; // buffered event: consumed without sleeping
+                    } else {
+                        let c = &mut self.cores[ci];
+                        c.state = CoreState::Sleeping { since: t + 1 };
+                        c.next_issue = u64::MAX; // woken by a SetEvent
+                        return;
+                    }
+                }
+                OpClass::SetEvent => {
+                    let Insn::SetEvent { ev } = d.insn else { unreachable!() };
+                    {
+                        let c = &mut self.cores[ci];
+                        c.counters.active += 1;
+                        c.counters.instrs += 1;
+                        c.counters.int_instrs += 1;
+                        advance(c, &d);
+                    }
+                    let wake = t + WAKEUP_LATENCY;
+                    for w in self.event.set_event(ev) {
+                        let c = &mut self.cores[w];
+                        if let CoreState::Sleeping { since } = c.state {
+                            c.counters.barrier_idle += wake - since;
+                            c.state = CoreState::Running;
+                            c.next_issue = wake;
+                            woken.push(w);
+                        }
+                    }
+                    if solo {
+                        t += 1; // no sleepers to hand to the scheduler
+                        continue;
+                    }
+                    self.cores[ci].next_issue = t + 1;
+                    return; // reschedule so woken cores enter the heap
+                }
                 OpClass::Barrier => {
                     // Count the barrier instruction itself.
                     {
@@ -454,10 +535,15 @@ impl Cluster {
                     }
                     match self.event.arrive(ci, t) {
                         Some(wake) => {
-                            // Wake everyone (including self).
+                            // Wake everyone (including self) — except cores
+                            // parked on a software event line, which only a
+                            // SetEvent may release.
+                            let event = &self.event;
                             for c in self.cores.iter_mut() {
                                 match c.state {
-                                    CoreState::Sleeping { since } => {
+                                    CoreState::Sleeping { since }
+                                        if !event.is_event_waiting(c.id) =>
+                                    {
                                         c.counters.barrier_idle += wake - since;
                                         c.state = CoreState::Running;
                                         c.next_issue = wake;

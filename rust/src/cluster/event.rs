@@ -1,20 +1,37 @@
-//! Event unit (§3.1): low-overhead barrier synchronization with sleep.
+//! Event unit (§3.1): low-overhead barrier synchronization with sleep, plus
+//! the software event lines the fork-join runtime is built on.
 //!
 //! A core reaching a barrier sends its arrival to the event unit and goes to
 //! sleep (clock-gated — these cycles are cheap in the power model, the
 //! mechanism behind the paper's "energy efficiency is not affected by the
 //! effectiveness of parallelization"). When the last core arrives, all
 //! sleepers are woken after a fixed 2-cycle wake-up.
+//!
+//! **Software events** ([`NUM_EVENTS`] lines) follow the PULP event-unit
+//! model: `SetEvent` broadcasts a line to every core; cores *waiting* on
+//! that line wake after the same 2-cycle latency, every other core buffers
+//! it (one sticky bit per line per core — multiple sets before a wait
+//! collapse). `WaitEvent` consumes a buffered event without sleeping, or
+//! registers the core as a waiter and puts it to sleep. Event sleep and
+//! barrier sleep are distinct: a completing barrier never wakes a core
+//! parked on an event line, and vice versa.
 
-/// Wake-up latency after the last arrival.
+/// Wake-up latency after the last barrier arrival / an event set.
 pub const WAKEUP_LATENCY: u64 = 2;
 
-/// Barrier state for one cluster.
+/// Number of software event lines (PULP SW events).
+pub const NUM_EVENTS: usize = 32;
+
+/// Barrier + software-event state for one cluster.
 #[derive(Debug, Clone)]
 pub struct EventUnit {
     ncores: usize,
     arrived: Vec<bool>,
     count: usize,
+    /// Per-core buffered-event bitmask (bit `ev` set = line `ev` pending).
+    buffered: Vec<u32>,
+    /// Per-core event line the core is currently sleeping on.
+    waiting: Vec<Option<u8>>,
     /// Monotonically increasing barrier generation (for debugging/tests).
     pub generation: u64,
 }
@@ -22,7 +39,14 @@ pub struct EventUnit {
 impl EventUnit {
     /// Event unit for `ncores` cores.
     pub fn new(ncores: usize) -> Self {
-        EventUnit { ncores, arrived: vec![false; ncores], count: 0, generation: 0 }
+        EventUnit {
+            ncores,
+            arrived: vec![false; ncores],
+            count: 0,
+            buffered: vec![0; ncores],
+            waiting: vec![None; ncores],
+            generation: 0,
+        }
     }
 
     /// Reset to an empty barrier over `ncores` cores, keeping the
@@ -32,6 +56,10 @@ impl EventUnit {
         self.arrived.clear();
         self.arrived.resize(ncores, false);
         self.count = 0;
+        self.buffered.clear();
+        self.buffered.resize(ncores, 0);
+        self.waiting.clear();
+        self.waiting.resize(ncores, None);
         self.generation = 0;
     }
 
@@ -52,9 +80,50 @@ impl EventUnit {
         }
     }
 
-    /// Number of cores currently waiting.
+    /// Number of cores currently waiting at the barrier.
     pub fn waiting(&self) -> usize {
         self.count
+    }
+
+    /// Core `id` waits on event line `ev`. Returns `true` if a buffered
+    /// event was consumed (the core continues without sleeping); `false`
+    /// registers the core as a waiter (it must sleep until a `set_event`).
+    pub fn wait_event(&mut self, id: usize, ev: u8) -> bool {
+        assert!((ev as usize) < NUM_EVENTS, "event line {ev} out of range");
+        let bit = 1u32 << ev;
+        if self.buffered[id] & bit != 0 {
+            self.buffered[id] &= !bit;
+            true
+        } else {
+            debug_assert!(self.waiting[id].is_none(), "core {id} already event-waiting");
+            self.waiting[id] = Some(ev);
+            false
+        }
+    }
+
+    /// Raise event line `ev` for every core. Cores waiting on `ev` are
+    /// returned (in core-id order) and deregistered — the caller wakes them
+    /// [`WAKEUP_LATENCY`] later; every other core (including the setter)
+    /// buffers the line.
+    pub fn set_event(&mut self, ev: u8) -> Vec<usize> {
+        assert!((ev as usize) < NUM_EVENTS, "event line {ev} out of range");
+        let bit = 1u32 << ev;
+        let mut woken = Vec::new();
+        for id in 0..self.ncores {
+            if self.waiting[id] == Some(ev) {
+                self.waiting[id] = None;
+                woken.push(id);
+            } else {
+                self.buffered[id] |= bit;
+            }
+        }
+        woken
+    }
+
+    /// True if core `id` is asleep on an event line (as opposed to a
+    /// barrier) — barrier completion must not wake such cores.
+    pub fn is_event_waiting(&self, id: usize) -> bool {
+        self.waiting[id].is_some()
     }
 }
 
@@ -90,5 +159,52 @@ mod tests {
         let mut eu = EventUnit::new(2);
         eu.arrive(0, 1);
         eu.arrive(0, 2);
+    }
+
+    #[test]
+    fn events_buffer_and_wake() {
+        let mut eu = EventUnit::new(3);
+        // Core 1 waits first, core 2 will see a buffered event.
+        assert!(!eu.wait_event(1, 5));
+        assert!(eu.is_event_waiting(1));
+        let woken = eu.set_event(5);
+        assert_eq!(woken, vec![1]);
+        assert!(!eu.is_event_waiting(1));
+        // Cores 0 and 2 (and the setter) buffered the line.
+        assert!(eu.wait_event(0, 5), "buffered event consumed without sleep");
+        assert!(eu.wait_event(2, 5));
+        // The buffer is consumed: a second wait sleeps.
+        assert!(!eu.wait_event(2, 5));
+    }
+
+    #[test]
+    fn events_are_per_line() {
+        let mut eu = EventUnit::new(2);
+        assert!(!eu.wait_event(0, 3));
+        // Raising a different line does not wake the line-3 waiter.
+        assert_eq!(eu.set_event(4), Vec::<usize>::new());
+        assert!(eu.is_event_waiting(0));
+        assert_eq!(eu.set_event(3), vec![0]);
+        // Line 4 stayed buffered for core 0 meanwhile.
+        assert!(eu.wait_event(0, 4));
+    }
+
+    #[test]
+    fn multiple_sets_collapse() {
+        let mut eu = EventUnit::new(1);
+        eu.set_event(7);
+        eu.set_event(7);
+        assert!(eu.wait_event(0, 7));
+        assert!(!eu.wait_event(0, 7), "sets collapse into one sticky bit");
+    }
+
+    #[test]
+    fn reset_clears_events() {
+        let mut eu = EventUnit::new(2);
+        eu.set_event(1);
+        assert!(!eu.wait_event(0, 2));
+        eu.reset(2);
+        assert!(!eu.is_event_waiting(0));
+        assert!(!eu.wait_event(0, 1), "buffered events cleared by reset");
     }
 }

@@ -49,12 +49,14 @@ use crate::isa::Program;
 
 pub(crate) use crate::isa::decoded::{INT_DIV_LATENCY, TAKEN_BRANCH_CYCLES};
 
-use self::core::{Core, CoreState};
+use self::core::{Core, CoreState, Producer};
 use self::counters::{CoreCounters, RunStats};
 use self::event::EventUnit;
 use self::fpu::FpuSubsystem;
 use self::icache::ICache;
-use self::mem::Memory;
+use self::mem::{DmaCtl, Memory, Region};
+use crate::isa::insn::AmoOp;
+use crate::isa::MemSize;
 
 /// Which issue engine executes a run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -77,8 +79,10 @@ pub struct Cluster {
     pub fpus: FpuSubsystem,
     /// Shared instruction cache.
     pub icache: ICache,
-    /// Event unit (barriers).
+    /// Event unit (barriers + software event lines).
     pub event: EventUnit,
+    /// Memory-mapped cluster DMA (double-buffered tiling).
+    pub dmac: DmaCtl,
     /// The SPMD program all cores run.
     program: Program,
     /// Predecoded form of `program` (resolved read sets, static classes,
@@ -108,6 +112,7 @@ impl Cluster {
             fpus: FpuSubsystem::new(cfg.fpus),
             icache: ICache::new(program.len()),
             event: EventUnit::new(cfg.cores),
+            dmac: DmaCtl::default(),
             program,
             decoded,
             now: 0,
@@ -134,6 +139,7 @@ impl Cluster {
         self.fpus.reset();
         self.icache.reset();
         self.event.reset(n);
+        self.dmac.reset();
         self.now = 0;
     }
 
@@ -188,6 +194,62 @@ impl Cluster {
     /// Shared accessors for the engines.
     pub(crate) fn trace_enabled(&self) -> bool {
         self.trace
+    }
+
+    /// Execute the data phase of a TCDM atomic for core `ci` at cycle `t`
+    /// (the caller has already won the bank grant): read-modify-write the
+    /// word and arm the scoreboard like a load. Shared verbatim by both
+    /// issue engines so the functional semantics exist exactly once.
+    pub(crate) fn exec_amo(
+        &mut self,
+        ci: usize,
+        op: AmoOp,
+        rd: crate::isa::Reg,
+        addr: u32,
+        rs: crate::isa::Reg,
+        t: u64,
+    ) {
+        let v = self.cores[ci].reg(rs);
+        let old = self.mem.load(addr, MemSize::Word);
+        let new = match op {
+            AmoOp::Add => old.wrapping_add(v),
+            AmoOp::Swap => v,
+        };
+        self.mem.store(addr, MemSize::Word, new);
+        let c = &mut self.cores[ci];
+        c.set_reg(rd, old);
+        c.reg_ready[rd as usize] = t + 2; // 1 load-use bubble, like a load
+        c.reg_producer[rd as usize] = Producer::Load;
+        c.counters.active += 1;
+        c.counters.instrs += 1;
+        c.counters.mem_instrs += 1;
+    }
+
+    /// Store to a memory-mapped DMA register for core `ci` at cycle `t`
+    /// (single-cycle peripheral access, no bank arbitration).
+    pub(crate) fn exec_dma_store(&mut self, ci: usize, addr: u32, rs: crate::isa::Reg, t: u64) {
+        debug_assert!(matches!(self.mem.region_of(addr), Region::Dma));
+        let v = self.cores[ci].reg(rs);
+        self.dmac.store(&mut self.mem, addr - mem::DMA_BASE, v, t);
+        let c = &mut self.cores[ci];
+        c.counters.active += 1;
+        c.counters.instrs += 1;
+        c.counters.mem_instrs += 1;
+    }
+
+    /// Load from a memory-mapped DMA register (`STATUS` polling) for core
+    /// `ci` at cycle `t`. Result arrives with a load-use bubble like a TCDM
+    /// load.
+    pub(crate) fn exec_dma_load(&mut self, ci: usize, addr: u32, rd: crate::isa::Reg, t: u64) {
+        debug_assert!(matches!(self.mem.region_of(addr), Region::Dma));
+        let v = self.dmac.load(addr - mem::DMA_BASE, t);
+        let c = &mut self.cores[ci];
+        c.set_reg(rd, v);
+        c.reg_ready[rd as usize] = t + 2;
+        c.reg_producer[rd as usize] = Producer::Load;
+        c.counters.active += 1;
+        c.counters.instrs += 1;
+        c.counters.mem_instrs += 1;
     }
 }
 
@@ -500,6 +562,156 @@ mod tests {
         for workers in [1usize, 3] {
             run_both(cfg(8, 4, 2), mixed(), Some(workers));
         }
+    }
+
+    /// Software events: workers sleep on a line, the master raises it after
+    /// doing extra work; sleepers are gated (barrier_idle) meanwhile. Both
+    /// engines agree cycle-for-cycle.
+    #[test]
+    fn set_event_wakes_waiters_and_buffers_for_the_rest() {
+        let prog = || {
+            let mut b = ProgramBuilder::new("ev");
+            b.beq(regs::CORE_ID, regs::ZERO, "master");
+            b.wait_event(5);
+            b.j("join");
+            b.label("master");
+            b.li(1, 100);
+            b.hwloop(1);
+            b.addi(2, 2, 1);
+            b.hwloop_end();
+            b.set_event(5);
+            // The master buffered its own event: consumed without sleeping.
+            b.wait_event(5);
+            b.label("join");
+            b.barrier();
+            b.end();
+            b.build()
+        };
+        for c in [cfg(8, 8, 0), cfg(8, 2, 1), cfg(16, 8, 2)] {
+            let s = run_both(c, prog(), None);
+            let idle: u64 = s.per_core.iter().skip(1).map(|x| x.barrier_idle).sum();
+            assert!(idle > (c.cores as u64 - 1) * 80, "waiters must sleep: {idle}");
+        }
+        // Partial occupancy (including solo, where the master's own
+        // buffered wait must not deadlock).
+        for workers in [1usize, 3] {
+            run_both(cfg(8, 4, 1), prog(), Some(workers));
+        }
+    }
+
+    /// TCDM atomics: concurrent fetch-and-add claims every value exactly
+    /// once; the bank arbitration serializes deterministically.
+    #[test]
+    fn amo_add_is_atomic_under_contention() {
+        let prog = || {
+            let mut b = ProgramBuilder::new("amo");
+            b.li(1, mem::TCDM_BASE);
+            b.li(2, 1);
+            b.amo_add(3, 1, 0, 2); // r3 = old counter; counter += 1
+            // Publish each core's claimed ticket to its own slot.
+            b.slli(4, regs::CORE_ID, 2);
+            b.add(4, 4, 1);
+            b.sw(3, 4, 4); // slots start at TCDM_BASE + 4
+            b.barrier();
+            b.end();
+            b.build()
+        };
+        let s = run_both(cfg(8, 8, 0), prog(), None);
+        assert_eq!(s.per_core.len(), 8);
+        let mut cl = Cluster::new(cfg(8, 8, 0), prog());
+        cl.run();
+        assert_eq!(cl.mem.load(mem::TCDM_BASE, crate::isa::MemSize::Word), 8);
+        let mut tickets: Vec<u32> = (0..8)
+            .map(|i| cl.mem.load(mem::TCDM_BASE + 4 + 4 * i, crate::isa::MemSize::Word))
+            .collect();
+        tickets.sort_unstable();
+        assert_eq!(tickets, (0..8).collect::<Vec<u32>>(), "each ticket claimed exactly once");
+    }
+
+    /// Atomic swap implements a test-and-set lock: the critical section is
+    /// mutually exclusive (counter increments are never lost).
+    #[test]
+    fn amo_swap_lock_excludes() {
+        let prog = || {
+            let mut b = ProgramBuilder::new("lock");
+            // lock at TCDM_BASE, shared counter at TCDM_BASE+4.
+            b.li(1, mem::TCDM_BASE);
+            b.label("acq");
+            b.li(2, 1);
+            b.amo_swap(2, 1, 0, 2);
+            b.bne(2, regs::ZERO, "acq");
+            // Critical section: non-atomic read-modify-write.
+            b.lw(3, 1, 4);
+            b.addi(3, 3, 1);
+            b.sw(3, 1, 4);
+            b.sw(regs::ZERO, 1, 0); // release
+            b.barrier();
+            b.end();
+            b.build()
+        };
+        let s = run_both(cfg(8, 4, 1), prog(), None);
+        assert_eq!(s.per_core.len(), 8);
+        let mut cl = Cluster::new(cfg(8, 4, 1), prog());
+        cl.run();
+        assert_eq!(cl.mem.load(mem::TCDM_BASE + 4, crate::isa::MemSize::Word), 8);
+    }
+
+    /// Memory-mapped DMA: the master stages an L2 block into TCDM, spins on
+    /// STATUS, signals via an event; workers then read the staged data.
+    #[test]
+    fn dma_roundtrip_through_registers() {
+        let prog = || {
+            let mut b = ProgramBuilder::new("dma");
+            b.bne(regs::CORE_ID, regs::ZERO, "worker");
+            // Program SRC/DST/LEN, trigger, spin until done.
+            b.li(1, mem::DMA_BASE);
+            b.li(2, mem::L2_BASE);
+            b.sw(2, 1, mem::dma_reg::SRC as i32);
+            b.li(2, mem::TCDM_BASE);
+            b.sw(2, 1, mem::dma_reg::DST as i32);
+            b.li(2, 4);
+            b.sw(2, 1, mem::dma_reg::LEN as i32);
+            b.sw(2, 1, mem::dma_reg::CMD as i32);
+            b.label("spin");
+            b.lw(3, 1, mem::dma_reg::STATUS as i32);
+            b.bne(3, regs::ZERO, "spin");
+            b.set_event(0);
+            b.label("worker");
+            b.wait_event(0);
+            // Everyone loads the staged word.
+            b.li(4, mem::TCDM_BASE);
+            b.lw(5, 4, 0);
+            b.barrier();
+            b.end();
+            b.build()
+        };
+        for c in [cfg(8, 8, 0), cfg(8, 2, 2)] {
+            let mut a = Cluster::new(c, prog());
+            a.mem.write_u32_slice(mem::L2_BASE, &[0xABCD_1234, 2, 3, 4]);
+            let mut r = Cluster::new(c, prog());
+            r.mem.write_u32_slice(mem::L2_BASE, &[0xABCD_1234, 2, 3, 4]);
+            let sa = a.run_with(Engine::Event);
+            let sr = r.run_with(Engine::Reference);
+            assert_eq!(sa.total_cycles, sr.total_cycles, "engines disagree on {c}");
+            for (x, y) in sa.per_core.iter().zip(&sr.per_core) {
+                assert_eq!(x, y);
+            }
+            assert_eq!(a.cores[3].reg(5), 0xABCD_1234);
+            assert_eq!(a.dmac.words_moved(), 4);
+            // The transfer costs setup + words, so the run can't be trivial.
+            assert!(sa.total_cycles > 14);
+        }
+        // Solo: the master path batches straight-line through trigger + spin.
+        let mut solo = Cluster::new(cfg(8, 8, 1), prog());
+        solo.mem.write_u32_slice(mem::L2_BASE, &[7, 8, 9, 10]);
+        solo.limit_active_cores(1);
+        let mut solo_ref = Cluster::new(cfg(8, 8, 1), prog());
+        solo_ref.mem.write_u32_slice(mem::L2_BASE, &[7, 8, 9, 10]);
+        solo_ref.limit_active_cores(1);
+        let se = solo.run_with(Engine::Event);
+        let sf = solo_ref.run_with(Engine::Reference);
+        assert_eq!(se.total_cycles, sf.total_cycles);
+        assert_eq!(solo.cores[0].reg(5), 7);
     }
 
     /// reset() returns the cluster to a state indistinguishable from a

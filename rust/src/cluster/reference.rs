@@ -15,6 +15,7 @@ use crate::isa::insn::Insn;
 
 use super::core::{CoreState, Producer};
 use super::counters::RunStats;
+use super::event::WAKEUP_LATENCY;
 use super::mem::Region;
 use super::{Cluster, INT_DIV_LATENCY, TAKEN_BRANCH_CYCLES};
 
@@ -145,6 +146,13 @@ impl Cluster {
                 let addr =
                     (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
                 match self.mem.region_of(addr) {
+                    Region::Dma => {
+                        let addr = self.cores[ci].mem_addr_and_postinc(base, offset, post_inc);
+                        self.exec_dma_load(ci, addr, rd, t);
+                        let c = &mut self.cores[ci];
+                        c.next_issue = t + 1;
+                        c.advance_pc();
+                    }
                     Region::Tcdm => {
                         let bank = self.mem.bank_of(addr);
                         if !self.mem.claim_bank(bank, t) {
@@ -182,6 +190,13 @@ impl Cluster {
                 let addr =
                     (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
                 match self.mem.region_of(addr) {
+                    Region::Dma => {
+                        let addr = self.cores[ci].mem_addr_and_postinc(base, offset, post_inc);
+                        self.exec_dma_store(ci, addr, rs, t);
+                        let c = &mut self.cores[ci];
+                        c.next_issue = t + 1;
+                        c.advance_pc();
+                    }
                     Region::Tcdm => {
                         let bank = self.mem.bank_of(addr);
                         if !self.mem.claim_bank(bank, t) {
@@ -308,6 +323,60 @@ impl Cluster {
                     c.advance_pc();
                 }
             }
+            Insn::Amo { op, rd, base, offset, rs } => {
+                let addr = (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
+                assert!(
+                    matches!(self.mem.region_of(addr), Region::Tcdm),
+                    "atomic outside TCDM at {addr:#x}"
+                );
+                let bank = self.mem.bank_of(addr);
+                if !self.mem.claim_bank(bank, t) {
+                    let c = &mut self.cores[ci];
+                    c.counters.tcdm_cont += 1;
+                    c.next_issue = t + 1;
+                    return;
+                }
+                self.exec_amo(ci, op, rd, addr, rs, t);
+                let c = &mut self.cores[ci];
+                c.next_issue = t + 1;
+                c.advance_pc();
+            }
+            Insn::WaitEvent { ev } => {
+                // Count the instruction itself.
+                {
+                    let c = &mut self.cores[ci];
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.int_instrs += 1;
+                    c.advance_pc();
+                }
+                if self.event.wait_event(ci, ev) {
+                    self.cores[ci].next_issue = t + 1; // buffered: no sleep
+                } else {
+                    let c = &mut self.cores[ci];
+                    c.state = CoreState::Sleeping { since: t + 1 };
+                    c.next_issue = u64::MAX; // woken by a SetEvent
+                }
+            }
+            Insn::SetEvent { ev } => {
+                {
+                    let c = &mut self.cores[ci];
+                    c.counters.active += 1;
+                    c.counters.instrs += 1;
+                    c.counters.int_instrs += 1;
+                    c.next_issue = t + 1;
+                    c.advance_pc();
+                }
+                let wake = t + WAKEUP_LATENCY;
+                for w in self.event.set_event(ev) {
+                    let c = &mut self.cores[w];
+                    if let CoreState::Sleeping { since } = c.state {
+                        c.counters.barrier_idle += wake - since;
+                        c.state = CoreState::Running;
+                        c.next_issue = wake;
+                    }
+                }
+            }
             Insn::Barrier => {
                 // Count the barrier instruction itself.
                 {
@@ -319,10 +388,15 @@ impl Cluster {
                 }
                 match self.event.arrive(ci, t) {
                     Some(wake) => {
-                        // Wake everyone (including self).
+                        // Wake everyone (including self) — except cores
+                        // parked on a software event line, which only a
+                        // SetEvent may release.
+                        let event = &self.event;
                         for c in self.cores.iter_mut() {
                             match c.state {
-                                CoreState::Sleeping { since } => {
+                                CoreState::Sleeping { since }
+                                    if !event.is_event_waiting(c.id) =>
+                                {
                                     c.counters.barrier_idle += wake - since;
                                     c.state = CoreState::Running;
                                     c.next_issue = wake;

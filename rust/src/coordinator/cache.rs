@@ -54,7 +54,13 @@ use crate::tuner::accuracy::ErrorStats;
 /// against the f64 reference). v1 rows — which predate the accuracy
 /// metrics — are rejected on load by both the version check and the row
 /// width, degrading to a cold start (see EXPERIMENTS.md §Tuner).
-pub const ENGINE_VERSION: u32 = 2;
+///
+/// v3: the kernels' parallel sections moved onto the fork-join runtime
+/// (cycle counts shift), team occupancy joined the key (fig 5/6 resolve
+/// through the engine), rows gained `workers`/`core_cycles` fields and a
+/// trailing FNV-1a row checksum. v2 rows are rejected by version, width
+/// *and* checksum — they degrade to a cold start (EXPERIMENTS.md §Runtime).
+pub const ENGINE_VERSION: u32 = 3;
 
 /// File name of the persisted cache inside the cache directory.
 pub const CACHE_FILE: &str = "measurements.csv";
@@ -74,26 +80,41 @@ pub struct CacheKey {
     /// Benchmark and variant identity.
     pub bench: Benchmark,
     pub variant: Variant,
+    /// Team occupancy of the run (cycles — and through them every metric —
+    /// depend on it; `cfg.cores` for full-cluster measurements).
+    pub workers: usize,
     /// [`ENGINE_VERSION`] at key-construction time.
     pub engine_version: u32,
 }
 
 impl CacheKey {
-    /// Key for running `w` (built by `bench`/`variant`) on `cfg` under the
-    /// current engine version.
+    /// Full-occupancy key for running `w` (built by `bench`/`variant`) on
+    /// `cfg` under the current engine version.
     pub fn new(cfg: &ClusterConfig, bench: Benchmark, variant: Variant, w: &Workload) -> Self {
-        Self::with_fingerprint(cfg, bench, variant, workload_fingerprint(w))
+        Self::at(cfg, bench, variant, cfg.cores, w)
+    }
+
+    /// Key for a `workers`-core team run of `w`.
+    pub fn at(
+        cfg: &ClusterConfig,
+        bench: Benchmark,
+        variant: Variant,
+        workers: usize,
+        w: &Workload,
+    ) -> Self {
+        Self::with_fingerprint(cfg, bench, variant, workers, workload_fingerprint(w))
     }
 
     /// Key from an already-computed workload fingerprint (the query
-    /// planner memoizes fingerprints per point within a process).
+    /// planner memoizes fingerprints per workload within a process).
     pub fn with_fingerprint(
         cfg: &ClusterConfig,
         bench: Benchmark,
         variant: Variant,
+        workers: usize,
         workload: u64,
     ) -> Self {
-        CacheKey { workload, cfg: *cfg, bench, variant, engine_version: ENGINE_VERSION }
+        CacheKey { workload, cfg: *cfg, bench, variant, workers, engine_version: ENGINE_VERSION }
     }
 }
 
@@ -353,23 +374,34 @@ fn counters_from_fields(f: &[u64; 18]) -> CoreCounters {
     }
 }
 
+/// FNV-1a checksum of a row's payload (everything before the trailing
+/// checksum field). Persisted rows must round-trip bit-exactly; the
+/// checksum turns silent on-disk corruption (truncation, bit flips) into a
+/// clean row rejection instead of a plausible-but-wrong measurement.
+fn row_checksum(payload: &str) -> u64 {
+    fnv_fold(0xcbf2_9ce4_8422_2325, payload.bytes())
+}
+
 /// One `key → measurement` entry as a CSV row. Floats are serialized as
 /// IEEE-754 bit patterns (hex) so a load reproduces them bit-exactly.
 ///
-/// Schema (v2): 13 key/metric fields, the 3-field accuracy triple
-/// (max-abs, RMS, relative L2), then the 18 aggregated counters. v1 rows
-/// lacked the accuracy triple (31 fields total) and are rejected by
-/// [`decode_row`]'s width check on top of the engine-version check.
+/// Schema (v3): 18 key/metric fields (now including `workers` and
+/// `core_cycles`), the 18 aggregated counters, and a trailing FNV-1a
+/// checksum over the payload. v1/v2 rows had 31/34 fields and no checksum
+/// — rejected by [`decode_row`]'s width and checksum checks on top of the
+/// engine-version check.
 fn encode_row(key: &CacheKey, m: &Measurement) -> String {
     let mut row = format!(
-        "{:016x},{},{},{},{},{},{},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x}",
+        "{:016x},{},{},{},{},{},{},{},{},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x}",
         key.workload,
         key.engine_version,
         encode_cfg(&key.cfg),
         key.bench.name(),
         encode_variant(key.variant),
+        key.workers,
         m.verified,
         m.cycles,
+        m.core_cycles,
         m.metrics.perf_gflops.to_bits(),
         m.metrics.energy_eff.to_bits(),
         m.metrics.area_eff.to_bits(),
@@ -384,54 +416,67 @@ fn encode_row(key: &CacheKey, m: &Measurement) -> String {
         row.push(',');
         row.push_str(&f.to_string());
     }
+    let sum = row_checksum(&row);
+    row.push(',');
+    row.push_str(&format!("{sum:016x}"));
     row
 }
 
-/// Inverse of [`encode_row`]; `None` on any malformed field or a row of
-/// the wrong width (e.g. a pre-accuracy v1 row).
+/// Inverse of [`encode_row`]; `None` on any malformed field, a row of the
+/// wrong width (e.g. a pre-runtime v1/v2 row), or a checksum mismatch
+/// (truncated or bit-flipped persistence).
 fn decode_row(line: &str) -> Option<(CacheKey, Measurement)> {
     let fields: Vec<&str> = line.split(',').collect();
-    if fields.len() != 16 + 18 {
+    if fields.len() != 18 + 18 + 1 {
         return None;
     }
     let u64hex = |s: &str| u64::from_str_radix(s, 16).ok();
     let f64bits = |s: &str| u64hex(s).map(f64::from_bits);
+    // Verify the payload checksum before trusting any field.
+    let payload_len = line.len() - (fields[36].len() + 1);
+    if u64hex(fields[36])? != row_checksum(&line[..payload_len]) {
+        return None;
+    }
     let key = CacheKey {
         workload: u64hex(fields[0])?,
         engine_version: fields[1].parse().ok()?,
         cfg: decode_cfg(fields[2])?,
         bench: Benchmark::parse(fields[3])?,
         variant: decode_variant(fields[4])?,
+        workers: fields[5].parse().ok()?,
     };
-    let verified = match fields[5] {
+    let verified = match fields[6] {
         "true" => true,
         "false" => false,
         _ => return None,
     };
-    let cycles: u64 = fields[6].parse().ok()?;
+    let cycles: u64 = fields[7].parse().ok()?;
+    let core_cycles: u64 = fields[8].parse().ok()?;
     let metrics = Metrics {
-        perf_gflops: f64bits(fields[7])?,
-        energy_eff: f64bits(fields[8])?,
-        area_eff: f64bits(fields[9])?,
-        flops_per_cycle: f64bits(fields[10])?,
+        perf_gflops: f64bits(fields[9])?,
+        energy_eff: f64bits(fields[10])?,
+        area_eff: f64bits(fields[11])?,
+        flops_per_cycle: f64bits(fields[12])?,
     };
-    let fp_intensity = f64bits(fields[11])?;
-    let mem_intensity = f64bits(fields[12])?;
+    let fp_intensity = f64bits(fields[13])?;
+    let mem_intensity = f64bits(fields[14])?;
     let err = ErrorStats {
-        max_abs: f64bits(fields[13])?,
-        rms: f64bits(fields[14])?,
-        rel: f64bits(fields[15])?,
+        max_abs: f64bits(fields[15])?,
+        rms: f64bits(fields[16])?,
+        rel: f64bits(fields[17])?,
     };
     let mut counters = [0u64; 18];
-    for (slot, s) in counters.iter_mut().zip(&fields[16..]) {
+    for (slot, s) in counters.iter_mut().zip(&fields[18..36]) {
         *slot = s.parse().ok()?;
     }
     let m = Measurement {
         cfg: key.cfg,
         bench: key.bench,
         variant: key.variant,
+        workers: key.workers,
         metrics,
         cycles,
+        core_cycles,
         agg: counters_from_fields(&counters),
         fp_intensity,
         mem_intensity,
@@ -452,6 +497,7 @@ mod tests {
             cfg: *cfg,
             bench: Benchmark::Fir,
             variant: Variant::VEC,
+            workers: cfg.cores,
             metrics: Metrics {
                 perf_gflops: 5.92,
                 energy_eff: 167.0,
@@ -459,6 +505,7 @@ mod tests {
                 flops_per_cycle: 16.0,
             },
             cycles: 12345,
+            core_cycles: 12345 * cfg.cores as u64,
             agg: CoreCounters { cycles: 12345, instrs: 999, flops: 4096, ..Default::default() },
             fp_intensity: 0.32,
             mem_intensity: 0.48,
@@ -583,16 +630,37 @@ mod tests {
         assert!(gb.cfg.blocked_fpu_map);
     }
 
-    /// Regression fixture for the schema migration: a literal cache file as
-    /// PR 2 (ENGINE_VERSION 1, 31-field rows without the accuracy triple)
-    /// wrote it. Under the widened v2 schema such rows must be skipped —
-    /// doubly rejected by row width and engine version — so the load
-    /// degrades to a cold start instead of erroring or serving
-    /// accuracy-less measurements.
+    /// Regression fixture for the schema migrations: literal cache files as
+    /// PR 2 (ENGINE_VERSION 1, 31 fields) and PR 3 (ENGINE_VERSION 2, 34
+    /// fields, no checksum) wrote them. Under the v3 schema such rows must
+    /// be skipped — rejected by row width, engine version and checksum — so
+    /// the load degrades to a cold start instead of erroring or serving
+    /// stale pre-runtime cycle counts.
     #[test]
-    fn pr2_era_rows_degrade_to_cold_start() {
-        // 13 key/metric fields + 18 counters, engine_version=1, exactly the
-        // v1 layout (hex f64 bit patterns for the six float fields).
+    fn pre_runtime_rows_degrade_to_cold_start() {
+        // PR 3's v2 layout: 16 key/metric fields (no workers/core_cycles)
+        // + 18 counters, engine_version=2, hex f64 bit patterns, no
+        // trailing checksum.
+        let v2_row = format!(
+            "00000000deadbeef,2,8c4f1p,FIR,scalar,true,12345,\
+             {:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},\
+             12345,12000,999,500,300,40,200,4096,1,2,3,4,5,6,7,8,9,10",
+            5.92f64.to_bits(),
+            167.0f64.to_bits(),
+            3.5f64.to_bits(),
+            16.0f64.to_bits(),
+            0.32f64.to_bits(),
+            0.48f64.to_bits(),
+            1.5e-3f64.to_bits(),
+            4.0e-4f64.to_bits(),
+            2.0e-4f64.to_bits(),
+        );
+        // Sanity: the fixture really is a 34-field row with a parseable key
+        // prefix — i.e. it *would* have decoded under the v2 schema.
+        assert_eq!(v2_row.split(',').count(), 34);
+        assert!(decode_cfg("8c4f1p").is_some());
+        assert!(decode_variant("scalar").is_some());
+        // PR 2's v1 layout: the same minus the accuracy triple.
         let v1_row = format!(
             "00000000deadbeef,1,8c4f1p,FIR,scalar,true,12345,\
              {:016x},{:016x},{:016x},{:016x},{:016x},{:016x},\
@@ -604,33 +672,100 @@ mod tests {
             0.32f64.to_bits(),
             0.48f64.to_bits(),
         );
-        // Sanity: the fixture really is a 31-field row with a parseable key
-        // prefix — i.e. it *would* have decoded under the v1 schema.
         assert_eq!(v1_row.split(',').count(), 31);
-        assert!(decode_cfg("8c4f1p").is_some());
-        assert!(decode_variant("scalar").is_some());
 
-        let path = tmp_path("cache-pr2-era.csv");
-        std::fs::write(&path, format!("transpfp-cache-v1\n{v1_row}\n")).unwrap();
+        let path = tmp_path("cache-pre-runtime.csv");
+        std::fs::write(&path, format!("transpfp-cache-v1\n{v2_row}\n{v1_row}\n")).unwrap();
         let cache = MeasurementCache::new();
-        assert_eq!(cache.load_csv(&path).unwrap(), 0, "v1 rows must be dropped, not served");
+        assert_eq!(cache.load_csv(&path).unwrap(), 0, "v1/v2 rows must be dropped, not served");
         assert!(cache.is_empty());
         std::fs::remove_file(&path).ok();
 
-        // And even a v2-width row stamped with the old engine version is
+        // And even a v3-width row stamped with the old engine version is
         // rejected by the version check alone.
         let stale = CacheKey {
             workload: 0x1234,
             cfg: ClusterConfig::new(8, 4, 1),
             bench: Benchmark::Fir,
             variant: Variant::Scalar,
-            engine_version: 1,
+            workers: 8,
+            engine_version: 2,
         };
-        let path2 = tmp_path("cache-v1-version.csv");
+        let path2 = tmp_path("cache-v2-version.csv");
         let row = encode_row(&stale, &sample_measurement(&stale.cfg));
         std::fs::write(&path2, format!("transpfp-cache-v1\n{row}\n")).unwrap();
         assert_eq!(cache.load_csv(&path2).unwrap(), 0);
         std::fs::remove_file(&path2).ok();
+    }
+
+    /// Robustness fuzz: random truncations and byte flips of a persisted
+    /// cache file must degrade to a cold start — the load never panics,
+    /// and every accepted row is bit-identical to one it wrote (the row
+    /// checksum rejects everything else).
+    #[test]
+    fn corrupted_persistence_degrades_to_cold_start() {
+        use crate::testutil::{check_cases, Rng};
+
+        let cache = MeasurementCache::new();
+        let mut originals: HashMap<CacheKey, Measurement> = HashMap::new();
+        for (i, cfg) in
+            [ClusterConfig::new(8, 4, 1), ClusterConfig::new(16, 16, 0)].iter().enumerate()
+        {
+            for workers in [1usize, cfg.cores] {
+                let key = CacheKey {
+                    workload: 0x1000 + i as u64,
+                    cfg: *cfg,
+                    bench: Benchmark::Fir,
+                    variant: Variant::VEC,
+                    workers,
+                    engine_version: ENGINE_VERSION,
+                };
+                let m = sample_measurement(cfg);
+                cache.insert(key, m.clone());
+                originals.insert(key, m);
+            }
+        }
+        let path = tmp_path("cache-fuzz.csv");
+        cache.save_csv(&path).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+
+        check_cases(40, |rng: &mut Rng| {
+            let mut bytes = pristine.clone();
+            match rng.below(3) {
+                // Truncate at a random point.
+                0 => bytes.truncate(rng.below(bytes.len() as u64 + 1) as usize),
+                // Flip a random byte.
+                1 => {
+                    let i = rng.below(bytes.len() as u64) as usize;
+                    bytes[i] ^= (1 + rng.below(255)) as u8;
+                }
+                // Truncate and flip.
+                _ => {
+                    let keep = bytes.len() / 2 + rng.below(bytes.len() as u64 / 2) as usize;
+                    bytes.truncate(keep.max(1));
+                    let i = rng.below(bytes.len() as u64) as usize;
+                    bytes[i] ^= (1 + rng.below(255)) as u8;
+                }
+            }
+            let fuzz_path = tmp_path("cache-fuzz-case.csv");
+            std::fs::write(&fuzz_path, &bytes).unwrap();
+            let loaded = MeasurementCache::new();
+            // Never panics; whatever survives is bit-identical to an
+            // original entry.
+            let accepted = loaded.load_csv(&fuzz_path).unwrap_or(0);
+            assert!(accepted <= originals.len());
+            for (key, m) in originals.iter() {
+                if let Some(got) = loaded.lookup(key) {
+                    assert_eq!(got.cycles, m.cycles);
+                    assert_eq!(got.core_cycles, m.core_cycles);
+                    assert_eq!(got.workers, m.workers);
+                    assert_eq!(got.metrics.perf_gflops.to_bits(), m.metrics.perf_gflops.to_bits());
+                    assert_eq!(got.agg, m.agg);
+                }
+            }
+            std::fs::remove_file(&fuzz_path).ok();
+        });
+        std::fs::remove_file(&path).ok();
     }
 
     /// Scalar-16 variants have their own cache addresses and row encodings
@@ -664,6 +799,7 @@ mod tests {
             cfg,
             bench: Benchmark::Fir,
             variant: Variant::Scalar,
+            workers: cfg.cores,
             engine_version: ENGINE_VERSION + 1,
         };
         let path = tmp_path("cache-stale.csv");

@@ -21,10 +21,10 @@ pub use pareto::{
     accuracy_pareto_table_with, pareto_front, pareto_table, pareto_table_from, pareto_table_with,
 };
 pub use query::{points, QueryEngine, QueryPlan, QueryPoint};
-pub use sweep::{run_one, run_parallel, run_workload, sweep, sweep_all, Measurement};
+pub use sweep::{run_one, run_one_at, run_parallel, run_workload, sweep, sweep_all, Measurement};
 pub use tables::{
-    fig3, fig4, fig5, fig6, fig7, fig7_with, fig8, fig8_with, measurements_table, table3,
-    table3_with, table45, table45_with, table6, table6_with,
+    fig3, fig4, fig5, fig5_with, fig6, fig6_with, fig7, fig7_with, fig8, fig8_with,
+    measurements_table, table3, table3_with, table45, table45_with, table6, table6_with,
 };
 
 #[cfg(test)]

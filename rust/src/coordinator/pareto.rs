@@ -200,6 +200,7 @@ mod tests {
             cfg: ClusterConfig::new(8, 4, 1),
             bench: Benchmark::Fir,
             variant: Variant::Scalar,
+            workers: 8,
             metrics: Metrics {
                 perf_gflops: perf,
                 energy_eff: eeff,
@@ -207,6 +208,7 @@ mod tests {
                 flops_per_cycle: 1.0,
             },
             cycles: 100,
+            core_cycles: 800,
             agg: CoreCounters::default(),
             fp_intensity: 0.3,
             mem_intensity: 0.5,

@@ -18,22 +18,33 @@ use std::path::PathBuf;
 use std::sync::{Mutex, OnceLock};
 
 use super::cache::{CacheKey, CacheStats, MeasurementCache, CACHE_FILE};
-use super::sweep::{run_one, run_parallel, run_workload, Measurement};
+use super::sweep::{run_one_at, run_parallel, run_workload, Measurement};
 use crate::config::ClusterConfig;
 use crate::kernels::{Benchmark, Variant, Workload};
 
-/// One point of the design space to resolve.
+/// One point of the design space to resolve: a (config, bench, variant)
+/// triple at a team occupancy. Occupancy is part of the point (and the
+/// cache address) since the fig 5/6 emitters went through the engine —
+/// `workers == cfg.cores` for every full-cluster table.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct QueryPoint {
     pub cfg: ClusterConfig,
     pub bench: Benchmark,
     pub variant: Variant,
+    /// Active team size (1..=cfg.cores).
+    pub workers: usize,
 }
 
 impl QueryPoint {
-    /// Point for (`cfg`, `bench`, `variant`).
+    /// Full-occupancy point for (`cfg`, `bench`, `variant`).
     pub fn new(cfg: &ClusterConfig, bench: Benchmark, variant: Variant) -> Self {
-        QueryPoint { cfg: *cfg, bench, variant }
+        Self::at(cfg, bench, variant, cfg.cores)
+    }
+
+    /// Point under a `workers`-core team (fig 5/6 occupancy sweeps).
+    pub fn at(cfg: &ClusterConfig, bench: Benchmark, variant: Variant, workers: usize) -> Self {
+        assert!(workers >= 1 && workers <= cfg.cores, "occupancy out of range");
+        QueryPoint { cfg: *cfg, bench, variant, workers }
     }
 }
 
@@ -105,13 +116,16 @@ impl QueryPlan {
 #[derive(Default)]
 pub struct QueryEngine {
     cache: MeasurementCache,
-    /// Workload fingerprints already computed this process, per point.
-    /// Builders are deterministic and the builder code cannot change
-    /// within a process, so a memoized fingerprint lets warm plans form
-    /// cache keys without rebuilding (and re-hashing) the workload at all.
-    /// Deliberately *not* persisted: a fresh process must rebuild workloads
-    /// once to prove the persisted entries still match the current code.
-    fingerprints: Mutex<HashMap<QueryPoint, u64>>,
+    /// Workload fingerprints already computed this process, keyed by the
+    /// workload identity (config × bench × variant — occupancy does not
+    /// change the program or its data, so all occupancies share one memo
+    /// entry). Builders are deterministic and the builder code cannot
+    /// change within a process, so a memoized fingerprint lets warm plans
+    /// form cache keys without rebuilding (and re-hashing) the workload at
+    /// all. Deliberately *not* persisted: a fresh process must rebuild
+    /// workloads once to prove the persisted entries still match the
+    /// current code.
+    fingerprints: Mutex<HashMap<(ClusterConfig, Benchmark, Variant), u64>>,
 }
 
 impl QueryEngine {
@@ -165,13 +179,16 @@ impl QueryEngine {
 
     /// Resolve one unique point against the fingerprint memo and the cache.
     fn plan_point(&self, p: &QueryPoint) -> PlannedPoint {
-        let memoized = self.fingerprints.lock().unwrap().get(p).copied();
+        let memo_key = (p.cfg, p.bench, p.variant);
+        let memoized = self.fingerprints.lock().unwrap().get(&memo_key).copied();
         let (key, workload) = match memoized {
-            Some(fp) => (CacheKey::with_fingerprint(&p.cfg, p.bench, p.variant, fp), None),
+            Some(fp) => {
+                (CacheKey::with_fingerprint(&p.cfg, p.bench, p.variant, p.workers, fp), None)
+            }
             None => {
                 let w = p.bench.build(p.variant, &p.cfg);
-                let key = CacheKey::new(&p.cfg, p.bench, p.variant, &w);
-                self.fingerprints.lock().unwrap().insert(*p, key.workload);
+                let key = CacheKey::at(&p.cfg, p.bench, p.variant, p.workers, &w);
+                self.fingerprints.lock().unwrap().insert(memo_key, key.workload);
                 (key, Some(w))
             }
         };
@@ -195,8 +212,8 @@ impl QueryEngine {
             let jobs: Vec<(QueryPoint, Option<&Workload>)> =
                 miss_idx.iter().map(|&i| (unique[i].point, unique[i].workload.as_ref())).collect();
             let results = run_parallel(&jobs, |(p, w)| match w {
-                Some(w) => run_workload(&p.cfg, p.bench, p.variant, w),
-                None => run_one(&p.cfg, p.bench, p.variant),
+                Some(w) => run_workload(&p.cfg, p.bench, p.variant, p.workers, w),
+                None => run_one_at(&p.cfg, p.bench, p.variant, p.workers),
             });
             drop(jobs);
             for (&i, m) in miss_idx.iter().zip(results) {
@@ -213,9 +230,20 @@ impl QueryEngine {
         self.execute(self.plan(pts))
     }
 
-    /// Resolve a single point.
+    /// Resolve a single full-occupancy point.
     pub fn one(&self, cfg: &ClusterConfig, bench: Benchmark, variant: Variant) -> Measurement {
         self.query(&[QueryPoint::new(cfg, bench, variant)]).pop().expect("one measurement")
+    }
+
+    /// Resolve a single point under a `workers`-core team.
+    pub fn one_at(
+        &self,
+        cfg: &ClusterConfig,
+        bench: Benchmark,
+        variant: Variant,
+        workers: usize,
+    ) -> Measurement {
+        self.query(&[QueryPoint::at(cfg, bench, variant, workers)]).pop().expect("one measurement")
     }
 }
 
@@ -305,6 +333,29 @@ mod tests {
             assert_eq!(a.err.rel.to_bits(), b.err.rel.to_bits());
             assert_eq!(a.agg, b.agg);
         }
+    }
+
+    #[test]
+    fn occupancy_is_part_of_the_address() {
+        let engine = QueryEngine::new();
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let full = engine.one(&cfg, Benchmark::Fir, Variant::Scalar);
+        let half = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 4);
+        let solo = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 1);
+        assert_eq!(engine.stats().entries, 3, "each occupancy has its own entry");
+        assert_eq!((full.workers, half.workers, solo.workers), (8, 4, 1));
+        assert!(
+            solo.cycles > half.cycles && half.cycles > full.cycles,
+            "fewer workers must cost cycles: {} / {} / {}",
+            solo.cycles,
+            half.cycles,
+            full.cycles
+        );
+        // Warm re-resolution hits for every occupancy.
+        let st = engine.stats();
+        let warm = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 4);
+        assert_eq!(engine.stats().misses, st.misses, "occupancy re-query must not simulate");
+        assert_eq!(warm.cycles, half.cycles);
     }
 
     #[test]

@@ -21,10 +21,19 @@ pub struct Measurement {
     /// Benchmark and variant.
     pub bench: Benchmark,
     pub variant: Variant,
+    /// Team occupancy the run used (`cfg.cores` for the full-cluster
+    /// tables; the fig 5/6 sweeps fork smaller teams). Part of the cache
+    /// address since ENGINE_VERSION 3.
+    pub workers: usize,
     /// Paper metrics (Gflop/s @ST, Gflop/s/W @NT, Gflop/s/mm²).
     pub metrics: Metrics,
     /// Total cycles of the run.
     pub cycles: u64,
+    /// Σ per-core wall-clock cycles (each core's reset→End span). Together
+    /// with `cycles` and `cfg.cores` this reconstructs the finished-early
+    /// gated time the activity-based power model needs
+    /// ([`crate::model::Activity::from_measurement`]).
+    pub core_cycles: u64,
     /// Aggregated counters.
     pub agg: CoreCounters,
     /// FP / memory intensity (Table 3).
@@ -37,22 +46,33 @@ pub struct Measurement {
     pub err: ErrorStats,
 }
 
-/// Run one benchmark variant on one configuration.
+/// Run one benchmark variant on one configuration at full occupancy.
 pub fn run_one(cfg: &ClusterConfig, bench: Benchmark, variant: Variant) -> Measurement {
-    let w = bench.build(variant, cfg);
-    run_workload(cfg, bench, variant, &w)
+    run_one_at(cfg, bench, variant, cfg.cores)
 }
 
-/// [`run_one`] on a workload the caller already built — the query planner
-/// constructs workloads up front (it needs the program for the cache
-/// fingerprint) and hands only the cache misses here.
+/// [`run_one`] under a `workers`-core team (fig 5/6 occupancy sweeps).
+pub fn run_one_at(
+    cfg: &ClusterConfig,
+    bench: Benchmark,
+    variant: Variant,
+    workers: usize,
+) -> Measurement {
+    let w = bench.build(variant, cfg);
+    run_workload(cfg, bench, variant, workers, &w)
+}
+
+/// [`run_one_at`] on a workload the caller already built — the query
+/// planner constructs workloads up front (it needs the program for the
+/// cache fingerprint) and hands only the cache misses here.
 pub fn run_workload(
     cfg: &ClusterConfig,
     bench: Benchmark,
     variant: Variant,
+    workers: usize,
     w: &Workload,
 ) -> Measurement {
-    let (stats, out) = w.run(cfg);
+    let (stats, out) = w.run_on(cfg, workers);
     let verified = w.verify(&out).is_ok();
     let err = error_stats(&out, &w.reference);
     let agg = stats.aggregate();
@@ -60,8 +80,10 @@ pub fn run_workload(
         cfg: *cfg,
         bench,
         variant,
+        workers,
         metrics: model::metrics(cfg, &stats),
         cycles: stats.total_cycles,
+        core_cycles: stats.per_core.iter().map(|c| c.cycles).sum(),
         fp_intensity: agg.fp_intensity(),
         mem_intensity: agg.mem_intensity(),
         agg,

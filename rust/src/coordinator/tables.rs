@@ -2,17 +2,17 @@
 //! Each function resolves the necessary slice of the design space and
 //! renders a text table (plus CSV via [`crate::report`]).
 //!
-//! Every emitter that consumes full-occupancy [`Measurement`]s goes through
-//! the [`QueryEngine`] planner, so a warm cache regenerates the paper's
-//! tables without issuing a single simulator run. The zero-argument public
-//! forms use the process-wide engine; the `_with` forms take an explicit
-//! engine (benches and tests use private ones so hit/miss assertions are
-//! not shared state). Fig 5 (power activity at 100 MHz) and Fig 6
-//! (partial-occupancy speed-ups) need raw `RunStats` under non-default
-//! worker counts — dimensions a [`Measurement`] does not carry — and stay
-//! on the direct simulation path.
+//! Every emitter goes through the [`QueryEngine`] planner, so a warm cache
+//! regenerates the paper's tables without issuing a single simulator run.
+//! The zero-argument public forms use the process-wide engine; the `_with`
+//! forms take an explicit engine (benches and tests use private ones so
+//! hit/miss assertions are not shared state). Since ENGINE_VERSION 3 this
+//! includes Fig 5 (power activity at 100 MHz — regenerated from the cached
+//! counters via [`model::Activity::from_measurement`]) and Fig 6
+//! (occupancy speed-ups — team size is part of the cache address and
+//! [`Measurement`] carries `workers`/`core_cycles`).
 
-use super::query::{points, QueryEngine};
+use super::query::{points, QueryEngine, QueryPoint};
 use super::sweep::Measurement;
 use crate::cluster::counters::RunStats;
 use crate::config::{ClusterConfig, Corner};
@@ -170,44 +170,67 @@ pub fn fig4() -> Table {
 }
 
 /// Fig 5: total power at 100 MHz per configuration, running the f32 MATMUL
-/// (the paper's power-analysis workload), at both corners.
+/// (the paper's power-analysis workload), at both corners. Resolved
+/// through the query engine since ENGINE_VERSION 3: the activity rates
+/// regenerate from cached counters ([`model::Activity::from_measurement`]),
+/// so a warm `fig5` issues zero simulator runs.
 pub fn fig5() -> Table {
+    fig5_with(QueryEngine::global())
+}
+
+/// [`fig5`] through an explicit query engine.
+pub fn fig5_with(engine: &QueryEngine) -> Table {
+    let configs = ClusterConfig::design_space();
+    let ms = engine.query(&points(&configs, &[Benchmark::Matmul], &[Variant::Scalar]));
     let mut t = Table::new(vec!["config", "P @100MHz NT (mW)", "P @100MHz ST (mW)"]);
-    for cfg in ClusterConfig::design_space() {
-        let w = Benchmark::Matmul.build(Variant::Scalar, &cfg);
-        let (stats, _) = w.run(&cfg);
-        let act = model::Activity::from_stats(&stats);
-        let nt = model::power_mw(&cfg, Corner::Nt, &act, 100.0);
-        let st = model::power_mw(&cfg, Corner::St, &act, 100.0);
-        t.row(vec![cfg.mnemonic(), format!("{nt:.2}"), format!("{st:.2}")]);
+    for m in &ms {
+        let act = model::Activity::from_measurement(m);
+        let nt = model::power_mw(&m.cfg, Corner::Nt, &act, 100.0);
+        let st = model::power_mw(&m.cfg, Corner::St, &act, 100.0);
+        t.row(vec![m.cfg.mnemonic(), format!("{nt:.2}"), format!("{st:.2}")]);
     }
     t
 }
 
 /// Fig 6: parallel + vectorization speed-ups on the 16-core architectures:
-/// min / avg / max over the nine 16-core configurations, for 1/2/4/8/16
-/// active cores, scalar and vector. Baseline: 1 core, scalar, same config.
+/// min / avg / max over the nine 16-core configurations, for teams of
+/// 1/2/4/8/16 workers forked through the runtime, scalar and vector.
+/// Baseline: 1-worker team, scalar, same config. Occupancy is part of the
+/// cache address, so a warm `fig6` issues zero simulator runs.
 pub fn fig6() -> Table {
+    fig6_with(QueryEngine::global())
+}
+
+/// [`fig6`] through an explicit query engine.
+pub fn fig6_with(engine: &QueryEngine) -> Table {
     let mut t = Table::new(vec!["bench", "workers", "variant", "min", "avg", "max"]);
     let configs = configs_for(16);
+    const OCCUPANCIES: [usize; 5] = [1, 2, 4, 8, 16];
+    // One batch for the whole figure: (bench × occupancy × variant ×
+    // config), deduplicated and partitioned against the cache in one plan.
+    let mut pts = Vec::new();
     for b in Benchmark::all() {
-        // Baseline cycles per config.
-        let base: Vec<f64> = configs
-            .iter()
-            .map(|c| {
-                let w = b.build(Variant::Scalar, c);
-                let (s, _) = w.run_on(c, 1);
-                s.total_cycles as f64
-            })
-            .collect();
-        for workers in [1usize, 2, 4, 8, 16] {
+        for workers in OCCUPANCIES {
             for v in [Variant::Scalar, Variant::VEC] {
-                let mut speedups = Vec::new();
-                for (ci, c) in configs.iter().enumerate() {
-                    let w = b.build(v, c);
-                    let (s, _) = w.run_on(c, workers);
-                    speedups.push(base[ci] / s.total_cycles as f64);
+                for c in &configs {
+                    pts.push(QueryPoint::at(c, b, v, workers));
                 }
+            }
+        }
+    }
+    let ms = engine.query(&pts);
+    let mut it = ms.chunks_exact(configs.len());
+    // Baselines: the (workers=1, scalar) row of each bench block.
+    for b in Benchmark::all() {
+        let mut base: Vec<f64> = Vec::new();
+        for workers in OCCUPANCIES {
+            for v in [Variant::Scalar, Variant::VEC] {
+                let block = it.next().expect("fig6 block");
+                if workers == 1 && v == Variant::Scalar {
+                    base = block.iter().map(|m| m.cycles as f64).collect();
+                }
+                let speedups: Vec<f64> =
+                    block.iter().zip(&base).map(|(m, c1)| c1 / m.cycles as f64).collect();
                 let lo = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
                 let hi = speedups.iter().cloned().fold(0.0f64, f64::max);
                 let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
@@ -367,6 +390,7 @@ pub fn measurements_table(ms: &[Measurement]) -> Table {
         "config",
         "bench",
         "variant",
+        "workers",
         "cycles",
         "flops_per_cycle",
         "perf_gflops",
@@ -382,6 +406,7 @@ pub fn measurements_table(ms: &[Measurement]) -> Table {
             m.cfg.mnemonic(),
             m.bench.name().to_string(),
             m.variant.label().to_string(),
+            m.workers.to_string(),
             m.cycles.to_string(),
             format!("{:.4}", m.metrics.flops_per_cycle),
             format!("{:.4}", m.metrics.perf_gflops),

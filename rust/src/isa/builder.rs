@@ -5,7 +5,7 @@
 
 use std::collections::HashMap;
 
-use super::insn::{AluOp, BrCond, FpOp, Insn, MemSize, Operand, Reg};
+use super::insn::{AluOp, AmoOp, BrCond, FpOp, Insn, MemSize, Operand, Reg};
 use crate::transfp::{CmpPred, FpMode};
 
 /// Convention registers (mirrors the HAL of §4: core id / ncores live in
@@ -274,9 +274,34 @@ impl ProgramBuilder {
         self
     }
 
+    /// Atomic fetch-and-add on a TCDM word: `rd = mem[base+offset]`,
+    /// `mem[base+offset] += rs` — the work-sharing scheduler's chunk grab.
+    pub fn amo_add(&mut self, rd: Reg, base: Reg, offset: i32, rs: Reg) -> &mut Self {
+        self.push(Insn::Amo { op: AmoOp::Add, rd, base, offset, rs })
+    }
+
+    /// Atomic swap on a TCDM word: `rd = mem[base+offset]`,
+    /// `mem[base+offset] = rs` — test-and-set locks.
+    pub fn amo_swap(&mut self, rd: Reg, base: Reg, offset: i32, rs: Reg) -> &mut Self {
+        self.push(Insn::Amo { op: AmoOp::Swap, rd, base, offset, rs })
+    }
+
     /// Event-unit synchronization barrier.
     pub fn barrier(&mut self) -> &mut Self {
         self.push(Insn::Barrier)
+    }
+
+    /// Sleep until software event line `ev` is raised (consumes a buffered
+    /// event without sleeping).
+    pub fn wait_event(&mut self, ev: u8) -> &mut Self {
+        assert!((ev as usize) < crate::cluster::event::NUM_EVENTS, "event line out of range");
+        self.push(Insn::WaitEvent { ev })
+    }
+
+    /// Raise software event line `ev` for every core.
+    pub fn set_event(&mut self, ev: u8) -> &mut Self {
+        assert!((ev as usize) < crate::cluster::event::NUM_EVENTS, "event line out of range");
+        self.push(Insn::SetEvent { ev })
     }
 
     /// Terminate the core.

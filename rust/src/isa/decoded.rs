@@ -46,8 +46,14 @@ pub enum OpClass {
     FpDivSqrt,
     /// FP op on the (possibly shared) FPU datapath.
     Fp,
+    /// Atomic read-modify-write on a TCDM bank (scheduler work queues).
+    Amo,
     /// Event-unit barrier.
     Barrier,
+    /// Event-unit software-event sleep (`WaitEvent`).
+    WaitEvent,
+    /// Event-unit software-event raise (`SetEvent`).
+    SetEvent,
     /// Core termination.
     End,
 }
@@ -229,7 +235,14 @@ fn classify(insn: &Insn) -> (OpClass, u64, bool) {
                 (OpClass::Fp, 1, false)
             }
         }
+        // Atomics touch a shared TCDM bank, and the event unit's wake/buffer
+        // decisions depend on cross-core ordering within a cycle — all three
+        // are contention points the event engine must execute at the global
+        // clock, in rotation order.
+        Insn::Amo { .. } => (OpClass::Amo, 1, false),
         Insn::Barrier => (OpClass::Barrier, 1, false),
+        Insn::WaitEvent { .. } => (OpClass::WaitEvent, 1, false),
+        Insn::SetEvent { .. } => (OpClass::SetEvent, 1, false),
         Insn::End => (OpClass::End, 1, true),
     }
 }
@@ -281,6 +294,29 @@ mod tests {
         assert!(!d.insns[3].has(flag::FP));
         // Read sets match the scoreboard's (FMA reads rs1, rs2, then rd).
         assert_eq!(&d.insns[4].reads[..d.insns[4].nreads as usize], &[4, 4, 5]);
+    }
+
+    #[test]
+    fn runtime_ops_are_contention_points() {
+        let mut b = ProgramBuilder::new("rt");
+        b.amo_add(3, 4, 0, 5); // 0
+        b.amo_swap(3, 4, 4, 5); // 1
+        b.wait_event(2); // 2
+        b.set_event(2); // 3
+        b.end();
+        let d = DecodedProgram::decode(&b.build());
+        assert_eq!(d.insns[0].class, OpClass::Amo);
+        assert_eq!(d.insns[1].class, OpClass::Amo);
+        assert_eq!(d.insns[2].class, OpClass::WaitEvent);
+        assert_eq!(d.insns[3].class, OpClass::SetEvent);
+        for i in 0..4 {
+            assert!(!d.insns[i].has(flag::LOCAL), "insn {i} must not batch");
+        }
+        // Atomics write rd like a load (WB-port model), events write nothing.
+        assert!(d.insns[0].has(flag::WRITES_REG));
+        assert!(!d.insns[2].has(flag::WRITES_REG));
+        assert_eq!(&d.insns[0].reads[..d.insns[0].nreads as usize], &[5, 4]);
+        assert_eq!(d.insns[2].nreads, 0);
     }
 
     #[test]

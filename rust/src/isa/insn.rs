@@ -47,6 +47,19 @@ pub enum AluOp {
     Mac,
 }
 
+/// Atomic read-modify-write operation on a TCDM word (single bank access).
+/// Models the RV32A-style atomics the PULP cluster supports inside the
+/// TCDM — the parallel runtime's work-sharing scheduler is built on them
+/// (`amoadd.w` for chunk self-scheduling, `amoswap.w` for the guided-
+/// schedule lock).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AmoOp {
+    /// `rd = mem[addr]; mem[addr] += rs` (fetch-and-add).
+    Add,
+    /// `rd = mem[addr]; mem[addr] = rs` (swap — test-and-set locks).
+    Swap,
+}
+
 /// Memory access width.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MemSize {
@@ -176,16 +189,27 @@ pub enum Insn {
     /// Floating-point operation. `rs3` is only used by ops reading rd
     /// implicitly via `reads_rd` (kept for clarity in traces).
     Fp { op: FpOp, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg },
+    /// Atomic read-modify-write on a TCDM word: `rd = mem[rs1 + offset]`
+    /// and the location is updated per `op` with `rs` — one bank access,
+    /// indivisible under the interconnect's per-cycle bank grant.
+    Amo { op: AmoOp, rd: Reg, base: Reg, offset: i32, rs: Reg },
     /// Event-unit barrier: sleep until all cores arrive (§3.1 Event Unit).
     Barrier,
+    /// Event unit: sleep until software event line `ev` is raised (PULP
+    /// `p.elw`-style). A buffered event is consumed without sleeping.
+    WaitEvent { ev: u8 },
+    /// Event unit: raise software event line `ev` for every core (waiters
+    /// wake after the event unit's fixed latency; non-waiters buffer it).
+    SetEvent { ev: u8 },
     /// Terminate this core's execution.
     End,
 }
 
 impl Insn {
-    /// True if the instruction is a load or store (memory intensity).
+    /// True if the instruction accesses memory (memory intensity): loads,
+    /// stores, and TCDM atomics.
     pub fn is_mem(&self) -> bool {
-        matches!(self, Insn::Load { .. } | Insn::Store { .. })
+        matches!(self, Insn::Load { .. } | Insn::Store { .. } | Insn::Amo { .. })
     }
 
     /// True if the instruction occupies the FPU or DIV-SQRT (FP intensity).
@@ -221,7 +245,12 @@ impl Insn {
                 push(*rs1);
                 push(*rs2);
             }
-            Insn::Jump { .. } | Insn::Barrier | Insn::End => {}
+            Insn::Jump { .. } | Insn::Barrier | Insn::WaitEvent { .. } | Insn::SetEvent { .. }
+            | Insn::End => {}
+            Insn::Amo { rs, base, .. } => {
+                push(*rs);
+                push(*base);
+            }
             Insn::HwLoop { count, .. } => push(*count),
             Insn::Fp { op, rd, rs1, rs2, .. } => {
                 push(*rs1);
@@ -253,7 +282,7 @@ impl Insn {
     /// base register.)
     pub fn writes_int_reg(&self) -> bool {
         match self {
-            Insn::Alu { .. } | Insn::Li { .. } | Insn::Load { .. } => true,
+            Insn::Alu { .. } | Insn::Li { .. } | Insn::Load { .. } | Insn::Amo { .. } => true,
             Insn::Store { post_inc, .. } => *post_inc != 0,
             _ => false,
         }
@@ -309,5 +338,23 @@ mod tests {
         assert!(Insn::Store { rs: 1, base: 2, offset: 0, post_inc: 4, size: MemSize::Word }
             .writes_int_reg());
         assert!(!Insn::Barrier.writes_int_reg());
+    }
+
+    #[test]
+    fn amo_and_event_classification() {
+        let amo = Insn::Amo { op: AmoOp::Add, rd: 3, base: 4, offset: 0, rs: 5 };
+        // Atomics read (rs, base) like a store, write rd like a load, and
+        // count as memory traffic.
+        let (r, n) = amo.read_regs();
+        assert_eq!(&r[..n as usize], &[5u8, 4]);
+        assert!(amo.writes_int_reg());
+        assert!(amo.is_mem() && !amo.is_fp());
+
+        for i in [Insn::WaitEvent { ev: 3 }, Insn::SetEvent { ev: 3 }] {
+            let (_, n) = i.read_regs();
+            assert_eq!(n, 0, "{i:?} reads no registers");
+            assert!(!i.writes_int_reg());
+            assert!(!i.is_mem() && !i.is_fp());
+        }
     }
 }

@@ -10,4 +10,4 @@ pub mod insn;
 
 pub use builder::{regs, Program, ProgramBuilder};
 pub use decoded::{DecodedInsn, DecodedProgram, OpClass};
-pub use insn::{AluOp, BrCond, FpOp, Insn, MemSize, Operand, Reg};
+pub use insn::{AluOp, AmoOp, BrCond, FpOp, Insn, MemSize, Operand, Reg};

@@ -12,10 +12,12 @@
 //!   products accumulate two neighbouring outputs in binary32.
 
 use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
+use crate::cluster::mem::L2_BASE;
 use crate::config::ClusterConfig;
-use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::isa::ProgramBuilder;
+use crate::runtime::{parallel_for, team, LoopRegs, Schedule};
 use crate::testutil::Rng;
-use crate::transfp::{cast, scalar, simd, FpSpec};
+use crate::transfp::{cast, scalar, simd, FpMode, FpSpec};
 
 /// Lane-0 widening FMA mirror (`fmac.s.h`): acc32 += a.lane0 · b.lane0.
 fn scalar_fma_widen(spec: &FpSpec, a: u32, b: u32, acc: u32) -> u32 {
@@ -86,42 +88,40 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, w: usize, h: usize) -> Workloa
     }
 
     let mut p = ProgramBuilder::new(format!("conv-{}", elem.suffix()));
-    let (id, nc) = (regs::CORE_ID, regs::NCORES);
     p.li(24, oh as u32); // output rows
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
     p.li(15, img_base).li(16, k_base).li(17, out_base);
     p.li(30, w as u32).li(31, ow as u32);
-    p.bge(13, 14, "done");
-    p.label("row");
-    {
-        // out_ptr = out + size*ow*oy ; in row base = img + size*w*oy
-        p.mul(25, 13, 31).slli(25, 25, elem.shift()).add(23, 25, 17);
-        p.mul(25, 13, 30).slli(25, 25, elem.shift()).add(22, 25, 15);
-        p.mv(20, 22); // walking pixel ptr (top-left of the window)
-        p.li(18, 0); // ox
-        p.label("col");
-        {
-            // 3×3 fully unrolled with static offsets (the natural compiler
-            // lowering for a constant-size window) — pure load/load/fmac mix.
-            p.li(28, 0); // acc
-            for r in 0..3i32 {
-                for c in 0..3i32 {
-                    elem.load(&mut p, 26, 20, r * w as i32 + c);
-                    elem.load(&mut p, 27, 16, r * 3 + c);
-                    p.fmac(elem.mode, 28, 27, 26);
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            // out_ptr = out + size*ow*oy ; in row base = img + size*w*oy
+            p.mul(25, 13, 31).slli(25, 25, elem.shift()).add(23, 25, 17);
+            p.mul(25, 13, 30).slli(25, 25, elem.shift()).add(22, 25, 15);
+            p.mv(20, 22); // walking pixel ptr (top-left of the window)
+            p.li(18, 0); // ox
+            p.label("col");
+            {
+                // 3×3 fully unrolled with static offsets (the natural
+                // compiler lowering for a constant-size window) — pure
+                // load/load/fmac mix.
+                p.li(28, 0); // acc
+                for r in 0..3i32 {
+                    for c in 0..3i32 {
+                        elem.load(p, 26, 20, r * w as i32 + c);
+                        elem.load(p, 27, 16, r * 3 + c);
+                        p.fmac(elem.mode, 28, 27, 26);
+                    }
                 }
+                p.addi(20, 20, elem.size()); // slide the window
+                elem.store_pi(p, 28, 23, 1);
+                p.addi(18, 18, 1);
+                p.blt(18, 31, "col");
             }
-            p.addi(20, 20, elem.size()); // slide the window
-            elem.store_pi(&mut p, 28, 23, 1);
-            p.addi(18, 18, 1);
-            p.blt(18, 31, "col");
-        }
-        p.addi(13, 13, 1);
-        p.blt(13, 14, "row");
-    }
-    p.label("done");
+        },
+    );
     p.barrier();
     p.end();
 
@@ -191,11 +191,7 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, w: usize, h: usize) -> Wo
     }
 
     let mut p = ProgramBuilder::new("conv-vector");
-    let (id, nc) = (regs::CORE_ID, regs::NCORES);
     p.li(24, oh as u32);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
     p.li(15, img_base).li(17, out_base);
     p.li(30, row_w as u32).li(31, ow_pairs as u32);
     // Register-resident packed coefficients: r1..r6 (loaded once — this is
@@ -204,43 +200,44 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, w: usize, h: usize) -> Wo
     for i in 0..6u8 {
         p.lw_pi(1 + i, 25, 4);
     }
-    p.bge(13, 14, "done");
-    p.label("row");
-    {
-        p.mul(25, 13, 31).slli(25, 25, 2).add(23, 25, 17); // out row ptr (1 word per output pair)
-        p.mul(25, 13, 30).slli(25, 25, 2).add(22, 25, 15); // img row base
-        p.li(18, 0); // output pair index
-        p.label("col");
-        {
-            p.slli(20, 18, 2).add(20, 20, 22); // window ptr
-            p.li(27, 0); // acc0
-            p.li(28, 0); // acc1
-            let row_bytes = (row_w * 4) as i32;
-            for r in 0..3u8 {
-                let k01 = 1 + 2 * r; // coef regs r1..r6
-                let k2x = 2 + 2 * r;
-                p.lw(26, 20, 0); // w0
-                p.lw(29, 20, 4); // w1
-                if r < 2 {
-                    p.addi(20, 20, row_bytes); // next window row
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            p.mul(25, 13, 31).slli(25, 25, 2).add(23, 25, 17); // out row ptr
+            p.mul(25, 13, 30).slli(25, 25, 2).add(22, 25, 15); // img row base
+            p.li(18, 0); // output pair index
+            p.label("col");
+            {
+                p.slli(20, 18, 2).add(20, 20, 22); // window ptr
+                p.li(27, 0); // acc0
+                p.li(28, 0); // acc1
+                let row_bytes = (row_w * 4) as i32;
+                for r in 0..3u8 {
+                    let k01 = 1 + 2 * r; // coef regs r1..r6
+                    let k2x = 2 + 2 * r;
+                    p.lw(26, 20, 0); // w0
+                    p.lw(29, 20, 4); // w1
+                    if r < 2 {
+                        p.addi(20, 20, row_bytes); // next window row
+                    }
+                    p.vshuffle(7, 26, 0b11);
+                    p.vpack_lo(7, 7, 29); // mid = (p1,p2)
+                    p.vshuffle(8, 29, 0b01); // (p3,·)
+                    p.fdotp(mode, 27, k01, 26);
+                    p.fmac_widen(mode, 27, k2x, 29); // c2·p2 (lane 0, f32 acc)
+                    p.fdotp(mode, 28, k01, 7);
+                    p.fmac_widen(mode, 28, k2x, 8); // c2·p3
                 }
-                p.vshuffle(7, 26, 0b11);
-                p.vpack_lo(7, 7, 29); // mid = (p1,p2)
-                p.vshuffle(8, 29, 0b01); // (p3,·)
-                p.fdotp(mode, 27, k01, 26);
-                p.fmac_widen(mode, 27, k2x, 29); // c2·p2 (lane 0, f32 acc)
-                p.fdotp(mode, 28, k01, 7);
-                p.fmac_widen(mode, 28, k2x, 8); // c2·p3
+                p.cpka(mode, 9, 27, 28);
+                p.sw_pi(9, 23, 4);
+                p.addi(18, 18, 1);
+                p.blt(18, 31, "col");
             }
-            p.cpka(mode, 9, 27, 28);
-            p.sw_pi(9, 23, 4);
-            p.addi(18, 18, 1);
-            p.blt(18, 31, "col");
-        }
-        p.addi(13, 13, 1);
-        p.blt(13, 14, "row");
-    }
-    p.label("done");
+        },
+    );
     p.barrier();
     p.end();
 
@@ -255,6 +252,126 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, w: usize, h: usize) -> Wo
         rtol: 1e-9,
         atol: 1e-12,
         reference: Vec::new(),
+    }
+}
+
+/// DMA double-buffered band-tiled CONV (binary32 scalar): the image and the
+/// output live in **L2**; the kernel streams bands of `oh/tiles` output
+/// rows (plus the 2-row halo) through ping-pong TCDM buffers. Core 0
+/// masters the DMA and releases the team per band over
+/// [`team::EV_TILE_READY`]; the next band's input transfer overlaps this
+/// band's compute. Arithmetic is identical to the untiled scalar kernel.
+pub fn build_tiled(cfg: &ClusterConfig, w: usize, h: usize, tiles: usize) -> Workload {
+    assert!(w % 2 == 0 && w >= 8 && h >= 4);
+    let (ow, oh) = (w - 2, h - 2);
+    assert!(tiles >= 1 && oh % tiles == 0, "tiles must divide the output rows");
+    let band_rows = oh / tiles;
+    let in_band_words = ((band_rows + 2) * w) as u32; // band + 2-row halo
+    let out_band_words = (band_rows * ow) as u32;
+
+    // L2 layout: image | output.
+    let img_l2 = L2_BASE;
+    let out_l2 = L2_BASE + (w * h * 4) as u32;
+    // TCDM layout: 3×3 coefficients + ping-pong input/output bands.
+    let mut al = Alloc::new(cfg);
+    let k_base = al.f32s(9);
+    let ibuf = [al.f32s((band_rows + 2) * w), al.f32s((band_rows + 2) * w)];
+    let obuf = [al.f32s(band_rows * ow), al.f32s(band_rows * ow)];
+
+    let (img, k) = gen_inputs(w, h);
+    // Host mirror: identical (r, c) FMA order to the untiled scalar kernel.
+    let mut expected = vec![0.0f64; ow * oh];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc = 0u32;
+            for r in 0..3 {
+                for c in 0..3 {
+                    acc = scalar::fma32(
+                        k[r * 3 + c].to_bits(),
+                        img[(oy + r) * w + ox + c].to_bits(),
+                        acc,
+                    );
+                }
+            }
+            expected[oy * ow + ox] = f32::from_bits(acc) as f64;
+        }
+    }
+
+    let mut p = ProgramBuilder::new(format!("conv-tiled{tiles}-scalar"));
+    // Prologue: stage the first input band, then release the team.
+    team::master_only(&mut p, "boot", &mut |p| {
+        team::dma_copy(p, 1, 2, img_l2, ibuf[0], in_band_words);
+        team::dma_wait(p, 1, 2);
+        team::signal_tile_ready(p);
+    });
+    p.li(16, k_base);
+    p.li(30, w as u32).li(31, ow as u32);
+    for t in 0..tiles {
+        let buf = t % 2;
+        team::wait_tile_ready(&mut p);
+        if t + 1 < tiles {
+            team::master_only(&mut p, &format!("pf{t}"), &mut |p| {
+                let src = img_l2 + ((t + 1) * band_rows * w * 4) as u32;
+                team::dma_copy(p, 1, 2, src, ibuf[(t + 1) % 2], in_band_words);
+            });
+        }
+        p.li(15, ibuf[buf]);
+        p.li(17, obuf[buf]);
+        p.li(24, band_rows as u32);
+        let col = format!("b{t}_col");
+        parallel_for(
+            &mut p,
+            Schedule::Static,
+            LoopRegs::KERNEL,
+            |_| {},
+            |p| {
+                // Local row i: windows start at buffer row i, outputs go to
+                // buffer row i.
+                p.mul(25, 13, 31).slli(25, 25, 2).add(23, 25, 17); // out ptr
+                p.mul(25, 13, 30).slli(25, 25, 2).add(22, 25, 15); // band row
+                p.mv(20, 22);
+                p.li(18, 0); // ox
+                p.label(&col);
+                {
+                    p.li(28, 0); // acc
+                    for r in 0..3i32 {
+                        for c in 0..3i32 {
+                            p.lw(26, 20, (r * w as i32 + c) * 4);
+                            p.lw(27, 16, (r * 3 + c) * 4);
+                            p.fmac(FpMode::F32, 28, 27, 26);
+                        }
+                    }
+                    p.addi(20, 20, 4); // slide the window
+                    p.sw_pi(28, 23, 4);
+                    p.addi(18, 18, 1);
+                    p.blt(18, 31, &col);
+                }
+            },
+        );
+        p.barrier(); // band compute complete
+        team::master_only(&mut p, &format!("wb{t}"), &mut |p| {
+            let dst = out_l2 + (t * band_rows * ow * 4) as u32;
+            team::dma_copy(p, 1, 2, obuf[buf], dst, out_band_words);
+            team::dma_wait(p, 1, 2);
+            if t + 1 < tiles {
+                team::signal_tile_ready(p);
+            }
+        });
+    }
+    p.barrier(); // join
+    p.end();
+
+    Workload {
+        name: format!("CONV-tiled{tiles}-scalar"),
+        program: p.build(),
+        stage: vec![(img_l2, Staged::F32(img)), (k_base, Staged::F32(k))],
+        out_addr: out_l2,
+        out_len: ow * oh,
+        out_fmt: OutFmt::F32,
+        expected,
+        rtol: 0.0,
+        atol: 1e-12,
+        reference: reference(w, h),
     }
 }
 
@@ -284,6 +401,31 @@ mod tests {
     fn vector_exact() {
         let cfg = ClusterConfig::new(8, 8, 0);
         let w = build(Variant::VEC, &cfg, 16, 8);
+        let (_, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+    }
+
+    #[test]
+    fn tiled_exact_across_tile_counts() {
+        let cfg = ClusterConfig::new(8, 8, 1);
+        for tiles in [1usize, 2, 3, 6] {
+            let w = build_tiled(&cfg, 16, 8, tiles);
+            let (_, out) = w.run(&cfg);
+            w.verify(&out).unwrap_or_else(|e| panic!("tiles={tiles}: {e}"));
+        }
+        let (_, solo) = build_tiled(&cfg, 16, 8, 2).run_on(&cfg, 1);
+        build_tiled(&cfg, 16, 8, 2).verify(&solo).unwrap();
+        // Tiling never moves arithmetic.
+        let flat = build(Variant::Scalar, &cfg, 16, 8);
+        assert_eq!(build_tiled(&cfg, 16, 8, 2).expected, flat.expected);
+    }
+
+    #[test]
+    fn tiled_handles_images_larger_than_tcdm() {
+        // 128×66 image + 126×64 output ≈ 66 kB of f32 against a 64 kB TCDM.
+        let cfg = ClusterConfig::new(8, 8, 1);
+        let w = build_tiled(&cfg, 128, 66, 8);
+        assert!((128 * 66 + 126 * 64) * 4 > cfg.tcdm_bytes());
         let (_, out) = w.run(&cfg);
         w.verify(&out).unwrap();
     }

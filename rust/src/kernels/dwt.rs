@@ -17,7 +17,8 @@
 
 use super::{quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
-use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::isa::{regs, ProgramBuilder};
+use crate::runtime::{parallel_for, LoopRegs, Schedule};
 use crate::testutil::Rng;
 use crate::transfp::{simd, FpSpec};
 
@@ -125,44 +126,44 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize, levels: usize) -> Wo
         }
     }
 
-    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let id = regs::CORE_ID;
     let mut p = ProgramBuilder::new(format!("dwt-{}", elem.suffix()));
     p.li(15, w0_base).li(16, w1_base).li(17, r_base);
     p.li(4, hg_base); // h table
     p.li(9, hg_base + (TAPS as i32 * elem.size()) as u32); // g table
     p.li(24, (n / 2) as u32); // outputs at current level
     for l in 1..=levels {
-        // Split this level's outputs across cores.
-        p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-        p.mul(13, id, 12);
-        p.add(14, 13, 12).imin(14, 14, 24);
+        // Split this level's outputs across cores through the runtime.
+        parallel_for(
+            &mut p,
+            Schedule::Static,
+            LoopRegs::KERNEL,
+            |p| {
+                // Walking pointers: x (2 samples per output), approx out,
+                // detail out — materialized from the chunk start.
+                p.slli(20, 13, elem.shift() + 1).add(20, 20, 15);
+                p.slli(25, 13, elem.shift());
+                p.add(29, 25, 16); // approx ptr = out + size·start
+                p.add(23, 25, 17).addi(23, 23, (n >> l) as i32 * elem.size());
+            },
+            |p| {
+                // Taps fully unrolled with static offsets (the compiler's
+                // obvious lowering for a fixed 4-tap filter).
+                p.li(27, 0); // lo acc
+                p.li(28, 0); // hi acc
+                for k in 0..TAPS as i32 {
+                    elem.load(p, 26, 20, k);
+                    elem.load(p, 5, 4, k);
+                    elem.load(p, 6, 9, k);
+                    p.fmac(elem.mode, 27, 5, 26);
+                    p.fmac(elem.mode, 28, 6, 26);
+                }
+                p.addi(20, 20, 2 * elem.size());
+                elem.store_pi(p, 27, 29, 1);
+                elem.store_pi(p, 28, 23, 1);
+            },
+        );
         let lvl = format!("lvl{l}_");
-        p.bge(13, 14, &format!("{lvl}skip"));
-        // Walking pointers: x (2 samples per output), approx out, detail out.
-        p.slli(20, 13, elem.shift() + 1).add(20, 20, 15); // x_ptr = in + 2·size·start
-        p.slli(25, 13, elem.shift());
-        p.add(29, 25, 16); // approx ptr = out + size·start
-        p.add(23, 25, 17).addi(23, 23, (n >> l) as i32 * elem.size()); // detail ptr
-        p.label(&format!("{lvl}out"));
-        {
-            // Taps fully unrolled with static offsets (the compiler's
-            // obvious lowering for a fixed 4-tap filter).
-            p.li(27, 0); // lo acc
-            p.li(28, 0); // hi acc
-            for k in 0..TAPS as i32 {
-                elem.load(&mut p, 26, 20, k);
-                elem.load(&mut p, 5, 4, k);
-                elem.load(&mut p, 6, 9, k);
-                p.fmac(elem.mode, 27, 5, 26);
-                p.fmac(elem.mode, 28, 6, 26);
-            }
-            p.addi(20, 20, 2 * elem.size());
-            elem.store_pi(&mut p, 27, 29, 1);
-            elem.store_pi(&mut p, 28, 23, 1);
-            p.addi(13, 13, 1);
-            p.blt(13, 14, &format!("{lvl}out"));
-        }
-        p.label(&format!("{lvl}skip"));
         // Core 0 zero-pads the TAPS samples after this level's approx so the
         // next level sees a zero-extended edge (the ping-pong buffer holds
         // stale data there otherwise).
@@ -180,19 +181,19 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize, levels: usize) -> Wo
     // Copy the final approximation into r[0 .. n>>levels] (parallel).
     let alen = (n >> levels) as u32;
     p.li(24, alen);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
-    p.bge(13, 14, "cp_skip");
-    p.label("cp");
-    p.slli(25, 13, elem.shift());
-    p.add(20, 25, 15);
-    elem.load(&mut p, 26, 20, 0);
-    p.add(21, 25, 17);
-    elem.store(&mut p, 26, 21, 0);
-    p.addi(13, 13, 1);
-    p.blt(13, 14, "cp");
-    p.label("cp_skip");
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            p.slli(25, 13, elem.shift());
+            p.add(20, 25, 15);
+            elem.load(p, 26, 20, 0);
+            p.add(21, 25, 17);
+            elem.store(p, 26, 21, 0);
+        },
+    );
     p.barrier();
     p.end();
 
@@ -267,43 +268,43 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize, levels: usize) 
         }
     }
 
-    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let id = regs::CORE_ID;
     let mut p = ProgramBuilder::new("dwt-vector");
     p.li(15, w0_base).li(16, w1_base).li(17, r_base);
     p.li(24, (n / 2) as u32);
     for l in 1..=levels {
-        p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-        p.mul(13, id, 12);
-        p.add(14, 13, 12).imin(14, 14, 24);
+        parallel_for(
+            &mut p,
+            Schedule::Static,
+            LoopRegs::KERNEL,
+            |p| {
+                p.li(21, hg_base);
+                p.slli(20, 13, 2).add(20, 20, 15); // sample ptr (2 lanes/out)
+                p.slli(25, 13, 1);
+                p.add(29, 25, 16); // approx lane ptr
+                p.add(23, 25, 17).addi(23, 23, ((n >> l) * 2) as i32); // detail
+            },
+            |p| {
+                p.li(27, 0); // (lo,hi) accumulator pair
+                // Unrolled taps: lh sample, pv.pack duplicate, vfmac against
+                // the packed (h[k], g[k]) table — both filters per
+                // instruction.
+                for k in 0..TAPS as i32 {
+                    p.lh(26, 20, 2 * k);
+                    p.vpack_lo(26, 26, 26);
+                    p.lw(5, 21, 4 * k);
+                    p.fmac(mode, 27, 26, 5);
+                }
+                p.addi(20, 20, 4);
+                // Store lo lane → approx, hi lane → detail.
+                p.sh(27, 29, 0);
+                p.addi(29, 29, 2);
+                p.vshuffle(27, 27, 0b01); // hi → low lane
+                p.sh(27, 23, 0);
+                p.addi(23, 23, 2);
+            },
+        );
         let lvl = format!("lvl{l}_");
-        p.bge(13, 14, &format!("{lvl}skip"));
-        p.li(21, hg_base);
-        p.slli(20, 13, 2).add(20, 20, 15); // sample ptr (2 lanes per output)
-        p.slli(25, 13, 1);
-        p.add(29, 25, 16); // approx lane ptr
-        p.add(23, 25, 17).addi(23, 23, ((n >> l) * 2) as i32); // detail ptr
-        p.label(&format!("{lvl}out"));
-        {
-            p.li(27, 0); // (lo,hi) accumulator pair
-            // Unrolled taps: lh sample, pv.pack duplicate, vfmac against the
-            // packed (h[k], g[k]) table — both filters per instruction.
-            for k in 0..TAPS as i32 {
-                p.lh(26, 20, 2 * k);
-                p.vpack_lo(26, 26, 26);
-                p.lw(5, 21, 4 * k);
-                p.fmac(mode, 27, 26, 5);
-            }
-            p.addi(20, 20, 4);
-            // Store lo lane → approx, hi lane → detail.
-            p.sh(27, 29, 0);
-            p.addi(29, 29, 2);
-            p.vshuffle(27, 27, 0b01); // hi → low lane
-            p.sh(27, 23, 0);
-            p.addi(23, 23, 2);
-            p.addi(13, 13, 1);
-            p.blt(13, 14, &format!("{lvl}out"));
-        }
-        p.label(&format!("{lvl}skip"));
         // Zero-pad the edge for the next level (see the scalar variant).
         p.bne(id, regs::ZERO, &format!("{lvl}nopad"));
         let half = n >> l;
@@ -318,19 +319,19 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize, levels: usize) 
     // Copy final approx lanes into r[0..].
     let alen = (n >> levels) as u32;
     p.li(24, alen);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
-    p.bge(13, 14, "cp_skip");
-    p.label("cp");
-    p.slli(25, 13, 1);
-    p.add(20, 25, 15);
-    p.lh(26, 20, 0);
-    p.add(21, 25, 17);
-    p.sh(26, 21, 0);
-    p.addi(13, 13, 1);
-    p.blt(13, 14, "cp");
-    p.label("cp_skip");
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            p.slli(25, 13, 1);
+            p.add(20, 25, 15);
+            p.lh(26, 20, 0);
+            p.add(21, 25, 17);
+            p.sh(26, 21, 0);
+        },
+    );
     p.barrier();
     p.end();
 

@@ -15,7 +15,8 @@
 
 use super::{quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
-use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::isa::ProgramBuilder;
+use crate::runtime::{parallel_for, LoopRegs, Schedule};
 use crate::testutil::Rng;
 use crate::transfp::{simd, FpSpec};
 
@@ -127,7 +128,6 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize) -> Workload {
 
     // log2 bytes per complex point (two elements).
     let cshift = elem.shift() + 1;
-    let (id, nc) = (regs::CORE_ID, regs::NCORES);
     let mut p = ProgramBuilder::new(format!("fft-{}", elem.suffix()));
     p.li(15, x_base).li(16, w_base);
     let stages = n.trailing_zeros() as usize;
@@ -138,50 +138,47 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize) -> Workload {
         // since half is a power of two).
         let half_shift = half.trailing_zeros();
         p.li(24, (n / 2) as u32);
-        p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-        p.mul(13, id, 12);
-        p.add(14, 13, 12).imin(14, 14, 24);
-        let lbl = format!("s{s}_");
-        p.bge(13, 14, &format!("{lbl}skip"));
-        p.label(&format!("{lbl}bf"));
-        {
-            // j = b & (half-1); grp = b >> half_shift
-            p.andi(18, 13, (half - 1) as i32);
-            p.srli(20, 13, half_shift as i32);
-            // iu = grp*(n>>s) + j ; iv = iu + half
-            p.slli(20, 20, (n >> s).trailing_zeros() as i32);
-            p.add(20, 20, 18);
-            // u_ptr = x + csize*iu ; v_ptr = u_ptr + csize*half
-            p.slli(20, 20, cshift).add(20, 20, 15);
-            p.addi(21, 20, 2 * elem.size() * half as i32);
-            // w_ptr = w + csize*(j*groups)
-            p.slli(22, 18, cshift + s as i32).add(22, 22, 16);
-            // Loads.
-            elem.load(&mut p, 5, 20, 0); // ur
-            elem.load(&mut p, 6, 20, 1); // ui
-            elem.load(&mut p, 7, 21, 0); // vr
-            elem.load(&mut p, 8, 21, 1); // vi
-            elem.load(&mut p, 26, 22, 0); // wr
-            elem.load(&mut p, 27, 22, 1); // wi
-            // u' = u + v (2 ops); t = u − v (2 ops).
-            p.fadd(elem.mode, 28, 5, 7);
-            p.fadd(elem.mode, 29, 6, 8);
-            p.fsub(elem.mode, 5, 5, 7);
-            p.fsub(elem.mode, 6, 6, 8);
-            elem.store(&mut p, 28, 20, 0);
-            elem.store(&mut p, 29, 20, 1);
-            // v' = t·W — the 5-op complex multiply (7 cycles with deps).
-            p.fmul(elem.mode, 30, 6, 27); // m1 = ti*wi
-            p.fmul(elem.mode, 31, 5, 26); // tr*wr
-            p.fsub(elem.mode, 31, 31, 30); // re
-            p.fmul(elem.mode, 30, 5, 27); // m2 = tr*wi
-            p.fmac(elem.mode, 30, 6, 26); // im = ti*wr + m2
-            elem.store(&mut p, 31, 21, 0);
-            elem.store(&mut p, 30, 21, 1);
-            p.addi(13, 13, 1);
-            p.blt(13, 14, &format!("{lbl}bf"));
-        }
-        p.label(&format!("{lbl}skip"));
+        parallel_for(
+            &mut p,
+            Schedule::Static,
+            LoopRegs::KERNEL,
+            |_| {},
+            |p| {
+                // j = b & (half-1); grp = b >> half_shift
+                p.andi(18, 13, (half - 1) as i32);
+                p.srli(20, 13, half_shift as i32);
+                // iu = grp*(n>>s) + j ; iv = iu + half
+                p.slli(20, 20, (n >> s).trailing_zeros() as i32);
+                p.add(20, 20, 18);
+                // u_ptr = x + csize*iu ; v_ptr = u_ptr + csize*half
+                p.slli(20, 20, cshift).add(20, 20, 15);
+                p.addi(21, 20, 2 * elem.size() * half as i32);
+                // w_ptr = w + csize*(j*groups)
+                p.slli(22, 18, cshift + s as i32).add(22, 22, 16);
+                // Loads.
+                elem.load(p, 5, 20, 0); // ur
+                elem.load(p, 6, 20, 1); // ui
+                elem.load(p, 7, 21, 0); // vr
+                elem.load(p, 8, 21, 1); // vi
+                elem.load(p, 26, 22, 0); // wr
+                elem.load(p, 27, 22, 1); // wi
+                // u' = u + v (2 ops); t = u − v (2 ops).
+                p.fadd(elem.mode, 28, 5, 7);
+                p.fadd(elem.mode, 29, 6, 8);
+                p.fsub(elem.mode, 5, 5, 7);
+                p.fsub(elem.mode, 6, 6, 8);
+                elem.store(p, 28, 20, 0);
+                elem.store(p, 29, 20, 1);
+                // v' = t·W — the 5-op complex multiply (7 cycles with deps).
+                p.fmul(elem.mode, 30, 6, 27); // m1 = ti*wi
+                p.fmul(elem.mode, 31, 5, 26); // tr*wr
+                p.fsub(elem.mode, 31, 31, 30); // re
+                p.fmul(elem.mode, 30, 5, 27); // m2 = tr*wi
+                p.fmac(elem.mode, 30, 6, 26); // im = ti*wr + m2
+                elem.store(p, 31, 21, 0);
+                elem.store(p, 30, 21, 1);
+            },
+        );
         p.barrier();
     }
     p.end();
@@ -240,7 +237,6 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
             .collect::<Vec<f64>>()
     };
 
-    let (id, nc) = (regs::CORE_ID, regs::NCORES);
     let mut p = ProgramBuilder::new("fft-vector");
     p.li(15, x_base).li(16, w_base);
     let stages = n.trailing_zeros() as usize;
@@ -248,40 +244,37 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
         let half = (n >> (s + 1)) as u32;
         let half_shift = half.trailing_zeros();
         p.li(24, (n / 2) as u32);
-        p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-        p.mul(13, id, 12);
-        p.add(14, 13, 12).imin(14, 14, 24);
-        let lbl = format!("s{s}_");
-        p.bge(13, 14, &format!("{lbl}skip"));
-        p.label(&format!("{lbl}bf"));
-        {
-            p.andi(18, 13, (half - 1) as i32);
-            p.srli(20, 13, half_shift as i32);
-            p.slli(20, 20, (n >> s).trailing_zeros() as i32);
-            p.add(20, 20, 18);
-            p.slli(20, 20, 2).add(20, 20, 15); // u_ptr (4 bytes per complex)
-            p.addi(21, 20, (4 * half) as i32); // v_ptr
-            p.slli(22, 18, (2 + s) as i32).add(22, 22, 16); // w_ptr
-            p.lw(5, 20, 0); // u
-            p.lw(6, 21, 0); // v
-            p.lw(7, 22, 0); // W
-            p.fadd(mode, 8, 5, 6); // u' both lanes
-            p.fsub(mode, 9, 5, 6); // t
-            p.sw(8, 20, 0);
-            // Complex multiply t·W — the 10-op §5.3.1 sequence.
-            p.vshuffle(26, 7, 0b01); // (wi, wr)
-            p.fmul(mode, 27, 9, 7); // (tr·wr, ti·wi)
-            p.fmul(mode, 28, 9, 26); // (tr·wi, ti·wr)
-            p.vshuffle(29, 27, 0b01);
-            p.fsub(mode, 27, 27, 29); // lane0 = re
-            p.vshuffle(29, 28, 0b01);
-            p.fadd(mode, 28, 28, 29); // lane0 = im
-            p.vpack_lo(27, 27, 28); // (re, im)
-            p.sw(27, 21, 0);
-            p.addi(13, 13, 1);
-            p.blt(13, 14, &format!("{lbl}bf"));
-        }
-        p.label(&format!("{lbl}skip"));
+        parallel_for(
+            &mut p,
+            Schedule::Static,
+            LoopRegs::KERNEL,
+            |_| {},
+            |p| {
+                p.andi(18, 13, (half - 1) as i32);
+                p.srli(20, 13, half_shift as i32);
+                p.slli(20, 20, (n >> s).trailing_zeros() as i32);
+                p.add(20, 20, 18);
+                p.slli(20, 20, 2).add(20, 20, 15); // u_ptr (4 B per complex)
+                p.addi(21, 20, (4 * half) as i32); // v_ptr
+                p.slli(22, 18, (2 + s) as i32).add(22, 22, 16); // w_ptr
+                p.lw(5, 20, 0); // u
+                p.lw(6, 21, 0); // v
+                p.lw(7, 22, 0); // W
+                p.fadd(mode, 8, 5, 6); // u' both lanes
+                p.fsub(mode, 9, 5, 6); // t
+                p.sw(8, 20, 0);
+                // Complex multiply t·W — the 10-op §5.3.1 sequence.
+                p.vshuffle(26, 7, 0b01); // (wi, wr)
+                p.fmul(mode, 27, 9, 7); // (tr·wr, ti·wi)
+                p.fmul(mode, 28, 9, 26); // (tr·wi, ti·wr)
+                p.vshuffle(29, 27, 0b01);
+                p.fsub(mode, 27, 27, 29); // lane0 = re
+                p.vshuffle(29, 28, 0b01);
+                p.fadd(mode, 28, 28, 29); // lane0 = im
+                p.vpack_lo(27, 27, 28); // (re, im)
+                p.sw(27, 21, 0);
+            },
+        );
         p.barrier();
     }
     p.end();

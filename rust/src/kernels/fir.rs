@@ -12,7 +12,8 @@
 
 use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
-use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::isa::ProgramBuilder;
+use crate::runtime::{parallel_for, LoopRegs, Schedule};
 use crate::testutil::Rng;
 use crate::transfp::{cast, simd};
 
@@ -71,31 +72,29 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize, taps: usize) -> Work
         .collect();
 
     let mut p = ProgramBuilder::new(format!("fir-{}", elem.suffix()));
-    let (id, nc) = (regs::CORE_ID, regs::NCORES);
     p.li(24, n as u32);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-    p.mul(13, id, 12); // start
-    p.add(14, 13, 12).imin(14, 14, 24); // end
     p.li(15, x_base).li(16, h_base).li(17, y_base);
-    // y_ptr = y + size*start; x walks from x + size*start
-    p.slli(25, 13, elem.shift()).add(17, 17, 25);
-    p.bge(13, 14, "done");
-    p.label("out");
-    {
-        p.slli(20, 13, elem.shift()).add(20, 20, 15); // x_ptr = x + size·i
-        p.mv(21, 16); // h_ptr
-        p.li(28, 0); // acc
-        p.li(19, taps as u32);
-        p.hwloop(19);
-        elem.load_pi(&mut p, 26, 20, 1);
-        elem.load_pi(&mut p, 27, 21, 1);
-        p.fmac(elem.mode, 28, 27, 26);
-        p.hwloop_end();
-        elem.store_pi(&mut p, 28, 17, 1);
-        p.addi(13, 13, 1);
-        p.blt(13, 14, "out");
-    }
-    p.label("done");
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |p| {
+            // y_ptr walks from y + size·chunk_start.
+            p.slli(25, 13, elem.shift()).add(23, 25, 17);
+        },
+        |p| {
+            p.slli(20, 13, elem.shift()).add(20, 20, 15); // x_ptr = x + size·i
+            p.mv(21, 16); // h_ptr
+            p.li(28, 0); // acc
+            p.li(19, taps as u32);
+            p.hwloop(19);
+            elem.load_pi(p, 26, 20, 1);
+            elem.load_pi(p, 27, 21, 1);
+            p.fmac(elem.mode, 28, 27, 26);
+            p.hwloop_end();
+            elem.store_pi(p, 28, 23, 1);
+        },
+    );
     p.barrier();
     p.end();
 
@@ -148,37 +147,36 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize, taps: usize) ->
     }
 
     let mut p = ProgramBuilder::new("fir-vector");
-    let (id, nc) = (regs::CORE_ID, regs::NCORES);
     let npairs = (n / 2) as u32;
     p.li(24, npairs);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
     p.li(15, x_base).li(16, h_base).li(17, y_base);
-    p.slli(25, 13, 2).add(17, 17, 25); // y_ptr (one word per pair)
-    p.bge(13, 14, "done");
-    p.label("out");
-    {
-        p.slli(20, 13, 2).add(20, 20, 15); // x_ptr = x + 4·ip
-        p.mv(21, 16); // h_ptr
-        p.li(27, 0); // acc0
-        p.li(28, 0); // acc1
-        p.li(19, (taps / 2) as u32);
-        p.hwloop(19);
-        p.lw_pi(5, 21, 4); // h pair
-        p.lw_pi(6, 20, 4); // w0 (aligned)
-        p.lw(7, 20, 0); // w1 (next pair, re-read next iteration)
-        p.vshuffle(8, 6, 0b11); // (w0.hi, w0.hi)
-        p.vpack_lo(8, 8, 7); // odd pair (w0.hi, w1.lo)
-        p.fdotp(mode, 27, 5, 6);
-        p.fdotp(mode, 28, 5, 8);
-        p.hwloop_end();
-        p.cpka(mode, 9, 27, 28);
-        p.sw_pi(9, 17, 4);
-        p.addi(13, 13, 1);
-        p.blt(13, 14, "out");
-    }
-    p.label("done");
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |p| {
+            // y_ptr walks from y + 4·chunk_start (one word per pair).
+            p.slli(25, 13, 2).add(23, 25, 17);
+        },
+        |p| {
+            p.slli(20, 13, 2).add(20, 20, 15); // x_ptr = x + 4·ip
+            p.mv(21, 16); // h_ptr
+            p.li(27, 0); // acc0
+            p.li(28, 0); // acc1
+            p.li(19, (taps / 2) as u32);
+            p.hwloop(19);
+            p.lw_pi(5, 21, 4); // h pair
+            p.lw_pi(6, 20, 4); // w0 (aligned)
+            p.lw(7, 20, 0); // w1 (next pair, re-read next iteration)
+            p.vshuffle(8, 6, 0b11); // (w0.hi, w0.hi)
+            p.vpack_lo(8, 8, 7); // odd pair (w0.hi, w1.lo)
+            p.fdotp(mode, 27, 5, 6);
+            p.fdotp(mode, 28, 5, 8);
+            p.hwloop_end();
+            p.cpka(mode, 9, 27, 28);
+            p.sw_pi(9, 23, 4);
+        },
+    );
     p.barrier();
     p.end();
 

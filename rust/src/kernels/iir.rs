@@ -22,7 +22,8 @@
 
 use super::{quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
-use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::isa::{regs, ProgramBuilder};
+use crate::runtime::{parallel_for, LoopRegs, Schedule};
 use crate::testutil::Rng;
 use crate::transfp::{simd, FpSpec};
 
@@ -104,34 +105,32 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize) -> Workload {
     }
 
     let two = (2 * elem.size()) as u32; // byte offset of the first sample
-    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let id = regs::CORE_ID;
     let mut p = ProgramBuilder::new(format!("iir-{}", elem.suffix()));
     p.li(15, x_base + two).li(16, w_base + two).li(17, y_base + two);
     p.li(4, c_base);
-    // Phase 1: parallel feed-forward.
-    p.li(24, n as u32);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
     elem.load(&mut p, 5, 4, 0); // b0
     elem.load(&mut p, 6, 4, 1); // b1
     elem.load(&mut p, 7, 4, 2); // b2
-    p.bge(13, 14, "ff_skip");
-    p.label("ff");
-    {
-        p.slli(20, 13, elem.shift()).add(20, 20, 15); // &x[i]
-        elem.load(&mut p, 26, 20, 0);
-        elem.load(&mut p, 27, 20, -1);
-        elem.load(&mut p, 29, 20, -2);
-        p.fmul(elem.mode, 28, 5, 26);
-        p.fmac(elem.mode, 28, 6, 27);
-        p.fmac(elem.mode, 28, 7, 29);
-        p.slli(21, 13, elem.shift()).add(21, 21, 16);
-        elem.store(&mut p, 28, 21, 0);
-        p.addi(13, 13, 1);
-        p.blt(13, 14, "ff");
-    }
-    p.label("ff_skip");
+    // Phase 1: parallel feed-forward.
+    p.li(24, n as u32);
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            p.slli(20, 13, elem.shift()).add(20, 20, 15); // &x[i]
+            elem.load(p, 26, 20, 0);
+            elem.load(p, 27, 20, -1);
+            elem.load(p, 29, 20, -2);
+            p.fmul(elem.mode, 28, 5, 26);
+            p.fmac(elem.mode, 28, 6, 27);
+            p.fmac(elem.mode, 28, 7, 29);
+            p.slli(21, 13, elem.shift()).add(21, 21, 16);
+            elem.store(p, 28, 21, 0);
+        },
+    );
     p.barrier();
     // Phase 2: sequential feedback on core 0 (the scaling bottleneck).
     p.bne(id, regs::ZERO, "fb_skip");
@@ -261,7 +260,7 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
         }
     }
 
-    let (id, nc) = (regs::CORE_ID, regs::NCORES);
+    let id = regs::CORE_ID;
     let mut p = ProgramBuilder::new("iir-vector");
     p.li(15, x_base).li(16, w_base).li(17, y_base);
     p.li(4, c_base);
@@ -274,26 +273,24 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
     p.lw(7, 4, 20); // M col 1
     // Phase 1: parallel feed-forward over pairs.
     p.li(24, (n / 2) as u32);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
-    p.bge(13, 14, "ff_skip");
-    p.label("ff");
-    {
-        p.slli(20, 13, 2).add(20, 20, 15); // &xw[k] (prev pair)
-        p.lw(26, 20, 4); // cur = (x[2k], x[2k+1])
-        p.lw(27, 20, 0); // prev
-        p.vshuffle(8, 27, 0b11);
-        p.vpack_lo(8, 8, 26); // sh1 = (x[2k-1], x[2k])
-        p.fmul(mode, 28, 1, 26);
-        p.fmac(mode, 28, 2, 8);
-        p.fmac(mode, 28, 3, 27);
-        p.slli(21, 13, 2).add(21, 21, 16);
-        p.sw(28, 21, 0);
-        p.addi(13, 13, 1);
-        p.blt(13, 14, "ff");
-    }
-    p.label("ff_skip");
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            p.slli(20, 13, 2).add(20, 20, 15); // &xw[k] (prev pair)
+            p.lw(26, 20, 4); // cur = (x[2k], x[2k+1])
+            p.lw(27, 20, 0); // prev
+            p.vshuffle(8, 27, 0b11);
+            p.vpack_lo(8, 8, 26); // sh1 = (x[2k-1], x[2k])
+            p.fmul(mode, 28, 1, 26);
+            p.fmac(mode, 28, 2, 8);
+            p.fmac(mode, 28, 3, 27);
+            p.slli(21, 13, 2).add(21, 21, 16);
+            p.sw(28, 21, 0);
+        },
+    );
     p.barrier();
     // Phase 2: sequential block recursion on core 0.
     p.bne(id, regs::ZERO, "fb_skip");

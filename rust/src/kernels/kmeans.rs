@@ -15,6 +15,7 @@
 use super::{quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
 use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::runtime::{parallel_for, LoopRegs, Schedule};
 use crate::testutil::Rng;
 use crate::transfp::{scalar as sfp, simd, CmpPred, FpMode, FpSpec};
 
@@ -165,49 +166,47 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize, d: usize, k: usize) 
     p.li(15, pts_base).li(16, cent_base).li(17, assign_base);
     // ---- Phase 1: assignment, parallel over points.
     p.li(24, n as u32);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
     p.li(30, (d * elem.size() as usize) as u32); // row bytes
-    p.bge(13, 14, "as_skip");
-    p.label("as");
-    {
-        p.mul(20, 13, 30).add(20, 20, 15); // point ptr
-        p.mv(21, 16); // centroid ptr (walks all K rows)
-        p.li(5, 0).li(6, 0).li(7, 0).li(8, 0); // 4 distance accs (0.0)
-        p.li(19, d as u32);
-        p.hwloop(19);
-        elem.load_pi(&mut p, 26, 20, 1); // x[j] — loaded once for all 4 centroids
-        elem.load(&mut p, 27, 21, 0);
-        p.fsub(elem.mode, 27, 26, 27);
-        p.fmac(elem.mode, 5, 27, 27);
-        elem.load(&mut p, 27, 21, d as i32);
-        p.fsub(elem.mode, 27, 26, 27);
-        p.fmac(elem.mode, 6, 27, 27);
-        elem.load(&mut p, 27, 21, (2 * d) as i32);
-        p.fsub(elem.mode, 27, 26, 27);
-        p.fmac(elem.mode, 7, 27, 27);
-        elem.load(&mut p, 27, 21, (3 * d) as i32);
-        p.fsub(elem.mode, 27, 26, 27);
-        p.fmac(elem.mode, 8, 27, 27);
-        p.addi(21, 21, elem.size());
-        p.hwloop_end();
-        // Argmin over r5..r8 (strict less-than, first wins).
-        p.li(28, 0); // best index
-        p.mv(29, 5); // best value
-        for (c, acc) in [(1u32, 6u8), (2, 7), (3, 8)] {
-            p.fcmp(elem.mode, CmpPred::Lt, 26, acc, 29);
-            p.beq(26, regs::ZERO, &format!("ge{c}"));
-            p.li(28, c);
-            p.mv(29, acc);
-            p.label(&format!("ge{c}"));
-        }
-        p.slli(26, 13, 2).add(26, 26, 17);
-        p.sw(28, 26, 0);
-        p.addi(13, 13, 1);
-        p.blt(13, 14, "as");
-    }
-    p.label("as_skip");
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            p.mul(20, 13, 30).add(20, 20, 15); // point ptr
+            p.mv(21, 16); // centroid ptr (walks all K rows)
+            p.li(5, 0).li(6, 0).li(7, 0).li(8, 0); // 4 distance accs (0.0)
+            p.li(19, d as u32);
+            p.hwloop(19);
+            elem.load_pi(p, 26, 20, 1); // x[j] — loaded once for all 4
+            elem.load(p, 27, 21, 0);
+            p.fsub(elem.mode, 27, 26, 27);
+            p.fmac(elem.mode, 5, 27, 27);
+            elem.load(p, 27, 21, d as i32);
+            p.fsub(elem.mode, 27, 26, 27);
+            p.fmac(elem.mode, 6, 27, 27);
+            elem.load(p, 27, 21, (2 * d) as i32);
+            p.fsub(elem.mode, 27, 26, 27);
+            p.fmac(elem.mode, 7, 27, 27);
+            elem.load(p, 27, 21, (3 * d) as i32);
+            p.fsub(elem.mode, 27, 26, 27);
+            p.fmac(elem.mode, 8, 27, 27);
+            p.addi(21, 21, elem.size());
+            p.hwloop_end();
+            // Argmin over r5..r8 (strict less-than, first wins).
+            p.li(28, 0); // best index
+            p.mv(29, 5); // best value
+            for (c, acc) in [(1u32, 6u8), (2, 7), (3, 8)] {
+                p.fcmp(elem.mode, CmpPred::Lt, 26, acc, 29);
+                p.beq(26, regs::ZERO, &format!("ge{c}"));
+                p.li(28, c);
+                p.mv(29, acc);
+                p.label(&format!("ge{c}"));
+            }
+            p.slli(26, 13, 2).add(26, 26, 17);
+            p.sw(28, 26, 0);
+        },
+    );
     p.barrier();
     // ---- Phase 2: update, centroid c handled by core (c mod workers).
     p.li(24, k as u32);
@@ -361,48 +360,46 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize, d: usize, k: us
     let mut p = ProgramBuilder::new("kmeans-vector");
     p.li(15, pts_base).li(16, cent_base).li(17, assign_base);
     p.li(24, n as u32);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
     p.li(30, (dw * 4) as u32); // packed row bytes
-    p.bge(13, 14, "as_skip");
-    p.label("as");
-    {
-        p.mul(20, 13, 30).add(20, 20, 15);
-        p.mv(21, 16);
-        p.li(5, 0).li(6, 0).li(7, 0).li(8, 0); // f32 distance accs
-        p.li(19, dw as u32);
-        p.hwloop(19);
-        p.lw_pi(26, 20, 4); // point dim pair
-        p.lw(27, 21, 0);
-        p.fsub(mode, 27, 26, 27);
-        p.fdotp(mode, 5, 27, 27);
-        p.lw(27, 21, (dw * 4) as i32);
-        p.fsub(mode, 27, 26, 27);
-        p.fdotp(mode, 6, 27, 27);
-        p.lw(27, 21, (2 * dw * 4) as i32);
-        p.fsub(mode, 27, 26, 27);
-        p.fdotp(mode, 7, 27, 27);
-        p.lw(27, 21, (3 * dw * 4) as i32);
-        p.fsub(mode, 27, 26, 27);
-        p.fdotp(mode, 8, 27, 27);
-        p.addi(21, 21, 4);
-        p.hwloop_end();
-        p.li(28, 0);
-        p.mv(29, 5);
-        for (c, acc) in [(1u32, 6u8), (2, 7), (3, 8)] {
-            p.fcmp(FpMode::F32, CmpPred::Lt, 26, acc, 29);
-            p.beq(26, regs::ZERO, &format!("ge{c}"));
-            p.li(28, c);
-            p.mv(29, acc);
-            p.label(&format!("ge{c}"));
-        }
-        p.slli(26, 13, 2).add(26, 26, 17);
-        p.sw(28, 26, 0);
-        p.addi(13, 13, 1);
-        p.blt(13, 14, "as");
-    }
-    p.label("as_skip");
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            p.mul(20, 13, 30).add(20, 20, 15);
+            p.mv(21, 16);
+            p.li(5, 0).li(6, 0).li(7, 0).li(8, 0); // f32 distance accs
+            p.li(19, dw as u32);
+            p.hwloop(19);
+            p.lw_pi(26, 20, 4); // point dim pair
+            p.lw(27, 21, 0);
+            p.fsub(mode, 27, 26, 27);
+            p.fdotp(mode, 5, 27, 27);
+            p.lw(27, 21, (dw * 4) as i32);
+            p.fsub(mode, 27, 26, 27);
+            p.fdotp(mode, 6, 27, 27);
+            p.lw(27, 21, (2 * dw * 4) as i32);
+            p.fsub(mode, 27, 26, 27);
+            p.fdotp(mode, 7, 27, 27);
+            p.lw(27, 21, (3 * dw * 4) as i32);
+            p.fsub(mode, 27, 26, 27);
+            p.fdotp(mode, 8, 27, 27);
+            p.addi(21, 21, 4);
+            p.hwloop_end();
+            p.li(28, 0);
+            p.mv(29, 5);
+            for (c, acc) in [(1u32, 6u8), (2, 7), (3, 8)] {
+                p.fcmp(FpMode::F32, CmpPred::Lt, 26, acc, 29);
+                p.beq(26, regs::ZERO, &format!("ge{c}"));
+                p.li(28, c);
+                p.mv(29, acc);
+                p.label(&format!("ge{c}"));
+            }
+            p.slli(26, 13, 2).add(26, 26, 17);
+            p.sw(28, 26, 0);
+        },
+    );
     p.barrier();
     // Update phase: centroid per core, packed sums, 16-bit divides.
     p.li(24, k as u32);

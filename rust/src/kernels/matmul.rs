@@ -14,10 +14,12 @@
 //!   16-bit result pair.
 
 use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
+use crate::cluster::mem::L2_BASE;
 use crate::config::ClusterConfig;
 use crate::isa::{regs, ProgramBuilder};
+use crate::runtime::{parallel_for, team, LoopRegs, Schedule};
 use crate::testutil::Rng;
-use crate::transfp::{scalar, simd};
+use crate::transfp::{scalar, simd, FpMode};
 
 /// Build the MATMUL workload: C = A·B with n×n operands.
 pub fn build(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
@@ -77,49 +79,47 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize) -> Workload {
     }
 
     let mut p = ProgramBuilder::new(format!("matmul-{}", elem.suffix()));
-    let (id, nc) = (regs::CORE_ID, regs::NCORES);
-    // r24 = n; r12 = chunk = ceil(n / ncores); r13 = row; r14 = row_end
+    // r24 = n; the runtime owns r12/r13/r14/r25 (LoopRegs::KERNEL).
     p.li(24, n as u32);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, crate::isa::Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
     p.li(15, a_base).li(16, b_base).li(17, c_base);
-    p.bge(13, 14, "done");
-    p.label("row");
-    {
-        // r25 = size*n*i; r23 = C row base; r22 = A row base.
-        p.mul(25, 13, 24).slli(25, 25, elem.shift());
-        p.add(23, 25, 17); // c_row
-        p.add(22, 25, 15); // a_row
-        // Stagger the column start per core (j0 = 2·core_id mod n) so that
-        // concurrent B-column walks hit different TCDM banks — B's stride is
-        // n elements, which aliases to a single bank for power-of-two n.
-        p.slli(9, regs::CORE_ID, 1);
-        p.andi(9, 9, (n - 1) as i32); // j0
-        p.li(18, 0); // column count
-        p.label("col");
-        {
-            p.mv(20, 22); // a_ptr
-            p.slli(21, 9, elem.shift()).add(21, 21, 16); // b_ptr = B + size·j
-            p.li(28, 0); // acc = 0.0
-            p.li(19, n as u32);
-            p.hwloop(19);
-            elem.load_pi(&mut p, 26, 20, 1);
-            elem.load_pi(&mut p, 27, 21, n as i32);
-            p.fmac(elem.mode, 28, 26, 27);
-            p.hwloop_end();
-            p.slli(25, 9, elem.shift()).add(25, 25, 23);
-            elem.store(&mut p, 28, 25, 0); // C[i][j]
-            // j = (j + 1) mod n
-            p.addi(9, 9, 1);
-            p.andi(9, 9, (n - 1) as i32);
-            p.addi(18, 18, 1);
-            p.blt(18, 24, "col");
-        }
-        p.addi(13, 13, 1);
-        p.blt(13, 14, "row");
-    }
-    p.label("done");
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            // r25 = size*n*i; r23 = C row base; r22 = A row base.
+            p.mul(25, 13, 24).slli(25, 25, elem.shift());
+            p.add(23, 25, 17); // c_row
+            p.add(22, 25, 15); // a_row
+            // Stagger the column start per core (j0 = 2·core_id mod n) so
+            // that concurrent B-column walks hit different TCDM banks — B's
+            // stride is n elements, which aliases to a single bank for
+            // power-of-two n.
+            p.slli(9, regs::CORE_ID, 1);
+            p.andi(9, 9, (n - 1) as i32); // j0
+            p.li(18, 0); // column count
+            p.label("col");
+            {
+                p.mv(20, 22); // a_ptr
+                p.slli(21, 9, elem.shift()).add(21, 21, 16); // b_ptr = B + size·j
+                p.li(28, 0); // acc = 0.0
+                p.li(19, n as u32);
+                p.hwloop(19);
+                elem.load_pi(p, 26, 20, 1);
+                elem.load_pi(p, 27, 21, n as i32);
+                p.fmac(elem.mode, 28, 26, 27);
+                p.hwloop_end();
+                p.slli(25, 9, elem.shift()).add(25, 25, 23);
+                elem.store(p, 28, 25, 0); // C[i][j]
+                // j = (j + 1) mod n
+                p.addi(9, 9, 1);
+                p.andi(9, 9, (n - 1) as i32);
+                p.addi(18, 18, 1);
+                p.blt(18, 24, "col");
+            }
+        },
+    );
     p.barrier();
     p.end();
 
@@ -181,59 +181,56 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
     }
 
     let mut p = ProgramBuilder::new("matmul-vector");
-    let (id, nc) = (regs::CORE_ID, regs::NCORES);
     p.li(24, n as u32);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, crate::isa::Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
     p.li(15, a_base).li(16, b_base).li(17, c_base);
     p.li(30, row_w as u32); // words per packed row
     p.slli(31, 30, 3); // 2 packed rows in bytes (row_w*4*2)
-    p.bge(13, 14, "done");
-    p.label("row");
-    {
-        // r22 = A row base; r23 = C row base (both i*row_w words)
-        p.mul(25, 13, 30).slli(25, 25, 2);
-        p.add(22, 25, 15);
-        p.add(23, 25, 17);
-        // Staggered column-pair start (see the scalar variant): B's packed
-        // row stride aliases banks for power-of-two n.
-        p.andi(4, regs::CORE_ID, (row_w - 1) as i32); // jp0
-        p.li(18, 0); // column-pair count
-        p.label("col");
-        {
-            p.mv(20, 22); // a_ptr
-            p.slli(21, 4, 2).add(21, 21, 16); // b_ptr0 = B + 4*jp (row 0)
-            p.slli(29, 30, 2).add(29, 29, 21); // b_ptr1 = b_ptr0 + one row
-            p.li(27, 0); // acc0 (f32)
-            p.li(28, 0); // acc1 (f32)
-            p.li(19, (n / 2) as u32);
-            p.hwloop(19);
-            p.lw_pi(26, 20, 4); // A[i][k..k+1]
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            // r22 = A row base; r23 = C row base (both i*row_w words)
+            p.mul(25, 13, 30).slli(25, 25, 2);
+            p.add(22, 25, 15);
+            p.add(23, 25, 17);
+            // Staggered column-pair start (see the scalar variant): B's
+            // packed row stride aliases banks for power-of-two n.
+            p.andi(4, regs::CORE_ID, (row_w - 1) as i32); // jp0
+            p.li(18, 0); // column-pair count
+            p.label("col");
             {
-                let two_rows = (row_w * 8) as i32;
-                p.lw_pi(5, 21, two_rows); // B[k][j..j+1]
-                p.lw_pi(6, 29, two_rows); // B[k+1][j..j+1]
+                p.mv(20, 22); // a_ptr
+                p.slli(21, 4, 2).add(21, 21, 16); // b_ptr0 = B + 4*jp (row 0)
+                p.slli(29, 30, 2).add(29, 29, 21); // b_ptr1 = b_ptr0 + one row
+                p.li(27, 0); // acc0 (f32)
+                p.li(28, 0); // acc1 (f32)
+                p.li(19, (n / 2) as u32);
+                p.hwloop(19);
+                p.lw_pi(26, 20, 4); // A[i][k..k+1]
+                {
+                    let two_rows = (row_w * 8) as i32;
+                    p.lw_pi(5, 21, two_rows); // B[k][j..j+1]
+                    p.lw_pi(6, 29, two_rows); // B[k+1][j..j+1]
+                }
+                p.vpack_lo(7, 5, 6); // (B[k][j],   B[k+1][j])   — pv.pack
+                p.vpack_hi(8, 5, 6); // (B[k][j+1], B[k+1][j+1])
+                p.fdotp(mode, 27, 26, 7);
+                p.fdotp(mode, 28, 26, 8);
+                p.hwloop_end();
+                // Cast-and-pack the two f32 accumulators into one word.
+                p.cpka(mode, 9, 27, 28);
+                p.slli(25, 4, 2).add(25, 25, 23);
+                p.sw(9, 25, 0);
+                // jp = (jp + 1) mod row_w
+                p.addi(4, 4, 1);
+                p.andi(4, 4, (row_w - 1) as i32);
+                p.addi(18, 18, 1);
+                p.blt(18, 30, "col");
             }
-            p.vpack_lo(7, 5, 6); // (B[k][j],   B[k+1][j])   — pv.pack
-            p.vpack_hi(8, 5, 6); // (B[k][j+1], B[k+1][j+1])
-            p.fdotp(mode, 27, 26, 7);
-            p.fdotp(mode, 28, 26, 8);
-            p.hwloop_end();
-            // Cast-and-pack the two f32 accumulators into one 2×16 word.
-            p.cpka(mode, 9, 27, 28);
-            p.slli(25, 4, 2).add(25, 25, 23);
-            p.sw(9, 25, 0);
-            // jp = (jp + 1) mod row_w
-            p.addi(4, 4, 1);
-            p.andi(4, 4, (row_w - 1) as i32);
-            p.addi(18, 18, 1);
-            p.blt(18, 30, "col");
-        }
-        p.addi(13, 13, 1);
-        p.blt(13, 14, "row");
-    }
-    p.label("done");
+        },
+    );
     p.barrier();
     p.end();
 
@@ -248,6 +245,132 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, n: usize) -> Workload {
         rtol: 1e-9,
         atol: 1e-12,
         reference: Vec::new(),
+    }
+}
+
+/// DMA double-buffered tiled MATMUL (binary32 scalar): A, B and C live in
+/// **L2** — the dataset no longer has to fit the TCDM — and the kernel
+/// streams A/C row tiles through ping-pong TCDM buffers while B stays
+/// TCDM-resident. Core 0 is the tile master: it programs the memory-mapped
+/// DMA, spin-waits on `STATUS`, and releases the team for each tile over
+/// the event unit's [`team::EV_TILE_READY`] line; the prefetch of tile
+/// `t+1` overlaps the compute of tile `t` (classic near-sensor double
+/// buffering, §3.1's DMA + §4's runtime). Outputs are bit-identical to the
+/// untiled scalar kernel — tiling moves data, never arithmetic.
+pub fn build_tiled(cfg: &ClusterConfig, n: usize, tiles: usize) -> Workload {
+    // No bank-stagger masks here (the B walk goes through the resident
+    // TCDM copy row-by-row), so n need not be a power of two — the default
+    // "bigger than TCDM" scenario is n = 96.
+    assert!(tiles >= 1 && n % tiles == 0, "tiles must divide n");
+    let tile_rows = n / tiles;
+    let tile_words = (tile_rows * n) as u32;
+
+    // L2 layout: A | B | C, row-major f32.
+    let a_l2 = L2_BASE;
+    let b_l2 = L2_BASE + (n * n * 4) as u32;
+    let c_l2 = L2_BASE + (2 * n * n * 4) as u32;
+    // TCDM layout: resident B + ping-pong A/C tile buffers.
+    let mut al = Alloc::new(cfg);
+    let b_tcdm = al.f32s(n * n);
+    let abuf = [al.f32s(tile_rows * n), al.f32s(tile_rows * n)];
+    let cbuf = [al.f32s(tile_rows * n), al.f32s(tile_rows * n)];
+
+    let (a, b) = gen_inputs(n);
+    // Host mirror: identical arithmetic to the untiled scalar kernel
+    // (k ascending, f32 FMA) — the tiled schedule must be bit-identical.
+    let mut expected = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0u32;
+            for k in 0..n {
+                acc = scalar::fma32(a[i * n + k].to_bits(), b[k * n + j].to_bits(), acc);
+            }
+            expected[i * n + j] = f32::from_bits(acc) as f64;
+        }
+    }
+
+    let mut p = ProgramBuilder::new(format!("matmul-tiled{tiles}-scalar"));
+    // Prologue: stage B and the first A tile, then release the team.
+    team::master_only(&mut p, "boot", &mut |p| {
+        team::dma_copy(p, 1, 2, b_l2, b_tcdm, (n * n) as u32);
+        team::dma_copy(p, 1, 2, a_l2, abuf[0], tile_words);
+        team::dma_wait(p, 1, 2);
+        team::signal_tile_ready(p);
+    });
+    p.li(16, b_tcdm);
+    p.li(30, n as u32);
+    for t in 0..tiles {
+        let buf = t % 2;
+        // Everyone (master included — it buffered its own signal) waits for
+        // tile t's data.
+        team::wait_tile_ready(&mut p);
+        // Master prefetches tile t+1 into the other buffer: the transfer
+        // overlaps this tile's compute.
+        if t + 1 < tiles {
+            team::master_only(&mut p, &format!("pf{t}"), &mut |p| {
+                let src = a_l2 + ((t + 1) * tile_rows * n * 4) as u32;
+                team::dma_copy(p, 1, 2, src, abuf[(t + 1) % 2], tile_words);
+            });
+        }
+        // Compute tile t: rows split across the team by the runtime.
+        p.li(15, abuf[buf]);
+        p.li(17, cbuf[buf]);
+        p.li(24, tile_rows as u32);
+        let col = format!("t{t}_col");
+        parallel_for(
+            &mut p,
+            Schedule::Static,
+            LoopRegs::KERNEL,
+            |_| {},
+            |p| {
+                // r22 = A tile row; r23 = C tile row.
+                p.mul(25, 13, 30).slli(25, 25, 2);
+                p.add(22, 25, 15);
+                p.add(23, 25, 17);
+                p.li(18, 0); // j
+                p.label(&col);
+                {
+                    p.mv(20, 22); // a_ptr
+                    p.slli(21, 18, 2).add(21, 21, 16); // b_ptr = B + 4·j
+                    p.li(28, 0); // acc
+                    p.li(19, n as u32);
+                    p.hwloop(19);
+                    p.lw_pi(26, 20, 4);
+                    p.lw_pi(27, 21, (n * 4) as i32);
+                    p.fmac(FpMode::F32, 28, 26, 27);
+                    p.hwloop_end();
+                    p.slli(25, 18, 2).add(25, 25, 23);
+                    p.sw(28, 25, 0);
+                    p.addi(18, 18, 1);
+                    p.blt(18, 30, &col);
+                }
+            },
+        );
+        p.barrier(); // tile compute complete
+        // Master: write the C tile back, drain the channel (writeback +
+        // any prefetch), and release the team for the next tile.
+        team::master_only(&mut p, &format!("wb{t}"), &mut |p| {
+            team::dma_copy(p, 1, 2, cbuf[buf], c_l2 + (t * tile_rows * n * 4) as u32, tile_words);
+            team::dma_wait(p, 1, 2);
+            if t + 1 < tiles {
+                team::signal_tile_ready(p);
+            }
+        });
+    }
+    p.barrier(); // join
+    p.end();
+
+    Workload {
+        name: format!("MATMUL-tiled{tiles}-scalar"),
+        program: p.build(),
+        stage: vec![(a_l2, Staged::F32(a)), (b_l2, Staged::F32(b))],
+        out_addr: c_l2,
+        out_len: n * n,
+        out_fmt: OutFmt::F32,
+        expected,
+        rtol: 0.0,
+        atol: 1e-12,
+        reference: reference(n),
     }
 }
 
@@ -303,6 +426,36 @@ mod tests {
             let (_, o1) = w.run_on(&cfg, 1);
             w.verify(&o1).unwrap();
         }
+    }
+
+    #[test]
+    fn tiled_exact_and_double_buffered() {
+        let cfg = ClusterConfig::new(8, 8, 1);
+        // Small instance: exactness across tile counts and occupancies.
+        for tiles in [1usize, 2, 4] {
+            let w = build_tiled(&cfg, 16, tiles);
+            let (_, out) = w.run(&cfg);
+            w.verify(&out).unwrap_or_else(|e| panic!("tiles={tiles}: {e}"));
+            let (_, o1) = w.run_on(&cfg, 1);
+            w.verify(&o1).unwrap_or_else(|e| panic!("tiles={tiles} solo: {e}"));
+        }
+        // The tiled schedule computes exactly what the untiled kernel does.
+        let tiled = build_tiled(&cfg, 16, 4);
+        let flat = build(Variant::Scalar, &cfg, 16);
+        assert_eq!(tiled.expected, flat.expected, "tiling must not move arithmetic");
+    }
+
+    #[test]
+    fn tiled_handles_datasets_larger_than_tcdm() {
+        // 3·96²·4 B ≈ 108 kB of operands against a 64 kB TCDM: only the
+        // resident B copy plus the ping-pong tiles live on-cluster.
+        let cfg = ClusterConfig::new(8, 8, 1);
+        let w = build_tiled(&cfg, 96, 8);
+        let dataset = 3 * 96 * 96 * 4;
+        assert!(dataset > cfg.tcdm_bytes(), "scenario must exceed the TCDM");
+        let (stats, out) = w.run(&cfg);
+        w.verify(&out).unwrap();
+        assert!(stats.total_cycles > 0);
     }
 
     #[test]

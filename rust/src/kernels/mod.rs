@@ -583,6 +583,19 @@ impl Benchmark {
         }
     }
 
+    /// DMA double-buffered tiled builder (the `--tiles` CLI knob): the
+    /// dataset lives in L2 — sized beyond the TCDM — and is streamed
+    /// through ping-pong TCDM buffers by the core-0 DMA master while the
+    /// team computes (binary32 scalar). Available for the two streaming
+    /// kernels (MATMUL n=96, CONV 128×66); `None` otherwise.
+    pub fn build_tiled(&self, cfg: &ClusterConfig, tiles: usize) -> Option<Workload> {
+        match self {
+            Benchmark::Matmul => Some(matmul::build_tiled(cfg, 96, tiles)),
+            Benchmark::Conv => Some(conv::build_tiled(cfg, 128, 66, tiles)),
+            _ => None,
+        }
+    }
+
     /// Paper Table 3 FP / memory intensity, for validation. The scalar-16
     /// rungs share the scalar instruction mix (same program structure, only
     /// the access width and FP format change).

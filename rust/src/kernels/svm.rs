@@ -14,7 +14,8 @@
 
 use super::{quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
-use crate::isa::{regs, Operand, ProgramBuilder};
+use crate::isa::{regs, ProgramBuilder};
+use crate::runtime::{parallel_for, LoopRegs, Schedule};
 use crate::testutil::Rng;
 use crate::transfp::{simd, FpMode, FpSpec};
 
@@ -74,30 +75,28 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, nsv: usize, d: usize) -> Workl
     let mut p = ProgramBuilder::new(format!("svm-{}", elem.suffix()));
     p.li(15, sv_base).li(16, a_base).li(17, x_base);
     p.li(24, nsv as u32);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
     p.li(30, (d * elem.size() as usize) as u32);
-    p.li(28, 0); // local score
-    p.bge(13, 14, "sv_skip");
-    p.label("sv");
-    {
-        p.mul(20, 13, 30).add(20, 20, 15); // sv row
-        p.mv(21, 17); // x ptr
-        p.li(27, 0); // dot acc
-        p.li(19, d as u32);
-        p.hwloop(19);
-        elem.load_pi(&mut p, 26, 20, 1);
-        elem.load_pi(&mut p, 29, 21, 1);
-        p.fmac(elem.mode, 27, 26, 29);
-        p.hwloop_end();
-        p.slli(26, 13, elem.shift()).add(26, 26, 16);
-        elem.load(&mut p, 26, 26, 0); // α_i
-        p.fmac(elem.mode, 28, 26, 27); // score += α·dot
-        p.addi(13, 13, 1);
-        p.blt(13, 14, "sv");
-    }
-    p.label("sv_skip");
+    p.li(28, 0); // local score (accumulates across this core's chunk)
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            p.mul(20, 13, 30).add(20, 20, 15); // sv row
+            p.mv(21, 17); // x ptr
+            p.li(27, 0); // dot acc
+            p.li(19, d as u32);
+            p.hwloop(19);
+            elem.load_pi(p, 26, 20, 1);
+            elem.load_pi(p, 29, 21, 1);
+            p.fmac(elem.mode, 27, 26, 29);
+            p.hwloop_end();
+            p.slli(26, 13, elem.shift()).add(26, 26, 16);
+            elem.load(p, 26, 26, 0); // α_i
+            p.fmac(elem.mode, 28, 26, 27); // score += α·dot
+        },
+    );
     // Publish the partial score.
     p.li(25, part_base);
     p.slli(26, id, elem.shift()).add(26, 26, 25);
@@ -232,30 +231,28 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, nsv: usize, d: usize) -> 
     let mut p = ProgramBuilder::new("svm-vector");
     p.li(15, sv_base).li(16, a_base).li(17, x_base);
     p.li(24, nsv as u32);
-    p.add(25, 24, nc).addi(25, 25, -1).divi(12, 25, Operand::Reg(nc));
-    p.mul(13, id, 12);
-    p.add(14, 13, 12).imin(14, 14, 24);
     p.li(30, (dw * 4) as u32);
     p.li(28, 0);
-    p.bge(13, 14, "sv_skip");
-    p.label("sv");
-    {
-        p.mul(20, 13, 30).add(20, 20, 15);
-        p.mv(21, 17);
-        p.li(27, 0);
-        p.li(19, dw as u32);
-        p.hwloop(19);
-        p.lw_pi(26, 20, 4);
-        p.lw_pi(29, 21, 4);
-        p.fdotp(mode, 27, 26, 29);
-        p.hwloop_end();
-        p.slli(26, 13, 2).add(26, 26, 16);
-        p.lw(26, 26, 0);
-        p.fmac(FpMode::F32, 28, 26, 27);
-        p.addi(13, 13, 1);
-        p.blt(13, 14, "sv");
-    }
-    p.label("sv_skip");
+    parallel_for(
+        &mut p,
+        Schedule::Static,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            p.mul(20, 13, 30).add(20, 20, 15);
+            p.mv(21, 17);
+            p.li(27, 0);
+            p.li(19, dw as u32);
+            p.hwloop(19);
+            p.lw_pi(26, 20, 4);
+            p.lw_pi(29, 21, 4);
+            p.fdotp(mode, 27, 26, 29);
+            p.hwloop_end();
+            p.slli(26, 13, 2).add(26, 26, 16);
+            p.lw(26, 26, 0);
+            p.fmac(FpMode::F32, 28, 26, 27);
+        },
+    );
     p.li(25, part_base);
     p.slli(26, id, 2).add(26, 26, 25);
     p.sw(28, 26, 0);

@@ -28,7 +28,10 @@ COMMANDS:
   run <cfg> <bench> <variant>
                           run one benchmark (e.g. `run 8c4f1p MATMUL vector`);
                           variants: scalar, scalar-f16, scalar-bf16,
-                          vector (vector-f16), vector-bf16
+                          vector (vector-f16), vector-bf16; with
+                          --tiles <t>, run the DMA double-buffered tiled
+                          build (MATMUL/CONV scalar, dataset in L2 beyond
+                          the TCDM, streamed through ping-pong buffers)
   query <cfg|all> <bench|all> <variant|all>
                           resolve a batch of design-space points through the
                           measurement cache (plan stats on stderr); `all`
@@ -47,8 +50,11 @@ COMMANDS:
   table6                  state-of-the-art comparison (measured + paper)
   fig3                    fmax spread per pipeline/corner
   fig4                    area per configuration
-  fig5                    power @100 MHz per configuration
-  fig6                    parallel + vectorization speed-ups (16-core)
+  fig5                    power @100 MHz per configuration (cache-backed)
+  fig6                    parallel + vectorization speed-ups on the 16-core
+                          configurations: occupancy (1..=16 workers) is
+                          swept through the fork-join runtime's teams and
+                          resolved via the measurement cache
   fig7                    metrics vs FPU sharing factor
   fig8                    metrics vs pipeline stages
   validate [dir]          check simulator numerics vs XLA goldens (artifacts/)
@@ -59,6 +65,8 @@ FLAGS:
   --no-cache              don't load or persist the measurement cache
   --acc                   accuracy-extended frontier (pareto only)
   --budget <rel-err>      error budget for `tune` (default 1e-2)
+  --tiles <t>             run the DMA double-buffered tiled kernel with t
+                          tiles (`run` with MATMUL or CONV, scalar)
 
 Measurements are memoized under artifacts/cache/measurements.csv, keyed by
 (program fingerprint, config, variant, engine version); see EXPERIMENTS.md
@@ -73,11 +81,19 @@ struct Cli {
     no_cache: bool,
     acc: bool,
     budget: Option<f64>,
+    tiles: Option<usize>,
     args: Vec<String>,
 }
 
 fn parse_cli<I: IntoIterator<Item = String>>(raw: I) -> Result<Cli, String> {
-    let mut cli = Cli { csv: false, no_cache: false, acc: false, budget: None, args: Vec::new() };
+    let mut cli = Cli {
+        csv: false,
+        no_cache: false,
+        acc: false,
+        budget: None,
+        tiles: None,
+        args: Vec::new(),
+    };
     let mut it = raw.into_iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -93,9 +109,19 @@ fn parse_cli<I: IntoIterator<Item = String>>(raw: I) -> Result<Cli, String> {
                     _ => return Err(format!("bad `--budget` value `{v}`")),
                 }
             }
+            "--tiles" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| "flag `--tiles` needs a value (e.g. `--tiles 8`)".to_string())?;
+                match v.parse::<usize>() {
+                    Ok(t) if t >= 1 => cli.tiles = Some(t),
+                    _ => return Err(format!("bad `--tiles` value `{v}`")),
+                }
+            }
             s if s.starts_with('-') => {
                 return Err(format!(
-                    "unknown flag `{s}` (known flags: --csv, --no-cache, --acc, --budget <rel-err>)"
+                    "unknown flag `{s}` (known flags: --csv, --no-cache, --acc, \
+                     --budget <rel-err>, --tiles <t>)"
                 ));
             }
             _ => cli.args.push(a),
@@ -189,6 +215,28 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 eprintln!("unknown variant {}", args[3]);
                 return ExitCode::FAILURE;
             };
+            if let Some(tiles) = cli.tiles {
+                if variant.label() != "scalar" {
+                    eprintln!("--tiles supports the scalar variant only");
+                    return ExitCode::FAILURE;
+                }
+                let Some(w) = bench.build_tiled(&cfg, tiles) else {
+                    eprintln!(
+                        "--tiles supports the streaming kernels (MATMUL, CONV), not {}",
+                        bench.name()
+                    );
+                    return ExitCode::FAILURE;
+                };
+                // Tiled runs stream L2-resident datasets through the DMA;
+                // they are one-off scenario runs, not cached design points.
+                let (stats, out) = w.run(&cfg);
+                let verified = w.verify(&out).is_ok();
+                println!("{} on {} (DMA double-buffered):", w.name, cfg.mnemonic());
+                println!("  cycles            {}", stats.total_cycles);
+                println!("  outputs           {}", out.len());
+                println!("  verified          {verified}");
+                return if verified { ExitCode::SUCCESS } else { ExitCode::FAILURE };
+            }
             let m = QueryEngine::global().one(&cfg, bench, variant);
             println!("{} {} on {}:", bench.name(), variant.label(), cfg.mnemonic());
             println!("  cycles            {}", m.cycles);
@@ -396,6 +444,16 @@ mod tests {
 
         let c = cli(&["pareto", "--acc"]).unwrap();
         assert!(c.acc && c.budget.is_none());
+    }
+
+    #[test]
+    fn tiles_flag_takes_a_value() {
+        let c = cli(&["run", "8c8f1p", "MATMUL", "scalar", "--tiles", "8"]).unwrap();
+        assert_eq!(c.tiles, Some(8));
+        assert_eq!(c.args, vec!["run", "8c8f1p", "MATMUL", "scalar"]);
+        assert!(cli(&["run", "--tiles"]).is_err(), "missing value must fail");
+        assert!(cli(&["run", "--tiles", "0"]).is_err(), "zero tiles is invalid");
+        assert!(cli(&["run", "--tiles", "x"]).is_err());
     }
 
     #[test]

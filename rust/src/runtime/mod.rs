@@ -1,15 +1,32 @@
-//! Golden-validation runtime: the case matrix and parameter plumbing for
-//! checking the simulator's numerics against the AOT-compiled JAX/Pallas
-//! goldens (`artifacts/*.hlo.txt`, see `python/compile/aot.py`).
+//! The software runtime of §4: the fork-join parallel runtime the kernels
+//! emit their parallel sections through, plus the golden-validation matrix.
 //!
-//! The build environment is fully offline, so the PJRT/XLA execution
-//! backend is **stubbed**: [`Golden::load`] and [`Golden::run_f32`] return
-//! an error explaining that no backend is vendored (gate: the `xla` cargo
-//! feature, declared but intentionally unbacked). Everything that does not
-//! need XLA — the validation case matrix, tolerance bookkeeping, and the
+//! * [`team`] — the fork-join [`team::Team`] abstraction (spawn at any
+//!   occupancy over the event unit, join at the final barrier) and the
+//!   DMA double-buffer emission helpers;
+//! * [`sched`] — the work-sharing loop scheduler
+//!   ([`sched::parallel_for`]): static / dynamic / guided policies over
+//!   TCDM work queues, with every-index-exactly-once invariants locked by
+//!   tests.
+//!
+//! The remainder of this file is the **golden-validation** runtime: the
+//! case matrix and parameter plumbing for checking the simulator's
+//! numerics against the AOT-compiled JAX/Pallas goldens
+//! (`artifacts/*.hlo.txt`, see `python/compile/aot.py`). The build
+//! environment is fully offline, so the PJRT/XLA execution backend is
+//! **stubbed**: [`Golden::load`] and [`Golden::run_f32`] return an error
+//! explaining that no backend is vendored (gate: the `xla` cargo feature,
+//! declared but intentionally unbacked). Everything that does not need XLA
+//! — the validation case matrix, tolerance bookkeeping, and the
 //! reconstruction of golden input parameters from a workload's staged
-//! buffers — is real code with tests, so a future vendored backend only has
-//! to supply the two `Golden` methods.
+//! buffers — is real code with tests, so a future vendored backend only
+//! has to supply the two `Golden` methods.
+
+pub mod sched;
+pub mod team;
+
+pub use sched::{parallel_for, LoopRegs, Schedule, WorkQueue};
+pub use team::Team;
 
 use std::fmt;
 use std::path::Path;

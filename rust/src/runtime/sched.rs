@@ -1,0 +1,357 @@
+//! Work-sharing loop scheduler — the `parallel_for` of the fork-join
+//! runtime (§4: "a full-fledged software stack support, including a
+//! parallel runtime").
+//!
+//! [`parallel_for`] emits the parallel-loop skeleton into a kernel's
+//! [`ProgramBuilder`] stream: the per-core chunk computation, the chunk
+//! grab loop, and the per-index loop control. The kernel supplies two
+//! closures — `chunk_setup`, emitted once per *claimed chunk* (pointer
+//! materialization from the chunk's start index), and `body`, emitted once
+//! per *index*. Three OpenMP-style policies are supported:
+//!
+//! * [`Schedule::Static`] — `ceil(n/W)` contiguous indices per core,
+//!   computed from the HAL's `CORE_ID`/`NCORES` registers. Exactly the
+//!   chunking every kernel hand-rolled before the runtime existed, so
+//!   outputs are bit-identical to the pre-runtime programs.
+//! * [`Schedule::Dynamic`] — cores self-schedule fixed-size chunks from a
+//!   TCDM-resident grab counter via the `amoadd.w` atomic. Load balance
+//!   for irregular bodies; deterministic under the simulator's rotating
+//!   bank arbitration.
+//! * [`Schedule::Guided`] — chunk sizes decay with the remaining work
+//!   (`remaining / 2W`, floored at `min_chunk`); the read-size-update
+//!   sequence is serialized by an `amoswap.w` test-and-set lock next to
+//!   the counter.
+//!
+//! Register contract ([`LoopRegs`]): `idx`, `limit` and `n` are live across
+//! `body` and must be preserved by it; `chunk` and `scratch` are dead
+//! outside the scheduler's own grab sequence and may be clobbered freely.
+//! Every index in `[0, n)` is claimed exactly once under every policy ×
+//! occupancy × trip count (locked by the invariant tests below), so any
+//! body whose iterations are independent computes identical results under
+//! all three policies.
+
+use crate::isa::builder::regs;
+use crate::isa::{Operand, ProgramBuilder, Reg};
+use crate::kernels::Alloc;
+
+/// Loop-scheduling policy of a [`parallel_for`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Contiguous `ceil(n/W)` chunk per core (the paper's kernels).
+    Static,
+    /// Self-scheduled fixed-size chunks from the TCDM grab counter.
+    Dynamic {
+        /// Indices claimed per grab (≥ 1).
+        chunk: u32,
+        /// TCDM work queue backing the grab counter.
+        queue: WorkQueue,
+    },
+    /// Decaying chunks (`remaining / 2W`, floored at `min_chunk`).
+    Guided {
+        /// Smallest chunk a grab may claim (≥ 1).
+        min_chunk: u32,
+        /// TCDM work queue backing the counter + lock.
+        queue: WorkQueue,
+    },
+}
+
+/// TCDM words backing one dynamic/guided loop instance: a grab counter and
+/// (for guided) a test-and-set lock. Both words must be **zero on entry**;
+/// the TCDM is zeroed at reset and the scheduler leaves the lock at zero,
+/// so allocating one queue per `parallel_for` instance suffices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkQueue {
+    /// Byte address of the counter word; the lock lives at `addr + 4`.
+    pub addr: u32,
+}
+
+impl WorkQueue {
+    /// Allocate the queue's two words in the TCDM.
+    pub fn alloc(al: &mut Alloc) -> WorkQueue {
+        WorkQueue { addr: al.words(2) }
+    }
+}
+
+/// Registers the scheduler emits against. `idx`/`limit`/`n` are live across
+/// the body; `chunk`/`scratch` are scheduler-internal scratch.
+#[derive(Debug, Clone, Copy)]
+pub struct LoopRegs {
+    /// Trip count (read-only input; must be preserved by the body).
+    pub n: Reg,
+    /// Scratch: chunk size during the grab sequence.
+    pub chunk: Reg,
+    /// Current index — the body's induction variable.
+    pub idx: Reg,
+    /// First index past the current chunk.
+    pub limit: Reg,
+    /// Scratch for address/size arithmetic.
+    pub scratch: Reg,
+}
+
+impl LoopRegs {
+    /// The register convention all 8 benchmark kernels use (r24 = n,
+    /// r12/r25 scratch, r13 = index, r14 = limit) — chosen so the
+    /// runtime-scheduled programs reuse the registers the hand-chunked
+    /// versions did.
+    pub const KERNEL: LoopRegs = LoopRegs { n: 24, chunk: 12, idx: 13, limit: 14, scratch: 25 };
+}
+
+/// Emit a work-shared parallel loop over `[0, r.n)`.
+///
+/// `chunk_setup` is emitted after each chunk grab with `r.idx` holding the
+/// chunk's first index and `r.limit` its end; `body` is emitted once and
+/// executed per index with `r.idx` valid. The loop synchronizes nothing:
+/// callers place their own barrier after the loop (fork-join sections end
+/// with one, matching the paper's kernels).
+pub fn parallel_for(
+    p: &mut ProgramBuilder,
+    sched: Schedule,
+    r: LoopRegs,
+    mut chunk_setup: impl FnMut(&mut ProgramBuilder),
+    mut body: impl FnMut(&mut ProgramBuilder),
+) {
+    // Call-site-unique label prefix (the emission cursor is unique).
+    let tag = format!("pf{}", p.here());
+    let done = format!("{tag}_done");
+    let head = format!("{tag}_head");
+    match sched {
+        Schedule::Static => {
+            // chunk = ceil(n / W); idx = id·chunk; limit = min(idx+chunk, n)
+            // — exactly the pre-runtime hand-chunking sequence.
+            p.add(r.scratch, r.n, regs::NCORES)
+                .addi(r.scratch, r.scratch, -1)
+                .divi(r.chunk, r.scratch, Operand::Reg(regs::NCORES));
+            p.mul(r.idx, regs::CORE_ID, r.chunk);
+            p.add(r.limit, r.idx, r.chunk).imin(r.limit, r.limit, r.n);
+            p.bge(r.idx, r.limit, &done);
+            chunk_setup(p);
+            p.label(&head);
+            body(p);
+            p.addi(r.idx, r.idx, 1);
+            p.blt(r.idx, r.limit, &head);
+        }
+        Schedule::Dynamic { chunk, queue } => {
+            assert!(chunk >= 1, "dynamic chunk must be >= 1");
+            let grab = format!("{tag}_grab");
+            p.label(&grab);
+            p.li(r.chunk, chunk);
+            p.li(r.scratch, queue.addr);
+            // idx = fetch-and-add(counter, chunk)
+            p.amo_add(r.idx, r.scratch, 0, r.chunk);
+            p.bge(r.idx, r.n, &done);
+            p.add(r.limit, r.idx, r.chunk).imin(r.limit, r.limit, r.n);
+            chunk_setup(p);
+            p.label(&head);
+            body(p);
+            p.addi(r.idx, r.idx, 1);
+            p.blt(r.idx, r.limit, &head);
+            p.j(&grab);
+        }
+        Schedule::Guided { min_chunk, queue } => {
+            assert!(min_chunk >= 1, "guided min_chunk must be >= 1");
+            let grab = format!("{tag}_grab");
+            let lock = format!("{tag}_lock");
+            let out = format!("{tag}_out");
+            p.label(&grab);
+            p.li(r.scratch, queue.addr);
+            // Acquire the test-and-set lock guarding the counter.
+            p.label(&lock);
+            p.li(r.chunk, 1);
+            p.amo_swap(r.chunk, r.scratch, 4, r.chunk);
+            p.bne(r.chunk, regs::ZERO, &lock);
+            p.lw(r.idx, r.scratch, 0);
+            p.bge(r.idx, r.n, &out);
+            // chunk = max(min_chunk, remaining / 2W) — the OpenMP guided
+            // decay, with the division on the core's iterative divider.
+            p.sub(r.chunk, r.n, r.idx);
+            p.add(r.limit, regs::NCORES, regs::NCORES);
+            p.divi(r.chunk, r.chunk, Operand::Reg(r.limit));
+            p.li(r.limit, min_chunk);
+            p.imax(r.chunk, r.chunk, r.limit);
+            // counter += chunk; release; clamp the chunk end.
+            p.add(r.limit, r.idx, r.chunk);
+            p.sw(r.limit, r.scratch, 0);
+            p.sw(regs::ZERO, r.scratch, 4);
+            p.imin(r.limit, r.limit, r.n);
+            chunk_setup(p);
+            p.label(&head);
+            body(p);
+            p.addi(r.idx, r.idx, 1);
+            p.blt(r.idx, r.limit, &head);
+            p.j(&grab);
+            // Drained: release the lock and leave.
+            p.label(&out);
+            p.sw(regs::ZERO, r.scratch, 4);
+        }
+    }
+    p.label(&done);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::mem::TCDM_BASE;
+    use crate::cluster::{Cluster, Engine};
+    use crate::config::ClusterConfig;
+    use crate::isa::Program;
+    use crate::transfp::FpMode;
+
+    const MARKS: u32 = TCDM_BASE + 0x2000;
+    const OUT: u32 = TCDM_BASE + 0x4000;
+
+    /// A probe program: per index i, increment marks[i] and store
+    /// f32(i) · 1.5 to out[i]. Bodies preserve idx/limit/n per the register
+    /// contract; everything else is clobbered freely.
+    fn probe(sched: Schedule, n: u32) -> Program {
+        let mut p = ProgramBuilder::new("sched-probe");
+        p.li(LoopRegs::KERNEL.n, n);
+        parallel_for(
+            &mut p,
+            sched,
+            LoopRegs::KERNEL,
+            |_| {},
+            |p| {
+                let r = LoopRegs::KERNEL;
+                // marks[idx] += 1 (each index is visited exactly once, so a
+                // plain read-modify-write is race-free iff the invariant
+                // holds — a lost update would leave a 0 or a 2).
+                p.slli(20, r.idx, 2);
+                p.li(21, MARKS);
+                p.add(21, 21, 20);
+                p.lw(22, 21, 0);
+                p.addi(22, 22, 1);
+                p.sw(22, 21, 0);
+                // out[idx] = f32(idx) * 1.5
+                p.fcvt_from_int(FpMode::F32, 23, r.idx);
+                p.li(26, 1.5f32.to_bits());
+                p.fmul(FpMode::F32, 23, 23, 26);
+                p.li(21, OUT);
+                p.add(21, 21, 20);
+                p.sw(23, 21, 0);
+            },
+        );
+        p.barrier();
+        p.end();
+        p.build()
+    }
+
+    fn policies(al: &mut Alloc) -> Vec<Schedule> {
+        vec![
+            Schedule::Static,
+            Schedule::Dynamic { chunk: 1, queue: WorkQueue::alloc(al) },
+            Schedule::Dynamic { chunk: 3, queue: WorkQueue::alloc(al) },
+            Schedule::Guided { min_chunk: 1, queue: WorkQueue::alloc(al) },
+            Schedule::Guided { min_chunk: 4, queue: WorkQueue::alloc(al) },
+        ]
+    }
+
+    /// The scheduler invariant: every index in [0, n) is assigned exactly
+    /// once, for every (policy × occupancy × trip count) combination —
+    /// including the degenerate trip counts 0 and 1.
+    #[test]
+    fn every_index_assigned_exactly_once() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        for n in [0u32, 1, 5, 8, 17, 64] {
+            let mut al = Alloc::new(&cfg);
+            for sched in policies(&mut al) {
+                for workers in [1usize, 3, 8] {
+                    let mut cl = Cluster::new(cfg, probe(sched, n));
+                    cl.limit_active_cores(workers);
+                    cl.run();
+                    for i in 0..n {
+                        let m = cl.mem.load(MARKS + 4 * i, crate::isa::MemSize::Word);
+                        assert_eq!(
+                            m, 1,
+                            "{sched:?} n={n} workers={workers}: index {i} visited {m} times"
+                        );
+                    }
+                    // Nothing past the trip count is touched.
+                    let past = cl.mem.load(MARKS + 4 * n, crate::isa::MemSize::Word);
+                    assert_eq!(past, 0, "{sched:?} n={n}: wrote past the trip count");
+                }
+            }
+        }
+    }
+
+    /// Independent bodies produce bit-identical outputs under every policy
+    /// (assignment only moves *where* an index runs, never what it computes).
+    #[test]
+    fn outputs_bit_identical_across_policies() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let n = 40u32;
+        let mut al = Alloc::new(&cfg);
+        let mut reference: Option<Vec<u32>> = None;
+        for sched in policies(&mut al) {
+            let mut cl = Cluster::new(cfg, probe(sched, n));
+            cl.run();
+            let out: Vec<u32> =
+                (0..n).map(|i| cl.mem.load(OUT + 4 * i, crate::isa::MemSize::Word)).collect();
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => assert_eq!(r, &out, "{sched:?} diverged"),
+            }
+        }
+    }
+
+    /// Dynamic self-scheduling is deterministic under the simulator's fixed
+    /// arbitration order: two identical runs claim identical chunks and
+    /// finish in identical cycle counts, on both issue engines.
+    #[test]
+    fn dynamic_is_deterministic_and_engine_exact() {
+        let cfg = ClusterConfig::new(8, 2, 1);
+        let mut al = Alloc::new(&cfg);
+        let q = WorkQueue::alloc(&mut al);
+        let sched = Schedule::Dynamic { chunk: 2, queue: q };
+        let run = |engine: Engine| {
+            let mut cl = Cluster::new(cfg, probe(sched, 33));
+            let stats = cl.run_with(engine);
+            let out: Vec<u32> =
+                (0..33).map(|i| cl.mem.load(OUT + 4 * i, crate::isa::MemSize::Word)).collect();
+            (stats.total_cycles, stats.per_core.clone(), out)
+        };
+        let (c1, p1, o1) = run(Engine::Event);
+        let (c2, p2, o2) = run(Engine::Event);
+        assert_eq!((c1, &o1), (c2, &o2), "dynamic scheduling must be deterministic");
+        assert_eq!(p1, p2);
+        let (cr, pr, or) = run(Engine::Reference);
+        assert_eq!(c1, cr, "engines disagree on a dynamic schedule");
+        assert_eq!(p1, pr);
+        assert_eq!(o1, or);
+    }
+
+    /// Guided chunks decay: with one worker the grab count is well below
+    /// n/min_chunk but the loop still covers everything.
+    #[test]
+    fn guided_covers_with_decaying_chunks() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let mut al = Alloc::new(&cfg);
+        let q = WorkQueue::alloc(&mut al);
+        let n = 64u32;
+        let mut cl = Cluster::new(cfg, probe(Schedule::Guided { min_chunk: 2, queue: q }, n));
+        cl.run();
+        for i in 0..n {
+            assert_eq!(cl.mem.load(MARKS + 4 * i, crate::isa::MemSize::Word), 1);
+        }
+        // The lock is released on exit.
+        assert_eq!(cl.mem.load(q.addr + 4, crate::isa::MemSize::Word), 0);
+    }
+
+    /// Static scheduling at partial occupancy uses NCORES (the worker
+    /// count), so chunks span the whole range for any occupancy.
+    #[test]
+    fn static_respects_occupancy() {
+        let cfg = ClusterConfig::new(16, 16, 0);
+        for workers in [1usize, 5, 16] {
+            let mut cl = Cluster::new(cfg, probe(Schedule::Static, 31));
+            cl.limit_active_cores(workers);
+            cl.run();
+            for i in 0..31 {
+                assert_eq!(
+                    cl.mem.load(MARKS + 4 * i, crate::isa::MemSize::Word),
+                    1,
+                    "workers={workers} index {i}"
+                );
+            }
+        }
+    }
+}

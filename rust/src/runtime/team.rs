@@ -1,0 +1,194 @@
+//! Fork-join team abstraction over the simulated cluster.
+//!
+//! A [`Team`] is the host-side handle of one fork-join region: a cluster
+//! configuration plus the number of workers forked into the parallel
+//! section. `Team::run*` spawns the team (activating exactly `workers`
+//! cores — the rest terminate immediately, and the event unit's barrier
+//! width shrinks to the team), executes the SPMD program, and joins at the
+//! program's final barrier. The figure emitters sweep occupancy by running
+//! the same workload under teams of 1..=N workers.
+//!
+//! The module also carries the program-side emission helpers the
+//! DMA-double-buffered kernels use: master/worker event handshakes over the
+//! event unit's software lines ([`EV_TILE_READY`]) and the memory-mapped
+//! DMA programming sequence ([`dma_copy`], [`dma_wait`]).
+
+use crate::cluster::counters::RunStats;
+use crate::cluster::mem::{dma_reg, DMA_BASE};
+use crate::cluster::{Cluster, Engine};
+use crate::config::ClusterConfig;
+use crate::isa::builder::regs;
+use crate::isa::{ProgramBuilder, Reg};
+use crate::kernels::Workload;
+
+/// Event line the tile pipeline's master raises when a tile's data is
+/// resident (workers sleep on it between tiles).
+pub const EV_TILE_READY: u8 = 1;
+
+/// One fork-join team: `workers` cores of a cluster configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Team {
+    /// Cluster the team forks on.
+    pub cfg: ClusterConfig,
+    /// Active workers (1..=cfg.cores).
+    pub workers: usize,
+}
+
+impl Team {
+    /// Team of `workers` cores on `cfg`.
+    pub fn new(cfg: &ClusterConfig, workers: usize) -> Team {
+        assert!(
+            workers >= 1 && workers <= cfg.cores,
+            "team of {workers} on a {}-core cluster",
+            cfg.cores
+        );
+        Team { cfg: *cfg, workers }
+    }
+
+    /// Full-occupancy team.
+    pub fn full(cfg: &ClusterConfig) -> Team {
+        Team::new(cfg, cfg.cores)
+    }
+
+    /// True if the team occupies every core.
+    pub fn is_full(&self) -> bool {
+        self.workers == self.cfg.cores
+    }
+
+    /// Spawn the team in `cl` (reset + occupancy limit): after this the
+    /// HAL's `NCORES` register reads the team size and barriers span
+    /// exactly the team.
+    pub fn spawn_in(&self, cl: &mut Cluster) {
+        cl.reset();
+        cl.limit_active_cores(self.workers);
+    }
+
+    /// Fork-join execution of a workload on this team: spawn, run to the
+    /// joining barrier, collect stats + outputs.
+    pub fn run(&self, w: &Workload) -> (RunStats, Vec<f64>) {
+        w.run_with(&self.cfg, self.workers, Engine::Event)
+    }
+
+    /// [`Team::run`] on a selectable issue engine (differential harness).
+    pub fn run_with(&self, w: &Workload, engine: Engine) -> (RunStats, Vec<f64>) {
+        w.run_with(&self.cfg, self.workers, engine)
+    }
+}
+
+// ------------------------------------------------- program-side emission
+
+/// Emit a master-only block: cores other than core 0 branch over `emit`'s
+/// instructions to the `tag` label (which must be unique per call site).
+/// The tile pipelines use this for DMA programming and tile-ready signals.
+pub fn master_only(
+    p: &mut ProgramBuilder,
+    tag: &str,
+    emit: &mut dyn FnMut(&mut ProgramBuilder),
+) {
+    p.bne(regs::CORE_ID, regs::ZERO, tag);
+    emit(p);
+    p.label(tag);
+}
+
+/// Emit the DMA programming sequence for one transfer: latch `src`, `dst`
+/// and `words`, then trigger. `t0`/`t1` are caller-provided scratch
+/// registers. The transfer runs in the background; overlap compute with it
+/// and [`dma_wait`] before touching the destination.
+pub fn dma_copy(p: &mut ProgramBuilder, t0: Reg, t1: Reg, src: u32, dst: u32, words: u32) {
+    p.li(t0, DMA_BASE);
+    p.li(t1, src);
+    p.sw(t1, t0, dma_reg::SRC as i32);
+    p.li(t1, dst);
+    p.sw(t1, t0, dma_reg::DST as i32);
+    p.li(t1, words);
+    p.sw(t1, t0, dma_reg::LEN as i32);
+    p.sw(t1, t0, dma_reg::CMD as i32);
+}
+
+/// Emit a spin-wait until every outstanding DMA transfer has completed
+/// (`STATUS == 0`). The spin occupies the polling core only — sleeping
+/// workers wait on [`EV_TILE_READY`] instead.
+pub fn dma_wait(p: &mut ProgramBuilder, t0: Reg, t1: Reg) {
+    let tag = format!("dw{}", p.here());
+    p.li(t0, DMA_BASE);
+    p.label(&tag);
+    p.lw(t1, t0, dma_reg::STATUS as i32);
+    p.bne(t1, regs::ZERO, &tag);
+}
+
+/// Emit the master-side "tile ready" signal: raise [`EV_TILE_READY`] for
+/// the whole team (sleeping workers wake; everyone else buffers it).
+pub fn signal_tile_ready(p: &mut ProgramBuilder) {
+    p.set_event(EV_TILE_READY);
+}
+
+/// Emit the team-side "wait for tile" sleep. Every core (master included —
+/// it buffered its own signal) consumes one ready event per tile.
+pub fn wait_tile_ready(p: &mut ProgramBuilder) {
+    p.wait_event(EV_TILE_READY);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::mem::{L2_BASE, TCDM_BASE};
+    use crate::kernels::{Benchmark, Variant};
+
+    #[test]
+    fn team_bounds_are_enforced() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        assert!(Team::new(&cfg, 1).workers == 1);
+        assert!(Team::full(&cfg).is_full());
+        assert!(std::panic::catch_unwind(|| Team::new(&cfg, 0)).is_err());
+        assert!(std::panic::catch_unwind(|| Team::new(&cfg, 9)).is_err());
+    }
+
+    /// A team run equals the raw partial-occupancy run (the team is the
+    /// occupancy mechanism, not a new semantics).
+    #[test]
+    fn team_run_matches_limit_active_cores() {
+        let cfg = ClusterConfig::new(8, 8, 1);
+        let w = Benchmark::Fir.build(Variant::Scalar, &cfg);
+        for workers in [1usize, 3, 8] {
+            let team = Team::new(&cfg, workers);
+            let (ts, to) = team.run(&w);
+            let (rs, ro) = w.run_on(&cfg, workers);
+            assert_eq!(ts.total_cycles, rs.total_cycles, "{workers} workers");
+            assert_eq!(to, ro);
+        }
+    }
+
+    /// The emission helpers produce a working double-buffer skeleton: the
+    /// master stages two blocks back-to-back, overlapping the second DMA
+    /// with "compute" on the first.
+    #[test]
+    fn dma_handshake_skeleton_runs() {
+        let mut p = ProgramBuilder::new("skeleton");
+        p.bne(regs::CORE_ID, regs::ZERO, "worker");
+        dma_copy(&mut p, 1, 2, L2_BASE, TCDM_BASE, 4);
+        dma_wait(&mut p, 1, 2);
+        signal_tile_ready(&mut p);
+        // Prefetch the next block while "computing".
+        dma_copy(&mut p, 1, 2, L2_BASE + 16, TCDM_BASE + 16, 4);
+        p.label("worker");
+        wait_tile_ready(&mut p);
+        p.li(3, TCDM_BASE);
+        p.lw(4, 3, 0);
+        p.barrier();
+        // Master drains the prefetch before the join.
+        p.bne(regs::CORE_ID, regs::ZERO, "join");
+        dma_wait(&mut p, 1, 2);
+        p.label("join");
+        p.barrier();
+        p.end();
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let mut cl = Cluster::new(cfg, p.build());
+        cl.mem.write_u32_slice(L2_BASE, &[11, 12, 13, 14, 21, 22, 23, 24]);
+        let stats = cl.run();
+        assert!(stats.total_cycles > 0);
+        assert_eq!(cl.mem.load(TCDM_BASE, crate::isa::MemSize::Word), 11);
+        assert_eq!(cl.mem.load(TCDM_BASE + 16, crate::isa::MemSize::Word), 21);
+        assert_eq!(cl.cores[5].reg(4), 11, "workers read the staged tile");
+        assert_eq!(cl.dmac.words_moved(), 8);
+    }
+}

@@ -206,6 +206,7 @@ mod tests {
             cfg: ClusterConfig::new(8, 8, 1),
             bench: Benchmark::Fir,
             variant,
+            workers: 8,
             metrics: Metrics {
                 perf_gflops: perf,
                 energy_eff: eeff,
@@ -213,6 +214,7 @@ mod tests {
                 flops_per_cycle: 1.0,
             },
             cycles: 1000,
+            core_cycles: 8000,
             agg: CoreCounters::default(),
             fp_intensity: 0.3,
             mem_intensity: 0.5,

@@ -38,13 +38,13 @@ fn sampled_configs() -> [ClusterConfig; 5] {
     ]
 }
 
-/// All 8 kernels × scalar / scalar-16 / vector variants × the config
-/// sample: cycle-exact.
+/// All 8 kernels × the full 5-rung ladder (scalar, scalar-f16, scalar-bf16,
+/// vector-f16, vector-bf16) × the config sample: cycle-exact.
 #[test]
 fn kernels_cycle_identical_across_engines() {
     for cfg in sampled_configs() {
         for b in Benchmark::all() {
-            for v in [Variant::Scalar, Variant::SCALAR_F16, Variant::VEC] {
+            for v in Variant::all() {
                 let w = b.build(v, &cfg);
                 let (sf, of) = w.run_with(&cfg, cfg.cores, Engine::Event);
                 let (sr, or) = w.run_with(&cfg, cfg.cores, Engine::Reference);
@@ -163,6 +163,136 @@ fn random_programs_cycle_identical() {
             for (cf, cr) in fast.cores.iter().zip(&reference.cores) {
                 assert_eq!(cf.regs, cr.regs, "core {} registers", cf.id);
             }
+        }
+    });
+}
+
+/// Generate a random *runtime-scheduled* SPMD program: a `parallel_for`
+/// with a random scheduling policy over a random trip count (0 and 1
+/// included), whose body runs a small FP workload in one of the 5 ladder
+/// modes and publishes per-index results to TCDM. An optional second
+/// parallel section and a master/worker event handshake follow — the
+/// fork-join runtime's whole surface (static chunking, TCDM atomics,
+/// guided locks, software events, barriers) lands in the differential
+/// wall.
+fn random_runtime_program(rng: &mut Rng, cfg: &ClusterConfig) -> Program {
+    use transpfp::kernels::Alloc;
+    use transpfp::runtime::{parallel_for, LoopRegs, Schedule, WorkQueue};
+
+    let mut al = Alloc::new(cfg);
+    let _guard = al.words(16); // keep data away from the queues
+    let q1 = WorkQueue::alloc(&mut al);
+    let q2 = WorkQueue::alloc(&mut al);
+    let out = al.words(40); // section 1: one word per (i % 40)
+    let out2 = al.words(128); // section 2: one word per index, n2 <= 128
+    let pick = |rng: &mut Rng, q: WorkQueue| match rng.below(3) {
+        0 => Schedule::Static,
+        1 => Schedule::Dynamic { chunk: 1 + rng.below(4) as u32, queue: q },
+        _ => Schedule::Guided { min_chunk: 1 + rng.below(2) as u32, queue: q },
+    };
+    // Trip counts include the degenerate 0 and 1.
+    let trips = [0u32, 1, 2, 7, 33, 128];
+    let n = trips[rng.below(trips.len() as u64) as usize];
+    let mode = [FpMode::F32, FpMode::F16, FpMode::Bf16, FpMode::VecF16, FpMode::VecBf16]
+        [rng.below(5) as usize];
+
+    let mut b = ProgramBuilder::new("random-runtime");
+    b.li(LoopRegs::KERNEL.n, n);
+    let sched = pick(rng, q1);
+    parallel_for(
+        &mut b,
+        sched,
+        LoopRegs::KERNEL,
+        |_| {},
+        |p| {
+            // out[i % 40] = f(i) in the chosen mode — order-independent.
+            p.fcvt_from_int(FpMode::F32, 20, 13);
+            if matches!(mode, FpMode::VecF16 | FpMode::VecBf16) {
+                p.cpka(mode, 20, 20, 20);
+                p.fmac(mode, 20, 20, 20);
+            } else if matches!(mode, FpMode::F16 | FpMode::Bf16) {
+                p.fcvt_down(mode, 20, 20);
+                p.fmac(mode, 20, 20, 20);
+            } else {
+                p.fmac(mode, 20, 20, 20);
+            }
+            p.li(21, 40);
+            p.rem(22, 13, transpfp::isa::Operand::Reg(21));
+            p.slli(22, 22, 2);
+            p.li(21, out);
+            p.add(21, 21, 22);
+            p.sw(20, 21, 0);
+        },
+    );
+    b.barrier();
+    if rng.below(2) == 0 {
+        // A second, differently-scheduled section over a different count.
+        let n2 = trips[rng.below(trips.len() as u64) as usize];
+        b.li(LoopRegs::KERNEL.n, n2);
+        let sched2 = pick(rng, q2);
+        parallel_for(
+            &mut b,
+            sched2,
+            LoopRegs::KERNEL,
+            |_| {},
+            |p| {
+                p.slli(22, 13, 2);
+                p.li(21, out2);
+                p.add(21, 21, 22);
+                p.sw(13, 21, 0);
+            },
+        );
+        b.barrier();
+    }
+    if rng.below(2) == 0 {
+        // Master/worker event handshake.
+        b.bne(regs::CORE_ID, regs::ZERO, "worker");
+        b.li(1, 10 + rng.below(40) as u32);
+        b.hwloop(1);
+        b.addi(2, 2, 1);
+        b.hwloop_end();
+        b.set_event(3);
+        b.label("worker");
+        b.wait_event(3);
+        b.barrier();
+    }
+    b.end();
+    b.build()
+}
+
+/// The fuzzed engine-parity wall: random runtime-scheduled programs at
+/// random occupancy must be cycle-identical between the event and
+/// reference engines (seed-logged by `check_cases` so failures reproduce).
+#[test]
+fn runtime_scheduled_programs_cycle_identical() {
+    let configs = [
+        ClusterConfig::new(8, 2, 0),
+        ClusterConfig::new(8, 8, 1),
+        ClusterConfig::new(16, 4, 2),
+    ];
+    check_cases(20, |rng: &mut Rng| {
+        let cfg = configs[rng.below(configs.len() as u64) as usize];
+        let workers = 1 + rng.below(cfg.cores as u64) as usize;
+        let prog = random_runtime_program(rng, &cfg);
+        let mut fast = Cluster::new(cfg, prog.clone());
+        let mut reference = Cluster::new(cfg, prog);
+        fast.limit_active_cores(workers);
+        reference.limit_active_cores(workers);
+        let sf = fast.run_with(Engine::Event);
+        let sr = reference.run_with(Engine::Reference);
+        assert_identical(&sf, &sr, &format!("runtime program on {cfg} with {workers} workers"));
+        for (cf, cr) in fast.cores.iter().zip(&reference.cores) {
+            assert_eq!(cf.regs, cr.regs, "core {} registers", cf.id);
+        }
+        // Architectural memory agrees too (the scheduler's work queues and
+        // the published results).
+        for i in 0..100u32 {
+            let a = transpfp::cluster::mem::TCDM_BASE + 4 * i;
+            assert_eq!(
+                fast.mem.load(a, transpfp::isa::MemSize::Word),
+                reference.mem.load(a, transpfp::isa::MemSize::Word),
+                "TCDM word {i}"
+            );
         }
     });
 }

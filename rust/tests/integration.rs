@@ -162,6 +162,28 @@ fn random_int_program(rng: &mut Rng) -> transpfp::isa::Program {
     b.build()
 }
 
+/// Golden parity of the runtime-scheduled kernels: every benchmark ×
+/// ladder rung still reproduces its host-mirror golden (`expected` was
+/// computed before the kernels moved onto `runtime::parallel_for` and has
+/// not changed — the scalar rungs verify at rtol 0 / atol 1e-12, i.e.
+/// bit-parity in f64). The scalar rungs are additionally asserted
+/// *exactly* equal: the runtime only re-partitions indices, never touches
+/// per-index arithmetic.
+#[test]
+fn runtime_scheduled_kernels_match_hand_chunked_goldens() {
+    let cfg = ClusterConfig::new(8, 4, 1);
+    for b in Benchmark::all() {
+        for v in Variant::all() {
+            let w = b.build(v, &cfg);
+            let (_, out) = w.run(&cfg);
+            w.verify(&out).unwrap_or_else(|e| panic!("{b:?} {}: {e}", v.label()));
+            if matches!(v, Variant::Scalar) {
+                assert_eq!(out, w.expected, "{b:?} scalar must be bit-identical to the golden");
+            }
+        }
+    }
+}
+
 /// Metric consistency: area efficiency == perf / area for every measurement.
 #[test]
 fn metric_identities() {
