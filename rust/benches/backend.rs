@@ -1,0 +1,138 @@
+//! `cargo bench --bench backend` — gates the tiered execution backends.
+//!
+//! Two gates (process exits non-zero on violation):
+//!
+//! 1. **Throughput tier**: on the kernel suite (all 8 benchmarks ×
+//!    {scalar, vector-f16}) over the max-sharing `8c2f2p` configuration —
+//!    the event engine's slowest per-instruction regime (FPU-port and
+//!    TCDM arbitration on most instructions, write-back conflicts at two
+//!    pipeline stages) — the functional backend must retire instructions
+//!    at ≥ 50× the event engine's rate. Both tiers are measured on fresh
+//!    state per repetition over identical workloads.
+//! 2. **Tuner probe**: `tune` with the default functional probe issues
+//!    exactly one functional run per ladder rung and **zero**
+//!    cycle-accurate runs for accuracy-rejected rungs (checked
+//!    point-by-point against the measurement cache).
+//!
+//! The `backend-*` lines below are grepped into the CI step summary.
+
+use std::process::ExitCode;
+use std::time::Instant;
+
+use transpfp::cluster::backend::BackendKind;
+use transpfp::config::ClusterConfig;
+use transpfp::coordinator::query::QueryPoint;
+use transpfp::coordinator::QueryEngine;
+use transpfp::kernels::{Benchmark, Variant, Workload};
+use transpfp::tuner::{tune_with, DEFAULT_BUDGET, LADDER};
+
+const MIN_RATIO: f64 = 50.0;
+
+/// Retired instructions and wall seconds for one pass of `workloads` on a
+/// backend.
+fn measure(
+    cfg: &ClusterConfig,
+    workloads: &[Workload],
+    kind: BackendKind,
+    reps: usize,
+) -> (u64, f64) {
+    let mut instrs = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for w in workloads {
+            let (run, out) = w.run_on_backend(cfg, cfg.cores, kind.get());
+            assert!(w.verify(&out).is_ok(), "{}: {:?} run failed to verify", w.name, kind);
+            instrs += run.instrs;
+        }
+    }
+    (instrs, t0.elapsed().as_secs_f64())
+}
+
+fn main() -> ExitCode {
+    let mut ok = true;
+
+    // ---- Gate 1: instruction throughput, functional vs event.
+    let cfg = ClusterConfig::new(8, 2, 2);
+    let workloads: Vec<Workload> = Benchmark::all()
+        .into_iter()
+        .flat_map(|b| [b.build(Variant::Scalar, &cfg), b.build(Variant::VEC, &cfg)])
+        .collect();
+    // Warm-up pass (page-faults, lazy allocations) outside the timers.
+    let _ = measure(&cfg, &workloads, BackendKind::Functional, 1);
+    let (ev_instrs, ev_s) = measure(&cfg, &workloads, BackendKind::Event, 1);
+    let (fu_instrs, fu_s) = measure(&cfg, &workloads, BackendKind::Functional, 10);
+    let ev_mips = ev_instrs as f64 / ev_s.max(1e-9) / 1e6;
+    let fu_mips = fu_instrs as f64 / fu_s.max(1e-9) / 1e6;
+    let ratio = fu_mips / ev_mips.max(1e-9);
+    println!("backend-event-minstr-per-s: {ev_mips:.1}");
+    println!("backend-functional-minstr-per-s: {fu_mips:.1}");
+    println!("backend-throughput-ratio: {ratio:.0}x");
+    if fu_instrs != 10 * ev_instrs {
+        eprintln!(
+            "FAIL: retired-instruction counts diverge across tiers \
+             ({ev_instrs} event vs {fu_instrs}/10 functional)"
+        );
+        ok = false;
+    }
+    if ratio < MIN_RATIO {
+        eprintln!("FAIL: functional/event throughput {ratio:.1}x below the {MIN_RATIO}x gate");
+        ok = false;
+    }
+
+    // ---- Gate 2: the functional tune probe never pays for rejected rungs.
+    let engine = QueryEngine::new();
+    let tcfg = ClusterConfig::new(8, 8, 1);
+    let budget = DEFAULT_BUDGET;
+    let report = tune_with(&engine, &tcfg, budget);
+    let functional_runs = engine.functional_runs();
+    let sim_runs = engine.sim_runs();
+    println!("backend-tune-functional-runs: {functional_runs}");
+    println!("backend-tune-ca-runs: {sim_runs}");
+    let ladder_points = 8 * LADDER.len() as u64;
+    if functional_runs != ladder_points {
+        eprintln!("FAIL: expected {ladder_points} functional probes, saw {functional_runs}");
+        ok = false;
+    }
+    if sim_runs > ladder_points || sim_runs < 8 {
+        eprintln!("FAIL: implausible cycle-accurate run count {sim_runs}");
+        ok = false;
+    }
+    let mut rejected = 0u64;
+    for c in &report.choices {
+        for (ri, &v) in LADDER.iter().enumerate() {
+            let probe = engine
+                .query(&[QueryPoint::functional(&tcfg, c.bench, v)])
+                .pop()
+                .expect("cached probe");
+            let adm = probe.verified && probe.err.within(budget);
+            let plan = engine.plan(&[QueryPoint::new(&tcfg, c.bench, v)]);
+            let cached_ca = plan.hit_count() == 1;
+            if ri == 0 || adm {
+                if !cached_ca {
+                    eprintln!("FAIL: {} rung {ri} admissible but not simulated", c.bench.name());
+                    ok = false;
+                }
+            } else {
+                rejected += 1;
+                if cached_ca {
+                    eprintln!(
+                        "FAIL: {} rung {ri} was accuracy-rejected yet ran cycle-accurately",
+                        c.bench.name()
+                    );
+                    ok = false;
+                }
+            }
+        }
+    }
+    println!("backend-tune-rejected-rungs: {rejected}");
+    if engine.functional_runs() != functional_runs || engine.sim_runs() != sim_runs {
+        eprintln!("FAIL: the audit itself issued backend runs");
+        ok = false;
+    }
+
+    if !ok {
+        return ExitCode::FAILURE;
+    }
+    println!("backend: OK ({ratio:.0}x >= {MIN_RATIO}x, no CA runs for {rejected} rejected rungs)");
+    ExitCode::SUCCESS
+}

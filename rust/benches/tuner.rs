@@ -1,12 +1,16 @@
 //! `cargo bench --bench tuner` — gates the accuracy-aware autotuner's
 //! cache behaviour (mirrors `query_cache.rs`).
 //!
-//! Tunes all 8 benchmarks on 8c8f1p twice on a private query engine: the
-//! cold pass simulates the full 5-rung ladder (40 points); the warm pass
-//! must resolve entirely from the measurement cache. Gates (process exits
-//! non-zero on violation):
+//! Tunes all 8 benchmarks on 8c8f1p twice on a private query engine. Since
+//! the backend tier landed, the cold pass probes the full 5-rung ladder
+//! (40 points) on the **functional** backend and simulates cycle-
+//! accurately only the baselines plus the budget-admissible rungs; the
+//! warm pass must resolve entirely from the measurement cache. Gates
+//! (process exits non-zero on violation):
 //!
-//! * the warm tune issues **zero** simulator runs;
+//! * the cold tune issues exactly 40 functional probes, and between 8
+//!   (baselines) and 40 cycle-accurate runs — one per admissible rung;
+//! * the warm tune issues **zero** runs of either tier;
 //! * the warm tune resolves ≥ 10× faster than cold;
 //! * warm selections are identical to cold (same rung, bit-equal error);
 //! * with the default 1e-2 budget, at least half of the benchmarks select
@@ -32,6 +36,8 @@ fn main() -> ExitCode {
     let cold = tune_with(&engine, &cfg, DEFAULT_BUDGET);
     let cold_s = t0.elapsed().as_secs_f64();
     let after_cold = engine.stats();
+    let cold_func = engine.functional_runs();
+    let cold_sim = engine.sim_runs();
 
     let t1 = Instant::now();
     let warm = tune_with(&engine, &cfg, DEFAULT_BUDGET);
@@ -39,13 +45,15 @@ fn main() -> ExitCode {
     let after_warm = engine.stats();
 
     let warm_misses = after_warm.misses - after_cold.misses;
-    let warm_hits = after_warm.hits - after_cold.hits;
+    let warm_func = engine.functional_runs() - cold_func;
+    let warm_sim = engine.sim_runs() - cold_sim;
     let speedup = cold_s / warm_s.max(1e-9);
 
     println!("tune-cold-seconds: {cold_s:.3}");
     println!("tune-warm-seconds: {warm_s:.6}");
     println!("tune-speedup: {speedup:.0}x");
-    println!("tune-cold-misses: {}", after_cold.misses);
+    println!("tune-cold-functional-probes: {cold_func}");
+    println!("tune-cold-ca-runs: {cold_sim}");
     println!("tune-warm-misses: {warm_misses}");
     println!("tune-sub-f32-selections: {}/{}", cold.sub_f32_count(), cold.choices.len());
     for c in &cold.choices {
@@ -59,19 +67,32 @@ fn main() -> ExitCode {
     }
 
     let mut ok = true;
-    if after_cold.misses != LADDER_POINTS || after_cold.hits != 0 {
+    if cold_func != LADDER_POINTS {
         eprintln!(
-            "FAIL: cold tune should miss exactly {LADDER_POINTS} points, saw {} misses / {} hits",
-            after_cold.misses, after_cold.hits
+            "FAIL: cold tune should probe {LADDER_POINTS} rungs functionally, saw {cold_func}"
         );
         ok = false;
     }
-    if warm_misses != 0 {
-        eprintln!("FAIL: warm-cache tune issued {warm_misses} simulator runs (must be 0)");
+    if cold_sim < 8 || cold_sim > LADDER_POINTS {
+        eprintln!(
+            "FAIL: cold tune should simulate between 8 baselines and {LADDER_POINTS} rungs, \
+             saw {cold_sim}"
+        );
         ok = false;
     }
-    if warm_hits != LADDER_POINTS {
-        eprintln!("FAIL: warm tune expected {LADDER_POINTS} cache hits, saw {warm_hits}");
+    if after_cold.misses != cold_func + cold_sim {
+        eprintln!(
+            "FAIL: cold misses {} should equal probes + simulations {}",
+            after_cold.misses,
+            cold_func + cold_sim
+        );
+        ok = false;
+    }
+    if warm_misses != 0 || warm_func != 0 || warm_sim != 0 {
+        eprintln!(
+            "FAIL: warm-cache tune issued {warm_misses} misses / {warm_func} functional / \
+             {warm_sim} cycle-accurate runs (must all be 0)"
+        );
         ok = false;
     }
     if speedup < MIN_SPEEDUP {

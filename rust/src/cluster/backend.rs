@@ -1,0 +1,247 @@
+//! Tiered execution backends.
+//!
+//! The paper's transprecision flow separates *what a kernel computes*
+//! (format/vector choice, §4–§5) from *what it costs* (cycles/energy,
+//! §6–§7). [`ExecBackend`] is that split as an interface: a backend runs a
+//! program on a [`ClusterConfig`] at a given occupancy and returns the
+//! **architectural** result — final register files, the memory image, the
+//! retired-instruction count — plus cycle-accurate [`RunStats`] when the
+//! backend models time at all. Three tiers implement it:
+//!
+//! | backend | timing | use |
+//! |---|---|---|
+//! | [`EventBackend`] | cycle-accurate (event engine) | measurements (default) |
+//! | [`ReferenceBackend`] | cycle-accurate (per-cycle spec) | differential wall |
+//! | [`crate::cluster::FunctionalBackend`] | none | accuracy probes, goldens |
+//!
+//! All three execute the same predecoded stream with the same functional
+//! semantics (`Core::exec_*`, `Memory::amo`, the event unit, the DMA
+//! front-end), so their architectural results agree — enforced by the
+//! three-way wall in `tests/differential.rs`. What the tier changes is the
+//! *price*: the functional backend interprets in program order with no
+//! event queue or hazard bookkeeping, targeting well over an order of
+//! magnitude more instruction throughput than the event engine
+//! (`benches/backend.rs` gates ≥ 50×), which is what lets the tuner probe
+//! every ladder rung's accuracy before paying for timing.
+
+use super::counters::RunStats;
+use super::functional::FunctionalBackend;
+use super::mem::Memory;
+use super::{Cluster, Engine};
+use crate::config::ClusterConfig;
+use crate::isa::Program;
+
+/// Architectural result of one backend run.
+pub struct BackendRun {
+    /// Final register file of every core (including inactive cores, which
+    /// keep their reset state — identical across backends by construction).
+    pub regs: Vec<[u32; 32]>,
+    /// Memory after the run (read result windows from here).
+    pub mem: Memory,
+    /// Cycle-accurate statistics; `None` for architectural-only backends.
+    pub stats: Option<RunStats>,
+    /// Total instructions retired across all cores (throughput accounting;
+    /// identical across backends for programs free of timing-dependent spin
+    /// loops).
+    pub instrs: u64,
+}
+
+/// A tier that can execute a program on a cluster configuration.
+pub trait ExecBackend: Sync {
+    /// Stable name (CLI `--backend` values, bench/report labels).
+    fn name(&self) -> &'static str;
+
+    /// True if [`ExecBackend::run_program`] returns `Some` stats.
+    fn is_cycle_accurate(&self) -> bool;
+
+    /// Execute `program` on a fresh cluster of `cfg` with the first
+    /// `workers` cores active. `stage` is called once to write input data
+    /// into the zeroed memory before execution starts.
+    fn run_program(
+        &self,
+        cfg: &ClusterConfig,
+        program: &Program,
+        workers: usize,
+        stage: &mut dyn FnMut(&mut Memory),
+    ) -> BackendRun;
+}
+
+/// Shared cycle-accurate implementation behind [`EventBackend`] and
+/// [`ReferenceBackend`]: build a cluster, stage, run on the chosen issue
+/// engine, and move the architectural state out.
+fn run_cluster(
+    cfg: &ClusterConfig,
+    program: &Program,
+    workers: usize,
+    stage: &mut dyn FnMut(&mut Memory),
+    engine: Engine,
+) -> BackendRun {
+    let mut cl = Cluster::new(*cfg, program.clone());
+    cl.limit_active_cores(workers);
+    stage(&mut cl.mem);
+    let stats = cl.run_with(engine);
+    let instrs = stats.per_core.iter().map(|c| c.instrs).sum();
+    let Cluster { cores, mem, .. } = cl;
+    BackendRun {
+        regs: cores.iter().map(|c| c.regs).collect(),
+        mem,
+        stats: Some(stats),
+        instrs,
+    }
+}
+
+/// The event-driven cycle-accurate engine (the measurement default).
+pub struct EventBackend;
+
+impl ExecBackend for EventBackend {
+    fn name(&self) -> &'static str {
+        "event"
+    }
+
+    fn is_cycle_accurate(&self) -> bool {
+        true
+    }
+
+    fn run_program(
+        &self,
+        cfg: &ClusterConfig,
+        program: &Program,
+        workers: usize,
+        stage: &mut dyn FnMut(&mut Memory),
+    ) -> BackendRun {
+        run_cluster(cfg, program, workers, stage, Engine::Event)
+    }
+}
+
+/// The per-cycle reference engine (the executable timing specification).
+pub struct ReferenceBackend;
+
+impl ExecBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn is_cycle_accurate(&self) -> bool {
+        true
+    }
+
+    fn run_program(
+        &self,
+        cfg: &ClusterConfig,
+        program: &Program,
+        workers: usize,
+        stage: &mut dyn FnMut(&mut Memory),
+    ) -> BackendRun {
+        run_cluster(cfg, program, workers, stage, Engine::Reference)
+    }
+}
+
+/// Backend selector (CLI `--backend`, bench loops, tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    Event,
+    Reference,
+    Functional,
+}
+
+impl BackendKind {
+    /// Every tier, cycle-accurate first.
+    pub fn all() -> [BackendKind; 3] {
+        [BackendKind::Event, BackendKind::Reference, BackendKind::Functional]
+    }
+
+    /// The backend instance for this selector.
+    pub fn get(self) -> &'static dyn ExecBackend {
+        match self {
+            BackendKind::Event => &EventBackend,
+            BackendKind::Reference => &ReferenceBackend,
+            BackendKind::Functional => &FunctionalBackend,
+        }
+    }
+
+    /// Stable name (matches [`ExecBackend::name`]).
+    pub fn name(self) -> &'static str {
+        self.get().name()
+    }
+
+    /// Forwarder to [`ExecBackend::run_program`] (saves callers importing
+    /// the trait).
+    pub fn run_program(
+        self,
+        cfg: &ClusterConfig,
+        program: &Program,
+        workers: usize,
+        stage: &mut dyn FnMut(&mut Memory),
+    ) -> BackendRun {
+        self.get().run_program(cfg, program, workers, stage)
+    }
+
+    /// Parse a CLI `--backend` value.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "event" => Some(BackendKind::Event),
+            "reference" | "ref" => Some(BackendKind::Reference),
+            "functional" | "func" => Some(BackendKind::Functional),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{regs, ProgramBuilder};
+
+    #[test]
+    fn kinds_roundtrip_and_resolve() {
+        for k in BackendKind::all() {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+            assert_eq!(k.get().name(), k.name());
+        }
+        assert_eq!(BackendKind::parse("ref"), Some(BackendKind::Reference));
+        assert_eq!(BackendKind::parse("func"), Some(BackendKind::Functional));
+        assert_eq!(BackendKind::parse("turbo"), None);
+        assert!(BackendKind::Event.get().is_cycle_accurate());
+        assert!(BackendKind::Reference.get().is_cycle_accurate());
+        assert!(!BackendKind::Functional.get().is_cycle_accurate());
+    }
+
+    /// All three tiers agree architecturally on a staged micro program, and
+    /// only the cycle-accurate tiers report stats.
+    #[test]
+    fn three_tiers_agree_on_a_micro_program() {
+        use crate::cluster::mem::TCDM_BASE;
+        let mut b = ProgramBuilder::new("tiers");
+        b.li(1, TCDM_BASE);
+        b.slli(2, regs::CORE_ID, 2);
+        b.add(1, 1, 2);
+        b.lw(3, 1, 0); // staged per-core word
+        b.addi(3, 3, 1);
+        b.sw(3, 1, 32); // publish to a second window
+        b.barrier();
+        b.end();
+        let program = b.build();
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let staged: Vec<u32> = (0..8u32).map(|i| 100 + i).collect();
+        let run = |k: BackendKind| {
+            k.get().run_program(&cfg, &program, cfg.cores, &mut |mem| {
+                mem.write_u32_slice(TCDM_BASE, &staged);
+            })
+        };
+        let ev = run(BackendKind::Event);
+        let rf = run(BackendKind::Reference);
+        let fu = run(BackendKind::Functional);
+        assert!(ev.stats.is_some() && rf.stats.is_some() && fu.stats.is_none());
+        assert_eq!(ev.regs, rf.regs);
+        assert_eq!(ev.regs, fu.regs);
+        assert_eq!(ev.mem.tcdm_words(), rf.mem.tcdm_words());
+        assert_eq!(ev.mem.tcdm_words(), fu.mem.tcdm_words());
+        assert_eq!(ev.instrs, fu.instrs);
+        for i in 0..8u32 {
+            assert_eq!(
+                fu.mem.load(TCDM_BASE + 32 + 4 * i, crate::isa::MemSize::Word),
+                101 + i
+            );
+        }
+    }
+}

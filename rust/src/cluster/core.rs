@@ -144,6 +144,20 @@ impl Core {
         (worst, who)
     }
 
+    /// Advance past an executed instruction using its predecoded flags: the
+    /// [`crate::isa::decoded::flag::LOOP_END_NEXT`] bit proves whether the
+    /// hw-loop stack can possibly act, so the common case is a plain
+    /// increment. Shared by the event engine's batcher and the functional
+    /// interpreter.
+    #[inline(always)]
+    pub(crate) fn advance_decoded(&mut self, flags: u8) {
+        if flags & crate::isa::decoded::flag::LOOP_END_NEXT != 0 {
+            self.advance_pc();
+        } else {
+            self.pc += 1;
+        }
+    }
+
     /// Advance past the current instruction, honouring hardware loops.
     pub(crate) fn advance_pc(&mut self) {
         let mut next = self.pc + 1;

@@ -43,14 +43,11 @@ use super::{Cluster, TAKEN_BRANCH_CYCLES};
 
 /// Advance past an executed instruction: the predecoded `LOOP_END_NEXT`
 /// flag proves whether the hw-loop stack can possibly act, so the common
-/// case is a plain increment.
+/// case is a plain increment (shared with the functional interpreter via
+/// [`Core::advance_decoded`]).
 #[inline(always)]
 fn advance(c: &mut Core, d: &DecodedInsn) {
-    if d.flags & flag::LOOP_END_NEXT != 0 {
-        c.advance_pc();
-    } else {
-        c.pc += 1;
-    }
+    c.advance_decoded(d.flags);
 }
 
 impl Cluster {
@@ -151,7 +148,12 @@ impl Cluster {
             assert!(t < max_cycles, "simulation exceeded max_cycles (deadlock?)");
             let pc = self.cores[ci].pc as usize;
             let d = self.decoded.insns[pc];
-            let local = d.flags & flag::LOCAL != 0
+            // A non-zero straight-line fast-path entry is exactly the
+            // "touches no order-sensitive shared resource" predicate (the
+            // table is the LOCAL flag in run-length form — see
+            // `DecodedProgram::local_run_len`, shared with the functional
+            // interpreter).
+            let local = self.decoded.local_run_len[pc] != 0
                 || solo
                 || (fp_private && matches!(d.class, OpClass::Fp));
             if !local && t > now {

@@ -1,0 +1,480 @@
+//! Functional (architectural-only) execution backend.
+//!
+//! [`FunctionalBackend`] interprets a predecoded program **in program order
+//! per core** with correct TCDM / atomic / event-line / DMA *semantics* but
+//! no cycle accounting at all: no event queue, no scoreboard, no bank or
+//! FPU arbitration, no I$ model. It reuses the exact functional primitives
+//! the cycle-accurate engines execute through — [`Core::exec_alu`],
+//! [`Core::exec_fp`], [`Core::exec_load`], [`Memory::amo`], the
+//! [`EventUnit`] and the [`DmaCtl`] front-end — so the architectural result
+//! (final registers, memory image) is identical to the timed engines for
+//! every program whose cross-core behaviour is synchronization-determined
+//! (all 8 kernels: static work sharing, barrier/event handshakes). Programs
+//! that *self-schedule* through TCDM atomics still produce the identical
+//! memory image (the work-sharing invariant: every index runs exactly once,
+//! bodies are index-pure) but distribute chunks by backend timing, so their
+//! per-core registers are compared only under deterministic schedules in
+//! the three-way wall (`tests/differential.rs`).
+//!
+//! ## Scheduling model
+//!
+//! Cores run round-robin, each **to its next blocking point**: an
+//! unsatisfied `WaitEvent`, an incomplete `Barrier`, or `End`. Everything
+//! else — including DMA `STATUS` polls, which report zero outstanding
+//! transfers because data moves at trigger time — executes straight
+//! through. A full pass in which no core is runnable while some still
+//! sleep is a deadlock (panics, mirroring the timed engines' guard); a
+//! per-run retired-instruction budget bounds pathological spin loops the
+//! way `max_cycles` bounds the timed engines.
+//!
+//! ## Fast path
+//!
+//! The interpreter shares the predecoder's straight-line fast-path table
+//! ([`DecodedProgram::local_run_len`], also consulted by the event
+//! engine's batcher): while the table proves the pc starts a run of
+//! core-local instructions, dispatch stays in a tight tier that never
+//! touches memory, the DMA or the event unit. The `benches/backend.rs`
+//! gate holds the result to ≥ 50× the event engine's instruction
+//! throughput on the kernel suite.
+
+use super::backend::{BackendRun, ExecBackend};
+use super::core::{Core, CoreState};
+use super::event::EventUnit;
+use super::mem::{DmaCtl, Memory, Region, DMA_BASE};
+use crate::config::ClusterConfig;
+use crate::isa::decoded::{DecodedProgram, OpClass};
+use crate::isa::insn::Insn;
+use crate::isa::{regs, Program};
+
+/// Retired-instruction budget per run — the functional analogue of the
+/// timed engines' `max_cycles` deadlock guard.
+const MAX_INSTRS: u64 = 2_000_000_000;
+
+/// The architectural-only execution tier.
+pub struct FunctionalBackend;
+
+impl ExecBackend for FunctionalBackend {
+    fn name(&self) -> &'static str {
+        "functional"
+    }
+
+    fn is_cycle_accurate(&self) -> bool {
+        false
+    }
+
+    fn run_program(
+        &self,
+        cfg: &ClusterConfig,
+        program: &Program,
+        workers: usize,
+        stage: &mut dyn FnMut(&mut Memory),
+    ) -> BackendRun {
+        FunctionalBackend::run_decoded(cfg, &DecodedProgram::decode(program), workers, stage)
+    }
+}
+
+impl FunctionalBackend {
+    /// Execute an already-predecoded program (benches and repeated probes
+    /// skip the re-decode).
+    pub fn run_decoded(
+        cfg: &ClusterConfig,
+        decoded: &DecodedProgram,
+        workers: usize,
+        stage: &mut dyn FnMut(&mut Memory),
+    ) -> BackendRun {
+        assert!(workers >= 1 && workers <= cfg.cores, "occupancy out of range");
+        let n = cfg.cores;
+        // Mirror `Cluster::new` + `limit_active_cores` exactly, so inactive
+        // cores' register files match the timed engines bit-for-bit.
+        let mut cores: Vec<Core> = (0..n).map(|i| Core::new(i, n)).collect();
+        for c in cores.iter_mut().skip(workers) {
+            c.state = CoreState::Done;
+        }
+        for c in cores.iter_mut().take(workers) {
+            c.set_reg(regs::NCORES, workers as u32);
+        }
+        let mut mem = Memory::new(cfg);
+        stage(&mut mem);
+        let mut event = EventUnit::new(workers);
+        let mut dmac = DmaCtl::default();
+
+        let mut total = 0u64;
+        loop {
+            let mut ran = false;
+            for ci in 0..workers {
+                if !matches!(cores[ci].state, CoreState::Running) {
+                    continue;
+                }
+                ran = true;
+                total += run_core(
+                    ci,
+                    decoded,
+                    workers,
+                    &mut cores,
+                    &mut mem,
+                    &mut event,
+                    &mut dmac,
+                    MAX_INSTRS - total,
+                );
+            }
+            if !ran {
+                break;
+            }
+        }
+        let asleep =
+            cores.iter().filter(|c| matches!(c.state, CoreState::Sleeping { .. })).count();
+        assert!(
+            asleep == 0,
+            "functional run deadlocked: {asleep} core(s) asleep at a barrier or event line that \
+             can never complete"
+        );
+        BackendRun {
+            regs: cores.iter().map(|c| c.regs).collect(),
+            mem,
+            stats: None,
+            instrs: total,
+        }
+    }
+}
+
+/// Run core `ci` until it blocks (event sleep, incomplete barrier) or
+/// terminates; returns the number of instructions it retired. `budget`
+/// bounds that count (exceeding it is the deadlock guard tripping on an
+/// unsynchronized spin loop).
+#[allow(clippy::too_many_arguments)]
+fn run_core(
+    ci: usize,
+    decoded: &DecodedProgram,
+    workers: usize,
+    cores: &mut [Core],
+    mem: &mut Memory,
+    event: &mut EventUnit,
+    dmac: &mut DmaCtl,
+    budget: u64,
+) -> u64 {
+    let insns = decoded.insns.as_slice();
+    let run_len = decoded.local_run_len.as_slice();
+    let mut executed = 0u64;
+    loop {
+        // ---- Tier 1: straight-line core-local run (shared fast-path
+        // table; the same instruction set the event engine batches).
+        {
+            let c = &mut cores[ci];
+            while run_len[c.pc as usize] != 0 {
+                let d = &insns[c.pc as usize];
+                executed += 1;
+                assert!(executed < budget, "functional run exceeded its instruction budget");
+                c.counters.instrs += 1;
+                match d.class {
+                    OpClass::Alu => {
+                        let Insn::Alu { op, rd, rs1, rhs } = d.insn else { unreachable!() };
+                        c.exec_alu(op, rd, rs1, rhs);
+                        c.advance_decoded(d.flags);
+                    }
+                    OpClass::Li => {
+                        let Insn::Li { rd, imm } = d.insn else { unreachable!() };
+                        c.set_reg(rd, imm);
+                        c.advance_decoded(d.flags);
+                    }
+                    OpClass::FpAlu => {
+                        let Insn::Fp { op, mode, rd, rs1, rs2 } = d.insn else {
+                            unreachable!()
+                        };
+                        let _ = c.exec_fp(op, mode, rd, rs1, rs2);
+                        c.advance_decoded(d.flags);
+                    }
+                    OpClass::Branch => {
+                        let Insn::Branch { cond, rs1, rs2, target } = d.insn else {
+                            unreachable!()
+                        };
+                        if c.branch_taken(cond, rs1, rs2) {
+                            c.pc = target;
+                        } else {
+                            c.advance_decoded(d.flags);
+                        }
+                    }
+                    OpClass::Jump => {
+                        let Insn::Jump { target } = d.insn else { unreachable!() };
+                        c.pc = target;
+                    }
+                    OpClass::HwLoop => {
+                        let Insn::HwLoop { count, start, end } = d.insn else { unreachable!() };
+                        let iters = c.reg(count);
+                        if iters == 0 {
+                            c.pc = end;
+                        } else {
+                            c.hwloops.push((start, end, iters));
+                            c.pc = start;
+                        }
+                    }
+                    OpClass::End => {
+                        c.state = CoreState::Done;
+                        return executed;
+                    }
+                    _ => unreachable!("non-local class inside a straight-line run"),
+                }
+            }
+        }
+
+        // ---- Tier 2: one shared-resource instruction (memory, FP
+        // datapath, atomics, event unit), then back to the fast path.
+        let pc = cores[ci].pc as usize;
+        let d = &insns[pc];
+        executed += 1;
+        assert!(executed < budget, "functional run exceeded its instruction budget");
+        cores[ci].counters.instrs += 1;
+        match d.class {
+            OpClass::Load => {
+                let Insn::Load { rd, base, offset, post_inc, size } = d.insn else {
+                    unreachable!()
+                };
+                let c = &mut cores[ci];
+                let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                match mem.region_of(addr) {
+                    Region::Dma => {
+                        // Transfers complete at trigger time, so `STATUS`
+                        // reads as drained.
+                        let v = dmac.load(addr - DMA_BASE, u64::MAX);
+                        c.set_reg(rd, v);
+                    }
+                    _ => c.exec_load(mem, rd, addr, size),
+                }
+                c.advance_decoded(d.flags);
+            }
+            OpClass::Store => {
+                let Insn::Store { rs, base, offset, post_inc, size } = d.insn else {
+                    unreachable!()
+                };
+                let c = &mut cores[ci];
+                let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                // Value read after the post-increment, like the engines.
+                let v = c.reg(rs);
+                match mem.region_of(addr) {
+                    Region::Dma => dmac.store(mem, addr - DMA_BASE, v, 0),
+                    _ => mem.store(addr, size, v),
+                }
+                c.advance_decoded(d.flags);
+            }
+            OpClass::Fp | OpClass::FpDivSqrt => {
+                let Insn::Fp { op, mode, rd, rs1, rs2 } = d.insn else { unreachable!() };
+                let c = &mut cores[ci];
+                let _ = c.exec_fp(op, mode, rd, rs1, rs2);
+                c.advance_decoded(d.flags);
+            }
+            OpClass::Amo => {
+                let Insn::Amo { op, rd, base, offset, rs } = d.insn else { unreachable!() };
+                let c = &mut cores[ci];
+                let addr = (c.reg(base) as i64 + offset as i64) as u32;
+                assert!(
+                    matches!(mem.region_of(addr), Region::Tcdm),
+                    "atomic outside TCDM at {addr:#x}"
+                );
+                let v = c.reg(rs);
+                let old = mem.amo(op, addr, v);
+                c.set_reg(rd, old);
+                c.advance_decoded(d.flags);
+            }
+            OpClass::WaitEvent => {
+                let Insn::WaitEvent { ev } = d.insn else { unreachable!() };
+                cores[ci].advance_decoded(d.flags);
+                if !event.wait_event(ci, ev) {
+                    cores[ci].state = CoreState::Sleeping { since: 0 };
+                    return executed;
+                }
+            }
+            OpClass::SetEvent => {
+                let Insn::SetEvent { ev } = d.insn else { unreachable!() };
+                cores[ci].advance_decoded(d.flags);
+                for w in event.set_event(ev) {
+                    cores[w].state = CoreState::Running;
+                }
+            }
+            OpClass::Barrier => {
+                cores[ci].advance_decoded(d.flags);
+                if event.arrive(ci, 0).is_some() {
+                    // Wake every barrier sleeper; cores parked on a
+                    // software event line stay asleep (only a SetEvent may
+                    // release them) — same rule as the timed engines.
+                    for (w, c) in cores.iter_mut().enumerate().take(workers) {
+                        if matches!(c.state, CoreState::Sleeping { .. })
+                            && !event.is_event_waiting(w)
+                        {
+                            c.state = CoreState::Running;
+                        }
+                    }
+                    // The arriving core completed the barrier: it keeps
+                    // running; the woken cores resume on their next slot.
+                } else {
+                    cores[ci].state = CoreState::Sleeping { since: 0 };
+                    return executed;
+                }
+            }
+            _ => unreachable!("local class dispatched on the shared-resource path"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::backend::BackendKind;
+    use crate::cluster::mem::{dma_reg, L2_BASE, TCDM_BASE};
+    use crate::isa::{MemSize, ProgramBuilder};
+    use crate::kernels::{Benchmark, Variant};
+
+    fn run_functional(
+        cfg: &ClusterConfig,
+        program: &Program,
+        workers: usize,
+        stage: &mut dyn FnMut(&mut Memory),
+    ) -> BackendRun {
+        FunctionalBackend.run_program(cfg, program, workers, stage)
+    }
+
+    /// Static-scheduled kernels: the functional backend reproduces the
+    /// event engine's outputs, registers and TCDM image bit-for-bit, at
+    /// full and partial occupancy.
+    #[test]
+    fn matches_event_engine_on_static_kernels() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        for (b, v) in [
+            (Benchmark::Fir, Variant::Scalar),
+            (Benchmark::Matmul, Variant::VEC),
+            (Benchmark::Kmeans, Variant::SCALAR_BF16),
+        ] {
+            let w = b.build(v, &cfg);
+            for workers in [1usize, 3, 8] {
+                let (ev, ev_out) = w.run_on_backend(&cfg, workers, BackendKind::Event.get());
+                let (fu, fu_out) = w.run_on_backend(&cfg, workers, &FunctionalBackend);
+                let ctx = format!("{} {} with {workers} workers", b.name(), v.label());
+                assert_eq!(ev_out, fu_out, "{ctx}: outputs differ");
+                assert_eq!(ev.regs, fu.regs, "{ctx}: registers differ");
+                assert_eq!(ev.mem.tcdm_words(), fu.mem.tcdm_words(), "{ctx}: TCDM differs");
+                assert_eq!(ev.instrs, fu.instrs, "{ctx}: retired counts differ");
+                w.verify(&fu_out).unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            }
+        }
+    }
+
+    /// Concurrent fetch-and-add claims every ticket exactly once (the
+    /// interleaving is the functional scheduler's, not the timed one's, but
+    /// atomicity and coverage are identical).
+    #[test]
+    fn amo_tickets_claimed_exactly_once() {
+        let mut b = ProgramBuilder::new("amo-f");
+        b.li(1, TCDM_BASE);
+        b.li(2, 1);
+        b.amo_add(3, 1, 0, 2);
+        b.slli(4, regs::CORE_ID, 2);
+        b.add(4, 4, 1);
+        b.sw(3, 4, 4);
+        b.barrier();
+        b.end();
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let run = run_functional(&cfg, &b.build(), 8, &mut |_| {});
+        assert_eq!(run.mem.load(TCDM_BASE, MemSize::Word), 8);
+        let mut tickets: Vec<u32> =
+            (0..8).map(|i| run.mem.load(TCDM_BASE + 4 + 4 * i, MemSize::Word)).collect();
+        tickets.sort_unstable();
+        assert_eq!(tickets, (0..8).collect::<Vec<u32>>());
+    }
+
+    /// Master/worker event handshake: workers park on the line, the master
+    /// raises it, everyone joins — and a double run is deterministic.
+    #[test]
+    fn event_handshake_completes_deterministically() {
+        let prog = || {
+            let mut b = ProgramBuilder::new("ev-f");
+            b.beq(regs::CORE_ID, regs::ZERO, "master");
+            b.wait_event(5);
+            b.j("join");
+            b.label("master");
+            b.li(1, 100);
+            b.hwloop(1);
+            b.addi(2, 2, 1);
+            b.hwloop_end();
+            b.set_event(5);
+            b.wait_event(5); // consumes the master's own buffered event
+            b.label("join");
+            b.barrier();
+            b.end();
+            b.build()
+        };
+        let cfg = ClusterConfig::new(8, 2, 1);
+        let a = run_functional(&cfg, &prog(), 8, &mut |_| {});
+        let b = run_functional(&cfg, &prog(), 8, &mut |_| {});
+        assert_eq!(a.regs, b.regs);
+        assert_eq!(a.instrs, b.instrs);
+        assert_eq!(a.regs[0][2], 100, "master ran its pre-signal work");
+    }
+
+    /// The memory-mapped DMA works functionally: transfers land at trigger
+    /// time and `STATUS` polls drain immediately.
+    #[test]
+    fn dma_roundtrip_is_functional() {
+        let mut b = ProgramBuilder::new("dma-f");
+        b.bne(regs::CORE_ID, regs::ZERO, "worker");
+        b.li(1, DMA_BASE);
+        b.li(2, L2_BASE);
+        b.sw(2, 1, dma_reg::SRC as i32);
+        b.li(2, TCDM_BASE);
+        b.sw(2, 1, dma_reg::DST as i32);
+        b.li(2, 4);
+        b.sw(2, 1, dma_reg::LEN as i32);
+        b.sw(2, 1, dma_reg::CMD as i32);
+        b.label("spin");
+        b.lw(3, 1, dma_reg::STATUS as i32);
+        b.bne(3, regs::ZERO, "spin");
+        b.set_event(0);
+        b.label("worker");
+        b.wait_event(0);
+        b.li(4, TCDM_BASE);
+        b.lw(5, 4, 0);
+        b.barrier();
+        b.end();
+        let cfg = ClusterConfig::new(8, 8, 0);
+        let run = run_functional(&cfg, &b.build(), 8, &mut |mem| {
+            mem.write_u32_slice(L2_BASE, &[0xABCD_1234, 2, 3, 4]);
+        });
+        for regs in &run.regs {
+            assert_eq!(regs[5], 0xABCD_1234, "every core read the staged word");
+        }
+        assert_eq!(run.mem.load(TCDM_BASE + 12, MemSize::Word), 4);
+    }
+
+    /// A core waiting on a line nobody raises is a deadlock, not a hang.
+    #[test]
+    #[should_panic(expected = "deadlocked")]
+    fn unraisable_event_line_panics() {
+        let mut b = ProgramBuilder::new("dead-f");
+        b.bne(regs::CORE_ID, regs::ZERO, "worker");
+        b.end();
+        b.label("worker");
+        b.wait_event(9);
+        b.end();
+        let cfg = ClusterConfig::new(8, 8, 0);
+        run_functional(&cfg, &b.build(), 8, &mut |_| {});
+    }
+
+    /// Partial occupancy mirrors `limit_active_cores`: inactive cores never
+    /// run and barriers span exactly the team.
+    #[test]
+    fn partial_occupancy_runs_and_inactive_cores_stay_reset() {
+        let mut b = ProgramBuilder::new("occ-f");
+        b.li(1, TCDM_BASE);
+        b.slli(2, regs::CORE_ID, 2);
+        b.add(1, 1, 2);
+        b.sw(regs::NCORES, 1, 0);
+        b.barrier();
+        b.end();
+        let cfg = ClusterConfig::new(16, 8, 0);
+        let run = run_functional(&cfg, &b.build(), 3, &mut |_| {});
+        for i in 0..3u32 {
+            assert_eq!(run.mem.load(TCDM_BASE + 4 * i, MemSize::Word), 3);
+        }
+        assert_eq!(run.mem.load(TCDM_BASE + 12, MemSize::Word), 0, "core 3 must not run");
+        // Inactive cores keep the reset-time register file.
+        assert_eq!(run.regs[5][regs::CORE_ID as usize], 5);
+        assert_eq!(run.regs[5][regs::NCORES as usize], 16);
+    }
+}

@@ -8,6 +8,7 @@
 //! "TCDM contention" counter of §5.1.
 
 use super::super::config::ClusterConfig;
+use crate::isa::insn::AmoOp;
 use crate::isa::MemSize;
 
 /// Base address of the TCDM scratchpad (PULP cluster address map).
@@ -313,6 +314,26 @@ impl Memory {
     /// TCDM capacity in bytes.
     pub fn tcdm_bytes(&self) -> usize {
         self.tcdm.len() * 4
+    }
+
+    /// Raw word-level view of the whole TCDM (the three-way differential
+    /// wall compares final memory images across backends).
+    pub fn tcdm_words(&self) -> &[u32] {
+        &self.tcdm
+    }
+
+    /// Data phase of a TCDM atomic: read-modify-write one word, returning
+    /// the old value. This is the single functional definition of the AMO
+    /// semantics, shared by both cycle-accurate issue engines (via
+    /// [`super::Cluster::exec_amo`]) and the functional backend.
+    pub fn amo(&mut self, op: AmoOp, addr: u32, operand: u32) -> u32 {
+        let old = self.load(addr, MemSize::Word);
+        let new = match op {
+            AmoOp::Add => old.wrapping_add(operand),
+            AmoOp::Swap => operand,
+        };
+        self.store(addr, MemSize::Word, new);
+        old
     }
 
     /// `memcpy`-style block move of `words` words from `src` to `dst`, used

@@ -34,14 +34,19 @@
 //! register-file write of an int/LSU instruction issued in the immediately
 //! following slot (§5.3.3) — modelled as a 1-cycle `wb_stall`.
 
+pub mod backend;
 pub mod core;
 pub mod counters;
 pub mod engine;
 pub mod event;
 pub mod fpu;
+pub mod functional;
 pub mod icache;
 pub mod mem;
 pub mod reference;
+
+pub use backend::{BackendKind, BackendRun, EventBackend, ExecBackend, ReferenceBackend};
+pub use functional::FunctionalBackend;
 
 use crate::config::ClusterConfig;
 use crate::isa::decoded::DecodedProgram;
@@ -56,7 +61,6 @@ use self::fpu::FpuSubsystem;
 use self::icache::ICache;
 use self::mem::{DmaCtl, Memory, Region};
 use crate::isa::insn::AmoOp;
-use crate::isa::MemSize;
 
 /// Which issue engine executes a run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -210,12 +214,7 @@ impl Cluster {
         t: u64,
     ) {
         let v = self.cores[ci].reg(rs);
-        let old = self.mem.load(addr, MemSize::Word);
-        let new = match op {
-            AmoOp::Add => old.wrapping_add(v),
-            AmoOp::Swap => v,
-        };
-        self.mem.store(addr, MemSize::Word, new);
+        let old = self.mem.amo(op, addr, v);
         let c = &mut self.cores[ci];
         c.set_reg(rd, old);
         c.reg_ready[rd as usize] = t + 2; // 1 load-use bubble, like a load

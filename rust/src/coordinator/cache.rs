@@ -60,7 +60,42 @@ use crate::tuner::accuracy::ErrorStats;
 /// through the engine), rows gained `workers`/`core_cycles` fields and a
 /// trailing FNV-1a row checksum. v2 rows are rejected by version, width
 /// *and* checksum — they degrade to a cold start (EXPERIMENTS.md §Runtime).
-pub const ENGINE_VERSION: u32 = 3;
+///
+/// v4: execution [`Fidelity`] joined the key and the row (a functional,
+/// accuracy-only resolution must never be served where cycle-accurate
+/// timing was asked for, and vice versa). v3 rows are rejected by version
+/// and width — they degrade to a cold start (EXPERIMENTS.md §Backends).
+pub const ENGINE_VERSION: u32 = 4;
+
+/// Execution fidelity of a resolved design-space point — which backend
+/// tier produced (or may serve) the measurement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fidelity {
+    /// Architectural-only run on the functional backend: `verified` and
+    /// `err` are real, every timing-derived field is zero.
+    Functional,
+    /// Full cycle-accurate simulation on the event engine (the default).
+    CycleAccurate,
+}
+
+impl Fidelity {
+    /// Stable row/CSV tag.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Fidelity::Functional => "fn",
+            Fidelity::CycleAccurate => "ca",
+        }
+    }
+
+    /// Parse a row tag.
+    pub fn parse_tag(s: &str) -> Option<Fidelity> {
+        match s {
+            "fn" => Some(Fidelity::Functional),
+            "ca" => Some(Fidelity::CycleAccurate),
+            _ => None,
+        }
+    }
+}
 
 /// File name of the persisted cache inside the cache directory.
 pub const CACHE_FILE: &str = "measurements.csv";
@@ -83,6 +118,9 @@ pub struct CacheKey {
     /// Team occupancy of the run (cycles — and through them every metric —
     /// depend on it; `cfg.cores` for full-cluster measurements).
     pub workers: usize,
+    /// Execution fidelity the measurement carries (functional rows hold
+    /// accuracy only; cycle-accurate rows hold timing too).
+    pub fidelity: Fidelity,
     /// [`ENGINE_VERSION`] at key-construction time.
     pub engine_version: u32,
 }
@@ -102,7 +140,8 @@ impl CacheKey {
         workers: usize,
         w: &Workload,
     ) -> Self {
-        Self::with_fingerprint(cfg, bench, variant, workers, workload_fingerprint(w))
+        let fp = workload_fingerprint(w);
+        Self::with_fingerprint(cfg, bench, variant, workers, Fidelity::CycleAccurate, fp)
     }
 
     /// Key from an already-computed workload fingerprint (the query
@@ -112,9 +151,18 @@ impl CacheKey {
         bench: Benchmark,
         variant: Variant,
         workers: usize,
+        fidelity: Fidelity,
         workload: u64,
     ) -> Self {
-        CacheKey { workload, cfg: *cfg, bench, variant, workers, engine_version: ENGINE_VERSION }
+        CacheKey {
+            workload,
+            cfg: *cfg,
+            bench,
+            variant,
+            workers,
+            fidelity,
+            engine_version: ENGINE_VERSION,
+        }
     }
 }
 
@@ -262,7 +310,19 @@ impl MeasurementCache {
 
     /// Write every resident entry to `path` (creating parent directories),
     /// in a deterministic row order; returns the entry count.
+    ///
+    /// The write is **atomic**: the file is staged next to `path` (a
+    /// `.tmp-<pid>-<seq>` sibling, unique per process *and* per save, so
+    /// concurrent savers — other processes or other threads of this one —
+    /// never stage into each other) and then `rename`d over the target,
+    /// which on POSIX replaces the name in one step. Concurrent processes
+    /// sharing `TRANSPFP_CACHE_DIR` therefore observe either the complete
+    /// old file or the complete new one — never a torn row. (A torn row
+    /// would only degrade to a cold start anyway, thanks to the row
+    /// checksum, but a torn *file* would silently drop every row after the
+    /// tear.)
     pub fn save_csv(&self, path: &Path) -> io::Result<usize> {
+        static SAVE_SEQ: AtomicU64 = AtomicU64::new(0);
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
@@ -276,8 +336,19 @@ impl MeasurementCache {
             out.push_str(r);
             out.push('\n');
         }
-        std::fs::write(path, out)?;
-        Ok(map.len())
+        let seq = SAVE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(format!(".tmp-{}-{seq}", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, out)?;
+        match std::fs::rename(&tmp, path) {
+            Ok(()) => Ok(map.len()),
+            Err(e) => {
+                // Never leave the staging file behind on a failed publish.
+                std::fs::remove_file(&tmp).ok();
+                Err(e)
+            }
+        }
     }
 }
 
@@ -385,20 +456,21 @@ fn row_checksum(payload: &str) -> u64 {
 /// One `key → measurement` entry as a CSV row. Floats are serialized as
 /// IEEE-754 bit patterns (hex) so a load reproduces them bit-exactly.
 ///
-/// Schema (v3): 18 key/metric fields (now including `workers` and
-/// `core_cycles`), the 18 aggregated counters, and a trailing FNV-1a
-/// checksum over the payload. v1/v2 rows had 31/34 fields and no checksum
-/// — rejected by [`decode_row`]'s width and checksum checks on top of the
-/// engine-version check.
+/// Schema (v4): 19 key/metric fields (now including the execution
+/// fidelity tag between `workers` and `verified`), the 18 aggregated
+/// counters, and a trailing FNV-1a checksum over the payload. v1/v2/v3
+/// rows had 31/34/37 fields — rejected by [`decode_row`]'s width and
+/// checksum checks on top of the engine-version check.
 fn encode_row(key: &CacheKey, m: &Measurement) -> String {
     let mut row = format!(
-        "{:016x},{},{},{},{},{},{},{},{},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x}",
+        "{:016x},{},{},{},{},{},{},{},{},{},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x}",
         key.workload,
         key.engine_version,
         encode_cfg(&key.cfg),
         key.bench.name(),
         encode_variant(key.variant),
         key.workers,
+        key.fidelity.tag(),
         m.verified,
         m.cycles,
         m.core_cycles,
@@ -423,18 +495,18 @@ fn encode_row(key: &CacheKey, m: &Measurement) -> String {
 }
 
 /// Inverse of [`encode_row`]; `None` on any malformed field, a row of the
-/// wrong width (e.g. a pre-runtime v1/v2 row), or a checksum mismatch
+/// wrong width (e.g. a pre-backend v1/v2/v3 row), or a checksum mismatch
 /// (truncated or bit-flipped persistence).
 fn decode_row(line: &str) -> Option<(CacheKey, Measurement)> {
     let fields: Vec<&str> = line.split(',').collect();
-    if fields.len() != 18 + 18 + 1 {
+    if fields.len() != 19 + 18 + 1 {
         return None;
     }
     let u64hex = |s: &str| u64::from_str_radix(s, 16).ok();
     let f64bits = |s: &str| u64hex(s).map(f64::from_bits);
     // Verify the payload checksum before trusting any field.
-    let payload_len = line.len() - (fields[36].len() + 1);
-    if u64hex(fields[36])? != row_checksum(&line[..payload_len]) {
+    let payload_len = line.len() - (fields[37].len() + 1);
+    if u64hex(fields[37])? != row_checksum(&line[..payload_len]) {
         return None;
     }
     let key = CacheKey {
@@ -444,29 +516,30 @@ fn decode_row(line: &str) -> Option<(CacheKey, Measurement)> {
         bench: Benchmark::parse(fields[3])?,
         variant: decode_variant(fields[4])?,
         workers: fields[5].parse().ok()?,
+        fidelity: Fidelity::parse_tag(fields[6])?,
     };
-    let verified = match fields[6] {
+    let verified = match fields[7] {
         "true" => true,
         "false" => false,
         _ => return None,
     };
-    let cycles: u64 = fields[7].parse().ok()?;
-    let core_cycles: u64 = fields[8].parse().ok()?;
+    let cycles: u64 = fields[8].parse().ok()?;
+    let core_cycles: u64 = fields[9].parse().ok()?;
     let metrics = Metrics {
-        perf_gflops: f64bits(fields[9])?,
-        energy_eff: f64bits(fields[10])?,
-        area_eff: f64bits(fields[11])?,
-        flops_per_cycle: f64bits(fields[12])?,
+        perf_gflops: f64bits(fields[10])?,
+        energy_eff: f64bits(fields[11])?,
+        area_eff: f64bits(fields[12])?,
+        flops_per_cycle: f64bits(fields[13])?,
     };
-    let fp_intensity = f64bits(fields[13])?;
-    let mem_intensity = f64bits(fields[14])?;
+    let fp_intensity = f64bits(fields[14])?;
+    let mem_intensity = f64bits(fields[15])?;
     let err = ErrorStats {
-        max_abs: f64bits(fields[15])?,
-        rms: f64bits(fields[16])?,
-        rel: f64bits(fields[17])?,
+        max_abs: f64bits(fields[16])?,
+        rms: f64bits(fields[17])?,
+        rel: f64bits(fields[18])?,
     };
     let mut counters = [0u64; 18];
-    for (slot, s) in counters.iter_mut().zip(&fields[18..36]) {
+    for (slot, s) in counters.iter_mut().zip(&fields[19..37]) {
         *slot = s.parse().ok()?;
     }
     let m = Measurement {
@@ -681,7 +754,31 @@ mod tests {
         assert!(cache.is_empty());
         std::fs::remove_file(&path).ok();
 
-        // And even a v3-width row stamped with the old engine version is
+        // PR 4's v3 layout: like v4 but without the fidelity tag (37 fields,
+        // engine_version=3) and with a *valid* checksum over its own payload
+        // — rejected by row width and engine version.
+        let v3_payload = format!(
+            "00000000deadbeef,3,8c4f1p,FIR,scalar,8,true,12345,98760,\
+             {:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},\
+             12345,12000,999,500,300,40,200,4096,1,2,3,4,5,6,7,8,9,10",
+            5.92f64.to_bits(),
+            167.0f64.to_bits(),
+            3.5f64.to_bits(),
+            16.0f64.to_bits(),
+            0.32f64.to_bits(),
+            0.48f64.to_bits(),
+            1.5e-3f64.to_bits(),
+            4.0e-4f64.to_bits(),
+            2.0e-4f64.to_bits(),
+        );
+        let v3_row = format!("{v3_payload},{:016x}", row_checksum(&v3_payload));
+        assert_eq!(v3_row.split(',').count(), 37);
+        let path3 = tmp_path("cache-v3-row.csv");
+        std::fs::write(&path3, format!("transpfp-cache-v1\n{v3_row}\n")).unwrap();
+        assert_eq!(cache.load_csv(&path3).unwrap(), 0, "v3 rows must be dropped, not served");
+        std::fs::remove_file(&path3).ok();
+
+        // And even a v4-width row stamped with the old engine version is
         // rejected by the version check alone.
         let stale = CacheKey {
             workload: 0x1234,
@@ -689,9 +786,10 @@ mod tests {
             bench: Benchmark::Fir,
             variant: Variant::Scalar,
             workers: 8,
-            engine_version: 2,
+            fidelity: Fidelity::CycleAccurate,
+            engine_version: 3,
         };
-        let path2 = tmp_path("cache-v2-version.csv");
+        let path2 = tmp_path("cache-v3-version.csv");
         let row = encode_row(&stale, &sample_measurement(&stale.cfg));
         std::fs::write(&path2, format!("transpfp-cache-v1\n{row}\n")).unwrap();
         assert_eq!(cache.load_csv(&path2).unwrap(), 0);
@@ -718,6 +816,7 @@ mod tests {
                     bench: Benchmark::Fir,
                     variant: Variant::VEC,
                     workers,
+                    fidelity: Fidelity::CycleAccurate,
                     engine_version: ENGINE_VERSION,
                 };
                 let m = sample_measurement(cfg);
@@ -800,6 +899,7 @@ mod tests {
             bench: Benchmark::Fir,
             variant: Variant::Scalar,
             workers: cfg.cores,
+            fidelity: Fidelity::CycleAccurate,
             engine_version: ENGINE_VERSION + 1,
         };
         let path = tmp_path("cache-stale.csv");
@@ -819,5 +919,107 @@ mod tests {
         assert_eq!(cache.load_csv(&path2).unwrap(), 0);
         std::fs::remove_file(&path2).ok();
         assert!(cache.is_empty());
+    }
+
+    /// Functional and cycle-accurate resolutions of the same point are
+    /// distinct cache citizens: an accuracy-only row must never be served
+    /// where timing was asked for.
+    #[test]
+    fn fidelity_is_part_of_the_address() {
+        let cfg = ClusterConfig::new(8, 2, 0);
+        let w = Benchmark::Fir.build(Variant::Scalar, &cfg);
+        let fp = workload_fingerprint(&w);
+        let ca = CacheKey::with_fingerprint(
+            &cfg,
+            Benchmark::Fir,
+            Variant::Scalar,
+            cfg.cores,
+            Fidelity::CycleAccurate,
+            fp,
+        );
+        let func = CacheKey::with_fingerprint(
+            &cfg,
+            Benchmark::Fir,
+            Variant::Scalar,
+            cfg.cores,
+            Fidelity::Functional,
+            fp,
+        );
+        assert_ne!(ca, func);
+        let cache = MeasurementCache::new();
+        cache.insert(ca, sample_measurement(&cfg));
+        assert!(cache.lookup(&func).is_none(), "fidelities must not alias");
+        // Both tags round-trip through a persisted file.
+        cache.insert(func, sample_measurement(&cfg));
+        let path = tmp_path("cache-fidelity.csv");
+        assert_eq!(cache.save_csv(&path).unwrap(), 2);
+        let loaded = MeasurementCache::new();
+        assert_eq!(loaded.load_csv(&path).unwrap(), 2);
+        assert!(loaded.lookup(&ca).is_some() && loaded.lookup(&func).is_some());
+        std::fs::remove_file(&path).ok();
+        for f in [Fidelity::Functional, Fidelity::CycleAccurate] {
+            assert_eq!(Fidelity::parse_tag(f.tag()), Some(f));
+        }
+        assert_eq!(Fidelity::parse_tag("xx"), None);
+    }
+
+    /// Satellite gate: persistence is atomic. A simulated partial write —
+    /// a torn temp file left by a killed process, plus an existing complete
+    /// cache at the destination — never corrupts the published file: after
+    /// `save_csv` the destination is complete and bit-exact, and no torn
+    /// intermediate is ever observable at the destination path.
+    #[test]
+    fn save_is_atomic_over_partial_writes() {
+        let cache = MeasurementCache::new();
+        let cfg = ClusterConfig::new(8, 4, 1);
+        for i in 0..4u64 {
+            let key = CacheKey {
+                workload: 0x42 + i,
+                cfg,
+                bench: Benchmark::Fir,
+                variant: Variant::VEC,
+                workers: cfg.cores,
+                fidelity: Fidelity::CycleAccurate,
+                engine_version: ENGINE_VERSION,
+            };
+            cache.insert(key, sample_measurement(&cfg));
+        }
+        let path = tmp_path("cache-atomic.csv");
+        // An old complete file already sits at the destination…
+        assert_eq!(cache.save_csv(&path).unwrap(), 4);
+        let old = std::fs::read_to_string(&path).unwrap();
+        // …and a killed writer left a torn staging file behind (simulated
+        // partial write: half of the eventual content).
+        let mut torn = path.as_os_str().to_owned();
+        torn.push(".tmp-9999-0");
+        let torn = std::path::PathBuf::from(torn);
+        std::fs::write(&torn, &old[..old.len() / 2]).unwrap();
+
+        // A fifth entry makes the new save observably different.
+        let key5 = CacheKey {
+            workload: 0x99,
+            cfg,
+            bench: Benchmark::Iir,
+            variant: Variant::Scalar,
+            workers: cfg.cores,
+            fidelity: Fidelity::Functional,
+            engine_version: ENGINE_VERSION,
+        };
+        cache.insert(key5, sample_measurement(&cfg));
+        assert_eq!(cache.save_csv(&path).unwrap(), 5);
+        // The stale torn staging file is untouched (never published) and
+        // the destination holds the complete new content.
+        assert_eq!(std::fs::read_to_string(&torn).unwrap(), &old[..old.len() / 2]);
+        let loaded = MeasurementCache::new();
+        assert_eq!(loaded.load_csv(&path).unwrap(), 5, "published file must be complete");
+        assert!(loaded.lookup(&key5).is_some());
+        // The destination never regresses to the torn prefix: every line of
+        // the published file is either the magic or a full 38-field row.
+        let text = std::fs::read_to_string(&path).unwrap();
+        for line in text.lines().skip(1) {
+            assert_eq!(line.split(',').count(), 38, "torn row published: {line}");
+        }
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&torn).ok();
     }
 }

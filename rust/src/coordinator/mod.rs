@@ -15,13 +15,18 @@ pub mod query;
 pub mod sweep;
 pub mod tables;
 
-pub use cache::{workload_fingerprint, CacheKey, CacheStats, MeasurementCache, ENGINE_VERSION};
+pub use cache::{
+    workload_fingerprint, CacheKey, CacheStats, Fidelity, MeasurementCache, ENGINE_VERSION,
+};
 pub use pareto::{
     accuracy_pareto_front, accuracy_pareto_table, accuracy_pareto_table_from,
     accuracy_pareto_table_with, pareto_front, pareto_table, pareto_table_from, pareto_table_with,
 };
 pub use query::{points, QueryEngine, QueryPlan, QueryPoint};
-pub use sweep::{run_one, run_one_at, run_parallel, run_workload, sweep, sweep_all, Measurement};
+pub use sweep::{
+    max_jobs, run_one, run_one_at, run_one_functional_at, run_parallel, run_workload,
+    run_workload_functional, set_max_jobs, sweep, sweep_all, Measurement,
+};
 pub use tables::{
     fig3, fig4, fig5, fig5_with, fig6, fig6_with, fig7, fig7_with, fig8, fig8_with,
     measurements_table, table3, table3_with, table45, table45_with, table6, table6_with,

@@ -15,17 +15,23 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
-use super::cache::{CacheKey, CacheStats, MeasurementCache, CACHE_FILE};
-use super::sweep::{run_one_at, run_parallel, run_workload, Measurement};
+use super::cache::{CacheKey, CacheStats, Fidelity, MeasurementCache, CACHE_FILE};
+use super::sweep::{
+    run_one_at, run_one_functional_at, run_parallel, run_workload, run_workload_functional,
+    Measurement,
+};
 use crate::config::ClusterConfig;
 use crate::kernels::{Benchmark, Variant, Workload};
 
 /// One point of the design space to resolve: a (config, bench, variant)
-/// triple at a team occupancy. Occupancy is part of the point (and the
-/// cache address) since the fig 5/6 emitters went through the engine —
-/// `workers == cfg.cores` for every full-cluster table.
+/// triple at a team occupancy and an execution [`Fidelity`]. Occupancy is
+/// part of the point (and the cache address) since the fig 5/6 emitters
+/// went through the engine — `workers == cfg.cores` for every full-cluster
+/// table. Fidelity selects the backend tier: accuracy-only plans run on
+/// the functional backend and never touch the event engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct QueryPoint {
     pub cfg: ClusterConfig,
@@ -33,18 +39,31 @@ pub struct QueryPoint {
     pub variant: Variant,
     /// Active team size (1..=cfg.cores).
     pub workers: usize,
+    /// Backend tier the point resolves on (cycle-accurate by default).
+    pub fidelity: Fidelity,
 }
 
 impl QueryPoint {
-    /// Full-occupancy point for (`cfg`, `bench`, `variant`).
+    /// Full-occupancy cycle-accurate point for (`cfg`, `bench`, `variant`).
     pub fn new(cfg: &ClusterConfig, bench: Benchmark, variant: Variant) -> Self {
         Self::at(cfg, bench, variant, cfg.cores)
     }
 
-    /// Point under a `workers`-core team (fig 5/6 occupancy sweeps).
+    /// Cycle-accurate point under a `workers`-core team (fig 5/6 sweeps).
     pub fn at(cfg: &ClusterConfig, bench: Benchmark, variant: Variant, workers: usize) -> Self {
         assert!(workers >= 1 && workers <= cfg.cores, "occupancy out of range");
-        QueryPoint { cfg: *cfg, bench, variant, workers }
+        QueryPoint { cfg: *cfg, bench, variant, workers, fidelity: Fidelity::CycleAccurate }
+    }
+
+    /// Full-occupancy accuracy-only point (functional backend).
+    pub fn functional(cfg: &ClusterConfig, bench: Benchmark, variant: Variant) -> Self {
+        Self::new(cfg, bench, variant).with_fidelity(Fidelity::Functional)
+    }
+
+    /// The same point at a different fidelity.
+    pub fn with_fidelity(mut self, fidelity: Fidelity) -> Self {
+        self.fidelity = fidelity;
+        self
     }
 }
 
@@ -117,15 +136,21 @@ impl QueryPlan {
 pub struct QueryEngine {
     cache: MeasurementCache,
     /// Workload fingerprints already computed this process, keyed by the
-    /// workload identity (config × bench × variant — occupancy does not
-    /// change the program or its data, so all occupancies share one memo
-    /// entry). Builders are deterministic and the builder code cannot
-    /// change within a process, so a memoized fingerprint lets warm plans
-    /// form cache keys without rebuilding (and re-hashing) the workload at
-    /// all. Deliberately *not* persisted: a fresh process must rebuild
-    /// workloads once to prove the persisted entries still match the
-    /// current code.
+    /// workload identity (config × bench × variant — occupancy and
+    /// fidelity do not change the program or its data, so all occupancies
+    /// and both fidelities share one memo entry). Builders are
+    /// deterministic and the builder code cannot change within a process,
+    /// so a memoized fingerprint lets warm plans form cache keys without
+    /// rebuilding (and re-hashing) the workload at all. Deliberately *not*
+    /// persisted: a fresh process must rebuild workloads once to prove the
+    /// persisted entries still match the current code.
     fingerprints: Mutex<HashMap<(ClusterConfig, Benchmark, Variant), u64>>,
+    /// Cycle-accurate simulator executions this engine has issued (cache
+    /// misses at [`Fidelity::CycleAccurate`]). The bench gates assert a
+    /// warm tune issues zero of these for accuracy-rejected rungs.
+    sim_runs: AtomicU64,
+    /// Functional-backend executions this engine has issued.
+    functional_runs: AtomicU64,
 }
 
 impl QueryEngine {
@@ -147,6 +172,16 @@ impl QueryEngine {
     /// Cache statistics snapshot.
     pub fn stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// Cycle-accurate simulator executions issued so far.
+    pub fn sim_runs(&self) -> u64 {
+        self.sim_runs.load(Ordering::Relaxed)
+    }
+
+    /// Functional-backend executions issued so far.
+    pub fn functional_runs(&self) -> u64 {
+        self.functional_runs.load(Ordering::Relaxed)
     }
 
     /// The process-wide engine the CLI and the public table emitters share.
@@ -177,19 +212,22 @@ impl QueryEngine {
         QueryPlan { unique, order }
     }
 
+    /// Content address of a point given its workload fingerprint.
+    fn key_for(&self, p: &QueryPoint, fp: u64) -> CacheKey {
+        CacheKey::with_fingerprint(&p.cfg, p.bench, p.variant, p.workers, p.fidelity, fp)
+    }
+
     /// Resolve one unique point against the fingerprint memo and the cache.
     fn plan_point(&self, p: &QueryPoint) -> PlannedPoint {
         let memo_key = (p.cfg, p.bench, p.variant);
         let memoized = self.fingerprints.lock().unwrap().get(&memo_key).copied();
         let (key, workload) = match memoized {
-            Some(fp) => {
-                (CacheKey::with_fingerprint(&p.cfg, p.bench, p.variant, p.workers, fp), None)
-            }
+            Some(fp) => (self.key_for(p, fp), None),
             None => {
                 let w = p.bench.build(p.variant, &p.cfg);
-                let key = CacheKey::at(&p.cfg, p.bench, p.variant, p.workers, &w);
-                self.fingerprints.lock().unwrap().insert(memo_key, key.workload);
-                (key, Some(w))
+                let fp = super::cache::workload_fingerprint(&w);
+                self.fingerprints.lock().unwrap().insert(memo_key, fp);
+                (self.key_for(p, fp), Some(w))
             }
         };
         let resolved = self.cache.lookup(&key);
@@ -211,9 +249,23 @@ impl QueryEngine {
             // workload; its worker rebuilds it (the build is deterministic).
             let jobs: Vec<(QueryPoint, Option<&Workload>)> =
                 miss_idx.iter().map(|&i| (unique[i].point, unique[i].workload.as_ref())).collect();
-            let results = run_parallel(&jobs, |(p, w)| match w {
-                Some(w) => run_workload(&p.cfg, p.bench, p.variant, p.workers, w),
-                None => run_one_at(&p.cfg, p.bench, p.variant, p.workers),
+            let results = run_parallel(&jobs, |(p, w)| match p.fidelity {
+                Fidelity::CycleAccurate => {
+                    self.sim_runs.fetch_add(1, Ordering::Relaxed);
+                    match w {
+                        Some(w) => run_workload(&p.cfg, p.bench, p.variant, p.workers, w),
+                        None => run_one_at(&p.cfg, p.bench, p.variant, p.workers),
+                    }
+                }
+                Fidelity::Functional => {
+                    self.functional_runs.fetch_add(1, Ordering::Relaxed);
+                    match w {
+                        Some(w) => {
+                            run_workload_functional(&p.cfg, p.bench, p.variant, p.workers, w)
+                        }
+                        None => run_one_functional_at(&p.cfg, p.bench, p.variant, p.workers),
+                    }
+                }
             });
             drop(jobs);
             for (&i, m) in miss_idx.iter().zip(results) {
@@ -356,6 +408,43 @@ mod tests {
         let warm = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 4);
         assert_eq!(engine.stats().misses, st.misses, "occupancy re-query must not simulate");
         assert_eq!(warm.cycles, half.cycles);
+    }
+
+    /// Accuracy-only plans resolve entirely on the functional backend —
+    /// zero event-engine runs — and carry the *same* error statistics as a
+    /// cycle-accurate resolution of the same point (architectural parity),
+    /// under a distinct cache address.
+    #[test]
+    fn functional_fidelity_never_touches_the_event_engine() {
+        let engine = QueryEngine::new();
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let pts: Vec<QueryPoint> = [Benchmark::Fir, Benchmark::Matmul]
+            .into_iter()
+            .map(|b| QueryPoint::functional(&cfg, b, Variant::VEC))
+            .collect();
+        let ms = engine.query(&pts);
+        assert_eq!(engine.sim_runs(), 0, "functional plan must not simulate");
+        assert_eq!(engine.functional_runs(), 2);
+        for m in &ms {
+            assert!(m.verified, "{}: functional run must verify", m.bench.name());
+            assert!(m.err.rel.is_finite());
+            assert_eq!(m.cycles, 0, "functional measurements carry no timing");
+            assert_eq!(m.metrics.perf_gflops, 0.0);
+        }
+        // A cycle-accurate resolution is a separate entry with identical
+        // accuracy but real timing.
+        let ca = engine.one(&cfg, Benchmark::Fir, Variant::VEC);
+        assert_eq!(engine.sim_runs(), 1);
+        assert_eq!(engine.stats().entries, 3);
+        assert_eq!(ca.err.rel.to_bits(), ms[0].err.rel.to_bits(), "accuracy must be tier-equal");
+        assert_eq!(ca.err.max_abs.to_bits(), ms[0].err.max_abs.to_bits());
+        assert!(ca.cycles > 0);
+        // Warm functional re-query hits.
+        let before = engine.stats();
+        let warm = engine.query(&pts);
+        assert_eq!(engine.stats().misses, before.misses);
+        assert_eq!(warm[0].err.rel.to_bits(), ms[0].err.rel.to_bits());
+        assert_eq!(engine.functional_runs(), 2, "warm functional re-query must not re-run");
     }
 
     #[test]

@@ -92,6 +92,53 @@ pub fn run_workload(
     }
 }
 
+/// Accuracy-only resolution of a point on the functional backend: the
+/// outputs (and through them `verified` and `err`) are bit-identical to a
+/// cycle-accurate run — the three-way differential wall enforces that —
+/// but no timing exists, so every timing-derived field is zero. The only
+/// populated counter is the retired-instruction count.
+pub fn run_workload_functional(
+    cfg: &ClusterConfig,
+    bench: Benchmark,
+    variant: Variant,
+    workers: usize,
+    w: &Workload,
+) -> Measurement {
+    let (instrs, out) = w.run_functional(cfg, workers);
+    let verified = w.verify(&out).is_ok();
+    let err = error_stats(&out, &w.reference);
+    Measurement {
+        cfg: *cfg,
+        bench,
+        variant,
+        workers,
+        metrics: Metrics {
+            perf_gflops: 0.0,
+            energy_eff: 0.0,
+            area_eff: 0.0,
+            flops_per_cycle: 0.0,
+        },
+        cycles: 0,
+        core_cycles: 0,
+        agg: CoreCounters { instrs, ..Default::default() },
+        fp_intensity: 0.0,
+        mem_intensity: 0.0,
+        verified,
+        err,
+    }
+}
+
+/// [`run_workload_functional`] on a freshly built workload.
+pub fn run_one_functional_at(
+    cfg: &ClusterConfig,
+    bench: Benchmark,
+    variant: Variant,
+    workers: usize,
+) -> Measurement {
+    let w = bench.build(variant, cfg);
+    run_workload_functional(cfg, bench, variant, workers, &w)
+}
+
 /// Run the full design space (18 configs × 8 benchmarks × 2 variants),
 /// parallelized over std scoped threads. Results are in deterministic
 /// (config, bench, variant) order.
@@ -120,12 +167,33 @@ pub fn sweep(
     run_parallel(&jobs, |&(cfg, b, v)| run_one(&cfg, b, v))
 }
 
+/// Worker-thread cap for [`run_parallel`] (the CLI's `--jobs N`). Zero
+/// means "unset": fall back to the built-in ceiling of 16.
+static MAX_JOBS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Cap the worker threads every [`run_parallel`] call may spawn. The CLI
+/// sets this once at startup from `--jobs N`; tests may set it freely (the
+/// cap changes scheduling, never results — slot order is deterministic).
+pub fn set_max_jobs(n: usize) {
+    assert!(n >= 1, "--jobs must be >= 1");
+    MAX_JOBS.store(n, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Current worker-thread cap (16 unless [`set_max_jobs`] lowered/raised it).
+pub fn max_jobs() -> usize {
+    match MAX_JOBS.load(std::sync::atomic::Ordering::Relaxed) {
+        0 => 16,
+        n => n,
+    }
+}
+
 /// Lock-free parallel job driver shared by the raw sweep and the query
 /// planner (both its planning pass and its miss execution). Workers pull
 /// job indices from an atomic counter (dynamic load balancing) and buffer
 /// `(slot, result)` pairs locally; the coordinator writes each pair into
 /// its pre-sized slot after joining, so results are in `jobs` order
-/// regardless of scheduling.
+/// regardless of scheduling. Thread count is `available_parallelism`
+/// capped by [`max_jobs`] (the CLI `--jobs` knob).
 pub fn run_parallel<J, R, F>(jobs: &[J], run: F) -> Vec<R>
 where
     J: Sync,
@@ -136,7 +204,7 @@ where
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
-        .min(16)
+        .min(max_jobs())
         .min(jobs.len().max(1));
     let mut results: Vec<Option<R>> = Vec::new();
     results.resize_with(jobs.len(), || None);
@@ -168,6 +236,41 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// A jobs cap of 1 funnels every job through a single worker thread;
+    /// results and order are unchanged (the cap is a scheduling knob only).
+    #[test]
+    fn jobs_cap_serializes_without_changing_results() {
+        let jobs: Vec<usize> = (0..24).collect();
+        let baseline = run_parallel(&jobs, |&i| i * 3);
+        set_max_jobs(1);
+        let ids = std::sync::Mutex::new(std::collections::HashSet::new());
+        let capped = run_parallel(&jobs, |&i| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            i * 3
+        });
+        set_max_jobs(16); // restore the default ceiling for other tests
+        assert_eq!(capped, baseline);
+        assert_eq!(ids.lock().unwrap().len(), 1, "--jobs 1 must use one worker");
+        assert_eq!(capped, (0..24).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    /// Functional measurements carry real accuracy and zero timing.
+    #[test]
+    fn functional_measurement_shape() {
+        let cfg = ClusterConfig::new(8, 2, 0);
+        let m = run_one_functional_at(&cfg, Benchmark::Fir, Variant::Scalar, cfg.cores);
+        assert!(m.verified);
+        assert!(m.err.rel.is_finite() && m.err.rel < 1e-4);
+        assert_eq!((m.cycles, m.core_cycles), (0, 0));
+        assert!(m.agg.instrs > 0, "retired-instruction count must be populated");
+        assert_eq!(m.agg.flops, 0);
+        // Accuracy is tier-independent: the cycle-accurate run agrees bit
+        // for bit.
+        let ca = run_one(&cfg, Benchmark::Fir, Variant::Scalar);
+        assert_eq!(ca.err.rel.to_bits(), m.err.rel.to_bits());
+        assert_eq!(ca.verified, m.verified);
+    }
 
     #[test]
     fn sweep_slice_is_ordered_and_verified() {

@@ -112,6 +112,15 @@ impl DecodedInsn {
 pub struct DecodedProgram {
     /// Decoded instruction stream (same indices as `Program::insns`).
     pub insns: Vec<DecodedInsn>,
+    /// Straight-line fast-path table: `local_run_len[pc]` is the number of
+    /// consecutive instructions starting at `pc` that carry [`flag::LOCAL`]
+    /// — i.e. the longest prefix that touches no order-sensitive shared
+    /// resource. `0` means `pc` itself is a contention/synchronization
+    /// point. Shared by the event engine's batcher (a non-zero entry is
+    /// exactly the "may keep the issue slot" predicate) and the functional
+    /// interpreter (a non-zero entry selects the core-local dispatch tier
+    /// that never consults memory, the FPUs or the event unit).
+    pub local_run_len: Vec<u32>,
 }
 
 impl DecodedProgram {
@@ -158,7 +167,7 @@ impl DecodedProgram {
                 DecodedInsn { class, reads, nreads, flags, latency, insn: *insn }
             })
             .collect();
-        DecodedProgram { insns }
+        DecodedProgram { local_run_len: run_lengths(&insns), insns }
     }
 
     /// Static instruction count.
@@ -191,6 +200,20 @@ impl DecodedProgram {
         }
         h.0
     }
+}
+
+/// Backward scan computing the straight-line fast-path table: the run
+/// length at `pc` is `0` for non-[`flag::LOCAL`] instructions and
+/// `1 + run[pc + 1]` otherwise (the final instruction of a program is
+/// always `End`, which is local, so the recurrence is well-founded).
+fn run_lengths(insns: &[DecodedInsn]) -> Vec<u32> {
+    let mut run = vec![0u32; insns.len()];
+    let mut next = 0u32;
+    for (pc, d) in insns.iter().enumerate().rev() {
+        next = if d.flags & flag::LOCAL != 0 { next + 1 } else { 0 };
+        run[pc] = next;
+    }
+    run
 }
 
 /// 64-bit FNV-1a accumulator used for the program fingerprint. Implements
@@ -357,8 +380,72 @@ mod tests {
         // A one-immediate change is a different program.
         assert_ne!(a, DecodedProgram::decode(&build(8)).fingerprint());
         // The empty stream hashes to the FNV-1a offset basis.
-        let empty = DecodedProgram { insns: Vec::new() };
+        let empty = DecodedProgram { insns: Vec::new(), local_run_len: Vec::new() };
         assert_eq!(empty.fingerprint(), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn local_run_lengths_stop_at_contention_points() {
+        let mut b = ProgramBuilder::new("runs");
+        b.li(1, 7); // 0: local
+        b.addi(2, 1, 1); // 1: local
+        b.lw(3, 1, 0); // 2: Load — contention point
+        b.addi(4, 4, 1); // 3: local
+        b.barrier(); // 4: contention point
+        b.end(); // 5: local (End)
+        let d = DecodedProgram::decode(&b.build());
+        assert_eq!(d.local_run_len, vec![2, 1, 0, 1, 0, 1]);
+        // The table is exactly the LOCAL flag in run-length form.
+        for (pc, i) in d.insns.iter().enumerate() {
+            assert_eq!(d.local_run_len[pc] != 0, i.has(flag::LOCAL), "pc {pc}");
+        }
+    }
+
+    /// Fingerprint satellite: the hash is order-sensitive — two programs
+    /// holding the same multiset of instructions in different orders must
+    /// not collide.
+    #[test]
+    fn fingerprint_is_order_sensitive() {
+        let build = |swapped: bool| {
+            let mut b = ProgramBuilder::new("ord");
+            if swapped {
+                b.addi(2, 1, 3);
+                b.li(1, 7);
+            } else {
+                b.li(1, 7);
+                b.addi(2, 1, 3);
+            }
+            b.end();
+            b.build()
+        };
+        assert_ne!(
+            DecodedProgram::decode(&build(false)).fingerprint(),
+            DecodedProgram::decode(&build(true)).fingerprint(),
+            "reordered instruction streams must fingerprint differently"
+        );
+    }
+
+    /// Fingerprint satellite: repeated predecode runs of one program —
+    /// including decodes of independently rebuilt but identical programs —
+    /// always reproduce the same hash.
+    #[test]
+    fn fingerprint_is_stable_across_predecode_runs() {
+        let build = || {
+            let mut b = ProgramBuilder::new("stab");
+            b.li(1, 3);
+            b.hwloop(1);
+            b.fmac(FpMode::VecF16, 5, 4, 4);
+            b.hwloop_end();
+            b.barrier();
+            b.end();
+            b.build()
+        };
+        let p = build();
+        let first = DecodedProgram::decode(&p).fingerprint();
+        for _ in 0..10 {
+            assert_eq!(DecodedProgram::decode(&p).fingerprint(), first);
+            assert_eq!(DecodedProgram::decode(&build()).fingerprint(), first);
+        }
     }
 
     #[test]

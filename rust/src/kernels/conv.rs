@@ -11,18 +11,15 @@
 //!   misaligned pairs are built with `pv.shuffle`/`pv.pack`; expanding dot
 //!   products accumulate two neighbouring outputs in binary32.
 
-use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
+use super::{
+    mirror, pack_words, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload,
+};
 use crate::cluster::mem::L2_BASE;
 use crate::config::ClusterConfig;
 use crate::isa::ProgramBuilder;
 use crate::runtime::{parallel_for, team, LoopRegs, Schedule};
 use crate::testutil::Rng;
-use crate::transfp::{cast, scalar, simd, FpMode, FpSpec};
-
-/// Lane-0 widening FMA mirror (`fmac.s.h`): acc32 += a.lane0 · b.lane0.
-fn scalar_fma_widen(spec: &FpSpec, a: u32, b: u32, acc: u32) -> u32 {
-    scalar::fma_widen(spec, a as u16, b as u16, acc)
-}
+use crate::transfp::{cast, simd, FpMode};
 
 /// Build the CONV workload: 3×3 kernel over a `w`×`h` image (valid region).
 pub fn build(variant: Variant, cfg: &ClusterConfig, w: usize, h: usize) -> Workload {
@@ -77,13 +74,10 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, w: usize, h: usize) -> Workloa
     let mut expected = vec![0.0f64; ow * oh];
     for oy in 0..oh {
         for ox in 0..ow {
-            let mut acc = 0u32;
-            for r in 0..3 {
-                for c in 0..3 {
-                    acc = elem.fma(kq[r * 3 + c], imq[(oy + r) * w + ox + c], acc);
-                }
-            }
-            expected[oy * ow + ox] = elem.to_f64(acc);
+            let window = (0..3)
+                .flat_map(|r| (0..3).map(move |c| (r, c)))
+                .map(|(r, c)| (kq[r * 3 + c], imq[(oy + r) * w + ox + c]));
+            expected[oy * ow + ox] = elem.to_f64(mirror::dot(elem, window));
         }
     }
 
@@ -179,9 +173,9 @@ fn build_vector(variant: Variant, cfg: &ClusterConfig, w: usize, h: usize) -> Wo
                 acc0 = simd::vdotp_widen(spec, k01, w0, acc0);
                 // Third column element: widening multi-format FMA on lane 0
                 // (c2·p2) — not a dot product with a wasted zero lane.
-                acc0 = scalar_fma_widen(spec, k2x, w1, acc0);
+                acc0 = mirror::fma_widen(spec, k2x, w1, acc0);
                 acc1 = simd::vdotp_widen(spec, k01, mid, acc1);
-                acc1 = scalar_fma_widen(spec, k2x, hi3, acc1);
+                acc1 = mirror::fma_widen(spec, k2x, hi3, acc1);
             }
             let cpk = cast::cpka(spec, acc0, acc1);
             let (lo, hi) = simd::unpack2(cpk);
@@ -280,20 +274,14 @@ pub fn build_tiled(cfg: &ClusterConfig, w: usize, h: usize, tiles: usize) -> Wor
 
     let (img, k) = gen_inputs(w, h);
     // Host mirror: identical (r, c) FMA order to the untiled scalar kernel.
+    let f32e = SElem::of(Variant::Scalar);
     let mut expected = vec![0.0f64; ow * oh];
     for oy in 0..oh {
         for ox in 0..ow {
-            let mut acc = 0u32;
-            for r in 0..3 {
-                for c in 0..3 {
-                    acc = scalar::fma32(
-                        k[r * 3 + c].to_bits(),
-                        img[(oy + r) * w + ox + c].to_bits(),
-                        acc,
-                    );
-                }
-            }
-            expected[oy * ow + ox] = f32::from_bits(acc) as f64;
+            let window = (0..3)
+                .flat_map(|r| (0..3).map(move |c| (r, c)))
+                .map(|(r, c)| (k[r * 3 + c].to_bits(), img[(oy + r) * w + ox + c].to_bits()));
+            expected[oy * ow + ox] = f32::from_bits(mirror::dot(f32e, window)) as f64;
         }
     }
 

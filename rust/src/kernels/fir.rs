@@ -10,7 +10,9 @@
 //!   two expanding dot products accumulate in binary32; `vfcpka` packs the
 //!   result pair.
 
-use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
+use super::{
+    mirror, pack_words, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload,
+};
 use crate::config::ClusterConfig;
 use crate::isa::ProgramBuilder;
 use crate::runtime::{parallel_for, LoopRegs, Schedule};
@@ -62,13 +64,7 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize, taps: usize) -> Work
     let xs = elem.quantize(&x);
     let hs = elem.quantize(&h);
     let expected: Vec<f64> = (0..n)
-        .map(|i| {
-            let mut acc = 0u32;
-            for t in 0..taps {
-                acc = elem.fma(hs[t], xs[i + t], acc);
-            }
-            elem.to_f64(acc)
-        })
+        .map(|i| elem.to_f64(mirror::dot(elem, (0..taps).map(|t| (hs[t], xs[i + t])))))
         .collect();
 
     let mut p = ProgramBuilder::new(format!("fir-{}", elem.suffix()));

@@ -12,7 +12,7 @@
 //! * **Vector**: dimensions packed 2×16: `vfsub` + expanding `vfdotpex`
 //!   per (dim-pair × centroid) with binary32 distance accumulators.
 
-use super::{quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
+use super::{mirror, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
 use crate::isa::{regs, Operand, ProgramBuilder};
 use crate::runtime::{parallel_for, LoopRegs, Schedule};
@@ -99,11 +99,7 @@ fn assign_scalar(elem: SElem, pts: &[u32], cent: &[u32], n: usize, d: usize, k: 
             let mut best = 0usize;
             let mut bestv = elem.q(f32::INFINITY);
             for c in 0..k {
-                let mut acc = 0u32;
-                for j in 0..d {
-                    let diff = elem.sub(pts[i * d + j], cent[c * d + j]);
-                    acc = elem.fma(diff, diff, acc);
-                }
+                let acc = mirror::dist2(elem, &pts[i * d..(i + 1) * d], &cent[c * d..(c + 1) * d]);
                 if elem.lt(acc, bestv) {
                     bestv = acc;
                     best = c;

@@ -13,7 +13,9 @@
 //!   binary32, and **cast-and-pack** (`vfcpka`) assembling the packed
 //!   16-bit result pair.
 
-use super::{pack_words, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
+use super::{
+    mirror, pack_words, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload,
+};
 use crate::cluster::mem::L2_BASE;
 use crate::config::ClusterConfig;
 use crate::isa::{regs, ProgramBuilder};
@@ -70,10 +72,7 @@ fn build_scalar(elem: SElem, cfg: &ClusterConfig, n: usize) -> Workload {
     let mut expected = vec![0.0f64; n * n];
     for i in 0..n {
         for j in 0..n {
-            let mut acc = 0u32;
-            for k in 0..n {
-                acc = elem.fma(aq[i * n + k], bq[k * n + j], acc);
-            }
+            let acc = mirror::dot(elem, (0..n).map(|k| (aq[i * n + k], bq[k * n + j])));
             expected[i * n + j] = elem.to_f64(acc);
         }
     }
@@ -278,13 +277,14 @@ pub fn build_tiled(cfg: &ClusterConfig, n: usize, tiles: usize) -> Workload {
     let (a, b) = gen_inputs(n);
     // Host mirror: identical arithmetic to the untiled scalar kernel
     // (k ascending, f32 FMA) — the tiled schedule must be bit-identical.
+    let f32e = SElem::of(Variant::Scalar);
     let mut expected = vec![0.0f64; n * n];
     for i in 0..n {
         for j in 0..n {
-            let mut acc = 0u32;
-            for k in 0..n {
-                acc = scalar::fma32(a[i * n + k].to_bits(), b[k * n + j].to_bits(), acc);
-            }
+            let acc = mirror::dot(
+                f32e,
+                (0..n).map(|k| (a[i * n + k].to_bits(), b[k * n + j].to_bits())),
+            );
             expected[i * n + j] = f32::from_bits(acc) as f64;
         }
     }

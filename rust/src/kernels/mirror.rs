@@ -1,0 +1,90 @@
+//! Shared host-mirror helpers on raw `u32` register cells.
+//!
+//! Every kernel carries a host mirror that reproduces the datapath's
+//! arithmetic bit-for-bit to generate its golden (`Workload::expected`).
+//! The element-format primitives live on [`SElem`]; this module holds the
+//! *reduction shapes* those mirrors kept re-implementing per kernel since
+//! the precision ladder landed: ordered FMA dot products (FIR taps, MATMUL
+//! rows, CONV windows, SVM feature dots) and squared Euclidean distances
+//! (KMEANS assignment), plus the lane-0 widening FMA the packed CONV
+//! mirror uses. Accumulation order is the kernels' order — first pair
+//! first — because a mirror is only correct if it rounds exactly like the
+//! emitted instruction stream.
+
+use super::SElem;
+use crate::transfp::{scalar, FpSpec};
+
+/// Ordered element-format dot product: `acc = fma(a, b, acc)` over the
+/// pairs, starting from +0.0 (the all-zero cell in every format).
+pub fn dot(elem: SElem, pairs: impl IntoIterator<Item = (u32, u32)>) -> u32 {
+    pairs.into_iter().fold(0u32, |acc, (a, b)| elem.fma(a, b, acc))
+}
+
+/// Ordered squared Euclidean distance between two cell slices:
+/// `acc = fma(d, d, acc)` with `d = a[i] - b[i]`, in index order.
+pub fn dist2(elem: SElem, a: &[u32], b: &[u32]) -> u32 {
+    a.iter().zip(b).fold(0u32, |acc, (&x, &y)| {
+        let d = elem.sub(x, y);
+        elem.fma(d, d, acc)
+    })
+}
+
+/// Lane-0 widening FMA mirror (`fmac.s.h`): f32 `acc += a.lane0 · b.lane0`
+/// with the 16-bit operands widened exactly.
+pub fn fma_widen(spec: &FpSpec, a: u32, b: u32, acc: u32) -> u32 {
+    scalar::fma_widen(spec, a as u16, b as u16, acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Variant;
+    use crate::transfp::spec::F16;
+
+    #[test]
+    fn dot_matches_manual_fma_chain() {
+        for v in [Variant::Scalar, Variant::SCALAR_F16, Variant::SCALAR_BF16] {
+            let e = SElem::of(v);
+            let a: Vec<u32> = [1.5f32, -2.0, 0.25, 3.0].iter().map(|&x| e.q(x)).collect();
+            let b: Vec<u32> = [2.0f32, 0.5, -4.0, 1.0].iter().map(|&x| e.q(x)).collect();
+            let mut acc = 0u32;
+            for (x, y) in a.iter().zip(&b) {
+                acc = e.fma(*x, *y, acc);
+            }
+            let got = dot(e, a.iter().copied().zip(b.iter().copied()));
+            assert_eq!(got, acc, "{v:?}: dot must fold in kernel order");
+            // 1.5·2 + (−2)·0.5 + 0.25·(−4) + 3·1 = 4
+            assert_eq!(e.to_f64(got), 4.0);
+        }
+    }
+
+    #[test]
+    fn dot_is_order_sensitive_like_the_datapath() {
+        // In binary16 the ulp at 2048 is 2, so small terms round differently
+        // depending on whether they land before or after the big one — the
+        // helper must preserve the kernels' accumulation order.
+        let e = SElem::of(Variant::SCALAR_F16);
+        let one = e.q(1.0);
+        let fwd = dot(e, vec![(e.q(2048.0), one), (e.q(3.0), one), (e.q(3.0), one)]);
+        let rev = dot(e, vec![(e.q(3.0), one), (e.q(3.0), one), (e.q(2048.0), one)]);
+        assert_eq!(e.to_f64(fwd), 2056.0, "2051 and 2055 round up at ties-to-even");
+        assert_eq!(e.to_f64(rev), 2054.0, "6 + 2048 is exact");
+    }
+
+    #[test]
+    fn dist2_matches_manual_expansion() {
+        let e = SElem::of(Variant::Scalar);
+        let a: Vec<u32> = [1.0f32, 2.0, 3.0].iter().map(|&x| e.q(x)).collect();
+        let b: Vec<u32> = [0.0f32, 4.0, 1.0].iter().map(|&x| e.q(x)).collect();
+        // 1 + 4 + 4 = 9
+        assert_eq!(e.to_f64(dist2(e, &a, &b)), 9.0);
+        assert_eq!(dist2(e, &[], &[]), 0);
+    }
+
+    #[test]
+    fn fma_widen_accumulates_in_f32() {
+        let one = F16.from_f64(1.0) as u32;
+        let acc = fma_widen(&F16, one, one, 2.5f32.to_bits());
+        assert_eq!(f32::from_bits(acc), 3.5);
+    }
+}

@@ -18,11 +18,13 @@ pub mod fir;
 pub mod iir;
 pub mod kmeans;
 pub mod matmul;
+pub mod mirror;
 pub mod svm;
 
+use crate::cluster::backend::{BackendRun, EventBackend, ExecBackend, ReferenceBackend};
 use crate::cluster::counters::RunStats;
 use crate::cluster::mem::{Memory, TCDM_BASE};
-use crate::cluster::{Cluster, Engine};
+use crate::cluster::{Cluster, Engine, FunctionalBackend};
 use crate::config::ClusterConfig;
 use crate::isa::{Program, ProgramBuilder, Reg};
 use crate::transfp::{cast, scalar, simd, CmpPred, FpMode, FpSpec, BF16, F16};
@@ -193,14 +195,41 @@ impl Workload {
 
     /// Run on the selected issue engine (the differential harness compares
     /// [`Engine::Event`] against [`Engine::Reference`] cycle-for-cycle).
+    /// Routed through the [`ExecBackend`] tier like every golden run.
     pub fn run_with(
         &self,
         cfg: &ClusterConfig,
         workers: usize,
         engine: Engine,
     ) -> (RunStats, Vec<f64>) {
-        let mut cl = Cluster::new(*cfg, self.program.clone());
-        self.run_in_with(&mut cl, workers, engine)
+        let backend: &dyn ExecBackend = match engine {
+            Engine::Event => &EventBackend,
+            Engine::Reference => &ReferenceBackend,
+        };
+        let (run, out) = self.run_on_backend(cfg, workers, backend);
+        (run.stats.expect("cycle-accurate backend returns stats"), out)
+    }
+
+    /// Run on any execution backend: stage, execute, read the output
+    /// window. This is the single seam every golden/measurement run goes
+    /// through — the backend decides whether time is modelled at all.
+    pub fn run_on_backend(
+        &self,
+        cfg: &ClusterConfig,
+        workers: usize,
+        backend: &dyn ExecBackend,
+    ) -> (BackendRun, Vec<f64>) {
+        let run = backend.run_program(cfg, &self.program, workers, &mut |mem| self.stage_into(mem));
+        let out = self.read_output(&run.mem);
+        (run, out)
+    }
+
+    /// Architectural-only run on the [`FunctionalBackend`]: returns the
+    /// retired-instruction count and the outputs. This is what the tuner's
+    /// accuracy probes and the accuracy-only query fidelity execute.
+    pub fn run_functional(&self, cfg: &ClusterConfig, workers: usize) -> (u64, Vec<f64>) {
+        let (run, out) = self.run_on_backend(cfg, workers, &FunctionalBackend);
+        (run.instrs, out)
     }
 
     /// Run inside an existing cluster built from this workload's program,

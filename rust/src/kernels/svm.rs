@@ -12,7 +12,7 @@
 //! * **Vector**: dimension pairs with the expanding dot product; the α
 //!   weighting stays in binary32 (multi-format accumulation).
 
-use super::{quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
+use super::{mirror, quantize16, spec_of, Alloc, OutFmt, SElem, Staged, Variant, Workload};
 use crate::config::ClusterConfig;
 use crate::isa::{regs, ProgramBuilder};
 use crate::runtime::{parallel_for, LoopRegs, Schedule};
@@ -170,10 +170,7 @@ fn score_mirror(
         let lo = (w * chunk).min(nsv);
         let hi = ((w + 1) * chunk).min(nsv);
         for i in lo..hi {
-            let mut dot = 0u32;
-            for j in 0..d {
-                dot = elem.fma(svq[i * d + j], xq[j], dot);
-            }
+            let dot = mirror::dot(elem, (0..d).map(|j| (svq[i * d + j], xq[j])));
             *part = elem.fma(aq[i], dot, *part);
         }
     }

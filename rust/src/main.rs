@@ -10,6 +10,7 @@
 
 use std::process::ExitCode;
 
+use transpfp::cluster::BackendKind;
 use transpfp::config::{ClusterConfig, Corner};
 use transpfp::coordinator::{self, QueryEngine};
 use transpfp::kernels::{Benchmark, Variant};
@@ -31,7 +32,10 @@ COMMANDS:
                           vector (vector-f16), vector-bf16; with
                           --tiles <t>, run the DMA double-buffered tiled
                           build (MATMUL/CONV scalar, dataset in L2 beyond
-                          the TCDM, streamed through ping-pong buffers)
+                          the TCDM, streamed through ping-pong buffers);
+                          with --backend <event|reference|functional>, run
+                          uncached on the chosen execution tier (the
+                          functional tier verifies numerics with no timing)
   query <cfg|all> <bench|all> <variant|all>
                           resolve a batch of design-space points through the
                           measurement cache (plan stats on stderr); `all`
@@ -39,7 +43,11 @@ COMMANDS:
   tune [cfg|all]          accuracy-aware precision autotuning: select the
                           cheapest admissible ladder rung per benchmark
                           under --budget (relative L2 error vs the f64
-                          reference; default 1e-2); default config 8c8f1p
+                          reference; default 1e-2); default config 8c8f1p.
+                          --probe functional (default) measures every
+                          rung's accuracy on the functional backend and
+                          simulates only admissible rungs; --probe cycle
+                          restores all-cycle-accurate probing
   pareto                  Pareto frontier of the full design space over
                           (Gflop/s, Gflop/s/W, Gflop/s/mm^2); with --acc,
                           the accuracy-extended frontier over
@@ -67,11 +75,17 @@ FLAGS:
   --budget <rel-err>      error budget for `tune` (default 1e-2)
   --tiles <t>             run the DMA double-buffered tiled kernel with t
                           tiles (`run` with MATMUL or CONV, scalar)
+  --backend <b>           execution tier for `run`: event, reference or
+                          functional (architectural-only, no timing)
+  --probe <p>             accuracy probe for `tune`: functional (default)
+                          or cycle
+  --jobs <n>              cap sweep/query worker threads (default: all
+                          cores, at most 16)
 
 Measurements are memoized under artifacts/cache/measurements.csv, keyed by
-(program fingerprint, config, variant, engine version); see EXPERIMENTS.md
-§Cache + §Tuner for the invalidation rules. TRANSPFP_CACHE_DIR overrides
-the directory.";
+(program fingerprint, config, variant, occupancy, fidelity, engine
+version); see EXPERIMENTS.md §Cache + §Tuner + §Backends for the
+invalidation rules. TRANSPFP_CACHE_DIR overrides the directory.";
 
 /// Parsed command line: recognized flags plus positional arguments.
 /// Unknown flags are an error — a typo like `--cvs` must fail loudly, not
@@ -82,6 +96,9 @@ struct Cli {
     acc: bool,
     budget: Option<f64>,
     tiles: Option<usize>,
+    backend: Option<BackendKind>,
+    probe: Option<tuner::Probe>,
+    jobs: Option<usize>,
     args: Vec<String>,
 }
 
@@ -92,6 +109,9 @@ fn parse_cli<I: IntoIterator<Item = String>>(raw: I) -> Result<Cli, String> {
         acc: false,
         budget: None,
         tiles: None,
+        backend: None,
+        probe: None,
+        jobs: None,
         args: Vec::new(),
     };
     let mut it = raw.into_iter();
@@ -118,10 +138,39 @@ fn parse_cli<I: IntoIterator<Item = String>>(raw: I) -> Result<Cli, String> {
                     _ => return Err(format!("bad `--tiles` value `{v}`")),
                 }
             }
+            "--backend" => {
+                let v = it.next().ok_or_else(|| {
+                    "flag `--backend` needs a value (event, reference or functional)".to_string()
+                })?;
+                match BackendKind::parse(&v) {
+                    Some(b) => cli.backend = Some(b),
+                    None => return Err(format!("bad `--backend` value `{v}`")),
+                }
+            }
+            "--probe" => {
+                let v = it.next().ok_or_else(|| {
+                    "flag `--probe` needs a value (functional or cycle)".to_string()
+                })?;
+                match v.as_str() {
+                    "functional" => cli.probe = Some(tuner::Probe::Functional),
+                    "cycle" | "cycle-accurate" => cli.probe = Some(tuner::Probe::CycleAccurate),
+                    _ => return Err(format!("bad `--probe` value `{v}`")),
+                }
+            }
+            "--jobs" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| "flag `--jobs` needs a value (e.g. `--jobs 4`)".to_string())?;
+                match v.parse::<usize>() {
+                    Ok(n) if n >= 1 => cli.jobs = Some(n),
+                    _ => return Err(format!("bad `--jobs` value `{v}` (must be >= 1)")),
+                }
+            }
             s if s.starts_with('-') => {
                 return Err(format!(
                     "unknown flag `{s}` (known flags: --csv, --no-cache, --acc, \
-                     --budget <rel-err>, --tiles <t>)"
+                     --budget <rel-err>, --tiles <t>, --backend <b>, --probe <p>, \
+                     --jobs <n>)"
                 ));
             }
             _ => cli.args.push(a),
@@ -143,6 +192,32 @@ fn parse_variant(s: &str) -> Option<Variant> {
     })
 }
 
+/// Print the result block of a direct (uncached) backend run and map
+/// verification onto the exit code. Shared by `run --tiles` and
+/// `run --backend`.
+fn report_backend_run(
+    title: &str,
+    run: &transpfp::cluster::BackendRun,
+    outputs: Option<usize>,
+    verified: bool,
+) -> ExitCode {
+    println!("{title}:");
+    match &run.stats {
+        Some(stats) => println!("  cycles            {}", stats.total_cycles),
+        None => println!("  cycles            - (architectural run)"),
+    }
+    println!("  instrs            {}", run.instrs);
+    if let Some(n) = outputs {
+        println!("  outputs           {n}");
+    }
+    println!("  verified          {verified}");
+    if verified {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
 fn main() -> ExitCode {
     let cli = match parse_cli(std::env::args().skip(1)) {
         Ok(cli) => cli,
@@ -151,6 +226,9 @@ fn main() -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    if let Some(jobs) = cli.jobs {
+        coordinator::set_max_jobs(jobs);
+    }
     if !cli.no_cache {
         coordinator::query::load_global_cache();
     }
@@ -229,13 +307,30 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 };
                 // Tiled runs stream L2-resident datasets through the DMA;
                 // they are one-off scenario runs, not cached design points.
-                let (stats, out) = w.run(&cfg);
+                let kind = cli.backend.unwrap_or(BackendKind::Event);
+                let (run, out) = w.run_on_backend(&cfg, cfg.cores, kind.get());
                 let verified = w.verify(&out).is_ok();
-                println!("{} on {} (DMA double-buffered):", w.name, cfg.mnemonic());
-                println!("  cycles            {}", stats.total_cycles);
-                println!("  outputs           {}", out.len());
-                println!("  verified          {verified}");
-                return if verified { ExitCode::SUCCESS } else { ExitCode::FAILURE };
+                let title = format!(
+                    "{} on {} (DMA double-buffered, {})",
+                    w.name,
+                    cfg.mnemonic(),
+                    kind.name()
+                );
+                return report_backend_run(&title, &run, Some(out.len()), verified);
+            }
+            if let Some(kind) = cli.backend {
+                // Explicit tier selection: a direct, uncached run.
+                let w = bench.build(variant, &cfg);
+                let (run, out) = w.run_on_backend(&cfg, cfg.cores, kind.get());
+                let verified = w.verify(&out).is_ok();
+                let title = format!(
+                    "{} {} on {} ({})",
+                    bench.name(),
+                    variant.label(),
+                    cfg.mnemonic(),
+                    kind.name()
+                );
+                return report_backend_run(&title, &run, None, verified);
             }
             let m = QueryEngine::global().one(&cfg, bench, variant);
             println!("{} {} on {}:", bench.name(), variant.label(), cfg.mnemonic());
@@ -341,8 +436,11 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 },
             };
             let engine = QueryEngine::global();
-            let reports: Vec<tuner::TuneReport> =
-                configs.iter().map(|cfg| tuner::tune_with(engine, cfg, budget)).collect();
+            let probe = cli.probe.unwrap_or(tuner::Probe::Functional);
+            let reports: Vec<tuner::TuneReport> = configs
+                .iter()
+                .map(|cfg| tuner::tune_with_probe(engine, cfg, budget, probe))
+                .collect();
             emit(tuner::tune_table(&reports));
             for r in &reports {
                 let summary = [
@@ -444,6 +542,30 @@ mod tests {
 
         let c = cli(&["pareto", "--acc"]).unwrap();
         assert!(c.acc && c.budget.is_none());
+    }
+
+    #[test]
+    fn backend_probe_and_jobs_flags_take_values() {
+        let c = cli(&["run", "8c4f1p", "FIR", "scalar", "--backend", "functional"]).unwrap();
+        assert_eq!(c.backend, Some(BackendKind::Functional));
+        assert_eq!(c.args, vec!["run", "8c4f1p", "FIR", "scalar"]);
+        let r = cli(&["run", "--backend", "ref"]).unwrap();
+        assert_eq!(r.backend, Some(BackendKind::Reference));
+        assert!(cli(&["run", "--backend"]).is_err(), "missing value must fail");
+        assert!(cli(&["run", "--backend", "turbo"]).is_err());
+
+        let c = cli(&["tune", "--probe", "functional"]).unwrap();
+        assert_eq!(c.probe, Some(tuner::Probe::Functional));
+        let p = cli(&["tune", "--probe", "cycle"]).unwrap();
+        assert_eq!(p.probe, Some(tuner::Probe::CycleAccurate));
+        assert!(cli(&["tune", "--probe"]).is_err());
+        assert!(cli(&["tune", "--probe", "psychic"]).is_err());
+
+        let c = cli(&["sweep", "--jobs", "4"]).unwrap();
+        assert_eq!(c.jobs, Some(4));
+        assert!(cli(&["sweep", "--jobs"]).is_err(), "missing value must fail");
+        assert!(cli(&["sweep", "--jobs", "0"]).is_err(), "zero workers is invalid");
+        assert!(cli(&["sweep", "--jobs", "many"]).is_err());
     }
 
     #[test]

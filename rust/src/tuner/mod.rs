@@ -26,4 +26,6 @@ pub mod search;
 
 pub use accuracy::{error_stats, ErrorStats};
 pub use ladder::{ladder, LADDER};
-pub use search::{tune, tune_table, tune_with, TuneChoice, TuneReport, DEFAULT_BUDGET};
+pub use search::{
+    tune, tune_table, tune_with, tune_with_probe, Probe, TuneChoice, TuneReport, DEFAULT_BUDGET,
+};

@@ -23,14 +23,26 @@ use std::cmp::Ordering;
 
 use super::ladder::LADDER;
 use crate::config::ClusterConfig;
-use crate::coordinator::query::points;
+use crate::coordinator::query::{points, QueryPoint};
 use crate::coordinator::sweep::Measurement;
-use crate::coordinator::QueryEngine;
+use crate::coordinator::{Fidelity, QueryEngine};
 use crate::kernels::Benchmark;
 use crate::report::Table;
 
 /// Default relative-error budget of `transpfp tune`.
 pub const DEFAULT_BUDGET: f64 = 1e-2;
+
+/// How `tune` evaluates a rung's accuracy before paying for its timing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Probe {
+    /// Resolve every rung's `ErrorStats` on the functional backend first;
+    /// only the binary32 baseline and the budget-admissible rungs are run
+    /// cycle-accurately (the default — accuracy-rejected rungs never touch
+    /// the event engine).
+    Functional,
+    /// Resolve every rung cycle-accurately (the pre-backend behaviour).
+    CycleAccurate,
+}
 
 /// One benchmark's tuning outcome.
 #[derive(Debug, Clone)]
@@ -125,16 +137,74 @@ fn select(rungs: &[Measurement], budget: f64) -> (usize, usize, usize) {
     }
 }
 
-/// Tune every benchmark on `cfg` under `budget`, resolving all candidates
-/// through `engine`'s measurement cache.
+/// Tune every benchmark on `cfg` under `budget` with the default
+/// functional accuracy probe: every ladder rung's `ErrorStats` comes from
+/// the cheap functional backend, and only the baseline plus the
+/// budget-admissible rungs are simulated cycle-accurately.
 pub fn tune_with(engine: &QueryEngine, cfg: &ClusterConfig, budget: f64) -> TuneReport {
+    tune_with_probe(engine, cfg, budget, Probe::Functional)
+}
+
+/// [`tune_with`] with an explicit probe mode.
+pub fn tune_with_probe(
+    engine: &QueryEngine,
+    cfg: &ClusterConfig,
+    budget: f64,
+    probe: Probe,
+) -> TuneReport {
     let benches = Benchmark::all();
-    let ms = engine.query(&points(&[*cfg], &benches, &LADDER));
+    let rung_sets: Vec<Vec<Measurement>> = match probe {
+        Probe::CycleAccurate => {
+            let ms = engine.query(&points(&[*cfg], &benches, &LADDER));
+            ms.chunks(LADDER.len()).map(|c| c.to_vec()).collect()
+        }
+        Probe::Functional => {
+            // 1. Accuracy of every rung on the functional backend.
+            let probe_pts: Vec<QueryPoint> = points(&[*cfg], &benches, &LADDER)
+                .into_iter()
+                .map(|p| p.with_fidelity(Fidelity::Functional))
+                .collect();
+            let probes = engine.query(&probe_pts);
+            // 2. Cycle-accurate runs only for the baseline and the rungs
+            // whose functional accuracy admits them.
+            let mut ca_pts = Vec::new();
+            for (bi, &bench) in benches.iter().enumerate() {
+                let pb = &probes[bi * LADDER.len()..(bi + 1) * LADDER.len()];
+                for (ri, &v) in LADDER.iter().enumerate() {
+                    if ri == 0 || admissible(&pb[ri], budget) {
+                        ca_pts.push(QueryPoint::new(cfg, bench, v));
+                    }
+                }
+            }
+            let mut ca = engine.query(&ca_pts).into_iter();
+            // 3. Stitch full rung vectors: admissible rungs carry their
+            // cycle-accurate measurement; rejected rungs keep the
+            // functional probe as an inadmissibility witness (`select` can
+            // never pick one — outputs are tier-identical, so a rung the
+            // probe rejects is rejected, full stop).
+            benches
+                .iter()
+                .enumerate()
+                .map(|(bi, _)| {
+                    let pb = &probes[bi * LADDER.len()..(bi + 1) * LADDER.len()];
+                    pb.iter()
+                        .enumerate()
+                        .map(|(ri, pm)| {
+                            if ri == 0 || admissible(pm, budget) {
+                                ca.next().expect("planned cycle-accurate point")
+                            } else {
+                                pm.clone()
+                            }
+                        })
+                        .collect()
+                })
+                .collect()
+        }
+    };
     let choices = benches
         .iter()
-        .enumerate()
-        .map(|(bi, &bench)| {
-            let rungs = &ms[bi * LADDER.len()..(bi + 1) * LADDER.len()];
+        .zip(&rung_sets)
+        .map(|(&bench, rungs)| {
             let (rung, greedy_rung, admissible) = select(rungs, budget);
             TuneChoice {
                 bench,
@@ -301,6 +371,62 @@ mod tests {
         for (a, b) in r.choices.iter().zip(&warm.choices) {
             assert_eq!(a.rung, b.rung, "{}: warm selection drifted", a.bench.name());
             assert_eq!(a.chosen.err.rel.to_bits(), b.chosen.err.rel.to_bits());
+        }
+    }
+
+    /// The functional probe resolves all 40 rungs architecturally and
+    /// issues cycle-accurate runs **only** for the baseline and the
+    /// admissible rungs — an accuracy-rejected rung never touches the
+    /// event engine (checked point-by-point against the cache).
+    #[test]
+    fn functional_probe_skips_ca_runs_for_inadmissible_rungs() {
+        let engine = QueryEngine::new();
+        let cfg = ClusterConfig::new(8, 8, 1);
+        // A tight budget guarantees some rungs are rejected.
+        let budget = 1e-3;
+        let r = tune_with_probe(&engine, &cfg, budget, Probe::Functional);
+        assert_eq!(engine.functional_runs(), 8 * LADDER.len() as u64);
+        assert!(engine.sim_runs() >= 8, "the baseline is always cycle-accurate");
+        let mut rejected = 0usize;
+        for c in &r.choices {
+            for (ri, &v) in LADDER.iter().enumerate() {
+                // Ground truth straight from the cached functional probe.
+                let fm = engine
+                    .query(&[QueryPoint::functional(&cfg, c.bench, v)])
+                    .pop()
+                    .unwrap();
+                let adm = fm.verified && fm.err.within(budget);
+                let plan = engine.plan(&[QueryPoint::new(&cfg, c.bench, v)]);
+                let expect_ca = ri == 0 || adm;
+                assert_eq!(
+                    plan.hit_count() == 1,
+                    expect_ca,
+                    "{} rung {ri}: CA run iff baseline or admissible",
+                    c.bench.name()
+                );
+                if !expect_ca {
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected > 0, "budget 1e-3 must reject at least one rung");
+        assert!(r.all_within_budget() || r.choices.iter().any(|c| c.rung == 0));
+    }
+
+    /// Both probe modes pick identical rungs with bit-equal errors —
+    /// accuracy is tier-independent, so the cheap probe loses nothing.
+    #[test]
+    fn probe_modes_agree_on_selections() {
+        let cfg = ClusterConfig::new(8, 4, 0);
+        let fast = tune_with_probe(&QueryEngine::new(), &cfg, DEFAULT_BUDGET, Probe::Functional);
+        let full =
+            tune_with_probe(&QueryEngine::new(), &cfg, DEFAULT_BUDGET, Probe::CycleAccurate);
+        for (a, b) in fast.choices.iter().zip(&full.choices) {
+            assert_eq!(a.rung, b.rung, "{}: probes disagree", a.bench.name());
+            assert_eq!(a.greedy_rung, b.greedy_rung);
+            assert_eq!(a.admissible, b.admissible);
+            assert_eq!(a.chosen.err.rel.to_bits(), b.chosen.err.rel.to_bits());
+            assert_eq!(a.chosen.cycles, b.chosen.cycles, "chosen rung must be cycle-accurate");
         }
     }
 

@@ -302,3 +302,29 @@ fn pareto_report_is_deterministic() {
     assert_eq!(first, pareto_table_from(&warm).to_csv());
     assert!(first.lines().count() > 1, "frontier is non-empty");
 }
+
+/// Fingerprint collision smoke: every kernel × every rung of the precision
+/// ladder decodes to a distinct program fingerprint (40 programs), and the
+/// fingerprints are stable across an independent rebuild + predecode.
+#[test]
+fn program_fingerprints_distinct_across_kernel_suite() {
+    use transpfp::isa::DecodedProgram;
+
+    let cfg = ClusterConfig::new(8, 8, 1);
+    let mut seen: Vec<(String, u64)> = Vec::new();
+    for b in Benchmark::all() {
+        for v in transpfp::kernels::Variant::all() {
+            let w = b.build(v, &cfg);
+            let fp = DecodedProgram::decode(&w.program).fingerprint();
+            let name = format!("{} {}", b.name(), v.label());
+            for (other, ofp) in &seen {
+                assert_ne!(fp, *ofp, "fingerprint collision: {name} vs {other}");
+            }
+            // Rebuild + re-decode reproduces the fingerprint exactly.
+            let again = b.build(v, &cfg);
+            assert_eq!(DecodedProgram::decode(&again.program).fingerprint(), fp, "{name}");
+            seen.push((name, fp));
+        }
+    }
+    assert_eq!(seen.len(), 40);
+}
