@@ -10,15 +10,15 @@ fn main() {
         ("16c16f0p", Benchmark::Matmul, Variant::Scalar, 80.0),
     ] {
         let cfg = ClusterConfig::parse(mn).unwrap();
-        let m = run_one(&cfg, b, v);
+        let m = run_one(&cfg, b, v).unwrap();
         println!("{mn} {} {}: E.EFF {:.1} (paper {paper}) PERF {:.2} fpc {:.2}", b.name(), v.label(), m.metrics.energy_eff, m.metrics.perf_gflops, m.metrics.flops_per_cycle);
     }
     // perf anchors
     for (mn, paper) in [("16c16f1p", 5.92), ("8c8f1p", 3.57)] {
         let cfg = ClusterConfig::parse(mn).unwrap();
-        let m = run_one(&cfg, Benchmark::Fir, Variant::VEC);
+        let m = run_one(&cfg, Benchmark::Fir, Variant::VEC).unwrap();
         println!("{mn} FIR vec PERF {:.2} (paper {paper})", m.metrics.perf_gflops);
     }
-    let m = run_one(&ClusterConfig::parse("16c16f1p").unwrap(), Benchmark::Matmul, Variant::Scalar);
+    let m = run_one(&ClusterConfig::parse("16c16f1p").unwrap(), Benchmark::Matmul, Variant::Scalar).unwrap();
     println!("16c16f1p MATMUL scalar PERF {:.2} (paper 2.86) E.EFF {:.1}", m.metrics.perf_gflops, m.metrics.energy_eff);
 }

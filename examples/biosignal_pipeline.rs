@@ -43,7 +43,7 @@ fn main() {
         [("FIR band-pass", Benchmark::Fir), ("DWT features", Benchmark::Dwt), ("SVM classify", Benchmark::Svm)]
     {
         let w = bench.build(Variant::Scalar, &cfg);
-        let (stats, out) = w.run(&cfg);
+        let (stats, out) = w.run(&cfg).expect("pipeline stage terminates");
         w.verify(&out).expect("stage must verify");
         let act = Activity::from_stats(&stats);
         let epc = model::energy_per_cycle_pj(&cfg, Corner::Nt, &act);

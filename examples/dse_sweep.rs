@@ -22,7 +22,7 @@ fn main() {
     );
     eprintln!("resolving {} design-space points (cold cache) …", pts.len());
     let t0 = std::time::Instant::now();
-    let ms = engine.query(&pts);
+    let ms = engine.query(&pts).expect("design-space points resolve");
     let dt = t0.elapsed();
     let total_cycles: u64 = ms.iter().map(|m| m.cycles).sum();
     let cold = engine.stats();
@@ -37,7 +37,7 @@ fn main() {
 
     // Same batch again: the planner resolves everything from the cache.
     let t1 = std::time::Instant::now();
-    let warm_ms = engine.query(&pts);
+    let warm_ms = engine.query(&pts).expect("warm re-query resolves");
     let warm = engine.stats();
     eprintln!(
         "warm re-query: {} points in {:.4}s, {} new simulator runs\n",

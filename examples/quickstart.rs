@@ -22,7 +22,7 @@ fn main() {
     );
 
     for variant in [Variant::Scalar, Variant::VEC] {
-        let m = run_one(&cfg, Benchmark::Matmul, variant);
+        let m = run_one(&cfg, Benchmark::Matmul, variant).expect("benchmark terminates");
         assert!(m.verified, "numeric verification failed");
         println!("MATMUL {:7}: {:>8} cycles  {:.2} Gflop/s  {:.0} Gflop/s/W  {:.2} Gflop/s/mm²",
             variant.label(), m.cycles, m.metrics.perf_gflops, m.metrics.energy_eff, m.metrics.area_eff);

@@ -28,7 +28,7 @@ fn main() {
             ("blocked", ClusterConfig::new(8, 4, 1).with_blocked_fpu_map()),
         ] {
             let w = Benchmark::Matmul.build(Variant::Scalar, &cfg);
-            let (stats, out) = w.run_on(&cfg, workers);
+            let (stats, out) = w.run_on(&cfg, workers).unwrap();
             w.verify(&out).unwrap();
             let cont: u64 = stats.per_core.iter().map(|c| c.fpu_cont).sum();
             row.push_str(&format!(
@@ -48,13 +48,13 @@ fn main() {
         let real = {
             let mut cl = Cluster::new(cfg, w.program.clone());
             w.stage_into(&mut cl.mem);
-            cl.run().total_cycles
+            cl.run().unwrap().total_cycles
         };
         let perfect = {
             let mut cl = Cluster::new(cfg, w.program.clone());
             cl.perfect_icache = true;
             w.stage_into(&mut cl.mem);
-            cl.run().total_cycles
+            cl.run().unwrap().total_cycles
         };
         println!(
             "  {:8} cold-fill {} vs perfect {} (+{:.2}%)",
@@ -72,8 +72,8 @@ fn main() {
     for b in Benchmark::all() {
         let f16 = b.build(Variant::Vector(FpMode::VecF16), &cfg);
         let bf16 = b.build(Variant::Vector(FpMode::VecBf16), &cfg);
-        let (s16, o16) = f16.run(&cfg);
-        let (sbf, obf) = bf16.run(&cfg);
+        let (s16, o16) = f16.run(&cfg).unwrap();
+        let (sbf, obf) = bf16.run(&cfg).unwrap();
         f16.verify(&o16).unwrap();
         bf16.verify(&obf).unwrap();
         let delta = (s16.total_cycles as f64 / sbf.total_cycles as f64 - 1.0) * 100.0;
@@ -95,7 +95,7 @@ fn main() {
         let w = Benchmark::Kmeans.build(Variant::Scalar, &cfg);
         let mut cl = Cluster::new(cfg, w.program.clone());
         w.stage_into(&mut cl.mem);
-        let stats = cl.run();
+        let stats = cl.run().unwrap();
         let cont: u64 = stats.per_core.iter().map(|c| c.divsqrt_cont).sum();
         println!(
             "  {cores} cores: {} fdiv ops through one shared unit, {} contention cycles",

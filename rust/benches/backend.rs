@@ -40,7 +40,8 @@ fn measure(
     let t0 = Instant::now();
     for _ in 0..reps {
         for w in workloads {
-            let (run, out) = w.run_on_backend(cfg, cfg.cores, kind.get());
+            let (run, out) = w.run_on_backend(cfg, cfg.cores, kind.get())
+                .expect("suite workloads terminate on every tier");
             assert!(w.verify(&out).is_ok(), "{}: {:?} run failed to verify", w.name, kind);
             instrs += run.instrs;
         }
@@ -83,7 +84,7 @@ fn main() -> ExitCode {
     let engine = QueryEngine::new();
     let tcfg = ClusterConfig::new(8, 8, 1);
     let budget = DEFAULT_BUDGET;
-    let report = tune_with(&engine, &tcfg, budget);
+    let report = tune_with(&engine, &tcfg, budget).expect("tune completes on a clean engine");
     let functional_runs = engine.functional_runs();
     let sim_runs = engine.sim_runs();
     println!("backend-tune-functional-runs: {functional_runs}");
@@ -102,6 +103,7 @@ fn main() -> ExitCode {
         for (ri, &v) in LADDER.iter().enumerate() {
             let probe = engine
                 .query(&[QueryPoint::functional(&tcfg, c.bench, v)])
+                .expect("probe is cached")
                 .pop()
                 .expect("cached probe");
             let adm = probe.verified && probe.err.within(budget);

@@ -29,14 +29,14 @@ fn main() -> ExitCode {
     let engine = QueryEngine::new();
 
     let t0 = Instant::now();
-    let cold5 = fig5_with(&engine);
-    let cold6 = fig6_with(&engine);
+    let cold5 = fig5_with(&engine).expect("cold fig5 sweep completes");
+    let cold6 = fig6_with(&engine).expect("cold fig6 sweep completes");
     let cold_s = t0.elapsed().as_secs_f64();
     let after_cold = engine.stats();
 
     let t1 = Instant::now();
-    let warm5 = fig5_with(&engine);
-    let warm6 = fig6_with(&engine);
+    let warm5 = fig5_with(&engine).expect("warm fig5 sweep completes");
+    let warm6 = fig6_with(&engine).expect("warm fig6 sweep completes");
     let warm_s = t1.elapsed().as_secs_f64();
     let after_warm = engine.stats();
 

@@ -38,7 +38,7 @@ fn main() {
                 let mut c = 0u64;
                 for _ in 0..reps {
                     let t0 = Instant::now();
-                    let (stats, _) = w.run_in_with(&mut cl, cfg.cores, engine);
+                    let (stats, _) = w.run_in_with(&mut cl, cfg.cores, engine).unwrap();
                     best = best.min(t0.elapsed().as_secs_f64());
                     c += stats.total_cycles * cfg.cores as u64;
                 }

@@ -14,18 +14,18 @@ fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
 
 fn main() {
     println!("================ Table 3 — FP/memory intensity (measured vs paper) ================");
-    let t = timed("table3", transpfp::coordinator::table3);
+    let t = timed("table3", transpfp::coordinator::table3).expect("table3 sweep completes");
     println!("{}", t.render());
 
     println!("================ Table 4 — 8-core configurations ================");
-    let t = timed("table4", || transpfp::coordinator::table45(8));
+    let t = timed("table4", || transpfp::coordinator::table45(8)).expect("table4 sweep completes");
     println!("{}", t.render());
 
     println!("================ Table 5 — 16-core configurations ================");
-    let t = timed("table5", || transpfp::coordinator::table45(16));
+    let t = timed("table5", || transpfp::coordinator::table45(16)).expect("table5 sweep completes");
     println!("{}", t.render());
 
     println!("================ Table 6 — state-of-the-art comparison ================");
-    let t = timed("table6", transpfp::coordinator::table6);
+    let t = timed("table6", transpfp::coordinator::table6).expect("table6 sweep completes");
     println!("{}", t.render());
 }

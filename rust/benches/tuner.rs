@@ -33,14 +33,14 @@ fn main() -> ExitCode {
     let cfg = ClusterConfig::new(8, 8, 1);
 
     let t0 = Instant::now();
-    let cold = tune_with(&engine, &cfg, DEFAULT_BUDGET);
+    let cold = tune_with(&engine, &cfg, DEFAULT_BUDGET).expect("cold tune completes");
     let cold_s = t0.elapsed().as_secs_f64();
     let after_cold = engine.stats();
     let cold_func = engine.functional_runs();
     let cold_sim = engine.sim_runs();
 
     let t1 = Instant::now();
-    let warm = tune_with(&engine, &cfg, DEFAULT_BUDGET);
+    let warm = tune_with(&engine, &cfg, DEFAULT_BUDGET).expect("warm tune completes");
     let warm_s = t1.elapsed().as_secs_f64();
     let after_warm = engine.stats();
 

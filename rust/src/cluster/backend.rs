@@ -23,6 +23,20 @@
 //! magnitude more instruction throughput than the event engine
 //! (`benches/backend.rs` gates ≥ 50×), which is what lets the tuner probe
 //! every ladder rung's accuracy before paying for timing.
+//!
+//! Since the robustness PR every tier returns `Result<BackendRun,
+//! RunError>` instead of panicking: a hung program trips the [`Watchdog`]
+//! (cycle budget on the timed engines, instruction budget on the
+//! functional interpreter) as [`RunError::Timeout`], a cluster whose
+//! remaining cores are all asleep on a barrier or event line that can
+//! never complete is [`RunError::Deadlock`], and detectable architectural
+//! violations (e.g. an atomic outside TCDM) are [`RunError::Fault`]. The
+//! error-path **classification is tier-identical** — asserted by the
+//! error-parity wall in `tests/differential.rs` — so the coordinator and
+//! the fault-injection campaigns in [`crate::faults`] can treat the error
+//! class as a property of the program, not of the backend that ran it.
+
+use std::fmt;
 
 use super::counters::RunStats;
 use super::functional::FunctionalBackend;
@@ -30,6 +44,87 @@ use super::mem::Memory;
 use super::{Cluster, Engine};
 use crate::config::ClusterConfig;
 use crate::isa::Program;
+
+/// Structured execution error: why a run did not complete.
+///
+/// The three classes mirror the fault-injection outcome taxonomy
+/// (EXPERIMENTS.md §Faults): `Timeout` and `Deadlock` both classify as a
+/// *hang* (the watchdog turned it into an error instead of a stuck
+/// process), `Fault` classifies as a *crash*. [`RunError::class`] is the
+/// stable cross-tier label the differential wall compares.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RunError {
+    /// Every remaining core is asleep at a barrier or software event line
+    /// that can never complete. `asleep` is how many cores were parked.
+    Deadlock { asleep: usize },
+    /// The watchdog budget ran out before the program terminated: the cycle
+    /// budget on the timed engines, the instruction budget on the
+    /// functional tier. The budget that tripped is carried for the report.
+    Timeout { budget: u64 },
+    /// A detectable architectural violation (e.g. an atomic outside TCDM).
+    /// The payload is a human-readable description; worker panics caught by
+    /// the coordinator are also quarantined into this class.
+    Fault(String),
+}
+
+impl RunError {
+    /// Stable classification label, identical across tiers for the same
+    /// program (the error-parity differential wall asserts this). Note the
+    /// watchdog *budgets* differ across tiers (cycles vs instructions), so
+    /// parity is asserted on the class, not the payload.
+    pub fn class(&self) -> &'static str {
+        match self {
+            RunError::Deadlock { .. } => "deadlock",
+            RunError::Timeout { .. } => "timeout",
+            RunError::Fault(_) => "fault",
+        }
+    }
+}
+
+impl fmt::Display for RunError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RunError::Deadlock { asleep } => write!(
+                f,
+                "deadlock: {asleep} core(s) asleep at a barrier or event line that can never \
+                 complete"
+            ),
+            RunError::Timeout { budget } => {
+                write!(f, "timeout: watchdog budget of {budget} exhausted before termination")
+            }
+            RunError::Fault(msg) => write!(f, "fault: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RunError {}
+
+/// Configurable hang watchdog: the timed engines charge against
+/// `max_cycles`, the functional interpreter against `max_instrs`. The
+/// defaults match the pre-robustness guard values, so fault-free runs are
+/// bit-identical to the old behavior.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Watchdog {
+    /// Cycle budget for the event/reference engines.
+    pub max_cycles: u64,
+    /// Retired-instruction budget (across all cores) for the functional
+    /// interpreter.
+    pub max_instrs: u64,
+}
+
+impl Default for Watchdog {
+    fn default() -> Watchdog {
+        Watchdog { max_cycles: 2_000_000_000, max_instrs: 2_000_000_000 }
+    }
+}
+
+impl Watchdog {
+    /// A watchdog with both budgets set to `budget` (CLI `--budget`-style
+    /// single-knob callers).
+    pub fn with_budget(budget: u64) -> Watchdog {
+        Watchdog { max_cycles: budget, max_instrs: budget }
+    }
+}
 
 /// Architectural result of one backend run.
 pub struct BackendRun {
@@ -55,15 +150,29 @@ pub trait ExecBackend: Sync {
     fn is_cycle_accurate(&self) -> bool;
 
     /// Execute `program` on a fresh cluster of `cfg` with the first
-    /// `workers` cores active. `stage` is called once to write input data
-    /// into the zeroed memory before execution starts.
+    /// `workers` cores active, under an explicit hang watchdog. `stage` is
+    /// called once to write input data into the zeroed memory before
+    /// execution starts. Never panics on hangs or deadlocks — they come
+    /// back as structured [`RunError`]s.
+    fn run_watched(
+        &self,
+        cfg: &ClusterConfig,
+        program: &Program,
+        workers: usize,
+        stage: &mut dyn FnMut(&mut Memory),
+        wd: Watchdog,
+    ) -> Result<BackendRun, RunError>;
+
+    /// [`ExecBackend::run_watched`] under the default watchdog.
     fn run_program(
         &self,
         cfg: &ClusterConfig,
         program: &Program,
         workers: usize,
         stage: &mut dyn FnMut(&mut Memory),
-    ) -> BackendRun;
+    ) -> Result<BackendRun, RunError> {
+        self.run_watched(cfg, program, workers, stage, Watchdog::default())
+    }
 }
 
 /// Shared cycle-accurate implementation behind [`EventBackend`] and
@@ -75,19 +184,21 @@ fn run_cluster(
     workers: usize,
     stage: &mut dyn FnMut(&mut Memory),
     engine: Engine,
-) -> BackendRun {
+    wd: Watchdog,
+) -> Result<BackendRun, RunError> {
     let mut cl = Cluster::new(*cfg, program.clone());
+    cl.max_cycles = wd.max_cycles;
     cl.limit_active_cores(workers);
     stage(&mut cl.mem);
-    let stats = cl.run_with(engine);
+    let stats = cl.run_with(engine)?;
     let instrs = stats.per_core.iter().map(|c| c.instrs).sum();
     let Cluster { cores, mem, .. } = cl;
-    BackendRun {
+    Ok(BackendRun {
         regs: cores.iter().map(|c| c.regs).collect(),
         mem,
         stats: Some(stats),
         instrs,
-    }
+    })
 }
 
 /// The event-driven cycle-accurate engine (the measurement default).
@@ -102,14 +213,15 @@ impl ExecBackend for EventBackend {
         true
     }
 
-    fn run_program(
+    fn run_watched(
         &self,
         cfg: &ClusterConfig,
         program: &Program,
         workers: usize,
         stage: &mut dyn FnMut(&mut Memory),
-    ) -> BackendRun {
-        run_cluster(cfg, program, workers, stage, Engine::Event)
+        wd: Watchdog,
+    ) -> Result<BackendRun, RunError> {
+        run_cluster(cfg, program, workers, stage, Engine::Event, wd)
     }
 }
 
@@ -125,14 +237,15 @@ impl ExecBackend for ReferenceBackend {
         true
     }
 
-    fn run_program(
+    fn run_watched(
         &self,
         cfg: &ClusterConfig,
         program: &Program,
         workers: usize,
         stage: &mut dyn FnMut(&mut Memory),
-    ) -> BackendRun {
-        run_cluster(cfg, program, workers, stage, Engine::Reference)
+        wd: Watchdog,
+    ) -> Result<BackendRun, RunError> {
+        run_cluster(cfg, program, workers, stage, Engine::Reference, wd)
     }
 }
 
@@ -172,8 +285,20 @@ impl BackendKind {
         program: &Program,
         workers: usize,
         stage: &mut dyn FnMut(&mut Memory),
-    ) -> BackendRun {
+    ) -> Result<BackendRun, RunError> {
         self.get().run_program(cfg, program, workers, stage)
+    }
+
+    /// Forwarder to [`ExecBackend::run_watched`].
+    pub fn run_watched(
+        self,
+        cfg: &ClusterConfig,
+        program: &Program,
+        workers: usize,
+        stage: &mut dyn FnMut(&mut Memory),
+        wd: Watchdog,
+    ) -> Result<BackendRun, RunError> {
+        self.get().run_watched(cfg, program, workers, stage, wd)
     }
 
     /// Parse a CLI `--backend` value.
@@ -206,6 +331,20 @@ mod tests {
         assert!(!BackendKind::Functional.get().is_cycle_accurate());
     }
 
+    #[test]
+    fn run_error_classes_and_display() {
+        let d = RunError::Deadlock { asleep: 7 };
+        let t = RunError::Timeout { budget: 1000 };
+        let f = RunError::Fault("atomic outside TCDM at 0x1c000000".into());
+        assert_eq!(d.class(), "deadlock");
+        assert_eq!(t.class(), "timeout");
+        assert_eq!(f.class(), "fault");
+        assert!(d.to_string().contains("7 core(s)"));
+        assert!(t.to_string().contains("1000"));
+        assert!(f.to_string().contains("atomic outside TCDM"));
+        assert_eq!(Watchdog::with_budget(42), Watchdog { max_cycles: 42, max_instrs: 42 });
+    }
+
     /// All three tiers agree architecturally on a staged micro program, and
     /// only the cycle-accurate tiers report stats.
     #[test]
@@ -224,9 +363,11 @@ mod tests {
         let cfg = ClusterConfig::new(8, 4, 1);
         let staged: Vec<u32> = (0..8u32).map(|i| 100 + i).collect();
         let run = |k: BackendKind| {
-            k.get().run_program(&cfg, &program, cfg.cores, &mut |mem| {
-                mem.write_u32_slice(TCDM_BASE, &staged);
-            })
+            k.get()
+                .run_program(&cfg, &program, cfg.cores, &mut |mem| {
+                    mem.write_u32_slice(TCDM_BASE, &staged);
+                })
+                .expect("micro program terminates")
         };
         let ev = run(BackendKind::Event);
         let rf = run(BackendKind::Reference);

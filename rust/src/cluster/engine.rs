@@ -35,6 +35,7 @@ use std::collections::BinaryHeap;
 use crate::isa::decoded::{flag, DecodedInsn, OpClass};
 use crate::isa::insn::Insn;
 
+use super::backend::RunError;
 use super::core::{Core, CoreState, Producer};
 use super::counters::RunStats;
 use super::event::WAKEUP_LATENCY;
@@ -51,8 +52,11 @@ fn advance(c: &mut Core, d: &DecodedInsn) {
 }
 
 impl Cluster {
-    /// Run to completion on the event-driven engine.
-    pub fn run_event(&mut self) -> RunStats {
+    /// Run to completion on the event-driven engine. A program that
+    /// outlives `self.max_cycles` is a [`RunError::Timeout`]; a cluster
+    /// whose remaining cores are all asleep on a line that can never
+    /// complete is a [`RunError::Deadlock`].
+    pub fn run_event(&mut self) -> Result<RunStats, RunError> {
         let n = self.cores.len();
         let runnable =
             self.cores.iter().filter(|c| !matches!(c.state, CoreState::Done)).count();
@@ -70,7 +74,9 @@ impl Cluster {
         let mut woken: Vec<usize> = Vec::with_capacity(n);
 
         while let Some(&Reverse((now, _))) = heap.peek() {
-            assert!(now < self.max_cycles, "simulation exceeded max_cycles (deadlock?)");
+            if now >= self.max_cycles {
+                return Err(RunError::Timeout { budget: self.max_cycles });
+            }
             // Collect every core issuing at this event time.
             ready.clear();
             while let Some(&Reverse((t, ci))) = heap.peek() {
@@ -106,7 +112,7 @@ impl Cluster {
                 {
                     continue;
                 }
-                self.issue_batch(ci, solo, fp_private, &mut woken);
+                self.issue_batch(ci, solo, fp_private, &mut woken)?;
                 let c = &self.cores[ci];
                 if matches!(c.state, CoreState::Running) && c.next_issue != u64::MAX {
                     heap.push(Reverse((c.next_issue, ci as u32)));
@@ -121,19 +127,23 @@ impl Cluster {
             .iter()
             .filter(|c| matches!(c.state, CoreState::Sleeping { .. }))
             .count();
-        assert!(
-            asleep == 0,
-            "simulation deadlocked: {asleep} core(s) asleep at a barrier or event line that can \
-             never complete"
-        );
-        self.collect_stats()
+        if asleep > 0 {
+            return Err(RunError::Deadlock { asleep });
+        }
+        Ok(self.collect_stats())
     }
 
     /// Issue for core `ci` starting at `self.now`, batching as far down the
     /// straight-line run as locality allows. `woken` receives the ids of
     /// cores released by a completed barrier (to be rescheduled by the
     /// caller).
-    fn issue_batch(&mut self, ci: usize, solo: bool, fp_private: bool, woken: &mut Vec<usize>) {
+    fn issue_batch(
+        &mut self,
+        ci: usize,
+        solo: bool,
+        fp_private: bool,
+        woken: &mut Vec<usize>,
+    ) -> Result<(), RunError> {
         let now = self.now;
         let max_cycles = self.max_cycles;
         let perfect_icache = self.perfect_icache;
@@ -145,7 +155,15 @@ impl Cluster {
         // Batch cursor: the core's private clock, ≥ the global clock.
         let mut t = now;
         loop {
-            assert!(t < max_cycles, "simulation exceeded max_cycles (deadlock?)");
+            if t >= max_cycles {
+                return Err(RunError::Timeout { budget: max_cycles });
+            }
+            if let Some(f) = self.fault {
+                if t >= f.cycle {
+                    self.fault = None;
+                    self.apply_fault(f.site);
+                }
+            }
             let pc = self.cores[ci].pc as usize;
             let d = self.decoded.insns[pc];
             // A non-zero straight-line fast-path entry is exactly the
@@ -161,7 +179,7 @@ impl Cluster {
                 // re-arbitrate at the proper global cycle (traced on the
                 // re-issue, so traces stay one line per attempt).
                 self.cores[ci].next_issue = t;
-                return;
+                return Ok(());
             }
             if trace {
                 eprintln!("t={t} core={ci} pc={pc} {:?}", d.insn);
@@ -186,7 +204,7 @@ impl Cluster {
                     } else {
                         self.cores[ci].next_issue = t;
                     }
-                    return;
+                    return Ok(());
                 }
             }
 
@@ -205,7 +223,7 @@ impl Cluster {
                     t = opr_ready; // the re-attempt folds into the batch
                 } else {
                     c.next_issue = opr_ready;
-                    return;
+                    return Ok(());
                 }
             }
 
@@ -225,7 +243,7 @@ impl Cluster {
                     t += 1;
                     if !local {
                         c.next_issue = t;
-                        return;
+                        return Ok(());
                     }
                 }
             }
@@ -311,7 +329,7 @@ impl Cluster {
                     c.counters.instrs += 1;
                     c.counters.cycles = t;
                     c.state = CoreState::Done;
-                    return;
+                    return Ok(());
                 }
                 OpClass::Load => {
                     let Insn::Load { rd, base, offset, post_inc, size } = d.insn else {
@@ -333,7 +351,7 @@ impl Cluster {
                                 let c = &mut self.cores[ci];
                                 c.counters.tcdm_cont += 1;
                                 c.next_issue = t + 1;
-                                return;
+                                return Ok(());
                             }
                             let c = &mut self.cores[ci];
                             let addr = c.mem_addr_and_postinc(base, offset, post_inc);
@@ -379,7 +397,7 @@ impl Cluster {
                                 let c = &mut self.cores[ci];
                                 c.counters.tcdm_cont += 1;
                                 c.next_issue = t + 1;
-                                return;
+                                return Ok(());
                             }
                             let c = &mut self.cores[ci];
                             let addr = c.mem_addr_and_postinc(base, offset, post_inc);
@@ -414,12 +432,12 @@ impl Cluster {
                             // Defensive: a batched (private-FPU) claim can
                             // never lose; re-arbitrate via the scheduler.
                             self.cores[ci].next_issue = t;
-                            return;
+                            return Ok(());
                         }
                         let c = &mut self.cores[ci];
                         c.counters.fpu_cont += 1;
                         c.next_issue = t + 1;
-                        return;
+                        return Ok(());
                     }
                     let c = &mut self.cores[ci];
                     let flops = c.exec_fp(op, mode, rd, rs1, rs2);
@@ -447,7 +465,7 @@ impl Cluster {
                                 continue;
                             }
                             c.next_issue = free;
-                            return;
+                            return Ok(());
                         }
                         Ok(done) => {
                             let c = &mut self.cores[ci];
@@ -466,16 +484,15 @@ impl Cluster {
                 OpClass::Amo => {
                     let Insn::Amo { op, rd, base, offset, rs } = d.insn else { unreachable!() };
                     let addr = (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
-                    assert!(
-                        matches!(self.mem.region_of(addr), Region::Tcdm),
-                        "atomic outside TCDM at {addr:#x}"
-                    );
+                    if !matches!(self.mem.region_of(addr), Region::Tcdm) {
+                        return Err(RunError::Fault(format!("atomic outside TCDM at {addr:#x}")));
+                    }
                     let bank = self.mem.bank_of(addr);
                     if !self.mem.claim_bank(bank, t) {
                         let c = &mut self.cores[ci];
                         c.counters.tcdm_cont += 1;
                         c.next_issue = t + 1;
-                        return;
+                        return Ok(());
                     }
                     self.exec_amo(ci, op, rd, addr, rs, t);
                     let c = &mut self.cores[ci];
@@ -497,7 +514,7 @@ impl Cluster {
                         let c = &mut self.cores[ci];
                         c.state = CoreState::Sleeping { since: t + 1 };
                         c.next_issue = u64::MAX; // woken by a SetEvent
-                        return;
+                        return Ok(());
                     }
                 }
                 OpClass::SetEvent => {
@@ -524,7 +541,7 @@ impl Cluster {
                         continue;
                     }
                     self.cores[ci].next_issue = t + 1;
-                    return; // reschedule so woken cores enter the heap
+                    return Ok(()); // reschedule so woken cores enter the heap
                 }
                 OpClass::Barrier => {
                     // Count the barrier instruction itself.
@@ -562,13 +579,13 @@ impl Cluster {
                                 t = wake; // nobody to re-arbitrate against
                                 continue;
                             }
-                            return;
+                            return Ok(());
                         }
                         None => {
                             let c = &mut self.cores[ci];
                             c.state = CoreState::Sleeping { since: t + 1 };
                             c.next_issue = u64::MAX; // woken explicitly
-                            return;
+                            return Ok(());
                         }
                     }
                 }

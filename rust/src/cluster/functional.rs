@@ -23,9 +23,10 @@
 //! else — including DMA `STATUS` polls, which report zero outstanding
 //! transfers because data moves at trigger time — executes straight
 //! through. A full pass in which no core is runnable while some still
-//! sleep is a deadlock (panics, mirroring the timed engines' guard); a
-//! per-run retired-instruction budget bounds pathological spin loops the
-//! way `max_cycles` bounds the timed engines.
+//! sleep is a [`RunError::Deadlock`], mirroring the timed engines' guard;
+//! a per-run retired-instruction budget (the watchdog's `max_instrs`)
+//! bounds pathological spin loops the way `max_cycles` bounds the timed
+//! engines, surfacing as [`RunError::Timeout`].
 //!
 //! ## Fast path
 //!
@@ -37,7 +38,7 @@
 //! gate holds the result to ≥ 50× the event engine's instruction
 //! throughput on the kernel suite.
 
-use super::backend::{BackendRun, ExecBackend};
+use super::backend::{BackendRun, ExecBackend, RunError, Watchdog};
 use super::core::{Core, CoreState};
 use super::event::EventUnit;
 use super::mem::{DmaCtl, Memory, Region, DMA_BASE};
@@ -62,26 +63,45 @@ impl ExecBackend for FunctionalBackend {
         false
     }
 
-    fn run_program(
+    fn run_watched(
         &self,
         cfg: &ClusterConfig,
         program: &Program,
         workers: usize,
         stage: &mut dyn FnMut(&mut Memory),
-    ) -> BackendRun {
-        FunctionalBackend::run_decoded(cfg, &DecodedProgram::decode(program), workers, stage)
+        wd: Watchdog,
+    ) -> Result<BackendRun, RunError> {
+        FunctionalBackend::run_decoded_watched(
+            cfg,
+            &DecodedProgram::decode(program),
+            workers,
+            stage,
+            wd.max_instrs,
+        )
     }
 }
 
 impl FunctionalBackend {
     /// Execute an already-predecoded program (benches and repeated probes
-    /// skip the re-decode).
+    /// skip the re-decode) under the default instruction budget.
     pub fn run_decoded(
         cfg: &ClusterConfig,
         decoded: &DecodedProgram,
         workers: usize,
         stage: &mut dyn FnMut(&mut Memory),
-    ) -> BackendRun {
+    ) -> Result<BackendRun, RunError> {
+        Self::run_decoded_watched(cfg, decoded, workers, stage, MAX_INSTRS)
+    }
+
+    /// Execute an already-predecoded program with an explicit retired-
+    /// instruction budget (the functional tier's watchdog).
+    pub fn run_decoded_watched(
+        cfg: &ClusterConfig,
+        decoded: &DecodedProgram,
+        workers: usize,
+        stage: &mut dyn FnMut(&mut Memory),
+        max_instrs: u64,
+    ) -> Result<BackendRun, RunError> {
         assert!(workers >= 1 && workers <= cfg.cores, "occupancy out of range");
         let n = cfg.cores;
         // Mirror `Cluster::new` + `limit_active_cores` exactly, so inactive
@@ -106,7 +126,7 @@ impl FunctionalBackend {
                     continue;
                 }
                 ran = true;
-                total += run_core(
+                run_core(
                     ci,
                     decoded,
                     workers,
@@ -114,8 +134,9 @@ impl FunctionalBackend {
                     &mut mem,
                     &mut event,
                     &mut dmac,
-                    MAX_INSTRS - total,
-                );
+                    &mut total,
+                    max_instrs,
+                )?;
             }
             if !ran {
                 break;
@@ -123,24 +144,22 @@ impl FunctionalBackend {
         }
         let asleep =
             cores.iter().filter(|c| matches!(c.state, CoreState::Sleeping { .. })).count();
-        assert!(
-            asleep == 0,
-            "functional run deadlocked: {asleep} core(s) asleep at a barrier or event line that \
-             can never complete"
-        );
-        BackendRun {
+        if asleep > 0 {
+            return Err(RunError::Deadlock { asleep });
+        }
+        Ok(BackendRun {
             regs: cores.iter().map(|c| c.regs).collect(),
             mem,
             stats: None,
             instrs: total,
-        }
+        })
     }
 }
 
 /// Run core `ci` until it blocks (event sleep, incomplete barrier) or
-/// terminates; returns the number of instructions it retired. `budget`
-/// bounds that count (exceeding it is the deadlock guard tripping on an
-/// unsynchronized spin loop).
+/// terminates, accumulating retired instructions into `total`. Crossing
+/// `max_instrs` is the watchdog tripping on an unsynchronized spin loop
+/// and surfaces as [`RunError::Timeout`].
 #[allow(clippy::too_many_arguments)]
 fn run_core(
     ci: usize,
@@ -150,11 +169,11 @@ fn run_core(
     mem: &mut Memory,
     event: &mut EventUnit,
     dmac: &mut DmaCtl,
-    budget: u64,
-) -> u64 {
+    total: &mut u64,
+    max_instrs: u64,
+) -> Result<(), RunError> {
     let insns = decoded.insns.as_slice();
     let run_len = decoded.local_run_len.as_slice();
-    let mut executed = 0u64;
     loop {
         // ---- Tier 1: straight-line core-local run (shared fast-path
         // table; the same instruction set the event engine batches).
@@ -162,8 +181,10 @@ fn run_core(
             let c = &mut cores[ci];
             while run_len[c.pc as usize] != 0 {
                 let d = &insns[c.pc as usize];
-                executed += 1;
-                assert!(executed < budget, "functional run exceeded its instruction budget");
+                *total += 1;
+                if *total > max_instrs {
+                    return Err(RunError::Timeout { budget: max_instrs });
+                }
                 c.counters.instrs += 1;
                 match d.class {
                     OpClass::Alu => {
@@ -209,7 +230,7 @@ fn run_core(
                     }
                     OpClass::End => {
                         c.state = CoreState::Done;
-                        return executed;
+                        return Ok(());
                     }
                     _ => unreachable!("non-local class inside a straight-line run"),
                 }
@@ -220,8 +241,10 @@ fn run_core(
         // datapath, atomics, event unit), then back to the fast path.
         let pc = cores[ci].pc as usize;
         let d = &insns[pc];
-        executed += 1;
-        assert!(executed < budget, "functional run exceeded its instruction budget");
+        *total += 1;
+        if *total > max_instrs {
+            return Err(RunError::Timeout { budget: max_instrs });
+        }
         cores[ci].counters.instrs += 1;
         match d.class {
             OpClass::Load => {
@@ -265,10 +288,9 @@ fn run_core(
                 let Insn::Amo { op, rd, base, offset, rs } = d.insn else { unreachable!() };
                 let c = &mut cores[ci];
                 let addr = (c.reg(base) as i64 + offset as i64) as u32;
-                assert!(
-                    matches!(mem.region_of(addr), Region::Tcdm),
-                    "atomic outside TCDM at {addr:#x}"
-                );
+                if !matches!(mem.region_of(addr), Region::Tcdm) {
+                    return Err(RunError::Fault(format!("atomic outside TCDM at {addr:#x}")));
+                }
                 let v = c.reg(rs);
                 let old = mem.amo(op, addr, v);
                 c.set_reg(rd, old);
@@ -279,7 +301,7 @@ fn run_core(
                 cores[ci].advance_decoded(d.flags);
                 if !event.wait_event(ci, ev) {
                     cores[ci].state = CoreState::Sleeping { since: 0 };
-                    return executed;
+                    return Ok(());
                 }
             }
             OpClass::SetEvent => {
@@ -306,7 +328,7 @@ fn run_core(
                     // running; the woken cores resume on their next slot.
                 } else {
                     cores[ci].state = CoreState::Sleeping { since: 0 };
-                    return executed;
+                    return Ok(());
                 }
             }
             _ => unreachable!("local class dispatched on the shared-resource path"),
@@ -328,7 +350,7 @@ mod tests {
         workers: usize,
         stage: &mut dyn FnMut(&mut Memory),
     ) -> BackendRun {
-        FunctionalBackend.run_program(cfg, program, workers, stage)
+        FunctionalBackend.run_program(cfg, program, workers, stage).expect("program terminates")
     }
 
     /// Static-scheduled kernels: the functional backend reproduces the
@@ -344,8 +366,9 @@ mod tests {
         ] {
             let w = b.build(v, &cfg);
             for workers in [1usize, 3, 8] {
-                let (ev, ev_out) = w.run_on_backend(&cfg, workers, BackendKind::Event.get());
-                let (fu, fu_out) = w.run_on_backend(&cfg, workers, &FunctionalBackend);
+                let (ev, ev_out) =
+                    w.run_on_backend(&cfg, workers, BackendKind::Event.get()).unwrap();
+                let (fu, fu_out) = w.run_on_backend(&cfg, workers, &FunctionalBackend).unwrap();
                 let ctx = format!("{} {} with {workers} workers", b.name(), v.label());
                 assert_eq!(ev_out, fu_out, "{ctx}: outputs differ");
                 assert_eq!(ev.regs, fu.regs, "{ctx}: registers differ");
@@ -442,10 +465,10 @@ mod tests {
         assert_eq!(run.mem.load(TCDM_BASE + 12, MemSize::Word), 4);
     }
 
-    /// A core waiting on a line nobody raises is a deadlock, not a hang.
+    /// A core waiting on a line nobody raises is a structured deadlock
+    /// error, not a panic and not a hang.
     #[test]
-    #[should_panic(expected = "deadlocked")]
-    fn unraisable_event_line_panics() {
+    fn unraisable_event_line_is_a_deadlock() {
         let mut b = ProgramBuilder::new("dead-f");
         b.bne(regs::CORE_ID, regs::ZERO, "worker");
         b.end();
@@ -453,7 +476,10 @@ mod tests {
         b.wait_event(9);
         b.end();
         let cfg = ClusterConfig::new(8, 8, 0);
-        run_functional(&cfg, &b.build(), 8, &mut |_| {});
+        let err = FunctionalBackend
+            .run_program(&cfg, &b.build(), 8, &mut |_| {})
+            .expect_err("7 cores park on a line nobody raises");
+        assert_eq!(err, RunError::Deadlock { asleep: 7 });
     }
 
     /// Partial occupancy mirrors `limit_active_cores`: inactive cores never

@@ -479,6 +479,10 @@ pub struct DmaCtl {
     /// Completion cycles of triggered transfers (monotone — the single
     /// channel serializes), pruned as they pass.
     pending: Vec<u64>,
+    /// Armed in-flight upset: `(word, mask)` XORed into word `word % len`
+    /// of the next transfer's destination, then disarmed. See
+    /// [`crate::faults`].
+    corrupt: Option<(u32, u32)>,
 }
 
 impl DmaCtl {
@@ -489,6 +493,14 @@ impl DmaCtl {
         self.len = 0;
         self.engine = Dma { busy_until: 0, words_moved: 0 };
         self.pending.clear();
+        self.corrupt = None;
+    }
+
+    /// Arm a single-event upset on the next triggered transfer: XOR `mask`
+    /// into destination word `word % len` right after the payload lands
+    /// (a bus flip while the data was in flight).
+    pub fn corrupt_next(&mut self, word: u32, mask: u32) {
+        self.corrupt = Some((word, mask));
     }
 
     /// Store `value` to the DMA register at byte offset `off` at `cycle`.
@@ -500,6 +512,13 @@ impl DmaCtl {
             dma_reg::LEN => self.len = value,
             dma_reg::CMD => {
                 let done = self.engine.transfer(mem, cycle, self.src, self.dst, self.len);
+                if let Some((word, mask)) = self.corrupt.take() {
+                    if self.len > 0 {
+                        let addr = self.dst + 4 * (word % self.len);
+                        let v = mem.load(addr, MemSize::Word);
+                        mem.store(addr, MemSize::Word, v ^ mask);
+                    }
+                }
                 self.pending.push(done);
             }
             _ => panic!("store to unknown DMA register offset {off:#x}"),

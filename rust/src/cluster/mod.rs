@@ -45,7 +45,9 @@ pub mod icache;
 pub mod mem;
 pub mod reference;
 
-pub use backend::{BackendKind, BackendRun, EventBackend, ExecBackend, ReferenceBackend};
+pub use backend::{
+    BackendKind, BackendRun, EventBackend, ExecBackend, ReferenceBackend, RunError, Watchdog,
+};
 pub use functional::FunctionalBackend;
 
 use crate::config::ClusterConfig;
@@ -69,6 +71,33 @@ pub enum Engine {
     Event,
     /// Per-cycle rotate-and-scan loop (the executable specification).
     Reference,
+}
+
+/// Where a single-event upset lands (see [`crate::faults`]).
+///
+/// Sites are addressed modulo the physical structure they target, so a
+/// campaign can sample them uniformly from a plain integer stream without
+/// knowing the configuration's exact sizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Flip `1 << (bit % 32)` in TCDM word `word % tcdm_words`.
+    TcdmWord { word: u32, bit: u32 },
+    /// Flip `1 << (bit % 32)` in register `reg % 32` of core `core % n`.
+    /// Writes to x0 are masked by the register file, as in hardware.
+    RegCell { core: u32, reg: u32, bit: u32 },
+    /// Flip `1 << (bit % 32)` in word `word % len` of the next DMA
+    /// transfer's payload (an in-flight bus upset).
+    DmaPayload { word: u32, bit: u32 },
+}
+
+/// A fault armed to strike at (or immediately after) a simulated cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArmedFault {
+    /// First cycle at which the upset may be applied. The engines apply it
+    /// at the first issue opportunity with `t >= cycle` (exactly once).
+    pub cycle: u64,
+    /// Target structure and bit.
+    pub site: FaultSite,
 }
 
 /// The simulated cluster.
@@ -96,6 +125,8 @@ pub struct Cluster {
     pub now: u64,
     /// Hard cycle limit (deadlock guard).
     pub max_cycles: u64,
+    /// At most one armed single-event upset, consumed when it strikes.
+    fault: Option<ArmedFault>,
     /// Disable I$ cold-miss modelling (always-hit). Used by micro-timing
     /// tests that reason about exact cycle counts.
     pub perfect_icache: bool,
@@ -121,6 +152,7 @@ impl Cluster {
             decoded,
             now: 0,
             max_cycles: 2_000_000_000,
+            fault: None,
             perfect_icache: false,
             trace: std::env::var_os("TRANSPFP_TRACE").is_some(),
             cfg,
@@ -145,6 +177,36 @@ impl Cluster {
         self.event.reset(n);
         self.dmac.reset();
         self.now = 0;
+        self.fault = None;
+    }
+
+    /// Arm a single-event upset. The run engines consume it at the first
+    /// issue opportunity at or after `f.cycle`; at most one fault is armed
+    /// at a time (campaigns inject one upset per run).
+    pub fn arm_fault(&mut self, f: ArmedFault) {
+        self.fault = Some(f);
+    }
+
+    /// Apply an armed upset to the targeted structure. Shared by both
+    /// cycle-accurate engines.
+    pub(crate) fn apply_fault(&mut self, site: FaultSite) {
+        match site {
+            FaultSite::TcdmWord { word, bit } => {
+                let words = (self.mem.tcdm_bytes() / 4) as u32;
+                let addr = mem::TCDM_BASE + (word % words.max(1)) * 4;
+                let v = self.mem.load(addr, crate::isa::MemSize::Word);
+                self.mem.store(addr, crate::isa::MemSize::Word, v ^ (1 << (bit % 32)));
+            }
+            FaultSite::RegCell { core, reg, bit } => {
+                let ci = (core as usize) % self.cores.len();
+                let r = (reg % 32) as u8;
+                let v = self.cores[ci].reg(r);
+                self.cores[ci].set_reg(r, v ^ (1 << (bit % 32)));
+            }
+            FaultSite::DmaPayload { word, bit } => {
+                self.dmac.corrupt_next(word, 1 << (bit % 32));
+            }
+        }
     }
 
     /// Restrict execution to the first `n` cores; the rest terminate
@@ -165,13 +227,14 @@ impl Cluster {
     }
 
     /// Run to completion on the default (event-driven) engine; returns
-    /// per-core counters.
-    pub fn run(&mut self) -> RunStats {
+    /// per-core counters. A run that cannot terminate comes back as a
+    /// structured [`RunError`] instead of a panic.
+    pub fn run(&mut self) -> Result<RunStats, RunError> {
         self.run_with(Engine::Event)
     }
 
     /// Run to completion on the selected engine.
-    pub fn run_with(&mut self, engine: Engine) -> RunStats {
+    pub fn run_with(&mut self, engine: Engine) -> Result<RunStats, RunError> {
         match engine {
             Engine::Event => self.run_event(),
             Engine::Reference => self.run_reference(),
@@ -271,8 +334,8 @@ mod tests {
             a.limit_active_cores(w);
             b.limit_active_cores(w);
         }
-        let sa = a.run_with(Engine::Event);
-        let sb = b.run_with(Engine::Reference);
+        let sa = a.run_with(Engine::Event).unwrap();
+        let sb = b.run_with(Engine::Reference).unwrap();
         assert_eq!(sa.total_cycles, sb.total_cycles, "engines disagree on total cycles");
         for (i, (x, y)) in sa.per_core.iter().zip(&sb.per_core).enumerate() {
             assert_eq!(x, y, "engines disagree on core {i}");
@@ -287,7 +350,7 @@ mod tests {
         b.li(1, 1).li(2, 2).add(3, 1, 2);
         b.li(4, mem::TCDM_BASE).sw(3, 4, 0).end();
         let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
-        let stats = cl.run();
+        let stats = cl.run().unwrap();
         assert_eq!(cl.mem.load(mem::TCDM_BASE, crate::isa::MemSize::Word), 3);
         // All 8 cores ran the same SPMD program; the stores collide benignly.
         assert_eq!(stats.per_core.len(), 8);
@@ -306,7 +369,7 @@ mod tests {
         b.li(5, mem::TCDM_BASE).sw(2, 5, 0).end();
         let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
         cl.limit_active_cores(1);
-        let stats = cl.run();
+        let stats = cl.run().unwrap();
         assert_eq!(cl.mem.load(mem::TCDM_BASE, crate::isa::MemSize::Word), 10);
         // Body = 10 instructions total for the loop, no branch penalties.
         let c = &stats.per_core[0];
@@ -327,7 +390,7 @@ mod tests {
         b.li(5, mem::TCDM_BASE).sw(3, 5, 0).end();
         let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
         cl.limit_active_cores(1);
-        cl.run();
+        cl.run().unwrap();
         assert_eq!(cl.mem.load(mem::TCDM_BASE, crate::isa::MemSize::Word), 12);
     }
 
@@ -346,7 +409,7 @@ mod tests {
             let mut cl = Cluster::new(cfg(8, 8, pipe), b.build());
             cl.perfect_icache = true;
             cl.limit_active_cores(1);
-            let stats = cl.run();
+            let stats = cl.run().unwrap();
             stats.per_core[0].fpu_stall
         };
         assert_eq!(run(0), 0);
@@ -369,12 +432,12 @@ mod tests {
             b.build()
         };
         let mut shared = Cluster::new(cfg(8, 2, 1), prog());
-        let s = shared.run();
+        let s = shared.run().unwrap();
         let cont: u64 = s.per_core.iter().map(|c| c.fpu_cont).sum();
         assert!(cont > 0, "4 cores per FPU must contend");
 
         let mut private = Cluster::new(cfg(8, 8, 1), prog());
-        let p = private.run();
+        let p = private.run().unwrap();
         let cont_p: u64 = p.per_core.iter().map(|c| c.fpu_cont).sum();
         assert_eq!(cont_p, 0, "private FPUs never contend");
         assert!(s.total_cycles > p.total_cycles);
@@ -394,7 +457,7 @@ mod tests {
         b.barrier();
         b.end();
         let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
-        let stats = cl.run();
+        let stats = cl.run().unwrap();
         // Everyone finishes at roughly the same cycle, after core 0's work.
         let idle: u64 = stats.per_core.iter().map(|c| c.barrier_idle).sum();
         assert!(idle > 7 * 150, "waiters must have slept: {idle}");
@@ -416,7 +479,7 @@ mod tests {
             b.hwloop_end();
             b.end();
             let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
-            let s = cl.run();
+            let s = cl.run().unwrap();
             s.per_core.iter().map(|c| c.tcdm_cont).sum::<u64>()
         };
         let spread_banks = {
@@ -430,7 +493,7 @@ mod tests {
             b.hwloop_end();
             b.end();
             let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
-            let s = cl.run();
+            let s = cl.run().unwrap();
             s.per_core.iter().map(|c| c.tcdm_cont).sum::<u64>()
         };
         assert!(same_bank > 100, "same-bank access must contend: {same_bank}");
@@ -447,7 +510,7 @@ mod tests {
         b.fadd(FpMode::F32, 4, 3, 3); // depends on the divide
         b.end();
         let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
-        let stats = cl.run();
+        let stats = cl.run().unwrap();
         let cont: u64 = stats.per_core.iter().map(|c| c.divsqrt_cont).sum();
         assert!(cont > 0, "8 cores sharing one DIV-SQRT must queue");
         assert_eq!(f32::from_bits(cl.cores[0].reg(4)), 3.0);
@@ -472,13 +535,13 @@ mod tests {
             let mut cl = Cluster::new(cfg(8, 8, pipe), prog());
             cl.perfect_icache = true;
             cl.limit_active_cores(1);
-            let s = cl.run();
+            let s = cl.run().unwrap();
             assert_eq!(s.per_core[0].wb_stall, 0, "pipe={pipe}");
         }
         let mut cl = Cluster::new(cfg(8, 8, 2), prog());
         cl.perfect_icache = true;
         cl.limit_active_cores(1);
-        let s = cl.run();
+        let s = cl.run().unwrap();
         // 16 collision events; the skid register absorbs 2 of 3 → 5 stalls.
         assert_eq!(s.per_core[0].wb_stall, 5);
     }
@@ -494,7 +557,7 @@ mod tests {
         b.end();
         let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
         cl.limit_active_cores(1);
-        let s = cl.run();
+        let s = cl.run().unwrap();
         assert_eq!(s.per_core[0].branch_stall, 7 * 2);
     }
 
@@ -508,7 +571,7 @@ mod tests {
         b.end();
         let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
         cl.limit_active_cores(1);
-        let s = cl.run();
+        let s = cl.run().unwrap();
         assert_eq!(s.per_core[0].l2_stall, 2 * 14);
         assert!(s.total_cycles >= 30);
     }
@@ -521,7 +584,7 @@ mod tests {
         b.end();
         let mut cl = Cluster::new(cfg(16, 16, 0), b.build());
         cl.limit_active_cores(4);
-        let s = cl.run();
+        let s = cl.run().unwrap();
         assert!(s.total_cycles < 50, "4-way barrier must not deadlock");
         assert_eq!(cl.cores[0].reg(regs::NCORES), 4);
     }
@@ -618,7 +681,7 @@ mod tests {
         let s = run_both(cfg(8, 8, 0), prog(), None);
         assert_eq!(s.per_core.len(), 8);
         let mut cl = Cluster::new(cfg(8, 8, 0), prog());
-        cl.run();
+        cl.run().unwrap();
         assert_eq!(cl.mem.load(mem::TCDM_BASE, crate::isa::MemSize::Word), 8);
         let mut tickets: Vec<u32> = (0..8)
             .map(|i| cl.mem.load(mem::TCDM_BASE + 4 + 4 * i, crate::isa::MemSize::Word))
@@ -651,7 +714,7 @@ mod tests {
         let s = run_both(cfg(8, 4, 1), prog(), None);
         assert_eq!(s.per_core.len(), 8);
         let mut cl = Cluster::new(cfg(8, 4, 1), prog());
-        cl.run();
+        cl.run().unwrap();
         assert_eq!(cl.mem.load(mem::TCDM_BASE + 4, crate::isa::MemSize::Word), 8);
     }
 
@@ -689,8 +752,8 @@ mod tests {
             a.mem.write_u32_slice(mem::L2_BASE, &[0xABCD_1234, 2, 3, 4]);
             let mut r = Cluster::new(c, prog());
             r.mem.write_u32_slice(mem::L2_BASE, &[0xABCD_1234, 2, 3, 4]);
-            let sa = a.run_with(Engine::Event);
-            let sr = r.run_with(Engine::Reference);
+            let sa = a.run_with(Engine::Event).unwrap();
+            let sr = r.run_with(Engine::Reference).unwrap();
             assert_eq!(sa.total_cycles, sr.total_cycles, "engines disagree on {c}");
             for (x, y) in sa.per_core.iter().zip(&sr.per_core) {
                 assert_eq!(x, y);
@@ -707,8 +770,8 @@ mod tests {
         let mut solo_ref = Cluster::new(cfg(8, 8, 1), prog());
         solo_ref.mem.write_u32_slice(mem::L2_BASE, &[7, 8, 9, 10]);
         solo_ref.limit_active_cores(1);
-        let se = solo.run_with(Engine::Event);
-        let sf = solo_ref.run_with(Engine::Reference);
+        let se = solo.run_with(Engine::Event).unwrap();
+        let sf = solo_ref.run_with(Engine::Reference).unwrap();
         assert_eq!(se.total_cycles, sf.total_cycles);
         assert_eq!(solo.cores[0].reg(5), 7);
     }
@@ -732,12 +795,12 @@ mod tests {
         };
         let c = cfg(8, 4, 1);
         let mut fresh = Cluster::new(c, prog());
-        let s1 = fresh.run();
+        let s1 = fresh.run().unwrap();
 
         let mut reused = Cluster::new(c, prog());
-        let _ = reused.run();
+        let _ = reused.run().unwrap();
         reused.reset();
-        let s2 = reused.run();
+        let s2 = reused.run().unwrap();
 
         assert_eq!(s1.total_cycles, s2.total_cycles);
         for (a, b) in s1.per_core.iter().zip(&s2.per_core) {
@@ -757,10 +820,10 @@ mod tests {
         b.end();
         let mut cl = Cluster::new(cfg(8, 8, 0), b.build());
         cl.limit_active_cores(2);
-        cl.run();
+        cl.run().unwrap();
         cl.reset();
         // All 8 cores participate again; the 8-way barrier must complete.
-        let s = cl.run();
+        let s = cl.run().unwrap();
         assert!(s.total_cycles < 50);
         assert_eq!(cl.cores[0].reg(regs::NCORES), 8);
         assert_eq!(s.per_core.iter().filter(|c| c.instrs > 0).count(), 8);

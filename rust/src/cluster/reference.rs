@@ -13,6 +13,7 @@
 
 use crate::isa::insn::Insn;
 
+use super::backend::RunError;
 use super::core::{CoreState, Producer};
 use super::counters::RunStats;
 use super::event::WAKEUP_LATENCY;
@@ -20,19 +21,26 @@ use super::mem::Region;
 use super::{Cluster, INT_DIV_LATENCY, TAKEN_BRANCH_CYCLES};
 
 impl Cluster {
-    /// Run to completion on the per-cycle reference loop.
-    pub fn run_reference(&mut self) -> RunStats {
+    /// Run to completion on the per-cycle reference loop. Exceeding
+    /// `self.max_cycles` is a [`RunError::Timeout`]; a cluster whose
+    /// remaining cores are all asleep is a [`RunError::Deadlock`].
+    pub fn run_reference(&mut self) -> Result<RunStats, RunError> {
         while self.now < self.max_cycles {
-            if self.step() {
-                break;
+            if self.step()? {
+                return Ok(self.collect_stats());
             }
         }
-        assert!(self.now < self.max_cycles, "simulation exceeded max_cycles (deadlock?)");
-        self.collect_stats()
+        Err(RunError::Timeout { budget: self.max_cycles })
     }
 
     /// Advance one cycle. Returns true when every core is done.
-    fn step(&mut self) -> bool {
+    fn step(&mut self) -> Result<bool, RunError> {
+        if let Some(f) = self.fault {
+            if self.now >= f.cycle {
+                self.fault = None;
+                self.apply_fault(f.site);
+            }
+        }
         let n = self.cores.len();
         let rot = (self.now as usize) % n;
         let mut all_done = true;
@@ -52,22 +60,34 @@ impl Cluster {
                         min_next = min_next.min(self.cores[ci].next_issue);
                         continue;
                     }
-                    self.issue(ci);
+                    self.issue(ci)?;
                     min_next = min_next.min(self.cores[ci].next_issue);
                 }
             }
         }
         if all_done {
-            return true;
+            return Ok(true);
+        }
+        // Nobody left running while somebody still sleeps: no SetEvent or
+        // barrier arrival can ever come, so the sleepers wait forever.
+        if !self.cores.iter().any(|c| matches!(c.state, CoreState::Running)) {
+            let asleep = self
+                .cores
+                .iter()
+                .filter(|c| matches!(c.state, CoreState::Sleeping { .. }))
+                .count();
+            if asleep > 0 {
+                return Err(RunError::Deadlock { asleep });
+            }
         }
         // Fast-forward across cycles where no core can issue (barrier sleeps
         // resolve inside issue(); DIV-SQRT / L2 waits are bulk-attributed).
         self.now = if min_next == u64::MAX { self.now + 1 } else { min_next.max(self.now + 1) };
-        false
+        Ok(false)
     }
 
     /// Attempt to issue the next instruction of core `ci` at `self.now`.
-    fn issue(&mut self, ci: usize) {
+    fn issue(&mut self, ci: usize) -> Result<(), RunError> {
         let t = self.now;
         let insn = self.program.insns[self.cores[ci].pc as usize];
         if self.trace_enabled() {
@@ -81,7 +101,7 @@ impl Cluster {
             let c = &mut self.cores[ci];
             c.counters.icache_stall += fetched - t;
             c.next_issue = fetched;
-            return;
+            return Ok(());
         }
 
         // 2. Operand scoreboard.
@@ -95,7 +115,7 @@ impl Cluster {
                 Producer::None => {}
             }
             c.next_issue = ready;
-            return;
+            return Ok(());
         }
 
         // 3. Write-back port conflict (§5.3.3): only with 2 pipeline stages,
@@ -113,7 +133,7 @@ impl Cluster {
                 c.wb_skid = 0;
                 c.counters.wb_stall += 1;
                 c.next_issue = t + 1;
-                return;
+                return Ok(());
             }
         }
 
@@ -159,7 +179,7 @@ impl Cluster {
                             let c = &mut self.cores[ci];
                             c.counters.tcdm_cont += 1;
                             c.next_issue = t + 1;
-                            return;
+                            return Ok(());
                         }
                         let c = &mut self.cores[ci];
                         let addr = c.mem_addr_and_postinc(base, offset, post_inc);
@@ -203,7 +223,7 @@ impl Cluster {
                             let c = &mut self.cores[ci];
                             c.counters.tcdm_cont += 1;
                             c.next_issue = t + 1;
-                            return;
+                            return Ok(());
                         }
                         let c = &mut self.cores[ci];
                         let addr = c.mem_addr_and_postinc(base, offset, post_inc);
@@ -304,7 +324,7 @@ impl Cluster {
                         let c = &mut self.cores[ci];
                         c.counters.fpu_cont += 1;
                         c.next_issue = t + 1;
-                        return;
+                        return Ok(());
                     }
                     let pipe = self.cfg.pipe as u64;
                     let c = &mut self.cores[ci];
@@ -325,16 +345,15 @@ impl Cluster {
             }
             Insn::Amo { op, rd, base, offset, rs } => {
                 let addr = (self.cores[ci].reg(base) as i64 + offset as i64) as u32;
-                assert!(
-                    matches!(self.mem.region_of(addr), Region::Tcdm),
-                    "atomic outside TCDM at {addr:#x}"
-                );
+                if !matches!(self.mem.region_of(addr), Region::Tcdm) {
+                    return Err(RunError::Fault(format!("atomic outside TCDM at {addr:#x}")));
+                }
                 let bank = self.mem.bank_of(addr);
                 if !self.mem.claim_bank(bank, t) {
                     let c = &mut self.cores[ci];
                     c.counters.tcdm_cont += 1;
                     c.next_issue = t + 1;
-                    return;
+                    return Ok(());
                 }
                 self.exec_amo(ci, op, rd, addr, rs, t);
                 let c = &mut self.cores[ci];
@@ -424,5 +443,6 @@ impl Cluster {
                 c.state = CoreState::Done;
             }
         }
+        Ok(())
     }
 }

@@ -286,24 +286,43 @@ impl MeasurementCache {
     }
 
     /// Merge entries persisted at `path` into the map; returns how many were
-    /// accepted. Rows from a different [`ENGINE_VERSION`] and rows that fail
-    /// to parse are skipped — a stale or corrupt cache degrades to a cold
-    /// start, it never fails a command or serves wrong data.
+    /// accepted. Rows from a different [`ENGINE_VERSION`] are skipped — a
+    /// stale cache degrades to a cold start, it never fails a command or
+    /// serves wrong data.
+    ///
+    /// A file judged **unreadable** — wrong magic line, or any row that
+    /// fails to decode (truncation, bit flips, pre-v4 schemas) — is
+    /// additionally moved aside to the first free `<name>.quarantined-<n>`
+    /// sibling ([`quarantine_file`]): the evidence survives for post-mortem
+    /// instead of being silently overwritten by the next save, while the
+    /// rows that *did* decode bit-exactly are still served. Version-skipped
+    /// rows that decode cleanly are not corruption and trigger no
+    /// quarantine.
     pub fn load_csv(&self, path: &Path) -> io::Result<usize> {
         let text = std::fs::read_to_string(path)?;
         let mut lines = text.lines();
         if lines.next() != Some(MAGIC) {
+            quarantine_file(path);
             return Ok(0);
         }
         let mut accepted = 0usize;
-        let mut map = self.map.lock().unwrap();
-        for line in lines {
-            if let Some((key, m)) = decode_row(line) {
-                if key.engine_version == ENGINE_VERSION {
-                    map.insert(key, m);
-                    accepted += 1;
+        let mut corrupt = false;
+        {
+            let mut map = self.map.lock().unwrap();
+            for line in lines {
+                match decode_row(line) {
+                    Some((key, m)) => {
+                        if key.engine_version == ENGINE_VERSION {
+                            map.insert(key, m);
+                            accepted += 1;
+                        }
+                    }
+                    None => corrupt = true,
                 }
             }
+        }
+        if corrupt {
+            quarantine_file(path);
         }
         Ok(accepted)
     }
@@ -350,6 +369,24 @@ impl MeasurementCache {
             }
         }
     }
+}
+
+/// Move an unreadable cache file to its first free
+/// `<name>.quarantined-<n>` sibling, preserving the bytes for post-mortem;
+/// returns the quarantine path. Best-effort: a rename failure (or 100
+/// existing quarantine siblings) leaves the file in place — the next save
+/// overwrites it atomically either way.
+fn quarantine_file(path: &Path) -> Option<std::path::PathBuf> {
+    for n in 0..100u32 {
+        let mut q = path.as_os_str().to_owned();
+        q.push(format!(".quarantined-{n}"));
+        let q = std::path::PathBuf::from(q);
+        if q.exists() {
+            continue;
+        }
+        return std::fs::rename(path, &q).ok().map(|()| q);
+    }
+    None
 }
 
 /// Mnemonic plus a `+b` suffix for the blocked-FPU-map ablation (the
@@ -591,6 +628,13 @@ mod tests {
         std::env::temp_dir().join(format!("transpfp-{}-{}", name, std::process::id()))
     }
 
+    /// The `<name>.quarantined-<n>` sibling [`quarantine_file`] produces.
+    fn quarantine_sibling(path: &Path, n: u32) -> std::path::PathBuf {
+        let mut q = path.as_os_str().to_owned();
+        q.push(format!(".quarantined-{n}"));
+        std::path::PathBuf::from(q)
+    }
+
     #[test]
     fn lookup_counts_hits_and_misses() {
         let cache = MeasurementCache::new();
@@ -619,7 +663,7 @@ mod tests {
 
         let mut cl = Cluster::new(cfg, w1.program.clone());
         let before = cl.decoded().fingerprint();
-        let _ = w1.run_in(&mut cl, cfg.cores);
+        w1.run_in(&mut cl, cfg.cores).unwrap();
         cl.reset();
         assert_eq!(cl.decoded().fingerprint(), before, "reset must not disturb the program");
         assert_eq!(workload_fingerprint(&w1), k1.workload, "fingerprint is pure");
@@ -663,8 +707,8 @@ mod tests {
     fn engine_parity_justifies_shared_key() {
         let cfg = ClusterConfig::new(8, 4, 1);
         let w = Benchmark::Matmul.build(Variant::Scalar, &cfg);
-        let (se, oe) = w.run_with(&cfg, cfg.cores, Engine::Event);
-        let (sr, or) = w.run_with(&cfg, cfg.cores, Engine::Reference);
+        let (se, oe) = w.run_with(&cfg, cfg.cores, Engine::Event).unwrap();
+        let (sr, or) = w.run_with(&cfg, cfg.cores, Engine::Reference).unwrap();
         assert_eq!(se.total_cycles, sr.total_cycles);
         assert_eq!(oe, or);
         assert_eq!(se.per_core, sr.per_core);
@@ -674,7 +718,7 @@ mod tests {
     fn csv_roundtrip_is_bit_exact() {
         let cache = MeasurementCache::new();
         let cfg = ClusterConfig::new(8, 8, 1);
-        let m = run_one(&cfg, Benchmark::Iir, Variant::Scalar);
+        let m = run_one(&cfg, Benchmark::Iir, Variant::Scalar).unwrap();
         let w = Benchmark::Iir.build(Variant::Scalar, &cfg);
         let key = CacheKey::new(&cfg, Benchmark::Iir, Variant::Scalar, &w);
         cache.insert(key, m.clone());
@@ -752,7 +796,10 @@ mod tests {
         let cache = MeasurementCache::new();
         assert_eq!(cache.load_csv(&path).unwrap(), 0, "v1/v2 rows must be dropped, not served");
         assert!(cache.is_empty());
-        std::fs::remove_file(&path).ok();
+        // Undecodable rows mark the file unreadable: it moved aside for
+        // post-mortem (satellite b of the robustness PR).
+        assert!(!path.exists(), "unreadable file must be quarantined");
+        std::fs::remove_file(quarantine_sibling(&path, 0)).unwrap();
 
         // PR 4's v3 layout: like v4 but without the fidelity tag (37 fields,
         // engine_version=3) and with a *valid* checksum over its own payload
@@ -776,7 +823,8 @@ mod tests {
         let path3 = tmp_path("cache-v3-row.csv");
         std::fs::write(&path3, format!("transpfp-cache-v1\n{v3_row}\n")).unwrap();
         assert_eq!(cache.load_csv(&path3).unwrap(), 0, "v3 rows must be dropped, not served");
-        std::fs::remove_file(&path3).ok();
+        assert!(!path3.exists(), "old-schema file must be quarantined");
+        std::fs::remove_file(quarantine_sibling(&path3, 0)).unwrap();
 
         // And even a v4-width row stamped with the old engine version is
         // rejected by the version check alone.
@@ -793,6 +841,9 @@ mod tests {
         let row = encode_row(&stale, &sample_measurement(&stale.cfg));
         std::fs::write(&path2, format!("transpfp-cache-v1\n{row}\n")).unwrap();
         assert_eq!(cache.load_csv(&path2).unwrap(), 0);
+        // A cleanly-decoding stale-version row is *not* corruption: the
+        // file stays put (no quarantine on a mere cold start).
+        assert!(path2.exists(), "version skip must not quarantine");
         std::fs::remove_file(&path2).ok();
     }
 
@@ -862,9 +913,48 @@ mod tests {
                     assert_eq!(got.agg, m.agg);
                 }
             }
+            // Satellite (b): a load that judged the file unreadable moved
+            // it aside byte-exactly instead of destroying the evidence —
+            // and the cold-start rebuild then publishes a fully loadable
+            // file next to the forensic copy.
+            let forensic = quarantine_sibling(&fuzz_path, 0);
+            if !fuzz_path.exists() {
+                assert_eq!(
+                    std::fs::read(&forensic).unwrap(),
+                    bytes,
+                    "forensic copy must hold the corrupt bytes verbatim"
+                );
+                cache.save_csv(&fuzz_path).unwrap();
+                let rebuilt = MeasurementCache::new();
+                assert_eq!(
+                    rebuilt.load_csv(&fuzz_path).unwrap(),
+                    originals.len(),
+                    "rebuilt cache must round-trip in full"
+                );
+                assert!(forensic.exists(), "rebuild must not clobber the forensic copy");
+            }
             std::fs::remove_file(&fuzz_path).ok();
+            std::fs::remove_file(&forensic).ok();
         });
         std::fs::remove_file(&path).ok();
+    }
+
+    /// Quarantine picks the first free `-<n>` sibling, so repeated
+    /// corruption events each keep their own evidence.
+    #[test]
+    fn quarantine_numbers_do_not_clobber_prior_evidence() {
+        let path = tmp_path("cache-quarantine-seq.csv");
+        let q0 = quarantine_sibling(&path, 0);
+        let q1 = quarantine_sibling(&path, 1);
+        std::fs::write(&q0, b"earlier evidence").unwrap();
+        std::fs::write(&path, b"bad magic entirely").unwrap();
+        let cache = MeasurementCache::new();
+        assert_eq!(cache.load_csv(&path).unwrap(), 0);
+        assert!(!path.exists());
+        assert_eq!(std::fs::read(&q0).unwrap(), b"earlier evidence", "prior evidence untouched");
+        assert_eq!(std::fs::read(&q1).unwrap(), b"bad magic entirely");
+        std::fs::remove_file(&q0).ok();
+        std::fs::remove_file(&q1).ok();
     }
 
     /// Scalar-16 variants have their own cache addresses and row encodings
@@ -911,13 +1001,17 @@ mod tests {
         std::fs::write(&path, body).unwrap();
         let cache = MeasurementCache::new();
         assert_eq!(cache.load_csv(&path).unwrap(), 0, "stale + garbage rows must be dropped");
-        std::fs::remove_file(&path).ok();
+        // The garbage row made the file unreadable → quarantined.
+        assert!(!path.exists());
+        std::fs::remove_file(quarantine_sibling(&path, 0)).unwrap();
 
-        // A file with an unknown magic line is ignored wholesale.
+        // A file with an unknown magic line is ignored wholesale (and
+        // quarantined — its content is unaccounted for).
         let path2 = tmp_path("cache-badmagic.csv");
         std::fs::write(&path2, "transpfp-cache-v999\nwhatever\n").unwrap();
         assert_eq!(cache.load_csv(&path2).unwrap(), 0);
-        std::fs::remove_file(&path2).ok();
+        assert!(!path2.exists());
+        std::fs::remove_file(quarantine_sibling(&path2, 0)).unwrap();
         assert!(cache.is_empty());
     }
 

@@ -22,10 +22,11 @@ pub use pareto::{
     accuracy_pareto_front, accuracy_pareto_table, accuracy_pareto_table_from,
     accuracy_pareto_table_with, pareto_front, pareto_table, pareto_table_from, pareto_table_with,
 };
-pub use query::{points, QueryEngine, QueryPlan, QueryPoint};
+pub use query::{points, QueryEngine, QueryError, QueryFailure, QueryPlan, QueryPoint};
 pub use sweep::{
-    max_jobs, run_one, run_one_at, run_one_functional_at, run_parallel, run_workload,
-    run_workload_functional, set_max_jobs, sweep, sweep_all, Measurement,
+    max_jobs, run_one, run_one_at, run_one_functional_at, run_parallel, run_parallel_reported,
+    run_workload, run_workload_functional, set_max_jobs, sweep, sweep_all, Measurement,
+    QuarantinedJob,
 };
 pub use tables::{
     fig3, fig4, fig5, fig5_with, fig6, fig6_with, fig7, fig7_with, fig8, fig8_with,
@@ -45,13 +46,13 @@ mod tests {
     #[test]
     fn energy_anchor() {
         let cfg = ClusterConfig::new(16, 16, 0);
-        let mv = run_one(&cfg, Benchmark::Fir, Variant::VEC);
+        let mv = run_one(&cfg, Benchmark::Fir, Variant::VEC).unwrap();
         assert!(
             mv.metrics.energy_eff > 120.0 && mv.metrics.energy_eff < 215.0,
             "FIR vector 16c16f0p = {} Gflop/s/W (paper: 167)",
             mv.metrics.energy_eff
         );
-        let ms = run_one(&cfg, Benchmark::Fir, Variant::Scalar);
+        let ms = run_one(&cfg, Benchmark::Fir, Variant::Scalar).unwrap();
         assert!(
             ms.metrics.energy_eff > 70.0 && ms.metrics.energy_eff < 130.0,
             "FIR scalar 16c16f0p = {} Gflop/s/W (paper: 99)",
@@ -63,7 +64,7 @@ mod tests {
     #[test]
     fn performance_anchor() {
         let cfg = ClusterConfig::new(16, 16, 1);
-        let m = run_one(&cfg, Benchmark::Fir, Variant::VEC);
+        let m = run_one(&cfg, Benchmark::Fir, Variant::VEC).unwrap();
         assert!(
             m.metrics.perf_gflops > 4.2 && m.metrics.perf_gflops < 7.6,
             "FIR vector 16c16f1p = {} Gflop/s (paper: 5.92)",
@@ -78,7 +79,7 @@ mod tests {
         let cfg = ClusterConfig::new(8, 8, 1);
         for b in Benchmark::all() {
             for v in [Variant::Scalar, Variant::VEC] {
-                let m = run_one(&cfg, b, v);
+                let m = run_one(&cfg, b, v).unwrap();
                 let (fp_ref, mem_ref) = b.table3_intensity(v);
                 assert!(
                     (m.fp_intensity - fp_ref).abs() < 0.13,
@@ -106,7 +107,7 @@ mod tests {
         for cfg in [ClusterConfig::new(8, 2, 0), ClusterConfig::new(16, 16, 2)] {
             for b in Benchmark::all() {
                 for v in [Variant::Scalar, Variant::VEC] {
-                    let m = run_one(&cfg, b, v);
+                    let m = run_one(&cfg, b, v).unwrap();
                     assert!(m.verified, "{} {} on {}", b.name(), v.label(), cfg);
                 }
             }

@@ -16,7 +16,7 @@
 //! (error↓, Gflop/s↑, Gflop/s/W↑) and strictly better on one — the
 //! error/efficiency trade-off curve of the transprecision claim (§2).
 
-use super::query::{points, QueryEngine};
+use super::query::{points, QueryEngine, QueryFailure};
 use super::sweep::Measurement;
 use crate::config::ClusterConfig;
 use crate::kernels::{Benchmark, Variant};
@@ -91,17 +91,17 @@ pub fn pareto_table_from(ms: &[Measurement]) -> Table {
 
 /// `transpfp pareto`: the frontier of the full 18×8×2 design space,
 /// resolved through `engine`'s measurement cache.
-pub fn pareto_table_with(engine: &QueryEngine) -> Table {
+pub fn pareto_table_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let pts = points(
         &ClusterConfig::design_space(),
         &Benchmark::all(),
         &[Variant::Scalar, Variant::VEC],
     );
-    pareto_table_from(&engine.query(&pts))
+    Ok(pareto_table_from(&engine.query(&pts)?))
 }
 
 /// [`pareto_table_with`] on the process-wide engine.
-pub fn pareto_table() -> Table {
+pub fn pareto_table() -> Result<Table, QueryFailure> {
     pareto_table_with(QueryEngine::global())
 }
 
@@ -173,13 +173,13 @@ pub fn accuracy_pareto_table_from(ms: &[Measurement]) -> Table {
 /// `transpfp pareto --acc`: the accuracy-extended frontier of the full
 /// design space crossed with the five-rung precision ladder, resolved
 /// through `engine`'s measurement cache.
-pub fn accuracy_pareto_table_with(engine: &QueryEngine) -> Table {
+pub fn accuracy_pareto_table_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let pts = points(&ClusterConfig::design_space(), &Benchmark::all(), &LADDER);
-    accuracy_pareto_table_from(&engine.query(&pts))
+    Ok(accuracy_pareto_table_from(&engine.query(&pts)?))
 }
 
 /// [`accuracy_pareto_table_with`] on the process-wide engine.
-pub fn accuracy_pareto_table() -> Table {
+pub fn accuracy_pareto_table() -> Result<Table, QueryFailure> {
     accuracy_pareto_table_with(QueryEngine::global())
 }
 

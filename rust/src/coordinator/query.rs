@@ -20,9 +20,10 @@ use std::sync::{Mutex, OnceLock};
 
 use super::cache::{CacheKey, CacheStats, Fidelity, MeasurementCache, CACHE_FILE};
 use super::sweep::{
-    run_one_at, run_one_functional_at, run_parallel, run_workload, run_workload_functional,
-    Measurement,
+    run_one_at, run_one_functional_at, run_parallel, run_parallel_reported, run_workload,
+    run_workload_functional, Measurement,
 };
+use crate::cluster::RunError;
 use crate::config::ClusterConfig;
 use crate::kernels::{Benchmark, Variant, Workload};
 
@@ -66,6 +67,62 @@ impl QueryPoint {
         self
     }
 }
+
+/// One unresolvable point of a batch: the point plus the structured
+/// execution error (hang, deadlock, architectural fault, or a quarantined
+/// worker panic folded into [`RunError::Fault`]).
+#[derive(Debug, Clone)]
+pub struct QueryError {
+    pub point: QueryPoint,
+    pub error: RunError,
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let p = &self.point;
+        write!(
+            f,
+            "{}/{} on {} @{} workers [{}]: {}",
+            p.bench.name(),
+            p.variant.label(),
+            p.cfg,
+            p.workers,
+            p.fidelity.tag(),
+            self.error
+        )
+    }
+}
+
+/// Structured report of a batch that could not fully resolve. Every point
+/// that *did* resolve was already inserted into the cache before this was
+/// returned, so a retry after fixing the bad points re-simulates nothing.
+#[derive(Debug, Clone)]
+pub struct QueryFailure {
+    /// The unresolvable points, in unique-point order.
+    pub errors: Vec<QueryError>,
+    /// Points requested (including duplicates).
+    pub requested: usize,
+    /// Distinct points that resolved (cache hit or successful run).
+    pub resolved: usize,
+}
+
+impl std::fmt::Display for QueryFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "query failed: {} of {} distinct point(s) unresolved ({} requested)",
+            self.errors.len(),
+            self.resolved + self.errors.len(),
+            self.requested
+        )?;
+        for e in &self.errors {
+            writeln!(f, "  - {e}")?;
+        }
+        write!(f, "resolved points were cached; rerun after fixing the points above")
+    }
+}
+
+impl std::error::Error for QueryFailure {}
 
 /// Cartesian product of configs × benches × variants, in the deterministic
 /// (config, bench, variant) nesting every sweep and table uses.
@@ -237,19 +294,27 @@ impl QueryEngine {
 
     /// Simulate the plan's misses in parallel, populate the cache, and
     /// return one measurement per requested point, in request order.
-    pub fn execute(&self, plan: QueryPlan) -> Vec<Measurement> {
+    ///
+    /// Misses run under `catch_unwind` in the worker pool: a point that
+    /// hangs, deadlocks, faults, or outright panics is collected into the
+    /// [`QueryFailure`] report while every *other* miss still completes
+    /// **and is cached** before the error returns — a retry after fixing
+    /// the bad points re-simulates nothing.
+    pub fn execute(&self, plan: QueryPlan) -> Result<Vec<Measurement>, QueryFailure> {
         let QueryPlan { mut unique, order } = plan;
+        let requested = order.len();
         let miss_idx: Vec<usize> = unique
             .iter()
             .enumerate()
             .filter_map(|(i, pp)| pp.resolved.is_none().then_some(i))
             .collect();
+        let mut errors: Vec<QueryError> = Vec::new();
         if !miss_idx.is_empty() {
             // A miss planned via the fingerprint memo has no prebuilt
             // workload; its worker rebuilds it (the build is deterministic).
             let jobs: Vec<(QueryPoint, Option<&Workload>)> =
                 miss_idx.iter().map(|&i| (unique[i].point, unique[i].workload.as_ref())).collect();
-            let results = run_parallel(&jobs, |(p, w)| match p.fidelity {
+            let (results, quarantined) = run_parallel_reported(&jobs, |(p, w)| match p.fidelity {
                 Fidelity::CycleAccurate => {
                     self.sim_runs.fetch_add(1, Ordering::Relaxed);
                     match w {
@@ -268,23 +333,54 @@ impl QueryEngine {
                 }
             });
             drop(jobs);
-            for (&i, m) in miss_idx.iter().zip(results) {
-                self.cache.insert(unique[i].key, m.clone());
-                unique[i].resolved = Some(m);
-                unique[i].workload = None;
+            let panicked: HashMap<usize, String> =
+                quarantined.into_iter().map(|q| (q.index, q.payload)).collect();
+            for (j, (&i, r)) in miss_idx.iter().zip(results).enumerate() {
+                match r {
+                    Some(Ok(m)) => {
+                        self.cache.insert(unique[i].key, m.clone());
+                        unique[i].resolved = Some(m);
+                        unique[i].workload = None;
+                    }
+                    Some(Err(e)) => {
+                        errors.push(QueryError { point: unique[i].point, error: e });
+                    }
+                    None => {
+                        let payload = panicked
+                            .get(&j)
+                            .cloned()
+                            .unwrap_or_else(|| "unknown panic".to_string());
+                        errors.push(QueryError {
+                            point: unique[i].point,
+                            error: RunError::Fault(format!("worker panicked: {payload}")),
+                        });
+                    }
+                }
             }
         }
-        order.into_iter().map(|ui| unique[ui].resolved.clone().expect("point resolved")).collect()
+        if !errors.is_empty() {
+            let resolved = unique.iter().filter(|pp| pp.resolved.is_some()).count();
+            return Err(QueryFailure { errors, requested, resolved });
+        }
+        Ok(order
+            .into_iter()
+            .map(|ui| unique[ui].resolved.clone().expect("point resolved"))
+            .collect())
     }
 
     /// Plan + execute in one step.
-    pub fn query(&self, pts: &[QueryPoint]) -> Vec<Measurement> {
+    pub fn query(&self, pts: &[QueryPoint]) -> Result<Vec<Measurement>, QueryFailure> {
         self.execute(self.plan(pts))
     }
 
     /// Resolve a single full-occupancy point.
-    pub fn one(&self, cfg: &ClusterConfig, bench: Benchmark, variant: Variant) -> Measurement {
-        self.query(&[QueryPoint::new(cfg, bench, variant)]).pop().expect("one measurement")
+    pub fn one(
+        &self,
+        cfg: &ClusterConfig,
+        bench: Benchmark,
+        variant: Variant,
+    ) -> Result<Measurement, QueryFailure> {
+        Ok(self.query(&[QueryPoint::new(cfg, bench, variant)])?.pop().expect("one measurement"))
     }
 
     /// Resolve a single point under a `workers`-core team.
@@ -294,8 +390,11 @@ impl QueryEngine {
         bench: Benchmark,
         variant: Variant,
         workers: usize,
-    ) -> Measurement {
-        self.query(&[QueryPoint::at(cfg, bench, variant, workers)]).pop().expect("one measurement")
+    ) -> Result<Measurement, QueryFailure> {
+        Ok(self
+            .query(&[QueryPoint::at(cfg, bench, variant, workers)])?
+            .pop()
+            .expect("one measurement"))
     }
 }
 
@@ -347,7 +446,7 @@ mod tests {
         assert_eq!(plan.unique_len(), 2);
         assert_eq!((plan.hit_count(), plan.miss_count()), (0, 2));
 
-        let ms = engine.query(&pts);
+        let ms = engine.query(&pts).expect("kernel points resolve");
         assert_eq!(ms.len(), 3);
         assert_eq!(ms[0].bench, Benchmark::Fir);
         assert_eq!(ms[1].bench, Benchmark::Iir);
@@ -368,12 +467,12 @@ mod tests {
     fn warm_queries_skip_simulation_and_reproduce_results() {
         let engine = QueryEngine::new();
         let pts = small_points();
-        let cold = engine.query(&pts);
+        let cold = engine.query(&pts).unwrap();
         let st_cold = engine.stats();
 
         let plan = engine.plan(&pts);
         assert_eq!((plan.hit_count(), plan.miss_count()), (2, 0), "warm plan must be all hits");
-        let warm = engine.execute(plan);
+        let warm = engine.execute(plan).unwrap();
         let st_warm = engine.stats();
         assert_eq!(st_warm.misses, st_cold.misses, "warm query must not simulate");
         assert_eq!(st_warm.hits, st_cold.hits + 2);
@@ -391,9 +490,9 @@ mod tests {
     fn occupancy_is_part_of_the_address() {
         let engine = QueryEngine::new();
         let cfg = ClusterConfig::new(8, 4, 1);
-        let full = engine.one(&cfg, Benchmark::Fir, Variant::Scalar);
-        let half = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 4);
-        let solo = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 1);
+        let full = engine.one(&cfg, Benchmark::Fir, Variant::Scalar).unwrap();
+        let half = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 4).unwrap();
+        let solo = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 1).unwrap();
         assert_eq!(engine.stats().entries, 3, "each occupancy has its own entry");
         assert_eq!((full.workers, half.workers, solo.workers), (8, 4, 1));
         assert!(
@@ -405,7 +504,7 @@ mod tests {
         );
         // Warm re-resolution hits for every occupancy.
         let st = engine.stats();
-        let warm = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 4);
+        let warm = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 4).unwrap();
         assert_eq!(engine.stats().misses, st.misses, "occupancy re-query must not simulate");
         assert_eq!(warm.cycles, half.cycles);
     }
@@ -422,7 +521,7 @@ mod tests {
             .into_iter()
             .map(|b| QueryPoint::functional(&cfg, b, Variant::VEC))
             .collect();
-        let ms = engine.query(&pts);
+        let ms = engine.query(&pts).unwrap();
         assert_eq!(engine.sim_runs(), 0, "functional plan must not simulate");
         assert_eq!(engine.functional_runs(), 2);
         for m in &ms {
@@ -433,7 +532,7 @@ mod tests {
         }
         // A cycle-accurate resolution is a separate entry with identical
         // accuracy but real timing.
-        let ca = engine.one(&cfg, Benchmark::Fir, Variant::VEC);
+        let ca = engine.one(&cfg, Benchmark::Fir, Variant::VEC).unwrap();
         assert_eq!(engine.sim_runs(), 1);
         assert_eq!(engine.stats().entries, 3);
         assert_eq!(ca.err.rel.to_bits(), ms[0].err.rel.to_bits(), "accuracy must be tier-equal");
@@ -441,10 +540,42 @@ mod tests {
         assert!(ca.cycles > 0);
         // Warm functional re-query hits.
         let before = engine.stats();
-        let warm = engine.query(&pts);
+        let warm = engine.query(&pts).unwrap();
         assert_eq!(engine.stats().misses, before.misses);
         assert_eq!(warm[0].err.rel.to_bits(), ms[0].err.rel.to_bits());
         assert_eq!(engine.functional_runs(), 2, "warm functional re-query must not re-run");
+    }
+
+    /// The failure report names every unresolved point with its structured
+    /// error class and states that resolved points were cached.
+    #[test]
+    fn query_failure_report_is_structured() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let fail = QueryFailure {
+            errors: vec![
+                QueryError {
+                    point: QueryPoint::new(&cfg, Benchmark::Matmul, Variant::VEC),
+                    error: RunError::Timeout { budget: 1000 },
+                },
+                QueryError {
+                    point: QueryPoint::functional(&cfg, Benchmark::Fir, Variant::Scalar),
+                    error: RunError::Fault("worker panicked: boom".to_string()),
+                },
+            ],
+            requested: 5,
+            resolved: 2,
+        };
+        let report = fail.to_string();
+        assert!(report.contains("2 of 4 distinct point(s) unresolved"), "got: {report}");
+        assert!(report.contains("5 requested"), "got: {report}");
+        assert!(report.contains("matmul/vector-f16"), "got: {report}");
+        assert!(report.contains("timeout"), "got: {report}");
+        assert!(report.contains("fir/scalar"), "got: {report}");
+        assert!(report.contains("worker panicked: boom"), "got: {report}");
+        assert!(report.contains("cached"), "got: {report}");
+        // The per-point line carries the config mnemonic and fidelity tag.
+        assert!(report.contains(&cfg.to_string()), "got: {report}");
+        assert!(report.contains("[fn]") && report.contains("[ca]"), "got: {report}");
     }
 
     #[test]

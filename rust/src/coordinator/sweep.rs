@@ -8,6 +8,7 @@
 //! deterministically `(config, bench, variant)` regardless of scheduling.
 
 use crate::cluster::counters::CoreCounters;
+use crate::cluster::RunError;
 use crate::config::ClusterConfig;
 use crate::kernels::{Benchmark, Variant, Workload};
 use crate::model::{self, Metrics};
@@ -46,8 +47,14 @@ pub struct Measurement {
     pub err: ErrorStats,
 }
 
-/// Run one benchmark variant on one configuration at full occupancy.
-pub fn run_one(cfg: &ClusterConfig, bench: Benchmark, variant: Variant) -> Measurement {
+/// Run one benchmark variant on one configuration at full occupancy. A
+/// point that cannot terminate (hang, deadlock, architectural fault) comes
+/// back as a structured [`RunError`] instead of a panic.
+pub fn run_one(
+    cfg: &ClusterConfig,
+    bench: Benchmark,
+    variant: Variant,
+) -> Result<Measurement, RunError> {
     run_one_at(cfg, bench, variant, cfg.cores)
 }
 
@@ -57,7 +64,7 @@ pub fn run_one_at(
     bench: Benchmark,
     variant: Variant,
     workers: usize,
-) -> Measurement {
+) -> Result<Measurement, RunError> {
     let w = bench.build(variant, cfg);
     run_workload(cfg, bench, variant, workers, &w)
 }
@@ -71,12 +78,12 @@ pub fn run_workload(
     variant: Variant,
     workers: usize,
     w: &Workload,
-) -> Measurement {
-    let (stats, out) = w.run_on(cfg, workers);
+) -> Result<Measurement, RunError> {
+    let (stats, out) = w.run_on(cfg, workers)?;
     let verified = w.verify(&out).is_ok();
     let err = error_stats(&out, &w.reference);
     let agg = stats.aggregate();
-    Measurement {
+    Ok(Measurement {
         cfg: *cfg,
         bench,
         variant,
@@ -89,7 +96,7 @@ pub fn run_workload(
         agg,
         verified,
         err,
-    }
+    })
 }
 
 /// Accuracy-only resolution of a point on the functional backend: the
@@ -103,11 +110,11 @@ pub fn run_workload_functional(
     variant: Variant,
     workers: usize,
     w: &Workload,
-) -> Measurement {
-    let (instrs, out) = w.run_functional(cfg, workers);
+) -> Result<Measurement, RunError> {
+    let (instrs, out) = w.run_functional(cfg, workers)?;
     let verified = w.verify(&out).is_ok();
     let err = error_stats(&out, &w.reference);
-    Measurement {
+    Ok(Measurement {
         cfg: *cfg,
         bench,
         variant,
@@ -125,7 +132,7 @@ pub fn run_workload_functional(
         mem_intensity: 0.0,
         verified,
         err,
-    }
+    })
 }
 
 /// [`run_workload_functional`] on a freshly built workload.
@@ -134,15 +141,16 @@ pub fn run_one_functional_at(
     bench: Benchmark,
     variant: Variant,
     workers: usize,
-) -> Measurement {
+) -> Result<Measurement, RunError> {
     let w = bench.build(variant, cfg);
     run_workload_functional(cfg, bench, variant, workers, &w)
 }
 
 /// Run the full design space (18 configs × 8 benchmarks × 2 variants),
 /// parallelized over std scoped threads. Results are in deterministic
-/// (config, bench, variant) order.
-pub fn sweep_all() -> Vec<Measurement> {
+/// (config, bench, variant) order; the first failing point aborts with its
+/// structured error (kernel workloads are hang-free by construction).
+pub fn sweep_all() -> Result<Vec<Measurement>, RunError> {
     sweep(&ClusterConfig::design_space(), &Benchmark::all(), &[Variant::Scalar, Variant::VEC])
 }
 
@@ -155,7 +163,7 @@ pub fn sweep(
     configs: &[ClusterConfig],
     benches: &[Benchmark],
     variants: &[Variant],
-) -> Vec<Measurement> {
+) -> Result<Vec<Measurement>, RunError> {
     let mut jobs = Vec::new();
     for cfg in configs {
         for b in benches {
@@ -164,7 +172,7 @@ pub fn sweep(
             }
         }
     }
-    run_parallel(&jobs, |&(cfg, b, v)| run_one(&cfg, b, v))
+    run_parallel(&jobs, |&(cfg, b, v)| run_one(&cfg, b, v)).into_iter().collect()
 }
 
 /// Worker-thread cap for [`run_parallel`] (the CLI's `--jobs N`). Zero
@@ -187,6 +195,27 @@ pub fn max_jobs() -> usize {
     }
 }
 
+/// A job whose closure panicked inside the worker pool. The point is
+/// pulled out of the result set (its slot stays `None`) and reported here
+/// instead of aborting the whole run.
+#[derive(Debug, Clone)]
+pub struct QuarantinedJob {
+    /// Index into the `jobs` slice handed to the driver.
+    pub index: usize,
+    /// Stringified panic payload (`&str`/`String` payloads verbatim).
+    pub payload: String,
+}
+
+fn panic_payload(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Lock-free parallel job driver shared by the raw sweep and the query
 /// planner (both its planning pass and its miss execution). Workers pull
 /// job indices from an atomic counter (dynamic load balancing) and buffer
@@ -194,7 +223,12 @@ pub fn max_jobs() -> usize {
 /// its pre-sized slot after joining, so results are in `jobs` order
 /// regardless of scheduling. Thread count is `available_parallelism`
 /// capped by [`max_jobs`] (the CLI `--jobs` knob).
-pub fn run_parallel<J, R, F>(jobs: &[J], run: F) -> Vec<R>
+///
+/// Each job body runs under `catch_unwind`: one panicking point is
+/// quarantined (index + payload, sorted by index) while every other job
+/// still completes and lands in its slot. No worker thread ever dies to a
+/// job panic, so a single bad point can no longer take down a campaign.
+pub fn run_parallel_reported<J, R, F>(jobs: &[J], run: F) -> (Vec<Option<R>>, Vec<QuarantinedJob>)
 where
     J: Sync,
     R: Send,
@@ -208,28 +242,55 @@ where
         .min(jobs.len().max(1));
     let mut results: Vec<Option<R>> = Vec::new();
     results.resize_with(jobs.len(), || None);
+    let mut quarantined: Vec<QuarantinedJob> = Vec::new();
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(|| {
-                    let mut local: Vec<(usize, R)> = Vec::new();
+                    let mut local: Vec<(usize, Result<R, String>)> = Vec::new();
                     loop {
                         let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         if i >= jobs.len() {
                             break;
                         }
-                        local.push((i, run(&jobs[i])));
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            run(&jobs[i])
+                        }));
+                        local.push((i, r.map_err(panic_payload)));
                     }
                     local
                 })
             })
             .collect();
         for h in handles {
-            for (i, r) in h.join().expect("sweep worker panicked") {
-                results[i] = Some(r);
+            // Only a non-unwinding abort (e.g. stack-overflow kill) can fail
+            // this join now; job panics were caught inside the loop.
+            for (i, r) in h.join().expect("sweep worker died outside catch_unwind") {
+                match r {
+                    Ok(v) => results[i] = Some(v),
+                    Err(payload) => quarantined.push(QuarantinedJob { index: i, payload }),
+                }
             }
         }
     });
+    quarantined.sort_by_key(|q| q.index);
+    (results, quarantined)
+}
+
+/// Infallible-closure convenience over [`run_parallel_reported`]: every
+/// job completes first, then a quarantined point (if any) re-raises its
+/// panic on the coordinator thread with the job index attached. Callers
+/// that want to survive bad points use the reported variant directly.
+pub fn run_parallel<J, R, F>(jobs: &[J], run: F) -> Vec<R>
+where
+    J: Sync,
+    R: Send,
+    F: Fn(&J) -> R + Sync,
+{
+    let (results, quarantined) = run_parallel_reported(jobs, run);
+    if let Some(q) = quarantined.first() {
+        panic!("sweep job {} panicked: {}", q.index, q.payload);
+    }
     results.into_iter().map(|r| r.expect("sweep slot unfilled")).collect()
 }
 
@@ -259,7 +320,7 @@ mod tests {
     #[test]
     fn functional_measurement_shape() {
         let cfg = ClusterConfig::new(8, 2, 0);
-        let m = run_one_functional_at(&cfg, Benchmark::Fir, Variant::Scalar, cfg.cores);
+        let m = run_one_functional_at(&cfg, Benchmark::Fir, Variant::Scalar, cfg.cores).unwrap();
         assert!(m.verified);
         assert!(m.err.rel.is_finite() && m.err.rel < 1e-4);
         assert_eq!((m.cycles, m.core_cycles), (0, 0));
@@ -267,7 +328,7 @@ mod tests {
         assert_eq!(m.agg.flops, 0);
         // Accuracy is tier-independent: the cycle-accurate run agrees bit
         // for bit.
-        let ca = run_one(&cfg, Benchmark::Fir, Variant::Scalar);
+        let ca = run_one(&cfg, Benchmark::Fir, Variant::Scalar).unwrap();
         assert_eq!(ca.err.rel.to_bits(), m.err.rel.to_bits());
         assert_eq!(ca.verified, m.verified);
     }
@@ -275,7 +336,8 @@ mod tests {
     #[test]
     fn sweep_slice_is_ordered_and_verified() {
         let configs = [ClusterConfig::new(8, 4, 1)];
-        let ms = sweep(&configs, &[Benchmark::Matmul, Benchmark::Fir], &[Variant::Scalar]);
+        let ms = sweep(&configs, &[Benchmark::Matmul, Benchmark::Fir], &[Variant::Scalar])
+            .expect("kernel workloads terminate");
         assert_eq!(ms.len(), 2);
         assert_eq!(ms[0].bench, Benchmark::Matmul);
         assert_eq!(ms[1].bench, Benchmark::Fir);
@@ -283,5 +345,54 @@ mod tests {
         assert!(ms.iter().all(|m| m.metrics.perf_gflops > 0.0));
         // binary32 runs sit within f32 rounding noise of the f64 reference.
         assert!(ms.iter().all(|m| m.err.rel.is_finite() && m.err.rel < 1e-4), "f32 error too big");
+    }
+
+    /// Satellite (a) of the robustness PR: a deliberately panicking job is
+    /// quarantined — index and payload land in the report — and every
+    /// other job still completes in its slot.
+    #[test]
+    fn panicking_job_is_quarantined_and_the_rest_complete() {
+        let jobs: Vec<usize> = (0..32).collect();
+        let (results, quarantined) = run_parallel_reported(&jobs, |&i| {
+            if i == 13 {
+                panic!("deliberate test panic at job {i}");
+            }
+            i * 7
+        });
+        assert_eq!(quarantined.len(), 1, "exactly one point quarantined");
+        assert_eq!(quarantined[0].index, 13);
+        assert!(
+            quarantined[0].payload.contains("deliberate test panic at job 13"),
+            "panic payload must be preserved verbatim, got: {}",
+            quarantined[0].payload
+        );
+        assert!(results[13].is_none(), "quarantined slot stays empty");
+        for (i, r) in results.iter().enumerate() {
+            if i != 13 {
+                assert_eq!(*r, Some(i * 7), "job {i} must still complete");
+            }
+        }
+    }
+
+    /// The infallible wrapper finishes the whole batch, then re-raises the
+    /// quarantined panic with the job index attached.
+    #[test]
+    fn run_parallel_reraises_quarantined_panic_with_index() {
+        let jobs: Vec<usize> = (0..8).collect();
+        let err = std::panic::catch_unwind(|| {
+            run_parallel(&jobs, |&i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+                i
+            })
+        })
+        .expect_err("wrapper must re-raise");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("re-raised payload is a formatted String");
+        assert!(msg.contains("job 5"), "index must be attached, got: {msg}");
+        assert!(msg.contains("boom"), "original payload must survive, got: {msg}");
     }
 }

@@ -12,9 +12,10 @@
 //! (occupancy speed-ups — team size is part of the cache address and
 //! [`Measurement`] carries `workers`/`core_cycles`).
 
-use super::query::{points, QueryEngine, QueryPoint};
+use super::query::{points, QueryEngine, QueryFailure, QueryPoint};
 use super::sweep::Measurement;
 use crate::cluster::counters::RunStats;
+use crate::cluster::RunError;
 use crate::config::{ClusterConfig, Corner};
 use crate::kernels::{Benchmark, Variant};
 use crate::model;
@@ -27,15 +28,15 @@ fn configs_for(cores: usize) -> Vec<ClusterConfig> {
 
 /// Table 3: FP / memory intensity per benchmark and variant — measured on
 /// the 8c8f1p configuration, side by side with the paper's values.
-pub fn table3() -> Table {
+pub fn table3() -> Result<Table, QueryFailure> {
     table3_with(QueryEngine::global())
 }
 
 /// [`table3`] through an explicit query engine.
-pub fn table3_with(engine: &QueryEngine) -> Table {
+pub fn table3_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let cfg = ClusterConfig::new(8, 8, 1);
     let measurements =
-        engine.query(&points(&[cfg], &Benchmark::all(), &[Variant::Scalar, Variant::VEC]));
+        engine.query(&points(&[cfg], &Benchmark::all(), &[Variant::Scalar, Variant::VEC]))?;
     let mut t = Table::new(vec![
         "Apps",
         "FP I. scal (paper)",
@@ -55,22 +56,22 @@ pub fn table3_with(engine: &QueryEngine) -> Table {
             format!("{:.2} ({memv:.2})", mv.mem_intensity),
         ]);
     }
-    t
+    Ok(t)
 }
 
 /// Tables 4 / 5: performance, energy efficiency and area efficiency for
 /// every benchmark on the 8-core (`cores = 8`) or 16-core (`cores = 16`)
 /// configurations, scalar and vector variants, with the per-row best
 /// configuration boxed and the normalized-average (NAVG) footer.
-pub fn table45(cores: usize) -> Table {
+pub fn table45(cores: usize) -> Result<Table, QueryFailure> {
     table45_with(QueryEngine::global(), cores)
 }
 
 /// [`table45`] through an explicit query engine.
-pub fn table45_with(engine: &QueryEngine, cores: usize) -> Table {
+pub fn table45_with(engine: &QueryEngine, cores: usize) -> Result<Table, QueryFailure> {
     let configs = configs_for(cores);
     let measurements =
-        engine.query(&points(&configs, &Benchmark::all(), &[Variant::Scalar, Variant::VEC]));
+        engine.query(&points(&configs, &Benchmark::all(), &[Variant::Scalar, Variant::VEC]))?;
     let find = |b: Benchmark, v: Variant, cfg: &ClusterConfig| -> &Measurement {
         measurements
             .iter()
@@ -135,7 +136,7 @@ pub fn table45_with(engine: &QueryEngine, cores: usize) -> Table {
         }
         t.row(row);
     }
-    t
+    Ok(t)
 }
 
 /// Fig 3: min / median / max fmax over the FPU counts, per core count ×
@@ -174,14 +175,14 @@ pub fn fig4() -> Table {
 /// through the query engine since ENGINE_VERSION 3: the activity rates
 /// regenerate from cached counters ([`model::Activity::from_measurement`]),
 /// so a warm `fig5` issues zero simulator runs.
-pub fn fig5() -> Table {
+pub fn fig5() -> Result<Table, QueryFailure> {
     fig5_with(QueryEngine::global())
 }
 
 /// [`fig5`] through an explicit query engine.
-pub fn fig5_with(engine: &QueryEngine) -> Table {
+pub fn fig5_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let configs = ClusterConfig::design_space();
-    let ms = engine.query(&points(&configs, &[Benchmark::Matmul], &[Variant::Scalar]));
+    let ms = engine.query(&points(&configs, &[Benchmark::Matmul], &[Variant::Scalar]))?;
     let mut t = Table::new(vec!["config", "P @100MHz NT (mW)", "P @100MHz ST (mW)"]);
     for m in &ms {
         let act = model::Activity::from_measurement(m);
@@ -189,7 +190,7 @@ pub fn fig5_with(engine: &QueryEngine) -> Table {
         let st = model::power_mw(&m.cfg, Corner::St, &act, 100.0);
         t.row(vec![m.cfg.mnemonic(), format!("{nt:.2}"), format!("{st:.2}")]);
     }
-    t
+    Ok(t)
 }
 
 /// Fig 6: parallel + vectorization speed-ups on the 16-core architectures:
@@ -197,12 +198,12 @@ pub fn fig5_with(engine: &QueryEngine) -> Table {
 /// 1/2/4/8/16 workers forked through the runtime, scalar and vector.
 /// Baseline: 1-worker team, scalar, same config. Occupancy is part of the
 /// cache address, so a warm `fig6` issues zero simulator runs.
-pub fn fig6() -> Table {
+pub fn fig6() -> Result<Table, QueryFailure> {
     fig6_with(QueryEngine::global())
 }
 
 /// [`fig6`] through an explicit query engine.
-pub fn fig6_with(engine: &QueryEngine) -> Table {
+pub fn fig6_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let mut t = Table::new(vec!["bench", "workers", "variant", "min", "avg", "max"]);
     let configs = configs_for(16);
     const OCCUPANCIES: [usize; 5] = [1, 2, 4, 8, 16];
@@ -218,7 +219,7 @@ pub fn fig6_with(engine: &QueryEngine) -> Table {
             }
         }
     }
-    let ms = engine.query(&pts);
+    let ms = engine.query(&pts)?;
     let mut it = ms.chunks_exact(configs.len());
     // Baselines: the (workers=1, scalar) row of each bench block.
     for b in Benchmark::all() {
@@ -245,22 +246,22 @@ pub fn fig6_with(engine: &QueryEngine) -> Table {
             }
         }
     }
-    t
+    Ok(t)
 }
 
 /// Fig 7: normalized average performance / energy efficiency / area
 /// efficiency versus the FPU sharing factor (pipeline fixed at 1).
-pub fn fig7() -> Table {
+pub fn fig7() -> Result<Table, QueryFailure> {
     fig7_with(QueryEngine::global())
 }
 
 /// [`fig7`] through an explicit query engine.
-pub fn fig7_with(engine: &QueryEngine) -> Table {
+pub fn fig7_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let mut t = Table::new(vec!["cores", "sharing", "PERF (norm)", "E.EFF (norm)", "A.EFF (norm)"]);
     for cores in [8usize, 16] {
         let configs: Vec<ClusterConfig> =
             [4usize, 2, 1].iter().map(|d| ClusterConfig::new(cores, cores / d, 1)).collect();
-        let (p, e, a) = averaged_metrics(engine, &configs);
+        let (p, e, a) = averaged_metrics(engine, &configs)?;
         let (pn, en, an) = (minmax_normalize(&p), minmax_normalize(&e), minmax_normalize(&a));
         for (i, d) in [4, 2, 1].iter().enumerate() {
             t.row(vec![
@@ -272,21 +273,21 @@ pub fn fig7_with(engine: &QueryEngine) -> Table {
             ]);
         }
     }
-    t
+    Ok(t)
 }
 
 /// Fig 8: normalized averages versus the pipeline depth (1/1 sharing fixed).
-pub fn fig8() -> Table {
+pub fn fig8() -> Result<Table, QueryFailure> {
     fig8_with(QueryEngine::global())
 }
 
 /// [`fig8`] through an explicit query engine.
-pub fn fig8_with(engine: &QueryEngine) -> Table {
+pub fn fig8_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let mut t = Table::new(vec!["cores", "pipe", "PERF (norm)", "E.EFF (norm)", "A.EFF (norm)"]);
     for cores in [8usize, 16] {
         let configs: Vec<ClusterConfig> =
             (0..=2u32).map(|p| ClusterConfig::new(cores, cores, p)).collect();
-        let (p, e, a) = averaged_metrics(engine, &configs);
+        let (p, e, a) = averaged_metrics(engine, &configs)?;
         let (pn, en, an) = (minmax_normalize(&p), minmax_normalize(&e), minmax_normalize(&a));
         for (i, pipe) in (0..=2u32).enumerate() {
             t.row(vec![
@@ -298,15 +299,15 @@ pub fn fig8_with(engine: &QueryEngine) -> Table {
             ]);
         }
     }
-    t
+    Ok(t)
 }
 
 /// Average the three metrics over all benchmarks × variants per config.
 fn averaged_metrics(
     engine: &QueryEngine,
     configs: &[ClusterConfig],
-) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
-    let ms = engine.query(&points(configs, &Benchmark::all(), &[Variant::Scalar, Variant::VEC]));
+) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>), QueryFailure> {
+    let ms = engine.query(&points(configs, &Benchmark::all(), &[Variant::Scalar, Variant::VEC]))?;
     let mut perf = vec![0.0; configs.len()];
     let mut eeff = vec![0.0; configs.len()];
     let mut aeff = vec![0.0; configs.len()];
@@ -317,19 +318,19 @@ fn averaged_metrics(
         eeff[i] += m.metrics.energy_eff / per_cfg;
         aeff[i] += m.metrics.area_eff / per_cfg;
     }
-    (perf, eeff, aeff)
+    Ok((perf, eeff, aeff))
 }
 
 /// Table 6: the SoA comparison. Competitor rows are the paper's quoted
 /// literature values; the three "This work" rows are **measured here** on
 /// the f32 MATMUL (the paper's methodology) and printed next to the values
 /// the paper reports for itself.
-pub fn table6() -> Table {
+pub fn table6() -> Result<Table, QueryFailure> {
     table6_with(QueryEngine::global())
 }
 
 /// [`table6`] through an explicit query engine.
-pub fn table6_with(engine: &QueryEngine) -> Table {
+pub fn table6_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let mut t = Table::new(vec![
         "platform",
         "domain",
@@ -356,7 +357,7 @@ pub fn table6_with(engine: &QueryEngine) -> Table {
     }
     for ps in crate::report::soa::paper_self_rows() {
         let cfg = ClusterConfig::parse(ps.mnemonic).unwrap();
-        let m = engine.one(&cfg, Benchmark::Matmul, Variant::Scalar);
+        let m = engine.one(&cfg, Benchmark::Matmul, Variant::Scalar)?;
         t.row(vec![
             format!("This work {} ({}) [measured]", ps.mnemonic, ps.role),
             "Embedded".to_string(),
@@ -380,7 +381,7 @@ pub fn table6_with(engine: &QueryEngine) -> Table {
             format!("{:.2}", ps.area_eff),
         ]);
     }
-    t
+    Ok(t)
 }
 
 /// Measurement rows in the `sweep --csv` column layout — the shared output
@@ -423,11 +424,11 @@ pub fn measurements_table(ms: &[Measurement]) -> Table {
 
 /// Helper for the validate path and examples: run a workload and return the
 /// stats (re-exported for binaries).
-pub fn run_stats(cfg: &ClusterConfig, b: Benchmark, v: Variant) -> RunStats {
+pub fn run_stats(cfg: &ClusterConfig, b: Benchmark, v: Variant) -> Result<RunStats, RunError> {
     let w = b.build(v, cfg);
-    let (stats, out) = w.run(cfg);
+    let (stats, out) = w.run(cfg)?;
     w.verify(&out).expect("workload verification");
-    stats
+    Ok(stats)
 }
 
 #[cfg(test)]
@@ -451,7 +452,7 @@ mod tests {
     #[test]
     fn fig7_sharing_trends() {
         // §5.3.2: performance grows with the sharing factor (1/4 → 1/1).
-        let t = fig7();
+        let t = fig7().expect("fig7 points resolve");
         let csv = t.to_csv();
         let rows: Vec<Vec<f64>> = csv
             .lines()
@@ -470,7 +471,7 @@ mod tests {
     fn fig8_pipeline_trends() {
         // §5.3.3: 1 stage is the performance sweet spot; energy efficiency
         // strictly decreases with pipeline depth.
-        let t = fig8();
+        let t = fig8().expect("fig8 points resolve");
         let csv = t.to_csv();
         let rows: Vec<Vec<f64>> = csv
             .lines()

@@ -1,0 +1,33 @@
+//! Fault injection: seeded single-event-upset (SEU) campaigns against the
+//! cycle-accurate cluster, with structured outcome classification and an
+//! optional detect-and-retry recovery loop.
+//!
+//! Near-sensor clusters run at near-threshold voltages where single-event
+//! upsets are a first-order concern; a simulator that can only *panic* on
+//! a corrupted run cannot measure vulnerability. This module drives the
+//! [`crate::cluster`] fault hooks ([`Cluster::arm_fault`]) end to end:
+//!
+//! * [`campaign`] — seeded campaigns sampling `(cycle, site)` upset points
+//!   into TCDM words, register-file cells, and in-flight DMA payloads
+//!   ([`FaultSite`]), classifying every injected run against the fault-free
+//!   baseline and the binary64 [`crate::kernels::Workload::reference`]
+//!   into the standard taxonomy (masked / tolerable / SDC / crash / hang).
+//!   Campaigns are bit-deterministic: the same seed and parameters produce
+//!   the same outcome CSV regardless of the `--jobs` worker count.
+//! * [`recovery`] — a bounded detect-and-retry policy (exponential
+//!   watchdog-budget backoff) for the *detectable* outcome classes; points
+//!   that stay broken after the retry budget are quarantined, mirroring
+//!   how a runtime would fence a persistently-failing tile.
+//!
+//! The CLI front-end is `transpfp inject` (see EXPERIMENTS.md §Faults).
+//!
+//! [`Cluster::arm_fault`]: crate::cluster::Cluster::arm_fault
+
+pub mod campaign;
+pub mod recovery;
+
+pub use crate::cluster::{ArmedFault, FaultSite};
+pub use campaign::{
+    run_campaign, CampaignReport, CampaignSpec, Outcome, PointReport, SiteClass,
+};
+pub use recovery::{retry_with_backoff, Recovery, RecoveryPolicy};

@@ -1,0 +1,145 @@
+//! Bounded detect-and-retry recovery for the *detectable* fault classes.
+//!
+//! Crashes and hangs are detectable at run granularity: the watchdog or the
+//! architectural fault check reports them as a structured
+//! [`crate::cluster::RunError`] instead of silently corrupted data. A
+//! runtime can therefore re-execute the run — the SEU model is transient,
+//! so a clean retry normally succeeds — while widening the watchdog budget
+//! each attempt in case the first detection was a too-tight budget rather
+//! than a genuine hang. Points that stay broken after the retry budget are
+//! **quarantined**: reported as persistent with the last observed error,
+//! the way a runtime would fence a failing tile instead of retrying it
+//! forever.
+//!
+//! The loop itself is policy-generic (it only sees a closure), so it is
+//! unit-tested here with synthetic failures and reused by
+//! [`super::campaign`] with real cluster re-runs.
+
+/// Retry policy: how many times to re-execute a detected-faulty run and
+/// how aggressively to widen the watchdog budget between attempts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryPolicy {
+    /// Maximum re-executions before the point is quarantined.
+    pub max_retries: u32,
+    /// Watchdog-budget multiplier applied before *each* attempt (attempt
+    /// `k` runs under `base_budget * factor^k`, saturating). Values below
+    /// one are treated as one (no backoff).
+    pub backoff_factor: u64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy { max_retries: 3, backoff_factor: 2 }
+    }
+}
+
+/// Terminal state of a recovery loop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Recovery {
+    /// An attempt completed cleanly; `attempts` runs were consumed (≥ 1).
+    Recovered { attempts: u32 },
+    /// Every retry failed — the point is persistent and must be fenced.
+    Quarantined { attempts: u32, last_error: String },
+}
+
+impl Recovery {
+    /// Attempts consumed, whichever way the loop ended.
+    pub fn attempts(&self) -> u32 {
+        match self {
+            Recovery::Recovered { attempts } | Recovery::Quarantined { attempts, .. } => *attempts,
+        }
+    }
+
+    /// Did the loop end with a clean run?
+    pub fn recovered(&self) -> bool {
+        matches!(self, Recovery::Recovered { .. })
+    }
+}
+
+/// Drive `attempt(k, budget)` for `k = 1..=max_retries` with an
+/// exponentially widened budget, stopping at the first success. The
+/// closure owns the actual re-execution; this loop owns the bound and the
+/// backoff so both are testable without a simulator.
+pub fn retry_with_backoff<F>(policy: &RecoveryPolicy, base_budget: u64, mut attempt: F) -> Recovery
+where
+    F: FnMut(u32, u64) -> Result<(), String>,
+{
+    let factor = policy.backoff_factor.max(1);
+    let mut budget = base_budget;
+    let mut last_error = String::from("no retries attempted");
+    for k in 1..=policy.max_retries {
+        budget = budget.saturating_mul(factor);
+        match attempt(k, budget) {
+            Ok(()) => return Recovery::Recovered { attempts: k },
+            Err(e) => last_error = e,
+        }
+    }
+    Recovery::Quarantined { attempts: policy.max_retries, last_error }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_retry_recovers_transient_failures() {
+        let rec = retry_with_backoff(&RecoveryPolicy::default(), 100, |_, _| Ok(()));
+        assert_eq!(rec, Recovery::Recovered { attempts: 1 });
+        assert!(rec.recovered());
+        assert_eq!(rec.attempts(), 1);
+    }
+
+    #[test]
+    fn backoff_doubles_budget_every_attempt() {
+        let mut budgets = Vec::new();
+        let rec = retry_with_backoff(&RecoveryPolicy::default(), 100, |k, budget| {
+            budgets.push(budget);
+            if k < 3 {
+                Err(format!("still broken at attempt {k}"))
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(budgets, vec![200, 400, 800]);
+        assert_eq!(rec, Recovery::Recovered { attempts: 3 });
+    }
+
+    #[test]
+    fn persistent_failures_are_quarantined_with_the_last_error() {
+        let policy = RecoveryPolicy { max_retries: 4, backoff_factor: 3 };
+        let rec = retry_with_backoff(&policy, 10, |k, _| Err(format!("attempt {k} failed")));
+        assert_eq!(
+            rec,
+            Recovery::Quarantined { attempts: 4, last_error: "attempt 4 failed".into() }
+        );
+        assert!(!rec.recovered());
+        assert_eq!(rec.attempts(), 4);
+    }
+
+    #[test]
+    fn zero_retries_quarantines_without_running_the_closure() {
+        let policy = RecoveryPolicy { max_retries: 0, backoff_factor: 2 };
+        let rec = retry_with_backoff(&policy, 10, |_, _| {
+            panic!("attempt closure must not run with max_retries = 0")
+        });
+        assert_eq!(
+            rec,
+            Recovery::Quarantined { attempts: 0, last_error: "no retries attempted".into() }
+        );
+    }
+
+    #[test]
+    fn budget_saturates_instead_of_overflowing() {
+        let mut seen = 0u64;
+        let rec = retry_with_backoff(
+            &RecoveryPolicy { max_retries: 2, backoff_factor: u64::MAX },
+            u64::MAX / 2,
+            |_, budget| {
+                seen = budget;
+                Err("broken".into())
+            },
+        );
+        assert_eq!(seen, u64::MAX);
+        assert!(!rec.recovered());
+    }
+}

@@ -371,7 +371,7 @@ mod tests {
     fn scalar_exact() {
         let cfg = ClusterConfig::new(8, 4, 1);
         let w = build(Variant::Scalar, &cfg, 16, 8);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
     }
 
@@ -380,7 +380,7 @@ mod tests {
         let cfg = ClusterConfig::new(8, 4, 1);
         for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
             let w = build(v, &cfg, 16, 8);
-            let (_, out) = w.run(&cfg);
+            let (_, out) = w.run(&cfg).unwrap();
             w.verify(&out).unwrap();
         }
     }
@@ -389,7 +389,7 @@ mod tests {
     fn vector_exact() {
         let cfg = ClusterConfig::new(8, 8, 0);
         let w = build(Variant::VEC, &cfg, 16, 8);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
     }
 
@@ -398,10 +398,10 @@ mod tests {
         let cfg = ClusterConfig::new(8, 8, 1);
         for tiles in [1usize, 2, 3, 6] {
             let w = build_tiled(&cfg, 16, 8, tiles);
-            let (_, out) = w.run(&cfg);
+            let (_, out) = w.run(&cfg).unwrap();
             w.verify(&out).unwrap_or_else(|e| panic!("tiles={tiles}: {e}"));
         }
-        let (_, solo) = build_tiled(&cfg, 16, 8, 2).run_on(&cfg, 1);
+        let (_, solo) = build_tiled(&cfg, 16, 8, 2).run_on(&cfg, 1).unwrap();
         build_tiled(&cfg, 16, 8, 2).verify(&solo).unwrap();
         // Tiling never moves arithmetic.
         let flat = build(Variant::Scalar, &cfg, 16, 8);
@@ -414,7 +414,7 @@ mod tests {
         let cfg = ClusterConfig::new(8, 8, 1);
         let w = build_tiled(&cfg, 128, 66, 8);
         assert!((128 * 66 + 126 * 64) * 4 > cfg.tcdm_bytes());
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
     }
 
@@ -424,7 +424,7 @@ mod tests {
         // thanks to register-resident coefficients.
         let cfg = ClusterConfig::new(8, 8, 1);
         let w = build(Variant::VEC, &cfg, 32, 32);
-        let (stats, _) = w.run(&cfg);
+        let (stats, _) = w.run(&cfg).unwrap();
         let mem = stats.aggregate().mem_intensity();
         assert!(mem < 0.40, "vector CONV mem intensity = {mem}");
     }

@@ -361,9 +361,9 @@ mod tests {
     fn scalar_exact_multicore() {
         let cfg = ClusterConfig::new(8, 4, 1);
         let w = build(Variant::Scalar, &cfg, 64, 3);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
-        let (_, o1) = w.run_on(&cfg, 1);
+        let (_, o1) = w.run_on(&cfg, 1).unwrap();
         w.verify(&o1).unwrap();
     }
 
@@ -371,7 +371,7 @@ mod tests {
     fn vector_exact() {
         let cfg = ClusterConfig::new(8, 8, 0);
         let w = build(Variant::VEC, &cfg, 64, 3);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
     }
 
@@ -380,9 +380,9 @@ mod tests {
         let cfg = ClusterConfig::new(8, 4, 1);
         for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
             let w = build(v, &cfg, 64, 3);
-            let (_, out) = w.run(&cfg);
+            let (_, out) = w.run(&cfg).unwrap();
             w.verify(&out).unwrap();
-            let (_, o1) = w.run_on(&cfg, 1);
+            let (_, o1) = w.run_on(&cfg, 1).unwrap();
             w.verify(&o1).unwrap();
         }
     }
@@ -393,8 +393,8 @@ mod tests {
         // barriers and halving work.
         let cfg = ClusterConfig::new(16, 16, 1);
         let w = build(Variant::Scalar, &cfg, 512, 3);
-        let (s1, _) = w.run_on(&cfg, 1);
-        let (s16, _) = w.run_on(&cfg, 16);
+        let (s1, _) = w.run_on(&cfg, 1).unwrap();
+        let (s16, _) = w.run_on(&cfg, 16).unwrap();
         let speedup = s1.total_cycles as f64 / s16.total_cycles as f64;
         assert!(speedup > 4.0 && speedup < 13.0, "DWT speedup = {speedup}");
     }

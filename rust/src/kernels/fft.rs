@@ -338,7 +338,7 @@ mod tests {
         let cfg = ClusterConfig::new(8, 4, 1);
         let n = 32;
         let w = build(Variant::Scalar, &cfg, n);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
         // Cross-check the mirror itself against an O(n²) DFT, undoing the
         // bit-reversed order.
@@ -361,7 +361,7 @@ mod tests {
     fn vector_exact_mirror() {
         let cfg = ClusterConfig::new(8, 8, 0);
         let w = build(Variant::VEC, &cfg, 32);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
     }
 
@@ -370,7 +370,7 @@ mod tests {
         let cfg = ClusterConfig::new(8, 4, 1);
         for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
             let w = build(v, &cfg, 32);
-            let (_, out) = w.run(&cfg);
+            let (_, out) = w.run(&cfg).unwrap();
             w.verify(&out).unwrap();
         }
     }
@@ -399,8 +399,8 @@ mod tests {
         let cfg = ClusterConfig::new(8, 8, 1);
         let ws = build(Variant::Scalar, &cfg, 128);
         let wv = build(Variant::VEC, &cfg, 128);
-        let (ss, _) = ws.run(&cfg);
-        let (sv, _) = wv.run(&cfg);
+        let (ss, _) = ws.run(&cfg).unwrap();
+        let (sv, _) = wv.run(&cfg).unwrap();
         let gain = ss.total_cycles as f64 / sv.total_cycles as f64;
         assert!(gain > 1.05 && gain < 1.6, "FFT vector gain = {gain}");
     }

@@ -199,9 +199,9 @@ mod tests {
     fn scalar_exact() {
         let cfg = ClusterConfig::new(8, 4, 1);
         let w = build(Variant::Scalar, &cfg, 64, 16);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
-        let (_, out1) = w.run_on(&cfg, 1);
+        let (_, out1) = w.run_on(&cfg, 1).unwrap();
         w.verify(&out1).unwrap();
     }
 
@@ -210,7 +210,7 @@ mod tests {
         let cfg = ClusterConfig::new(8, 8, 0);
         for v in [Variant::VEC, Variant::Vector(FpMode::VecBf16)] {
             let w = build(v, &cfg, 64, 16);
-            let (_, out) = w.run(&cfg);
+            let (_, out) = w.run(&cfg).unwrap();
             w.verify(&out).unwrap();
         }
     }
@@ -220,9 +220,9 @@ mod tests {
         let cfg = ClusterConfig::new(8, 4, 1);
         for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
             let w = build(v, &cfg, 64, 16);
-            let (_, out) = w.run(&cfg);
+            let (_, out) = w.run(&cfg).unwrap();
             w.verify(&out).unwrap();
-            let (_, o1) = w.run_on(&cfg, 1);
+            let (_, o1) = w.run_on(&cfg, 1).unwrap();
             w.verify(&o1).unwrap();
         }
     }
@@ -249,8 +249,8 @@ mod tests {
         let cfg = ClusterConfig::new(16, 16, 1);
         let ws = build(Variant::Scalar, &cfg, 256, 32);
         let wv = build(Variant::VEC, &cfg, 256, 32);
-        let (ss, _) = ws.run(&cfg);
-        let (sv, _) = wv.run(&cfg);
+        let (ss, _) = ws.run(&cfg).unwrap();
+        let (sv, _) = wv.run(&cfg).unwrap();
         let speedup = ss.total_cycles as f64 / sv.total_cycles as f64;
         assert!(speedup > 1.3 && speedup < 2.2, "FIR vector speedup = {speedup}");
     }

@@ -336,7 +336,7 @@ mod tests {
     fn scalar_exact() {
         let cfg = ClusterConfig::new(8, 4, 1);
         let w = build(Variant::Scalar, &cfg, 64);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
     }
 
@@ -344,7 +344,7 @@ mod tests {
     fn vector_exact_mirror() {
         let cfg = ClusterConfig::new(8, 8, 0);
         let w = build(Variant::VEC, &cfg, 64);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
     }
 
@@ -353,7 +353,7 @@ mod tests {
         let cfg = ClusterConfig::new(8, 4, 1);
         for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
             let w = build(v, &cfg, 64);
-            let (_, out) = w.run(&cfg);
+            let (_, out) = w.run(&cfg).unwrap();
             w.verify(&out).unwrap();
         }
     }
@@ -400,8 +400,8 @@ mod tests {
         // §5.3.1: IIR's parallel speed-up is modest.
         let cfg = ClusterConfig::new(16, 16, 1);
         let w = build(Variant::Scalar, &cfg, 512);
-        let (s1, _) = w.run_on(&cfg, 1);
-        let (s16, _) = w.run_on(&cfg, 16);
+        let (s1, _) = w.run_on(&cfg, 1).unwrap();
+        let (s16, _) = w.run_on(&cfg, 16).unwrap();
         let speedup = s1.total_cycles as f64 / s16.total_cycles as f64;
         assert!(speedup > 1.2 && speedup < 8.0, "IIR speedup = {speedup}");
     }

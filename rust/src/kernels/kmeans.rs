@@ -492,9 +492,9 @@ mod tests {
     fn scalar_exact() {
         let cfg = ClusterConfig::new(8, 4, 1);
         let w = build(Variant::Scalar, &cfg, 64, 8, 4);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
-        let (_, o1) = w.run_on(&cfg, 1);
+        let (_, o1) = w.run_on(&cfg, 1).unwrap();
         w.verify(&o1).unwrap();
     }
 
@@ -502,7 +502,7 @@ mod tests {
     fn vector_exact() {
         let cfg = ClusterConfig::new(8, 8, 0);
         let w = build(Variant::VEC, &cfg, 64, 8, 4);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
     }
 
@@ -511,7 +511,7 @@ mod tests {
         let cfg = ClusterConfig::new(8, 4, 1);
         for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
             let w = build(v, &cfg, 64, 8, 4);
-            let (_, out) = w.run(&cfg);
+            let (_, out) = w.run(&cfg).unwrap();
             w.verify(&out).unwrap();
         }
     }
@@ -534,7 +534,7 @@ mod tests {
         let w = build(Variant::Scalar, &cfg, 64, 8, 4);
         let mut cl = crate::cluster::Cluster::new(cfg, w.program.clone());
         w.stage_into(&mut cl.mem);
-        cl.run();
+        cl.run().unwrap();
         assert!(cl.fpus.divsqrt_ops >= 32, "centroid update must use fdiv");
     }
 }

@@ -394,9 +394,9 @@ mod tests {
     fn scalar_exact_on_one_and_eight_cores() {
         let cfg = ClusterConfig::new(8, 4, 1);
         let w = build(Variant::Scalar, &cfg, 16);
-        let (_, out1) = w.run_on(&cfg, 1);
+        let (_, out1) = w.run_on(&cfg, 1).unwrap();
         w.verify(&out1).unwrap();
-        let (_, out8) = w.run(&cfg);
+        let (_, out8) = w.run(&cfg).unwrap();
         w.verify(&out8).unwrap();
     }
 
@@ -404,7 +404,7 @@ mod tests {
     fn vector_f16_exact_mirror() {
         let cfg = ClusterConfig::new(8, 8, 0);
         let w = build(Variant::VEC, &cfg, 16);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
     }
 
@@ -412,7 +412,7 @@ mod tests {
     fn vector_bf16_exact_mirror() {
         let cfg = ClusterConfig::new(8, 8, 1);
         let w = build(Variant::Vector(FpMode::VecBf16), &cfg, 16);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
     }
 
@@ -421,9 +421,9 @@ mod tests {
         let cfg = ClusterConfig::new(8, 4, 1);
         for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
             let w = build(v, &cfg, 16);
-            let (_, out) = w.run(&cfg);
+            let (_, out) = w.run(&cfg).unwrap();
             w.verify(&out).unwrap();
-            let (_, o1) = w.run_on(&cfg, 1);
+            let (_, o1) = w.run_on(&cfg, 1).unwrap();
             w.verify(&o1).unwrap();
         }
     }
@@ -434,9 +434,9 @@ mod tests {
         // Small instance: exactness across tile counts and occupancies.
         for tiles in [1usize, 2, 4] {
             let w = build_tiled(&cfg, 16, tiles);
-            let (_, out) = w.run(&cfg);
+            let (_, out) = w.run(&cfg).unwrap();
             w.verify(&out).unwrap_or_else(|e| panic!("tiles={tiles}: {e}"));
-            let (_, o1) = w.run_on(&cfg, 1);
+            let (_, o1) = w.run_on(&cfg, 1).unwrap();
             w.verify(&o1).unwrap_or_else(|e| panic!("tiles={tiles} solo: {e}"));
         }
         // The tiled schedule computes exactly what the untiled kernel does.
@@ -453,7 +453,7 @@ mod tests {
         let w = build_tiled(&cfg, 96, 8);
         let dataset = 3 * 96 * 96 * 4;
         assert!(dataset > cfg.tcdm_bytes(), "scenario must exceed the TCDM");
-        let (stats, out) = w.run(&cfg);
+        let (stats, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
         assert!(stats.total_cycles > 0);
     }
@@ -466,7 +466,7 @@ mod tests {
             (Variant::VEC, (0.27, 0.41)),
         ] {
             let w = build(variant, &cfg, 32);
-            let (stats, _) = w.run(&cfg);
+            let (stats, _) = w.run(&cfg).unwrap();
             let agg = stats.aggregate();
             let fp = agg.fp_intensity();
             let mem = agg.mem_intensity();
@@ -480,8 +480,8 @@ mod tests {
         let cfg = ClusterConfig::new(8, 8, 1);
         let ws = build(Variant::Scalar, &cfg, 32);
         let wv = build(Variant::VEC, &cfg, 32);
-        let (ss, _) = ws.run(&cfg);
-        let (sv, _) = wv.run(&cfg);
+        let (ss, _) = ws.run(&cfg).unwrap();
+        let (sv, _) = wv.run(&cfg).unwrap();
         let speedup = ss.total_cycles as f64 / sv.total_cycles as f64;
         assert!(speedup > 1.3 && speedup < 2.3, "vectorization speedup = {speedup}");
     }

@@ -21,7 +21,7 @@ pub mod matmul;
 pub mod mirror;
 pub mod svm;
 
-use crate::cluster::backend::{BackendRun, EventBackend, ExecBackend, ReferenceBackend};
+use crate::cluster::backend::{BackendRun, EventBackend, ExecBackend, ReferenceBackend, RunError};
 use crate::cluster::counters::RunStats;
 use crate::cluster::mem::{Memory, TCDM_BASE};
 use crate::cluster::{Cluster, Engine, FunctionalBackend};
@@ -183,13 +183,19 @@ impl Workload {
         }
     }
 
-    /// Run on `cfg` with all cores; returns (stats, outputs).
-    pub fn run(&self, cfg: &ClusterConfig) -> (RunStats, Vec<f64>) {
+    /// Run on `cfg` with all cores; returns (stats, outputs). A run that
+    /// cannot terminate (hang, deadlock, architectural fault) comes back as
+    /// a structured [`RunError`] instead of a panic.
+    pub fn run(&self, cfg: &ClusterConfig) -> Result<(RunStats, Vec<f64>), RunError> {
         self.run_on(cfg, cfg.cores)
     }
 
     /// Run with only the first `workers` cores active (Fig 6 sweeps).
-    pub fn run_on(&self, cfg: &ClusterConfig, workers: usize) -> (RunStats, Vec<f64>) {
+    pub fn run_on(
+        &self,
+        cfg: &ClusterConfig,
+        workers: usize,
+    ) -> Result<(RunStats, Vec<f64>), RunError> {
         self.run_with(cfg, workers, Engine::Event)
     }
 
@@ -201,13 +207,13 @@ impl Workload {
         cfg: &ClusterConfig,
         workers: usize,
         engine: Engine,
-    ) -> (RunStats, Vec<f64>) {
+    ) -> Result<(RunStats, Vec<f64>), RunError> {
         let backend: &dyn ExecBackend = match engine {
             Engine::Event => &EventBackend,
             Engine::Reference => &ReferenceBackend,
         };
-        let (run, out) = self.run_on_backend(cfg, workers, backend);
-        (run.stats.expect("cycle-accurate backend returns stats"), out)
+        let (run, out) = self.run_on_backend(cfg, workers, backend)?;
+        Ok((run.stats.expect("cycle-accurate backend returns stats"), out))
     }
 
     /// Run on any execution backend: stage, execute, read the output
@@ -218,25 +224,34 @@ impl Workload {
         cfg: &ClusterConfig,
         workers: usize,
         backend: &dyn ExecBackend,
-    ) -> (BackendRun, Vec<f64>) {
-        let run = backend.run_program(cfg, &self.program, workers, &mut |mem| self.stage_into(mem));
+    ) -> Result<(BackendRun, Vec<f64>), RunError> {
+        let run =
+            backend.run_program(cfg, &self.program, workers, &mut |mem| self.stage_into(mem))?;
         let out = self.read_output(&run.mem);
-        (run, out)
+        Ok((run, out))
     }
 
     /// Architectural-only run on the [`FunctionalBackend`]: returns the
     /// retired-instruction count and the outputs. This is what the tuner's
     /// accuracy probes and the accuracy-only query fidelity execute.
-    pub fn run_functional(&self, cfg: &ClusterConfig, workers: usize) -> (u64, Vec<f64>) {
-        let (run, out) = self.run_on_backend(cfg, workers, &FunctionalBackend);
-        (run.instrs, out)
+    pub fn run_functional(
+        &self,
+        cfg: &ClusterConfig,
+        workers: usize,
+    ) -> Result<(u64, Vec<f64>), RunError> {
+        let (run, out) = self.run_on_backend(cfg, workers, &FunctionalBackend)?;
+        Ok((run.instrs, out))
     }
 
     /// Run inside an existing cluster built from this workload's program,
     /// resetting it first — sweeps and benches reuse the cluster's
     /// allocations (TCDM, I$, decoded program) across repetitions instead
     /// of rebuilding `Memory`/cores per run.
-    pub fn run_in(&self, cl: &mut Cluster, workers: usize) -> (RunStats, Vec<f64>) {
+    pub fn run_in(
+        &self,
+        cl: &mut Cluster,
+        workers: usize,
+    ) -> Result<(RunStats, Vec<f64>), RunError> {
         self.run_in_with(cl, workers, Engine::Event)
     }
 
@@ -246,7 +261,7 @@ impl Workload {
         cl: &mut Cluster,
         workers: usize,
         engine: Engine,
-    ) -> (RunStats, Vec<f64>) {
+    ) -> Result<(RunStats, Vec<f64>), RunError> {
         assert_eq!(
             (cl.program().name.as_str(), cl.program().len()),
             (self.program.name.as_str(), self.program.len()),
@@ -260,9 +275,9 @@ impl Workload {
         cl.reset();
         cl.limit_active_cores(workers);
         self.stage_into(&mut cl.mem);
-        let stats = cl.run_with(engine);
+        let stats = cl.run_with(engine)?;
         let out = self.read_output(&cl.mem);
-        (stats, out)
+        Ok((stats, out))
     }
 
     /// Verify `outputs` against the golden values.

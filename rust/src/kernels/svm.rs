@@ -306,7 +306,7 @@ mod tests {
     fn scalar_exact_all_cores() {
         let cfg = ClusterConfig::new(8, 4, 1);
         let w = build(Variant::Scalar, &cfg, 32, 16);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
         assert!(out[1] == 1.0 || out[1] == -1.0);
     }
@@ -316,7 +316,7 @@ mod tests {
         let cfg = ClusterConfig::new(8, 4, 1);
         for v in [Variant::SCALAR_F16, Variant::SCALAR_BF16] {
             let w = build(v, &cfg, 32, 16);
-            let (_, out) = w.run(&cfg);
+            let (_, out) = w.run(&cfg).unwrap();
             w.verify(&out).unwrap();
             assert!(out[1] == 1.0 || out[1] == -1.0);
         }
@@ -326,7 +326,7 @@ mod tests {
     fn vector_exact() {
         let cfg = ClusterConfig::new(8, 8, 0);
         let w = build(Variant::VEC, &cfg, 32, 16);
-        let (_, out) = w.run(&cfg);
+        let (_, out) = w.run(&cfg).unwrap();
         w.verify(&out).unwrap();
     }
 
@@ -335,8 +335,8 @@ mod tests {
         let cfg = ClusterConfig::new(8, 8, 1);
         let ws = build(Variant::Scalar, &cfg, 64, 32);
         let wv = build(Variant::VEC, &cfg, 64, 32);
-        let (_, os) = ws.run(&cfg);
-        let (_, ov) = wv.run(&cfg);
+        let (_, os) = ws.run(&cfg).unwrap();
+        let (_, ov) = wv.run(&cfg).unwrap();
         assert_eq!(os[1], ov[1], "16-bit quantization must not flip the decision");
         assert!((os[0] - ov[0]).abs() < 0.05 * os[0].abs().max(1.0));
     }

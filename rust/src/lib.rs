@@ -16,6 +16,8 @@
 //!   paper's tables and figures;
 //! * [`tuner`] — the accuracy-aware transprecision autotuner (per-kernel
 //!   precision ladders, error metrics, `transpfp tune`);
+//! * [`faults`] — seeded SEU injection campaigns with outcome
+//!   classification and detect-and-retry recovery (`transpfp inject`);
 //! * [`runtime`] — PJRT loading of the AOT-compiled JAX/Pallas goldens
 //!   (`artifacts/*.hlo.txt`) for numeric validation;
 //! * [`report`] — table/CSV emitters and the Table 6 SoA data.
@@ -26,6 +28,7 @@
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod faults;
 pub mod isa;
 pub mod kernels;
 pub mod model;

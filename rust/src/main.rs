@@ -13,6 +13,7 @@ use std::process::ExitCode;
 use transpfp::cluster::BackendKind;
 use transpfp::config::{ClusterConfig, Corner};
 use transpfp::coordinator::{self, QueryEngine};
+use transpfp::faults::{self, SiteClass};
 use transpfp::kernels::{Benchmark, Variant};
 use transpfp::model;
 use transpfp::report;
@@ -67,12 +68,23 @@ COMMANDS:
   fig8                    metrics vs pipeline stages
   validate [dir]          check simulator numerics vs XLA goldens (artifacts/)
   sweep                   run the full 18x8x2 design space, CSV to stdout
+  inject <cfg>            seeded SEU fault-injection campaign on one config:
+                          samples --rate upset points per benchmark x rung
+                          from the --seed stream, flips one bit per run in a
+                          --sites structure (TCDM word, register cell, or
+                          in-flight DMA payload), and classifies every point
+                          as masked / tolerable / sdc / crash / hang against
+                          the fault-free baseline and the binary64 reference
+                          (--budget splits tolerable from sdc). Summary table
+                          by default; --csv emits the per-point campaign CSV.
+                          Deterministic: same seed + flags => bit-identical
+                          CSV, regardless of --jobs
 
 FLAGS:
-  --csv                   CSV output for table/fig/pareto/query/tune commands
+  --csv                   CSV output for table/fig/pareto/query/tune/inject
   --no-cache              don't load or persist the measurement cache
   --acc                   accuracy-extended frontier (pareto only)
-  --budget <rel-err>      error budget for `tune` (default 1e-2)
+  --budget <rel-err>      error budget for `tune` and `inject` (default 1e-2)
   --tiles <t>             run the DMA double-buffered tiled kernel with t
                           tiles (`run` with MATMUL or CONV, scalar)
   --backend <b>           execution tier for `run`: event, reference or
@@ -81,6 +93,17 @@ FLAGS:
                           or cycle
   --jobs <n>              cap sweep/query worker threads (default: all
                           cores, at most 16)
+  --seed <s>              campaign sampling seed for `inject` (default 1)
+  --rate <n>              injected points per benchmark x rung for `inject`
+                          (default 8)
+  --sites <list>          structure classes for `inject`: comma-separated
+                          subset of tcdm,reg,dma, or `all` (default all)
+  --no-recover            disable the detect-and-retry recovery loop for
+                          `inject` (report raw outcomes only)
+
+Simulation failures are structured, never panics: a hung or deadlocked run
+is reported with its watchdog class, failing query points are listed per
+point (resolved points stay cached), and the exit code is non-zero.
 
 Measurements are memoized under artifacts/cache/measurements.csv, keyed by
 (program fingerprint, config, variant, occupancy, fidelity, engine
@@ -99,6 +122,10 @@ struct Cli {
     backend: Option<BackendKind>,
     probe: Option<tuner::Probe>,
     jobs: Option<usize>,
+    seed: Option<u64>,
+    rate: Option<usize>,
+    sites: Option<Vec<SiteClass>>,
+    no_recover: bool,
     args: Vec<String>,
 }
 
@@ -112,6 +139,10 @@ fn parse_cli<I: IntoIterator<Item = String>>(raw: I) -> Result<Cli, String> {
         backend: None,
         probe: None,
         jobs: None,
+        seed: None,
+        rate: None,
+        sites: None,
+        no_recover: false,
         args: Vec::new(),
     };
     let mut it = raw.into_iter();
@@ -166,11 +197,41 @@ fn parse_cli<I: IntoIterator<Item = String>>(raw: I) -> Result<Cli, String> {
                     _ => return Err(format!("bad `--jobs` value `{v}` (must be >= 1)")),
                 }
             }
+            "--seed" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| "flag `--seed` needs a value (e.g. `--seed 7`)".to_string())?;
+                match v.parse::<u64>() {
+                    Ok(s) => cli.seed = Some(s),
+                    _ => return Err(format!("bad `--seed` value `{v}`")),
+                }
+            }
+            "--rate" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| "flag `--rate` needs a value (e.g. `--rate 16`)".to_string())?;
+                match v.parse::<usize>() {
+                    Ok(n) if n >= 1 => cli.rate = Some(n),
+                    _ => return Err(format!("bad `--rate` value `{v}` (must be >= 1)")),
+                }
+            }
+            "--sites" => {
+                let v = it.next().ok_or_else(|| {
+                    "flag `--sites` needs a value (comma-separated subset of tcdm,reg,dma, or \
+                     `all`)"
+                        .to_string()
+                })?;
+                match SiteClass::parse_list(&v) {
+                    Some(s) => cli.sites = Some(s),
+                    None => return Err(format!("bad `--sites` value `{v}`")),
+                }
+            }
+            "--no-recover" => cli.no_recover = true,
             s if s.starts_with('-') => {
                 return Err(format!(
                     "unknown flag `{s}` (known flags: --csv, --no-cache, --acc, \
                      --budget <rel-err>, --tiles <t>, --backend <b>, --probe <p>, \
-                     --jobs <n>)"
+                     --jobs <n>, --seed <s>, --rate <n>, --sites <list>, --no-recover)"
                 ));
             }
             _ => cli.args.push(a),
@@ -215,6 +276,32 @@ fn report_backend_run(
         ExitCode::SUCCESS
     } else {
         ExitCode::FAILURE
+    }
+}
+
+/// Print a structured failure report to stderr and fail the process.
+/// Every simulation error reaches the user through here — the CLI never
+/// panics on a hung, deadlocked, or faulting run.
+fn fail(err: &dyn std::fmt::Display) -> ExitCode {
+    eprintln!("{err}");
+    ExitCode::FAILURE
+}
+
+/// Emit a query-backed table, or its structured failure report.
+fn emit_table(
+    t: Result<report::Table, coordinator::QueryFailure>,
+    csv: bool,
+) -> ExitCode {
+    match t {
+        Ok(t) => {
+            if csv {
+                print!("{}", t.to_csv());
+            } else {
+                print!("{}", t.render());
+            }
+            ExitCode::SUCCESS
+        }
+        Err(e) => fail(&e),
     }
 }
 
@@ -308,7 +395,10 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 // Tiled runs stream L2-resident datasets through the DMA;
                 // they are one-off scenario runs, not cached design points.
                 let kind = cli.backend.unwrap_or(BackendKind::Event);
-                let (run, out) = w.run_on_backend(&cfg, cfg.cores, kind.get());
+                let (run, out) = match w.run_on_backend(&cfg, cfg.cores, kind.get()) {
+                    Ok(r) => r,
+                    Err(e) => return fail(&e),
+                };
                 let verified = w.verify(&out).is_ok();
                 let title = format!(
                     "{} on {} (DMA double-buffered, {})",
@@ -321,7 +411,10 @@ fn dispatch(cli: &Cli) -> ExitCode {
             if let Some(kind) = cli.backend {
                 // Explicit tier selection: a direct, uncached run.
                 let w = bench.build(variant, &cfg);
-                let (run, out) = w.run_on_backend(&cfg, cfg.cores, kind.get());
+                let (run, out) = match w.run_on_backend(&cfg, cfg.cores, kind.get()) {
+                    Ok(r) => r,
+                    Err(e) => return fail(&e),
+                };
                 let verified = w.verify(&out).is_ok();
                 let title = format!(
                     "{} {} on {} ({})",
@@ -332,7 +425,10 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 );
                 return report_backend_run(&title, &run, None, verified);
             }
-            let m = QueryEngine::global().one(&cfg, bench, variant);
+            let m = match QueryEngine::global().one(&cfg, bench, variant) {
+                Ok(m) => m,
+                Err(e) => return fail(&e),
+            };
             println!("{} {} on {}:", bench.name(), variant.label(), cfg.mnemonic());
             println!("  cycles            {}", m.cycles);
             println!("  flops/cycle       {:.3}", m.metrics.flops_per_cycle);
@@ -409,18 +505,23 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 ("cache hits", plan.hit_count().to_string()),
                 ("cache misses", plan.miss_count().to_string()),
             ];
-            let ms = engine.execute(plan);
+            let ms = match engine.execute(plan) {
+                Ok(ms) => ms,
+                // Resolved points were cached before the failure surfaced, so
+                // a rerun after fixing the listed points re-simulates nothing.
+                Err(e) => return fail(&e),
+            };
             emit(coordinator::measurements_table(&ms));
             let mut summary = plan_summary.to_vec();
             summary.push(("entries", engine.stats().entries.to_string()));
             eprint!("{}", report::kv_table("query plan", &summary).render());
         }
         "pareto" => {
-            if cli.acc {
-                emit(coordinator::accuracy_pareto_table())
+            return if cli.acc {
+                emit_table(coordinator::accuracy_pareto_table(), csv)
             } else {
-                emit(coordinator::pareto_table())
-            }
+                emit_table(coordinator::pareto_table(), csv)
+            };
         }
         "tune" => {
             let budget = cli.budget.unwrap_or(tuner::DEFAULT_BUDGET);
@@ -437,10 +538,13 @@ fn dispatch(cli: &Cli) -> ExitCode {
             };
             let engine = QueryEngine::global();
             let probe = cli.probe.unwrap_or(tuner::Probe::Functional);
-            let reports: Vec<tuner::TuneReport> = configs
-                .iter()
-                .map(|cfg| tuner::tune_with_probe(engine, cfg, budget, probe))
-                .collect();
+            let mut reports: Vec<tuner::TuneReport> = Vec::with_capacity(configs.len());
+            for cfg in &configs {
+                match tuner::tune_with_probe(engine, cfg, budget, probe) {
+                    Ok(r) => reports.push(r),
+                    Err(e) => return fail(&e),
+                }
+            }
             emit(tuner::tune_table(&reports));
             for r in &reports {
                 let summary = [
@@ -460,24 +564,84 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 eprint!("{}", report::kv_table("tune", &summary).render());
             }
         }
-        "table3" => emit(coordinator::table3()),
-        "table4" => emit(coordinator::table45(8)),
-        "table5" => emit(coordinator::table45(16)),
-        "table6" => emit(coordinator::table6()),
+        "table3" => return emit_table(coordinator::table3(), csv),
+        "table4" => return emit_table(coordinator::table45(8), csv),
+        "table5" => return emit_table(coordinator::table45(16), csv),
+        "table6" => return emit_table(coordinator::table6(), csv),
         "fig3" => emit(coordinator::fig3()),
         "fig4" => emit(coordinator::fig4()),
-        "fig5" => emit(coordinator::fig5()),
-        "fig6" => emit(coordinator::fig6()),
-        "fig7" => emit(coordinator::fig7()),
-        "fig8" => emit(coordinator::fig8()),
+        "fig5" => return emit_table(coordinator::fig5(), csv),
+        "fig6" => return emit_table(coordinator::fig6(), csv),
+        "fig7" => return emit_table(coordinator::fig7(), csv),
+        "fig8" => return emit_table(coordinator::fig8(), csv),
         "sweep" => {
             let pts = coordinator::points(
                 &ClusterConfig::design_space(),
                 &Benchmark::all(),
                 &[Variant::Scalar, Variant::VEC],
             );
-            let ms = QueryEngine::global().query(&pts);
+            let ms = match QueryEngine::global().query(&pts) {
+                Ok(ms) => ms,
+                Err(e) => return fail(&e),
+            };
             print!("{}", coordinator::measurements_table(&ms).to_csv());
+        }
+        "inject" => {
+            let Some(&mnemonic) = args.get(1) else {
+                eprintln!(
+                    "usage: transpfp inject <cfg> [--seed <s>] [--rate <n>] \
+                     [--sites tcdm,reg,dma|all] [--budget <rel-err>] [--no-recover] [--csv]"
+                );
+                return ExitCode::FAILURE;
+            };
+            let Some(cfg) = ClusterConfig::parse(mnemonic) else {
+                eprintln!("bad config mnemonic {mnemonic}");
+                return ExitCode::FAILURE;
+            };
+            let mut spec = faults::CampaignSpec::new(cfg);
+            if let Some(s) = cli.seed {
+                spec.seed = s;
+            }
+            if let Some(r) = cli.rate {
+                spec.points_per_target = r;
+            }
+            if let Some(sites) = &cli.sites {
+                spec.sites = sites.clone();
+            }
+            if let Some(b) = cli.budget {
+                spec.budget = b;
+            }
+            if cli.no_recover {
+                spec.recovery = None;
+            }
+            // Injected runs never abort the campaign; only a broken
+            // fault-free baseline (the config itself cannot run) fails here.
+            let report = match faults::run_campaign(&spec) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("inject: fault-free baseline failed: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            if csv {
+                print!("{}", report.to_csv());
+            } else {
+                print!("{}", report.summary_table().render());
+            }
+            let counts = report.counts();
+            let summary = [
+                ("config", cfg.mnemonic()),
+                ("seed", spec.seed.to_string()),
+                ("points", report.points.len().to_string()),
+                ("masked/tolerable", format!("{}/{}", counts[0], counts[1])),
+                ("sdc/crash/hang", format!("{}/{}/{}", counts[2], counts[3], counts[4])),
+                (
+                    "recovered",
+                    report.points.iter().filter(|p| p.recovered).count().to_string(),
+                ),
+                ("vulnerability", format!("{:.3}", report.vulnerability())),
+            ];
+            eprint!("{}", report::kv_table("inject", &summary).render());
         }
         "validate" => {
             let dir = args.get(1).copied().unwrap_or("artifacts");
@@ -576,6 +740,27 @@ mod tests {
         assert!(cli(&["run", "--tiles"]).is_err(), "missing value must fail");
         assert!(cli(&["run", "--tiles", "0"]).is_err(), "zero tiles is invalid");
         assert!(cli(&["run", "--tiles", "x"]).is_err());
+    }
+
+    #[test]
+    fn inject_flags_take_values() {
+        let c = cli(&["inject", "8c8f1p", "--seed", "7", "--rate", "16"]).unwrap();
+        assert_eq!(c.seed, Some(7));
+        assert_eq!(c.rate, Some(16));
+        assert_eq!(c.args, vec!["inject", "8c8f1p"]);
+        assert!(!c.no_recover && c.sites.is_none());
+
+        let c = cli(&["inject", "8c8f1p", "--sites", "tcdm,dma", "--no-recover"]).unwrap();
+        assert_eq!(c.sites, Some(vec![SiteClass::Tcdm, SiteClass::Dma]));
+        assert!(c.no_recover);
+        let c = cli(&["inject", "8c8f1p", "--sites", "all"]).unwrap();
+        assert_eq!(c.sites, Some(SiteClass::all().to_vec()));
+
+        assert!(cli(&["inject", "--seed"]).is_err(), "missing value must fail");
+        assert!(cli(&["inject", "--seed", "x"]).is_err());
+        assert!(cli(&["inject", "--rate", "0"]).is_err(), "zero points is invalid");
+        assert!(cli(&["inject", "--sites", "l2"]).is_err(), "unknown site class");
+        assert!(cli(&["inject", "--sites"]).is_err());
     }
 
     #[test]

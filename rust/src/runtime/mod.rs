@@ -213,7 +213,7 @@ pub fn params_from_stage(
 pub fn validate_case(dir: &str, case: &Case) -> Result<(f64, usize)> {
     let cfg = ClusterConfig::new(8, 8, 0);
     let w = case.bench.build(case.variant, &cfg);
-    let (_, sim_out) = w.run(&cfg);
+    let (_, sim_out) = w.run(&cfg).map_err(|e| err(format!("simulation failed: {e}")))?;
     w.verify(&sim_out)
         .map_err(|e| err(format!("simulator self-check: {e}")))?;
 

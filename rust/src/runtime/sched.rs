@@ -257,7 +257,7 @@ mod tests {
                 for workers in [1usize, 3, 8] {
                     let mut cl = Cluster::new(cfg, probe(sched, n));
                     cl.limit_active_cores(workers);
-                    cl.run();
+                    cl.run().unwrap();
                     for i in 0..n {
                         let m = cl.mem.load(MARKS + 4 * i, crate::isa::MemSize::Word);
                         assert_eq!(
@@ -283,7 +283,7 @@ mod tests {
         let mut reference: Option<Vec<u32>> = None;
         for sched in policies(&mut al) {
             let mut cl = Cluster::new(cfg, probe(sched, n));
-            cl.run();
+            cl.run().unwrap();
             let out: Vec<u32> =
                 (0..n).map(|i| cl.mem.load(OUT + 4 * i, crate::isa::MemSize::Word)).collect();
             match &reference {
@@ -304,7 +304,7 @@ mod tests {
         let sched = Schedule::Dynamic { chunk: 2, queue: q };
         let run = |engine: Engine| {
             let mut cl = Cluster::new(cfg, probe(sched, 33));
-            let stats = cl.run_with(engine);
+            let stats = cl.run_with(engine).unwrap();
             let out: Vec<u32> =
                 (0..33).map(|i| cl.mem.load(OUT + 4 * i, crate::isa::MemSize::Word)).collect();
             (stats.total_cycles, stats.per_core.clone(), out)
@@ -328,7 +328,7 @@ mod tests {
         let q = WorkQueue::alloc(&mut al);
         let n = 64u32;
         let mut cl = Cluster::new(cfg, probe(Schedule::Guided { min_chunk: 2, queue: q }, n));
-        cl.run();
+        cl.run().unwrap();
         for i in 0..n {
             assert_eq!(cl.mem.load(MARKS + 4 * i, crate::isa::MemSize::Word), 1);
         }
@@ -344,7 +344,7 @@ mod tests {
         for workers in [1usize, 5, 16] {
             let mut cl = Cluster::new(cfg, probe(Schedule::Static, 31));
             cl.limit_active_cores(workers);
-            cl.run();
+            cl.run().unwrap();
             for i in 0..31 {
                 assert_eq!(
                     cl.mem.load(MARKS + 4 * i, crate::isa::MemSize::Word),

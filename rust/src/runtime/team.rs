@@ -15,7 +15,7 @@
 
 use crate::cluster::counters::RunStats;
 use crate::cluster::mem::{dma_reg, DMA_BASE};
-use crate::cluster::{Cluster, Engine};
+use crate::cluster::{Cluster, Engine, RunError};
 use crate::config::ClusterConfig;
 use crate::isa::builder::regs;
 use crate::isa::{ProgramBuilder, Reg};
@@ -64,13 +64,18 @@ impl Team {
     }
 
     /// Fork-join execution of a workload on this team: spawn, run to the
-    /// joining barrier, collect stats + outputs.
-    pub fn run(&self, w: &Workload) -> (RunStats, Vec<f64>) {
+    /// joining barrier, collect stats + outputs. A hung or deadlocked team
+    /// comes back as a structured [`RunError`], never a panic.
+    pub fn run(&self, w: &Workload) -> Result<(RunStats, Vec<f64>), RunError> {
         w.run_with(&self.cfg, self.workers, Engine::Event)
     }
 
     /// [`Team::run`] on a selectable issue engine (differential harness).
-    pub fn run_with(&self, w: &Workload, engine: Engine) -> (RunStats, Vec<f64>) {
+    pub fn run_with(
+        &self,
+        w: &Workload,
+        engine: Engine,
+    ) -> Result<(RunStats, Vec<f64>), RunError> {
         w.run_with(&self.cfg, self.workers, engine)
     }
 }
@@ -151,8 +156,8 @@ mod tests {
         let w = Benchmark::Fir.build(Variant::Scalar, &cfg);
         for workers in [1usize, 3, 8] {
             let team = Team::new(&cfg, workers);
-            let (ts, to) = team.run(&w);
-            let (rs, ro) = w.run_on(&cfg, workers);
+            let (ts, to) = team.run(&w).unwrap();
+            let (rs, ro) = w.run_on(&cfg, workers).unwrap();
             assert_eq!(ts.total_cycles, rs.total_cycles, "{workers} workers");
             assert_eq!(to, ro);
         }
@@ -184,7 +189,7 @@ mod tests {
         let cfg = ClusterConfig::new(8, 8, 0);
         let mut cl = Cluster::new(cfg, p.build());
         cl.mem.write_u32_slice(L2_BASE, &[11, 12, 13, 14, 21, 22, 23, 24]);
-        let stats = cl.run();
+        let stats = cl.run().unwrap();
         assert!(stats.total_cycles > 0);
         assert_eq!(cl.mem.load(TCDM_BASE, crate::isa::MemSize::Word), 11);
         assert_eq!(cl.mem.load(TCDM_BASE + 16, crate::isa::MemSize::Word), 21);

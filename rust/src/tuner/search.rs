@@ -25,7 +25,7 @@ use super::ladder::LADDER;
 use crate::config::ClusterConfig;
 use crate::coordinator::query::{points, QueryPoint};
 use crate::coordinator::sweep::Measurement;
-use crate::coordinator::{Fidelity, QueryEngine};
+use crate::coordinator::{Fidelity, QueryEngine, QueryFailure};
 use crate::kernels::Benchmark;
 use crate::report::Table;
 
@@ -141,7 +141,11 @@ fn select(rungs: &[Measurement], budget: f64) -> (usize, usize, usize) {
 /// functional accuracy probe: every ladder rung's `ErrorStats` comes from
 /// the cheap functional backend, and only the baseline plus the
 /// budget-admissible rungs are simulated cycle-accurately.
-pub fn tune_with(engine: &QueryEngine, cfg: &ClusterConfig, budget: f64) -> TuneReport {
+pub fn tune_with(
+    engine: &QueryEngine,
+    cfg: &ClusterConfig,
+    budget: f64,
+) -> Result<TuneReport, QueryFailure> {
     tune_with_probe(engine, cfg, budget, Probe::Functional)
 }
 
@@ -151,11 +155,11 @@ pub fn tune_with_probe(
     cfg: &ClusterConfig,
     budget: f64,
     probe: Probe,
-) -> TuneReport {
+) -> Result<TuneReport, QueryFailure> {
     let benches = Benchmark::all();
     let rung_sets: Vec<Vec<Measurement>> = match probe {
         Probe::CycleAccurate => {
-            let ms = engine.query(&points(&[*cfg], &benches, &LADDER));
+            let ms = engine.query(&points(&[*cfg], &benches, &LADDER))?;
             ms.chunks(LADDER.len()).map(|c| c.to_vec()).collect()
         }
         Probe::Functional => {
@@ -164,7 +168,7 @@ pub fn tune_with_probe(
                 .into_iter()
                 .map(|p| p.with_fidelity(Fidelity::Functional))
                 .collect();
-            let probes = engine.query(&probe_pts);
+            let probes = engine.query(&probe_pts)?;
             // 2. Cycle-accurate runs only for the baseline and the rungs
             // whose functional accuracy admits them.
             let mut ca_pts = Vec::new();
@@ -176,7 +180,7 @@ pub fn tune_with_probe(
                     }
                 }
             }
-            let mut ca = engine.query(&ca_pts).into_iter();
+            let mut ca = engine.query(&ca_pts)?.into_iter();
             // 3. Stitch full rung vectors: admissible rungs carry their
             // cycle-accurate measurement; rejected rungs keep the
             // functional probe as an inadmissibility witness (`select` can
@@ -216,11 +220,11 @@ pub fn tune_with_probe(
             }
         })
         .collect();
-    TuneReport { cfg: *cfg, budget, choices }
+    Ok(TuneReport { cfg: *cfg, budget, choices })
 }
 
 /// [`tune_with`] on the process-wide engine.
-pub fn tune(cfg: &ClusterConfig, budget: f64) -> TuneReport {
+pub fn tune(cfg: &ClusterConfig, budget: f64) -> Result<TuneReport, QueryFailure> {
     tune_with(QueryEngine::global(), cfg, budget)
 }
 
@@ -348,7 +352,7 @@ mod tests {
     fn tune_descends_and_is_warm_cacheable() {
         let engine = QueryEngine::new();
         let cfg = ClusterConfig::new(8, 8, 1);
-        let r = tune_with(&engine, &cfg, DEFAULT_BUDGET);
+        let r = tune_with(&engine, &cfg, DEFAULT_BUDGET).unwrap();
         assert_eq!(r.choices.len(), 8);
         assert!(
             r.sub_f32_count() >= 4,
@@ -364,7 +368,7 @@ mod tests {
         assert!(r.all_within_budget());
 
         let cold = engine.stats();
-        let warm = tune_with(&engine, &cfg, DEFAULT_BUDGET);
+        let warm = tune_with(&engine, &cfg, DEFAULT_BUDGET).unwrap();
         let after = engine.stats();
         assert_eq!(after.misses, cold.misses, "warm tune must not simulate");
         assert_eq!(warm.sub_f32_count(), r.sub_f32_count());
@@ -384,7 +388,7 @@ mod tests {
         let cfg = ClusterConfig::new(8, 8, 1);
         // A tight budget guarantees some rungs are rejected.
         let budget = 1e-3;
-        let r = tune_with_probe(&engine, &cfg, budget, Probe::Functional);
+        let r = tune_with_probe(&engine, &cfg, budget, Probe::Functional).unwrap();
         assert_eq!(engine.functional_runs(), 8 * LADDER.len() as u64);
         assert!(engine.sim_runs() >= 8, "the baseline is always cycle-accurate");
         let mut rejected = 0usize;
@@ -393,6 +397,7 @@ mod tests {
                 // Ground truth straight from the cached functional probe.
                 let fm = engine
                     .query(&[QueryPoint::functional(&cfg, c.bench, v)])
+                    .unwrap()
                     .pop()
                     .unwrap();
                 let adm = fm.verified && fm.err.within(budget);
@@ -418,9 +423,10 @@ mod tests {
     #[test]
     fn probe_modes_agree_on_selections() {
         let cfg = ClusterConfig::new(8, 4, 0);
-        let fast = tune_with_probe(&QueryEngine::new(), &cfg, DEFAULT_BUDGET, Probe::Functional);
-        let full =
-            tune_with_probe(&QueryEngine::new(), &cfg, DEFAULT_BUDGET, Probe::CycleAccurate);
+        let fast =
+            tune_with_probe(&QueryEngine::new(), &cfg, DEFAULT_BUDGET, Probe::Functional).unwrap();
+        let full = tune_with_probe(&QueryEngine::new(), &cfg, DEFAULT_BUDGET, Probe::CycleAccurate)
+            .unwrap();
         for (a, b) in fast.choices.iter().zip(&full.choices) {
             assert_eq!(a.rung, b.rung, "{}: probes disagree", a.bench.name());
             assert_eq!(a.greedy_rung, b.greedy_rung);
@@ -434,7 +440,7 @@ mod tests {
     fn tune_table_has_one_row_per_config_and_benchmark() {
         let engine = QueryEngine::new();
         let cfg = ClusterConfig::new(8, 2, 0);
-        let r = tune_with(&engine, &cfg, DEFAULT_BUDGET);
+        let r = tune_with(&engine, &cfg, DEFAULT_BUDGET).unwrap();
         let csv = tune_table(std::slice::from_ref(&r)).to_csv();
         assert_eq!(csv.lines().count(), 1 + 8);
         assert!(csv.starts_with("config,bench,chosen,rel_err,"));

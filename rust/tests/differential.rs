@@ -47,8 +47,8 @@ fn kernels_cycle_identical_across_engines() {
         for b in Benchmark::all() {
             for v in Variant::all() {
                 let w = b.build(v, &cfg);
-                let (sf, of) = w.run_with(&cfg, cfg.cores, Engine::Event);
-                let (sr, or) = w.run_with(&cfg, cfg.cores, Engine::Reference);
+                let (sf, of) = w.run_with(&cfg, cfg.cores, Engine::Event).unwrap();
+                let (sr, or) = w.run_with(&cfg, cfg.cores, Engine::Reference).unwrap();
                 let ctx = format!("{} {} on {cfg}", b.name(), v.label());
                 assert_eq!(of, or, "{ctx}: outputs differ");
                 assert_identical(&sf, &sr, &ctx);
@@ -66,8 +66,8 @@ fn partial_occupancy_cycle_identical() {
     for b in [Benchmark::Fir, Benchmark::Matmul, Benchmark::Kmeans, Benchmark::Fft] {
         for workers in [1usize, 3, 7, 16] {
             let w = b.build(Variant::Scalar, &cfg);
-            let (sf, of) = w.run_with(&cfg, workers, Engine::Event);
-            let (sr, or) = w.run_with(&cfg, workers, Engine::Reference);
+            let (sf, of) = w.run_with(&cfg, workers, Engine::Event).unwrap();
+            let (sr, or) = w.run_with(&cfg, workers, Engine::Reference).unwrap();
             let ctx = format!("{} with {workers} workers", b.name());
             assert_eq!(of, or, "{ctx}: outputs differ");
             assert_identical(&sf, &sr, &ctx);
@@ -88,7 +88,7 @@ fn kernels_architecturally_identical_across_three_backends() {
                 let w = b.build(v, &cfg);
                 let runs: Vec<_> = BackendKind::all()
                     .into_iter()
-                    .map(|k| w.run_on_backend(&cfg, cfg.cores, k.get()))
+                    .map(|k| w.run_on_backend(&cfg, cfg.cores, k.get()).expect("kernel workloads terminate"))
                     .collect();
                 let ctx = format!("{} {} on {cfg}", b.name(), v.label());
                 let (ev, ev_out) = &runs[0];
@@ -116,8 +116,8 @@ fn kernels_architecturally_identical_across_three_backends() {
 fn tiled_pipeline_architecturally_identical_functional_vs_event() {
     let cfg = ClusterConfig::new(8, 4, 1);
     let w = Benchmark::Matmul.build_tiled(&cfg, 4).expect("tiled MATMUL");
-    let (ev, ev_out) = w.run_on_backend(&cfg, cfg.cores, BackendKind::Event.get());
-    let (fu, fu_out) = w.run_on_backend(&cfg, cfg.cores, BackendKind::Functional.get());
+    let (ev, ev_out) = w.run_on_backend(&cfg, cfg.cores, BackendKind::Event.get()).unwrap();
+    let (fu, fu_out) = w.run_on_backend(&cfg, cfg.cores, BackendKind::Functional.get()).unwrap();
     assert_eq!(ev_out, fu_out, "tiled outputs differ");
     assert_eq!(ev.regs, fu.regs, "tiled registers differ");
     assert_eq!(ev.mem.tcdm_words(), fu.mem.tcdm_words(), "tiled TCDM differs");
@@ -208,8 +208,8 @@ fn random_programs_cycle_identical() {
         for &cfg in &configs {
             let mut fast = Cluster::new(cfg, prog.clone());
             let mut reference = Cluster::new(cfg, prog.clone());
-            let sf = fast.run_with(Engine::Event);
-            let sr = reference.run_with(Engine::Reference);
+            let sf = fast.run_with(Engine::Event).unwrap();
+            let sr = reference.run_with(Engine::Reference).unwrap();
             assert_identical(&sf, &sr, &format!("random program on {cfg}"));
             // Architectural state must agree too.
             for (cf, cr) in fast.cores.iter().zip(&reference.cores) {
@@ -339,8 +339,8 @@ fn runtime_scheduled_programs_cycle_identical() {
         let mut reference = Cluster::new(cfg, prog);
         fast.limit_active_cores(workers);
         reference.limit_active_cores(workers);
-        let sf = fast.run_with(Engine::Event);
-        let sr = reference.run_with(Engine::Reference);
+        let sf = fast.run_with(Engine::Event).unwrap();
+        let sr = reference.run_with(Engine::Reference).unwrap();
         assert_identical(&sf, &sr, &format!("runtime program on {cfg} with {workers} workers"));
         for (cf, cr) in fast.cores.iter().zip(&reference.cores) {
             assert_eq!(cf.regs, cr.regs, "core {} registers", cf.id);
@@ -386,7 +386,7 @@ fn runtime_scheduled_programs_architecturally_identical_across_backends() {
         let (prog, all_static) = random_runtime_program(rng, &cfg);
         let w_runs: Vec<_> = BackendKind::all()
             .into_iter()
-            .map(|k| k.run_program(&cfg, &prog, workers, &mut |_| {}))
+            .map(|k| k.run_program(&cfg, &prog, workers, &mut |_| {}).expect("runtime programs terminate"))
             .collect();
         let ev = &w_runs[0];
         for (k, run) in BackendKind::all().into_iter().zip(&w_runs).skip(1) {
@@ -424,8 +424,8 @@ fn sweep_is_deterministic() {
             })
             .collect()
     };
-    let a = sweep(&configs, &benches, &variants);
-    let b = sweep(&configs, &benches, &variants);
+    let a = sweep(&configs, &benches, &variants).unwrap();
+    let b = sweep(&configs, &benches, &variants).unwrap();
     assert_eq!(a.len(), configs.len() * benches.len() * variants.len());
     assert_eq!(key(&a), key(&b), "sweep results must be deterministic");
     // Slot order is (config, bench, variant) regardless of worker timing.
@@ -441,15 +441,108 @@ fn reset_reuse_matches_fresh_runs() {
     let cfg = ClusterConfig::new(8, 4, 1);
     for b in [Benchmark::Fir, Benchmark::Dwt] {
         let w = b.build(Variant::VEC, &cfg);
-        let (fresh_stats, fresh_out) = w.run(&cfg);
+        let (fresh_stats, fresh_out) = w.run(&cfg).unwrap();
         let mut cl = Cluster::new(cfg, w.program.clone());
         for rep in 0..3 {
-            let (stats, out) = w.run_in(&mut cl, cfg.cores);
+            let (stats, out) = w.run_in(&mut cl, cfg.cores).unwrap();
             assert_eq!(out, fresh_out, "{} rep {rep}: outputs drifted", b.name());
             assert_identical(&stats, &fresh_stats, &format!("{} rep {rep}", b.name()));
         }
         // Engine choice is also stable under reuse.
-        let (ref_stats, _) = w.run_in_with(&mut cl, cfg.cores, Engine::Reference);
+        let (ref_stats, _) = w.run_in_with(&mut cl, cfg.cores, Engine::Reference).unwrap();
         assert_identical(&fresh_stats, &ref_stats, &format!("{} reused reference", b.name()));
+    }
+}
+
+// ---------------------------------------------------------------- errors
+
+/// Error-path parity wall: a program that spins forever must classify as a
+/// `timeout` on every execution tier — the timed engines trip the watchdog's
+/// cycle budget, the functional interpreter its instruction budget. The
+/// budgets differ in unit, so parity is asserted on [`RunError::class`],
+/// exactly the label the fault campaigns and the coordinator report.
+#[test]
+fn infinite_loop_times_out_identically_across_backends() {
+    use transpfp::cluster::{RunError, Watchdog};
+    let mut b = ProgramBuilder::new("spin-forever");
+    b.li(1, 1);
+    b.label("spin");
+    b.bne(1, regs::ZERO, "spin");
+    b.end();
+    let prog = b.build();
+    let cfg = ClusterConfig::new(8, 4, 1);
+    let wd = Watchdog::with_budget(50_000);
+    let mut classes = Vec::new();
+    for k in BackendKind::all() {
+        let err = k
+            .run_watched(&cfg, &prog, cfg.cores, &mut |_| {}, wd)
+            .expect_err("an infinite loop must not complete on any tier");
+        assert!(
+            matches!(err, RunError::Timeout { budget: 50_000 }),
+            "[{k:?}] expected the configured budget in the error, got {err:?}"
+        );
+        classes.push((k, err.class()));
+    }
+    for (k, class) in &classes {
+        assert_eq!(*class, "timeout", "[{k:?}] wrong class");
+    }
+}
+
+/// A software event line nobody raises is an *exact* `Deadlock` on every
+/// tier: same variant, same count of parked cores — the error itself is
+/// architectural state, so the three-way wall compares it bit-for-bit,
+/// in both full- and partial-occupancy teams.
+#[test]
+fn never_signaled_wait_event_deadlocks_identically_across_backends() {
+    use transpfp::cluster::{RunError, Watchdog};
+    let mut b = ProgramBuilder::new("never-signaled");
+    b.bne(regs::CORE_ID, regs::ZERO, "worker");
+    b.end();
+    b.label("worker");
+    b.wait_event(5);
+    b.end();
+    let prog = b.build();
+    let cfg = ClusterConfig::new(8, 4, 1);
+    for workers in [8usize, 3] {
+        let expected = RunError::Deadlock { asleep: workers - 1 };
+        for k in BackendKind::all() {
+            let err = k
+                .run_watched(&cfg, &prog, workers, &mut |_| {}, Watchdog::with_budget(100_000))
+                .expect_err("parked workers can never be woken");
+            assert_eq!(err, expected, "[{k:?}] with {workers} workers");
+            assert_eq!(err.class(), "deadlock");
+        }
+    }
+}
+
+/// The classification is build-profile independent: the same fixtures give
+/// the same structured errors whether the crate is compiled with debug
+/// assertions or optimized (CI runs this file under both profiles).
+#[test]
+fn error_classes_do_not_depend_on_debug_assertions() {
+    use transpfp::cluster::{RunError, Watchdog};
+    // One hang + one deadlock fixture, checked for stable classes; the
+    // assert is intentionally profile-agnostic (no cfg!(debug_assertions)
+    // branches) — running this test in both CI profiles is the guarantee.
+    let mut spin = ProgramBuilder::new("spin-profile");
+    spin.li(1, 1);
+    spin.label("s");
+    spin.bne(1, regs::ZERO, "s");
+    spin.end();
+    let spin = spin.build();
+    let mut dead = ProgramBuilder::new("dead-profile");
+    dead.wait_event(7);
+    dead.end();
+    let dead = dead.build();
+    let cfg = ClusterConfig::new(8, 2, 0);
+    for k in BackendKind::all() {
+        let t = k
+            .run_watched(&cfg, &spin, cfg.cores, &mut |_| {}, Watchdog::with_budget(20_000))
+            .expect_err("spin");
+        assert_eq!(t.class(), "timeout", "[{k:?}]");
+        let d = k
+            .run_watched(&cfg, &dead, cfg.cores, &mut |_| {}, Watchdog::with_budget(20_000))
+            .expect_err("dead");
+        assert_eq!(d, RunError::Deadlock { asleep: cfg.cores }, "[{k:?}]");
     }
 }

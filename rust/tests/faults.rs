@@ -1,0 +1,149 @@
+//! Fault-injection campaign walls: the simulation hot path survives SEUs,
+//! hangs, and worker panics with zero lost points, and campaigns are
+//! bit-deterministic in their seed and independent of the worker count.
+
+use transpfp::cluster::{ArmedFault, Cluster, FaultSite};
+use transpfp::config::ClusterConfig;
+use transpfp::coordinator;
+use transpfp::faults::{run_campaign, CampaignSpec, Outcome, RecoveryPolicy, SiteClass};
+use transpfp::isa::{regs, ProgramBuilder};
+use transpfp::kernels::{Benchmark, Variant};
+
+/// The headline robustness gate: a fuzzed campaign of 200+ injected points
+/// over the full benchmark suite (TCDM, register-file and DMA upsets alike)
+/// completes with **every** point classified into the five-way taxonomy and
+/// **zero** points lost — no injected run may panic the process or stall
+/// the sweep, whatever the upset does to the simulated cluster.
+#[test]
+fn fuzzed_campaign_of_200_points_loses_nothing() {
+    let mut spec = CampaignSpec::new(ClusterConfig::new(8, 8, 1));
+    spec.seed = 0xF00D;
+    spec.points_per_target = 13; // 13 × 8 benchmarks × 2 variants = 208
+    spec.recovery = Some(RecoveryPolicy::default());
+    let report = run_campaign(&spec).expect("fault-free baselines run clean");
+
+    assert_eq!(report.points.len(), 208, "no sampled point may be lost");
+    for (i, p) in report.points.iter().enumerate() {
+        assert_eq!(p.index, i, "points stay in sampling order");
+        assert!(Outcome::all().contains(&p.outcome), "point {i} unclassified");
+        match p.outcome {
+            // Detected outcomes carry the structured error and, with
+            // recovery on, consumed at least one retry.
+            Outcome::Crash | Outcome::Hang => {
+                assert!(!p.detail.is_empty(), "point {i}: detected outcome without detail");
+                // Quarantined worker panics bypass recovery (the worker is
+                // gone); every other detected outcome consumed a retry.
+                assert!(
+                    p.attempts >= 1 || p.detail.starts_with("worker panicked"),
+                    "point {i}: recovery never ran on a detected outcome"
+                );
+            }
+            Outcome::Masked => assert!(p.detail.is_empty()),
+            // Divergent-but-completed runs carry the quantified error.
+            Outcome::Tolerable | Outcome::Sdc => {
+                assert!(p.detail.starts_with("rel="), "point {i}: missing error detail")
+            }
+        }
+        // SEUs are transient: recovery can only be claimed on detectable
+        // outcomes, and undetectable ones never consume retries.
+        if p.recovered {
+            assert!(p.outcome.is_detectable(), "point {i}: recovered an undetectable outcome");
+        }
+    }
+    // The class totals partition the campaign.
+    assert_eq!(report.counts().iter().sum::<usize>(), report.points.len());
+    // One CSV row per point, plus the header.
+    assert_eq!(report.to_csv().lines().count(), 209);
+    // Something actually happened: a 208-point campaign over three site
+    // classes never comes back all-masked.
+    assert!(report.counts()[0] < 208, "campaign produced no observable upsets");
+}
+
+/// Forced hang through the injection seam: flipping the sign bit of a loop
+/// counter register turns a 4-iteration loop into a ~2^31-iteration one,
+/// and the watchdog classifies the run on the hang path instead of
+/// spinning — the exact mechanism campaign points rely on.
+#[test]
+fn forced_register_hang_is_a_structured_timeout() {
+    let mut b = ProgramBuilder::new("loop-counter-upset");
+    b.li(1, 4);
+    b.label("loop");
+    b.addi(1, 1, -1);
+    b.bne(1, regs::ZERO, "loop");
+    b.barrier();
+    b.end();
+    let mut cl = Cluster::new(ClusterConfig::new(8, 4, 1), b.build());
+    cl.max_cycles = 50_000;
+    cl.arm_fault(ArmedFault {
+        cycle: 2,
+        site: FaultSite::RegCell { core: 0, reg: 1, bit: 31 },
+    });
+    let err = cl.run().expect_err("the flipped counter must outlive the watchdog");
+    assert_eq!(err.class(), "timeout", "hang-class detection, got {err:?}");
+}
+
+/// Same seed, same flags — bit-identical outcome CSV whether the campaign
+/// runs on one worker or many (`--jobs 1` vs `--jobs N`): sampling happens
+/// serially up front and classification is a pure function of the point.
+#[test]
+fn campaign_csv_is_identical_across_worker_counts() {
+    let mut spec = CampaignSpec::new(ClusterConfig::new(8, 4, 1));
+    spec.seed = 7;
+    spec.points_per_target = 4;
+    spec.benches = vec![Benchmark::Fir, Benchmark::Dwt];
+    spec.variants = vec![Variant::Scalar, Variant::VEC];
+    let prev = coordinator::max_jobs();
+    coordinator::set_max_jobs(1);
+    let serial = run_campaign(&spec).expect("baselines run").to_csv();
+    coordinator::set_max_jobs(8);
+    let parallel = run_campaign(&spec).expect("baselines run").to_csv();
+    coordinator::set_max_jobs(prev);
+    assert_eq!(serial, parallel, "--jobs must not change campaign outcomes");
+    assert_eq!(serial.lines().count(), 17, "header + 4 points × 4 targets");
+}
+
+/// Site-class filtering is honored: a TCDM-only campaign samples TCDM
+/// sites exclusively, and the CSV encodes each site unambiguously.
+#[test]
+fn site_filter_restricts_the_sampled_sites() {
+    let mut spec = CampaignSpec::new(ClusterConfig::new(8, 4, 1));
+    spec.seed = 11;
+    spec.points_per_target = 6;
+    spec.sites = vec![SiteClass::Tcdm];
+    spec.benches = vec![Benchmark::Fir];
+    spec.variants = vec![Variant::Scalar];
+    let report = run_campaign(&spec).expect("baselines run");
+    assert_eq!(report.points.len(), 6);
+    for p in &report.points {
+        assert!(
+            matches!(p.fault.site, FaultSite::TcdmWord { .. }),
+            "non-TCDM site in a TCDM-only campaign: {:?}",
+            p.fault.site
+        );
+    }
+    for line in report.to_csv().lines().skip(1) {
+        assert!(line.contains(",tcdm:"), "CSV row lost its site encoding: {line}");
+    }
+}
+
+/// Recovery semantics at campaign level: with recovery disabled no point
+/// reports attempts; the classification itself is unchanged (recovery
+/// re-runs fault-free, it can never relabel the original outcome).
+#[test]
+fn disabling_recovery_changes_attempts_not_outcomes() {
+    let mut spec = CampaignSpec::new(ClusterConfig::new(8, 4, 1));
+    spec.seed = 23;
+    spec.points_per_target = 8;
+    spec.benches = vec![Benchmark::Matmul];
+    spec.variants = vec![Variant::Scalar];
+    let with = run_campaign(&spec).expect("baselines run");
+    spec.recovery = None;
+    let without = run_campaign(&spec).expect("baselines run");
+    assert_eq!(with.points.len(), without.points.len());
+    for (a, b) in with.points.iter().zip(&without.points) {
+        assert_eq!(a.outcome, b.outcome, "point {}: recovery relabeled an outcome", a.index);
+        assert_eq!(a.fault, b.fault, "point {}: sampling depends on recovery", a.index);
+        assert_eq!(b.attempts, 0, "point {}: attempts without a policy", b.index);
+        assert!(!b.recovered, "point {}: recovery claimed while disabled", b.index);
+    }
+}

@@ -16,8 +16,8 @@ use transpfp::transfp::FpMode;
 fn determinism() {
     let cfg = ClusterConfig::new(8, 4, 1);
     let w = Benchmark::Fft.build(Variant::VEC, &cfg);
-    let (s1, o1) = w.run(&cfg);
-    let (s2, o2) = w.run(&cfg);
+    let (s1, o1) = w.run(&cfg).unwrap();
+    let (s2, o2) = w.run(&cfg).unwrap();
     assert_eq!(o1, o2);
     assert_eq!(s1.total_cycles, s2.total_cycles);
     for (a, b) in s1.per_core.iter().zip(&s2.per_core) {
@@ -35,7 +35,7 @@ fn numerics_independent_of_configuration() {
             let mut reference = reference;
             for cfg in ClusterConfig::design_space() {
                 let w = b.build(v, &cfg);
-                let (_, out) = w.run(&cfg);
+                let (_, out) = w.run(&cfg).unwrap();
                 w.verify(&out).unwrap();
                 match &reference {
                     None => reference = Some(out),
@@ -55,7 +55,7 @@ fn monotone_in_fpu_count() {
             for fpus in [2usize, 4, 8] {
                 let cfg = ClusterConfig::new(8, fpus, pipe);
                 let w = b.build(Variant::Scalar, &cfg);
-                let (s, _) = w.run(&cfg);
+                let (s, _) = w.run(&cfg).unwrap();
                 assert!(
                     s.total_cycles <= last.saturating_add(last / 50),
                     "{b:?} pipe={pipe}: {fpus} FPUs slower ({} vs {last})",
@@ -75,7 +75,7 @@ fn monotone_in_workers() {
         let w = b.build(Variant::Scalar, &cfg);
         let mut last = u64::MAX;
         for workers in [1usize, 2, 4, 8, 16] {
-            let (s, out) = w.run_on(&cfg, workers);
+            let (s, out) = w.run_on(&cfg, workers).unwrap();
             w.verify(&out).unwrap_or_else(|e| panic!("{workers} workers: {e}"));
             assert!(
                 s.total_cycles <= last,
@@ -100,7 +100,7 @@ fn property_random_programs_config_invariant() {
             ClusterConfig::new(16, 4, 1),
         ] {
             let mut cl = Cluster::new(cfg, prog.clone());
-            let stats = cl.run();
+            let stats = cl.run().unwrap();
             assert!(stats.total_cycles > 0);
             let out: Vec<u32> = (0..8)
                 .map(|i| {
@@ -175,7 +175,7 @@ fn runtime_scheduled_kernels_match_hand_chunked_goldens() {
     for b in Benchmark::all() {
         for v in Variant::all() {
             let w = b.build(v, &cfg);
-            let (_, out) = w.run(&cfg);
+            let (_, out) = w.run(&cfg).unwrap();
             w.verify(&out).unwrap_or_else(|e| panic!("{b:?} {}: {e}", v.label()));
             if matches!(v, Variant::Scalar) {
                 assert_eq!(out, w.expected, "{b:?} scalar must be bit-identical to the golden");
@@ -188,7 +188,7 @@ fn runtime_scheduled_kernels_match_hand_chunked_goldens() {
 #[test]
 fn metric_identities() {
     for cfg in [ClusterConfig::new(8, 2, 2), ClusterConfig::new(16, 16, 0)] {
-        let m = run_one(&cfg, Benchmark::Svm, Variant::VEC);
+        let m = run_one(&cfg, Benchmark::Svm, Variant::VEC).unwrap();
         let area = model::area_mm2(&cfg);
         assert!((m.metrics.area_eff - m.metrics.perf_gflops / area).abs() < 1e-9);
         let f = model::fmax_mhz(&cfg, Corner::St);
@@ -200,9 +200,11 @@ fn metric_identities() {
 }
 
 /// Failure injection: a program that deadlocks (barrier never completed
-/// because one core exits early) must hit the cycle guard, not hang.
+/// because one core exits early) comes back as a structured error on the
+/// hang path — a `RunError`, never a panic and never a stuck process.
 #[test]
 fn deadlock_guard_fires() {
+    use transpfp::cluster::RunError;
     let mut b = ProgramBuilder::new("deadlock");
     // Core 0 exits; everyone else waits forever at the barrier.
     b.beq(regs::CORE_ID, regs::ZERO, "out");
@@ -211,8 +213,16 @@ fn deadlock_guard_fires() {
     b.end();
     let mut cl = Cluster::new(ClusterConfig::new(8, 8, 0), b.build());
     cl.max_cycles = 10_000;
-    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| cl.run()));
-    assert!(r.is_err(), "deadlock must be detected by the cycle guard");
+    let err = cl.run().expect_err("an incompletable barrier must not run to completion");
+    assert!(
+        matches!(err, RunError::Deadlock { .. } | RunError::Timeout { .. }),
+        "expected a hang-class error, got {err:?}"
+    );
+    assert!(
+        err.class() == "deadlock" || err.class() == "timeout",
+        "hang-class label, got {}",
+        err.class()
+    );
 }
 
 /// The full paper pipeline smoke test: one measurement per benchmark on the
@@ -223,7 +233,7 @@ fn headline_configs_full_suite() {
         let cfg = ClusterConfig::parse(mnemonic).unwrap();
         for b in Benchmark::all() {
             for v in [Variant::Scalar, Variant::VEC] {
-                let m = run_one(&cfg, b, v);
+                let m = run_one(&cfg, b, v).unwrap();
                 assert!(m.verified, "{mnemonic} {b:?} {v:?}");
                 assert!(m.metrics.perf_gflops > 0.05);
                 assert!(m.metrics.energy_eff > 5.0);
@@ -239,8 +249,8 @@ fn interleaved_mapping_beats_blocked_at_half_occupancy() {
     let interleaved = ClusterConfig::new(8, 4, 1);
     let blocked = ClusterConfig::new(8, 4, 1).with_blocked_fpu_map();
     let w = Benchmark::Matmul.build(Variant::Scalar, &interleaved);
-    let (si, _) = w.run_on(&interleaved, 4);
-    let (sb, _) = w.run_on(&blocked, 4);
+    let (si, _) = w.run_on(&interleaved, 4).unwrap();
+    let (sb, _) = w.run_on(&blocked, 4).unwrap();
     let cont = |s: &transpfp::cluster::counters::RunStats| -> u64 {
         s.per_core.iter().map(|c| c.fpu_cont).sum()
     };
@@ -257,8 +267,8 @@ fn f16_and_bf16_timing_equivalent() {
     for b in [Benchmark::Fir, Benchmark::Matmul, Benchmark::Fft] {
         let wf = b.build(Variant::Vector(FpMode::VecF16), &cfg);
         let wb = b.build(Variant::Vector(FpMode::VecBf16), &cfg);
-        let (sf, of) = wf.run(&cfg);
-        let (sb, ob) = wb.run(&cfg);
+        let (sf, of) = wf.run(&cfg).unwrap();
+        let (sb, ob) = wb.run(&cfg).unwrap();
         wf.verify(&of).unwrap();
         wb.verify(&ob).unwrap();
         let ratio = sf.total_cycles as f64 / sb.total_cycles as f64;
@@ -272,14 +282,14 @@ fn f16_and_bf16_timing_equivalent() {
 #[test]
 fn warm_cache_table4_issues_zero_simulator_runs() {
     let engine = QueryEngine::new();
-    let cold = table45_with(&engine, 8);
+    let cold = table45_with(&engine, 8).unwrap();
     let after_cold = engine.stats();
     // 9 eight-core configs × 8 benchmarks × 2 variants, all cold.
     assert_eq!(after_cold.misses, 144);
     assert_eq!(after_cold.hits, 0);
     assert_eq!(after_cold.entries, 144);
 
-    let warm = table45_with(&engine, 8);
+    let warm = table45_with(&engine, 8).unwrap();
     let after_warm = engine.stats();
     assert_eq!(after_warm.misses, after_cold.misses, "warm table4 must not simulate");
     assert_eq!(after_warm.hits, 144);
@@ -293,12 +303,12 @@ fn pareto_report_is_deterministic() {
     let engine = QueryEngine::new();
     let cfgs = [ClusterConfig::new(8, 4, 1), ClusterConfig::new(8, 8, 0)];
     let pts = points(&cfgs, &[Benchmark::Fir, Benchmark::Matmul], &[Variant::Scalar, Variant::VEC]);
-    let ms = engine.query(&pts);
+    let ms = engine.query(&pts).unwrap();
     let first = pareto_table_from(&ms).to_csv();
     assert_eq!(first, pareto_table_from(&ms).to_csv());
     // Warm re-query: measurements come back bit-identical from the cache,
     // so the report does too.
-    let warm = engine.query(&pts);
+    let warm = engine.query(&pts).unwrap();
     assert_eq!(first, pareto_table_from(&warm).to_csv());
     assert!(first.lines().count() > 1, "frontier is non-empty");
 }
