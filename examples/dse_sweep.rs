@@ -9,9 +9,8 @@
 //! cargo run --release --example dse_sweep
 //! ```
 
-use transpfp::config::ClusterConfig;
-use transpfp::coordinator::{pareto_table_from, points, QueryEngine};
-use transpfp::kernels::{Benchmark, Variant};
+use transpfp::coordinator::pareto_table_from;
+use transpfp::prelude::{points, Benchmark, ClusterConfig, QueryEngine, Variant};
 
 fn main() {
     let engine = QueryEngine::new();

@@ -5,10 +5,10 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use transpfp::config::{ClusterConfig, Corner};
+use transpfp::config::Corner;
 use transpfp::coordinator::run_one;
-use transpfp::kernels::{Benchmark, Variant};
 use transpfp::model;
+use transpfp::prelude::{Benchmark, ClusterConfig, Variant};
 
 fn main() {
     // The paper's best-area-efficiency configuration (Table 6).

@@ -4,6 +4,8 @@
 
 use std::time::Instant;
 
+use transpfp::coordinator::QueryEngine;
+
 fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
     let t0 = Instant::now();
     let r = f();
@@ -19,14 +21,22 @@ fn main() {
     println!("{}", timed("fig4", transpfp::coordinator::fig4).render());
 
     println!("================ Fig 5 — power @100 MHz per configuration (f32 MATMUL) ================");
-    println!("{}", timed("fig5", transpfp::coordinator::fig5).expect("fig5 sweep completes").render());
+    let t = timed("fig5", || transpfp::coordinator::fig5(QueryEngine::global()))
+        .expect("fig5 sweep completes");
+    println!("{}", t.render());
 
     println!("================ Fig 6 — parallel + vectorization speed-ups (16-core) ================");
-    println!("{}", timed("fig6", transpfp::coordinator::fig6).expect("fig6 sweep completes").render());
+    let t = timed("fig6", || transpfp::coordinator::fig6(QueryEngine::global()))
+        .expect("fig6 sweep completes");
+    println!("{}", t.render());
 
     println!("================ Fig 7 — normalized metrics vs sharing factor (1 stage) ================");
-    println!("{}", timed("fig7", transpfp::coordinator::fig7).expect("fig7 sweep completes").render());
+    let t = timed("fig7", || transpfp::coordinator::fig7(QueryEngine::global()))
+        .expect("fig7 sweep completes");
+    println!("{}", t.render());
 
     println!("================ Fig 8 — normalized metrics vs pipeline stages (1/1) ================");
-    println!("{}", timed("fig8", transpfp::coordinator::fig8).expect("fig8 sweep completes").render());
+    let t = timed("fig8", || transpfp::coordinator::fig8(QueryEngine::global()))
+        .expect("fig8 sweep completes");
+    println!("{}", t.render());
 }

@@ -14,7 +14,7 @@
 use std::process::ExitCode;
 use std::time::Instant;
 
-use transpfp::coordinator::{table45_with, QueryEngine};
+use transpfp::coordinator::{table45, QueryEngine};
 
 const TABLE4_POINTS: u64 = 144;
 const MIN_SPEEDUP: f64 = 10.0;
@@ -23,12 +23,12 @@ fn main() -> ExitCode {
     let engine = QueryEngine::new();
 
     let t0 = Instant::now();
-    let cold = table45_with(&engine, 8).expect("cold table4 sweep completes");
+    let cold = table45(&engine, 8).expect("cold table4 sweep completes");
     let cold_s = t0.elapsed().as_secs_f64();
     let after_cold = engine.stats();
 
     let t1 = Instant::now();
-    let warm = table45_with(&engine, 8).expect("warm table4 sweep completes");
+    let warm = table45(&engine, 8).expect("warm table4 sweep completes");
     let warm_s = t1.elapsed().as_secs_f64();
     let after_warm = engine.stats();
 

@@ -16,7 +16,7 @@
 use std::process::ExitCode;
 use std::time::Instant;
 
-use transpfp::coordinator::{fig5_with, fig6_with, QueryEngine};
+use transpfp::coordinator::{fig5, fig6, QueryEngine};
 
 /// fig5: 18 configs × MATMUL scalar at full occupancy. fig6: 9 16-core
 /// configs × 8 benches × 5 occupancies × 2 variants. The 9 16-core
@@ -29,14 +29,14 @@ fn main() -> ExitCode {
     let engine = QueryEngine::new();
 
     let t0 = Instant::now();
-    let cold5 = fig5_with(&engine).expect("cold fig5 sweep completes");
-    let cold6 = fig6_with(&engine).expect("cold fig6 sweep completes");
+    let cold5 = fig5(&engine).expect("cold fig5 sweep completes");
+    let cold6 = fig6(&engine).expect("cold fig6 sweep completes");
     let cold_s = t0.elapsed().as_secs_f64();
     let after_cold = engine.stats();
 
     let t1 = Instant::now();
-    let warm5 = fig5_with(&engine).expect("warm fig5 sweep completes");
-    let warm6 = fig6_with(&engine).expect("warm fig6 sweep completes");
+    let warm5 = fig5(&engine).expect("warm fig5 sweep completes");
+    let warm6 = fig6(&engine).expect("warm fig6 sweep completes");
     let warm_s = t1.elapsed().as_secs_f64();
     let after_warm = engine.stats();
 

@@ -1,0 +1,241 @@
+//! `cargo bench --bench serve` — gates for the concurrent query service.
+//!
+//! Two hard gates (printed as `serve-*:` lines, FAIL lines on violation):
+//!
+//! 1. **Zero-duplicate-runs**: 64 concurrent connections issuing the same
+//!    cold query must execute the simulator exactly once (single-flight),
+//!    and every client must receive the identical measurement row.
+//! 2. **Warm throughput**: with a 16-point working set resident in the
+//!    cache, 8 pipelined connections must sustain >= 100k queries/s, with
+//!    zero additional simulator runs during the measured phase.
+//!
+//! `--emit-load <n> [seed]` instead prints a seeded mixed request stream
+//! (query/tune/pareto/stats/inject-status/ping) for the CI smoke step,
+//! which pipes it into `transpfp serve --stdin`.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::ExitCode;
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::Instant;
+
+use transpfp::coordinator::QueryEngine;
+use transpfp::server::{read_reply, serve_tcp, Endpoint, Server, WireReply};
+use transpfp::testutil::Rng;
+
+/// Seeded mixed request stream for the smoke test. Weighted toward warm
+/// repeat queries so the daemon's hit rate is provably nonzero.
+fn emit_load(n: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let cfgs = ["8c8f1p", "8c4f1p"];
+    let benches = ["FIR", "MATMUL", "CONV", "DWT"];
+    let variants = ["scalar", "vector-f16"];
+    for _ in 0..n {
+        let cfg = cfgs[rng.below(cfgs.len() as u64) as usize];
+        let bench = benches[rng.below(benches.len() as u64) as usize];
+        let variant = variants[rng.below(variants.len() as u64) as usize];
+        let roll = rng.below(1000);
+        if roll < 700 {
+            println!("query {cfg} {bench} {variant}");
+        } else if roll < 820 {
+            println!("query {cfg} all {variant}");
+        } else if roll < 900 {
+            println!("query {cfg} {bench} all");
+        } else if roll < 960 {
+            println!("tune {cfg}");
+        } else if roll < 970 {
+            println!("pareto");
+        } else if roll < 980 {
+            println!("stats");
+        } else if roll < 990 {
+            println!("inject-status");
+        } else {
+            println!("ping");
+        }
+    }
+}
+
+fn send_one(addr: std::net::SocketAddr, line: &str) -> WireReply {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(line.as_bytes()).expect("send");
+    stream.write_all(b"\n").expect("send newline");
+    let mut reader = BufReader::new(stream);
+    read_reply(&mut reader).expect("framed reply").expect("reply before EOF")
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) == Some("--emit-load") {
+        let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1000);
+        let seed: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1);
+        emit_load(n, seed);
+        return ExitCode::SUCCESS;
+    }
+    // Cargo's bench harness passes --bench; ignore it and any filters.
+
+    let engine: &'static QueryEngine = Box::leak(Box::new(QueryEngine::new()));
+    let server = Arc::new(Server::new(engine));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    {
+        let server = Arc::clone(&server);
+        thread::spawn(move || serve_tcp(server, listener));
+    }
+
+    let mut failed = false;
+
+    // ---- Gate 1: 64 concurrent identical cold requests, 1 simulator run.
+    const CLIENTS: usize = 64;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let t0 = Instant::now();
+    let replies: Vec<WireReply> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|_| {
+                let barrier = Arc::clone(&barrier);
+                scope.spawn(move || {
+                    barrier.wait();
+                    send_one(addr, "query 8c8f1p FIR scalar")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let cold_secs = t0.elapsed().as_secs_f64();
+
+    let first = &replies[0];
+    if !first.ok || first.rows.len() != 2 {
+        eprintln!("FAIL: cold query reply malformed: {:?}", first.head);
+        failed = true;
+    }
+    if !replies.iter().all(|r| r.ok && r.rows == first.rows) {
+        eprintln!("FAIL: {CLIENTS} concurrent identical queries returned divergent replies");
+        failed = true;
+    }
+    let cold_sim_runs = engine.sim_runs();
+    if cold_sim_runs != 1 {
+        eprintln!(
+            "FAIL: {CLIENTS} concurrent identical cold requests ran the simulator \
+             {cold_sim_runs} times (must be exactly 1)"
+        );
+        failed = true;
+    }
+    if engine.duplicate_runs() != 0 {
+        eprintln!("FAIL: duplicate simulator runs after the cold burst");
+        failed = true;
+    }
+    println!("serve-cold-burst-clients: {CLIENTS}");
+    println!("serve-cold-burst-secs: {cold_secs:.3}");
+    println!("serve-sim-runs: {cold_sim_runs}");
+    println!("serve-coalesced-runs: {}", engine.coalesced_runs());
+
+    // ---- Warm a 16-point working set (one pipelined connection).
+    let warm_set: Vec<String> = {
+        let benches = ["FIR", "MATMUL", "CONV", "DWT", "FFT", "IIR", "KMEANS", "SVM"];
+        benches
+            .iter()
+            .flat_map(|b| {
+                ["scalar", "vector-f16"].iter().map(move |v| format!("query 8c8f1p {b} {v}"))
+            })
+            .collect()
+    };
+    {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let mut writer = BufWriter::new(stream.try_clone().expect("clone"));
+        let mut reader = BufReader::new(stream);
+        for q in &warm_set {
+            writeln!(writer, "{q}").expect("send");
+        }
+        writer.flush().expect("flush");
+        for _ in 0..warm_set.len() {
+            let r = read_reply(&mut reader).expect("framed").expect("reply");
+            if !r.ok {
+                eprintln!("FAIL: warm-up query failed: {}", r.head);
+                failed = true;
+            }
+        }
+    }
+    let warm_sim_runs = engine.sim_runs();
+
+    // ---- Gate 2: >= 100k warm queries/s across 8 pipelined connections.
+    const CONNS: usize = 8;
+    const PER_CONN: usize = 25_000;
+    let blob: String = {
+        // Round-robin over the warm set so every request is a cache hit.
+        let mut s = String::with_capacity(PER_CONN * 32);
+        for i in 0..PER_CONN {
+            s.push_str(&warm_set[i % warm_set.len()]);
+            s.push('\n');
+        }
+        s
+    };
+    let blob = Arc::new(blob);
+    let t0 = Instant::now();
+    thread::scope(|scope| {
+        for _ in 0..CONNS {
+            let blob = Arc::clone(&blob);
+            scope.spawn(move || {
+                let stream = TcpStream::connect(addr).expect("connect");
+                let write_half = stream.try_clone().expect("clone");
+                // Writer thread streams the whole blob; reader drains replies
+                // concurrently so neither side blocks on a full socket buffer.
+                let writer = thread::spawn(move || {
+                    let mut w = BufWriter::new(write_half);
+                    w.write_all(blob.as_bytes()).expect("send blob");
+                    w.flush().expect("flush blob");
+                });
+                let mut reader = BufReader::new(stream);
+                for _ in 0..PER_CONN {
+                    let r = read_reply(&mut reader).expect("framed").expect("reply");
+                    assert!(r.ok, "warm query failed: {}", r.head);
+                }
+                writer.join().expect("writer thread");
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let total = (CONNS * PER_CONN) as f64;
+    let qps = total / secs;
+
+    println!("serve-throughput-requests: {}", CONNS * PER_CONN);
+    println!("serve-throughput-secs: {secs:.3}");
+    println!("serve-throughput-qps: {qps:.0}");
+    let (req, err, hits, misses, lat_ns, max_ns) =
+        server.metrics().endpoint_snapshot(Endpoint::Query);
+    println!("serve-query-requests: {req}");
+    println!("serve-query-errors: {err}");
+    println!("serve-cache-hits: {hits}");
+    println!("serve-cache-misses: {misses}");
+    println!("serve-query-avg-latency-us: {:.1}", lat_ns as f64 / req.max(1) as f64 / 1e3);
+    println!("serve-query-max-latency-us: {:.1}", max_ns as f64 / 1e3);
+    println!("serve-duplicate-runs: {}", engine.duplicate_runs());
+
+    if qps < 100_000.0 {
+        eprintln!("FAIL: warm throughput {qps:.0} qps is below the 100k qps gate");
+        failed = true;
+    }
+    if engine.sim_runs() != warm_sim_runs {
+        eprintln!(
+            "FAIL: the warm throughput phase ran the simulator {} extra times (must be 0)",
+            engine.sim_runs() - warm_sim_runs
+        );
+        failed = true;
+    }
+    if engine.duplicate_runs() != 0 {
+        eprintln!("FAIL: duplicate simulator runs detected (single-flight broken)");
+        failed = true;
+    }
+    if warm_sim_runs > 17 {
+        eprintln!(
+            "FAIL: warming a 16-point set + 1 cold point issued {warm_sim_runs} simulator \
+             runs (must be <= 17)"
+        );
+        failed = true;
+    }
+
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

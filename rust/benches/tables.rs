@@ -5,6 +5,8 @@
 
 use std::time::Instant;
 
+use transpfp::coordinator::QueryEngine;
+
 fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
     let t0 = Instant::now();
     let r = f();
@@ -14,18 +16,22 @@ fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
 
 fn main() {
     println!("================ Table 3 — FP/memory intensity (measured vs paper) ================");
-    let t = timed("table3", transpfp::coordinator::table3).expect("table3 sweep completes");
+    let t = timed("table3", || transpfp::coordinator::table3(QueryEngine::global()))
+        .expect("table3 sweep completes");
     println!("{}", t.render());
 
     println!("================ Table 4 — 8-core configurations ================");
-    let t = timed("table4", || transpfp::coordinator::table45(8)).expect("table4 sweep completes");
+    let t = timed("table4", || transpfp::coordinator::table45(QueryEngine::global(), 8))
+        .expect("table4 sweep completes");
     println!("{}", t.render());
 
     println!("================ Table 5 — 16-core configurations ================");
-    let t = timed("table5", || transpfp::coordinator::table45(16)).expect("table5 sweep completes");
+    let t = timed("table5", || transpfp::coordinator::table45(QueryEngine::global(), 16))
+        .expect("table5 sweep completes");
     println!("{}", t.render());
 
     println!("================ Table 6 — state-of-the-art comparison ================");
-    let t = timed("table6", transpfp::coordinator::table6).expect("table6 sweep completes");
+    let t = timed("table6", || transpfp::coordinator::table6(QueryEngine::global()))
+        .expect("table6 sweep completes");
     println!("{}", t.render());
 }

@@ -1,0 +1,847 @@
+//! Declarative command-line grammar.
+//!
+//! The old `main.rs` matched flag strings in a hand-rolled loop and each
+//! subcommand re-parsed its own positionals; the serve protocol would have
+//! needed a third copy. This module replaces all of that with two const
+//! registries — [`FLAGS`] and [`COMMANDS`] — that are the single source of
+//! truth for parsing ([`parse_cli`]), for `--help` ([`usage`] renders the
+//! text from the registries, so help can never drift from the parser), and
+//! for the serve wire protocol (each [`CommandSpec`] names the flags valid
+//! on the wire; [`crate::server::request::Request::parse_line`] enforces
+//! them).
+//!
+//! Semantics are unchanged from the hand-rolled loop: flags are recognized
+//! anywhere on the line, unknown `-`-prefixed tokens are a hard error that
+//! names the flag, value flags consume the next token, and everything else
+//! is a positional. The service-shaped subcommands (`query`, `tune`,
+//! `pareto`) lower into the typed [`Request`] the server also consumes, via
+//! [`Cli::to_request`].
+
+use crate::cluster::BackendKind;
+use crate::config::ClusterConfig;
+use crate::faults::SiteClass;
+use crate::kernels::{Benchmark, Variant};
+use crate::server::request::{Request, Selector};
+use crate::transfp::FpMode;
+use crate::tuner::{Probe, DEFAULT_BUDGET};
+
+/// Parsed command line: recognized flags plus positional arguments.
+/// Unknown flags are an error — a typo like `--cvs` must fail loudly, not
+/// be silently treated as a positional (or worse, filtered away).
+#[derive(Default)]
+pub struct Cli {
+    pub csv: bool,
+    pub no_cache: bool,
+    pub acc: bool,
+    pub budget: Option<f64>,
+    pub tiles: Option<usize>,
+    pub backend: Option<BackendKind>,
+    pub probe: Option<Probe>,
+    pub jobs: Option<usize>,
+    pub seed: Option<u64>,
+    pub rate: Option<usize>,
+    pub sites: Option<Vec<SiteClass>>,
+    pub no_recover: bool,
+    /// `serve`: TCP port to listen on (default [`DEFAULT_PORT`]).
+    pub port: Option<u16>,
+    /// `serve --stdin`: serve the stdin/stdout pipe instead of TCP.
+    pub stdin_mode: bool,
+    /// `serve`: write the per-endpoint metrics CSV here on exit.
+    pub metrics: Option<String>,
+    pub args: Vec<String>,
+}
+
+/// Default TCP port of `transpfp serve`.
+pub const DEFAULT_PORT: u16 = 4517;
+
+/// One entry of the flag registry.
+pub struct FlagSpec {
+    /// The flag itself, e.g. `--budget`.
+    pub name: &'static str,
+    /// Value placeholder for help (`<rel-err>`), or `None` for booleans.
+    pub value: Option<&'static str>,
+    /// Example value quoted in the missing-value error.
+    pub example: &'static str,
+    /// Help text; extra lines continue the help column.
+    pub help: &'static str,
+    /// Parse-and-store: receives the value token for value flags.
+    apply: fn(&mut Cli, Option<&str>) -> Result<(), String>,
+}
+
+fn apply_csv(c: &mut Cli, _: Option<&str>) -> Result<(), String> {
+    c.csv = true;
+    Ok(())
+}
+
+fn apply_no_cache(c: &mut Cli, _: Option<&str>) -> Result<(), String> {
+    c.no_cache = true;
+    Ok(())
+}
+
+fn apply_acc(c: &mut Cli, _: Option<&str>) -> Result<(), String> {
+    c.acc = true;
+    Ok(())
+}
+
+fn apply_budget(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    let v = v.expect("value flag");
+    match v.parse::<f64>() {
+        Ok(b) if b.is_finite() && b >= 0.0 => {
+            c.budget = Some(b);
+            Ok(())
+        }
+        _ => Err(format!("bad `--budget` value `{v}`")),
+    }
+}
+
+fn apply_tiles(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    let v = v.expect("value flag");
+    match v.parse::<usize>() {
+        Ok(t) if t >= 1 => {
+            c.tiles = Some(t);
+            Ok(())
+        }
+        _ => Err(format!("bad `--tiles` value `{v}`")),
+    }
+}
+
+fn apply_backend(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    let v = v.expect("value flag");
+    match BackendKind::parse(v) {
+        Some(b) => {
+            c.backend = Some(b);
+            Ok(())
+        }
+        None => Err(format!("bad `--backend` value `{v}`")),
+    }
+}
+
+fn apply_probe(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    let v = v.expect("value flag");
+    match Probe::parse(v) {
+        Some(p) => {
+            c.probe = Some(p);
+            Ok(())
+        }
+        None => Err(format!("bad `--probe` value `{v}`")),
+    }
+}
+
+fn apply_jobs(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    let v = v.expect("value flag");
+    match v.parse::<usize>() {
+        Ok(n) if n >= 1 => {
+            c.jobs = Some(n);
+            Ok(())
+        }
+        _ => Err(format!("bad `--jobs` value `{v}` (must be >= 1)")),
+    }
+}
+
+fn apply_seed(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    let v = v.expect("value flag");
+    match v.parse::<u64>() {
+        Ok(s) => {
+            c.seed = Some(s);
+            Ok(())
+        }
+        _ => Err(format!("bad `--seed` value `{v}`")),
+    }
+}
+
+fn apply_rate(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    let v = v.expect("value flag");
+    match v.parse::<usize>() {
+        Ok(n) if n >= 1 => {
+            c.rate = Some(n);
+            Ok(())
+        }
+        _ => Err(format!("bad `--rate` value `{v}` (must be >= 1)")),
+    }
+}
+
+fn apply_sites(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    let v = v.expect("value flag");
+    match SiteClass::parse_list(v) {
+        Some(s) => {
+            c.sites = Some(s);
+            Ok(())
+        }
+        None => Err(format!("bad `--sites` value `{v}`")),
+    }
+}
+
+fn apply_no_recover(c: &mut Cli, _: Option<&str>) -> Result<(), String> {
+    c.no_recover = true;
+    Ok(())
+}
+
+fn apply_port(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    let v = v.expect("value flag");
+    match v.parse::<u16>() {
+        Ok(p) if p >= 1 => {
+            c.port = Some(p);
+            Ok(())
+        }
+        _ => Err(format!("bad `--port` value `{v}`")),
+    }
+}
+
+fn apply_stdin(c: &mut Cli, _: Option<&str>) -> Result<(), String> {
+    c.stdin_mode = true;
+    Ok(())
+}
+
+fn apply_metrics(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    c.metrics = Some(v.expect("value flag").to_string());
+    Ok(())
+}
+
+/// Every flag the binary understands, in help order.
+pub const FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        name: "--csv",
+        value: None,
+        example: "",
+        help: "CSV output for table/fig/pareto/query/tune/inject",
+        apply: apply_csv,
+    },
+    FlagSpec {
+        name: "--no-cache",
+        value: None,
+        example: "",
+        help: "don't load or persist the measurement cache",
+        apply: apply_no_cache,
+    },
+    FlagSpec {
+        name: "--acc",
+        value: None,
+        example: "",
+        help: "accuracy-extended frontier (pareto only)",
+        apply: apply_acc,
+    },
+    FlagSpec {
+        name: "--budget",
+        value: Some("<rel-err>"),
+        example: "1e-2",
+        help: "error budget for `tune` and `inject` (default 1e-2)",
+        apply: apply_budget,
+    },
+    FlagSpec {
+        name: "--tiles",
+        value: Some("<t>"),
+        example: "8",
+        help: "run the DMA double-buffered tiled kernel with t\ntiles (`run` with MATMUL or CONV, scalar)",
+        apply: apply_tiles,
+    },
+    FlagSpec {
+        name: "--backend",
+        value: Some("<b>"),
+        example: "functional",
+        help: "execution tier for `run`: event, reference or\nfunctional (architectural-only, no timing)",
+        apply: apply_backend,
+    },
+    FlagSpec {
+        name: "--probe",
+        value: Some("<p>"),
+        example: "functional",
+        help: "accuracy probe for `tune`: functional (default)\nor cycle",
+        apply: apply_probe,
+    },
+    FlagSpec {
+        name: "--jobs",
+        value: Some("<n>"),
+        example: "4",
+        help: "cap sweep/query worker threads (default: all\ncores, at most 16)",
+        apply: apply_jobs,
+    },
+    FlagSpec {
+        name: "--seed",
+        value: Some("<s>"),
+        example: "7",
+        help: "campaign sampling seed for `inject` (default 1)",
+        apply: apply_seed,
+    },
+    FlagSpec {
+        name: "--rate",
+        value: Some("<n>"),
+        example: "16",
+        help: "injected points per benchmark x rung for `inject`\n(default 8)",
+        apply: apply_rate,
+    },
+    FlagSpec {
+        name: "--sites",
+        value: Some("<list>"),
+        example: "tcdm,reg,dma",
+        help: "structure classes for `inject`: comma-separated\nsubset of tcdm,reg,dma, or `all` (default all)",
+        apply: apply_sites,
+    },
+    FlagSpec {
+        name: "--no-recover",
+        value: None,
+        example: "",
+        help: "disable the detect-and-retry recovery loop for\n`inject` (report raw outcomes only)",
+        apply: apply_no_recover,
+    },
+    FlagSpec {
+        name: "--port",
+        value: Some("<n>"),
+        example: "4517",
+        help: "TCP port for `serve` (default 4517, loopback only)",
+        apply: apply_port,
+    },
+    FlagSpec {
+        name: "--stdin",
+        value: None,
+        example: "",
+        help: "`serve` over the stdin/stdout pipe instead of TCP\n(replies on stdout, summary on stderr)",
+        apply: apply_stdin,
+    },
+    FlagSpec {
+        name: "--metrics",
+        value: Some("<path>"),
+        example: "metrics.csv",
+        help: "write the per-endpoint serve metrics CSV here on\nexit (`serve --stdin` only)",
+        apply: apply_metrics,
+    },
+];
+
+/// One entry of the command registry (drives `--help` and the wire-protocol
+/// flag allowlists; dispatch stays in `main.rs`).
+pub struct CommandSpec {
+    pub name: &'static str,
+    /// Positional grammar shown in help, e.g. `<cfg> <bench> <variant>`.
+    pub args: &'static str,
+    /// Help text; extra lines continue the help column.
+    pub help: &'static str,
+    /// Flags valid for this command **on the serve wire** (the CLI is
+    /// permissive and accepts any registered flag anywhere; the wire is
+    /// strict so a malformed request fails structurally, not silently).
+    pub wire_flags: &'static [&'static str],
+    /// Whether the command is servable over the wire at all.
+    pub wire: bool,
+}
+
+/// Every subcommand, in help order.
+pub const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "configs",
+        args: "",
+        help: "list the Table 2 design space",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "run",
+        args: "<cfg> <bench> <variant>",
+        help: "run one benchmark (e.g. `run 8c4f1p MATMUL vector`);\nvariants: scalar, scalar-f16, scalar-bf16,\nvector (vector-f16), vector-bf16; with\n--tiles <t>, run the DMA double-buffered tiled\nbuild (MATMUL/CONV scalar, dataset in L2 beyond\nthe TCDM, streamed through ping-pong buffers);\nwith --backend <event|reference|functional>, run\nuncached on the chosen execution tier (the\nfunctional tier verifies numerics with no timing)",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "query",
+        args: "<cfg|all> <bench|all> <variant|all>",
+        help: "resolve a batch of design-space points through the\nmeasurement cache (plan stats on stderr); `all`\nspans the full 5-rung precision ladder",
+        wire_flags: &[],
+        wire: true,
+    },
+    CommandSpec {
+        name: "tune",
+        args: "[cfg|all]",
+        help: "accuracy-aware precision autotuning: select the\ncheapest admissible ladder rung per benchmark\nunder --budget (relative L2 error vs the f64\nreference; default 1e-2); default config 8c8f1p.\n--probe functional (default) measures every\nrung's accuracy on the functional backend and\nsimulates only admissible rungs; --probe cycle\nrestores all-cycle-accurate probing",
+        wire_flags: &["--budget", "--probe"],
+        wire: true,
+    },
+    CommandSpec {
+        name: "pareto",
+        args: "",
+        help: "Pareto frontier of the full design space over\n(Gflop/s, Gflop/s/W, Gflop/s/mm^2); with --acc,\nthe accuracy-extended frontier over\n(rel. error, Gflop/s, Gflop/s/W) across the ladder",
+        wire_flags: &["--acc"],
+        wire: true,
+    },
+    CommandSpec {
+        name: "table3",
+        args: "",
+        help: "FP/memory intensities (measured vs paper)",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "table4",
+        args: "",
+        help: "8-core benchmark tables (perf / e-eff / a-eff)",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "table5",
+        args: "",
+        help: "16-core benchmark tables",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "table6",
+        args: "",
+        help: "state-of-the-art comparison (measured + paper)",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "fig3",
+        args: "",
+        help: "fmax spread per pipeline/corner",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "fig4",
+        args: "",
+        help: "area per configuration",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "fig5",
+        args: "",
+        help: "power @100 MHz per configuration (cache-backed)",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "fig6",
+        args: "",
+        help: "parallel + vectorization speed-ups on the 16-core\nconfigurations: occupancy (1..=16 workers) is\nswept through the fork-join runtime's teams and\nresolved via the measurement cache",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "fig7",
+        args: "",
+        help: "metrics vs FPU sharing factor",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "fig8",
+        args: "",
+        help: "metrics vs pipeline stages",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "validate",
+        args: "[dir]",
+        help: "check simulator numerics vs XLA goldens (artifacts/)",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "sweep",
+        args: "",
+        help: "run the full 18x8x2 design space, CSV to stdout",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "inject",
+        args: "<cfg>",
+        help: "seeded SEU fault-injection campaign on one config:\nsamples --rate upset points per benchmark x rung\nfrom the --seed stream, flips one bit per run in a\n--sites structure (TCDM word, register cell, or\nin-flight DMA payload), and classifies every point\nas masked / tolerable / sdc / crash / hang against\nthe fault-free baseline and the binary64 reference\n(--budget splits tolerable from sdc). Summary table\nby default; --csv emits the per-point campaign CSV.\nDeterministic: same seed + flags => bit-identical\nCSV, regardless of --jobs",
+        wire_flags: &[],
+        wire: false,
+    },
+    CommandSpec {
+        name: "serve",
+        args: "",
+        help: "long-running query service: newline-delimited\nquery/tune/pareto/inject-status/stats/ping\nrequests on TCP 127.0.0.1:--port (or the stdin\npipe with --stdin), framed `ok <n>`/`err <class>`\nreplies, single-flight dedup of identical\nin-flight requests, per-endpoint metrics; see\nEXPERIMENTS.md \u{a7}Serve for the protocol grammar",
+        wire_flags: &[],
+        wire: false,
+    },
+    // Wire-only endpoints (no CLI dispatch; sent to a running `serve`).
+    CommandSpec {
+        name: "inject-status",
+        args: "",
+        help: "(wire only) structured failure-class counters\nobserved by the service since start",
+        wire_flags: &[],
+        wire: true,
+    },
+    CommandSpec {
+        name: "stats",
+        args: "",
+        help: "(wire only) engine + cache + request counters",
+        wire_flags: &[],
+        wire: true,
+    },
+    CommandSpec {
+        name: "ping",
+        args: "",
+        help: "(wire only) liveness check, replies `pong`",
+        wire_flags: &[],
+        wire: true,
+    },
+];
+
+/// Look a command up in the registry.
+pub fn command_spec(name: &str) -> Option<&'static CommandSpec> {
+    COMMANDS.iter().find(|c| c.name == name)
+}
+
+/// Comma-separated summary of every flag (for the unknown-flag error).
+fn flag_summary() -> String {
+    let mut s = String::new();
+    for (i, f) in FLAGS.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(f.name);
+        if let Some(v) = f.value {
+            s.push(' ');
+            s.push_str(v);
+        }
+    }
+    s
+}
+
+/// Parse a raw argument list against the flag registry. Flags may appear
+/// anywhere; value flags consume the next token; unknown `-`-prefixed
+/// tokens fail with an error naming the flag and listing the registry.
+pub fn parse_cli<I: IntoIterator<Item = String>>(raw: I) -> Result<Cli, String> {
+    let mut cli = Cli::default();
+    let mut it = raw.into_iter();
+    while let Some(a) = it.next() {
+        if let Some(spec) = FLAGS.iter().find(|f| f.name == a) {
+            let value = if spec.value.is_some() {
+                Some(it.next().ok_or_else(|| {
+                    format!(
+                        "flag `{}` needs a value (e.g. `{} {}`)",
+                        spec.name, spec.name, spec.example
+                    )
+                })?)
+            } else {
+                None
+            };
+            (spec.apply)(&mut cli, value.as_deref())?;
+        } else if a.starts_with('-') {
+            return Err(format!("unknown flag `{a}` (known flags: {})", flag_summary()));
+        } else {
+            cli.args.push(a);
+        }
+    }
+    Ok(cli)
+}
+
+/// Variant names accepted by `run` and `query`: the canonical labels
+/// (single source of truth: [`Variant::parse_label`]) plus historical
+/// short-form aliases.
+pub fn parse_variant(s: &str) -> Option<Variant> {
+    Variant::parse_label(s).or_else(|| match s {
+        "sf16" => Some(Variant::SCALAR_F16),
+        "sbf16" => Some(Variant::SCALAR_BF16),
+        "vector" | "f16" => Some(Variant::VEC),
+        "bf16" => Some(Variant::Vector(FpMode::VecBf16)),
+        _ => None,
+    })
+}
+
+fn parse_cfg_selector(s: &str) -> Result<Selector<ClusterConfig>, String> {
+    if s == "all" {
+        return Ok(Selector::All);
+    }
+    ClusterConfig::parse(s)
+        .map(Selector::One)
+        .ok_or_else(|| format!("bad config mnemonic {s}"))
+}
+
+fn parse_bench_selector(s: &str) -> Result<Selector<Benchmark>, String> {
+    if s == "all" {
+        return Ok(Selector::All);
+    }
+    Benchmark::parse(s).map(Selector::One).ok_or_else(|| format!("unknown benchmark {s}"))
+}
+
+fn parse_variant_selector(s: &str) -> Result<Selector<Variant>, String> {
+    if s == "all" {
+        return Ok(Selector::All);
+    }
+    parse_variant(s).map(Selector::One).ok_or_else(|| format!("unknown variant {s}"))
+}
+
+impl Cli {
+    /// Lower the service-shaped subcommands into the typed [`Request`] the
+    /// server consumes — the CLI `query`/`tune`/`pareto` paths and the wire
+    /// protocol build identical values through this one function.
+    pub fn to_request(&self) -> Result<Request, String> {
+        let args: Vec<&str> = self.args.iter().map(|s| s.as_str()).collect();
+        let Some(&cmd) = args.first() else {
+            return Err("empty request".to_string());
+        };
+        match cmd {
+            "query" => {
+                if args.len() != 4 {
+                    return Err("usage: query <cfg|all> <bench|all> <variant|all>".to_string());
+                }
+                Ok(Request::Query {
+                    cfg: parse_cfg_selector(args[1])?,
+                    bench: parse_bench_selector(args[2])?,
+                    variant: parse_variant_selector(args[3])?,
+                })
+            }
+            "tune" => {
+                if args.len() > 2 {
+                    return Err(
+                        "usage: tune [cfg|all] [--budget <rel-err>] [--probe <p>]".to_string()
+                    );
+                }
+                let cfg = match args.get(1) {
+                    None => Selector::One(ClusterConfig::new(8, 8, 1)),
+                    Some(&s) => parse_cfg_selector(s)?,
+                };
+                Ok(Request::Tune {
+                    cfg,
+                    budget: self.budget.unwrap_or(DEFAULT_BUDGET),
+                    probe: self.probe.unwrap_or(Probe::Functional),
+                })
+            }
+            "pareto" => {
+                if args.len() != 1 {
+                    return Err("usage: pareto [--acc]".to_string());
+                }
+                Ok(Request::Pareto { acc: self.acc })
+            }
+            "inject-status" => Ok(Request::InjectStatus),
+            "stats" => Ok(Request::Stats),
+            "ping" => Ok(Request::Ping),
+            other => Err(format!(
+                "`{other}` is not a service request (expected query, tune, pareto, \
+                 inject-status, stats or ping)"
+            )),
+        }
+    }
+}
+
+/// Append a `head` / multi-line `help` entry in the two-column help layout.
+fn render_entry(out: &mut String, head: &str, help: &str) {
+    let mut lines = help.lines();
+    let first = lines.next().unwrap_or("");
+    if head.len() <= 22 {
+        out.push_str(&format!("  {head:<22}  {first}\n"));
+    } else {
+        out.push_str(&format!("  {head}\n"));
+        out.push_str(&format!("  {:<22}  {first}\n", ""));
+    }
+    for l in lines {
+        out.push_str(&format!("  {:<22}  {l}\n", ""));
+    }
+}
+
+/// The full `--help` text, rendered from [`COMMANDS`] and [`FLAGS`]. Help
+/// is *generated*, not hand-maintained: a flag or command that exists in
+/// the registry is documented, one that doesn't isn't.
+pub fn usage() -> String {
+    let mut out = String::with_capacity(4096);
+    out.push_str("transpfp — transprecision FP cluster reproduction (TPDS 2021)\n\n");
+    out.push_str("USAGE: transpfp <command> [args] [flags]\n\nCOMMANDS:\n");
+    for c in COMMANDS {
+        let head =
+            if c.args.is_empty() { c.name.to_string() } else { format!("{} {}", c.name, c.args) };
+        render_entry(&mut out, &head, c.help);
+    }
+    out.push_str("\nFLAGS:\n");
+    for f in FLAGS {
+        let head = match f.value {
+            Some(v) => format!("{} {v}", f.name),
+            None => f.name.to_string(),
+        };
+        render_entry(&mut out, &head, f.help);
+    }
+    out.push_str(
+        "\nSimulation failures are structured, never panics: a hung or deadlocked run\n\
+         is reported with its watchdog class, failing query points are listed per\n\
+         point (resolved points stay cached), and the exit code is non-zero.\n\
+         \n\
+         Measurements are memoized under artifacts/cache/measurements.csv, keyed by\n\
+         (program fingerprint, config, variant, occupancy, fidelity, engine\n\
+         version); see EXPERIMENTS.md §Cache + §Tuner + §Backends + §Serve for the\n\
+         invalidation rules. TRANSPFP_CACHE_DIR overrides the directory.",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner;
+
+    fn cli(args: &[&str]) -> Result<Cli, String> {
+        parse_cli(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn known_flags_are_extracted_in_any_position() {
+        let c = cli(&["table4", "--csv"]).unwrap();
+        assert!(c.csv && !c.no_cache);
+        assert_eq!(c.args, vec!["table4"]);
+
+        let c = cli(&["--no-cache", "query", "all", "FIR", "--csv", "scalar"]).unwrap();
+        assert!(c.csv && c.no_cache);
+        assert_eq!(c.args, vec!["query", "all", "FIR", "scalar"]);
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_not_filtered() {
+        for bad in ["--cvs", "--cache", "-x", "--", "--csv=always", "--budget=1e-2"] {
+            let err = cli(&["table4", bad]).unwrap_err();
+            assert!(
+                err.contains(bad.split('=').next().unwrap()),
+                "error must name the flag: {err}"
+            );
+        }
+        // Positionals are never mistaken for flags.
+        assert!(cli(&["run", "8c4f1p", "MATMUL", "vector"]).is_ok());
+    }
+
+    #[test]
+    fn budget_flag_takes_a_value() {
+        let c = cli(&["tune", "--budget", "1e-3", "--csv"]).unwrap();
+        assert_eq!(c.budget, Some(1e-3));
+        assert!(c.csv);
+        assert_eq!(c.args, vec!["tune"]);
+
+        assert!(cli(&["tune", "--budget"]).is_err(), "missing value must fail");
+        assert!(cli(&["tune", "--budget", "not-a-number"]).is_err());
+        assert!(cli(&["tune", "--budget", "-1"]).is_err(), "negative budget is invalid");
+        assert!(cli(&["tune", "--budget", "inf"]).is_err(), "non-finite budget is invalid");
+
+        let c = cli(&["pareto", "--acc"]).unwrap();
+        assert!(c.acc && c.budget.is_none());
+    }
+
+    #[test]
+    fn backend_probe_and_jobs_flags_take_values() {
+        let c = cli(&["run", "8c4f1p", "FIR", "scalar", "--backend", "functional"]).unwrap();
+        assert_eq!(c.backend, Some(BackendKind::Functional));
+        assert_eq!(c.args, vec!["run", "8c4f1p", "FIR", "scalar"]);
+        let r = cli(&["run", "--backend", "ref"]).unwrap();
+        assert_eq!(r.backend, Some(BackendKind::Reference));
+        assert!(cli(&["run", "--backend"]).is_err(), "missing value must fail");
+        assert!(cli(&["run", "--backend", "turbo"]).is_err());
+
+        let c = cli(&["tune", "--probe", "functional"]).unwrap();
+        assert_eq!(c.probe, Some(tuner::Probe::Functional));
+        let p = cli(&["tune", "--probe", "cycle"]).unwrap();
+        assert_eq!(p.probe, Some(tuner::Probe::CycleAccurate));
+        assert!(cli(&["tune", "--probe"]).is_err());
+        assert!(cli(&["tune", "--probe", "psychic"]).is_err());
+
+        let c = cli(&["sweep", "--jobs", "4"]).unwrap();
+        assert_eq!(c.jobs, Some(4));
+        assert!(cli(&["sweep", "--jobs"]).is_err(), "missing value must fail");
+        assert!(cli(&["sweep", "--jobs", "0"]).is_err(), "zero workers is invalid");
+        assert!(cli(&["sweep", "--jobs", "many"]).is_err());
+    }
+
+    #[test]
+    fn tiles_flag_takes_a_value() {
+        let c = cli(&["run", "8c8f1p", "MATMUL", "scalar", "--tiles", "8"]).unwrap();
+        assert_eq!(c.tiles, Some(8));
+        assert_eq!(c.args, vec!["run", "8c8f1p", "MATMUL", "scalar"]);
+        assert!(cli(&["run", "--tiles"]).is_err(), "missing value must fail");
+        assert!(cli(&["run", "--tiles", "0"]).is_err(), "zero tiles is invalid");
+        assert!(cli(&["run", "--tiles", "x"]).is_err());
+    }
+
+    #[test]
+    fn inject_flags_take_values() {
+        let c = cli(&["inject", "8c8f1p", "--seed", "7", "--rate", "16"]).unwrap();
+        assert_eq!(c.seed, Some(7));
+        assert_eq!(c.rate, Some(16));
+        assert_eq!(c.args, vec!["inject", "8c8f1p"]);
+        assert!(!c.no_recover && c.sites.is_none());
+
+        let c = cli(&["inject", "8c8f1p", "--sites", "tcdm,dma", "--no-recover"]).unwrap();
+        assert_eq!(c.sites, Some(vec![SiteClass::Tcdm, SiteClass::Dma]));
+        assert!(c.no_recover);
+        let c = cli(&["inject", "8c8f1p", "--sites", "all"]).unwrap();
+        assert_eq!(c.sites, Some(SiteClass::all().to_vec()));
+
+        assert!(cli(&["inject", "--seed"]).is_err(), "missing value must fail");
+        assert!(cli(&["inject", "--seed", "x"]).is_err());
+        assert!(cli(&["inject", "--rate", "0"]).is_err(), "zero points is invalid");
+        assert!(cli(&["inject", "--sites", "l2"]).is_err(), "unknown site class");
+        assert!(cli(&["inject", "--sites"]).is_err());
+    }
+
+    #[test]
+    fn variant_names() {
+        assert_eq!(parse_variant("scalar"), Some(Variant::Scalar));
+        assert_eq!(parse_variant("scalar-f16"), Some(Variant::SCALAR_F16));
+        assert_eq!(parse_variant("sbf16"), Some(Variant::SCALAR_BF16));
+        assert_eq!(parse_variant("vector"), Some(Variant::VEC));
+        assert_eq!(parse_variant("vector-f16"), Some(Variant::VEC));
+        assert_eq!(parse_variant("f16"), Some(Variant::VEC));
+        assert_eq!(parse_variant("bf16"), Some(Variant::Vector(FpMode::VecBf16)));
+        assert_eq!(parse_variant("vector-bf16"), Some(Variant::Vector(FpMode::VecBf16)));
+        assert_eq!(parse_variant("f64"), None);
+        // Every canonical label parses.
+        for v in Variant::all() {
+            assert_eq!(parse_variant(v.label()), Some(v));
+        }
+    }
+
+    #[test]
+    fn serve_flags_parse() {
+        let c = cli(&["serve", "--port", "9000"]).unwrap();
+        assert_eq!(c.port, Some(9000));
+        assert!(!c.stdin_mode);
+        let c = cli(&["serve", "--stdin", "--metrics", "m.csv"]).unwrap();
+        assert!(c.stdin_mode);
+        assert_eq!(c.metrics.as_deref(), Some("m.csv"));
+        assert!(cli(&["serve", "--port"]).is_err(), "missing value must fail");
+        assert!(cli(&["serve", "--port", "0"]).is_err(), "port 0 is invalid");
+        assert!(cli(&["serve", "--port", "70000"]).is_err(), "out-of-range port is invalid");
+    }
+
+    #[test]
+    fn usage_is_generated_from_the_registries() {
+        let u = usage();
+        for c in COMMANDS {
+            assert!(u.contains(c.name), "help must document command {}", c.name);
+        }
+        for f in FLAGS {
+            assert!(u.contains(f.name), "help must document flag {}", f.name);
+        }
+        // The serve protocol pointer survives rendering.
+        assert!(u.contains("§Serve"));
+    }
+
+    #[test]
+    fn to_request_lowers_service_commands() {
+        let c = cli(&["query", "8c8f1p", "FIR", "scalar"]).unwrap();
+        let r = c.to_request().unwrap();
+        assert_eq!(
+            r,
+            Request::Query {
+                cfg: Selector::One(ClusterConfig::new(8, 8, 1)),
+                bench: Selector::One(Benchmark::Fir),
+                variant: Selector::One(Variant::Scalar),
+            }
+        );
+
+        let c = cli(&["tune"]).unwrap();
+        match c.to_request().unwrap() {
+            Request::Tune { cfg, budget, probe } => {
+                assert_eq!(cfg, Selector::One(ClusterConfig::new(8, 8, 1)));
+                assert_eq!(budget, DEFAULT_BUDGET);
+                assert_eq!(probe, Probe::Functional);
+            }
+            other => panic!("expected Tune, got {other:?}"),
+        }
+
+        let c = cli(&["pareto", "--acc"]).unwrap();
+        assert_eq!(c.to_request().unwrap(), Request::Pareto { acc: true });
+
+        assert!(cli(&["query", "bad", "FIR", "scalar"]).unwrap().to_request().is_err());
+        assert!(cli(&["query", "8c8f1p"]).unwrap().to_request().is_err());
+        assert!(cli(&["run", "8c8f1p", "FIR", "scalar"]).unwrap().to_request().is_err());
+    }
+}

@@ -239,12 +239,38 @@ pub struct CacheStats {
     pub entries: usize,
 }
 
-/// Thread-safe content-addressed store of [`Measurement`]s.
-#[derive(Default)]
+/// Number of independently locked map shards. Sixteen matches the worker
+/// cap ([`super::sweep::max_jobs`] tops out at 16), so even a fully loaded
+/// pool rarely serializes two lookups on the same mutex.
+const SHARD_COUNT: usize = 16;
+
+/// Shard selector: rehash the (already well-mixed) key with the stdlib
+/// hasher rather than reusing a key field, so every component of the
+/// address contributes to the spread.
+fn shard_index(key: &CacheKey) -> usize {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() % SHARD_COUNT as u64) as usize
+}
+
+/// Thread-safe content-addressed store of [`Measurement`]s, sharded
+/// `SHARD_COUNT` ways so concurrent service requests contend on 1/16th of
+/// the keyspace instead of one global lock.
 pub struct MeasurementCache {
-    map: Mutex<HashMap<CacheKey, Measurement>>,
+    shards: [Mutex<HashMap<CacheKey, Measurement>>; SHARD_COUNT],
     hits: AtomicU64,
     misses: AtomicU64,
+}
+
+impl Default for MeasurementCache {
+    fn default() -> Self {
+        MeasurementCache {
+            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
 }
 
 impl MeasurementCache {
@@ -253,22 +279,34 @@ impl MeasurementCache {
         Self::default()
     }
 
+    fn shard(&self, key: &CacheKey) -> &Mutex<HashMap<CacheKey, Measurement>> {
+        &self.shards[shard_index(key)]
+    }
+
     /// Look `key` up, counting the access as a hit or miss.
     pub fn lookup(&self, key: &CacheKey) -> Option<Measurement> {
-        let found = self.map.lock().unwrap().get(key).cloned();
+        let found = self.shard(key).lock().unwrap().get(key).cloned();
         let ctr = if found.is_some() { &self.hits } else { &self.misses };
         ctr.fetch_add(1, Ordering::Relaxed);
         found
     }
 
+    /// Look `key` up **without** touching the hit/miss counters. This is
+    /// the single-flight resolution probe: it re-checks for a value that
+    /// landed between plan and execute, and must not double-count an access
+    /// the planner already recorded.
+    pub fn peek(&self, key: &CacheKey) -> Option<Measurement> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
     /// Insert (or overwrite) the measurement for `key`.
     pub fn insert(&self, key: CacheKey, m: Measurement) {
-        self.map.lock().unwrap().insert(key, m);
+        self.shard(&key).lock().unwrap().insert(key, m);
     }
 
     /// Number of resident entries.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     /// True if no entries are resident.
@@ -307,18 +345,15 @@ impl MeasurementCache {
         }
         let mut accepted = 0usize;
         let mut corrupt = false;
-        {
-            let mut map = self.map.lock().unwrap();
-            for line in lines {
-                match decode_row(line) {
-                    Some((key, m)) => {
-                        if key.engine_version == ENGINE_VERSION {
-                            map.insert(key, m);
-                            accepted += 1;
-                        }
+        for line in lines {
+            match decode_row(line) {
+                Some((key, m)) => {
+                    if key.engine_version == ENGINE_VERSION {
+                        self.insert(key, m);
+                        accepted += 1;
                     }
-                    None => corrupt = true,
                 }
+                None => corrupt = true,
             }
         }
         if corrupt {
@@ -345,8 +380,13 @@ impl MeasurementCache {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let map = self.map.lock().unwrap();
-        let mut rows: Vec<String> = map.iter().map(|(k, m)| encode_row(k, m)).collect();
+        // Snapshot shard by shard (no global freeze), then sort for a
+        // deterministic file regardless of shard layout.
+        let mut rows: Vec<String> = Vec::new();
+        for shard in &self.shards {
+            let map = shard.lock().unwrap();
+            rows.extend(map.iter().map(|(k, m)| encode_row(k, m)));
+        }
         rows.sort_unstable();
         let mut out = String::with_capacity(rows.len() * 192 + MAGIC.len() + 1);
         out.push_str(MAGIC);
@@ -361,7 +401,7 @@ impl MeasurementCache {
         let tmp = std::path::PathBuf::from(tmp);
         std::fs::write(&tmp, out)?;
         match std::fs::rename(&tmp, path) {
-            Ok(()) => Ok(map.len()),
+            Ok(()) => Ok(rows.len()),
             Err(e) => {
                 // Never leave the staging file behind on a failed publish.
                 std::fs::remove_file(&tmp).ok();
@@ -648,6 +688,68 @@ mod tests {
         let st = cache.stats();
         assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
         assert!(!cache.is_empty());
+    }
+
+    /// Sharding is an internal layout change: every key is still found, the
+    /// entry count sums across shards, and the spread actually uses more
+    /// than one shard (otherwise the N-way locking buys nothing).
+    #[test]
+    fn sharded_map_behaves_like_one_map() {
+        let cache = MeasurementCache::new();
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let w = Benchmark::Fir.build(Variant::VEC, &cfg);
+        let base = CacheKey::new(&cfg, Benchmark::Fir, Variant::VEC, &w);
+        let keys: Vec<CacheKey> = (0..64u64)
+            .map(|i| {
+                let mut k = base;
+                k.workload = 0x5eed_0000 + i;
+                k
+            })
+            .collect();
+        for k in &keys {
+            cache.insert(*k, sample_measurement(&cfg));
+        }
+        assert_eq!(cache.len(), 64);
+        for k in &keys {
+            assert!(cache.peek(k).is_some(), "every inserted key resolves");
+        }
+        let shards_used: std::collections::HashSet<usize> =
+            keys.iter().map(shard_index).collect();
+        assert!(
+            shards_used.len() > SHARD_COUNT / 2,
+            "64 distinct keys should spread over most of the {SHARD_COUNT} shards, \
+             used {}",
+            shards_used.len()
+        );
+        // peek() is counter-neutral; only lookup() moves the stats.
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses), (0, 0));
+        assert!(cache.lookup(&keys[0]).is_some());
+        assert_eq!(cache.stats().hits, 1);
+    }
+
+    /// Concurrent writers on disjoint keys and readers on all of them:
+    /// the per-shard locks must never lose an insert.
+    #[test]
+    fn concurrent_inserts_and_lookups_are_coherent() {
+        let cache = MeasurementCache::new();
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let w = Benchmark::Fir.build(Variant::VEC, &cfg);
+        let base = CacheKey::new(&cfg, Benchmark::Fir, Variant::VEC, &w);
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let cache = &cache;
+                s.spawn(move || {
+                    for i in 0..32u64 {
+                        let mut k = base;
+                        k.workload = (t << 32) | i;
+                        cache.insert(k, sample_measurement(&cfg));
+                        assert!(cache.peek(&k).is_some());
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.len(), 8 * 32);
     }
 
     /// The key is stable across workload rebuilds and `Cluster::reset()`:

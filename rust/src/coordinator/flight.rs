@@ -1,0 +1,166 @@
+//! Single-flight coalescing: at most one in-flight computation per key.
+//!
+//! The service tentpole requires that N concurrent identical cache misses
+//! trigger exactly **one** simulator run — the other N-1 callers park on the
+//! leader's flight and receive a clone of its result. The table is generic
+//! so it serves two layers:
+//!
+//! * the [`QueryEngine`](super::QueryEngine) coalesces per *design point*
+//!   (`K = CacheKey`, `V = Result<Measurement, RunError>`), and
+//! * the request router coalesces whole compound requests (`tune`,
+//!   `pareto`) on their canonical wire line.
+//!
+//! Protocol: [`SingleFlight::begin`] either resolves immediately (the value
+//! appeared since the caller planned), returns [`Begin::Follow`] with a slot
+//! to [`FlightSlot::wait`] on, or returns [`Begin::Lead`] — the caller is
+//! now the leader and **must** eventually [`SingleFlight::publish`] for that
+//! key (on success *and* on failure), or followers would block forever.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A parked computation: followers wait on the condvar until the leader
+/// publishes its result.
+pub struct FlightSlot<V> {
+    result: Mutex<Option<V>>,
+    done: Condvar,
+}
+
+impl<V: Clone> FlightSlot<V> {
+    fn new() -> Self {
+        FlightSlot { result: Mutex::new(None), done: Condvar::new() }
+    }
+
+    /// Block until the leader publishes, then return a clone of its result.
+    pub fn wait(&self) -> V {
+        let mut slot = self.result.lock().unwrap();
+        while slot.is_none() {
+            slot = self.done.wait(slot).unwrap();
+        }
+        slot.clone().expect("leader published a result")
+    }
+}
+
+/// Outcome of [`SingleFlight::begin`].
+pub enum Begin<V> {
+    /// No flight in progress: the caller leads and must `publish` the key.
+    Lead,
+    /// Another caller is already computing this key: wait on the slot.
+    Follow(Arc<FlightSlot<V>>),
+    /// The `resolved` probe produced a value — nothing to compute.
+    Resolved(V),
+}
+
+/// The in-flight table. `Default`-constructible so owners can keep deriving
+/// `Default`.
+pub struct SingleFlight<K, V> {
+    inflight: Mutex<HashMap<K, Arc<FlightSlot<V>>>>,
+}
+
+impl<K, V> Default for SingleFlight<K, V> {
+    fn default() -> Self {
+        SingleFlight { inflight: Mutex::new(HashMap::new()) }
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> SingleFlight<K, V> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Join or start the flight for `key`. The `resolved` probe runs under
+    /// the table lock *before* a new flight is opened — pass a cheap cache
+    /// peek so a value published after the caller's plan is still found
+    /// (the classic plan-then-execute race).
+    pub fn begin(&self, key: &K, resolved: impl FnOnce() -> Option<V>) -> Begin<V> {
+        let mut inflight = self.inflight.lock().unwrap();
+        if let Some(slot) = inflight.get(key) {
+            return Begin::Follow(Arc::clone(slot));
+        }
+        if let Some(v) = resolved() {
+            return Begin::Resolved(v);
+        }
+        inflight.insert(key.clone(), Arc::new(FlightSlot::new()));
+        Begin::Lead
+    }
+
+    /// Leader hand-off: close the flight and wake every follower with a
+    /// clone of `value`. Publishing a key with no open flight is a no-op.
+    pub fn publish(&self, key: &K, value: V) {
+        let slot = self.inflight.lock().unwrap().remove(key);
+        if let Some(slot) = slot {
+            *slot.result.lock().unwrap() = Some(value);
+            slot.done.notify_all();
+        }
+    }
+
+    /// Number of flights currently open (leaders that have not published).
+    pub fn in_flight(&self) -> usize {
+        self.inflight.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn leader_runs_once_followers_share_the_result() {
+        let flight: SingleFlight<u32, u64> = SingleFlight::new();
+        let computed = AtomicU64::new(0);
+        let mut seen: Vec<u64> = Vec::new();
+
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| match flight.begin(&7, || None) {
+                        Begin::Lead => {
+                            let v = 40 + computed.fetch_add(1, Ordering::SeqCst);
+                            // Give followers time to pile onto the slot.
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                            flight.publish(&7, v);
+                            v
+                        }
+                        Begin::Follow(slot) => slot.wait(),
+                        Begin::Resolved(v) => v,
+                    })
+                })
+                .collect();
+            for h in handles {
+                seen.push(h.join().unwrap());
+            }
+        });
+
+        assert_eq!(computed.load(Ordering::SeqCst), 1, "exactly one leader computes");
+        assert!(seen.iter().all(|&v| v == 40), "every caller sees the leader's value");
+        assert_eq!(flight.in_flight(), 0, "publish closes the flight");
+    }
+
+    #[test]
+    fn resolved_probe_short_circuits_a_new_flight() {
+        let flight: SingleFlight<&'static str, i32> = SingleFlight::default();
+        match flight.begin(&"k", || Some(11)) {
+            Begin::Resolved(v) => assert_eq!(v, 11),
+            _ => panic!("probe hit must resolve without opening a flight"),
+        }
+        assert_eq!(flight.in_flight(), 0);
+
+        // Without a probe hit the same key opens a flight...
+        assert!(matches!(flight.begin(&"k", || None), Begin::Lead));
+        assert_eq!(flight.in_flight(), 1);
+        // ...and an open flight wins over the probe: joiners must follow the
+        // leader rather than race it through a stale cache view.
+        assert!(matches!(flight.begin(&"k", || Some(99)), Begin::Follow(_)));
+        flight.publish(&"k", 5);
+        assert_eq!(flight.in_flight(), 0);
+    }
+
+    #[test]
+    fn publishing_an_unled_key_is_a_no_op() {
+        let flight: SingleFlight<u8, u8> = SingleFlight::new();
+        flight.publish(&3, 9);
+        assert_eq!(flight.in_flight(), 0);
+    }
+}

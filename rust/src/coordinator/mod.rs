@@ -10,6 +10,7 @@
 //! design space's Pareto frontier over the three paper metrics.
 
 pub mod cache;
+pub mod flight;
 pub mod pareto;
 pub mod query;
 pub mod sweep;
@@ -18,9 +19,10 @@ pub mod tables;
 pub use cache::{
     workload_fingerprint, CacheKey, CacheStats, Fidelity, MeasurementCache, ENGINE_VERSION,
 };
+pub use flight::{Begin, FlightSlot, SingleFlight};
 pub use pareto::{
-    accuracy_pareto_front, accuracy_pareto_table, accuracy_pareto_table_from,
-    accuracy_pareto_table_with, pareto_front, pareto_table, pareto_table_from, pareto_table_with,
+    accuracy_pareto_front, accuracy_pareto_table, accuracy_pareto_table_from, pareto_front,
+    pareto_table, pareto_table_from,
 };
 pub use query::{points, QueryEngine, QueryError, QueryFailure, QueryPlan, QueryPoint};
 pub use sweep::{
@@ -29,8 +31,7 @@ pub use sweep::{
     QuarantinedJob,
 };
 pub use tables::{
-    fig3, fig4, fig5, fig5_with, fig6, fig6_with, fig7, fig7_with, fig8, fig8_with,
-    measurements_table, table3, table3_with, table45, table45_with, table6, table6_with,
+    fig3, fig4, fig5, fig6, fig7, fig8, measurements_table, table3, table45, table6,
 };
 
 #[cfg(test)]

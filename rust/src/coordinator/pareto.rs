@@ -90,19 +90,15 @@ pub fn pareto_table_from(ms: &[Measurement]) -> Table {
 }
 
 /// `transpfp pareto`: the frontier of the full 18×8×2 design space,
-/// resolved through `engine`'s measurement cache.
-pub fn pareto_table_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
+/// resolved through `engine`'s measurement cache (the CLI passes
+/// [`QueryEngine::global()`]).
+pub fn pareto_table(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let pts = points(
         &ClusterConfig::design_space(),
         &Benchmark::all(),
         &[Variant::Scalar, Variant::VEC],
     );
     Ok(pareto_table_from(&engine.query(&pts)?))
-}
-
-/// [`pareto_table_with`] on the process-wide engine.
-pub fn pareto_table() -> Result<Table, QueryFailure> {
-    pareto_table_with(QueryEngine::global())
 }
 
 // ------------------------------------------- accuracy-extended frontier
@@ -172,15 +168,11 @@ pub fn accuracy_pareto_table_from(ms: &[Measurement]) -> Table {
 
 /// `transpfp pareto --acc`: the accuracy-extended frontier of the full
 /// design space crossed with the five-rung precision ladder, resolved
-/// through `engine`'s measurement cache.
-pub fn accuracy_pareto_table_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
+/// through `engine`'s measurement cache (the CLI passes
+/// [`QueryEngine::global()`]).
+pub fn accuracy_pareto_table(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let pts = points(&ClusterConfig::design_space(), &Benchmark::all(), &LADDER);
     Ok(accuracy_pareto_table_from(&engine.query(&pts)?))
-}
-
-/// [`accuracy_pareto_table_with`] on the process-wide engine.
-pub fn accuracy_pareto_table() -> Result<Table, QueryFailure> {
-    accuracy_pareto_table_with(QueryEngine::global())
 }
 
 #[cfg(test)]

@@ -13,12 +13,13 @@
 //! execution so callers can inspect the partition (`transpfp query` prints
 //! it) and tests can assert "a warm table issues zero simulator runs".
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::cache::{CacheKey, CacheStats, Fidelity, MeasurementCache, CACHE_FILE};
+use super::flight::{Begin, FlightSlot, SingleFlight};
 use super::sweep::{
     run_one_at, run_one_functional_at, run_parallel, run_parallel_reported, run_workload,
     run_workload_functional, Measurement,
@@ -98,7 +99,8 @@ impl std::fmt::Display for QueryError {
 /// returned, so a retry after fixing the bad points re-simulates nothing.
 #[derive(Debug, Clone)]
 pub struct QueryFailure {
-    /// The unresolvable points, in unique-point order.
+    /// The unresolvable points: this call's own (led) misses first in plan
+    /// order, then any failures inherited from flights it coalesced onto.
     pub errors: Vec<QueryError>,
     /// Points requested (including duplicates).
     pub requested: usize,
@@ -208,7 +210,20 @@ pub struct QueryEngine {
     sim_runs: AtomicU64,
     /// Functional-backend executions this engine has issued.
     functional_runs: AtomicU64,
+    /// In-flight table: identical concurrent misses coalesce onto one run.
+    flight: SingleFlight<CacheKey, FlightResult>,
+    /// Every key this engine has ever led a run for. `sim_runs +
+    /// functional_runs` minus this set's size is the duplicate-run count
+    /// the service gates at zero.
+    executed: Mutex<HashSet<CacheKey>>,
+    /// Misses resolved by another in-flight (or just-published) run
+    /// instead of a simulator execution of their own.
+    coalesced: AtomicU64,
 }
+
+/// What a flight leader hands its followers: the run's outcome, cloneable
+/// so every waiter gets its own copy.
+type FlightResult = Result<Measurement, RunError>;
 
 impl QueryEngine {
     /// Engine with an empty in-memory cache.
@@ -239,6 +254,21 @@ impl QueryEngine {
     /// Functional-backend executions issued so far.
     pub fn functional_runs(&self) -> u64 {
         self.functional_runs.load(Ordering::Relaxed)
+    }
+
+    /// Misses resolved by coalescing onto another caller's in-flight run
+    /// (or onto a result that landed between plan and execute) instead of
+    /// issuing a simulator execution of their own.
+    pub fn coalesced_runs(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
+    }
+
+    /// Executions issued beyond one per distinct point — the service's
+    /// zero-duplicate-runs gate. Single-flight keeps this at 0 no matter
+    /// how many concurrent identical requests arrive.
+    pub fn duplicate_runs(&self) -> u64 {
+        let distinct = self.executed.lock().unwrap().len() as u64;
+        (self.sim_runs() + self.functional_runs()).saturating_sub(distinct)
     }
 
     /// The process-wide engine the CLI and the public table emitters share.
@@ -295,25 +325,48 @@ impl QueryEngine {
     /// Simulate the plan's misses in parallel, populate the cache, and
     /// return one measurement per requested point, in request order.
     ///
-    /// Misses run under `catch_unwind` in the worker pool: a point that
+    /// Misses go through the engine's single-flight table first: if another
+    /// caller is already simulating the same point, this call **follows**
+    /// that flight instead of re-running it; if the point's result landed in
+    /// the cache since planning, it resolves immediately. Only the points
+    /// this call *leads* are batched into the worker pool — which is how 64
+    /// concurrent identical cold requests cost exactly one simulator run.
+    ///
+    /// Led misses run under `catch_unwind` in the worker pool: a point that
     /// hangs, deadlocks, faults, or outright panics is collected into the
     /// [`QueryFailure`] report while every *other* miss still completes
     /// **and is cached** before the error returns — a retry after fixing
-    /// the bad points re-simulates nothing.
+    /// the bad points re-simulates nothing. Every led flight is published
+    /// (success *or* failure), so followers never block on a dead leader.
     pub fn execute(&self, plan: QueryPlan) -> Result<Vec<Measurement>, QueryFailure> {
         let QueryPlan { mut unique, order } = plan;
         let requested = order.len();
-        let miss_idx: Vec<usize> = unique
-            .iter()
-            .enumerate()
-            .filter_map(|(i, pp)| pp.resolved.is_none().then_some(i))
-            .collect();
+        // Partition the plan's misses through the flight table.
+        let mut lead_idx: Vec<usize> = Vec::new();
+        let mut follows: Vec<(usize, Arc<FlightSlot<FlightResult>>)> = Vec::new();
+        for (i, pp) in unique.iter_mut().enumerate() {
+            if pp.resolved.is_some() {
+                continue;
+            }
+            let key = pp.key;
+            match self.flight.begin(&key, || self.cache.peek(&key)) {
+                Begin::Lead => lead_idx.push(i),
+                Begin::Follow(slot) => follows.push((i, slot)),
+                Begin::Resolved(Ok(m)) => {
+                    self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    pp.resolved = Some(m);
+                    pp.workload = None;
+                }
+                // peek() only yields successes; named for totality.
+                Begin::Resolved(Err(_)) => unreachable!("cache peek cannot fail"),
+            }
+        }
         let mut errors: Vec<QueryError> = Vec::new();
-        if !miss_idx.is_empty() {
+        if !lead_idx.is_empty() {
             // A miss planned via the fingerprint memo has no prebuilt
             // workload; its worker rebuilds it (the build is deterministic).
             let jobs: Vec<(QueryPoint, Option<&Workload>)> =
-                miss_idx.iter().map(|&i| (unique[i].point, unique[i].workload.as_ref())).collect();
+                lead_idx.iter().map(|&i| (unique[i].point, unique[i].workload.as_ref())).collect();
             let (results, quarantined) = run_parallel_reported(&jobs, |(p, w)| match p.fidelity {
                 Fidelity::CycleAccurate => {
                     self.sim_runs.fetch_add(1, Ordering::Relaxed);
@@ -335,27 +388,48 @@ impl QueryEngine {
             drop(jobs);
             let panicked: HashMap<usize, String> =
                 quarantined.into_iter().map(|q| (q.index, q.payload)).collect();
-            for (j, (&i, r)) in miss_idx.iter().zip(results).enumerate() {
-                match r {
-                    Some(Ok(m)) => {
-                        self.cache.insert(unique[i].key, m.clone());
-                        unique[i].resolved = Some(m);
-                        unique[i].workload = None;
-                    }
-                    Some(Err(e)) => {
-                        errors.push(QueryError { point: unique[i].point, error: e });
-                    }
+            for (j, (&i, r)) in lead_idx.iter().zip(results).enumerate() {
+                let key = unique[i].key;
+                self.executed.lock().unwrap().insert(key);
+                let outcome: FlightResult = match r {
+                    Some(Ok(m)) => Ok(m),
+                    Some(Err(e)) => Err(e),
                     None => {
                         let payload = panicked
                             .get(&j)
                             .cloned()
                             .unwrap_or_else(|| "unknown panic".to_string());
-                        errors.push(QueryError {
-                            point: unique[i].point,
-                            error: RunError::Fault(format!("worker panicked: {payload}")),
-                        });
+                        Err(RunError::Fault(format!("worker panicked: {payload}")))
+                    }
+                };
+                match &outcome {
+                    Ok(m) => {
+                        self.cache.insert(key, m.clone());
+                        unique[i].resolved = Some(m.clone());
+                        unique[i].workload = None;
+                    }
+                    Err(e) => {
+                        errors.push(QueryError { point: unique[i].point, error: e.clone() });
                     }
                 }
+                // Publish *after* the cache insert, so anyone who observes
+                // the closed flight finds the value; and publish failures
+                // too, so followers inherit the structured error instead of
+                // blocking forever.
+                self.flight.publish(&key, outcome);
+            }
+        }
+        // Collect followed flights only after this call's own leads have
+        // published — two calls leading disjoint halves of the same batch
+        // can therefore never deadlock on each other.
+        for (i, slot) in follows {
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+            match slot.wait() {
+                Ok(m) => {
+                    unique[i].resolved = Some(m);
+                    unique[i].workload = None;
+                }
+                Err(e) => errors.push(QueryError { point: unique[i].point, error: e }),
             }
         }
         if !errors.is_empty() {
@@ -373,17 +447,20 @@ impl QueryEngine {
         self.execute(self.plan(pts))
     }
 
-    /// Resolve a single full-occupancy point.
-    pub fn one(
-        &self,
-        cfg: &ClusterConfig,
-        bench: Benchmark,
-        variant: Variant,
-    ) -> Result<Measurement, QueryFailure> {
-        Ok(self.query(&[QueryPoint::new(cfg, bench, variant)])?.pop().expect("one measurement"))
+    /// Resolve a single point. Build it with the [`QueryPoint`]
+    /// constructors — `QueryPoint::new` for full occupancy,
+    /// `QueryPoint::at` for a team size, `QueryPoint::functional` for an
+    /// accuracy-only probe — so the engine has exactly one single-point
+    /// entry instead of mirroring every constructor.
+    pub fn one(&self, point: QueryPoint) -> Result<Measurement, QueryFailure> {
+        Ok(self.query(&[point])?.pop().expect("one measurement"))
     }
 
     /// Resolve a single point under a `workers`-core team.
+    #[deprecated(
+        since = "0.5.0",
+        note = "build the point explicitly: `one(QueryPoint::at(cfg, bench, variant, workers))`"
+    )]
     pub fn one_at(
         &self,
         cfg: &ClusterConfig,
@@ -391,10 +468,7 @@ impl QueryEngine {
         variant: Variant,
         workers: usize,
     ) -> Result<Measurement, QueryFailure> {
-        Ok(self
-            .query(&[QueryPoint::at(cfg, bench, variant, workers)])?
-            .pop()
-            .expect("one measurement"))
+        self.one(QueryPoint::at(cfg, bench, variant, workers))
     }
 }
 
@@ -490,9 +564,9 @@ mod tests {
     fn occupancy_is_part_of_the_address() {
         let engine = QueryEngine::new();
         let cfg = ClusterConfig::new(8, 4, 1);
-        let full = engine.one(&cfg, Benchmark::Fir, Variant::Scalar).unwrap();
-        let half = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 4).unwrap();
-        let solo = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 1).unwrap();
+        let full = engine.one(QueryPoint::new(&cfg, Benchmark::Fir, Variant::Scalar)).unwrap();
+        let half = engine.one(QueryPoint::at(&cfg, Benchmark::Fir, Variant::Scalar, 4)).unwrap();
+        let solo = engine.one(QueryPoint::at(&cfg, Benchmark::Fir, Variant::Scalar, 1)).unwrap();
         assert_eq!(engine.stats().entries, 3, "each occupancy has its own entry");
         assert_eq!((full.workers, half.workers, solo.workers), (8, 4, 1));
         assert!(
@@ -502,11 +576,48 @@ mod tests {
             half.cycles,
             full.cycles
         );
-        // Warm re-resolution hits for every occupancy.
+        // Warm re-resolution hits for every occupancy — including through
+        // the deprecated `one_at` shim, which must stay behaviorally
+        // identical to `one(QueryPoint::at(..))` until it is removed.
         let st = engine.stats();
+        #[allow(deprecated)]
         let warm = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 4).unwrap();
         assert_eq!(engine.stats().misses, st.misses, "occupancy re-query must not simulate");
         assert_eq!(warm.cycles, half.cycles);
+    }
+
+    /// The tentpole gate, in miniature: concurrent identical cold misses
+    /// coalesce onto one flight — one simulator run total, everyone gets
+    /// the same measurement, and the duplicate-run counter stays at zero.
+    #[test]
+    fn concurrent_identical_misses_run_the_simulator_once() {
+        let engine = QueryEngine::new();
+        let cfg = ClusterConfig::new(8, 2, 0);
+        let point = QueryPoint::new(&cfg, Benchmark::Fir, Variant::Scalar);
+        let mut cycles: Vec<u64> = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let engine = &engine;
+                    s.spawn(move || engine.one(point).expect("point resolves").cycles)
+                })
+                .collect();
+            for h in handles {
+                cycles.push(h.join().unwrap());
+            }
+        });
+        assert_eq!(
+            engine.sim_runs(),
+            1,
+            "8 concurrent identical cold queries must cost exactly 1 run"
+        );
+        assert_eq!(engine.duplicate_runs(), 0);
+        assert!(cycles.windows(2).all(|w| w[0] == w[1]), "all callers share one result");
+        assert_eq!(engine.stats().entries, 1);
+        // Each of the 8 callers either hit the cache at plan time (planned
+        // after the leader published) or had its miss coalesced onto the
+        // leader's flight; exactly one led the run itself.
+        assert_eq!(engine.stats().hits + engine.coalesced_runs(), 7);
     }
 
     /// Accuracy-only plans resolve entirely on the functional backend —
@@ -532,7 +643,7 @@ mod tests {
         }
         // A cycle-accurate resolution is a separate entry with identical
         // accuracy but real timing.
-        let ca = engine.one(&cfg, Benchmark::Fir, Variant::VEC).unwrap();
+        let ca = engine.one(QueryPoint::new(&cfg, Benchmark::Fir, Variant::VEC)).unwrap();
         assert_eq!(engine.sim_runs(), 1);
         assert_eq!(engine.stats().entries, 3);
         assert_eq!(ca.err.rel.to_bits(), ms[0].err.rel.to_bits(), "accuracy must be tier-equal");

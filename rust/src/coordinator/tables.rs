@@ -4,9 +4,10 @@
 //!
 //! Every emitter goes through the [`QueryEngine`] planner, so a warm cache
 //! regenerates the paper's tables without issuing a single simulator run.
-//! The zero-argument public forms use the process-wide engine; the `_with`
-//! forms take an explicit engine (benches and tests use private ones so
-//! hit/miss assertions are not shared state). Since ENGINE_VERSION 3 this
+//! Each query-backed emitter takes the engine explicitly — the CLI passes
+//! [`QueryEngine::global()`], benches and tests pass private engines so
+//! hit/miss assertions are not shared state. (The old zero-argument /
+//! `_with` duplicated pairs are collapsed.) Since ENGINE_VERSION 3 this
 //! includes Fig 5 (power activity at 100 MHz — regenerated from the cached
 //! counters via [`model::Activity::from_measurement`]) and Fig 6
 //! (occupancy speed-ups — team size is part of the cache address and
@@ -28,12 +29,7 @@ fn configs_for(cores: usize) -> Vec<ClusterConfig> {
 
 /// Table 3: FP / memory intensity per benchmark and variant — measured on
 /// the 8c8f1p configuration, side by side with the paper's values.
-pub fn table3() -> Result<Table, QueryFailure> {
-    table3_with(QueryEngine::global())
-}
-
-/// [`table3`] through an explicit query engine.
-pub fn table3_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
+pub fn table3(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let cfg = ClusterConfig::new(8, 8, 1);
     let measurements =
         engine.query(&points(&[cfg], &Benchmark::all(), &[Variant::Scalar, Variant::VEC]))?;
@@ -63,12 +59,7 @@ pub fn table3_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
 /// every benchmark on the 8-core (`cores = 8`) or 16-core (`cores = 16`)
 /// configurations, scalar and vector variants, with the per-row best
 /// configuration boxed and the normalized-average (NAVG) footer.
-pub fn table45(cores: usize) -> Result<Table, QueryFailure> {
-    table45_with(QueryEngine::global(), cores)
-}
-
-/// [`table45`] through an explicit query engine.
-pub fn table45_with(engine: &QueryEngine, cores: usize) -> Result<Table, QueryFailure> {
+pub fn table45(engine: &QueryEngine, cores: usize) -> Result<Table, QueryFailure> {
     let configs = configs_for(cores);
     let measurements =
         engine.query(&points(&configs, &Benchmark::all(), &[Variant::Scalar, Variant::VEC]))?;
@@ -175,12 +166,7 @@ pub fn fig4() -> Table {
 /// through the query engine since ENGINE_VERSION 3: the activity rates
 /// regenerate from cached counters ([`model::Activity::from_measurement`]),
 /// so a warm `fig5` issues zero simulator runs.
-pub fn fig5() -> Result<Table, QueryFailure> {
-    fig5_with(QueryEngine::global())
-}
-
-/// [`fig5`] through an explicit query engine.
-pub fn fig5_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
+pub fn fig5(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let configs = ClusterConfig::design_space();
     let ms = engine.query(&points(&configs, &[Benchmark::Matmul], &[Variant::Scalar]))?;
     let mut t = Table::new(vec!["config", "P @100MHz NT (mW)", "P @100MHz ST (mW)"]);
@@ -198,12 +184,7 @@ pub fn fig5_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
 /// 1/2/4/8/16 workers forked through the runtime, scalar and vector.
 /// Baseline: 1-worker team, scalar, same config. Occupancy is part of the
 /// cache address, so a warm `fig6` issues zero simulator runs.
-pub fn fig6() -> Result<Table, QueryFailure> {
-    fig6_with(QueryEngine::global())
-}
-
-/// [`fig6`] through an explicit query engine.
-pub fn fig6_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
+pub fn fig6(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let mut t = Table::new(vec!["bench", "workers", "variant", "min", "avg", "max"]);
     let configs = configs_for(16);
     const OCCUPANCIES: [usize; 5] = [1, 2, 4, 8, 16];
@@ -251,12 +232,7 @@ pub fn fig6_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
 
 /// Fig 7: normalized average performance / energy efficiency / area
 /// efficiency versus the FPU sharing factor (pipeline fixed at 1).
-pub fn fig7() -> Result<Table, QueryFailure> {
-    fig7_with(QueryEngine::global())
-}
-
-/// [`fig7`] through an explicit query engine.
-pub fn fig7_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
+pub fn fig7(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let mut t = Table::new(vec!["cores", "sharing", "PERF (norm)", "E.EFF (norm)", "A.EFF (norm)"]);
     for cores in [8usize, 16] {
         let configs: Vec<ClusterConfig> =
@@ -277,12 +253,7 @@ pub fn fig7_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
 }
 
 /// Fig 8: normalized averages versus the pipeline depth (1/1 sharing fixed).
-pub fn fig8() -> Result<Table, QueryFailure> {
-    fig8_with(QueryEngine::global())
-}
-
-/// [`fig8`] through an explicit query engine.
-pub fn fig8_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
+pub fn fig8(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let mut t = Table::new(vec!["cores", "pipe", "PERF (norm)", "E.EFF (norm)", "A.EFF (norm)"]);
     for cores in [8usize, 16] {
         let configs: Vec<ClusterConfig> =
@@ -325,12 +296,7 @@ fn averaged_metrics(
 /// literature values; the three "This work" rows are **measured here** on
 /// the f32 MATMUL (the paper's methodology) and printed next to the values
 /// the paper reports for itself.
-pub fn table6() -> Result<Table, QueryFailure> {
-    table6_with(QueryEngine::global())
-}
-
-/// [`table6`] through an explicit query engine.
-pub fn table6_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
+pub fn table6(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     let mut t = Table::new(vec![
         "platform",
         "domain",
@@ -357,7 +323,7 @@ pub fn table6_with(engine: &QueryEngine) -> Result<Table, QueryFailure> {
     }
     for ps in crate::report::soa::paper_self_rows() {
         let cfg = ClusterConfig::parse(ps.mnemonic).unwrap();
-        let m = engine.one(&cfg, Benchmark::Matmul, Variant::Scalar)?;
+        let m = engine.one(QueryPoint::new(&cfg, Benchmark::Matmul, Variant::Scalar))?;
         t.row(vec![
             format!("This work {} ({}) [measured]", ps.mnemonic, ps.role),
             "Embedded".to_string(),
@@ -452,7 +418,7 @@ mod tests {
     #[test]
     fn fig7_sharing_trends() {
         // §5.3.2: performance grows with the sharing factor (1/4 → 1/1).
-        let t = fig7().expect("fig7 points resolve");
+        let t = fig7(QueryEngine::global()).expect("fig7 points resolve");
         let csv = t.to_csv();
         let rows: Vec<Vec<f64>> = csv
             .lines()
@@ -471,7 +437,7 @@ mod tests {
     fn fig8_pipeline_trends() {
         // §5.3.3: 1 stage is the performance sweet spot; energy efficiency
         // strictly decreases with pipeline depth.
-        let t = fig8().expect("fig8 points resolve");
+        let t = fig8(QueryEngine::global()).expect("fig8 points resolve");
         let csv = t.to_csv();
         let rows: Vec<Vec<f64>> = csv
             .lines()

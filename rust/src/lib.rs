@@ -20,11 +20,17 @@
 //!   classification and detect-and-retry recovery (`transpfp inject`);
 //! * [`runtime`] — PJRT loading of the AOT-compiled JAX/Pallas goldens
 //!   (`artifacts/*.hlo.txt`) for numeric validation;
-//! * [`report`] — table/CSV emitters and the Table 6 SoA data.
+//! * [`report`] — table/CSV emitters and the Table 6 SoA data;
+//! * [`cli`] — the declarative flag/command registries both the binary and
+//!   the serve wire protocol parse with;
+//! * [`server`] — `transpfp serve`, the concurrent design-space query
+//!   service (newline-delimited protocol, single-flight dedup,
+//!   per-endpoint metrics).
 //!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
@@ -34,6 +40,20 @@ pub mod kernels;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod testutil;
 pub mod transfp;
 pub mod tuner;
+
+/// The types almost every downstream use of the crate needs: build a
+/// [`prelude::QueryPoint`], resolve it through a
+/// [`prelude::QueryEngine`], or lower a CLI/wire command into a
+/// [`prelude::Request`].
+pub mod prelude {
+    pub use crate::cli::{parse_cli, Cli};
+    pub use crate::config::ClusterConfig;
+    pub use crate::coordinator::{points, Measurement, QueryEngine, QueryFailure, QueryPoint};
+    pub use crate::kernels::{Benchmark, Variant};
+    pub use crate::server::{Reply, Request, Selector, Server};
+    pub use crate::tuner::Probe;
+}

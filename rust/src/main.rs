@@ -3,255 +3,28 @@
 //! Subcommands regenerate every table/figure of the paper, run individual
 //! benchmarks, resolve arbitrary design-space queries, and validate the
 //! simulator's numerics against the AOT-compiled JAX/Pallas goldens
-//! (`artifacts/*.hlo.txt`). Every command that consumes full-occupancy
-//! measurements goes through the memoizing query engine: results persist
-//! under `artifacts/cache/` (override with `TRANSPFP_CACHE_DIR`, disable
-//! with `--no-cache`), so repeated invocations skip simulation entirely.
+//! (`artifacts/*.hlo.txt`). Parsing is driven by the declarative registries
+//! in [`transpfp::cli`] (shared with the serve wire protocol); the
+//! service-shaped subcommands (`query`, `tune`, `pareto`) lower into the
+//! same typed [`Request`] the daemon executes. Every command that consumes
+//! full-occupancy measurements goes through the memoizing query engine:
+//! results persist under `artifacts/cache/` (override with
+//! `TRANSPFP_CACHE_DIR`, disable with `--no-cache`), so repeated
+//! invocations skip simulation entirely.
 
 use std::process::ExitCode;
+use std::sync::Arc;
 
+use transpfp::cli::{self, parse_cli, usage, Cli, DEFAULT_PORT};
 use transpfp::cluster::BackendKind;
 use transpfp::config::{ClusterConfig, Corner};
-use transpfp::coordinator::{self, QueryEngine};
-use transpfp::faults::{self, SiteClass};
-use transpfp::kernels::{Benchmark, Variant};
+use transpfp::coordinator::{self, QueryEngine, QueryPoint};
+use transpfp::faults;
+use transpfp::kernels::Benchmark;
 use transpfp::model;
 use transpfp::report;
-use transpfp::transfp::FpMode;
+use transpfp::server::{serve_tcp, Request, Server};
 use transpfp::tuner;
-
-const USAGE: &str = "\
-transpfp — transprecision FP cluster reproduction (TPDS 2021)
-
-USAGE: transpfp <command> [args] [flags]
-
-COMMANDS:
-  configs                 list the Table 2 design space
-  run <cfg> <bench> <variant>
-                          run one benchmark (e.g. `run 8c4f1p MATMUL vector`);
-                          variants: scalar, scalar-f16, scalar-bf16,
-                          vector (vector-f16), vector-bf16; with
-                          --tiles <t>, run the DMA double-buffered tiled
-                          build (MATMUL/CONV scalar, dataset in L2 beyond
-                          the TCDM, streamed through ping-pong buffers);
-                          with --backend <event|reference|functional>, run
-                          uncached on the chosen execution tier (the
-                          functional tier verifies numerics with no timing)
-  query <cfg|all> <bench|all> <variant|all>
-                          resolve a batch of design-space points through the
-                          measurement cache (plan stats on stderr); `all`
-                          spans the full 5-rung precision ladder
-  tune [cfg|all]          accuracy-aware precision autotuning: select the
-                          cheapest admissible ladder rung per benchmark
-                          under --budget (relative L2 error vs the f64
-                          reference; default 1e-2); default config 8c8f1p.
-                          --probe functional (default) measures every
-                          rung's accuracy on the functional backend and
-                          simulates only admissible rungs; --probe cycle
-                          restores all-cycle-accurate probing
-  pareto                  Pareto frontier of the full design space over
-                          (Gflop/s, Gflop/s/W, Gflop/s/mm^2); with --acc,
-                          the accuracy-extended frontier over
-                          (rel. error, Gflop/s, Gflop/s/W) across the ladder
-  table3                  FP/memory intensities (measured vs paper)
-  table4                  8-core benchmark tables (perf / e-eff / a-eff)
-  table5                  16-core benchmark tables
-  table6                  state-of-the-art comparison (measured + paper)
-  fig3                    fmax spread per pipeline/corner
-  fig4                    area per configuration
-  fig5                    power @100 MHz per configuration (cache-backed)
-  fig6                    parallel + vectorization speed-ups on the 16-core
-                          configurations: occupancy (1..=16 workers) is
-                          swept through the fork-join runtime's teams and
-                          resolved via the measurement cache
-  fig7                    metrics vs FPU sharing factor
-  fig8                    metrics vs pipeline stages
-  validate [dir]          check simulator numerics vs XLA goldens (artifacts/)
-  sweep                   run the full 18x8x2 design space, CSV to stdout
-  inject <cfg>            seeded SEU fault-injection campaign on one config:
-                          samples --rate upset points per benchmark x rung
-                          from the --seed stream, flips one bit per run in a
-                          --sites structure (TCDM word, register cell, or
-                          in-flight DMA payload), and classifies every point
-                          as masked / tolerable / sdc / crash / hang against
-                          the fault-free baseline and the binary64 reference
-                          (--budget splits tolerable from sdc). Summary table
-                          by default; --csv emits the per-point campaign CSV.
-                          Deterministic: same seed + flags => bit-identical
-                          CSV, regardless of --jobs
-
-FLAGS:
-  --csv                   CSV output for table/fig/pareto/query/tune/inject
-  --no-cache              don't load or persist the measurement cache
-  --acc                   accuracy-extended frontier (pareto only)
-  --budget <rel-err>      error budget for `tune` and `inject` (default 1e-2)
-  --tiles <t>             run the DMA double-buffered tiled kernel with t
-                          tiles (`run` with MATMUL or CONV, scalar)
-  --backend <b>           execution tier for `run`: event, reference or
-                          functional (architectural-only, no timing)
-  --probe <p>             accuracy probe for `tune`: functional (default)
-                          or cycle
-  --jobs <n>              cap sweep/query worker threads (default: all
-                          cores, at most 16)
-  --seed <s>              campaign sampling seed for `inject` (default 1)
-  --rate <n>              injected points per benchmark x rung for `inject`
-                          (default 8)
-  --sites <list>          structure classes for `inject`: comma-separated
-                          subset of tcdm,reg,dma, or `all` (default all)
-  --no-recover            disable the detect-and-retry recovery loop for
-                          `inject` (report raw outcomes only)
-
-Simulation failures are structured, never panics: a hung or deadlocked run
-is reported with its watchdog class, failing query points are listed per
-point (resolved points stay cached), and the exit code is non-zero.
-
-Measurements are memoized under artifacts/cache/measurements.csv, keyed by
-(program fingerprint, config, variant, occupancy, fidelity, engine
-version); see EXPERIMENTS.md §Cache + §Tuner + §Backends for the
-invalidation rules. TRANSPFP_CACHE_DIR overrides the directory.";
-
-/// Parsed command line: recognized flags plus positional arguments.
-/// Unknown flags are an error — a typo like `--cvs` must fail loudly, not
-/// be silently treated as a positional (or worse, filtered away).
-struct Cli {
-    csv: bool,
-    no_cache: bool,
-    acc: bool,
-    budget: Option<f64>,
-    tiles: Option<usize>,
-    backend: Option<BackendKind>,
-    probe: Option<tuner::Probe>,
-    jobs: Option<usize>,
-    seed: Option<u64>,
-    rate: Option<usize>,
-    sites: Option<Vec<SiteClass>>,
-    no_recover: bool,
-    args: Vec<String>,
-}
-
-fn parse_cli<I: IntoIterator<Item = String>>(raw: I) -> Result<Cli, String> {
-    let mut cli = Cli {
-        csv: false,
-        no_cache: false,
-        acc: false,
-        budget: None,
-        tiles: None,
-        backend: None,
-        probe: None,
-        jobs: None,
-        seed: None,
-        rate: None,
-        sites: None,
-        no_recover: false,
-        args: Vec::new(),
-    };
-    let mut it = raw.into_iter();
-    while let Some(a) = it.next() {
-        match a.as_str() {
-            "--csv" => cli.csv = true,
-            "--no-cache" => cli.no_cache = true,
-            "--acc" => cli.acc = true,
-            "--budget" => {
-                let v = it
-                    .next()
-                    .ok_or_else(|| "flag `--budget` needs a value (e.g. `--budget 1e-2`)".to_string())?;
-                match v.parse::<f64>() {
-                    Ok(b) if b.is_finite() && b >= 0.0 => cli.budget = Some(b),
-                    _ => return Err(format!("bad `--budget` value `{v}`")),
-                }
-            }
-            "--tiles" => {
-                let v = it
-                    .next()
-                    .ok_or_else(|| "flag `--tiles` needs a value (e.g. `--tiles 8`)".to_string())?;
-                match v.parse::<usize>() {
-                    Ok(t) if t >= 1 => cli.tiles = Some(t),
-                    _ => return Err(format!("bad `--tiles` value `{v}`")),
-                }
-            }
-            "--backend" => {
-                let v = it.next().ok_or_else(|| {
-                    "flag `--backend` needs a value (event, reference or functional)".to_string()
-                })?;
-                match BackendKind::parse(&v) {
-                    Some(b) => cli.backend = Some(b),
-                    None => return Err(format!("bad `--backend` value `{v}`")),
-                }
-            }
-            "--probe" => {
-                let v = it.next().ok_or_else(|| {
-                    "flag `--probe` needs a value (functional or cycle)".to_string()
-                })?;
-                match v.as_str() {
-                    "functional" => cli.probe = Some(tuner::Probe::Functional),
-                    "cycle" | "cycle-accurate" => cli.probe = Some(tuner::Probe::CycleAccurate),
-                    _ => return Err(format!("bad `--probe` value `{v}`")),
-                }
-            }
-            "--jobs" => {
-                let v = it
-                    .next()
-                    .ok_or_else(|| "flag `--jobs` needs a value (e.g. `--jobs 4`)".to_string())?;
-                match v.parse::<usize>() {
-                    Ok(n) if n >= 1 => cli.jobs = Some(n),
-                    _ => return Err(format!("bad `--jobs` value `{v}` (must be >= 1)")),
-                }
-            }
-            "--seed" => {
-                let v = it
-                    .next()
-                    .ok_or_else(|| "flag `--seed` needs a value (e.g. `--seed 7`)".to_string())?;
-                match v.parse::<u64>() {
-                    Ok(s) => cli.seed = Some(s),
-                    _ => return Err(format!("bad `--seed` value `{v}`")),
-                }
-            }
-            "--rate" => {
-                let v = it
-                    .next()
-                    .ok_or_else(|| "flag `--rate` needs a value (e.g. `--rate 16`)".to_string())?;
-                match v.parse::<usize>() {
-                    Ok(n) if n >= 1 => cli.rate = Some(n),
-                    _ => return Err(format!("bad `--rate` value `{v}` (must be >= 1)")),
-                }
-            }
-            "--sites" => {
-                let v = it.next().ok_or_else(|| {
-                    "flag `--sites` needs a value (comma-separated subset of tcdm,reg,dma, or \
-                     `all`)"
-                        .to_string()
-                })?;
-                match SiteClass::parse_list(&v) {
-                    Some(s) => cli.sites = Some(s),
-                    None => return Err(format!("bad `--sites` value `{v}`")),
-                }
-            }
-            "--no-recover" => cli.no_recover = true,
-            s if s.starts_with('-') => {
-                return Err(format!(
-                    "unknown flag `{s}` (known flags: --csv, --no-cache, --acc, \
-                     --budget <rel-err>, --tiles <t>, --backend <b>, --probe <p>, \
-                     --jobs <n>, --seed <s>, --rate <n>, --sites <list>, --no-recover)"
-                ));
-            }
-            _ => cli.args.push(a),
-        }
-    }
-    Ok(cli)
-}
-
-/// Variant names accepted by `run` and `query`: the canonical labels
-/// (single source of truth: [`Variant::parse_label`]) plus historical
-/// short-form aliases.
-fn parse_variant(s: &str) -> Option<Variant> {
-    Variant::parse_label(s).or_else(|| match s {
-        "sf16" => Some(Variant::SCALAR_F16),
-        "sbf16" => Some(Variant::SCALAR_BF16),
-        "vector" | "f16" => Some(Variant::VEC),
-        "bf16" => Some(Variant::Vector(FpMode::VecBf16)),
-        _ => None,
-    })
-}
 
 /// Print the result block of a direct (uncached) backend run and map
 /// verification onto the exit code. Shared by `run --tiles` and
@@ -288,10 +61,7 @@ fn fail(err: &dyn std::fmt::Display) -> ExitCode {
 }
 
 /// Emit a query-backed table, or its structured failure report.
-fn emit_table(
-    t: Result<report::Table, coordinator::QueryFailure>,
-    csv: bool,
-) -> ExitCode {
+fn emit_table(t: Result<report::Table, coordinator::QueryFailure>, csv: bool) -> ExitCode {
     match t {
         Ok(t) => {
             if csv {
@@ -309,7 +79,7 @@ fn main() -> ExitCode {
     let cli = match parse_cli(std::env::args().skip(1)) {
         Ok(cli) => cli,
         Err(e) => {
-            eprintln!("{e}\n\n{USAGE}");
+            eprintln!("{e}\n\n{}", usage());
             return ExitCode::FAILURE;
         }
     };
@@ -331,12 +101,13 @@ fn main() -> ExitCode {
 fn dispatch(cli: &Cli) -> ExitCode {
     let args: Vec<&str> = cli.args.iter().map(|s| s.as_str()).collect();
     let Some(cmd) = args.first() else {
-        eprintln!("{USAGE}");
+        eprintln!("{}", usage());
         return ExitCode::FAILURE;
     };
     let csv = cli.csv;
+    let engine = QueryEngine::global();
 
-    let emit = |t: transpfp::report::Table| {
+    let emit = |t: report::Table| {
         if csv {
             print!("{}", t.to_csv());
         } else {
@@ -376,7 +147,7 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 eprintln!("unknown benchmark {}", args[2]);
                 return ExitCode::FAILURE;
             };
-            let Some(variant) = parse_variant(args[3]) else {
+            let Some(variant) = cli::parse_variant(args[3]) else {
                 eprintln!("unknown variant {}", args[3]);
                 return ExitCode::FAILURE;
             };
@@ -425,7 +196,7 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 );
                 return report_backend_run(&title, &run, None, verified);
             }
-            let m = match QueryEngine::global().one(&cfg, bench, variant) {
+            let m = match engine.one(QueryPoint::new(&cfg, bench, variant)) {
                 Ok(m) => m,
                 Err(e) => return fail(&e),
             };
@@ -458,129 +229,35 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 return ExitCode::FAILURE;
             }
         }
-        "query" => {
-            if args.len() < 4 {
-                eprintln!("usage: transpfp query <cfg|all> <bench|all> <variant|all>");
-                return ExitCode::FAILURE;
-            }
-            let configs: Vec<ClusterConfig> = if args[1] == "all" {
-                ClusterConfig::design_space()
-            } else {
-                match ClusterConfig::parse(args[1]) {
-                    Some(cfg) => vec![cfg],
-                    None => {
-                        eprintln!("bad config mnemonic {}", args[1]);
-                        return ExitCode::FAILURE;
-                    }
+        // The service-shaped subcommands lower into the same typed Request
+        // the serve daemon executes, then run against the global engine.
+        "query" | "tune" | "pareto" => {
+            let req = match cli.to_request() {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::FAILURE;
                 }
             };
-            let benches: Vec<Benchmark> = if args[2] == "all" {
-                Benchmark::all().to_vec()
-            } else {
-                match Benchmark::parse(args[2]) {
-                    Some(b) => vec![b],
-                    None => {
-                        eprintln!("unknown benchmark {}", args[2]);
-                        return ExitCode::FAILURE;
-                    }
-                }
-            };
-            let variants: Vec<Variant> = if args[3] == "all" {
-                tuner::ladder().to_vec()
-            } else {
-                match parse_variant(args[3]) {
-                    Some(v) => vec![v],
-                    None => {
-                        eprintln!("unknown variant {}", args[3]);
-                        return ExitCode::FAILURE;
-                    }
-                }
-            };
-            let pts = coordinator::points(&configs, &benches, &variants);
-            let engine = QueryEngine::global();
-            let plan = engine.plan(&pts);
-            let plan_summary = [
-                ("points", plan.len().to_string()),
-                ("unique", plan.unique_len().to_string()),
-                ("cache hits", plan.hit_count().to_string()),
-                ("cache misses", plan.miss_count().to_string()),
-            ];
-            let ms = match engine.execute(plan) {
-                Ok(ms) => ms,
-                // Resolved points were cached before the failure surfaced, so
-                // a rerun after fixing the listed points re-simulates nothing.
-                Err(e) => return fail(&e),
-            };
-            emit(coordinator::measurements_table(&ms));
-            let mut summary = plan_summary.to_vec();
-            summary.push(("entries", engine.stats().entries.to_string()));
-            eprint!("{}", report::kv_table("query plan", &summary).render());
+            return run_request(cli, &req);
         }
-        "pareto" => {
-            return if cli.acc {
-                emit_table(coordinator::accuracy_pareto_table(), csv)
-            } else {
-                emit_table(coordinator::pareto_table(), csv)
-            };
-        }
-        "tune" => {
-            let budget = cli.budget.unwrap_or(tuner::DEFAULT_BUDGET);
-            let configs: Vec<ClusterConfig> = match args.get(1) {
-                None => vec![ClusterConfig::new(8, 8, 1)],
-                Some(&"all") => ClusterConfig::design_space(),
-                Some(&m) => match ClusterConfig::parse(m) {
-                    Some(cfg) => vec![cfg],
-                    None => {
-                        eprintln!("bad config mnemonic {m}");
-                        return ExitCode::FAILURE;
-                    }
-                },
-            };
-            let engine = QueryEngine::global();
-            let probe = cli.probe.unwrap_or(tuner::Probe::Functional);
-            let mut reports: Vec<tuner::TuneReport> = Vec::with_capacity(configs.len());
-            for cfg in &configs {
-                match tuner::tune_with_probe(engine, cfg, budget, probe) {
-                    Ok(r) => reports.push(r),
-                    Err(e) => return fail(&e),
-                }
-            }
-            emit(tuner::tune_table(&reports));
-            for r in &reports {
-                let summary = [
-                    ("config", r.cfg.mnemonic()),
-                    ("budget (rel err)", format!("{budget:e}")),
-                    ("sub-F32 selections", format!("{}/{}", r.sub_f32_count(), r.choices.len())),
-                    (
-                        "within budget",
-                        format!(
-                            "{}/{}",
-                            r.choices.iter().filter(|c| c.within_budget(budget)).count(),
-                            r.choices.len()
-                        ),
-                    ),
-                    ("cache entries", engine.stats().entries.to_string()),
-                ];
-                eprint!("{}", report::kv_table("tune", &summary).render());
-            }
-        }
-        "table3" => return emit_table(coordinator::table3(), csv),
-        "table4" => return emit_table(coordinator::table45(8), csv),
-        "table5" => return emit_table(coordinator::table45(16), csv),
-        "table6" => return emit_table(coordinator::table6(), csv),
+        "table3" => return emit_table(coordinator::table3(engine), csv),
+        "table4" => return emit_table(coordinator::table45(engine, 8), csv),
+        "table5" => return emit_table(coordinator::table45(engine, 16), csv),
+        "table6" => return emit_table(coordinator::table6(engine), csv),
         "fig3" => emit(coordinator::fig3()),
         "fig4" => emit(coordinator::fig4()),
-        "fig5" => return emit_table(coordinator::fig5(), csv),
-        "fig6" => return emit_table(coordinator::fig6(), csv),
-        "fig7" => return emit_table(coordinator::fig7(), csv),
-        "fig8" => return emit_table(coordinator::fig8(), csv),
+        "fig5" => return emit_table(coordinator::fig5(engine), csv),
+        "fig6" => return emit_table(coordinator::fig6(engine), csv),
+        "fig7" => return emit_table(coordinator::fig7(engine), csv),
+        "fig8" => return emit_table(coordinator::fig8(engine), csv),
         "sweep" => {
             let pts = coordinator::points(
                 &ClusterConfig::design_space(),
                 &Benchmark::all(),
-                &[Variant::Scalar, Variant::VEC],
+                &[transpfp::kernels::Variant::Scalar, transpfp::kernels::Variant::VEC],
             );
-            let ms = match QueryEngine::global().query(&pts) {
+            let ms = match engine.query(&pts) {
                 Ok(ms) => ms,
                 Err(e) => return fail(&e),
             };
@@ -655,128 +332,142 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 }
             }
         }
+        "serve" => return serve(cli),
         other => {
-            eprintln!("unknown command {other}\n\n{USAGE}");
+            eprintln!("unknown command {other}\n\n{}", usage());
             return ExitCode::FAILURE;
         }
     }
     ExitCode::SUCCESS
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn cli(args: &[&str]) -> Result<Cli, String> {
-        parse_cli(args.iter().map(|s| s.to_string()))
-    }
-
-    #[test]
-    fn known_flags_are_extracted_in_any_position() {
-        let c = cli(&["table4", "--csv"]).unwrap();
-        assert!(c.csv && !c.no_cache);
-        assert_eq!(c.args, vec!["table4"]);
-
-        let c = cli(&["--no-cache", "query", "all", "FIR", "--csv", "scalar"]).unwrap();
-        assert!(c.csv && c.no_cache);
-        assert_eq!(c.args, vec!["query", "all", "FIR", "scalar"]);
-    }
-
-    #[test]
-    fn unknown_flags_are_rejected_not_filtered() {
-        for bad in ["--cvs", "--cache", "-x", "--", "--csv=always", "--budget=1e-2"] {
-            let err = cli(&["table4", bad]).unwrap_err();
-            assert!(err.contains(bad.split('=').next().unwrap()), "error must name the flag: {err}");
+/// Execute a typed service request on the CLI, with the CLI's reporting
+/// conventions (tables on stdout, plan/tune summaries on stderr).
+fn run_request(cli: &Cli, req: &Request) -> ExitCode {
+    let engine = QueryEngine::global();
+    let emit = |t: report::Table| {
+        if cli.csv {
+            print!("{}", t.to_csv());
+        } else {
+            print!("{}", t.render());
         }
-        // Positionals are never mistaken for flags.
-        assert!(cli(&["run", "8c4f1p", "MATMUL", "vector"]).is_ok());
+    };
+    match req {
+        Request::Query { .. } => {
+            let pts = req.query_points().expect("query request");
+            let plan = engine.plan(&pts);
+            let plan_summary = [
+                ("points", plan.len().to_string()),
+                ("unique", plan.unique_len().to_string()),
+                ("cache hits", plan.hit_count().to_string()),
+                ("cache misses", plan.miss_count().to_string()),
+            ];
+            let ms = match engine.execute(plan) {
+                Ok(ms) => ms,
+                // Resolved points were cached before the failure surfaced, so
+                // a rerun after fixing the listed points re-simulates nothing.
+                Err(e) => return fail(&e),
+            };
+            emit(coordinator::measurements_table(&ms));
+            let mut summary = plan_summary.to_vec();
+            summary.push(("entries", engine.stats().entries.to_string()));
+            eprint!("{}", report::kv_table("query plan", &summary).render());
+            ExitCode::SUCCESS
+        }
+        Request::Tune { budget, probe, .. } => {
+            let configs = req.tune_configs().expect("tune request");
+            let mut reports: Vec<tuner::TuneReport> = Vec::with_capacity(configs.len());
+            for cfg in &configs {
+                match tuner::tune_with_probe(engine, cfg, *budget, *probe) {
+                    Ok(r) => reports.push(r),
+                    Err(e) => return fail(&e),
+                }
+            }
+            emit(tuner::tune_table(&reports));
+            for r in &reports {
+                let summary = [
+                    ("config", r.cfg.mnemonic()),
+                    ("budget (rel err)", format!("{budget:e}")),
+                    ("sub-F32 selections", format!("{}/{}", r.sub_f32_count(), r.choices.len())),
+                    (
+                        "within budget",
+                        format!(
+                            "{}/{}",
+                            r.choices.iter().filter(|c| c.within_budget(*budget)).count(),
+                            r.choices.len()
+                        ),
+                    ),
+                    ("cache entries", engine.stats().entries.to_string()),
+                ];
+                eprint!("{}", report::kv_table("tune", &summary).render());
+            }
+            ExitCode::SUCCESS
+        }
+        Request::Pareto { acc } => {
+            if *acc {
+                emit_table(coordinator::accuracy_pareto_table(engine), cli.csv)
+            } else {
+                emit_table(coordinator::pareto_table(engine), cli.csv)
+            }
+        }
+        // Wire-only endpoints; the CLI dispatcher never builds these.
+        Request::InjectStatus | Request::Stats | Request::Ping => {
+            eprintln!("`{}` is a serve-only endpoint; send it to a running daemon", req.to_line());
+            ExitCode::FAILURE
+        }
     }
+}
 
-    #[test]
-    fn budget_flag_takes_a_value() {
-        let c = cli(&["tune", "--budget", "1e-3", "--csv"]).unwrap();
-        assert_eq!(c.budget, Some(1e-3));
-        assert!(c.csv);
-        assert_eq!(c.args, vec!["tune"]);
-
-        assert!(cli(&["tune", "--budget"]).is_err(), "missing value must fail");
-        assert!(cli(&["tune", "--budget", "not-a-number"]).is_err());
-        assert!(cli(&["tune", "--budget", "-1"]).is_err(), "negative budget is invalid");
-        assert!(cli(&["tune", "--budget", "inf"]).is_err(), "non-finite budget is invalid");
-
-        let c = cli(&["pareto", "--acc"]).unwrap();
-        assert!(c.acc && c.budget.is_none());
-    }
-
-    #[test]
-    fn backend_probe_and_jobs_flags_take_values() {
-        let c = cli(&["run", "8c4f1p", "FIR", "scalar", "--backend", "functional"]).unwrap();
-        assert_eq!(c.backend, Some(BackendKind::Functional));
-        assert_eq!(c.args, vec!["run", "8c4f1p", "FIR", "scalar"]);
-        let r = cli(&["run", "--backend", "ref"]).unwrap();
-        assert_eq!(r.backend, Some(BackendKind::Reference));
-        assert!(cli(&["run", "--backend"]).is_err(), "missing value must fail");
-        assert!(cli(&["run", "--backend", "turbo"]).is_err());
-
-        let c = cli(&["tune", "--probe", "functional"]).unwrap();
-        assert_eq!(c.probe, Some(tuner::Probe::Functional));
-        let p = cli(&["tune", "--probe", "cycle"]).unwrap();
-        assert_eq!(p.probe, Some(tuner::Probe::CycleAccurate));
-        assert!(cli(&["tune", "--probe"]).is_err());
-        assert!(cli(&["tune", "--probe", "psychic"]).is_err());
-
-        let c = cli(&["sweep", "--jobs", "4"]).unwrap();
-        assert_eq!(c.jobs, Some(4));
-        assert!(cli(&["sweep", "--jobs"]).is_err(), "missing value must fail");
-        assert!(cli(&["sweep", "--jobs", "0"]).is_err(), "zero workers is invalid");
-        assert!(cli(&["sweep", "--jobs", "many"]).is_err());
-    }
-
-    #[test]
-    fn tiles_flag_takes_a_value() {
-        let c = cli(&["run", "8c8f1p", "MATMUL", "scalar", "--tiles", "8"]).unwrap();
-        assert_eq!(c.tiles, Some(8));
-        assert_eq!(c.args, vec!["run", "8c8f1p", "MATMUL", "scalar"]);
-        assert!(cli(&["run", "--tiles"]).is_err(), "missing value must fail");
-        assert!(cli(&["run", "--tiles", "0"]).is_err(), "zero tiles is invalid");
-        assert!(cli(&["run", "--tiles", "x"]).is_err());
-    }
-
-    #[test]
-    fn inject_flags_take_values() {
-        let c = cli(&["inject", "8c8f1p", "--seed", "7", "--rate", "16"]).unwrap();
-        assert_eq!(c.seed, Some(7));
-        assert_eq!(c.rate, Some(16));
-        assert_eq!(c.args, vec!["inject", "8c8f1p"]);
-        assert!(!c.no_recover && c.sites.is_none());
-
-        let c = cli(&["inject", "8c8f1p", "--sites", "tcdm,dma", "--no-recover"]).unwrap();
-        assert_eq!(c.sites, Some(vec![SiteClass::Tcdm, SiteClass::Dma]));
-        assert!(c.no_recover);
-        let c = cli(&["inject", "8c8f1p", "--sites", "all"]).unwrap();
-        assert_eq!(c.sites, Some(SiteClass::all().to_vec()));
-
-        assert!(cli(&["inject", "--seed"]).is_err(), "missing value must fail");
-        assert!(cli(&["inject", "--seed", "x"]).is_err());
-        assert!(cli(&["inject", "--rate", "0"]).is_err(), "zero points is invalid");
-        assert!(cli(&["inject", "--sites", "l2"]).is_err(), "unknown site class");
-        assert!(cli(&["inject", "--sites"]).is_err());
-    }
-
-    #[test]
-    fn variant_names() {
-        assert_eq!(parse_variant("scalar"), Some(Variant::Scalar));
-        assert_eq!(parse_variant("scalar-f16"), Some(Variant::SCALAR_F16));
-        assert_eq!(parse_variant("sbf16"), Some(Variant::SCALAR_BF16));
-        assert_eq!(parse_variant("vector"), Some(Variant::VEC));
-        assert_eq!(parse_variant("vector-f16"), Some(Variant::VEC));
-        assert_eq!(parse_variant("f16"), Some(Variant::VEC));
-        assert_eq!(parse_variant("bf16"), Some(Variant::Vector(FpMode::VecBf16)));
-        assert_eq!(parse_variant("vector-bf16"), Some(Variant::Vector(FpMode::VecBf16)));
-        assert_eq!(parse_variant("f64"), None);
-        // Every canonical label parses.
-        for v in Variant::all() {
-            assert_eq!(parse_variant(v.label()), Some(v));
+/// `transpfp serve`: run the concurrent query service until EOF (--stdin)
+/// or forever (TCP).
+fn serve(cli: &Cli) -> ExitCode {
+    let server = Arc::new(Server::new(QueryEngine::global()));
+    if cli.stdin_mode {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        let summary = match server.serve_pipe(stdin.lock(), stdout.lock()) {
+            Ok(s) => s,
+            Err(e) => return fail(&e),
+        };
+        let engine = server.engine();
+        let totals = server.metrics().totals();
+        let lookups = totals.cache_hits + totals.cache_misses;
+        let hit_rate =
+            if lookups > 0 { 100.0 * totals.cache_hits as f64 / lookups as f64 } else { 0.0 };
+        eprint!("{}", server.metrics().table().render());
+        eprintln!("serve-requests: {}", summary.requests);
+        eprintln!("serve-replies-ok: {}", summary.replies_ok);
+        eprintln!("serve-replies-err: {}", summary.replies_err);
+        eprintln!("serve-cache-hits: {}", totals.cache_hits);
+        eprintln!("serve-cache-misses: {}", totals.cache_misses);
+        eprintln!("serve-hit-rate: {hit_rate:.1}%");
+        eprintln!("serve-sim-runs: {}", engine.sim_runs());
+        eprintln!("serve-functional-runs: {}", engine.functional_runs());
+        eprintln!("serve-coalesced-runs: {}", engine.coalesced_runs());
+        eprintln!("serve-duplicate-runs: {}", engine.duplicate_runs());
+        if let Some(path) = &cli.metrics {
+            if let Err(e) = std::fs::write(path, server.metrics().to_csv()) {
+                eprintln!("warning: could not write metrics CSV {path}: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+        ExitCode::SUCCESS
+    } else {
+        let port = cli.port.unwrap_or(DEFAULT_PORT);
+        let listener = match std::net::TcpListener::bind(("127.0.0.1", port)) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("serve: could not bind 127.0.0.1:{port}: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        eprintln!(
+            "transpfp serve: listening on 127.0.0.1:{port} \
+             (newline-delimited requests; see EXPERIMENTS.md §Serve)"
+        );
+        match serve_tcp(server, listener) {
+            Ok(()) => ExitCode::SUCCESS,
+            Err(e) => fail(&e),
         }
     }
 }

@@ -1,0 +1,237 @@
+//! Wire framing: bounded line reads and `ok`/`err` reply frames.
+//!
+//! Requests are newline-delimited UTF-8 lines. Replies are framed so a
+//! pipelining client can always resynchronize:
+//!
+//! ```text
+//! ok <n>\n        followed by exactly n payload rows (CSV), or
+//! err <class> <message>\n
+//! ```
+//!
+//! The reader is *bounded*: a line longer than the limit is consumed up to
+//! its newline and reported as [`LineIn::TooLong`] instead of growing an
+//! unbounded buffer — a misbehaving client gets a structured `oversized`
+//! error and the connection keeps serving. Invalid UTF-8 likewise maps to
+//! [`LineIn::BadUtf8`], never a panic.
+
+use std::io::{self, BufRead, Write};
+
+/// Default request-line bound: far above any legitimate request (the
+/// longest canonical request line is well under 100 bytes) but small enough
+/// that a garbage stream cannot balloon resident memory.
+pub const MAX_LINE: usize = 64 * 1024;
+
+/// One framed read off the request stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LineIn {
+    /// Clean end of stream.
+    Eof,
+    /// A complete line (without the trailing newline).
+    Line(String),
+    /// The line exceeded the bound; it was consumed through its newline.
+    TooLong,
+    /// The line was not valid UTF-8; it was consumed through its newline.
+    BadUtf8,
+}
+
+/// Read one newline-terminated line, never buffering more than `max`
+/// bytes of it. A final line without a trailing newline (EOF mid-line)
+/// still counts as a line.
+pub fn read_line_bounded<R: BufRead>(r: &mut R, max: usize) -> io::Result<LineIn> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut overflow = false;
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF. Partial data (or a consumed overflow) still terminates.
+            return Ok(if overflow {
+                LineIn::TooLong
+            } else if buf.is_empty() {
+                LineIn::Eof
+            } else {
+                finish(buf)
+            });
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(nl) => {
+                if !overflow && buf.len() + nl <= max {
+                    buf.extend_from_slice(&chunk[..nl]);
+                } else {
+                    overflow = true;
+                }
+                r.consume(nl + 1);
+                return Ok(if overflow { LineIn::TooLong } else { finish(buf) });
+            }
+            None => {
+                let take = chunk.len();
+                if !overflow && buf.len() + take <= max {
+                    buf.extend_from_slice(chunk);
+                } else {
+                    overflow = true;
+                }
+                r.consume(take);
+            }
+        }
+    }
+}
+
+fn finish(buf: Vec<u8>) -> LineIn {
+    match String::from_utf8(buf) {
+        Ok(mut s) => {
+            if s.ends_with('\r') {
+                s.pop();
+            }
+            LineIn::Line(s)
+        }
+        Err(_) => LineIn::BadUtf8,
+    }
+}
+
+/// One reply frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Reply {
+    /// Success: the payload rows (typically CSV, header first).
+    Ok(Vec<String>),
+    /// Structured failure with a machine-stable class token.
+    Err { class: &'static str, msg: String },
+}
+
+impl Reply {
+    /// Success from payload rows.
+    pub fn rows(rows: Vec<String>) -> Reply {
+        Reply::Ok(rows)
+    }
+
+    /// Structured error.
+    pub fn err(class: &'static str, msg: impl Into<String>) -> Reply {
+        Reply::Err { class, msg: msg.into() }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Reply::Ok(_))
+    }
+}
+
+/// Write one reply frame. Embedded newlines in the error message are
+/// flattened so the frame stays one header line.
+pub fn write_reply<W: Write>(w: &mut W, reply: &Reply) -> io::Result<()> {
+    match reply {
+        Reply::Ok(rows) => {
+            writeln!(w, "ok {}", rows.len())?;
+            for row in rows {
+                writeln!(w, "{row}")?;
+            }
+        }
+        Reply::Err { class, msg } => {
+            let flat: String =
+                msg.chars().map(|c| if c == '\n' || c == '\r' { ' ' } else { c }).collect();
+            writeln!(w, "err {class} {flat}")?;
+        }
+    }
+    Ok(())
+}
+
+/// A reply as decoded by a client.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireReply {
+    /// `true` for `ok` frames.
+    pub ok: bool,
+    /// The header line (`ok <n>` or `err <class> <msg>`).
+    pub head: String,
+    /// Payload rows of an `ok` frame.
+    pub rows: Vec<String>,
+}
+
+/// Client-side frame decoder: `None` on clean EOF, `InvalidData` on a
+/// stream that does not follow the framing.
+pub fn read_reply<R: BufRead>(r: &mut R) -> io::Result<Option<WireReply>> {
+    let mut head = String::new();
+    if r.read_line(&mut head)? == 0 {
+        return Ok(None);
+    }
+    let head = head.trim_end().to_string();
+    if let Some(count) = head.strip_prefix("ok ") {
+        let n: usize = count
+            .trim()
+            .parse()
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, format!("bad frame: {head}")))?;
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut row = String::new();
+            if r.read_line(&mut row)? == 0 {
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "truncated ok frame"));
+            }
+            rows.push(row.trim_end().to_string());
+        }
+        Ok(Some(WireReply { ok: true, head, rows }))
+    } else if head.starts_with("err ") {
+        Ok(Some(WireReply { ok: false, head, rows: Vec::new() }))
+    } else {
+        Err(io::Error::new(io::ErrorKind::InvalidData, format!("bad frame: {head}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn bounded_reader_frames_lines_and_overflow() {
+        let mut r = Cursor::new(b"ping\nstats\r\n".to_vec());
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap(), LineIn::Line("ping".to_string()));
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap(), LineIn::Line("stats".to_string()));
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap(), LineIn::Eof);
+
+        // Oversized line is consumed through its newline; the next line is
+        // still served (recovery, not desync).
+        let long = vec![b'x'; 200];
+        let mut input = long.clone();
+        input.push(b'\n');
+        input.extend_from_slice(b"ping\n");
+        let mut r = Cursor::new(input);
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap(), LineIn::TooLong);
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap(), LineIn::Line("ping".to_string()));
+
+        // Truncated final line (no newline at EOF) still arrives.
+        let mut r = Cursor::new(b"ping".to_vec());
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap(), LineIn::Line("ping".to_string()));
+
+        // Oversized truncated final line is TooLong, not a hang or panic.
+        let mut r = Cursor::new(vec![b'y'; 200]);
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap(), LineIn::TooLong);
+
+        // Invalid UTF-8 is structured.
+        let mut r = Cursor::new(vec![0xff, 0xfe, b'\n']);
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap(), LineIn::BadUtf8);
+    }
+
+    #[test]
+    fn reply_frames_round_trip() {
+        let mut out = Vec::new();
+        write_reply(&mut out, &Reply::rows(vec!["a,b".to_string(), "1,2".to_string()])).unwrap();
+        write_reply(&mut out, &Reply::err("bad-request", "multi\nline\rmessage")).unwrap();
+        write_reply(&mut out, &Reply::rows(Vec::new())).unwrap();
+
+        let mut r = Cursor::new(out);
+        let first = read_reply(&mut r).unwrap().unwrap();
+        assert!(first.ok);
+        assert_eq!(first.rows, vec!["a,b", "1,2"]);
+        let second = read_reply(&mut r).unwrap().unwrap();
+        assert!(!second.ok);
+        assert_eq!(second.head, "err bad-request multi line message");
+        let third = read_reply(&mut r).unwrap().unwrap();
+        assert!(third.ok && third.rows.is_empty());
+        assert!(read_reply(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn client_decoder_rejects_unframed_streams() {
+        let mut r = Cursor::new(b"hello world\n".to_vec());
+        assert!(read_reply(&mut r).is_err());
+        let mut r = Cursor::new(b"ok two\n".to_vec());
+        assert!(read_reply(&mut r).is_err());
+        let mut r = Cursor::new(b"ok 3\nonly-one-row\n".to_vec());
+        assert!(read_reply(&mut r).is_err());
+    }
+}

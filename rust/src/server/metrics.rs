@@ -1,0 +1,257 @@
+//! Per-endpoint service counters.
+//!
+//! Every request the router handles is recorded against its endpoint:
+//! request and error counts, cache hits/misses contributed by the request's
+//! query plan, and latency (cumulative + max, nanoseconds). Structured
+//! simulation failures are additionally bucketed by watchdog class
+//! (deadlock / timeout / fault) for the `inject-status` endpoint. All
+//! counters are relaxed atomics — recording must never serialize the
+//! request path it is measuring.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use crate::report::Table;
+use crate::server::request::Request;
+
+/// The service endpoints, plus the `Invalid` bucket for lines that never
+/// parsed into a [`Request`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Endpoint {
+    Query,
+    Tune,
+    Pareto,
+    InjectStatus,
+    Stats,
+    Ping,
+    Invalid,
+}
+
+impl Endpoint {
+    /// Every endpoint, in metrics-table order.
+    pub const ALL: [Endpoint; 7] = [
+        Endpoint::Query,
+        Endpoint::Tune,
+        Endpoint::Pareto,
+        Endpoint::InjectStatus,
+        Endpoint::Stats,
+        Endpoint::Ping,
+        Endpoint::Invalid,
+    ];
+
+    /// Stable wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Endpoint::Query => "query",
+            Endpoint::Tune => "tune",
+            Endpoint::Pareto => "pareto",
+            Endpoint::InjectStatus => "inject-status",
+            Endpoint::Stats => "stats",
+            Endpoint::Ping => "ping",
+            Endpoint::Invalid => "invalid",
+        }
+    }
+
+    /// The endpoint a parsed request belongs to.
+    pub fn of(req: &Request) -> Endpoint {
+        match req {
+            Request::Query { .. } => Endpoint::Query,
+            Request::Tune { .. } => Endpoint::Tune,
+            Request::Pareto { .. } => Endpoint::Pareto,
+            Request::InjectStatus => Endpoint::InjectStatus,
+            Request::Stats => Endpoint::Stats,
+            Request::Ping => Endpoint::Ping,
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Endpoint::Query => 0,
+            Endpoint::Tune => 1,
+            Endpoint::Pareto => 2,
+            Endpoint::InjectStatus => 3,
+            Endpoint::Stats => 4,
+            Endpoint::Ping => 5,
+            Endpoint::Invalid => 6,
+        }
+    }
+}
+
+#[derive(Default)]
+struct EndpointStats {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    latency_ns: AtomicU64,
+    latency_max_ns: AtomicU64,
+}
+
+/// Cross-endpoint totals.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsTotals {
+    pub requests: u64,
+    pub errors: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// All service counters; shared by every connection thread.
+#[derive(Default)]
+pub struct ServerMetrics {
+    per: [EndpointStats; 7],
+    deadlocks: AtomicU64,
+    timeouts: AtomicU64,
+    faults: AtomicU64,
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one handled request.
+    pub fn record(&self, ep: Endpoint, ok: bool, hits: u64, misses: u64, latency_ns: u64) {
+        let s = &self.per[ep.index()];
+        s.requests.fetch_add(1, Relaxed);
+        if !ok {
+            s.errors.fetch_add(1, Relaxed);
+        }
+        s.cache_hits.fetch_add(hits, Relaxed);
+        s.cache_misses.fetch_add(misses, Relaxed);
+        s.latency_ns.fetch_add(latency_ns, Relaxed);
+        s.latency_max_ns.fetch_max(latency_ns, Relaxed);
+    }
+
+    /// Bucket one structured simulation failure by its watchdog class
+    /// ([`crate::cluster::RunError::class`]).
+    pub fn record_failure_class(&self, class: &str) {
+        match class {
+            "deadlock" => self.deadlocks.fetch_add(1, Relaxed),
+            "timeout" => self.timeouts.fetch_add(1, Relaxed),
+            _ => self.faults.fetch_add(1, Relaxed),
+        };
+    }
+
+    /// `(class, count)` for every failure class, stable order.
+    pub fn failure_counts(&self) -> [(&'static str, u64); 3] {
+        [
+            ("deadlock", self.deadlocks.load(Relaxed)),
+            ("timeout", self.timeouts.load(Relaxed)),
+            ("fault", self.faults.load(Relaxed)),
+        ]
+    }
+
+    /// `(requests, errors, cache_hits, cache_misses, latency_ns,
+    /// latency_max_ns)` for one endpoint.
+    pub fn endpoint_snapshot(&self, ep: Endpoint) -> (u64, u64, u64, u64, u64, u64) {
+        let s = &self.per[ep.index()];
+        (
+            s.requests.load(Relaxed),
+            s.errors.load(Relaxed),
+            s.cache_hits.load(Relaxed),
+            s.cache_misses.load(Relaxed),
+            s.latency_ns.load(Relaxed),
+            s.latency_max_ns.load(Relaxed),
+        )
+    }
+
+    /// Totals across every endpoint.
+    pub fn totals(&self) -> MetricsTotals {
+        let mut t = MetricsTotals::default();
+        for ep in Endpoint::ALL {
+            let (req, err, hits, misses, _, _) = self.endpoint_snapshot(ep);
+            t.requests += req;
+            t.errors += err;
+            t.cache_hits += hits;
+            t.cache_misses += misses;
+        }
+        t
+    }
+
+    /// The per-endpoint metrics table. Every endpoint gets a row even at
+    /// zero requests so the CSV schema is stable run to run.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "endpoint",
+            "requests",
+            "errors",
+            "cache_hits",
+            "cache_misses",
+            "hit_rate",
+            "avg_latency_us",
+            "max_latency_us",
+        ]);
+        for ep in Endpoint::ALL {
+            let (req, err, hits, misses, lat_ns, max_ns) = self.endpoint_snapshot(ep);
+            let lookups = hits + misses;
+            let hit_rate = if lookups > 0 { 100.0 * hits as f64 / lookups as f64 } else { 0.0 };
+            let avg_us = if req > 0 { lat_ns as f64 / req as f64 / 1e3 } else { 0.0 };
+            t.row(vec![
+                ep.name().to_string(),
+                req.to_string(),
+                err.to_string(),
+                hits.to_string(),
+                misses.to_string(),
+                format!("{hit_rate:.1}%"),
+                format!("{avg_us:.1}"),
+                format!("{:.1}", max_ns as f64 / 1e3),
+            ]);
+        }
+        t
+    }
+
+    /// The metrics table as CSV.
+    pub fn to_csv(&self) -> String {
+        self.table().to_csv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_per_endpoint() {
+        let m = ServerMetrics::new();
+        m.record(Endpoint::Query, true, 3, 1, 2_000);
+        m.record(Endpoint::Query, false, 0, 0, 10_000);
+        m.record(Endpoint::Ping, true, 0, 0, 500);
+
+        let (req, err, hits, misses, lat, max) = m.endpoint_snapshot(Endpoint::Query);
+        assert_eq!((req, err, hits, misses), (2, 1, 3, 1));
+        assert_eq!(lat, 12_000);
+        assert_eq!(max, 10_000);
+
+        let t = m.totals();
+        assert_eq!(t.requests, 3);
+        assert_eq!(t.errors, 1);
+        assert_eq!(t.cache_hits, 3);
+        assert_eq!(t.cache_misses, 1);
+    }
+
+    #[test]
+    fn failure_classes_bucket_by_watchdog_class() {
+        let m = ServerMetrics::new();
+        m.record_failure_class("deadlock");
+        m.record_failure_class("timeout");
+        m.record_failure_class("timeout");
+        m.record_failure_class("fault");
+        m.record_failure_class("anything-else");
+        assert_eq!(m.failure_counts(), [("deadlock", 1), ("timeout", 2), ("fault", 2)]);
+    }
+
+    #[test]
+    fn metrics_csv_has_a_stable_schema() {
+        let m = ServerMetrics::new();
+        let csv = m.to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "endpoint,requests,errors,cache_hits,cache_misses,hit_rate,avg_latency_us,max_latency_us"
+        );
+        // One row per endpoint, even with zero traffic.
+        assert_eq!(lines.count(), Endpoint::ALL.len());
+        m.record(Endpoint::Tune, true, 1, 1, 1_000);
+        assert_eq!(m.to_csv().lines().count(), 1 + Endpoint::ALL.len());
+    }
+}

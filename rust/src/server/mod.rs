@@ -1,0 +1,35 @@
+//! `transpfp serve` — the concurrent design-space query service.
+//!
+//! A long-running daemon that answers `query` / `tune` / `pareto` /
+//! `inject-status` / `stats` / `ping` requests over a newline-delimited
+//! protocol, on TCP (loopback) or a stdin/stdout pipe. The layering:
+//!
+//! * [`request`] — the typed [`Request`] both the CLI and the wire build
+//!   (one grammar, two front ends), plus the canonical line codec;
+//! * [`codec`] — bounded line reads and `ok <n>` / `err <class>` reply
+//!   frames; malformed, oversized and non-UTF-8 input become structured
+//!   errors, never panics or desyncs;
+//! * [`router`] — the shared [`Server`]: routes requests into the global
+//!   [`crate::coordinator::QueryEngine`], coalesces identical in-flight
+//!   `tune`/`pareto` requests (point-level coalescing for `query` lives in
+//!   the engine's own single-flight), and records per-endpoint metrics;
+//! * [`metrics`] — relaxed-atomic request/error/hit/latency counters with
+//!   a stable CSV schema;
+//! * [`listener`] — thread-per-connection TCP accept loop.
+//!
+//! Concurrency contract (gated by `benches/serve.rs`): N concurrent
+//! identical cold requests execute the simulator exactly once, and the
+//! warm path sustains ≥100k queries/s across pipelined connections. See
+//! EXPERIMENTS.md §Serve for the protocol grammar.
+
+pub mod codec;
+pub mod listener;
+pub mod metrics;
+pub mod request;
+pub mod router;
+
+pub use codec::{read_reply, LineIn, Reply, WireReply, MAX_LINE};
+pub use listener::{serve_connection, serve_tcp};
+pub use metrics::{Endpoint, MetricsTotals, ServerMetrics};
+pub use request::{Request, Selector};
+pub use router::{PipeSummary, Server};

@@ -1,0 +1,212 @@
+//! The unified request type.
+//!
+//! [`Request`] is the one value both front ends produce: the CLI lowers
+//! `transpfp query/tune/pareto` argument lists into it via
+//! [`crate::cli::Cli::to_request`], and the serve wire protocol parses the
+//! same grammar from a newline-delimited line via [`Request::parse_line`].
+//! The wire is *stricter* than the CLI — the first token must be a servable
+//! endpoint and only the flags named in that command's
+//! [`crate::cli::CommandSpec::wire_flags`] allowlist are accepted — but a
+//! line that passes the wire check is then parsed by the very same
+//! registry-driven [`crate::cli::parse_cli`], so the two front ends cannot
+//! drift apart.
+//!
+//! [`Request::to_line`] renders the canonical wire form; `parse_line ∘
+//! to_line` is the identity (floats round-trip through `Display`).
+
+use crate::cli;
+use crate::config::ClusterConfig;
+use crate::coordinator::{points, QueryPoint};
+use crate::kernels::{Benchmark, Variant};
+use crate::tuner::{ladder, Probe};
+
+/// `all` or one specific value — the query grammar's axis selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selector<T> {
+    All,
+    One(T),
+}
+
+impl<T: Clone> Selector<T> {
+    /// Expand to concrete values, pulling the full axis lazily for `All`.
+    pub fn resolve(&self, all: impl FnOnce() -> Vec<T>) -> Vec<T> {
+        match self {
+            Selector::All => all(),
+            Selector::One(v) => vec![v.clone()],
+        }
+    }
+}
+
+/// A typed service request — every endpoint the daemon (and the CLI's
+/// service-shaped subcommands) can execute.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Resolve a batch of design-space points through the cache.
+    Query { cfg: Selector<ClusterConfig>, bench: Selector<Benchmark>, variant: Selector<Variant> },
+    /// Accuracy-aware precision autotuning under an error budget.
+    Tune { cfg: Selector<ClusterConfig>, budget: f64, probe: Probe },
+    /// Pareto frontier (plain or accuracy-extended).
+    Pareto { acc: bool },
+    /// Structured failure-class counters seen by the service.
+    InjectStatus,
+    /// Engine + cache + request counters.
+    Stats,
+    /// Liveness check.
+    Ping,
+}
+
+fn cfg_token(s: &Selector<ClusterConfig>) -> String {
+    match s {
+        Selector::All => "all".to_string(),
+        Selector::One(c) => c.mnemonic(),
+    }
+}
+
+impl Request {
+    /// The design-space points a `Query` spans (`None` for non-queries).
+    /// `all` variants means the full 5-rung precision ladder, exactly as on
+    /// the CLI.
+    pub fn query_points(&self) -> Option<Vec<QueryPoint>> {
+        let Request::Query { cfg, bench, variant } = self else {
+            return None;
+        };
+        let cfgs = cfg.resolve(ClusterConfig::design_space);
+        let benches = bench.resolve(|| Benchmark::all().to_vec());
+        let variants = variant.resolve(|| ladder().to_vec());
+        Some(points(&cfgs, &benches, &variants))
+    }
+
+    /// The configurations a `Tune` covers (`None` for non-tunes).
+    pub fn tune_configs(&self) -> Option<Vec<ClusterConfig>> {
+        let Request::Tune { cfg, .. } = self else {
+            return None;
+        };
+        Some(cfg.resolve(ClusterConfig::design_space))
+    }
+
+    /// Canonical wire form. `parse_line(&r.to_line()) == Ok(r)`.
+    pub fn to_line(&self) -> String {
+        match self {
+            Request::Query { cfg, bench, variant } => {
+                let b = match bench {
+                    Selector::All => "all",
+                    Selector::One(b) => b.name(),
+                };
+                let v = match variant {
+                    Selector::All => "all",
+                    Selector::One(v) => v.label(),
+                };
+                format!("query {} {b} {v}", cfg_token(cfg))
+            }
+            Request::Tune { cfg, budget, probe } => {
+                format!("tune {} --budget {budget} --probe {}", cfg_token(cfg), probe.name())
+            }
+            Request::Pareto { acc: true } => "pareto --acc".to_string(),
+            Request::Pareto { acc: false } => "pareto".to_string(),
+            Request::InjectStatus => "inject-status".to_string(),
+            Request::Stats => "stats".to_string(),
+            Request::Ping => "ping".to_string(),
+        }
+    }
+
+    /// Parse one wire line. Stricter than the CLI: the first token must be
+    /// a servable endpoint, and only that endpoint's allowlisted flags may
+    /// appear — `tune --jobs 4` is a structured error on the wire even
+    /// though the CLI accepts `--jobs` anywhere.
+    pub fn parse_line(line: &str) -> Result<Request, String> {
+        let tokens: Vec<&str> = line.split_whitespace().collect();
+        let Some(&first) = tokens.first() else {
+            return Err("empty request".to_string());
+        };
+        if first.starts_with('-') {
+            return Err(format!("request must start with an endpoint, not flag `{first}`"));
+        }
+        let spec = cli::command_spec(first).filter(|c| c.wire).ok_or_else(|| {
+            format!(
+                "`{first}` is not a service endpoint (expected query, tune, pareto, \
+                 inject-status, stats or ping)"
+            )
+        })?;
+        for t in &tokens[1..] {
+            if t.starts_with('-') && !spec.wire_flags.iter().any(|w| w == t) {
+                return Err(format!("flag `{t}` is not valid for `{first}` requests"));
+            }
+        }
+        cli::parse_cli(tokens.iter().map(|s| s.to_string()))?.to_request()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::DEFAULT_BUDGET;
+
+    #[test]
+    fn canonical_lines_round_trip() {
+        let reqs = [
+            Request::Query {
+                cfg: Selector::One(ClusterConfig::new(8, 4, 1)),
+                bench: Selector::One(Benchmark::Fir),
+                variant: Selector::One(Variant::Scalar),
+            },
+            Request::Query { cfg: Selector::All, bench: Selector::All, variant: Selector::All },
+            Request::Tune {
+                cfg: Selector::One(ClusterConfig::new(16, 8, 1)),
+                budget: 1e-3,
+                probe: Probe::CycleAccurate,
+            },
+            Request::Tune { cfg: Selector::All, budget: DEFAULT_BUDGET, probe: Probe::Functional },
+            Request::Pareto { acc: false },
+            Request::Pareto { acc: true },
+            Request::InjectStatus,
+            Request::Stats,
+            Request::Ping,
+        ];
+        for r in reqs {
+            let line = r.to_line();
+            assert_eq!(Request::parse_line(&line), Ok(r), "round-trip of `{line}`");
+        }
+    }
+
+    #[test]
+    fn wire_is_stricter_than_the_cli() {
+        // CLI-only commands are not endpoints.
+        let err = Request::parse_line("run 8c4f1p FIR scalar").unwrap_err();
+        assert!(err.contains("not a service endpoint"), "{err}");
+        // Flags outside the endpoint's allowlist are rejected by name.
+        let err = Request::parse_line("tune 8c8f1p --jobs 4").unwrap_err();
+        assert!(err.contains("--jobs") && err.contains("tune"), "{err}");
+        let err = Request::parse_line("query 8c8f1p FIR scalar --csv").unwrap_err();
+        assert!(err.contains("--csv"), "{err}");
+        // Leading flags and empty lines are structured errors.
+        assert!(Request::parse_line("--csv query all FIR scalar").is_err());
+        assert!(Request::parse_line("   ").is_err());
+    }
+
+    #[test]
+    fn query_points_span_the_selectors() {
+        let one = Request::Query {
+            cfg: Selector::One(ClusterConfig::new(8, 2, 0)),
+            bench: Selector::One(Benchmark::Fir),
+            variant: Selector::One(Variant::Scalar),
+        };
+        assert_eq!(one.query_points().unwrap().len(), 1);
+
+        let ladder_width = ladder().len();
+        let all_variants = Request::Query {
+            cfg: Selector::One(ClusterConfig::new(8, 2, 0)),
+            bench: Selector::One(Benchmark::Fir),
+            variant: Selector::All,
+        };
+        assert_eq!(all_variants.query_points().unwrap().len(), ladder_width);
+
+        assert!(Request::Ping.query_points().is_none());
+        assert_eq!(
+            Request::Tune { cfg: Selector::All, budget: 1e-2, probe: Probe::Functional }
+                .tune_configs()
+                .unwrap()
+                .len(),
+            ClusterConfig::design_space().len()
+        );
+    }
+}

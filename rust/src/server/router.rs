@@ -1,0 +1,368 @@
+//! Request router: one [`Server`] shared by every connection.
+//!
+//! Each wire line parses into the typed [`Request`] (the same value the CLI
+//! builds), routes to the [`QueryEngine`], and renders a framed [`Reply`].
+//! Two layers of deduplication keep concurrent identical traffic cheap:
+//!
+//! 1. **Point-level single-flight** lives inside the engine itself
+//!    ([`QueryEngine::execute`]): identical in-flight cache misses coalesce
+//!    onto one simulator run regardless of which endpoint produced them.
+//! 2. **Request-level single-flight** here covers the non-point endpoints
+//!    (`tune`, `pareto`), keyed by the request's canonical line, so sixty
+//!    concurrent identical tunes run the search once and share the table.
+//!
+//! Failure never tears down a connection: parse errors, oversized lines,
+//! bad UTF-8 and structured simulation failures all become `err` frames and
+//! the loop keeps reading.
+
+use std::io::{self, BufRead, Write};
+use std::time::Instant;
+
+use crate::coordinator::{
+    accuracy_pareto_table, measurements_table, pareto_table, Begin, QueryEngine, QueryFailure,
+    SingleFlight,
+};
+use crate::report::Table;
+use crate::server::codec::{read_line_bounded, write_reply, LineIn, Reply, MAX_LINE};
+use crate::server::metrics::{Endpoint, ServerMetrics};
+use crate::server::request::Request;
+use crate::tuner;
+
+/// The shared service state. Cheap to share: all interior mutability is
+/// atomics and short-held locks.
+pub struct Server {
+    engine: &'static QueryEngine,
+    metrics: ServerMetrics,
+    req_flight: SingleFlight<String, Reply>,
+    max_line: usize,
+}
+
+impl Server {
+    /// A server routing into `engine` (usually [`QueryEngine::global`]).
+    pub fn new(engine: &'static QueryEngine) -> Server {
+        Server {
+            engine,
+            metrics: ServerMetrics::new(),
+            req_flight: SingleFlight::new(),
+            max_line: MAX_LINE,
+        }
+    }
+
+    /// Override the request-line bound (tests use a tiny one).
+    pub fn with_max_line(mut self, max: usize) -> Server {
+        self.max_line = max;
+        self
+    }
+
+    pub fn engine(&self) -> &'static QueryEngine {
+        self.engine
+    }
+
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+
+    pub fn max_line(&self) -> usize {
+        self.max_line
+    }
+
+    /// Parse and handle one wire line.
+    pub fn handle_line(&self, line: &str) -> Reply {
+        match Request::parse_line(line) {
+            Ok(req) => self.handle(&req),
+            Err(msg) => {
+                self.metrics.record(Endpoint::Invalid, false, 0, 0, 0);
+                Reply::err("bad-request", msg)
+            }
+        }
+    }
+
+    /// Handle one typed request, recording latency and cache traffic.
+    pub fn handle(&self, req: &Request) -> Reply {
+        let start = Instant::now();
+        let (reply, hits, misses) = self.route(req);
+        let latency_ns = u64::try_from(start.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        self.metrics.record(Endpoint::of(req), reply.is_ok(), hits, misses, latency_ns);
+        reply
+    }
+
+    /// Route a request to the engine. Returns the reply plus the cache
+    /// hits/misses its plan contributed (zero for non-query endpoints).
+    fn route(&self, req: &Request) -> (Reply, u64, u64) {
+        match req {
+            Request::Ping => (Reply::rows(vec!["pong".to_string()]), 0, 0),
+            Request::Stats => (Reply::rows(csv_rows(&self.stats_table())), 0, 0),
+            Request::InjectStatus => {
+                let mut t = Table::new(vec!["class", "count"]);
+                for (class, count) in self.metrics.failure_counts() {
+                    t.row(vec![class.to_string(), count.to_string()]);
+                }
+                (Reply::rows(csv_rows(&t)), 0, 0)
+            }
+            Request::Query { .. } => {
+                let pts = req.query_points().expect("query request");
+                let plan = self.engine.plan(&pts);
+                let (hits, misses) = (plan.hit_count() as u64, plan.miss_count() as u64);
+                let reply = match self.engine.execute(plan) {
+                    Ok(ms) => Reply::rows(csv_rows(&measurements_table(&ms))),
+                    Err(f) => self.query_failure("query-failed", f),
+                };
+                (reply, hits, misses)
+            }
+            Request::Tune { budget, probe, .. } => {
+                let (budget, probe) = (*budget, *probe);
+                let cfgs = req.tune_configs().expect("tune request");
+                let reply = self.coalesced(req.to_line(), || {
+                    let mut reports = Vec::with_capacity(cfgs.len());
+                    for cfg in &cfgs {
+                        match tuner::tune_with_probe(self.engine, cfg, budget, probe) {
+                            Ok(r) => reports.push(r),
+                            Err(f) => return self.query_failure("tune-failed", f),
+                        }
+                    }
+                    Reply::rows(csv_rows(&tuner::tune_table(&reports)))
+                });
+                (reply, 0, 0)
+            }
+            Request::Pareto { acc } => {
+                let acc = *acc;
+                let reply = self.coalesced(req.to_line(), || {
+                    let table = if acc {
+                        accuracy_pareto_table(self.engine)
+                    } else {
+                        pareto_table(self.engine)
+                    };
+                    match table {
+                        Ok(t) => Reply::rows(csv_rows(&t)),
+                        Err(f) => self.query_failure("pareto-failed", f),
+                    }
+                });
+                (reply, 0, 0)
+            }
+        }
+    }
+
+    /// Render a structured query failure, bucketing every per-point error
+    /// by its watchdog class for `inject-status`.
+    fn query_failure(&self, class: &'static str, f: QueryFailure) -> Reply {
+        for e in &f.errors {
+            self.metrics.record_failure_class(e.error.class());
+        }
+        Reply::err(class, f.to_string())
+    }
+
+    /// Request-level single-flight: identical concurrent requests run
+    /// `compute` once and share the reply. Replies are published for
+    /// followers but never cached beyond the flight — a later identical
+    /// request recomputes (and hits the measurement cache instead).
+    fn coalesced(&self, key: String, compute: impl FnOnce() -> Reply) -> Reply {
+        match self.req_flight.begin(&key, || None) {
+            Begin::Lead => {
+                let reply = compute();
+                self.req_flight.publish(&key, reply.clone());
+                reply
+            }
+            Begin::Follow(slot) => slot.wait(),
+            Begin::Resolved(r) => r,
+        }
+    }
+
+    /// The `stats` endpoint payload: engine, cache and service counters.
+    fn stats_table(&self) -> Table {
+        let cache = self.engine.stats();
+        let totals = self.metrics.totals();
+        let mut t = Table::new(vec!["counter", "value"]);
+        for (k, v) in [
+            ("cache_entries", cache.entries as u64),
+            ("cache_hits", cache.hits),
+            ("cache_misses", cache.misses),
+            ("sim_runs", self.engine.sim_runs()),
+            ("functional_runs", self.engine.functional_runs()),
+            ("coalesced_runs", self.engine.coalesced_runs()),
+            ("duplicate_runs", self.engine.duplicate_runs()),
+            ("requests", totals.requests),
+            ("request_errors", totals.errors),
+            ("plan_cache_hits", totals.cache_hits),
+            ("plan_cache_misses", totals.cache_misses),
+        ] {
+            t.row(vec![k.to_string(), v.to_string()]);
+        }
+        t
+    }
+
+    /// Serve one request/reply stream until EOF. Used directly for `serve
+    /// --stdin` and per-connection for TCP. Every reply is flushed before
+    /// the next read so a pipelining client never deadlocks on a full
+    /// buffer held by an unflushed reply.
+    pub fn serve_pipe<R: BufRead, W: Write>(
+        &self,
+        mut input: R,
+        mut output: W,
+    ) -> io::Result<PipeSummary> {
+        let mut summary = PipeSummary::default();
+        loop {
+            let reply = match read_line_bounded(&mut input, self.max_line)? {
+                LineIn::Eof => break,
+                LineIn::Line(line) => {
+                    let line = line.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    self.handle_line(line)
+                }
+                LineIn::TooLong => {
+                    self.metrics.record(Endpoint::Invalid, false, 0, 0, 0);
+                    Reply::err(
+                        "oversized",
+                        format!("request line exceeds {} bytes", self.max_line),
+                    )
+                }
+                LineIn::BadUtf8 => {
+                    self.metrics.record(Endpoint::Invalid, false, 0, 0, 0);
+                    Reply::err("bad-utf8", "request line is not valid UTF-8")
+                }
+            };
+            summary.requests += 1;
+            if reply.is_ok() {
+                summary.replies_ok += 1;
+            } else {
+                summary.replies_err += 1;
+            }
+            write_reply(&mut output, &reply)?;
+            output.flush()?;
+        }
+        Ok(summary)
+    }
+}
+
+/// What one stream served.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PipeSummary {
+    pub requests: u64,
+    pub replies_ok: u64,
+    pub replies_err: u64,
+}
+
+fn csv_rows(t: &Table) -> Vec<String> {
+    t.to_csv().lines().map(str::to_string).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::kernels::{Benchmark, Variant};
+    use crate::server::request::Selector;
+    use std::io::Cursor;
+
+    fn leaked_server() -> Server {
+        Server::new(Box::leak(Box::new(QueryEngine::new())))
+    }
+
+    #[test]
+    fn ping_stats_and_inject_status_reply_structured_rows() {
+        let server = leaked_server();
+        assert_eq!(server.handle_line("ping"), Reply::Ok(vec!["pong".to_string()]));
+
+        let Reply::Ok(rows) = server.handle_line("inject-status") else {
+            panic!("inject-status must succeed");
+        };
+        assert_eq!(rows[0], "class,count");
+        assert_eq!(rows.len(), 4, "header + one row per failure class");
+
+        let Reply::Ok(rows) = server.handle_line("stats") else {
+            panic!("stats must succeed");
+        };
+        assert_eq!(rows[0], "counter,value");
+        assert!(rows.iter().any(|r| r.starts_with("duplicate_runs,")));
+    }
+
+    #[test]
+    fn query_replies_measurement_csv_and_counts_plan_traffic() {
+        let server = leaked_server();
+        let Reply::Ok(rows) = server.handle_line("query 8c2f0p FIR scalar") else {
+            panic!("query must succeed");
+        };
+        assert!(rows[0].starts_with("config,bench,variant"));
+        assert_eq!(rows.len(), 2, "header + one measurement");
+
+        let (req, err, hits, misses, _, _) = server.metrics().endpoint_snapshot(Endpoint::Query);
+        assert_eq!((req, err), (1, 0));
+        assert_eq!((hits, misses), (0, 1), "cold query is one plan miss");
+
+        // Same query again: served from the cache, recorded as a hit.
+        assert!(server.handle_line("query 8c2f0p FIR scalar").is_ok());
+        let (_, _, hits, misses, _, _) = server.metrics().endpoint_snapshot(Endpoint::Query);
+        assert_eq!((hits, misses), (1, 1));
+        assert_eq!(server.engine().sim_runs(), 1, "second query must not re-simulate");
+    }
+
+    #[test]
+    fn malformed_lines_are_structured_errors_not_panics() {
+        let server = leaked_server();
+        for bad in [
+            "query",
+            "query 8c8f1p",
+            "query bad FIR scalar",
+            "query 8c8f1p NOPE scalar",
+            "query 8c8f1p FIR warp",
+            "tune --budget",
+            "tune --budget nan",
+            "tune 8c8f1p extra words",
+            "run 8c2f0p FIR scalar",
+            "--csv query all FIR scalar",
+            "query 8c2f0p FIR scalar --csv",
+            "tune --jobs 4",
+        ] {
+            let reply = server.handle_line(bad);
+            assert!(
+                matches!(reply, Reply::Err { class: "bad-request", .. }),
+                "`{bad}` must be a bad-request error, got {reply:?}"
+            );
+        }
+        let (req, err, _, _, _, _) = server.metrics().endpoint_snapshot(Endpoint::Invalid);
+        assert_eq!(req, 12);
+        assert_eq!(err, 12);
+    }
+
+    #[test]
+    fn pipe_recovers_from_oversized_and_non_utf8_lines() {
+        let server = leaked_server().with_max_line(64);
+        let mut input = vec![b'x'; 200];
+        input.push(b'\n');
+        input.extend_from_slice(&[0xff, 0xfe, b'\n']);
+        input.extend_from_slice(b"ping\n\n  \nping\n");
+        let mut out = Vec::new();
+        let summary = server.serve_pipe(Cursor::new(input), &mut out).unwrap();
+        assert_eq!(summary, PipeSummary { requests: 4, replies_ok: 2, replies_err: 2 });
+
+        let text = String::from_utf8(out).unwrap();
+        let heads: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("ok ") || l.starts_with("err "))
+            .collect();
+        assert_eq!(heads.len(), 4);
+        assert!(heads[0].starts_with("err oversized"));
+        assert!(heads[1].starts_with("err bad-utf8"));
+        assert!(heads[2].starts_with("ok 1") && heads[3].starts_with("ok 1"));
+    }
+
+    #[test]
+    fn cli_and_wire_build_the_same_request() {
+        let argv = ["query", "8c4f1p", "FIR", "scalar"];
+        let cli_req = crate::cli::parse_cli(argv.iter().map(|s| s.to_string()))
+            .unwrap()
+            .to_request()
+            .unwrap();
+        let wire_req = Request::parse_line("query 8c4f1p FIR scalar").unwrap();
+        assert_eq!(cli_req, wire_req);
+        assert_eq!(
+            wire_req,
+            Request::Query {
+                cfg: Selector::One(ClusterConfig::new(8, 4, 1)),
+                bench: Selector::One(Benchmark::Fir),
+                variant: Selector::One(Variant::Scalar),
+            }
+        );
+    }
+}

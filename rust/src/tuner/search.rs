@@ -44,6 +44,26 @@ pub enum Probe {
     CycleAccurate,
 }
 
+impl Probe {
+    /// Stable name used by the CLI flag registry and the serve protocol.
+    pub fn name(self) -> &'static str {
+        match self {
+            Probe::Functional => "functional",
+            Probe::CycleAccurate => "cycle",
+        }
+    }
+
+    /// Inverse of [`Probe::name`] (the long form `cycle-accurate` is also
+    /// accepted).
+    pub fn parse(s: &str) -> Option<Probe> {
+        match s {
+            "functional" => Some(Probe::Functional),
+            "cycle" | "cycle-accurate" => Some(Probe::CycleAccurate),
+            _ => None,
+        }
+    }
+}
+
 /// One benchmark's tuning outcome.
 #[derive(Debug, Clone)]
 pub struct TuneChoice {

@@ -4,7 +4,7 @@
 
 use transpfp::cluster::Cluster;
 use transpfp::config::{ClusterConfig, Corner};
-use transpfp::coordinator::{pareto_table_from, points, run_one, table45_with, QueryEngine};
+use transpfp::coordinator::{pareto_table_from, points, run_one, table45, QueryEngine};
 use transpfp::isa::{regs, ProgramBuilder};
 use transpfp::kernels::{Benchmark, Variant};
 use transpfp::model;
@@ -282,14 +282,14 @@ fn f16_and_bf16_timing_equivalent() {
 #[test]
 fn warm_cache_table4_issues_zero_simulator_runs() {
     let engine = QueryEngine::new();
-    let cold = table45_with(&engine, 8).unwrap();
+    let cold = table45(&engine, 8).unwrap();
     let after_cold = engine.stats();
     // 9 eight-core configs × 8 benchmarks × 2 variants, all cold.
     assert_eq!(after_cold.misses, 144);
     assert_eq!(after_cold.hits, 0);
     assert_eq!(after_cold.entries, 144);
 
-    let warm = table45_with(&engine, 8).unwrap();
+    let warm = table45(&engine, 8).unwrap();
     let after_warm = engine.stats();
     assert_eq!(after_warm.misses, after_cold.misses, "warm table4 must not simulate");
     assert_eq!(after_warm.hits, 144);

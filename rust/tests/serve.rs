@@ -1,0 +1,263 @@
+//! Integration wall for `transpfp serve`: codec robustness under fuzzed
+//! input, CLI ↔ wire request equivalence, and end-to-end single-flight
+//! over real TCP connections.
+//!
+//! Every test leaks its own [`QueryEngine`] so the global engine (and its
+//! persisted cache) is never touched and tests stay independent.
+
+use std::io::{BufReader, Cursor, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::thread;
+
+use transpfp::prelude::{parse_cli, Benchmark, ClusterConfig, QueryEngine, Request, Variant};
+use transpfp::server::{read_reply, serve_tcp, Endpoint, Selector, Server, WireReply};
+use transpfp::testutil::Rng;
+use transpfp::tuner::{Probe, DEFAULT_BUDGET};
+
+fn leaked_server() -> Server {
+    Server::new(Box::leak(Box::new(QueryEngine::new())))
+}
+
+/// Feed a byte stream through the pipe server and decode every reply.
+fn pipe(server: &Server, input: Vec<u8>) -> (transpfp::server::PipeSummary, Vec<WireReply>) {
+    let mut out = Vec::new();
+    let summary = server.serve_pipe(Cursor::new(input), &mut out).expect("pipe serves to EOF");
+    let mut reader = Cursor::new(out);
+    let mut replies = Vec::new();
+    while let Some(r) = read_reply(&mut reader).expect("well-formed reply frame") {
+        replies.push(r);
+    }
+    (summary, replies)
+}
+
+/// Fuzzed garbage never panics the codec or the router, and every input
+/// line gets exactly one well-framed reply.
+#[test]
+fn fuzzed_lines_always_get_structured_replies() {
+    let server = leaked_server();
+    // Mostly printable noise, sprinkled with flag-ish tokens, separators
+    // and invalid UTF-8 — none of it may panic or desync the framing.
+    let pool: &[u8] = b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789 \
+        --,.<>{}\"'\\\t=:/%\xff\xfe\x00";
+    let mut rng = Rng::new(0x5e12_5e12);
+    let mut input = Vec::new();
+    let mut expected = 0u64;
+    for _ in 0..300 {
+        let len = rng.below(48) as usize;
+        let mut line = Vec::with_capacity(len);
+        for _ in 0..len {
+            line.push(pool[rng.below(pool.len() as u64) as usize]);
+        }
+        // Lines that trim to nothing are skipped by the server; count the
+        // rest (any non-whitespace byte, valid UTF-8 or not, gets a reply).
+        if !line.iter().all(|b| b.is_ascii_whitespace()) {
+            expected += 1;
+        }
+        input.extend_from_slice(&line);
+        input.push(b'\n');
+    }
+    let (summary, replies) = pipe(&server, input);
+    assert_eq!(summary.requests, expected, "one reply per non-blank line");
+    assert_eq!(summary.requests, summary.replies_ok + summary.replies_err);
+    assert_eq!(replies.len() as u64, summary.requests, "every reply is decodable");
+}
+
+/// The table of known-malformed requests: always `err`, never a panic,
+/// and the connection keeps serving afterwards.
+#[test]
+fn malformed_requests_are_structured_errors() {
+    let server = leaked_server();
+    let cases = [
+        "query",
+        "query 8c8f1p",
+        "query 8c8f1p FIR",
+        "query bad FIR scalar",
+        "query 8c8f1p NOPE scalar",
+        "query 8c8f1p FIR warp",
+        "tune --budget",
+        "tune --budget nan",
+        "tune --budget -1",
+        "tune 8c8f1p extra words",
+        "pareto now",
+        "run 8c2f0p FIR scalar",
+        "sweep",
+        "--csv query all FIR scalar",
+        "query 8c2f0p FIR scalar --csv",
+        "tune --jobs 4",
+        "ping --port 4517",
+    ];
+    let input: Vec<u8> = cases.iter().map(|c| format!("{c}\n")).collect::<String>().into_bytes();
+    let (summary, replies) = pipe(&server, input);
+    assert_eq!(summary.requests, cases.len() as u64);
+    assert_eq!(summary.replies_err, cases.len() as u64, "every malformed line is an error");
+    for (case, reply) in cases.iter().zip(&replies) {
+        assert!(!reply.ok, "`{case}` must fail");
+        assert!(reply.head.starts_with("err bad-request "), "`{case}` → {}", reply.head);
+    }
+    // The stream recovers: a valid request after the garbage still works.
+    let (_, replies) = pipe(&server, b"ping\n".to_vec());
+    assert_eq!(replies[0].rows, vec!["pong"]);
+}
+
+/// Oversized and truncated lines: consumed, reported, recovered from.
+#[test]
+fn oversized_and_truncated_lines_never_desync() {
+    let server = leaked_server().with_max_line(64);
+    let mut input = vec![b'q'; 500];
+    input.push(b'\n');
+    input.extend_from_slice(b"ping\n");
+    input.extend_from_slice(&[0xff, 0xfe, b'\n']);
+    // Final line truncated at EOF (no newline) — still served.
+    input.extend_from_slice(b"ping");
+    let (summary, replies) = pipe(&server, input);
+    assert_eq!(summary.requests, 4);
+    assert_eq!(summary.replies_ok, 2);
+    assert!(replies[0].head.starts_with("err oversized "), "{}", replies[0].head);
+    assert!(replies[0].head.contains("64 bytes"), "bound named in the error");
+    assert!(replies[1].ok);
+    assert!(replies[2].head.starts_with("err bad-utf8 "), "{}", replies[2].head);
+    assert!(replies[3].ok, "truncated final line still answered");
+
+    // An oversized line with no newline before EOF is also structured.
+    let (summary, replies) = pipe(&server, vec![b'x'; 500]);
+    assert_eq!(summary.requests, 1);
+    assert!(replies[0].head.starts_with("err oversized "));
+}
+
+/// The CLI and the wire build identical `Request` values, and the
+/// canonical line round-trips exactly.
+#[test]
+fn cli_and_wire_requests_are_identical() {
+    let cases: &[&[&str]] = &[
+        &["query", "8c4f1p", "FIR", "scalar"],
+        &["query", "all", "all", "all"],
+        &["query", "16c16f2p", "MATMUL", "vector-bf16"],
+        &["tune"],
+        &["tune", "8c4f1p"],
+        &["tune", "all", "--budget", "1e-3", "--probe", "cycle"],
+        &["pareto"],
+        &["pareto", "--acc"],
+        &["inject-status"],
+        &["stats"],
+        &["ping"],
+    ];
+    for argv in cases {
+        let from_cli = parse_cli(argv.iter().map(|s| s.to_string()))
+            .expect("cli parse")
+            .to_request()
+            .expect("cli lowers to a request");
+        let line = argv.join(" ");
+        let from_wire = Request::parse_line(&line).expect("wire parses the same line");
+        assert_eq!(from_cli, from_wire, "front ends diverged on `{line}`");
+        // Canonical form round-trips exactly (floats via Display).
+        let canon = from_cli.to_line();
+        assert_eq!(Request::parse_line(&canon), Ok(from_cli), "round-trip of `{canon}`");
+    }
+
+    // Defaults are materialized in the typed value, not re-derived later.
+    let tune = Request::parse_line("tune").unwrap();
+    assert_eq!(
+        tune,
+        Request::Tune {
+            cfg: Selector::One(ClusterConfig::new(8, 8, 1)),
+            budget: DEFAULT_BUDGET,
+            probe: Probe::Functional,
+        }
+    );
+    let q = Request::parse_line("query 8c2f0p fir scalar").unwrap();
+    assert_eq!(
+        q,
+        Request::Query {
+            cfg: Selector::One(ClusterConfig::new(8, 2, 0)),
+            bench: Selector::One(Benchmark::Fir),
+            variant: Selector::One(Variant::Scalar),
+        }
+    );
+}
+
+/// End-to-end over TCP: concurrent identical cold queries coalesce onto
+/// exactly one simulator run and all clients see the same row; a warm
+/// re-query is a metrics-visible cache hit.
+#[test]
+fn tcp_concurrent_identical_queries_simulate_once() {
+    let server = Arc::new(leaked_server());
+    let engine = server.engine();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let server = Arc::clone(&server);
+        thread::spawn(move || serve_tcp(server, listener));
+    }
+
+    const CLIENTS: usize = 8;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let replies: Vec<WireReply> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|_| {
+                let barrier = Arc::clone(&barrier);
+                scope.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    barrier.wait();
+                    stream.write_all(b"query 8c2f0p FIR scalar\n").unwrap();
+                    let mut reader = BufReader::new(stream);
+                    read_reply(&mut reader).unwrap().expect("one reply")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let first = &replies[0];
+    assert!(first.ok, "cold query must succeed: {}", first.head);
+    assert_eq!(first.rows.len(), 2, "header + one measurement");
+    for r in &replies {
+        assert_eq!(r.rows, first.rows, "all clients see the identical measurement");
+    }
+    assert_eq!(engine.sim_runs(), 1, "identical cold burst runs the simulator once");
+    assert_eq!(engine.duplicate_runs(), 0);
+    assert_eq!(engine.stats().entries, 1);
+
+    // Warm re-query on a fresh connection: pure cache hit.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(b"query 8c2f0p FIR scalar\nstats\n").unwrap();
+    let mut reader = BufReader::new(stream);
+    let warm = read_reply(&mut reader).unwrap().unwrap();
+    assert_eq!(warm.rows, first.rows, "warm reply matches the cold one");
+    let stats = read_reply(&mut reader).unwrap().unwrap();
+    assert!(stats.ok);
+    assert!(stats.rows.iter().any(|r| r == "sim_runs,1"), "stats rows: {:?}", stats.rows);
+    assert!(stats.rows.iter().any(|r| r == "duplicate_runs,0"));
+
+    assert_eq!(engine.sim_runs(), 1, "warm re-query must not re-simulate");
+    let (req, err, hits, _, _, _) = server.metrics().endpoint_snapshot(Endpoint::Query);
+    assert_eq!(req, CLIENTS as u64 + 1);
+    assert_eq!(err, 0);
+    assert!(hits >= 1, "the warm re-query is a plan-time cache hit");
+}
+
+/// `stats` and `inject-status` reply schema-stable structured rows.
+#[test]
+fn status_endpoints_reply_structured_tables() {
+    let server = leaked_server();
+    let (_, replies) = pipe(&server, b"inject-status\nstats\n".to_vec());
+
+    let inject = &replies[0];
+    assert!(inject.ok);
+    assert_eq!(inject.rows[0], "class,count");
+    assert_eq!(
+        inject.rows[1..],
+        ["deadlock,0".to_string(), "timeout,0".to_string(), "fault,0".to_string()]
+    );
+
+    let stats = &replies[1];
+    assert!(stats.ok);
+    assert_eq!(stats.rows[0], "counter,value");
+    for key in ["cache_entries", "sim_runs", "coalesced_runs", "duplicate_runs", "requests"] {
+        assert!(
+            stats.rows.iter().any(|r| r.starts_with(&format!("{key},"))),
+            "stats must report {key}: {:?}",
+            stats.rows
+        );
+    }
+}
