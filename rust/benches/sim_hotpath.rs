@@ -15,11 +15,13 @@ use std::time::Instant;
 use transpfp::cluster::{Cluster, Engine};
 use transpfp::config::ClusterConfig;
 use transpfp::kernels::{Benchmark, Variant};
+use transpfp::trace::TraceConfig;
 
 fn main() {
     let cfg = ClusterConfig::new(16, 8, 1);
     let reps = 3;
     let mut grand = [0.0f64; 2]; // [event, reference] wall seconds
+    let mut grand_traced = 0.0f64; // event engine, tracer attached
     let mut grand_cycles = 0u64;
     println!("simulator hot-path throughput on {} ({} cores):", cfg, cfg.cores);
     for b in Benchmark::all() {
@@ -45,6 +47,19 @@ fn main() {
                 secs[ei] = best * reps as f64;
                 cycles = c; // identical across engines (differentially tested)
             }
+            // Tracing-enabled pass on the event engine: same cluster with a
+            // tracer attached (the ring buffers are reused across reps via
+            // reset()). The disabled passes above already time the exact
+            // code the gate protects — a tracer-less cluster.
+            cl.attach_tracer(TraceConfig::default());
+            let _ = w.run_in_with(&mut cl, cfg.cores, Engine::Event); // warm-up
+            let mut best_traced = f64::INFINITY;
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                let _ = w.run_in_with(&mut cl, cfg.cores, Engine::Event).unwrap();
+                best_traced = best_traced.min(t0.elapsed().as_secs_f64());
+            }
+            grand_traced += best_traced * reps as f64;
             grand[0] += secs[0];
             grand[1] += secs[1];
             grand_cycles += cycles;
@@ -70,6 +85,17 @@ fn main() {
     );
     let speedup = event_mcps / reference_mcps;
     println!("speedup: {speedup:.2}x event vs reference (gates: >=2.0x, event >=20 M core-cycles/s)");
+    // Trace overhead (EXPERIMENTS.md §Trace): the disabled path is the
+    // event timing above — it must hold the absolute ≥20 M core-cycles/s
+    // floor, which bounds any disabled-path regression. Enabled tracing
+    // (default 64 Ki-record rings) may cost at most 2× the disabled path.
+    let traced_mcps = grand_cycles as f64 / grand_traced / 1e6;
+    let trace_ratio = grand_traced / grand[0];
+    println!("trace-disabled: {event_mcps:.1} M simulated core-cycles/s (tracer detached)");
+    println!(
+        "trace-enabled: {traced_mcps:.1} M simulated core-cycles/s ({trace_ratio:.2}x \
+         disabled wall time; gate: <=2.0x)"
+    );
     let mut failed = false;
     if event_mcps < 20.0 {
         eprintln!("GATE FAILED: event engine below 20 M core-cycles/s ({event_mcps:.1} M)");
@@ -77,6 +103,12 @@ fn main() {
     }
     if speedup < 2.0 {
         eprintln!("GATE FAILED: event engine under 2.0x the reference engine ({speedup:.2}x)");
+        failed = true;
+    }
+    if trace_ratio > 2.0 {
+        eprintln!(
+            "GATE FAILED: tracing-enabled runs cost over 2x the disabled path ({trace_ratio:.2}x)"
+        );
         failed = true;
     }
     if failed {

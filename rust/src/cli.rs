@@ -48,7 +48,44 @@ pub struct Cli {
     pub stdin_mode: bool,
     /// `serve`: write the per-endpoint metrics CSV here on exit.
     pub metrics: Option<String>,
+    /// `trace`: ladder rung to trace (default scalar).
+    pub variant: Option<Variant>,
+    /// `trace`: print the per-core breakdown of one region.
+    pub region: Option<String>,
+    /// `trace`: export path override.
+    pub out: Option<String>,
+    /// `trace`: export format (default CSV).
+    pub format: Option<TraceFormat>,
     pub args: Vec<String>,
+}
+
+/// Exporter format of the `trace` subcommand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceFormat {
+    /// Flat per-record CSV (`records_csv`).
+    #[default]
+    Csv,
+    /// Chrome trace-event JSON (chrome://tracing, Perfetto).
+    Chrome,
+}
+
+impl TraceFormat {
+    /// Parse the `--format` value.
+    pub fn parse(s: &str) -> Option<TraceFormat> {
+        match s {
+            "csv" => Some(TraceFormat::Csv),
+            "chrome" => Some(TraceFormat::Chrome),
+            _ => None,
+        }
+    }
+
+    /// File extension of the exported artifact.
+    pub fn ext(self) -> &'static str {
+        match self {
+            TraceFormat::Csv => "csv",
+            TraceFormat::Chrome => "json",
+        }
+    }
 }
 
 /// Default TCP port of `transpfp serve`.
@@ -197,6 +234,38 @@ fn apply_metrics(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
     Ok(())
 }
 
+fn apply_variant(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    let v = v.expect("value flag");
+    match parse_variant(v) {
+        Some(var) => {
+            c.variant = Some(var);
+            Ok(())
+        }
+        None => Err(format!("bad `--variant` value `{v}`")),
+    }
+}
+
+fn apply_region(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    c.region = Some(v.expect("value flag").to_string());
+    Ok(())
+}
+
+fn apply_out(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    c.out = Some(v.expect("value flag").to_string());
+    Ok(())
+}
+
+fn apply_format(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    let v = v.expect("value flag");
+    match TraceFormat::parse(v) {
+        Some(f) => {
+            c.format = Some(f);
+            Ok(())
+        }
+        None => Err(format!("bad `--format` value `{v}` (csv or chrome)")),
+    }
+}
+
 /// Every flag the binary understands, in help order.
 pub const FLAGS: &[FlagSpec] = &[
     FlagSpec {
@@ -304,6 +373,34 @@ pub const FLAGS: &[FlagSpec] = &[
         help: "write the per-endpoint serve metrics CSV here on\nexit (`serve --stdin` only)",
         apply: apply_metrics,
     },
+    FlagSpec {
+        name: "--variant",
+        value: Some("<v>"),
+        example: "vector",
+        help: "ladder rung for `trace` (default scalar)",
+        apply: apply_variant,
+    },
+    FlagSpec {
+        name: "--region",
+        value: Some("<name>"),
+        example: "tile0",
+        help: "also print the per-core breakdown of one trace\nregion (`trace` only)",
+        apply: apply_region,
+    },
+    FlagSpec {
+        name: "--out",
+        value: Some("<path>"),
+        example: "trace.json",
+        help: "trace export path (default\nartifacts/trace/<kernel>.<csv|json>)",
+        apply: apply_out,
+    },
+    FlagSpec {
+        name: "--format",
+        value: Some("<f>"),
+        example: "chrome",
+        help: "trace export format: csv (flat records, default)\nor chrome (trace-event JSON for chrome://tracing\nand Perfetto)",
+        apply: apply_format,
+    },
 ];
 
 /// One entry of the command registry (drives `--help` and the wire-protocol
@@ -337,6 +434,13 @@ pub const COMMANDS: &[CommandSpec] = &[
         help: "run one benchmark (e.g. `run 8c4f1p MATMUL vector`);\nvariants: scalar, scalar-f16, scalar-bf16,\nvector (vector-f16), vector-bf16; with\n--tiles <t>, run the DMA double-buffered tiled\nbuild (MATMUL/CONV scalar, dataset in L2 beyond\nthe TCDM, streamed through ping-pong buffers);\nwith --backend <event|reference|functional>, run\nuncached on the chosen execution tier (the\nfunctional tier verifies numerics with no timing)",
         wire_flags: &[],
         wire: false,
+    },
+    CommandSpec {
+        name: "trace",
+        args: "<cfg> <bench>",
+        help: "cycle-attribution trace of one benchmark run:\nrecords per-core issue/stall/wait/DMA events,\nprints the region attribution table (stall\ntaxonomy + DMA-overlap efficiency, reconciled\nexactly against the run's counters) and exports\nthe trace with --format csv|chrome to --out\n(default artifacts/trace/). --variant picks the\nladder rung (default scalar), --tiles traces the\nDMA double-buffered build, --region adds one\nregion's per-core breakdown. On the serve wire,\n`trace` (no args) lists recent request spans",
+        wire_flags: &[],
+        wire: true,
     },
     CommandSpec {
         name: "query",
@@ -610,10 +714,19 @@ impl Cli {
             }
             "inject-status" => Ok(Request::InjectStatus),
             "stats" => Ok(Request::Stats),
+            "trace" => {
+                if args.len() != 1 {
+                    // The CLI `trace <cfg> <bench>` form dispatches in
+                    // main.rs; the service form lists recent request spans
+                    // and takes no arguments.
+                    return Err("`trace` takes no arguments on the wire".to_string());
+                }
+                Ok(Request::Trace)
+            }
             "ping" => Ok(Request::Ping),
             other => Err(format!(
                 "`{other}` is not a service request (expected query, tune, pareto, \
-                 inject-status, stats or ping)"
+                 inject-status, stats, trace or ping)"
             )),
         }
     }

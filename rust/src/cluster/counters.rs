@@ -80,6 +80,73 @@ impl CoreCounters {
         }
     }
 
+    /// Stall cycles by cause, in field order, with their stable names —
+    /// the taxonomy the trace layer's `StallCause` mirrors.
+    pub fn stall_breakdown(&self) -> [(&'static str, u64); 10] {
+        [
+            ("tcdm_cont", self.tcdm_cont),
+            ("l2_stall", self.l2_stall),
+            ("fpu_stall", self.fpu_stall),
+            ("fpu_cont", self.fpu_cont),
+            ("divsqrt_cont", self.divsqrt_cont),
+            ("wb_stall", self.wb_stall),
+            ("load_stall", self.load_stall),
+            ("icache_stall", self.icache_stall),
+            ("barrier_idle", self.barrier_idle),
+            ("branch_stall", self.branch_stall),
+        ]
+    }
+
+    /// Field-wise difference `self − prev`, used by the trace layer's
+    /// snapshot-diff attribution. Wrapping so a partial snapshot can never
+    /// panic; in normal use counters only grow.
+    pub fn delta_from(&self, prev: &CoreCounters) -> CoreCounters {
+        CoreCounters {
+            cycles: self.cycles.wrapping_sub(prev.cycles),
+            active: self.active.wrapping_sub(prev.active),
+            instrs: self.instrs.wrapping_sub(prev.instrs),
+            int_instrs: self.int_instrs.wrapping_sub(prev.int_instrs),
+            fp_instrs: self.fp_instrs.wrapping_sub(prev.fp_instrs),
+            fp_vec_instrs: self.fp_vec_instrs.wrapping_sub(prev.fp_vec_instrs),
+            mem_instrs: self.mem_instrs.wrapping_sub(prev.mem_instrs),
+            flops: self.flops.wrapping_sub(prev.flops),
+            tcdm_cont: self.tcdm_cont.wrapping_sub(prev.tcdm_cont),
+            l2_stall: self.l2_stall.wrapping_sub(prev.l2_stall),
+            fpu_stall: self.fpu_stall.wrapping_sub(prev.fpu_stall),
+            fpu_cont: self.fpu_cont.wrapping_sub(prev.fpu_cont),
+            divsqrt_cont: self.divsqrt_cont.wrapping_sub(prev.divsqrt_cont),
+            wb_stall: self.wb_stall.wrapping_sub(prev.wb_stall),
+            load_stall: self.load_stall.wrapping_sub(prev.load_stall),
+            icache_stall: self.icache_stall.wrapping_sub(prev.icache_stall),
+            barrier_idle: self.barrier_idle.wrapping_sub(prev.barrier_idle),
+            branch_stall: self.branch_stall.wrapping_sub(prev.branch_stall),
+        }
+    }
+
+    /// Field-wise accumulate. Unlike [`CoreCounters::merge`] (which takes
+    /// the max of wall-clock `cycles`), this sums `cycles` too — the
+    /// operand is an interval delta, not a whole-run counter set.
+    pub fn accumulate(&mut self, d: &CoreCounters) {
+        self.cycles += d.cycles;
+        self.active += d.active;
+        self.instrs += d.instrs;
+        self.int_instrs += d.int_instrs;
+        self.fp_instrs += d.fp_instrs;
+        self.fp_vec_instrs += d.fp_vec_instrs;
+        self.mem_instrs += d.mem_instrs;
+        self.flops += d.flops;
+        self.tcdm_cont += d.tcdm_cont;
+        self.l2_stall += d.l2_stall;
+        self.fpu_stall += d.fpu_stall;
+        self.fpu_cont += d.fpu_cont;
+        self.divsqrt_cont += d.divsqrt_cont;
+        self.wb_stall += d.wb_stall;
+        self.load_stall += d.load_stall;
+        self.icache_stall += d.icache_stall;
+        self.barrier_idle += d.barrier_idle;
+        self.branch_stall += d.branch_stall;
+    }
+
     /// Accumulate another core's counters (for cluster aggregates).
     pub fn merge(&mut self, o: &CoreCounters) {
         self.cycles = self.cycles.max(o.cycles);
@@ -149,6 +216,26 @@ mod tests {
         assert!((c.fp_intensity() - 0.28).abs() < 1e-12);
         assert!((c.mem_intensity() - 0.58).abs() < 1e-12);
         assert_eq!(CoreCounters::default().fp_intensity(), 0.0);
+    }
+
+    #[test]
+    fn delta_and_accumulate_round_trip() {
+        let prev = CoreCounters { cycles: 10, active: 6, tcdm_cont: 4, ..Default::default() };
+        let now = CoreCounters { cycles: 25, active: 14, tcdm_cont: 9, instrs: 7, ..Default::default() };
+        let d = now.delta_from(&prev);
+        assert_eq!(d.cycles, 15);
+        assert_eq!(d.active, 8);
+        assert_eq!(d.tcdm_cont, 5);
+        assert_eq!(d.instrs, 7);
+        let mut acc = prev;
+        acc.accumulate(&d);
+        assert_eq!(acc, now);
+        let names: Vec<&str> = now.stall_breakdown().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names.len(), 10);
+        assert_eq!(now.stall_breakdown()[0], ("tcdm_cont", 9));
+        // The breakdown must cover stalls() exactly — no hidden bucket.
+        let sum: u64 = now.stall_breakdown().iter().map(|(_, v)| v).sum();
+        assert_eq!(sum, now.stalls());
     }
 
     #[test]

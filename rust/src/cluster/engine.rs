@@ -41,6 +41,7 @@ use super::counters::RunStats;
 use super::event::WAKEUP_LATENCY;
 use super::mem::Region;
 use super::{Cluster, TAKEN_BRANCH_CYCLES};
+use crate::trace::{StallCause, TraceKind};
 
 /// Advance past an executed instruction: the predecoded `LOOP_END_NEXT`
 /// flag proves whether the hw-loop stack can possibly act, so the common
@@ -194,13 +195,15 @@ impl Cluster {
                 if line_ready > t {
                     if t == now || solo {
                         let fetched = self.icache.fetch(pc as u32, t);
-                        let c = &mut self.cores[ci];
-                        c.counters.icache_stall += fetched - t;
+                        self.cores[ci].counters.icache_stall += fetched - t;
+                        if self.tracer.is_some() {
+                            self.trace_stall(ci, pc as u32, t, StallCause::Icache, fetched - t);
+                        }
                         if local {
                             t = fetched;
                             continue; // same pc: guaranteed hit at `fetched`
                         }
-                        c.next_issue = fetched;
+                        self.cores[ci].next_issue = fetched;
                     } else {
                         self.cores[ci].next_issue = t;
                     }
@@ -212,17 +215,30 @@ impl Cluster {
             let (opr_ready, who) =
                 self.cores[ci].scoreboard_ready(&d.reads[..d.nreads as usize]);
             if opr_ready > t {
-                let c = &mut self.cores[ci];
                 let wait = opr_ready - t;
-                match who {
-                    Producer::Fpu | Producer::DivSqrt => c.counters.fpu_stall += wait,
-                    Producer::Load => c.counters.load_stall += wait,
-                    Producer::None => {}
+                let cause = {
+                    let c = &mut self.cores[ci];
+                    match who {
+                        Producer::Fpu | Producer::DivSqrt => {
+                            c.counters.fpu_stall += wait;
+                            Some(StallCause::FpuLatency)
+                        }
+                        Producer::Load => {
+                            c.counters.load_stall += wait;
+                            Some(StallCause::LoadUse)
+                        }
+                        Producer::None => None,
+                    }
+                };
+                if let Some(cause) = cause {
+                    if self.tracer.is_some() {
+                        self.trace_stall(ci, pc as u32, t, cause, wait);
+                    }
                 }
                 if local {
                     t = opr_ready; // the re-attempt folds into the batch
                 } else {
-                    c.next_issue = opr_ready;
+                    self.cores[ci].next_issue = opr_ready;
                     return Ok(());
                 }
             }
@@ -240,15 +256,21 @@ impl Cluster {
                 if c.wb_skid >= 3 {
                     c.wb_skid = 0;
                     c.counters.wb_stall += 1;
+                    if self.tracer.is_some() {
+                        self.trace_stall(ci, pc as u32, t, StallCause::Writeback, 1);
+                    }
                     t += 1;
                     if !local {
-                        c.next_issue = t;
+                        self.cores[ci].next_issue = t;
                         return Ok(());
                     }
                 }
             }
 
             // --- 4. Class dispatch at cursor `t`.
+            if self.tracer.is_some() {
+                self.trace_issue(ci, pc as u32, t);
+            }
             match d.class {
                 OpClass::Alu => {
                     let Insn::Alu { op, rd, rs1, rhs } = d.insn else { unreachable!() };
@@ -292,6 +314,15 @@ impl Cluster {
                     if taken {
                         c.pc = target;
                         c.counters.branch_stall += TAKEN_BRANCH_CYCLES - 1;
+                        if self.tracer.is_some() {
+                            self.trace_stall(
+                                ci,
+                                pc as u32,
+                                t,
+                                StallCause::Branch,
+                                TAKEN_BRANCH_CYCLES - 1,
+                            );
+                        }
                         t += TAKEN_BRANCH_CYCLES;
                     } else {
                         t += 1;
@@ -306,6 +337,15 @@ impl Cluster {
                     c.counters.int_instrs += 1;
                     c.pc = target;
                     c.counters.branch_stall += TAKEN_BRANCH_CYCLES - 1;
+                    if self.tracer.is_some() {
+                        self.trace_stall(
+                            ci,
+                            pc as u32,
+                            t,
+                            StallCause::Branch,
+                            TAKEN_BRANCH_CYCLES - 1,
+                        );
+                    }
                     t += TAKEN_BRANCH_CYCLES;
                 }
                 OpClass::HwLoop => {
@@ -324,11 +364,19 @@ impl Cluster {
                     }
                 }
                 OpClass::End => {
-                    let c = &mut self.cores[ci];
-                    c.counters.active += 1;
-                    c.counters.instrs += 1;
-                    c.counters.cycles = t;
-                    c.state = CoreState::Done;
+                    // `End` retires in zero cycles and deliberately does NOT
+                    // count an active cycle, so `active + stalls == cycles`
+                    // holds exactly per core (the trace layer reconciles on
+                    // this invariant).
+                    {
+                        let c = &mut self.cores[ci];
+                        c.counters.instrs += 1;
+                        c.counters.cycles = t;
+                        c.state = CoreState::Done;
+                    }
+                    if self.tracer.is_some() {
+                        self.trace_end(ci, t);
+                    }
                     return Ok(());
                 }
                 OpClass::Load => {
@@ -351,6 +399,15 @@ impl Cluster {
                                 let c = &mut self.cores[ci];
                                 c.counters.tcdm_cont += 1;
                                 c.next_issue = t + 1;
+                                if self.tracer.is_some() {
+                                    self.trace_stall(
+                                        ci,
+                                        pc as u32,
+                                        t,
+                                        StallCause::TcdmContention,
+                                        1,
+                                    );
+                                }
                                 return Ok(());
                             }
                             let c = &mut self.cores[ci];
@@ -374,6 +431,15 @@ impl Cluster {
                             c.counters.mem_instrs += 1;
                             t += l2_lat; // core blocks on the demux
                             advance(c, &d);
+                            if self.tracer.is_some() {
+                                self.trace_stall(
+                                    ci,
+                                    pc as u32,
+                                    t - l2_lat,
+                                    StallCause::L2,
+                                    l2_lat - 1,
+                                );
+                            }
                         }
                     }
                 }
@@ -397,6 +463,15 @@ impl Cluster {
                                 let c = &mut self.cores[ci];
                                 c.counters.tcdm_cont += 1;
                                 c.next_issue = t + 1;
+                                if self.tracer.is_some() {
+                                    self.trace_stall(
+                                        ci,
+                                        pc as u32,
+                                        t,
+                                        StallCause::TcdmContention,
+                                        1,
+                                    );
+                                }
                                 return Ok(());
                             }
                             let c = &mut self.cores[ci];
@@ -422,6 +497,15 @@ impl Cluster {
                             c.counters.mem_instrs += 1;
                             t += l2_lat;
                             advance(c, &d);
+                            if self.tracer.is_some() {
+                                self.trace_stall(
+                                    ci,
+                                    pc as u32,
+                                    t - l2_lat,
+                                    StallCause::L2,
+                                    l2_lat - 1,
+                                );
+                            }
                         }
                     }
                 }
@@ -437,6 +521,9 @@ impl Cluster {
                         let c = &mut self.cores[ci];
                         c.counters.fpu_cont += 1;
                         c.next_issue = t + 1;
+                        if self.tracer.is_some() {
+                            self.trace_stall(ci, pc as u32, t, StallCause::FpuContention, 1);
+                        }
                         return Ok(());
                     }
                     let c = &mut self.cores[ci];
@@ -458,13 +545,21 @@ impl Cluster {
                     let Insn::Fp { op, mode, rd, rs1, rs2 } = d.insn else { unreachable!() };
                     match self.fpus.try_divsqrt(mode, t) {
                         Err(free) => {
-                            let c = &mut self.cores[ci];
-                            c.counters.divsqrt_cont += free - t;
+                            self.cores[ci].counters.divsqrt_cont += free - t;
+                            if self.tracer.is_some() {
+                                self.trace_stall(
+                                    ci,
+                                    pc as u32,
+                                    t,
+                                    StallCause::DivSqrtContention,
+                                    free - t,
+                                );
+                            }
                             if solo {
                                 t = free; // only contender: retry in-batch
                                 continue;
                             }
-                            c.next_issue = free;
+                            self.cores[ci].next_issue = free;
                             return Ok(());
                         }
                         Ok(done) => {
@@ -492,6 +587,9 @@ impl Cluster {
                         let c = &mut self.cores[ci];
                         c.counters.tcdm_cont += 1;
                         c.next_issue = t + 1;
+                        if self.tracer.is_some() {
+                            self.trace_stall(ci, pc as u32, t, StallCause::TcdmContention, 1);
+                        }
                         return Ok(());
                     }
                     self.exec_amo(ci, op, rd, addr, rs, t);
@@ -533,6 +631,9 @@ impl Cluster {
                             c.counters.barrier_idle += wake - since;
                             c.state = CoreState::Running;
                             c.next_issue = wake;
+                            if let Some(tr) = self.tracer.as_deref_mut() {
+                                tr.on_wake(w, c.pc, TraceKind::EventWait, since, wake);
+                            }
                             woken.push(w);
                         }
                     }
@@ -566,11 +667,29 @@ impl Cluster {
                                         c.counters.barrier_idle += wake - since;
                                         c.state = CoreState::Running;
                                         c.next_issue = wake;
+                                        if let Some(tr) = self.tracer.as_deref_mut() {
+                                            tr.on_wake(
+                                                c.id,
+                                                c.pc,
+                                                TraceKind::Barrier,
+                                                since,
+                                                wake,
+                                            );
+                                        }
                                         woken.push(c.id);
                                     }
                                     CoreState::Running if c.id == ci => {
                                         c.counters.barrier_idle += wake - (t + 1);
                                         c.next_issue = wake;
+                                        if let Some(tr) = self.tracer.as_deref_mut() {
+                                            tr.on_wake(
+                                                c.id,
+                                                c.pc,
+                                                TraceKind::Barrier,
+                                                t + 1,
+                                                wake,
+                                            );
+                                        }
                                     }
                                     _ => {}
                                 }

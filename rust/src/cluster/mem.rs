@@ -543,6 +543,12 @@ impl DmaCtl {
     pub fn words_moved(&self) -> u64 {
         self.engine.words_moved
     }
+
+    /// Currently latched transfer length in words (the trace layer labels
+    /// DMA-start records with it).
+    pub fn len_words(&self) -> u32 {
+        self.len
+    }
 }
 
 #[cfg(test)]

@@ -63,6 +63,7 @@ use self::fpu::FpuSubsystem;
 use self::icache::ICache;
 use self::mem::{DmaCtl, Memory, Region};
 use crate::isa::insn::AmoOp;
+use crate::trace::{StallCause, TraceConfig, Tracer};
 
 /// Which issue engine executes a run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -134,6 +135,10 @@ pub struct Cluster {
     /// checking the environment per issued instruction costs ~30% of the
     /// whole simulator; see EXPERIMENTS.md §Perf).
     trace: bool,
+    /// Attached cycle-attribution tracer ([`crate::trace`]); `None` means
+    /// tracing is off and every hook site reduces to one predictable
+    /// branch. Boxed so the disabled path keeps `Cluster` compact.
+    tracer: Option<Box<Tracer>>,
 }
 
 impl Cluster {
@@ -155,8 +160,28 @@ impl Cluster {
             fault: None,
             perfect_icache: false,
             trace: std::env::var_os("TRANSPFP_TRACE").is_some(),
+            tracer: None,
             cfg,
         }
+    }
+
+    /// Attach a cycle-attribution tracer (replacing any existing one). The
+    /// region marker table is resolved from the program's side table; both
+    /// timed engines then feed it issue/stall/wake/DMA records.
+    pub fn attach_tracer(&mut self, cfg: TraceConfig) {
+        let tr = Tracer::new(cfg, self.cfg.cores, &self.program.name, &self.program.markers);
+        self.tracer = Some(Box::new(tr));
+    }
+
+    /// The attached tracer, if any.
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_deref()
+    }
+
+    /// Detach and return the tracer (e.g. to fold into an
+    /// [`crate::trace::AttributionReport`]).
+    pub fn take_tracer(&mut self) -> Option<Box<Tracer>> {
+        self.tracer.take()
     }
 
     /// Reset every subsystem to its power-on state, **reusing all
@@ -178,6 +203,37 @@ impl Cluster {
         self.dmac.reset();
         self.now = 0;
         self.fault = None;
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            tr.reset();
+        }
+    }
+
+    /// Engine hook: an issue attempt reached instruction dispatch at cycle
+    /// `t`. `#[cold]` keeps the body out of the tracing-off hot path; call
+    /// sites guard with `self.tracer.is_some()`.
+    #[cold]
+    pub(crate) fn trace_issue(&mut self, ci: usize, pc: u32, t: u64) {
+        let counters = self.cores[ci].counters;
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            tr.on_issue(ci, pc, t, &counters);
+        }
+    }
+
+    /// Engine hook: a stall counter was bumped by `amount` at cycle `t`.
+    #[cold]
+    pub(crate) fn trace_stall(&mut self, ci: usize, pc: u32, t: u64, cause: StallCause, amount: u64) {
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            tr.on_stall(ci, pc, t, cause, amount);
+        }
+    }
+
+    /// Engine hook: core `ci` retired `End` at cycle `t`.
+    #[cold]
+    pub(crate) fn trace_end(&mut self, ci: usize, t: u64) {
+        let counters = self.cores[ci].counters;
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            tr.on_end(ci, t, &counters);
+        }
     }
 
     /// Arm a single-event upset. The run engines consume it at the first
@@ -292,7 +348,19 @@ impl Cluster {
     pub(crate) fn exec_dma_store(&mut self, ci: usize, addr: u32, rs: crate::isa::Reg, t: u64) {
         debug_assert!(matches!(self.mem.region_of(addr), Region::Dma));
         let v = self.cores[ci].reg(rs);
-        self.dmac.store(&mut self.mem, addr - mem::DMA_BASE, v, t);
+        let off = addr - mem::DMA_BASE;
+        let busy_before = self.dmac.engine.busy_until;
+        self.dmac.store(&mut self.mem, off, v, t);
+        if off == mem::dma_reg::CMD {
+            // A `CMD` store queued one transfer; the engine's busy horizon
+            // moved from `busy_before` to its new value.
+            let pc = self.cores[ci].pc;
+            let words = self.dmac.len_words();
+            let done = self.dmac.engine.busy_until;
+            if let Some(tr) = self.tracer.as_deref_mut() {
+                tr.on_dma(ci, pc, t, busy_before.max(t), done, words);
+            }
+        }
         let c = &mut self.cores[ci];
         c.counters.active += 1;
         c.counters.instrs += 1;

@@ -19,6 +19,7 @@ use super::counters::RunStats;
 use super::event::WAKEUP_LATENCY;
 use super::mem::Region;
 use super::{Cluster, INT_DIV_LATENCY, TAKEN_BRANCH_CYCLES};
+use crate::trace::{StallCause, TraceKind};
 
 impl Cluster {
     /// Run to completion on the per-cycle reference loop. Exceeding
@@ -89,9 +90,11 @@ impl Cluster {
     /// Attempt to issue the next instruction of core `ci` at `self.now`.
     fn issue(&mut self, ci: usize) -> Result<(), RunError> {
         let t = self.now;
-        let insn = self.program.insns[self.cores[ci].pc as usize];
+        // Capture the attempt pc before any arm rewrites it (branch/jump).
+        let pc = self.cores[ci].pc;
+        let insn = self.program.insns[pc as usize];
         if self.trace_enabled() {
-            eprintln!("t={t} core={ci} pc={} {:?}", self.cores[ci].pc, insn);
+            eprintln!("t={t} core={ci} pc={pc} {insn:?}");
         }
 
         // 1. Instruction fetch through the shared I$.
@@ -101,20 +104,37 @@ impl Cluster {
             let c = &mut self.cores[ci];
             c.counters.icache_stall += fetched - t;
             c.next_issue = fetched;
+            if self.tracer.is_some() {
+                self.trace_stall(ci, pc, t, StallCause::Icache, fetched - t);
+            }
             return Ok(());
         }
 
         // 2. Operand scoreboard.
         let (ready, who) = self.cores[ci].operands_ready(&insn);
         if ready > t {
-            let c = &mut self.cores[ci];
             let wait = ready - t;
-            match who {
-                Producer::Fpu | Producer::DivSqrt => c.counters.fpu_stall += wait,
-                Producer::Load => c.counters.load_stall += wait,
-                Producer::None => {}
+            let cause = {
+                let c = &mut self.cores[ci];
+                let cause = match who {
+                    Producer::Fpu | Producer::DivSqrt => {
+                        c.counters.fpu_stall += wait;
+                        Some(StallCause::FpuLatency)
+                    }
+                    Producer::Load => {
+                        c.counters.load_stall += wait;
+                        Some(StallCause::LoadUse)
+                    }
+                    Producer::None => None,
+                };
+                c.next_issue = ready;
+                cause
+            };
+            if let Some(cause) = cause {
+                if self.tracer.is_some() {
+                    self.trace_stall(ci, pc, t, cause, wait);
+                }
             }
-            c.next_issue = ready;
             return Ok(());
         }
 
@@ -133,11 +153,17 @@ impl Cluster {
                 c.wb_skid = 0;
                 c.counters.wb_stall += 1;
                 c.next_issue = t + 1;
+                if self.tracer.is_some() {
+                    self.trace_stall(ci, pc, t, StallCause::Writeback, 1);
+                }
                 return Ok(());
             }
         }
 
         // 4. Class-specific structural hazards + execution.
+        if self.tracer.is_some() {
+            self.trace_issue(ci, pc, t);
+        }
         match insn {
             Insn::Alu { op, rd, rs1, rhs } => {
                 let c = &mut self.cores[ci];
@@ -179,6 +205,9 @@ impl Cluster {
                             let c = &mut self.cores[ci];
                             c.counters.tcdm_cont += 1;
                             c.next_issue = t + 1;
+                            if self.tracer.is_some() {
+                                self.trace_stall(ci, pc, t, StallCause::TcdmContention, 1);
+                            }
                             return Ok(());
                         }
                         let c = &mut self.cores[ci];
@@ -203,6 +232,9 @@ impl Cluster {
                         c.counters.mem_instrs += 1;
                         c.next_issue = t + lat; // core blocks on the demux
                         c.advance_pc();
+                        if self.tracer.is_some() {
+                            self.trace_stall(ci, pc, t, StallCause::L2, lat - 1);
+                        }
                     }
                 }
             }
@@ -223,6 +255,9 @@ impl Cluster {
                             let c = &mut self.cores[ci];
                             c.counters.tcdm_cont += 1;
                             c.next_issue = t + 1;
+                            if self.tracer.is_some() {
+                                self.trace_stall(ci, pc, t, StallCause::TcdmContention, 1);
+                            }
                             return Ok(());
                         }
                         let c = &mut self.cores[ci];
@@ -247,6 +282,9 @@ impl Cluster {
                         c.counters.mem_instrs += 1;
                         c.next_issue = t + lat;
                         c.advance_pc();
+                        if self.tracer.is_some() {
+                            self.trace_stall(ci, pc, t, StallCause::L2, lat - 1);
+                        }
                     }
                 }
             }
@@ -260,6 +298,9 @@ impl Cluster {
                     c.pc = target;
                     c.counters.branch_stall += TAKEN_BRANCH_CYCLES - 1;
                     c.next_issue = t + TAKEN_BRANCH_CYCLES;
+                    if self.tracer.is_some() {
+                        self.trace_stall(ci, pc, t, StallCause::Branch, TAKEN_BRANCH_CYCLES - 1);
+                    }
                 } else {
                     c.next_issue = t + 1;
                     c.advance_pc();
@@ -273,6 +314,9 @@ impl Cluster {
                 c.pc = target;
                 c.counters.branch_stall += TAKEN_BRANCH_CYCLES - 1;
                 c.next_issue = t + TAKEN_BRANCH_CYCLES;
+                if self.tracer.is_some() {
+                    self.trace_stall(ci, pc, t, StallCause::Branch, TAKEN_BRANCH_CYCLES - 1);
+                }
             }
             Insn::HwLoop { count, start, end } => {
                 let c = &mut self.cores[ci];
@@ -304,6 +348,15 @@ impl Cluster {
                             let c = &mut self.cores[ci];
                             c.counters.divsqrt_cont += free - t;
                             c.next_issue = free;
+                            if self.tracer.is_some() {
+                                self.trace_stall(
+                                    ci,
+                                    pc,
+                                    t,
+                                    StallCause::DivSqrtContention,
+                                    free - t,
+                                );
+                            }
                         }
                         Ok(done) => {
                             let c = &mut self.cores[ci];
@@ -324,6 +377,9 @@ impl Cluster {
                         let c = &mut self.cores[ci];
                         c.counters.fpu_cont += 1;
                         c.next_issue = t + 1;
+                        if self.tracer.is_some() {
+                            self.trace_stall(ci, pc, t, StallCause::FpuContention, 1);
+                        }
                         return Ok(());
                     }
                     let pipe = self.cfg.pipe as u64;
@@ -353,6 +409,9 @@ impl Cluster {
                     let c = &mut self.cores[ci];
                     c.counters.tcdm_cont += 1;
                     c.next_issue = t + 1;
+                    if self.tracer.is_some() {
+                        self.trace_stall(ci, pc, t, StallCause::TcdmContention, 1);
+                    }
                     return Ok(());
                 }
                 self.exec_amo(ci, op, rd, addr, rs, t);
@@ -393,6 +452,9 @@ impl Cluster {
                         c.counters.barrier_idle += wake - since;
                         c.state = CoreState::Running;
                         c.next_issue = wake;
+                        if let Some(tr) = self.tracer.as_deref_mut() {
+                            tr.on_wake(w, c.pc, TraceKind::EventWait, since, wake);
+                        }
                     }
                 }
             }
@@ -419,10 +481,16 @@ impl Cluster {
                                     c.counters.barrier_idle += wake - since;
                                     c.state = CoreState::Running;
                                     c.next_issue = wake;
+                                    if let Some(tr) = self.tracer.as_deref_mut() {
+                                        tr.on_wake(c.id, c.pc, TraceKind::Barrier, since, wake);
+                                    }
                                 }
                                 CoreState::Running if c.id == ci => {
                                     c.counters.barrier_idle += wake - (t + 1);
                                     c.next_issue = wake;
+                                    if let Some(tr) = self.tracer.as_deref_mut() {
+                                        tr.on_wake(c.id, c.pc, TraceKind::Barrier, t + 1, wake);
+                                    }
                                 }
                                 _ => {}
                             }
@@ -436,11 +504,19 @@ impl Cluster {
                 }
             }
             Insn::End => {
-                let c = &mut self.cores[ci];
-                c.counters.active += 1;
-                c.counters.instrs += 1;
-                c.counters.cycles = t;
-                c.state = CoreState::Done;
+                // `End` retires in zero cycles and deliberately does NOT
+                // count an active cycle, so `active + stalls == cycles`
+                // holds exactly per core (the trace layer reconciles on
+                // this invariant).
+                {
+                    let c = &mut self.cores[ci];
+                    c.counters.instrs += 1;
+                    c.counters.cycles = t;
+                    c.state = CoreState::Done;
+                }
+                if self.tracer.is_some() {
+                    self.trace_end(ci, t);
+                }
             }
         }
         Ok(())

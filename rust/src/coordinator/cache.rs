@@ -65,7 +65,14 @@ use crate::tuner::accuracy::ErrorStats;
 /// accuracy-only resolution must never be served where cycle-accurate
 /// timing was asked for, and vice versa). v3 rows are rejected by version
 /// and width — they degrade to a cold start (EXPERIMENTS.md §Backends).
-pub const ENGINE_VERSION: u32 = 4;
+///
+/// v5: `End` no longer counts an active cycle, closing the one-cycle gap
+/// the trace layer's reconciliation exposed (`active + stalls == cycles`
+/// now holds exactly per core). Cached `active` counters — and the
+/// activity-based power/energy figures derived from them — shift by one
+/// cycle per core, so v4 rows are rejected by version and re-simulated
+/// (EXPERIMENTS.md §Trace).
+pub const ENGINE_VERSION: u32 = 5;
 
 /// Execution fidelity of a resolved design-space point — which backend
 /// tier produced (or may serve) the measurement.
@@ -1115,6 +1122,32 @@ mod tests {
         assert!(!path2.exists());
         std::fs::remove_file(quarantine_sibling(&path2, 0)).unwrap();
         assert!(cache.is_empty());
+    }
+
+    /// The v5 bump (`End` stops counting an active cycle) retires v4 rows:
+    /// a well-formed pre-bump row loads zero entries — re-simulated, never
+    /// served with its off-by-one `active` — without quarantining the file
+    /// (the row is valid, just from an older engine).
+    #[test]
+    fn pre_v5_rows_are_retired_not_quarantined() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let v4_key = CacheKey {
+            workload: 0x01d_c0de,
+            cfg,
+            bench: Benchmark::Matmul,
+            variant: Variant::Scalar,
+            workers: cfg.cores,
+            fidelity: Fidelity::CycleAccurate,
+            engine_version: 4,
+        };
+        let path = tmp_path("cache-v4-row.csv");
+        let body = format!("{MAGIC}\n{}\n", encode_row(&v4_key, &sample_measurement(&cfg)));
+        std::fs::write(&path, &body).unwrap();
+        let cache = MeasurementCache::new();
+        assert_eq!(cache.load_csv(&path).unwrap(), 0, "v4 rows must not be served");
+        assert!(path.exists(), "a merely-stale file is not evidence — no quarantine");
+        assert!(cache.is_empty());
+        std::fs::remove_file(&path).ok();
     }
 
     /// Functional and cycle-accurate resolutions of the same point are

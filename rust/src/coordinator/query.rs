@@ -455,21 +455,6 @@ impl QueryEngine {
     pub fn one(&self, point: QueryPoint) -> Result<Measurement, QueryFailure> {
         Ok(self.query(&[point])?.pop().expect("one measurement"))
     }
-
-    /// Resolve a single point under a `workers`-core team.
-    #[deprecated(
-        since = "0.5.0",
-        note = "build the point explicitly: `one(QueryPoint::at(cfg, bench, variant, workers))`"
-    )]
-    pub fn one_at(
-        &self,
-        cfg: &ClusterConfig,
-        bench: Benchmark,
-        variant: Variant,
-        workers: usize,
-    ) -> Result<Measurement, QueryFailure> {
-        self.one(QueryPoint::at(cfg, bench, variant, workers))
-    }
 }
 
 /// Directory the CLI persists the cache under: `$TRANSPFP_CACHE_DIR`, or
@@ -576,12 +561,9 @@ mod tests {
             half.cycles,
             full.cycles
         );
-        // Warm re-resolution hits for every occupancy — including through
-        // the deprecated `one_at` shim, which must stay behaviorally
-        // identical to `one(QueryPoint::at(..))` until it is removed.
+        // Warm re-resolution hits for every occupancy.
         let st = engine.stats();
-        #[allow(deprecated)]
-        let warm = engine.one_at(&cfg, Benchmark::Fir, Variant::Scalar, 4).unwrap();
+        let warm = engine.one(QueryPoint::at(&cfg, Benchmark::Fir, Variant::Scalar, 4)).unwrap();
         assert_eq!(engine.stats().misses, st.misses, "occupancy re-query must not simulate");
         assert_eq!(warm.cycles, half.cycles);
     }

@@ -22,6 +22,20 @@ pub mod regs {
     pub const T0: Reg = 12;
 }
 
+/// A trace-region marker attached to an instruction index. Markers are
+/// metadata only: they are not instructions, cost no cycles, and are
+/// invisible to `DecodedProgram` (and to its fingerprint). The tracer
+/// fires a pc's markers when the instruction at that pc issues on a core.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MarkerOp {
+    /// Enter the named attribution region.
+    Enter(String),
+    /// Leave the region opened by the statically matching `Enter`. A core
+    /// that never entered it (the exit pc may be shared with a path that
+    /// branched over the region) ignores the fire.
+    Exit,
+}
+
 /// A finished SPMD program: every core executes the same instruction stream.
 #[derive(Debug, Clone)]
 pub struct Program {
@@ -29,6 +43,8 @@ pub struct Program {
     pub insns: Vec<Insn>,
     /// Human-readable name (benchmark + variant).
     pub name: String,
+    /// Trace-region markers, `(instruction index, op)` in emission order.
+    pub markers: Vec<(u32, MarkerOp)>,
 }
 
 impl Program {
@@ -52,6 +68,9 @@ pub struct ProgramBuilder {
     /// Open hardware loops: (index of HwLoop insn, body start).
     hwloop_stack: Vec<usize>,
     name: String,
+    markers: Vec<(u32, MarkerOp)>,
+    /// Open `region_enter` calls, for balance checking at build time.
+    region_stack: Vec<String>,
 }
 
 impl ProgramBuilder {
@@ -63,6 +82,8 @@ impl ProgramBuilder {
             fixups: Vec::new(),
             hwloop_stack: Vec::new(),
             name: name.into(),
+            markers: Vec::new(),
+            region_stack: Vec::new(),
         }
     }
 
@@ -309,6 +330,27 @@ impl ProgramBuilder {
         self.push(Insn::End)
     }
 
+    // ---------------------------------------------------------- trace regions
+
+    /// Open a named trace-attribution region at the *next* instruction:
+    /// the region begins when that instruction issues. Free — markers are
+    /// metadata, not instructions. Must be closed with
+    /// [`Self::region_exit`] on the same control path; regions nest.
+    pub fn region_enter(&mut self, name: &str) -> &mut Self {
+        self.region_stack.push(name.to_string());
+        self.markers.push((self.here(), MarkerOp::Enter(name.to_string())));
+        self
+    }
+
+    /// Close the innermost open region at the *next* instruction: cycles up
+    /// to (but not including) that instruction's issue stay attributed to
+    /// the region.
+    pub fn region_exit(&mut self) -> &mut Self {
+        assert!(self.region_stack.pop().is_some(), "region_exit without region_enter");
+        self.markers.push((self.here(), MarkerOp::Exit));
+        self
+    }
+
     // ---------------------------------------------------------- FP
 
     /// Generic FP op.
@@ -426,6 +468,11 @@ impl ProgramBuilder {
     /// Resolve labels and produce the program.
     pub fn build(mut self) -> Program {
         assert!(self.hwloop_stack.is_empty(), "unclosed hardware loop");
+        assert!(
+            self.region_stack.is_empty(),
+            "unclosed trace regions: {:?}",
+            self.region_stack
+        );
         for (idx, label) in std::mem::take(&mut self.fixups) {
             let target = *self
                 .labels
@@ -440,7 +487,13 @@ impl ProgramBuilder {
         if !matches!(self.insns.last(), Some(Insn::End)) {
             self.insns.push(Insn::End);
         }
-        Program { insns: self.insns, name: self.name }
+        // Every marker must sit on a real instruction (a `region_exit`
+        // right before the auto-appended `End` lands on the `End` itself).
+        let len = self.insns.len() as u32;
+        for (pc, op) in &self.markers {
+            assert!(*pc < len, "marker {op:?} at pc {pc} past program end {len}");
+        }
+        Program { insns: self.insns, name: self.name, markers: self.markers }
     }
 }
 
@@ -496,5 +549,38 @@ mod tests {
         b.li(1, 1);
         let p = b.build();
         assert!(matches!(p.insns.last(), Some(Insn::End)));
+    }
+
+    #[test]
+    fn region_markers_attach_to_next_insn() {
+        let mut b = ProgramBuilder::new("t");
+        b.li(1, 1);
+        b.region_enter("hot");
+        b.addi(1, 1, 1);
+        b.addi(1, 1, 2);
+        b.region_exit();
+        // Exit marker lands on the auto-appended End.
+        let p = b.build();
+        assert_eq!(p.markers.len(), 2);
+        assert_eq!(p.markers[0], (1, MarkerOp::Enter("hot".to_string())));
+        assert_eq!(p.markers[1], (3, MarkerOp::Exit));
+        assert!(matches!(p.insns[3], Insn::End));
+    }
+
+    #[test]
+    #[should_panic(expected = "unclosed trace regions")]
+    fn unbalanced_region_panics() {
+        let mut b = ProgramBuilder::new("t");
+        b.region_enter("dangling");
+        b.li(1, 1);
+        b.build();
+    }
+
+    #[test]
+    #[should_panic(expected = "region_exit without region_enter")]
+    fn exit_without_enter_panics() {
+        let mut b = ProgramBuilder::new("t");
+        b.li(1, 1);
+        b.region_exit();
     }
 }

@@ -8,6 +8,6 @@ pub mod builder;
 pub mod decoded;
 pub mod insn;
 
-pub use builder::{regs, Program, ProgramBuilder};
+pub use builder::{regs, MarkerOp, Program, ProgramBuilder};
 pub use decoded::{DecodedInsn, DecodedProgram, OpClass};
 pub use insn::{AluOp, AmoOp, BrCond, FpOp, Insn, MemSize, Operand, Reg};

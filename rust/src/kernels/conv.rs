@@ -303,6 +303,9 @@ pub fn build_tiled(cfg: &ClusterConfig, w: usize, h: usize, tiles: usize) -> Wor
                 team::dma_copy(p, 1, 2, src, ibuf[(t + 1) % 2], in_band_words);
             });
         }
+        // Band compute region: setup through the joining barrier, one
+        // attribution row per band per core.
+        p.region_enter(&format!("band{t}"));
         p.li(15, ibuf[buf]);
         p.li(17, obuf[buf]);
         p.li(24, band_rows as u32);
@@ -337,6 +340,7 @@ pub fn build_tiled(cfg: &ClusterConfig, w: usize, h: usize, tiles: usize) -> Wor
             },
         );
         p.barrier(); // band compute complete
+        p.region_exit();
         team::master_only(&mut p, &format!("wb{t}"), &mut |p| {
             let dst = out_l2 + (t * band_rows * ow * 4) as u32;
             team::dma_copy(p, 1, 2, obuf[buf], dst, out_band_words);

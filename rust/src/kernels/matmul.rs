@@ -312,7 +312,10 @@ pub fn build_tiled(cfg: &ClusterConfig, n: usize, tiles: usize) -> Workload {
                 team::dma_copy(p, 1, 2, src, abuf[(t + 1) % 2], tile_words);
             });
         }
-        // Compute tile t: rows split across the team by the runtime.
+        // Compute tile t: rows split across the team by the runtime. The
+        // region spans setup through the joining barrier, so the
+        // attribution report shows per-tile compute + imbalance cost.
+        p.region_enter(&format!("tile{t}"));
         p.li(15, abuf[buf]);
         p.li(17, cbuf[buf]);
         p.li(24, tile_rows as u32);
@@ -347,6 +350,7 @@ pub fn build_tiled(cfg: &ClusterConfig, n: usize, tiles: usize) -> Workload {
             },
         );
         p.barrier(); // tile compute complete
+        p.region_exit();
         // Master: write the C tile back, drain the channel (writeback +
         // any prefetch), and release the team for the next tile.
         team::master_only(&mut p, &format!("wb{t}"), &mut |p| {

@@ -280,6 +280,24 @@ impl Workload {
         Ok((stats, out))
     }
 
+    /// Run with a cycle-attribution tracer attached ([`crate::trace`]):
+    /// returns the stats, the outputs, and the detached tracer holding the
+    /// trace database and region attribution state. `transpfp trace` and
+    /// the serve `trace` endpoint route through this.
+    pub fn run_traced(
+        &self,
+        cfg: &ClusterConfig,
+        workers: usize,
+        engine: Engine,
+        tcfg: crate::trace::TraceConfig,
+    ) -> Result<(RunStats, Vec<f64>, Box<crate::trace::Tracer>), RunError> {
+        let mut cl = Cluster::new(*cfg, self.program.clone());
+        cl.attach_tracer(tcfg);
+        let (stats, out) = self.run_in_with(&mut cl, workers, engine)?;
+        let tracer = cl.take_tracer().expect("tracer attached above");
+        Ok((stats, out, tracer))
+    }
+
     /// Verify `outputs` against the golden values.
     pub fn verify(&self, outputs: &[f64]) -> Result<(), String> {
         if outputs.len() != self.expected.len() {

@@ -25,7 +25,11 @@
 //!   the serve wire protocol parse with;
 //! * [`server`] — `transpfp serve`, the concurrent design-space query
 //!   service (newline-delimited protocol, single-flight dedup,
-//!   per-endpoint metrics).
+//!   per-endpoint metrics);
+//! * [`trace`] — opt-in cycle-attribution tracing: per-core trace
+//!   database, region markers, attribution reports that reconcile exactly
+//!   with `RunStats`, and CSV / chrome://tracing exporters
+//!   (`transpfp trace`).
 //!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
@@ -42,6 +46,7 @@ pub mod report;
 pub mod runtime;
 pub mod server;
 pub mod testutil;
+pub mod trace;
 pub mod transfp;
 pub mod tuner;
 
@@ -55,5 +60,9 @@ pub mod prelude {
     pub use crate::coordinator::{points, Measurement, QueryEngine, QueryFailure, QueryPoint};
     pub use crate::kernels::{Benchmark, Variant};
     pub use crate::server::{Reply, Request, Selector, Server};
+    pub use crate::trace::{
+        AttributionReport, StallCause, TraceConfig, TraceDb, TraceKind, TraceRecord, TraceSink,
+        Tracer,
+    };
     pub use crate::tuner::Probe;
 }

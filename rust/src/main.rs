@@ -332,6 +332,24 @@ fn dispatch(cli: &Cli) -> ExitCode {
                 }
             }
         }
+        "trace" => {
+            if args.len() < 3 {
+                eprintln!(
+                    "usage: transpfp trace <cfg> <bench> [--variant <v>] [--tiles <t>] \
+                     [--region <name>] [--out <path>] [--format csv|chrome]"
+                );
+                return ExitCode::FAILURE;
+            }
+            let Some(cfg) = ClusterConfig::parse(args[1]) else {
+                eprintln!("bad config mnemonic {}", args[1]);
+                return ExitCode::FAILURE;
+            };
+            let Some(bench) = Benchmark::parse(args[2]) else {
+                eprintln!("unknown benchmark {}", args[2]);
+                return ExitCode::FAILURE;
+            };
+            return trace_cmd(cli, &cfg, bench);
+        }
         "serve" => return serve(cli),
         other => {
             eprintln!("unknown command {other}\n\n{}", usage());
@@ -339,6 +357,102 @@ fn dispatch(cli: &Cli) -> ExitCode {
         }
     }
     ExitCode::SUCCESS
+}
+
+/// `transpfp trace`: run one kernel on the event engine with the tracer
+/// attached, print the cycle-attribution report (reconciled exactly against
+/// the run's counters), and export the raw record stream under
+/// `artifacts/trace/` (or `--out`).
+fn trace_cmd(cli: &Cli, cfg: &ClusterConfig, bench: Benchmark) -> ExitCode {
+    use transpfp::cli::TraceFormat;
+    use transpfp::cluster::Engine;
+    use transpfp::kernels::Variant;
+    use transpfp::trace::{export, TraceConfig};
+
+    let variant = cli.variant.unwrap_or(Variant::Scalar);
+    let w = if let Some(tiles) = cli.tiles {
+        if variant.label() != "scalar" {
+            eprintln!("--tiles supports the scalar variant only");
+            return ExitCode::FAILURE;
+        }
+        let Some(w) = bench.build_tiled(cfg, tiles) else {
+            eprintln!(
+                "--tiles supports the streaming kernels (MATMUL, CONV), not {}",
+                bench.name()
+            );
+            return ExitCode::FAILURE;
+        };
+        w
+    } else {
+        bench.build(variant, cfg)
+    };
+    let tcfg = TraceConfig::default();
+    let (stats, out, tracer) = match w.run_traced(cfg, cfg.cores, Engine::Event, tcfg) {
+        Ok(r) => r,
+        Err(e) => return fail(&e),
+    };
+    let verified = w.verify(&out).is_ok();
+    let report = tracer.report();
+    // Attribution is built from counter snapshot diffs, so it must agree
+    // with the run's own counters to the last cycle.
+    if let Err(e) = report.reconcile(&stats) {
+        eprintln!("trace: attribution does not reconcile with run counters: {e}");
+        return ExitCode::FAILURE;
+    }
+    if cli.csv {
+        print!("{}", report.to_csv());
+    } else {
+        print!("{}", report.table().render());
+    }
+    if let Some(region) = &cli.region {
+        if !report.regions().contains(&region.as_str()) {
+            eprintln!(
+                "trace: no region named `{region}` (have: {})",
+                report.regions().join(", ")
+            );
+            return ExitCode::FAILURE;
+        }
+        if !cli.csv {
+            println!("region {region} per core:");
+        }
+        if cli.csv {
+            print!("{}", report.region_table(region).to_csv());
+        } else {
+            print!("{}", report.region_table(region).render());
+        }
+    }
+    eprintln!("trace: {}", report.summary_line());
+    eprintln!(
+        "trace: records retained {} dropped {} (ring {} / core)",
+        tracer.db().total_len(),
+        tracer.db().total_dropped(),
+        tcfg.ring_capacity
+    );
+    eprintln!("trace: verified {verified}");
+    let format = cli.format.unwrap_or_default();
+    let contents = match format {
+        TraceFormat::Csv => export::records_csv(tracer.db(), tracer.region_names()),
+        TraceFormat::Chrome => export::chrome_json(tracer.db(), tracer.region_names(), &w.name),
+    };
+    let written = match &cli.out {
+        Some(path) => std::fs::write(path, &contents).map(|()| std::path::PathBuf::from(path)),
+        None => {
+            let base = format!("{}-{}", bench.name().to_lowercase(), variant.label());
+            export::write_artifact(&export::default_dir(), &base, format.ext(), &contents)
+        }
+    };
+    match written {
+        Ok(p) => eprintln!("trace: wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("trace: could not write export: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    if verified {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
 }
 
 /// Execute a typed service request on the CLI, with the CLI's reporting
@@ -411,7 +525,7 @@ fn run_request(cli: &Cli, req: &Request) -> ExitCode {
             }
         }
         // Wire-only endpoints; the CLI dispatcher never builds these.
-        Request::InjectStatus | Request::Stats | Request::Ping => {
+        Request::InjectStatus | Request::Stats | Request::Trace | Request::Ping => {
             eprintln!("`{}` is a serve-only endpoint; send it to a running daemon", req.to_line());
             ExitCode::FAILURE
         }

@@ -114,6 +114,10 @@ pub fn parallel_for(
     let tag = format!("pf{}", p.here());
     let done = format!("{tag}_done");
     let head = format!("{tag}_head");
+    // Every core executes the first scheduler instruction and the first
+    // instruction past `done` under every policy, so the trace region
+    // brackets the whole work-shared loop on every lane.
+    p.region_enter(&tag);
     match sched {
         Schedule::Static => {
             // chunk = ceil(n / W); idx = id·chunk; limit = min(idx+chunk, n)
@@ -185,6 +189,7 @@ pub fn parallel_for(
         }
     }
     p.label(&done);
+    p.region_exit();
 }
 
 #[cfg(test)]

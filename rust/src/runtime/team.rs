@@ -115,10 +115,16 @@ pub fn dma_copy(p: &mut ProgramBuilder, t0: Reg, t1: Reg, src: u32, dst: u32, wo
 /// workers wait on [`EV_TILE_READY`] instead.
 pub fn dma_wait(p: &mut ProgramBuilder, t0: Reg, t1: Reg) {
     let tag = format!("dw{}", p.here());
+    // All spins share one "dma-wait" trace region, so the attribution
+    // report's DMA-overlap efficiency can sum every wait in one row. The
+    // exit lands on the caller's next instruction; cores that branched over
+    // the spin ignore it (exits only pop a matching region).
+    p.region_enter("dma-wait");
     p.li(t0, DMA_BASE);
     p.label(&tag);
     p.lw(t1, t0, dma_reg::STATUS as i32);
     p.bne(t1, regs::ZERO, &tag);
+    p.region_exit();
 }
 
 /// Emit the master-side "tile ready" signal: raise [`EV_TILE_READY`] for

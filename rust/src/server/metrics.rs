@@ -22,18 +22,20 @@ pub enum Endpoint {
     Pareto,
     InjectStatus,
     Stats,
+    Trace,
     Ping,
     Invalid,
 }
 
 impl Endpoint {
     /// Every endpoint, in metrics-table order.
-    pub const ALL: [Endpoint; 7] = [
+    pub const ALL: [Endpoint; 8] = [
         Endpoint::Query,
         Endpoint::Tune,
         Endpoint::Pareto,
         Endpoint::InjectStatus,
         Endpoint::Stats,
+        Endpoint::Trace,
         Endpoint::Ping,
         Endpoint::Invalid,
     ];
@@ -46,6 +48,7 @@ impl Endpoint {
             Endpoint::Pareto => "pareto",
             Endpoint::InjectStatus => "inject-status",
             Endpoint::Stats => "stats",
+            Endpoint::Trace => "trace",
             Endpoint::Ping => "ping",
             Endpoint::Invalid => "invalid",
         }
@@ -59,6 +62,7 @@ impl Endpoint {
             Request::Pareto { .. } => Endpoint::Pareto,
             Request::InjectStatus => Endpoint::InjectStatus,
             Request::Stats => Endpoint::Stats,
+            Request::Trace => Endpoint::Trace,
             Request::Ping => Endpoint::Ping,
         }
     }
@@ -70,8 +74,9 @@ impl Endpoint {
             Endpoint::Pareto => 2,
             Endpoint::InjectStatus => 3,
             Endpoint::Stats => 4,
-            Endpoint::Ping => 5,
-            Endpoint::Invalid => 6,
+            Endpoint::Trace => 5,
+            Endpoint::Ping => 6,
+            Endpoint::Invalid => 7,
         }
     }
 }
@@ -98,7 +103,7 @@ pub struct MetricsTotals {
 /// All service counters; shared by every connection thread.
 #[derive(Default)]
 pub struct ServerMetrics {
-    per: [EndpointStats; 7],
+    per: [EndpointStats; 8],
     deadlocks: AtomicU64,
     timeouts: AtomicU64,
     faults: AtomicU64,

@@ -51,6 +51,8 @@ pub enum Request {
     InjectStatus,
     /// Engine + cache + request counters.
     Stats,
+    /// Recent per-request spans (queue/plan/simulate/serialize timings).
+    Trace,
     /// Liveness check.
     Ping,
 }
@@ -105,6 +107,7 @@ impl Request {
             Request::Pareto { acc: false } => "pareto".to_string(),
             Request::InjectStatus => "inject-status".to_string(),
             Request::Stats => "stats".to_string(),
+            Request::Trace => "trace".to_string(),
             Request::Ping => "ping".to_string(),
         }
     }
@@ -124,7 +127,7 @@ impl Request {
         let spec = cli::command_spec(first).filter(|c| c.wire).ok_or_else(|| {
             format!(
                 "`{first}` is not a service endpoint (expected query, tune, pareto, \
-                 inject-status, stats or ping)"
+                 inject-status, stats, trace or ping)"
             )
         })?;
         for t in &tokens[1..] {
@@ -160,6 +163,7 @@ mod tests {
             Request::Pareto { acc: true },
             Request::InjectStatus,
             Request::Stats,
+            Request::Trace,
             Request::Ping,
         ];
         for r in reqs {

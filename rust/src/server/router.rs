@@ -14,19 +14,86 @@
 //! Failure never tears down a connection: parse errors, oversized lines,
 //! bad UTF-8 and structured simulation failures all become `err` frames and
 //! the loop keeps reading.
+//!
+//! Every handled request also leaves a [`RequestSpan`] in a bounded ring —
+//! phase timings (queued / planned / simulated / serialized), the plan's
+//! cache outcome, and an aggregate sim-run attribution summary derived from
+//! the resolved measurements' counters. The `trace` endpoint lists the
+//! recent spans; `stats` reports how many are retained.
 
+use std::collections::VecDeque;
 use std::io::{self, BufRead, Write};
+use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::cluster::counters::CoreCounters;
 use crate::coordinator::{
-    accuracy_pareto_table, measurements_table, pareto_table, Begin, QueryEngine, QueryFailure,
-    SingleFlight,
+    accuracy_pareto_table, measurements_table, pareto_table, Begin, Measurement, QueryEngine,
+    QueryFailure, SingleFlight,
 };
 use crate::report::Table;
 use crate::server::codec::{read_line_bounded, write_reply, LineIn, Reply, MAX_LINE};
 use crate::server::metrics::{Endpoint, ServerMetrics};
 use crate::server::request::Request;
 use crate::tuner;
+
+/// Spans retained for the `trace` endpoint (newest evicts oldest).
+pub const SPAN_CAP: usize = 64;
+
+/// One handled request's observability span: what ran, how long each phase
+/// took, what the cache contributed, and — when the request resolved
+/// measurements — a one-line attribution summary of the simulated work.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestSpan {
+    /// Canonical wire line of the request (the raw line for invalid ones).
+    pub line: String,
+    /// Endpoint name ([`Endpoint::name`], `invalid` for unparsable lines).
+    pub endpoint: &'static str,
+    /// The reply was an `ok` frame.
+    pub ok: bool,
+    /// Time spent before routing began (wire parse), µs.
+    pub queued_us: u64,
+    /// Cache planning (dedup + fingerprint + lookup), µs.
+    pub planned_us: u64,
+    /// Simulation / search execution, µs.
+    pub simulated_us: u64,
+    /// Reply rendering, µs.
+    pub serialized_us: u64,
+    /// Distinct points the plan resolved from the cache / simulated.
+    pub hits: u64,
+    pub misses: u64,
+    /// Aggregate sim-run attribution (active share + dominant stall),
+    /// `-` when the request resolved no measurements.
+    pub attribution: String,
+}
+
+/// Per-request phase timings and attribution, filled in by [`Server::route`].
+#[derive(Default)]
+struct Phases {
+    planned_ns: u64,
+    simulated_ns: u64,
+    serialized_ns: u64,
+    attribution: Option<String>,
+}
+
+/// One-line attribution summary of a batch of resolved measurements:
+/// aggregate active share and the dominant stall cause across every point.
+/// Uses the measurements' counter aggregates — no re-simulation.
+fn attribution_summary(ms: &[Measurement]) -> Option<String> {
+    let mut agg = CoreCounters::default();
+    for m in ms {
+        agg.accumulate(&m.agg);
+    }
+    if agg.cycles == 0 {
+        // Functional-fidelity measurements carry no timing.
+        return None;
+    }
+    let active_pct = 100.0 * agg.active as f64 / agg.cycles as f64;
+    let (top, top_cycles) =
+        agg.stall_breakdown().into_iter().max_by_key(|&(_, n)| n).expect("non-empty taxonomy");
+    let top_pct = 100.0 * top_cycles as f64 / agg.cycles as f64;
+    Some(format!("{} pt(s) · active {active_pct:.1}% · top stall {top} {top_pct:.1}%", ms.len()))
+}
 
 /// The shared service state. Cheap to share: all interior mutability is
 /// atomics and short-held locks.
@@ -35,6 +102,8 @@ pub struct Server {
     metrics: ServerMetrics,
     req_flight: SingleFlight<String, Reply>,
     max_line: usize,
+    /// Recent request spans, newest last ([`SPAN_CAP`] retained).
+    spans: Mutex<VecDeque<RequestSpan>>,
 }
 
 impl Server {
@@ -45,6 +114,7 @@ impl Server {
             metrics: ServerMetrics::new(),
             req_flight: SingleFlight::new(),
             max_line: MAX_LINE,
+            spans: Mutex::new(VecDeque::with_capacity(SPAN_CAP)),
         }
     }
 
@@ -66,12 +136,30 @@ impl Server {
         self.max_line
     }
 
-    /// Parse and handle one wire line.
+    /// Parse and handle one wire line. Parse time is the span's `queued`
+    /// phase; unparsable lines leave an `invalid` span so bad traffic is
+    /// visible in `trace` output too.
     pub fn handle_line(&self, line: &str) -> Reply {
+        let start = Instant::now();
         match Request::parse_line(line) {
-            Ok(req) => self.handle(&req),
+            Ok(req) => {
+                let queued_ns = elapsed_ns(start);
+                self.handle_queued(&req, queued_ns)
+            }
             Err(msg) => {
                 self.metrics.record(Endpoint::Invalid, false, 0, 0, 0);
+                self.push_span(RequestSpan {
+                    line: line.to_string(),
+                    endpoint: Endpoint::Invalid.name(),
+                    ok: false,
+                    queued_us: elapsed_ns(start) / 1_000,
+                    planned_us: 0,
+                    simulated_us: 0,
+                    serialized_us: 0,
+                    hits: 0,
+                    misses: 0,
+                    attribution: "-".to_string(),
+                });
                 Reply::err("bad-request", msg)
             }
         }
@@ -79,39 +167,95 @@ impl Server {
 
     /// Handle one typed request, recording latency and cache traffic.
     pub fn handle(&self, req: &Request) -> Reply {
+        self.handle_queued(req, 0)
+    }
+
+    fn handle_queued(&self, req: &Request, queued_ns: u64) -> Reply {
         let start = Instant::now();
-        let (reply, hits, misses) = self.route(req);
-        let latency_ns = u64::try_from(start.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        let mut ph = Phases::default();
+        let (reply, hits, misses) = self.route(req, &mut ph);
+        let latency_ns = elapsed_ns(start);
         self.metrics.record(Endpoint::of(req), reply.is_ok(), hits, misses, latency_ns);
+        self.push_span(RequestSpan {
+            line: req.to_line(),
+            endpoint: Endpoint::of(req).name(),
+            ok: reply.is_ok(),
+            queued_us: queued_ns / 1_000,
+            planned_us: ph.planned_ns / 1_000,
+            simulated_us: ph.simulated_ns / 1_000,
+            serialized_us: ph.serialized_ns / 1_000,
+            hits,
+            misses,
+            attribution: ph.attribution.unwrap_or_else(|| "-".to_string()),
+        });
         reply
     }
 
+    fn push_span(&self, span: RequestSpan) {
+        let mut spans = self.spans.lock().unwrap();
+        if spans.len() == SPAN_CAP {
+            spans.pop_front();
+        }
+        spans.push_back(span);
+    }
+
+    /// Recent request spans, oldest first.
+    pub fn recent_spans(&self) -> Vec<RequestSpan> {
+        self.spans.lock().unwrap().iter().cloned().collect()
+    }
+
     /// Route a request to the engine. Returns the reply plus the cache
-    /// hits/misses its plan contributed (zero for non-query endpoints).
-    fn route(&self, req: &Request) -> (Reply, u64, u64) {
+    /// hits/misses its plan contributed (zero for non-query endpoints);
+    /// phase timings land in `ph`.
+    fn route(&self, req: &Request, ph: &mut Phases) -> (Reply, u64, u64) {
         match req {
             Request::Ping => (Reply::rows(vec!["pong".to_string()]), 0, 0),
-            Request::Stats => (Reply::rows(csv_rows(&self.stats_table())), 0, 0),
+            Request::Stats => {
+                let t0 = Instant::now();
+                let reply = Reply::rows(csv_rows(&self.stats_table()));
+                ph.serialized_ns = elapsed_ns(t0);
+                (reply, 0, 0)
+            }
+            Request::Trace => {
+                let t0 = Instant::now();
+                let reply = Reply::rows(csv_rows(&self.trace_table()));
+                ph.serialized_ns = elapsed_ns(t0);
+                (reply, 0, 0)
+            }
             Request::InjectStatus => {
+                let t0 = Instant::now();
                 let mut t = Table::new(vec!["class", "count"]);
                 for (class, count) in self.metrics.failure_counts() {
                     t.row(vec![class.to_string(), count.to_string()]);
                 }
-                (Reply::rows(csv_rows(&t)), 0, 0)
+                let reply = Reply::rows(csv_rows(&t));
+                ph.serialized_ns = elapsed_ns(t0);
+                (reply, 0, 0)
             }
             Request::Query { .. } => {
                 let pts = req.query_points().expect("query request");
+                let t0 = Instant::now();
                 let plan = self.engine.plan(&pts);
+                ph.planned_ns = elapsed_ns(t0);
                 let (hits, misses) = (plan.hit_count() as u64, plan.miss_count() as u64);
-                let reply = match self.engine.execute(plan) {
-                    Ok(ms) => Reply::rows(csv_rows(&measurements_table(&ms))),
+                let t1 = Instant::now();
+                let executed = self.engine.execute(plan);
+                ph.simulated_ns = elapsed_ns(t1);
+                let t2 = Instant::now();
+                let reply = match executed {
+                    Ok(ms) => {
+                        ph.attribution = attribution_summary(&ms);
+                        Reply::rows(csv_rows(&measurements_table(&ms)))
+                    }
                     Err(f) => self.query_failure("query-failed", f),
                 };
+                ph.serialized_ns = elapsed_ns(t2);
                 (reply, hits, misses)
             }
             Request::Tune { budget, probe, .. } => {
                 let (budget, probe) = (*budget, *probe);
                 let cfgs = req.tune_configs().expect("tune request");
+                let t0 = Instant::now();
                 let reply = self.coalesced(req.to_line(), || {
                     let mut reports = Vec::with_capacity(cfgs.len());
                     for cfg in &cfgs {
@@ -122,10 +266,12 @@ impl Server {
                     }
                     Reply::rows(csv_rows(&tuner::tune_table(&reports)))
                 });
+                ph.simulated_ns = elapsed_ns(t0);
                 (reply, 0, 0)
             }
             Request::Pareto { acc } => {
                 let acc = *acc;
+                let t0 = Instant::now();
                 let reply = self.coalesced(req.to_line(), || {
                     let table = if acc {
                         accuracy_pareto_table(self.engine)
@@ -137,9 +283,43 @@ impl Server {
                         Err(f) => self.query_failure("pareto-failed", f),
                     }
                 });
+                ph.simulated_ns = elapsed_ns(t0);
                 (reply, 0, 0)
             }
         }
+    }
+
+    /// The `trace` endpoint payload: one row per retained span, oldest
+    /// first. Columns mirror [`RequestSpan`]; the request line goes last so
+    /// its spaces can't be confused with column separators.
+    fn trace_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "endpoint",
+            "ok",
+            "queued_us",
+            "planned_us",
+            "simulated_us",
+            "serialized_us",
+            "hits",
+            "misses",
+            "attribution",
+            "request",
+        ]);
+        for s in self.recent_spans() {
+            t.row(vec![
+                s.endpoint.to_string(),
+                s.ok.to_string(),
+                s.queued_us.to_string(),
+                s.planned_us.to_string(),
+                s.simulated_us.to_string(),
+                s.serialized_us.to_string(),
+                s.hits.to_string(),
+                s.misses.to_string(),
+                s.attribution,
+                s.line,
+            ]);
+        }
+        t
     }
 
     /// Render a structured query failure, bucketing every per-point error
@@ -184,6 +364,7 @@ impl Server {
             ("request_errors", totals.errors),
             ("plan_cache_hits", totals.cache_hits),
             ("plan_cache_misses", totals.cache_misses),
+            ("trace_spans", self.spans.lock().unwrap().len() as u64),
         ] {
             t.row(vec![k.to_string(), v.to_string()]);
         }
@@ -245,6 +426,10 @@ pub struct PipeSummary {
 
 fn csv_rows(t: &Table) -> Vec<String> {
     t.to_csv().lines().map(str::to_string).collect()
+}
+
+fn elapsed_ns(since: Instant) -> u64 {
+    u64::try_from(since.elapsed().as_nanos()).unwrap_or(u64::MAX)
 }
 
 #[cfg(test)]
@@ -345,6 +530,62 @@ mod tests {
         assert!(heads[0].starts_with("err oversized"));
         assert!(heads[1].starts_with("err bad-utf8"));
         assert!(heads[2].starts_with("ok 1") && heads[3].starts_with("ok 1"));
+    }
+
+    #[test]
+    fn trace_endpoint_lists_recent_spans_with_phase_timings() {
+        let server = leaked_server();
+        // A cold query (simulates), a warm query (all hits), and a bad line.
+        assert!(server.handle_line("query 8c2f0p FIR scalar").is_ok());
+        assert!(server.handle_line("query 8c2f0p FIR scalar").is_ok());
+        assert!(!server.handle_line("query bad FIR scalar").is_ok());
+
+        let spans = server.recent_spans();
+        assert_eq!(spans.len(), 3);
+        let cold = &spans[0];
+        assert_eq!(cold.endpoint, "query");
+        assert!(cold.ok);
+        assert_eq!((cold.hits, cold.misses), (0, 1));
+        assert!(cold.simulated_us > 0, "cold query must show simulate time");
+        assert!(
+            cold.attribution.contains("active") && cold.attribution.contains("top stall"),
+            "cold query span carries the sim-run attribution: {}",
+            cold.attribution
+        );
+        let warm = &spans[1];
+        assert_eq!((warm.hits, warm.misses), (1, 0));
+        assert!(warm.attribution.contains("1 pt(s)"), "warm hits still attribute: {}", warm.attribution);
+        let bad = &spans[2];
+        assert_eq!(bad.endpoint, "invalid");
+        assert!(!bad.ok && bad.attribution == "-");
+
+        // The wire endpoint renders the same spans (plus its own afterwards).
+        let Reply::Ok(rows) = server.handle_line("trace") else {
+            panic!("trace must succeed");
+        };
+        assert!(rows[0].starts_with("endpoint,ok,queued_us,planned_us,simulated_us"));
+        assert_eq!(rows.len(), 1 + 3, "header + the three spans handled before this request");
+        assert!(rows[1].contains("query 8c2f0p FIR scalar"));
+        // The trace request itself is now a span too.
+        assert_eq!(server.recent_spans().len(), 4);
+        assert_eq!(server.recent_spans()[3].endpoint, "trace");
+    }
+
+    #[test]
+    fn span_ring_is_bounded() {
+        let server = leaked_server();
+        for _ in 0..(SPAN_CAP + 10) {
+            assert!(server.handle_line("ping").is_ok());
+        }
+        assert_eq!(server.recent_spans().len(), SPAN_CAP);
+        // stats reports the retained count.
+        let Reply::Ok(rows) = server.handle_line("stats") else {
+            panic!("stats must succeed");
+        };
+        assert!(
+            rows.iter().any(|r| r == &format!("trace_spans,{SPAN_CAP}")),
+            "stats must expose the span count: {rows:?}"
+        );
     }
 
     #[test]

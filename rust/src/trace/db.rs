@@ -1,0 +1,290 @@
+//! Trace database: compact per-core event records in bounded rings.
+//!
+//! Records are appended by the issue engines through the [`TraceSink`]
+//! trait; the [`TraceDb`] keeps one bounded ring per core so a trace can
+//! never grow without bound (a full ring drops its oldest records and
+//! counts the drops). Records are 24-byte `Copy` values — cycle, pc, kind,
+//! argument — small enough to trace multi-million-cycle runs.
+//!
+//! The differential wall (`tests/differential.rs`) asserts that both timed
+//! engines emit **bit-identical** streams: same records, same cycles, same
+//! order after a per-core sort.
+
+use std::collections::VecDeque;
+
+/// Why an issue attempt lost cycles. One variant per stall counter of
+/// [`crate::cluster::counters::CoreCounters`], so every categorized stall
+/// cycle has a trace-level cause.
+///
+/// `BarrierIdle` exists for the attribution taxonomy but never appears in a
+/// [`TraceKind::Stall`] record: sleep time is traced with the dedicated
+/// [`TraceKind::EventWait`] / [`TraceKind::Barrier`] kinds (whose `arg`
+/// carries the idle amount, mirroring the `barrier_idle` counter bump).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum StallCause {
+    /// Lost a TCDM bank grant to another core (`tcdm_cont`).
+    TcdmContention,
+    /// Blocked on an L2 access latency (`l2_stall`).
+    L2,
+    /// Waiting for an in-flight FPU / DIV-SQRT result (`fpu_stall`).
+    FpuLatency,
+    /// Lost FPU-port arbitration to another core (`fpu_cont`).
+    FpuContention,
+    /// Waiting for the shared DIV-SQRT block (`divsqrt_cont`).
+    DivSqrtContention,
+    /// Write-back port conflict, FP result vs int/LSU write (`wb_stall`).
+    Writeback,
+    /// Load-use interlock on an integer load (`load_stall`).
+    LoadUse,
+    /// Instruction-cache miss (`icache_stall`).
+    Icache,
+    /// Asleep at the event unit (`barrier_idle`) — see the note above.
+    BarrierIdle,
+    /// Taken-branch flush bubbles (`branch_stall`).
+    Branch,
+}
+
+impl StallCause {
+    /// All causes, in `CoreCounters` field order.
+    pub const ALL: [StallCause; 10] = [
+        StallCause::TcdmContention,
+        StallCause::L2,
+        StallCause::FpuLatency,
+        StallCause::FpuContention,
+        StallCause::DivSqrtContention,
+        StallCause::Writeback,
+        StallCause::LoadUse,
+        StallCause::Icache,
+        StallCause::BarrierIdle,
+        StallCause::Branch,
+    ];
+
+    /// The matching `CoreCounters` field name (stable; used in CSV exports
+    /// and report columns).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StallCause::TcdmContention => "tcdm_cont",
+            StallCause::L2 => "l2_stall",
+            StallCause::FpuLatency => "fpu_stall",
+            StallCause::FpuContention => "fpu_cont",
+            StallCause::DivSqrtContention => "divsqrt_cont",
+            StallCause::Writeback => "wb_stall",
+            StallCause::LoadUse => "load_stall",
+            StallCause::Icache => "icache_stall",
+            StallCause::BarrierIdle => "barrier_idle",
+            StallCause::Branch => "branch_stall",
+        }
+    }
+}
+
+/// What a [`TraceRecord`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TraceKind {
+    /// An issue attempt that reached class dispatch. An instruction that
+    /// lost arbitration `k` times appears as `k+1` `Issue` records with `k`
+    /// `Stall` records interleaved — a faithful per-attempt trace.
+    Issue,
+    /// Lost cycles with their cause; `arg` = the bulk amount (matches the
+    /// counter bump exactly).
+    Stall(StallCause),
+    /// Slept on a software event line; `cycle` = sleep start, `arg` = idle
+    /// cycles until the wake (mirrors the `barrier_idle` bump).
+    EventWait,
+    /// Slept at (or completed) a barrier; same convention as `EventWait`.
+    Barrier,
+    /// A DMA transfer was triggered; `cycle` = trigger, `arg` = words.
+    DmaStart,
+    /// The transfer completed; `cycle` = completion, `arg` = busy cycles
+    /// (setup + words) the engine spent on it.
+    DmaLand,
+    /// Entered an attribution region; `arg` = interned region id.
+    RegionEnter,
+    /// Left an attribution region; `arg` = interned region id.
+    RegionExit,
+}
+
+impl TraceKind {
+    /// Stable kind tag for exports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Issue => "issue",
+            TraceKind::Stall(_) => "stall",
+            TraceKind::EventWait => "event_wait",
+            TraceKind::Barrier => "barrier",
+            TraceKind::DmaStart => "dma_start",
+            TraceKind::DmaLand => "dma_land",
+            TraceKind::RegionEnter => "region_enter",
+            TraceKind::RegionExit => "region_exit",
+        }
+    }
+}
+
+/// One per-core trace event. Derived `Ord` sorts by cycle first — the
+/// per-core sort the differential wall compares under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceRecord {
+    /// Cycle the event is anchored at (issue attempt / sleep start /
+    /// trigger / completion).
+    pub cycle: u64,
+    /// Program counter of the instruction involved.
+    pub pc: u32,
+    /// Event kind.
+    pub kind: TraceKind,
+    /// Kind-specific argument (stall amount, idle cycles, words, region id).
+    pub arg: u64,
+}
+
+/// Where trace records go. The engines call this through the tracer; tests
+/// can substitute counting or filtering sinks.
+pub trait TraceSink {
+    /// Append `rec` to core `core`'s stream.
+    fn record(&mut self, core: usize, rec: TraceRecord);
+}
+
+/// Bounded per-core ring buffers of trace records.
+pub struct TraceDb {
+    capacity: usize,
+    lanes: Vec<Lane>,
+}
+
+struct Lane {
+    buf: VecDeque<TraceRecord>,
+    dropped: u64,
+}
+
+impl TraceDb {
+    /// A database with one ring of at most `capacity` records per core.
+    pub fn new(cores: usize, capacity: usize) -> Self {
+        assert!(capacity > 0, "trace ring capacity must be positive");
+        TraceDb {
+            capacity,
+            lanes: (0..cores).map(|_| Lane { buf: VecDeque::new(), dropped: 0 }).collect(),
+        }
+    }
+
+    /// Number of core lanes.
+    pub fn cores(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Per-core ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Records currently held for core `ci`, oldest first.
+    pub fn records(&self, ci: usize) -> impl Iterator<Item = &TraceRecord> {
+        self.lanes[ci].buf.iter()
+    }
+
+    /// Records held for core `ci`, sorted by `(cycle, pc, kind, arg)` — the
+    /// canonical order the differential wall compares under.
+    pub fn sorted(&self, ci: usize) -> Vec<TraceRecord> {
+        let mut v: Vec<TraceRecord> = self.lanes[ci].buf.iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Records held for core `ci`.
+    pub fn len(&self, ci: usize) -> usize {
+        self.lanes[ci].buf.len()
+    }
+
+    /// True if no core holds any record.
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|l| l.buf.is_empty())
+    }
+
+    /// Records dropped from core `ci`'s ring because it was full.
+    pub fn dropped(&self, ci: usize) -> u64 {
+        self.lanes[ci].dropped
+    }
+
+    /// Total records held across all cores.
+    pub fn total_len(&self) -> usize {
+        self.lanes.iter().map(|l| l.buf.len()).sum()
+    }
+
+    /// Total records dropped across all cores.
+    pub fn total_dropped(&self) -> u64 {
+        self.lanes.iter().map(|l| l.dropped).sum()
+    }
+
+    /// Forget every record and drop count, keeping allocations (called by
+    /// `Cluster::reset` between repetitions).
+    pub fn clear(&mut self) {
+        for l in &mut self.lanes {
+            l.buf.clear();
+            l.dropped = 0;
+        }
+    }
+}
+
+impl TraceSink for TraceDb {
+    fn record(&mut self, core: usize, rec: TraceRecord) {
+        let lane = &mut self.lanes[core];
+        if lane.buf.len() == self.capacity {
+            lane.buf.pop_front();
+            lane.dropped += 1;
+        }
+        lane.buf.push_back(rec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(cycle: u64, pc: u32) -> TraceRecord {
+        TraceRecord { cycle, pc, kind: TraceKind::Issue, arg: 0 }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut db = TraceDb::new(2, 3);
+        for i in 0..5 {
+            db.record(0, rec(i, i as u32));
+        }
+        assert_eq!(db.len(0), 3);
+        assert_eq!(db.dropped(0), 2);
+        assert_eq!(db.len(1), 0);
+        let kept: Vec<u64> = db.records(0).map(|r| r.cycle).collect();
+        assert_eq!(kept, vec![2, 3, 4], "oldest records evicted first");
+        db.clear();
+        assert!(db.is_empty());
+        assert_eq!(db.total_dropped(), 0);
+    }
+
+    #[test]
+    fn sorted_orders_by_cycle_first() {
+        let mut db = TraceDb::new(1, 16);
+        db.record(0, rec(9, 1));
+        db.record(0, rec(3, 7));
+        db.record(0, TraceRecord {
+            cycle: 3,
+            pc: 2,
+            kind: TraceKind::Stall(StallCause::TcdmContention),
+            arg: 1,
+        });
+        let s = db.sorted(0);
+        assert_eq!(s[0].cycle, 3);
+        assert_eq!(s[0].pc, 2);
+        assert_eq!(s[2].cycle, 9);
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(StallCause::ALL.len(), 10);
+        let names: Vec<&str> = StallCause::ALL.iter().map(|c| c.name()).collect();
+        assert_eq!(names[0], "tcdm_cont");
+        assert_eq!(names[9], "branch_stall");
+        // All distinct: the report keys columns on them.
+        for (i, a) in names.iter().enumerate() {
+            for b in &names[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+        assert_eq!(TraceKind::Issue.name(), "issue");
+        assert_eq!(TraceKind::Stall(StallCause::L2).name(), "stall");
+    }
+}

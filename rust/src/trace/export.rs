@@ -1,0 +1,213 @@
+//! Trace exporters: a flat records CSV and a chrome://tracing JSON
+//! (`chrome://tracing` / Perfetto "trace event format"), both hand-written
+//! so the crate stays dependency-free.
+//!
+//! Files land under `artifacts/trace/` by default, named
+//! `<kernel>-<variant>.{csv,json}`.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::db::{TraceDb, TraceKind, TraceRecord};
+
+/// Flat CSV of every retained record:
+/// `core,cycle,pc,kind,cause,region,arg`. `cause` is filled for stall
+/// records, `region` for region enter/exit records (resolved through
+/// `names`), both empty otherwise.
+pub fn records_csv(db: &TraceDb, names: &[String]) -> String {
+    let mut out = String::from("core,cycle,pc,kind,cause,region,arg\n");
+    for ci in 0..db.cores() {
+        for r in db.records(ci) {
+            let cause = match r.kind {
+                TraceKind::Stall(c) => c.name(),
+                _ => "",
+            };
+            let region = match r.kind {
+                TraceKind::RegionEnter | TraceKind::RegionExit => {
+                    names.get(r.arg as usize).map(String::as_str).unwrap_or("?")
+                }
+                _ => "",
+            };
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                ci,
+                r.cycle,
+                r.pc,
+                r.kind.name(),
+                cause,
+                region,
+                r.arg
+            ));
+        }
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Chrome trace-event JSON. Cycles map 1:1 to microseconds (`ts`/`dur`),
+/// so the viewer's time axis reads directly as cycles. Per core (`tid` =
+/// core index): `B`/`E` events for regions and `X` duration events for
+/// stalls and event/barrier idle time; DMA transfers go on a dedicated
+/// lane (`tid` = core count) as `X` events. `Issue` records are omitted —
+/// they are per-attempt and would swamp the viewer; use the CSV for those.
+pub fn chrome_json(db: &TraceDb, names: &[String], kernel: &str) -> String {
+    let mut events: Vec<String> = Vec::new();
+    let dma_tid = db.cores();
+    events.push(format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        json_escape(kernel)
+    ));
+    for ci in 0..db.cores() {
+        events.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{ci},\
+             \"args\":{{\"name\":\"core{ci}\"}}}}"
+        ));
+    }
+    events.push(format!(
+        "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{dma_tid},\
+         \"args\":{{\"name\":\"dma\"}}}}"
+    ));
+    for ci in 0..db.cores() {
+        for r in db.records(ci) {
+            if let Some(e) = event_json(r, ci, dma_tid, names) {
+                events.push(e);
+            }
+        }
+    }
+    format!("{{\"traceEvents\":[\n{}\n]}}\n", events.join(",\n"))
+}
+
+fn event_json(r: &TraceRecord, ci: usize, dma_tid: usize, names: &[String]) -> Option<String> {
+    let region_name = |id: u64| -> String {
+        json_escape(names.get(id as usize).map(String::as_str).unwrap_or("?"))
+    };
+    match r.kind {
+        TraceKind::Issue => None,
+        TraceKind::RegionEnter => Some(format!(
+            "{{\"name\":\"{}\",\"cat\":\"region\",\"ph\":\"B\",\"pid\":0,\
+             \"tid\":{ci},\"ts\":{}}}",
+            region_name(r.arg),
+            r.cycle
+        )),
+        TraceKind::RegionExit => Some(format!(
+            "{{\"name\":\"{}\",\"cat\":\"region\",\"ph\":\"E\",\"pid\":0,\
+             \"tid\":{ci},\"ts\":{}}}",
+            region_name(r.arg),
+            r.cycle
+        )),
+        TraceKind::Stall(cause) => Some(format!(
+            "{{\"name\":\"{}\",\"cat\":\"stall\",\"ph\":\"X\",\"pid\":0,\
+             \"tid\":{ci},\"ts\":{},\"dur\":{},\"args\":{{\"pc\":{}}}}}",
+            cause.name(),
+            r.cycle,
+            r.arg.max(1),
+            r.pc
+        )),
+        TraceKind::EventWait | TraceKind::Barrier => Some(format!(
+            "{{\"name\":\"{}\",\"cat\":\"idle\",\"ph\":\"X\",\"pid\":0,\
+             \"tid\":{ci},\"ts\":{},\"dur\":{},\"args\":{{\"pc\":{}}}}}",
+            r.kind.name(),
+            r.cycle,
+            r.arg.max(1),
+            r.pc
+        )),
+        // One X event per transfer, emitted at the landing record so the
+        // busy span (`arg`) is known; the start record only marks the
+        // trigger instant.
+        TraceKind::DmaStart => None,
+        TraceKind::DmaLand => Some(format!(
+            "{{\"name\":\"dma\",\"cat\":\"dma\",\"ph\":\"X\",\"pid\":0,\
+             \"tid\":{dma_tid},\"ts\":{},\"dur\":{},\"args\":{{\"core\":{ci}}}}}",
+            r.cycle - r.arg,
+            r.arg.max(1)
+        )),
+    }
+}
+
+/// Default artifact directory for trace exports.
+pub fn default_dir() -> PathBuf {
+    PathBuf::from("artifacts/trace")
+}
+
+/// Write `contents` to `<dir>/<base>.<ext>`, creating the directory.
+pub fn write_artifact(dir: &Path, base: &str, ext: &str, contents: &str) -> io::Result<PathBuf> {
+    fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{base}.{ext}"));
+    fs::write(&path, contents)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::db::{StallCause, TraceSink};
+
+    fn sample_db() -> (TraceDb, Vec<String>) {
+        let mut db = TraceDb::new(2, 64);
+        let names = vec!["(outside)".to_string(), "hot\"loop".to_string()];
+        db.record(0, TraceRecord { cycle: 4, pc: 2, kind: TraceKind::RegionEnter, arg: 1 });
+        db.record(0, TraceRecord { cycle: 5, pc: 3, kind: TraceKind::Issue, arg: 0 });
+        db.record(
+            0,
+            TraceRecord { cycle: 6, pc: 3, kind: TraceKind::Stall(StallCause::L2), arg: 9 },
+        );
+        db.record(0, TraceRecord { cycle: 20, pc: 7, kind: TraceKind::RegionExit, arg: 1 });
+        db.record(1, TraceRecord { cycle: 8, pc: 5, kind: TraceKind::DmaStart, arg: 16 });
+        db.record(1, TraceRecord { cycle: 34, pc: 5, kind: TraceKind::DmaLand, arg: 26 });
+        (db, names)
+    }
+
+    #[test]
+    fn csv_has_header_and_all_records() {
+        let (db, names) = sample_db();
+        let csv = records_csv(&db, &names);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "core,cycle,pc,kind,cause,region,arg");
+        assert_eq!(lines.len(), 1 + 6);
+        assert!(csv.contains("0,6,3,stall,l2_stall,,9"));
+        assert!(csv.contains("1,8,5,dma_start,,,16"));
+    }
+
+    #[test]
+    fn chrome_json_is_structurally_sound() {
+        let (db, names) = sample_db();
+        let j = chrome_json(&db, &names, "matmul");
+        assert!(j.starts_with("{\"traceEvents\":["));
+        assert!(j.trim_end().ends_with("]}"));
+        // Region name with a quote is escaped.
+        assert!(j.contains("hot\\\"loop"));
+        // DMA lands as an X on the dma lane starting at land - busy.
+        assert!(j.contains("\"cat\":\"dma\""));
+        assert!(j.contains("\"ts\":8,\"dur\":26"));
+        // Braces balance (cheap well-formedness check without a parser).
+        let opens = j.matches('{').count();
+        let closes = j.matches('}').count();
+        assert_eq!(opens, closes);
+        // No dangling comma before the closing bracket.
+        assert!(!j.contains(",\n]"));
+    }
+
+    #[test]
+    fn write_artifact_creates_dirs() {
+        let dir = std::env::temp_dir().join("transpfp-trace-test");
+        let _ = fs::remove_dir_all(&dir);
+        let p = write_artifact(&dir, "matmul-scalar", "csv", "a,b\n").unwrap();
+        assert!(p.ends_with("matmul-scalar.csv"));
+        assert_eq!(fs::read_to_string(&p).unwrap(), "a,b\n");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,458 @@
+//! Opt-in cycle-attribution tracing for the timed engines.
+//!
+//! A [`Tracer`] is attached to a `Cluster` with
+//! `Cluster::attach_tracer`; when absent (the default) the engines pay a
+//! single predictable branch per hook site, keeping the disabled path bit-
+//! and speed-identical (gated ≤2% in `benches/sim_hotpath.rs`). When
+//! attached, every issue attempt, categorized stall, event/barrier sleep,
+//! and DMA transfer is appended to a bounded per-core ring ([`TraceDb`]),
+//! and region markers (emitted by the ISA builder, the runtime's
+//! `parallel_for`, and the tiled kernels) fold the run into an exact
+//! [`AttributionReport`].
+//!
+//! ## Region semantics
+//!
+//! A marker is metadata on a *pc*: when the instruction at that pc first
+//! issues on a core, the marker fires on that core. A region therefore
+//! begins when its first instruction issues — fetch/operand stalls of that
+//! first instruction are charged to the *enclosing* context. An `Exit` is
+//! statically matched to its `Enter` at build time and only pops a matching
+//! stack top, so an exit whose pc is shared with another control path (the
+//! instruction after a master-only block, say) is a no-op on cores that
+//! never entered the region. Marker fires are deduplicated against contention
+//! retries of the same pc (an instruction that loses arbitration re-issues
+//! at the same pc and must not re-fire); a revisit after *any other* pc
+//! issued re-fires, so loop bodies mark every iteration. Known limit: a
+//! marked single-instruction self-loop fires once, not per iteration.
+//!
+//! ## Attribution
+//!
+//! Attribution uses counter snapshot diffs, not ring replay: at every
+//! marker fire (and at `End`) the interval's `CoreCounters` delta is
+//! credited to the innermost active region ("self time"). Summed rows
+//! reconcile exactly with `RunStats` by construction, independent of ring
+//! capacity, and each interval satisfies
+//! `active + stalls() == cycles` (the invariant the counter-reconciliation
+//! wall in `tests/trace.rs` pins suite-wide).
+
+pub mod db;
+pub mod export;
+pub mod report;
+
+pub use db::{StallCause, TraceDb, TraceKind, TraceRecord, TraceSink};
+pub use report::{AttributionReport, RegionRow};
+
+use std::collections::HashMap;
+
+use crate::cluster::counters::CoreCounters;
+use crate::isa::builder::MarkerOp;
+
+/// Region id credited to code outside any marked region.
+pub const OUTSIDE_REGION: u16 = 0;
+
+/// Tracing configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Per-core ring capacity of the backing [`TraceDb`].
+    pub ring_capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { ring_capacity: 1 << 16 }
+    }
+}
+
+/// A marker resolved to an interned region id. `Exit` carries the id of
+/// the statically matching `Enter`, so a fire can verify it pops the
+/// region it closes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MarkerSlot {
+    Enter(u16),
+    Exit(u16),
+}
+
+/// Per-core attribution state.
+struct PerCore {
+    /// Stack of active region ids (innermost last).
+    stack: Vec<u16>,
+    /// Counter snapshot at the last boundary.
+    last_snap: CoreCounters,
+    /// Cycle of the last boundary.
+    last_cycle: u64,
+    /// Last pc that reached class dispatch — marker-fire dedup against
+    /// same-pc contention retries.
+    last_e_pc: u32,
+}
+
+impl PerCore {
+    fn fresh() -> Self {
+        PerCore {
+            stack: Vec::new(),
+            last_snap: CoreCounters::default(),
+            last_cycle: 0,
+            last_e_pc: u32::MAX,
+        }
+    }
+}
+
+/// The live tracing state attached to a cluster: marker table, per-core
+/// region stacks and counter snapshots, the region accumulator, DMA busy
+/// tracking, and the record database.
+pub struct Tracer {
+    cfg: TraceConfig,
+    kernel: String,
+    /// Interned region names; index 0 is [`OUTSIDE_REGION`].
+    names: Vec<String>,
+    /// pc → marker ops, resolved from the program's marker side table.
+    markers: HashMap<u32, Vec<MarkerSlot>>,
+    per_core: Vec<PerCore>,
+    /// `accum[region][core]`: self-time counter deltas.
+    accum: Vec<Vec<CoreCounters>>,
+    /// DMA busy accounting: engine-busy frontier and accumulated busy
+    /// cycles (overlap-collapsed — concurrent triggers queue on one engine).
+    dma_frontier: u64,
+    dma_busy: u64,
+    db: TraceDb,
+}
+
+/// Credit the interval since the last boundary to the innermost region and
+/// advance the snapshot. Free function so callers can hold disjoint-field
+/// borrows (`markers`) across it.
+fn flush_boundary(
+    st: &mut PerCore,
+    accum: &mut [Vec<CoreCounters>],
+    ci: usize,
+    t: u64,
+    counters: &CoreCounters,
+) {
+    let mut d = counters.delta_from(&st.last_snap);
+    // Engines only write `counters.cycles` at End; the boundary clock is
+    // the hook-time cycle.
+    d.cycles = t - st.last_cycle;
+    let top = st.stack.last().copied().unwrap_or(OUTSIDE_REGION) as usize;
+    accum[top][ci].accumulate(&d);
+    st.last_snap = *counters;
+    st.last_cycle = t;
+}
+
+impl Tracer {
+    /// Build a tracer for `cores` cores over the given marker side table
+    /// (pc, op) in emission order. Duplicate names merge — every
+    /// `dma-wait` region, for example, accumulates into one row.
+    pub fn new(cfg: TraceConfig, cores: usize, kernel: &str, markers: &[(u32, MarkerOp)]) -> Self {
+        let mut names: Vec<String> = vec!["(outside)".to_string()];
+        let mut table: HashMap<u32, Vec<MarkerSlot>> = HashMap::new();
+        // Static matching of exits to enters (the builder guarantees the
+        // side table is balanced in emission order).
+        let mut open: Vec<u16> = Vec::new();
+        for (pc, op) in markers {
+            let slot = match op {
+                MarkerOp::Enter(name) => {
+                    let id = match names.iter().position(|n| n == name) {
+                        Some(i) => i,
+                        None => {
+                            names.push(name.clone());
+                            names.len() - 1
+                        }
+                    };
+                    assert!(id <= u16::MAX as usize, "too many trace regions");
+                    open.push(id as u16);
+                    MarkerSlot::Enter(id as u16)
+                }
+                MarkerOp::Exit => match open.pop() {
+                    Some(id) => MarkerSlot::Exit(id),
+                    None => continue, // unmatched exit: drop the slot
+                },
+            };
+            table.entry(*pc).or_default().push(slot);
+        }
+        let nregions = names.len();
+        Tracer {
+            cfg,
+            kernel: kernel.to_string(),
+            names,
+            markers: table,
+            per_core: (0..cores).map(|_| PerCore::fresh()).collect(),
+            accum: vec![vec![CoreCounters::default(); cores]; nregions],
+            dma_frontier: 0,
+            dma_busy: 0,
+            db: TraceDb::new(cores, cfg.ring_capacity),
+        }
+    }
+
+    /// Clear all per-run state (records, stacks, snapshots, accumulators),
+    /// keeping the marker table. Called by `Cluster::reset`.
+    pub fn reset(&mut self) {
+        for st in &mut self.per_core {
+            *st = PerCore::fresh();
+        }
+        for lane in &mut self.accum {
+            for c in lane.iter_mut() {
+                *c = CoreCounters::default();
+            }
+        }
+        self.dma_frontier = 0;
+        self.dma_busy = 0;
+        self.db.clear();
+    }
+
+    /// The backing record database.
+    pub fn db(&self) -> &TraceDb {
+        &self.db
+    }
+
+    /// Interned region names (index = region id; 0 is `"(outside)"`).
+    pub fn region_names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// The configuration the tracer was attached with.
+    pub fn config(&self) -> TraceConfig {
+        self.cfg
+    }
+
+    /// Kernel name the tracer was attached for.
+    pub fn kernel(&self) -> &str {
+        &self.kernel
+    }
+
+    /// Hook: an issue attempt on core `ci` at pc `pc` reached class
+    /// dispatch at cycle `t`. Fires markers (deduplicated against same-pc
+    /// retries) and records the attempt.
+    pub fn on_issue(&mut self, ci: usize, pc: u32, t: u64, counters: &CoreCounters) {
+        if self.per_core[ci].last_e_pc != pc {
+            self.per_core[ci].last_e_pc = pc;
+            if let Some(ops) = self.markers.get(&pc) {
+                flush_boundary(&mut self.per_core[ci], &mut self.accum, ci, t, counters);
+                let st = &mut self.per_core[ci];
+                for op in ops {
+                    match op {
+                        MarkerSlot::Enter(id) => {
+                            st.stack.push(*id);
+                            self.db.record(
+                                ci,
+                                TraceRecord {
+                                    cycle: t,
+                                    pc,
+                                    kind: TraceKind::RegionEnter,
+                                    arg: *id as u64,
+                                },
+                            );
+                        }
+                        MarkerSlot::Exit(id) => {
+                            // Pop only a matching top: cores that skipped
+                            // the enter (a shared pc past a master-only
+                            // block) must not have their stack corrupted.
+                            if st.stack.last() == Some(id) {
+                                st.stack.pop();
+                                self.db.record(
+                                    ci,
+                                    TraceRecord {
+                                        cycle: t,
+                                        pc,
+                                        kind: TraceKind::RegionExit,
+                                        arg: *id as u64,
+                                    },
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.db.record(ci, TraceRecord { cycle: t, pc, kind: TraceKind::Issue, arg: 0 });
+    }
+
+    /// Hook: core `ci` lost `amount` cycles to `cause` at attempt cycle
+    /// `t` (bulk amount, matching the counter bump exactly). No-op for
+    /// `amount == 0` so both engines skip the same degenerate bumps.
+    pub fn on_stall(&mut self, ci: usize, pc: u32, t: u64, cause: StallCause, amount: u64) {
+        if amount == 0 {
+            return;
+        }
+        self.db.record(ci, TraceRecord { cycle: t, pc, kind: TraceKind::Stall(cause), arg: amount });
+    }
+
+    /// Hook: core `ci` (asleep since `since`, resuming at `wake`) was woken
+    /// by a set-event (`TraceKind::EventWait`) or barrier completion
+    /// (`TraceKind::Barrier`). `pc` is the sleeper's resume pc. The record
+    /// lands on the sleeper's own lane; `arg` mirrors the `barrier_idle`
+    /// counter bump.
+    pub fn on_wake(&mut self, ci: usize, pc: u32, kind: TraceKind, since: u64, wake: u64) {
+        debug_assert!(matches!(kind, TraceKind::EventWait | TraceKind::Barrier));
+        self.db.record(ci, TraceRecord { cycle: since, pc, kind, arg: wake - since });
+    }
+
+    /// Hook: core `ci` triggered a DMA transfer at cycle `t`; the engine
+    /// works on it over `[start, done)` (`start ≥ t` when queued behind an
+    /// earlier transfer). Records the trigger and the landing and folds the
+    /// busy span into the overlap accounting.
+    pub fn on_dma(&mut self, ci: usize, pc: u32, t: u64, start: u64, done: u64, words: u32) {
+        self.db.record(
+            ci,
+            TraceRecord { cycle: t, pc, kind: TraceKind::DmaStart, arg: words as u64 },
+        );
+        self.db.record(
+            ci,
+            TraceRecord { cycle: done, pc, kind: TraceKind::DmaLand, arg: done - start },
+        );
+        let s = self.dma_frontier.max(start);
+        self.dma_busy += done.saturating_sub(s);
+        self.dma_frontier = self.dma_frontier.max(done);
+    }
+
+    /// Hook: core `ci` retired `End` at cycle `t`. Flushes the final
+    /// interval so the core's attribution telescopes to its full counters.
+    pub fn on_end(&mut self, ci: usize, t: u64, counters: &CoreCounters) {
+        flush_boundary(&mut self.per_core[ci], &mut self.accum, ci, t, counters);
+    }
+
+    /// Fold the attribution state into a report. Call after the run
+    /// completes (every core retired `End`).
+    pub fn report(&self) -> AttributionReport {
+        let cores = self.per_core.len();
+        let mut rows = Vec::new();
+        let mut dma_wait_cycles = 0u64;
+        for (rid, lane) in self.accum.iter().enumerate() {
+            for (ci, delta) in lane.iter().enumerate() {
+                if *delta == CoreCounters::default() {
+                    continue;
+                }
+                if self.names[rid] == "dma-wait" {
+                    dma_wait_cycles += delta.cycles;
+                }
+                rows.push(RegionRow { region: self.names[rid].clone(), core: ci, delta: *delta });
+            }
+        }
+        AttributionReport {
+            kernel: self.kernel.clone(),
+            cores,
+            rows,
+            dma_busy: self.dma_busy,
+            dma_wait_cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counters(active: u64, tcdm: u64) -> CoreCounters {
+        CoreCounters { active, tcdm_cont: tcdm, ..CoreCounters::default() }
+    }
+
+    #[test]
+    fn markers_intern_and_merge_names() {
+        let markers = vec![
+            (4u32, MarkerOp::Enter("a".to_string())),
+            (8u32, MarkerOp::Exit),
+            (10u32, MarkerOp::Enter("a".to_string())),
+            (12u32, MarkerOp::Exit),
+            (14u32, MarkerOp::Enter("b".to_string())),
+            (20u32, MarkerOp::Exit),
+        ];
+        let tr = Tracer::new(TraceConfig::default(), 1, "k", &markers);
+        assert_eq!(tr.region_names(), &["(outside)", "a", "b"]);
+    }
+
+    #[test]
+    fn snapshot_diff_attribution_telescopes() {
+        let markers = vec![(2u32, MarkerOp::Enter("hot".to_string())), (5u32, MarkerOp::Exit)];
+        let mut tr = Tracer::new(TraceConfig::default(), 1, "k", &markers);
+        // pc 0,1 outside; pc 2..4 inside "hot"; pc 5 exits; End at t=40.
+        tr.on_issue(0, 0, 0, &counters(0, 0));
+        tr.on_issue(0, 1, 1, &counters(1, 0));
+        tr.on_issue(0, 2, 5, &counters(2, 3)); // boundary: outside gets [0,5)
+        tr.on_issue(0, 3, 6, &counters(3, 3));
+        tr.on_issue(0, 4, 7, &counters(4, 3));
+        tr.on_issue(0, 5, 12, &counters(5, 7)); // boundary: hot gets [5,12)
+        let mut fin = counters(9, 7);
+        fin.cycles = 40;
+        tr.on_end(0, 40, &fin); // outside gets [12,40)
+        let rep = tr.report();
+        let outside = rep.region_total("(outside)");
+        let hot = rep.region_total("hot");
+        assert_eq!(outside.cycles + hot.cycles, 40);
+        assert_eq!(hot.cycles, 7);
+        assert_eq!(hot.tcdm_cont, 4);
+        assert_eq!(hot.active, 3);
+        assert_eq!(outside.tcdm_cont, 3);
+        assert_eq!(outside.active, 6);
+    }
+
+    #[test]
+    fn same_pc_retry_does_not_refire_markers() {
+        let markers = vec![(3u32, MarkerOp::Enter("r".to_string())), (4u32, MarkerOp::Exit)];
+        let mut tr = Tracer::new(TraceConfig::default(), 1, "k", &markers);
+        tr.on_issue(0, 3, 2, &counters(0, 0));
+        tr.on_issue(0, 3, 3, &counters(0, 1)); // contention retry, same pc
+        tr.on_issue(0, 4, 4, &counters(1, 1));
+        let enters = tr
+            .db()
+            .records(0)
+            .filter(|r| r.kind == TraceKind::RegionEnter)
+            .count();
+        assert_eq!(enters, 1);
+        // Loop revisit after another pc issued re-fires.
+        tr.on_issue(0, 3, 9, &counters(2, 1));
+        let enters = tr
+            .db()
+            .records(0)
+            .filter(|r| r.kind == TraceKind::RegionEnter)
+            .count();
+        assert_eq!(enters, 2);
+    }
+
+    #[test]
+    fn unentered_exit_is_ignored() {
+        // The exit pc is shared with a path that never entered the region
+        // (e.g. workers branching over a master-only block).
+        let markers = vec![(5u32, MarkerOp::Enter("m".to_string())), (9u32, MarkerOp::Exit)];
+        let mut tr = Tracer::new(TraceConfig::default(), 2, "k", &markers);
+        // Core 0 (master) enters at 5 and exits at 9.
+        tr.on_issue(0, 5, 1, &counters(1, 0));
+        tr.on_issue(0, 9, 4, &counters(3, 0));
+        // Core 1 (worker) jumps straight to 9: the exit must be a no-op.
+        tr.on_issue(1, 9, 4, &counters(2, 0));
+        let exits =
+            |ci: usize| tr.db().records(ci).filter(|r| r.kind == TraceKind::RegionExit).count();
+        assert_eq!(exits(0), 1);
+        assert_eq!(exits(1), 0);
+        assert!(tr.per_core[1].stack.is_empty());
+    }
+
+    #[test]
+    fn dma_busy_collapses_overlap() {
+        let mut tr = Tracer::new(TraceConfig::default(), 1, "k", &[]);
+        // Transfer 1: [10, 30). Transfer 2 triggered at 12, queued: [30, 50).
+        tr.on_dma(0, 7, 10, 10, 30, 16);
+        tr.on_dma(0, 7, 12, 30, 50, 16);
+        let rep = tr.report();
+        assert_eq!(rep.dma_busy, 40);
+        let kinds: Vec<TraceKind> = tr.db().records(0).map(|r| r.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![TraceKind::DmaStart, TraceKind::DmaLand, TraceKind::DmaStart, TraceKind::DmaLand]
+        );
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let markers = vec![(1u32, MarkerOp::Enter("x".to_string())), (2u32, MarkerOp::Exit)];
+        let mut tr = Tracer::new(TraceConfig { ring_capacity: 8 }, 2, "k", &markers);
+        tr.on_issue(0, 1, 3, &counters(1, 0));
+        tr.on_dma(1, 9, 5, 5, 20, 4);
+        let mut fin = counters(2, 0);
+        fin.cycles = 10;
+        tr.on_end(0, 10, &fin);
+        tr.reset();
+        assert!(tr.db().is_empty());
+        assert!(tr.report().rows.is_empty());
+        assert_eq!(tr.report().dma_busy, 0);
+        // Marker table survives reset: re-running still fires markers.
+        tr.on_issue(0, 1, 3, &counters(1, 0));
+        assert_eq!(tr.db().len(0), 2); // RegionEnter + Issue
+    }
+}

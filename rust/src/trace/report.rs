@@ -1,0 +1,317 @@
+//! Cycle-attribution reports: fold a traced run into per-region × per-core
+//! counter deltas that reconcile **exactly** with the run's `RunStats`.
+//!
+//! The tracer snapshots each core's `CoreCounters` at every region boundary
+//! (marker fire) and at `End`, crediting the interval delta to the
+//! innermost active region ("self time"). Because attribution is built from
+//! snapshot diffs — not by replaying ring records — it stays exact even
+//! when the bounded trace rings drop records.
+
+use crate::cluster::counters::{CoreCounters, RunStats};
+use crate::report::Table;
+
+/// Self-time counters for one (region, core) pair. `delta.cycles` is the
+/// number of cycles credited to this region on this core, and the
+/// per-interval invariant `delta.active + delta.stalls() == delta.cycles`
+/// holds row by row.
+#[derive(Debug, Clone)]
+pub struct RegionRow {
+    /// Region name (`"(outside)"` for un-marked code).
+    pub region: String,
+    /// Core index.
+    pub core: usize,
+    /// Counter delta credited to the region's self time.
+    pub delta: CoreCounters,
+}
+
+/// A per-kernel cycle-attribution report.
+#[derive(Debug, Clone)]
+pub struct AttributionReport {
+    /// Kernel / program name the trace came from.
+    pub kernel: String,
+    /// Number of cores in the traced cluster.
+    pub cores: usize,
+    /// Every (region, core) pair with a nonzero delta.
+    pub rows: Vec<RegionRow>,
+    /// Cycles the DMA engine was busy (transfer setup + data beats),
+    /// overlap-collapsed across concurrent triggers.
+    pub dma_busy: u64,
+    /// Cycles cores spent spinning in `dma-wait` regions (summed over
+    /// cores), i.e. DMA time the cluster failed to hide behind compute.
+    pub dma_wait_cycles: u64,
+}
+
+impl AttributionReport {
+    /// DMA-overlap efficiency in `[0, 1]`: the fraction of DMA busy time
+    /// hidden behind compute (`1 - dma_wait / dma_busy`, clamped). `None`
+    /// when the run triggered no DMA.
+    pub fn dma_overlap_efficiency(&self) -> Option<f64> {
+        if self.dma_busy == 0 {
+            return None;
+        }
+        let ratio = self.dma_wait_cycles as f64 / self.dma_busy as f64;
+        Some((1.0 - ratio).clamp(0.0, 1.0))
+    }
+
+    /// Region names present in the report, in first-appearance order.
+    pub fn regions(&self) -> Vec<&str> {
+        let mut seen: Vec<&str> = Vec::new();
+        for r in &self.rows {
+            if !seen.contains(&r.region.as_str()) {
+                seen.push(&r.region);
+            }
+        }
+        seen
+    }
+
+    /// Summed delta across cores for one region name.
+    pub fn region_total(&self, region: &str) -> CoreCounters {
+        let mut acc = CoreCounters::default();
+        for r in &self.rows {
+            if r.region == region {
+                acc.accumulate(&r.delta);
+            }
+        }
+        acc
+    }
+
+    /// Check the report against the run's final counters. Exact — every
+    /// field of every core's `CoreCounters` must equal the sum of that
+    /// core's region deltas, and every row must satisfy
+    /// `active + stalls() == cycles`. Returns a description of the first
+    /// mismatch, if any.
+    pub fn reconcile(&self, stats: &RunStats) -> Result<(), String> {
+        for row in &self.rows {
+            let d = &row.delta;
+            if d.active + d.stalls() != d.cycles {
+                return Err(format!(
+                    "region '{}' core {}: active {} + stalls {} != cycles {}",
+                    row.region,
+                    row.core,
+                    d.active,
+                    d.stalls(),
+                    d.cycles
+                ));
+            }
+        }
+        let mut per_core = vec![CoreCounters::default(); stats.per_core.len()];
+        for row in &self.rows {
+            if row.core >= per_core.len() {
+                return Err(format!("row for core {} out of range", row.core));
+            }
+            per_core[row.core].accumulate(&row.delta);
+        }
+        for (ci, (got, want)) in per_core.iter().zip(stats.per_core.iter()).enumerate() {
+            if got != want {
+                return Err(format!(
+                    "core {ci}: attributed sum {got:?} != run counters {want:?}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-region summary table (summed across cores): cycles, active, and
+    /// the full stall taxonomy, with a share-of-total-cycles column.
+    pub fn table(&self) -> Table {
+        let mut headers = vec![
+            "region".to_string(),
+            "cycles".to_string(),
+            "share".to_string(),
+            "active".to_string(),
+            "instrs".to_string(),
+        ];
+        for (name, _) in CoreCounters::default().stall_breakdown() {
+            headers.push(name.to_string());
+        }
+        let mut t = Table::new(headers);
+        let grand: u64 = self.regions().iter().map(|r| self.region_total(r).cycles).sum();
+        for region in self.regions() {
+            let c = self.region_total(region);
+            let share = if grand == 0 { 0.0 } else { 100.0 * c.cycles as f64 / grand as f64 };
+            let mut cells = vec![
+                region.to_string(),
+                c.cycles.to_string(),
+                format!("{share:.1}%"),
+                c.active.to_string(),
+                c.instrs.to_string(),
+            ];
+            for (_, v) in c.stall_breakdown() {
+                cells.push(v.to_string());
+            }
+            t.row(cells);
+        }
+        t
+    }
+
+    /// Per-core rows for one region (used by `transpfp trace --region`).
+    pub fn region_table(&self, region: &str) -> Table {
+        let mut headers = vec!["core".to_string(), "cycles".to_string(), "active".to_string()];
+        for (name, _) in CoreCounters::default().stall_breakdown() {
+            headers.push(name.to_string());
+        }
+        let mut t = Table::new(headers);
+        for row in self.rows.iter().filter(|r| r.region == region) {
+            let mut cells = vec![
+                row.core.to_string(),
+                row.delta.cycles.to_string(),
+                row.delta.active.to_string(),
+            ];
+            for (_, v) in row.delta.stall_breakdown() {
+                cells.push(v.to_string());
+            }
+            t.row(cells);
+        }
+        t
+    }
+
+    /// Full per-(region, core) attribution as CSV, plus DMA summary lines
+    /// are left to the caller (they are scalars, not rows).
+    pub fn to_csv(&self) -> String {
+        let mut headers = vec![
+            "kernel".to_string(),
+            "region".to_string(),
+            "core".to_string(),
+            "cycles".to_string(),
+            "active".to_string(),
+            "instrs".to_string(),
+        ];
+        for (name, _) in CoreCounters::default().stall_breakdown() {
+            headers.push(name.to_string());
+        }
+        let mut t = Table::new(headers);
+        for row in &self.rows {
+            let mut cells = vec![
+                self.kernel.clone(),
+                row.region.clone(),
+                row.core.to_string(),
+                row.delta.cycles.to_string(),
+                row.delta.active.to_string(),
+                row.delta.instrs.to_string(),
+            ];
+            for (_, v) in row.delta.stall_breakdown() {
+                cells.push(v.to_string());
+            }
+            t.row(cells);
+        }
+        t.to_csv()
+    }
+
+    /// One-line summary for serve spans and logs: total cycles, active
+    /// share, and the single largest stall bucket.
+    pub fn summary_line(&self) -> String {
+        let mut total = CoreCounters::default();
+        for r in &self.rows {
+            total.accumulate(&r.delta);
+        }
+        if total.cycles == 0 {
+            return "cycles=0".to_string();
+        }
+        let active_pct = 100.0 * total.active as f64 / total.cycles as f64;
+        let (mut top_name, mut top_v) = ("none", 0u64);
+        for (name, v) in total.stall_breakdown() {
+            if v > top_v {
+                top_name = name;
+                top_v = v;
+            }
+        }
+        let top_pct = 100.0 * top_v as f64 / total.cycles as f64;
+        match self.dma_overlap_efficiency() {
+            Some(eff) => format!(
+                "cycles={} active={active_pct:.1}% top-stall={top_name}:{top_pct:.1}% dma-overlap={:.2}",
+                total.cycles, eff
+            ),
+            None => format!(
+                "cycles={} active={active_pct:.1}% top-stall={top_name}:{top_pct:.1}%",
+                total.cycles
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(cycles: u64, active: u64, tcdm: u64) -> CoreCounters {
+        CoreCounters {
+            cycles,
+            active,
+            tcdm_cont: tcdm,
+            ..CoreCounters::default()
+        }
+    }
+
+    fn report() -> AttributionReport {
+        AttributionReport {
+            kernel: "K".to_string(),
+            cores: 2,
+            rows: vec![
+                RegionRow { region: "(outside)".into(), core: 0, delta: delta(10, 8, 2) },
+                RegionRow { region: "hot".into(), core: 0, delta: delta(20, 15, 5) },
+                RegionRow { region: "hot".into(), core: 1, delta: delta(30, 30, 0) },
+            ],
+            dma_busy: 100,
+            dma_wait_cycles: 25,
+        }
+    }
+
+    #[test]
+    fn reconcile_accepts_matching_stats() {
+        let rep = report();
+        let stats = RunStats {
+            per_core: vec![delta(30, 23, 7), delta(30, 30, 0)],
+            total_cycles: 30,
+        };
+        assert_eq!(rep.reconcile(&stats), Ok(()));
+    }
+
+    #[test]
+    fn reconcile_rejects_any_field_drift() {
+        let rep = report();
+        let stats = RunStats {
+            per_core: vec![delta(30, 23, 7), delta(31, 31, 0)],
+            total_cycles: 31,
+        };
+        assert!(rep.reconcile(&stats).is_err());
+    }
+
+    #[test]
+    fn reconcile_rejects_uncategorized_rows() {
+        let mut rep = report();
+        // 5 cycles with no active/stall coverage — the taxonomy gap the
+        // satellite fix closes must never reappear.
+        rep.rows[0].delta.cycles += 5;
+        let stats = RunStats {
+            per_core: vec![delta(35, 23, 7), delta(30, 30, 0)],
+            total_cycles: 35,
+        };
+        assert!(rep.reconcile(&stats).is_err());
+    }
+
+    #[test]
+    fn overlap_and_summary() {
+        let rep = report();
+        let eff = rep.dma_overlap_efficiency().unwrap();
+        assert!((eff - 0.75).abs() < 1e-12);
+        let line = rep.summary_line();
+        assert!(line.contains("cycles=60"), "{line}");
+        assert!(line.contains("dma-overlap=0.75"), "{line}");
+        let mut none = rep.clone();
+        none.dma_busy = 0;
+        assert!(none.dma_overlap_efficiency().is_none());
+    }
+
+    #[test]
+    fn tables_have_taxonomy_columns() {
+        let rep = report();
+        let csv = rep.table().to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.contains("tcdm_cont"));
+        assert!(header.contains("branch_stall"));
+        assert_eq!(rep.regions(), vec!["(outside)", "hot"]);
+        let full = rep.to_csv();
+        assert_eq!(full.lines().count(), 4);
+        assert!(full.contains("K,hot,1,30,30"));
+    }
+}

@@ -454,6 +454,77 @@ fn reset_reuse_matches_fresh_runs() {
     }
 }
 
+// ---------------------------------------------------------------- traces
+
+/// Bit-identical trace streams: both timed engines must emit the same
+/// records — same cycles, pcs, kinds and args after the canonical per-core
+/// sort — with rings sized so nothing drops. Covers plain kernels across
+/// the ladder on two configs plus the DMA double-buffered tiled pipeline.
+#[test]
+fn trace_streams_bit_identical_across_engines() {
+    use transpfp::trace::TraceConfig;
+    let big = TraceConfig { ring_capacity: 1 << 21 };
+    let pairs = [
+        (Benchmark::Fir, Variant::Scalar),
+        (Benchmark::Matmul, Variant::VEC),
+        (Benchmark::Conv, Variant::SCALAR_BF16),
+        (Benchmark::Fft, Variant::Scalar),
+        (Benchmark::Kmeans, Variant::VEC),
+    ];
+    for cfg in [ClusterConfig::new(8, 4, 1), ClusterConfig::new(16, 8, 2)] {
+        for (b, v) in pairs {
+            let w = b.build(v, &cfg);
+            let (se, oe, te) = w.run_traced(&cfg, cfg.cores, Engine::Event, big).unwrap();
+            let (sr, or, tr) = w.run_traced(&cfg, cfg.cores, Engine::Reference, big).unwrap();
+            let ctx = format!("{} {} on {cfg}", b.name(), v.label());
+            assert_eq!(oe, or, "{ctx}: outputs differ");
+            assert_identical(&se, &sr, &ctx);
+            assert_eq!(te.db().total_dropped(), 0, "{ctx}: event ring dropped records");
+            assert_eq!(tr.db().total_dropped(), 0, "{ctx}: reference ring dropped records");
+            for ci in 0..cfg.cores {
+                assert_eq!(
+                    te.db().sorted(ci),
+                    tr.db().sorted(ci),
+                    "{ctx}: core {ci} trace streams differ"
+                );
+            }
+        }
+    }
+    let cfg = ClusterConfig::new(8, 4, 1);
+    let w = Benchmark::Matmul.build_tiled(&cfg, 4).expect("tiled MATMUL");
+    let (se, _, te) = w.run_traced(&cfg, cfg.cores, Engine::Event, big).unwrap();
+    let (sr, _, tr) = w.run_traced(&cfg, cfg.cores, Engine::Reference, big).unwrap();
+    assert_identical(&se, &sr, "tiled MATMUL");
+    assert_eq!(te.db().total_dropped() + tr.db().total_dropped(), 0, "tiled rings dropped");
+    for ci in 0..cfg.cores {
+        assert_eq!(
+            te.db().sorted(ci),
+            tr.db().sorted(ci),
+            "tiled MATMUL: core {ci} trace streams differ"
+        );
+    }
+}
+
+/// Tracing must be invisible to the simulation: a traced run and an
+/// untraced run of the same workload report identical outputs and
+/// identical per-core counters, on both engines.
+#[test]
+fn tracing_does_not_perturb_run_stats() {
+    use transpfp::trace::TraceConfig;
+    let cfg = ClusterConfig::new(8, 8, 2);
+    for b in [Benchmark::Matmul, Benchmark::Fft, Benchmark::Svm] {
+        for engine in [Engine::Event, Engine::Reference] {
+            let w = b.build(Variant::VEC, &cfg);
+            let (plain, plain_out) = w.run_with(&cfg, cfg.cores, engine).unwrap();
+            let (traced, traced_out, _tracer) =
+                w.run_traced(&cfg, cfg.cores, engine, TraceConfig::default()).unwrap();
+            let ctx = format!("{} [{engine:?}]", b.name());
+            assert_eq!(traced_out, plain_out, "{ctx}: tracing changed the outputs");
+            assert_identical(&traced, &plain, &ctx);
+        }
+    }
+}
+
 // ---------------------------------------------------------------- errors
 
 /// Error-path parity wall: a program that spins forever must classify as a

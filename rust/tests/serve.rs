@@ -140,6 +140,7 @@ fn cli_and_wire_requests_are_identical() {
         &["pareto", "--acc"],
         &["inject-status"],
         &["stats"],
+        &["trace"],
         &["ping"],
     ];
     for argv in cases {
@@ -234,6 +235,53 @@ fn tcp_concurrent_identical_queries_simulate_once() {
     assert_eq!(req, CLIENTS as u64 + 1);
     assert_eq!(err, 0);
     assert!(hits >= 1, "the warm re-query is a plan-time cache hit");
+}
+
+/// The `trace` endpoint lists one span per handled request — including
+/// invalid lines — with phase timings, cache outcome, and (for queries) a
+/// sim-run attribution summary derived from the resolved measurements.
+#[test]
+fn trace_endpoint_reports_request_spans_over_the_wire() {
+    let server = leaked_server();
+    let input = b"ping\nquery 8c2f0p FIR scalar\ndefinitely-not-a-request\ntrace\n".to_vec();
+    let (summary, replies) = pipe(&server, input);
+    assert_eq!(summary.requests, 4);
+    let trace = &replies[3];
+    assert!(trace.ok, "trace endpoint must succeed: {}", trace.head);
+    assert_eq!(
+        trace.rows[0],
+        "endpoint,ok,queued_us,planned_us,simulated_us,serialized_us,hits,misses,attribution,request"
+    );
+    // ping, query, invalid — oldest first; the trace request itself is
+    // recorded only after its reply is built.
+    assert_eq!(trace.rows.len(), 1 + 3, "rows: {:?}", trace.rows);
+    assert!(trace.rows[1].starts_with("ping,true,"), "{}", trace.rows[1]);
+    assert!(trace.rows[2].starts_with("query,true,"), "{}", trace.rows[2]);
+    assert!(
+        trace.rows[2].contains("active") && trace.rows[2].contains("top stall"),
+        "query span must carry an attribution summary: {}",
+        trace.rows[2]
+    );
+    assert!(trace.rows[3].starts_with("invalid,false,"), "{}", trace.rows[3]);
+
+    // A second `trace` now sees the first one as a span, and a warm
+    // re-query records a hit where the cold one recorded a miss.
+    let (_, replies) = pipe(&server, b"query 8c2f0p FIR scalar\ntrace\n".to_vec());
+    let trace = &replies[1];
+    assert_eq!(trace.rows.len(), 1 + 5, "rows: {:?}", trace.rows);
+    assert!(trace.rows[4].starts_with("trace,true,"), "{}", trace.rows[4]);
+    let cold: Vec<&str> = trace.rows[2].split(',').collect();
+    let warm: Vec<&str> = trace.rows[5].split(',').collect();
+    assert_eq!((cold[6], cold[7]), ("0", "1"), "cold query is a miss: {}", trace.rows[2]);
+    assert_eq!((warm[6], warm[7]), ("1", "0"), "warm query is a hit: {}", trace.rows[5]);
+
+    // The span count is surfaced through `stats`.
+    let (_, replies) = pipe(&server, b"stats\n".to_vec());
+    assert!(
+        replies[0].rows.iter().any(|r| r.starts_with("trace_spans,")),
+        "stats rows: {:?}",
+        replies[0].rows
+    );
 }
 
 /// `stats` and `inject-status` reply schema-stable structured rows.
