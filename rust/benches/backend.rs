@@ -1,6 +1,6 @@
 //! `cargo bench --bench backend` — gates the tiered execution backends.
 //!
-//! Two gates (process exits non-zero on violation):
+//! Three gates (process exits non-zero on violation):
 //!
 //! 1. **Throughput tier**: on the kernel suite (all 8 benchmarks ×
 //!    {scalar, vector-f16}) over the max-sharing `8c2f2p` configuration —
@@ -9,7 +9,13 @@
 //!    pipeline stages) — the functional backend must retire instructions
 //!    at ≥ 50× the event engine's rate. Both tiers are measured on fresh
 //!    state per repetition over identical workloads.
-//! 2. **Tuner probe**: `tune` with the default functional probe issues
+//! 2. **Compiled tier**: same suite — the compiled backend (pre-resolved
+//!    fused-block translation, warm code cache) must retire instructions
+//!    at ≥ 5× the functional interpreter's rate, with retired counts
+//!    bit-identical to the event engine's, translating each distinct
+//!    program exactly once. The translation-cache hit/miss counters are
+//!    printed for the CI summary.
+//! 3. **Tuner probe**: `tune` with the default functional probe issues
 //!    exactly one functional run per ladder rung and **zero**
 //!    cycle-accurate runs for accuracy-rejected rungs (checked
 //!    point-by-point against the measurement cache).
@@ -27,6 +33,9 @@ use transpfp::kernels::{Benchmark, Variant, Workload};
 use transpfp::tuner::{tune_with, DEFAULT_BUDGET, LADDER};
 
 const MIN_RATIO: f64 = 50.0;
+/// The compiled tier must beat the functional interpreter by at least this
+/// factor on instruction throughput (same suite, bit-identical retirement).
+const MIN_COMPILED_RATIO: f64 = 5.0;
 
 /// Retired instructions and wall seconds for one pass of `workloads` on a
 /// backend.
@@ -80,7 +89,41 @@ fn main() -> ExitCode {
         ok = false;
     }
 
-    // ---- Gate 2: the functional tune probe never pays for rejected rungs.
+    // ---- Gate 2: compiled tier vs the functional interpreter.
+    // Warm-up pass also populates the global translation cache, so the
+    // timed passes measure execution, not translation.
+    let _ = measure(&cfg, &workloads, BackendKind::Compiled, 1);
+    let (co_instrs, co_s) = measure(&cfg, &workloads, BackendKind::Compiled, 10);
+    let co_mips = co_instrs as f64 / co_s.max(1e-9) / 1e6;
+    let co_ratio = co_mips / fu_mips.max(1e-9);
+    let (cc_hits, cc_misses) = transpfp::cluster::CodeCache::global().stats();
+    println!("backend-compiled-minstr-per-s: {co_mips:.1}");
+    println!("backend-compiled-vs-functional-ratio: {co_ratio:.1}x");
+    println!("backend-codecache-hits: {cc_hits}");
+    println!("backend-codecache-misses: {cc_misses}");
+    if co_instrs != 10 * ev_instrs {
+        eprintln!(
+            "FAIL: retired-instruction counts diverge across tiers \
+             ({ev_instrs} event vs {co_instrs}/10 compiled)"
+        );
+        ok = false;
+    }
+    if co_ratio < MIN_COMPILED_RATIO {
+        eprintln!(
+            "FAIL: compiled/functional throughput {co_ratio:.1}x below the \
+             {MIN_COMPILED_RATIO}x gate"
+        );
+        ok = false;
+    }
+    if cc_misses != workloads.len() as u64 {
+        eprintln!(
+            "FAIL: expected one translation per distinct program ({}), saw {cc_misses}",
+            workloads.len()
+        );
+        ok = false;
+    }
+
+    // ---- Gate 3: the functional tune probe never pays for rejected rungs.
     let engine = QueryEngine::new();
     let tcfg = ClusterConfig::new(8, 8, 1);
     let budget = DEFAULT_BUDGET;
@@ -135,6 +178,9 @@ fn main() -> ExitCode {
     if !ok {
         return ExitCode::FAILURE;
     }
-    println!("backend: OK ({ratio:.0}x >= {MIN_RATIO}x, no CA runs for {rejected} rejected rungs)");
+    println!(
+        "backend: OK ({ratio:.0}x >= {MIN_RATIO}x, compiled {co_ratio:.1}x >= \
+         {MIN_COMPILED_RATIO}x, no CA runs for {rejected} rejected rungs)"
+    );
     ExitCode::SUCCESS
 }

@@ -307,14 +307,14 @@ pub const FLAGS: &[FlagSpec] = &[
         name: "--backend",
         value: Some("<b>"),
         example: "functional",
-        help: "execution tier for `run`: event, reference or\nfunctional (architectural-only, no timing)",
+        help: "execution tier for `run`: event, reference,\nfunctional or compiled (architectural-only,\nno timing)",
         apply: apply_backend,
     },
     FlagSpec {
         name: "--probe",
         value: Some("<p>"),
         example: "functional",
-        help: "accuracy probe for `tune`: functional (default)\nor cycle",
+        help: "accuracy probe for `tune`: functional (default),\ncompiled or cycle",
         apply: apply_probe,
     },
     FlagSpec {
@@ -431,7 +431,7 @@ pub const COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "run",
         args: "<cfg> <bench> <variant>",
-        help: "run one benchmark (e.g. `run 8c4f1p MATMUL vector`);\nvariants: scalar, scalar-f16, scalar-bf16,\nvector (vector-f16), vector-bf16; with\n--tiles <t>, run the DMA double-buffered tiled\nbuild (MATMUL/CONV scalar, dataset in L2 beyond\nthe TCDM, streamed through ping-pong buffers);\nwith --backend <event|reference|functional>, run\nuncached on the chosen execution tier (the\nfunctional tier verifies numerics with no timing)",
+        help: "run one benchmark (e.g. `run 8c4f1p MATMUL vector`);\nvariants: scalar, scalar-f16, scalar-bf16,\nvector (vector-f16), vector-bf16; with\n--tiles <t>, run the DMA double-buffered tiled\nbuild (MATMUL/CONV scalar, dataset in L2 beyond\nthe TCDM, streamed through ping-pong buffers);\nwith --backend\n<event|reference|functional|compiled>, run\nuncached on the chosen execution tier (the\nfunctional and compiled tiers verify numerics\nwith no timing; compiled pre-translates the\nprogram into fused blocks)",
         wire_flags: &[],
         wire: false,
     },
@@ -452,7 +452,7 @@ pub const COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "tune",
         args: "[cfg|all]",
-        help: "accuracy-aware precision autotuning: select the\ncheapest admissible ladder rung per benchmark\nunder --budget (relative L2 error vs the f64\nreference; default 1e-2); default config 8c8f1p.\n--probe functional (default) measures every\nrung's accuracy on the functional backend and\nsimulates only admissible rungs; --probe cycle\nrestores all-cycle-accurate probing",
+        help: "accuracy-aware precision autotuning: select the\ncheapest admissible ladder rung per benchmark\nunder --budget (relative L2 error vs the f64\nreference; default 1e-2); default config 8c8f1p.\n--probe functional (default) measures every\nrung's accuracy on the functional backend and\nsimulates only admissible rungs; --probe\ncompiled probes on the translated compiled tier\n(same accuracy, faster); --probe cycle restores\nall-cycle-accurate probing",
         wire_flags: &["--budget", "--probe"],
         wire: true,
     },
@@ -836,11 +836,15 @@ mod tests {
         assert_eq!(c.args, vec!["run", "8c4f1p", "FIR", "scalar"]);
         let r = cli(&["run", "--backend", "ref"]).unwrap();
         assert_eq!(r.backend, Some(BackendKind::Reference));
+        let co = cli(&["run", "--backend", "compiled"]).unwrap();
+        assert_eq!(co.backend, Some(BackendKind::Compiled));
         assert!(cli(&["run", "--backend"]).is_err(), "missing value must fail");
         assert!(cli(&["run", "--backend", "turbo"]).is_err());
 
         let c = cli(&["tune", "--probe", "functional"]).unwrap();
         assert_eq!(c.probe, Some(tuner::Probe::Functional));
+        let q = cli(&["tune", "--probe", "compiled"]).unwrap();
+        assert_eq!(q.probe, Some(tuner::Probe::Compiled));
         let p = cli(&["tune", "--probe", "cycle"]).unwrap();
         assert_eq!(p.probe, Some(tuner::Probe::CycleAccurate));
         assert!(cli(&["tune", "--probe"]).is_err());

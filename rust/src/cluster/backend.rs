@@ -6,22 +6,25 @@
 //! program on a [`ClusterConfig`] at a given occupancy and returns the
 //! **architectural** result — final register files, the memory image, the
 //! retired-instruction count — plus cycle-accurate [`RunStats`] when the
-//! backend models time at all. Three tiers implement it:
+//! backend models time at all. Four tiers implement it:
 //!
 //! | backend | timing | use |
 //! |---|---|---|
 //! | [`EventBackend`] | cycle-accurate (event engine) | measurements (default) |
 //! | [`ReferenceBackend`] | cycle-accurate (per-cycle spec) | differential wall |
 //! | [`crate::cluster::FunctionalBackend`] | none | accuracy probes, goldens |
+//! | [`crate::cluster::CompiledBackend`] | none | fast probes, large sweeps |
 //!
-//! All three execute the same predecoded stream with the same functional
-//! semantics (`Core::exec_*`, `Memory::amo`, the event unit, the DMA
-//! front-end), so their architectural results agree — enforced by the
-//! three-way wall in `tests/differential.rs`. What the tier changes is the
-//! *price*: the functional backend interprets in program order with no
-//! event queue or hazard bookkeeping, targeting well over an order of
-//! magnitude more instruction throughput than the event engine
-//! (`benches/backend.rs` gates ≥ 50×), which is what lets the tuner probe
+//! All four execute the same functional semantics (`Core::exec_*`,
+//! `Memory::amo`, the event unit, the DMA front-end), so their
+//! architectural results agree — enforced by the four-way wall in
+//! `tests/differential.rs`. What the tier changes is the *price*: the
+//! functional backend interprets the predecoded stream in program order
+//! with no event queue or hazard bookkeeping (`benches/backend.rs` gates
+//! ≥ 50× the event engine's instruction throughput), and the compiled
+//! backend translates the program once into pre-resolved dispatch steps
+//! and fused straight-line blocks, cached by content fingerprint (gated
+//! ≥ 5× the functional tier on top) — which is what lets the tuner probe
 //! every ladder rung's accuracy before paying for timing.
 //!
 //! Since the robustness PR every tier returns `Result<BackendRun,
@@ -38,6 +41,7 @@
 
 use std::fmt;
 
+use super::compiled::CompiledBackend;
 use super::counters::RunStats;
 use super::functional::FunctionalBackend;
 use super::mem::Memory;
@@ -255,12 +259,18 @@ pub enum BackendKind {
     Event,
     Reference,
     Functional,
+    Compiled,
 }
 
 impl BackendKind {
     /// Every tier, cycle-accurate first.
-    pub fn all() -> [BackendKind; 3] {
-        [BackendKind::Event, BackendKind::Reference, BackendKind::Functional]
+    pub fn all() -> [BackendKind; 4] {
+        [
+            BackendKind::Event,
+            BackendKind::Reference,
+            BackendKind::Functional,
+            BackendKind::Compiled,
+        ]
     }
 
     /// The backend instance for this selector.
@@ -269,6 +279,11 @@ impl BackendKind {
             BackendKind::Event => &EventBackend,
             BackendKind::Reference => &ReferenceBackend,
             BackendKind::Functional => &FunctionalBackend,
+            BackendKind::Compiled => {
+                // Translations go through the process-wide code cache.
+                static COMPILED: CompiledBackend = CompiledBackend::shared();
+                &COMPILED
+            }
         }
     }
 
@@ -307,6 +322,7 @@ impl BackendKind {
             "event" => Some(BackendKind::Event),
             "reference" | "ref" => Some(BackendKind::Reference),
             "functional" | "func" => Some(BackendKind::Functional),
+            "compiled" | "comp" => Some(BackendKind::Compiled),
             _ => None,
         }
     }
@@ -325,10 +341,12 @@ mod tests {
         }
         assert_eq!(BackendKind::parse("ref"), Some(BackendKind::Reference));
         assert_eq!(BackendKind::parse("func"), Some(BackendKind::Functional));
+        assert_eq!(BackendKind::parse("comp"), Some(BackendKind::Compiled));
         assert_eq!(BackendKind::parse("turbo"), None);
         assert!(BackendKind::Event.get().is_cycle_accurate());
         assert!(BackendKind::Reference.get().is_cycle_accurate());
         assert!(!BackendKind::Functional.get().is_cycle_accurate());
+        assert!(!BackendKind::Compiled.get().is_cycle_accurate());
     }
 
     #[test]
@@ -345,10 +363,10 @@ mod tests {
         assert_eq!(Watchdog::with_budget(42), Watchdog { max_cycles: 42, max_instrs: 42 });
     }
 
-    /// All three tiers agree architecturally on a staged micro program, and
+    /// All four tiers agree architecturally on a staged micro program, and
     /// only the cycle-accurate tiers report stats.
     #[test]
-    fn three_tiers_agree_on_a_micro_program() {
+    fn four_tiers_agree_on_a_micro_program() {
         use crate::cluster::mem::TCDM_BASE;
         let mut b = ProgramBuilder::new("tiers");
         b.li(1, TCDM_BASE);
@@ -372,12 +390,17 @@ mod tests {
         let ev = run(BackendKind::Event);
         let rf = run(BackendKind::Reference);
         let fu = run(BackendKind::Functional);
-        assert!(ev.stats.is_some() && rf.stats.is_some() && fu.stats.is_none());
+        let co = run(BackendKind::Compiled);
+        assert!(ev.stats.is_some() && rf.stats.is_some());
+        assert!(fu.stats.is_none() && co.stats.is_none());
         assert_eq!(ev.regs, rf.regs);
         assert_eq!(ev.regs, fu.regs);
+        assert_eq!(ev.regs, co.regs);
         assert_eq!(ev.mem.tcdm_words(), rf.mem.tcdm_words());
         assert_eq!(ev.mem.tcdm_words(), fu.mem.tcdm_words());
+        assert_eq!(ev.mem.tcdm_words(), co.mem.tcdm_words());
         assert_eq!(ev.instrs, fu.instrs);
+        assert_eq!(ev.instrs, co.instrs);
         for i in 0..8u32 {
             assert_eq!(
                 fu.mem.load(TCDM_BASE + 32 + 4 * i, crate::isa::MemSize::Word),

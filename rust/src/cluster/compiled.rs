@@ -1,0 +1,779 @@
+//! Compiled (direct-threaded) execution backend — tier four.
+//!
+//! [`CompiledBackend`] translates a [`DecodedProgram`] once into a flat,
+//! pre-resolved dispatch structure and then executes *that*, instead of
+//! re-matching on the `Insn` enum and its embedded operands at every
+//! retired instruction the way the functional interpreter does. Two
+//! structures come out of translation:
+//!
+//! * a per-pc [`Step`] array: every instruction lowered to a flat variant
+//!   with its operands and predecode flags extracted — one match on a
+//!   shallow enum per dispatch, no nested `let ... else` destructuring;
+//! * a fused-block table: each maximal straight-line run of core-local
+//!   register ops (integer ALU, load-immediate, FP-ALU permutes — the
+//!   compilable subset of the [`DecodedProgram::local_run_len`] regions,
+//!   excluding control transfers whose successor depends on run state)
+//!   becomes one [`FusedBlock`]: a superinstruction that executes the whole
+//!   run with a single watchdog charge and a single pc update.
+//!
+//! Contention points — loads/stores, atomics, FP datapath ops, event
+//! waits, barriers, DMA — fall back to exactly the functional
+//! interpreter's dispatch semantics, one instruction at a time, so the
+//! architectural result (outputs, registers, TCDM image, retired count)
+//! and the error classification (deadlock / timeout / fault) are
+//! bit-identical to the functional tier — and through it to both timed
+//! engines. `tests/differential.rs` asserts this as a four-way wall.
+//!
+//! ## Code cache
+//!
+//! Translations are content-addressed by [`DecodedProgram::fingerprint`]
+//! and kept in a [`CodeCache`] — 16-way sharded like the coordinator's
+//! `MeasurementCache`, so concurrent sweep workers hitting the same
+//! program neither contend on one lock nor translate twice. A warm
+//! `tune --probe compiled` over the full ladder performs **zero**
+//! re-translations (gated in `benches/backend.rs` and the tuner tests);
+//! the invalidation rule is the fingerprint itself — editing a kernel
+//! changes its key, and stale translations are simply never addressed
+//! again.
+//!
+//! ## Watchdog
+//!
+//! The retired-instruction budget is honored exactly: a fused block is
+//! taken only when its whole length fits under the budget; otherwise the
+//! block's ops run through the one-at-a-time path with the functional
+//! tier's charge-then-check ordering, so `Timeout { budget }` trips after
+//! the same retired count on both tiers.
+//!
+//! `benches/backend.rs` gates this tier at ≥ 5× the functional
+//! interpreter's instruction throughput on the kernel suite (≥ 250× the
+//! event engine end-to-end).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::backend::{BackendRun, ExecBackend, RunError, Watchdog};
+use super::core::{Core, CoreState};
+use super::event::EventUnit;
+use super::mem::{DmaCtl, Memory, Region, DMA_BASE};
+use crate::config::ClusterConfig;
+use crate::isa::decoded::{flag, DecodedInsn, DecodedProgram, OpClass};
+use crate::isa::insn::{AluOp, AmoOp, BrCond, FpOp, Insn, MemSize, Operand, Reg};
+use crate::isa::{regs, Program};
+use crate::transfp::FpMode;
+
+/// Retired-instruction budget per run — identical to the functional
+/// tier's, so default-watchdog behavior matches across both untimed tiers.
+const MAX_INSTRS: u64 = 2_000_000_000;
+
+/// One pre-resolved core-local register op inside a [`FusedBlock`]. Only
+/// ops with a statically-known sequential successor qualify, so executing
+/// a block never consults the hw-loop stack or the flags byte.
+#[derive(Debug, Clone, Copy)]
+enum MicroOp {
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rhs: Operand },
+    Li { rd: Reg, imm: u32 },
+    Fp { op: FpOp, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg },
+}
+
+/// A superinstruction: one maximal straight-line run of [`MicroOp`]s,
+/// executed with a single watchdog charge and a single pc update.
+#[derive(Debug)]
+struct FusedBlock {
+    /// The run's ops, in program order.
+    ops: Box<[MicroOp]>,
+    /// pc after the block (head + len — the run is sequential by
+    /// construction).
+    next: u32,
+}
+
+/// One instruction lowered to a flat, operand-resolved dispatch variant.
+/// The `flags` byte is the predecoded [`flag`] set — consulted only for
+/// the sequential-advance path (`LOOP_END_NEXT`), exactly like the
+/// functional interpreter.
+#[derive(Debug, Clone, Copy)]
+enum Step {
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rhs: Operand, flags: u8 },
+    Li { rd: Reg, imm: u32, flags: u8 },
+    Fp { op: FpOp, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg, flags: u8 },
+    Branch { cond: BrCond, rs1: Reg, rs2: Reg, target: u32, flags: u8 },
+    Jump { target: u32 },
+    HwLoop { count: Reg, start: u32, end: u32 },
+    Load { rd: Reg, base: Reg, offset: i32, post_inc: i32, size: MemSize, flags: u8 },
+    Store { rs: Reg, base: Reg, offset: i32, post_inc: i32, size: MemSize, flags: u8 },
+    Amo { op: AmoOp, rd: Reg, base: Reg, offset: i32, rs: Reg, flags: u8 },
+    Barrier { flags: u8 },
+    WaitEvent { ev: u8, flags: u8 },
+    SetEvent { ev: u8, flags: u8 },
+    End,
+}
+
+/// A translated program: dense per-pc steps plus the fused-block table.
+/// `blocks[pc]` is `Some` only at the *head* of a fused run — a branch
+/// into the middle of a run lands on the per-step path and stays correct
+/// (it just forgoes fusion until the next head).
+#[derive(Debug)]
+pub struct CompiledProgram {
+    steps: Vec<Step>,
+    blocks: Vec<Option<FusedBlock>>,
+}
+
+/// True if the instruction may join a fused block: a core-local register
+/// op whose successor is statically `pc + 1`. Control transfers (branches,
+/// jumps, hw-loop setup, `End`) are local but end a block, as does any op
+/// sitting on a hw-loop back-edge (`LOOP_END_NEXT`), whose successor
+/// depends on the loop stack at run time.
+fn fusable(d: &DecodedInsn) -> bool {
+    matches!(d.class, OpClass::Alu | OpClass::Li | OpClass::FpAlu) && !d.has(flag::LOOP_END_NEXT)
+}
+
+/// Lower one decoded instruction to its flat dispatch variant.
+fn step_of(d: &DecodedInsn) -> Step {
+    let flags = d.flags;
+    match d.insn {
+        Insn::Alu { op, rd, rs1, rhs } => Step::Alu { op, rd, rs1, rhs, flags },
+        Insn::Li { rd, imm } => Step::Li { rd, imm, flags },
+        Insn::Load { rd, base, offset, post_inc, size } => {
+            Step::Load { rd, base, offset, post_inc, size, flags }
+        }
+        Insn::Store { rs, base, offset, post_inc, size } => {
+            Step::Store { rs, base, offset, post_inc, size, flags }
+        }
+        Insn::Branch { cond, rs1, rs2, target } => Step::Branch { cond, rs1, rs2, target, flags },
+        Insn::Jump { target } => Step::Jump { target },
+        Insn::HwLoop { count, start, end } => Step::HwLoop { count, start, end },
+        Insn::Fp { op, mode, rd, rs1, rs2 } => Step::Fp { op, mode, rd, rs1, rs2, flags },
+        Insn::Amo { op, rd, base, offset, rs } => Step::Amo { op, rd, base, offset, rs, flags },
+        Insn::Barrier => Step::Barrier { flags },
+        Insn::WaitEvent { ev } => Step::WaitEvent { ev, flags },
+        Insn::SetEvent { ev } => Step::SetEvent { ev, flags },
+        Insn::End => Step::End,
+    }
+}
+
+/// Lower one fusable instruction to its block micro-op.
+fn micro_of(d: &DecodedInsn) -> MicroOp {
+    match d.insn {
+        Insn::Alu { op, rd, rs1, rhs } => MicroOp::Alu { op, rd, rs1, rhs },
+        Insn::Li { rd, imm } => MicroOp::Li { rd, imm },
+        Insn::Fp { op, mode, rd, rs1, rs2 } => MicroOp::Fp { op, mode, rd, rs1, rs2 },
+        ref other => unreachable!("non-fusable insn in a fused run: {other:?}"),
+    }
+}
+
+/// Translate a predecoded program: lower every pc to a [`Step`] and fuse
+/// every maximal straight-line run of length ≥ 2 into a block at its head.
+fn translate(decoded: &DecodedProgram) -> CompiledProgram {
+    let n = decoded.insns.len();
+    let steps: Vec<Step> = decoded.insns.iter().map(step_of).collect();
+    let mut blocks: Vec<Option<FusedBlock>> = (0..n).map(|_| None).collect();
+    let mut pc = 0usize;
+    while pc < n {
+        if !fusable(&decoded.insns[pc]) {
+            pc += 1;
+            continue;
+        }
+        let start = pc;
+        while pc < n && fusable(&decoded.insns[pc]) {
+            pc += 1;
+        }
+        // A one-op "block" would only add an indirection over its step.
+        if pc - start >= 2 {
+            let ops: Box<[MicroOp]> = decoded.insns[start..pc].iter().map(micro_of).collect();
+            blocks[start] = Some(FusedBlock { ops, next: pc as u32 });
+        }
+    }
+    CompiledProgram { steps, blocks }
+}
+
+/// Execute one fused micro-op. No pc bookkeeping — the caller sets
+/// `pc = block.next` once after the run.
+#[inline(always)]
+fn exec_micro(c: &mut Core, op: &MicroOp) {
+    match *op {
+        MicroOp::Alu { op, rd, rs1, rhs } => c.exec_alu(op, rd, rs1, rhs),
+        MicroOp::Li { rd, imm } => c.set_reg(rd, imm),
+        MicroOp::Fp { op, mode, rd, rs1, rs2 } => {
+            let _ = c.exec_fp(op, mode, rd, rs1, rs2);
+        }
+    }
+}
+
+/// Content-addressed translation cache, shared across sweep workers.
+///
+/// Sharded 16 ways on the program fingerprint (the same discipline as the
+/// coordinator's `MeasurementCache`): concurrent workers translating
+/// *different* programs never contend, and workers asking for the *same*
+/// program serialize on one shard and translate exactly once — the miss
+/// counter is therefore an exact count of translations performed, which is
+/// what the warm-probe economics gates audit.
+pub struct CodeCache {
+    shards: [Mutex<HashMap<u64, Arc<CompiledProgram>>>; 16],
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for CodeCache {
+    fn default() -> CodeCache {
+        CodeCache::new()
+    }
+}
+
+impl CodeCache {
+    /// An empty cache.
+    pub fn new() -> CodeCache {
+        CodeCache {
+            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache every [`CompiledBackend::shared`] instance
+    /// uses (CLI runs, sweeps and benches all share translations).
+    pub fn global() -> &'static CodeCache {
+        static GLOBAL: OnceLock<CodeCache> = OnceLock::new();
+        GLOBAL.get_or_init(CodeCache::new)
+    }
+
+    /// The translation for `decoded`, reused if its fingerprint is
+    /// resident. Translation happens under the shard lock, so a program is
+    /// translated exactly once no matter how many workers race on it.
+    pub fn translate(&self, decoded: &DecodedProgram) -> Arc<CompiledProgram> {
+        let key = decoded.fingerprint();
+        let shard = &self.shards[(key as usize) & 15];
+        let mut map = shard.lock().unwrap();
+        if let Some(hit) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        let compiled = Arc::new(translate(decoded));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        map.insert(key, Arc::clone(&compiled));
+        compiled
+    }
+
+    /// (hits, misses) so far. `misses` equals translations performed.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Number of resident translations.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// True if no translation is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The compiled (direct-threaded) execution tier.
+///
+/// `CompiledBackend::shared()` uses the process-wide [`CodeCache`]; tests
+/// and engines that need isolated hit/miss accounting construct one with
+/// [`CompiledBackend::with_cache`].
+pub struct CompiledBackend {
+    cache: Option<Arc<CodeCache>>,
+}
+
+impl CompiledBackend {
+    /// A backend over the process-wide code cache (`const`, so it can back
+    /// the `&'static dyn ExecBackend` the selector hands out).
+    pub const fn shared() -> CompiledBackend {
+        CompiledBackend { cache: None }
+    }
+
+    /// A backend over an explicit cache (isolated accounting).
+    pub fn with_cache(cache: Arc<CodeCache>) -> CompiledBackend {
+        CompiledBackend { cache: Some(cache) }
+    }
+
+    /// The cache this backend translates through.
+    pub fn cache(&self) -> &CodeCache {
+        match &self.cache {
+            Some(c) => c,
+            None => CodeCache::global(),
+        }
+    }
+}
+
+impl ExecBackend for CompiledBackend {
+    fn name(&self) -> &'static str {
+        "compiled"
+    }
+
+    fn is_cycle_accurate(&self) -> bool {
+        false
+    }
+
+    fn run_watched(
+        &self,
+        cfg: &ClusterConfig,
+        program: &Program,
+        workers: usize,
+        stage: &mut dyn FnMut(&mut Memory),
+        wd: Watchdog,
+    ) -> Result<BackendRun, RunError> {
+        let decoded = DecodedProgram::decode(program);
+        let compiled = self.cache().translate(&decoded);
+        run_compiled_watched(cfg, &compiled, workers, stage, wd.max_instrs)
+    }
+}
+
+/// Execute a translated program. The scheduling model is byte-for-byte the
+/// functional interpreter's: cores run round-robin, each to its next
+/// blocking point; a full pass with no runnable core while some sleep is a
+/// [`RunError::Deadlock`]; the retired-instruction watchdog surfaces as
+/// [`RunError::Timeout`] after the identical retired count.
+pub fn run_compiled_watched(
+    cfg: &ClusterConfig,
+    compiled: &CompiledProgram,
+    workers: usize,
+    stage: &mut dyn FnMut(&mut Memory),
+    max_instrs: u64,
+) -> Result<BackendRun, RunError> {
+    assert!(workers >= 1 && workers <= cfg.cores, "occupancy out of range");
+    let n = cfg.cores;
+    // Mirror `Cluster::new` + `limit_active_cores` exactly, so inactive
+    // cores' register files match the other tiers bit-for-bit.
+    let mut cores: Vec<Core> = (0..n).map(|i| Core::new(i, n)).collect();
+    for c in cores.iter_mut().skip(workers) {
+        c.state = CoreState::Done;
+    }
+    for c in cores.iter_mut().take(workers) {
+        c.set_reg(regs::NCORES, workers as u32);
+    }
+    let mut mem = Memory::new(cfg);
+    stage(&mut mem);
+    let mut event = EventUnit::new(workers);
+    let mut dmac = DmaCtl::default();
+
+    let mut total = 0u64;
+    loop {
+        let mut ran = false;
+        for ci in 0..workers {
+            if !matches!(cores[ci].state, CoreState::Running) {
+                continue;
+            }
+            ran = true;
+            run_core(
+                ci,
+                compiled,
+                workers,
+                &mut cores,
+                &mut mem,
+                &mut event,
+                &mut dmac,
+                &mut total,
+                max_instrs,
+            )?;
+        }
+        if !ran {
+            break;
+        }
+    }
+    let asleep = cores.iter().filter(|c| matches!(c.state, CoreState::Sleeping { .. })).count();
+    if asleep > 0 {
+        return Err(RunError::Deadlock { asleep });
+    }
+    Ok(BackendRun { regs: cores.iter().map(|c| c.regs).collect(), mem, stats: None, instrs: total })
+}
+
+/// [`run_compiled_watched`] under the default instruction budget.
+pub fn run_compiled(
+    cfg: &ClusterConfig,
+    compiled: &CompiledProgram,
+    workers: usize,
+    stage: &mut dyn FnMut(&mut Memory),
+) -> Result<BackendRun, RunError> {
+    run_compiled_watched(cfg, compiled, workers, stage, MAX_INSTRS)
+}
+
+/// Run core `ci` until it blocks (event sleep, incomplete barrier) or
+/// terminates. Fused blocks execute with one batched watchdog charge when
+/// the whole block fits under the budget; near the budget (and at every pc
+/// that is not a block head) dispatch is one [`Step`] at a time with the
+/// functional tier's exact charge-then-check ordering, so the retired
+/// count at a [`RunError::Timeout`] is tier-identical.
+#[allow(clippy::too_many_arguments)]
+fn run_core(
+    ci: usize,
+    compiled: &CompiledProgram,
+    workers: usize,
+    cores: &mut [Core],
+    mem: &mut Memory,
+    event: &mut EventUnit,
+    dmac: &mut DmaCtl,
+    total: &mut u64,
+    max_instrs: u64,
+) -> Result<(), RunError> {
+    loop {
+        // ---- Fused fast path: whole straight-line runs at a time.
+        {
+            let c = &mut cores[ci];
+            while let Some(block) = compiled.blocks[c.pc as usize].as_ref() {
+                let len = block.ops.len() as u64;
+                if *total + len > max_instrs {
+                    // Too close to the budget to batch — fall through to
+                    // the per-step path, which charges one at a time and
+                    // trips the watchdog at the exact functional count.
+                    break;
+                }
+                *total += len;
+                c.counters.instrs += len;
+                for op in block.ops.iter() {
+                    exec_micro(c, op);
+                }
+                c.pc = block.next;
+            }
+        }
+
+        // ---- Per-step path: one pre-resolved instruction.
+        let pc = cores[ci].pc as usize;
+        *total += 1;
+        if *total > max_instrs {
+            return Err(RunError::Timeout { budget: max_instrs });
+        }
+        cores[ci].counters.instrs += 1;
+        match compiled.steps[pc] {
+            Step::Alu { op, rd, rs1, rhs, flags } => {
+                let c = &mut cores[ci];
+                c.exec_alu(op, rd, rs1, rhs);
+                c.advance_decoded(flags);
+            }
+            Step::Li { rd, imm, flags } => {
+                let c = &mut cores[ci];
+                c.set_reg(rd, imm);
+                c.advance_decoded(flags);
+            }
+            Step::Fp { op, mode, rd, rs1, rs2, flags } => {
+                let c = &mut cores[ci];
+                let _ = c.exec_fp(op, mode, rd, rs1, rs2);
+                c.advance_decoded(flags);
+            }
+            Step::Branch { cond, rs1, rs2, target, flags } => {
+                let c = &mut cores[ci];
+                if c.branch_taken(cond, rs1, rs2) {
+                    c.pc = target;
+                } else {
+                    c.advance_decoded(flags);
+                }
+            }
+            Step::Jump { target } => cores[ci].pc = target,
+            Step::HwLoop { count, start, end } => {
+                let c = &mut cores[ci];
+                let iters = c.reg(count);
+                if iters == 0 {
+                    c.pc = end;
+                } else {
+                    c.hwloops.push((start, end, iters));
+                    c.pc = start;
+                }
+            }
+            Step::End => {
+                cores[ci].state = CoreState::Done;
+                return Ok(());
+            }
+            Step::Load { rd, base, offset, post_inc, size, flags } => {
+                let c = &mut cores[ci];
+                let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                match mem.region_of(addr) {
+                    Region::Dma => {
+                        // Transfers complete at trigger time, so `STATUS`
+                        // reads as drained — same as the functional tier.
+                        let v = dmac.load(addr - DMA_BASE, u64::MAX);
+                        c.set_reg(rd, v);
+                    }
+                    _ => c.exec_load(mem, rd, addr, size),
+                }
+                c.advance_decoded(flags);
+            }
+            Step::Store { rs, base, offset, post_inc, size, flags } => {
+                let c = &mut cores[ci];
+                let addr = c.mem_addr_and_postinc(base, offset, post_inc);
+                // Value read after the post-increment, like the engines.
+                let v = c.reg(rs);
+                match mem.region_of(addr) {
+                    Region::Dma => dmac.store(mem, addr - DMA_BASE, v, 0),
+                    _ => mem.store(addr, size, v),
+                }
+                c.advance_decoded(flags);
+            }
+            Step::Amo { op, rd, base, offset, rs, flags } => {
+                let c = &mut cores[ci];
+                let addr = (c.reg(base) as i64 + offset as i64) as u32;
+                if !matches!(mem.region_of(addr), Region::Tcdm) {
+                    return Err(RunError::Fault(format!("atomic outside TCDM at {addr:#x}")));
+                }
+                let v = c.reg(rs);
+                let old = mem.amo(op, addr, v);
+                c.set_reg(rd, old);
+                c.advance_decoded(flags);
+            }
+            Step::WaitEvent { ev, flags } => {
+                cores[ci].advance_decoded(flags);
+                if !event.wait_event(ci, ev) {
+                    cores[ci].state = CoreState::Sleeping { since: 0 };
+                    return Ok(());
+                }
+            }
+            Step::SetEvent { ev, flags } => {
+                cores[ci].advance_decoded(flags);
+                for w in event.set_event(ev) {
+                    cores[w].state = CoreState::Running;
+                }
+            }
+            Step::Barrier { flags } => {
+                cores[ci].advance_decoded(flags);
+                if event.arrive(ci, 0).is_some() {
+                    // Wake every barrier sleeper; cores parked on a
+                    // software event line stay asleep (only a SetEvent may
+                    // release them) — same rule as every other tier.
+                    for (w, c) in cores.iter_mut().enumerate().take(workers) {
+                        if matches!(c.state, CoreState::Sleeping { .. })
+                            && !event.is_event_waiting(w)
+                        {
+                            c.state = CoreState::Running;
+                        }
+                    }
+                } else {
+                    cores[ci].state = CoreState::Sleeping { since: 0 };
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::functional::FunctionalBackend;
+    use crate::isa::ProgramBuilder;
+    use crate::kernels::{Benchmark, Variant};
+
+    /// The compiled tier reproduces the functional tier bit-for-bit on
+    /// kernels: outputs, registers, TCDM image and retired counts.
+    #[test]
+    fn matches_functional_tier_on_kernels() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        for (b, v) in [
+            (Benchmark::Fir, Variant::Scalar),
+            (Benchmark::Matmul, Variant::VEC),
+            (Benchmark::Dwt, Variant::SCALAR_F16),
+        ] {
+            let w = b.build(v, &cfg);
+            for workers in [1usize, 3, 8] {
+                let (fu, fu_out) = w.run_on_backend(&cfg, workers, &FunctionalBackend).unwrap();
+                let (co, co_out) =
+                    w.run_on_backend(&cfg, workers, &CompiledBackend::shared()).unwrap();
+                let ctx = format!("{} {} with {workers} workers", b.name(), v.label());
+                assert_eq!(fu_out, co_out, "{ctx}: outputs differ");
+                assert_eq!(fu.regs, co.regs, "{ctx}: registers differ");
+                assert_eq!(fu.mem.tcdm_words(), co.mem.tcdm_words(), "{ctx}: TCDM differs");
+                assert_eq!(fu.instrs, co.instrs, "{ctx}: retired counts differ");
+                assert!(co.stats.is_none(), "compiled tier is architectural-only");
+            }
+        }
+    }
+
+    /// Translation shape: straight-line register runs fuse into blocks at
+    /// their heads, contention points and hw-loop back-edges do not.
+    #[test]
+    fn fused_blocks_cover_exactly_the_compilable_runs() {
+        let mut b = ProgramBuilder::new("blocks");
+        b.li(1, 7); // 0: fusable ┐
+        b.addi(2, 1, 1); // 1: fusable ┘ block [0,2)
+        b.lw(3, 1, 0); // 2: contention point
+        b.li(4, 2); // 3: fusable, but the run below is length 1 + loop
+        b.hwloop(4); // 4: control — never fused
+        b.addi(5, 5, 1); // 5: fusable ┐
+        b.addi(6, 6, 1); // 6: back-edge (LOOP_END_NEXT) — not fusable
+        b.hwloop_end();
+        b.barrier(); // 7
+        b.end(); // 8
+        let program = b.build();
+        let decoded = DecodedProgram::decode(&program);
+        let compiled = translate(&decoded);
+        assert!(compiled.blocks[0].is_some(), "run head must carry a block");
+        let blk = compiled.blocks[0].as_ref().unwrap();
+        assert_eq!((blk.ops.len(), blk.next), (2, 2));
+        for pc in 1..compiled.blocks.len() {
+            assert!(compiled.blocks[pc].is_none(), "pc {pc} must not be a block head");
+        }
+        assert_eq!(compiled.steps.len(), decoded.insns.len());
+    }
+
+    /// A jump into the middle of a fused run executes correctly: mid-run
+    /// pcs carry no block head, so the per-step path takes over there.
+    #[test]
+    fn branch_into_block_middle_is_correct() {
+        let mut b = ProgramBuilder::new("midjump");
+        b.li(9, 1); // 0 ┐
+        b.addi(2, 2, 10); // 1 │ fused block [0,3)
+        b.label("mid");
+        b.addi(2, 2, 100); // 2 ┘ ← jump target (mid-run)
+        b.beq(9, regs::ZERO, "done"); // 3: taken on the second pass
+        b.li(9, 0); // 4
+        b.j("mid"); // 5: backward jump into the run's middle
+        b.label("done");
+        b.end(); // 6
+        let program = b.build();
+        let compiled = translate(&DecodedProgram::decode(&program));
+        let head = compiled.blocks[0].as_ref().expect("run head at pc 0");
+        assert_eq!((head.ops.len(), head.next), (3, 3));
+        assert!(compiled.blocks[2].is_none(), "mid-run pc must not be a block head");
+
+        let cfg = ClusterConfig::new(8, 2, 0);
+        let fu = FunctionalBackend.run_program(&cfg, &program, 1, &mut |_| {}).unwrap();
+        let co = CompiledBackend::shared().run_program(&cfg, &program, 1, &mut |_| {}).unwrap();
+        assert_eq!(fu.regs, co.regs);
+        assert_eq!(fu.instrs, co.instrs);
+        // 10 + 100 on the first pass, + 100 after the mid-entry jump.
+        assert_eq!(co.regs[0][2], 210);
+    }
+
+    /// Watchdog parity (satellite): across budgets spanning the exact
+    /// retired count, the compiled tier returns the identical
+    /// `Ok`/`Timeout { budget }` outcome as the functional tier — the
+    /// batched block charge never shifts the trip point.
+    #[test]
+    fn watchdog_timeout_parity_with_functional_tier() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let w = Benchmark::Fir.build(Variant::Scalar, &cfg);
+        let (instrs, _) = w.run_functional(&cfg, cfg.cores).unwrap();
+        for budget in [1, 2, instrs - 1, instrs, instrs + 1] {
+            let wd = Watchdog::with_budget(budget);
+            let fu = FunctionalBackend.run_watched(&cfg, &w.program, cfg.cores, &mut |mem| {
+                w.stage_into(mem)
+            }, wd);
+            let co = CompiledBackend::shared().run_watched(
+                &cfg,
+                &w.program,
+                cfg.cores,
+                &mut |mem| w.stage_into(mem),
+                wd,
+            );
+            match (fu, co) {
+                (Ok(f), Ok(c)) => {
+                    assert!(budget >= instrs, "budget {budget} must not complete");
+                    assert_eq!(f.instrs, c.instrs, "budget {budget}: retired counts differ");
+                }
+                (Err(fe), Err(ce)) => {
+                    assert!(budget < instrs, "budget {budget} must complete");
+                    assert_eq!(fe, RunError::Timeout { budget });
+                    assert_eq!(ce, RunError::Timeout { budget });
+                }
+                (f, c) => panic!("budget {budget}: outcomes diverge: {f:?} vs {c:?}"),
+            }
+        }
+    }
+
+    /// Code-cache economics: the first translation is a miss, every rerun
+    /// of the same program is a hit, and distinct programs get distinct
+    /// entries. Misses count translations exactly.
+    #[test]
+    fn code_cache_translates_each_program_exactly_once() {
+        let cache = Arc::new(CodeCache::new());
+        let backend = CompiledBackend::with_cache(Arc::clone(&cache));
+        let cfg = ClusterConfig::new(8, 2, 0);
+        let w = Benchmark::Fir.build(Variant::Scalar, &cfg);
+        assert!(cache.is_empty());
+        for rep in 0..5 {
+            w.run_on_backend(&cfg, cfg.cores, &backend).unwrap();
+            let (hits, misses) = cache.stats();
+            assert_eq!((hits, misses), (rep, 1), "rep {rep}");
+        }
+        let w2 = Benchmark::Matmul.build(Variant::VEC, &cfg);
+        w2.run_on_backend(&cfg, cfg.cores, &backend).unwrap();
+        assert_eq!(cache.stats(), (4, 2));
+        assert_eq!(cache.len(), 2);
+    }
+
+    /// Concurrent workers racing on one program translate it exactly once
+    /// (the shard lock is held across translation).
+    #[test]
+    fn concurrent_translation_is_exactly_once() {
+        let cache = CodeCache::new();
+        let cfg = ClusterConfig::new(8, 2, 0);
+        let w = Benchmark::Conv.build(Variant::Scalar, &cfg);
+        let decoded = DecodedProgram::decode(&w.program);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..4 {
+                        cache.translate(&decoded);
+                    }
+                });
+            }
+        });
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 1, "one translation no matter the race");
+        assert_eq!(hits, 31);
+        assert_eq!(cache.len(), 1);
+    }
+
+    /// Error-class parity on the structured error paths: deadlock and
+    /// fault classify identically to the functional tier.
+    #[test]
+    fn error_classification_matches_functional_tier() {
+        let cfg = ClusterConfig::new(8, 8, 0);
+        // Deadlock: workers park on a line nobody raises.
+        let mut b = ProgramBuilder::new("dead-c");
+        b.bne(regs::CORE_ID, regs::ZERO, "worker");
+        b.end();
+        b.label("worker");
+        b.wait_event(9);
+        b.end();
+        let p = b.build();
+        let fu = FunctionalBackend.run_program(&cfg, &p, 8, &mut |_| {}).unwrap_err();
+        let co = CompiledBackend::shared().run_program(&cfg, &p, 8, &mut |_| {}).unwrap_err();
+        assert_eq!(fu, RunError::Deadlock { asleep: 7 });
+        assert_eq!(co, fu);
+
+        // Fault: an atomic outside TCDM.
+        let mut b = ProgramBuilder::new("fault-c");
+        b.li(1, 0x1C00_0000); // L2 — not a legal atomic target
+        b.li(2, 1);
+        b.amo_add(3, 1, 0, 2);
+        b.end();
+        let p = b.build();
+        let fu = FunctionalBackend.run_program(&cfg, &p, 1, &mut |_| {}).unwrap_err();
+        let co = CompiledBackend::shared().run_program(&cfg, &p, 1, &mut |_| {}).unwrap_err();
+        assert_eq!(fu.class(), "fault");
+        assert_eq!(co, fu);
+    }
+
+    /// The event-handshake blocking semantics survive compilation: parked
+    /// cores wake on the set, buffered events are consumed, and the run is
+    /// deterministic.
+    #[test]
+    fn event_handshake_matches_functional_tier() {
+        let prog = || {
+            let mut b = ProgramBuilder::new("ev-c");
+            b.beq(regs::CORE_ID, regs::ZERO, "master");
+            b.wait_event(5);
+            b.j("join");
+            b.label("master");
+            b.li(1, 100);
+            b.hwloop(1);
+            b.addi(2, 2, 1);
+            b.hwloop_end();
+            b.set_event(5);
+            b.wait_event(5); // consumes the master's own buffered event
+            b.label("join");
+            b.barrier();
+            b.end();
+            b.build()
+        };
+        let cfg = ClusterConfig::new(8, 2, 1);
+        let fu = FunctionalBackend.run_program(&cfg, &prog(), 8, &mut |_| {}).unwrap();
+        let co = CompiledBackend::shared().run_program(&cfg, &prog(), 8, &mut |_| {}).unwrap();
+        assert_eq!(fu.regs, co.regs);
+        assert_eq!(fu.instrs, co.instrs);
+        assert_eq!(co.regs[0][2], 100, "master ran its pre-signal work");
+        assert_eq!(fu.mem.tcdm_words(), co.mem.tcdm_words());
+    }
+}

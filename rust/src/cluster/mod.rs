@@ -35,6 +35,7 @@
 //! following slot (§5.3.3) — modelled as a 1-cycle `wb_stall`.
 
 pub mod backend;
+pub mod compiled;
 pub mod core;
 pub mod counters;
 pub mod engine;
@@ -48,6 +49,7 @@ pub mod reference;
 pub use backend::{
     BackendKind, BackendRun, EventBackend, ExecBackend, ReferenceBackend, RunError, Watchdog,
 };
+pub use compiled::{CodeCache, CompiledBackend};
 pub use functional::FunctionalBackend;
 
 use crate::config::ClusterConfig;

@@ -72,7 +72,15 @@ use crate::tuner::accuracy::ErrorStats;
 /// activity-based power/energy figures derived from them — shift by one
 /// cycle per core, so v4 rows are rejected by version and re-simulated
 /// (EXPERIMENTS.md §Trace).
-pub const ENGINE_VERSION: u32 = 5;
+///
+/// v6: [`DecodedProgram::fingerprint`] switched from hashing `Debug`
+/// renderings to an unambiguous structural byte encoding (the compiled
+/// tier's code-cache key made the textual form untenable), which changes
+/// every workload hash and therefore every address in this cache. v5 rows
+/// can no longer be looked up under their old keys; the version bump
+/// retires them cleanly — they miss by version and degrade to a cold
+/// start, never to a silent stale hit (EXPERIMENTS.md §Backends).
+pub const ENGINE_VERSION: u32 = 6;
 
 /// Execution fidelity of a resolved design-space point — which backend
 /// tier produced (or may serve) the measurement.
@@ -373,9 +381,10 @@ impl MeasurementCache {
     /// in a deterministic row order; returns the entry count.
     ///
     /// The write is **atomic**: the file is staged next to `path` (a
-    /// `.tmp-<pid>-<seq>` sibling, unique per process *and* per save, so
-    /// concurrent savers — other processes or other threads of this one —
-    /// never stage into each other) and then `rename`d over the target,
+    /// `.tmp-<pid>-<tid>-<seq>` sibling, unique per process, per thread
+    /// *and* per save, so concurrent savers — other processes or other
+    /// threads of this one — never stage into each other) and then
+    /// `rename`d over the target,
     /// which on POSIX replaces the name in one step. Concurrent processes
     /// sharing `TRANSPFP_CACHE_DIR` therefore observe either the complete
     /// old file or the complete new one — never a torn row. (A torn row
@@ -403,8 +412,13 @@ impl MeasurementCache {
             out.push('\n');
         }
         let seq = SAVE_SEQ.fetch_add(1, Ordering::Relaxed);
+        // The staging name folds in the thread id on top of pid + counter:
+        // the counter alone already makes in-process names unique, but the
+        // tid keeps them unique even across a future counter reset or a
+        // fork, and makes a leaked staging file attributable.
+        let tid = std::thread::current().id();
         let mut tmp = path.as_os_str().to_owned();
-        tmp.push(format!(".tmp-{}-{seq}", std::process::id()));
+        tmp.push(format!(".tmp-{}-{tid:?}-{seq}", std::process::id()));
         let tmp = std::path::PathBuf::from(tmp);
         std::fs::write(&tmp, out)?;
         match std::fs::rename(&tmp, path) {
@@ -1147,6 +1161,82 @@ mod tests {
         assert_eq!(cache.load_csv(&path).unwrap(), 0, "v4 rows must not be served");
         assert!(path.exists(), "a merely-stale file is not evidence — no quarantine");
         assert!(cache.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The v6 bump (structural fingerprint encoding) retires v5 rows: a
+    /// well-formed pre-bump row loads zero entries — its keys were minted
+    /// under the old textual hash and can never be addressed again —
+    /// without quarantining the file (the row is valid, just from an older
+    /// engine). The cache degrades to a cold start, exactly as the v4→v5
+    /// migration did.
+    #[test]
+    fn pre_v6_rows_are_retired_not_quarantined() {
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let v5_key = CacheKey {
+            workload: 0x0f1_c0de,
+            cfg,
+            bench: Benchmark::Matmul,
+            variant: Variant::Scalar,
+            workers: cfg.cores,
+            fidelity: Fidelity::CycleAccurate,
+            engine_version: 5,
+        };
+        let path = tmp_path("cache-v5-row.csv");
+        let body = format!("{MAGIC}\n{}\n", encode_row(&v5_key, &sample_measurement(&cfg)));
+        std::fs::write(&path, &body).unwrap();
+        let cache = MeasurementCache::new();
+        assert_eq!(cache.load_csv(&path).unwrap(), 0, "v5 rows must not be served");
+        assert!(path.exists(), "a merely-stale file is not evidence — no quarantine");
+        assert!(cache.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Satellite gate (PR 9): concurrent in-process persistence is safe.
+    /// Many threads saving the same destination simultaneously each stage
+    /// into a distinct temp file (pid + thread id + per-process save
+    /// counter), so every publish is a complete file: the survivor loads in
+    /// full, nothing is quarantined, and no staging file leaks.
+    #[test]
+    fn concurrent_saves_never_corrupt_or_quarantine() {
+        let cache = MeasurementCache::new();
+        let cfg = ClusterConfig::new(8, 4, 1);
+        for i in 0..16u64 {
+            let key = CacheKey {
+                workload: 0x1000 + i,
+                cfg,
+                bench: Benchmark::Fir,
+                variant: Variant::Scalar,
+                workers: cfg.cores,
+                fidelity: Fidelity::CycleAccurate,
+                engine_version: ENGINE_VERSION,
+            };
+            cache.insert(key, sample_measurement(&cfg));
+        }
+        let path = tmp_path("cache-concurrent-persist.csv");
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..8 {
+                        assert_eq!(cache.save_csv(&path).unwrap(), 16);
+                    }
+                });
+            }
+        });
+        // The destination is a complete, loadable file…
+        let loaded = MeasurementCache::new();
+        assert_eq!(loaded.load_csv(&path).unwrap(), 16, "published file must be complete");
+        assert!(path.exists(), "a clean load leaves the file in place");
+        // …and no `.tmp-*` / `.quarantined-*` sibling was left behind.
+        let dir = path.parent().unwrap();
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let f = entry.unwrap().file_name().to_string_lossy().into_owned();
+            assert!(
+                !(f.starts_with(&name) && f != name),
+                "sibling left behind by concurrent saves: {f}"
+            );
+        }
         std::fs::remove_file(&path).ok();
     }
 

@@ -12,18 +12,44 @@
 //!
 //! Protocol: [`SingleFlight::begin`] either resolves immediately (the value
 //! appeared since the caller planned), returns [`Begin::Follow`] with a slot
-//! to [`FlightSlot::wait`] on, or returns [`Begin::Lead`] — the caller is
-//! now the leader and **must** eventually [`SingleFlight::publish`] for that
-//! key (on success *and* on failure), or followers would block forever.
+//! to [`FlightSlot::wait`] on, or returns [`Begin::Lead`] carrying a
+//! [`LeadGuard`] — an RAII leadership token. The leader closes the flight
+//! with [`LeadGuard::publish`]; if the guard is instead **dropped without
+//! publishing** (the leader's computation panicked and unwound past it),
+//! the flight is closed *poisoned* and every follower's `wait` returns
+//! [`LeaderPoisoned`] instead of blocking forever. Leadership can no longer
+//! be acquired without also acquiring the obligation to release it.
 
 use std::collections::HashMap;
+use std::fmt;
 use std::hash::Hash;
 use std::sync::{Arc, Condvar, Mutex};
 
+/// What a leader hands the slot: a real value, or the tombstone left by a
+/// [`LeadGuard`] that unwound before publishing.
+enum Published<V> {
+    Value(V),
+    Poisoned,
+}
+
+/// A follower's wait ended on a flight whose leader panicked before
+/// publishing. The computation was never completed — the caller should
+/// surface a structured error (or retry, becoming the new leader).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LeaderPoisoned;
+
+impl fmt::Display for LeaderPoisoned {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "flight leader panicked before publishing")
+    }
+}
+
+impl std::error::Error for LeaderPoisoned {}
+
 /// A parked computation: followers wait on the condvar until the leader
-/// publishes its result.
+/// publishes its result — or until its [`LeadGuard`] drops poisoned.
 pub struct FlightSlot<V> {
-    result: Mutex<Option<V>>,
+    result: Mutex<Option<Published<V>>>,
     done: Condvar,
 }
 
@@ -32,20 +58,60 @@ impl<V: Clone> FlightSlot<V> {
         FlightSlot { result: Mutex::new(None), done: Condvar::new() }
     }
 
-    /// Block until the leader publishes, then return a clone of its result.
-    pub fn wait(&self) -> V {
+    /// Block until the leader closes the flight, then return a clone of its
+    /// value — or [`LeaderPoisoned`] if the leader unwound first.
+    pub fn wait(&self) -> Result<V, LeaderPoisoned> {
         let mut slot = self.result.lock().unwrap();
-        while slot.is_none() {
-            slot = self.done.wait(slot).unwrap();
+        loop {
+            match &*slot {
+                Some(Published::Value(v)) => return Ok(v.clone()),
+                Some(Published::Poisoned) => return Err(LeaderPoisoned),
+                None => slot = self.done.wait(slot).unwrap(),
+            }
         }
-        slot.clone().expect("leader published a result")
+    }
+}
+
+/// RAII leadership token for one key's flight. Obtained only through
+/// [`SingleFlight::begin`]; consumed by [`LeadGuard::publish`]. Dropping it
+/// unconsumed — which is exactly what a panic unwinding through the
+/// leader's computation does — closes the flight poisoned so followers are
+/// released with [`LeaderPoisoned`] instead of hanging.
+pub struct LeadGuard<'f, K: Eq + Hash + Clone, V: Clone> {
+    flight: &'f SingleFlight<K, V>,
+    /// `Some` while the obligation is live; taken by `publish` (defusing
+    /// the drop) or by `drop` (poisoning the flight).
+    key: Option<K>,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> LeadGuard<'_, K, V> {
+    /// Close the flight: wake every follower with a clone of `value` and
+    /// defuse the poison-on-drop obligation.
+    pub fn publish(mut self, value: V) {
+        let key = self.key.take().expect("a live guard holds its key");
+        self.flight.close(&key, Published::Value(value));
+    }
+
+    /// The key this guard leads.
+    pub fn key(&self) -> &K {
+        self.key.as_ref().expect("a live guard holds its key")
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Drop for LeadGuard<'_, K, V> {
+    fn drop(&mut self) {
+        if let Some(key) = self.key.take() {
+            self.flight.close(&key, Published::Poisoned);
+        }
     }
 }
 
 /// Outcome of [`SingleFlight::begin`].
-pub enum Begin<V> {
-    /// No flight in progress: the caller leads and must `publish` the key.
-    Lead,
+pub enum Begin<'f, K: Eq + Hash + Clone, V: Clone> {
+    /// No flight in progress: the caller leads. The guard *must* travel
+    /// with the computation — publish through it on success, let the
+    /// unwind drop it on panic.
+    Lead(LeadGuard<'f, K, V>),
     /// Another caller is already computing this key: wait on the slot.
     Follow(Arc<FlightSlot<V>>),
     /// The `resolved` probe produced a value — nothing to compute.
@@ -73,7 +139,7 @@ impl<K: Eq + Hash + Clone, V: Clone> SingleFlight<K, V> {
     /// the table lock *before* a new flight is opened — pass a cheap cache
     /// peek so a value published after the caller's plan is still found
     /// (the classic plan-then-execute race).
-    pub fn begin(&self, key: &K, resolved: impl FnOnce() -> Option<V>) -> Begin<V> {
+    pub fn begin(&self, key: &K, resolved: impl FnOnce() -> Option<V>) -> Begin<'_, K, V> {
         let mut inflight = self.inflight.lock().unwrap();
         if let Some(slot) = inflight.get(key) {
             return Begin::Follow(Arc::clone(slot));
@@ -82,15 +148,16 @@ impl<K: Eq + Hash + Clone, V: Clone> SingleFlight<K, V> {
             return Begin::Resolved(v);
         }
         inflight.insert(key.clone(), Arc::new(FlightSlot::new()));
-        Begin::Lead
+        Begin::Lead(LeadGuard { flight: self, key: Some(key.clone()) })
     }
 
-    /// Leader hand-off: close the flight and wake every follower with a
-    /// clone of `value`. Publishing a key with no open flight is a no-op.
-    pub fn publish(&self, key: &K, value: V) {
+    /// Close the flight for `key` and wake every follower. Reached only
+    /// through a [`LeadGuard`] (publish or drop), so a key with no open
+    /// flight is unreachable rather than silently ignored.
+    fn close(&self, key: &K, outcome: Published<V>) {
         let slot = self.inflight.lock().unwrap().remove(key);
         if let Some(slot) = slot {
-            *slot.result.lock().unwrap() = Some(value);
+            *slot.result.lock().unwrap() = Some(outcome);
             slot.done.notify_all();
         }
     }
@@ -116,14 +183,14 @@ mod tests {
             let handles: Vec<_> = (0..8)
                 .map(|_| {
                     s.spawn(|| match flight.begin(&7, || None) {
-                        Begin::Lead => {
+                        Begin::Lead(guard) => {
                             let v = 40 + computed.fetch_add(1, Ordering::SeqCst);
                             // Give followers time to pile onto the slot.
                             std::thread::sleep(std::time::Duration::from_millis(20));
-                            flight.publish(&7, v);
+                            guard.publish(v);
                             v
                         }
-                        Begin::Follow(slot) => slot.wait(),
+                        Begin::Follow(slot) => slot.wait().expect("leader published"),
                         Begin::Resolved(v) => v,
                     })
                 })
@@ -148,19 +215,84 @@ mod tests {
         assert_eq!(flight.in_flight(), 0);
 
         // Without a probe hit the same key opens a flight...
-        assert!(matches!(flight.begin(&"k", || None), Begin::Lead));
+        let Begin::Lead(guard) = flight.begin(&"k", || None) else {
+            panic!("cold key must lead");
+        };
+        assert_eq!(*guard.key(), "k");
         assert_eq!(flight.in_flight(), 1);
         // ...and an open flight wins over the probe: joiners must follow the
         // leader rather than race it through a stale cache view.
         assert!(matches!(flight.begin(&"k", || Some(99)), Begin::Follow(_)));
-        flight.publish(&"k", 5);
+        guard.publish(5);
         assert_eq!(flight.in_flight(), 0);
     }
 
+    /// The hot-path bugfix, exercised directly: a leader that panics before
+    /// publishing used to leave its followers parked on the condvar forever
+    /// (and the key wedged — every later caller became a follower of a dead
+    /// flight). The guard's drop now closes the flight poisoned: all eight
+    /// waiters return promptly with [`LeaderPoisoned`], and the key is free
+    /// for a fresh leader afterwards.
     #[test]
-    fn publishing_an_unled_key_is_a_no_op() {
+    fn panicking_leader_releases_waiters_with_poison() {
+        let flight: SingleFlight<u32, u64> = SingleFlight::new();
+        let poisoned = AtomicU64::new(0);
+
+        std::thread::scope(|s| {
+            let Begin::Lead(guard) = flight.begin(&9, || None) else {
+                panic!("cold key must lead");
+            };
+            let followers: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| match flight.begin(&9, || None) {
+                        Begin::Follow(slot) => slot.wait(),
+                        _ => panic!("open flight must be followed"),
+                    })
+                })
+                .collect();
+            // The leader's computation panics; the unwind drops the guard.
+            let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                let _held_across_the_computation = guard;
+                // Give followers time to pile onto the slot before the
+                // unwind closes it.
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                panic!("leader died mid-computation");
+            }))
+            .expect_err("leader must panic");
+            assert!(payload.downcast_ref::<&str>().is_some());
+            for h in followers {
+                match h.join().unwrap() {
+                    Err(LeaderPoisoned) => {
+                        poisoned.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Ok(v) => panic!("no value was ever published, got {v}"),
+                }
+            }
+        });
+
+        assert_eq!(poisoned.load(Ordering::SeqCst), 8, "every waiter must be released");
+        assert_eq!(flight.in_flight(), 0, "the poisoned flight is closed, not wedged");
+        // The key is usable again: a fresh leader can run to completion.
+        let Begin::Lead(guard) = flight.begin(&9, || None) else {
+            panic!("poison must not wedge the key");
+        };
+        guard.publish(42);
+        assert_eq!(flight.in_flight(), 0);
+    }
+
+    /// Publishing defuses the drop obligation exactly once; `key()` exposes
+    /// the led key while the obligation is live.
+    #[test]
+    fn guard_publish_defuses_the_poison() {
         let flight: SingleFlight<u8, u8> = SingleFlight::new();
-        flight.publish(&3, 9);
+        let Begin::Lead(guard) = flight.begin(&3, || None) else {
+            panic!("cold key must lead");
+        };
+        let Begin::Follow(slot) = flight.begin(&3, || None) else {
+            panic!("open flight must be followed");
+        };
+        guard.publish(9);
+        assert_eq!(slot.wait(), Ok(9), "published value reaches followers, not poison");
         assert_eq!(flight.in_flight(), 0);
     }
 }

@@ -19,16 +19,16 @@ pub mod tables;
 pub use cache::{
     workload_fingerprint, CacheKey, CacheStats, Fidelity, MeasurementCache, ENGINE_VERSION,
 };
-pub use flight::{Begin, FlightSlot, SingleFlight};
+pub use flight::{Begin, FlightSlot, LeadGuard, LeaderPoisoned, SingleFlight};
 pub use pareto::{
     accuracy_pareto_front, accuracy_pareto_table, accuracy_pareto_table_from, pareto_front,
     pareto_table, pareto_table_from,
 };
 pub use query::{points, QueryEngine, QueryError, QueryFailure, QueryPlan, QueryPoint};
 pub use sweep::{
-    max_jobs, run_one, run_one_at, run_one_functional_at, run_parallel, run_parallel_reported,
-    run_workload, run_workload_functional, set_max_jobs, sweep, sweep_all, Measurement,
-    QuarantinedJob,
+    max_jobs, run_one, run_one_at, run_one_compiled_at, run_one_functional_at, run_parallel,
+    run_parallel_reported, run_workload, run_workload_compiled, run_workload_functional,
+    set_max_jobs, sweep, sweep_all, Measurement, QuarantinedJob,
 };
 pub use tables::{
     fig3, fig4, fig5, fig6, fig7, fig8, measurements_table, table3, table45, table6,

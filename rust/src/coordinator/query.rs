@@ -19,12 +19,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::cache::{CacheKey, CacheStats, Fidelity, MeasurementCache, CACHE_FILE};
-use super::flight::{Begin, FlightSlot, SingleFlight};
+use super::flight::{Begin, FlightSlot, LeaderPoisoned, SingleFlight};
 use super::sweep::{
-    run_one_at, run_one_functional_at, run_parallel, run_parallel_reported, run_workload,
-    run_workload_functional, Measurement,
+    run_one_at, run_one_compiled_at, run_one_functional_at, run_parallel, run_parallel_reported,
+    run_workload, run_workload_compiled, run_workload_functional, Measurement,
 };
-use crate::cluster::RunError;
+use crate::cluster::{CodeCache, RunError};
 use crate::config::ClusterConfig;
 use crate::kernels::{Benchmark, Variant, Workload};
 
@@ -43,6 +43,13 @@ pub struct QueryPoint {
     pub workers: usize,
     /// Backend tier the point resolves on (cycle-accurate by default).
     pub fidelity: Fidelity,
+    /// Resolve an accuracy-only point on the compiled tier instead of the
+    /// functional interpreter. Only meaningful with
+    /// [`Fidelity::Functional`]. Deliberately **not** part of the cache
+    /// address: the four-way differential wall makes the two tiers
+    /// bit-identical, so they share one cache entry — the flag only picks
+    /// which engine executes a miss.
+    pub compiled: bool,
 }
 
 impl QueryPoint {
@@ -54,7 +61,14 @@ impl QueryPoint {
     /// Cycle-accurate point under a `workers`-core team (fig 5/6 sweeps).
     pub fn at(cfg: &ClusterConfig, bench: Benchmark, variant: Variant, workers: usize) -> Self {
         assert!(workers >= 1 && workers <= cfg.cores, "occupancy out of range");
-        QueryPoint { cfg: *cfg, bench, variant, workers, fidelity: Fidelity::CycleAccurate }
+        QueryPoint {
+            cfg: *cfg,
+            bench,
+            variant,
+            workers,
+            fidelity: Fidelity::CycleAccurate,
+            compiled: false,
+        }
     }
 
     /// Full-occupancy accuracy-only point (functional backend).
@@ -65,6 +79,15 @@ impl QueryPoint {
     /// The same point at a different fidelity.
     pub fn with_fidelity(mut self, fidelity: Fidelity) -> Self {
         self.fidelity = fidelity;
+        self
+    }
+
+    /// The same accuracy-only point, executed on the compiled tier. Forces
+    /// [`Fidelity::Functional`] — compilation never changes what is
+    /// measured, only how fast the measurement runs.
+    pub fn with_compiled(mut self) -> Self {
+        self.fidelity = Fidelity::Functional;
+        self.compiled = true;
         self
     }
 }
@@ -210,11 +233,20 @@ pub struct QueryEngine {
     sim_runs: AtomicU64,
     /// Functional-backend executions this engine has issued.
     functional_runs: AtomicU64,
+    /// Compiled-tier executions this engine has issued (accuracy-only
+    /// misses carrying [`QueryPoint::compiled`]).
+    compiled_runs: AtomicU64,
+    /// Translation cache the engine's compiled-tier runs share: one
+    /// translation per distinct program fingerprint for the engine's whole
+    /// lifetime, however many probes and sweeps re-run it. `Arc` because
+    /// each compiled run constructs a short-lived
+    /// [`crate::cluster::CompiledBackend`] around it.
+    code_cache: Arc<CodeCache>,
     /// In-flight table: identical concurrent misses coalesce onto one run.
     flight: SingleFlight<CacheKey, FlightResult>,
     /// Every key this engine has ever led a run for. `sim_runs +
-    /// functional_runs` minus this set's size is the duplicate-run count
-    /// the service gates at zero.
+    /// functional_runs + compiled_runs` minus this set's size is the
+    /// duplicate-run count the service gates at zero.
     executed: Mutex<HashSet<CacheKey>>,
     /// Misses resolved by another in-flight (or just-published) run
     /// instead of a simulator execution of their own.
@@ -256,6 +288,17 @@ impl QueryEngine {
         self.functional_runs.load(Ordering::Relaxed)
     }
 
+    /// Compiled-tier executions issued so far.
+    pub fn compiled_runs(&self) -> u64 {
+        self.compiled_runs.load(Ordering::Relaxed)
+    }
+
+    /// The engine's translation cache (hit/miss counters for the warm-tune
+    /// economics gates; the service's status endpoint reports them).
+    pub fn code_cache(&self) -> &Arc<CodeCache> {
+        &self.code_cache
+    }
+
     /// Misses resolved by coalescing onto another caller's in-flight run
     /// (or onto a result that landed between plan and execute) instead of
     /// issuing a simulator execution of their own.
@@ -268,7 +311,8 @@ impl QueryEngine {
     /// how many concurrent identical requests arrive.
     pub fn duplicate_runs(&self) -> u64 {
         let distinct = self.executed.lock().unwrap().len() as u64;
-        (self.sim_runs() + self.functional_runs()).saturating_sub(distinct)
+        (self.sim_runs() + self.functional_runs() + self.compiled_runs())
+            .saturating_sub(distinct)
     }
 
     /// The process-wide engine the CLI and the public table emitters share.
@@ -337,20 +381,28 @@ impl QueryEngine {
     /// [`QueryFailure`] report while every *other* miss still completes
     /// **and is cached** before the error returns — a retry after fixing
     /// the bad points re-simulates nothing. Every led flight is published
-    /// (success *or* failure), so followers never block on a dead leader.
+    /// (success *or* failure), and each lead's [`LeadGuard`] poisons its
+    /// flight if this thread unwinds first — so followers never block on a
+    /// dead leader.
+    ///
+    /// [`LeadGuard`]: super::flight::LeadGuard
     pub fn execute(&self, plan: QueryPlan) -> Result<Vec<Measurement>, QueryFailure> {
         let QueryPlan { mut unique, order } = plan;
         let requested = order.len();
-        // Partition the plan's misses through the flight table.
-        let mut lead_idx: Vec<usize> = Vec::new();
+        // Partition the plan's misses through the flight table. Each led
+        // miss keeps its [`LeadGuard`]: if this thread unwinds before the
+        // publish loop below runs, the guards' drops poison the flights so
+        // followers in other calls are released instead of hanging.
+        let mut leads: Vec<(usize, super::flight::LeadGuard<'_, CacheKey, FlightResult>)> =
+            Vec::new();
         let mut follows: Vec<(usize, Arc<FlightSlot<FlightResult>>)> = Vec::new();
         for (i, pp) in unique.iter_mut().enumerate() {
             if pp.resolved.is_some() {
                 continue;
             }
             let key = pp.key;
-            match self.flight.begin(&key, || self.cache.peek(&key)) {
-                Begin::Lead => lead_idx.push(i),
+            match self.flight.begin(&key, || self.cache.peek(&key).map(Ok)) {
+                Begin::Lead(guard) => leads.push((i, guard)),
                 Begin::Follow(slot) => follows.push((i, slot)),
                 Begin::Resolved(Ok(m)) => {
                     self.coalesced.fetch_add(1, Ordering::Relaxed);
@@ -362,17 +414,39 @@ impl QueryEngine {
             }
         }
         let mut errors: Vec<QueryError> = Vec::new();
-        if !lead_idx.is_empty() {
+        if !leads.is_empty() {
             // A miss planned via the fingerprint memo has no prebuilt
             // workload; its worker rebuilds it (the build is deterministic).
-            let jobs: Vec<(QueryPoint, Option<&Workload>)> =
-                lead_idx.iter().map(|&i| (unique[i].point, unique[i].workload.as_ref())).collect();
+            let jobs: Vec<(QueryPoint, Option<&Workload>)> = leads
+                .iter()
+                .map(|&(i, _)| (unique[i].point, unique[i].workload.as_ref()))
+                .collect();
             let (results, quarantined) = run_parallel_reported(&jobs, |(p, w)| match p.fidelity {
                 Fidelity::CycleAccurate => {
                     self.sim_runs.fetch_add(1, Ordering::Relaxed);
                     match w {
                         Some(w) => run_workload(&p.cfg, p.bench, p.variant, p.workers, w),
                         None => run_one_at(&p.cfg, p.bench, p.variant, p.workers),
+                    }
+                }
+                Fidelity::Functional if p.compiled => {
+                    self.compiled_runs.fetch_add(1, Ordering::Relaxed);
+                    match w {
+                        Some(w) => run_workload_compiled(
+                            &p.cfg,
+                            p.bench,
+                            p.variant,
+                            p.workers,
+                            w,
+                            &self.code_cache,
+                        ),
+                        None => run_one_compiled_at(
+                            &p.cfg,
+                            p.bench,
+                            p.variant,
+                            p.workers,
+                            &self.code_cache,
+                        ),
                     }
                 }
                 Fidelity::Functional => {
@@ -388,7 +462,7 @@ impl QueryEngine {
             drop(jobs);
             let panicked: HashMap<usize, String> =
                 quarantined.into_iter().map(|q| (q.index, q.payload)).collect();
-            for (j, (&i, r)) in lead_idx.iter().zip(results).enumerate() {
+            for (j, ((i, guard), r)) in leads.into_iter().zip(results).enumerate() {
                 let key = unique[i].key;
                 self.executed.lock().unwrap().insert(key);
                 let outcome: FlightResult = match r {
@@ -416,7 +490,7 @@ impl QueryEngine {
                 // the closed flight finds the value; and publish failures
                 // too, so followers inherit the structured error instead of
                 // blocking forever.
-                self.flight.publish(&key, outcome);
+                guard.publish(outcome);
             }
         }
         // Collect followed flights only after this call's own leads have
@@ -425,11 +499,18 @@ impl QueryEngine {
         for (i, slot) in follows {
             self.coalesced.fetch_add(1, Ordering::Relaxed);
             match slot.wait() {
-                Ok(m) => {
+                Ok(Ok(m)) => {
                     unique[i].resolved = Some(m);
                     unique[i].workload = None;
                 }
-                Err(e) => errors.push(QueryError { point: unique[i].point, error: e }),
+                Ok(Err(e)) => errors.push(QueryError { point: unique[i].point, error: e }),
+                // The leader panicked before publishing: the guard's drop
+                // released this wait with poison — fold it into the same
+                // structured-error channel a worker panic uses.
+                Err(LeaderPoisoned) => errors.push(QueryError {
+                    point: unique[i].point,
+                    error: RunError::Fault("flight leader panicked before publishing".into()),
+                }),
             }
         }
         if !errors.is_empty() {
@@ -637,6 +718,54 @@ mod tests {
         assert_eq!(engine.stats().misses, before.misses);
         assert_eq!(warm[0].err.rel.to_bits(), ms[0].err.rel.to_bits());
         assert_eq!(engine.functional_runs(), 2, "warm functional re-query must not re-run");
+    }
+
+    /// Compiled points execute on the compiled tier (no simulator, no
+    /// functional-interpreter runs), translate each program exactly once
+    /// through the engine's code cache, and — because `compiled` is not
+    /// part of the cache address — share cache entries with plain
+    /// functional resolutions of the same points.
+    #[test]
+    fn compiled_points_run_the_compiled_tier_and_share_the_address() {
+        let engine = QueryEngine::new();
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let pts: Vec<QueryPoint> = [Benchmark::Fir, Benchmark::Matmul]
+            .into_iter()
+            .map(|b| QueryPoint::functional(&cfg, b, Variant::VEC).with_compiled())
+            .collect();
+        let ms = engine.query(&pts).unwrap();
+        assert_eq!(engine.sim_runs(), 0, "compiled plan must not simulate");
+        assert_eq!(engine.functional_runs(), 0, "compiled plan must not interpret");
+        assert_eq!(engine.compiled_runs(), 2);
+        assert_eq!(engine.duplicate_runs(), 0);
+        let (hits, misses) = engine.code_cache().stats();
+        assert_eq!(misses, 2, "one translation per distinct program");
+        assert_eq!(hits, 0);
+        for m in &ms {
+            assert!(m.verified, "{}: compiled run must verify", m.bench.name());
+            assert!(m.err.rel.is_finite());
+            assert_eq!(m.cycles, 0, "compiled measurements carry no timing");
+            assert!(m.agg.instrs > 0);
+        }
+        // The plain functional resolution of the same points is a cache hit
+        // — compiled is an engine choice, not a distinct address.
+        let st = engine.stats();
+        let plain: Vec<QueryPoint> = [Benchmark::Fir, Benchmark::Matmul]
+            .into_iter()
+            .map(|b| QueryPoint::functional(&cfg, b, Variant::VEC))
+            .collect();
+        let warm = engine.query(&plain).unwrap();
+        assert_eq!(engine.stats().misses, st.misses, "shared address must hit");
+        assert_eq!(engine.functional_runs(), 0);
+        assert_eq!(warm[0].err.rel.to_bits(), ms[0].err.rel.to_bits());
+        assert_eq!(warm[0].agg.instrs, ms[0].agg.instrs);
+        // Re-running the compiled points re-uses the cache, not the
+        // translator: the miss counter is frozen.
+        let engine2 = QueryEngine::new();
+        engine2.query(&pts).unwrap();
+        engine2.query(&pts).unwrap();
+        let (_, misses2) = engine2.code_cache().stats();
+        assert_eq!(misses2, 2, "warm compiled re-query must not re-translate");
     }
 
     /// The failure report names every unresolved point with its structured

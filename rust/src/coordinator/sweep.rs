@@ -101,7 +101,7 @@ pub fn run_workload(
 
 /// Accuracy-only resolution of a point on the functional backend: the
 /// outputs (and through them `verified` and `err`) are bit-identical to a
-/// cycle-accurate run — the three-way differential wall enforces that —
+/// cycle-accurate run — the four-way differential wall enforces that —
 /// but no timing exists, so every timing-derived field is zero. The only
 /// populated counter is the retired-instruction count.
 pub fn run_workload_functional(
@@ -144,6 +144,56 @@ pub fn run_one_functional_at(
 ) -> Result<Measurement, RunError> {
     let w = bench.build(variant, cfg);
     run_workload_functional(cfg, bench, variant, workers, &w)
+}
+
+/// [`run_workload_functional`]'s shape on the compiled tier: the same
+/// accuracy-only measurement (zero timing, populated retired-instruction
+/// count), but executed through [`crate::cluster::CompiledBackend`] with
+/// translations drawn from `cache`. The four-way differential wall makes
+/// the outputs — and therefore `verified`/`err` — bit-identical to every
+/// other tier.
+pub fn run_workload_compiled(
+    cfg: &ClusterConfig,
+    bench: Benchmark,
+    variant: Variant,
+    workers: usize,
+    w: &Workload,
+    cache: &std::sync::Arc<crate::cluster::CodeCache>,
+) -> Result<Measurement, RunError> {
+    let (instrs, out) = w.run_compiled(cfg, workers, cache)?;
+    let verified = w.verify(&out).is_ok();
+    let err = error_stats(&out, &w.reference);
+    Ok(Measurement {
+        cfg: *cfg,
+        bench,
+        variant,
+        workers,
+        metrics: Metrics {
+            perf_gflops: 0.0,
+            energy_eff: 0.0,
+            area_eff: 0.0,
+            flops_per_cycle: 0.0,
+        },
+        cycles: 0,
+        core_cycles: 0,
+        agg: CoreCounters { instrs, ..Default::default() },
+        fp_intensity: 0.0,
+        mem_intensity: 0.0,
+        verified,
+        err,
+    })
+}
+
+/// [`run_workload_compiled`] on a freshly built workload.
+pub fn run_one_compiled_at(
+    cfg: &ClusterConfig,
+    bench: Benchmark,
+    variant: Variant,
+    workers: usize,
+    cache: &std::sync::Arc<crate::cluster::CodeCache>,
+) -> Result<Measurement, RunError> {
+    let w = bench.build(variant, cfg);
+    run_workload_compiled(cfg, bench, variant, workers, &w, cache)
 }
 
 /// Run the full design space (18 configs × 8 benchmarks × 2 variants),

@@ -13,7 +13,7 @@
 //! implementation shared by both issue engines.
 
 use super::builder::Program;
-use super::insn::{AluOp, Insn, Reg};
+use super::insn::{AluOp, FpOp, Insn, Operand, Reg};
 
 /// Latency of the iterative integer divider (RI5CY serial divider).
 pub const INT_DIV_LATENCY: u64 = 35;
@@ -186,19 +186,155 @@ impl DecodedProgram {
     /// their instruction streams are identical; the measurement cache
     /// ([`crate::coordinator::cache`]) folds this with the staged data and
     /// goldens to content-address results, so editing a kernel invalidates
-    /// exactly its own entries. The hash is independent of allocation
-    /// addresses and run state — decoding the same [`Program`] twice,
-    /// before or after `Cluster::reset()`, always reproduces it.
+    /// exactly its own entries, and the compiled tier's code cache
+    /// ([`crate::cluster::compiled`]) uses it alone as the translation key.
+    /// The hash is independent of allocation addresses and run state —
+    /// decoding the same [`Program`] twice, before or after
+    /// `Cluster::reset()`, always reproduces it.
+    ///
+    /// The encoding is structural, not textual: every field is folded into
+    /// the FNV stream as fixed-width bytes behind a per-variant tag, so the
+    /// layout after each tag is self-delimiting and no separator characters
+    /// exist to be confused by field contents. (An earlier version hashed
+    /// `Debug` renderings joined with `;`/`/`, which was both ambiguous in
+    /// principle and the slow path of every cache-key computation.)
     pub fn fingerprint(&self) -> u64 {
-        use std::fmt::Write as _;
         let mut h = Fnv1a::new();
         for d in &self.insns {
-            // `Insn`'s Debug form is a total, purely structural rendering
-            // (registers, immediates, targets — no floats, no addresses);
-            // class/flags/latency pin down the decode semantics on top.
-            let _ = write!(h, "{:?}/{}/{}/{:?};", d.class, d.flags, d.latency, d.insn);
+            h.byte(d.class as u8);
+            h.byte(d.flags);
+            h.u64(d.latency);
+            fold_insn(&mut h, &d.insn);
         }
         h.0
+    }
+}
+
+/// Fold one architectural instruction into the fingerprint stream: a
+/// variant tag byte followed by that variant's fields in declaration
+/// order, each at a fixed width (registers and fieldless enums as one
+/// byte, immediates/targets as 4 little-endian bytes). Exhaustive over
+/// [`Insn`] — adding a variant forces a tag choice here.
+fn fold_insn(h: &mut Fnv1a, insn: &Insn) {
+    match insn {
+        Insn::Alu { op, rd, rs1, rhs } => {
+            h.byte(0);
+            h.byte(*op as u8);
+            h.byte(*rd);
+            h.byte(*rs1);
+            fold_operand(h, rhs);
+        }
+        Insn::Li { rd, imm } => {
+            h.byte(1);
+            h.byte(*rd);
+            h.u32(*imm);
+        }
+        Insn::Load { rd, base, offset, post_inc, size } => {
+            h.byte(2);
+            h.byte(*rd);
+            h.byte(*base);
+            h.u32(*offset as u32);
+            h.u32(*post_inc as u32);
+            h.byte(*size as u8);
+        }
+        Insn::Store { rs, base, offset, post_inc, size } => {
+            h.byte(3);
+            h.byte(*rs);
+            h.byte(*base);
+            h.u32(*offset as u32);
+            h.u32(*post_inc as u32);
+            h.byte(*size as u8);
+        }
+        Insn::Branch { cond, rs1, rs2, target } => {
+            h.byte(4);
+            h.byte(*cond as u8);
+            h.byte(*rs1);
+            h.byte(*rs2);
+            h.u32(*target);
+        }
+        Insn::Jump { target } => {
+            h.byte(5);
+            h.u32(*target);
+        }
+        Insn::HwLoop { count, start, end } => {
+            h.byte(6);
+            h.byte(*count);
+            h.u32(*start);
+            h.u32(*end);
+        }
+        Insn::Fp { op, mode, rd, rs1, rs2 } => {
+            h.byte(7);
+            fold_fp_op(h, op);
+            h.byte(*mode as u8);
+            h.byte(*rd);
+            h.byte(*rs1);
+            h.byte(*rs2);
+        }
+        Insn::Amo { op, rd, base, offset, rs } => {
+            h.byte(8);
+            h.byte(*op as u8);
+            h.byte(*rd);
+            h.byte(*base);
+            h.u32(*offset as u32);
+            h.byte(*rs);
+        }
+        Insn::Barrier => h.byte(9),
+        Insn::WaitEvent { ev } => {
+            h.byte(10);
+            h.byte(*ev);
+        }
+        Insn::SetEvent { ev } => {
+            h.byte(11);
+            h.byte(*ev);
+        }
+        Insn::End => h.byte(12),
+    }
+}
+
+/// Tag byte per [`FpOp`] variant; `Cmp` carries its predicate as one extra
+/// byte (fixed layout per tag keeps the stream self-delimiting).
+fn fold_fp_op(h: &mut Fnv1a, op: &FpOp) {
+    let tag: u8 = match op {
+        FpOp::Add => 0,
+        FpOp::Sub => 1,
+        FpOp::Mul => 2,
+        FpOp::Mac => 3,
+        FpOp::MacWiden => 4,
+        FpOp::DotpWiden => 5,
+        FpOp::Min => 6,
+        FpOp::Max => 7,
+        FpOp::Cmp(_) => 8,
+        FpOp::Div => 9,
+        FpOp::Sqrt => 10,
+        FpOp::Neg => 11,
+        FpOp::AbsF => 12,
+        FpOp::FromInt => 13,
+        FpOp::ToInt => 14,
+        FpOp::CvtDown => 15,
+        FpOp::CvtUp => 16,
+        FpOp::Cpka => 17,
+        FpOp::Shuffle => 18,
+        FpOp::PackLo => 19,
+        FpOp::PackHi => 20,
+    };
+    h.byte(tag);
+    if let FpOp::Cmp(p) = op {
+        h.byte(*p as u8);
+    }
+}
+
+/// Operand as a tag byte (register vs immediate) plus 4 value bytes — a
+/// register and an immediate with the same bit pattern never collide.
+fn fold_operand(h: &mut Fnv1a, rhs: &Operand) {
+    match rhs {
+        Operand::Reg(r) => {
+            h.byte(0);
+            h.u32(u32::from(*r));
+        }
+        Operand::Imm(i) => {
+            h.byte(1);
+            h.u32(*i as u32);
+        }
     }
 }
 
@@ -216,23 +352,33 @@ fn run_lengths(insns: &[DecodedInsn]) -> Vec<u32> {
     run
 }
 
-/// 64-bit FNV-1a accumulator used for the program fingerprint. Implements
-/// `fmt::Write` so instruction renderings stream into the hash without
-/// intermediate allocation.
+/// 64-bit FNV-1a accumulator used for the program fingerprint. Fields are
+/// folded in as raw bytes (no intermediate formatting or allocation); the
+/// empty stream hashes to the FNV-1a offset basis.
 struct Fnv1a(u64);
 
 impl Fnv1a {
     fn new() -> Self {
         Fnv1a(0xcbf2_9ce4_8422_2325)
     }
-}
 
-impl std::fmt::Write for Fnv1a {
-    fn write_str(&mut self, s: &str) -> std::fmt::Result {
-        for b in s.bytes() {
-            self.0 = (self.0 ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+    #[inline(always)]
+    fn byte(&mut self, b: u8) {
+        self.0 = (self.0 ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    #[inline(always)]
+    fn u32(&mut self, v: u32) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
         }
-        Ok(())
+    }
+
+    #[inline(always)]
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
     }
 }
 
@@ -446,6 +592,57 @@ mod tests {
             assert_eq!(DecodedProgram::decode(&p).fingerprint(), first);
             assert_eq!(DecodedProgram::decode(&build()).fingerprint(), first);
         }
+    }
+
+    /// Fingerprint satellite: the structural encoding is stable and
+    /// collision-free across the 40-program smoke set (8 benchmarks × 5
+    /// precision rungs) — exactly the key space the measurement cache and
+    /// the compiled tier's code cache operate over.
+    #[test]
+    fn fingerprints_stable_and_collision_free_across_smoke_set() {
+        use crate::config::ClusterConfig;
+        use crate::kernels::{Benchmark, Variant};
+        let cfg = ClusterConfig::new(8, 4, 1);
+        let mut seen: std::collections::HashMap<u64, String> = std::collections::HashMap::new();
+        for bench in Benchmark::all() {
+            for variant in Variant::all() {
+                let w = bench.build(variant, &cfg);
+                let fp = DecodedProgram::decode(&w.program).fingerprint();
+                // Stable: an independently rebuilt, re-decoded instance of
+                // the same workload reproduces the hash.
+                let again =
+                    DecodedProgram::decode(&bench.build(variant, &cfg).program).fingerprint();
+                assert_eq!(fp, again, "{}: fingerprint not reproducible", w.name);
+                if let Some(prev) = seen.insert(fp, w.name.clone()) {
+                    panic!("fingerprint collision between {prev} and {}", w.name);
+                }
+            }
+        }
+        assert_eq!(seen.len(), 40, "smoke set must yield 40 distinct code-cache keys");
+    }
+
+    /// Fingerprint satellite: the encoding distinguishes fields with equal
+    /// bit patterns in different roles — a register operand and an
+    /// immediate operand of the same value are different programs, which a
+    /// separator-joined textual rendering could only guarantee by accident.
+    #[test]
+    fn fingerprint_distinguishes_operand_kinds() {
+        let build = |reg_rhs: bool| {
+            let mut b = ProgramBuilder::new("opk");
+            b.li(1, 5);
+            if reg_rhs {
+                b.add(2, 1, 3); // rhs = Operand::Reg(3)
+            } else {
+                b.addi(2, 1, 3); // rhs = Operand::Imm(3)
+            }
+            b.end();
+            b.build()
+        };
+        assert_ne!(
+            DecodedProgram::decode(&build(true)).fingerprint(),
+            DecodedProgram::decode(&build(false)).fingerprint(),
+            "Reg(3) and Imm(3) operands must not collide"
+        );
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod svm;
 use crate::cluster::backend::{BackendRun, EventBackend, ExecBackend, ReferenceBackend, RunError};
 use crate::cluster::counters::RunStats;
 use crate::cluster::mem::{Memory, TCDM_BASE};
-use crate::cluster::{Cluster, Engine, FunctionalBackend};
+use crate::cluster::{Cluster, CodeCache, CompiledBackend, Engine, FunctionalBackend};
 use crate::config::ClusterConfig;
 use crate::isa::{Program, ProgramBuilder, Reg};
 use crate::transfp::{cast, scalar, simd, CmpPred, FpMode, FpSpec, BF16, F16};
@@ -240,6 +240,21 @@ impl Workload {
         workers: usize,
     ) -> Result<(u64, Vec<f64>), RunError> {
         let (run, out) = self.run_on_backend(cfg, workers, &FunctionalBackend)?;
+        Ok((run.instrs, out))
+    }
+
+    /// Architectural-only run on the [`CompiledBackend`], translating
+    /// through `cache` so repeated runs of the same program reuse one
+    /// [`CompiledProgram`](crate::cluster::compiled::CompiledProgram).
+    /// The compiled analogue of [`Self::run_functional`].
+    pub fn run_compiled(
+        &self,
+        cfg: &ClusterConfig,
+        workers: usize,
+        cache: &std::sync::Arc<CodeCache>,
+    ) -> Result<(u64, Vec<f64>), RunError> {
+        let backend = CompiledBackend::with_cache(std::sync::Arc::clone(cache));
+        let (run, out) = self.run_on_backend(cfg, workers, &backend)?;
         Ok((run.instrs, out))
     }
 

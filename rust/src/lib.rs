@@ -8,7 +8,9 @@
 //! * [`isa`] — the RI5CY/Xpulp-like instruction set and assembler DSL the
 //!   benchmark kernels are written in;
 //! * [`cluster`] — the cycle-accurate cluster simulator (cores, shared FPUs,
-//!   DIV-SQRT, banked TCDM, I$, event unit, DMA);
+//!   DIV-SQRT, banked TCDM, I$, event unit, DMA) and the tiered execution
+//!   backends behind it (event / reference / functional interpreter /
+//!   compiled fused-block translator, differentially tested four ways);
 //! * [`config`] — the Table 2 design space;
 //! * [`model`] — calibrated frequency / power / area models (Figs 3–5);
 //! * [`kernels`] — the 8 near-sensor benchmarks × {scalar, vector};

@@ -28,8 +28,8 @@ use std::time::Instant;
 
 use crate::cluster::counters::CoreCounters;
 use crate::coordinator::{
-    accuracy_pareto_table, measurements_table, pareto_table, Begin, Measurement, QueryEngine,
-    QueryFailure, SingleFlight,
+    accuracy_pareto_table, measurements_table, pareto_table, Begin, LeaderPoisoned, Measurement,
+    QueryEngine, QueryFailure, SingleFlight,
 };
 use crate::report::Table;
 use crate::server::codec::{read_line_bounded, write_reply, LineIn, Reply, MAX_LINE};
@@ -334,15 +334,23 @@ impl Server {
     /// Request-level single-flight: identical concurrent requests run
     /// `compute` once and share the reply. Replies are published for
     /// followers but never cached beyond the flight — a later identical
-    /// request recomputes (and hits the measurement cache instead).
+    /// request recomputes (and hits the measurement cache instead). The
+    /// leader's guard travels across `compute`: if the handler panics, the
+    /// unwinding drop poisons the flight and every follower receives a
+    /// structured error frame instead of parking forever.
     fn coalesced(&self, key: String, compute: impl FnOnce() -> Reply) -> Reply {
         match self.req_flight.begin(&key, || None) {
-            Begin::Lead => {
+            Begin::Lead(guard) => {
                 let reply = compute();
-                self.req_flight.publish(&key, reply.clone());
+                guard.publish(reply.clone());
                 reply
             }
-            Begin::Follow(slot) => slot.wait(),
+            Begin::Follow(slot) => match slot.wait() {
+                Ok(r) => r,
+                Err(LeaderPoisoned) => {
+                    Reply::err("leader-panicked", "flight leader panicked before publishing")
+                }
+            },
             Begin::Resolved(r) => r,
         }
     }
@@ -351,6 +359,7 @@ impl Server {
     fn stats_table(&self) -> Table {
         let cache = self.engine.stats();
         let totals = self.metrics.totals();
+        let (cc_hits, cc_misses) = self.engine.code_cache().stats();
         let mut t = Table::new(vec!["counter", "value"]);
         for (k, v) in [
             ("cache_entries", cache.entries as u64),
@@ -358,6 +367,9 @@ impl Server {
             ("cache_misses", cache.misses),
             ("sim_runs", self.engine.sim_runs()),
             ("functional_runs", self.engine.functional_runs()),
+            ("compiled_runs", self.engine.compiled_runs()),
+            ("codecache_hits", cc_hits),
+            ("codecache_misses", cc_misses),
             ("coalesced_runs", self.engine.coalesced_runs()),
             ("duplicate_runs", self.engine.duplicate_runs()),
             ("requests", totals.requests),

@@ -40,6 +40,12 @@ pub enum Probe {
     /// cycle-accurately (the default — accuracy-rejected rungs never touch
     /// the event engine).
     Functional,
+    /// Like [`Probe::Functional`], but the accuracy probes execute on the
+    /// compiled tier ([`crate::cluster::CompiledBackend`]) through the
+    /// engine's translation cache — same bit-exact accuracy (the four-way
+    /// differential wall), ≥5× the interpreter's instruction throughput,
+    /// and a warm tune re-translates nothing.
+    Compiled,
     /// Resolve every rung cycle-accurately (the pre-backend behaviour).
     CycleAccurate,
 }
@@ -49,6 +55,7 @@ impl Probe {
     pub fn name(self) -> &'static str {
         match self {
             Probe::Functional => "functional",
+            Probe::Compiled => "compiled",
             Probe::CycleAccurate => "cycle",
         }
     }
@@ -58,6 +65,7 @@ impl Probe {
     pub fn parse(s: &str) -> Option<Probe> {
         match s {
             "functional" => Some(Probe::Functional),
+            "compiled" => Some(Probe::Compiled),
             "cycle" | "cycle-accurate" => Some(Probe::CycleAccurate),
             _ => None,
         }
@@ -182,11 +190,21 @@ pub fn tune_with_probe(
             let ms = engine.query(&points(&[*cfg], &benches, &LADDER))?;
             ms.chunks(LADDER.len()).map(|c| c.to_vec()).collect()
         }
-        Probe::Functional => {
-            // 1. Accuracy of every rung on the functional backend.
+        Probe::Functional | Probe::Compiled => {
+            // 1. Accuracy of every rung on the architectural tier the probe
+            // names (interpreter or compiled — bit-identical results, so
+            // the rest of the search is probe-agnostic).
+            let compiled = probe == Probe::Compiled;
             let probe_pts: Vec<QueryPoint> = points(&[*cfg], &benches, &LADDER)
                 .into_iter()
-                .map(|p| p.with_fidelity(Fidelity::Functional))
+                .map(|p| {
+                    let p = p.with_fidelity(Fidelity::Functional);
+                    if compiled {
+                        p.with_compiled()
+                    } else {
+                        p
+                    }
+                })
                 .collect();
             let probes = engine.query(&probe_pts)?;
             // 2. Cycle-accurate runs only for the baseline and the rungs
@@ -438,21 +456,71 @@ mod tests {
         assert!(r.all_within_budget() || r.choices.iter().any(|c| c.rung == 0));
     }
 
-    /// Both probe modes pick identical rungs with bit-equal errors —
-    /// accuracy is tier-independent, so the cheap probe loses nothing.
+    /// All three probe modes pick identical rungs with bit-equal errors —
+    /// accuracy is tier-independent, so the cheap probes lose nothing.
     #[test]
     fn probe_modes_agree_on_selections() {
         let cfg = ClusterConfig::new(8, 4, 0);
         let fast =
             tune_with_probe(&QueryEngine::new(), &cfg, DEFAULT_BUDGET, Probe::Functional).unwrap();
+        let comp =
+            tune_with_probe(&QueryEngine::new(), &cfg, DEFAULT_BUDGET, Probe::Compiled).unwrap();
         let full = tune_with_probe(&QueryEngine::new(), &cfg, DEFAULT_BUDGET, Probe::CycleAccurate)
             .unwrap();
-        for (a, b) in fast.choices.iter().zip(&full.choices) {
+        for ((a, c), b) in fast.choices.iter().zip(&comp.choices).zip(&full.choices) {
             assert_eq!(a.rung, b.rung, "{}: probes disagree", a.bench.name());
+            assert_eq!(c.rung, b.rung, "{}: compiled probe disagrees", c.bench.name());
             assert_eq!(a.greedy_rung, b.greedy_rung);
+            assert_eq!(c.greedy_rung, b.greedy_rung);
             assert_eq!(a.admissible, b.admissible);
+            assert_eq!(c.admissible, b.admissible);
             assert_eq!(a.chosen.err.rel.to_bits(), b.chosen.err.rel.to_bits());
+            assert_eq!(c.chosen.err.rel.to_bits(), b.chosen.err.rel.to_bits());
             assert_eq!(a.chosen.cycles, b.chosen.cycles, "chosen rung must be cycle-accurate");
+            assert_eq!(c.chosen.cycles, b.chosen.cycles, "chosen rung must be cycle-accurate");
+        }
+    }
+
+    /// `tune --probe compiled` economics: a cold tune translates each of
+    /// the 40 ladder programs exactly once; a warm re-tune over the full
+    /// ladder performs **zero** re-translations — it never even consults
+    /// the translator, because every rung is a measurement-cache hit.
+    /// Audited point-by-point against the hit counters.
+    #[test]
+    fn compiled_probe_warm_tune_performs_zero_retranslations() {
+        let engine = QueryEngine::new();
+        let cfg = ClusterConfig::new(8, 8, 1);
+        let ladder_points = (Benchmark::all().len() * LADDER.len()) as u64;
+        let cold = tune_with_probe(&engine, &cfg, DEFAULT_BUDGET, Probe::Compiled).unwrap();
+        assert_eq!(engine.compiled_runs(), ladder_points, "one compiled probe per rung");
+        assert_eq!(engine.functional_runs(), 0, "compiled probe replaces the interpreter");
+        let (hits_cold, misses_cold) = engine.code_cache().stats();
+        assert_eq!(misses_cold, ladder_points, "one translation per distinct rung program");
+        assert_eq!(hits_cold, 0, "a cold ladder has nothing to reuse");
+
+        let warm = tune_with_probe(&engine, &cfg, DEFAULT_BUDGET, Probe::Compiled).unwrap();
+        let (hits_warm, misses_warm) = engine.code_cache().stats();
+        assert_eq!(misses_warm, misses_cold, "warm tune must not re-translate");
+        assert_eq!(hits_warm, hits_cold, "warm tune must not consult the translator at all");
+        assert_eq!(engine.compiled_runs(), ladder_points, "warm tune issues zero compiled runs");
+        // Point-by-point audit: every rung of every benchmark is already
+        // resolved at the shared accuracy address.
+        for &bench in &Benchmark::all() {
+            for &v in LADDER.iter() {
+                let plan = engine.plan(&[QueryPoint::functional(&cfg, bench, v).with_compiled()]);
+                assert_eq!(
+                    (plan.hit_count(), plan.miss_count()),
+                    (1, 0),
+                    "{} {}: warm rung must be a cache hit",
+                    bench.name(),
+                    v.label()
+                );
+            }
+        }
+        // And the warm selections are bit-stable.
+        for (a, b) in cold.choices.iter().zip(&warm.choices) {
+            assert_eq!(a.rung, b.rung, "{}: warm selection drifted", a.bench.name());
+            assert_eq!(a.chosen.err.rel.to_bits(), b.chosen.err.rel.to_bits());
         }
     }
 

@@ -3,8 +3,11 @@
 //! outputs, same total cycles, same per-core counter values — across the
 //! benchmark suite, both variants, a sample of the Table 2 design space,
 //! partial-occupancy runs (including the solo fast path), and randomly
-//! generated mixed programs. Plus the determinism guarantees the sweep
-//! coordinator relies on.
+//! generated mixed programs. The architectural tiers (functional
+//! interpreter and compiled backend) join the wall through
+//! `BackendKind::all()`: four-way agreement on outputs, registers, TCDM
+//! and retired counts, and identical structured-error classification.
+//! Plus the determinism guarantees the sweep coordinator relies on.
 
 use transpfp::cluster::backend::BackendKind;
 use transpfp::cluster::counters::RunStats;
@@ -75,13 +78,14 @@ fn partial_occupancy_cycle_identical() {
     }
 }
 
-/// Three-way architectural wall: the functional backend must agree with
-/// BOTH cycle-accurate engines on outputs, final registers, the full TCDM
-/// image and the retired-instruction count, for every kernel × every rung
-/// of the 5-variant precision ladder (all statically scheduled — the
-/// deterministic regime where per-core state is timing-independent).
+/// Four-way architectural wall: the functional interpreter AND the
+/// compiled tier must agree with BOTH cycle-accurate engines on outputs,
+/// final registers, the full TCDM image and the retired-instruction count,
+/// for every kernel × every rung of the 5-variant precision ladder (all
+/// statically scheduled — the deterministic regime where per-core state is
+/// timing-independent).
 #[test]
-fn kernels_architecturally_identical_across_three_backends() {
+fn kernels_architecturally_identical_across_four_backends() {
     for cfg in [ClusterConfig::new(8, 4, 1), ClusterConfig::new(16, 8, 2)] {
         for b in Benchmark::all() {
             for v in Variant::all() {
@@ -358,8 +362,8 @@ fn runtime_scheduled_programs_cycle_identical() {
     });
 }
 
-/// Three-way wall over the seed-logged random runtime-scheduled programs:
-/// the functional backend must agree with both cycle-accurate engines on
+/// Four-way wall over the seed-logged random runtime-scheduled programs:
+/// the architectural tiers must agree with both cycle-accurate engines on
 /// every memory location with a unique or deterministic writer — the
 /// work-queue words (the grab sequence is value-determined, not
 /// timing-determined) and the per-index output array. For the statically
@@ -561,7 +565,7 @@ fn infinite_loop_times_out_identically_across_backends() {
 
 /// A software event line nobody raises is an *exact* `Deadlock` on every
 /// tier: same variant, same count of parked cores — the error itself is
-/// architectural state, so the three-way wall compares it bit-for-bit,
+/// architectural state, so the four-way wall compares it bit-for-bit,
 /// in both full- and partial-occupancy teams.
 #[test]
 fn never_signaled_wait_event_deadlocks_identically_across_backends() {
