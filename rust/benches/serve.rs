@@ -1,11 +1,14 @@
 //! `cargo bench --bench serve` — gates for the concurrent query service.
 //!
-//! Two hard gates (printed as `serve-*:` lines, FAIL lines on violation):
+//! Three hard gates (printed as `serve-*:` lines, FAIL lines on violation):
 //!
 //! 1. **Zero-duplicate-runs**: 64 concurrent connections issuing the same
 //!    cold query must execute the simulator exactly once (single-flight),
 //!    and every client must receive the identical measurement row.
-//! 2. **Warm throughput**: with a 16-point working set resident in the
+//! 2. **Batched miss planning**: 64 concurrent connections issuing 64
+//!    *distinct* cold queries must land in at most two planner passes
+//!    (the engine's cross-request batch queue), with zero duplicate runs.
+//! 3. **Warm throughput**: with a 16-point working set resident in the
 //!    cache, 8 pipelined connections must sustain >= 100k queries/s, with
 //!    zero additional simulator runs during the measured phase.
 //!
@@ -128,6 +131,66 @@ fn main() -> ExitCode {
     println!("serve-cold-burst-secs: {cold_secs:.3}");
     println!("serve-sim-runs: {cold_sim_runs}");
     println!("serve-coalesced-runs: {}", engine.coalesced_runs());
+
+    // ---- Gate 1b: 64 concurrent *distinct* cold requests batch their
+    // misses into at most two planner passes (cross-request batching),
+    // still with zero duplicate runs. `--tier functional` keeps these
+    // probes on the compiled backend, so the cycle-accurate sim-run
+    // accounting of the warm-up gate below is untouched.
+    let distinct: Vec<String> = {
+        let benches = ["FIR", "MATMUL", "CONV", "DWT", "FFT", "IIR", "KMEANS", "SVM"];
+        let variants = ["scalar", "scalar-f16", "vector-f16", "vector-bf16"];
+        ["8c8f1p", "8c4f1p"]
+            .iter()
+            .flat_map(|c| {
+                benches.iter().flat_map(move |b| {
+                    variants.iter().map(move |v| format!("query {c} {b} {v} --tier functional"))
+                })
+            })
+            .collect()
+    };
+    assert_eq!(distinct.len(), CLIENTS, "the distinct burst must fill all {CLIENTS} clients");
+    let passes_before = engine.planner_passes();
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let t0 = Instant::now();
+    let distinct_ok = thread::scope(|scope| {
+        let handles: Vec<_> = distinct
+            .iter()
+            .map(|line| {
+                let barrier = Arc::clone(&barrier);
+                scope.spawn(move || {
+                    barrier.wait();
+                    send_one(addr, line)
+                })
+            })
+            .collect();
+        handles.into_iter().all(|h| h.join().expect("client thread").ok)
+    });
+    let distinct_secs = t0.elapsed().as_secs_f64();
+    let planner_passes = engine.planner_passes() - passes_before;
+    if !distinct_ok {
+        eprintln!("FAIL: a distinct cold query returned an error reply");
+        failed = true;
+    }
+    if planner_passes > 2 {
+        eprintln!(
+            "FAIL: {CLIENTS} concurrent distinct cold requests took {planner_passes} \
+             planner passes (must batch into <= 2)"
+        );
+        failed = true;
+    }
+    if engine.batched_points() == 0 {
+        eprintln!("FAIL: no cross-request miss batching during the distinct burst");
+        failed = true;
+    }
+    if engine.duplicate_runs() != 0 {
+        eprintln!("FAIL: duplicate simulator runs after the distinct burst");
+        failed = true;
+    }
+    println!("serve-distinct-burst-secs: {distinct_secs:.3}");
+    println!("serve-batched-requests: {}", engine.batched_requests());
+    println!("serve-batched-points: {}", engine.batched_points());
+    println!("serve-planner-passes: {planner_passes}");
 
     // ---- Warm a 16-point working set (one pipelined connection).
     let warm_set: Vec<String> = {

@@ -2,13 +2,13 @@
 //! cache behaviour (mirrors `query_cache.rs`).
 //!
 //! Tunes all 8 benchmarks on 8c8f1p twice on a private query engine. Since
-//! the backend tier landed, the cold pass probes the full 5-rung ladder
-//! (40 points) on the **functional** backend and simulates cycle-
-//! accurately only the baselines plus the budget-admissible rungs; the
-//! warm pass must resolve entirely from the measurement cache. Gates
-//! (process exits non-zero on violation):
+//! the compiled tier became the default probe, the cold pass probes the
+//! full 5-rung ladder (40 points) on the **compiled** backend and
+//! simulates cycle-accurately only the baselines plus the
+//! budget-admissible rungs; the warm pass must resolve entirely from the
+//! measurement cache. Gates (process exits non-zero on violation):
 //!
-//! * the cold tune issues exactly 40 functional probes, and between 8
+//! * the cold tune issues exactly 40 compiled probes, and between 8
 //!   (baselines) and 40 cycle-accurate runs — one per admissible rung;
 //! * the warm tune issues **zero** runs of either tier;
 //! * the warm tune resolves ≥ 10× faster than cold;
@@ -36,7 +36,7 @@ fn main() -> ExitCode {
     let cold = tune_with(&engine, &cfg, DEFAULT_BUDGET).expect("cold tune completes");
     let cold_s = t0.elapsed().as_secs_f64();
     let after_cold = engine.stats();
-    let cold_func = engine.functional_runs();
+    let cold_probe = engine.compiled_runs();
     let cold_sim = engine.sim_runs();
 
     let t1 = Instant::now();
@@ -45,14 +45,14 @@ fn main() -> ExitCode {
     let after_warm = engine.stats();
 
     let warm_misses = after_warm.misses - after_cold.misses;
-    let warm_func = engine.functional_runs() - cold_func;
+    let warm_probe = engine.compiled_runs() - cold_probe;
     let warm_sim = engine.sim_runs() - cold_sim;
     let speedup = cold_s / warm_s.max(1e-9);
 
     println!("tune-cold-seconds: {cold_s:.3}");
     println!("tune-warm-seconds: {warm_s:.6}");
     println!("tune-speedup: {speedup:.0}x");
-    println!("tune-cold-functional-probes: {cold_func}");
+    println!("tune-cold-compiled-probes: {cold_probe}");
     println!("tune-cold-ca-runs: {cold_sim}");
     println!("tune-warm-misses: {warm_misses}");
     println!("tune-sub-f32-selections: {}/{}", cold.sub_f32_count(), cold.choices.len());
@@ -67,9 +67,17 @@ fn main() -> ExitCode {
     }
 
     let mut ok = true;
-    if cold_func != LADDER_POINTS {
+    if cold_probe != LADDER_POINTS {
         eprintln!(
-            "FAIL: cold tune should probe {LADDER_POINTS} rungs functionally, saw {cold_func}"
+            "FAIL: cold tune should probe {LADDER_POINTS} rungs on the compiled tier, \
+             saw {cold_probe}"
+        );
+        ok = false;
+    }
+    if engine.functional_runs() != 0 {
+        eprintln!(
+            "FAIL: the compiled probe fell back to the interpreter ({} functional runs)",
+            engine.functional_runs()
         );
         ok = false;
     }
@@ -80,17 +88,17 @@ fn main() -> ExitCode {
         );
         ok = false;
     }
-    if after_cold.misses != cold_func + cold_sim {
+    if after_cold.misses != cold_probe + cold_sim {
         eprintln!(
             "FAIL: cold misses {} should equal probes + simulations {}",
             after_cold.misses,
-            cold_func + cold_sim
+            cold_probe + cold_sim
         );
         ok = false;
     }
-    if warm_misses != 0 || warm_func != 0 || warm_sim != 0 {
+    if warm_misses != 0 || warm_probe != 0 || warm_sim != 0 {
         eprintln!(
-            "FAIL: warm-cache tune issued {warm_misses} misses / {warm_func} functional / \
+            "FAIL: warm-cache tune issued {warm_misses} misses / {warm_probe} compiled / \
              {warm_sim} cycle-accurate runs (must all be 0)"
         );
         ok = false;

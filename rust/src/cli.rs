@@ -21,7 +21,7 @@ use crate::cluster::BackendKind;
 use crate::config::ClusterConfig;
 use crate::faults::SiteClass;
 use crate::kernels::{Benchmark, Variant};
-use crate::server::request::{Request, Selector};
+use crate::server::request::{QueryTier, Request, Selector};
 use crate::transfp::FpMode;
 use crate::tuner::{Probe, DEFAULT_BUDGET};
 
@@ -37,6 +37,8 @@ pub struct Cli {
     pub tiles: Option<usize>,
     pub backend: Option<BackendKind>,
     pub probe: Option<Probe>,
+    /// `query`: execution tier for cache misses (default cycle-accurate).
+    pub tier: Option<QueryTier>,
     pub jobs: Option<usize>,
     pub seed: Option<u64>,
     pub rate: Option<usize>,
@@ -161,6 +163,17 @@ fn apply_probe(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
             Ok(())
         }
         None => Err(format!("bad `--probe` value `{v}`")),
+    }
+}
+
+fn apply_tier(c: &mut Cli, v: Option<&str>) -> Result<(), String> {
+    let v = v.expect("value flag");
+    match QueryTier::parse(v) {
+        Some(t) => {
+            c.tier = Some(t);
+            Ok(())
+        }
+        None => Err(format!("bad `--tier` value `{v}` (cycle, functional or interpreter)")),
     }
 }
 
@@ -313,9 +326,16 @@ pub const FLAGS: &[FlagSpec] = &[
     FlagSpec {
         name: "--probe",
         value: Some("<p>"),
-        example: "functional",
-        help: "accuracy probe for `tune`: functional (default),\ncompiled or cycle",
+        example: "compiled",
+        help: "accuracy probe for `tune`: compiled (default),\nfunctional or cycle",
         apply: apply_probe,
+    },
+    FlagSpec {
+        name: "--tier",
+        value: Some("<t>"),
+        example: "functional",
+        help: "execution tier for `query` misses: cycle\n(default, real timing), functional (compiled\narchitectural fast path, no timing) or\ninterpreter (functional interpreter opt-out)",
+        apply: apply_tier,
     },
     FlagSpec {
         name: "--jobs",
@@ -445,14 +465,14 @@ pub const COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "query",
         args: "<cfg|all> <bench|all> <variant|all>",
-        help: "resolve a batch of design-space points through the\nmeasurement cache (plan stats on stderr); `all`\nspans the full 5-rung precision ladder",
-        wire_flags: &[],
+        help: "resolve a batch of design-space points through the\nmeasurement cache (plan stats on stderr); `all`\nspans the full 5-rung precision ladder; --tier\nfunctional resolves misses architecturally on\nthe compiled fast path (no timing)",
+        wire_flags: &["--tier"],
         wire: true,
     },
     CommandSpec {
         name: "tune",
         args: "[cfg|all]",
-        help: "accuracy-aware precision autotuning: select the\ncheapest admissible ladder rung per benchmark\nunder --budget (relative L2 error vs the f64\nreference; default 1e-2); default config 8c8f1p.\n--probe functional (default) measures every\nrung's accuracy on the functional backend and\nsimulates only admissible rungs; --probe\ncompiled probes on the translated compiled tier\n(same accuracy, faster); --probe cycle restores\nall-cycle-accurate probing",
+        help: "accuracy-aware precision autotuning: select the\ncheapest admissible ladder rung per benchmark\nunder --budget (relative L2 error vs the f64\nreference; default 1e-2); default config 8c8f1p.\n--probe compiled (default) measures every rung's\naccuracy on the translated compiled tier and\nsimulates only admissible rungs; --probe\nfunctional probes on the interpreter (same\naccuracy, slower); --probe cycle restores\nall-cycle-accurate probing",
         wire_flags: &["--budget", "--probe"],
         wire: true,
     },
@@ -688,6 +708,7 @@ impl Cli {
                     cfg: parse_cfg_selector(args[1])?,
                     bench: parse_bench_selector(args[2])?,
                     variant: parse_variant_selector(args[3])?,
+                    tier: self.tier.unwrap_or_default(),
                 })
             }
             "tune" => {
@@ -703,7 +724,7 @@ impl Cli {
                 Ok(Request::Tune {
                     cfg,
                     budget: self.budget.unwrap_or(DEFAULT_BUDGET),
-                    probe: self.probe.unwrap_or(Probe::Functional),
+                    probe: self.probe.unwrap_or(Probe::Compiled),
                 })
             }
             "pareto" => {
@@ -858,6 +879,19 @@ mod tests {
     }
 
     #[test]
+    fn tier_flag_takes_a_value() {
+        let c = cli(&["query", "8c8f1p", "FIR", "scalar", "--tier", "functional"]).unwrap();
+        assert_eq!(c.tier, Some(QueryTier::Functional));
+        assert_eq!(c.args, vec!["query", "8c8f1p", "FIR", "scalar"]);
+        let c = cli(&["query", "all", "all", "all", "--tier", "cycle"]).unwrap();
+        assert_eq!(c.tier, Some(QueryTier::Cycle));
+        let c = cli(&["query", "all", "all", "all", "--tier", "interpreter"]).unwrap();
+        assert_eq!(c.tier, Some(QueryTier::Interpreter));
+        assert!(cli(&["query", "--tier"]).is_err(), "missing value must fail");
+        assert!(cli(&["query", "--tier", "quantum"]).is_err());
+    }
+
+    #[test]
     fn tiles_flag_takes_a_value() {
         let c = cli(&["run", "8c8f1p", "MATMUL", "scalar", "--tiles", "8"]).unwrap();
         assert_eq!(c.tiles, Some(8));
@@ -941,15 +975,21 @@ mod tests {
                 cfg: Selector::One(ClusterConfig::new(8, 8, 1)),
                 bench: Selector::One(Benchmark::Fir),
                 variant: Selector::One(Variant::Scalar),
+                tier: QueryTier::Cycle,
             }
         );
+        let c = cli(&["query", "8c8f1p", "FIR", "scalar", "--tier", "functional"]).unwrap();
+        match c.to_request().unwrap() {
+            Request::Query { tier, .. } => assert_eq!(tier, QueryTier::Functional),
+            other => panic!("expected Query, got {other:?}"),
+        }
 
         let c = cli(&["tune"]).unwrap();
         match c.to_request().unwrap() {
             Request::Tune { cfg, budget, probe } => {
                 assert_eq!(cfg, Selector::One(ClusterConfig::new(8, 8, 1)));
                 assert_eq!(budget, DEFAULT_BUDGET);
-                assert_eq!(probe, Probe::Functional);
+                assert_eq!(probe, Probe::Compiled, "tune defaults to the compiled probe");
             }
             other => panic!("expected Tune, got {other:?}"),
         }

@@ -22,10 +22,13 @@
 //! functional backend interprets the predecoded stream in program order
 //! with no event queue or hazard bookkeeping (`benches/backend.rs` gates
 //! ≥ 50× the event engine's instruction throughput), and the compiled
-//! backend translates the program once into pre-resolved dispatch steps
-//! and fused straight-line blocks, cached by content fingerprint (gated
-//! ≥ 5× the functional tier on top) — which is what lets the tuner probe
-//! every ladder rung's accuracy before paying for timing.
+//! backend translates the program once into pre-resolved dispatch steps,
+//! fused straight-line blocks, and loop traces that retire whole
+//! innermost-loop iterations per dispatch, cached by content fingerprint
+//! in a capacity-bounded code cache (gated ≥ 10× the functional tier on
+//! the loop-dominated kernels, ≥ 5× on the straight-line remainder) —
+//! which is what lets the tuner probe every ladder rung's accuracy
+//! before paying for timing.
 //!
 //! Since the robustness PR every tier returns `Result<BackendRun,
 //! RunError>` instead of panicking: a hung program trips the [`Watchdog`]

@@ -14,15 +14,51 @@
 //!   compilable subset of the [`DecodedProgram::local_run_len`] regions,
 //!   excluding control transfers whose successor depends on run state)
 //!   becomes one [`FusedBlock`]: a superinstruction that executes the whole
-//!   run with a single watchdog charge and a single pc update.
+//!   run with a single watchdog charge and a single pc update;
+//! * a loop-trace table: each innermost hot-loop body — found from the
+//!   hw-loop metadata ([`DecodedProgram::hw_loop_bodies`]) and from
+//!   conditional backward branches — becomes one [`LoopTrace`]: a
+//!   superinstruction that executes **whole iterations**, including the
+//!   back-edge and the hw-loop counter decrement, in a single dispatch
+//!   with one batched watchdog check per iteration.
 //!
-//! Contention points — loads/stores, atomics, FP datapath ops, event
-//! waits, barriers, DMA — fall back to exactly the functional
-//! interpreter's dispatch semantics, one instruction at a time, so the
-//! architectural result (outputs, registers, TCDM image, retired count)
-//! and the error classification (deadlock / timeout / fault) are
-//! bit-identical to the functional tier — and through it to both timed
-//! engines. `tests/differential.rs` asserts this as a four-way wall.
+//! ## Trace formation rules
+//!
+//! A candidate region `[head, tail]` (a hw-loop body `[start, end)`, or
+//! `[target, branch]` for a conditional branch whose target is at or
+//! before it) compiles to a trace iff every instruction in it is
+//! *trace-admissible* — integer ALU, load-immediate, any FP datapath op,
+//! plain loads/stores, and conditional branches — and no instruction
+//! before the tail sits on a hw-loop end boundary (`LOOP_END_NEXT`).
+//! Atomics, barriers, event waits/sets, jumps, nested `HwLoop` setup and
+//! `End` disqualify the region, which also means an outer loop whose body
+//! contains an inner loop's setup never traces: only innermost loops do.
+//!
+//! ## Trace bail-outs
+//!
+//! Execution falls out of a trace back to per-step dispatch on:
+//!
+//! * **side-exits** — any taken branch other than the tail back-edge
+//!   leaves the trace at its target, charging exactly the ops retired;
+//! * **memory-ordering hazards** — a load/store whose address resolves
+//!   into the DMA window bails *before* any architectural mutation (the
+//!   post-increment included) so the per-step path replays the op with
+//!   full DMA semantics;
+//! * **trip-count exhaustion** — the tail's `advance_decoded` walks the
+//!   real hw-loop stack (nested and shared-end boundaries included), so
+//!   falling out lands exactly where the functional tier would;
+//! * **watchdog pressure** — an iteration is entered only when its whole
+//!   length fits the remaining instruction budget; otherwise the trace
+//!   exits with nothing charged and the per-step path charges one at a
+//!   time, tripping `Timeout { budget }` at the tier-identical count.
+//!
+//! Contention points — atomics, event waits, barriers, DMA — and every
+//! bail-out fall back to exactly the functional interpreter's dispatch
+//! semantics, one instruction at a time, so the architectural result
+//! (outputs, registers, TCDM image, retired count) and the error
+//! classification (deadlock / timeout / fault) are bit-identical to the
+//! functional tier — and through it to both timed engines.
+//! `tests/differential.rs` asserts this as a four-way wall.
 //!
 //! ## Code cache
 //!
@@ -34,19 +70,24 @@
 //! re-translations (gated in `benches/backend.rs` and the tuner tests);
 //! the invalidation rule is the fingerprint itself — editing a kernel
 //! changes its key, and stale translations are simply never addressed
-//! again.
+//! again. Growth is bounded: the cache holds at most its configured
+//! capacity (default [`DEFAULT_CODE_CAPACITY`]), evicting the
+//! least-recently-used entry of the inserting shard when full, so a
+//! fuzzed random-program load cannot grow it without bound — evictions
+//! are counted and surfaced in the `serve` stats endpoint.
 //!
 //! ## Watchdog
 //!
-//! The retired-instruction budget is honored exactly: a fused block is
-//! taken only when its whole length fits under the budget; otherwise the
-//! block's ops run through the one-at-a-time path with the functional
-//! tier's charge-then-check ordering, so `Timeout { budget }` trips after
-//! the same retired count on both tiers.
+//! The retired-instruction budget is honored exactly: a fused block or a
+//! trace iteration is taken only when its whole length fits under the
+//! budget; otherwise the ops run through the one-at-a-time path with the
+//! functional tier's charge-then-check ordering, so `Timeout { budget }`
+//! trips after the same retired count on both tiers.
 //!
-//! `benches/backend.rs` gates this tier at ≥ 5× the functional
-//! interpreter's instruction throughput on the kernel suite (≥ 250× the
-//! event engine end-to-end).
+//! `benches/backend.rs` gates this tier at ≥ 10× the functional
+//! interpreter's instruction throughput on the loop-dominated kernels
+//! (FIR, MATMUL, KMEANS — where the paper's cycles are) and ≥ 5× on the
+//! straight-line remainder of the suite.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -108,14 +149,46 @@ enum Step {
     End,
 }
 
-/// A translated program: dense per-pc steps plus the fused-block table.
-/// `blocks[pc]` is `Some` only at the *head* of a fused run — a branch
-/// into the middle of a run lands on the per-step path and stays correct
-/// (it just forgoes fusion until the next head).
+/// One pre-resolved instruction inside a [`LoopTrace`]. Unlike a
+/// [`MicroOp`], trace ops may touch memory (plain loads/stores) and
+/// transfer control (conditional branches) — the trace executor handles
+/// their hazards and exits explicitly.
+#[derive(Debug, Clone, Copy)]
+enum TraceOp {
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rhs: Operand },
+    Li { rd: Reg, imm: u32 },
+    Fp { op: FpOp, mode: FpMode, rd: Reg, rs1: Reg, rs2: Reg },
+    Load { rd: Reg, base: Reg, offset: i32, post_inc: i32, size: MemSize },
+    Store { rs: Reg, base: Reg, offset: i32, post_inc: i32, size: MemSize },
+    Branch { cond: BrCond, rs1: Reg, rs2: Reg, target: u32 },
+}
+
+/// A hot-loop superinstruction: the ops of one innermost loop body
+/// (`[head, head + ops.len())` in pc space), executed whole iterations at
+/// a time — back-edge and hw-loop counter decrement included — with one
+/// batched watchdog check per iteration.
+#[derive(Debug)]
+struct LoopTrace {
+    /// First pc of the body (the trace dispatches when a core lands here).
+    head: u32,
+    /// The body, in program order; the last op is the loop tail.
+    ops: Box<[TraceOp]>,
+    /// Predecode flags of the tail instruction — handed to
+    /// `advance_decoded` so the real hw-loop stack walk (nested loops,
+    /// shared end boundaries) decides the back-edge.
+    tail_flags: u8,
+}
+
+/// A translated program: dense per-pc steps plus the fused-block and
+/// loop-trace tables. `blocks[pc]` / `traces[pc]` are `Some` only at the
+/// *head* of a run or loop body — a branch into the middle lands on the
+/// per-step path and stays correct (it just forgoes fusion until the next
+/// head).
 #[derive(Debug)]
 pub struct CompiledProgram {
     steps: Vec<Step>,
     blocks: Vec<Option<FusedBlock>>,
+    traces: Vec<Option<LoopTrace>>,
 }
 
 /// True if the instruction may join a fused block: a core-local register
@@ -161,8 +234,45 @@ fn micro_of(d: &DecodedInsn) -> MicroOp {
     }
 }
 
-/// Translate a predecoded program: lower every pc to a [`Step`] and fuse
-/// every maximal straight-line run of length ≥ 2 into a block at its head.
+/// True if the instruction may live inside a loop trace: anything the
+/// trace executor can run without consulting the event unit, the DMA
+/// controller (statically) or the scheduler. Atomics are excluded — their
+/// TCDM-region fault path must stay on per-step dispatch — as are all
+/// blocking and control-setup ops.
+fn traceable(d: &DecodedInsn) -> bool {
+    matches!(
+        d.class,
+        OpClass::Alu
+            | OpClass::Li
+            | OpClass::FpAlu
+            | OpClass::Fp
+            | OpClass::FpDivSqrt
+            | OpClass::Load
+            | OpClass::Store
+            | OpClass::Branch
+    )
+}
+
+/// Lower one trace-admissible instruction to its trace op.
+fn trace_op(d: &DecodedInsn) -> TraceOp {
+    match d.insn {
+        Insn::Alu { op, rd, rs1, rhs } => TraceOp::Alu { op, rd, rs1, rhs },
+        Insn::Li { rd, imm } => TraceOp::Li { rd, imm },
+        Insn::Fp { op, mode, rd, rs1, rs2 } => TraceOp::Fp { op, mode, rd, rs1, rs2 },
+        Insn::Load { rd, base, offset, post_inc, size } => {
+            TraceOp::Load { rd, base, offset, post_inc, size }
+        }
+        Insn::Store { rs, base, offset, post_inc, size } => {
+            TraceOp::Store { rs, base, offset, post_inc, size }
+        }
+        Insn::Branch { cond, rs1, rs2, target } => TraceOp::Branch { cond, rs1, rs2, target },
+        ref other => unreachable!("non-traceable insn in a loop trace: {other:?}"),
+    }
+}
+
+/// Translate a predecoded program: lower every pc to a [`Step`], fuse
+/// every maximal straight-line run of length ≥ 2 into a block at its head,
+/// and compile every qualifying innermost loop body into a [`LoopTrace`].
 fn translate(decoded: &DecodedProgram) -> CompiledProgram {
     let n = decoded.insns.len();
     let steps: Vec<Step> = decoded.insns.iter().map(step_of).collect();
@@ -183,7 +293,37 @@ fn translate(decoded: &DecodedProgram) -> CompiledProgram {
             blocks[start] = Some(FusedBlock { ops, next: pc as u32 });
         }
     }
-    CompiledProgram { steps, blocks }
+
+    // Loop-trace candidates: hw-loop bodies first (the paper's hot path),
+    // then conditional-backward-branch loops. First qualifying candidate
+    // at a head wins.
+    let mut traces: Vec<Option<LoopTrace>> = (0..n).map(|_| None).collect();
+    let mut candidates: Vec<(u32, u32)> = decoded.hw_loop_bodies();
+    for (pc, d) in decoded.insns.iter().enumerate() {
+        if let Insn::Branch { target, .. } = d.insn {
+            if target as usize <= pc {
+                candidates.push((target, pc as u32));
+            }
+        }
+    }
+    for (head, tail) in candidates {
+        let (h, t) = (head as usize, tail as usize);
+        if t >= n || traces[h].is_some() {
+            continue;
+        }
+        let body = &decoded.insns[h..=t];
+        if !body.iter().all(traceable) {
+            continue;
+        }
+        // An interior hw-loop end boundary means a *different* loop closes
+        // mid-region; its back-edge bookkeeping needs per-step dispatch.
+        if body[..body.len() - 1].iter().any(|d| d.has(flag::LOOP_END_NEXT)) {
+            continue;
+        }
+        let ops: Box<[TraceOp]> = body.iter().map(trace_op).collect();
+        traces[h] = Some(LoopTrace { head, ops, tail_flags: decoded.insns[t].flags });
+    }
+    CompiledProgram { steps, blocks, traces }
 }
 
 /// Execute one fused micro-op. No pc bookkeeping — the caller sets
@@ -199,6 +339,104 @@ fn exec_micro(c: &mut Core, op: &MicroOp) {
     }
 }
 
+/// Execute a loop trace: whole iterations per dispatch until a bail-out.
+///
+/// Watchdog accounting is exact: an iteration is entered only when its
+/// full length fits the remaining budget (so the budget-pressure exit
+/// charges nothing and leaves `pc` at the head for the per-step path),
+/// and every other exit charges precisely the ops retired — `i` for a
+/// hazard bail *before* op `i`, `i + 1` for a taken side-exit branch,
+/// the full length for a completed iteration. The caller re-dispatches
+/// from wherever `pc` lands.
+fn run_trace(c: &mut Core, mem: &mut Memory, tr: &LoopTrace, total: &mut u64, max_instrs: u64) {
+    let len = tr.ops.len() as u64;
+    let last = tr.ops.len() - 1;
+    'iter: while *total + len <= max_instrs {
+        for (i, op) in tr.ops.iter().enumerate() {
+            match *op {
+                TraceOp::Alu { op, rd, rs1, rhs } => c.exec_alu(op, rd, rs1, rhs),
+                TraceOp::Li { rd, imm } => c.set_reg(rd, imm),
+                TraceOp::Fp { op, mode, rd, rs1, rs2 } => {
+                    let _ = c.exec_fp(op, mode, rd, rs1, rs2);
+                }
+                TraceOp::Load { rd, base, offset, post_inc, size } => {
+                    // Address from the *pre-increment* base; the hazard
+                    // check must run before any mutation so the per-step
+                    // replay sees untouched state.
+                    let addr = (c.reg(base) as i64 + offset as i64) as u32;
+                    if matches!(mem.region_of(addr), Region::Dma) {
+                        *total += i as u64;
+                        c.counters.instrs += i as u64;
+                        c.pc = tr.head + i as u32;
+                        return;
+                    }
+                    if post_inc != 0 {
+                        let nb = (c.reg(base) as i64 + post_inc as i64) as u32;
+                        c.set_reg(base, nb);
+                    }
+                    c.exec_load(mem, rd, addr, size);
+                }
+                TraceOp::Store { rs, base, offset, post_inc, size } => {
+                    let addr = (c.reg(base) as i64 + offset as i64) as u32;
+                    if matches!(mem.region_of(addr), Region::Dma) {
+                        *total += i as u64;
+                        c.counters.instrs += i as u64;
+                        c.pc = tr.head + i as u32;
+                        return;
+                    }
+                    if post_inc != 0 {
+                        let nb = (c.reg(base) as i64 + post_inc as i64) as u32;
+                        c.set_reg(base, nb);
+                    }
+                    // Value read after the post-increment, like the engines.
+                    let v = c.reg(rs);
+                    mem.store(addr, size, v);
+                }
+                TraceOp::Branch { cond, rs1, rs2, target } => {
+                    if c.branch_taken(cond, rs1, rs2) {
+                        if i == last && target == tr.head {
+                            // The defining back-edge: a whole iteration
+                            // retired in one charge.
+                            *total += len;
+                            c.counters.instrs += len;
+                            continue 'iter;
+                        }
+                        // Side-exit mid-iteration.
+                        *total += i as u64 + 1;
+                        c.counters.instrs += i as u64 + 1;
+                        c.pc = target;
+                        return;
+                    }
+                    // Not taken: sequential successor (interior branches
+                    // never sit on a loop end boundary — formation rule).
+                }
+            }
+        }
+        // The tail retired without transferring control: charge the
+        // iteration, then let the real hw-loop stack walk decide the
+        // back-edge (counter decrement, nested/shared ends, fall-out).
+        *total += len;
+        c.counters.instrs += len;
+        c.pc = tr.head + last as u32;
+        c.advance_decoded(tr.tail_flags);
+        if c.pc != tr.head {
+            return;
+        }
+    }
+    // Budget pressure: nothing charged, pc still at the head.
+}
+
+/// Default [`CodeCache`] capacity (resident translations). Far above any
+/// real working set — the full tune ladder is 40 programs — so eviction
+/// only engages under adversarial (fuzzed random-program) load.
+pub const DEFAULT_CODE_CAPACITY: usize = 1024;
+
+/// One resident translation with its recency stamp.
+struct CacheEntry {
+    prog: Arc<CompiledProgram>,
+    last_use: u64,
+}
+
 /// Content-addressed translation cache, shared across sweep workers.
 ///
 /// Sharded 16 ways on the program fingerprint (the same discipline as the
@@ -207,10 +445,19 @@ fn exec_micro(c: &mut Core, op: &MicroOp) {
 /// program serialize on one shard and translate exactly once — the miss
 /// counter is therefore an exact count of translations performed, which is
 /// what the warm-probe economics gates audit.
+///
+/// Residency is bounded: capacity is split evenly across the shards
+/// (`max(1, capacity / 16)` entries per shard), and an insert into a full
+/// shard first evicts that shard's least-recently-used entry. Hits refresh
+/// recency through a global monotonic tick. `len() == misses - evictions`
+/// holds at all times.
 pub struct CodeCache {
-    shards: [Mutex<HashMap<u64, Arc<CompiledProgram>>>; 16],
+    shards: [Mutex<HashMap<u64, CacheEntry>>; 16],
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+    tick: AtomicU64,
+    shard_cap: usize,
 }
 
 impl Default for CodeCache {
@@ -220,13 +467,27 @@ impl Default for CodeCache {
 }
 
 impl CodeCache {
-    /// An empty cache.
+    /// An empty cache with the default capacity.
     pub fn new() -> CodeCache {
+        CodeCache::with_capacity(DEFAULT_CODE_CAPACITY)
+    }
+
+    /// An empty cache bounded to `capacity` resident translations
+    /// (rounded down to a multiple of the 16 shards, minimum 16).
+    pub fn with_capacity(capacity: usize) -> CodeCache {
         CodeCache {
             shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            tick: AtomicU64::new(0),
+            shard_cap: (capacity / 16).max(1),
         }
+    }
+
+    /// The bound on resident translations.
+    pub fn capacity(&self) -> usize {
+        self.shard_cap * 16
     }
 
     /// The process-wide cache every [`CompiledBackend::shared`] instance
@@ -238,24 +499,40 @@ impl CodeCache {
 
     /// The translation for `decoded`, reused if its fingerprint is
     /// resident. Translation happens under the shard lock, so a program is
-    /// translated exactly once no matter how many workers race on it.
+    /// translated exactly once no matter how many workers race on it —
+    /// unless capacity pressure evicted it in between, in which case the
+    /// re-translation is an honest new miss.
     pub fn translate(&self, decoded: &DecodedProgram) -> Arc<CompiledProgram> {
         let key = decoded.fingerprint();
         let shard = &self.shards[(key as usize) & 15];
         let mut map = shard.lock().unwrap();
-        if let Some(hit) = map.get(&key) {
+        let now = self.tick.fetch_add(1, Ordering::Relaxed);
+        if let Some(hit) = map.get_mut(&key) {
+            hit.last_use = now;
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(hit);
+            return Arc::clone(&hit.prog);
+        }
+        if map.len() >= self.shard_cap {
+            // LRU-ish: evict this shard's stalest entry to stay bounded.
+            if let Some(&victim) = map.iter().min_by_key(|(_, e)| e.last_use).map(|(k, _)| k) {
+                map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
         }
         let compiled = Arc::new(translate(decoded));
         self.misses.fetch_add(1, Ordering::Relaxed);
-        map.insert(key, Arc::clone(&compiled));
+        map.insert(key, CacheEntry { prog: Arc::clone(&compiled), last_use: now });
         compiled
     }
 
     /// (hits, misses) so far. `misses` equals translations performed.
     pub fn stats(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Translations dropped under capacity pressure.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 
     /// Number of resident translations.
@@ -392,11 +669,12 @@ pub fn run_compiled(
 }
 
 /// Run core `ci` until it blocks (event sleep, incomplete barrier) or
-/// terminates. Fused blocks execute with one batched watchdog charge when
-/// the whole block fits under the budget; near the budget (and at every pc
-/// that is not a block head) dispatch is one [`Step`] at a time with the
-/// functional tier's exact charge-then-check ordering, so the retired
-/// count at a [`RunError::Timeout`] is tier-identical.
+/// terminates. Loop traces execute whole iterations per dispatch and
+/// fused blocks whole straight-line runs, each with one batched watchdog
+/// charge when the length fits under the budget; near the budget (and at
+/// every pc that is not a trace or block head) dispatch is one [`Step`]
+/// at a time with the functional tier's exact charge-then-check ordering,
+/// so the retired count at a [`RunError::Timeout`] is tier-identical.
 #[allow(clippy::too_many_arguments)]
 fn run_core(
     ci: usize,
@@ -410,6 +688,14 @@ fn run_core(
     max_instrs: u64,
 ) -> Result<(), RunError> {
     loop {
+        // ---- Loop-trace fast path: whole iterations at a time.
+        {
+            let c = &mut cores[ci];
+            if let Some(tr) = compiled.traces[c.pc as usize].as_ref() {
+                run_trace(c, mem, tr, total, max_instrs);
+            }
+        }
+
         // ---- Fused fast path: whole straight-line runs at a time.
         {
             let c = &mut cores[ci];
@@ -744,6 +1030,201 @@ mod tests {
         let co = CompiledBackend::shared().run_program(&cfg, &p, 1, &mut |_| {}).unwrap_err();
         assert_eq!(fu.class(), "fault");
         assert_eq!(co, fu);
+    }
+
+    /// Trace formation shape: innermost hw-loop bodies and backward-branch
+    /// loops trace at their heads; regions holding a nested loop setup or a
+    /// contention point do not trace at all.
+    #[test]
+    fn loop_traces_cover_innermost_loops_only() {
+        let mut b = ProgramBuilder::new("shape");
+        b.li(1, 3); // 0
+        b.li(2, 4); // 1
+        b.hwloop(1); // 2: outer setup
+        b.hwloop(2); // 3: inner setup — disqualifies the outer body
+        b.addi(3, 3, 1); // 4: inner body → 1-op trace at pc 4
+        b.hwloop_end();
+        b.addi(4, 4, 1); // 5: outer tail
+        b.hwloop_end();
+        b.end(); // 6
+        let compiled = translate(&DecodedProgram::decode(&b.build()));
+        let inner = compiled.traces[4].as_ref().expect("inner body must trace");
+        assert_eq!((inner.head, inner.ops.len()), (4, 1));
+        assert!(compiled.traces[3].is_none(), "outer body holds a HwLoop — no trace");
+        assert!(compiled.traces[5].is_none(), "outer tail is not a loop head");
+
+        // A backward conditional branch forms a trace; an atomic in the
+        // body disqualifies it.
+        let mut b = ProgramBuilder::new("branchy");
+        b.li(1, 10); // 0
+        b.label("spin");
+        b.addi(1, 1, -1); // 1: head
+        b.bne(1, regs::ZERO, "spin"); // 2: back-edge
+        b.li(2, 0x1000_0000); // 3
+        b.label("amo");
+        b.amo_add(3, 2, 0, 1); // 4: atomic — never traced
+        b.bne(3, regs::ZERO, "amo"); // 5
+        b.end(); // 6
+        let compiled = translate(&DecodedProgram::decode(&b.build()));
+        let spin = compiled.traces[1].as_ref().expect("branch loop must trace");
+        assert_eq!((spin.head, spin.ops.len()), (1, 2));
+        assert!(compiled.traces[4].is_none(), "atomic body must stay per-step");
+    }
+
+    /// Trip-count edge cases (satellite): zero, one, and a large count all
+    /// reproduce the functional tier exactly — outputs, registers and
+    /// retired counts — through the traced hw-loop path.
+    #[test]
+    fn traced_hw_loops_match_functional_at_trip_count_edges() {
+        let counted = |n: u32| {
+            let mut b = ProgramBuilder::new("count");
+            b.li(1, n); // 0
+            b.hwloop(1); // 1
+            b.addi(2, 2, 1); // 2: body head (traced)
+            b.addi(3, 3, 2); // 3: tail
+            b.hwloop_end();
+            b.addi(4, 4, 7); // 4: after the loop
+            b.end(); // 5
+            b.build()
+        };
+        let cfg = ClusterConfig::new(8, 2, 0);
+        assert!(
+            translate(&DecodedProgram::decode(&counted(2))).traces[2].is_some(),
+            "the counted body must trace"
+        );
+        for n in [0u32, 1, 2, 65_535] {
+            let p = counted(n);
+            let fu = FunctionalBackend.run_program(&cfg, &p, 1, &mut |_| {}).unwrap();
+            let co = CompiledBackend::shared().run_program(&cfg, &p, 1, &mut |_| {}).unwrap();
+            assert_eq!(fu.regs, co.regs, "trip count {n}: registers differ");
+            assert_eq!(fu.instrs, co.instrs, "trip count {n}: retired counts differ");
+            assert_eq!(co.regs[0][2], n, "trip count {n}: body executions");
+            assert_eq!(co.regs[0][4], 7, "trip count {n}: fall-through ran once");
+        }
+    }
+
+    /// Nested hw loops: only the inner body traces, and the outer loop's
+    /// bookkeeping (stack walk at the shared tail) stays exact.
+    #[test]
+    fn nested_hw_loops_match_functional_tier() {
+        let prog = || {
+            let mut b = ProgramBuilder::new("nest");
+            b.li(1, 3);
+            b.li(2, 4);
+            b.hwloop(1);
+            b.hwloop(2);
+            b.addi(3, 3, 1); // inner body: runs 3 × 4 times
+            b.hwloop_end();
+            b.addi(4, 4, 1); // outer tail: runs 3 times
+            b.hwloop_end();
+            b.end();
+            b.build()
+        };
+        let cfg = ClusterConfig::new(8, 2, 0);
+        let fu = FunctionalBackend.run_program(&cfg, &prog(), 1, &mut |_| {}).unwrap();
+        let co = CompiledBackend::shared().run_program(&cfg, &prog(), 1, &mut |_| {}).unwrap();
+        assert_eq!(fu.regs, co.regs);
+        assert_eq!(fu.instrs, co.instrs);
+        assert_eq!(co.regs[0][3], 12, "inner body ran 3 × 4 times");
+        assert_eq!(co.regs[0][4], 3, "outer tail ran 3 times");
+    }
+
+    /// A side-exit mid-iteration (satellite): a taken non-back-edge branch
+    /// leaves the trace at its target with exactly the retired ops charged.
+    #[test]
+    fn trace_side_exit_matches_functional_tier() {
+        let prog = || {
+            let mut b = ProgramBuilder::new("exit");
+            b.li(1, 0); // 0
+            b.li(2, 57); // 1
+            b.label("loop");
+            b.addi(1, 1, 1); // 2: head
+            b.beq(1, 2, "out"); // 3: side-exit when r1 == 57
+            b.bne(1, regs::ZERO, "loop"); // 4: back-edge (always taken)
+            b.label("out");
+            b.addi(3, 3, 9); // 5
+            b.end(); // 6
+            b.build()
+        };
+        let compiled = translate(&DecodedProgram::decode(&prog()));
+        let tr = compiled.traces[2].as_ref().expect("branch loop must trace");
+        assert_eq!(tr.ops.len(), 3);
+        let cfg = ClusterConfig::new(8, 2, 0);
+        let fu = FunctionalBackend.run_program(&cfg, &prog(), 1, &mut |_| {}).unwrap();
+        let co = CompiledBackend::shared().run_program(&cfg, &prog(), 1, &mut |_| {}).unwrap();
+        assert_eq!(fu.regs, co.regs);
+        assert_eq!(fu.instrs, co.instrs, "side-exit must charge the exact retired count");
+        assert_eq!(co.regs[0][1], 57, "exited on the 57th iteration");
+        assert_eq!(co.regs[0][3], 9, "landed at the side-exit target");
+    }
+
+    /// Capacity bound (satellite): a churn of distinct programs cannot grow
+    /// the cache past its capacity; `len() == misses - evictions` holds and
+    /// a re-translation after eviction is an honest new miss.
+    #[test]
+    fn code_cache_eviction_bounds_residency() {
+        let tiny = |i: u32| {
+            let mut b = ProgramBuilder::new("tiny");
+            b.li(1, i);
+            b.end();
+            DecodedProgram::decode(&b.build())
+        };
+        let cache = CodeCache::with_capacity(16); // one entry per shard
+        assert_eq!(cache.capacity(), 16);
+        let progs: Vec<DecodedProgram> = (0..40).map(tiny).collect();
+        for d in &progs {
+            cache.translate(d);
+        }
+        let (hits, misses) = cache.stats();
+        assert_eq!((hits, misses), (0, 40), "40 distinct programs, all cold");
+        assert!(cache.len() <= cache.capacity(), "residency must stay bounded");
+        assert_eq!(cache.len() as u64, misses - cache.evictions());
+        assert!(cache.evictions() >= 40 - 16);
+
+        // Translating the full set again stays bounded; every evicted
+        // program re-translates as a new miss, never a stale hit.
+        for d in &progs {
+            cache.translate(d);
+        }
+        let (hits2, misses2) = cache.stats();
+        assert_eq!(hits2 + misses2, 80, "every request is a hit or a miss");
+        assert!(cache.len() <= cache.capacity());
+        assert_eq!(cache.len() as u64, misses2 - cache.evictions());
+    }
+
+    /// LRU within a shard: a re-touched entry survives an insert that
+    /// evicts its stalest neighbor.
+    #[test]
+    fn recently_used_translations_survive_eviction() {
+        let tiny = |i: u32| {
+            let mut b = ProgramBuilder::new("tiny");
+            b.li(1, i);
+            b.end();
+            DecodedProgram::decode(&b.build())
+        };
+        // Find three distinct programs landing in one shard (pigeonhole
+        // over 16 shards guarantees a trio well before i = 200).
+        let mut by_shard: HashMap<usize, Vec<DecodedProgram>> = HashMap::new();
+        let trio = (0..200)
+            .map(tiny)
+            .find_map(|d| {
+                let bucket = by_shard.entry((d.fingerprint() as usize) & 15).or_default();
+                bucket.push(d);
+                (bucket.len() == 3).then(|| bucket.clone())
+            })
+            .expect("three programs must share a shard");
+        let (a, b, c) = (&trio[0], &trio[1], &trio[2]);
+
+        let cache = CodeCache::with_capacity(32); // two entries per shard
+        cache.translate(a); // miss — shard {a}
+        cache.translate(b); // miss — shard {a, b} (full)
+        cache.translate(a); // hit — refreshes a; b is now stalest
+        cache.translate(c); // miss — evicts b, not a
+        assert_eq!(cache.evictions(), 1);
+        cache.translate(a); // still resident
+        assert_eq!(cache.stats(), (2, 3), "the re-touched entry survived");
+        cache.translate(b); // evicted → honest re-translation
+        assert_eq!(cache.stats(), (2, 4));
     }
 
     /// The event-handshake blocking semantics survive compilation: parked

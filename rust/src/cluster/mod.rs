@@ -49,7 +49,7 @@ pub mod reference;
 pub use backend::{
     BackendKind, BackendRun, EventBackend, ExecBackend, ReferenceBackend, RunError, Watchdog,
 };
-pub use compiled::{CodeCache, CompiledBackend};
+pub use compiled::{CodeCache, CompiledBackend, DEFAULT_CODE_CAPACITY};
 pub use functional::FunctionalBackend;
 
 use crate::config::ClusterConfig;

@@ -54,8 +54,22 @@ pub struct FlightSlot<V> {
 }
 
 impl<V: Clone> FlightSlot<V> {
-    fn new() -> Self {
+    /// A fresh, unfulfilled slot. Crate-visible so the batch planner
+    /// ([`QueryEngine`](super::QueryEngine)) can hand out free-standing
+    /// slots for jobs that live in the shared planner queue rather than in
+    /// a [`SingleFlight`] table.
+    pub(crate) fn new() -> Self {
         FlightSlot { result: Mutex::new(None), done: Condvar::new() }
+    }
+
+    /// Fulfill the slot directly and wake every waiter. This is the batch
+    /// planner's counterpart of [`LeadGuard::publish`] for slots that were
+    /// never registered in a flight table; fulfilling twice is a logic
+    /// error (the second value silently wins), so callers must route each
+    /// slot through exactly one drain.
+    pub(crate) fn fulfill(&self, value: V) {
+        *self.result.lock().unwrap() = Some(Published::Value(value));
+        self.done.notify_all();
     }
 
     /// Block until the leader closes the flight, then return a clone of its

@@ -12,6 +12,14 @@
 //! Planning (workload build + fingerprint + lookup) is separated from
 //! execution so callers can inspect the partition (`transpfp query` prints
 //! it) and tests can assert "a warm table issues zero simulator runs".
+//!
+//! Execution is **batched across concurrent calls**: each call's led misses
+//! become jobs in a shared planner queue, and a single *drain leader*
+//! executes the whole queue as one worker-pool pass — so 64 concurrent
+//! *distinct* cold requests cost one or two planner passes instead of 64
+//! independent pool spin-ups. The `batched_requests` / `batched_points` /
+//! `planner_passes` counters expose this to the service's `stats` endpoint
+//! and the serve bench gates.
 
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
@@ -213,6 +221,28 @@ impl QueryPlan {
     }
 }
 
+/// One led miss traveling through the planner queue: the point, its
+/// prebuilt workload (when the plan kept one), and the free-standing
+/// [`FlightSlot`] the enqueuing call waits on. Whole batches of these are
+/// executed by whichever call is the drain leader when they land.
+struct BatchJob {
+    point: QueryPoint,
+    workload: Option<Workload>,
+    slot: Arc<FlightSlot<FlightResult>>,
+}
+
+/// The batch planner's shared miss queue.
+#[derive(Default)]
+struct PlannerQueue {
+    jobs: Vec<BatchJob>,
+    /// True while some call is the drain leader. Read and written only
+    /// under the queue lock, so enqueue-vs-exit races are impossible: a
+    /// leader clears it only after observing the queue empty under the
+    /// lock, and a call that observes it set is guaranteed its jobs will
+    /// be taken by that leader's next pass.
+    draining: bool,
+}
+
 /// Memoizing front-end to the sweep workers.
 #[derive(Default)]
 pub struct QueryEngine {
@@ -251,6 +281,16 @@ pub struct QueryEngine {
     /// Misses resolved by another in-flight (or just-published) run
     /// instead of a simulator execution of their own.
     coalesced: AtomicU64,
+    /// Shared miss queue for the batch planner: concurrent calls' led
+    /// misses pile in here and a single drain leader executes each take
+    /// as one deduplicated worker-pool pass.
+    planner: Mutex<PlannerQueue>,
+    /// Calls whose led misses joined another call's in-flight drain.
+    batched_requests: AtomicU64,
+    /// Led misses that joined another call's in-flight drain.
+    batched_points: AtomicU64,
+    /// Worker-pool drains executed (one per non-empty queue take).
+    planner_passes: AtomicU64,
 }
 
 /// What a flight leader hands its followers: the run's outcome, cloneable
@@ -304,6 +344,24 @@ impl QueryEngine {
     /// issuing a simulator execution of their own.
     pub fn coalesced_runs(&self) -> u64 {
         self.coalesced.load(Ordering::Relaxed)
+    }
+
+    /// Calls whose led misses were executed by another call's planner
+    /// drain instead of spinning up a worker pool of their own.
+    pub fn batched_requests(&self) -> u64 {
+        self.batched_requests.load(Ordering::Relaxed)
+    }
+
+    /// Led misses executed by another call's planner drain.
+    pub fn batched_points(&self) -> u64 {
+        self.batched_points.load(Ordering::Relaxed)
+    }
+
+    /// Worker-pool drains executed by the batch planner (one per
+    /// non-empty queue take). The serve bench gates 64 concurrent
+    /// distinct cold requests at ≤ 2 of these.
+    pub fn planner_passes(&self) -> u64 {
+        self.planner_passes.load(Ordering::Relaxed)
     }
 
     /// Executions issued beyond one per distinct point — the service's
@@ -376,7 +434,15 @@ impl QueryEngine {
     /// this call *leads* are batched into the worker pool — which is how 64
     /// concurrent identical cold requests cost exactly one simulator run.
     ///
-    /// Led misses run under `catch_unwind` in the worker pool: a point that
+    /// Led misses become jobs in the engine's shared **planner queue**: if
+    /// another call is already draining the queue, this call's jobs join
+    /// that drain (counted in `batched_requests`/`batched_points`) and it
+    /// simply waits on their slots; otherwise this call becomes the drain
+    /// leader and executes the whole queue — its own jobs plus any that
+    /// concurrent calls pile in during the settle window — as one
+    /// deduplicated worker-pool pass per take.
+    ///
+    /// Jobs run under `catch_unwind` in the worker pool: a point that
     /// hangs, deadlocks, faults, or outright panics is collected into the
     /// [`QueryFailure`] report while every *other* miss still completes
     /// **and is cached** before the error returns — a retry after fixing
@@ -415,72 +481,54 @@ impl QueryEngine {
         }
         let mut errors: Vec<QueryError> = Vec::new();
         if !leads.is_empty() {
-            // A miss planned via the fingerprint memo has no prebuilt
-            // workload; its worker rebuilds it (the build is deterministic).
-            let jobs: Vec<(QueryPoint, Option<&Workload>)> = leads
-                .iter()
-                .map(|&(i, _)| (unique[i].point, unique[i].workload.as_ref()))
-                .collect();
-            let (results, quarantined) = run_parallel_reported(&jobs, |(p, w)| match p.fidelity {
-                Fidelity::CycleAccurate => {
-                    self.sim_runs.fetch_add(1, Ordering::Relaxed);
-                    match w {
-                        Some(w) => run_workload(&p.cfg, p.bench, p.variant, p.workers, w),
-                        None => run_one_at(&p.cfg, p.bench, p.variant, p.workers),
-                    }
+            // One batch job per led miss. A miss planned via the fingerprint
+            // memo has no prebuilt workload; its worker rebuilds it (the
+            // build is deterministic). The job owns the workload and a
+            // free-standing result slot, so it can travel into another
+            // call's drain while this call keeps only the slot handle.
+            let mut jobs: Vec<BatchJob> = Vec::with_capacity(leads.len());
+            let mut slots: Vec<Arc<FlightSlot<FlightResult>>> = Vec::with_capacity(leads.len());
+            for &(i, _) in &leads {
+                let slot = Arc::new(FlightSlot::new());
+                jobs.push(BatchJob {
+                    point: unique[i].point,
+                    workload: unique[i].workload.take(),
+                    slot: Arc::clone(&slot),
+                });
+                slots.push(slot);
+            }
+            let enqueued = jobs.len() as u64;
+            let lead_drain = {
+                let mut q = self.planner.lock().unwrap();
+                let joined = q.draining;
+                q.jobs.append(&mut jobs);
+                if joined {
+                    self.batched_requests.fetch_add(1, Ordering::Relaxed);
+                    self.batched_points.fetch_add(enqueued, Ordering::Relaxed);
+                } else {
+                    q.draining = true;
                 }
-                Fidelity::Functional if p.compiled => {
-                    self.compiled_runs.fetch_add(1, Ordering::Relaxed);
-                    match w {
-                        Some(w) => run_workload_compiled(
-                            &p.cfg,
-                            p.bench,
-                            p.variant,
-                            p.workers,
-                            w,
-                            &self.code_cache,
-                        ),
-                        None => run_one_compiled_at(
-                            &p.cfg,
-                            p.bench,
-                            p.variant,
-                            p.workers,
-                            &self.code_cache,
-                        ),
-                    }
-                }
-                Fidelity::Functional => {
-                    self.functional_runs.fetch_add(1, Ordering::Relaxed);
-                    match w {
-                        Some(w) => {
-                            run_workload_functional(&p.cfg, p.bench, p.variant, p.workers, w)
-                        }
-                        None => run_one_functional_at(&p.cfg, p.bench, p.variant, p.workers),
-                    }
-                }
-            });
-            drop(jobs);
-            let panicked: HashMap<usize, String> =
-                quarantined.into_iter().map(|q| (q.index, q.payload)).collect();
-            for (j, ((i, guard), r)) in leads.into_iter().zip(results).enumerate() {
+                !joined
+            };
+            if lead_drain {
+                self.drain_planner();
+            }
+            // Collect this call's own outcomes and close its flights.
+            for ((i, guard), slot) in leads.into_iter().zip(slots) {
                 let key = unique[i].key;
-                self.executed.lock().unwrap().insert(key);
-                let outcome: FlightResult = match r {
-                    Some(Ok(m)) => Ok(m),
-                    Some(Err(e)) => Err(e),
-                    None => {
-                        let payload = panicked
-                            .get(&j)
-                            .cloned()
-                            .unwrap_or_else(|| "unknown panic".to_string());
-                        Err(RunError::Fault(format!("worker panicked: {payload}")))
-                    }
+                let outcome: FlightResult = match slot.wait() {
+                    Ok(r) => r,
+                    // Job slots are fulfilled, never poisoned; named for
+                    // totality (and for robustness if that ever changes).
+                    Err(LeaderPoisoned) => Err(RunError::Fault(
+                        "batch drain leader panicked before fulfilling".into(),
+                    )),
                 };
+                self.executed.lock().unwrap().insert(key);
                 match &outcome {
                     Ok(m) => {
                         self.cache.insert(key, m.clone());
                         unique[i].resolved = Some(m.clone());
-                        unique[i].workload = None;
                     }
                     Err(e) => {
                         errors.push(QueryError { point: unique[i].point, error: e.clone() });
@@ -521,6 +569,131 @@ impl QueryEngine {
             .into_iter()
             .map(|ui| unique[ui].resolved.clone().expect("point resolved"))
             .collect())
+    }
+
+    /// Execute one batch job on the tier its point selects, bumping the
+    /// engine's per-tier run counter.
+    fn run_job(&self, job: &BatchJob) -> Result<Measurement, RunError> {
+        let p = &job.point;
+        let w = job.workload.as_ref();
+        match p.fidelity {
+            Fidelity::CycleAccurate => {
+                self.sim_runs.fetch_add(1, Ordering::Relaxed);
+                match w {
+                    Some(w) => run_workload(&p.cfg, p.bench, p.variant, p.workers, w),
+                    None => run_one_at(&p.cfg, p.bench, p.variant, p.workers),
+                }
+            }
+            Fidelity::Functional if p.compiled => {
+                self.compiled_runs.fetch_add(1, Ordering::Relaxed);
+                match w {
+                    Some(w) => run_workload_compiled(
+                        &p.cfg,
+                        p.bench,
+                        p.variant,
+                        p.workers,
+                        w,
+                        &self.code_cache,
+                    ),
+                    None => run_one_compiled_at(
+                        &p.cfg,
+                        p.bench,
+                        p.variant,
+                        p.workers,
+                        &self.code_cache,
+                    ),
+                }
+            }
+            Fidelity::Functional => {
+                self.functional_runs.fetch_add(1, Ordering::Relaxed);
+                match w {
+                    Some(w) => run_workload_functional(&p.cfg, p.bench, p.variant, p.workers, w),
+                    None => run_one_functional_at(&p.cfg, p.bench, p.variant, p.workers),
+                }
+            }
+        }
+    }
+
+    /// Drain the shared planner queue as its leader: repeatedly take every
+    /// queued job and execute the whole take as **one** worker-pool pass,
+    /// fulfilling each job's slot with its outcome. Before each take, a
+    /// short settle window (the queue must be observed unchanged twice,
+    /// bounded at ~50 ms) lets concurrently arriving requests pile their
+    /// misses into the same pass — this is what turns 64 concurrent
+    /// distinct cold requests into one or two planner passes instead of
+    /// 64 pool spin-ups; a lone sequential miss pays ~1 ms.
+    ///
+    /// The caller must have set `draining` under the planner lock. This
+    /// function clears it (under the same lock) only after observing the
+    /// queue empty, so a call that saw `draining` set is guaranteed its
+    /// jobs are taken by a later pass of this drain. If the leader unwinds
+    /// mid-drain, the obligation guard releases leadership and fails every
+    /// still-queued job — mirroring [`LeadGuard`]'s poison-on-drop, no
+    /// requester is ever left parked on an unfulfilled slot.
+    ///
+    /// [`LeadGuard`]: super::flight::LeadGuard
+    fn drain_planner(&self) {
+        struct DrainObligation<'e> {
+            engine: &'e QueryEngine,
+            done: bool,
+        }
+        impl Drop for DrainObligation<'_> {
+            fn drop(&mut self) {
+                if self.done {
+                    return;
+                }
+                let mut q = self.engine.planner.lock().unwrap();
+                q.draining = false;
+                for job in q.jobs.drain(..) {
+                    job.slot
+                        .fulfill(Err(RunError::Fault("batch drain leader panicked".into())));
+                }
+            }
+        }
+        let mut obligation = DrainObligation { engine: self, done: false };
+        loop {
+            // Settle window: wait for the queue to go quiet before taking.
+            let mut last = self.planner.lock().unwrap().jobs.len();
+            let (mut quiet, mut rounds) = (0u32, 0u32);
+            while quiet < 2 && rounds < 100 {
+                std::thread::sleep(std::time::Duration::from_micros(500));
+                rounds += 1;
+                let now = self.planner.lock().unwrap().jobs.len();
+                if now == last {
+                    quiet += 1;
+                } else {
+                    quiet = 0;
+                    last = now;
+                }
+            }
+            let batch = {
+                let mut q = self.planner.lock().unwrap();
+                if q.jobs.is_empty() {
+                    q.draining = false;
+                    break;
+                }
+                std::mem::take(&mut q.jobs)
+            };
+            self.planner_passes.fetch_add(1, Ordering::Relaxed);
+            let (results, quarantined) = run_parallel_reported(&batch, |job| self.run_job(job));
+            let panicked: HashMap<usize, String> =
+                quarantined.into_iter().map(|q| (q.index, q.payload)).collect();
+            for (j, (job, r)) in batch.into_iter().zip(results).enumerate() {
+                let outcome: FlightResult = match r {
+                    Some(Ok(m)) => Ok(m),
+                    Some(Err(e)) => Err(e),
+                    None => {
+                        let payload = panicked
+                            .get(&j)
+                            .cloned()
+                            .unwrap_or_else(|| "unknown panic".to_string());
+                        Err(RunError::Fault(format!("worker panicked: {payload}")))
+                    }
+                };
+                job.slot.fulfill(outcome);
+            }
+        }
+        obligation.done = true;
     }
 
     /// Plan + execute in one step.
@@ -681,6 +854,59 @@ mod tests {
         // after the leader published) or had its miss coalesced onto the
         // leader's flight; exactly one led the run itself.
         assert_eq!(engine.stats().hits + engine.coalesced_runs(), 7);
+    }
+
+    /// The batch-planner gate, in miniature: while one call's drain is
+    /// open (a slow cycle-accurate run in flight), concurrent *distinct*
+    /// misses join that drain instead of spinning up worker pools of
+    /// their own — the batched counters move, the pass count stays far
+    /// below the request count, and no run is ever duplicated.
+    #[test]
+    fn concurrent_distinct_misses_batch_into_one_drain() {
+        let engine = QueryEngine::new();
+        let cfg = ClusterConfig::new(8, 4, 1);
+        // The anchor: a cycle-accurate run, slow enough that the distinct
+        // functional misses below land while its drain is still open.
+        let anchor = QueryPoint::new(&cfg, Benchmark::Matmul, Variant::VEC);
+        let workers: Vec<QueryPoint> =
+            [Benchmark::Fir, Benchmark::Iir, Benchmark::Conv, Benchmark::Dwt]
+                .into_iter()
+                .map(|b| QueryPoint::functional(&cfg, b, Variant::Scalar))
+                .collect();
+        std::thread::scope(|s| {
+            let engine = &engine;
+            // Pre-plan the workers so their executes enqueue immediately.
+            let plans: Vec<QueryPlan> =
+                workers.iter().map(|p| engine.plan(std::slice::from_ref(p))).collect();
+            let lead = s.spawn(move || engine.one(anchor).expect("anchor resolves"));
+            // Wait until the anchor's pass has actually started running.
+            while engine.sim_runs() == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(100));
+            }
+            let handles: Vec<_> = plans
+                .into_iter()
+                .map(|plan| s.spawn(move || engine.execute(plan).expect("point resolves")))
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            lead.join().unwrap();
+        });
+        assert_eq!(engine.sim_runs(), 1);
+        assert_eq!(engine.functional_runs(), 4);
+        assert_eq!(engine.duplicate_runs(), 0, "batching must never duplicate a run");
+        assert!(
+            engine.batched_requests() >= 1 && engine.batched_points() >= 1,
+            "distinct concurrent misses must join the open drain (got {} reqs / {} pts)",
+            engine.batched_requests(),
+            engine.batched_points()
+        );
+        assert!(
+            engine.planner_passes() <= 5,
+            "5 requests must not cost {} planner passes",
+            engine.planner_passes()
+        );
+        assert_eq!(engine.stats().entries, 5, "every point resolved and cached");
     }
 
     /// Accuracy-only plans resolve entirely on the functional backend —

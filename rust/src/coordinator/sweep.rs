@@ -267,7 +267,9 @@ fn panic_payload(p: Box<dyn std::any::Any + Send>) -> String {
 }
 
 /// Lock-free parallel job driver shared by the raw sweep and the query
-/// planner (both its planning pass and its miss execution). Workers pull
+/// planner (both its planning pass and its miss execution — including the
+/// batch-planner drain, where one take of the cross-request queue becomes
+/// one invocation of this pool). Workers pull
 /// job indices from an atomic counter (dynamic load balancing) and buffer
 /// `(slot, result)` pairs locally; the coordinator writes each pair into
 /// its pre-sized slot after joining, so results are in `jobs` order

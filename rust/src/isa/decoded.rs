@@ -175,6 +175,22 @@ impl DecodedProgram {
         self.insns.len()
     }
 
+    /// Hardware-loop body ranges as `(head, tail)` pc pairs, both
+    /// inclusive: the body of `HwLoop { start, end, .. }` spans
+    /// `start..end`, so its last instruction sits at `end - 1`. Degenerate
+    /// (empty) bodies are dropped. This is the trace-formation seed for the
+    /// compiled tier ([`crate::cluster::compiled`]): each candidate body is
+    /// screened there for admissibility before becoming a loop trace.
+    pub fn hw_loop_bodies(&self) -> Vec<(u32, u32)> {
+        self.insns
+            .iter()
+            .filter_map(|d| match d.insn {
+                Insn::HwLoop { start, end, .. } if end > start => Some((start, end - 1)),
+                _ => None,
+            })
+            .collect()
+    }
+
     /// True if the program has no instructions.
     pub fn is_empty(&self) -> bool {
         self.insns.is_empty()
@@ -505,6 +521,25 @@ mod tests {
         }
         assert_eq!(d.len(), 6);
         assert!(!d.is_empty());
+    }
+
+    #[test]
+    fn hw_loop_bodies_are_inclusive_pc_ranges() {
+        let mut b = ProgramBuilder::new("bodies");
+        b.li(1, 3); // 0
+        b.hwloop(1); // 1 (body 2..4 → head 2, tail 3)
+        b.addi(2, 2, 1); // 2
+        b.addi(3, 3, 1); // 3
+        b.hwloop_end();
+        b.end(); // 4
+        let d = DecodedProgram::decode(&b.build());
+        assert_eq!(d.hw_loop_bodies(), vec![(2, 3)]);
+
+        // No hw loops → no bodies.
+        let mut p = ProgramBuilder::new("plain");
+        p.li(1, 1);
+        p.end();
+        assert!(DecodedProgram::decode(&p.build()).hw_loop_bodies().is_empty());
     }
 
     #[test]

@@ -61,7 +61,7 @@ pub mod prelude {
     pub use crate::config::ClusterConfig;
     pub use crate::coordinator::{points, Measurement, QueryEngine, QueryFailure, QueryPoint};
     pub use crate::kernels::{Benchmark, Variant};
-    pub use crate::server::{Reply, Request, Selector, Server};
+    pub use crate::server::{QueryTier, Reply, Request, Selector, Server};
     pub use crate::trace::{
         AttributionReport, StallCause, TraceConfig, TraceDb, TraceKind, TraceRecord, TraceSink,
         Tracer,

@@ -557,8 +557,13 @@ fn serve(cli: &Cli) -> ExitCode {
         eprintln!("serve-hit-rate: {hit_rate:.1}%");
         eprintln!("serve-sim-runs: {}", engine.sim_runs());
         eprintln!("serve-functional-runs: {}", engine.functional_runs());
+        eprintln!("serve-compiled-runs: {}", engine.compiled_runs());
         eprintln!("serve-coalesced-runs: {}", engine.coalesced_runs());
         eprintln!("serve-duplicate-runs: {}", engine.duplicate_runs());
+        eprintln!("serve-batched-requests: {}", engine.batched_requests());
+        eprintln!("serve-batched-points: {}", engine.batched_points());
+        eprintln!("serve-planner-passes: {}", engine.planner_passes());
+        eprintln!("serve-codecache-evictions: {}", engine.code_cache().evictions());
         if let Some(path) = &cli.metrics {
             if let Err(e) = std::fs::write(path, server.metrics().to_csv()) {
                 eprintln!("warning: could not write metrics CSV {path}: {e}");

@@ -107,6 +107,8 @@ pub struct ServerMetrics {
     deadlocks: AtomicU64,
     timeouts: AtomicU64,
     faults: AtomicU64,
+    batched_requests: AtomicU64,
+    batched_points: AtomicU64,
 }
 
 impl ServerMetrics {
@@ -135,6 +137,22 @@ impl ServerMetrics {
             "timeout" => self.timeouts.fetch_add(1, Relaxed),
             _ => self.faults.fetch_add(1, Relaxed),
         };
+    }
+
+    /// Mirror the engine's cross-request batch-planner totals. The engine
+    /// owns the authoritative counters; the router feeds the latest observed
+    /// totals here after each query so the metrics snapshot can report them
+    /// without reaching into the coordinator. `fetch_max` keeps the mirror
+    /// monotone when concurrent observers race to publish their reads.
+    pub fn record_batched(&self, total_requests: u64, total_points: u64) {
+        self.batched_requests.fetch_max(total_requests, Relaxed);
+        self.batched_points.fetch_max(total_points, Relaxed);
+    }
+
+    /// `(batched_requests, batched_points)` — the latest engine totals seen
+    /// by [`ServerMetrics::record_batched`].
+    pub fn batched(&self) -> (u64, u64) {
+        (self.batched_requests.load(Relaxed), self.batched_points.load(Relaxed))
     }
 
     /// `(class, count)` for every failure class, stable order.
@@ -243,6 +261,17 @@ mod tests {
         m.record_failure_class("fault");
         m.record_failure_class("anything-else");
         assert_eq!(m.failure_counts(), [("deadlock", 1), ("timeout", 2), ("fault", 2)]);
+    }
+
+    #[test]
+    fn batched_mirror_is_monotone() {
+        let m = ServerMetrics::new();
+        assert_eq!(m.batched(), (0, 0));
+        m.record_batched(3, 12);
+        m.record_batched(2, 9); // stale observation: must not roll back
+        assert_eq!(m.batched(), (3, 12));
+        m.record_batched(5, 40);
+        assert_eq!(m.batched(), (5, 40));
     }
 
     #[test]

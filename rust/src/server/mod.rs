@@ -31,5 +31,5 @@ pub mod router;
 pub use codec::{read_reply, LineIn, Reply, WireReply, MAX_LINE};
 pub use listener::{serve_connection, serve_tcp};
 pub use metrics::{Endpoint, MetricsTotals, ServerMetrics};
-pub use request::{Request, Selector};
+pub use request::{QueryTier, Request, Selector};
 pub use router::{PipeSummary, Server};

@@ -16,7 +16,7 @@
 
 use crate::cli;
 use crate::config::ClusterConfig;
-use crate::coordinator::{points, QueryPoint};
+use crate::coordinator::{points, Fidelity, QueryPoint};
 use crate::kernels::{Benchmark, Variant};
 use crate::tuner::{ladder, Probe};
 
@@ -37,12 +37,58 @@ impl<T: Clone> Selector<T> {
     }
 }
 
+/// Which backend tier a `query` resolves its cache misses on (the
+/// `--tier` flag). Architectural results are bit-identical across tiers
+/// (the four-way differential wall), so the tier changes *what is
+/// measured* only in that architectural tiers carry no timing; the two
+/// architectural tiers even share one cache address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueryTier {
+    /// Cycle-accurate event simulation — real timing (the default).
+    #[default]
+    Cycle,
+    /// Architectural-only resolution, executed on the **compiled** tier
+    /// (loop traces + fused blocks): the fast default for accuracy-only
+    /// queries.
+    Functional,
+    /// Architectural-only resolution on the functional interpreter — an
+    /// explicit opt-out of the compiled tier (differential debugging).
+    Interpreter,
+}
+
+impl QueryTier {
+    /// Stable name used by the CLI flag registry and the wire protocol.
+    pub fn name(self) -> &'static str {
+        match self {
+            QueryTier::Cycle => "cycle",
+            QueryTier::Functional => "functional",
+            QueryTier::Interpreter => "interpreter",
+        }
+    }
+
+    /// Inverse of [`QueryTier::name`] (the long form `cycle-accurate` and
+    /// the engine-centric alias `compiled` are also accepted).
+    pub fn parse(s: &str) -> Option<QueryTier> {
+        match s {
+            "cycle" | "cycle-accurate" => Some(QueryTier::Cycle),
+            "functional" | "compiled" => Some(QueryTier::Functional),
+            "interpreter" => Some(QueryTier::Interpreter),
+            _ => None,
+        }
+    }
+}
+
 /// A typed service request — every endpoint the daemon (and the CLI's
 /// service-shaped subcommands) can execute.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Resolve a batch of design-space points through the cache.
-    Query { cfg: Selector<ClusterConfig>, bench: Selector<Benchmark>, variant: Selector<Variant> },
+    Query {
+        cfg: Selector<ClusterConfig>,
+        bench: Selector<Benchmark>,
+        variant: Selector<Variant>,
+        tier: QueryTier,
+    },
     /// Accuracy-aware precision autotuning under an error budget.
     Tune { cfg: Selector<ClusterConfig>, budget: f64, probe: Probe },
     /// Pareto frontier (plain or accuracy-extended).
@@ -69,13 +115,23 @@ impl Request {
     /// `all` variants means the full 5-rung precision ladder, exactly as on
     /// the CLI.
     pub fn query_points(&self) -> Option<Vec<QueryPoint>> {
-        let Request::Query { cfg, bench, variant } = self else {
+        let Request::Query { cfg, bench, variant, tier } = self else {
             return None;
         };
         let cfgs = cfg.resolve(ClusterConfig::design_space);
         let benches = bench.resolve(|| Benchmark::all().to_vec());
         let variants = variant.resolve(|| ladder().to_vec());
-        Some(points(&cfgs, &benches, &variants))
+        let pts = points(&cfgs, &benches, &variants);
+        Some(match tier {
+            QueryTier::Cycle => pts,
+            // `with_compiled` forces Fidelity::Functional: the compiled
+            // tier shares the functional cache address, it only changes
+            // which engine executes a miss.
+            QueryTier::Functional => pts.into_iter().map(QueryPoint::with_compiled).collect(),
+            QueryTier::Interpreter => {
+                pts.into_iter().map(|p| p.with_fidelity(Fidelity::Functional)).collect()
+            }
+        })
     }
 
     /// The configurations a `Tune` covers (`None` for non-tunes).
@@ -89,7 +145,7 @@ impl Request {
     /// Canonical wire form. `parse_line(&r.to_line()) == Ok(r)`.
     pub fn to_line(&self) -> String {
         match self {
-            Request::Query { cfg, bench, variant } => {
+            Request::Query { cfg, bench, variant, tier } => {
                 let b = match bench {
                     Selector::All => "all",
                     Selector::One(b) => b.name(),
@@ -98,7 +154,11 @@ impl Request {
                     Selector::All => "all",
                     Selector::One(v) => v.label(),
                 };
-                format!("query {} {b} {v}", cfg_token(cfg))
+                let t = match tier {
+                    QueryTier::Cycle => String::new(),
+                    t => format!(" --tier {}", t.name()),
+                };
+                format!("query {} {b} {v}{t}", cfg_token(cfg))
             }
             Request::Tune { cfg, budget, probe } => {
                 format!("tune {} --budget {budget} --probe {}", cfg_token(cfg), probe.name())
@@ -151,8 +211,26 @@ mod tests {
                 cfg: Selector::One(ClusterConfig::new(8, 4, 1)),
                 bench: Selector::One(Benchmark::Fir),
                 variant: Selector::One(Variant::Scalar),
+                tier: QueryTier::Cycle,
             },
-            Request::Query { cfg: Selector::All, bench: Selector::All, variant: Selector::All },
+            Request::Query {
+                cfg: Selector::All,
+                bench: Selector::All,
+                variant: Selector::All,
+                tier: QueryTier::Cycle,
+            },
+            Request::Query {
+                cfg: Selector::One(ClusterConfig::new(8, 8, 1)),
+                bench: Selector::One(Benchmark::Matmul),
+                variant: Selector::One(Variant::VEC),
+                tier: QueryTier::Functional,
+            },
+            Request::Query {
+                cfg: Selector::One(ClusterConfig::new(8, 8, 1)),
+                bench: Selector::One(Benchmark::Matmul),
+                variant: Selector::One(Variant::VEC),
+                tier: QueryTier::Interpreter,
+            },
             Request::Tune {
                 cfg: Selector::One(ClusterConfig::new(16, 8, 1)),
                 budget: 1e-3,
@@ -193,6 +271,7 @@ mod tests {
             cfg: Selector::One(ClusterConfig::new(8, 2, 0)),
             bench: Selector::One(Benchmark::Fir),
             variant: Selector::One(Variant::Scalar),
+            tier: QueryTier::Cycle,
         };
         assert_eq!(one.query_points().unwrap().len(), 1);
 
@@ -201,6 +280,7 @@ mod tests {
             cfg: Selector::One(ClusterConfig::new(8, 2, 0)),
             bench: Selector::One(Benchmark::Fir),
             variant: Selector::All,
+            tier: QueryTier::Cycle,
         };
         assert_eq!(all_variants.query_points().unwrap().len(), ladder_width);
 
@@ -212,5 +292,33 @@ mod tests {
                 .len(),
             ClusterConfig::design_space().len()
         );
+    }
+
+    /// `--tier` selects the misses' execution tier: the default is
+    /// cycle-accurate, `functional` routes through the compiled engine
+    /// (same cache address as the interpreter), `interpreter` opts out.
+    #[test]
+    fn query_tier_selects_fidelity_and_engine() {
+        let mk = |tier| Request::Query {
+            cfg: Selector::One(ClusterConfig::new(8, 2, 0)),
+            bench: Selector::One(Benchmark::Fir),
+            variant: Selector::One(Variant::Scalar),
+            tier,
+        };
+        let ca = mk(QueryTier::Cycle).query_points().unwrap();
+        assert_eq!(ca[0].fidelity, Fidelity::CycleAccurate);
+        assert!(!ca[0].compiled);
+        let fast = mk(QueryTier::Functional).query_points().unwrap();
+        assert_eq!(fast[0].fidelity, Fidelity::Functional);
+        assert!(fast[0].compiled, "functional tier must route through the compiled engine");
+        let interp = mk(QueryTier::Interpreter).query_points().unwrap();
+        assert_eq!(interp[0].fidelity, Fidelity::Functional);
+        assert!(!interp[0].compiled);
+        // The default renders bare; overrides carry the flag; aliases parse.
+        assert!(!mk(QueryTier::Cycle).to_line().contains("--tier"));
+        assert!(mk(QueryTier::Functional).to_line().ends_with("--tier functional"));
+        assert_eq!(QueryTier::parse("compiled"), Some(QueryTier::Functional));
+        assert_eq!(QueryTier::parse("cycle-accurate"), Some(QueryTier::Cycle));
+        assert_eq!(QueryTier::parse("warp-speed"), None);
     }
 }

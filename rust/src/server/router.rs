@@ -62,6 +62,10 @@ pub struct RequestSpan {
     /// Distinct points the plan resolved from the cache / simulated.
     pub hits: u64,
     pub misses: u64,
+    /// Misses that landed in a cross-request batch-planner drain while this
+    /// request was executing (engine-counter delta; zero for warm requests
+    /// and non-query endpoints).
+    pub batched: u64,
     /// Aggregate sim-run attribution (active share + dominant stall),
     /// `-` when the request resolved no measurements.
     pub attribution: String,
@@ -73,6 +77,7 @@ struct Phases {
     planned_ns: u64,
     simulated_ns: u64,
     serialized_ns: u64,
+    batched: u64,
     attribution: Option<String>,
 }
 
@@ -158,6 +163,7 @@ impl Server {
                     serialized_us: 0,
                     hits: 0,
                     misses: 0,
+                    batched: 0,
                     attribution: "-".to_string(),
                 });
                 Reply::err("bad-request", msg)
@@ -186,6 +192,7 @@ impl Server {
             serialized_us: ph.serialized_ns / 1_000,
             hits,
             misses,
+            batched: ph.batched,
             attribution: ph.attribution.unwrap_or_else(|| "-".to_string()),
         });
         reply
@@ -238,9 +245,13 @@ impl Server {
                 let plan = self.engine.plan(&pts);
                 ph.planned_ns = elapsed_ns(t0);
                 let (hits, misses) = (plan.hit_count() as u64, plan.miss_count() as u64);
+                let batched_before = self.engine.batched_points();
                 let t1 = Instant::now();
                 let executed = self.engine.execute(plan);
                 ph.simulated_ns = elapsed_ns(t1);
+                ph.batched = self.engine.batched_points().saturating_sub(batched_before);
+                self.metrics
+                    .record_batched(self.engine.batched_requests(), self.engine.batched_points());
                 let t2 = Instant::now();
                 let reply = match executed {
                     Ok(ms) => {
@@ -302,6 +313,7 @@ impl Server {
             "serialized_us",
             "hits",
             "misses",
+            "batched",
             "attribution",
             "request",
         ]);
@@ -315,6 +327,7 @@ impl Server {
                 s.serialized_us.to_string(),
                 s.hits.to_string(),
                 s.misses.to_string(),
+                s.batched.to_string(),
                 s.attribution,
                 s.line,
             ]);
@@ -370,8 +383,12 @@ impl Server {
             ("compiled_runs", self.engine.compiled_runs()),
             ("codecache_hits", cc_hits),
             ("codecache_misses", cc_misses),
+            ("codecache_evictions", self.engine.code_cache().evictions()),
             ("coalesced_runs", self.engine.coalesced_runs()),
             ("duplicate_runs", self.engine.duplicate_runs()),
+            ("batched_requests", self.engine.batched_requests()),
+            ("batched_points", self.engine.batched_points()),
+            ("planner_passes", self.engine.planner_passes()),
             ("requests", totals.requests),
             ("request_errors", totals.errors),
             ("plan_cache_hits", totals.cache_hits),
@@ -449,7 +466,7 @@ mod tests {
     use super::*;
     use crate::config::ClusterConfig;
     use crate::kernels::{Benchmark, Variant};
-    use crate::server::request::Selector;
+    use crate::server::request::{QueryTier, Selector};
     use std::io::Cursor;
 
     fn leaked_server() -> Server {
@@ -472,6 +489,14 @@ mod tests {
         };
         assert_eq!(rows[0], "counter,value");
         assert!(rows.iter().any(|r| r.starts_with("duplicate_runs,")));
+        for counter in
+            ["batched_requests", "batched_points", "planner_passes", "codecache_evictions"]
+        {
+            assert!(
+                rows.iter().any(|r| r.starts_with(&format!("{counter},"))),
+                "stats must expose `{counter}`: {rows:?}"
+            );
+        }
     }
 
     #[test]
@@ -615,6 +640,7 @@ mod tests {
                 cfg: Selector::One(ClusterConfig::new(8, 4, 1)),
                 bench: Selector::One(Benchmark::Fir),
                 variant: Selector::One(Variant::Scalar),
+                tier: QueryTier::Cycle,
             }
         );
     }

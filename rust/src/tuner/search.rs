@@ -35,16 +35,17 @@ pub const DEFAULT_BUDGET: f64 = 1e-2;
 /// How `tune` evaluates a rung's accuracy before paying for its timing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Probe {
-    /// Resolve every rung's `ErrorStats` on the functional backend first;
-    /// only the binary32 baseline and the budget-admissible rungs are run
-    /// cycle-accurately (the default — accuracy-rejected rungs never touch
-    /// the event engine).
+    /// Resolve every rung's `ErrorStats` on the functional interpreter
+    /// first; only the binary32 baseline and the budget-admissible rungs
+    /// are run cycle-accurately (accuracy-rejected rungs never touch the
+    /// event engine).
     Functional,
     /// Like [`Probe::Functional`], but the accuracy probes execute on the
     /// compiled tier ([`crate::cluster::CompiledBackend`]) through the
     /// engine's translation cache — same bit-exact accuracy (the four-way
-    /// differential wall), ≥5× the interpreter's instruction throughput,
-    /// and a warm tune re-translates nothing.
+    /// differential wall), ≥10× the interpreter's instruction throughput
+    /// on the loop-dominated kernels, and a warm tune re-translates
+    /// nothing. The default of [`tune_with`] and the `tune` command.
     Compiled,
     /// Resolve every rung cycle-accurately (the pre-backend behaviour).
     CycleAccurate,
@@ -166,15 +167,18 @@ fn select(rungs: &[Measurement], budget: f64) -> (usize, usize, usize) {
 }
 
 /// Tune every benchmark on `cfg` under `budget` with the default
-/// functional accuracy probe: every ladder rung's `ErrorStats` comes from
-/// the cheap functional backend, and only the baseline plus the
-/// budget-admissible rungs are simulated cycle-accurately.
+/// **compiled** accuracy probe: every ladder rung's `ErrorStats` comes
+/// from the compiled tier (bit-identical to the interpreter, ≥10× its
+/// instruction throughput on the loop-dominated kernels, one translation
+/// per program through the engine's code cache), and only the baseline
+/// plus the budget-admissible rungs are simulated cycle-accurately. Pass
+/// [`Probe::Functional`] to [`tune_with_probe`] for the interpreter.
 pub fn tune_with(
     engine: &QueryEngine,
     cfg: &ClusterConfig,
     budget: f64,
 ) -> Result<TuneReport, QueryFailure> {
-    tune_with_probe(engine, cfg, budget, Probe::Functional)
+    tune_with_probe(engine, cfg, budget, Probe::Compiled)
 }
 
 /// [`tune_with`] with an explicit probe mode.

@@ -590,6 +590,147 @@ fn never_signaled_wait_event_deadlocks_identically_across_backends() {
     }
 }
 
+/// Loop-trace edge cases across the full four-way wall: trip counts 0, 1
+/// and the 16-bit maximum, nested hw loops, and a side-exit mid-iteration
+/// all give identical registers, TCDM images and retired-instruction
+/// counts on every tier — the compiled tier's whole-iteration dispatch
+/// (and its bail-outs) must be architecturally invisible. CI runs this in
+/// debug and release.
+#[test]
+fn loop_trace_edge_cases_identical_across_backends() {
+    let counted = |n: u32| {
+        let mut b = ProgramBuilder::new("trip");
+        b.li(1, n);
+        b.hwloop(1);
+        b.addi(2, 2, 1);
+        b.addi(3, 3, 2);
+        b.hwloop_end();
+        b.addi(4, 4, 7);
+        b.end();
+        b.build()
+    };
+    let nested = || {
+        let mut b = ProgramBuilder::new("nested");
+        b.li(1, 3);
+        b.li(2, 4);
+        b.hwloop(1);
+        b.hwloop(2);
+        b.addi(3, 3, 1);
+        b.hwloop_end();
+        b.addi(4, 4, 1);
+        b.hwloop_end();
+        b.end();
+        b.build()
+    };
+    let side_exit = || {
+        let mut b = ProgramBuilder::new("side-exit");
+        b.li(1, 0);
+        b.li(2, 57);
+        b.label("loop");
+        b.addi(1, 1, 1);
+        b.beq(1, 2, "out");
+        b.bne(1, regs::ZERO, "loop");
+        b.label("out");
+        b.addi(3, 3, 9);
+        b.end();
+        b.build()
+    };
+    let mut progs: Vec<(String, Program)> = Vec::new();
+    for n in [0u32, 1, 65_535] {
+        progs.push((format!("trip-{n}"), counted(n)));
+    }
+    progs.push(("nested".to_string(), nested()));
+    progs.push(("side-exit".to_string(), side_exit()));
+    let cfg = ClusterConfig::new(8, 4, 1);
+    for (name, prog) in &progs {
+        for workers in [1usize, cfg.cores] {
+            let runs: Vec<_> = BackendKind::all()
+                .into_iter()
+                .map(|k| {
+                    k.run_program(&cfg, prog, workers, &mut |_| {})
+                        .expect("edge-case loops terminate")
+                })
+                .collect();
+            let ev = &runs[0];
+            for (k, run) in BackendKind::all().into_iter().zip(&runs).skip(1) {
+                let ctx = format!("{name}, {workers} workers [{k:?}]");
+                assert_eq!(ev.regs, run.regs, "{ctx}: final registers differ");
+                assert_eq!(ev.instrs, run.instrs, "{ctx}: retired counts differ");
+                assert_eq!(ev.mem.tcdm_words(), run.mem.tcdm_words(), "{ctx}: TCDM differs");
+            }
+        }
+    }
+}
+
+/// Armed-fault interaction: corruption staged architecturally into TCDM —
+/// the same word every tier's fault campaigns flip — must stay invisible
+/// to the differential wall. A benign poisoned word flows through a traced
+/// loop to identical results; a poisoned *pointer* that redirects an
+/// atomic outside TCDM classifies as the identical structured `Fault` on
+/// every tier.
+#[test]
+fn staged_tcdm_corruption_identical_across_backends() {
+    use transpfp::cluster::mem::{L2_BASE, TCDM_BASE};
+    use transpfp::isa::MemSize;
+
+    // Benign: the poisoned word is read-modify-written inside a traced
+    // hw-loop body (load + alu + store — all trace-admissible).
+    let mut b = ProgramBuilder::new("poisoned-data");
+    b.li(15, TCDM_BASE);
+    b.li(1, 4);
+    b.hwloop(1);
+    b.lw(2, 15, 0);
+    b.addi(2, 2, 1);
+    b.sw(2, 15, 0);
+    b.hwloop_end();
+    b.end();
+    let benign = b.build();
+    let cfg = ClusterConfig::new(8, 4, 1);
+    let runs: Vec<_> = BackendKind::all()
+        .into_iter()
+        .map(|k| {
+            k.run_program(&cfg, &benign, 1, &mut |mem| {
+                mem.store(TCDM_BASE, MemSize::Word, 0xDEAD_BEEF)
+            })
+            .expect("the benign corruption terminates")
+        })
+        .collect();
+    let ev = &runs[0];
+    assert_eq!(
+        ev.mem.load(TCDM_BASE, MemSize::Word),
+        0xDEAD_BEEFu32.wrapping_add(4),
+        "the poisoned word was incremented once per iteration"
+    );
+    for (k, run) in BackendKind::all().into_iter().zip(&runs).skip(1) {
+        assert_eq!(ev.regs, run.regs, "[{k:?}]: registers differ");
+        assert_eq!(ev.instrs, run.instrs, "[{k:?}]: retired counts differ");
+        assert_eq!(ev.mem.tcdm_words(), run.mem.tcdm_words(), "[{k:?}]: TCDM differs");
+    }
+
+    // Malign: the corrupted word is used as an atomic's base address and
+    // points into L2 — a detectable violation on every tier.
+    let mut b = ProgramBuilder::new("poisoned-ptr");
+    b.li(15, TCDM_BASE);
+    b.lw(1, 15, 0);
+    b.li(2, 1);
+    b.amo_add(3, 1, 0, 2);
+    b.end();
+    let malign = b.build();
+    let errs: Vec<_> = BackendKind::all()
+        .into_iter()
+        .map(|k| {
+            k.run_program(&cfg, &malign, 1, &mut |mem| {
+                mem.store(TCDM_BASE, MemSize::Word, L2_BASE)
+            })
+            .expect_err("an atomic outside TCDM must fault on every tier")
+        })
+        .collect();
+    for (k, err) in BackendKind::all().into_iter().zip(&errs) {
+        assert_eq!(err.class(), "fault", "[{k:?}]: wrong class");
+        assert_eq!(err, &errs[0], "[{k:?}]: fault errors must be bit-identical");
+    }
+}
+
 /// The classification is build-profile independent: the same fixtures give
 /// the same structured errors whether the crate is compiled with debug
 /// assertions or optimized (CI runs this file under both profiles).

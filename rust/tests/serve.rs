@@ -11,7 +11,7 @@ use std::sync::{Arc, Barrier};
 use std::thread;
 
 use transpfp::prelude::{parse_cli, Benchmark, ClusterConfig, QueryEngine, Request, Variant};
-use transpfp::server::{read_reply, serve_tcp, Endpoint, Selector, Server, WireReply};
+use transpfp::server::{read_reply, serve_tcp, Endpoint, QueryTier, Selector, Server, WireReply};
 use transpfp::testutil::Rng;
 use transpfp::tuner::{Probe, DEFAULT_BUDGET};
 
@@ -133,6 +133,8 @@ fn cli_and_wire_requests_are_identical() {
         &["query", "8c4f1p", "FIR", "scalar"],
         &["query", "all", "all", "all"],
         &["query", "16c16f2p", "MATMUL", "vector-bf16"],
+        &["query", "8c4f1p", "FIR", "scalar", "--tier", "functional"],
+        &["query", "8c4f1p", "FIR", "scalar", "--tier", "interpreter"],
         &["tune"],
         &["tune", "8c4f1p"],
         &["tune", "all", "--budget", "1e-3", "--probe", "cycle"],
@@ -163,7 +165,7 @@ fn cli_and_wire_requests_are_identical() {
         Request::Tune {
             cfg: Selector::One(ClusterConfig::new(8, 8, 1)),
             budget: DEFAULT_BUDGET,
-            probe: Probe::Functional,
+            probe: Probe::Compiled,
         }
     );
     let q = Request::parse_line("query 8c2f0p fir scalar").unwrap();
@@ -173,6 +175,7 @@ fn cli_and_wire_requests_are_identical() {
             cfg: Selector::One(ClusterConfig::new(8, 2, 0)),
             bench: Selector::One(Benchmark::Fir),
             variant: Selector::One(Variant::Scalar),
+            tier: QueryTier::Cycle,
         }
     );
 }
@@ -250,7 +253,8 @@ fn trace_endpoint_reports_request_spans_over_the_wire() {
     assert!(trace.ok, "trace endpoint must succeed: {}", trace.head);
     assert_eq!(
         trace.rows[0],
-        "endpoint,ok,queued_us,planned_us,simulated_us,serialized_us,hits,misses,attribution,request"
+        "endpoint,ok,queued_us,planned_us,simulated_us,serialized_us,hits,misses,batched,\
+         attribution,request"
     );
     // ping, query, invalid — oldest first; the trace request itself is
     // recorded only after its reply is built.
@@ -301,7 +305,17 @@ fn status_endpoints_reply_structured_tables() {
     let stats = &replies[1];
     assert!(stats.ok);
     assert_eq!(stats.rows[0], "counter,value");
-    for key in ["cache_entries", "sim_runs", "coalesced_runs", "duplicate_runs", "requests"] {
+    for key in [
+        "cache_entries",
+        "sim_runs",
+        "coalesced_runs",
+        "duplicate_runs",
+        "requests",
+        "batched_requests",
+        "batched_points",
+        "planner_passes",
+        "codecache_evictions",
+    ] {
         assert!(
             stats.rows.iter().any(|r| r.starts_with(&format!("{key},"))),
             "stats must report {key}: {:?}",
